@@ -1,0 +1,71 @@
+//! Coordinator overhead benchmark: native direct call vs routed through
+//! the coordinator (native backend) vs routed through the batcher to XLA.
+//! The DESIGN.md target: the coordinator adds <5% latency over a direct
+//! native call at batch-32 style workloads.
+
+use std::time::Instant;
+
+use signax::coordinator::{Coordinator, CoordinatorConfig, Request};
+use signax::signature::signature;
+use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
+use signax::substrate::rng::Rng;
+use signax::ta::SigSpec;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig {
+        warmup: 2,
+        repeats: 20,
+        budget: std::time::Duration::from_secs(5),
+        min_repeats: 3,
+    };
+    let (stream, d, depth) = (128usize, 4usize, 4usize);
+    let spec = SigSpec::new(d, depth)?;
+    let mut rng = Rng::new(5);
+    let path = signax::data::random_path(&mut rng, stream, d, 0.2);
+
+    // Direct native call.
+    let direct = bench(&cfg, || {
+        black_box(signature(&path, stream, &spec));
+    })
+    .best_secs();
+
+    // Through the coordinator, native routing.
+    let coord = Coordinator::new(CoordinatorConfig::native_only())?;
+    let routed = bench(&cfg, || {
+        let r = coord
+            .call(Request::Signature { path: path.clone(), stream, d, depth })
+            .unwrap();
+        black_box(r.values[0]);
+    })
+    .best_secs();
+
+    println!("direct native:        {}", fmt_secs(direct));
+    println!(
+        "coordinator (native): {}  (+{:.1}% overhead)",
+        fmt_secs(routed),
+        (routed / direct - 1.0) * 100.0
+    );
+
+    // Through the batcher to XLA, 32 concurrent requests (amortised).
+    let coord = Coordinator::new(CoordinatorConfig::default())?;
+    if coord.has_xla() {
+        // warm
+        let _ = coord.call(Request::Signature { path: path.clone(), stream, d, depth });
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            let reqs: Vec<Request> = (0..32)
+                .map(|_| Request::Signature { path: path.clone(), stream, d, depth })
+                .collect();
+            for r in coord.call_many(reqs) {
+                r.unwrap();
+            }
+        }
+        let per_req = t0.elapsed().as_secs_f64() / (32.0 * reps as f64);
+        println!("coordinator (XLA, 32 concurrent): {} per request", fmt_secs(per_req));
+        println!("batcher metrics: {}", coord.metrics().snapshot().render());
+    } else {
+        println!("(XLA column skipped: no artifacts)");
+    }
+    Ok(())
+}

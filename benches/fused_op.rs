@@ -1,0 +1,52 @@
+//! Microbenchmark: the fused multiply-exponentiate (§4.1) vs the
+//! conventional exp-then-⊠, per (d, N) — the op-level ground truth behind
+//! Tables 1–4, and the primary target of the §Perf optimization loop.
+
+use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
+use signax::substrate::rng::Rng;
+use signax::ta::fused::{fused_mexp, unfused_mexp_into};
+use signax::ta::opcount;
+use signax::ta::{SigSpec, Workspace};
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup: 3,
+        repeats: 30,
+        budget: std::time::Duration::from_secs(2),
+        min_repeats: 5,
+    };
+    println!(
+        "{:<10} {:>12} {:>12} {:>8} {:>10} {:>12}",
+        "(d, N)", "fused", "unfused", "speedup", "C/F muls", "fused ns/mul"
+    );
+    for (d, n) in [(2usize, 5usize), (3, 5), (4, 4), (4, 7), (5, 5), (7, 7), (4, 9)] {
+        let spec = SigSpec::new(d, n).unwrap();
+        let mut ws = Workspace::new(&spec);
+        let mut rng = Rng::new(1);
+        let a = rng.normal_vec(spec.sig_len(), 0.5);
+        let z = rng.normal_vec(d, 0.5);
+        let mut buf = a.clone();
+        let fused = bench(&cfg, || {
+            buf.copy_from_slice(&a);
+            fused_mexp(&spec, &mut buf, &z, &mut ws);
+            black_box(buf[0]);
+        })
+        .best_secs();
+        let mut out = spec.zeros();
+        let unfused = bench(&cfg, || {
+            unfused_mexp_into(&spec, &a, &z, &mut out, &mut ws);
+            black_box(out[0]);
+        })
+        .best_secs();
+        let muls = opcount::fused_muls(d as u64, n as u64) as f64;
+        println!(
+            "{:<10} {:>12} {:>12} {:>7.2}x {:>10.1} {:>12.3}",
+            format!("({d}, {n})"),
+            fmt_secs(fused),
+            fmt_secs(unfused),
+            unfused / fused,
+            opcount::conventional_muls(d as u64, n as u64) as f64 / muls,
+            fused * 1e9 / muls,
+        );
+    }
+}

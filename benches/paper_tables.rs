@@ -1,0 +1,16 @@
+//! `cargo bench` entry: regenerates a CI-scale cut of every paper table.
+//! For the full paper-scale sweep use:
+//!
+//!     cargo run --release -- tables --scale paper
+
+use signax::bench::{run_table, table_ids, BenchCtx, Scale};
+
+fn main() {
+    let ctx = BenchCtx::new(Scale::Ci, Some("artifacts".into()));
+    for id in table_ids() {
+        match run_table(&ctx, id) {
+            Ok(t) => println!("{}", t.render()),
+            Err(e) => eprintln!("table {id}: {e}"),
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! End-to-end driver (Fig 3 / §6.2): train the deep signature model on the
+//! GBM volatility-classification task, comparing
+//!
+//! - the signax backend (fused forward + reversibility backward),
+//! - the iisignature-profile backend (conventional forward + tape
+//!   backward), and
+//! - the AOT-XLA train-step artifact (JAX-lowered fwd+bwd+SGD executed via
+//!   PJRT from Rust)
+//!
+//! logging loss against wall-clock time for each. This exercises every
+//! layer of the stack end to end: data generation (L3), the native engine
+//! with handwritten VJPs (L3), and the L2/L1-lowered artifact through the
+//! runtime.
+//!
+//!     cargo run --release --example deep_signature_training
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use signax::data::gbm::{gbm_batch, GbmConfig};
+use signax::deepsig::{accuracy, train_step, ModelConfig, Params, SigBackend};
+use signax::runtime::EngineHandle;
+use signax::substrate::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let steps = 500usize;
+    let (batch, stream) = (32usize, 64usize);
+    let lr = 0.3f32;
+    let cfg = ModelConfig::default(); // 2 -> 16 -> 4 channels, depth 3
+    let gcfg = GbmConfig { stream, ..Default::default() };
+    std::fs::create_dir_all("results")?;
+
+    // Shared, deterministic data and init so the curves are comparable:
+    // one pre-generated batch per step (true SGD), identical across
+    // backends.
+    let mut rng = Rng::new(2024);
+    let p0 = Params::init(&cfg, &mut rng);
+    let batches: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..steps).map(|_| gbm_batch(&mut rng, batch, &gcfg)).collect();
+    let (xt, yt) = gbm_batch(&mut rng, 512, &gcfg);
+
+    let mut summaries = vec![];
+    for (name, backend) in [("signax-fused", SigBackend::Fused), ("iisignature-like", SigBackend::Conventional)]
+    {
+        let mut p = p0.clone();
+        let t0 = Instant::now();
+        let mut curve = vec![];
+        for (x, y) in &batches {
+            let loss = train_step(&cfg, &mut p, x, y, lr, backend, signax::substrate::pool::default_threads());
+            curve.push((t0.elapsed().as_secs_f64(), loss));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let acc = accuracy(&cfg, &p, &xt, &yt);
+        println!(
+            "{name:<18} {steps} steps in {wall:>7.2}s  final loss {:.4}  test acc {acc:.3}",
+            curve.last().unwrap().1
+        );
+        write_curve(&format!("results/fig3_loss_{name}.csv"), &curve)?;
+        summaries.push((name, wall, acc));
+    }
+
+    // XLA backend, when artifacts exist.
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("MANIFEST.json").exists() {
+        let (engine, registry) = EngineHandle::spawn(dir)?;
+        if let Some(entry) = registry.train().cloned() {
+            let mut bufs = p0.to_buffers();
+            engine.warm(&entry)?;
+            let t0 = Instant::now();
+            let mut curve = vec![];
+            for (x, y) in &batches {
+                let (nb, loss) = engine.train_step(&entry, bufs, x.clone(), y.clone(), lr)?;
+                bufs = nb;
+                curve.push((t0.elapsed().as_secs_f64(), loss));
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let p = Params::from_buffers(&ModelConfig::default(), &bufs);
+            let acc = accuracy(&cfg, &p, &xt, &yt);
+            println!(
+                "{:<18} {steps} steps in {wall:>7.2}s  final loss {:.4}  test acc {acc:.3}",
+                "signax-xla",
+                curve.last().unwrap().1
+            );
+            write_curve("results/fig3_loss_signax-xla.csv", &curve)?;
+            summaries.push(("signax-xla", wall, acc));
+        }
+    } else {
+        eprintln!("(skipping XLA backend: run `make artifacts`)");
+    }
+
+    // The Fig 3 headline: how much faster the fused/reversible backend
+    // trains the same model to the same loss.
+    if let (Some(f), Some(c)) = (
+        summaries.iter().find(|s| s.0 == "signax-fused"),
+        summaries.iter().find(|s| s.0 == "iisignature-like"),
+    ) {
+        println!(
+            "\nFig 3 reproduction: signax trains {:.1}x faster than the iisignature-profile backend \
+             (paper reports 210x vs CPU-bound iisignature from the GPU; like-for-like CPU ratio is the comparable number here)",
+            c.1 / f.1
+        );
+    }
+    println!("loss curves in results/fig3_loss_*.csv");
+
+    // --- Phase 2: the signature-dominated regime. ---
+    // At small (d, N) the pointwise MLP dominates and the backends tie; the
+    // paper's speedups appear when the signature is the bottleneck (its
+    // motivating setting, §1). Same pipeline, wider/deeper signature,
+    // single-threaded (like-for-like resources, as in §6.1).
+    println!("\n--- signature-dominated regime (d_out=6, depth=5, 1 thread) ---");
+    let big = ModelConfig { d_in: 2, hidden: 16, d_out: 6, depth: 5 };
+    let mut rng2 = Rng::new(77);
+    let pb0 = Params::init(&big, &mut rng2);
+    let big_batches: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..30).map(|_| gbm_batch(&mut rng2, 8, &gcfg)).collect();
+    let mut walls = vec![];
+    for (name, backend) in
+        [("signax-fused", SigBackend::Fused), ("iisignature-like", SigBackend::Conventional)]
+    {
+        let mut p = pb0.clone();
+        let t0 = Instant::now();
+        let mut last = 0.0;
+        for (x, y) in &big_batches {
+            last = train_step(&big, &mut p, x, y, 0.05, backend, 1);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!("{name:<18} 30 steps in {wall:>7.2}s  final loss {last:.4}");
+        walls.push(wall);
+    }
+    println!(
+        "signature-dominated speedup (fused vs conventional, 1 thread): {:.1}x",
+        walls[1] / walls[0]
+    );
+    Ok(())
+}
+
+fn write_curve(path: &str, curve: &[(f64, f32)]) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "wallclock_s,loss")?;
+    for (t, l) in curve {
+        writeln!(f, "{t},{l}")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts + golden files.
+
+Run once at build time (``make artifacts``); the Rust runtime then loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them on the PJRT CPU client. Python never runs at serving time.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Also written:
+
+- ``artifacts/MANIFEST.json`` — machine-readable registry of every
+  artifact's kind and shapes, consumed by ``rust/src/runtime/artifact.rs``.
+- ``artifacts/golden/*.json`` — deterministic input/output pairs computed
+  by the jnp oracle (``ref.py``), pinning the Rust native engine to the
+  Python reference in ``cargo test``.
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lower_signature(b, length, d, depth, use_pallas):
+    tile = 1 if b == 1 else (8 if b % 8 == 0 else 1)
+    fn = functools.partial(model.signature_fn, depth=depth, use_pallas=use_pallas, tile=tile)
+    return jax.jit(fn).lower(spec(b, length, d))
+
+
+def lower_signature_grad(b, length, d, depth):
+    """(path, cotangent) -> grad_path, via jax.vjp through the scan."""
+
+    def fn(path, g):
+        _, vjp = jax.vjp(lambda p: ref.signature_ref(p, depth), path)
+        return vjp(g)[0]
+
+    return jax.jit(fn).lower(spec(b, length, d), spec(b, ref.sig_len(d, depth)))
+
+
+def lower_logsignature(b, length, d, depth, use_pallas):
+    tile = 1 if b == 1 else (8 if b % 8 == 0 else 1)
+    fn = functools.partial(model.logsignature_fn, depth=depth, use_pallas=use_pallas, tile=tile)
+    return jax.jit(fn).lower(spec(b, length, d))
+
+
+def lower_train_step(b, length, d_in, hidden, d_out, depth):
+    params = model.init_params(d_in, hidden, d_out, depth)
+    fn = functools.partial(model.train_step, depth=depth, use_pallas=False)
+    param_specs = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params)
+    return jax.jit(lambda pr, x, y, lr: fn(model.DeepSigParams(*pr), x, y, lr)).lower(
+        param_specs, spec(b, length, d_in), spec(b), spec()
+    )
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_artifacts(out_dir: str, sweep: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(name, lowered, entry):
+        t0 = time.time()
+        n = write(os.path.join(out_dir, name), to_hlo_text(lowered))
+        entry = dict(entry)
+        entry["file"] = name
+        manifest.append(entry)
+        print(f"  {name}: {n} chars ({time.time() - t0:.1f}s)")
+
+    # --- Showcase artifacts: the Pallas L1 kernel inside the L2 scan. ---
+    for b in (32, 1):
+        cfg = dict(kind="sig", b=b, length=128, d=4, depth=4, pallas=True,
+                   out_dim=ref.sig_len(4, 4))
+        emit(f"sig_b{b}_L128_d4_N4.hlo.txt",
+             lower_signature(b, 128, 4, 4, use_pallas=True), cfg)
+    cfg = dict(kind="logsig", b=32, length=128, d=4, depth=4, pallas=True,
+               out_dim=ref.witt_dimension(4, 4))
+    emit("logsig_b32_L128_d4_N4.hlo.txt",
+         lower_logsignature(32, 128, 4, 4, use_pallas=True), cfg)
+
+    # --- The deep-signature training step (§6.2 / Fig 3). ---
+    d_in, hidden, d_out, depth_t, b_t, L_t = 2, 16, 4, 3, 32, 64
+    cfg = dict(kind="train", b=b_t, length=L_t, d=d_in, hidden=hidden,
+               d_out=d_out, depth=depth_t, out_dim=0)
+    emit("train_b32_L64.hlo.txt",
+         lower_train_step(b_t, L_t, d_in, hidden, d_out, depth_t), cfg)
+
+    # --- Sweep artifacts: the XLA column of the paper's tables. ---
+    if sweep == "none":
+        sweep_cfgs = []
+    else:
+        chans = range(2, 8) if sweep == "paper" else range(2, 5)
+        depths = range(2, 10) if sweep == "paper" else range(2, 7)
+        sweep_cfgs = [(d, 7) for d in chans] + [(4, n) for n in depths]
+    for b in (32, 1):
+        for d, n in sorted(set(sweep_cfgs)):
+            cfg = dict(kind="sig", b=b, length=128, d=d, depth=n, pallas=False,
+                       out_dim=ref.sig_len(d, n))
+            emit(f"sig_b{b}_L128_d{d}_N{n}.hlo.txt",
+                 lower_signature(b, 128, d, n, use_pallas=False), cfg)
+            cfg = dict(kind="siggrad", b=b, length=128, d=d, depth=n, pallas=False,
+                       out_dim=128 * d)
+            emit(f"siggrad_b{b}_L128_d{d}_N{n}.hlo.txt",
+                 lower_signature_grad(b, 128, d, n), cfg)
+            cfg = dict(kind="logsig", b=b, length=128, d=d, depth=n, pallas=False,
+                       out_dim=ref.witt_dimension(d, n))
+            emit(f"logsig_b{b}_L128_d{d}_N{n}.hlo.txt",
+                 lower_logsignature(b, 128, d, n, use_pallas=False), cfg)
+    return manifest
+
+
+def build_golden(out_dir: str):
+    """Deterministic oracle input/output pairs for the Rust engine tests."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    cases = [(2, 3, 8), (3, 4, 6), (4, 4, 10), (1, 5, 7), (5, 2, 9), (2, 6, 12)]
+    for d, depth, length in cases:
+        rng = np.random.default_rng(1000 * d + 10 * depth + length)
+        path = (rng.normal(size=(length, d)).astype(np.float32) * 0.3).cumsum(axis=0)
+        jpath = jnp.asarray(path)[None]  # (1, L, d)
+        sig = ref.signature_ref(jpath, depth)[0]
+        logsig = ref.logsignature_words_ref(jpath, depth)[0]
+        # Gradient of sum(sig) wrt the path.
+        grad = jax.grad(lambda p: jnp.sum(ref.signature_ref(p, depth)))(jpath)[0]
+        stream = ref.signature_stream_ref(jpath, depth)[0]
+        blob = {
+            "d": d,
+            "depth": depth,
+            "length": length,
+            "path": [float(v) for v in np.asarray(path).ravel()],
+            "sig": [float(v) for v in np.asarray(sig).ravel()],
+            "logsig_words": [float(v) for v in np.asarray(logsig).ravel()],
+            "grad_sum_sig": [float(v) for v in np.asarray(grad).ravel()],
+            "stream_last2": [float(v) for v in np.asarray(stream[-2:]).ravel()],
+        }
+        name = f"golden_d{d}_N{depth}_L{length}.json"
+        with open(os.path.join(gdir, name), "w") as f:
+            json.dump(blob, f)
+        print(f"  golden/{name}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sweep", default="small", choices=["none", "small", "paper"])
+    args = ap.parse_args()
+    t0 = time.time()
+    print(f"lowering artifacts to {args.out} (sweep={args.sweep})")
+    manifest = build_artifacts(args.out, args.sweep)
+    build_golden(args.out)
+    with open(os.path.join(args.out, "MANIFEST.json"), "w") as f:
+        json.dump({"artifacts": manifest, "sweep": args.sweep}, f, indent=1)
+    print(f"done: {len(manifest)} artifacts in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

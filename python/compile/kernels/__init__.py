@@ -1,0 +1,1 @@
+"""L1 kernels: the Pallas fused multiply-exponentiate and its jnp oracle."""

@@ -1,0 +1,117 @@
+"""L1: the fused multiply-exponentiate as a Pallas kernel.
+
+One kernel invocation advances the signature state of a *tile of the batch*
+by one path increment: ``state <- state ⊠ exp(z)`` via the Horner scheme of
+§4.1 (eq. 5) — the same operation as ``rust/src/ta/fused.rs`` and
+``ref.fused_step_ref``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the flat signature state
+(``sig_len = Σ d^k`` floats per batch element) is the VMEM-resident
+carry; the grid runs over batch tiles so each element's state is loaded
+from HBM once per step and stored once. The Horner inner products are
+rank-expansions (vector ⊗ vector → matrix, …) executed on the VPU; there
+is no matmul, so the MXU is idle and the kernel is bandwidth-bound —
+the roofline argument lives in DESIGN.md.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Interpret mode lowers the
+kernel to plain HLO ops, which is exactly what the AOT artifacts need.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fused_step_kernel(state_ref, z_ref, out_ref, *, d: int, depth: int):
+    """Pallas kernel body: rows of a batch tile, flat signature layout."""
+    offs = ref.level_offsets(d, depth)
+    state = state_ref[...]          # (tile, sig_len)
+    z = z_ref[...]                  # (tile, d)
+    lv = [state[:, offs[k - 1]: offs[k]] for k in range(1, depth + 1)]
+    out = [lv[0] + z]
+    for k in range(2, depth + 1):
+        b = z * (1.0 / k) + lv[0]
+        for i in range(2, k + 1):
+            m = k - i + 1
+            zm = z * (1.0 / m)
+            b = (b[:, :, None] * zm[:, None, :]).reshape(b.shape[0], -1) + lv[i - 1]
+        out.append(b)
+    out_ref[...] = jnp.concatenate(out, axis=-1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def fused_step(state, z, d: int, depth: int, tile: int = 8):
+    """Batched fused multiply-exponentiate via pallas_call.
+
+    state: (batch, sig_len) f32, z: (batch, d) f32 -> (batch, sig_len).
+    ``tile`` is the batch-tile (grid) block size; batch must divide by it
+    (callers pad — the coordinator's dynamic batcher always supplies full
+    tiles).
+
+    Differentiable via a handwritten custom_vjp (pallas_call itself does not
+    support reverse-mode autodiff; the paper's backward is handwritten too,
+    §5.3) whose backward is the VJP of the jnp oracle.
+    """
+    batch, L = state.shape
+    assert L == ref.sig_len(d, depth), (L, d, depth)
+    assert z.shape == (batch, d)
+    assert batch % tile == 0, f"batch {batch} not a multiple of tile {tile}"
+    grid = (batch // tile,)
+    return pl.pallas_call(
+        functools.partial(_fused_step_kernel, d=d, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, L), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, L), state.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(state, z)
+
+
+def _fused_step_fwd(state, z, d, depth, tile):
+    return fused_step(state, z, d, depth, tile), (state, z)
+
+
+def _fused_step_bwd(d, depth, tile, res, g):
+    state, z = res
+    _, vjp = jax.vjp(lambda s, zz: ref.fused_step_ref(s, zz, d, depth), state, z)
+    return vjp(g)
+
+
+fused_step.defvjp(_fused_step_fwd, _fused_step_bwd)
+
+
+def signature_pallas(path, depth: int, tile: int = 8):
+    """Sig^N of a batch of paths using the Pallas fused-step kernel.
+
+    path: (batch, L, d) -> (batch, sig_len). The scan carries the signature
+    state through one pallas_call per increment; in the lowered HLO the
+    kernel body appears once inside the scan's while-loop body.
+    """
+    batch, length, d = path.shape
+    incr = path[:, 1:, :] - path[:, :-1, :]
+    state = ref.tensor_exp(incr[:, 0, :], depth)
+
+    def step(s, z):
+        return fused_step(s, z, d, depth, tile), None
+
+    zs = jnp.moveaxis(incr[:, 1:, :], 1, 0)
+    state, _ = jax.lax.scan(step, state, zs)
+    return state
+
+
+def vmem_estimate_bytes(d: int, depth: int, tile: int) -> int:
+    """Estimated VMEM footprint of one kernel instance (state tile + z tile
+    + output tile + the largest Horner intermediate), for DESIGN.md's
+    roofline table."""
+    L = ref.sig_len(d, depth)
+    horner_max = d ** max(depth - 1, 1)
+    floats = tile * (2 * L + d + horner_max)
+    return 4 * floats

@@ -1,0 +1,252 @@
+"""Pure-jnp reference oracle for the signature algebra (L1 correctness).
+
+Everything here is deliberately straightforward jax.numpy — no Pallas, no
+cleverness — so it can serve as the ground truth that the Pallas kernel
+(`fused_step.py`), the L2 model (`model.py`), and (via golden files) the
+Rust native engine are all checked against.
+
+Conventions match the Rust side (`rust/src/ta/`): a depth-N signature over
+d channels is a flat vector of length `sig_len(d, N) = d + d^2 + ... + d^N`,
+levels concatenated, the scalar (k=0) term implicit. Batched variants carry
+leading batch axes.
+"""
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+
+@lru_cache(maxsize=None)
+def level_offsets(d: int, depth: int):
+    """Offsets of each level in the flat signature vector.
+
+    Returns a tuple of length depth+1; level k (1-based) occupies
+    [offsets[k-1], offsets[k]).
+    """
+    offs = [0]
+    for k in range(1, depth + 1):
+        offs.append(offs[-1] + d**k)
+    return tuple(offs)
+
+
+def sig_len(d: int, depth: int) -> int:
+    """d + d^2 + ... + d^depth (the paper's "signature channels")."""
+    return level_offsets(d, depth)[-1]
+
+
+def levels_of(sig, d: int, depth: int):
+    """Split a flat signature (leading batch axes allowed) into levels."""
+    offs = level_offsets(d, depth)
+    return [sig[..., offs[k - 1]: offs[k]] for k in range(1, depth + 1)]
+
+
+def flatten_levels(levels):
+    return jnp.concatenate(levels, axis=-1)
+
+
+def tensor_exp(z, depth: int):
+    """exp(z) = (z, z⊗z/2!, ..., z^⊗depth/depth!) flattened. z: (..., d)."""
+    levels = [z]
+    for k in range(2, depth + 1):
+        nxt = levels[-1][..., :, None] * z[..., None, :] / k
+        levels.append(nxt.reshape(*z.shape[:-1], -1))
+    return flatten_levels(levels)
+
+
+def sig_mul(a, b, d: int, depth: int):
+    """Truncated tensor product a ⊠ b with implicit unit scalar terms."""
+    la = levels_of(a, d, depth)
+    lb = levels_of(b, d, depth)
+    out = []
+    for k in range(1, depth + 1):
+        acc = la[k - 1] + lb[k - 1]
+        for i in range(1, k):
+            j = k - i
+            prod = la[i - 1][..., :, None] * lb[j - 1][..., None, :]
+            acc = acc + prod.reshape(acc.shape)
+        out.append(acc)
+    return flatten_levels(out)
+
+
+def fused_step_ref(state, z, d: int, depth: int):
+    """state ⊠ exp(z) via the paper's Horner scheme (§4.1, eq. 5).
+
+    state: (..., sig_len), z: (..., d). The reference for the Pallas kernel.
+    """
+    lv = levels_of(state, d, depth)
+    out = [lv[0] + z]
+    for k in range(2, depth + 1):
+        b = z / k + lv[0]
+        for i in range(2, k + 1):
+            m = k - i + 1
+            b = (b[..., :, None] * (z / m)[..., None, :]).reshape(
+                *z.shape[:-1], -1
+            ) + lv[i - 1]
+        out.append(b)
+    return flatten_levels(out)
+
+
+def signature_ref(path, depth: int):
+    """Sig^N of a path, shape (..., L, d) -> (..., sig_len).
+
+    Plain scan of the fused step — the oracle for both the Pallas-kernel
+    model and (through golden files) the Rust engine.
+    """
+    d = path.shape[-1]
+    incr = path[..., 1:, :] - path[..., :-1, :]
+    state = tensor_exp(incr[..., 0, :], depth)
+
+    def step(s, z):
+        return fused_step_ref(s, z, d, depth), None
+
+    # Move the stream axis to the front for scan.
+    zs = jnp.moveaxis(incr[..., 1:, :], -2, 0)
+    state, _ = jax.lax.scan(step, state, zs)
+    return state
+
+
+def signature_stream_ref(path, depth: int):
+    """All prefix signatures, (..., L, d) -> (..., L-1, sig_len)."""
+    d = path.shape[-1]
+    incr = path[..., 1:, :] - path[..., :-1, :]
+    state = tensor_exp(incr[..., 0, :], depth)
+
+    def step(s, z):
+        nxt = fused_step_ref(s, z, d, depth)
+        return nxt, nxt
+
+    zs = jnp.moveaxis(incr[..., 1:, :], -2, 0)
+    _, tail = jax.lax.scan(step, state, zs)
+    tail = jnp.moveaxis(tail, 0, -2)
+    return jnp.concatenate([state[..., None, :], tail], axis=-2)
+
+
+def sig_mul_nounit(a, b, d: int, depth: int):
+    """⊠ treating both inputs as having zero scalar term."""
+    la = levels_of(a, d, depth)
+    lb = levels_of(b, d, depth)
+    out = []
+    for k in range(1, depth + 1):
+        acc = jnp.zeros_like(la[k - 1])
+        for i in range(1, k):
+            j = k - i
+            prod = la[i - 1][..., :, None] * lb[j - 1][..., None, :]
+            acc = acc + prod.reshape(acc.shape)
+        out.append(acc)
+    return flatten_levels(out)
+
+
+def tensor_log(x, d: int, depth: int):
+    """log(1 + x) for the non-unit part x of a group-like element.
+
+    Horner over (scalar, tensor) pairs, mirroring rust/src/ta/log.rs.
+    """
+    if depth == 1:
+        return x
+    s = 1.0 / depth
+    t = jnp.zeros_like(x)
+    for m in range(depth - 1, 0, -1):
+        xt = sig_mul_nounit(x, t, d, depth)
+        t = -(s * x + xt)
+        s = 1.0 / m
+    return x + sig_mul_nounit(x, t, d, depth)
+
+
+# ---------------------------------------------------------------------------
+# Lyndon machinery (mirrors rust/src/words/) for the Words-basis
+# logsignature and its golden files.
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def lyndon_words(d: int, max_len: int):
+    """All Lyndon words over d letters of length <= max_len (Duval)."""
+    if d == 1:
+        return ((0,),)
+    out = []
+    w = [0]
+    while w:
+        out.append(tuple(w))
+        base = list(w)
+        w = [base[i % len(base)] for i in range(max_len)]
+        while w and w[-1] == d - 1:
+            w.pop()
+        if w:
+            w[-1] += 1
+    return tuple(out)
+
+
+def word_index(word, d: int) -> int:
+    idx = 0
+    for c in word:
+        idx = idx * d + c
+    return idx
+
+
+@lru_cache(maxsize=None)
+def lyndon_flat_indices(d: int, depth: int):
+    """Flat indices into the signature vector of every Lyndon word,
+    ordered by (level, lex) to match the Rust LogSigPlan."""
+    offs = level_offsets(d, depth)
+    entries = []
+    for w in lyndon_words(d, depth):
+        k = len(w)
+        entries.append((k, word_index(w, d)))
+    entries.sort()
+    return tuple(offs[k - 1] + idx for k, idx in entries)
+
+
+def witt_dimension(d: int, depth: int) -> int:
+    return len(lyndon_flat_indices(d, depth))
+
+
+def logsignature_words_ref(path, depth: int):
+    """LogSig in the paper's Words basis: gather of log(Sig) at Lyndon
+    positions (App. A.2.3)."""
+    d = path.shape[-1]
+    sig = signature_ref(path, depth)
+    logt = tensor_log(sig, d, depth)
+    idx = jnp.asarray(lyndon_flat_indices(d, depth))
+    return logt[..., idx]
+
+
+def witt_check(d: int, depth: int) -> int:
+    """Witt's formula, used to cross-check lyndon_flat_indices."""
+    def mobius(n):
+        result, m, p = 1, n, 2
+        while p * p <= m:
+            if m % p == 0:
+                m //= p
+                if m % p == 0:
+                    return 0
+                result = -result
+            p += 1
+        if m > 1:
+            result = -result
+        return result
+
+    total = 0
+    for k in range(1, depth + 1):
+        s = sum(mobius(k // i) * d**i for i in range(1, k + 1) if k % i == 0)
+        total += s // k
+    return total
+
+
+def count_fused_muls(d: int, depth: int) -> int:
+    """F(d, N) of App. A.1.2 (eq. 11) — mirrored from rust/src/ta/opcount.rs."""
+    total = d * (depth - 1)
+    for k in range(1, depth + 1):
+        for i in range(2, k + 1):
+            total += d**i
+    return total
+
+
+def count_conventional_muls(d: int, depth: int) -> int:
+    """C(d, N) of App. A.1.1 (eq. 9)."""
+    total = 0
+    for k in range(2, depth + 1):
+        total += d + math.comb(d + k - 1, k)
+    for k in range(1, depth + 1):
+        total += (k - 1) * d**k
+    return total

@@ -1,0 +1,104 @@
+"""L2: JAX compute graphs lowered to the AOT artifacts.
+
+Three graphs, all calling the L1 kernel (or its jnp oracle):
+
+- ``signature_fn`` — batched signature forward, the accelerator-path
+  analogue of Signatory's GPU ``signature()``.
+- ``logsignature_fn`` — batched Words-basis logsignature (§4.3).
+- ``train_step`` — one optimisation step of the paper's deep signature
+  model (§6.2): a pointwise feedforward network swept over the input
+  sequence, the signature transform, then a learnt linear map to a binary
+  logit; BCE loss, SGD update. Backpropagation *through the signature* is
+  taken by jax.grad through the scan of fused steps.
+
+Python never runs at serving time: each graph is lowered once by aot.py to
+HLO text and executed from the Rust runtime.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.fused_step import signature_pallas
+
+
+def signature_fn(path, depth: int, use_pallas: bool = True, tile: int = 8):
+    """Batched Sig^N, (b, L, d) -> (b, sig_len)."""
+    if use_pallas:
+        return signature_pallas(path, depth, tile=tile)
+    return ref.signature_ref(path, depth)
+
+
+def logsignature_fn(path, depth: int, use_pallas: bool = True, tile: int = 8):
+    """Batched Words-basis LogSig^N, (b, L, d) -> (b, witt_dim)."""
+    d = path.shape[-1]
+    sig = signature_fn(path, depth, use_pallas=use_pallas, tile=tile)
+    logt = ref.tensor_log(sig, d, depth)
+    idx = jnp.asarray(ref.lyndon_flat_indices(d, depth))
+    return logt[..., idx]
+
+
+class DeepSigParams(NamedTuple):
+    """Parameters of the deep signature model (a flat tuple so the Rust
+    runtime can pass them positionally to the AOT train step)."""
+
+    w1: jax.Array  # (d_in, hidden)
+    b1: jax.Array  # (hidden,)
+    w2: jax.Array  # (hidden, d_out)
+    b2: jax.Array  # (d_out,)
+    w_out: jax.Array  # (sig_len(d_out, depth),)
+    b_out: jax.Array  # ()
+
+
+def init_params(d_in: int, hidden: int, d_out: int, depth: int, seed: int = 0) -> DeepSigParams:
+    """He-style init, deterministic in `seed`."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    sl = ref.sig_len(d_out, depth)
+
+    def norm(shape, scale):
+        return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+    return DeepSigParams(
+        w1=norm((d_in, hidden), (2.0 / d_in) ** 0.5),
+        b1=jnp.zeros((hidden,), jnp.float32),
+        w2=norm((hidden, d_out), (2.0 / hidden) ** 0.5),
+        b2=jnp.zeros((d_out,), jnp.float32),
+        w_out=norm((sl,), (1.0 / sl) ** 0.5),
+        b_out=jnp.zeros((), jnp.float32),
+    )
+
+
+def deep_sig_logits(params: DeepSigParams, x, depth: int, use_pallas: bool, tile: int):
+    """x: (b, L, d_in) -> logits (b,).
+
+    The 'small feedforward network swept over the input sequence' of §6.2,
+    then the signature transform, then a learnt linear map.
+    """
+    h = jnp.tanh(x @ params.w1 + params.b1)
+    hidden_path = h @ params.w2 + params.b2  # (b, L, d_out)
+    sig = signature_fn(hidden_path, depth, use_pallas=use_pallas, tile=tile)
+    return sig @ params.w_out + params.b_out
+
+
+def bce_loss(params: DeepSigParams, x, y, depth: int, use_pallas: bool, tile: int):
+    """Binary cross-entropy with logits; y in {0, 1}, shape (b,)."""
+    logits = deep_sig_logits(params, x, depth, use_pallas, tile)
+    # log-sum-exp stable BCE.
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def train_step(params: DeepSigParams, x, y, lr, depth: int, use_pallas: bool = False, tile: int = 8):
+    """One SGD step. Returns (new_params..., loss) as a flat tuple so the
+    lowered artifact has a simple positional calling convention."""
+    loss, grads = jax.value_and_grad(bce_loss)(params, x, y, depth, use_pallas, tile)
+    new = DeepSigParams(*(p - lr * g for p, g in zip(params, grads)))
+    return tuple(new) + (loss,)
+
+
+def predict_accuracy(params: DeepSigParams, x, y, depth: int, use_pallas: bool = False, tile: int = 8):
+    logits = deep_sig_logits(params, x, depth, use_pallas, tile)
+    return jnp.mean(((logits > 0).astype(jnp.float32) == y).astype(jnp.float32))

@@ -1,0 +1,149 @@
+"""L1 correctness: the Pallas fused-step kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: hypothesis sweeps
+shapes (batch/stream/channels/depth), tiles and dtypes, asserting
+allclose against ref.py everywhere.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_step import fused_step, signature_pallas, vmem_estimate_bytes
+
+
+def rand_state(rng, b, d, depth):
+    return jnp.asarray(rng.normal(size=(b, ref.sig_len(d, depth))).astype(np.float32))
+
+
+def rand_z(rng, b, d, scale=0.5):
+    return jnp.asarray((rng.normal(size=(b, d)) * scale).astype(np.float32))
+
+
+def rand_path(rng, b, L, d, scale=0.3):
+    steps = rng.normal(size=(b, L, d)).astype(np.float32) * scale
+    return jnp.asarray(np.cumsum(steps, axis=1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 5),
+    depth=st.integers(1, 5),
+    tile_pow=st.integers(0, 3),
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_step_matches_ref(d, depth, tile_pow, tiles, seed):
+    tile = 2**tile_pow
+    b = tile * tiles
+    rng = np.random.default_rng(seed)
+    state = rand_state(rng, b, d, depth)
+    z = rand_z(rng, b, d)
+    out = fused_step(state, z, d, depth, tile)
+    expect = ref.fused_step_ref(state, z, d, depth)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(1, 4),
+    depth=st.integers(1, 4),
+    L=st.integers(2, 24),
+    b=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_signature_pallas_matches_ref(d, depth, L, b, seed):
+    rng = np.random.default_rng(seed)
+    path = rand_path(rng, b, L, d)
+    tile = 1 if b == 1 else min(b, 4)
+    got = signature_pallas(path, depth, tile=tile)
+    expect = ref.signature_ref(path, depth)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), rtol=2e-4, atol=1e-5)
+
+
+def test_fused_step_rejects_bad_tile():
+    rng = np.random.default_rng(0)
+    state = rand_state(rng, 6, 2, 3)
+    z = rand_z(rng, 6, 2)
+    with pytest.raises(AssertionError):
+        fused_step(state, z, 2, 3, 4)  # 6 % 4 != 0
+
+
+def test_fused_step_identity_state_is_exp():
+    # From the zero (identity) state the fused step produces exp(z).
+    rng = np.random.default_rng(3)
+    d, depth, b = 3, 4, 8
+    z = rand_z(rng, b, d)
+    state = jnp.zeros((b, ref.sig_len(d, depth)), jnp.float32)
+    out = fused_step(state, z, d, depth, 4)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.tensor_exp(z, depth)), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(1, 4), depth=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_chen_identity_ref(d, depth, seed):
+    # ref.sig_mul obeys Chen: Sig(whole) = Sig(left) ⊠ Sig(right).
+    rng = np.random.default_rng(seed)
+    path = rand_path(rng, 2, 11, d)
+    full = ref.signature_ref(path, depth)
+    left = ref.signature_ref(path[:, :6], depth)
+    right = ref.signature_ref(path[:, 5:], depth)
+    np.testing.assert_allclose(
+        np.asarray(ref.sig_mul(left, right, d, depth)),
+        np.asarray(full),
+        rtol=2e-4,
+        atol=1e-5,
+    )
+
+
+def test_log_of_exp_is_increment():
+    rng = np.random.default_rng(5)
+    d, depth = 3, 5
+    z = rand_z(rng, 4, d)
+    e = ref.tensor_exp(z, depth)
+    logt = ref.tensor_log(e, d, depth)
+    expect = np.zeros(np.asarray(logt).shape, np.float32)
+    expect[:, :d] = np.asarray(z)
+    np.testing.assert_allclose(np.asarray(logt), expect, rtol=1e-4, atol=1e-5)
+
+
+def test_lyndon_indices_match_witt():
+    for d in range(1, 6):
+        for depth in range(1, 6):
+            assert ref.witt_dimension(d, depth) == ref.witt_check(d, depth)
+
+
+def test_opcount_fused_below_conventional():
+    # App. A.1.3, mirrored in rust/src/ta/opcount.rs.
+    for d in range(1, 8):
+        for n in range(1, 10):
+            assert ref.count_fused_muls(d, n) <= ref.count_conventional_muls(d, n)
+
+
+def test_gradients_flow_through_pallas_kernel():
+    # jax.grad through the interpret-mode kernel equals grad through ref.
+    rng = np.random.default_rng(7)
+    d, depth, b, L = 2, 3, 4, 6
+    path = rand_path(rng, b, L, d)
+
+    g1 = jax.grad(lambda p: jnp.sum(signature_pallas(p, depth, tile=2)))(path)
+    g2 = jax.grad(lambda p: jnp.sum(ref.signature_ref(p, depth)))(path)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=1e-5)
+
+
+def test_vmem_estimate_sane():
+    # d=4,N=4 tile=8 state fits comfortably in a 16MB VMEM budget.
+    assert vmem_estimate_bytes(4, 4, 8) < 16 * 2**20
+    # d=7,N=7 only fits small tiles (the DESIGN.md roofline point).
+    assert vmem_estimate_bytes(7, 7, 4) > 16 * 2**20
+    assert vmem_estimate_bytes(7, 7, 1) < 16 * 2**20

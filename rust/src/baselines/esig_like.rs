@@ -1,0 +1,89 @@
+//! The `esig`-profile baseline: correct but slow, capped, forward-only.
+//!
+//! In the paper's tables esig is an order of magnitude slower than
+//! iisignature, cannot compute backward passes at all, and shows dashes
+//! ("incapable") for larger operations. We reproduce that profile
+//! faithfully: the conventional algorithm with fresh allocations per step
+//! and no workspace reuse, a hard size guard, and no backward entry point.
+
+use crate::ta::exp::exp;
+use crate::ta::mul::mul;
+use crate::ta::SigSpec;
+
+/// The largest `sig_len` this baseline accepts, mimicking esig's inability
+/// to run the paper's larger benchmark points. Calibrated to the paper's
+/// tables: esig computes (channels 4, depth 6), `sig_len` 5460, but dashes
+/// at (channels 4, depth 7) = 21844 and (channels 4+, depth 7) onward.
+pub const MAX_SIG_LEN: usize = 6_000;
+
+/// Forward signature, esig-style. Errors (like esig's failure) when the
+/// operation is too large or the input malformed. There is deliberately no
+/// `signature_vjp` in this module — esig has no backward operation.
+pub fn signature(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        spec.sig_len() <= MAX_SIG_LEN,
+        "esig_like: operation too large (sig_len {} > {MAX_SIG_LEN})",
+        spec.sig_len()
+    );
+    anyhow::ensure!(stream >= 2, "need at least two points");
+    anyhow::ensure!(path.len() == stream * spec.d(), "bad path buffer");
+    let d = spec.d();
+    let incr = |i: usize| -> Vec<f32> {
+        (0..d).map(|c| path[(i + 1) * d + c] - path[i * d + c]).collect()
+    };
+    // exp + ⊠ per step, every intermediate freshly allocated.
+    let mut sig = exp(spec, &incr(0));
+    for i in 1..stream - 1 {
+        let e = exp(spec, &incr(i));
+        sig = mul(spec, &sig, &e);
+    }
+    Ok(sig)
+}
+
+/// Whether the baseline supports the given problem size (for rendering the
+/// paper's dashes).
+pub fn supports(spec: &SigSpec) -> bool {
+    spec.sig_len() <= MAX_SIG_LEN
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::assert_close;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn matches_signax_when_supported() {
+        let spec = SigSpec::new(3, 4).unwrap();
+        let mut rng = Rng::new(8);
+        let stream = 10;
+        let mut path = vec![0.0f32; stream * 3];
+        for i in 1..stream {
+            for c in 0..3 {
+                path[i * 3 + c] = path[(i - 1) * 3 + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        let ours = crate::signature::signature(&path, stream, &spec);
+        let esig = signature(&path, stream, &spec).unwrap();
+        assert_close(&esig, &ours, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn rejects_large_operations() {
+        // channels 7, depth 7: sig_len ≈ 960k > the guard — the dash cells
+        // of Tables 1 and 5.
+        let spec = SigSpec::new(7, 7).unwrap();
+        assert!(!supports(&spec));
+        let path = vec![0.0f32; 2 * 7];
+        assert!(signature(&path, 2, &spec).is_err());
+    }
+
+    #[test]
+    fn small_operations_supported() {
+        // channels 2 and 3 at depth 7 are within esig's range (the paper's
+        // populated esig cells).
+        assert!(supports(&SigSpec::new(2, 7).unwrap()));
+        assert!(supports(&SigSpec::new(3, 7).unwrap()));
+        assert!(!supports(&SigSpec::new(4, 7).unwrap()));
+    }
+}

@@ -1,0 +1,176 @@
+//! The `iisignature`-profile baseline: conventional (non-fused) Chen
+//! iteration and a store-everything backward.
+
+use crate::ta::exp::{exp_into, exp_vjp};
+use crate::ta::mul::{mul_into, mul_vjp};
+use crate::ta::{SigSpec, Workspace};
+
+/// Signature via the conventional algorithm: per increment compute
+/// `exp(z_i)` explicitly, then a full out-of-place ⊠ (App. A.1.1). Costs
+/// `C(d, N)` multiplications per increment vs the fused `F(d, N)`.
+pub fn signature(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+    assert!(stream >= 2);
+    assert_eq!(path.len(), stream * spec.d());
+    let d = spec.d();
+    let mut ws = Workspace::new(spec);
+    let mut z = vec![0.0f32; d];
+    // First increment: the signature IS the exponential.
+    for c in 0..d {
+        z[c] = path[d + c] - path[c];
+    }
+    let mut sig = spec.zeros();
+    exp_into(spec, &z, &mut sig);
+    let mut next = spec.zeros();
+    for i in 2..stream {
+        for c in 0..d {
+            z[c] = path[i * d + c] - path[(i - 1) * d + c];
+        }
+        exp_into(spec, &z, &mut ws.t0); // explicit exponential
+        mul_into(spec, &sig, &ws.t0, &mut next); // full, unfused ⊠
+        std::mem::swap(&mut sig, &mut next);
+    }
+    sig
+}
+
+/// Forward pass retaining all intermediate prefix signatures (what a
+/// tape-based autodiff must do without reversibility). Returns
+/// `(stream - 1, sig_len)`: prefix signatures after each increment.
+pub fn signature_with_tape(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+    assert!(stream >= 2);
+    let d = spec.d();
+    let len = spec.sig_len();
+    let mut tape = vec![0.0f32; (stream - 1) * len];
+    let mut ws = Workspace::new(spec);
+    let mut z = vec![0.0f32; d];
+    for c in 0..d {
+        z[c] = path[d + c] - path[c];
+    }
+    {
+        let (first, _) = tape.split_at_mut(len);
+        exp_into(spec, &z, first);
+    }
+    for i in 2..stream {
+        for c in 0..d {
+            z[c] = path[i * d + c] - path[(i - 1) * d + c];
+        }
+        exp_into(spec, &z, &mut ws.t0);
+        let (prev, cur) = tape[(i - 2) * len..i * len].split_at_mut(len);
+        mul_into(spec, prev, &ws.t0, cur);
+    }
+    tape
+}
+
+/// Backward pass in the iisignature style: consumes the stored tape
+/// (`O(L · sig_len)` memory — this is the memory profile the paper's
+/// reversibility avoids, App. C.1/D.2).
+pub fn signature_vjp(path: &[f32], stream: usize, spec: &SigSpec, g: &[f32]) -> Vec<f32> {
+    let d = spec.d();
+    let len = spec.sig_len();
+    assert_eq!(g.len(), len);
+    let tape = signature_with_tape(path, stream, spec);
+    let mut grad_path = vec![0.0f32; stream * d];
+    let mut g_state = g.to_vec();
+    let mut z = vec![0.0f32; d];
+    let mut e = spec.zeros();
+    for i in (2..stream).rev() {
+        for c in 0..d {
+            z[c] = path[i * d + c] - path[(i - 1) * d + c];
+        }
+        exp_into(spec, &z, &mut e);
+        let prev = &tape[(i - 2) * len..(i - 1) * len];
+        let mut g_prev = vec![0.0f32; len];
+        let mut g_e = vec![0.0f32; len];
+        mul_vjp(spec, prev, &e, &g_state, &mut g_prev, &mut g_e);
+        let mut gz = vec![0.0f32; d];
+        exp_vjp(spec, &z, &g_e, &mut gz);
+        for c in 0..d {
+            grad_path[i * d + c] += gz[c];
+            grad_path[(i - 1) * d + c] -= gz[c];
+        }
+        g_state = g_prev;
+    }
+    // First increment: sig_1 = exp(z_1).
+    for c in 0..d {
+        z[c] = path[d + c] - path[c];
+    }
+    let mut gz = vec![0.0f32; d];
+    exp_vjp(spec, &z, &g_state, &mut gz);
+    for c in 0..d {
+        grad_path[d + c] += gz[c];
+        grad_path[c] -= gz[c];
+    }
+    grad_path
+}
+
+/// Peak additional memory (bytes) the tape-based backward retains, for the
+/// §D.2 memory comparison.
+pub fn tape_bytes(stream: usize, spec: &SigSpec) -> usize {
+    (stream - 1) * spec.sig_len() * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::substrate::rng::Rng;
+
+    fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn matches_fused_signature() {
+        property("baseline == signax fwd", 20, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            let stream = g.usize_in(2, 16);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            assert_close(
+                &signature(&path, stream, &spec),
+                &crate::signature::signature(&path, stream, &spec),
+                1e-4,
+                1e-5,
+            );
+        });
+    }
+
+    #[test]
+    fn tape_last_entry_is_signature() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(2);
+        let path = random_path(&mut rng, 8, 2);
+        let tape = signature_with_tape(&path, 8, &spec);
+        let len = spec.sig_len();
+        assert_close(&tape[6 * len..], &signature(&path, 8, &spec), 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn backward_matches_reversibility_backward() {
+        property("baseline bwd == signax bwd", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 10);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let gvec = g.normal_vec(spec.sig_len(), 1.0);
+            let ours = crate::signature::signature_vjp(&path, stream, &spec, &gvec);
+            let theirs = signature_vjp(&path, stream, &spec, &gvec);
+            assert_close(&theirs, &ours, 2e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn tape_memory_is_linear() {
+        let spec = SigSpec::new(3, 4).unwrap();
+        assert_eq!(tape_bytes(128, &spec), 127 * spec.sig_len() * 4);
+    }
+}

@@ -1,0 +1,16 @@
+//! Reimplementations of the systems the paper benchmarks against (§6).
+//!
+//! - [`iisignature_like`] — the strongest competitor: the *conventional*
+//!   algorithm of App. A.1.1 (explicit exponential, then a full ⊠ per
+//!   increment, `C(d,N) = Θ(N d^N)` multiplications) with an
+//!   autodiff-style backward that **stores every intermediate prefix
+//!   signature** (no reversibility). This is exactly the algorithmic
+//!   profile the paper attributes to `iisignature`, so measuring signax
+//!   against it reproduces the paper's Signatory-vs-iisignature
+//!   comparison on like-for-like resources.
+//! - [`esig_like`] — the `esig`-profile baseline: conventional algorithm,
+//!   per-step allocations, a hard size guard (esig "is incapable of larger
+//!   operations" — dashes in the paper's tables), and **no backward**.
+
+pub mod esig_like;
+pub mod iisignature_like;

@@ -1,0 +1,20 @@
+//! The benchmark harness regenerating every table and figure of the
+//! paper's evaluation (§6, App. D). See DESIGN.md's experiment index.
+//!
+//! - Tables 1–4 / Figures 1–2: signature forward/backward, varying
+//!   channels and depth, batch 32.
+//! - Tables 5–8 / Figure 4: logsignature forward/backward.
+//! - Tables 9–16 / Figures 5–6: all of the above at batch 1.
+//! - `opcount`: the App. A.1.3 multiplication-count table (F vs C).
+//! - `path`: the §4.2 O(1)-vs-recompute interval-query comparison.
+//! - `memory`: the App. D.2 reversibility-vs-tape memory comparison.
+//!
+//! Rows mirror the paper's: `esig_like`, `iisignature_like` (baselines),
+//! `signax CPU (no parallel)`, `signax CPU (parallel)` and `signax XLA`
+//! (the accelerator path standing in for "Signatory GPU"), plus derived
+//! "Ratio" rows against the strongest competitor. Cells where a system
+//! cannot run print as dashes, exactly like esig's dashes in the paper.
+
+pub mod tables;
+
+pub use tables::{run_table, table_ids, BenchCtx, Scale};

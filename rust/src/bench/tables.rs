@@ -1,0 +1,702 @@
+//! Table definitions and execution.
+
+use crate::baselines::{esig_like, iisignature_like};
+use crate::logsignature::{logsignature_from_sig, logsignature_vjp, LogSigBasis, LogSigPlan};
+use crate::path::Path;
+use crate::runtime::{ArtifactKind, EngineHandle, Registry};
+use crate::signature::backward::signature_batch_vjp;
+use crate::signature::{signature, signature_batch, signature_vjp, signature_with, SigConfig};
+use crate::substrate::benchlib::{bench, black_box, BenchConfig, Table};
+use crate::substrate::pool::default_threads;
+use crate::substrate::rng::Rng;
+use crate::ta::opcount;
+use crate::ta::SigSpec;
+
+/// Benchmark scale: the paper's exact sizes, or scaled-down sweeps for
+/// quick runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Batch 32/1, stream 128, channels 2–7, depths 2–9, repeats up to 50
+    /// (§6: "repeated 50 times and the fastest time taken").
+    Paper,
+    /// Batch 8/1, stream 64, channels 2–5, depths 2–6, few repeats.
+    Small,
+    /// Minimal smoke scale for `cargo bench` CI runs.
+    Ci,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> anyhow::Result<Scale> {
+        Ok(match s {
+            "paper" => Scale::Paper,
+            "small" => Scale::Small,
+            "ci" => Scale::Ci,
+            other => anyhow::bail!("unknown scale {other:?} (paper|small|ci)"),
+        })
+    }
+
+    fn batch(&self) -> usize {
+        match self {
+            Scale::Paper => 32,
+            Scale::Small => 8,
+            Scale::Ci => 4,
+        }
+    }
+
+    fn stream(&self) -> usize {
+        match self {
+            Scale::Paper => 128,
+            Scale::Small => 64,
+            Scale::Ci => 32,
+        }
+    }
+
+    fn channel_axis(&self) -> Vec<usize> {
+        match self {
+            Scale::Paper => (2..=7).collect(),
+            Scale::Small => (2..=5).collect(),
+            Scale::Ci => (2..=3).collect(),
+        }
+    }
+
+    fn depth_axis(&self) -> Vec<usize> {
+        match self {
+            Scale::Paper => (2..=9).collect(),
+            Scale::Small => (2..=6).collect(),
+            Scale::Ci => (2..=4).collect(),
+        }
+    }
+
+    /// Fixed depth when sweeping channels / fixed channels when sweeping
+    /// depth (paper: depth 7 / channels 4).
+    fn fixed_depth(&self) -> usize {
+        match self {
+            Scale::Paper => 7,
+            Scale::Small => 5,
+            Scale::Ci => 3,
+        }
+    }
+
+    fn fixed_channels(&self) -> usize {
+        4
+    }
+
+    fn bench_config(&self) -> BenchConfig {
+        match self {
+            Scale::Paper => BenchConfig {
+                warmup: 1,
+                repeats: 50,
+                budget: std::time::Duration::from_secs(15),
+                min_repeats: 2,
+            },
+            Scale::Small => BenchConfig {
+                warmup: 1,
+                repeats: 10,
+                budget: std::time::Duration::from_secs(4),
+                min_repeats: 2,
+            },
+            Scale::Ci => BenchConfig::quick(),
+        }
+    }
+}
+
+/// Execution context: scale, threads, optional XLA engine.
+pub struct BenchCtx {
+    pub scale: Scale,
+    pub threads: usize,
+    pub xla: Option<(EngineHandle, Registry)>,
+}
+
+impl BenchCtx {
+    pub fn new(scale: Scale, artifact_dir: Option<std::path::PathBuf>) -> BenchCtx {
+        let xla = artifact_dir.and_then(|dir| {
+            if dir.join("MANIFEST.json").exists() {
+                EngineHandle::spawn(dir).ok()
+            } else {
+                None
+            }
+        });
+        BenchCtx { scale, threads: default_threads(), xla }
+    }
+}
+
+/// All runnable table ids.
+pub fn table_ids() -> Vec<&'static str> {
+    vec![
+        "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16",
+        "opcount", "path", "memory",
+    ]
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Op {
+    SigFwd,
+    SigBwd,
+    LogSigFwd,
+    LogSigBwd,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Axis {
+    Channels,
+    Depth,
+}
+
+struct TableSpec {
+    title: &'static str,
+    op: Op,
+    axis: Axis,
+    batch_one: bool,
+}
+
+fn spec_for(id: &str) -> Option<TableSpec> {
+    let t = |title, op, axis, batch_one| Some(TableSpec { title, op, axis, batch_one });
+    match id {
+        "1" => t("Table 1 / Fig 1a: signature forward, varying channels", Op::SigFwd, Axis::Channels, false),
+        "2" => t("Table 2 / Fig 2a: signature backward, varying channels", Op::SigBwd, Axis::Channels, false),
+        "3" => t("Table 3 / Fig 1b: signature forward, varying depths", Op::SigFwd, Axis::Depth, false),
+        "4" => t("Table 4 / Fig 2b: signature backward, varying depths", Op::SigBwd, Axis::Depth, false),
+        "5" => t("Table 5 / Fig 4a: logsignature forward, varying channels", Op::LogSigFwd, Axis::Channels, false),
+        "6" => t("Table 6 / Fig 4b: logsignature backward, varying channels", Op::LogSigBwd, Axis::Channels, false),
+        "7" => t("Table 7 / Fig 4c: logsignature forward, varying depths", Op::LogSigFwd, Axis::Depth, false),
+        "8" => t("Table 8 / Fig 4d: logsignature backward, varying depths", Op::LogSigBwd, Axis::Depth, false),
+        "9" => t("Table 9 / Fig 5a: signature forward, varying channels, batch 1", Op::SigFwd, Axis::Channels, true),
+        "10" => t("Table 10 / Fig 5b: signature backward, varying channels, batch 1", Op::SigBwd, Axis::Channels, true),
+        "11" => t("Table 11 / Fig 5c: signature forward, varying depths, batch 1", Op::SigFwd, Axis::Depth, true),
+        "12" => t("Table 12 / Fig 5d: signature backward, varying depths, batch 1", Op::SigBwd, Axis::Depth, true),
+        "13" => t("Table 13 / Fig 6a: logsignature forward, varying channels, batch 1", Op::LogSigFwd, Axis::Channels, true),
+        "14" => t("Table 14 / Fig 6b: logsignature backward, varying channels, batch 1", Op::LogSigBwd, Axis::Channels, true),
+        "15" => t("Table 15 / Fig 6c: logsignature forward, varying depths, batch 1", Op::LogSigFwd, Axis::Depth, true),
+        "16" => t("Table 16 / Fig 6d: logsignature backward, varying depths, batch 1", Op::LogSigBwd, Axis::Depth, true),
+        _ => None,
+    }
+}
+
+/// Run one table by id.
+pub fn run_table(ctx: &BenchCtx, id: &str) -> anyhow::Result<Table> {
+    match id {
+        "opcount" => return Ok(opcount_table(ctx)),
+        "path" => return Ok(path_table(ctx)),
+        "memory" => return Ok(memory_table(ctx)),
+        _ => {}
+    }
+    let spec = spec_for(id).ok_or_else(|| anyhow::anyhow!("unknown table {id:?}"))?;
+    Ok(benchmark_table(ctx, id, &spec))
+}
+
+struct Point {
+    d: usize,
+    depth: usize,
+}
+
+fn axis_points(ctx: &BenchCtx, axis: Axis) -> (String, Vec<Point>, Vec<String>) {
+    match axis {
+        Axis::Channels => {
+            let ds = ctx.scale.channel_axis();
+            let cols = ds.iter().map(|d| d.to_string()).collect();
+            let pts = ds.iter().map(|&d| Point { d, depth: ctx.scale.fixed_depth() }).collect();
+            ("Channels".to_string(), pts, cols)
+        }
+        Axis::Depth => {
+            let ns = ctx.scale.depth_axis();
+            let cols = ns.iter().map(|n| n.to_string()).collect();
+            let pts = ns.iter().map(|&n| Point { d: ctx.scale.fixed_channels(), depth: n }).collect();
+            ("Depth".to_string(), pts, cols)
+        }
+    }
+}
+
+fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
+    let batch = if tspec.batch_one { 1 } else { ctx.scale.batch() };
+    let stream = ctx.scale.stream();
+    let (axis_name, points, cols) = axis_points(ctx, tspec.axis);
+    let cfg = ctx.scale.bench_config();
+
+    let mut rows: Vec<(String, Vec<Option<f64>>)> = vec![
+        ("esig_like".into(), vec![]),
+        ("iisignature_like".into(), vec![]),
+        ("signax CPU (no parallel)".into(), vec![]),
+        ("signax CPU (parallel)".into(), vec![]),
+        ("signax XLA".into(), vec![]),
+    ];
+
+    for p in &points {
+        let sspec = SigSpec::new(p.d, p.depth).expect("valid spec");
+        let mut rng = Rng::new(0xBEEF ^ (p.d as u64) << 8 ^ p.depth as u64);
+        let paths = crate::data::random_batch(&mut rng, batch, stream, p.d, 0.2);
+        let len = sspec.sig_len();
+        let cot = rng.normal_vec(batch * len, 1.0);
+        let plan = match tspec.op {
+            Op::LogSigFwd | Op::LogSigBwd => {
+                Some(LogSigPlan::new(&sspec, LogSigBasis::Words).expect("plan"))
+            }
+            _ => None,
+        };
+        // iisignature produces the Lyndon basis; its stand-in pays that
+        // projection cost (cheap next to the sig itself at these sizes).
+        let lyndon_plan = match tspec.op {
+            Op::LogSigFwd | Op::LogSigBwd => {
+                Some(LogSigPlan::new(&sspec, LogSigBasis::Lyndon).expect("plan"))
+            }
+            _ => None,
+        };
+        let per_path = stream * p.d;
+
+        // --- esig_like ---
+        let esig_cell = match tspec.op {
+            Op::SigFwd if esig_like::supports(&sspec) => Some(
+                bench(&cfg, || {
+                    for b in 0..batch {
+                        black_box(
+                            esig_like::signature(&paths[b * per_path..(b + 1) * per_path], stream, &sspec)
+                                .unwrap(),
+                        );
+                    }
+                })
+                .best_secs(),
+            ),
+            Op::LogSigFwd if esig_like::supports(&sspec) => {
+                let lp = lyndon_plan.as_ref().unwrap();
+                Some(
+                    bench(&cfg, || {
+                        for b in 0..batch {
+                            let sig = esig_like::signature(
+                                &paths[b * per_path..(b + 1) * per_path],
+                                stream,
+                                &sspec,
+                            )
+                            .unwrap();
+                            black_box(logsignature_from_sig(&sig, &sspec, lp));
+                        }
+                    })
+                    .best_secs(),
+                )
+            }
+            _ => None, // esig has no backward and no large ops
+        };
+        rows[0].1.push(esig_cell);
+
+        // --- iisignature_like ---
+        let iis_cell = match tspec.op {
+            Op::SigFwd => Some(
+                bench(&cfg, || {
+                    for b in 0..batch {
+                        black_box(iisignature_like::signature(
+                            &paths[b * per_path..(b + 1) * per_path],
+                            stream,
+                            &sspec,
+                        ));
+                    }
+                })
+                .best_secs(),
+            ),
+            Op::SigBwd => Some(
+                bench(&cfg, || {
+                    for b in 0..batch {
+                        black_box(iisignature_like::signature_vjp(
+                            &paths[b * per_path..(b + 1) * per_path],
+                            stream,
+                            &sspec,
+                            &cot[b * len..(b + 1) * len],
+                        ));
+                    }
+                })
+                .best_secs(),
+            ),
+            Op::LogSigFwd => {
+                let lp = lyndon_plan.as_ref().unwrap();
+                Some(
+                    bench(&cfg, || {
+                        for b in 0..batch {
+                            let sig = iisignature_like::signature(
+                                &paths[b * per_path..(b + 1) * per_path],
+                                stream,
+                                &sspec,
+                            );
+                            black_box(logsignature_from_sig(&sig, &sspec, lp));
+                        }
+                    })
+                    .best_secs(),
+                )
+            }
+            Op::LogSigBwd => {
+                let lp = lyndon_plan.as_ref().unwrap();
+                let gcot: Vec<f32> = rng.normal_vec(lp.dim(), 1.0);
+                Some(
+                    bench(&cfg, || {
+                        for b in 0..batch {
+                            let pb = &paths[b * per_path..(b + 1) * per_path];
+                            // iisignature-style: conventional sig fwd (tape),
+                            // log + Lyndon projection, then tape backward.
+                            let sig = iisignature_like::signature(pb, stream, &sspec);
+                            let g_sig =
+                                crate::logsignature::logsignature_from_sig_vjp(&sig, &sspec, lp, &gcot);
+                            black_box(iisignature_like::signature_vjp(pb, stream, &sspec, &g_sig));
+                        }
+                    })
+                    .best_secs(),
+                )
+            }
+        };
+        rows[1].1.push(iis_cell);
+
+        // --- signax CPU (no parallel) ---
+        let serial_cell = match tspec.op {
+            Op::SigFwd => Some(
+                bench(&cfg, || {
+                    for b in 0..batch {
+                        black_box(signature(&paths[b * per_path..(b + 1) * per_path], stream, &sspec));
+                    }
+                })
+                .best_secs(),
+            ),
+            Op::SigBwd => Some(
+                bench(&cfg, || {
+                    for b in 0..batch {
+                        black_box(signature_vjp(
+                            &paths[b * per_path..(b + 1) * per_path],
+                            stream,
+                            &sspec,
+                            &cot[b * len..(b + 1) * len],
+                        ));
+                    }
+                })
+                .best_secs(),
+            ),
+            Op::LogSigFwd => {
+                let wp = plan.as_ref().unwrap();
+                Some(
+                    bench(&cfg, || {
+                        for b in 0..batch {
+                            let sig = signature(&paths[b * per_path..(b + 1) * per_path], stream, &sspec);
+                            black_box(logsignature_from_sig(&sig, &sspec, wp));
+                        }
+                    })
+                    .best_secs(),
+                )
+            }
+            Op::LogSigBwd => {
+                let wp = plan.as_ref().unwrap();
+                let gcot: Vec<f32> = rng.normal_vec(wp.dim(), 1.0);
+                Some(
+                    bench(&cfg, || {
+                        for b in 0..batch {
+                            black_box(logsignature_vjp(
+                                &paths[b * per_path..(b + 1) * per_path],
+                                stream,
+                                &sspec,
+                                wp,
+                                &gcot,
+                            ));
+                        }
+                    })
+                    .best_secs(),
+                )
+            }
+        };
+        rows[2].1.push(serial_cell);
+
+        // --- signax CPU (parallel) ---
+        // Batch >= 2: parallel over the batch. Batch 1: chunked stream
+        // reduction (forward only; backward is stream-serial, App. C.3,
+        // so the batch-1 backward cell equals the serial path).
+        let parallel_cell = match (tspec.op, batch) {
+            (Op::SigFwd, 1) => {
+                let scfg = SigConfig::parallel(ctx.threads);
+                Some(
+                    bench(&cfg, || {
+                        black_box(signature_with(&paths, stream, &sspec, &scfg).unwrap());
+                    })
+                    .best_secs(),
+                )
+            }
+            (Op::SigFwd, _) => Some(
+                bench(&cfg, || {
+                    black_box(signature_batch(&paths, batch, stream, &sspec, ctx.threads).unwrap());
+                })
+                .best_secs(),
+            ),
+            (Op::SigBwd, 1) => None, // no stream-parallel backward (paper)
+            (Op::SigBwd, _) => Some(
+                bench(&cfg, || {
+                    black_box(
+                        signature_batch_vjp(&paths, batch, stream, &sspec, &cot, ctx.threads).unwrap(),
+                    );
+                })
+                .best_secs(),
+            ),
+            (Op::LogSigFwd, 1) => {
+                let wp = plan.as_ref().unwrap();
+                let scfg = SigConfig::parallel(ctx.threads);
+                Some(
+                    bench(&cfg, || {
+                        let sig = signature_with(&paths, stream, &sspec, &scfg).unwrap();
+                        black_box(logsignature_from_sig(&sig, &sspec, wp));
+                    })
+                    .best_secs(),
+                )
+            }
+            (Op::LogSigFwd, _) => {
+                let wp = plan.as_ref().unwrap();
+                Some(
+                    bench(&cfg, || {
+                        let out = crate::substrate::pool::parallel_map_indexed(batch, ctx.threads, |b| {
+                            let sig = signature(&paths[b * per_path..(b + 1) * per_path], stream, &sspec);
+                            logsignature_from_sig(&sig, &sspec, wp)
+                        });
+                        black_box(out);
+                    })
+                    .best_secs(),
+                )
+            }
+            (Op::LogSigBwd, 1) => None,
+            (Op::LogSigBwd, _) => {
+                let wp = plan.as_ref().unwrap();
+                let gcot: Vec<f32> = rng.normal_vec(wp.dim(), 1.0);
+                Some(
+                    bench(&cfg, || {
+                        let out = crate::substrate::pool::parallel_map_indexed(batch, ctx.threads, |b| {
+                            logsignature_vjp(
+                                &paths[b * per_path..(b + 1) * per_path],
+                                stream,
+                                &sspec,
+                                wp,
+                                &gcot,
+                            )
+                        });
+                        black_box(out);
+                    })
+                    .best_secs(),
+                )
+            }
+        };
+        rows[3].1.push(parallel_cell);
+
+        // --- signax XLA (accelerator path) ---
+        let xla_cell = ctx.xla.as_ref().and_then(|(engine, registry)| {
+            let kind = match tspec.op {
+                Op::SigFwd => ArtifactKind::Sig,
+                Op::SigBwd => ArtifactKind::SigGrad,
+                Op::LogSigFwd => ArtifactKind::LogSig,
+                Op::LogSigBwd => return None, // no logsig-grad artifact kind
+            };
+            let entry = registry.find(kind, batch, stream, p.d, p.depth)?.clone();
+            engine.warm(&entry).ok()?;
+            let secs = match tspec.op {
+                Op::SigFwd | Op::LogSigFwd => bench(&cfg, || {
+                    black_box(engine.forward(&entry, paths.clone()).unwrap());
+                })
+                .best_secs(),
+                Op::SigBwd => bench(&cfg, || {
+                    black_box(engine.grad(&entry, paths.clone(), cot.clone()).unwrap());
+                })
+                .best_secs(),
+                Op::LogSigBwd => unreachable!(),
+            };
+            Some(secs)
+        });
+        rows[4].1.push(xla_cell);
+    }
+
+    let mut table = Table::new(
+        &format!("{} [batch={} stream={} scale={:?}]", tspec.title, batch, stream, ctx.scale),
+        &axis_name,
+        cols,
+    );
+    let _ = id;
+    for (label, cells) in rows {
+        table.push_row(&label, cells);
+    }
+    table.push_ratio_rows(
+        "iisignature_like",
+        &["signax CPU (no parallel)", "signax CPU (parallel)", "signax XLA"],
+    );
+    table
+}
+
+/// App. A.1.3: multiplication counts F(d, N) vs C(d, N) and the ratio.
+fn opcount_table(ctx: &BenchCtx) -> Table {
+    let depths = ctx.scale.depth_axis();
+    let cols = depths.iter().map(|n| n.to_string()).collect();
+    let mut table = Table::new(
+        "Op-count (App. A.1.3): scalar multiplications per fused step, channels = 4",
+        "Depth",
+        cols,
+    );
+    let d = 4u64;
+    table.push_row(
+        "C(d,N) conventional",
+        depths.iter().map(|&n| Some(opcount::conventional_muls(d, n as u64) as f64)).collect(),
+    );
+    table.push_row(
+        "F(d,N) fused",
+        depths.iter().map(|&n| Some(opcount::fused_muls(d, n as u64) as f64)).collect(),
+    );
+    table.push_row(
+        "C/F ratio",
+        depths
+            .iter()
+            .map(|&n| {
+                let f = opcount::fused_muls(d, n as u64) as f64;
+                if f == 0.0 {
+                    None
+                } else {
+                    Some(opcount::conventional_muls(d, n as u64) as f64 / f)
+                }
+            })
+            .collect(),
+    );
+    table
+}
+
+/// §4.2: O(1) interval queries vs direct recomputation, sweeping L.
+fn path_table(ctx: &BenchCtx) -> Table {
+    let lengths: Vec<usize> = match ctx.scale {
+        Scale::Paper => vec![128, 512, 2048, 8192],
+        Scale::Small => vec![128, 512, 2048],
+        Scale::Ci => vec![64, 128],
+    };
+    let cfg = ctx.scale.bench_config();
+    let spec = SigSpec::new(4, 4).expect("spec");
+    let cols = lengths.iter().map(|l| l.to_string()).collect();
+    let mut table = Table::new(
+        "Path class (§4.2): arbitrary-interval queries, channels=4 depth=4 [times per 100 queries]",
+        "Stream length",
+        cols,
+    );
+    let mut precompute = vec![];
+    let mut fast = vec![];
+    let mut slow = vec![];
+    for &l in &lengths {
+        let mut rng = Rng::new(l as u64);
+        let pts = crate::data::random_path(&mut rng, l, 4, 0.1);
+        precompute.push(Some(
+            bench(&cfg, || {
+                black_box(Path::new(&spec, &pts, l).unwrap());
+            })
+            .best_secs(),
+        ));
+        let path = Path::new(&spec, &pts, l).unwrap();
+        // 100 random intervals, fixed per L.
+        let intervals: Vec<(usize, usize)> = (0..100)
+            .map(|_| {
+                let i = rng.below(l - 1);
+                let j = rng.in_range(i + 1, l - 1);
+                (i, j)
+            })
+            .collect();
+        fast.push(Some(
+            bench(&cfg, || {
+                for &(i, j) in &intervals {
+                    black_box(path.query(i, j).unwrap());
+                }
+            })
+            .best_secs(),
+        ));
+        slow.push(Some(
+            bench(&cfg, || {
+                for &(i, j) in &intervals {
+                    black_box(path.query_recompute(i, j).unwrap());
+                }
+            })
+            .best_secs(),
+        ));
+    }
+    table.push_row("precompute (O(L), once)", precompute);
+    table.push_row("100 queries, O(1) precomputed", fast);
+    table.push_row("100 queries, recompute", slow);
+    table.push_ratio_rows("100 queries, recompute", &["100 queries, O(1) precomputed"]);
+    table
+}
+
+/// App. D.2: backward-pass retained memory — reversibility vs tape.
+fn memory_table(ctx: &BenchCtx) -> Table {
+    let stream = ctx.scale.stream();
+    let depths = ctx.scale.depth_axis();
+    let cols = depths.iter().map(|n| n.to_string()).collect();
+    let mut table = Table::new(
+        &format!(
+            "Backward-pass retained memory (App. D.2), channels=4 stream={stream} [bytes]"
+        ),
+        "Depth",
+        cols,
+    );
+    let mut tape = vec![];
+    let mut rev = vec![];
+    for &n in &depths {
+        let spec = SigSpec::new(4, n).expect("spec");
+        tape.push(Some(iisignature_like::tape_bytes(stream, &spec) as f64));
+        // Reversibility retains: current signature + cotangent + one
+        // scratch signature + Horner buffers (Workspace) — O(1) in L.
+        let ws = 2 * (spec.level_len(n.max(2)) / spec.d().max(1)) + 3 * spec.sig_len();
+        rev.push(Some(((3 * spec.sig_len() + ws) * 4) as f64));
+    }
+    table.push_row("iisignature_like tape (O(L))", tape);
+    table.push_row("signax reversibility (O(1))", rev);
+    table.push_ratio_rows("iisignature_like tape (O(L))", &["signax reversibility (O(1))"]);
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci_scale_smoke_table1() {
+        let ctx = BenchCtx { scale: Scale::Ci, threads: 2, xla: None };
+        let t = run_table(&ctx, "1").unwrap();
+        // 5 system rows + 3 ratio rows (XLA ratio row absent values but row
+        // exists), all with one cell per axis point.
+        assert_eq!(t.cols.len(), 2);
+        assert!(t.rows.len() >= 7);
+        // esig supported at these sizes; iisignature always has values.
+        let iis = t.rows.iter().find(|r| r.label == "iisignature_like").unwrap();
+        assert!(iis.cells.iter().all(|c| c.is_some()));
+        // Fused should not lose to the conventional baseline.
+        let fused = t.rows.iter().find(|r| r.label == "signax CPU (no parallel)").unwrap();
+        for (f, i) in fused.cells.iter().zip(&iis.cells) {
+            assert!(f.unwrap() <= i.unwrap() * 1.5, "fused slower than baseline");
+        }
+    }
+
+    #[test]
+    fn ci_scale_smoke_backward_and_logsig() {
+        let ctx = BenchCtx { scale: Scale::Ci, threads: 2, xla: None };
+        for id in ["2", "7", "14"] {
+            let t = run_table(&ctx, id).unwrap();
+            assert!(!t.rows.is_empty(), "table {id}");
+            let esig = t.rows.iter().find(|r| r.label == "esig_like").unwrap();
+            if id == "2" || id == "14" {
+                // backward: esig column must be all dashes.
+                assert!(esig.cells.iter().all(|c| c.is_none()));
+            }
+        }
+    }
+
+    #[test]
+    fn special_tables() {
+        let ctx = BenchCtx { scale: Scale::Ci, threads: 2, xla: None };
+        let t = run_table(&ctx, "opcount").unwrap();
+        let ratio = t.rows.iter().find(|r| r.label == "C/F ratio").unwrap();
+        // Ratio grows with depth.
+        let vals: Vec<f64> = ratio.cells.iter().map(|c| c.unwrap()).collect();
+        assert!(vals.windows(2).all(|w| w[1] >= w[0]));
+
+        let t = run_table(&ctx, "path").unwrap();
+        let fast = t.rows.iter().find(|r| r.label == "100 queries, O(1) precomputed").unwrap();
+        let slow = t.rows.iter().find(|r| r.label == "100 queries, recompute").unwrap();
+        // The precomputed query path should win at the largest L.
+        let last = fast.cells.last().unwrap().unwrap();
+        let slow_last = slow.cells.last().unwrap().unwrap();
+        assert!(last < slow_last, "O(1) query not faster: {last} vs {slow_last}");
+
+        let t = run_table(&ctx, "memory").unwrap();
+        assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn unknown_table_errors() {
+        let ctx = BenchCtx { scale: Scale::Ci, threads: 1, xla: None };
+        assert!(run_table(&ctx, "99").is_err());
+    }
+}

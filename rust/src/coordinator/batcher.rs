@@ -1,0 +1,375 @@
+//! Dynamic batcher: gathers same-shaped requests, pads to the artifact's
+//! fixed batch size, executes once, scatters the rows back.
+//!
+//! XLA executables are compiled for static shapes, so serving variable
+//! traffic requires exactly this component — it is the signature-serving
+//! analogue of the continuous batcher in LLM serving systems.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+
+/// Shape key of a batchable computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchShape {
+    /// "sig" | "logsig" semantics are carried by the backend; the batcher
+    /// only needs distinct keys.
+    pub kind: u8,
+    /// Fixed batch capacity of the backing executable.
+    pub batch: usize,
+    pub length: usize,
+    pub d: usize,
+    pub depth: usize,
+    /// Input row width (e.g. `length * d` for sig, `length * d + sig_len`
+    /// for grad rows that carry a cotangent).
+    pub in_dim: usize,
+    /// Output row width.
+    pub out_dim: usize,
+}
+
+impl BatchShape {
+    pub fn in_row(&self) -> usize {
+        self.in_dim
+    }
+}
+
+/// Executes one padded batch. Implemented by the XLA engine (production)
+/// and by mock/native backends (tests, native fallback benchmarking).
+pub trait BatchBackend: Send + Sync + 'static {
+    fn run(&self, shape: &BatchShape, padded: &[f32]) -> anyhow::Result<Vec<f32>>;
+}
+
+type RowSender = mpsc::Sender<anyhow::Result<Vec<f32>>>;
+
+struct Pending {
+    rows: Vec<f32>,
+    senders: Vec<RowSender>,
+    deadline: Instant,
+}
+
+struct Shared {
+    queues: Mutex<HashMap<BatchShape, Pending>>,
+    wake: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// The dynamic batcher. Submit rows; receive each row's result on its own
+/// channel once the batch executes (full, or linger elapsed).
+pub struct Batcher {
+    shared: Arc<Shared>,
+    backend: Arc<dyn BatchBackend>,
+    metrics: Arc<Metrics>,
+    linger: Duration,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn new(backend: Arc<dyn BatchBackend>, metrics: Arc<Metrics>, linger: Duration) -> Batcher {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            wake: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let flusher = {
+            let shared = Arc::clone(&shared);
+            let backend = Arc::clone(&backend);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("signax-batcher".into())
+                .spawn(move || flusher_loop(shared, backend, metrics, linger))
+                .expect("spawn batcher")
+        };
+        Batcher { shared, backend, metrics, linger, flusher: Some(flusher) }
+    }
+
+    /// Submit one request row. Returns a receiver for this row's output.
+    /// If the batch fills, it is executed on the calling thread (keeping
+    /// tail latency off the flusher); otherwise the flusher handles it at
+    /// the linger deadline.
+    pub fn submit(
+        &self,
+        shape: BatchShape,
+        row: &[f32],
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
+        anyhow::ensure!(row.len() == shape.in_row(), "row has wrong width");
+        let (tx, rx) = mpsc::channel();
+        let full_batch = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            let pending = queues.entry(shape).or_insert_with(|| Pending {
+                rows: Vec::with_capacity(shape.batch * shape.in_row()),
+                senders: Vec::with_capacity(shape.batch),
+                deadline: Instant::now() + self.linger,
+            });
+            pending.rows.extend_from_slice(row);
+            pending.senders.push(tx);
+            if pending.senders.len() >= shape.batch {
+                queues.remove(&shape)
+            } else {
+                self.shared.wake.notify_one();
+                None
+            }
+        };
+        if let Some(pending) = full_batch {
+            execute_batch(&*self.backend, &self.metrics, shape, pending);
+        }
+        Ok(rx)
+    }
+
+    /// Force-flush everything (used on shutdown and by tests).
+    pub fn flush(&self) {
+        let drained: Vec<(BatchShape, Pending)> = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            queues.drain().collect()
+        };
+        for (shape, pending) in drained {
+            execute_batch(&*self.backend, &self.metrics, shape, pending);
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.wake.notify_all();
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+        self.flush();
+    }
+}
+
+fn flusher_loop(
+    shared: Arc<Shared>,
+    backend: Arc<dyn BatchBackend>,
+    metrics: Arc<Metrics>,
+    linger: Duration,
+) {
+    loop {
+        if *shared.shutdown.lock().unwrap() {
+            return;
+        }
+        let mut due: Vec<(BatchShape, Pending)> = vec![];
+        let next_deadline = {
+            let mut queues = shared.queues.lock().unwrap();
+            let now = Instant::now();
+            let due_keys: Vec<BatchShape> = queues
+                .iter()
+                .filter(|(_, p)| p.deadline <= now)
+                .map(|(k, _)| *k)
+                .collect();
+            for k in due_keys {
+                if let Some(p) = queues.remove(&k) {
+                    due.push((k, p));
+                }
+            }
+            queues.values().map(|p| p.deadline).min()
+        };
+        for (shape, pending) in due {
+            execute_batch(&*backend, &metrics, shape, pending);
+        }
+        // Sleep until the earliest deadline (or linger, when idle).
+        let guard = shared.queues.lock().unwrap();
+        let wait = next_deadline
+            .map(|dl| dl.saturating_duration_since(Instant::now()))
+            .unwrap_or(linger)
+            .max(Duration::from_micros(100));
+        let _unused = shared.wake.wait_timeout(guard, wait).unwrap();
+    }
+}
+
+fn execute_batch(
+    backend: &dyn BatchBackend,
+    metrics: &Metrics,
+    shape: BatchShape,
+    pending: Pending,
+) {
+    use std::sync::atomic::Ordering;
+    let n_real = pending.senders.len();
+    let mut padded = pending.rows;
+    padded.resize(shape.batch * shape.in_row(), 0.0);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.real_rows.fetch_add(n_real as u64, Ordering::Relaxed);
+    metrics.padded_rows.fetch_add(shape.batch as u64, Ordering::Relaxed);
+    match backend.run(&shape, &padded) {
+        Ok(out) => {
+            debug_assert_eq!(out.len(), shape.batch * shape.out_dim);
+            for (i, tx) in pending.senders.into_iter().enumerate() {
+                let row = out[i * shape.out_dim..(i + 1) * shape.out_dim].to_vec();
+                let _ = tx.send(Ok(row));
+            }
+        }
+        Err(e) => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            for tx in pending.senders {
+                let _ = tx.send(Err(anyhow::anyhow!("batch execution failed: {e}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::property;
+
+    /// A mock backend computing signatures natively row by row; errors when
+    /// `fail` is set.
+    struct MockBackend {
+        fail: bool,
+    }
+
+    impl BatchBackend for MockBackend {
+        fn run(&self, shape: &BatchShape, padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+            anyhow::ensure!(!self.fail, "mock failure");
+            let spec = crate::ta::SigSpec::new(shape.d, shape.depth).unwrap();
+            let mut out = vec![0.0f32; shape.batch * shape.out_dim];
+            for b in 0..shape.batch {
+                let row = &padded[b * shape.in_row()..(b + 1) * shape.in_row()];
+                let sig = crate::signature::signature(row, shape.length, &spec);
+                out[b * shape.out_dim..(b + 1) * shape.out_dim].copy_from_slice(&sig);
+            }
+            Ok(out)
+        }
+    }
+
+    fn shape(batch: usize) -> BatchShape {
+        let spec = crate::ta::SigSpec::new(2, 3).unwrap();
+        BatchShape {
+            kind: 0,
+            batch,
+            length: 4,
+            d: 2,
+            depth: 3,
+            in_dim: 4 * 2,
+            out_dim: spec.sig_len(),
+        }
+    }
+
+    #[test]
+    fn full_batch_executes_inline() {
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::new(
+            Arc::new(MockBackend { fail: false }),
+            Arc::clone(&metrics),
+            Duration::from_secs(60), // linger long: only fullness triggers
+        );
+        let sh = shape(3);
+        let spec = crate::ta::SigSpec::new(2, 3).unwrap();
+        let mut rxs = vec![];
+        let mut expected = vec![];
+        let mut rng = crate::substrate::rng::Rng::new(1);
+        for _ in 0..3 {
+            let row = rng.normal_vec(sh.in_row(), 0.5);
+            expected.push(crate::signature::signature(&row, 4, &spec));
+            rxs.push(batcher.submit(sh, &row).unwrap());
+        }
+        for (rx, exp) in rxs.into_iter().zip(expected) {
+            let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            crate::substrate::propcheck::assert_close(&got, &exp, 1e-6, 1e-7);
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.real_rows, 3);
+        assert_eq!(s.padded_rows, 3);
+    }
+
+    #[test]
+    fn linger_flushes_partial_batch() {
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::new(
+            Arc::new(MockBackend { fail: false }),
+            Arc::clone(&metrics),
+            Duration::from_millis(20),
+        );
+        let sh = shape(8); // capacity 8, we submit 2
+        let mut rng = crate::substrate::rng::Rng::new(2);
+        let row = rng.normal_vec(sh.in_row(), 0.5);
+        let rx = batcher.submit(sh, &row).unwrap();
+        let rx2 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(got.len(), sh.out_dim);
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        assert!(metrics.padding_ratio() > 0.5); // 6 of 8 rows were padding
+    }
+
+    #[test]
+    fn padding_never_leaks_between_requests() {
+        // Property: each row's result equals the stand-alone computation,
+        // independent of batch packing order and fill level.
+        property("batcher no-leak", 10, |g| {
+            let batch_cap = g.usize_in(2, 6);
+            let n_req = g.usize_in(1, batch_cap);
+            g.label(format!("cap={batch_cap} n={n_req}"));
+            let metrics = Arc::new(Metrics::default());
+            let batcher = Batcher::new(
+                Arc::new(MockBackend { fail: false }),
+                metrics,
+                Duration::from_millis(5),
+            );
+            let sh = shape(batch_cap);
+            let spec = crate::ta::SigSpec::new(2, 3).unwrap();
+            let mut rxs = vec![];
+            let mut expected = vec![];
+            for _ in 0..n_req {
+                let row = g.normal_vec(sh.in_row(), 0.5);
+                expected.push(crate::signature::signature(&row, 4, &spec));
+                rxs.push(batcher.submit(sh, &row).unwrap());
+            }
+            for (rx, exp) in rxs.into_iter().zip(expected) {
+                let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+                crate::substrate::propcheck::assert_close(&got, &exp, 1e-6, 1e-7);
+            }
+        });
+    }
+
+    #[test]
+    fn backend_failure_propagates_to_every_caller() {
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::new(
+            Arc::new(MockBackend { fail: true }),
+            Arc::clone(&metrics),
+            Duration::from_millis(5),
+        );
+        let sh = shape(2);
+        let mut rng = crate::substrate::rng::Rng::new(3);
+        let rx1 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let rx2 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
+        assert_eq!(metrics.snapshot().errors, 1);
+    }
+
+    #[test]
+    fn wrong_row_width_rejected() {
+        let batcher = Batcher::new(
+            Arc::new(MockBackend { fail: false }),
+            Arc::new(Metrics::default()),
+            Duration::from_millis(5),
+        );
+        assert!(batcher.submit(shape(2), &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn distinct_shapes_batched_separately() {
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::new(
+            Arc::new(MockBackend { fail: false }),
+            Arc::clone(&metrics),
+            Duration::from_millis(10),
+        );
+        let sh_a = shape(1);
+        let mut sh_b = shape(1);
+        sh_b.length = 6;
+        sh_b.in_dim = 6 * 2;
+        sh_b.kind = 0;
+        let mut rng = crate::substrate::rng::Rng::new(4);
+        let rx_a = batcher.submit(sh_a, &rng.normal_vec(sh_a.in_row(), 0.5)).unwrap();
+        let rx_b = batcher.submit(sh_b, &rng.normal_vec(sh_b.in_row(), 0.5)).unwrap();
+        assert!(rx_a.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        assert_eq!(metrics.snapshot().batches, 2);
+    }
+}

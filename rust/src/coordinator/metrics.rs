@@ -1,0 +1,120 @@
+//! Coordinator metrics: lock-free counters, snapshotted for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared counters. All methods are cheap and thread-safe.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub native_requests: AtomicU64,
+    pub xla_requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Total rows submitted to XLA including padding.
+    pub padded_rows: AtomicU64,
+    /// Rows that carried real requests.
+    pub real_rows: AtomicU64,
+    pub errors: AtomicU64,
+    /// Total latency across requests, nanoseconds.
+    pub latency_ns: AtomicU64,
+    pub sessions_opened: AtomicU64,
+    pub session_updates: AtomicU64,
+}
+
+/// A point-in-time copy of the metrics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub native_requests: u64,
+    pub xla_requests: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub real_rows: u64,
+    pub errors: u64,
+    pub mean_latency: Duration,
+    pub sessions_opened: u64,
+    pub session_updates: u64,
+}
+
+impl Metrics {
+    pub fn record_latency(&self, dt: Duration) {
+        self.latency_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let latency = self.latency_ns.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            native_requests: self.native_requests.load(Ordering::Relaxed),
+            xla_requests: self.xla_requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            real_rows: self.real_rows.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency: if requests == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_nanos(latency / requests)
+            },
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            session_updates: self.session_updates.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fraction of XLA rows that were padding (0 when nothing ran).
+    pub fn padding_ratio(&self) -> f64 {
+        let padded = self.padded_rows.load(Ordering::Relaxed);
+        let real = self.real_rows.load(Ordering::Relaxed);
+        if padded == 0 {
+            0.0
+        } else {
+            1.0 - real as f64 / padded as f64
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} (native={} xla={}) batches={} rows={}/{} errors={} mean_latency={:?} sessions={} updates={}",
+            self.requests,
+            self.native_requests,
+            self.xla_requests,
+            self.batches,
+            self.real_rows,
+            self.padded_rows,
+            self.errors,
+            self.mean_latency,
+            self.sessions_opened,
+            self.session_updates,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn snapshot_and_padding_ratio() {
+        let m = Metrics::default();
+        m.requests.store(4, Ordering::Relaxed);
+        m.real_rows.store(6, Ordering::Relaxed);
+        m.padded_rows.store(8, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(8));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.mean_latency, Duration::from_millis(2));
+        assert!((m.padding_ratio() - 0.25).abs() < 1e-12);
+        assert!(s.render().contains("requests=4"));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().mean_latency, Duration::ZERO);
+        assert_eq!(m.padding_ratio(), 0.0);
+    }
+}

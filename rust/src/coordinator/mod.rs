@@ -1,0 +1,28 @@
+//! The L3 coordinator: a request router + dynamic batcher serving
+//! signature/logsignature computations over two backends — the native Rust
+//! engine and the AOT-compiled XLA artifacts — plus streaming sessions
+//! implementing "keeping the signature up-to-date" (§5.5).
+//!
+//! Shape of the system (vLLM-router-like):
+//!
+//! ```text
+//!  client ──submit──▶ Router ──(shape matches an artifact?)──▶ Batcher ──▶ XLA Engine
+//!                       │                                        (pad to artifact batch)
+//!                       └──(no artifact / tiny request)────────▶ native worker pool
+//! ```
+//!
+//! Batching exists because XLA executables are compiled for fixed shapes:
+//! requests with the same `(kind, L, d, N)` are gathered until the artifact
+//! batch fills or a linger deadline passes, padded with zero rows, executed
+//! once, and scattered back to callers. Property tests assert padding never
+//! leaks between requests.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod session;
+
+pub use batcher::{BatchBackend, BatchShape, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Backend, Coordinator, CoordinatorConfig, Request, Response};
+pub use session::{SessionId, SessionManager};

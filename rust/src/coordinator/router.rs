@@ -1,0 +1,405 @@
+//! The request router: the coordinator's front door.
+//!
+//! Each request is routed to the XLA backend when an AOT artifact with a
+//! matching shape exists (going through the dynamic batcher), and to the
+//! native Rust engine otherwise. The native path is also the fallback when
+//! no artifact directory is present, so the coordinator is fully usable
+//! without running `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchBackend, BatchShape, Batcher};
+use super::metrics::Metrics;
+use super::session::SessionManager;
+use crate::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
+use crate::runtime::{ArtifactKind, EngineHandle, Registry};
+use crate::signature::{signature, signature_vjp};
+use crate::ta::SigSpec;
+
+/// Kinds encoded into [`BatchShape::kind`].
+const KIND_SIG: u8 = 0;
+const KIND_LOGSIG: u8 = 1;
+const KIND_SIGGRAD: u8 = 2;
+
+/// A request against the coordinator.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// `Sig^depth(path)` for one `(stream, d)` path.
+    Signature { path: Vec<f32>, stream: usize, d: usize, depth: usize },
+    /// Words-basis `LogSig^depth(path)`.
+    LogSignature { path: Vec<f32>, stream: usize, d: usize, depth: usize },
+    /// VJP: cotangent on the signature -> gradient on the path.
+    SignatureGrad {
+        path: Vec<f32>,
+        stream: usize,
+        d: usize,
+        depth: usize,
+        cotangent: Vec<f32>,
+    },
+}
+
+/// Which backend served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Xla,
+}
+
+/// A served response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub values: Vec<f32>,
+    pub backend: Backend,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Artifact directory; `None` => native-only coordinator.
+    pub artifact_dir: Option<PathBuf>,
+    /// Route to XLA when possible (otherwise XLA is only used when asked
+    /// explicitly by benchmarks).
+    pub prefer_xla: bool,
+    /// Dynamic batcher linger.
+    pub linger: Duration,
+    /// Threads for native batch work.
+    pub native_threads: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: Some(crate::runtime::default_artifact_dir()),
+            prefer_xla: true,
+            linger: Duration::from_millis(2),
+            native_threads: crate::substrate::pool::default_threads(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// A native-only configuration (no artifacts, no PJRT).
+    pub fn native_only() -> Self {
+        CoordinatorConfig { artifact_dir: None, prefer_xla: false, ..Default::default() }
+    }
+}
+
+struct XlaBackend {
+    engine: EngineHandle,
+    registry: Arc<Registry>,
+}
+
+impl BatchBackend for XlaBackend {
+    fn run(&self, shape: &BatchShape, padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let kind = match shape.kind {
+            KIND_SIG => ArtifactKind::Sig,
+            KIND_LOGSIG => ArtifactKind::LogSig,
+            KIND_SIGGRAD => ArtifactKind::SigGrad,
+            other => anyhow::bail!("unknown batch kind {other}"),
+        };
+        let entry = self
+            .registry
+            .find(kind, shape.batch, shape.length, shape.d, shape.depth)
+            .ok_or_else(|| anyhow::anyhow!("artifact disappeared for {shape:?}"))?;
+        match kind {
+            ArtifactKind::Sig | ArtifactKind::LogSig => {
+                self.engine.forward(entry, padded.to_vec())
+            }
+            ArtifactKind::SigGrad => {
+                // Rows are path || cotangent; de-interleave into the two
+                // positional inputs.
+                let in_path = shape.length * shape.d;
+                let sig_len: usize = (1..=shape.depth).map(|k| shape.d.pow(k as u32)).sum();
+                let row = in_path + sig_len;
+                let mut paths = vec![0.0f32; shape.batch * in_path];
+                let mut cots = vec![0.0f32; shape.batch * sig_len];
+                for b in 0..shape.batch {
+                    let r = &padded[b * row..(b + 1) * row];
+                    paths[b * in_path..(b + 1) * in_path].copy_from_slice(&r[..in_path]);
+                    cots[b * sig_len..(b + 1) * sig_len].copy_from_slice(&r[in_path..]);
+                }
+                self.engine.grad(entry, paths, cots)
+            }
+            ArtifactKind::Train => anyhow::bail!("train artifacts are not batched"),
+        }
+    }
+}
+
+/// The coordinator: router + batcher + sessions + metrics.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    registry: Option<Arc<Registry>>,
+    engine: Option<EngineHandle>,
+    batcher: Option<Batcher>,
+    sessions: SessionManager,
+    metrics: Arc<Metrics>,
+    plans: Mutex<HashMap<(usize, usize), Arc<LogSigPlan>>>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
+        let metrics = Arc::new(Metrics::default());
+        let (registry, engine, batcher) = match &cfg.artifact_dir {
+            Some(dir) if dir.join("MANIFEST.json").exists() => {
+                let (engine, registry) = EngineHandle::spawn(dir.clone())?;
+                let registry = Arc::new(registry);
+                let backend = Arc::new(XlaBackend {
+                    engine: engine.clone(),
+                    registry: Arc::clone(&registry),
+                });
+                let batcher = Batcher::new(backend, Arc::clone(&metrics), cfg.linger);
+                (Some(registry), Some(engine), Some(batcher))
+            }
+            _ => (None, None, None),
+        };
+        Ok(Coordinator {
+            sessions: SessionManager::new(Arc::clone(&metrics)),
+            registry,
+            engine,
+            batcher,
+            metrics,
+            cfg,
+            plans: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn sessions(&self) -> &SessionManager {
+        &self.sessions
+    }
+
+    pub fn has_xla(&self) -> bool {
+        self.batcher.is_some()
+    }
+
+    pub fn engine(&self) -> Option<&EngineHandle> {
+        self.engine.as_ref()
+    }
+
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.registry.as_ref()
+    }
+
+    fn plan(&self, d: usize, depth: usize) -> anyhow::Result<Arc<LogSigPlan>> {
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(p) = plans.get(&(d, depth)) {
+            return Ok(Arc::clone(p));
+        }
+        let spec = SigSpec::new(d, depth)?;
+        let plan = Arc::new(LogSigPlan::new(&spec, LogSigBasis::Words)?);
+        plans.insert((d, depth), Arc::clone(&plan));
+        Ok(plan)
+    }
+
+    /// Serve one request synchronously, routing per configuration.
+    pub fn call(&self, req: Request) -> anyhow::Result<Response> {
+        use std::sync::atomic::Ordering;
+        let t0 = Instant::now();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let result = self.route(req);
+        self.metrics.record_latency(t0.elapsed());
+        if result.is_err() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        result
+    }
+
+    fn route(&self, req: Request) -> anyhow::Result<Response> {
+        use std::sync::atomic::Ordering;
+        // Try the XLA path when configured and an artifact matches.
+        if self.cfg.prefer_xla {
+            if let (Some(reg), Some(batcher)) = (&self.registry, &self.batcher) {
+                let routed = match &req {
+                    Request::Signature { path, stream, d, depth } => reg
+                        .find_batchable(ArtifactKind::Sig, 1, *stream, *d, *depth)
+                        .map(|e| {
+                            let shape = BatchShape {
+                                kind: KIND_SIG,
+                                batch: e.batch,
+                                length: *stream,
+                                d: *d,
+                                depth: *depth,
+                                in_dim: stream * d,
+                                out_dim: e.out_dim,
+                            };
+                            batcher.submit(shape, path)
+                        }),
+                    Request::LogSignature { path, stream, d, depth } => reg
+                        .find_batchable(ArtifactKind::LogSig, 1, *stream, *d, *depth)
+                        .map(|e| {
+                            let shape = BatchShape {
+                                kind: KIND_LOGSIG,
+                                batch: e.batch,
+                                length: *stream,
+                                d: *d,
+                                depth: *depth,
+                                in_dim: stream * d,
+                                out_dim: e.out_dim,
+                            };
+                            batcher.submit(shape, path)
+                        }),
+                    Request::SignatureGrad { path, stream, d, depth, cotangent } => reg
+                        .find_batchable(ArtifactKind::SigGrad, 1, *stream, *d, *depth)
+                        .map(|e| {
+                            let mut row = path.clone();
+                            row.extend_from_slice(cotangent);
+                            let shape = BatchShape {
+                                kind: KIND_SIGGRAD,
+                                batch: e.batch,
+                                length: *stream,
+                                d: *d,
+                                depth: *depth,
+                                in_dim: row.len(),
+                                out_dim: e.out_dim,
+                            };
+                            batcher.submit(shape, &row)
+                        }),
+                };
+                if let Some(rx) = routed {
+                    let rx = rx?;
+                    let values = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
+                    self.metrics.xla_requests.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Response { values, backend: Backend::Xla });
+                }
+            }
+        }
+        // Native path.
+        let values = match req {
+            Request::Signature { path, stream, d, depth } => {
+                let spec = SigSpec::new(d, depth)?;
+                anyhow::ensure!(path.len() == stream * d, "bad path buffer");
+                signature(&path, stream, &spec)
+            }
+            Request::LogSignature { path, stream, d, depth } => {
+                let spec = SigSpec::new(d, depth)?;
+                anyhow::ensure!(path.len() == stream * d, "bad path buffer");
+                let sig = signature(&path, stream, &spec);
+                logsignature_from_sig(&sig, &spec, self.plan(d, depth)?.as_ref())
+            }
+            Request::SignatureGrad { path, stream, d, depth, cotangent } => {
+                let spec = SigSpec::new(d, depth)?;
+                anyhow::ensure!(path.len() == stream * d, "bad path buffer");
+                anyhow::ensure!(cotangent.len() == spec.sig_len(), "bad cotangent");
+                signature_vjp(&path, stream, &spec, &cotangent)
+            }
+        };
+        self.metrics.native_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Response { values, backend: Backend::Native })
+    }
+
+    /// Serve a whole batch concurrently (used by examples and benches):
+    /// spawns one caller thread per request so the dynamic batcher can
+    /// coalesce them.
+    pub fn call_many(&self, reqs: Vec<Request>) -> Vec<anyhow::Result<Response>> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> =
+                reqs.into_iter().map(|r| scope.spawn(move || self.call(r))).collect();
+            handles.into_iter().map(|h| h.join().expect("caller thread")).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::assert_close;
+    use crate::substrate::rng::Rng;
+
+    fn native() -> Coordinator {
+        Coordinator::new(CoordinatorConfig::native_only()).unwrap()
+    }
+
+    #[test]
+    fn native_signature_roundtrip() {
+        let c = native();
+        let mut rng = Rng::new(1);
+        let path = rng.normal_vec(8 * 2, 0.4);
+        let resp = c
+            .call(Request::Signature { path: path.clone(), stream: 8, d: 2, depth: 3 })
+            .unwrap();
+        assert_eq!(resp.backend, Backend::Native);
+        let spec = SigSpec::new(2, 3).unwrap();
+        assert_close(&resp.values, &signature(&path, 8, &spec), 1e-6, 1e-7);
+        assert_eq!(c.metrics().snapshot().native_requests, 1);
+    }
+
+    #[test]
+    fn native_logsignature_dimension() {
+        let c = native();
+        let mut rng = Rng::new(2);
+        let path = rng.normal_vec(6 * 3, 0.4);
+        let resp = c
+            .call(Request::LogSignature { path, stream: 6, d: 3, depth: 3 })
+            .unwrap();
+        assert_eq!(resp.values.len(), crate::words::witt_dimension(3, 3));
+    }
+
+    #[test]
+    fn native_grad_roundtrip() {
+        let c = native();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(3);
+        let path = rng.normal_vec(5 * 2, 0.4);
+        let cot = rng.normal_vec(spec.sig_len(), 1.0);
+        let resp = c
+            .call(Request::SignatureGrad {
+                path: path.clone(),
+                stream: 5,
+                d: 2,
+                depth: 3,
+                cotangent: cot.clone(),
+            })
+            .unwrap();
+        assert_close(&resp.values, &signature_vjp(&path, 5, &spec, &cot), 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn bad_shapes_error_and_count() {
+        let c = native();
+        assert!(c.call(Request::Signature { path: vec![0.0; 3], stream: 8, d: 2, depth: 3 }).is_err());
+        assert_eq!(c.metrics().snapshot().errors, 1);
+    }
+
+    #[test]
+    fn call_many_native() {
+        let c = native();
+        let mut rng = Rng::new(4);
+        let reqs: Vec<Request> = (0..6)
+            .map(|_| Request::Signature {
+                path: rng.normal_vec(8 * 2, 0.4),
+                stream: 8,
+                d: 2,
+                depth: 3,
+            })
+            .collect();
+        let resps = c.call_many(reqs);
+        assert_eq!(resps.len(), 6);
+        for r in resps {
+            assert!(r.is_ok());
+        }
+        assert_eq!(c.metrics().snapshot().requests, 6);
+    }
+
+    #[test]
+    fn missing_artifact_dir_falls_back_to_native() {
+        let c = Coordinator::new(CoordinatorConfig {
+            artifact_dir: Some(PathBuf::from("/definitely/not/here")),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(!c.has_xla());
+        let mut rng = Rng::new(5);
+        let resp = c
+            .call(Request::Signature { path: rng.normal_vec(4 * 2, 0.3), stream: 4, d: 2, depth: 2 })
+            .unwrap();
+        assert_eq!(resp.backend, Backend::Native);
+    }
+}

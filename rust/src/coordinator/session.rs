@@ -1,0 +1,172 @@
+//! Streaming sessions: "keeping the signature up-to-date" (§5.5, eq. 7).
+//!
+//! A session owns a [`crate::path::Path`]; feeding new points extends the
+//! precomputed expanding/inverted signatures incrementally (fused ops
+//! only), and interval queries stay O(1) at any moment. This is the
+//! serving-side wrapper around `Path.update` / `signature(initial=...)`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+use crate::logsignature::LogSigPlan;
+use crate::path::Path;
+use crate::ta::SigSpec;
+
+/// Opaque session handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionId(pub u64);
+
+/// Concurrent session table.
+pub struct SessionManager {
+    next_id: AtomicU64,
+    sessions: Mutex<HashMap<SessionId, Mutex<Path>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl SessionManager {
+    pub fn new(metrics: Arc<Metrics>) -> SessionManager {
+        SessionManager { next_id: AtomicU64::new(1), sessions: Mutex::new(HashMap::new()), metrics }
+    }
+
+    /// Open a session seeded with an initial path (>= 2 points).
+    pub fn open(&self, spec: &SigSpec, points: &[f32], stream: usize) -> anyhow::Result<SessionId> {
+        let path = Path::new(spec, points, stream)?;
+        let id = SessionId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.sessions.lock().unwrap().insert(id, Mutex::new(path));
+        self.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Feed new points; returns the signature over the whole stream so far.
+    pub fn feed(&self, id: SessionId, points: &[f32], count: usize) -> anyhow::Result<Vec<f32>> {
+        let sessions = self.sessions.lock().unwrap();
+        let path = sessions.get(&id).ok_or_else(|| anyhow::anyhow!("unknown session {id:?}"))?;
+        let mut path = path.lock().unwrap();
+        path.update(points, count)?;
+        self.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
+        Ok(path.signature())
+    }
+
+    /// O(1) interval query against a session's stream.
+    pub fn query(&self, id: SessionId, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
+        let sessions = self.sessions.lock().unwrap();
+        let path = sessions.get(&id).ok_or_else(|| anyhow::anyhow!("unknown session {id:?}"))?;
+        let path = path.lock().unwrap();
+        path.query(i, j)
+    }
+
+    /// Logsignature interval query.
+    pub fn logsig_query(
+        &self,
+        id: SessionId,
+        i: usize,
+        j: usize,
+        plan: &LogSigPlan,
+    ) -> anyhow::Result<Vec<f32>> {
+        let sessions = self.sessions.lock().unwrap();
+        let path = sessions.get(&id).ok_or_else(|| anyhow::anyhow!("unknown session {id:?}"))?;
+        let path = path.lock().unwrap();
+        path.logsig_query(i, j, plan)
+    }
+
+    /// Number of points a session currently holds.
+    pub fn session_len(&self, id: SessionId) -> anyhow::Result<usize> {
+        let sessions = self.sessions.lock().unwrap();
+        let path = sessions.get(&id).ok_or_else(|| anyhow::anyhow!("unknown session {id:?}"))?;
+        let path = path.lock().unwrap();
+        Ok(path.len())
+    }
+
+    /// Close and drop a session.
+    pub fn close(&self, id: SessionId) -> anyhow::Result<()> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .map(|_| ())
+            .ok_or_else(|| anyhow::anyhow!("unknown session {id:?}"))
+    }
+
+    pub fn open_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signature::signature;
+    use crate::substrate::propcheck::assert_close;
+    use crate::substrate::rng::Rng;
+
+    fn mgr() -> SessionManager {
+        SessionManager::new(Arc::new(Metrics::default()))
+    }
+
+    #[test]
+    fn feed_matches_whole_path_signature() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let m = mgr();
+        let mut rng = Rng::new(1);
+        let all = rng.normal_vec(12 * 2, 0.4);
+        let id = m.open(&spec, &all[..4 * 2], 4).unwrap();
+        let sig1 = m.feed(id, &all[4 * 2..8 * 2], 4).unwrap();
+        assert_close(&sig1, &signature(&all[..8 * 2], 8, &spec), 2e-3, 1e-4);
+        let sig2 = m.feed(id, &all[8 * 2..], 4).unwrap();
+        assert_close(&sig2, &signature(&all, 12, &spec), 2e-3, 1e-4);
+        assert_eq!(m.session_len(id).unwrap(), 12);
+    }
+
+    #[test]
+    fn queries_span_fed_chunks() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let m = mgr();
+        let mut rng = Rng::new(2);
+        let all = rng.normal_vec(10 * 2, 0.4);
+        let id = m.open(&spec, &all[..5 * 2], 5).unwrap();
+        m.feed(id, &all[5 * 2..], 5).unwrap();
+        // Interval crossing the update boundary.
+        let q = m.query(id, 3, 8).unwrap();
+        assert_close(&q, &signature(&all[3 * 2..9 * 2], 6, &spec), 5e-3, 5e-4);
+    }
+
+    #[test]
+    fn unknown_and_closed_sessions_error() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let m = mgr();
+        assert!(m.feed(SessionId(99), &[0.0; 2], 1).is_err());
+        let id = m.open(&spec, &[0.0, 0.0, 1.0, 1.0], 2).unwrap();
+        assert_eq!(m.open_count(), 1);
+        m.close(id).unwrap();
+        assert_eq!(m.open_count(), 0);
+        assert!(m.query(id, 0, 1).is_err());
+        assert!(m.close(id).is_err());
+    }
+
+    #[test]
+    fn concurrent_sessions_do_not_interfere() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let m = Arc::new(mgr());
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let m = Arc::clone(&m);
+            let spec = spec.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let pts = rng.normal_vec(6 * 2, 0.4);
+                let id = m.open(&spec, &pts[..2 * 2], 2).unwrap();
+                let sig = m.feed(id, &pts[2 * 2..], 4).unwrap();
+                let expect = signature(&pts, 6, &spec);
+                for (a, b) in sig.iter().zip(&expect) {
+                    assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.open_count(), 4);
+    }
+}

@@ -1,0 +1,105 @@
+//! Geometric Brownian motion samples — the §6.2 toy dataset.
+//!
+//! Paths have one of two volatilities; the task is binary classification of
+//! the volatility. Each sample is a `(stream, 2)` path of (time, value),
+//! matching `python/tests/test_model.py::gbm_batch` so the native and XLA
+//! training loops see the same distribution.
+
+use crate::substrate::rng::Rng;
+
+/// Generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GbmConfig {
+    pub stream: usize,
+    pub vol_low: f32,
+    pub vol_high: f32,
+}
+
+impl Default for GbmConfig {
+    fn default() -> Self {
+        GbmConfig { stream: 64, vol_low: 0.2, vol_high: 0.6 }
+    }
+}
+
+/// Generate a batch: returns `(x, y)` where `x` is `(batch, stream, 2)`
+/// flattened (channels: time in [0,1], GBM value) and `y` is `(batch,)`
+/// labels (1.0 = high volatility).
+pub fn gbm_batch(rng: &mut Rng, batch: usize, cfg: &GbmConfig) -> (Vec<f32>, Vec<f32>) {
+    let l = cfg.stream;
+    let dt = 1.0 / l as f32;
+    let mut x = vec![0.0f32; batch * l * 2];
+    let mut y = vec![0.0f32; batch];
+    for b in 0..batch {
+        let high = rng.next_u64() & 1 == 1;
+        let vol = if high { cfg.vol_high } else { cfg.vol_low };
+        y[b] = f32::from(high as u8);
+        let mut log_s = 0.0f32;
+        for i in 0..l {
+            let t = i as f32 / (l - 1).max(1) as f32;
+            if i > 0 {
+                log_s += -0.5 * vol * vol * dt + vol * dt.sqrt() * rng.normal_f32();
+            }
+            x[(b * l + i) * 2] = t;
+            x[(b * l + i) * 2 + 1] = log_s.exp();
+        }
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut rng = Rng::new(7);
+        let cfg = GbmConfig::default();
+        let (x, y) = gbm_batch(&mut rng, 16, &cfg);
+        assert_eq!(x.len(), 16 * 64 * 2);
+        assert_eq!(y.len(), 16);
+        for b in 0..16 {
+            // Time channel runs 0..1; value starts at 1.
+            assert_eq!(x[b * 64 * 2], 0.0);
+            assert!((x[(b * 64 + 63) * 2] - 1.0).abs() < 1e-6);
+            assert_eq!(x[b * 64 * 2 + 1], 1.0);
+            assert!(y[b] == 0.0 || y[b] == 1.0);
+        }
+    }
+
+    #[test]
+    fn classes_statistically_separable() {
+        // High-vol paths have larger quadratic variation — the dataset is
+        // learnable (mirrors the python-side sanity test).
+        let mut rng = Rng::new(11);
+        let cfg = GbmConfig::default();
+        let (x, y) = gbm_batch(&mut rng, 256, &cfg);
+        let l = cfg.stream;
+        let mut qv_high = (0.0f64, 0usize);
+        let mut qv_low = (0.0f64, 0usize);
+        for b in 0..256 {
+            let mut qv = 0.0f64;
+            for i in 1..l {
+                let diff = x[(b * l + i) * 2 + 1] - x[(b * l + i - 1) * 2 + 1];
+                qv += (diff as f64) * (diff as f64);
+            }
+            if y[b] == 1.0 {
+                qv_high.0 += qv;
+                qv_high.1 += 1;
+            } else {
+                qv_low.0 += qv;
+                qv_low.1 += 1;
+            }
+        }
+        let hi = qv_high.0 / qv_high.1 as f64;
+        let lo = qv_low.0 / qv_low.1.max(1) as f64;
+        assert!(hi > 3.0 * lo, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn both_classes_appear() {
+        let mut rng = Rng::new(3);
+        let (_, y) = gbm_batch(&mut rng, 64, &GbmConfig::default());
+        let ones = y.iter().filter(|&&v| v == 1.0).count();
+        assert!(ones > 10 && ones < 54);
+    }
+}

@@ -1,0 +1,48 @@
+//! Synthetic data generators used by the examples and benchmarks.
+
+pub mod gbm;
+
+pub use gbm::{gbm_batch, GbmConfig};
+
+use crate::substrate::rng::Rng;
+
+/// A Brownian-ish random path `(stream, d)` with N(0, scale²) increments —
+/// the workload of the paper's §6.1 benchmarks.
+pub fn random_path(rng: &mut Rng, stream: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut p = vec![0.0f32; stream * d];
+    for i in 1..stream {
+        for c in 0..d {
+            p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * scale;
+        }
+    }
+    p
+}
+
+/// A batch of random paths `(batch, stream, d)`.
+pub fn random_batch(rng: &mut Rng, batch: usize, stream: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * stream * d);
+    for _ in 0..batch {
+        out.extend(random_path(rng, stream, d, scale));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_path_starts_at_origin() {
+        let mut rng = Rng::new(1);
+        let p = random_path(&mut rng, 10, 3, 0.5);
+        assert_eq!(p.len(), 30);
+        assert_eq!(&p[..3], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn random_batch_shape() {
+        let mut rng = Rng::new(2);
+        let b = random_batch(&mut rng, 4, 5, 2, 0.1);
+        assert_eq!(b.len(), 4 * 5 * 2);
+    }
+}

@@ -1,0 +1,60 @@
+//! # signax
+//!
+//! A Rust + JAX + Pallas reproduction of *"Signatory: differentiable
+//! computations of the signature and logsignature transforms, on both CPU
+//! and GPU"* (Kidger & Lyons, ICLR 2021).
+//!
+//! The crate is organised in three layers:
+//!
+//! - **Native engine** ([`ta`], [`signature`], [`logsignature`], [`words`],
+//!   [`path`], [`parallel`]): the full algorithmic content of the paper —
+//!   truncated tensor algebra, the fused multiply-exponentiate (§4.1),
+//!   handwritten backward passes exploiting signature reversibility
+//!   (App. C), the Lyndon/Words logsignature bases (§4.3, App. A.2), and
+//!   the `Path` precomputation class with O(1) interval queries (§4.2).
+//! - **Accelerator runtime** ([`runtime`]): loads AOT-compiled HLO-text
+//!   artifacts (produced by `python/compile/aot.py` from JAX + Pallas) and
+//!   executes them on a PJRT client. This is the reproduction's analogue of
+//!   Signatory's GPU backend.
+//! - **Coordinator** ([`coordinator`]): a request router + dynamic batcher
+//!   serving signature computations over both backends, plus streaming
+//!   sessions implementing "keeping the signature up-to-date" (§5.5).
+//!
+//! Baselines reproducing the systems the paper benchmarks against live in
+//! [`baselines`]; the benchmark harness regenerating every table and figure
+//! of the paper lives in [`bench`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use signax::prelude::*;
+//!
+//! let spec = SigSpec::new(2, 4).unwrap();           // 2 channels, depth 4
+//! // A path: 10 points in R^2, flattened row-major (stream, channel).
+//! let path: Vec<f32> = (0..20).map(|i| (i as f32 * 0.1).sin()).collect();
+//! let sig = signax::signature::signature(&path, 10, &spec);
+//! assert_eq!(sig.len(), spec.sig_len());
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod deepsig;
+pub mod logsignature;
+pub mod parallel;
+pub mod path;
+pub mod runtime;
+pub mod signature;
+pub mod substrate;
+pub mod ta;
+pub mod words;
+
+/// Commonly used items, re-exported for convenience.
+pub mod prelude {
+    pub use crate::logsignature::{LogSigBasis, LogSigPlan};
+    pub use crate::path::Path;
+    pub use crate::signature::{signature, signature_stream, SigConfig};
+    pub use crate::ta::SigSpec;
+    pub use crate::words::witt_dimension;
+}

@@ -1,0 +1,253 @@
+//! The logsignature transform (§2.3) in three bases (§4.3, App. A.2):
+//!
+//! - [`LogSigBasis::Expanded`] — the raw `log(Sig)` tensor, dimension
+//!   `sig_len` (Signatory's `mode="expand"`).
+//! - [`LogSigBasis::Lyndon`] — coefficients with respect to the Lyndon
+//!   (Hall) basis `φ(ℓ)`, dimension `w(d, N)`; what `iisignature` computes.
+//!   Recovered by forward substitution using the triangularity of `φ`.
+//! - [`LogSigBasis::Words`] — the paper's **new, more efficient basis**
+//!   (§4.3, App. A.2.3): coefficients are simply the log tensor's entries
+//!   at Lyndon-word indices, `z = ψ(log Sig)`. Same dimension `w(d, N)`,
+//!   but projection is a gather instead of a triangular solve.
+//!
+//! A [`LogSigPlan`] precomputes the per-(d, N, basis) static data (Lyndon
+//! words, flat indices, and — for the Lyndon basis only — the bracket
+//! expansions), mirroring Signatory's `LogSignature` class which amortises
+//! the same preparation across calls.
+
+pub mod plan;
+
+pub use plan::{LogSigBasis, LogSigPlan};
+
+use crate::signature::backward::signature_vjp;
+use crate::signature::forward::signature;
+use crate::ta::log::{log_into, log_vjp};
+use crate::ta::SigSpec;
+
+/// `LogSig^N(path)` in the plan's basis.
+pub fn logsignature(path: &[f32], stream: usize, spec: &SigSpec, plan: &LogSigPlan) -> Vec<f32> {
+    let sig = signature(path, stream, spec);
+    logsignature_from_sig(&sig, spec, plan)
+}
+
+/// Logsignature of an already-computed signature (used by the Path class
+/// and the coordinator, where the signature is already available).
+pub fn logsignature_from_sig(sig: &[f32], spec: &SigSpec, plan: &LogSigPlan) -> Vec<f32> {
+    let mut logtensor = spec.zeros();
+    log_into(spec, sig, &mut logtensor);
+    plan.project(&logtensor)
+}
+
+/// Stream mode for the logsignature (Signatory's `logsignature(...,
+/// stream=True)`): the logsignature of every prefix, `(stream-1, dim)`.
+/// One O(L) signature sweep, then a log + projection per prefix.
+pub fn logsignature_stream(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+) -> anyhow::Result<Vec<f32>> {
+    let sigs = crate::signature::signature_stream(path, stream, spec);
+    let len = spec.sig_len();
+    let dim = plan.dim();
+    let mut out = vec![0.0f32; (stream - 1) * dim];
+    let mut logtensor = spec.zeros();
+    for i in 0..stream - 1 {
+        log_into(spec, &sigs[i * len..(i + 1) * len], &mut logtensor);
+        out[i * dim..(i + 1) * dim].copy_from_slice(&plan.project(&logtensor));
+    }
+    Ok(out)
+}
+
+/// VJP of [`logsignature`]: given the cotangent `g` in the plan's basis,
+/// returns `∂L/∂path`.
+pub fn logsignature_vjp(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    g: &[f32],
+) -> Vec<f32> {
+    let sig = signature(path, stream, spec);
+    let g_sig = logsignature_from_sig_vjp(&sig, spec, plan, g);
+    signature_vjp(path, stream, spec, &g_sig)
+}
+
+/// VJP of [`logsignature_from_sig`]: cotangent on the basis coefficients →
+/// cotangent on the signature.
+pub fn logsignature_from_sig_vjp(
+    sig: &[f32],
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    g: &[f32],
+) -> Vec<f32> {
+    let g_logtensor = plan.project_vjp(g);
+    let mut g_sig = spec.zeros();
+    log_vjp(spec, sig, &g_logtensor, &mut g_sig);
+    g_sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::substrate::rng::Rng;
+    use crate::words::witt_dimension;
+
+    fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn dimensions_per_basis() {
+        let spec = SigSpec::new(3, 4).unwrap();
+        for (basis, dim) in [
+            (LogSigBasis::Expanded, spec.sig_len()),
+            (LogSigBasis::Lyndon, witt_dimension(3, 4)),
+            (LogSigBasis::Words, witt_dimension(3, 4)),
+        ] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            assert_eq!(plan.dim(), dim, "{basis:?}");
+            let mut rng = Rng::new(1);
+            let path = random_path(&mut rng, 6, 3);
+            assert_eq!(logsignature(&path, 6, &spec, &plan).len(), dim);
+        }
+    }
+
+    #[test]
+    fn lyndon_reconstruction_recovers_log_tensor() {
+        // Σ_ℓ α_ℓ φ(ℓ) must equal log(Sig): the defining property of the
+        // Lyndon-basis coefficients (eq. 17).
+        property("lyndon reconstructs log", 10, |g| {
+            let d = g.usize_in(2, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 8);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let plan = LogSigPlan::new(&spec, LogSigBasis::Lyndon).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let sig = crate::signature::signature(&path, stream, &spec);
+            let logtensor = crate::ta::log(&spec, &sig);
+            let alpha = logsignature(&path, stream, &spec, &plan);
+            let rebuilt = plan.lyndon_reconstruct(&alpha);
+            assert_close(&rebuilt, &logtensor, 2e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn words_basis_is_gather_of_log_tensor() {
+        let spec = SigSpec::new(3, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(7);
+        let path = random_path(&mut rng, 5, 3);
+        let sig = crate::signature::signature(&path, 5, &spec);
+        let logtensor = crate::ta::log(&spec, &sig);
+        let z = logsignature(&path, 5, &spec, &plan);
+        for (i, &(level, idx)) in plan.lyndon_positions().iter().enumerate() {
+            assert_eq!(z[i], spec.level(&logtensor, level)[idx]);
+        }
+    }
+
+    #[test]
+    fn bases_agree_at_depth_two() {
+        // At N ≤ 2 the triangular change of basis is the identity, so
+        // Lyndon and Words coefficients coincide.
+        property("lyndon == words at N<=2", 10, |g| {
+            let d = g.usize_in(2, 4);
+            let n = g.usize_in(1, 2);
+            let stream = g.usize_in(2, 8);
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let lyndon =
+                logsignature(&path, stream, &spec, &LogSigPlan::new(&spec, LogSigBasis::Lyndon).unwrap());
+            let words =
+                logsignature(&path, stream, &spec, &LogSigPlan::new(&spec, LogSigBasis::Words).unwrap());
+            assert_close(&lyndon, &words, 1e-5, 1e-6);
+        });
+    }
+
+    #[test]
+    fn level_one_is_total_increment() {
+        // In every basis the level-1 coefficients are x_L - x_1.
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(3);
+        let path = random_path(&mut rng, 9, 3);
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let z = logsignature(&path, 9, &spec, &plan);
+            for c in 0..3 {
+                let expect = path[8 * 3 + c] - path[c];
+                assert!((z[c] - expect).abs() < 1e-4, "{basis:?} channel {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_segment_logsignature_is_increment_only() {
+        // log(exp(z)) = z in level 1, zeros above: so every basis gives the
+        // increment then zeros.
+        let spec = SigSpec::new(2, 4).unwrap();
+        let path = [0.0f32, 0.0, 0.7, -0.3];
+        for basis in [LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let z = logsignature(&path, 2, &spec, &plan);
+            assert!((z[0] - 0.7).abs() < 1e-5);
+            assert!((z[1] + 0.3).abs() < 1e-5);
+            for &v in &z[2..] {
+                assert!(v.abs() < 1e-5, "{basis:?}: higher coefficient {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_mode_matches_prefix_recomputation() {
+        let spec = SigSpec::new(3, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(12);
+        let stream = 8;
+        let path = random_path(&mut rng, stream, 3);
+        let st = logsignature_stream(&path, stream, &spec, &plan).unwrap();
+        let dim = plan.dim();
+        for j in 2..=stream {
+            let direct = logsignature(&path[..j * 3], j, &spec, &plan);
+            assert_close(&st[(j - 2) * dim..(j - 1) * dim], &direct, 2e-3, 2e-4);
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences_all_bases() {
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let spec = SigSpec::new(2, 3).unwrap();
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let mut rng = Rng::new(13);
+            let stream = 5;
+            let path = random_path(&mut rng, stream, 2);
+            let g = rng.normal_vec(plan.dim(), 1.0);
+            let grad = logsignature_vjp(&path, stream, &spec, &plan, &g);
+            let h = 1e-2f32;
+            for i in 0..path.len() {
+                let mut pp = path.clone();
+                pp[i] += h;
+                let mut pm = path.clone();
+                pm[i] -= h;
+                let fd: f32 = logsignature(&pp, stream, &spec, &plan)
+                    .iter()
+                    .zip(logsignature(&pm, stream, &spec, &plan).iter())
+                    .zip(&g)
+                    .map(|((&a, &b), &gv)| (a - b) / (2.0 * h) * gv)
+                    .sum();
+                assert!(
+                    (fd - grad[i]).abs() < 4e-2 * (1.0 + fd.abs()),
+                    "{basis:?} grad[{i}]: fd={fd} vjp={}",
+                    grad[i]
+                );
+            }
+        }
+    }
+}

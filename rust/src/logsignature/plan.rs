@@ -1,0 +1,267 @@
+//! Precomputed per-(d, N, basis) data for logsignature projections.
+
+use crate::ta::SigSpec;
+use crate::words::{bracket_expansion, lyndon_words, witt_dimension, word_index};
+
+/// Which representation of the logsignature to produce (§4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogSigBasis {
+    /// The raw `log(Sig)` tensor in the word basis of the ambient tensor
+    /// algebra (dimension `sig_len`).
+    Expanded,
+    /// Coefficients with respect to the Lyndon bracket basis `φ(ℓ)` —
+    /// the classical choice, what `iisignature` produces. Requires a
+    /// triangular solve with precomputed bracket expansions.
+    Lyndon,
+    /// The paper's new basis (App. A.2.3): `z = ψ(log Sig)`, i.e. the log
+    /// tensor's coefficients at Lyndon-word positions. A pure gather.
+    Words,
+}
+
+/// One Lyndon word's static data inside a plan.
+#[derive(Clone, Debug)]
+struct LyndonEntry {
+    /// Level (= word length), 1-based.
+    level: usize,
+    /// Flat index within that level's tensor.
+    index: usize,
+    /// For the Lyndon basis: `φ(ℓ)` expanded over flat word indices of the
+    /// same level, sorted ascending. Empty for other bases.
+    expansion: Vec<(usize, f32)>,
+}
+
+/// Precomputed logsignature projection (Signatory's `LogSignature` class
+/// analogue). Construction is `O(#Lyndon-words)` for `Words` and
+/// substantially more for `Lyndon` (bracket expansions) — amortised across
+/// every subsequent call, as the paper's precomputation strategies
+/// recommend (§5).
+pub struct LogSigPlan {
+    spec: SigSpec,
+    basis: LogSigBasis,
+    entries: Vec<LyndonEntry>,
+    dim: usize,
+}
+
+impl LogSigPlan {
+    pub fn new(spec: &SigSpec, basis: LogSigBasis) -> anyhow::Result<LogSigPlan> {
+        let d = spec.d();
+        let n = spec.depth();
+        let words = lyndon_words(d, n);
+        let mut entries = Vec::with_capacity(words.len());
+        for w in &words {
+            let level = w.len();
+            let index = word_index(w, d);
+            let expansion = match basis {
+                LogSigBasis::Lyndon => {
+                    let poly = bracket_expansion(w);
+                    let mut v: Vec<(usize, f32)> =
+                        poly.iter().map(|(word, &c)| (word_index(word, d), c)).collect();
+                    v.sort_unstable_by_key(|&(i, _)| i);
+                    v
+                }
+                _ => Vec::new(),
+            };
+            entries.push(LyndonEntry { level, index, expansion });
+        }
+        // Order entries by (level, lex) — word_index within a level is
+        // lex-compatible, which the triangular solve relies on.
+        entries.sort_by_key(|e| (e.level, e.index));
+        let dim = match basis {
+            LogSigBasis::Expanded => spec.sig_len(),
+            _ => witt_dimension(d, n),
+        };
+        Ok(LogSigPlan { spec: spec.clone(), basis, entries, dim })
+    }
+
+    /// Output dimension of the projection.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn basis(&self) -> LogSigBasis {
+        self.basis
+    }
+
+    pub fn spec(&self) -> &SigSpec {
+        &self.spec
+    }
+
+    /// `(level, index-within-level)` of each Lyndon word, in output order.
+    pub fn lyndon_positions(&self) -> Vec<(usize, usize)> {
+        self.entries.iter().map(|e| (e.level, e.index)).collect()
+    }
+
+    /// Project a log tensor onto the plan's basis coefficients.
+    pub fn project(&self, logtensor: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(logtensor.len(), self.spec.sig_len());
+        match self.basis {
+            LogSigBasis::Expanded => logtensor.to_vec(),
+            LogSigBasis::Words => self
+                .entries
+                .iter()
+                .map(|e| self.spec.level(logtensor, e.level)[e.index])
+                .collect(),
+            LogSigBasis::Lyndon => {
+                // Forward substitution: φ(ℓ) = ℓ + (lex-later words), so
+                // processing Lyndon words of each level in increasing index
+                // order peels coefficients one at a time.
+                let mut residual = logtensor.to_vec();
+                let mut out = Vec::with_capacity(self.dim);
+                for e in &self.entries {
+                    let lvl = self.spec.level_mut(&mut residual, e.level);
+                    let alpha = lvl[e.index];
+                    out.push(alpha);
+                    if alpha != 0.0 {
+                        for &(idx, coeff) in &e.expansion {
+                            lvl[idx] -= alpha * coeff;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// VJP of [`Self::project`]: cotangent on coefficients → cotangent on
+    /// the log tensor. (The projection is linear, so this is its
+    /// transpose.)
+    pub fn project_vjp(&self, g: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(g.len(), self.dim);
+        match self.basis {
+            LogSigBasis::Expanded => g.to_vec(),
+            LogSigBasis::Words => {
+                let mut out = self.spec.zeros();
+                for (e, &gv) in self.entries.iter().zip(g) {
+                    self.spec.level_mut(&mut out, e.level)[e.index] += gv;
+                }
+                out
+            }
+            LogSigBasis::Lyndon => {
+                // Transpose of the forward substitution, processed in
+                // reverse entry order. Forward step j:
+                //   α_j = r[pos_j];  r -= α_j · φ_j.
+                // Reverse: g_r starts at 0; for j = last..first:
+                //   gα_total = g[j] - <φ_j, g_r>;  g_r[pos_j] += gα_total.
+                let mut gr = self.spec.zeros();
+                for (e, &gv) in self.entries.iter().zip(g).rev() {
+                    let lvl = self.spec.level_mut(&mut gr, e.level);
+                    let mut g_alpha = gv;
+                    for &(idx, coeff) in &e.expansion {
+                        g_alpha -= coeff * lvl[idx];
+                    }
+                    lvl[e.index] += g_alpha;
+                }
+                gr
+            }
+        }
+    }
+
+    /// Rebuild the full log tensor from Lyndon-basis coefficients
+    /// (`Σ α_ℓ φ(ℓ)`). Test/diagnostic helper; requires `Lyndon` basis.
+    pub fn lyndon_reconstruct(&self, alpha: &[f32]) -> Vec<f32> {
+        assert_eq!(self.basis, LogSigBasis::Lyndon);
+        assert_eq!(alpha.len(), self.dim);
+        let mut out = self.spec.zeros();
+        for (e, &a) in self.entries.iter().zip(alpha) {
+            let lvl = self.spec.level_mut(&mut out, e.level);
+            for &(idx, coeff) in &e.expansion {
+                lvl[idx] += a * coeff;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::assert_close;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn plan_dims() {
+        let spec = SigSpec::new(2, 5).unwrap();
+        assert_eq!(LogSigPlan::new(&spec, LogSigBasis::Expanded).unwrap().dim(), spec.sig_len());
+        assert_eq!(LogSigPlan::new(&spec, LogSigBasis::Lyndon).unwrap().dim(), 14);
+        assert_eq!(LogSigPlan::new(&spec, LogSigBasis::Words).unwrap().dim(), 14);
+    }
+
+    #[test]
+    fn entries_sorted_by_level_then_index() {
+        let spec = SigSpec::new(3, 4).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let pos = plan.lyndon_positions();
+        for w in pos.windows(2) {
+            assert!(w[0] < w[1], "entries out of order: {:?} {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn project_vjp_is_transpose_of_project() {
+        // <project(x), g> == <x, project_vjp(g)> for all bases (linearity).
+        let spec = SigSpec::new(3, 4).unwrap();
+        let mut rng = Rng::new(11);
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            for _ in 0..5 {
+                let x = rng.normal_vec(spec.sig_len(), 1.0);
+                let g = rng.normal_vec(plan.dim(), 1.0);
+                let lhs: f64 = plan
+                    .project(&x)
+                    .iter()
+                    .zip(&g)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                let rhs: f64 = x
+                    .iter()
+                    .zip(&plan.project_vjp(&g))
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                assert!(
+                    (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()),
+                    "{basis:?}: <Px,g>={lhs} <x,P'g>={rhs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lyndon_project_then_reconstruct_roundtrips_on_lie_elements() {
+        // For an element in the image of φ (a genuine log-signature), the
+        // projection followed by reconstruction is the identity.
+        let spec = SigSpec::new(2, 4).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Lyndon).unwrap();
+        let mut rng = Rng::new(3);
+        // Build a random Lie element via reconstruction from random α.
+        let alpha = rng.normal_vec(plan.dim(), 1.0);
+        let lie = plan.lyndon_reconstruct(&alpha);
+        let back = plan.project(&lie);
+        assert_close(&back, &alpha, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn words_project_is_exact_gather() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let x: Vec<f32> = (0..spec.sig_len()).map(|i| i as f32).collect();
+        let z = plan.project(&x);
+        // Lyndon words over {0,1} up to length 3: 0, 1, 01, 001, 011.
+        // Flat positions: level1: 0,1 → x[0], x[1];
+        // level2 word 01 → index 1 → x[2 + 1] = 3;
+        // level3 words 001 (idx 1), 011 (idx 3) → x[6+1], x[6+3].
+        assert_eq!(z, vec![0.0, 1.0, 3.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn d1_plans() {
+        // One channel: the only Lyndon word is "0", dim 1 in compressed
+        // bases at any depth.
+        let spec = SigSpec::new(1, 6).unwrap();
+        for basis in [LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            assert_eq!(plan.dim(), 1);
+            let x = vec![3.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            assert_eq!(plan.project(&x), vec![3.0]);
+        }
+    }
+}

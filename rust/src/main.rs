@@ -1,0 +1,341 @@
+//! signax CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! - `tables`    — regenerate the paper's benchmark tables/figures.
+//! - `sig`       — compute a signature of a random or CSV path.
+//! - `logsig`    — compute a logsignature (basis selectable).
+//! - `train`     — train the deep signature model (§6.2, Fig 3), comparing
+//!                 backends; writes the loss-vs-wallclock curve.
+//! - `serve`     — run a synthetic serving workload through the
+//!                 coordinator (router + dynamic batcher) and print
+//!                 throughput/latency + metrics.
+//! - `info`      — artifact registry / platform diagnostics.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use signax::bench::{run_table, table_ids, BenchCtx, Scale};
+use signax::coordinator::{Coordinator, CoordinatorConfig, Request};
+use signax::data::gbm::{gbm_batch, GbmConfig};
+use signax::deepsig::{accuracy, train_step, ModelConfig, Params, SigBackend};
+use signax::logsignature::{logsignature, LogSigBasis, LogSigPlan};
+use signax::runtime::EngineHandle;
+use signax::signature::signature;
+use signax::substrate::cli::{Cli, Command};
+use signax::substrate::rng::Rng;
+use signax::ta::SigSpec;
+
+fn cli() -> Cli {
+    Cli {
+        prog: "signax",
+        about: "signature & logsignature transforms: native engine, AOT-XLA runtime, coordinator",
+        commands: vec![
+            Command::new("tables", "regenerate the paper's benchmark tables")
+                .opt("table", "table id (1..16, opcount, path, memory) or 'all'", "all")
+                .opt("scale", "paper | small | ci", "small")
+                .opt("artifacts", "artifact directory for the XLA column", "artifacts")
+                .opt("out", "directory for CSV output", "results"),
+            Command::new("sig", "compute a signature of a random path")
+                .opt("channels", "path channels d", "4")
+                .opt("depth", "truncation depth N", "4")
+                .opt("stream", "number of points L", "128")
+                .opt("seed", "rng seed", "0")
+                .flag("parallel", "use the chunked stream reduction"),
+            Command::new("logsig", "compute a logsignature of a random path")
+                .opt("channels", "path channels d", "4")
+                .opt("depth", "truncation depth N", "4")
+                .opt("stream", "number of points L", "128")
+                .opt("basis", "words | lyndon | expanded", "words")
+                .opt("seed", "rng seed", "0"),
+            Command::new("train", "train the deep signature model (Fig 3)")
+                .opt("steps", "training steps", "200")
+                .opt("batch", "batch size", "32")
+                .opt("stream", "sequence length", "64")
+                .opt("lr", "learning rate", "1.0")
+                .opt("backend", "fused | conventional | xla | all", "all")
+                .opt("artifacts", "artifact directory (xla backend)", "artifacts")
+                .opt("out", "loss-curve CSV directory", "results"),
+            Command::new("serve", "synthetic serving workload through the coordinator")
+                .opt("requests", "total requests", "256")
+                .opt("concurrency", "concurrent client threads", "16")
+                .opt("stream", "points per request", "128")
+                .opt("channels", "channels", "4")
+                .opt("depth", "depth", "4")
+                .opt("artifacts", "artifact directory", "artifacts")
+                .flag("native-only", "disable the XLA backend"),
+            Command::new("info", "artifact registry / platform diagnostics")
+                .opt("artifacts", "artifact directory", "artifacts"),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let (cmd, args) = match cli.parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.name {
+        "tables" => cmd_tables(&args),
+        "sig" => cmd_sig(&args),
+        "logsig" => cmd_logsig(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_tables(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    let scale = Scale::parse(args.get_or("scale", "small"))?;
+    let which = args.get_or("table", "all");
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let ctx = BenchCtx::new(scale, Some(args.get_or("artifacts", "artifacts").into()));
+    if ctx.xla.is_none() {
+        eprintln!("note: no artifacts found — the `signax XLA` column will be dashes");
+    }
+    let ids: Vec<String> = if which == "all" {
+        table_ids().into_iter().map(|s| s.to_string()).collect()
+    } else {
+        which.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    for id in &ids {
+        let t0 = Instant::now();
+        let table = run_table(&ctx, id)?;
+        println!("{}", table.render());
+        println!("[table {id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+        let csv_path = out_dir.join(format!("table_{id}.csv"));
+        std::fs::write(&csv_path, table.to_csv())?;
+    }
+    println!("CSV written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_sig(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    let d = args.get_usize("channels", 4)?;
+    let depth = args.get_usize("depth", 4)?;
+    let stream = args.get_usize("stream", 128)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let spec = SigSpec::new(d, depth)?;
+    let mut rng = Rng::new(seed);
+    let path = signax::data::random_path(&mut rng, stream, d, 0.2);
+    let t0 = Instant::now();
+    let sig = if args.flag("parallel") {
+        signax::signature::signature_with(
+            &path,
+            stream,
+            &spec,
+            &signax::signature::SigConfig::parallel(signax::substrate::pool::default_threads()),
+        )?
+    } else {
+        signature(&path, stream, &spec)
+    };
+    let dt = t0.elapsed();
+    println!(
+        "Sig^{depth} of a {stream}x{d} path: {} values in {:.3}ms",
+        sig.len(),
+        dt.as_secs_f64() * 1e3
+    );
+    println!("level 1 (= total increment): {:?}", &sig[..d.min(8)]);
+    Ok(())
+}
+
+fn cmd_logsig(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    let d = args.get_usize("channels", 4)?;
+    let depth = args.get_usize("depth", 4)?;
+    let stream = args.get_usize("stream", 128)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let basis = match args.get_or("basis", "words") {
+        "words" => LogSigBasis::Words,
+        "lyndon" => LogSigBasis::Lyndon,
+        "expanded" => LogSigBasis::Expanded,
+        other => anyhow::bail!("unknown basis {other:?}"),
+    };
+    let spec = SigSpec::new(d, depth)?;
+    let plan = LogSigPlan::new(&spec, basis)?;
+    let mut rng = Rng::new(seed);
+    let path = signax::data::random_path(&mut rng, stream, d, 0.2);
+    let t0 = Instant::now();
+    let z = logsignature(&path, stream, &spec, &plan);
+    println!(
+        "LogSig^{depth} ({basis:?}) of a {stream}x{d} path: {} values in {:.3}ms (witt={})",
+        z.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        signax::words::witt_dimension(d, depth)
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    let steps = args.get_usize("steps", 200)?;
+    let batch = args.get_usize("batch", 32)?;
+    let stream = args.get_usize("stream", 64)?;
+    let lr = args.get_f64("lr", 1.0)? as f32;
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let backend_arg = args.get_or("backend", "all");
+    let backends: Vec<&str> = if backend_arg == "all" {
+        vec!["fused", "conventional", "xla"]
+    } else {
+        vec![backend_arg]
+    };
+    let cfg = ModelConfig::default();
+    let gcfg = GbmConfig { stream, ..Default::default() };
+
+    for backend in backends {
+        let mut rng = Rng::new(2024);
+        let p0 = Params::init(&cfg, &mut rng);
+        let (x, y) = gbm_batch(&mut rng, batch, &gcfg);
+        let (xt, yt) = gbm_batch(&mut rng, 256, &gcfg);
+        let mut curve: Vec<(f64, f32)> = vec![];
+        let t0 = Instant::now();
+        match backend {
+            "fused" | "conventional" => {
+                let be = if backend == "fused" { SigBackend::Fused } else { SigBackend::Conventional };
+                let mut p = p0.clone();
+                for s in 0..steps {
+                    let loss = train_step(
+                        &cfg,
+                        &mut p,
+                        &x,
+                        &y,
+                        lr,
+                        be,
+                        signax::substrate::pool::default_threads(),
+                    );
+                    curve.push((t0.elapsed().as_secs_f64(), loss));
+                    if s % 50 == 0 {
+                        println!("[{backend}] step {s}: loss {loss:.4}");
+                    }
+                }
+                println!(
+                    "[{backend}] {steps} steps in {:.2}s, final loss {:.4}, test acc {:.3}",
+                    t0.elapsed().as_secs_f64(),
+                    curve.last().unwrap().1,
+                    accuracy(&cfg, &p, &xt, &yt)
+                );
+            }
+            "xla" => {
+                let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+                if !dir.join("MANIFEST.json").exists() {
+                    eprintln!("[xla] skipped: no artifacts (run `make artifacts`)");
+                    continue;
+                }
+                let (engine, registry) = EngineHandle::spawn(dir)?;
+                let entry = registry
+                    .train()
+                    .ok_or_else(|| anyhow::anyhow!("no train artifact"))?
+                    .clone();
+                anyhow::ensure!(
+                    entry.batch == batch && entry.length == stream,
+                    "train artifact is for batch={} stream={}; pass matching --batch/--stream",
+                    entry.batch,
+                    entry.length
+                );
+                let mut bufs = p0.to_buffers();
+                engine.warm(&entry)?;
+                for s in 0..steps {
+                    let (nb, loss) = engine.train_step(&entry, bufs, x.clone(), y.clone(), lr)?;
+                    bufs = nb;
+                    curve.push((t0.elapsed().as_secs_f64(), loss));
+                    if s % 50 == 0 {
+                        println!("[xla] step {s}: loss {loss:.4}");
+                    }
+                }
+                let p = Params::from_buffers(&cfg, &bufs);
+                println!(
+                    "[xla] {steps} steps in {:.2}s, final loss {:.4}, test acc {:.3}",
+                    t0.elapsed().as_secs_f64(),
+                    curve.last().unwrap().1,
+                    accuracy(&cfg, &p, &xt, &yt)
+                );
+            }
+            other => anyhow::bail!("unknown backend {other:?}"),
+        }
+        // Write the loss-vs-wallclock curve (Fig 3).
+        let mut f = std::fs::File::create(out_dir.join(format!("fig3_loss_{backend}.csv")))?;
+        writeln!(f, "wallclock_s,loss")?;
+        for (t, l) in &curve {
+            writeln!(f, "{t},{l}")?;
+        }
+    }
+    println!("loss curves written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    let n_requests = args.get_usize("requests", 256)?;
+    let concurrency = args.get_usize("concurrency", 16)?;
+    let stream = args.get_usize("stream", 128)?;
+    let d = args.get_usize("channels", 4)?;
+    let depth = args.get_usize("depth", 4)?;
+    let coord = Coordinator::new(if args.flag("native-only") {
+        CoordinatorConfig::native_only()
+    } else {
+        CoordinatorConfig {
+            artifact_dir: Some(args.get_or("artifacts", "artifacts").into()),
+            ..Default::default()
+        }
+    })?;
+    println!("coordinator up (xla backend: {})", coord.has_xla());
+    let mut rng = Rng::new(7);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|_| Request::Signature {
+            path: signax::data::random_path(&mut rng, stream, d, 0.2),
+            stream,
+            d,
+            depth,
+        })
+        .collect();
+    let t0 = Instant::now();
+    // Issue with bounded concurrency.
+    let chunks: Vec<Vec<Request>> = reqs.chunks(concurrency).map(|c| c.to_vec()).collect();
+    let mut ok = 0usize;
+    for chunk in chunks {
+        for r in coord.call_many(chunk) {
+            if r.is_ok() {
+                ok += 1;
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!(
+        "{ok}/{n_requests} ok in {:.2}s  ({:.0} req/s, mean latency {:?})",
+        dt.as_secs_f64(),
+        ok as f64 / dt.as_secs_f64(),
+        snap.mean_latency
+    );
+    println!("metrics: {}", snap.render());
+    println!("padding ratio: {:.1}%", coord.metrics().padding_ratio() * 100.0);
+    Ok(())
+}
+
+fn cmd_info(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    println!("signax — Signatory (ICLR 2021) reproduction");
+    println!("native engine: always available");
+    if dir.join("MANIFEST.json").exists() {
+        let (engine, registry) = EngineHandle::spawn(dir)?;
+        println!("PJRT platform: {}", engine.platform());
+        println!("artifacts ({}):", registry.entries.len());
+        for e in &registry.entries {
+            println!(
+                "  {:<34} kind={:?} b={} L={} d={} N={} pallas={}",
+                e.file, e.kind, e.batch, e.length, e.d, e.depth, e.pallas
+            );
+        }
+    } else {
+        println!("no artifacts at {dir:?} (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Stream-level parallelism (§5.1): the signature computation, eq. (3), is
+//! a noncommutative reduction with respect to ⊠, so it parallelises by
+//! splitting the increments into chunks, computing each chunk's signature
+//! independently (each with the fused multiply-exponentiate), and combining
+//! the chunk signatures with ⊠.
+
+use crate::substrate::pool::{chunk_ranges, parallel_map_indexed};
+use crate::ta::fused::fused_mexp;
+use crate::ta::mul::mul_assign;
+use crate::ta::{SigSpec, Workspace};
+
+/// Compute the signature of the path given by `point(0..n_points)` using a
+/// chunked parallel reduction over the stream dimension. Returns the
+/// signature (identity-initialised; callers fold in any `initial`).
+pub fn reduce_signature<'a, F>(
+    spec: &SigSpec,
+    n_points: usize,
+    point: &F,
+    threads: usize,
+) -> Vec<f32>
+where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    let n_incr = n_points - 1;
+    let ranges = chunk_ranges(n_incr, threads);
+    // Each chunk covers increments [s, e): the sub-path points s..=e.
+    let chunk_sigs = parallel_map_indexed(ranges.len(), ranges.len(), |ci| {
+        let (s, e) = ranges[ci];
+        let mut ws = Workspace::new(spec);
+        let mut sig = spec.zeros();
+        let d = spec.d();
+        let mut z = vec![0.0f32; d];
+        for i in s..e {
+            let prev = point(i);
+            let cur = point(i + 1);
+            for c in 0..d {
+                z[c] = cur[c] - prev[c];
+            }
+            fused_mexp(spec, &mut sig, &z, &mut ws);
+        }
+        sig
+    });
+    // Combine left-to-right (few chunks; a tree would not help here).
+    let mut iter = chunk_sigs.into_iter();
+    let mut acc = iter.next().expect("at least one chunk");
+    for s in iter {
+        mul_assign(spec, &mut acc, &s);
+    }
+    acc
+}
+
+/// Tree-combine a slice of signatures `(count, sig_len)` with ⊠ in
+/// parallel: used by `multi_signature_combine` and by benchmarks comparing
+/// reduction strategies. Returns the ⊠-product in order.
+pub fn tree_combine(spec: &SigSpec, sigs: &[f32], count: usize, threads: usize) -> Vec<f32> {
+    let len = spec.sig_len();
+    assert_eq!(sigs.len(), count * len);
+    assert!(count >= 1);
+    let mut layer: Vec<Vec<f32>> = (0..count).map(|i| sigs[i * len..(i + 1) * len].to_vec()).collect();
+    while layer.len() > 1 {
+        let pairs = layer.len() / 2;
+        let odd = layer.len() % 2 == 1;
+        let combined = parallel_map_indexed(pairs, threads, |p| {
+            crate::ta::mul(spec, &layer[2 * p], &layer[2 * p + 1])
+        });
+        let mut next = combined;
+        if odd {
+            next.push(layer.last().unwrap().clone());
+        }
+        layer = next;
+    }
+    layer.pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::assert_close;
+    use crate::substrate::rng::Rng;
+    use crate::ta::mul;
+
+    #[test]
+    fn tree_combine_matches_left_fold() {
+        let spec = SigSpec::new(2, 4).unwrap();
+        let mut rng = Rng::new(17);
+        let count = 7;
+        let len = spec.sig_len();
+        let sigs = rng.normal_vec(count * len, 0.3);
+        let tree = tree_combine(&spec, &sigs, count, 4);
+        let mut fold = sigs[..len].to_vec();
+        for i in 1..count {
+            fold = mul(&spec, &fold, &sigs[i * len..(i + 1) * len]);
+        }
+        assert_close(&tree, &fold, 1e-3, 1e-4);
+    }
+
+    #[test]
+    fn tree_combine_single() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let sigs = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(tree_combine(&spec, &sigs, 1, 4), sigs);
+    }
+
+    #[test]
+    fn reduce_signature_one_thread_matches_many() {
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(3);
+        let stream = 64;
+        let path = rng.normal_vec(stream * 3, 0.2);
+        let point = |i: usize| &path[i * 3..(i + 1) * 3];
+        let one = reduce_signature(&spec, stream, &point, 1);
+        for t in [2, 3, 8, 63, 200] {
+            let many = reduce_signature(&spec, stream, &point, t);
+            assert_close(&many, &one, 1e-3, 1e-4);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! The `Path` class (§4.2, §5.5 "arbitrary intervals"): O(L) precomputation
+//! and storage giving **O(1)-in-L signature queries over arbitrary
+//! intervals**, improving on the O(log L) / O(L log L) of Chafai & Lyons
+//! (2005).
+//!
+//! Precomputes, via one fused-multiply-exponentiate sweep each,
+//!
+//! - `S_j   = Sig(x_0 .. x_j)`        (expanding signatures, eq. 6)
+//! - `I_j   = InvertSig(x_0 .. x_j) = S_j^{-1}` — maintained incrementally
+//!   as `I_j = exp(-z_j) ⊠ I_{j-1}` (one *left* fused op per step, never a
+//!   generic group inversion).
+//!
+//! Then `Sig(x_i .. x_j) = I_i ⊠ S_j` — a single ⊠ at query time.
+//!
+//! As the paper cautions, `I_i ⊠ S_j` cancels large terms for distant
+//! `i, j`; [`Path::query`] is exact in exact arithmetic but can lose
+//! relative precision for extreme inputs. [`Path::query_recompute`] is the
+//! slow exact fallback used by tests and benchmarks.
+
+use crate::logsignature::{logsignature_from_sig, LogSigPlan};
+use crate::signature::forward::signature;
+use crate::ta::fused::{fused_mexp, fused_mexp_left};
+use crate::ta::mul::mul_into;
+use crate::ta::{SigSpec, Workspace};
+
+/// Precomputed path with O(1) interval signature queries and streaming
+/// updates (Signatory's `Path` class).
+pub struct Path {
+    spec: SigSpec,
+    /// Points, `(len, d)` row-major.
+    points: Vec<f32>,
+    /// `sigs[j-1]` = Sig(x_0..x_j) for j = 1..len-1, each `sig_len` long.
+    sigs: Vec<f32>,
+    /// `inv_sigs[j-1]` = Sig(x_0..x_j)^{-1}.
+    inv_sigs: Vec<f32>,
+    ws: Workspace,
+}
+
+impl Path {
+    /// Build from a `(stream, d)` buffer with `stream >= 2`. O(L) work.
+    pub fn new(spec: &SigSpec, points: &[f32], stream: usize) -> anyhow::Result<Path> {
+        anyhow::ensure!(stream >= 2, "need at least two points");
+        anyhow::ensure!(points.len() == stream * spec.d(), "bad point buffer length");
+        let mut path = Path {
+            spec: spec.clone(),
+            points: Vec::with_capacity(points.len()),
+            sigs: Vec::new(),
+            inv_sigs: Vec::new(),
+            ws: Workspace::new(spec),
+        };
+        path.extend_points(points, stream);
+        Ok(path)
+    }
+
+    fn extend_points(&mut self, new_points: &[f32], count: usize) {
+        let d = self.spec.d();
+        let len = self.spec.sig_len();
+        let had = self.len();
+        self.points.extend_from_slice(&new_points[..count * d]);
+        let total = self.len();
+        // Running state: the last expanding signature / inverted signature.
+        let mut cur = if had >= 2 {
+            self.sigs[self.sigs.len() - len..].to_vec()
+        } else {
+            self.spec.zeros()
+        };
+        let mut cur_inv = if had >= 2 {
+            self.inv_sigs[self.inv_sigs.len() - len..].to_vec()
+        } else {
+            self.spec.zeros()
+        };
+        let mut z = vec![0.0f32; d];
+        let mut neg_z = vec![0.0f32; d];
+        let start = had.max(1);
+        for j in start..total {
+            for c in 0..d {
+                z[c] = self.points[j * d + c] - self.points[(j - 1) * d + c];
+                neg_z[c] = -z[c];
+            }
+            // S_j = S_{j-1} ⊠ exp(z_j)   (eq. 6, fused).
+            fused_mexp(&self.spec, &mut cur, &z, &mut self.ws);
+            // I_j = exp(-z_j) ⊠ I_{j-1}  (mirrored fused op).
+            fused_mexp_left(&self.spec, &mut cur_inv, &neg_z, &mut self.ws);
+            self.sigs.extend_from_slice(&cur);
+            self.inv_sigs.extend_from_slice(&cur_inv);
+        }
+    }
+
+    /// Append new points ("keeping the signature up-to-date", §5.5;
+    /// Signatory's `Path.update`). O(new points) work.
+    pub fn update(&mut self, new_points: &[f32], count: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(count >= 1, "no points to add");
+        anyhow::ensure!(new_points.len() == count * self.spec.d(), "bad buffer length");
+        self.extend_points(new_points, count);
+        Ok(())
+    }
+
+    /// Number of points currently stored.
+    pub fn len(&self) -> usize {
+        self.points.len() / self.spec.d()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn spec(&self) -> &SigSpec {
+        &self.spec
+    }
+
+    /// `Sig(x_i .. x_j)` (0-based, inclusive endpoints, `i < j`).
+    /// **O(1) in the path length**: one ⊠ (or a copy when `i == 0`).
+    pub fn query(&self, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(i < j && j < self.len(), "invalid interval [{i}, {j}] of {}", self.len());
+        let len = self.spec.sig_len();
+        let s_j = &self.sigs[(j - 1) * len..j * len];
+        if i == 0 {
+            return Ok(s_j.to_vec());
+        }
+        let inv_i = &self.inv_sigs[(i - 1) * len..i * len];
+        let mut out = vec![0.0f32; len];
+        mul_into(&self.spec, inv_i, s_j, &mut out);
+        Ok(out)
+    }
+
+    /// `LogSig(x_i .. x_j)` in the plan's basis: the O(1) query followed by
+    /// a log (§4.2).
+    pub fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Vec<f32>> {
+        let sig = self.query(i, j)?;
+        Ok(logsignature_from_sig(&sig, &self.spec, plan))
+    }
+
+    /// The signature of the whole path so far.
+    pub fn signature(&self) -> Vec<f32> {
+        let len = self.spec.sig_len();
+        self.sigs[self.sigs.len() - len..].to_vec()
+    }
+
+    /// The full expanding-signature stream `(len-1, sig_len)` — Signatory's
+    /// `signature(..., stream=True)` view of the Path.
+    pub fn stream(&self) -> &[f32] {
+        &self.sigs
+    }
+
+    /// Slow-path oracle: recompute `Sig(x_i..x_j)` directly from the points
+    /// (O(j - i) work). Used by tests and the §4.2 benchmark baseline.
+    pub fn query_recompute(&self, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(i < j && j < self.len(), "invalid interval");
+        let d = self.spec.d();
+        Ok(signature(&self.points[i * d..(j + 1) * d], j - i + 1, &self.spec))
+    }
+
+    /// Bytes of precomputed storage (the O(L) cost the paper trades for
+    /// O(1) queries); used by the memory benchmark.
+    pub fn storage_bytes(&self) -> usize {
+        (self.sigs.len() + self.inv_sigs.len() + self.points.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logsignature::{logsignature, LogSigBasis};
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::substrate::rng::Rng;
+
+    fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn queries_match_direct_recomputation() {
+        property("path query == recompute", 12, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(4, 24);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts = random_path(g.rng(), stream, d);
+            let path = Path::new(&spec, &pts, stream).unwrap();
+            for _ in 0..6 {
+                let i = g.usize_in(0, stream - 2);
+                let j = g.usize_in(i + 1, stream - 1);
+                let fast = path.query(i, j).unwrap();
+                let slow = path.query_recompute(i, j).unwrap();
+                assert_close(&fast, &slow, 5e-3, 5e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn full_interval_query_is_whole_signature() {
+        let spec = SigSpec::new(2, 4).unwrap();
+        let mut rng = Rng::new(1);
+        let pts = random_path(&mut rng, 12, 2);
+        let path = Path::new(&spec, &pts, 12).unwrap();
+        let q = path.query(0, 11).unwrap();
+        assert_close(&q, &signature(&pts, 12, &spec), 1e-6, 1e-7);
+        assert_close(&path.signature(), &q, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn adjacent_point_query_is_exponential() {
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(2);
+        let pts = random_path(&mut rng, 8, 3);
+        let path = Path::new(&spec, &pts, 8).unwrap();
+        for i in 0..7 {
+            let q = path.query(i, i + 1).unwrap();
+            let direct =
+                crate::signature::forward::two_point_signature(&pts[i * 3..(i + 1) * 3], &pts[(i + 1) * 3..(i + 2) * 3], &spec);
+            assert_close(&q, &direct, 2e-3, 2e-4);
+        }
+    }
+
+    #[test]
+    fn update_matches_fresh_construction() {
+        property("update == rebuild", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let first = g.usize_in(2, 10);
+            let extra = g.usize_in(1, 8);
+            g.label(format!("d={d} n={n} first={first} extra={extra}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts = random_path(g.rng(), first + extra, d);
+            let mut incremental = Path::new(&spec, &pts[..first * d], first).unwrap();
+            incremental.update(&pts[first * d..], extra).unwrap();
+            let fresh = Path::new(&spec, &pts, first + extra).unwrap();
+            assert_eq!(incremental.len(), fresh.len());
+            assert_close(&incremental.signature(), &fresh.signature(), 2e-3, 1e-4);
+            let i = g.usize_in(0, first + extra - 2);
+            let j = g.usize_in(i + 1, first + extra - 1);
+            assert_close(
+                &incremental.query(i, j).unwrap(),
+                &fresh.query(i, j).unwrap(),
+                2e-3,
+                1e-4,
+            );
+        });
+    }
+
+    #[test]
+    fn logsig_queries_match_direct() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(9);
+        let pts = random_path(&mut rng, 10, 2);
+        let path = Path::new(&spec, &pts, 10).unwrap();
+        for basis in [LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let q = path.logsig_query(2, 7, &plan).unwrap();
+            let direct = logsignature(&pts[2 * 2..8 * 2], 6, &spec, &plan);
+            assert_close(&q, &direct, 5e-3, 5e-4);
+        }
+    }
+
+    #[test]
+    fn stream_view_matches_signature_stream() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(4);
+        let pts = random_path(&mut rng, 9, 2);
+        let path = Path::new(&spec, &pts, 9).unwrap();
+        let st = crate::signature::signature_stream(&pts, 9, &spec);
+        assert_close(path.stream(), &st, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn invalid_intervals_error() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let pts = vec![0.0f32; 6];
+        let path = Path::new(&spec, &pts, 3).unwrap();
+        assert!(path.query(1, 1).is_err());
+        assert!(path.query(2, 1).is_err());
+        assert!(path.query(0, 3).is_err());
+        assert!(Path::new(&spec, &pts[..2], 1).is_err());
+    }
+
+    #[test]
+    fn storage_is_linear_in_length() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(6);
+        let p1 = Path::new(&spec, &random_path(&mut rng, 10, 2), 10).unwrap();
+        let p2 = Path::new(&spec, &random_path(&mut rng, 20, 2), 20).unwrap();
+        let per_point1 = p1.storage_bytes() as f64 / 10.0;
+        let per_point2 = p2.storage_bytes() as f64 / 20.0;
+        assert!((per_point1 - per_point2).abs() / per_point1 < 0.2);
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact registry: discovers what the AOT pipeline produced.
+
+use std::path::{Path, PathBuf};
+
+use crate::substrate::json::Json;
+
+/// What a lowered graph computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(b, L, d) -> (b, sig_len)`.
+    Sig,
+    /// `(b, L, d), (b, sig_len) -> (b, L, d)` — signature VJP.
+    SigGrad,
+    /// `(b, L, d) -> (b, witt)` — Words-basis logsignature.
+    LogSig,
+    /// Deep-signature train step: `(params..., x, y, lr) -> (params..., loss)`.
+    Train,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> anyhow::Result<ArtifactKind> {
+        Ok(match s {
+            "sig" => ArtifactKind::Sig,
+            "siggrad" => ArtifactKind::SigGrad,
+            "logsig" => ArtifactKind::LogSig,
+            "train" => ArtifactKind::Train,
+            other => anyhow::bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One entry of `MANIFEST.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub length: usize,
+    pub d: usize,
+    pub depth: usize,
+    pub out_dim: usize,
+    /// Whether the L1 Pallas kernel (vs the jnp path) was lowered into it.
+    pub pallas: bool,
+    /// Train-artifact extras.
+    pub hidden: usize,
+    pub d_out: usize,
+}
+
+/// The set of available artifacts.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Registry {
+    /// Load `MANIFEST.json` from an artifact directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Registry> {
+        let manifest = dir.join("MANIFEST.json");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("cannot read {manifest:?}: {e}; run `make artifacts`"))?;
+        let json = Json::parse(&text)?;
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("MANIFEST.json missing artifacts array"))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_usize = |k: &str| a.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            entries.push(ArtifactEntry {
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?
+                    .to_string(),
+                kind: ArtifactKind::parse(
+                    a.get("kind").and_then(|v| v.as_str()).unwrap_or("?"),
+                )?,
+                batch: get_usize("b"),
+                length: get_usize("length"),
+                d: get_usize("d"),
+                depth: get_usize("depth"),
+                out_dim: get_usize("out_dim"),
+                pallas: matches!(a.get("pallas"), Some(Json::Bool(true))),
+                hidden: get_usize("hidden"),
+                d_out: get_usize("d_out"),
+            });
+        }
+        Ok(Registry { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find an artifact matching kind and shapes exactly.
+    pub fn find(
+        &self,
+        kind: ArtifactKind,
+        batch: usize,
+        length: usize,
+        d: usize,
+        depth: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == kind && e.batch == batch && e.length == length && e.d == d && e.depth == depth
+        })
+    }
+
+    /// Find an artifact of the right (kind, length, d, depth) whose batch
+    /// is at least `min_batch` — used by the dynamic batcher, which pads.
+    /// Prefers the *largest* batch so concurrent requests coalesce into one
+    /// execution (the linger deadline bounds the latency cost for sparse
+    /// traffic).
+    pub fn find_batchable(
+        &self,
+        kind: ArtifactKind,
+        min_batch: usize,
+        length: usize,
+        d: usize,
+        depth: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.length == length
+                    && e.d == d
+                    && e.depth == depth
+                    && e.batch >= min_batch
+            })
+            .max_by_key(|e| e.batch)
+    }
+
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// The train artifact, if present.
+    pub fn train(&self) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == ArtifactKind::Train)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("MANIFEST.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join(format!("signax-reg-{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"artifacts": [
+                {"file": "sig_a.hlo.txt", "kind": "sig", "b": 32, "length": 128, "d": 4, "depth": 4, "out_dim": 340, "pallas": true},
+                {"file": "sig_b.hlo.txt", "kind": "sig", "b": 8, "length": 128, "d": 4, "depth": 4, "out_dim": 340},
+                {"file": "train.hlo.txt", "kind": "train", "b": 32, "length": 64, "d": 2, "depth": 3, "out_dim": 0, "hidden": 16, "d_out": 4}
+            ], "sweep": "small"}"#,
+        );
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.entries.len(), 3);
+        let e = reg.find(ArtifactKind::Sig, 32, 128, 4, 4).unwrap();
+        assert!(e.pallas);
+        assert!(reg.find(ArtifactKind::Sig, 16, 128, 4, 4).is_none());
+        // Batchable: the largest artifact that fits (coalescing-friendly).
+        let e = reg.find_batchable(ArtifactKind::Sig, 3, 128, 4, 4).unwrap();
+        assert_eq!(e.batch, 32);
+        let e = reg.find_batchable(ArtifactKind::Sig, 9, 128, 4, 4).unwrap();
+        assert_eq!(e.batch, 32);
+        assert!(reg.find_batchable(ArtifactKind::Sig, 33, 128, 4, 4).is_none());
+        let t = reg.train().unwrap();
+        assert_eq!(t.hidden, 16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Registry::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let dir = std::env::temp_dir().join(format!("signax-reg2-{}", std::process::id()));
+        write_manifest(&dir, r#"{"artifacts": [{"file": "x", "kind": "zzz"}]}"#);
+        assert!(Registry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

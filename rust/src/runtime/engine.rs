@@ -1,0 +1,197 @@
+//! PJRT execution engine: compile cache + typed entry points.
+//!
+//! One `Engine` wraps one `PjRtClient` (CPU here; the same code path would
+//! target a TPU plugin). Executables are compiled from HLO text on first
+//! use and cached per artifact file.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::artifact::{ArtifactEntry, ArtifactKind, Registry};
+
+/// A PJRT client plus a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> anyhow::Result<Engine> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(
+        &self,
+        reg: &Registry,
+        entry: &ArtifactEntry,
+    ) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(&entry.file) {
+            return Ok(Arc::clone(e));
+        }
+        let path = reg.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.compiled.lock().unwrap().insert(entry.file.clone(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cache_size(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+
+    fn literal(values: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let expected: i64 = dims.iter().product();
+        anyhow::ensure!(values.len() as i64 == expected, "literal shape mismatch");
+        xla::Literal::vec1(values)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True, so outputs are a tuple.
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))
+    }
+
+    /// Run a `sig` or `logsig` artifact: `paths` is `(batch, L, d)` flat,
+    /// returns `(batch, out_dim)` flat.
+    pub fn run_forward(
+        &self,
+        reg: &Registry,
+        entry: &ArtifactEntry,
+        paths: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            matches!(entry.kind, ArtifactKind::Sig | ArtifactKind::LogSig),
+            "run_forward expects a sig/logsig artifact"
+        );
+        let exe = self.executable(reg, entry)?;
+        let x = Self::literal(
+            paths,
+            &[entry.batch as i64, entry.length as i64, entry.d as i64],
+        )?;
+        let outs = Self::run(&exe, &[x])?;
+        anyhow::ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+        let v = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(v.len() == entry.batch * entry.out_dim, "bad output size");
+        Ok(v)
+    }
+
+    /// Run a `siggrad` artifact: `(paths, cotangent) -> grad_paths`.
+    pub fn run_grad(
+        &self,
+        reg: &Registry,
+        entry: &ArtifactEntry,
+        paths: &[f32],
+        cotangent: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(entry.kind == ArtifactKind::SigGrad, "run_grad expects siggrad");
+        let exe = self.executable(reg, entry)?;
+        let x = Self::literal(
+            paths,
+            &[entry.batch as i64, entry.length as i64, entry.d as i64],
+        )?;
+        let sig_len: usize = (1..=entry.depth).map(|k| entry.d.pow(k as u32)).sum();
+        let g = Self::literal(cotangent, &[entry.batch as i64, sig_len as i64])?;
+        let outs = Self::run(&exe, &[x, g])?;
+        anyhow::ensure!(outs.len() == 1, "expected 1 output");
+        Ok(outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?)
+    }
+
+    /// Run the train-step artifact once: consumes parameter buffers and the
+    /// batch, returns the loss; `params` is updated in place.
+    ///
+    /// Parameter layout (matching `model.DeepSigParams`):
+    /// `w1 (d, hidden), b1 (hidden), w2 (hidden, d_out), b2 (d_out),
+    ///  w_out (sig_len), b_out ()`.
+    pub fn run_train_step(
+        &self,
+        reg: &Registry,
+        entry: &ArtifactEntry,
+        params: &mut [Vec<f32>],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        anyhow::ensure!(entry.kind == ArtifactKind::Train, "run_train_step expects train");
+        anyhow::ensure!(params.len() == 6, "expected 6 parameter tensors");
+        let exe = self.executable(reg, entry)?;
+        let (d_in, h, d_out) = (entry.d, entry.hidden, entry.d_out);
+        let sig_len: usize = (1..=entry.depth).map(|k| d_out.pow(k as u32)).sum();
+        let shapes: [&[i64]; 6] = [
+            &[d_in as i64, h as i64],
+            &[h as i64],
+            &[h as i64, d_out as i64],
+            &[d_out as i64],
+            &[sig_len as i64],
+            &[],
+        ];
+        let mut inputs = Vec::with_capacity(9);
+        for (p, dims) in params.iter().zip(shapes.iter()) {
+            inputs.push(Self::literal(p, dims)?);
+        }
+        inputs.push(Self::literal(
+            x,
+            &[entry.batch as i64, entry.length as i64, d_in as i64],
+        )?);
+        inputs.push(Self::literal(y, &[entry.batch as i64])?);
+        inputs.push(xla::Literal::scalar(lr));
+        let outs = Self::run(&exe, &inputs)?;
+        anyhow::ensure!(outs.len() == 7, "expected 7 outputs, got {}", outs.len());
+        for (p, o) in params.iter_mut().zip(&outs[..6]) {
+            let v = o.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            anyhow::ensure!(v.len() == p.len(), "parameter shape changed");
+            p.copy_from_slice(&v);
+        }
+        let loss = outs[6]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(loss[0])
+    }
+}
+
+// Integration tests that need real artifacts live in rust/tests/.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_cpu_initialises() {
+        let engine = Engine::cpu().expect("PJRT CPU client");
+        assert!(!engine.platform().is_empty());
+        assert_eq!(engine.cache_size(), 0);
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(Engine::literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(Engine::literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).is_ok());
+    }
+}

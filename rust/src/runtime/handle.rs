@@ -1,0 +1,142 @@
+//! A `Send + Sync` handle to the PJRT engine.
+//!
+//! The `xla` crate's client and executables are `Rc`-based (not `Send`),
+//! so the engine lives on a dedicated dispatcher thread and the rest of
+//! the system talks to it through this handle. PJRT itself multithreads
+//! the actual computation internally; one dispatcher thread does not
+//! serialise the math, only the submissions.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use super::artifact::{ArtifactEntry, Registry};
+use super::engine::Engine;
+
+enum Job {
+    Forward {
+        entry: ArtifactEntry,
+        inputs: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Grad {
+        entry: ArtifactEntry,
+        paths: Vec<f32>,
+        cotangent: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Train {
+        entry: ArtifactEntry,
+        params: Vec<Vec<f32>>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        lr: f32,
+        reply: mpsc::Sender<anyhow::Result<(Vec<Vec<f32>>, f32)>>,
+    },
+    /// Pre-compile an artifact (warm the cache) and report success.
+    Warm { entry: ArtifactEntry, reply: mpsc::Sender<anyhow::Result<()>> },
+}
+
+/// Cloneable, thread-safe handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Job>,
+    platform: String,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread: creates the PJRT CPU client and loads the
+    /// registry there. Fails fast if either fails.
+    pub fn spawn(artifact_dir: PathBuf) -> anyhow::Result<(EngineHandle, Registry)> {
+        // Registry is plain data: parse it here so callers can route.
+        let registry = Registry::load(&artifact_dir)?;
+        let registry_for_thread = Registry::load(&artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<String>>();
+        std::thread::Builder::new()
+            .name("signax-engine".into())
+            .spawn(move || {
+                let engine = match Engine::cpu() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.platform()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let reg = registry_for_thread;
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Forward { entry, inputs, reply } => {
+                            let _ = reply.send(engine.run_forward(&reg, &entry, &inputs));
+                        }
+                        Job::Grad { entry, paths, cotangent, reply } => {
+                            let _ = reply.send(engine.run_grad(&reg, &entry, &paths, &cotangent));
+                        }
+                        Job::Train { entry, mut params, x, y, lr, reply } => {
+                            let res = engine
+                                .run_train_step(&reg, &entry, &mut params, &x, &y, lr)
+                                .map(|loss| (params, loss));
+                            let _ = reply.send(res);
+                        }
+                        Job::Warm { entry, reply } => {
+                            let _ = reply.send(engine.executable(&reg, &entry).map(|_| ()));
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawn engine thread: {e}"))?;
+        let platform = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during init"))??;
+        Ok((EngineHandle { tx, platform }, registry))
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    fn send_and_wait<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<anyhow::Result<T>>) -> Job,
+    ) -> anyhow::Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped reply"))?
+    }
+
+    /// Run a sig/logsig artifact on a full `(batch, L, d)` input.
+    pub fn forward(&self, entry: &ArtifactEntry, inputs: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        self.send_and_wait(|reply| Job::Forward { entry: entry.clone(), inputs, reply })
+    }
+
+    /// Run a siggrad artifact.
+    pub fn grad(
+        &self,
+        entry: &ArtifactEntry,
+        paths: Vec<f32>,
+        cotangent: Vec<f32>,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.send_and_wait(|reply| Job::Grad { entry: entry.clone(), paths, cotangent, reply })
+    }
+
+    /// Run the train-step artifact; returns updated params and the loss.
+    pub fn train_step(
+        &self,
+        entry: &ArtifactEntry,
+        params: Vec<Vec<f32>>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<Vec<f32>>, f32)> {
+        self.send_and_wait(|reply| Job::Train { entry: entry.clone(), params, x, y, lr, reply })
+    }
+
+    /// Compile an artifact ahead of use.
+    pub fn warm(&self, entry: &ArtifactEntry) -> anyhow::Result<()> {
+        self.send_and_wait(|reply| Job::Warm { entry: entry.clone(), reply })
+    }
+}

@@ -1,0 +1,23 @@
+//! The accelerator runtime: loads AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them on a PJRT client via the
+//! `xla` crate. This is the reproduction's analogue of Signatory's GPU
+//! backend (§5.2): the same HLO would run unchanged on a TPU PJRT plugin.
+//!
+//! - [`artifact`] — the artifact registry (parses `artifacts/MANIFEST.json`).
+//! - [`engine`] — PJRT client wrapper with a compile cache and typed
+//!   entry points for each artifact kind (sig / siggrad / logsig / train).
+
+pub mod artifact;
+pub mod engine;
+pub mod handle;
+
+pub use artifact::{ArtifactEntry, ArtifactKind, Registry};
+pub use engine::Engine;
+pub use handle::EngineHandle;
+
+/// Default artifact directory, relative to the repo root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // Resolve relative to the executable's cwd; the CLI lets callers
+    // override with --artifacts.
+    std::path::PathBuf::from("artifacts")
+}

@@ -1,0 +1,414 @@
+//! Handwritten backward pass through the signature transform (§5.3,
+//! App. C), exploiting **reversibility**:
+//!
+//! `Sig(x_1..x_{L-1}) = Sig(x_1..x_L) ⊠ Sig(x_L, x_{L-1}) = S_L ⊠ exp(-z_{L-1})`
+//!
+//! so the intermediate prefix signatures needed by the backward pass are
+//! *recomputed in reverse order* from the final signature instead of being
+//! stored — O(1) retained signatures instead of O(L) (App. C.1; the adjoint
+//! method, exact here because the path is piecewise affine). Each reverse
+//! step reuses the same fused multiply-exponentiate as the forward pass.
+//!
+//! As in the paper (App. C.3), backpropagation is serial over the stream
+//! (reversibility forfeits the reduction tree) and parallel over the batch.
+
+use super::SigConfig;
+use crate::ta::fused::{fused_mexp, fused_mexp_vjp};
+use crate::ta::{SigSpec, Workspace};
+
+/// Result of a signature VJP.
+#[derive(Clone, Debug)]
+pub struct SigVjpResult {
+    /// `∂L/∂path`, shape `(stream, d)` matching the input path buffer.
+    pub grad_path: Vec<f32>,
+    /// `∂L/∂basepoint` if a basepoint was configured.
+    pub grad_basepoint: Option<Vec<f32>>,
+    /// `∂L/∂initial` if an initial signature was configured.
+    pub grad_initial: Option<Vec<f32>>,
+}
+
+/// Core reverse sweep over an *effective* point sequence.
+///
+/// `final_sig` must be the forward output `initial ⊠ Sig(points)`. Returns
+/// `(grad_points (E,d), grad_initial)`; `grad_initial` is the cotangent
+/// remaining on the state after unwinding every increment.
+fn reverse_sweep<'a>(
+    spec: &SigSpec,
+    n_points: usize,
+    point: impl Fn(usize) -> &'a [f32],
+    final_sig: &[f32],
+    g: &[f32],
+    ws: &mut Workspace,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = spec.d();
+    let mut grad_points = vec![0.0f32; n_points * d];
+    let mut s_cur = final_sig.to_vec();
+    let mut g_state = g.to_vec();
+    let mut z = vec![0.0f32; d];
+    let mut neg_z = vec![0.0f32; d];
+    let mut gz = vec![0.0f32; d];
+    let mut g_prev = spec.zeros();
+    for i in (1..n_points).rev() {
+        let prev = point(i - 1);
+        let cur = point(i);
+        for c in 0..d {
+            z[c] = cur[c] - prev[c];
+            neg_z[c] = -z[c];
+        }
+        // Reversibility: recover S_{i-1} = S_i ⊠ exp(-z_i)  (eq. 18).
+        fused_mexp(spec, &mut s_cur, &neg_z, ws);
+        // VJP through S_i = S_{i-1} ⊠ exp(z_i).
+        g_prev.fill(0.0);
+        gz.fill(0.0);
+        fused_mexp_vjp(spec, &s_cur, &z, &g_state, &mut g_prev, &mut gz, ws);
+        std::mem::swap(&mut g_state, &mut g_prev);
+        for c in 0..d {
+            grad_points[i * d + c] += gz[c];
+            grad_points[(i - 1) * d + c] -= gz[c];
+        }
+    }
+    (grad_points, g_state)
+}
+
+/// VJP of [`super::signature`]: given `g = ∂L/∂Sig(path)`, returns
+/// `∂L/∂path` (same shape as `path`).
+pub fn signature_vjp(path: &[f32], stream: usize, spec: &SigSpec, g: &[f32]) -> Vec<f32> {
+    signature_vjp_with(path, stream, spec, &SigConfig::serial(), g)
+        .expect("valid path")
+        .grad_path
+}
+
+/// VJP of [`super::signature_with`] honouring basepoint / initial /
+/// inverse. Recomputes the forward pass internally (one O(L) fused sweep).
+pub fn signature_vjp_with(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    cfg: &SigConfig,
+    g: &[f32],
+) -> anyhow::Result<SigVjpResult> {
+    anyhow::ensure!(g.len() == spec.sig_len(), "cotangent has wrong length");
+    let d = spec.d();
+    let eff_len = cfg.effective_len(stream);
+    // Forward (serial; cfg.threads only accelerates forward-only calls —
+    // see App. C.3 on why backward is not stream-parallel).
+    let forward_cfg = SigConfig { threads: 1, ..cfg.clone() };
+    let final_sig = super::forward::signature_with(path, stream, spec, &forward_cfg)?;
+
+    let point = |i: usize| -> &[f32] {
+        let i = if cfg.inverse { eff_len - 1 - i } else { i };
+        match &cfg.basepoint {
+            Some(bp) => {
+                if i == 0 {
+                    bp.as_slice()
+                } else {
+                    &path[(i - 1) * d..i * d]
+                }
+            }
+            None => &path[i * d..(i + 1) * d],
+        }
+    };
+    let mut ws = Workspace::new(spec);
+    let (grad_eff, g_initial) = reverse_sweep(spec, eff_len, point, &final_sig, g, &mut ws);
+
+    // Undo the effective-point mapping: reversal then basepoint.
+    let unreversed: Vec<f32> = if cfg.inverse {
+        let mut v = vec![0.0f32; eff_len * d];
+        for i in 0..eff_len {
+            v[(eff_len - 1 - i) * d..(eff_len - i) * d]
+                .copy_from_slice(&grad_eff[i * d..(i + 1) * d]);
+        }
+        v
+    } else {
+        grad_eff
+    };
+    let (grad_basepoint, grad_path) = match &cfg.basepoint {
+        Some(_) => (Some(unreversed[..d].to_vec()), unreversed[d..].to_vec()),
+        None => (None, unreversed),
+    };
+    let grad_initial = cfg.initial.as_ref().map(|_| g_initial);
+    Ok(SigVjpResult { grad_path, grad_basepoint, grad_initial })
+}
+
+/// VJP of [`super::signature_stream`]: `g` has shape
+/// `(stream - 1, sig_len)` — a cotangent for every prefix signature.
+///
+/// Cotangents are *accumulated* onto the running state as the reverse sweep
+/// passes each prefix, so the cost stays one fused VJP per increment.
+pub fn signature_stream_vjp(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    g: &[f32],
+) -> anyhow::Result<Vec<f32>> {
+    let d = spec.d();
+    let len = spec.sig_len();
+    anyhow::ensure!(stream >= 2, "need at least two points");
+    anyhow::ensure!(path.len() == stream * d, "path buffer wrong length");
+    anyhow::ensure!(g.len() == (stream - 1) * len, "cotangent wrong shape");
+    let final_sig = super::forward::signature(path, stream, spec);
+    let mut ws = Workspace::new(spec);
+    let mut grad_path = vec![0.0f32; stream * d];
+    let mut s_cur = final_sig;
+    let mut g_state = vec![0.0f32; len];
+    let mut z = vec![0.0f32; d];
+    let mut neg_z = vec![0.0f32; d];
+    let mut gz = vec![0.0f32; d];
+    let mut g_prev = spec.zeros();
+    for i in (1..stream).rev() {
+        // Prefix signature S_i (ending at point i) has cotangent g[i-1].
+        for (acc, &gv) in g_state.iter_mut().zip(&g[(i - 1) * len..i * len]) {
+            *acc += gv;
+        }
+        for c in 0..d {
+            z[c] = path[i * d + c] - path[(i - 1) * d + c];
+            neg_z[c] = -z[c];
+        }
+        fused_mexp(spec, &mut s_cur, &neg_z, &mut ws);
+        g_prev.fill(0.0);
+        gz.fill(0.0);
+        fused_mexp_vjp(spec, &s_cur, &z, &g_state, &mut g_prev, &mut gz, &mut ws);
+        std::mem::swap(&mut g_state, &mut g_prev);
+        for c in 0..d {
+            grad_path[i * d + c] += gz[c];
+            grad_path[(i - 1) * d + c] -= gz[c];
+        }
+    }
+    Ok(grad_path)
+}
+
+/// Batched VJP, parallel over the batch dimension (App. C.3).
+pub fn signature_batch_vjp(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    g: &[f32],
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let len = spec.sig_len();
+    let plen = stream * spec.d();
+    anyhow::ensure!(paths.len() == batch * plen, "batch buffer wrong length");
+    anyhow::ensure!(g.len() == batch * len, "cotangent wrong shape");
+    let grads = crate::substrate::pool::parallel_map_indexed(batch, threads, |b| {
+        signature_vjp(&paths[b * plen..(b + 1) * plen], stream, spec, &g[b * len..(b + 1) * len])
+    });
+    let mut out = vec![0.0f32; batch * plen];
+    for (b, gp) in grads.into_iter().enumerate() {
+        out[b * plen..(b + 1) * plen].copy_from_slice(&gp);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signature::forward::{signature, signature_stream, signature_with};
+    use crate::substrate::propcheck::property;
+    use crate::substrate::rng::Rng;
+
+    fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    fn fd_grad<F>(path: &[f32], g: &[f32], f: F, h: f32) -> Vec<f32>
+    where
+        F: Fn(&[f32]) -> Vec<f32>,
+    {
+        let mut grad = vec![0.0f32; path.len()];
+        for i in 0..path.len() {
+            let mut pp = path.to_vec();
+            pp[i] += h;
+            let mut pm = path.to_vec();
+            pm[i] -= h;
+            grad[i] = f(&pp)
+                .iter()
+                .zip(f(&pm).iter())
+                .zip(g)
+                .map(|((&a, &b), &gv)| (a - b) / (2.0 * h) * gv)
+                .sum();
+        }
+        grad
+    }
+
+    fn check_grads(got: &[f32], fd: &[f32], tol: f32) {
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - fd[i]).abs() <= tol * (1.0 + fd[i].abs()),
+                "grad[{i}]: vjp={} fd={}",
+                got[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        property("signature vjp fd", 6, |gen| {
+            let d = gen.usize_in(1, 3);
+            let n = gen.usize_in(1, 4);
+            let stream = gen.usize_in(2, 8);
+            gen.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(gen.rng(), stream, d);
+            let g = gen.normal_vec(spec.sig_len(), 1.0);
+            let grad = signature_vjp(&path, stream, &spec, &g);
+            let fd = fd_grad(&path, &g, |p| signature(p, stream, &spec), 1e-2);
+            check_grads(&grad, &fd, 4e-2);
+        });
+    }
+
+    #[test]
+    fn stream_vjp_matches_finite_differences() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(55);
+        let stream = 6;
+        let path = random_path(&mut rng, stream, 2);
+        let g = rng.normal_vec((stream - 1) * spec.sig_len(), 1.0);
+        let grad = signature_stream_vjp(&path, stream, &spec, &g).unwrap();
+        let fd = fd_grad(&path, &g, |p| signature_stream(p, stream, &spec), 1e-2);
+        check_grads(&grad, &fd, 4e-2);
+    }
+
+    #[test]
+    fn vjp_with_basepoint_and_initial() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(10);
+        let stream = 5;
+        let path = random_path(&mut rng, stream, 2);
+        let bp = vec![0.1f32, -0.2];
+        let init_path = random_path(&mut rng, 4, 2);
+        let init = signature(&init_path, 4, &spec);
+        let cfg = SigConfig {
+            basepoint: Some(bp.clone()),
+            initial: Some(init.clone()),
+            ..SigConfig::serial()
+        };
+        let g = rng.normal_vec(spec.sig_len(), 1.0);
+        let res = signature_vjp_with(&path, stream, &spec, &cfg, &g).unwrap();
+        assert_eq!(res.grad_path.len(), path.len());
+        let gb = res.grad_basepoint.unwrap();
+        assert_eq!(gb.len(), 2);
+        let gi = res.grad_initial.unwrap();
+        assert_eq!(gi.len(), spec.sig_len());
+
+        // FD check on the path.
+        let f = |p: &[f32]| signature_with(p, stream, &spec, &cfg).unwrap();
+        let fd = fd_grad(&path, &g, f, 1e-2);
+        check_grads(&res.grad_path, &fd, 5e-2);
+        // FD check on the basepoint.
+        let fb = |b: &[f32]| {
+            let c = SigConfig { basepoint: Some(b.to_vec()), initial: Some(init.clone()), ..SigConfig::serial() };
+            signature_with(&path, stream, &spec, &c).unwrap()
+        };
+        let fd_b = fd_grad(&bp, &g, fb, 1e-2);
+        check_grads(&gb, &fd_b, 5e-2);
+        // FD check on the initial signature.
+        let fi = |iv: &[f32]| {
+            let c = SigConfig { basepoint: Some(bp.clone()), initial: Some(iv.to_vec()), ..SigConfig::serial() };
+            signature_with(&path, stream, &spec, &c).unwrap()
+        };
+        let fd_i = fd_grad(&init, &g, fi, 1e-2);
+        check_grads(&gi, &fd_i, 5e-2);
+    }
+
+    #[test]
+    fn vjp_inverse_mode() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(12);
+        let stream = 5;
+        let path = random_path(&mut rng, stream, 2);
+        let cfg = SigConfig { inverse: true, ..SigConfig::serial() };
+        let g = rng.normal_vec(spec.sig_len(), 1.0);
+        let res = signature_vjp_with(&path, stream, &spec, &cfg, &g).unwrap();
+        let f = |p: &[f32]| signature_with(p, stream, &spec, &cfg).unwrap();
+        let fd = fd_grad(&path, &g, f, 1e-2);
+        check_grads(&res.grad_path, &fd, 5e-2);
+    }
+
+    #[test]
+    fn gradient_of_first_level_is_endpoint_difference() {
+        // d/dx of Sig level 1 = x_L - x_1: cotangent e_c on level 1 puts
+        // +1 on x_L[c] and -1 on x_1[c].
+        let spec = SigSpec::new(3, 2).unwrap();
+        let mut rng = Rng::new(2);
+        let stream = 7;
+        let path = random_path(&mut rng, stream, 3);
+        let mut g = vec![0.0f32; spec.sig_len()];
+        g[1] = 1.0; // level-1 channel 1
+        let grad = signature_vjp(&path, stream, &spec, &g);
+        for i in 0..stream {
+            for c in 0..3 {
+                let expect = if i == 0 && c == 1 {
+                    -1.0
+                } else if i == stream - 1 && c == 1 {
+                    1.0
+                } else {
+                    0.0
+                };
+                assert!(
+                    (grad[i * 3 + c] - expect).abs() < 1e-4,
+                    "grad[{i},{c}] = {}",
+                    grad[i * 3 + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_vjp_matches_per_sample() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(77);
+        let (b, stream) = (4, 6);
+        let mut paths = vec![0.0f32; b * stream * 2];
+        for i in 0..b {
+            let p = random_path(&mut rng, stream, 2);
+            paths[i * stream * 2..(i + 1) * stream * 2].copy_from_slice(&p);
+        }
+        let g = rng.normal_vec(b * spec.sig_len(), 1.0);
+        let out = signature_batch_vjp(&paths, b, stream, &spec, &g, 3).unwrap();
+        for i in 0..b {
+            let single = signature_vjp(
+                &paths[i * stream * 2..(i + 1) * stream * 2],
+                stream,
+                &spec,
+                &g[i * spec.sig_len()..(i + 1) * spec.sig_len()],
+            );
+            for (a, e) in out[i * stream * 2..(i + 1) * stream * 2].iter().zip(&single) {
+                assert_eq!(a, e);
+            }
+        }
+    }
+
+    #[test]
+    fn reversibility_reconstruction_is_accurate() {
+        // The reverse sweep must recover early prefix signatures to high
+        // accuracy even over longer streams (App. C.1: solved exactly, no
+        // ODE-style reconstruction error; only f32 roundoff).
+        let spec = SigSpec::new(3, 4).unwrap();
+        let mut rng = Rng::new(5);
+        let stream = 128;
+        let path = random_path(&mut rng, stream, 3);
+        // Forward final.
+        let final_sig = signature(&path, stream, &spec);
+        // Unwind all the way back: should recover the identity.
+        let mut ws = Workspace::new(&spec);
+        let mut s = final_sig;
+        let mut neg_z = vec![0.0f32; 3];
+        for i in (1..stream).rev() {
+            for c in 0..3 {
+                neg_z[c] = path[(i - 1) * 3 + c] - path[i * 3 + c];
+            }
+            fused_mexp(&spec, &mut s, &neg_z, &mut ws);
+        }
+        for (idx, &v) in s.iter().enumerate() {
+            assert!(v.abs() < 2e-3, "residual {v} at {idx}");
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Combining signatures over adjacent intervals (§5.5): Chen's identity
+//! lets `Sig(x_1..x_L)` be assembled from already-computed piece signatures
+//! with single ⊠ operations, without re-iterating over the data. These are
+//! Signatory's `signature_combine` / `multi_signature_combine`, with
+//! handwritten VJPs.
+
+use crate::ta::mul::{mul, mul_assign, mul_vjp};
+use crate::ta::SigSpec;
+
+/// `Sig(left interval) ⊠ Sig(right interval)` — eq. (2) applied to two
+/// adjacent intervals.
+pub fn signature_combine(spec: &SigSpec, sig1: &[f32], sig2: &[f32]) -> Vec<f32> {
+    mul(spec, sig1, sig2)
+}
+
+/// VJP of [`signature_combine`]: accumulates into `g1`, `g2`.
+pub fn signature_combine_vjp(
+    spec: &SigSpec,
+    sig1: &[f32],
+    sig2: &[f32],
+    g: &[f32],
+    g1: &mut [f32],
+    g2: &mut [f32],
+) {
+    mul_vjp(spec, sig1, sig2, g, g1, g2);
+}
+
+/// Combine many adjacent-interval signatures `(count, sig_len)` in order.
+/// `threads > 1` uses an associative tree reduction.
+pub fn multi_signature_combine(
+    spec: &SigSpec,
+    sigs: &[f32],
+    count: usize,
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let len = spec.sig_len();
+    anyhow::ensure!(count >= 1, "need at least one signature");
+    anyhow::ensure!(sigs.len() == count * len, "buffer has wrong length");
+    if threads > 1 && count > 2 {
+        return Ok(crate::parallel::tree_combine(spec, sigs, count, threads));
+    }
+    let mut acc = sigs[..len].to_vec();
+    for i in 1..count {
+        mul_assign(spec, &mut acc, &sigs[i * len..(i + 1) * len]);
+    }
+    Ok(acc)
+}
+
+/// VJP of [`multi_signature_combine`]: returns gradients with respect to
+/// every input signature, shape `(count, sig_len)`.
+///
+/// Stores the forward prefix products (`count` signatures — combine counts
+/// are small, unlike stream lengths, so storing is the right trade here).
+pub fn multi_signature_combine_vjp(
+    spec: &SigSpec,
+    sigs: &[f32],
+    count: usize,
+    g: &[f32],
+) -> anyhow::Result<Vec<f32>> {
+    let len = spec.sig_len();
+    anyhow::ensure!(count >= 1 && sigs.len() == count * len, "bad shapes");
+    anyhow::ensure!(g.len() == len, "cotangent wrong length");
+    if count == 1 {
+        return Ok(g.to_vec());
+    }
+    // Forward prefixes: P_i = s_0 ⊠ ... ⊠ s_i, for i = 0..count-2 needed.
+    let mut prefixes: Vec<Vec<f32>> = Vec::with_capacity(count - 1);
+    let mut acc = sigs[..len].to_vec();
+    prefixes.push(acc.clone());
+    for i in 1..count - 1 {
+        mul_assign(spec, &mut acc, &sigs[i * len..(i + 1) * len]);
+        prefixes.push(acc.clone());
+    }
+    // Backward: out = P_{count-2} ⊠ s_{count-1}; unwind right-to-left.
+    let mut grads = vec![0.0f32; count * len];
+    let mut g_acc = g.to_vec();
+    for i in (1..count).rev() {
+        let left = &prefixes[i - 1];
+        let right = &sigs[i * len..(i + 1) * len];
+        let mut g_left = vec![0.0f32; len];
+        {
+            let g_right = &mut grads[i * len..(i + 1) * len];
+            mul_vjp(spec, left, right, &g_acc, &mut g_left, g_right);
+        }
+        g_acc = g_left;
+    }
+    grads[..len].copy_from_slice(&g_acc);
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signature::forward::signature;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::substrate::rng::Rng;
+
+    fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn combine_reconstructs_full_signature() {
+        property("combine == Chen", 20, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let pieces = g.usize_in(2, 5);
+            g.label(format!("d={d} n={n} pieces={pieces}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            // Build one path, split into `pieces` adjacent intervals
+            // sharing endpoints.
+            let seg_pts = 4usize;
+            let stream = pieces * (seg_pts - 1) + 1;
+            let path = random_path(g.rng(), stream, d);
+            let len = spec.sig_len();
+            let mut sigs = vec![0.0f32; pieces * len];
+            for p in 0..pieces {
+                let s = p * (seg_pts - 1);
+                let sub = &path[s * d..(s + seg_pts) * d];
+                sigs[p * len..(p + 1) * len].copy_from_slice(&signature(sub, seg_pts, &spec));
+            }
+            let combined = multi_signature_combine(&spec, &sigs, pieces, 1).unwrap();
+            let full = signature(&path, stream, &spec);
+            assert_close(&combined, &full, 2e-3, 1e-4);
+            // Tree-combine agrees.
+            let tree = multi_signature_combine(&spec, &sigs, pieces, 4).unwrap();
+            assert_close(&tree, &full, 2e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn combine_vjp_matches_finite_differences() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(31);
+        let len = spec.sig_len();
+        let count = 4;
+        let sigs = rng.normal_vec(count * len, 0.4);
+        let g = rng.normal_vec(len, 1.0);
+        let grads = multi_signature_combine_vjp(&spec, &sigs, count, &g).unwrap();
+        let h = 1e-2f32;
+        for i in 0..sigs.len() {
+            let mut sp = sigs.clone();
+            sp[i] += h;
+            let mut sm = sigs.clone();
+            sm[i] -= h;
+            let fp = multi_signature_combine(&spec, &sp, count, 1).unwrap();
+            let fm = multi_signature_combine(&spec, &sm, count, 1).unwrap();
+            let fd: f32 = fp
+                .iter()
+                .zip(&fm)
+                .zip(&g)
+                .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                .sum();
+            assert!(
+                (fd - grads[i]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "grad[{i}]: fd={fd} vjp={}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pairwise_vjp_consistency() {
+        // multi_signature_combine_vjp with count=2 equals
+        // signature_combine_vjp.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(9);
+        let len = spec.sig_len();
+        let s1 = rng.normal_vec(len, 0.5);
+        let s2 = rng.normal_vec(len, 0.5);
+        let g = rng.normal_vec(len, 1.0);
+        let mut both = s1.clone();
+        both.extend_from_slice(&s2);
+        let multi = multi_signature_combine_vjp(&spec, &both, 2, &g).unwrap();
+        let mut g1 = vec![0.0f32; len];
+        let mut g2 = vec![0.0f32; len];
+        signature_combine_vjp(&spec, &s1, &s2, &g, &mut g1, &mut g2);
+        assert_close(&multi[..len], &g1, 1e-6, 1e-7);
+        assert_close(&multi[len..], &g2, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn single_signature_combine_is_identity() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let sigs = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(multi_signature_combine(&spec, &sigs, 1, 1).unwrap(), sigs);
+        let g = vec![0.5f32; 6];
+        assert_eq!(multi_signature_combine_vjp(&spec, &sigs, 1, &g).unwrap(), g);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        assert!(multi_signature_combine(&spec, &[0.0; 5], 1, 1).is_err());
+        assert!(multi_signature_combine(&spec, &[], 0, 1).is_err());
+        assert!(multi_signature_combine_vjp(&spec, &[0.0; 6], 1, &[0.0; 2]).is_err());
+    }
+}

@@ -1,0 +1,422 @@
+//! Signature forward passes.
+//!
+//! The core loop is eq. (3) written as a reduction with respect to the
+//! fused multiply-exponentiate (§4.1, §5.1): one `exp` for the first
+//! increment, then one fused `⊠ exp` per remaining increment. Stream mode
+//! (§5.5 "expanding intervals") emits every prefix signature for free.
+//! Parallel mode splits the stream into chunks — ⊠ is associative — and
+//! combines chunk signatures (§5.1).
+
+use super::SigConfig;
+use crate::parallel;
+use crate::ta::exp::exp_into;
+use crate::ta::fused::fused_mexp;
+use crate::ta::inverse::inverse_into;
+use crate::ta::mul::mul_assign;
+use crate::ta::{SigSpec, Workspace};
+
+/// Validate a `(stream, d)` path buffer against the spec.
+fn check_path(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        path.len() == stream * spec.d(),
+        "path buffer has {} values, expected stream({}) * channels({})",
+        path.len(),
+        stream,
+        spec.d()
+    );
+    Ok(())
+}
+
+/// Serial signature of the increments `z_i = p_{i+1} - p_i` of a point
+/// view. `points(i)` must yield the i-th point as a slice of length d.
+/// Writes into `out` (which must be zeroed = identity, or hold `initial`).
+fn sig_of_points<'a>(
+    spec: &SigSpec,
+    n_points: usize,
+    points: impl Fn(usize) -> &'a [f32],
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let d = spec.d();
+    let mut z = vec![0.0f32; d];
+    for i in 1..n_points {
+        let prev = points(i - 1);
+        let cur = points(i);
+        for c in 0..d {
+            z[c] = cur[c] - prev[c];
+        }
+        fused_mexp(spec, out, &z, ws);
+    }
+}
+
+/// `Sig^N(path)` — the plain signature transform of one path of
+/// `stream >= 2` points in `R^d`. Panics on shape mismatch (use
+/// [`signature_with`] for a fallible, configurable version).
+pub fn signature(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+    signature_with(path, stream, spec, &SigConfig::serial()).expect("valid path")
+}
+
+/// Signature with full options (basepoint / initial / inverse / threads).
+pub fn signature_with(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    cfg: &SigConfig,
+) -> anyhow::Result<Vec<f32>> {
+    check_path(path, stream, spec)?;
+    let d = spec.d();
+    let eff_len = cfg.effective_len(stream);
+    anyhow::ensure!(
+        eff_len >= 2,
+        "a path must have at least two points (incl. basepoint) to define a signature, got {}",
+        eff_len
+    );
+    if let Some(bp) = &cfg.basepoint {
+        anyhow::ensure!(bp.len() == d, "basepoint has {} channels, expected {d}", bp.len());
+    }
+    if let Some(init) = &cfg.initial {
+        anyhow::ensure!(
+            init.len() == spec.sig_len(),
+            "initial signature has {} values, expected {}",
+            init.len(),
+            spec.sig_len()
+        );
+    }
+
+    // Materialise the effective point sequence accessor (with basepoint and
+    // possible reversal for the inverted signature, §5.4).
+    let point = |i: usize| -> &[f32] {
+        let i = if cfg.inverse { eff_len - 1 - i } else { i };
+        match &cfg.basepoint {
+            Some(bp) => {
+                if i == 0 {
+                    bp.as_slice()
+                } else {
+                    &path[(i - 1) * d..i * d]
+                }
+            }
+            None => &path[i * d..(i + 1) * d],
+        }
+    };
+
+    let mut out = match &cfg.initial {
+        Some(init) => init.clone(),
+        None => spec.zeros(),
+    };
+    let threads = cfg.threads.max(1);
+    if threads == 1 || eff_len < 16 {
+        let mut ws = Workspace::new(spec);
+        sig_of_points(spec, eff_len, point, &mut out, &mut ws);
+    } else {
+        let chunk_sig = parallel::reduce_signature(spec, eff_len, &point, threads);
+        mul_assign(spec, &mut out, &chunk_sig);
+    }
+    Ok(out)
+}
+
+/// Stream mode (§5.5 "expanding intervals"): returns the `(stream-1) *
+/// sig_len` buffer of prefix signatures
+/// `Sig(x_1..x_2), Sig(x_1..x_3), ..., Sig(x_1..x_L)`, computed in one
+/// O(L) sweep — all earlier signatures are byproducts of the last.
+pub fn signature_stream(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+    signature_stream_with(path, stream, spec, &SigConfig::serial()).expect("valid path")
+}
+
+/// Stream mode with options. `inverse` is not supported in stream mode
+/// (prefixes of the reversed path are suffixes of the original; use the
+/// `Path` class for arbitrary intervals instead) and returns an error.
+pub fn signature_stream_with(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    cfg: &SigConfig,
+) -> anyhow::Result<Vec<f32>> {
+    check_path(path, stream, spec)?;
+    anyhow::ensure!(!cfg.inverse, "stream mode does not support inverse; see Path");
+    let d = spec.d();
+    let eff_len = cfg.effective_len(stream);
+    anyhow::ensure!(eff_len >= 2, "need at least two points, got {eff_len}");
+    let point = |i: usize| -> &[f32] {
+        match &cfg.basepoint {
+            Some(bp) => {
+                if i == 0 {
+                    bp.as_slice()
+                } else {
+                    &path[(i - 1) * d..i * d]
+                }
+            }
+            None => &path[i * d..(i + 1) * d],
+        }
+    };
+    let len = spec.sig_len();
+    let n_out = eff_len - 1;
+    let mut out = vec![0.0f32; n_out * len];
+    let mut ws = Workspace::new(spec);
+    let mut cur = match &cfg.initial {
+        Some(init) => {
+            anyhow::ensure!(init.len() == len, "bad initial length");
+            init.clone()
+        }
+        None => spec.zeros(),
+    };
+    let mut z = vec![0.0f32; d];
+    for i in 1..eff_len {
+        let prev = point(i - 1);
+        let now = point(i);
+        for c in 0..d {
+            z[c] = now[c] - prev[c];
+        }
+        fused_mexp(spec, &mut cur, &z, &mut ws);
+        out[(i - 1) * len..i * len].copy_from_slice(&cur);
+    }
+    Ok(out)
+}
+
+/// Batched signature over a `(batch, stream, d)` buffer, parallel over the
+/// batch dimension (§5.1's first level of parallelism). Returns
+/// `(batch, sig_len)`.
+pub fn signature_batch(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        paths.len() == batch * stream * spec.d(),
+        "batch buffer has {} values, expected {}",
+        paths.len(),
+        batch * stream * spec.d()
+    );
+    let len = spec.sig_len();
+    let path_len = stream * spec.d();
+    let results = crate::substrate::pool::parallel_map_indexed(batch, threads, |b| {
+        signature(&paths[b * path_len..(b + 1) * path_len], stream, spec)
+    });
+    let mut out = vec![0.0f32; batch * len];
+    for (b, sig) in results.into_iter().enumerate() {
+        out[b * len..(b + 1) * len].copy_from_slice(&sig);
+    }
+    Ok(out)
+}
+
+/// The inverted signature as a standalone convenience (§5.4).
+pub fn inverted_signature(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+    let cfg = SigConfig { inverse: true, ..SigConfig::serial() };
+    signature_with(path, stream, spec, &cfg).expect("valid path")
+}
+
+/// Test/bench oracle: inverted signature via the generic group inverse
+/// rather than path reversal.
+pub fn inverted_signature_via_inverse(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+    let sig = signature(path, stream, spec);
+    let mut out = spec.zeros();
+    inverse_into(spec, &sig, &mut out);
+    out
+}
+
+/// Signature of a two-point path = exp of the increment (§2.2); exposed
+/// for tests and the Path class.
+pub fn two_point_signature(a: &[f32], b: &[f32], spec: &SigSpec) -> Vec<f32> {
+    let z: Vec<f32> = b.iter().zip(a).map(|(&x, &y)| x - y).collect();
+    let mut out = spec.zeros();
+    exp_into(spec, &z, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::substrate::rng::Rng;
+    use crate::ta::{exp, mul};
+
+    fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        // Brownian-ish increments keep signatures numerically tame.
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn two_point_path_is_exponential() {
+        let spec = SigSpec::new(3, 4).unwrap();
+        let path = [0.1f32, 0.2, 0.3, 1.1, 0.0, -0.3];
+        let sig = signature(&path, 2, &spec);
+        let z = [1.0f32, -0.2, -0.6];
+        assert_close(&sig, &exp(&spec, &z), 1e-5, 1e-7);
+    }
+
+    #[test]
+    fn chens_identity() {
+        // Sig(x_1..x_L) = Sig(x_1..x_j) ⊠ Sig(x_j..x_L)  (eq. 2).
+        property("Chen's identity", 30, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            let stream = g.usize_in(3, 20);
+            let j = g.usize_in(1, stream - 2); // split point (0-based)
+            g.label(format!("d={d} n={n} stream={stream} j={j}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let full = signature(&path, stream, &spec);
+            let left = signature(&path[..(j + 1) * d], j + 1, &spec);
+            let right = signature(&path[j * d..], stream - j, &spec);
+            assert_close(&mul(&spec, &left, &right), &full, 2e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn translation_invariance() {
+        // Signatures depend only on increments.
+        property("translation invariance", 20, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 12);
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let shift = g.normal_vec(d, 1.0);
+            let shifted: Vec<f32> = path
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v + shift[i % d])
+                .collect();
+            assert_close(
+                &signature(&shifted, stream, &spec),
+                &signature(&path, stream, &spec),
+                1e-4,
+                1e-5,
+            );
+        });
+    }
+
+    #[test]
+    fn reparameterisation_invariance() {
+        // Inserting a redundant midpoint on a straight segment changes
+        // nothing (Definition 4's choice of timestamps is immaterial).
+        let spec = SigSpec::new(2, 4).unwrap();
+        let path = [0.0f32, 0.0, 1.0, 2.0, 3.0, -1.0];
+        let sig = signature(&path, 3, &spec);
+        let with_mid = [0.0f32, 0.0, 0.5, 1.0, 1.0, 2.0, 3.0, -1.0];
+        let sig_mid = signature(&with_mid, 4, &spec);
+        assert_close(&sig_mid, &sig, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn stream_mode_matches_prefix_recomputation() {
+        property("stream == prefixes", 15, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 12);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let st = signature_stream(&path, stream, &spec);
+            let len = spec.sig_len();
+            for j in 2..=stream {
+                let direct = signature(&path[..j * d], j, &spec);
+                assert_close(&st[(j - 2) * len..(j - 1) * len], &direct, 1e-3, 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn basepoint_matches_explicit_prepend() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(21);
+        let path = random_path(&mut rng, 5, 2);
+        let bp = vec![0.25f32, -0.5];
+        let cfg = SigConfig { basepoint: Some(bp.clone()), ..SigConfig::serial() };
+        let with_bp = signature_with(&path, 5, &spec, &cfg).unwrap();
+        let mut prepended = bp;
+        prepended.extend_from_slice(&path);
+        assert_close(&with_bp, &signature(&prepended, 6, &spec), 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn initial_matches_combine() {
+        // signature(second_half, initial=Sig(first_half)) == Sig(whole):
+        // the "keeping the signature up-to-date" use (§5.5, eq. 7).
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(33);
+        let path = random_path(&mut rng, 10, 3);
+        let full = signature(&path, 10, &spec);
+        let first = signature(&path[..6 * 3], 6, &spec);
+        let cfg = SigConfig { initial: Some(first), ..SigConfig::serial() };
+        let resumed = signature_with(&path[5 * 3..], 5, &spec, &cfg).unwrap();
+        assert_close(&resumed, &full, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn inverse_equals_reversed_path() {
+        property("Sig^{-1} == Sig(reversed)", 15, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 10);
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let rev: Vec<f32> = (0..stream)
+                .rev()
+                .flat_map(|i| path[i * d..(i + 1) * d].to_vec())
+                .collect();
+            let cfg = SigConfig { inverse: true, ..SigConfig::serial() };
+            let inv = signature_with(&path, stream, &spec, &cfg).unwrap();
+            assert_close(&inv, &signature(&rev, stream, &spec), 1e-5, 1e-6);
+            // And it matches the algebraic group inverse (§5.4).
+            let via_algebra = inverted_signature_via_inverse(&path, stream, &spec);
+            assert_close(&inv, &via_algebra, 2e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        property("parallel == serial", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(17, 200);
+            let threads = g.usize_in(2, 6);
+            g.label(format!("d={d} n={n} stream={stream} t={threads}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let serial = signature(&path, stream, &spec);
+            let cfg = SigConfig::parallel(threads);
+            let par = signature_with(&path, stream, &spec, &cfg).unwrap();
+            assert_close(&par, &serial, 2e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn batch_matches_per_sample() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(8);
+        let (b, stream) = (5, 7);
+        let mut batchbuf = vec![0.0f32; b * stream * 2];
+        for i in 0..b {
+            let p = random_path(&mut rng, stream, 2);
+            batchbuf[i * stream * 2..(i + 1) * stream * 2].copy_from_slice(&p);
+        }
+        let out = signature_batch(&batchbuf, b, stream, &spec, 3).unwrap();
+        let len = spec.sig_len();
+        for i in 0..b {
+            let single = signature(&batchbuf[i * stream * 2..(i + 1) * stream * 2], stream, &spec);
+            assert_close(&out[i * len..(i + 1) * len], &single, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn errors_on_bad_shapes() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        assert!(signature_with(&[0.0; 5], 2, &spec, &SigConfig::serial()).is_err()); // wrong len
+        assert!(signature_with(&[0.0; 2], 1, &spec, &SigConfig::serial()).is_err()); // 1 point
+        let cfg = SigConfig { basepoint: Some(vec![0.0; 3]), ..SigConfig::serial() };
+        assert!(signature_with(&[0.0; 4], 2, &spec, &cfg).is_err()); // bad basepoint
+        let cfg = SigConfig { initial: Some(vec![0.0; 3]), ..SigConfig::serial() };
+        assert!(signature_with(&[0.0; 4], 2, &spec, &cfg).is_err()); // bad initial
+        // A single point plus basepoint is fine.
+        let cfg = SigConfig { basepoint: Some(vec![0.0; 2]), ..SigConfig::serial() };
+        assert!(signature_with(&[1.0, 2.0], 1, &spec, &cfg).is_ok());
+    }
+}

@@ -1,0 +1,64 @@
+//! The signature transform (§2) with every variant the paper's `signature`
+//! function provides (§5): stream mode, basepoint, initial condition,
+//! inversion, batch, CPU parallelism — plus the handwritten backward pass
+//! exploiting signature reversibility (§5.3, App. C) and the combine
+//! functions exploiting the group-like structure (§5.5).
+//!
+//! Paths are flat `[f32]` buffers of shape `(stream, channels)` row-major;
+//! batches are `(batch, stream, channels)`.
+
+pub mod backward;
+pub mod combine;
+pub mod forward;
+
+pub use backward::{signature_stream_vjp, signature_vjp, signature_vjp_with};
+pub use combine::{multi_signature_combine, signature_combine, signature_combine_vjp};
+pub use forward::{
+    signature, signature_batch, signature_stream, signature_stream_with, signature_with,
+};
+
+/// Options mirroring Signatory's `signature(...)` keyword arguments.
+#[derive(Clone, Debug, Default)]
+pub struct SigConfig {
+    /// Prepend this point to the path before computing (Signatory's
+    /// `basepoint`); `Some(vec![0.0; d])` reproduces `basepoint=True`.
+    pub basepoint: Option<Vec<f32>>,
+    /// Left-multiply the result by an existing signature (Signatory's
+    /// `initial`), used for "keeping the signature up-to-date" (§5.5).
+    pub initial: Option<Vec<f32>>,
+    /// Compute the inverted signature `Sig(x)^{-1} = Sig(reverse(x))`
+    /// (§5.4) instead.
+    pub inverse: bool,
+    /// Worker threads for the chunked ⊠-reduction over the stream (§5.1).
+    /// `1` = serial (the paper's "CPU no parallel" column).
+    pub threads: usize,
+}
+
+impl SigConfig {
+    pub fn serial() -> SigConfig {
+        SigConfig { threads: 1, ..Default::default() }
+    }
+
+    pub fn parallel(threads: usize) -> SigConfig {
+        SigConfig { threads, ..Default::default() }
+    }
+
+    /// Effective number of points the configured path has, including any
+    /// basepoint.
+    pub(crate) fn effective_len(&self, stream: usize) -> usize {
+        stream + usize::from(self.basepoint.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_effective_len() {
+        let mut c = SigConfig::serial();
+        assert_eq!(c.effective_len(10), 10);
+        c.basepoint = Some(vec![0.0, 0.0]);
+        assert_eq!(c.effective_len(10), 11);
+    }
+}

@@ -1,0 +1,293 @@
+//! Benchmark harness substrate.
+//!
+//! Reproduces the paper's measurement protocol (§6): "Every test case is
+//! repeated 50 times and the fastest time taken", plus richer statistics
+//! (median / mean / stddev) for our own §Perf iteration log. Criterion is
+//! not available offline, so this is the measurement core used both by the
+//! table harness (`signax tables`) and by `cargo bench`.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of timed runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub repeats: usize,
+    pub min: Duration,
+    pub max: Duration,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean_s = total.as_secs_f64() / n as f64;
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            repeats: n,
+            min: samples[0],
+            max: samples[n - 1],
+            mean: Duration::from_secs_f64(mean_s),
+            median: samples[n / 2],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+
+    /// The paper's headline number: fastest observed time, in seconds.
+    pub fn best_secs(&self) -> f64 {
+        self.min.as_secs_f64()
+    }
+}
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Untimed warmup iterations.
+    pub warmup: usize,
+    /// Timed repeats (paper uses 50).
+    pub repeats: usize,
+    /// Hard wall-clock budget; repeats stop early once exceeded (but at
+    /// least `min_repeats` are always taken).
+    pub budget: Duration,
+    pub min_repeats: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: 2,
+            repeats: 50,
+            budget: Duration::from_secs(20),
+            min_repeats: 3,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Scaled-down protocol for CI / quick runs.
+    pub fn quick() -> Self {
+        BenchConfig { warmup: 1, repeats: 5, budget: Duration::from_secs(3), min_repeats: 2 }
+    }
+}
+
+/// Time `f` under the given protocol. A `black_box`-style sink is the
+/// caller's responsibility: have `f` return/accumulate something observable.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(cfg.repeats);
+    for i in 0..cfg.repeats {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if i + 1 >= cfg.min_repeats && started.elapsed() > cfg.budget {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human format: seconds with 3 significant figures, like the paper tables.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "-".to_string();
+    }
+    if s == 0.0 {
+        return "0".to_string();
+    }
+    let digits = 3usize;
+    let mag = s.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec, s)
+}
+
+/// A row of a benchmark table: one column label -> best-time (or None where
+/// the implementation "does not support that operation", printed as a dash,
+/// like esig in the paper).
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub label: String,
+    pub cells: Vec<Option<f64>>,
+}
+
+/// A paper-style table: column headers + rows + derived ratio rows.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub col_name: String,
+    pub cols: Vec<String>,
+    pub rows: Vec<TableRow>,
+}
+
+impl Table {
+    pub fn new(title: &str, col_name: &str, cols: Vec<String>) -> Table {
+        Table { title: title.to_string(), col_name: col_name.to_string(), cols, rows: vec![] }
+    }
+
+    pub fn push_row(&mut self, label: &str, cells: Vec<Option<f64>>) {
+        assert_eq!(cells.len(), self.cols.len());
+        self.rows.push(TableRow { label: label.to_string(), cells });
+    }
+
+    /// Add "Ratio <target>" rows: baseline_time / target_time, mirroring the
+    /// paper's "Ratio CPU / Ratio GPU" rows (how many times faster than the
+    /// strongest competitor `baseline_label` each `target_label` is).
+    pub fn push_ratio_rows(&mut self, baseline_label: &str, target_labels: &[&str]) {
+        let base: Vec<Option<f64>> = self
+            .rows
+            .iter()
+            .find(|r| r.label == baseline_label)
+            .map(|r| r.cells.clone())
+            .unwrap_or_else(|| vec![None; self.cols.len()]);
+        let mut ratio_rows = vec![];
+        for &t in target_labels {
+            if let Some(tr) = self.rows.iter().find(|r| r.label == t) {
+                let cells: Vec<Option<f64>> = base
+                    .iter()
+                    .zip(&tr.cells)
+                    .map(|(b, v)| match (b, v) {
+                        (Some(b), Some(v)) if *v > 0.0 => Some(b / v),
+                        _ => None,
+                    })
+                    .collect();
+                ratio_rows.push(TableRow { label: format!("Ratio {t}"), cells });
+            }
+        }
+        self.rows.extend(ratio_rows);
+    }
+
+    /// Render in a paper-like fixed-width layout.
+    pub fn render(&self) -> String {
+        let mut width = self.col_name.len();
+        for r in &self.rows {
+            width = width.max(r.label.len());
+        }
+        let cell_w = 10usize;
+        let mut s = String::new();
+        s.push_str(&format!("## {}\n", self.title));
+        s.push_str(&format!("{:<width$}", self.col_name, width = width + 2));
+        for c in &self.cols {
+            s.push_str(&format!("{c:>cell_w$}"));
+        }
+        s.push('\n');
+        s.push_str(&"-".repeat(width + 2 + cell_w * self.cols.len()));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&format!("{:<width$}", r.label, width = width + 2));
+            for c in &r.cells {
+                match c {
+                    Some(v) => s.push_str(&format!("{:>cell_w$}", fmt_secs(*v))),
+                    None => s.push_str(&format!("{:>cell_w$}", "-")),
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// CSV form for `results/`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.col_name.to_string());
+        for c in &self.cols {
+            s.push(',');
+            s.push_str(c);
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.label.replace(',', ";"));
+            for c in &r.cells {
+                s.push(',');
+                if let Some(v) = c {
+                    s.push_str(&format!("{v}"));
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(10),
+            Duration::from_millis(30),
+            Duration::from_millis(20),
+        ]);
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+        assert_eq!(s.median, Duration::from_millis(20));
+        assert!((s.mean.as_secs_f64() - 0.020).abs() < 1e-9);
+        assert_eq!(s.repeats, 3);
+    }
+
+    #[test]
+    fn bench_counts_and_runs() {
+        let mut calls = 0;
+        let cfg = BenchConfig { warmup: 2, repeats: 5, budget: Duration::from_secs(60), min_repeats: 1 };
+        let st = bench(&cfg, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7); // 2 warmup + 5 timed
+        assert_eq!(st.repeats, 5);
+    }
+
+    #[test]
+    fn bench_budget_stops_early() {
+        let cfg = BenchConfig {
+            warmup: 0,
+            repeats: 1000,
+            budget: Duration::from_millis(30),
+            min_repeats: 2,
+        };
+        let st = bench(&cfg, || std::thread::sleep(Duration::from_millis(10)));
+        assert!(st.repeats >= 2 && st.repeats < 1000, "repeats={}", st.repeats);
+    }
+
+    #[test]
+    fn fmt_secs_sigfigs() {
+        assert_eq!(fmt_secs(20.9), "20.9");
+        assert_eq!(fmt_secs(0.00327), "0.00327");
+        assert_eq!(fmt_secs(0.16), "0.160");
+        assert_eq!(fmt_secs(f64::NAN), "-");
+    }
+
+    #[test]
+    fn table_render_and_ratio() {
+        let mut t = Table::new("demo", "Channels", vec!["2".into(), "3".into()]);
+        t.push_row("base", vec![Some(1.0), None]);
+        t.push_row("fast", vec![Some(0.25), Some(0.5)]);
+        t.push_ratio_rows("base", &["fast"]);
+        let r = t.render();
+        assert!(r.contains("Ratio fast"));
+        let ratio_row = t.rows.iter().find(|r| r.label == "Ratio fast").unwrap();
+        assert_eq!(ratio_row.cells[0], Some(4.0));
+        assert_eq!(ratio_row.cells[1], None);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("Channels,2,3\n"));
+    }
+}

@@ -1,0 +1,289 @@
+//! A small declarative command-line parser (no external crates offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Parse comma-separated integers, e.g. `--channels 2,3,4`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A subcommand with its option specs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: vec![] }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}", prog, self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = o.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            let _ = writeln!(s, "  --{}{}\n      {}", o.name, kind, o.help);
+        }
+        s
+    }
+
+    /// Parse raw tokens (after the subcommand name).
+    pub fn parse(&self, prog: &str, tokens: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage(prog));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage(prog)))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} is a flag and takes no value");
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        for o in &self.opts {
+            if !o.is_flag && args.get(o.name).is_none() {
+                match o.default {
+                    Some(d) => {
+                        args.values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => anyhow::bail!("missing required option --{}\n{}", o.name, self.usage(prog)),
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\nsubcommands:", self.prog, self.about);
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<14} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nrun `{} <subcommand> --help` for options", self.prog);
+        s
+    }
+
+    /// Dispatch: returns (subcommand name, parsed args).
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<(&Command, Args)> {
+        let Some(sub) = argv.first() else {
+            anyhow::bail!("{}", self.usage());
+        };
+        if sub == "--help" || sub == "-h" || sub == "help" {
+            anyhow::bail!("{}", self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == sub)
+            .ok_or_else(|| anyhow::anyhow!("unknown subcommand {sub:?}\n{}", self.usage()))?;
+        let args = cmd.parse(self.prog, &argv[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    fn demo_cmd() -> Command {
+        Command::new("run", "demo")
+            .opt("depth", "signature depth", "4")
+            .req("channels", "path channels")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_values_flags_defaults() {
+        let c = demo_cmd();
+        let a = c.parse("prog", &toks("--channels 3 --verbose")).unwrap();
+        assert_eq!(a.get_usize("depth", 0).unwrap(), 4);
+        assert_eq!(a.get_usize("channels", 0).unwrap(), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let c = demo_cmd();
+        let a = c.parse("prog", &toks("--channels=5 --depth=9")).unwrap();
+        assert_eq!(a.get_usize("channels", 0).unwrap(), 5);
+        assert_eq!(a.get_usize("depth", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let c = demo_cmd();
+        assert!(c.parse("prog", &toks("--depth 2")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let c = demo_cmd();
+        assert!(c.parse("prog", &toks("--channels 1 --nope 3")).is_err());
+    }
+
+    #[test]
+    fn bad_integer_errors() {
+        let c = demo_cmd();
+        let a = c.parse("prog", &toks("--channels x")).unwrap();
+        assert!(a.get_usize("channels", 0).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Command::new("t", "t").opt("channels", "", "2,3");
+        let a = c.parse("prog", &toks("")).unwrap();
+        assert_eq!(a.get_usize_list("channels", &[]).unwrap(), vec![2, 3]);
+        let a = c.parse("prog", &toks("--channels 4,5,6")).unwrap();
+        assert_eq!(a.get_usize_list("channels", &[]).unwrap(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn cli_dispatch() {
+        let cli = Cli {
+            prog: "signax",
+            about: "test",
+            commands: vec![demo_cmd(), Command::new("other", "x")],
+        };
+        let (cmd, args) = cli.parse(&toks("run --channels 2")).unwrap();
+        assert_eq!(cmd.name, "run");
+        assert_eq!(args.get_usize("channels", 0).unwrap(), 2);
+        assert!(cli.parse(&toks("zzz")).is_err());
+        assert!(cli.parse(&[]).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let c = Command::new("t", "t");
+        let a = c.parse("prog", &toks("alpha beta")).unwrap();
+        assert_eq!(a.positional(), &["alpha".to_string(), "beta".to_string()]);
+    }
+}

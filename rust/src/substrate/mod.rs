@@ -1,0 +1,23 @@
+//! Infrastructure substrates built from scratch.
+//!
+//! The build environment is fully offline with only the `xla` and `anyhow`
+//! crates vendored, so every piece of supporting infrastructure a project
+//! like this would normally pull from crates.io is implemented here:
+//!
+//! - [`rng`] — deterministic pseudo-random number generation
+//!   (SplitMix64 / xoshiro256++), normal variates, shuffles.
+//! - [`pool`] — a scoped-thread fork/join helper plus a long-lived worker
+//!   thread pool used by the coordinator.
+//! - [`cli`] — a small declarative command-line argument parser.
+//! - [`benchlib`] — a benchmark harness (warmup, repeats, min/median/mean,
+//!   the paper's "repeat 50 times, take the fastest" protocol).
+//! - [`propcheck`] — a miniature property-based testing framework.
+//! - [`json`] — a JSON parser/serializer for golden-file interchange with
+//!   the Python oracle and for results output.
+
+pub mod benchlib;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;

@@ -1,0 +1,307 @@
+//! Threading substrates: scoped fork/join helpers and a long-lived worker
+//! pool.
+//!
+//! The paper's CPU parallelism (§5.1) has two levels: naïve parallelism over
+//! the batch dimension, and a chunked parallel reduction over the stream
+//! dimension (since ⊠ is associative). Both are expressed with
+//! [`parallel_chunks`] / [`parallel_map_indexed`]; the coordinator's worker
+//! threads use [`WorkerPool`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Number of worker threads to use by default: the machine's parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `n` items into at most `threads` contiguous chunks of near-equal
+/// size. Returns (start, end) pairs; never returns empty chunks.
+pub fn chunk_ranges(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return vec![];
+    }
+    let t = threads.max(1).min(n);
+    let base = n / t;
+    let rem = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Run `f(chunk_index, start, end)` over near-equal chunks of `0..n` on up
+/// to `threads` scoped threads. `f` only gets shared access, so use interior
+/// mutability or per-chunk outputs; prefer [`parallel_map_indexed`] when
+/// each chunk produces a value.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 {
+        if let Some(&(s, e)) = ranges.first() {
+            f(0, s, e);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, &(s, e)) in ranges.iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, s, e));
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+/// Each item is processed exactly once; work is distributed dynamically via
+/// an atomic counter so uneven item costs still balance.
+pub fn parallel_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 || n <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..t {
+            let f = &f;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so no two threads write the same slot,
+                // and the scope guarantees the buffer outlives the threads.
+                unsafe { slots_ptr.write(i, Some(v)) };
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+}
+
+/// Mutably split a flat buffer of `n_items` items, each `item_len` long,
+/// into per-chunk sub-slices and process chunks in parallel.
+/// `f(chunk_index, first_item, items_slice)`.
+pub fn parallel_chunks_mut<T, F>(
+    buf: &mut [T],
+    item_len: usize,
+    threads: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(item_len > 0 && buf.len() % item_len == 0);
+    let n = buf.len() / item_len;
+    let ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 {
+        if let Some(&(s, e)) = ranges.first() {
+            f(0, s, &mut buf[s * item_len..e * item_len]);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = buf;
+        let mut consumed = 0usize;
+        for (i, &(s, e)) in ranges.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut((e - s) * item_len);
+            rest = tail;
+            debug_assert_eq!(consumed, s * item_len);
+            consumed += head.len();
+            let f = &f;
+            scope.spawn(move || f(i, s, head));
+        }
+    });
+}
+
+struct SendPtr<T>(*mut T);
+
+// Manual Clone/Copy: the derive would add an unwanted `T: Copy` bound.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// SAFETY: caller must guarantee `i` is in bounds and no other thread
+    /// accesses index `i` concurrently. Taking `&self` (a method, not field
+    /// access) ensures closures capture the whole Send wrapper rather than
+    /// the raw pointer field (edition-2021 disjoint capture).
+    unsafe fn write(&self, i: usize, v: T) {
+        unsafe { *self.0.add(i) = v };
+    }
+}
+// SAFETY: only used with disjoint index writes inside a thread scope.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived worker pool for the coordinator's background work
+/// (artifact compilation, batch execution). Jobs are closures; shutdown is
+/// graceful on drop.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
+            let h = std::thread::Builder::new()
+                .name(format!("signax-worker-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("pool rx lock");
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        Err(_) => break, // sender dropped: shut down
+                    }
+                })
+                .expect("spawn worker");
+            handles.push(h);
+        }
+        Self { tx: Some(tx), handles, queued }
+    }
+
+    /// Submit a job for execution on some worker.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("worker pool alive");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 16, 100, 101] {
+            for t in [1usize, 2, 3, 8, 200] {
+                let rs = chunk_ranges(n, t);
+                let mut pos = 0;
+                for &(s, e) in &rs {
+                    assert_eq!(s, pos);
+                    assert!(e > s, "no empty chunks");
+                    pos = e;
+                }
+                assert_eq!(pos, n);
+                assert!(rs.len() <= t.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_balanced() {
+        let rs = chunk_ranges(10, 3);
+        let sizes: Vec<usize> = rs.iter().map(|&(s, e)| e - s).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn parallel_chunks_visits_all() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(1000, 4, |_i, s, e| {
+            let local: u64 = (s..e).map(|x| x as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let par = parallel_map_indexed(257, 8, |i| i * i);
+        let ser: Vec<usize> = (0..257).map(|i| i * i).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn parallel_map_single_thread_and_empty() {
+        assert_eq!(parallel_map_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map_indexed(3, 1, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_disjoint_writes() {
+        let mut buf = vec![0u32; 12 * 5];
+        parallel_chunks_mut(&mut buf, 5, 4, |_c, first, items| {
+            for (k, item) in items.chunks_mut(5).enumerate() {
+                for v in item.iter_mut() {
+                    *v = (first + k) as u32;
+                }
+            }
+        });
+        for (i, item) in buf.chunks(5).enumerate() {
+            assert!(item.iter().all(|&v| v == i as u32));
+        }
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs_and_drains() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        // Drop waits for queue drain via channel close + join.
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+}

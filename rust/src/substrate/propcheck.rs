@@ -1,0 +1,193 @@
+//! A miniature property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Usage:
+//! ```no_run
+//! use signax::substrate::propcheck::{property, Gen};
+//! property("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     g.label(format!("a={a} b={b}"));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case runs with a fresh deterministic generator; on failure the case
+//! index, seed and the last `label` are reported so the exact case can be
+//! replayed by seeding `Gen::replay`.
+
+use crate::substrate::rng::Rng;
+
+/// Case-local generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+    pub seed: u64,
+    label: String,
+}
+
+impl Gen {
+    /// Recreate the generator for a reported failing case.
+    pub fn replay(seed: u64, case: usize) -> Gen {
+        Gen { rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)), case, seed, label: String::new() }
+    }
+
+    /// Attach a human-readable description of the drawn case, shown on
+    /// failure.
+    pub fn label(&mut self, s: String) {
+        self.label = s;
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.in_range(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, scale)
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` on `cases` deterministic pseudo-random cases. Panics (failing
+/// the enclosing test) with replay info if any case panics.
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    property_seeded(name, 0x5167_4E41_5458_0001, cases, prop)
+}
+
+/// Like [`property`] but with an explicit base seed (for replaying).
+pub fn property_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    prop: F,
+) {
+    for case in 0..cases {
+        let mut g = Gen::replay(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed={seed:#x})\n  case: {}\n  cause: {msg}\n  replay with Gen::replay({seed:#x}, {case})",
+                if g.label.is_empty() { "<unlabelled>" } else { &g.label },
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are close: `|a-b| <= atol + rtol * |b|` elementwise.
+/// Reports the worst offending index on failure.
+#[track_caller]
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    let mut worst = (0usize, 0.0f32, 0.0f32);
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        let err = (x - y).abs();
+        if err > tol && err - tol > worst.1 {
+            worst = (i, err - tol, err);
+        }
+        assert!(
+            x.is_finite() && y.is_finite(),
+            "non-finite at index {i}: a={x} b={y}"
+        );
+    }
+    if worst.2 > 0.0 {
+        let i = worst.0;
+        panic!(
+            "arrays differ at index {i}: a={} b={} (abs err {}, rtol={rtol}, atol={atol})",
+            a[i], b[i], worst.2
+        );
+    }
+}
+
+/// Relative L2 error between two vectors (0 for identical).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x as f64 - y as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("xor involutive", 64, |g| {
+            let a = g.usize_in(0, 1 << 20);
+            let b = g.usize_in(0, 1 << 20);
+            assert_eq!(a ^ b ^ b, a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports() {
+        let r = std::panic::catch_unwind(|| {
+            property("always fails", 3, |g| {
+                g.label("doomed".into());
+                assert!(false, "nope");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("should have failed"),
+        };
+        assert!(msg.contains("case 0/3"), "{msg}");
+        assert!(msg.contains("doomed"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut g1 = Gen::replay(99, 5);
+        let mut g2 = Gen::replay(99, 5);
+        for _ in 0..16 {
+            assert_eq!(g1.usize_in(0, 1000), g2.usize_in(0, 1000));
+        }
+        // Different cases draw differently.
+        let mut g3 = Gen::replay(99, 6);
+        let same = (0..16)
+            .filter(|_| Gen::replay(99, 5).usize_in(0, usize::MAX - 1) == g3.usize_in(0, usize::MAX - 1))
+            .count();
+        assert!(same < 16);
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-6, 2.0], 1e-4, 1e-6);
+        let r = std::panic::catch_unwind(|| assert_close(&[1.0], &[1.2], 1e-3, 1e-3));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rel_l2_zero_for_identical() {
+        let v = [1.0f32, -2.0, 3.0];
+        assert_eq!(rel_l2(&v, &v), 0.0);
+        assert!(rel_l2(&[1.0], &[2.0]) > 0.1);
+    }
+}

@@ -1,0 +1,174 @@
+//! The tensor exponential `exp(z) = (z, z^⊗2/2!, ..., z^⊗N/N!)` (§2.2) and
+//! its handwritten VJP.
+//!
+//! `exp` is the signature of a single linear segment with increment `z`
+//! (`Sig((x1, x2)) = exp(x2 - x1)`), so it is both the base case of every
+//! signature computation and the reference the fused operation is checked
+//! against.
+
+use super::mul::{contract_left_add, contract_right_add};
+use super::SigSpec;
+
+/// `out = exp(z)` where `z` has `spec.d()` entries.
+pub fn exp_into(spec: &SigSpec, z: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(z.len(), spec.d());
+    debug_assert_eq!(out.len(), spec.sig_len());
+    let d = spec.d();
+    out[..d].copy_from_slice(z);
+    for k in 2..=spec.depth() {
+        let inv_k = 1.0 / k as f32;
+        let (lo, hi) = out.split_at_mut(spec.off(k));
+        let prev = &lo[spec.off(k - 1)..];
+        let dst = &mut hi[..spec.level_len(k)];
+        // E_k = E_{k-1} ⊗ (z / k)
+        for (p, &ep) in prev.iter().enumerate() {
+            let row = &mut dst[p * d..(p + 1) * d];
+            for (q, &zq) in z.iter().enumerate() {
+                row[q] = ep * zq * inv_k;
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`exp_into`].
+pub fn exp(spec: &SigSpec, z: &[f32]) -> Vec<f32> {
+    let mut out = spec.zeros();
+    exp_into(spec, z, &mut out);
+    out
+}
+
+/// VJP of `E = exp(z)`: accumulates `∂L/∂z` into `gz` given `g = ∂L/∂E`.
+///
+/// Recomputes the forward levels internally (they are cheap relative to the
+/// contractions) so no forward state needs to be retained — consistent with
+/// the library-wide reversibility strategy (App. C).
+pub fn exp_vjp(spec: &SigSpec, z: &[f32], g: &[f32], gz: &mut [f32]) {
+    let d = spec.d();
+    let n = spec.depth();
+    debug_assert_eq!(gz.len(), d);
+    // Recompute E (forward).
+    let e = exp(spec, z);
+    // gE is built top-down: gE_N = g_N; gE_{k-1} = g_{k-1} + contraction of
+    // gE_k with z/k (since E_k = E_{k-1} ⊗ z/k).
+    let mut ge_k: Vec<f32> = spec.level(g, n).to_vec();
+    for k in (2..=n).rev() {
+        let inv_k = 1.0 / k as f32;
+        let e_prev = spec.level(&e, k - 1);
+        // gz[q] += Σ_p gE_k[p,q] * E_{k-1}[p] / k
+        let mut gz_part = vec![0.0f32; d];
+        contract_left_add(&ge_k, e_prev, &mut gz_part);
+        for (o, v) in gz.iter_mut().zip(&gz_part) {
+            *o += v * inv_k;
+        }
+        // gE_{k-1}[p] = g_{k-1}[p] + Σ_q gE_k[p,q] * z[q] / k
+        let mut ge_prev = spec.level(g, k - 1).to_vec();
+        let mut scratch = vec![0.0f32; ge_prev.len()];
+        contract_right_add(&ge_k, z, &mut scratch);
+        for (o, s) in ge_prev.iter_mut().zip(&scratch) {
+            *o += s * inv_k;
+        }
+        ge_k = ge_prev;
+    }
+    // Level 1: E_1 = z.
+    for (o, &gv) in gz.iter_mut().zip(ge_k.iter()) {
+        *o += gv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+
+    #[test]
+    fn exp_d1_matches_scalar_series() {
+        let s = SigSpec::new(1, 5).unwrap();
+        let z = 0.7f32;
+        let e = exp(&s, &[z]);
+        let expect: Vec<f32> = (1..=5)
+            .map(|k| z.powi(k as i32) / (1..=k).product::<usize>() as f32)
+            .collect();
+        assert_close(&e, &expect, 1e-6, 1e-8);
+    }
+
+    #[test]
+    fn exp_levels_are_scaled_tensor_powers() {
+        let s = SigSpec::new(3, 3).unwrap();
+        let z = [1.0f32, -2.0, 0.5];
+        let e = exp(&s, &z);
+        // Level 2 entry (i,j) = z_i z_j / 2.
+        for i in 0..3 {
+            for j in 0..3 {
+                let got = s.level(&e, 2)[i * 3 + j];
+                assert!((got - z[i] * z[j] / 2.0).abs() < 1e-6);
+            }
+        }
+        // Level 3 entry (i,j,k) = z_i z_j z_k / 6.
+        for i in 0..3 {
+            for j in 0..3 {
+                for k in 0..3 {
+                    let got = s.level(&e, 3)[(i * 3 + j) * 3 + k];
+                    assert!((got - z[i] * z[j] * z[k] / 6.0).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exp_of_zero_is_identity() {
+        let s = SigSpec::new(4, 3).unwrap();
+        let e = exp(&s, &[0.0; 4]);
+        assert!(e.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exp_additivity_on_parallel_increments() {
+        // exp(z) ⊠ exp(z) = exp(2z) for a straight path (1D BCH is trivial;
+        // in general only parallel increments commute).
+        property("exp parallel additivity", 20, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let z = g.normal_vec(d, 0.5);
+            let e = exp(&s, &z);
+            let combined = crate::ta::mul(&s, &e, &e);
+            let z2: Vec<f32> = z.iter().map(|&x| 2.0 * x).collect();
+            assert_close(&combined, &exp(&s, &z2), 1e-4, 1e-6);
+        });
+    }
+
+    #[test]
+    fn exp_vjp_matches_finite_differences() {
+        property("exp vjp fd", 10, |gen| {
+            let d = gen.usize_in(1, 3);
+            let n = gen.usize_in(1, 4);
+            gen.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let z = gen.normal_vec(d, 0.6);
+            let g = gen.normal_vec(s.sig_len(), 1.0);
+            let mut gz = vec![0.0; d];
+            exp_vjp(&s, &z, &g, &mut gz);
+            let h = 1e-2f32;
+            for i in 0..d {
+                let mut zp = z.clone();
+                zp[i] += h;
+                let mut zm = z.clone();
+                zm[i] -= h;
+                let fp = exp(&s, &zp);
+                let fm = exp(&s, &zm);
+                let fd: f32 = fp
+                    .iter()
+                    .zip(&fm)
+                    .zip(&g)
+                    .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                    .sum();
+                assert!(
+                    (fd - gz[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "i={i} fd={fd} vjp={}",
+                    gz[i]
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,610 @@
+//! The **fused multiply-exponentiate** (§4.1, App. A.1) — the paper's key
+//! algorithmic improvement and this library's hot path.
+//!
+//! `fused_mexp` computes `A ← A ⊠ exp(z)` *in place* via the Horner scheme
+//! of eq. (5):
+//!
+//! ```text
+//! (A ⊠ exp(z))_k =
+//!   ((...((z/k + A_1) ⊗ z/(k-1) + A_2) ⊗ z/(k-2) + ...) ⊗ z/2 + A_{k-1}) ⊗ z + A_k
+//! ```
+//!
+//! using `F(d,N) = d(N-1) + Σ_k Σ_{i=2..k} d^i = O(d^N)` scalar
+//! multiplications versus the conventional `C(d,N) = Θ(N d^N)` (see
+//! [`super::opcount`]). In-place evaluation is possible because the output
+//! level `k` depends only on input levels `i ≤ k`: processing levels from
+//! `N` downward never reads an overwritten level.
+//!
+//! `fused_mexp_left` is the mirrored `A ← exp(z) ⊠ A`, used to maintain
+//! *inverted* signatures incrementally (`InvertSig_{j} = exp(-z_j) ⊠
+//! InvertSig_{j-1}`) for the Path class (§4.2).
+
+use super::exp::{exp_into, exp_vjp};
+use super::mul::{mul_vjp, outer_add};
+use super::{SigSpec, Workspace};
+
+/// Stage `z/m` for `m = 1..=depth` into `ws.zdiv` (row `m-1` holds `z/m`).
+#[inline]
+fn stage_zdiv(spec: &SigSpec, z: &[f32], ws: &mut Workspace) {
+    let d = spec.d();
+    for m in 1..=spec.depth() {
+        let inv = 1.0 / m as f32;
+        let row = &mut ws.zdiv[(m - 1) * d..m * d];
+        for (r, &zq) in row.iter_mut().zip(z) {
+            *r = zq * inv;
+        }
+    }
+}
+
+/// In-place fused multiply-exponentiate: `a ← a ⊠ exp(z)`.
+///
+/// Dispatches to a `d`-monomorphised body for the paper's benchmark range
+/// (`d ≤ 8`): the innermost Horner loops run over the `d` channels, and a
+/// compile-time trip count lets them unroll/vectorise (§Perf: ~2–3×
+/// wall-clock on the generic loop at small `d`).
+pub fn fused_mexp(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+    match spec.d() {
+        1 => fused_mexp_mono::<1>(spec, a, z, ws),
+        2 => fused_mexp_mono::<2>(spec, a, z, ws),
+        3 => fused_mexp_mono::<3>(spec, a, z, ws),
+        4 => fused_mexp_mono::<4>(spec, a, z, ws),
+        5 => fused_mexp_mono::<5>(spec, a, z, ws),
+        6 => fused_mexp_mono::<6>(spec, a, z, ws),
+        7 => fused_mexp_mono::<7>(spec, a, z, ws),
+        8 => fused_mexp_mono::<8>(spec, a, z, ws),
+        _ => fused_mexp_generic(spec, a, z, ws),
+    }
+}
+
+#[inline(always)]
+fn fused_mexp_mono<const D: usize>(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+    let n = spec.depth();
+    debug_assert_eq!(spec.d(), D);
+    debug_assert_eq!(a.len(), spec.sig_len());
+    let z: &[f32; D] = z.try_into().expect("z has d entries");
+    stage_zdiv(spec, z, ws);
+    for k in (2..=n).rev() {
+        // B_1 = z/k + A_1.
+        let b = &mut ws.h0[..D];
+        let zk = &ws.zdiv[(k - 1) * D..k * D];
+        for ((bv, &zv), &av) in b.iter_mut().zip(zk).zip(&a[..D]) {
+            *bv = zv + av;
+        }
+        let mut cur_in_h0 = true;
+        let mut cur_len = D;
+        for i in 2..k {
+            // B_i = B_{i-1} ⊗ (z / (k-i+1)) + A_i.
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (src, dst) = if cur_in_h0 {
+                (&ws.h0[..cur_len], &mut ws.h1[..cur_len * D])
+            } else {
+                (&ws.h1[..cur_len], &mut ws.h0[..cur_len * D])
+            };
+            let zm: &[f32; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
+            let ai = &a[oi..oi + li];
+            for (p, &sp) in src.iter().enumerate() {
+                let row: &mut [f32; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
+                let arow: &[f32; D] = (&ai[p * D..(p + 1) * D]).try_into().unwrap();
+                for q in 0..D {
+                    row[q] = sp * zm[q] + arow[q];
+                }
+            }
+            cur_in_h0 = !cur_in_h0;
+            cur_len *= D;
+        }
+        // Final step writes into A_k in place: A_k += B_{k-1} ⊗ z.
+        let ok = spec.off(k);
+        let dst = &mut a[ok..ok + cur_len * D];
+        let src = if cur_in_h0 { &ws.h0[..cur_len] } else { &ws.h1[..cur_len] };
+        for (p, &sp) in src.iter().enumerate() {
+            let row: &mut [f32; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
+            for q in 0..D {
+                row[q] += sp * z[q];
+            }
+        }
+    }
+    // Level 1: A_1 += z.
+    for (av, &zv) in a[..D].iter_mut().zip(z) {
+        *av += zv;
+    }
+}
+
+fn fused_mexp_generic(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+    let d = spec.d();
+    let n = spec.depth();
+    debug_assert_eq!(a.len(), spec.sig_len());
+    debug_assert_eq!(z.len(), d);
+    stage_zdiv(spec, z, ws);
+    for k in (2..=n).rev() {
+        // B_1 = z/k + A_1.
+        let b = &mut ws.h0[..d];
+        let zk = &ws.zdiv[(k - 1) * d..k * d];
+        for ((bv, &zv), &av) in b.iter_mut().zip(zk).zip(&a[..d]) {
+            *bv = zv + av;
+        }
+        let mut cur_in_h0 = true;
+        let mut cur_len = d;
+        for i in 2..k {
+            // B_i = B_{i-1} ⊗ (z / (k-i+1)) + A_i.
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (src, dst) = if cur_in_h0 {
+                (&ws.h0[..cur_len], &mut ws.h1[..cur_len * d])
+            } else {
+                (&ws.h1[..cur_len], &mut ws.h0[..cur_len * d])
+            };
+            let zm = &ws.zdiv[(m - 1) * d..m * d];
+            let ai = &a[oi..oi + li];
+            for (p, &sp) in src.iter().enumerate() {
+                let row = &mut dst[p * d..(p + 1) * d];
+                let arow = &ai[p * d..(p + 1) * d];
+                for q in 0..d {
+                    row[q] = sp * zm[q] + arow[q];
+                }
+            }
+            cur_in_h0 = !cur_in_h0;
+            cur_len *= d;
+        }
+        // Final step writes into A_k in place: A_k += B_{k-1} ⊗ z.
+        let ok = spec.off(k);
+        let dst = &mut a[ok..ok + cur_len * d];
+        let src = if cur_in_h0 { &ws.h0[..cur_len] } else { &ws.h1[..cur_len] };
+        for (p, &sp) in src.iter().enumerate() {
+            let row = &mut dst[p * d..(p + 1) * d];
+            for (q, &zq) in z.iter().enumerate() {
+                row[q] += sp * zq;
+            }
+        }
+    }
+    // Level 1: A_1 += z.
+    for (av, &zv) in a[..d].iter_mut().zip(z) {
+        *av += zv;
+    }
+}
+
+/// In-place mirrored fused operation: `a ← exp(z) ⊠ a`, via
+///
+/// ```text
+/// (exp(z) ⊠ A)_k = A_k + z ⊗ (A_{k-1} + (z/2) ⊗ (A_{k-2} + ... + (z/(k-1)) ⊗ (A_1 + z/k)))
+/// ```
+///
+/// Here the ⊗ factor is on the *left*, so the inner loops already run over
+/// the long (`cur_len`) axis contiguously and the generic version
+/// vectorises as-is; no per-`d` monomorphisation needed (§Perf).
+pub fn fused_mexp_left(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+    let d = spec.d();
+    let n = spec.depth();
+    debug_assert_eq!(a.len(), spec.sig_len());
+    debug_assert_eq!(z.len(), d);
+    stage_zdiv(spec, z, ws);
+    for k in (2..=n).rev() {
+        // B_1 = A_1 + z/k.
+        let b = &mut ws.h0[..d];
+        let zk = &ws.zdiv[(k - 1) * d..k * d];
+        for ((bv, &zv), &av) in b.iter_mut().zip(zk).zip(&a[..d]) {
+            *bv = zv + av;
+        }
+        let mut cur_in_h0 = true;
+        let mut cur_len = d;
+        for i in 2..k {
+            // B_i = A_i + (z/(k-i+1)) ⊗ B_{i-1}  (z factor on the left).
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (src, dst) = if cur_in_h0 {
+                (&ws.h0[..cur_len], &mut ws.h1[..cur_len * d])
+            } else {
+                (&ws.h1[..cur_len], &mut ws.h0[..cur_len * d])
+            };
+            let zm = &ws.zdiv[(m - 1) * d..m * d];
+            let ai = &a[oi..oi + li];
+            for (q, &zq) in zm.iter().enumerate() {
+                let row = &mut dst[q * cur_len..(q + 1) * cur_len];
+                let arow = &ai[q * cur_len..(q + 1) * cur_len];
+                for (p, &sp) in src.iter().enumerate() {
+                    row[p] = zq * sp + arow[p];
+                }
+            }
+            cur_in_h0 = !cur_in_h0;
+            cur_len *= d;
+        }
+        // Final: A_k += z ⊗ B_{k-1}.
+        let ok = spec.off(k);
+        let dst = &mut a[ok..ok + cur_len * d];
+        let src = if cur_in_h0 { &ws.h0[..cur_len] } else { &ws.h1[..cur_len] };
+        for (q, &zq) in z.iter().enumerate() {
+            let row = &mut dst[q * cur_len..(q + 1) * cur_len];
+            for (p, &sp) in src.iter().enumerate() {
+                row[p] += zq * sp;
+            }
+        }
+    }
+    for (av, &zv) in a[..d].iter_mut().zip(z) {
+        *av += zv;
+    }
+}
+
+/// Out-of-place fused multiply-exponentiate: `out = a ⊠ exp(z)`.
+pub fn fused_mexp_into(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    out.copy_from_slice(a);
+    fused_mexp(spec, out, z, ws);
+}
+
+/// VJP of `C = A ⊠ exp(z)`: given `g = ∂L/∂C`, accumulates `∂L/∂A` into
+/// `ga` and `∂L/∂z` into `gz`.
+///
+/// Reverse-mode through the Horner scheme itself (not through an explicit
+/// `exp` + ⊠): per output level `k` the forward `B_i` chain is recomputed
+/// (`O(d^{k-1})`) and unwound, so the whole VJP costs `O(d^N)` — the same
+/// asymptotic order as the fused forward — instead of the `Θ(N d^N)` a
+/// composition of ⊠-VJP and exp-VJP pays (App. C: the backward "can be
+/// computed using the same subroutines, including the fused
+/// multiply-exponentiate"). §Perf logs ~10× on the (7,7) backward.
+pub fn fused_mexp_vjp(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    g: &[f32],
+    ga: &mut [f32],
+    gz: &mut [f32],
+    ws: &mut Workspace,
+) {
+    match spec.d() {
+        1 => fused_mexp_vjp_mono::<1>(spec, a, z, g, ga, gz, ws),
+        2 => fused_mexp_vjp_mono::<2>(spec, a, z, g, ga, gz, ws),
+        3 => fused_mexp_vjp_mono::<3>(spec, a, z, g, ga, gz, ws),
+        4 => fused_mexp_vjp_mono::<4>(spec, a, z, g, ga, gz, ws),
+        5 => fused_mexp_vjp_mono::<5>(spec, a, z, g, ga, gz, ws),
+        6 => fused_mexp_vjp_mono::<6>(spec, a, z, g, ga, gz, ws),
+        7 => fused_mexp_vjp_mono::<7>(spec, a, z, g, ga, gz, ws),
+        8 => fused_mexp_vjp_mono::<8>(spec, a, z, g, ga, gz, ws),
+        _ => fused_mexp_vjp_reference(spec, a, z, g, ga, gz, ws),
+    }
+}
+
+fn fused_mexp_vjp_mono<const D: usize>(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    g: &[f32],
+    ga: &mut [f32],
+    gz: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let n = spec.depth();
+    let z: &[f32; D] = z.try_into().expect("z has D entries");
+    stage_zdiv(spec, z, ws);
+    // Level 1: C_1 = A_1 + z.
+    for q in 0..D {
+        ga[q] += g[q];
+        gz[q] += g[q];
+    }
+    for k in (2..=n).rev() {
+        // Recompute the forward Horner chain for level k, storing B_i at
+        // t2[off(i)..] (B_i has exactly level-i length).
+        {
+            let b1 = &mut ws.t2[..D];
+            let zk = &ws.zdiv[(k - 1) * D..k * D];
+            for ((bv, &zv), &av) in b1.iter_mut().zip(zk).zip(&a[..D]) {
+                *bv = zv + av;
+            }
+        }
+        let mut cur_len = D;
+        for i in 2..k {
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (lo, hi) = ws.t2.split_at_mut(oi);
+            let src = &lo[spec.off(i - 1)..spec.off(i - 1) + cur_len];
+            let dst = &mut hi[..li];
+            let zm: &[f32; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
+            let ai = &a[oi..oi + li];
+            for (p, &sp) in src.iter().enumerate() {
+                let row: &mut [f32; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
+                let arow: &[f32; D] = (&ai[p * D..(p + 1) * D]).try_into().unwrap();
+                for q in 0..D {
+                    row[q] = sp * zm[q] + arow[q];
+                }
+            }
+            cur_len *= D;
+        }
+        // Unwind. Final step: C_k = B_{k-1} ⊗ z + A_k.
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let gk = &g[ok..ok + lk];
+        for (x, &gv) in ga[ok..ok + lk].iter_mut().zip(gk) {
+            *x += gv;
+        }
+        // gB_{k-1}[p] = Σ_q gk[p,q] z[q];  gz[q] += Σ_p B_{k-1}[p] gk[p,q].
+        let bk1 = &ws.t2[spec.off(k - 1)..spec.off(k - 1) + cur_len];
+        let gb = &mut ws.h0[..cur_len];
+        for (p, gbp) in gb.iter_mut().enumerate() {
+            let row: &[f32; D] = (&gk[p * D..(p + 1) * D]).try_into().unwrap();
+            let mut acc = 0.0f32;
+            let bp = bk1[p];
+            for q in 0..D {
+                acc += row[q] * z[q];
+                gz[q] += bp * row[q];
+            }
+            *gbp = acc;
+        }
+        // Middle steps: B_i = B_{i-1} ⊗ z/m + A_i, i = k-1 .. 2.
+        let mut cur_in_h0 = true;
+        let mut len_i = cur_len; // length of B_i for current i (= d^i)
+        for i in (2..k).rev() {
+            let m = k - i + 1;
+            let inv_m = 1.0 / m as f32;
+            let zm: &[f32; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
+            let oi = spec.off(i);
+            let prev_len = len_i / D;
+            let b_prev = &ws.t2[spec.off(i - 1)..spec.off(i - 1) + prev_len];
+            let (gb_i, gb_prev) = if cur_in_h0 {
+                let (h0, h1) = (&mut ws.h0, &mut ws.h1);
+                (&h0[..len_i], &mut h1[..prev_len])
+            } else {
+                let (h0, h1) = (&mut ws.h0, &mut ws.h1);
+                (&h1[..len_i], &mut h0[..prev_len])
+            };
+            // gA_i += gB_i.
+            for (x, &gv) in ga[oi..oi + len_i].iter_mut().zip(gb_i) {
+                *x += gv;
+            }
+            // gB_{i-1}[p] = Σ_q gB_i[p,q] zm[q];
+            // gz[q] += inv_m * Σ_p B_{i-1}[p] gB_i[p,q].
+            let mut gz_acc = [0.0f32; D];
+            for (p, gbp) in gb_prev.iter_mut().enumerate() {
+                let row: &[f32; D] = (&gb_i[p * D..(p + 1) * D]).try_into().unwrap();
+                let bp = b_prev[p];
+                let mut acc = 0.0f32;
+                for q in 0..D {
+                    acc += row[q] * zm[q];
+                    gz_acc[q] += bp * row[q];
+                }
+                *gbp = acc;
+            }
+            for q in 0..D {
+                gz[q] += inv_m * gz_acc[q];
+            }
+            cur_in_h0 = !cur_in_h0;
+            len_i = prev_len;
+        }
+        // Innermost: B_1 = z/k + A_1.
+        let gb1 = if cur_in_h0 { &ws.h0[..D] } else { &ws.h1[..D] };
+        let inv_k = 1.0 / k as f32;
+        for q in 0..D {
+            ga[q] += gb1[q];
+            gz[q] += inv_k * gb1[q];
+        }
+    }
+}
+
+/// Reference VJP via explicit `exp` + ⊠-VJP composition (used by tests to
+/// pin the fast path, and as the fallback for `d > 8`).
+pub fn fused_mexp_vjp_reference(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    g: &[f32],
+    ga: &mut [f32],
+    gz: &mut [f32],
+    ws: &mut Workspace,
+) {
+    // E = exp(z).
+    exp_into(spec, z, &mut ws.t0);
+    ws.t1.fill(0.0);
+    // Split borrows: mul_vjp(a, E, g) -> ga, gE(ws.t1).
+    {
+        let (e, ge) = (&ws.t0, &mut ws.t1);
+        mul_vjp(spec, a, e, g, ga, ge);
+    }
+    exp_vjp(spec, z, &ws.t1, gz);
+}
+
+/// Convenience: `exp(z) ⊠ a` out of place via [`fused_mexp_left`].
+pub fn fused_mexp_left_into(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    out.copy_from_slice(a);
+    fused_mexp_left(spec, out, z, ws);
+}
+
+/// Reference (non-fused) composition used by the baselines and the tests:
+/// `out = a ⊠ exp(z)` via an explicit exponential then a full ⊠.
+/// This is the "conventional way" of App. A.1.1, costing `C(d, N)`.
+pub fn unfused_mexp_into(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    exp_into(spec, z, &mut ws.t0);
+    // out = a ⊠ E, written level-by-level (no fusion).
+    let n = spec.depth();
+    for k in 1..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let e = &ws.t0;
+        let dst = &mut out[ok..ok + lk];
+        for ((dv, &av), &ev) in dst.iter_mut().zip(&a[ok..ok + lk]).zip(&e[ok..ok + lk]) {
+            *dv = av + ev;
+        }
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            outer_add(&a[oi..oi + li], &e[oj..oj + lj], dst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::ta::{exp, mul};
+
+    #[test]
+    fn fused_equals_mul_exp() {
+        property("fused == A ⊠ exp(z)", 40, |g| {
+            let d = g.usize_in(1, 5);
+            let n = g.usize_in(1, 6);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = Workspace::new(&s);
+            let a = g.normal_vec(s.sig_len(), 0.8);
+            let z = g.normal_vec(d, 0.8);
+            let expect = mul(&s, &a, &exp(&s, &z));
+            let mut got = a.clone();
+            fused_mexp(&s, &mut got, &z, &mut ws);
+            assert_close(&got, &expect, 1e-4, 1e-6);
+        });
+    }
+
+    #[test]
+    fn fused_left_equals_exp_mul() {
+        property("fused_left == exp(z) ⊠ A", 40, |g| {
+            let d = g.usize_in(1, 5);
+            let n = g.usize_in(1, 6);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = Workspace::new(&s);
+            let a = g.normal_vec(s.sig_len(), 0.8);
+            let z = g.normal_vec(d, 0.8);
+            let expect = mul(&s, &exp(&s, &z), &a);
+            let mut got = a.clone();
+            fused_mexp_left(&s, &mut got, &z, &mut ws);
+            assert_close(&got, &expect, 1e-4, 1e-6);
+        });
+    }
+
+    #[test]
+    fn fused_from_identity_is_exp() {
+        let s = SigSpec::new(3, 4).unwrap();
+        let mut ws = Workspace::new(&s);
+        let z = [0.3f32, -0.2, 0.9];
+        let mut a = s.zeros();
+        fused_mexp(&s, &mut a, &z, &mut ws);
+        assert_close(&a, &exp(&s, &z), 1e-5, 1e-7);
+    }
+
+    #[test]
+    fn unfused_matches_fused() {
+        property("unfused == fused", 20, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = Workspace::new(&s);
+            let a = g.normal_vec(s.sig_len(), 0.8);
+            let z = g.normal_vec(d, 0.8);
+            let mut fused = a.clone();
+            fused_mexp(&s, &mut fused, &z, &mut ws);
+            let mut unfused = s.zeros();
+            unfused_mexp_into(&s, &a, &z, &mut unfused, &mut ws);
+            assert_close(&unfused, &fused, 1e-4, 1e-6);
+        });
+    }
+
+    #[test]
+    fn depth1_fused_is_vector_add() {
+        let s = SigSpec::new(4, 1).unwrap();
+        let mut ws = Workspace::new(&s);
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        fused_mexp(&s, &mut a, &[10.0, 20.0, 30.0, 40.0], &mut ws);
+        assert_eq!(a, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn fused_vjp_matches_finite_differences() {
+        property("fused vjp fd", 8, |gen| {
+            let d = gen.usize_in(1, 3);
+            let n = gen.usize_in(1, 4);
+            gen.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = Workspace::new(&s);
+            let a = gen.normal_vec(s.sig_len(), 0.5);
+            let z = gen.normal_vec(d, 0.5);
+            let g = gen.normal_vec(s.sig_len(), 1.0);
+            let mut ga = s.zeros();
+            let mut gz = vec![0.0; d];
+            fused_mexp_vjp(&s, &a, &z, &g, &mut ga, &mut gz, &mut ws);
+
+            let f = |av: &[f32], zv: &[f32]| {
+                let mut out = av.to_vec();
+                let mut w = Workspace::new(&s);
+                fused_mexp(&s, &mut out, zv, &mut w);
+                out
+            };
+            let h = 1e-2f32;
+            for i in 0..a.len() {
+                let mut ap = a.clone();
+                ap[i] += h;
+                let mut am = a.clone();
+                am[i] -= h;
+                let fd: f32 = f(&ap, &z)
+                    .iter()
+                    .zip(f(&am, &z).iter())
+                    .zip(&g)
+                    .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                    .sum();
+                assert!((fd - ga[i]).abs() < 3e-2 * (1.0 + fd.abs()), "ga[{i}]: fd={fd} vjp={}", ga[i]);
+            }
+            for i in 0..d {
+                let mut zp = z.clone();
+                zp[i] += h;
+                let mut zm = z.clone();
+                zm[i] -= h;
+                let fd: f32 = f(&a, &zp)
+                    .iter()
+                    .zip(f(&a, &zm).iter())
+                    .zip(&g)
+                    .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                    .sum();
+                assert!((fd - gz[i]).abs() < 3e-2 * (1.0 + fd.abs()), "gz[{i}]: fd={fd} vjp={}", gz[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn fast_vjp_matches_reference_vjp() {
+        property("fused vjp fast == reference", 30, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, 5);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = Workspace::new(&s);
+            let a = g.normal_vec(s.sig_len(), 0.6);
+            let z = g.normal_vec(d, 0.6);
+            let gv = g.normal_vec(s.sig_len(), 1.0);
+            let mut ga_fast = s.zeros();
+            let mut gz_fast = vec![0.0; d];
+            fused_mexp_vjp(&s, &a, &z, &gv, &mut ga_fast, &mut gz_fast, &mut ws);
+            let mut ga_ref = s.zeros();
+            let mut gz_ref = vec![0.0; d];
+            fused_mexp_vjp_reference(&s, &a, &z, &gv, &mut ga_ref, &mut gz_ref, &mut ws);
+            assert_close(&ga_fast, &ga_ref, 1e-4, 1e-5);
+            assert_close(&gz_fast, &gz_ref, 1e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn chen_via_fused_matches_two_segment_signature() {
+        // exp(z1) ⊠ exp(z2) computed via fused on exp(z1).
+        let s = SigSpec::new(2, 5).unwrap();
+        let mut ws = Workspace::new(&s);
+        let z1 = [0.5f32, -0.25];
+        let z2 = [-0.1f32, 0.7];
+        let mut sig = exp(&s, &z1);
+        fused_mexp(&s, &mut sig, &z2, &mut ws);
+        let expect = mul(&s, &exp(&s, &z1), &exp(&s, &z2));
+        assert_close(&sig, &expect, 1e-5, 1e-7);
+    }
+}

@@ -1,0 +1,166 @@
+//! The group inverse in the truncated tensor algebra (§2.3, §5.4) and its
+//! handwritten VJP.
+//!
+//! For `x` the non-unit part, `(1 + x)^{-1} = 1 - x + x^{⊠2} - ...`
+//! truncated at depth N, evaluated by the Horner-style fixpoint
+//!
+//! ```text
+//! t_0 = 0,  t_i = -(x + x ⊠_nounit t_{i-1}),  inverse = t_N
+//! ```
+//!
+//! (each iteration extends correctness one level deeper, since `x` has no
+//! scalar term). For *signatures* specifically, the paper's identity
+//! `Sig(x_1..x_L)^{-1} = Sig(x_L..x_1)` (§5.4) and the incremental
+//! `exp(-z) ⊠ ·` update are cheaper; this general routine is used for
+//! arbitrary group elements and as a test oracle.
+
+use super::mul::{mul_nounit_into, mul_nounit_vjp};
+use super::SigSpec;
+
+/// `out = x^{-1}` (non-unit parts; the implicit units multiply to 1).
+pub fn inverse_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
+    let n = spec.depth();
+    debug_assert_eq!(x.len(), spec.sig_len());
+    debug_assert_eq!(out.len(), spec.sig_len());
+    // t_1 = -x.
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o = -xv;
+    }
+    if n == 1 {
+        return;
+    }
+    let mut xt = spec.zeros();
+    for _ in 2..=n {
+        mul_nounit_into(spec, x, out, &mut xt);
+        for ((o, &xv), &pv) in out.iter_mut().zip(x).zip(xt.iter()) {
+            *o = -(xv + pv);
+        }
+    }
+}
+
+/// Allocating wrapper around [`inverse_into`].
+pub fn inverse(spec: &SigSpec, x: &[f32]) -> Vec<f32> {
+    let mut out = spec.zeros();
+    inverse_into(spec, x, &mut out);
+    out
+}
+
+/// VJP of `y = x^{-1}`: accumulates `∂L/∂x` into `gx` given `g = ∂L/∂y`.
+///
+/// Replays the fixpoint storing each `t_i`, then reverses.
+pub fn inverse_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
+    let n = spec.depth();
+    // Forward replay.
+    let mut t_hist: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut t: Vec<f32> = x.iter().map(|&v| -v).collect();
+    t_hist.push(t.clone());
+    let mut xt = spec.zeros();
+    for _ in 2..=n {
+        mul_nounit_into(spec, x, &t, &mut xt);
+        let mut t_new = spec.zeros();
+        for ((o, &xv), &pv) in t_new.iter_mut().zip(x).zip(xt.iter()) {
+            *o = -(xv + pv);
+        }
+        t = t_new;
+        t_hist.push(t.clone());
+    }
+    // Reverse: gt_i flows back through t_i = -(x + x ⊠' t_{i-1}).
+    let mut gt = g.to_vec();
+    for i in (2..=n).rev() {
+        let t_prev = &t_hist[i - 2];
+        let neg_gt: Vec<f32> = gt.iter().map(|&v| -v).collect();
+        for (o, &gv) in gx.iter_mut().zip(&neg_gt) {
+            *o += gv;
+        }
+        let mut gt_prev = spec.zeros();
+        mul_nounit_vjp(spec, x, t_prev, &neg_gt, gx, &mut gt_prev);
+        gt = gt_prev;
+    }
+    // t_1 = -x.
+    for (o, &gv) in gx.iter_mut().zip(&gt) {
+        *o -= gv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::ta::{exp, mul};
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        property("x ⊠ x⁻¹ = 1", 30, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 6);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let x = g.normal_vec(s.sig_len(), 0.6);
+            let inv = inverse(&s, &x);
+            let prod = mul(&s, &x, &inv);
+            // Identity has all stored (non-unit) entries zero.
+            assert_close(&prod, &s.zeros(), 1e-4, 5e-4);
+            let prod2 = mul(&s, &inv, &x);
+            assert_close(&prod2, &s.zeros(), 1e-4, 5e-4);
+        });
+    }
+
+    #[test]
+    fn inverse_of_exp_is_exp_of_negation() {
+        property("exp(z)⁻¹ = exp(-z)", 20, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            let s = SigSpec::new(d, n).unwrap();
+            let z = g.normal_vec(d, 0.7);
+            let zneg: Vec<f32> = z.iter().map(|&v| -v).collect();
+            assert_close(&inverse(&s, &exp(&s, &z)), &exp(&s, &zneg), 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn inverse_depth1_is_negation() {
+        let s = SigSpec::new(3, 1).unwrap();
+        assert_eq!(inverse(&s, &[1.0, -2.0, 3.0]), vec![-1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn inverse_is_involutive() {
+        let s = SigSpec::new(2, 4).unwrap();
+        let mut rng = crate::substrate::rng::Rng::new(5);
+        let x = rng.normal_vec(s.sig_len(), 0.5);
+        let twice = inverse(&s, &inverse(&s, &x));
+        assert_close(&twice, &x, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn inverse_vjp_matches_finite_differences() {
+        property("inverse vjp fd", 6, |gen| {
+            let d = gen.usize_in(1, 3);
+            let n = gen.usize_in(1, 4);
+            gen.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let x = gen.normal_vec(s.sig_len(), 0.4);
+            let g = gen.normal_vec(s.sig_len(), 1.0);
+            let mut gx = s.zeros();
+            inverse_vjp(&s, &x, &g, &mut gx);
+            let h = 1e-2f32;
+            for i in 0..x.len() {
+                let mut xp = x.clone();
+                xp[i] += h;
+                let mut xm = x.clone();
+                xm[i] -= h;
+                let fd: f32 = inverse(&s, &xp)
+                    .iter()
+                    .zip(inverse(&s, &xm).iter())
+                    .zip(&g)
+                    .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                    .sum();
+                assert!(
+                    (fd - gx[i]).abs() < 3e-2 * (1.0 + fd.abs()),
+                    "gx[{i}]: fd={fd} vjp={}",
+                    gx[i]
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! The tensor logarithm (§2.3, eq. (4)) and its handwritten VJP.
+//!
+//! For `x` the non-unit part of a group-like element (our storage never
+//! holds the unit), `log(1 + x) = Σ_{k=1..N} (-1)^{k+1} x^{⊠k} / k`,
+//! evaluated by a Horner scheme over elements with an explicit scalar part:
+//!
+//! ```text
+//! log(1+x) = x ⊠ r_1,   r_N = 1/N,   r_m = 1/m - x ⊠ r_{m+1}
+//! ```
+//!
+//! where each `r_m = (s_m, t_m)` is a scalar plus a non-unit tensor and
+//! `x ⊠ (s + t) = s·x + x ⊠_nounit t`. This costs `N-1` non-unit products.
+
+use super::mul::{mul_nounit_into, mul_nounit_vjp};
+use super::SigSpec;
+
+/// `out = log(x)` where `x` is the non-unit part of a group-like element.
+pub fn log_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
+    let n = spec.depth();
+    debug_assert_eq!(x.len(), spec.sig_len());
+    debug_assert_eq!(out.len(), spec.sig_len());
+    if n == 1 {
+        out.copy_from_slice(x);
+        return;
+    }
+    // r = (s, t); start at r_N = (1/N, 0).
+    let mut s = 1.0 / n as f32;
+    let mut t = spec.zeros();
+    let mut xt = spec.zeros();
+    for m in (1..n).rev() {
+        // r_m = 1/m - x ⊠ r_{m+1} = (1/m, -(s·x + x ⊠_nounit t)).
+        mul_nounit_into(spec, x, &t, &mut xt);
+        for ((tv, &xv), &pv) in t.iter_mut().zip(x).zip(xt.iter()) {
+            *tv = -(s * xv + pv);
+        }
+        s = 1.0 / m as f32;
+    }
+    // log = x ⊠ r_1 = s·x + x ⊠_nounit t   (s = 1 here).
+    debug_assert_eq!(s, 1.0);
+    mul_nounit_into(spec, x, &t, out);
+    for (ov, &xv) in out.iter_mut().zip(x) {
+        *ov += s * xv;
+    }
+}
+
+/// Allocating wrapper around [`log_into`].
+pub fn log(spec: &SigSpec, x: &[f32]) -> Vec<f32> {
+    let mut out = spec.zeros();
+    log_into(spec, x, &mut out);
+    out
+}
+
+/// VJP of `y = log(x)`: accumulates `∂L/∂x` into `gx` given `g = ∂L/∂y`.
+///
+/// Re-runs the Horner recursion storing each `t_m`, then reverses it.
+pub fn log_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
+    let n = spec.depth();
+    if n == 1 {
+        for (o, &gv) in gx.iter_mut().zip(g) {
+            *o += gv;
+        }
+        return;
+    }
+    // Forward replay, storing t_{m} for m = N..1 (t_hist[0] = t_N = 0, ...,
+    // t_hist[N-1] = t_1) and the scalars s_m = 1/m.
+    let mut t_hist: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut t = spec.zeros();
+    t_hist.push(t.clone()); // t_N
+    let mut xt = spec.zeros();
+    for m in (1..n).rev() {
+        let s = 1.0 / (m + 1) as f32; // scalar of r_{m+1}
+        mul_nounit_into(spec, x, &t, &mut xt);
+        let mut t_new = spec.zeros();
+        for (((tv, &xv), &pv), _) in t_new.iter_mut().zip(x).zip(xt.iter()).zip(0..) {
+            *tv = -(s * xv + pv);
+        }
+        t = t_new;
+        t_hist.push(t.clone());
+    }
+    // t_hist[idx] = t_{N - idx}.
+    let t_m = |m: usize| &t_hist[n - m];
+
+    // Reverse: log = 1·x + x ⊠_nounit t_1.
+    let mut gt = spec.zeros(); // gradient wrt t_1
+    for (o, &gv) in gx.iter_mut().zip(g) {
+        *o += gv;
+    }
+    mul_nounit_vjp(spec, x, t_m(1), g, gx, &mut gt);
+    // For m = 1..N-1: t_m = -(s_{m+1}·x + x ⊠_nounit t_{m+1}).
+    for m in 1..n {
+        let s_next = 1.0 / (m + 1) as f32;
+        // gx += -s_next * gt ; (gx, gt_next) += vjp of x ⊠_nounit t_{m+1} with cotangent -gt.
+        let neg_gt: Vec<f32> = gt.iter().map(|&v| -v).collect();
+        for (o, &gv) in gx.iter_mut().zip(&neg_gt) {
+            *o += s_next * gv;
+        }
+        let mut gt_next = spec.zeros();
+        mul_nounit_vjp(spec, x, t_m(m + 1), &neg_gt, gx, &mut gt_next);
+        gt = gt_next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::ta::{exp, mul};
+
+    #[test]
+    fn log_of_exp_is_z_padded() {
+        // log(exp(z)) = (z, 0, 0, ...): the log of a one-segment signature
+        // is the increment placed in level 1.
+        property("log ∘ exp = id", 30, |g| {
+            let d = g.usize_in(1, 5);
+            let n = g.usize_in(1, 6);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let z = g.normal_vec(d, 0.7);
+            let l = log(&s, &exp(&s, &z));
+            let mut expect = s.zeros();
+            expect[..d].copy_from_slice(&z);
+            assert_close(&l, &expect, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn log_d1_closed_form() {
+        // d=1 group-likes are exp(z); log of arbitrary (x1, x2) at N=2 is
+        // (x1, x2 - x1^2/2).
+        let s = SigSpec::new(1, 2).unwrap();
+        let l = log(&s, &[3.0, 7.0]);
+        assert_close(&l, &[3.0, 7.0 - 4.5], 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn log_level2_antisymmetrisation() {
+        // For a group-like element, log level 2 is the antisymmetric part
+        // of level 2: log_2 = x_2 - (x_1 ⊗ x_1)/2.
+        let s = SigSpec::new(3, 2).unwrap();
+        let z1 = [0.5f32, -1.0, 0.25];
+        let z2 = [0.3f32, 0.8, -0.6];
+        let sig = mul(&s, &exp(&s, &z1), &exp(&s, &z2));
+        let l = log(&s, &sig);
+        // Level 1 of log = total increment.
+        for i in 0..3 {
+            assert!((l[i] - (z1[i] + z2[i])).abs() < 1e-5);
+        }
+        // Level 2 of log should be antisymmetric.
+        let l2 = s.level(&l, 2);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(
+                    (l2[i * 3 + j] + l2[j * 3 + i]).abs() < 1e-5,
+                    "not antisymmetric at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn log_depth1_is_identity() {
+        let s = SigSpec::new(4, 1).unwrap();
+        let x = [1.0f32, -2.0, 3.0, -4.0];
+        assert_eq!(log(&s, &x), x.to_vec());
+    }
+
+    #[test]
+    fn log_vjp_matches_finite_differences() {
+        property("log vjp fd", 6, |gen| {
+            let d = gen.usize_in(1, 3);
+            let n = gen.usize_in(1, 4);
+            gen.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let x = gen.normal_vec(s.sig_len(), 0.4);
+            let g = gen.normal_vec(s.sig_len(), 1.0);
+            let mut gx = s.zeros();
+            log_vjp(&s, &x, &g, &mut gx);
+            let h = 1e-2f32;
+            for i in 0..x.len() {
+                let mut xp = x.clone();
+                xp[i] += h;
+                let mut xm = x.clone();
+                xm[i] -= h;
+                let fd: f32 = log(&s, &xp)
+                    .iter()
+                    .zip(log(&s, &xm).iter())
+                    .zip(&g)
+                    .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                    .sum();
+                assert!(
+                    (fd - gx[i]).abs() < 3e-2 * (1.0 + fd.abs()),
+                    "gx[{i}]: fd={fd} vjp={}",
+                    gx[i]
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,241 @@
+//! The truncated tensor algebra `T^N(R^d) = prod_{k=1..N} (R^d)^{⊗k}`.
+//!
+//! Elements are stored as flat `[f32]` vectors: the depth-k level occupies
+//! `d^k` contiguous entries, levels concatenated in increasing k. The
+//! scalar (k = 0) term is *implicit* and equals 1 for group-like elements
+//! (matching the paper's convention of omitting it, §2.1 fn. 2); operations
+//! that need it handle it explicitly.
+//!
+//! Submodules implement the paper's operations:
+//! - [`mul`] — the truncated tensor product ⊠ (Chen product, §2.2) and its
+//!   handwritten VJP.
+//! - [`exp`] — the tensor exponential and its VJP.
+//! - [`fused`] — the **fused multiply-exponentiate** `A ⊠ exp(z)` via the
+//!   Horner scheme of §4.1 / App. A.1 — the paper's key algorithmic
+//!   improvement and this library's hot path — plus the mirrored
+//!   `exp(z) ⊠ A` used for incremental inverted signatures.
+//! - [`log`] — the tensor logarithm (Horner series) and its VJP.
+//! - [`inverse`] — the group inverse (truncated Neumann series) and VJP.
+//! - [`opcount`] — the closed-form multiplication counts `F(d,N)`, `C(d,N)`
+//!   of App. A.1 plus instrumented counters validating them.
+
+pub mod exp;
+pub mod fused;
+pub mod inverse;
+pub mod log;
+pub mod mul;
+pub mod opcount;
+
+pub use exp::{exp, exp_vjp};
+pub use fused::{fused_mexp, fused_mexp_left, fused_mexp_vjp};
+pub use inverse::{inverse, inverse_vjp};
+pub use log::{log, log_vjp};
+pub use mul::{mul, mul_into, mul_vjp};
+
+/// Shape metadata for signatures over `d` channels truncated at `depth`.
+///
+/// Precomputes level offsets/lengths so hot loops never recompute powers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SigSpec {
+    d: usize,
+    depth: usize,
+    /// `level_off[k-1]` = flat offset of level k (k = 1..=depth), plus a
+    /// trailing sentinel equal to `len`.
+    level_off: Vec<usize>,
+    len: usize,
+}
+
+impl SigSpec {
+    /// `d >= 1` channels, `depth >= 1`. Errors if the flattened signature
+    /// would overflow a reasonable memory bound (guards `d^depth`).
+    pub fn new(d: usize, depth: usize) -> anyhow::Result<SigSpec> {
+        anyhow::ensure!(d >= 1, "channels must be >= 1");
+        anyhow::ensure!(depth >= 1, "depth must be >= 1");
+        let mut level_off = Vec::with_capacity(depth + 1);
+        let mut off = 0usize;
+        let mut pw = 1usize;
+        for _ in 0..depth {
+            level_off.push(off);
+            pw = pw
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("d^depth overflows"))?;
+            off = off
+                .checked_add(pw)
+                .ok_or_else(|| anyhow::anyhow!("signature length overflows"))?;
+            anyhow::ensure!(off <= 1 << 31, "signature of {} elements is too large", off);
+        }
+        level_off.push(off);
+        Ok(SigSpec { d, depth, level_off, len: off })
+    }
+
+    /// Number of channels d.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Truncation depth N.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total flattened length `d + d^2 + ... + d^depth`
+    /// (the paper's "signature channels").
+    #[inline]
+    pub fn sig_len(&self) -> usize {
+        self.len
+    }
+
+    /// Flat offset of level `k` (1-based).
+    #[inline]
+    pub fn off(&self, k: usize) -> usize {
+        debug_assert!((1..=self.depth).contains(&k));
+        self.level_off[k - 1]
+    }
+
+    /// Length of level `k`, i.e. `d^k`.
+    #[inline]
+    pub fn level_len(&self, k: usize) -> usize {
+        debug_assert!((1..=self.depth).contains(&k));
+        self.level_off[k] - self.level_off[k - 1]
+    }
+
+    /// Borrow level `k` of a signature slice.
+    #[inline]
+    pub fn level<'a>(&self, sig: &'a [f32], k: usize) -> &'a [f32] {
+        &sig[self.level_off[k - 1]..self.level_off[k]]
+    }
+
+    /// Mutably borrow level `k` of a signature slice.
+    #[inline]
+    pub fn level_mut<'a>(&self, sig: &'a mut [f32], k: usize) -> &'a mut [f32] {
+        &mut sig[self.level_off[k - 1]..self.level_off[k]]
+    }
+
+    /// A zeroed signature buffer.
+    pub fn zeros(&self) -> Vec<f32> {
+        vec![0.0; self.len]
+    }
+
+    /// A spec for the same `d` at a shallower depth (used by log/inverse
+    /// internals and tests).
+    pub fn truncate(&self, depth: usize) -> SigSpec {
+        assert!(depth >= 1 && depth <= self.depth);
+        SigSpec {
+            d: self.d,
+            depth,
+            level_off: self.level_off[..=depth].to_vec(),
+            len: self.level_off[depth],
+        }
+    }
+}
+
+/// Reusable scratch space for the algebra kernels, sized for one `SigSpec`.
+/// Hot loops (signature over a long stream) allocate one of these once.
+pub struct Workspace {
+    /// Ping/pong Horner buffers, each `d^(depth-1)` long.
+    pub h0: Vec<f32>,
+    pub h1: Vec<f32>,
+    /// `z/m` staging, `d * depth` long (divided increments).
+    pub zdiv: Vec<f32>,
+    /// Signature-sized scratch buffers.
+    pub t0: Vec<f32>,
+    pub t1: Vec<f32>,
+    pub t2: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(spec: &SigSpec) -> Workspace {
+        let horner = if spec.depth >= 2 {
+            spec.level_len(spec.depth) / spec.d
+        } else {
+            spec.d
+        };
+        Workspace {
+            h0: vec![0.0; horner],
+            h1: vec![0.0; horner],
+            zdiv: vec![0.0; spec.d * spec.depth],
+            t0: vec![0.0; spec.len],
+            t1: vec![0.0; spec.len],
+            t2: vec![0.0; spec.len],
+        }
+    }
+}
+
+/// Reciprocals 1/1, 1/2, ..., 1/N precomputed once (the paper's "divisions
+/// cost one multiplication" assumption, App. A.1.1).
+pub fn reciprocals(depth: usize) -> Vec<f32> {
+    (1..=depth).map(|k| 1.0 / k as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_offsets_and_lengths() {
+        let s = SigSpec::new(3, 4).unwrap();
+        assert_eq!(s.sig_len(), 3 + 9 + 27 + 81);
+        assert_eq!(s.off(1), 0);
+        assert_eq!(s.off(2), 3);
+        assert_eq!(s.off(3), 12);
+        assert_eq!(s.off(4), 39);
+        assert_eq!(s.level_len(1), 3);
+        assert_eq!(s.level_len(4), 81);
+    }
+
+    #[test]
+    fn spec_d1() {
+        let s = SigSpec::new(1, 5).unwrap();
+        assert_eq!(s.sig_len(), 5);
+        for k in 1..=5 {
+            assert_eq!(s.level_len(k), 1);
+            assert_eq!(s.off(k), k - 1);
+        }
+    }
+
+    #[test]
+    fn spec_rejects_bad_and_huge() {
+        assert!(SigSpec::new(0, 3).is_err());
+        assert!(SigSpec::new(3, 0).is_err());
+        assert!(SigSpec::new(10, 12).is_err()); // 10^12 elements
+    }
+
+    #[test]
+    fn level_views() {
+        let s = SigSpec::new(2, 3).unwrap();
+        let mut sig: Vec<f32> = (0..s.sig_len()).map(|i| i as f32).collect();
+        assert_eq!(s.level(&sig, 1), &[0.0, 1.0]);
+        assert_eq!(s.level(&sig, 2), &[2.0, 3.0, 4.0, 5.0]);
+        s.level_mut(&mut sig, 3)[0] = 99.0;
+        assert_eq!(sig[6], 99.0);
+    }
+
+    #[test]
+    fn truncate_spec() {
+        let s = SigSpec::new(3, 5).unwrap();
+        let t = s.truncate(2);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.sig_len(), 12);
+        assert_eq!(t.off(2), 3);
+    }
+
+    #[test]
+    fn reciprocals_values() {
+        let r = reciprocals(4);
+        assert_eq!(r, vec![1.0, 0.5, 1.0 / 3.0, 0.25]);
+    }
+
+    #[test]
+    fn workspace_sizes() {
+        let s = SigSpec::new(3, 4).unwrap();
+        let w = Workspace::new(&s);
+        assert_eq!(w.h0.len(), 27); // d^(N-1)
+        assert_eq!(w.zdiv.len(), 12);
+        assert_eq!(w.t0.len(), s.sig_len());
+        let s1 = SigSpec::new(3, 1).unwrap();
+        let w1 = Workspace::new(&s1);
+        assert_eq!(w1.h0.len(), 3);
+    }
+}

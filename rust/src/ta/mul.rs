@@ -1,0 +1,349 @@
+//! The truncated tensor product ⊠ (§2.2, eq. (8)) and its handwritten VJP.
+//!
+//! For `A, B` with implicit unit scalar term,
+//! `(A ⊠ B)_k = A_k + B_k + Σ_{i=1}^{k-1} A_i ⊗ B_{k-i}`.
+//!
+//! The inner `A_i ⊗ B_{k-i}` loops are plain outer products over flat
+//! slices; written so the innermost loop is a contiguous FMA over `B`'s
+//! trailing index (auto-vectorises well).
+
+use super::SigSpec;
+
+/// `out += a_i ⊗ b_j` where `a_i` has `la` entries and `b_j` has `lb`
+/// entries; `out` has `la * lb` entries.
+#[inline]
+pub(crate) fn outer_add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), a.len() * b.len());
+    let lb = b.len();
+    for (p, &ap) in a.iter().enumerate() {
+        let row = &mut out[p * lb..(p + 1) * lb];
+        for (q, &bq) in b.iter().enumerate() {
+            row[q] += ap * bq;
+        }
+    }
+}
+
+/// Full ⊠ with implicit units: `out = a ⊠ b`. `out` may not alias inputs.
+pub fn mul_into(spec: &SigSpec, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = spec.depth();
+    debug_assert_eq!(a.len(), spec.sig_len());
+    debug_assert_eq!(b.len(), spec.sig_len());
+    debug_assert_eq!(out.len(), spec.sig_len());
+    for k in 1..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let dst = &mut out[ok..ok + lk];
+        // A_0 ⊗ B_k + A_k ⊗ B_0 = A_k + B_k.
+        for (d, (&x, &y)) in dst.iter_mut().zip(a[ok..ok + lk].iter().zip(&b[ok..ok + lk])) {
+            *d = x + y;
+        }
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            outer_add(&a[oi..oi + li], &b[oj..oj + lj], dst);
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`mul_into`].
+pub fn mul(spec: &SigSpec, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = spec.zeros();
+    mul_into(spec, a, b, &mut out);
+    out
+}
+
+/// In-place right-multiplication `a = a ⊠ b`.
+///
+/// Valid because `(a ⊠ b)_k` reads only `a_i` for `i <= k`: computing levels
+/// from `k = depth` downward never reads an already-overwritten level.
+pub fn mul_assign(spec: &SigSpec, a: &mut [f32], b: &[f32]) {
+    let n = spec.depth();
+    for k in (1..=n).rev() {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        // Split so we can read lower levels of `a` while writing level k.
+        let (alow, arest) = a.split_at_mut(ok);
+        let dst = &mut arest[..lk];
+        // A_k + B_k (A_k already in place).
+        for (d, &y) in dst.iter_mut().zip(&b[ok..ok + lk]) {
+            *d += y;
+        }
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            outer_add(&alow[oi..oi + li], &b[oj..oj + lj], dst);
+        }
+    }
+}
+
+/// Like [`mul_into`] but treating both inputs as having *zero* scalar term
+/// (used by the log/inverse series): `out_k = Σ_{i=1}^{k-1} a_i ⊗ b_{k-i}`.
+/// Note `out_1 = 0`.
+pub fn mul_nounit_into(spec: &SigSpec, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = spec.depth();
+    for k in 1..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let dst = &mut out[ok..ok + lk];
+        dst.fill(0.0);
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            outer_add(&a[oi..oi + li], &b[oj..oj + lj], dst);
+        }
+    }
+}
+
+/// `ga_i[α] += Σ_β g[α,β] * b[β]` — contraction of the gradient of an outer
+/// product against the right factor. `g` is `(la, lb)` row-major.
+#[inline]
+pub(crate) fn contract_right_add(g: &[f32], b: &[f32], ga: &mut [f32]) {
+    let lb = b.len();
+    debug_assert_eq!(g.len(), ga.len() * lb);
+    for (p, gap) in ga.iter_mut().enumerate() {
+        let row = &g[p * lb..(p + 1) * lb];
+        let mut acc = 0.0f32;
+        for (q, &bq) in b.iter().enumerate() {
+            acc += row[q] * bq;
+        }
+        *gap += acc;
+    }
+}
+
+/// `gb[β] += Σ_α g[α,β] * a[α]` — contraction against the left factor.
+#[inline]
+pub(crate) fn contract_left_add(g: &[f32], a: &[f32], gb: &mut [f32]) {
+    let lb = gb.len();
+    debug_assert_eq!(g.len(), a.len() * lb);
+    for (p, &ap) in a.iter().enumerate() {
+        let row = &g[p * lb..(p + 1) * lb];
+        for (q, gbq) in gb.iter_mut().enumerate() {
+            *gbq += ap * row[q];
+        }
+    }
+}
+
+/// VJP of `out = a ⊠ b`: accumulates `∂L/∂a` into `ga` and `∂L/∂b` into
+/// `gb`, given `g = ∂L/∂out`.
+pub fn mul_vjp(spec: &SigSpec, a: &[f32], b: &[f32], g: &[f32], ga: &mut [f32], gb: &mut [f32]) {
+    let n = spec.depth();
+    for k in 1..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let gk = &g[ok..ok + lk];
+        // Unit terms: out_k += a_k and out_k += b_k.
+        for (x, &gv) in ga[ok..ok + lk].iter_mut().zip(gk) {
+            *x += gv;
+        }
+        for (x, &gv) in gb[ok..ok + lk].iter_mut().zip(gk) {
+            *x += gv;
+        }
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            contract_right_add(gk, &b[oj..oj + lj], &mut ga[oi..oi + li]);
+            contract_left_add(gk, &a[oi..oi + li], &mut gb[oj..oj + lj]);
+        }
+    }
+}
+
+/// VJP of [`mul_nounit_into`] (no unit terms).
+pub fn mul_nounit_vjp(
+    spec: &SigSpec,
+    a: &[f32],
+    b: &[f32],
+    g: &[f32],
+    ga: &mut [f32],
+    gb: &mut [f32],
+) {
+    let n = spec.depth();
+    for k in 2..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let gk = &g[ok..ok + lk];
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            contract_right_add(gk, &b[oj..oj + lj], &mut ga[oi..oi + li]);
+            contract_left_add(gk, &a[oi..oi + li], &mut gb[oj..oj + lj]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::{assert_close, property};
+
+    fn spec(d: usize, n: usize) -> SigSpec {
+        SigSpec::new(d, n).unwrap()
+    }
+
+    #[test]
+    fn mul_depth1_is_addition() {
+        let s = spec(3, 1);
+        let out = mul(&s, &[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]);
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn mul_d1_n2_by_hand() {
+        // a = (a1, a2), b = (b1, b2): (a ⊠ b) = (a1+b1, a2+b2+a1*b1).
+        let s = spec(1, 2);
+        let out = mul(&s, &[2.0, 3.0], &[5.0, 7.0]);
+        assert_eq!(out, vec![7.0, 3.0 + 7.0 + 10.0]);
+    }
+
+    #[test]
+    fn mul_d2_n2_by_hand() {
+        let s = spec(2, 2);
+        // a1 = [1,2], a2 = zeros; b1 = [3,4], b2 = zeros.
+        let a = [1.0, 2.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [3.0, 4.0, 0.0, 0.0, 0.0, 0.0];
+        let out = mul(&s, &a, &b);
+        // Level 2 = a1 ⊗ b1 = [[3,4],[6,8]].
+        assert_eq!(out, vec![4.0, 6.0, 3.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn mul_is_associative() {
+        property("mul associative", 25, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            g.label(format!("d={d} n={n}"));
+            let s = spec(d, n);
+            let a = g.normal_vec(s.sig_len(), 0.5);
+            let b = g.normal_vec(s.sig_len(), 0.5);
+            let c = g.normal_vec(s.sig_len(), 0.5);
+            let ab_c = mul(&s, &mul(&s, &a, &b), &c);
+            let a_bc = mul(&s, &a, &mul(&s, &b, &c));
+            assert_close(&ab_c, &a_bc, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn unit_is_identity() {
+        // The implicit-unit zero vector is the group identity.
+        property("unit identity", 20, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 4);
+            let s = spec(d, n);
+            let a = g.normal_vec(s.sig_len(), 1.0);
+            let e = s.zeros();
+            assert_close(&mul(&s, &a, &e), &a, 1e-6, 1e-7);
+            assert_close(&mul(&s, &e, &a), &a, 1e-6, 1e-7);
+        });
+    }
+
+    #[test]
+    fn mul_assign_matches_mul_into() {
+        property("mul_assign == mul_into", 30, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 5);
+            let s = spec(d, n);
+            let mut a = g.normal_vec(s.sig_len(), 1.0);
+            let b = g.normal_vec(s.sig_len(), 1.0);
+            let expect = mul(&s, &a, &b);
+            mul_assign(&s, &mut a, &b);
+            assert_close(&a, &expect, 1e-6, 1e-7);
+        });
+    }
+
+    #[test]
+    fn mul_nounit_drops_unit_terms() {
+        let s = spec(2, 3);
+        let mut g = crate::substrate::rng::Rng::new(4);
+        let a = g.normal_vec(s.sig_len(), 1.0);
+        let b = g.normal_vec(s.sig_len(), 1.0);
+        let full = mul(&s, &a, &b);
+        let mut nounit = s.zeros();
+        mul_nounit_into(&s, &a, &b, &mut nounit);
+        for i in 0..s.sig_len() {
+            let diff = full[i] - nounit[i];
+            assert!((diff - (a[i] + b[i])).abs() < 1e-5);
+        }
+    }
+
+    /// Finite-difference check of a VJP: <g, f(x+h e_i) - f(x-h e_i)>/(2h)
+    /// should equal grad_i for every i.
+    fn fd_check<F>(x: &[f32], g_out: &[f32], grad: &[f32], f: F, tol: f32)
+    where
+        F: Fn(&[f32]) -> Vec<f32>,
+    {
+        let h = 1e-2f32;
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            xp[i] += h;
+            let mut xm = x.to_vec();
+            xm[i] -= h;
+            let fp = f(&xp);
+            let fm = f(&xm);
+            let dirderiv: f32 = fp
+                .iter()
+                .zip(&fm)
+                .zip(g_out)
+                .map(|((&p, &m), &gv)| (p - m) / (2.0 * h) * gv)
+                .sum();
+            assert!(
+                (dirderiv - grad[i]).abs() <= tol * (1.0 + dirderiv.abs().max(grad[i].abs())),
+                "grad mismatch at {i}: fd={dirderiv} vjp={}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn mul_vjp_matches_finite_differences() {
+        property("mul vjp fd", 8, |gen| {
+            let d = gen.usize_in(1, 3);
+            let n = gen.usize_in(1, 4);
+            gen.label(format!("d={d} n={n}"));
+            let s = spec(d, n);
+            let a = gen.normal_vec(s.sig_len(), 0.5);
+            let b = gen.normal_vec(s.sig_len(), 0.5);
+            let g = gen.normal_vec(s.sig_len(), 1.0);
+            let mut ga = s.zeros();
+            let mut gb = s.zeros();
+            mul_vjp(&s, &a, &b, &g, &mut ga, &mut gb);
+            fd_check(&a, &g, &ga, |x| mul(&s, x, &b), 2e-2);
+            fd_check(&b, &g, &gb, |x| mul(&s, &a, x), 2e-2);
+        });
+    }
+
+    #[test]
+    fn mul_nounit_vjp_matches_finite_differences() {
+        let s = spec(2, 3);
+        let mut rng = crate::substrate::rng::Rng::new(77);
+        let a = rng.normal_vec(s.sig_len(), 0.5);
+        let b = rng.normal_vec(s.sig_len(), 0.5);
+        let g = rng.normal_vec(s.sig_len(), 1.0);
+        let mut ga = s.zeros();
+        let mut gb = s.zeros();
+        mul_nounit_vjp(&s, &a, &b, &g, &mut ga, &mut gb);
+        let f_a = |x: &[f32]| {
+            let mut out = s.zeros();
+            mul_nounit_into(&s, x, &b, &mut out);
+            out
+        };
+        let f_b = |x: &[f32]| {
+            let mut out = s.zeros();
+            mul_nounit_into(&s, &a, x, &mut out);
+            out
+        };
+        fd_check(&a, &g, &ga, f_a, 2e-2);
+        fd_check(&b, &g, &gb, f_b, 2e-2);
+    }
+
+    #[test]
+    fn vjp_accumulates_rather_than_overwrites() {
+        let s = spec(2, 2);
+        let a = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let g = [0.0; 6];
+        let mut ga = vec![7.0; 6];
+        let mut gb = vec![9.0; 6];
+        mul_vjp(&s, &a, &b, &g, &mut ga, &mut gb);
+        assert_eq!(ga, vec![7.0; 6]);
+        assert_eq!(gb, vec![9.0; 6]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Multiplication-count model of App. A.1: the closed forms `F(d, N)`
+//! (fused, eq. (11)) and `C(d, N)` (conventional, eq. (9)), plus
+//! instrumented counters that validate the closed forms against the actual
+//! loop structure. These back the `tables --table opcount` harness entry
+//! and the paper's claims `F ≤ C` uniformly and `F = O(d^N)` vs
+//! `C = Θ(N d^N)`.
+
+/// Binomial coefficient with u128 accumulation (exact for our ranges).
+pub fn binomial(n: u64, k: u64) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    for i in 0..k {
+        num = num * (n - i) as u128 / (i + 1) as u128;
+    }
+    num
+}
+
+/// `C(d, N)` — scalar multiplications of the conventional
+/// exponential-then-⊠ (App. A.1.1, eq. (9)):
+/// `Σ_{k=2..N} (d + C(d+k-1, k)) + Σ_{k=1..N} (k-1) d^k`.
+pub fn conventional_muls(d: u64, n: u64) -> u128 {
+    let mut total: u128 = 0;
+    for k in 2..=n {
+        total += d as u128 + binomial(d + k - 1, k);
+    }
+    for k in 1..=n {
+        total += (k - 1) as u128 * (d as u128).pow(k as u32);
+    }
+    total
+}
+
+/// `F(d, N)` — scalar multiplications of the fused multiply-exponentiate
+/// (App. A.1.2, eq. (11)): `d (N-1) + Σ_{k=1..N} Σ_{i=2..k} d^i`.
+pub fn fused_muls(d: u64, n: u64) -> u128 {
+    let mut total: u128 = d as u128 * (n - 1) as u128;
+    for k in 1..=n {
+        for i in 2..=k {
+            total += (d as u128).pow(i as u32);
+        }
+    }
+    total
+}
+
+/// Count the multiplications the *actual* fused loop performs, by walking
+/// the same iteration space as `fused::fused_mexp` symbolically.
+pub fn fused_muls_instrumented(d: u64, n: u64) -> u128 {
+    let mut muls: u128 = 0;
+    // stage_zdiv computes z/m for m = 2..=N (z/1 is z itself: in the closed
+    // form of the paper this is the d(N-1) term).
+    muls += d as u128 * (n - 1) as u128;
+    for k in (2..=n).rev() {
+        // B_1 = z/k + A_1: no multiplications (z/k staged already).
+        let mut cur_len = d as u128;
+        for _i in 2..k {
+            // B_i = B_{i-1} ⊗ z/(k-i+1) + A_i: cur_len * d multiplications.
+            muls += cur_len * d as u128;
+            cur_len *= d as u128;
+        }
+        // Final A_k += B_{k-1} ⊗ z: cur_len * d multiplications.
+        muls += cur_len * d as u128;
+    }
+    muls
+}
+
+/// Closed form of eq. (12): `F(d,N) = (d^{N+2} - d^3 - (N-1)d^2 + (N-1)d) /
+/// (d-1)^2` for `d ≥ 2`.
+pub fn fused_muls_closed(d: u64, n: u64) -> u128 {
+    assert!(d >= 2);
+    let d = d as i128;
+    let n = n as i128;
+    let num = d.pow((n + 2) as u32) - d.pow(3) - (n - 1) * d * d + (n - 1) * d;
+    (num / ((d - 1) * (d - 1))) as u128
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(5, 2), 10);
+        assert_eq!(binomial(10, 0), 1);
+        assert_eq!(binomial(4, 7), 0);
+        assert_eq!(binomial(13, 7), 1716);
+    }
+
+    #[test]
+    fn instrumented_matches_closed_form() {
+        // The actual loop performs exactly F(d, N) multiplications.
+        for d in 1..=7u64 {
+            for n in 1..=9u64 {
+                assert_eq!(
+                    fused_muls_instrumented(d, n),
+                    fused_muls(d, n),
+                    "d={d} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq12_closed_form_matches_sum() {
+        for d in 2..=7u64 {
+            for n in 1..=9u64 {
+                assert_eq!(fused_muls_closed(d, n), fused_muls(d, n), "d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_never_exceeds_conventional() {
+        // App. A.1.3: F(d, N) ≤ C(d, N) uniformly over d ≥ 1, N ≥ 1.
+        for d in 1..=10u64 {
+            for n in 1..=10u64 {
+                assert!(
+                    fused_muls(d, n) <= conventional_muls(d, n),
+                    "F > C at d={d} n={n}: {} > {}",
+                    fused_muls(d, n),
+                    conventional_muls(d, n)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_cases_from_appendix() {
+        // N = 1: F = C = 0.
+        for d in 1..=8u64 {
+            assert_eq!(fused_muls(d, 1), 0);
+            assert_eq!(conventional_muls(d, 1), 0);
+        }
+        // N = 2: F = d + d^2, C = d + C(d+1,2) + d^2.
+        for d in 1..=8u64 {
+            assert_eq!(fused_muls(d, 2), (d + d * d) as u128);
+            assert_eq!(
+                conventional_muls(d, 2),
+                d as u128 + binomial(d + 1, 2) + (d * d) as u128
+            );
+        }
+    }
+
+    #[test]
+    fn asymptotic_gap_grows_linearly_in_n() {
+        // C / F ≈ Θ(N): check the ratio is monotone increasing in N and
+        // exceeds N/2 for d = 4.
+        let d = 4u64;
+        let mut prev_ratio = 0.0;
+        for n in 3..=9u64 {
+            let ratio = conventional_muls(d, n) as f64 / fused_muls(d, n) as f64;
+            assert!(ratio > prev_ratio, "ratio not increasing at n={n}");
+            assert!(ratio > n as f64 / 2.0 - 1.0, "ratio too small at n={n}: {ratio}");
+            prev_ratio = ratio;
+        }
+    }
+
+    #[test]
+    fn paper_headline_point() {
+        // d = N = 7: the regime of the paper's headline 5.5× CPU speedup.
+        let f = fused_muls(7, 7) as f64;
+        let c = conventional_muls(7, 7) as f64;
+        assert!(c / f > 4.0, "expected a large multiplication-count gap, got {}", c / f);
+    }
+}

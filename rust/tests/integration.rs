@@ -1,0 +1,261 @@
+//! Integration tests across the full stack: golden files pin the native
+//! engine to the Python oracle; the PJRT runtime executes real artifacts
+//! and is pinned to the native engine; the coordinator routes between
+//! them. Tests skip gracefully (with a message) when `make artifacts` has
+//! not been run.
+
+use std::path::PathBuf;
+
+use signax::coordinator::{Backend, Coordinator, CoordinatorConfig, Request};
+use signax::data::gbm::{gbm_batch, GbmConfig};
+use signax::deepsig::{ModelConfig, Params};
+use signax::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
+use signax::runtime::{ArtifactKind, EngineHandle, Registry};
+use signax::signature::{signature, signature_batch, signature_stream, signature_vjp};
+use signax::substrate::json::Json;
+use signax::substrate::propcheck::assert_close;
+use signax::substrate::rng::Rng;
+use signax::ta::SigSpec;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("MANIFEST.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn golden_files_pin_native_engine_to_python_oracle() {
+    let Some(dir) = artifact_dir() else { return };
+    let golden = dir.join("golden");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(&golden).expect("golden dir") {
+        let path = entry.expect("entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let blob = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let d = blob.get("d").unwrap().as_usize().unwrap();
+        let depth = blob.get("depth").unwrap().as_usize().unwrap();
+        let length = blob.get("length").unwrap().as_usize().unwrap();
+        let pathbuf = blob.get("path").unwrap().as_f32_vec().unwrap();
+        let spec = SigSpec::new(d, depth).unwrap();
+
+        // Signature.
+        let sig = signature(&pathbuf, length, &spec);
+        let expect_sig = blob.get("sig").unwrap().as_f32_vec().unwrap();
+        assert_close(&sig, &expect_sig, 2e-4, 1e-5);
+
+        // Words-basis logsignature.
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let logsig = logsignature_from_sig(&sig, &spec, &plan);
+        let expect_log = blob.get("logsig_words").unwrap().as_f32_vec().unwrap();
+        assert_close(&logsig, &expect_log, 5e-4, 5e-5);
+
+        // Gradient of sum(sig) — pins the reversibility backward to
+        // jax.grad through the oracle.
+        let ones = vec![1.0f32; spec.sig_len()];
+        let grad = signature_vjp(&pathbuf, length, &spec, &ones);
+        let expect_grad = blob.get("grad_sum_sig").unwrap().as_f32_vec().unwrap();
+        assert_close(&grad, &expect_grad, 2e-3, 2e-4);
+
+        // Final two stream entries.
+        let stream = signature_stream(&pathbuf, length, &spec);
+        let expect_tail = blob.get("stream_last2").unwrap().as_f32_vec().unwrap();
+        let tail = &stream[(length - 3) * spec.sig_len()..];
+        assert_close(tail, &expect_tail, 2e-4, 2e-5);
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected at least 5 golden files, saw {checked}");
+}
+
+#[test]
+fn xla_sig_artifact_matches_native_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, registry) = EngineHandle::spawn(dir).expect("engine");
+    let entry = registry
+        .find(ArtifactKind::Sig, 32, 128, 4, 4)
+        .expect("pallas showcase artifact")
+        .clone();
+    assert!(entry.pallas, "showcase artifact should embed the Pallas kernel");
+    let spec = SigSpec::new(4, 4).unwrap();
+    let mut rng = Rng::new(99);
+    let paths = signax::data::random_batch(&mut rng, 32, 128, 4, 0.1);
+    let xla_out = engine.forward(&entry, paths.clone()).expect("xla run");
+    let native = signature_batch(&paths, 32, 128, &spec, 4).unwrap();
+    assert_close(&xla_out, &native, 5e-3, 5e-4);
+}
+
+#[test]
+fn xla_logsig_artifact_matches_native_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, registry) = EngineHandle::spawn(dir).expect("engine");
+    let entry = registry
+        .find(ArtifactKind::LogSig, 32, 128, 4, 4)
+        .expect("logsig artifact")
+        .clone();
+    let spec = SigSpec::new(4, 4).unwrap();
+    let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+    let mut rng = Rng::new(7);
+    let paths = signax::data::random_batch(&mut rng, 32, 128, 4, 0.1);
+    let xla_out = engine.forward(&entry, paths.clone()).expect("xla run");
+    for b in 0..4 {
+        let one = &paths[b * 128 * 4..(b + 1) * 128 * 4];
+        let sig = signature(one, 128, &spec);
+        let native = logsignature_from_sig(&sig, &spec, &plan);
+        assert_close(
+            &xla_out[b * plan.dim()..(b + 1) * plan.dim()],
+            &native,
+            1e-2,
+            1e-3,
+        );
+    }
+}
+
+#[test]
+fn xla_siggrad_artifact_matches_reversibility_backward() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, registry) = EngineHandle::spawn(dir).expect("engine");
+    let Some(entry) = registry.find(ArtifactKind::SigGrad, 1, 128, 4, 4).cloned() else {
+        eprintln!("skipping: no siggrad artifact (sweep=none?)");
+        return;
+    };
+    let spec = SigSpec::new(4, 4).unwrap();
+    let mut rng = Rng::new(13);
+    let path = signax::data::random_path(&mut rng, 128, 4, 0.1);
+    let cot = rng.normal_vec(spec.sig_len(), 1.0);
+    let xla_grad = engine.grad(&entry, path.clone(), cot.clone()).expect("xla grad");
+    let native = signature_vjp(&path, 128, &spec, &cot);
+    assert_close(&xla_grad, &native, 1e-2, 1e-3);
+}
+
+#[test]
+fn coordinator_routes_matching_requests_to_xla() {
+    let Some(dir) = artifact_dir() else { return };
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifact_dir: Some(dir),
+        ..Default::default()
+    })
+    .expect("coordinator");
+    assert!(coord.has_xla());
+    let mut rng = Rng::new(5);
+    let spec = SigSpec::new(4, 4).unwrap();
+
+    // Matching shape -> XLA (through the batcher).
+    let path = signax::data::random_path(&mut rng, 128, 4, 0.1);
+    let resp = coord
+        .call(Request::Signature { path: path.clone(), stream: 128, d: 4, depth: 4 })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Xla);
+    assert_close(&resp.values, &signature(&path, 128, &spec), 5e-3, 5e-4);
+
+    // Non-matching shape -> native fallback.
+    let short = signax::data::random_path(&mut rng, 16, 4, 0.1);
+    let resp = coord
+        .call(Request::Signature { path: short.clone(), stream: 16, d: 4, depth: 4 })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.xla_requests, 1);
+    assert_eq!(snap.native_requests, 1);
+}
+
+#[test]
+fn coordinator_batches_concurrent_requests() {
+    let Some(dir) = artifact_dir() else { return };
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifact_dir: Some(dir),
+        ..Default::default()
+    })
+    .expect("coordinator");
+    let mut rng = Rng::new(21);
+    let spec = SigSpec::new(4, 4).unwrap();
+    let paths: Vec<Vec<f32>> =
+        (0..8).map(|_| signax::data::random_path(&mut rng, 128, 4, 0.1)).collect();
+    let reqs: Vec<Request> = paths
+        .iter()
+        .map(|p| Request::Signature { path: p.clone(), stream: 128, d: 4, depth: 4 })
+        .collect();
+    let resps = coord.call_many(reqs);
+    for (p, r) in paths.iter().zip(resps) {
+        let r = r.expect("response");
+        assert_eq!(r.backend, Backend::Xla);
+        assert_close(&r.values, &signature(p, 128, &spec), 5e-3, 5e-4);
+    }
+    let snap = coord.metrics().snapshot();
+    // 8 requests coalesced into at most a few padded batches of 32.
+    assert!(snap.batches <= 3, "batches={}", snap.batches);
+    assert_eq!(snap.real_rows, 8);
+}
+
+#[test]
+fn xla_train_step_learns_and_matches_native_training() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, registry) = EngineHandle::spawn(dir).expect("engine");
+    let entry = registry.train().expect("train artifact").clone();
+    let cfg = ModelConfig {
+        d_in: entry.d,
+        hidden: entry.hidden,
+        d_out: entry.d_out,
+        depth: entry.depth,
+    };
+    let mut rng = Rng::new(1234);
+    let p0 = Params::init(&cfg, &mut rng);
+    let gcfg = GbmConfig { stream: entry.length, ..Default::default() };
+    let (x, y) = gbm_batch(&mut rng, entry.batch, &gcfg);
+
+    // A few XLA steps: loss must be finite and decrease overall.
+    let mut bufs = p0.to_buffers();
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..20 {
+        let (new_bufs, loss) =
+            engine.train_step(&entry, bufs, x.clone(), y.clone(), 0.5).expect("train step");
+        bufs = new_bufs;
+        assert!(loss.is_finite());
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    assert!(
+        last < first.unwrap(),
+        "XLA training did not reduce loss: {first:?} -> {last}"
+    );
+
+    // One step from identical params must match the native trainer closely
+    // (same math, both f32).
+    let mut native_p = p0.clone();
+    let native_loss = signax::deepsig::train_step(
+        &cfg,
+        &mut native_p,
+        &x,
+        &y,
+        0.5,
+        signax::deepsig::SigBackend::Fused,
+        4,
+    );
+    let (xla_bufs, xla_loss) =
+        engine.train_step(&entry, p0.to_buffers(), x.clone(), y.clone(), 0.5).expect("step");
+    assert!(
+        (native_loss - xla_loss).abs() < 5e-3 * (1.0 + native_loss.abs()),
+        "losses diverge: native {native_loss} vs xla {xla_loss}"
+    );
+    let xla_p = Params::from_buffers(&cfg, &xla_bufs);
+    assert_close(&xla_p.w_out, &native_p.w_out, 5e-2, 5e-3);
+}
+
+#[test]
+fn manifest_registry_consistent_with_disk() {
+    let Some(dir) = artifact_dir() else { return };
+    let registry = Registry::load(&dir).expect("registry");
+    assert!(!registry.entries.is_empty());
+    for e in &registry.entries {
+        let p = registry.path_of(e);
+        assert!(p.exists(), "missing artifact file {p:?}");
+        let head = std::fs::read_to_string(&p).unwrap();
+        assert!(head.starts_with("HloModule"), "{p:?} is not HLO text");
+    }
+}
