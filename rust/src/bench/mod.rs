@@ -8,6 +8,8 @@
 //! - `opcount`: the App. A.1.3 multiplication-count table (F vs C).
 //! - `path`: the §4.2 O(1)-vs-recompute interval-query comparison.
 //! - `memory`: the App. D.2 reversibility-vs-tape memory comparison.
+//! - `backward`: serial vs chunked-Chen stream-parallel backward over
+//!   long single streams; also writes `BENCH_backward.json`.
 //!
 //! Rows mirror the paper's: `esig_like`, `iisignature_like` (baselines),
 //! `signax CPU (no parallel)`, `signax CPU (parallel)` and `signax XLA`
@@ -17,4 +19,4 @@
 
 pub mod tables;
 
-pub use tables::{run_table, table_ids, BenchCtx, Scale};
+pub use tables::{backward_json, run_table, table_ids, BenchCtx, Scale};

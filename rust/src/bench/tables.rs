@@ -1,11 +1,15 @@
 //! Table definitions and execution.
 
 use crate::baselines::{esig_like, iisignature_like};
-use crate::logsignature::{logsignature_from_sig, logsignature_vjp, LogSigBasis, LogSigPlan};
+use crate::logsignature::{
+    logsignature_from_sig, logsignature_vjp, logsignature_vjp_with, LogSigBasis, LogSigPlan,
+};
 use crate::path::Path;
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
 use crate::signature::backward::signature_batch_vjp;
-use crate::signature::{signature, signature_batch, signature_vjp, signature_with, SigConfig};
+use crate::signature::{
+    signature, signature_batch, signature_vjp, signature_vjp_with, signature_with, SigConfig,
+};
 use crate::substrate::benchlib::{bench, black_box, BenchConfig, Table};
 use crate::substrate::pool::default_threads;
 use crate::substrate::rng::Rng;
@@ -124,7 +128,7 @@ impl BenchCtx {
 pub fn table_ids() -> Vec<&'static str> {
     vec![
         "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16",
-        "opcount", "path", "memory",
+        "opcount", "path", "memory", "backward",
     ]
 }
 
@@ -178,6 +182,7 @@ pub fn run_table(ctx: &BenchCtx, id: &str) -> anyhow::Result<Table> {
         "opcount" => return Ok(opcount_table(ctx)),
         "path" => return Ok(path_table(ctx)),
         "memory" => return Ok(memory_table(ctx)),
+        "backward" => return Ok(backward_table(ctx)),
         _ => {}
     }
     let spec = spec_for(id).ok_or_else(|| anyhow::anyhow!("unknown table {id:?}"))?;
@@ -398,8 +403,9 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
 
         // --- signax CPU (parallel) ---
         // Batch >= 2: parallel over the batch. Batch 1: chunked stream
-        // reduction (forward only; backward is stream-serial, App. C.3,
-        // so the batch-1 backward cell equals the serial path).
+        // reduction for the forward, and the chunked Chen-identity
+        // stream-parallel backward (signature::backward) for the VJPs —
+        // the paper's App. C.3 left this cell blank; we fill it.
         let parallel_cell = match (tspec.op, batch) {
             (Op::SigFwd, 1) => {
                 let scfg = SigConfig::parallel(ctx.threads);
@@ -416,7 +422,19 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                 })
                 .best_secs(),
             ),
-            (Op::SigBwd, 1) => None, // no stream-parallel backward (paper)
+            (Op::SigBwd, 1) => {
+                let scfg = SigConfig::parallel(ctx.threads);
+                Some(
+                    bench(&cfg, || {
+                        black_box(
+                            signature_vjp_with(&paths, stream, &sspec, &scfg, &cot)
+                                .unwrap()
+                                .grad_path,
+                        );
+                    })
+                    .best_secs(),
+                )
+            }
             (Op::SigBwd, _) => Some(
                 bench(&cfg, || {
                     black_box(
@@ -449,7 +467,20 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                     .best_secs(),
                 )
             }
-            (Op::LogSigBwd, 1) => None,
+            (Op::LogSigBwd, 1) => {
+                let wp = plan.as_ref().unwrap();
+                let gcot: Vec<f32> = rng.normal_vec(wp.dim(), 1.0);
+                let scfg = SigConfig::parallel(ctx.threads);
+                Some(
+                    bench(&cfg, || {
+                        black_box(
+                            logsignature_vjp_with(&paths, stream, &sspec, wp, &scfg, &gcot)
+                                .unwrap(),
+                        );
+                    })
+                    .best_secs(),
+                )
+            }
             (Op::LogSigBwd, _) => {
                 let wp = plan.as_ref().unwrap();
                 let gcot: Vec<f32> = rng.normal_vec(wp.dim(), 1.0);
@@ -637,6 +668,87 @@ fn memory_table(ctx: &BenchCtx) -> Table {
     table
 }
 
+/// Tentpole benchmark: serial vs chunked-Chen stream-parallel backward
+/// over long single streams (batch 1, channels=4 depth=4), the regime the
+/// paper's App. C.3 declared serial. Also records the machine-readable
+/// perf trajectory to `BENCH_backward.json` in the working directory.
+fn backward_table(ctx: &BenchCtx) -> Table {
+    let lengths: Vec<usize> = match ctx.scale {
+        Scale::Paper => vec![512, 2048, 8192],
+        Scale::Small => vec![256, 1024, 4096],
+        Scale::Ci => vec![64, 256],
+    };
+    let cfg = ctx.scale.bench_config();
+    let spec = SigSpec::new(4, 4).expect("spec");
+    let threads = ctx.threads;
+    let cols = lengths.iter().map(|l| l.to_string()).collect();
+    let mut table = Table::new(
+        &format!(
+            "Stream-parallel backward (chunked Chen identity), channels=4 depth=4 threads={threads}"
+        ),
+        "Stream length",
+        cols,
+    );
+    let mut serial_row = vec![];
+    let mut parallel_row = vec![];
+    let mut records = vec![];
+    for &l in &lengths {
+        let mut rng = Rng::new(0xBAC ^ l as u64);
+        let path = crate::data::random_path(&mut rng, l, 4, 0.1);
+        let cot = rng.normal_vec(spec.sig_len(), 1.0);
+        let serial = bench(&cfg, || {
+            black_box(signature_vjp(&path, l, &spec, &cot));
+        })
+        .best_secs();
+        let pcfg = SigConfig::parallel(threads);
+        let parallel = bench(&cfg, || {
+            black_box(signature_vjp_with(&path, l, &spec, &pcfg, &cot).unwrap().grad_path);
+        })
+        .best_secs();
+        serial_row.push(Some(serial));
+        parallel_row.push(Some(parallel));
+        records.push((l, threads, serial, parallel));
+    }
+    let parallel_label = format!("chunked Chen ({threads} threads)");
+    table.push_row("serial reverse sweep", serial_row);
+    table.push_row(&parallel_label, parallel_row);
+    table.push_ratio_rows("serial reverse sweep", &[parallel_label.as_str()]);
+    // Machine-readable record for the perf trajectory; best-effort (a
+    // read-only working directory must not fail the table) and skipped
+    // under `cargo test` so the smoke test leaves no droppings.
+    if !cfg!(test) {
+        // hw_threads records machine capability (same meaning as the
+        // standalone bench); per-point `threads` records what was used.
+        let json = backward_json(default_threads(), &records);
+        if let Err(e) = std::fs::write("BENCH_backward.json", json) {
+            eprintln!("note: could not write BENCH_backward.json: {e}");
+        }
+    }
+    table
+}
+
+/// Render backward bench records as `BENCH_backward.json` (no serde
+/// offline; the format is flat enough to emit by hand). Shared by the
+/// `backward` table and `benches/backward_scaling.rs` so both producers
+/// write one schema: `points[]` of `(stream, threads, serial_s,
+/// parallel_s, speedup)` under top-level `hw_threads`.
+pub fn backward_json(hw_threads: usize, records: &[(usize, usize, f64, f64)]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"backward\",\n");
+    s.push_str("  \"channels\": 4,\n  \"depth\": 4,\n");
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(stream, threads, serial, parallel)) in records.iter().enumerate() {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"stream\": {stream}, \"threads\": {threads}, \"serial_s\": {serial:.9}, \"parallel_s\": {parallel:.9}, \"speedup\": {:.3}}}{comma}\n",
+            serial / parallel
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -692,6 +804,24 @@ mod tests {
 
         let t = run_table(&ctx, "memory").unwrap();
         assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn backward_table_smoke_and_json() {
+        let ctx = BenchCtx { scale: Scale::Ci, threads: 2, xla: None };
+        let t = run_table(&ctx, "backward").unwrap();
+        let serial = t.rows.iter().find(|r| r.label == "serial reverse sweep").unwrap();
+        assert!(serial.cells.iter().all(|c| c.is_some()));
+        assert!(t.rows.iter().any(|r| r.label.starts_with("Ratio chunked Chen")));
+        // JSON rendering is well-formed enough for the in-tree parser.
+        let json = backward_json(8, &[(2048, 8, 1.0, 0.25), (8192, 8, 4.0, 1.0)]);
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("hw_threads").and_then(|v| v.as_f64()), Some(8.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].get("stream").and_then(|v| v.as_f64()), Some(2048.0));
+        assert_eq!(pts[0].get("threads").and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(4.0));
     }
 
     #[test]

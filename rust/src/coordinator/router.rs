@@ -16,7 +16,7 @@ use super::metrics::Metrics;
 use super::session::SessionManager;
 use crate::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
-use crate::signature::{signature, signature_vjp};
+use crate::signature::{signature, signature_vjp_with, SigConfig};
 use crate::ta::SigSpec;
 
 /// Kinds encoded into [`BatchShape::kind`].
@@ -286,9 +286,15 @@ impl Coordinator {
             }
             Request::SignatureGrad { path, stream, d, depth, cotangent } => {
                 let spec = SigSpec::new(d, depth)?;
-                anyhow::ensure!(path.len() == stream * d, "bad path buffer");
-                anyhow::ensure!(cotangent.len() == spec.sig_len(), "bad cotangent");
-                signature_vjp(&path, stream, &spec, &cotangent)
+                // Shape validation happens inside the VJP; long streams run
+                // the chunked Chen-identity backward. Per-request stream
+                // parallelism is capped: the coordinator already serves
+                // requests concurrently (one caller thread each), so
+                // uncapped native_threads here would multiply into
+                // requests × cores scoped workers under load.
+                let threads = self.cfg.native_threads.min(4);
+                let cfg = SigConfig { threads, ..SigConfig::serial() };
+                signature_vjp_with(&path, stream, &spec, &cfg, &cotangent)?.grad_path
             }
         };
         self.metrics.native_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -358,7 +364,45 @@ mod tests {
                 cotangent: cot.clone(),
             })
             .unwrap();
-        assert_close(&resp.values, &signature_vjp(&path, 5, &spec, &cot), 1e-6, 1e-7);
+        // Short stream: the router's parallel config falls back to the
+        // serial sweep, so this is bitwise the serial VJP.
+        assert_close(
+            &resp.values,
+            &crate::signature::signature_vjp(&path, 5, &spec, &cot),
+            1e-6,
+            1e-7,
+        );
+    }
+
+    #[test]
+    fn native_grad_long_stream_uses_parallel_backward() {
+        let c = native();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(30);
+        let stream = 96;
+        let path = rng.normal_vec(stream * 2, 0.1);
+        let cot = rng.normal_vec(spec.sig_len(), 1.0);
+        let resp = c
+            .call(Request::SignatureGrad {
+                path: path.clone(),
+                stream,
+                d: 2,
+                depth: 3,
+                cotangent: cot.clone(),
+            })
+            .unwrap();
+        let serial = crate::signature::signature_vjp(&path, stream, &spec, &cot);
+        assert_close(&resp.values, &serial, 2e-3, 1e-4);
+        // Mismatched cotangent shape is a clean error, not a panic.
+        assert!(c
+            .call(Request::SignatureGrad {
+                path,
+                stream,
+                d: 2,
+                depth: 3,
+                cotangent: vec![0.0; spec.sig_len() - 1],
+            })
+            .is_err());
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!   handwritten backward passes exploiting signature reversibility
 //!   (App. C), the Lyndon/Words logsignature bases (§4.3, App. A.2), and
 //!   the `Path` precomputation class with O(1) interval queries (§4.2).
+//!   Beyond the paper, the backward pass is parallel over the *stream* as
+//!   well as the batch: a chunked Chen-identity factorisation
+//!   (`Sig = L_c ⊠ M_c ⊠ R_c`) derives per-chunk cotangents with two
+//!   ⊠-VJPs so the reversible reverse sweeps run concurrently — see
+//!   [`signature::backward`].
 //! - **Accelerator runtime** ([`runtime`]): loads AOT-compiled HLO-text
 //!   artifacts (produced by `python/compile/aot.py` from JAX + Pallas) and
 //!   executes them on a PJRT client. This is the reproduction's analogue of

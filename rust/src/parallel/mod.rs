@@ -3,27 +3,37 @@
 //! splitting the increments into chunks, computing each chunk's signature
 //! independently (each with the fused multiply-exponentiate), and combining
 //! the chunk signatures with ⊠.
+//!
+//! The same chunk decomposition drives the stream-parallel *backward* pass
+//! ([`crate::signature::backward`]): Chen's identity factors the full
+//! signature as `L_c ⊠ M_c ⊠ R_c` around each chunk, so per-chunk
+//! cotangents follow from two ⊠-VJPs and the per-chunk reverse sweeps run
+//! concurrently. [`chunk_signatures`] is the shared first stage.
 
 use crate::substrate::pool::{chunk_ranges, parallel_map_indexed};
 use crate::ta::fused::fused_mexp;
 use crate::ta::mul::mul_assign;
 use crate::ta::{SigSpec, Workspace};
 
-/// Compute the signature of the path given by `point(0..n_points)` using a
-/// chunked parallel reduction over the stream dimension. Returns the
-/// signature (identity-initialised; callers fold in any `initial`).
-pub fn reduce_signature<'a, F>(
+/// Compute the per-chunk signatures `M_c` of the path given by
+/// `point(0..n_points)`, one chunk per thread, in parallel.
+///
+/// Chunk `c` covers increments `[s, e)` of its range — the sub-path points
+/// `s..=e` — so `M_0 ⊠ M_1 ⊠ ... = Sig(path)` by Chen's identity. Returns
+/// the increment ranges alongside the identity-initialised chunk
+/// signatures; both the forward reduction and the stream-parallel backward
+/// build on this.
+pub fn chunk_signatures<'a, F>(
     spec: &SigSpec,
     n_points: usize,
     point: &F,
     threads: usize,
-) -> Vec<f32>
+) -> (Vec<(usize, usize)>, Vec<Vec<f32>>)
 where
     F: Fn(usize) -> &'a [f32] + Sync,
 {
     let n_incr = n_points - 1;
     let ranges = chunk_ranges(n_incr, threads);
-    // Each chunk covers increments [s, e): the sub-path points s..=e.
     let chunk_sigs = parallel_map_indexed(ranges.len(), ranges.len(), |ci| {
         let (s, e) = ranges[ci];
         let mut ws = Workspace::new(spec);
@@ -40,6 +50,22 @@ where
         }
         sig
     });
+    (ranges, chunk_sigs)
+}
+
+/// Compute the signature of the path given by `point(0..n_points)` using a
+/// chunked parallel reduction over the stream dimension. Returns the
+/// signature (identity-initialised; callers fold in any `initial`).
+pub fn reduce_signature<'a, F>(
+    spec: &SigSpec,
+    n_points: usize,
+    point: &F,
+    threads: usize,
+) -> Vec<f32>
+where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    let (_, chunk_sigs) = chunk_signatures(spec, n_points, point, threads);
     // Combine left-to-right (few chunks; a tree would not help here).
     let mut iter = chunk_sigs.into_iter();
     let mut acc = iter.next().expect("at least one chunk");
@@ -99,6 +125,31 @@ mod tests {
         let spec = SigSpec::new(2, 2).unwrap();
         let sigs = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         assert_eq!(tree_combine(&spec, &sigs, 1, 4), sigs);
+    }
+
+    #[test]
+    fn chunk_signatures_cover_and_combine() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(11);
+        let stream = 37;
+        let path = rng.normal_vec(stream * 2, 0.2);
+        let point = |i: usize| &path[i * 2..(i + 1) * 2];
+        let (ranges, sigs) = chunk_signatures(&spec, stream, &point, 5);
+        assert_eq!(ranges.len(), sigs.len());
+        // Ranges tile the increments exactly.
+        let mut pos = 0;
+        for &(s, e) in &ranges {
+            assert_eq!(s, pos);
+            pos = e;
+        }
+        assert_eq!(pos, stream - 1);
+        // Chen: the ⊠-product of the chunk signatures is the signature.
+        let mut acc = sigs[0].clone();
+        for s in &sigs[1..] {
+            mul_assign(&spec, &mut acc, s);
+        }
+        let serial = crate::signature::signature(&path, stream, &spec);
+        assert_close(&acc, &serial, 1e-3, 1e-4);
     }
 
     #[test]

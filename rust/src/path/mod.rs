@@ -246,6 +246,71 @@ mod tests {
     }
 
     #[test]
+    fn update_matches_fresh_bit_for_bit() {
+        // Resumption is *exact*: extend_points continues from the stored
+        // running state, so an incrementally-extended Path must reproduce
+        // the same sequence of fused ops — and therefore identical bits —
+        // on both `sigs` and `inv_sigs`, even across several updates.
+        property("update == rebuild bitwise", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let first = g.usize_in(2, 10);
+            let second = g.usize_in(1, 8);
+            let third = g.usize_in(1, 8);
+            g.label(format!("d={d} n={n} first={first} +{second} +{third}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let total = first + second + third;
+            let pts = random_path(g.rng(), total, d);
+            let mut incremental = Path::new(&spec, &pts[..first * d], first).unwrap();
+            incremental.update(&pts[first * d..(first + second) * d], second).unwrap();
+            incremental.update(&pts[(first + second) * d..], third).unwrap();
+            let fresh = Path::new(&spec, &pts, total).unwrap();
+            assert_eq!(incremental.len(), fresh.len());
+            // Private fields are visible to this child test module: compare
+            // the full precomputed buffers, not just derived views.
+            assert_eq!(incremental.sigs, fresh.sigs, "expanding signatures differ");
+            assert_eq!(incremental.inv_sigs, fresh.inv_sigs, "inverted signatures differ");
+            assert_eq!(incremental.points, fresh.points);
+        });
+    }
+
+    #[test]
+    fn distant_interval_query_precision() {
+        // The paper cautions that I_i ⊠ S_j cancels large terms for
+        // distant (i, j); pin the realised precision with a property test
+        // over intervals spanning at least half the stream. Bounds are
+        // looser than the short-interval test above, reflecting the
+        // cancellation, but must stay within the documented envelope.
+        property("distant query precision", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(64, 160);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            // Gentler increments than random_path: distant-interval
+            // cancellation compounds with signature magnitude.
+            let mut pts = vec![0.0f32; stream * d];
+            for i in 1..stream {
+                for c in 0..d {
+                    pts[i * d + c] = pts[(i - 1) * d + c] + g.rng().normal_f32() * 0.1;
+                }
+            }
+            let path = Path::new(&spec, &pts, stream).unwrap();
+            for _ in 0..4 {
+                let i = g.usize_in(0, stream / 2 - 1);
+                let j = g.usize_in(i + stream / 2, stream - 1);
+                let fast = path.query(i, j).unwrap();
+                let slow = path.query_recompute(i, j).unwrap();
+                assert_close(&fast, &slow, 1e-2, 1e-3);
+                assert!(
+                    crate::substrate::propcheck::rel_l2(&fast, &slow) < 1e-2,
+                    "rel l2 blowup on [{i}, {j}]"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn logsig_queries_match_direct() {
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(9);

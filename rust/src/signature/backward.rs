@@ -9,12 +9,39 @@
 //! method, exact here because the path is piecewise affine). Each reverse
 //! step reuses the same fused multiply-exponentiate as the forward pass.
 //!
-//! As in the paper (App. C.3), backpropagation is serial over the stream
-//! (reversibility forfeits the reduction tree) and parallel over the batch.
+//! ## Stream-parallel backward via the chunked Chen identity
+//!
+//! The paper (App. C.3) only parallelises the backward pass over the batch
+//! dimension, because the reverse sweep itself is a serial recurrence. This
+//! module additionally parallelises over the *stream*: split the increments
+//! into per-thread chunks with signatures `M_c`, so that by Chen's identity
+//!
+//! `Sig = L_c ⊠ M_c ⊠ R_c`,  `L_c = M_0 ⊠ … ⊠ M_{c-1}`,  `R_c = M_{c+1} ⊠ … `
+//!
+//! Two serial O(chunks) sweeps produce every prefix `L_c` and suffix
+//! product `T_c = M_c ⊠ R_c`; the cotangent of each `M_c` then follows from
+//! two ⊠-VJPs (`out = L_c ⊠ T_c`, then `T_c = M_c ⊠ T_{c+1}`), and each
+//! chunk runs the ordinary reversible reverse sweep over its own points —
+//! **fully in parallel**. Total work is ≈1.5× the serial backward (each
+//! increment pays one extra fused forward step inside its chunk), so at
+//! `T` threads the wall-clock speedup approaches `T / 1.5`.
+//!
+//! The parallel path engages when [`SigConfig::threads`]` > 1` and the
+//! effective stream has at least [`PARALLEL_BACKWARD_MIN_POINTS`] points;
+//! shorter streams and `threads == 1` fall back to the serial sweep (the
+//! chunk bookkeeping costs more than it saves on tiny inputs, and the
+//! serial sweep is the bitwise-reference behaviour).
 
 use super::SigConfig;
+use crate::parallel::chunk_signatures;
+use crate::substrate::pool::parallel_map_indexed;
 use crate::ta::fused::{fused_mexp, fused_mexp_vjp};
+use crate::ta::mul::{mul_assign, mul_into, mul_vjp};
 use crate::ta::{SigSpec, Workspace};
+
+/// Minimum effective points before the chunked Chen backward engages;
+/// below this the serial reverse sweep wins on constant factors.
+pub const PARALLEL_BACKWARD_MIN_POINTS: usize = 32;
 
 /// Result of a signature VJP.
 #[derive(Clone, Debug)]
@@ -27,7 +54,7 @@ pub struct SigVjpResult {
     pub grad_initial: Option<Vec<f32>>,
 }
 
-/// Core reverse sweep over an *effective* point sequence.
+/// Core serial reverse sweep over an *effective* point sequence.
 ///
 /// `final_sig` must be the forward output `initial ⊠ Sig(points)`. Returns
 /// `(grad_points (E,d), grad_initial)`; `grad_initial` is the cotangent
@@ -70,8 +97,118 @@ fn reverse_sweep<'a>(
     (grad_points, g_state)
 }
 
+/// Chunked stream-parallel reverse sweep (see the module docs).
+///
+/// Returns `(grad_points (n_points, d), grad_initial)`; `grad_initial` is
+/// the cotangent on `initial`, and is left at zero when no initial
+/// signature is configured (the caller discards it in that case).
+fn parallel_reverse_sweep<'a, F>(
+    spec: &SigSpec,
+    n_points: usize,
+    point: F,
+    initial: Option<&[f32]>,
+    g: &[f32],
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>)
+where
+    F: Fn(usize) -> &'a [f32] + Sync,
+{
+    let d = spec.d();
+    let len = spec.sig_len();
+    // Stage 1 (parallel): per-chunk signatures M_c, identical to the
+    // forward reduction's first stage.
+    let (ranges, chunk_sigs) = chunk_signatures(spec, n_points, &point, threads);
+    let chunks = ranges.len();
+
+    // Stage 2 (serial, O(chunks)): prefix states L_c = initial ⊠ M_0 ⊠ …
+    // ⊠ M_{c-1} entering each chunk…
+    let mut prefixes = vec![0.0f32; chunks * len];
+    {
+        let mut acc = match initial {
+            Some(init) => init.to_vec(),
+            None => spec.zeros(),
+        };
+        for c in 0..chunks {
+            prefixes[c * len..(c + 1) * len].copy_from_slice(&acc);
+            if c + 1 < chunks {
+                mul_assign(spec, &mut acc, &chunk_sigs[c]);
+            }
+        }
+    }
+    // …and suffix products T_c = M_c ⊠ … ⊠ M_{chunks-1} (right to left),
+    // so Sig-with-initial = L_c ⊠ T_c for every c.
+    let mut suffixes = vec![0.0f32; chunks * len];
+    suffixes[(chunks - 1) * len..].copy_from_slice(&chunk_sigs[chunks - 1]);
+    for c in (0..chunks - 1).rev() {
+        let (lo, hi) = suffixes.split_at_mut((c + 1) * len);
+        mul_into(spec, &chunk_sigs[c], &hi[..len], &mut lo[c * len..(c + 1) * len]);
+    }
+
+    // Cotangent left on the initial state: out = initial ⊠ T_0. Skipped
+    // when no initial is configured — the caller discards it there, and
+    // this is a full ⊠-VJP.
+    let mut grad_initial = spec.zeros();
+    if initial.is_some() {
+        let init = &prefixes[..len]; // == initial
+        let mut g_t0 = spec.zeros();
+        mul_vjp(spec, init, &suffixes[..len], g, &mut grad_initial, &mut g_t0);
+    }
+
+    // Stage 3 (parallel): derive each chunk's cotangent with two ⊠-VJPs,
+    // then run the ordinary reversible reverse sweep inside the chunk.
+    let per_chunk = parallel_map_indexed(chunks, threads, |c| {
+        let (s, e) = ranges[c];
+        // out = L_c ⊠ T_c  ⇒  cotangent on the suffix from chunk c.
+        let mut g_suffix = spec.zeros();
+        let mut discard = spec.zeros();
+        mul_vjp(
+            spec,
+            &prefixes[c * len..(c + 1) * len],
+            &suffixes[c * len..(c + 1) * len],
+            g,
+            &mut discard,
+            &mut g_suffix,
+        );
+        // T_c = M_c ⊠ T_{c+1}  ⇒  cotangent on this chunk's signature.
+        let g_chunk = if c + 1 == chunks {
+            g_suffix
+        } else {
+            let mut g_chunk = spec.zeros();
+            discard.fill(0.0);
+            mul_vjp(
+                spec,
+                &chunk_sigs[c],
+                &suffixes[(c + 1) * len..(c + 2) * len],
+                &g_suffix,
+                &mut g_chunk,
+                &mut discard,
+            );
+            g_chunk
+        };
+        // M_c is an identity-initialised signature of points s..=e, so the
+        // serial reverse sweep applies to the chunk unchanged; the residual
+        // state cotangent is ∂/∂identity and is discarded.
+        let mut ws = Workspace::new(spec);
+        let (grads, _g_identity) =
+            reverse_sweep(spec, e - s + 1, |i| point(s + i), &chunk_sigs[c], &g_chunk, &mut ws);
+        grads
+    });
+
+    // Scatter-accumulate: adjacent chunks share their boundary point, so
+    // contributions add there.
+    let mut grad_points = vec![0.0f32; n_points * d];
+    for (c, grads) in per_chunk.into_iter().enumerate() {
+        let (s, _) = ranges[c];
+        for (k, &gv) in grads.iter().enumerate() {
+            grad_points[s * d + k] += gv;
+        }
+    }
+    (grad_points, grad_initial)
+}
+
 /// VJP of [`super::signature`]: given `g = ∂L/∂Sig(path)`, returns
-/// `∂L/∂path` (same shape as `path`).
+/// `∂L/∂path` (same shape as `path`). Serial; see [`signature_vjp_with`]
+/// for the stream-parallel and configurable version.
 pub fn signature_vjp(path: &[f32], stream: usize, spec: &SigSpec, g: &[f32]) -> Vec<f32> {
     signature_vjp_with(path, stream, spec, &SigConfig::serial(), g)
         .expect("valid path")
@@ -79,7 +216,13 @@ pub fn signature_vjp(path: &[f32], stream: usize, spec: &SigSpec, g: &[f32]) -> 
 }
 
 /// VJP of [`super::signature_with`] honouring basepoint / initial /
-/// inverse. Recomputes the forward pass internally (one O(L) fused sweep).
+/// inverse / threads.
+///
+/// With `threads == 1` (or a short stream) this recomputes the forward
+/// pass (one O(L) fused sweep) and unwinds it serially via reversibility;
+/// with `threads > 1` and at least [`PARALLEL_BACKWARD_MIN_POINTS`]
+/// effective points it runs the chunked Chen-identity backward described
+/// in the module docs, parallel over the stream.
 pub fn signature_vjp_with(
     path: &[f32],
     stream: usize,
@@ -87,13 +230,16 @@ pub fn signature_vjp_with(
     cfg: &SigConfig,
     g: &[f32],
 ) -> anyhow::Result<SigVjpResult> {
-    anyhow::ensure!(g.len() == spec.sig_len(), "cotangent has wrong length");
     let d = spec.d();
-    let eff_len = cfg.effective_len(stream);
-    // Forward (serial; cfg.threads only accelerates forward-only calls —
-    // see App. C.3 on why backward is not stream-parallel).
-    let forward_cfg = SigConfig { threads: 1, ..cfg.clone() };
-    let final_sig = super::forward::signature_with(path, stream, spec, &forward_cfg)?;
+    anyhow::ensure!(
+        g.len() == spec.sig_len(),
+        "cotangent has {} values, expected sig_len {}",
+        g.len(),
+        spec.sig_len()
+    );
+    // Shared with the forward pass; the parallel branch below never calls
+    // signature_with, so shapes must be validated here.
+    let eff_len = super::forward::check_path_with(path, stream, spec, cfg)?;
 
     let point = |i: usize| -> &[f32] {
         let i = if cfg.inverse { eff_len - 1 - i } else { i };
@@ -108,8 +254,18 @@ pub fn signature_vjp_with(
             None => &path[i * d..(i + 1) * d],
         }
     };
-    let mut ws = Workspace::new(spec);
-    let (grad_eff, g_initial) = reverse_sweep(spec, eff_len, point, &final_sig, g, &mut ws);
+
+    let threads = cfg.threads.max(1);
+    let (grad_eff, g_initial) = if threads > 1 && eff_len >= PARALLEL_BACKWARD_MIN_POINTS {
+        parallel_reverse_sweep(spec, eff_len, point, cfg.initial.as_deref(), g, threads)
+    } else {
+        // Serial: recompute the forward (one O(L) fused sweep) to obtain
+        // the final signature, then unwind it via reversibility.
+        let forward_cfg = SigConfig { threads: 1, ..cfg.clone() };
+        let final_sig = super::forward::signature_with(path, stream, spec, &forward_cfg)?;
+        let mut ws = Workspace::new(spec);
+        reverse_sweep(spec, eff_len, point, &final_sig, g, &mut ws)
+    };
 
     // Undo the effective-point mapping: reversal then basepoint.
     let unreversed: Vec<f32> = if cfg.inverse {
@@ -134,7 +290,10 @@ pub fn signature_vjp_with(
 /// `(stream - 1, sig_len)` — a cotangent for every prefix signature.
 ///
 /// Cotangents are *accumulated* onto the running state as the reverse sweep
-/// passes each prefix, so the cost stays one fused VJP per increment.
+/// passes each prefix, so the cost stays one fused VJP per increment. This
+/// entry point is serial over the stream: every increment's cotangent
+/// depends on all later prefix cotangents, so the chunked-Chen
+/// factorisation above does not apply to the per-prefix output.
 pub fn signature_stream_vjp(
     path: &[f32],
     stream: usize,
@@ -145,7 +304,12 @@ pub fn signature_stream_vjp(
     let len = spec.sig_len();
     anyhow::ensure!(stream >= 2, "need at least two points");
     anyhow::ensure!(path.len() == stream * d, "path buffer wrong length");
-    anyhow::ensure!(g.len() == (stream - 1) * len, "cotangent wrong shape");
+    anyhow::ensure!(
+        g.len() == (stream - 1) * len,
+        "cotangent has {} values, expected (stream-1) * sig_len = {}",
+        g.len(),
+        (stream - 1) * len
+    );
     let final_sig = super::forward::signature(path, stream, spec);
     let mut ws = Workspace::new(spec);
     let mut grad_path = vec![0.0f32; stream * d];
@@ -177,7 +341,9 @@ pub fn signature_stream_vjp(
     Ok(grad_path)
 }
 
-/// Batched VJP, parallel over the batch dimension (App. C.3).
+/// Batched VJP, parallel over the batch dimension (App. C.3) — and, when
+/// there are more threads than samples, additionally parallel over the
+/// stream within each sample via the chunked Chen backward.
 pub fn signature_batch_vjp(
     paths: &[f32],
     batch: usize,
@@ -188,14 +354,30 @@ pub fn signature_batch_vjp(
 ) -> anyhow::Result<Vec<f32>> {
     let len = spec.sig_len();
     let plen = stream * spec.d();
+    anyhow::ensure!(batch >= 1, "need at least one sample");
     anyhow::ensure!(paths.len() == batch * plen, "batch buffer wrong length");
-    anyhow::ensure!(g.len() == batch * len, "cotangent wrong shape");
+    anyhow::ensure!(
+        g.len() == batch * len,
+        "cotangent has {} values, expected batch * sig_len = {}",
+        g.len(),
+        batch * len
+    );
+    // Spread surplus threads across the stream dimension of each sample.
+    let stream_threads = (threads.max(1) / batch).max(1);
+    let cfg = SigConfig { threads: stream_threads, ..SigConfig::serial() };
     let grads = crate::substrate::pool::parallel_map_indexed(batch, threads, |b| {
-        signature_vjp(&paths[b * plen..(b + 1) * plen], stream, spec, &g[b * len..(b + 1) * len])
+        signature_vjp_with(
+            &paths[b * plen..(b + 1) * plen],
+            stream,
+            spec,
+            &cfg,
+            &g[b * len..(b + 1) * len],
+        )
+        .map(|r| r.grad_path)
     });
     let mut out = vec![0.0f32; batch * plen];
     for (b, gp) in grads.into_iter().enumerate() {
-        out[b * plen..(b + 1) * plen].copy_from_slice(&gp);
+        out[b * plen..(b + 1) * plen].copy_from_slice(&gp?);
     }
     Ok(out)
 }
@@ -204,7 +386,7 @@ pub fn signature_batch_vjp(
 mod tests {
     use super::*;
     use crate::signature::forward::{signature, signature_stream, signature_with};
-    use crate::substrate::propcheck::property;
+    use crate::substrate::propcheck::{assert_close, property};
     use crate::substrate::rng::Rng;
 
     fn random_path(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
@@ -384,6 +566,128 @@ mod tests {
                 assert_eq!(a, e);
             }
         }
+    }
+
+    #[test]
+    fn parallel_backward_matches_serial() {
+        // Acceptance: the chunked Chen backward reproduces the serial
+        // reverse sweep within the parallel_matches_serial bounds.
+        property("parallel backward == serial", 12, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(PARALLEL_BACKWARD_MIN_POINTS + 8, 220);
+            let threads = g.usize_in(2, 8);
+            g.label(format!("d={d} n={n} stream={stream} t={threads}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let path = random_path(g.rng(), stream, d);
+            let cot = g.normal_vec(spec.sig_len(), 1.0);
+            let serial = signature_vjp(&path, stream, &spec, &cot);
+            let cfg = SigConfig::parallel(threads);
+            let par = signature_vjp_with(&path, stream, &spec, &cfg, &cot).unwrap().grad_path;
+            assert_close(&par, &serial, 2e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn parallel_backward_with_basepoint_initial_and_inverse() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(91);
+        let stream = 64;
+        let path = random_path(&mut rng, stream, 2);
+        let init = signature(&random_path(&mut rng, 6, 2), 6, &spec);
+        let cot = rng.normal_vec(spec.sig_len(), 1.0);
+        for inverse in [false, true] {
+            let serial_cfg = SigConfig {
+                basepoint: Some(vec![0.2, -0.4]),
+                initial: Some(init.clone()),
+                inverse,
+                ..SigConfig::serial()
+            };
+            let par_cfg = SigConfig { threads: 5, ..serial_cfg.clone() };
+            let serial = signature_vjp_with(&path, stream, &spec, &serial_cfg, &cot).unwrap();
+            let par = signature_vjp_with(&path, stream, &spec, &par_cfg, &cot).unwrap();
+            assert_close(&par.grad_path, &serial.grad_path, 2e-3, 1e-4);
+            assert_close(
+                &par.grad_basepoint.unwrap(),
+                &serial.grad_basepoint.unwrap(),
+                2e-3,
+                1e-4,
+            );
+            assert_close(
+                &par.grad_initial.unwrap(),
+                &serial.grad_initial.unwrap(),
+                2e-3,
+                1e-4,
+            );
+        }
+    }
+
+    #[test]
+    fn short_streams_fall_back_to_serial_bitwise() {
+        // Below the threshold the parallel config must take the serial
+        // path and produce bit-identical gradients.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(14);
+        let stream = PARALLEL_BACKWARD_MIN_POINTS - 2;
+        let path = random_path(&mut rng, stream, 2);
+        let cot = rng.normal_vec(spec.sig_len(), 1.0);
+        let serial = signature_vjp(&path, stream, &spec, &cot);
+        let par = signature_vjp_with(&path, stream, &spec, &SigConfig::parallel(8), &cot)
+            .unwrap()
+            .grad_path;
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn batch_vjp_spreads_threads_over_streams() {
+        // batch 2 with 8 threads => 4-way stream parallelism per sample.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(21);
+        let (b, stream) = (2, 80);
+        let mut paths = vec![0.0f32; b * stream * 2];
+        for i in 0..b {
+            let p = random_path(&mut rng, stream, 2);
+            paths[i * stream * 2..(i + 1) * stream * 2].copy_from_slice(&p);
+        }
+        let g = rng.normal_vec(b * spec.sig_len(), 1.0);
+        let out = signature_batch_vjp(&paths, b, stream, &spec, &g, 8).unwrap();
+        for i in 0..b {
+            let single = signature_vjp(
+                &paths[i * stream * 2..(i + 1) * stream * 2],
+                stream,
+                &spec,
+                &g[i * spec.sig_len()..(i + 1) * spec.sig_len()],
+            );
+            assert_close(&out[i * stream * 2..(i + 1) * stream * 2], &single, 2e-3, 1e-4);
+        }
+    }
+
+    #[test]
+    fn vjp_entry_points_error_on_bad_shapes() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let len = spec.sig_len();
+        let path = vec![0.0f32; 10 * 2];
+        let cfg = SigConfig::serial();
+        let good_g = vec![0.0f32; len];
+        let short_g = vec![0.0f32; len - 1];
+        // Wrong cotangent length.
+        assert!(signature_vjp_with(&path, 10, &spec, &cfg, &short_g).is_err());
+        // Wrong path buffer length.
+        assert!(signature_vjp_with(&path, 11, &spec, &cfg, &good_g).is_err());
+        // Bad basepoint / initial shapes.
+        let bad_bp = SigConfig { basepoint: Some(vec![0.0; 3]), ..SigConfig::serial() };
+        assert!(signature_vjp_with(&path, 10, &spec, &bad_bp, &good_g).is_err());
+        let bad_init = SigConfig { initial: Some(vec![0.0; 2]), ..SigConfig::serial() };
+        assert!(signature_vjp_with(&path, 10, &spec, &bad_init, &good_g).is_err());
+        // Stream VJP shape checks.
+        let short_stream_g = vec![0.0f32; 9 * len - 1];
+        assert!(signature_stream_vjp(&path, 10, &spec, &short_stream_g).is_err());
+        assert!(signature_stream_vjp(&path, 1, &spec, &[]).is_err());
+        // Batch VJP shape checks.
+        let two_g = vec![0.0f32; 2 * len];
+        assert!(signature_batch_vjp(&path, 1, 10, &spec, &short_g, 2).is_err());
+        assert!(signature_batch_vjp(&path, 2, 10, &spec, &two_g, 2).is_err());
+        assert!(signature_batch_vjp(&[], 0, 10, &spec, &[], 2).is_err());
     }
 
     #[test]

@@ -27,6 +27,38 @@ fn check_path(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<()>
     Ok(())
 }
 
+/// Validate a path buffer *and* the config's basepoint/initial shapes;
+/// returns the effective point count (incl. basepoint). Shared by the
+/// forward pass and the backward pass (whose parallel branch never calls
+/// [`signature_with`], so it must not rely on the forward for checks).
+pub(crate) fn check_path_with(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    cfg: &SigConfig,
+) -> anyhow::Result<usize> {
+    check_path(path, stream, spec)?;
+    let d = spec.d();
+    let eff_len = cfg.effective_len(stream);
+    anyhow::ensure!(
+        eff_len >= 2,
+        "a path must have at least two points (incl. basepoint) to define a signature, got {}",
+        eff_len
+    );
+    if let Some(bp) = &cfg.basepoint {
+        anyhow::ensure!(bp.len() == d, "basepoint has {} channels, expected {d}", bp.len());
+    }
+    if let Some(init) = &cfg.initial {
+        anyhow::ensure!(
+            init.len() == spec.sig_len(),
+            "initial signature has {} values, expected {}",
+            init.len(),
+            spec.sig_len()
+        );
+    }
+    Ok(eff_len)
+}
+
 /// Serial signature of the increments `z_i = p_{i+1} - p_i` of a point
 /// view. `points(i)` must yield the i-th point as a slice of length d.
 /// Writes into `out` (which must be zeroed = identity, or hold `initial`).
@@ -63,25 +95,8 @@ pub fn signature_with(
     spec: &SigSpec,
     cfg: &SigConfig,
 ) -> anyhow::Result<Vec<f32>> {
-    check_path(path, stream, spec)?;
     let d = spec.d();
-    let eff_len = cfg.effective_len(stream);
-    anyhow::ensure!(
-        eff_len >= 2,
-        "a path must have at least two points (incl. basepoint) to define a signature, got {}",
-        eff_len
-    );
-    if let Some(bp) = &cfg.basepoint {
-        anyhow::ensure!(bp.len() == d, "basepoint has {} channels, expected {d}", bp.len());
-    }
-    if let Some(init) = &cfg.initial {
-        anyhow::ensure!(
-            init.len() == spec.sig_len(),
-            "initial signature has {} values, expected {}",
-            init.len(),
-            spec.sig_len()
-        );
-    }
+    let eff_len = check_path_with(path, stream, spec, cfg)?;
 
     // Materialise the effective point sequence accessor (with basepoint and
     // possible reversal for the inverted signature, §5.4).

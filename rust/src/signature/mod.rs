@@ -1,8 +1,9 @@
 //! The signature transform (§2) with every variant the paper's `signature`
 //! function provides (§5): stream mode, basepoint, initial condition,
 //! inversion, batch, CPU parallelism — plus the handwritten backward pass
-//! exploiting signature reversibility (§5.3, App. C) and the combine
-//! functions exploiting the group-like structure (§5.5).
+//! exploiting signature reversibility (§5.3, App. C), stream-parallel via
+//! the chunked Chen identity (see [`backward`]), and the combine functions
+//! exploiting the group-like structure (§5.5).
 //!
 //! Paths are flat `[f32]` buffers of shape `(stream, channels)` row-major;
 //! batches are `(batch, stream, channels)`.
@@ -11,7 +12,10 @@ pub mod backward;
 pub mod combine;
 pub mod forward;
 
-pub use backward::{signature_stream_vjp, signature_vjp, signature_vjp_with};
+pub use backward::{
+    signature_batch_vjp, signature_stream_vjp, signature_vjp, signature_vjp_with, SigVjpResult,
+    PARALLEL_BACKWARD_MIN_POINTS,
+};
 pub use combine::{multi_signature_combine, signature_combine, signature_combine_vjp};
 pub use forward::{
     signature, signature_batch, signature_stream, signature_stream_with, signature_with,
@@ -29,8 +33,10 @@ pub struct SigConfig {
     /// Compute the inverted signature `Sig(x)^{-1} = Sig(reverse(x))`
     /// (§5.4) instead.
     pub inverse: bool,
-    /// Worker threads for the chunked ⊠-reduction over the stream (§5.1).
-    /// `1` = serial (the paper's "CPU no parallel" column).
+    /// Worker threads for the chunked ⊠-reduction over the stream (§5.1),
+    /// used by both the forward pass and — via the chunked Chen-identity
+    /// factorisation in [`backward`] — the backward pass. `1` = serial
+    /// (the paper's "CPU no parallel" column).
     pub threads: usize,
 }
 

@@ -1,0 +1,121 @@
+//! A minimal, dependency-free stand-in for the `anyhow` crate, vendored so
+//! the workspace builds in offline containers (no registry access).
+//!
+//! Implements exactly the surface signax uses:
+//!
+//! - [`Error`]: an opaque error holding a rendered message (the source
+//!   chain is flattened into the message at conversion time).
+//! - [`Result`]: `Result<T, Error>` with a defaulted error type.
+//! - [`anyhow!`], [`bail!`], [`ensure!`]: the formatting macros.
+//! - `impl<E: std::error::Error> From<E> for Error` so `?` converts
+//!   standard errors, mirroring upstream anyhow's blanket conversion
+//!   (which is also why `Error` itself does not implement
+//!   `std::error::Error` — the two impls would overlap).
+
+use std::fmt;
+
+/// An error message, with any source chain pre-rendered into it.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (inline captures work,
+/// since the format tokens keep the caller's span).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs_two(x: usize) -> Result<usize> {
+        ensure!(x >= 2, "got {x}, need at least 2");
+        Ok(x)
+    }
+
+    fn io_convert() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        assert!(needs_two(3).is_ok());
+        let e = needs_two(1).unwrap_err();
+        assert_eq!(e.to_string(), "got 1, need at least 2");
+        let e = io_convert().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        let e: Error = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+        assert_eq!(format!("{e:?}"), "plain 7");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert!(bails().is_err());
+    }
+}
