@@ -1,0 +1,96 @@
+//! Session-streaming benchmark: feed throughput vs client threads, one
+//! streaming session per thread, everything served through
+//! `Coordinator::call`. The sharded `Arc<Mutex<Path>>` session table must
+//! scale this curve — a table-wide lock would flatline it. Writes the
+//! machine-readable record the perf trajectory tracks:
+//!
+//!     cargo bench --bench session_streaming       # -> BENCH_sessions.json
+//!
+//! Acceptance target: distinct-session feed throughput grows with client
+//! threads (>= 1.5x at 4 threads on a >= 4-way machine).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use signax::bench::sessions_json;
+use signax::coordinator::{Coordinator, CoordinatorConfig, Request, SessionId};
+use signax::substrate::benchlib::fmt_secs;
+use signax::substrate::pool::default_threads;
+use signax::substrate::rng::Rng;
+
+const D: usize = 3;
+const DEPTH: usize = 4;
+const FEED_POINTS: usize = 64;
+const FEEDS_PER_THREAD: usize = 200;
+
+fn main() -> anyhow::Result<()> {
+    let hw = default_threads();
+    let mut axis: Vec<usize> = [1usize, 2, 4, 8].into_iter().filter(|&t| t <= hw).collect();
+    if axis.is_empty() {
+        axis.push(1);
+    }
+    // No silent caps: say so when the acceptance point is not measurable.
+    for &t in &[2usize, 4, 8] {
+        if !axis.contains(&t) {
+            eprintln!(
+                "note: skipping {t}-thread series (machine has {hw} hardware threads)"
+            );
+        }
+    }
+    println!("{:<8} {:>8} {:>12} {:>12}", "threads", "feeds", "wall", "feeds/s");
+
+    let mut records: Vec<(usize, f64, f64)> = vec![];
+    for &threads in &axis {
+        let coord = Coordinator::new(CoordinatorConfig::native_only())?;
+        // One session per client thread, opened up-front through `call`.
+        let ids: Vec<SessionId> = (0..threads)
+            .map(|k| {
+                let mut rng = Rng::new(0x5E55 ^ k as u64);
+                let resp = coord.call(Request::OpenStream {
+                    points: signax::data::random_path(&mut rng, 4, D, 0.1),
+                    stream: 4,
+                    d: D,
+                    depth: DEPTH,
+                })?;
+                resp.session.ok_or_else(|| anyhow::anyhow!("open returned no session id"))
+            })
+            .collect::<anyhow::Result<Vec<SessionId>>>()?;
+        let errors = AtomicU64::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for (k, &id) in ids.iter().enumerate() {
+                let coord = &coord;
+                let errors = &errors;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(0xFEED ^ k as u64);
+                    for _ in 0..FEEDS_PER_THREAD {
+                        let points = rng.normal_vec(FEED_POINTS * D, 0.1);
+                        let req =
+                            Request::Feed { session: id, points, count: FEED_POINTS };
+                        if coord.call(req).is_err() {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(errors.load(Ordering::Relaxed) == 0, "feed errors during bench");
+        let feeds = threads * FEEDS_PER_THREAD;
+        let rate = feeds as f64 / wall;
+        println!("{:<8} {:>8} {:>12} {:>12.0}", threads, feeds, fmt_secs(wall), rate);
+        records.push((threads, wall, rate));
+    }
+
+    if let (Some(&(t1, _, r1)), Some(&(tn, _, rn))) = (records.first(), records.last()) {
+        if t1 == 1 && tn > 1 {
+            println!(
+                "\nscaling: {:.2}x feed throughput at {tn} threads (ideal {tn}x)",
+                rn / r1
+            );
+        }
+    }
+    std::fs::write("BENCH_sessions.json", sessions_json(hw, &records))?;
+    println!("wrote BENCH_sessions.json");
+    Ok(())
+}

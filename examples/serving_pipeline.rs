@@ -65,5 +65,38 @@ fn main() -> anyhow::Result<()> {
         cotangent: cot,
     })?;
     println!("gradient request served by {:?}: {} values", resp.backend, resp.values.len());
+
+    // Stateful streaming through the same front door: open a session,
+    // feed it incrementally ("keeping the signature up-to-date", §5.5),
+    // query arbitrary intervals in O(1), and close it. The session table
+    // is memory-bounded in production via `CoordinatorConfig::session`
+    // (budget_bytes / ttl) — unbounded here for the demo.
+    let open = coord.call(Request::OpenStream {
+        points: signax::data::random_path(&mut rng, 8, 2, 0.2),
+        stream: 8,
+        d: 2,
+        depth: 3,
+    })?;
+    let sid = open.session.expect("open returns a session id");
+    for _ in 0..4 {
+        coord.call(Request::Feed {
+            session: sid,
+            points: rng.normal_vec(16 * 2, 0.2),
+            count: 16,
+        })?;
+    }
+    let q = coord.call(Request::QueryInterval { session: sid, i: 10, j: 40 })?;
+    let lq = coord.call(Request::LogSigQueryInterval { session: sid, i: 10, j: 40 })?;
+    println!(
+        "streaming session {sid:?}: 72 points fed, interval sig {} values, logsig {} values",
+        q.values.len(),
+        lq.values.len()
+    );
+    let snap = coord.metrics().snapshot();
+    println!(
+        "sessions: opened={} updates={} open={} resident={} bytes",
+        snap.sessions_opened, snap.session_updates, snap.open_sessions, snap.session_bytes
+    );
+    coord.call(Request::CloseStream { session: sid })?;
     Ok(())
 }

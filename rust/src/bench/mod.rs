@@ -19,4 +19,4 @@
 
 pub mod tables;
 
-pub use tables::{backward_json, run_table, table_ids, BenchCtx, Scale};
+pub use tables::{backward_json, run_table, sessions_json, table_ids, BenchCtx, Scale};

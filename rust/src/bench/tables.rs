@@ -271,7 +271,7 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                                 &sspec,
                             )
                             .unwrap();
-                            black_box(logsignature_from_sig(&sig, &sspec, lp));
+                            black_box(logsignature_from_sig(&sig, &sspec, lp).unwrap());
                         }
                     })
                     .best_secs(),
@@ -318,7 +318,7 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                                 stream,
                                 &sspec,
                             );
-                            black_box(logsignature_from_sig(&sig, &sspec, lp));
+                            black_box(logsignature_from_sig(&sig, &sspec, lp).unwrap());
                         }
                     })
                     .best_secs(),
@@ -335,7 +335,8 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                             // log + Lyndon projection, then tape backward.
                             let sig = iisignature_like::signature(pb, stream, &sspec);
                             let g_sig =
-                                crate::logsignature::logsignature_from_sig_vjp(&sig, &sspec, lp, &gcot);
+                                crate::logsignature::logsignature_from_sig_vjp(&sig, &sspec, lp, &gcot)
+                                    .unwrap();
                             black_box(iisignature_like::signature_vjp(pb, stream, &sspec, &g_sig));
                         }
                     })
@@ -374,7 +375,7 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                     bench(&cfg, || {
                         for b in 0..batch {
                             let sig = signature(&paths[b * per_path..(b + 1) * per_path], stream, &sspec);
-                            black_box(logsignature_from_sig(&sig, &sspec, wp));
+                            black_box(logsignature_from_sig(&sig, &sspec, wp).unwrap());
                         }
                     })
                     .best_secs(),
@@ -449,7 +450,7 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                 Some(
                     bench(&cfg, || {
                         let sig = signature_with(&paths, stream, &sspec, &scfg).unwrap();
-                        black_box(logsignature_from_sig(&sig, &sspec, wp));
+                        black_box(logsignature_from_sig(&sig, &sspec, wp).unwrap());
                     })
                     .best_secs(),
                 )
@@ -460,7 +461,7 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                     bench(&cfg, || {
                         let out = crate::substrate::pool::parallel_map_indexed(batch, ctx.threads, |b| {
                             let sig = signature(&paths[b * per_path..(b + 1) * per_path], stream, &sspec);
-                            logsignature_from_sig(&sig, &sspec, wp)
+                            logsignature_from_sig(&sig, &sspec, wp).unwrap()
                         });
                         black_box(out);
                     })
@@ -749,6 +750,26 @@ pub fn backward_json(hw_threads: usize, records: &[(usize, usize, f64, f64)]) ->
     s
 }
 
+/// Render session-streaming bench records as `BENCH_sessions.json`:
+/// `points[]` of `(threads, wall_s, feeds_per_s)` under top-level
+/// `hw_threads`. Written by `benches/session_streaming.rs`; the feed
+/// throughput for distinct sessions must scale with client threads
+/// (a table-wide lock would flatline the curve).
+pub fn sessions_json(hw_threads: usize, records: &[(usize, f64, f64)]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"sessions\",\n");
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(threads, wall, rate)) in records.iter().enumerate() {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"threads\": {threads}, \"wall_s\": {wall:.9}, \"feeds_per_s\": {rate:.3}}}{comma}\n"
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -822,6 +843,17 @@ mod tests {
         assert_eq!(pts[0].get("stream").and_then(|v| v.as_f64()), Some(2048.0));
         assert_eq!(pts[0].get("threads").and_then(|v| v.as_f64()), Some(8.0));
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(4.0));
+    }
+
+    #[test]
+    fn sessions_json_well_formed() {
+        let json = sessions_json(8, &[(1, 2.0, 100.0), (4, 0.6, 333.333)]);
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("hw_threads").and_then(|v| v.as_f64()), Some(8.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].get("threads").and_then(|v| v.as_f64()), Some(4.0));
+        assert!(pts[1].get("feeds_per_s").and_then(|v| v.as_f64()).unwrap() > 333.0);
     }
 
     #[test]

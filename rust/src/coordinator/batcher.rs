@@ -152,7 +152,7 @@ fn flusher_loop(
             return;
         }
         let mut due: Vec<(BatchShape, Pending)> = vec![];
-        let next_deadline = {
+        {
             let mut queues = shared.queues.lock().unwrap();
             let now = Instant::now();
             let due_keys: Vec<BatchShape> = queues
@@ -165,15 +165,26 @@ fn flusher_loop(
                     due.push((k, p));
                 }
             }
-            queues.values().map(|p| p.deadline).min()
-        };
+        }
         for (shape, pending) in due {
             execute_batch(&*backend, &metrics, shape, pending);
         }
-        // Sleep until the earliest deadline (or linger, when idle).
+        // Re-acquire the lock and recompute the earliest deadline *after*
+        // executing: a submit that landed mid-execution had its notify
+        // dropped on the floor (nobody was waiting), so sleeping on a
+        // deadline captured before execution would let that batch idle a
+        // stale full linger — flushing at up to 2x linger.
         let guard = shared.queues.lock().unwrap();
-        let wait = next_deadline
-            .map(|dl| dl.saturating_duration_since(Instant::now()))
+        let now = Instant::now();
+        if guard.values().any(|p| p.deadline <= now) {
+            continue; // something became due while executing: drain first
+        }
+        // Sleep until the earliest deadline (or linger, when idle).
+        let wait = guard
+            .values()
+            .map(|p| p.deadline)
+            .min()
+            .map(|dl| dl.saturating_duration_since(now))
             .unwrap_or(linger)
             .max(Duration::from_micros(100));
         let _unused = shared.wake.wait_timeout(guard, wait).unwrap();
@@ -202,7 +213,10 @@ fn execute_batch(
             }
         }
         Err(e) => {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            // One *batch* failure; the per-request `errors` counter is
+            // bumped by `Coordinator::call` when the error reaches each
+            // caller, so counting it here too would double-count.
+            metrics.batch_failures.fetch_add(1, Ordering::Relaxed);
             for tx in pending.senders {
                 let _ = tx.send(Err(anyhow::anyhow!("batch execution failed: {e}")));
             }
@@ -339,7 +353,59 @@ mod tests {
         let rx2 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
         assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
-        assert_eq!(metrics.snapshot().errors, 1);
+        // One failed batch execution; request-level errors are counted by
+        // `Coordinator::call` (once per affected request), not here.
+        let snap = metrics.snapshot();
+        assert_eq!(snap.batch_failures, 1);
+        assert_eq!(snap.errors, 0);
+    }
+
+    /// A backend that sleeps once (the first run) then becomes fast — used
+    /// to catch the flusher mid-execution.
+    struct SlowOnceBackend {
+        slept: std::sync::atomic::AtomicBool,
+    }
+
+    impl BatchBackend for SlowOnceBackend {
+        fn run(&self, shape: &BatchShape, _padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+            if !self.slept.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(450));
+            }
+            Ok(vec![0.0; shape.batch * shape.out_dim])
+        }
+    }
+
+    #[test]
+    fn submit_during_flush_is_not_delayed_by_a_stale_deadline() {
+        // Regression for the missed-wakeup bug: a submit landing while the
+        // flusher is mid-`execute_batch` loses its notify, and the old
+        // flusher then slept on a deadline computed *before* execution —
+        // flushing the new batch at up to 2x linger late. Timeline with
+        // linger = 300ms and a 450ms first execution: A's batch flushes at
+        // ~300ms and executes until ~750ms; B lands at ~375ms (deadline
+        // ~675ms). Fixed flusher: B flushes when the execution ends,
+        // waited ~375ms. Stale-deadline flusher: B waits a further full
+        // linger after the execution, waited ~675ms. The 550ms bound sits
+        // between the two with >=125ms headroom either side for CI jitter.
+        let linger = Duration::from_millis(300);
+        let batcher = Batcher::new(
+            Arc::new(SlowOnceBackend { slept: std::sync::atomic::AtomicBool::new(false) }),
+            Arc::new(Metrics::default()),
+            linger,
+        );
+        let sh = shape(8); // never fills: only the linger flushes it
+        let mut rng = crate::substrate::rng::Rng::new(9);
+        let row = rng.normal_vec(sh.in_row(), 0.5);
+        let _rx_a = batcher.submit(sh, &row).unwrap();
+        std::thread::sleep(Duration::from_millis(375));
+        let t0 = std::time::Instant::now();
+        let rx_b = batcher.submit(sh, &row).unwrap();
+        assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(550),
+            "batch flushed only after {waited:?} (stale linger deadline)"
+        );
     }
 
     #[test]

@@ -9,16 +9,31 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub native_requests: AtomicU64,
     pub xla_requests: AtomicU64,
+    /// Streaming (session) requests served through `Coordinator::call`.
+    pub stream_requests: AtomicU64,
     pub batches: AtomicU64,
     /// Total rows submitted to XLA including padding.
     pub padded_rows: AtomicU64,
     /// Rows that carried real requests.
     pub real_rows: AtomicU64,
+    /// Failed *requests* (counted once per request, at the `call` layer).
     pub errors: AtomicU64,
+    /// Failed *batch executions* (one per failed backend run; each such
+    /// failure surfaces as one `errors` increment per affected request).
+    pub batch_failures: AtomicU64,
     /// Total latency across requests, nanoseconds.
     pub latency_ns: AtomicU64,
     pub sessions_opened: AtomicU64,
     pub session_updates: AtomicU64,
+    /// Gauge: sessions currently open.
+    pub open_sessions: AtomicU64,
+    /// Gauge: bytes of precomputed `Path` storage currently resident
+    /// across all sessions.
+    pub session_bytes: AtomicU64,
+    /// Sessions evicted to enforce the memory budget (LRU order).
+    pub sessions_evicted: AtomicU64,
+    /// Sessions expired by the idle-TTL sweeper.
+    pub sessions_expired: AtomicU64,
 }
 
 /// A point-in-time copy of the metrics.
@@ -27,13 +42,19 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub native_requests: u64,
     pub xla_requests: u64,
+    pub stream_requests: u64,
     pub batches: u64,
     pub padded_rows: u64,
     pub real_rows: u64,
     pub errors: u64,
+    pub batch_failures: u64,
     pub mean_latency: Duration,
     pub sessions_opened: u64,
     pub session_updates: u64,
+    pub open_sessions: u64,
+    pub session_bytes: u64,
+    pub sessions_evicted: u64,
+    pub sessions_expired: u64,
 }
 
 impl Metrics {
@@ -48,10 +69,12 @@ impl Metrics {
             requests,
             native_requests: self.native_requests.load(Ordering::Relaxed),
             xla_requests: self.xla_requests.load(Ordering::Relaxed),
+            stream_requests: self.stream_requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
             real_rows: self.real_rows.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            batch_failures: self.batch_failures.load(Ordering::Relaxed),
             mean_latency: if requests == 0 {
                 Duration::ZERO
             } else {
@@ -59,6 +82,10 @@ impl Metrics {
             },
             sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
             session_updates: self.session_updates.load(Ordering::Relaxed),
+            open_sessions: self.open_sessions.load(Ordering::Relaxed),
+            session_bytes: self.session_bytes.load(Ordering::Relaxed),
+            sessions_evicted: self.sessions_evicted.load(Ordering::Relaxed),
+            sessions_expired: self.sessions_expired.load(Ordering::Relaxed),
         }
     }
 
@@ -77,17 +104,25 @@ impl Metrics {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests={} (native={} xla={}) batches={} rows={}/{} errors={} mean_latency={:?} sessions={} updates={}",
+            "requests={} (native={} xla={} stream={}) batches={} rows={}/{} errors={} \
+             batch_failures={} mean_latency={:?} sessions={} updates={} open={} \
+             resident_bytes={} evicted={} expired={}",
             self.requests,
             self.native_requests,
             self.xla_requests,
+            self.stream_requests,
             self.batches,
             self.real_rows,
             self.padded_rows,
             self.errors,
+            self.batch_failures,
             self.mean_latency,
             self.sessions_opened,
             self.session_updates,
+            self.open_sessions,
+            self.session_bytes,
+            self.sessions_evicted,
+            self.sessions_expired,
         )
     }
 }
@@ -109,6 +144,22 @@ mod tests {
         assert_eq!(s.mean_latency, Duration::from_millis(2));
         assert!((m.padding_ratio() - 0.25).abs() < 1e-12);
         assert!(s.render().contains("requests=4"));
+    }
+
+    #[test]
+    fn session_gauges_roundtrip() {
+        let m = Metrics::default();
+        m.open_sessions.store(3, Ordering::Relaxed);
+        m.session_bytes.store(4096, Ordering::Relaxed);
+        m.sessions_evicted.store(2, Ordering::Relaxed);
+        m.batch_failures.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.open_sessions, 3);
+        assert_eq!(s.session_bytes, 4096);
+        assert_eq!(s.sessions_evicted, 2);
+        assert_eq!(s.sessions_expired, 0);
+        assert_eq!(s.batch_failures, 1);
+        assert!(s.render().contains("resident_bytes=4096"));
     }
 
     #[test]

@@ -1,14 +1,16 @@
 //! The L3 coordinator: a request router + dynamic batcher serving
 //! signature/logsignature computations over two backends — the native Rust
-//! engine and the AOT-compiled XLA artifacts — plus streaming sessions
-//! implementing "keeping the signature up-to-date" (§5.5).
+//! engine and the AOT-compiled XLA artifacts — plus stateful streaming
+//! sessions implementing "keeping the signature up-to-date" (§5.5).
 //!
 //! Shape of the system (vLLM-router-like):
 //!
 //! ```text
-//!  client ──submit──▶ Router ──(shape matches an artifact?)──▶ Batcher ──▶ XLA Engine
-//!                       │                                        (pad to artifact batch)
-//!                       └──(no artifact / tiny request)────────▶ native worker pool
+//!  client ──submit──▶ Router ──(streaming request?)──▶ Session table ──▶ Path (native)
+//!                       │        (sharded, memory-bounded, LRU+TTL eviction)
+//!                       ├──(shape matches an artifact?)──▶ Batcher ──▶ XLA Engine
+//!                       │                                    (pad to artifact batch)
+//!                       └──(no artifact / tiny request)────▶ native worker pool
 //! ```
 //!
 //! Batching exists because XLA executables are compiled for fixed shapes:
@@ -16,6 +18,14 @@
 //! batch fills or a linger deadline passes, padded with zero rows, executed
 //! once, and scattered back to callers. Property tests assert padding never
 //! leaks between requests.
+//!
+//! Streaming requests (`OpenStream` / `Feed` / `QueryInterval` /
+//! `LogSigQueryInterval` / `CloseStream`) flow through the same
+//! [`Coordinator::call`] front door — so latency and error metrics cover
+//! them — and are served by the [`SessionManager`], a sharded table of
+//! `Arc<Mutex<Path>>` sessions whose resident precomputed storage is
+//! bounded by [`SessionConfig::budget_bytes`] (LRU eviction) and
+//! [`SessionConfig::ttl`] (idle expiry).
 
 pub mod batcher;
 pub mod metrics;
@@ -25,4 +35,4 @@ pub mod session;
 pub use batcher::{BatchBackend, BatchShape, Batcher};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Backend, Coordinator, CoordinatorConfig, Request, Response};
-pub use session::{SessionId, SessionManager};
+pub use session::{SessionConfig, SessionId, SessionManager};

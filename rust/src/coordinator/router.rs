@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchBackend, BatchShape, Batcher};
 use super::metrics::Metrics;
-use super::session::SessionManager;
+use super::session::{SessionConfig, SessionId, SessionManager};
 use crate::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
 use crate::signature::{signature, signature_vjp_with, SigConfig};
@@ -39,6 +39,21 @@ pub enum Request {
         depth: usize,
         cotangent: Vec<f32>,
     },
+    /// Open a streaming session seeded with an initial path (>= 2 points).
+    /// The response carries the new id in [`Response::session`] and the
+    /// signature of the seed path in `values`.
+    OpenStream { points: Vec<f32>, stream: usize, d: usize, depth: usize },
+    /// Append points to a session ("keeping the signature up-to-date",
+    /// §5.5, eq. 7); returns the whole-stream signature so far.
+    Feed { session: SessionId, points: Vec<f32>, count: usize },
+    /// O(1)-in-L interval signature query against a session's stream
+    /// (0-based inclusive endpoints, `i < j < len`).
+    QueryInterval { session: SessionId, i: usize, j: usize },
+    /// Words-basis logsignature interval query (served from the
+    /// coordinator's cached `LogSigPlan` for the session's spec).
+    LogSigQueryInterval { session: SessionId, i: usize, j: usize },
+    /// Close a session, releasing its precomputed storage.
+    CloseStream { session: SessionId },
 }
 
 /// Which backend served a request.
@@ -53,6 +68,9 @@ pub enum Backend {
 pub struct Response {
     pub values: Vec<f32>,
     pub backend: Backend,
+    /// Set on streaming responses: the session the request addressed
+    /// (`OpenStream` returns the freshly allocated id here).
+    pub session: Option<SessionId>,
 }
 
 /// Coordinator configuration.
@@ -67,6 +85,11 @@ pub struct CoordinatorConfig {
     pub linger: Duration,
     /// Threads for native batch work.
     pub native_threads: usize,
+    /// Streaming-session knobs: table sharding, the resident-memory budget
+    /// (`session.budget_bytes`, enforced by LRU eviction of idle
+    /// sessions), and the idle TTL (`session.ttl`, enforced by a
+    /// background sweeper). Defaults to unbounded.
+    pub session: SessionConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -76,6 +99,7 @@ impl Default for CoordinatorConfig {
             prefer_xla: true,
             linger: Duration::from_millis(2),
             native_threads: crate::substrate::pool::default_threads(),
+            session: SessionConfig::default(),
         }
     }
 }
@@ -156,7 +180,7 @@ impl Coordinator {
             _ => (None, None, None),
         };
         Ok(Coordinator {
-            sessions: SessionManager::new(Arc::clone(&metrics)),
+            sessions: SessionManager::with_config(Arc::clone(&metrics), cfg.session.clone()),
             registry,
             engine,
             batcher,
@@ -189,6 +213,16 @@ impl Coordinator {
     fn plan(&self, d: usize, depth: usize) -> anyhow::Result<Arc<LogSigPlan>> {
         let mut plans = self.plans.lock().unwrap();
         if let Some(p) = plans.get(&(d, depth)) {
+            // Cache integrity: an entry filed under the wrong key must
+            // error, never silently gather wrong indices. Field checks
+            // only — no SigSpec construction on the hot hit path.
+            anyhow::ensure!(
+                p.spec().d() == d && p.spec().depth() == depth,
+                "plan cache corrupted: entry for (d={d}, depth={depth}) was built for \
+                 (d={}, depth={})",
+                p.spec().d(),
+                p.spec().depth()
+            );
             return Ok(Arc::clone(p));
         }
         let spec = SigSpec::new(d, depth)?;
@@ -212,6 +246,11 @@ impl Coordinator {
 
     fn route(&self, req: Request) -> anyhow::Result<Response> {
         use std::sync::atomic::Ordering;
+        // Streaming (stateful) requests: served by the session table on
+        // the native engine, never batched.
+        if let Some(resp) = self.route_stream(&req)? {
+            return Ok(resp);
+        }
         // Try the XLA path when configured and an artifact matches.
         if self.cfg.prefer_xla {
             if let (Some(reg), Some(batcher)) = (&self.registry, &self.batcher) {
@@ -260,6 +299,8 @@ impl Coordinator {
                             };
                             batcher.submit(shape, &row)
                         }),
+                    // Streaming requests were already dispatched above.
+                    _ => None,
                 };
                 if let Some(rx) = routed {
                     let rx = rx?;
@@ -267,7 +308,7 @@ impl Coordinator {
                         .recv()
                         .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
                     self.metrics.xla_requests.fetch_add(1, Ordering::Relaxed);
-                    return Ok(Response { values, backend: Backend::Xla });
+                    return Ok(Response { values, backend: Backend::Xla, session: None });
                 }
             }
         }
@@ -282,7 +323,7 @@ impl Coordinator {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 let sig = signature(&path, stream, &spec);
-                logsignature_from_sig(&sig, &spec, self.plan(d, depth)?.as_ref())
+                logsignature_from_sig(&sig, &spec, self.plan(d, depth)?.as_ref())?
             }
             Request::SignatureGrad { path, stream, d, depth, cotangent } => {
                 let spec = SigSpec::new(d, depth)?;
@@ -296,9 +337,69 @@ impl Coordinator {
                 let cfg = SigConfig { threads, ..SigConfig::serial() };
                 signature_vjp_with(&path, stream, &spec, &cfg, &cotangent)?.grad_path
             }
+            Request::OpenStream { .. }
+            | Request::Feed { .. }
+            | Request::QueryInterval { .. }
+            | Request::LogSigQueryInterval { .. }
+            | Request::CloseStream { .. } => unreachable!("handled by route_stream"),
         };
         self.metrics.native_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(Response { values, backend: Backend::Native })
+        Ok(Response { values, backend: Backend::Native, session: None })
+    }
+
+    /// Serve a streaming request against the session table; `Ok(None)` for
+    /// stateless requests (which fall through to the backends).
+    fn route_stream(&self, req: &Request) -> anyhow::Result<Option<Response>> {
+        // Classify exhaustively (no catch-all): a new Request variant must
+        // be consciously filed as stateless here or handled below.
+        match req {
+            Request::Signature { .. }
+            | Request::LogSignature { .. }
+            | Request::SignatureGrad { .. } => return Ok(None),
+            Request::OpenStream { .. }
+            | Request::Feed { .. }
+            | Request::QueryInterval { .. }
+            | Request::LogSigQueryInterval { .. }
+            | Request::CloseStream { .. } => {}
+        }
+        // Counted before serving, so failed streaming requests are still
+        // attributed to the streaming surface.
+        self.metrics
+            .stream_requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (values, session) = match req {
+            Request::OpenStream { points, stream, d, depth } => {
+                let spec = SigSpec::new(*d, *depth)?;
+                anyhow::ensure!(points.len() == stream * d, "bad point buffer");
+                // One call returning both id and seed signature: a racing
+                // eviction after the insert must not turn a successful
+                // open into an "unknown session" error.
+                let (id, sig) = self.sessions.open_with_signature(&spec, points, *stream)?;
+                (sig, Some(id))
+            }
+            Request::Feed { session, points, count } => {
+                (self.sessions.feed(*session, points, *count)?, Some(*session))
+            }
+            Request::QueryInterval { session, i, j } => {
+                (self.sessions.query(*session, *i, *j)?, Some(*session))
+            }
+            Request::LogSigQueryInterval { session, i, j } => {
+                // Resolve the session once; the plan comes from the
+                // coordinator's cache keyed by the session's (d, depth).
+                let out = self
+                    .sessions
+                    .logsig_query_with(*session, *i, *j, |spec| self.plan(spec.d(), spec.depth()))?;
+                (out, Some(*session))
+            }
+            Request::CloseStream { session } => {
+                self.sessions.close(*session)?;
+                (Vec::new(), Some(*session))
+            }
+            Request::Signature { .. }
+            | Request::LogSignature { .. }
+            | Request::SignatureGrad { .. } => unreachable!("stateless; returned above"),
+        };
+        Ok(Some(Response { values, backend: Backend::Native, session }))
     }
 
     /// Serve a whole batch concurrently (used by examples and benches):
@@ -430,6 +531,158 @@ mod tests {
             assert!(r.is_ok());
         }
         assert_eq!(c.metrics().snapshot().requests, 6);
+    }
+
+    #[test]
+    fn streaming_requests_served_through_call() {
+        let c = native();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(8);
+        let all = rng.normal_vec(16 * 2, 0.3);
+
+        let open = c
+            .call(Request::OpenStream { points: all[..6 * 2].to_vec(), stream: 6, d: 2, depth: 3 })
+            .unwrap();
+        assert_eq!(open.backend, Backend::Native);
+        let sid = open.session.expect("open returns a session id");
+        assert_close(&open.values, &signature(&all[..6 * 2], 6, &spec), 1e-6, 1e-7);
+
+        let fed = c
+            .call(Request::Feed { session: sid, points: all[6 * 2..].to_vec(), count: 10 })
+            .unwrap();
+        assert_close(&fed.values, &signature(&all, 16, &spec), 2e-3, 1e-4);
+
+        // Interval query crossing the feed boundary.
+        let q = c.call(Request::QueryInterval { session: sid, i: 3, j: 12 }).unwrap();
+        assert_close(&q.values, &signature(&all[3 * 2..13 * 2], 10, &spec), 5e-3, 5e-4);
+
+        // Logsig query uses the coordinator's cached words-basis plan.
+        let lq = c.call(Request::LogSigQueryInterval { session: sid, i: 3, j: 12 }).unwrap();
+        assert_eq!(lq.values.len(), crate::words::witt_dimension(2, 3));
+
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.stream_requests, 4);
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.open_sessions, 1);
+        assert!(snap.session_bytes > 0);
+
+        c.call(Request::CloseStream { session: sid }).unwrap();
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.open_sessions, 0);
+        assert_eq!(snap.session_bytes, 0);
+        // Requests against a closed session error and count once.
+        assert!(c.call(Request::QueryInterval { session: sid, i: 0, j: 3 }).is_err());
+        assert_eq!(c.metrics().snapshot().errors, 1);
+    }
+
+    #[test]
+    fn session_budget_enforced_through_coordinator_config() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        // Room for about three 8-point sessions; measure the per-session
+        // storage on a throwaway Path rather than hard-coding its layout.
+        let per = crate::path::Path::new(&spec, &[0.0f32; 8 * 2], 8)
+            .unwrap()
+            .storage_bytes();
+        let c = Coordinator::new(CoordinatorConfig {
+            session: SessionConfig {
+                budget_bytes: Some(3 * per + per / 2),
+                ..Default::default()
+            },
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        let mut rng = Rng::new(9);
+        let mut sids = vec![];
+        for _ in 0..5 {
+            let resp = c
+                .call(Request::OpenStream {
+                    points: rng.normal_vec(8 * 2, 0.3),
+                    stream: 8,
+                    d: 2,
+                    depth: 3,
+                })
+                .unwrap();
+            sids.push(resp.session.unwrap());
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.sessions_opened, 5);
+        assert_eq!(snap.sessions_evicted, 2);
+        assert_eq!(snap.open_sessions, 3);
+        assert!(snap.session_bytes as usize <= 3 * per + per / 2);
+        // The two oldest sessions were evicted, in order.
+        assert!(c.call(Request::QueryInterval { session: sids[0], i: 0, j: 7 }).is_err());
+        assert!(c.call(Request::QueryInterval { session: sids[1], i: 0, j: 7 }).is_err());
+        for &sid in &sids[2..] {
+            assert!(c.call(Request::QueryInterval { session: sid, i: 0, j: 7 }).is_ok());
+        }
+    }
+
+    /// A batch backend that always fails (for error-accounting tests).
+    struct FailBackend;
+
+    impl BatchBackend for FailBackend {
+        fn run(&self, _shape: &BatchShape, _padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("backend down")
+        }
+    }
+
+    #[test]
+    fn batch_backend_failure_counts_once_per_request() {
+        // Regression for the double count: `execute_batch` used to bump
+        // `errors` per failed batch *and* `call` bumped it again per
+        // request. Two requests failing in one batch must yield errors=2
+        // (one each) and batch_failures=1.
+        use crate::runtime::ArtifactEntry;
+        let metrics = Arc::new(Metrics::default());
+        let spec = SigSpec::new(2, 3).unwrap();
+        let registry = Arc::new(Registry {
+            dir: PathBuf::from("/nonexistent"),
+            entries: vec![ArtifactEntry {
+                file: "mock".into(),
+                kind: ArtifactKind::Sig,
+                batch: 2,
+                length: 4,
+                d: 2,
+                depth: 3,
+                out_dim: spec.sig_len(),
+                pallas: false,
+                hidden: 0,
+                d_out: 0,
+            }],
+        });
+        // Generous linger: both caller threads must land in one pending
+        // batch even if thread spawn stalls; the batch fills at 2 rows, so
+        // the failure path executes inline and never waits this long.
+        let batcher =
+            Batcher::new(Arc::new(FailBackend), Arc::clone(&metrics), Duration::from_millis(250));
+        let c = Coordinator {
+            cfg: CoordinatorConfig {
+                artifact_dir: None,
+                prefer_xla: true,
+                ..CoordinatorConfig::native_only()
+            },
+            registry: Some(registry),
+            engine: None,
+            batcher: Some(batcher),
+            sessions: SessionManager::new(Arc::clone(&metrics)),
+            metrics,
+            plans: Mutex::new(HashMap::new()),
+        };
+        let mut rng = Rng::new(10);
+        let reqs: Vec<Request> = (0..2)
+            .map(|_| Request::Signature {
+                path: rng.normal_vec(4 * 2, 0.3),
+                stream: 4,
+                d: 2,
+                depth: 3,
+            })
+            .collect();
+        for r in c.call_many(reqs) {
+            assert!(r.is_err());
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.errors, 2, "one error per failed request");
+        assert_eq!(snap.batch_failures, 1, "one failed batch execution");
     }
 
     #[test]

@@ -22,8 +22,14 @@
 //!   executes them on a PJRT client. This is the reproduction's analogue of
 //!   Signatory's GPU backend.
 //! - **Coordinator** ([`coordinator`]): a request router + dynamic batcher
-//!   serving signature computations over both backends, plus streaming
-//!   sessions implementing "keeping the signature up-to-date" (§5.5).
+//!   serving signature computations over both backends, plus a stateful
+//!   streaming surface implementing "keeping the signature up-to-date"
+//!   (§5.5): `OpenStream` / `Feed` / `QueryInterval` /
+//!   `LogSigQueryInterval` / `CloseStream` requests flow through the same
+//!   `Coordinator::call` front door (so metrics cover them) into a
+//!   sharded, memory-bounded session table — per-session `Path` state
+//!   with O(1) interval queries, an LRU-evicted byte budget, and an
+//!   idle-TTL sweeper.
 //!
 //! Baselines reproducing the systems the paper benchmarks against live in
 //! [`baselines`]; the benchmark harness regenerating every table and figure

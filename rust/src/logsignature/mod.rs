@@ -26,17 +26,34 @@ use crate::ta::log::{log_into, log_vjp};
 use crate::ta::SigSpec;
 
 /// `LogSig^N(path)` in the plan's basis.
+///
+/// Panics if `plan` was built for a different `SigSpec`; use
+/// [`logsignature_from_sig`] for the fallible entry point.
 pub fn logsignature(path: &[f32], stream: usize, spec: &SigSpec, plan: &LogSigPlan) -> Vec<f32> {
     let sig = signature(path, stream, spec);
-    logsignature_from_sig(&sig, spec, plan)
+    logsignature_from_sig(&sig, spec, plan).expect("LogSigPlan incompatible with SigSpec")
 }
 
 /// Logsignature of an already-computed signature (used by the Path class
-/// and the coordinator, where the signature is already available).
-pub fn logsignature_from_sig(sig: &[f32], spec: &SigSpec, plan: &LogSigPlan) -> Vec<f32> {
+/// and the coordinator, where the signature is already available). Errors
+/// if `plan` was built for a different `SigSpec` (a mismatched plan would
+/// otherwise silently gather wrong indices) or the signature buffer has
+/// the wrong length.
+pub fn logsignature_from_sig(
+    sig: &[f32],
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
+    anyhow::ensure!(
+        sig.len() == spec.sig_len(),
+        "signature has {} values, expected {}",
+        sig.len(),
+        spec.sig_len()
+    );
     let mut logtensor = spec.zeros();
     log_into(spec, sig, &mut logtensor);
-    plan.project(&logtensor)
+    Ok(plan.project(&logtensor))
 }
 
 /// Stream mode for the logsignature (Signatory's `logsignature(...,
@@ -48,6 +65,7 @@ pub fn logsignature_stream(
     spec: &SigSpec,
     plan: &LogSigPlan,
 ) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
     let sigs = crate::signature::signature_stream(path, stream, spec);
     let len = spec.sig_len();
     let dim = plan.dim();
@@ -90,6 +108,7 @@ pub fn logsignature_vjp_with(
     cfg: &SigConfig,
     g: &[f32],
 ) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
     anyhow::ensure!(
         g.len() == plan.dim(),
         "cotangent has {} values, expected basis dimension {}",
@@ -97,22 +116,30 @@ pub fn logsignature_vjp_with(
         plan.dim()
     );
     let sig = signature_with(path, stream, spec, cfg)?;
-    let g_sig = logsignature_from_sig_vjp(&sig, spec, plan, g);
+    let g_sig = logsignature_from_sig_vjp(&sig, spec, plan, g)?;
     Ok(signature_vjp_with(path, stream, spec, cfg, &g_sig)?.grad_path)
 }
 
 /// VJP of [`logsignature_from_sig`]: cotangent on the basis coefficients →
-/// cotangent on the signature.
+/// cotangent on the signature. Errors on a plan built for a different
+/// `SigSpec` or a mismatched cotangent length (like the forward).
 pub fn logsignature_from_sig_vjp(
     sig: &[f32],
     spec: &SigSpec,
     plan: &LogSigPlan,
     g: &[f32],
-) -> Vec<f32> {
+) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
+    anyhow::ensure!(
+        g.len() == plan.dim(),
+        "cotangent has {} values, expected basis dimension {}",
+        g.len(),
+        plan.dim()
+    );
     let g_logtensor = plan.project_vjp(g);
     let mut g_sig = spec.zeros();
     log_vjp(spec, sig, &g_logtensor, &mut g_sig);
-    g_sig
+    Ok(g_sig)
 }
 
 #[cfg(test)]
@@ -271,6 +298,29 @@ mod tests {
             .unwrap();
             assert_close(&par, &serial, 2e-3, 1e-4);
         }
+    }
+
+    #[test]
+    fn mismatched_plan_is_rejected_not_misread() {
+        // A plan built for another (d, depth) must error, never silently
+        // gather wrong indices — even when buffer lengths happen to line
+        // up by accident.
+        let spec = SigSpec::new(3, 3).unwrap();
+        let wrong_d = LogSigPlan::new(&SigSpec::new(2, 3).unwrap(), LogSigBasis::Words).unwrap();
+        let wrong_depth = LogSigPlan::new(&SigSpec::new(3, 2).unwrap(), LogSigBasis::Words).unwrap();
+        let sig = vec![0.0f32; spec.sig_len()];
+        assert!(logsignature_from_sig(&sig, &spec, &wrong_d).is_err());
+        assert!(logsignature_from_sig(&sig, &spec, &wrong_depth).is_err());
+        // Wrong signature buffer length is also a clean error.
+        let right = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        assert!(logsignature_from_sig(&sig[..spec.sig_len() - 1], &spec, &right).is_err());
+        let path = vec![0.0f32; 4 * 3];
+        assert!(logsignature_stream(&path, 4, &spec, &wrong_d).is_err());
+        let g = vec![0.0f32; wrong_d.dim()];
+        assert!(
+            logsignature_vjp_with(&path, 4, &spec, &wrong_d, &SigConfig::serial(), &g).is_err()
+        );
+        assert!(logsignature_from_sig_vjp(&sig, &spec, &wrong_d, &g).is_err());
     }
 
     #[test]

@@ -86,6 +86,22 @@ impl LogSigPlan {
         &self.spec
     }
 
+    /// A plan is only valid for the `SigSpec` it was built from (same `d`
+    /// and `depth`); projecting through it with another spec would gather
+    /// wrong indices. Callers that accept a caller-supplied plan must run
+    /// this check rather than trusting the buffer lengths to disagree.
+    pub fn check_compatible(&self, spec: &SigSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.spec.d() == spec.d() && self.spec.depth() == spec.depth(),
+            "LogSigPlan built for (d={}, depth={}) used with a (d={}, depth={}) signature",
+            self.spec.d(),
+            self.spec.depth(),
+            spec.d(),
+            spec.depth()
+        );
+        Ok(())
+    }
+
     /// `(level, index-within-level)` of each Lyndon word, in output order.
     pub fn lyndon_positions(&self) -> Vec<(usize, usize)> {
         self.entries.iter().map(|e| (e.level, e.index)).collect()

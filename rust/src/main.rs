@@ -9,13 +9,16 @@
 //! - `serve`     — run a synthetic serving workload through the
 //!                 coordinator (router + dynamic batcher) and print
 //!                 throughput/latency + metrics.
+//! - `serve-stream` — run a stateful streaming workload (open / feed /
+//!                 interval-query / close sessions) through the
+//!                 coordinator, with optional memory budget and idle TTL.
 //! - `info`      — artifact registry / platform diagnostics.
 
 use std::io::Write as _;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use signax::bench::{run_table, table_ids, BenchCtx, Scale};
-use signax::coordinator::{Coordinator, CoordinatorConfig, Request};
+use signax::coordinator::{Coordinator, CoordinatorConfig, Request, SessionConfig};
 use signax::data::gbm::{gbm_batch, GbmConfig};
 use signax::deepsig::{accuracy, train_step, ModelConfig, Params, SigBackend};
 use signax::logsignature::{logsignature, LogSigBasis, LogSigPlan};
@@ -63,6 +66,15 @@ fn cli() -> Cli {
                 .opt("depth", "depth", "4")
                 .opt("artifacts", "artifact directory", "artifacts")
                 .flag("native-only", "disable the XLA backend"),
+            Command::new("serve-stream", "stateful streaming workload through the coordinator")
+                .opt("sessions", "concurrent streaming sessions (one client thread each)", "8")
+                .opt("feeds", "feed requests per session", "64")
+                .opt("feed-points", "points appended per feed", "32")
+                .opt("channels", "channels", "3")
+                .opt("depth", "depth", "4")
+                .opt("query-every", "interval query after every K feeds (0 = never)", "8")
+                .opt("budget-mb", "session memory budget, MiB (0 = unbounded)", "0")
+                .opt("ttl-ms", "evict sessions idle for this long, ms (0 = off)", "0"),
             Command::new("info", "artifact registry / platform diagnostics")
                 .opt("artifacts", "artifact directory", "artifacts"),
         ],
@@ -85,6 +97,7 @@ fn main() {
         "logsig" => cmd_logsig(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "serve-stream" => cmd_serve_stream(&args),
         "info" => cmd_info(&args),
         _ => unreachable!(),
     };
@@ -317,6 +330,109 @@ fn cmd_serve(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     );
     println!("metrics: {}", snap.render());
     println!("padding ratio: {:.1}%", coord.metrics().padding_ratio() * 100.0);
+    Ok(())
+}
+
+fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let n_sessions = args.get_usize("sessions", 8)?;
+    let feeds = args.get_usize("feeds", 64)?;
+    let feed_points = args.get_usize("feed-points", 32)?.max(1);
+    let d = args.get_usize("channels", 3)?;
+    let depth = args.get_usize("depth", 4)?;
+    let query_every = args.get_usize("query-every", 8)?;
+    let budget_mb = args.get_usize("budget-mb", 0)?;
+    let ttl_ms = args.get_usize("ttl-ms", 0)?;
+
+    let mut session = SessionConfig::default();
+    if budget_mb > 0 {
+        session.budget_bytes = Some(budget_mb << 20);
+    }
+    if ttl_ms > 0 {
+        session.ttl = Some(Duration::from_millis(ttl_ms as u64));
+    }
+    let coord = Coordinator::new(CoordinatorConfig { session, ..CoordinatorConfig::native_only() })?;
+    println!(
+        "coordinator up (streaming, budget: {}, ttl: {})",
+        if budget_mb > 0 { format!("{budget_mb} MiB") } else { "unbounded".into() },
+        if ttl_ms > 0 { format!("{ttl_ms} ms") } else { "off".into() },
+    );
+
+    let ok = AtomicU64::new(0);
+    let errs = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..n_sessions {
+            let coord = &coord;
+            let ok = &ok;
+            let errs = &errs;
+            scope.spawn(move || {
+                let call = |req: Request| match coord.call(req) {
+                    Ok(resp) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                        Some(resp)
+                    }
+                    Err(_) => {
+                        errs.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                };
+                let mut rng = Rng::new(0x57E4 + t as u64);
+                let seed_points = 4usize;
+                let Some(open) = call(Request::OpenStream {
+                    points: signax::data::random_path(&mut rng, seed_points, d, 0.2),
+                    stream: seed_points,
+                    d,
+                    depth,
+                }) else {
+                    return;
+                };
+                let Some(sid) = open.session else { return };
+                let mut len = seed_points;
+                for k in 0..feeds {
+                    let pts = rng.normal_vec(feed_points * d, 0.2);
+                    if call(Request::Feed { session: sid, points: pts, count: feed_points })
+                        .is_some()
+                    {
+                        len += feed_points;
+                    }
+                    if query_every > 0 && (k + 1) % query_every == 0 && len >= 4 {
+                        let i = len / 3;
+                        let j = len - 1;
+                        // Alternate signature / logsignature interval queries.
+                        if k % (2 * query_every) < query_every {
+                            call(Request::QueryInterval { session: sid, i, j });
+                        } else {
+                            call(Request::LogSigQueryInterval { session: sid, i, j });
+                        }
+                    }
+                }
+                // Half the clients close explicitly; the rest leave their
+                // sessions to the budget/TTL policies.
+                if t % 2 == 0 {
+                    call(Request::CloseStream { session: sid });
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed();
+    let ok = ok.load(Ordering::Relaxed);
+    let errs = errs.load(Ordering::Relaxed);
+    let snap = coord.metrics().snapshot();
+    println!(
+        "{ok} ok / {errs} errors in {:.2}s  ({:.0} req/s, mean latency {:?})",
+        dt.as_secs_f64(),
+        (ok + errs) as f64 / dt.as_secs_f64(),
+        snap.mean_latency
+    );
+    println!("metrics: {}", snap.render());
+    println!(
+        "sessions: open={} resident={:.2} MiB evicted={} expired={}",
+        snap.open_sessions,
+        snap.session_bytes as f64 / (1 << 20) as f64,
+        snap.sessions_evicted,
+        snap.sessions_expired
+    );
     Ok(())
 }
 

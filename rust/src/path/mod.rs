@@ -124,10 +124,10 @@ impl Path {
     }
 
     /// `LogSig(x_i .. x_j)` in the plan's basis: the O(1) query followed by
-    /// a log (§4.2).
+    /// a log (§4.2). Errors if `plan` was built for a different `SigSpec`.
     pub fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Vec<f32>> {
         let sig = self.query(i, j)?;
-        Ok(logsignature_from_sig(&sig, &self.spec, plan))
+        logsignature_from_sig(&sig, &self.spec, plan)
     }
 
     /// The signature of the whole path so far.
@@ -322,6 +322,16 @@ mod tests {
             let direct = logsignature(&pts[2 * 2..8 * 2], 6, &spec, &plan);
             assert_close(&q, &direct, 5e-3, 5e-4);
         }
+    }
+
+    #[test]
+    fn logsig_query_rejects_mismatched_plan() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(10);
+        let pts = random_path(&mut rng, 8, 2);
+        let path = Path::new(&spec, &pts, 8).unwrap();
+        let wrong = LogSigPlan::new(&SigSpec::new(3, 3).unwrap(), LogSigBasis::Words).unwrap();
+        assert!(path.logsig_query(1, 5, &wrong).is_err());
     }
 
     #[test]

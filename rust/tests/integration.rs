@@ -51,7 +51,7 @@ fn golden_files_pin_native_engine_to_python_oracle() {
 
         // Words-basis logsignature.
         let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
-        let logsig = logsignature_from_sig(&sig, &spec, &plan);
+        let logsig = logsignature_from_sig(&sig, &spec, &plan).unwrap();
         let expect_log = blob.get("logsig_words").unwrap().as_f32_vec().unwrap();
         assert_close(&logsig, &expect_log, 5e-4, 5e-5);
 
@@ -70,6 +70,56 @@ fn golden_files_pin_native_engine_to_python_oracle() {
         checked += 1;
     }
     assert!(checked >= 5, "expected at least 5 golden files, saw {checked}");
+}
+
+#[test]
+fn streaming_sessions_end_to_end_native() {
+    // Needs no artifacts: the streaming surface is always served natively.
+    let spec = SigSpec::new(3, 3).unwrap();
+    let coord = Coordinator::new(CoordinatorConfig::native_only()).expect("coordinator");
+    let mut rng = Rng::new(77);
+    let all: Vec<f32> = {
+        // A continuous path so interval queries are well-conditioned.
+        let mut p = vec![0.0f32; 40 * 3];
+        for i in 1..40 {
+            for c in 0..3 {
+                p[i * 3 + c] = p[(i - 1) * 3 + c] + rng.normal_f32() * 0.2;
+            }
+        }
+        p
+    };
+    let open = coord
+        .call(Request::OpenStream { points: all[..10 * 3].to_vec(), stream: 10, d: 3, depth: 3 })
+        .unwrap();
+    let sid = open.session.expect("session id");
+    assert_eq!(open.backend, Backend::Native);
+    // Feed the rest in three chunks; the final signature must match the
+    // one-shot computation over the whole path.
+    let mut last = open.values;
+    for chunk in all[10 * 3..].chunks(10 * 3) {
+        let resp = coord
+            .call(Request::Feed { session: sid, points: chunk.to_vec(), count: chunk.len() / 3 })
+            .unwrap();
+        last = resp.values;
+    }
+    assert_close(&last, &signature(&all, 40, &spec), 5e-3, 5e-4);
+    // Interval query spanning feed boundaries matches recomputation.
+    let q = coord.call(Request::QueryInterval { session: sid, i: 7, j: 33 }).unwrap();
+    assert_close(&q.values, &signature(&all[7 * 3..34 * 3], 27, &spec), 1e-2, 1e-3);
+    // Logsig interval query has the words-basis dimension.
+    let lq = coord.call(Request::LogSigQueryInterval { session: sid, i: 7, j: 33 }).unwrap();
+    assert_eq!(lq.values.len(), signax::words::witt_dimension(3, 3));
+    // Metrics cover the streaming surface; close releases the storage.
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.stream_requests, snap.requests);
+    assert_eq!(snap.open_sessions, 1);
+    assert!(snap.session_bytes > 0);
+    coord.call(Request::CloseStream { session: sid }).unwrap();
+    assert!(coord.call(Request::Feed { session: sid, points: vec![0.0; 3], count: 1 }).is_err());
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.open_sessions, 0);
+    assert_eq!(snap.session_bytes, 0);
+    assert_eq!(snap.errors, 1);
 }
 
 #[test]
@@ -105,7 +155,7 @@ fn xla_logsig_artifact_matches_native_engine() {
     for b in 0..4 {
         let one = &paths[b * 128 * 4..(b + 1) * 128 * 4];
         let sig = signature(one, 128, &spec);
-        let native = logsignature_from_sig(&sig, &spec, &plan);
+        let native = logsignature_from_sig(&sig, &spec, &plan).unwrap();
         assert_close(
             &xla_out[b * plan.dim()..(b + 1) * plan.dim()],
             &native,
