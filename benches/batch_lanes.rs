@@ -1,0 +1,149 @@
+//! Batch-lane engine benchmark: lane-fused forward/backward throughput vs
+//! per-path dispatch, swept over lane counts L ∈ {1, 4, 8, 16} and
+//! channels d ∈ {2, 4, 8} at depth 4 over short streams — the serving
+//! regime where one-thread-per-path leaves the SIMD lanes idle. Both
+//! sides run single-threaded so the speedup isolates lane utilisation,
+//! not thread scaling. Writes the machine-readable record the perf
+//! trajectory tracks:
+//!
+//!     cargo bench --bench batch_lanes             # -> BENCH_batch.json
+//!     cargo bench --bench batch_lanes -- --check  # CI smoke: reduced
+//!         iteration count plus a hard speedup assertion, so kernel
+//!         regressions fail CI instead of only skewing uploaded artifacts
+//!
+//! Acceptance target: >= 2x forward throughput over per-path dispatch at
+//! L = 16, d = 2 (recorded in BENCH_batch.json). Every timed point is
+//! first gated on bitwise equality between the lane-fused rows and
+//! per-path dispatch.
+
+use signax::bench::batch_json;
+use signax::signature::{signature, signature_batch, signature_batch_vjp, signature_vjp};
+use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
+use signax::substrate::pool::default_threads;
+use signax::substrate::rng::Rng;
+use signax::ta::SigSpec;
+
+const DEPTH: usize = 4;
+const STREAM: usize = 32;
+
+fn main() -> anyhow::Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    let cfg = if check {
+        // Smoke protocol: reduced but not tiny — best-of-20 (min time)
+        // rides out noisy-neighbor spikes on shared CI runners while the
+        // 1.2x floor leaves headroom below the >= 2x full-run target, so
+        // only a genuine kernel regression trips the gate.
+        BenchConfig {
+            warmup: 2,
+            repeats: 20,
+            budget: std::time::Duration::from_secs(4),
+            min_repeats: 5,
+        }
+    } else {
+        BenchConfig {
+            warmup: 1,
+            repeats: 30,
+            budget: std::time::Duration::from_secs(6),
+            min_repeats: 3,
+        }
+    };
+    println!(
+        "{:<9} {:>3} {:>4} {:>12} {:>12} {:>8}",
+        "op", "d", "L", "per-path", "lane-fused", "speedup"
+    );
+    let mut records: Vec<(&str, usize, usize, usize, f64, f64)> = vec![];
+    for &d in &[2usize, 4, 8] {
+        let spec = SigSpec::new(d, DEPTH)?;
+        let len = spec.sig_len();
+        for &lanes in &[1usize, 4, 8, 16] {
+            let mut rng = Rng::new(0xBA7C ^ ((d as u64) << 8) ^ lanes as u64);
+            let paths = signax::data::random_batch(&mut rng, lanes, STREAM, d, 0.2);
+            let plen = STREAM * d;
+            // Correctness gate before timing: lane-fused == per-path,
+            // bitwise, forward and backward.
+            let batched = signature_batch(&paths, lanes, STREAM, &spec, 1)?;
+            let cots = rng.normal_vec(lanes * len, 1.0);
+            let batched_grad = signature_batch_vjp(&paths, lanes, STREAM, &spec, &cots, 1)?;
+            for l in 0..lanes {
+                let single = signature(&paths[l * plen..(l + 1) * plen], STREAM, &spec);
+                anyhow::ensure!(
+                    batched[l * len..(l + 1) * len] == single[..],
+                    "forward lane {l} of d={d} L={lanes} diverged from per-path dispatch"
+                );
+                let single_grad = signature_vjp(
+                    &paths[l * plen..(l + 1) * plen],
+                    STREAM,
+                    &spec,
+                    &cots[l * len..(l + 1) * len],
+                );
+                anyhow::ensure!(
+                    batched_grad[l * plen..(l + 1) * plen] == single_grad[..],
+                    "backward lane {l} of d={d} L={lanes} diverged from per-path dispatch"
+                );
+            }
+            let fwd_per_path = bench(&cfg, || {
+                for b in 0..lanes {
+                    black_box(signature(&paths[b * plen..(b + 1) * plen], STREAM, &spec));
+                }
+            })
+            .best_secs();
+            let fwd_lane = bench(&cfg, || {
+                black_box(signature_batch(&paths, lanes, STREAM, &spec, 1).unwrap());
+            })
+            .best_secs();
+            println!(
+                "{:<9} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+                "forward",
+                d,
+                lanes,
+                fmt_secs(fwd_per_path),
+                fmt_secs(fwd_lane),
+                fwd_per_path / fwd_lane
+            );
+            records.push(("forward", d, lanes, STREAM, fwd_per_path, fwd_lane));
+            let bwd_per_path = bench(&cfg, || {
+                for b in 0..lanes {
+                    black_box(signature_vjp(
+                        &paths[b * plen..(b + 1) * plen],
+                        STREAM,
+                        &spec,
+                        &cots[b * len..(b + 1) * len],
+                    ));
+                }
+            })
+            .best_secs();
+            let bwd_lane = bench(&cfg, || {
+                black_box(signature_batch_vjp(&paths, lanes, STREAM, &spec, &cots, 1).unwrap());
+            })
+            .best_secs();
+            println!(
+                "{:<9} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+                "backward",
+                d,
+                lanes,
+                fmt_secs(bwd_per_path),
+                fmt_secs(bwd_lane),
+                bwd_per_path / bwd_lane
+            );
+            records.push(("backward", d, lanes, STREAM, bwd_per_path, bwd_lane));
+        }
+    }
+    std::fs::write("BENCH_batch.json", batch_json(default_threads(), DEPTH, &records))?;
+    println!("\nwrote BENCH_batch.json");
+    if check {
+        // Hard gate at the acceptance point (with headroom for CI-runner
+        // noise: the recorded full-run target is >= 2x).
+        let &(_, _, _, _, per_path, lane) = records
+            .iter()
+            .find(|r| r.0 == "forward" && r.1 == 2 && r.2 == 16)
+            .expect("acceptance point measured");
+        let speedup = per_path / lane;
+        anyhow::ensure!(
+            speedup >= 1.2,
+            "batch-lane smoke FAILED: forward speedup at d=2, L=16 is {speedup:.2}x \
+             (smoke floor 1.2x; full-run acceptance >= 2x)"
+        );
+        println!("smoke ok: forward speedup at d=2, L=16 = {speedup:.2}x");
+    }
+    Ok(())
+}

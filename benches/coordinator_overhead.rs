@@ -29,8 +29,13 @@ fn main() -> anyhow::Result<()> {
     })
     .best_secs();
 
-    // Through the coordinator, native routing.
-    let coord = Coordinator::new(CoordinatorConfig::native_only())?;
+    // Through the coordinator, native routing. Microbatching is disabled
+    // for this serial measurement: a lone caller would otherwise just be
+    // timing the batcher linger, not the routing overhead.
+    let coord = Coordinator::new(CoordinatorConfig {
+        native_batch: 0,
+        ..CoordinatorConfig::native_only()
+    })?;
     let routed = bench(&cfg, || {
         let r = coord
             .call(Request::Signature { path: path.clone(), stream, d, depth })
@@ -45,6 +50,26 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(routed),
         (routed / direct - 1.0) * 100.0
     );
+
+    // Concurrent native traffic with microbatching on (the default): 32
+    // same-spec callers coalesce into lane-fused sweeps.
+    let coord = Coordinator::new(CoordinatorConfig::native_only())?;
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        let reqs: Vec<Request> = (0..32)
+            .map(|_| Request::Signature { path: path.clone(), stream, d, depth })
+            .collect();
+        for r in coord.call_many(reqs) {
+            r?;
+        }
+    }
+    let per_req = t0.elapsed().as_secs_f64() / (32.0 * reps as f64);
+    println!(
+        "coordinator (native, 32 concurrent, lane-fused microbatches): {} per request",
+        fmt_secs(per_req)
+    );
+    println!("native batcher metrics: {}", coord.metrics().snapshot().render());
 
     // Through the batcher to XLA, 32 concurrent requests (amortised).
     let coord = Coordinator::new(CoordinatorConfig::default())?;

@@ -10,6 +10,9 @@
 //! - `memory`: the App. D.2 reversibility-vs-tape memory comparison.
 //! - `backward`: serial vs chunked-Chen stream-parallel backward over
 //!   long single streams; also writes `BENCH_backward.json`.
+//! - `batch`: the batch-lane engine vs per-path dispatch in the serving
+//!   regime (many short streams, small d); the standalone
+//!   `benches/batch_lanes.rs` sweep writes `BENCH_batch.json`.
 //!
 //! Rows mirror the paper's: `esig_like`, `iisignature_like` (baselines),
 //! `signax CPU (no parallel)`, `signax CPU (parallel)` and `signax XLA`
@@ -19,4 +22,4 @@
 
 pub mod tables;
 
-pub use tables::{backward_json, run_table, sessions_json, table_ids, BenchCtx, Scale};
+pub use tables::{backward_json, batch_json, run_table, sessions_json, table_ids, BenchCtx, Scale};

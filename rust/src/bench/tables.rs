@@ -128,7 +128,7 @@ impl BenchCtx {
 pub fn table_ids() -> Vec<&'static str> {
     vec![
         "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16",
-        "opcount", "path", "memory", "backward",
+        "opcount", "path", "memory", "backward", "batch",
     ]
 }
 
@@ -183,6 +183,7 @@ pub fn run_table(ctx: &BenchCtx, id: &str) -> anyhow::Result<Table> {
         "path" => return Ok(path_table(ctx)),
         "memory" => return Ok(memory_table(ctx)),
         "backward" => return Ok(backward_table(ctx)),
+        "batch" => return Ok(batch_table(ctx)),
         _ => {}
     }
     let spec = spec_for(id).ok_or_else(|| anyhow::anyhow!("unknown table {id:?}"))?;
@@ -728,6 +729,88 @@ fn backward_table(ctx: &BenchCtx) -> Table {
     table
 }
 
+/// Batch-lane engine (serving regime): lane-fused forward vs per-path
+/// dispatch over the lane count, at small `d` and a short stream — the
+/// many-short-streams workload where one-thread-per-path leaves the SIMD
+/// lanes idle. Single-threaded on both sides so the ratio isolates lane
+/// utilisation rather than thread scaling. The standalone
+/// `benches/batch_lanes.rs` sweep (forward *and* backward) writes the
+/// machine-readable `BENCH_batch.json`.
+fn batch_table(ctx: &BenchCtx) -> Table {
+    let lanes_axis: Vec<usize> = vec![1, 4, 8, 16];
+    let ds: Vec<usize> = match ctx.scale {
+        Scale::Paper => vec![2, 4, 8],
+        Scale::Small => vec![2, 4],
+        Scale::Ci => vec![2],
+    };
+    let depth = 4;
+    let stream = 32;
+    let cfg = ctx.scale.bench_config();
+    let cols = lanes_axis.iter().map(|l| l.to_string()).collect();
+    let mut table = Table::new(
+        &format!(
+            "Batch-lane engine (serving regime): forward, depth={depth} stream={stream}, 1 thread"
+        ),
+        "Lanes",
+        cols,
+    );
+    for &d in &ds {
+        let sspec = SigSpec::new(d, depth).expect("valid spec");
+        let mut per_path_row = vec![];
+        let mut lane_row = vec![];
+        for &lanes in &lanes_axis {
+            let mut rng = Rng::new(0x1A7E ^ ((d as u64) << 8) ^ lanes as u64);
+            let paths = crate::data::random_batch(&mut rng, lanes, stream, d, 0.2);
+            let plen = stream * d;
+            per_path_row.push(Some(
+                bench(&cfg, || {
+                    for b in 0..lanes {
+                        black_box(signature(&paths[b * plen..(b + 1) * plen], stream, &sspec));
+                    }
+                })
+                .best_secs(),
+            ));
+            lane_row.push(Some(
+                bench(&cfg, || {
+                    black_box(signature_batch(&paths, lanes, stream, &sspec, 1).unwrap());
+                })
+                .best_secs(),
+            ));
+        }
+        let base = format!("d={d} per-path dispatch");
+        let lane_label = format!("d={d} lane-fused");
+        table.push_row(&base, per_path_row);
+        table.push_row(&lane_label, lane_row);
+        table.push_ratio_rows(&base, &[lane_label.as_str()]);
+    }
+    table
+}
+
+/// Render batch-lane bench records as `BENCH_batch.json`: `points[]` of
+/// `(op, d, lanes, stream, per_path_s, lane_s, speedup)` under top-level
+/// `hw_threads` / `depth`. Written by `benches/batch_lanes.rs`; the
+/// acceptance point is >= 2x forward speedup at `lanes = 16, d = 2`.
+pub fn batch_json(
+    hw_threads: usize,
+    depth: usize,
+    records: &[(&str, usize, usize, usize, f64, f64)],
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"batch_lanes\",\n");
+    s.push_str(&format!("  \"depth\": {depth},\n"));
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(op, d, lanes, stream, per_path, lane)) in records.iter().enumerate() {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"op\": \"{op}\", \"d\": {d}, \"lanes\": {lanes}, \"stream\": {stream}, \"per_path_s\": {per_path:.9}, \"lane_s\": {lane:.9}, \"speedup\": {:.3}}}{comma}\n",
+            per_path / lane
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Render backward bench records as `BENCH_backward.json` (no serde
 /// offline; the format is flat enough to emit by hand). Shared by the
 /// `backward` table and `benches/backward_scaling.rs` so both producers
@@ -843,6 +926,31 @@ mod tests {
         assert_eq!(pts[0].get("stream").and_then(|v| v.as_f64()), Some(2048.0));
         assert_eq!(pts[0].get("threads").and_then(|v| v.as_f64()), Some(8.0));
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(4.0));
+    }
+
+    #[test]
+    fn batch_table_smoke_and_json() {
+        let ctx = BenchCtx { scale: Scale::Ci, threads: 2, xla: None };
+        let t = run_table(&ctx, "batch").unwrap();
+        assert_eq!(t.cols, vec!["1", "4", "8", "16"]);
+        let per_path = t.rows.iter().find(|r| r.label == "d=2 per-path dispatch").unwrap();
+        let lane = t.rows.iter().find(|r| r.label == "d=2 lane-fused").unwrap();
+        assert!(per_path.cells.iter().all(|c| c.is_some()));
+        assert!(lane.cells.iter().all(|c| c.is_some()));
+        assert!(t.rows.iter().any(|r| r.label == "Ratio d=2 lane-fused"));
+        // JSON rendering is well-formed enough for the in-tree parser.
+        let json = batch_json(
+            8,
+            4,
+            &[("forward", 2, 16, 32, 1.0, 0.4), ("backward", 2, 16, 32, 3.0, 1.5)],
+        );
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("depth").and_then(|v| v.as_f64()), Some(4.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
+        assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
     }
 
     #[test]

@@ -36,10 +36,16 @@ impl BatchShape {
     }
 }
 
-/// Executes one padded batch. Implemented by the XLA engine (production)
-/// and by mock/native backends (tests, native fallback benchmarking).
+/// Executes one padded batch. Implemented by the XLA engine (production),
+/// the native lane-fused backend, and mock backends (tests).
 pub trait BatchBackend: Send + Sync + 'static {
-    fn run(&self, shape: &BatchShape, padded: &[f32]) -> anyhow::Result<Vec<f32>>;
+    /// Run one batch. Only the first `n_real` rows of `padded` carry real
+    /// requests; the rest are zero padding for fixed-shape backends.
+    /// Backends free of the static-shape constraint (the native lane
+    /// engine) may compute just the real rows — the result must hold at
+    /// least `n_real * shape.out_dim` values, and rows beyond `n_real`
+    /// are never read.
+    fn run(&self, shape: &BatchShape, padded: &[f32], n_real: usize) -> anyhow::Result<Vec<f32>>;
 }
 
 type RowSender = mpsc::Sender<anyhow::Result<Vec<f32>>>;
@@ -204,9 +210,9 @@ fn execute_batch(
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.real_rows.fetch_add(n_real as u64, Ordering::Relaxed);
     metrics.padded_rows.fetch_add(shape.batch as u64, Ordering::Relaxed);
-    match backend.run(&shape, &padded) {
+    match backend.run(&shape, &padded, n_real) {
         Ok(out) => {
-            debug_assert_eq!(out.len(), shape.batch * shape.out_dim);
+            debug_assert!(out.len() >= n_real * shape.out_dim);
             for (i, tx) in pending.senders.into_iter().enumerate() {
                 let row = out[i * shape.out_dim..(i + 1) * shape.out_dim].to_vec();
                 let _ = tx.send(Ok(row));
@@ -236,7 +242,12 @@ mod tests {
     }
 
     impl BatchBackend for MockBackend {
-        fn run(&self, shape: &BatchShape, padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+        fn run(
+            &self,
+            shape: &BatchShape,
+            padded: &[f32],
+            _n_real: usize,
+        ) -> anyhow::Result<Vec<f32>> {
             anyhow::ensure!(!self.fail, "mock failure");
             let spec = crate::ta::SigSpec::new(shape.d, shape.depth).unwrap();
             let mut out = vec![0.0f32; shape.batch * shape.out_dim];
@@ -367,7 +378,12 @@ mod tests {
     }
 
     impl BatchBackend for SlowOnceBackend {
-        fn run(&self, shape: &BatchShape, _padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+        fn run(
+            &self,
+            shape: &BatchShape,
+            _padded: &[f32],
+            _n_real: usize,
+        ) -> anyhow::Result<Vec<f32>> {
             if !self.slept.swap(true, std::sync::atomic::Ordering::SeqCst) {
                 std::thread::sleep(Duration::from_millis(450));
             }

@@ -89,7 +89,10 @@ impl Metrics {
         }
     }
 
-    /// Fraction of XLA rows that were padding (0 when nothing ran).
+    /// Fraction of batch *slots* that were padding, across both batchers
+    /// (0 when nothing ran). XLA pays real compute for padding slots; the
+    /// native lane backend skips them, so for native microbatches this
+    /// measures slot utilisation of the linger window, not wasted work.
     pub fn padding_ratio(&self) -> f64 {
         let padded = self.padded_rows.load(Ordering::Relaxed);
         let real = self.real_rows.load(Ordering::Relaxed);

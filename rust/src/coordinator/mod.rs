@@ -10,7 +10,8 @@
 //!                       │        (sharded, memory-bounded, LRU+TTL eviction)
 //!                       ├──(shape matches an artifact?)──▶ Batcher ──▶ XLA Engine
 //!                       │                                    (pad to artifact batch)
-//!                       └──(no artifact / tiny request)────▶ native worker pool
+//!                       └──(no artifact)──▶ native microbatcher ──▶ lane-fused sweep
+//!                                            (same-spec signatures, ta::batch)
 //! ```
 //!
 //! Batching exists because XLA executables are compiled for fixed shapes:

@@ -5,6 +5,12 @@
 //! native Rust engine otherwise. The native path is also the fallback when
 //! no artifact directory is present, so the coordinator is fully usable
 //! without running `make artifacts`.
+//!
+//! Native `Signature` requests are themselves microbatched
+//! ([`CoordinatorConfig::native_batch`]): same-spec requests gathered
+//! within one linger window execute as a single **lane-fused** sweep
+//! through [`crate::ta::batch`] — vectorised across the batch — instead of
+//! N independent per-path signatures.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -16,13 +22,17 @@ use super::metrics::Metrics;
 use super::session::{SessionConfig, SessionId, SessionManager};
 use crate::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
-use crate::signature::{signature, signature_vjp_with, SigConfig};
+use crate::signature::{signature_batch, signature_vjp_with, signature_with, SigConfig};
+#[cfg(test)]
+use crate::signature::signature;
 use crate::ta::SigSpec;
 
 /// Kinds encoded into [`BatchShape::kind`].
 const KIND_SIG: u8 = 0;
 const KIND_LOGSIG: u8 = 1;
 const KIND_SIGGRAD: u8 = 2;
+/// Native lane-fused signature microbatch (no artifact involved).
+const KIND_SIG_NATIVE: u8 = 3;
 
 /// A request against the coordinator.
 #[derive(Clone, Debug)]
@@ -85,6 +95,21 @@ pub struct CoordinatorConfig {
     pub linger: Duration,
     /// Threads for native batch work.
     pub native_threads: usize,
+    /// Native microbatch capacity: when `>= 2`, stateless `Signature`
+    /// requests that miss the XLA path are gathered by a dynamic batcher
+    /// (same `linger`), and a flushed microbatch of same-spec requests
+    /// runs as **one lane-fused sweep** ([`crate::ta::batch`]) instead of
+    /// N independent signatures — the CPU serving hot path for many short
+    /// streams at small `d`. Requests whose shapes differ batch
+    /// separately (the batcher keys on shape), so a ragged mix degrades
+    /// gracefully to per-shape microbatches. The standard dynamic-
+    /// batching trade applies (identical to the XLA path): an uncontended
+    /// request waits out the `linger` before its lone-row batch flushes,
+    /// buying throughput under concurrent load at the cost of idle-path
+    /// latency — latency-sensitive single-stream callers should set `0`
+    /// (disables microbatching: each request computes directly, no
+    /// linger) or shrink `linger`.
+    pub native_batch: usize,
     /// Streaming-session knobs: table sharding, the resident-memory budget
     /// (`session.budget_bytes`, enforced by LRU eviction of idle
     /// sessions), and the idle TTL (`session.ttl`, enforced by a
@@ -99,6 +124,7 @@ impl Default for CoordinatorConfig {
             prefer_xla: true,
             linger: Duration::from_millis(2),
             native_threads: crate::substrate::pool::default_threads(),
+            native_batch: crate::signature::LANE_BLOCK,
             session: SessionConfig::default(),
         }
     }
@@ -117,7 +143,9 @@ struct XlaBackend {
 }
 
 impl BatchBackend for XlaBackend {
-    fn run(&self, shape: &BatchShape, padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+    // XLA executables are compiled for the fixed `shape.batch`, so the
+    // padding rows must run regardless of `n_real`.
+    fn run(&self, shape: &BatchShape, padded: &[f32], _n_real: usize) -> anyhow::Result<Vec<f32>> {
         let kind = match shape.kind {
             KIND_SIG => ArtifactKind::Sig,
             KIND_LOGSIG => ArtifactKind::LogSig,
@@ -152,12 +180,40 @@ impl BatchBackend for XlaBackend {
     }
 }
 
-/// The coordinator: router + batcher + sessions + metrics.
+/// Native batch backend: executes a flushed microbatch of same-spec
+/// signature requests as one lane-fused sweep over the *real* rows only
+/// (no static-shape constraint, so the padding slots are never computed).
+/// Each row's result is bitwise identical to a stand-alone
+/// [`crate::signature::signature`] call.
+struct NativeLaneBackend {
+    threads: usize,
+}
+
+impl BatchBackend for NativeLaneBackend {
+    fn run(&self, shape: &BatchShape, padded: &[f32], n_real: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(shape.kind == KIND_SIG_NATIVE, "unexpected native batch kind");
+        let spec = SigSpec::new(shape.d, shape.depth)?;
+        // No static-shape constraint here: compute only the real rows
+        // (a sparse flush must not pay for the padding slots). A lone-row
+        // flush runs serially — signature_batch's batch-1 fallback would
+        // otherwise engage the chunked stream reduction on long streams,
+        // and a request's bits must not depend on whether traffic
+        // happened to coalesce with it.
+        let rows = n_real.clamp(1, shape.batch);
+        let threads = if rows == 1 { 1 } else { self.threads };
+        signature_batch(&padded[..rows * shape.in_row()], rows, shape.length, &spec, threads)
+    }
+}
+
+/// The coordinator: router + batchers + sessions + metrics.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: Option<Arc<Registry>>,
     engine: Option<EngineHandle>,
     batcher: Option<Batcher>,
+    /// Lane-fused microbatcher for native signature requests
+    /// ([`CoordinatorConfig::native_batch`]).
+    native_batcher: Option<Batcher>,
     sessions: SessionManager,
     metrics: Arc<Metrics>,
     plans: Mutex<HashMap<(usize, usize), Arc<LogSigPlan>>>,
@@ -179,11 +235,21 @@ impl Coordinator {
             }
             _ => (None, None, None),
         };
+        let native_batcher = if cfg.native_batch >= 2 {
+            Some(Batcher::new(
+                Arc::new(NativeLaneBackend { threads: cfg.native_threads }),
+                Arc::clone(&metrics),
+                cfg.linger,
+            ))
+        } else {
+            None
+        };
         Ok(Coordinator {
             sessions: SessionManager::with_config(Arc::clone(&metrics), cfg.session.clone()),
             registry,
             engine,
             batcher,
+            native_batcher,
             metrics,
             cfg,
             plans: Mutex::new(HashMap::new()),
@@ -312,17 +378,40 @@ impl Coordinator {
                 }
             }
         }
-        // Native path.
+        // Native path. All shapes are validated up front so malformed
+        // requests are an `Err` here, never a panic on a serving thread.
         let values = match req {
             Request::Signature { path, stream, d, depth } => {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
-                signature(&path, stream, &spec)
+                anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
+                if let Some(nb) = &self.native_batcher {
+                    // Lane-fused microbatching: same-spec requests gathered
+                    // within the linger window execute as one interleaved
+                    // sweep; the result per row is bitwise identical to a
+                    // stand-alone signature call.
+                    let shape = BatchShape {
+                        kind: KIND_SIG_NATIVE,
+                        batch: self.cfg.native_batch,
+                        length: stream,
+                        d,
+                        depth,
+                        in_dim: stream * d,
+                        out_dim: spec.sig_len(),
+                    };
+                    let rx = nb.submit(shape, &path)?;
+                    let values = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("native batcher dropped request"))??;
+                    self.metrics.native_requests.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Response { values, backend: Backend::Native, session: None });
+                }
+                signature_with(&path, stream, &spec, &SigConfig::serial())?
             }
             Request::LogSignature { path, stream, d, depth } => {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
-                let sig = signature(&path, stream, &spec);
+                let sig = signature_with(&path, stream, &spec, &SigConfig::serial())?;
                 logsignature_from_sig(&sig, &spec, self.plan(d, depth)?.as_ref())?
             }
             Request::SignatureGrad { path, stream, d, depth, cotangent } => {
@@ -621,7 +710,12 @@ mod tests {
     struct FailBackend;
 
     impl BatchBackend for FailBackend {
-        fn run(&self, _shape: &BatchShape, _padded: &[f32]) -> anyhow::Result<Vec<f32>> {
+        fn run(
+            &self,
+            _shape: &BatchShape,
+            _padded: &[f32],
+            _n_real: usize,
+        ) -> anyhow::Result<Vec<f32>> {
             anyhow::bail!("backend down")
         }
     }
@@ -664,6 +758,7 @@ mod tests {
             registry: Some(registry),
             engine: None,
             batcher: Some(batcher),
+            native_batcher: None,
             sessions: SessionManager::new(Arc::clone(&metrics)),
             metrics,
             plans: Mutex::new(HashMap::new()),
@@ -683,6 +778,105 @@ mod tests {
         let snap = c.metrics().snapshot();
         assert_eq!(snap.errors, 2, "one error per failed request");
         assert_eq!(snap.batch_failures, 1, "one failed batch execution");
+    }
+
+    #[test]
+    fn native_microbatch_coalesces_same_spec_requests() {
+        // Six concurrent same-spec requests inside one linger window must
+        // execute as ONE lane-fused microbatch (metrics: 1 batch, 6 real
+        // rows), each caller receiving the bitwise per-path signature.
+        let c = Coordinator::new(CoordinatorConfig {
+            native_batch: 8,
+            // Generous linger: all six caller threads must land in one
+            // pending batch even if thread spawn stalls; the batch never
+            // fills (6 < 8), so the flusher fires it at the deadline.
+            linger: Duration::from_millis(250),
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(12);
+        let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
+        let reqs: Vec<Request> = paths
+            .iter()
+            .map(|p| Request::Signature { path: p.clone(), stream: 8, d: 2, depth: 3 })
+            .collect();
+        let resps = c.call_many(reqs);
+        for (p, r) in paths.iter().zip(&resps) {
+            let r = r.as_ref().expect("response");
+            assert_eq!(r.backend, Backend::Native);
+            assert_eq!(r.values, signature(p, 8, &spec), "lane row != per-path signature");
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.native_requests, 6);
+        assert_eq!(snap.batches, 1, "same-spec requests should coalesce into one microbatch");
+        assert_eq!(snap.real_rows, 6);
+        assert_eq!(snap.padded_rows, 8);
+    }
+
+    #[test]
+    fn native_microbatch_separates_ragged_shapes() {
+        // A ragged mix (different stream lengths) cannot share a lane
+        // sweep: the batcher keys on shape, so each shape flushes as its
+        // own microbatch and every caller still gets its exact result.
+        let c = Coordinator::new(CoordinatorConfig {
+            native_batch: 8,
+            linger: Duration::from_millis(10),
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(13);
+        let short = rng.normal_vec(5 * 2, 0.4);
+        let long = rng.normal_vec(9 * 2, 0.4);
+        let resps = c.call_many(vec![
+            Request::Signature { path: short.clone(), stream: 5, d: 2, depth: 3 },
+            Request::Signature { path: long.clone(), stream: 9, d: 2, depth: 3 },
+        ]);
+        let r0 = resps[0].as_ref().unwrap();
+        let r1 = resps[1].as_ref().unwrap();
+        assert_eq!(r0.values, signature(&short, 5, &spec));
+        assert_eq!(r1.values, signature(&long, 9, &spec));
+        assert_eq!(c.metrics().snapshot().batches, 2);
+    }
+
+    #[test]
+    fn native_batching_disabled_serves_directly() {
+        let c = Coordinator::new(CoordinatorConfig {
+            native_batch: 0,
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(14);
+        let path = rng.normal_vec(6 * 2, 0.4);
+        let resp = c
+            .call(Request::Signature { path: path.clone(), stream: 6, d: 2, depth: 3 })
+            .unwrap();
+        assert_eq!(resp.values, signature(&path, 6, &spec));
+        assert_eq!(c.metrics().snapshot().batches, 0, "no microbatching when disabled");
+    }
+
+    #[test]
+    fn malformed_forward_requests_error_not_panic() {
+        // stream < 2 and short buffers must reach the caller as Err on
+        // every native forward surface — batched and direct alike.
+        for native_batch in [0usize, 8] {
+            let c = Coordinator::new(CoordinatorConfig {
+                native_batch,
+                ..CoordinatorConfig::native_only()
+            })
+            .unwrap();
+            assert!(c
+                .call(Request::Signature { path: vec![0.0; 2], stream: 1, d: 2, depth: 3 })
+                .is_err());
+            assert!(c
+                .call(Request::LogSignature { path: vec![0.0; 2], stream: 1, d: 2, depth: 3 })
+                .is_err());
+            assert!(c
+                .call(Request::Signature { path: vec![0.0; 3], stream: 2, d: 2, depth: 3 })
+                .is_err());
+        }
     }
 
     #[test]

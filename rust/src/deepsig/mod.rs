@@ -8,13 +8,19 @@
 //!   signature VJP from [`crate::signature::backward`] (reversibility) or
 //!   from [`crate::baselines::iisignature_like`] (tape) depending on the
 //!   selected backend.
+//! - execution: with the Fused backend at `threads <= batch`, the
+//!   signature forward and VJP run **lane-fused across the batch**
+//!   ([`crate::ta::batch`]) — one interleaved sweep instead of per-sample
+//!   scalar loops — bitwise identical to per-sample dispatch.
 //!
 //! The same model can instead be trained through the AOT XLA artifact via
 //! [`crate::runtime::Engine::run_train_step`]; an integration test pins the
 //! two training paths to each other.
 
 use crate::baselines::iisignature_like;
-use crate::signature::{signature, signature_vjp_with, signature_with, SigConfig};
+use crate::signature::{
+    signature, signature_batch, signature_batch_vjp, signature_vjp_with, signature_with, SigConfig,
+};
 use crate::substrate::pool::parallel_map_indexed;
 use crate::substrate::rng::Rng;
 use crate::ta::SigSpec;
@@ -103,22 +109,12 @@ struct SampleGrad {
     loss: f32,
 }
 
-/// One forward/backward for one sample, returning per-parameter gradients.
-/// `sig_threads > 1` runs the signature forward and VJP stream-parallel
-/// (Fused backend only; the conventional tape baseline is inherently
-/// serial over the stream).
-fn sample_grad(
-    cfg: &ModelConfig,
-    spec: &SigSpec,
-    p: &Params,
-    x: &[f32], // (L, d_in)
-    y: f32,
-    backend: SigBackend,
-    sig_threads: usize,
-) -> SampleGrad {
+/// Pointwise MLP forward for one sample: `pre1 = x W1 + b1`,
+/// `a = tanh(pre1)`, `hid = a W2 + b2`. Returns `(a (L, hidden),
+/// hid (L, d_out))`.
+fn mlp_forward(cfg: &ModelConfig, p: &Params, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let (d_in, h, d_out) = (cfg.d_in, cfg.hidden, cfg.d_out);
     let l = x.len() / d_in;
-    // Forward: pre1 = x W1 + b1; a = tanh(pre1); hid = a W2 + b2.
     let mut a = vec![0.0f32; l * h];
     let mut hid = vec![0.0f32; l * d_out];
     for t in 0..l {
@@ -137,33 +133,20 @@ fn sample_grad(
             hid[t * d_out + o] = acc;
         }
     }
-    let sig_cfg = SigConfig::parallel(sig_threads.max(1));
-    let sig = match backend {
-        SigBackend::Fused if sig_threads > 1 => {
-            signature_with(&hid, l, spec, &sig_cfg).expect("valid hidden path")
-        }
-        SigBackend::Fused => signature(&hid, l, spec),
-        SigBackend::Conventional => iisignature_like::signature(&hid, l, spec),
-    };
-    let logit: f32 = sig.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
-    // BCE with logits; dL/dlogit = sigmoid(logit) - y.
-    let loss = logit.max(0.0) - logit * y + (-logit.abs()).exp().ln_1p();
-    let dlogit = 1.0 / (1.0 + (-logit).exp()) - y;
+    (a, hid)
+}
 
-    // Backward: linear head.
-    let g_w_out: Vec<f32> = sig.iter().map(|&s| s * dlogit).collect();
-    let g_sig: Vec<f32> = p.w_out.iter().map(|&w| w * dlogit).collect();
-    // Signature VJP (stream-parallel via the chunked Chen identity when
-    // sig_threads > 1; see crate::signature::backward).
-    let g_hid = match backend {
-        SigBackend::Fused => {
-            signature_vjp_with(&hid, l, spec, &sig_cfg, &g_sig)
-                .expect("valid hidden path")
-                .grad_path
-        }
-        SigBackend::Conventional => iisignature_like::signature_vjp(&hid, l, spec, &g_sig),
-    };
-    // Pointwise layers.
+/// Pointwise MLP backward for one sample given `∂L/∂hid`; returns
+/// `(g_w1, g_b1, g_w2, g_b2)`.
+fn mlp_backward(
+    cfg: &ModelConfig,
+    p: &Params,
+    x: &[f32],
+    a: &[f32],
+    g_hid: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (d_in, h, d_out) = (cfg.d_in, cfg.hidden, cfg.d_out);
+    let l = x.len() / d_in;
     let mut g_w1 = vec![0.0f32; d_in * h];
     let mut g_b1 = vec![0.0f32; h];
     let mut g_w2 = vec![0.0f32; h * d_out];
@@ -190,13 +173,136 @@ fn sample_grad(
             }
         }
     }
+    (g_w1, g_b1, g_w2, g_b2)
+}
+
+/// BCE-with-logits head shared by both gradient paths: returns
+/// `(loss, dL/dlogit)`.
+#[inline]
+fn bce_head(logit: f32, y: f32) -> (f32, f32) {
+    let loss = logit.max(0.0) - logit * y + (-logit.abs()).exp().ln_1p();
+    let dlogit = 1.0 / (1.0 + (-logit).exp()) - y;
+    (loss, dlogit)
+}
+
+/// One forward/backward for one sample, returning per-parameter gradients.
+/// `sig_threads > 1` runs the signature forward and VJP stream-parallel
+/// (Fused backend only; the conventional tape baseline is inherently
+/// serial over the stream).
+fn sample_grad(
+    cfg: &ModelConfig,
+    spec: &SigSpec,
+    p: &Params,
+    x: &[f32], // (L, d_in)
+    y: f32,
+    backend: SigBackend,
+    sig_threads: usize,
+) -> SampleGrad {
+    let d_out = cfg.d_out;
+    let (a, hid) = mlp_forward(cfg, p, x);
+    let l = hid.len() / d_out;
+    let sig_cfg = SigConfig::parallel(sig_threads.max(1));
+    let sig = match backend {
+        SigBackend::Fused if sig_threads > 1 => {
+            signature_with(&hid, l, spec, &sig_cfg).expect("valid hidden path")
+        }
+        SigBackend::Fused => signature(&hid, l, spec),
+        SigBackend::Conventional => iisignature_like::signature(&hid, l, spec),
+    };
+    let logit: f32 = sig.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
+    let (loss, dlogit) = bce_head(logit, y);
+
+    // Backward: linear head.
+    let g_w_out: Vec<f32> = sig.iter().map(|&s| s * dlogit).collect();
+    let g_sig: Vec<f32> = p.w_out.iter().map(|&w| w * dlogit).collect();
+    // Signature VJP (stream-parallel via the chunked Chen identity when
+    // sig_threads > 1; see crate::signature::backward).
+    let g_hid = match backend {
+        SigBackend::Fused => {
+            signature_vjp_with(&hid, l, spec, &sig_cfg, &g_sig)
+                .expect("valid hidden path")
+                .grad_path
+        }
+        SigBackend::Conventional => iisignature_like::signature_vjp(&hid, l, spec, &g_sig),
+    };
+    let (g_w1, g_b1, g_w2, g_b2) = mlp_backward(cfg, p, x, &a, &g_hid);
     SampleGrad { w1: g_w1, b1: g_b1, w2: g_w2, b2: g_b2, w_out: g_w_out, b_out: dlogit, loss }
 }
 
-/// One SGD step over a batch. Returns the mean loss. Parallel over the
-/// batch (App. C.3), and — when there are more threads than samples —
-/// additionally parallel over each sample's stream via the chunked
-/// Chen-identity backward (Fused backend).
+/// Batched gradients through the **lane-fused engine**: the MLP stages run
+/// per-sample in parallel, but the signature forward and VJP — the
+/// dominant cost — each run as one lane-interleaved batched sweep across
+/// all samples ([`crate::ta::batch`]), vectorising over the batch instead
+/// of leaving each core's SIMD lanes idle on a scalar Horner loop. The
+/// signature results are bitwise identical to the per-sample path, so this
+/// is a pure execution-strategy change.
+fn train_grads_lane_fused(
+    cfg: &ModelConfig,
+    spec: &SigSpec,
+    p: &Params,
+    x: &[f32],
+    y: &[f32],
+    threads: usize,
+) -> Vec<SampleGrad> {
+    let (d_in, d_out) = (cfg.d_in, cfg.d_out);
+    let batch = y.len();
+    let sample_len = x.len() / batch;
+    let l = sample_len / d_in;
+    let fwd = parallel_map_indexed(batch, threads, |b| {
+        mlp_forward(cfg, p, &x[b * sample_len..(b + 1) * sample_len])
+    });
+    let mut hid_all = vec![0.0f32; batch * l * d_out];
+    for (b, (_, hid)) in fwd.iter().enumerate() {
+        hid_all[b * l * d_out..(b + 1) * l * d_out].copy_from_slice(hid);
+    }
+    let sigs =
+        signature_batch(&hid_all, batch, l, spec, threads).expect("valid hidden paths");
+    let len = spec.sig_len();
+    let mut losses = vec![0.0f32; batch];
+    let mut dlogits = vec![0.0f32; batch];
+    let mut g_sig_all = vec![0.0f32; batch * len];
+    for b in 0..batch {
+        let sig = &sigs[b * len..(b + 1) * len];
+        let logit: f32 = sig.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
+        let (loss, dlogit) = bce_head(logit, y[b]);
+        losses[b] = loss;
+        dlogits[b] = dlogit;
+        for (gs, &w) in g_sig_all[b * len..(b + 1) * len].iter_mut().zip(&p.w_out) {
+            *gs = w * dlogit;
+        }
+    }
+    let g_hid_all = signature_batch_vjp(&hid_all, batch, l, spec, &g_sig_all, threads)
+        .expect("valid hidden paths");
+    parallel_map_indexed(batch, threads, |b| {
+        let (a, _) = &fwd[b];
+        let (w1, b1, w2, b2) = mlp_backward(
+            cfg,
+            p,
+            &x[b * sample_len..(b + 1) * sample_len],
+            a,
+            &g_hid_all[b * l * d_out..(b + 1) * l * d_out],
+        );
+        let sig = &sigs[b * len..(b + 1) * len];
+        SampleGrad {
+            w1,
+            b1,
+            w2,
+            b2,
+            w_out: sig.iter().map(|&s| s * dlogits[b]).collect(),
+            b_out: dlogits[b],
+            loss: losses[b],
+        }
+    })
+}
+
+/// One SGD step over a batch. Returns the mean loss.
+///
+/// Fused backend at `threads <= batch`: the signature forward and VJP run
+/// **lane-fused** across the batch (one interleaved sweep per increment;
+/// see [`crate::ta::batch`]), with the MLP stages parallel over samples.
+/// With surplus threads (`threads > batch`) each sample instead runs the
+/// chunked Chen-identity stream-parallel forward/backward (App. C.3 plus
+/// the stream dimension). Both strategies produce the same update.
 pub fn train_step(
     cfg: &ModelConfig,
     p: &mut Params,
@@ -211,17 +317,25 @@ pub fn train_step(
     let spec = SigSpec::new(cfg.d_out, cfg.depth).expect("valid spec");
     // Surplus threads go to the stream dimension within each sample.
     let sig_threads = (threads.max(1) / batch.max(1)).max(1);
-    let grads = parallel_map_indexed(batch, threads, |b| {
-        sample_grad(
-            cfg,
-            &spec,
-            p,
-            &x[b * sample_len..(b + 1) * sample_len],
-            y[b],
-            backend,
-            sig_threads,
-        )
-    });
+    let lane_fused = backend == SigBackend::Fused
+        && batch >= 2
+        && sig_threads == 1
+        && cfg.d_out <= 8;
+    let grads = if lane_fused {
+        train_grads_lane_fused(cfg, &spec, p, x, y, threads.max(1))
+    } else {
+        parallel_map_indexed(batch, threads, |b| {
+            sample_grad(
+                cfg,
+                &spec,
+                p,
+                &x[b * sample_len..(b + 1) * sample_len],
+                y[b],
+                backend,
+                sig_threads,
+            )
+        })
+    };
     let scale = lr / batch as f32;
     let mut mean_loss = 0.0f32;
     for g in &grads {
@@ -350,6 +464,38 @@ mod tests {
         }
         for (a, b) in pa.w_out.iter().zip(&pb.w_out) {
             assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lane_fused_grads_match_per_sample_bitwise() {
+        // The lane-fused batched gradients must equal the per-sample path
+        // bit-for-bit: the batched signature kernels perform each lane's
+        // ops in the scalar order, and the MLP/head math is shared code.
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3 };
+        let mut rng = Rng::new(29);
+        let p = Params::init(&cfg, &mut rng);
+        let (x, y) = gbm_batch(&mut rng, 6, &GbmConfig { stream: 12, ..Default::default() });
+        let spec = SigSpec::new(2, 3).unwrap();
+        let lane = train_grads_lane_fused(&cfg, &spec, &p, &x, &y, 3);
+        let sample_len = x.len() / y.len();
+        for (b, g) in lane.iter().enumerate() {
+            let single = sample_grad(
+                &cfg,
+                &spec,
+                &p,
+                &x[b * sample_len..(b + 1) * sample_len],
+                y[b],
+                SigBackend::Fused,
+                1,
+            );
+            assert_eq!(g.w1, single.w1, "sample {b} w1");
+            assert_eq!(g.b1, single.b1);
+            assert_eq!(g.w2, single.w2);
+            assert_eq!(g.b2, single.b2);
+            assert_eq!(g.w_out, single.w_out);
+            assert_eq!(g.b_out, single.b_out);
+            assert_eq!(g.loss, single.loss);
         }
     }
 

@@ -16,7 +16,13 @@
 //!   well as the batch: a chunked Chen-identity factorisation
 //!   (`Sig = L_c ⊠ M_c ⊠ R_c`) derives per-chunk cotangents with two
 //!   ⊠-VJPs so the reversible reverse sweeps run concurrently — see
-//!   [`signature::backward`].
+//!   [`signature::backward`]. Batched work additionally runs on the
+//!   **batch-lane engine** ([`ta::batch`]): blocks of same-spec signatures
+//!   advance through lane-interleaved fused sweeps that vectorise *across*
+//!   the batch — the winning strategy for the serving regime of many short
+//!   streams at small `d`, and bitwise identical per lane to per-path
+//!   dispatch ([`signature::signature_batch`],
+//!   [`signature::signature_batch_vjp`], `deepsig::train_step`).
 //! - **Accelerator runtime** ([`runtime`]): loads AOT-compiled HLO-text
 //!   artifacts (produced by `python/compile/aot.py` from JAX + Pallas) and
 //!   executes them on a PJRT client. This is the reproduction's analogue of
@@ -29,7 +35,10 @@
 //!   `Coordinator::call` front door (so metrics cover them) into a
 //!   sharded, memory-bounded session table — per-session `Path` state
 //!   with O(1) interval queries, an LRU-evicted byte budget, and an
-//!   idle-TTL sweeper.
+//!   idle-TTL sweeper. Native signature traffic is microbatched too:
+//!   same-spec requests gathered within one linger window execute as a
+//!   single lane-fused sweep instead of N independent signatures
+//!   (`CoordinatorConfig::native_batch`).
 //!
 //! Baselines reproducing the systems the paper benchmarks against live in
 //! [`baselines`]; the benchmark harness regenerating every table and figure

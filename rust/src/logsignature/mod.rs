@@ -66,7 +66,10 @@ pub fn logsignature_stream(
     plan: &LogSigPlan,
 ) -> anyhow::Result<Vec<f32>> {
     plan.check_compatible(spec)?;
-    let sigs = crate::signature::signature_stream(path, stream, spec);
+    // Fallible stream entry point: a malformed path buffer is an Err here,
+    // not a panic inherited from the infallible `signature_stream`.
+    let sigs =
+        crate::signature::signature_stream_with(path, stream, spec, &SigConfig::serial())?;
     let len = spec.sig_len();
     let dim = plan.dim();
     let mut out = vec![0.0f32; (stream - 1) * dim];
@@ -316,6 +319,11 @@ mod tests {
         assert!(logsignature_from_sig(&sig[..spec.sig_len() - 1], &spec, &right).is_err());
         let path = vec![0.0f32; 4 * 3];
         assert!(logsignature_stream(&path, 4, &spec, &wrong_d).is_err());
+        // Malformed path buffers are Err too (previously a panic inherited
+        // from the infallible signature_stream).
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        assert!(logsignature_stream(&path[..3], 4, &spec, &plan).is_err());
+        assert!(logsignature_stream(&path[..2], 1, &spec, &plan).is_err());
         let g = vec![0.0f32; wrong_d.dim()];
         assert!(
             logsignature_vjp_with(&path, 4, &spec, &wrong_d, &SigConfig::serial(), &g).is_err()

@@ -34,7 +34,7 @@ fn cli() -> Cli {
         about: "signature & logsignature transforms: native engine, AOT-XLA runtime, coordinator",
         commands: vec![
             Command::new("tables", "regenerate the paper's benchmark tables")
-                .opt("table", "table id (1..16, opcount, path, memory, backward) or 'all'", "all")
+                .opt("table", "table id (1..16, opcount, path, memory, backward, batch) or 'all'", "all")
                 .opt("scale", "paper | small | ci", "small")
                 .opt("artifacts", "artifact directory for the XLA column", "artifacts")
                 .opt("out", "directory for CSV output", "results"),

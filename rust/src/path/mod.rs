@@ -18,7 +18,7 @@
 //! slow exact fallback used by tests and benchmarks.
 
 use crate::logsignature::{logsignature_from_sig, LogSigPlan};
-use crate::signature::forward::signature;
+use crate::signature::forward::{signature, two_point_signature_into};
 use crate::ta::fused::{fused_mexp, fused_mexp_left};
 use crate::ta::mul::mul_into;
 use crate::ta::{SigSpec, Workspace};
@@ -111,16 +111,44 @@ impl Path {
     /// `Sig(x_i .. x_j)` (0-based, inclusive endpoints, `i < j`).
     /// **O(1) in the path length**: one ⊠ (or a copy when `i == 0`).
     pub fn query(&self, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.spec.sig_len()];
+        self.query_into(i, j, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Path::query`] into a caller-owned buffer of `sig_len` values —
+    /// the allocation-free variant the serving hot path uses (one scratch
+    /// buffer per response instead of fresh `Vec`s per step).
+    ///
+    /// Adjacent intervals (`j == i + 1`) skip the `I_i ⊠ S_j` product
+    /// entirely: the signature of a two-point path is `exp` of the
+    /// increment (§2.2), which is both cheaper than a full ⊠ and immune to
+    /// the distant-interval cancellation the paper cautions about.
+    pub fn query_into(&self, i: usize, j: usize, out: &mut [f32]) -> anyhow::Result<()> {
         anyhow::ensure!(i < j && j < self.len(), "invalid interval [{i}, {j}] of {}", self.len());
         let len = self.spec.sig_len();
+        anyhow::ensure!(
+            out.len() == len,
+            "output buffer has {} values, expected sig_len {len}",
+            out.len()
+        );
+        let d = self.spec.d();
+        if j == i + 1 {
+            return two_point_signature_into(
+                &self.points[i * d..(i + 1) * d],
+                &self.points[j * d..(j + 1) * d],
+                &self.spec,
+                out,
+            );
+        }
         let s_j = &self.sigs[(j - 1) * len..j * len];
         if i == 0 {
-            return Ok(s_j.to_vec());
+            out.copy_from_slice(s_j);
+            return Ok(());
         }
         let inv_i = &self.inv_sigs[(i - 1) * len..i * len];
-        let mut out = vec![0.0f32; len];
-        mul_into(&self.spec, inv_i, s_j, &mut out);
-        Ok(out)
+        mul_into(&self.spec, inv_i, s_j, out);
+        Ok(())
     }
 
     /// `LogSig(x_i .. x_j)` in the plan's basis: the O(1) query followed by
@@ -134,6 +162,19 @@ impl Path {
     pub fn signature(&self) -> Vec<f32> {
         let len = self.spec.sig_len();
         self.sigs[self.sigs.len() - len..].to_vec()
+    }
+
+    /// [`Path::signature`] into a caller-owned buffer of `sig_len` values,
+    /// for callers that poll the running signature into a reused buffer.
+    pub fn signature_into(&self, out: &mut [f32]) -> anyhow::Result<()> {
+        let len = self.spec.sig_len();
+        anyhow::ensure!(
+            out.len() == len,
+            "output buffer has {} values, expected sig_len {len}",
+            out.len()
+        );
+        out.copy_from_slice(&self.sigs[self.sigs.len() - len..]);
+        Ok(())
     }
 
     /// The full expanding-signature stream `(len-1, sig_len)` — Signatory's
@@ -342,6 +383,25 @@ mod tests {
         let path = Path::new(&spec, &pts, 9).unwrap();
         let st = crate::signature::signature_stream(&pts, 9, &spec);
         assert_close(path.stream(), &st, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_queries() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(23);
+        let pts = random_path(&mut rng, 10, 2);
+        let path = Path::new(&spec, &pts, 10).unwrap();
+        let mut buf = vec![f32::NAN; spec.sig_len()]; // dirty: must be fully overwritten
+        for (i, j) in [(0, 9), (2, 3), (3, 8), (0, 1)] {
+            path.query_into(i, j, &mut buf).unwrap();
+            assert_eq!(buf, path.query(i, j).unwrap(), "interval [{i}, {j}]");
+        }
+        path.signature_into(&mut buf).unwrap();
+        assert_eq!(buf, path.signature());
+        // Buffer-shape and interval validation are errors, not panics.
+        assert!(path.query_into(0, 3, &mut buf[..2]).is_err());
+        assert!(path.signature_into(&mut buf[..2]).is_err());
+        assert!(path.query_into(3, 3, &mut buf).is_err());
     }
 
     #[test]

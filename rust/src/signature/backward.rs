@@ -32,9 +32,11 @@
 //! chunk bookkeeping costs more than it saves on tiny inputs, and the
 //! serial sweep is the bitwise-reference behaviour).
 
+use super::forward::lane_block_partition;
 use super::SigConfig;
 use crate::parallel::chunk_signatures;
 use crate::substrate::pool::parallel_map_indexed;
+use crate::ta::batch::{fused_mexp_batch, fused_mexp_vjp_batch, pack_lanes, BatchWorkspace};
 use crate::ta::fused::{fused_mexp, fused_mexp_vjp};
 use crate::ta::mul::{mul_assign, mul_into, mul_vjp};
 use crate::ta::{SigSpec, Workspace};
@@ -341,9 +343,18 @@ pub fn signature_stream_vjp(
     Ok(grad_path)
 }
 
-/// Batched VJP, parallel over the batch dimension (App. C.3) — and, when
-/// there are more threads than samples, additionally parallel over the
-/// stream within each sample via the chunked Chen backward.
+/// Batched VJP over a `(batch, stream, d)` buffer (App. C.3).
+///
+/// Dispatch, in order of preference:
+/// - surplus threads (`threads > batch`): per-path dispatch with the
+///   chunked Chen-identity stream-parallel backward inside each sample;
+/// - `batch >= 2` at `d <= 8`: the **lane-fused** batched reverse sweep —
+///   blocks of up to [`super::forward::LANE_BLOCK`] samples recompute
+///   prefixes and unwind together through the interleaved batch kernels,
+///   bitwise identical to the serial per-path VJP (beyond `d = 8` the
+///   scalar backward switches to the exp/⊠ reference composition, so
+///   per-path dispatch keeps exact parity there);
+/// - otherwise: per-path dispatch, parallel over the batch.
 pub fn signature_batch_vjp(
     paths: &[f32],
     batch: usize,
@@ -355,6 +366,7 @@ pub fn signature_batch_vjp(
     let len = spec.sig_len();
     let plen = stream * spec.d();
     anyhow::ensure!(batch >= 1, "need at least one sample");
+    anyhow::ensure!(stream >= 2, "need at least two points per path, got {stream}");
     anyhow::ensure!(paths.len() == batch * plen, "batch buffer wrong length");
     anyhow::ensure!(
         g.len() == batch * len,
@@ -364,8 +376,23 @@ pub fn signature_batch_vjp(
     );
     // Spread surplus threads across the stream dimension of each sample.
     let stream_threads = (threads.max(1) / batch).max(1);
+    if stream_threads == 1 && batch >= 2 && spec.d() <= 8 {
+        let threads = threads.max(1);
+        let (block, n_blocks) = lane_block_partition(batch, threads);
+        let blocks = parallel_map_indexed(n_blocks, threads, |bi| {
+            let l0 = bi * block;
+            let lanes = block.min(batch - l0);
+            lane_reverse_sweep(spec, paths, stream, l0, lanes, g)
+        });
+        let mut out = vec![0.0f32; batch * plen];
+        for (bi, rows) in blocks.into_iter().enumerate() {
+            let o = bi * block * plen;
+            out[o..o + rows.len()].copy_from_slice(&rows);
+        }
+        return Ok(out);
+    }
     let cfg = SigConfig { threads: stream_threads, ..SigConfig::serial() };
-    let grads = crate::substrate::pool::parallel_map_indexed(batch, threads, |b| {
+    let grads = parallel_map_indexed(batch, threads, |b| {
         signature_vjp_with(
             &paths[b * plen..(b + 1) * plen],
             stream,
@@ -382,10 +409,76 @@ pub fn signature_batch_vjp(
     Ok(out)
 }
 
+/// Lane-fused batched reverse sweep over one block of `lanes` samples
+/// starting at lane `l0`: one interleaved forward pass to the final
+/// signatures, then the reversibility unwind with the batched fused VJP —
+/// each lane performs exactly the serial [`reverse_sweep`]'s operations,
+/// so the result is bitwise identical to [`signature_vjp`] per sample.
+fn lane_reverse_sweep(
+    spec: &SigSpec,
+    paths: &[f32],
+    stream: usize,
+    l0: usize,
+    lanes: usize,
+    g: &[f32],
+) -> Vec<f32> {
+    let d = spec.d();
+    let len = spec.sig_len();
+    let plen = stream * d;
+    let path_at =
+        |l: usize, i: usize| &paths[(l0 + l) * plen + i * d..(l0 + l) * plen + (i + 1) * d];
+    let mut ws = BatchWorkspace::new(spec, lanes);
+    let mut state = vec![0.0f32; len * lanes];
+    let mut z = vec![0.0f32; d * lanes];
+    let mut neg_z = vec![0.0f32; d * lanes];
+    // Forward to the final signatures (lane-interleaved).
+    for i in 1..stream {
+        for l in 0..lanes {
+            let prev = path_at(l, i - 1);
+            let cur = path_at(l, i);
+            for c in 0..d {
+                z[c * lanes + l] = cur[c] - prev[c];
+            }
+        }
+        fused_mexp_batch(spec, &mut state, &z, &mut ws);
+    }
+    // Unwind via reversibility.
+    let mut g_state = vec![0.0f32; len * lanes];
+    pack_lanes(len, lanes, |l| &g[(l0 + l) * len..(l0 + l + 1) * len], &mut g_state);
+    let mut g_prev = vec![0.0f32; len * lanes];
+    let mut gz = vec![0.0f32; d * lanes];
+    let mut grads = vec![0.0f32; lanes * plen];
+    for i in (1..stream).rev() {
+        for l in 0..lanes {
+            let prev = path_at(l, i - 1);
+            let cur = path_at(l, i);
+            for c in 0..d {
+                let zc = cur[c] - prev[c];
+                z[c * lanes + l] = zc;
+                neg_z[c * lanes + l] = -zc;
+            }
+        }
+        // Reversibility: recover S_{i-1} = S_i ⊠ exp(-z_i)  (eq. 18).
+        fused_mexp_batch(spec, &mut state, &neg_z, &mut ws);
+        g_prev.fill(0.0);
+        gz.fill(0.0);
+        fused_mexp_vjp_batch(spec, &state, &z, &g_state, &mut g_prev, &mut gz, &mut ws);
+        std::mem::swap(&mut g_state, &mut g_prev);
+        for l in 0..lanes {
+            for c in 0..d {
+                let gv = gz[c * lanes + l];
+                grads[l * plen + i * d + c] += gv;
+                grads[l * plen + (i - 1) * d + c] -= gv;
+            }
+        }
+    }
+    grads
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::signature::forward::{signature, signature_stream, signature_with};
+    use crate::signature::forward::{signature, signature_stream, signature_with, LANE_BLOCK};
     use crate::substrate::propcheck::{assert_close, property};
     use crate::substrate::rng::Rng;
 
@@ -688,6 +781,43 @@ mod tests {
         assert!(signature_batch_vjp(&path, 1, 10, &spec, &short_g, 2).is_err());
         assert!(signature_batch_vjp(&path, 2, 10, &spec, &two_g, 2).is_err());
         assert!(signature_batch_vjp(&[], 0, 10, &spec, &[], 2).is_err());
+    }
+
+    #[test]
+    fn batch_vjp_lane_engine_is_bitwise_per_sample() {
+        // Multi-block lane dispatch (LANE_BLOCK + 3 samples ⇒ one full and
+        // one ragged block) must reproduce the serial per-path VJP
+        // bit-for-bit — the batched kernels perform each lane's ops in the
+        // scalar order.
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(88);
+        let (b, stream) = (LANE_BLOCK + 3, 9);
+        let plen = stream * 3;
+        let mut paths = vec![0.0f32; b * plen];
+        for i in 0..b {
+            let p = random_path(&mut rng, stream, 3);
+            paths[i * plen..(i + 1) * plen].copy_from_slice(&p);
+        }
+        let g = rng.normal_vec(b * spec.sig_len(), 1.0);
+        let out = signature_batch_vjp(&paths, b, stream, &spec, &g, 4).unwrap();
+        for i in 0..b {
+            let single = signature_vjp(
+                &paths[i * plen..(i + 1) * plen],
+                stream,
+                &spec,
+                &g[i * spec.sig_len()..(i + 1) * spec.sig_len()],
+            );
+            assert_eq!(&out[i * plen..(i + 1) * plen], single.as_slice(), "sample {i}");
+        }
+    }
+
+    #[test]
+    fn batch_vjp_short_stream_is_an_error() {
+        // Regression companion to the forward fix: stream < 2 must be a
+        // clean Err from the batched backward too, not a worker panic.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let g = vec![0.0f32; 2 * spec.sig_len()];
+        assert!(signature_batch_vjp(&[0.0; 4], 2, 1, &spec, &g, 2).is_err());
     }
 
     #[test]

@@ -6,14 +6,41 @@
 //! (§5.5 "expanding intervals") emits every prefix signature for free.
 //! Parallel mode splits the stream into chunks — ⊠ is associative — and
 //! combines chunk signatures (§5.1).
+//!
+//! Batched paths take the **batch-lane engine** ([`crate::ta::batch`]):
+//! lanes of up to [`LANE_BLOCK`] same-spec signatures advance together
+//! through one lane-interleaved fused sweep per increment, so the
+//! innermost loops vectorise across the batch regardless of `d` — the
+//! serving-realistic regime (many short streams, small `d`) where
+//! one-thread-per-path leaves the SIMD lanes idle. Lane blocks distribute
+//! over threads; each lane reproduces per-path dispatch bit-for-bit.
 
 use super::SigConfig;
 use crate::parallel;
-use crate::ta::exp::exp_into;
+use crate::ta::batch::{fused_mexp_batch, unpack_lane, BatchWorkspace};
+use crate::ta::exp::exp_in_place;
 use crate::ta::fused::fused_mexp;
 use crate::ta::inverse::inverse_into;
 use crate::ta::mul::mul_assign;
 use crate::ta::{SigSpec, Workspace};
+
+/// Lanes advanced together by one lane-interleaved sweep: bounds the
+/// batched workspace (a few signatures' worth per block) while filling the
+/// widest SIMD registers; blocks beyond this run in parallel on threads.
+pub const LANE_BLOCK: usize = 16;
+
+/// Partition a batch into lane blocks: `(block_size, n_blocks)`. The
+/// block size adapts to the thread budget — every thread gets a block
+/// before blocks grow toward the SIMD-friendly [`LANE_BLOCK`]; a single
+/// 16-lane block would otherwise serialise any batch <= 16 no matter how
+/// many threads were requested. Per-lane results are independent of the
+/// partition (each lane replays the scalar op sequence), so this only
+/// changes scheduling, never bits. Shared by the forward and backward
+/// lane dispatch so both always pick the same schedule.
+pub(crate) fn lane_block_partition(batch: usize, threads: usize) -> (usize, usize) {
+    let block = batch.div_ceil(threads.max(1)).min(LANE_BLOCK);
+    (block, batch.div_ceil(block))
+}
 
 /// Validate a `(stream, d)` path buffer against the spec.
 fn check_path(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<()> {
@@ -146,11 +173,12 @@ pub fn signature_stream_with(
     spec: &SigSpec,
     cfg: &SigConfig,
 ) -> anyhow::Result<Vec<f32>> {
-    check_path(path, stream, spec)?;
     anyhow::ensure!(!cfg.inverse, "stream mode does not support inverse; see Path");
+    // Same validation as `signature_with` — including the basepoint /
+    // initial channel counts, which the increment loop below would
+    // otherwise hit as an index-out-of-bounds panic.
+    let eff_len = check_path_with(path, stream, spec, cfg)?;
     let d = spec.d();
-    let eff_len = cfg.effective_len(stream);
-    anyhow::ensure!(eff_len >= 2, "need at least two points, got {eff_len}");
     let point = |i: usize| -> &[f32] {
         match &cfg.basepoint {
             Some(bp) => {
@@ -168,10 +196,7 @@ pub fn signature_stream_with(
     let mut out = vec![0.0f32; n_out * len];
     let mut ws = Workspace::new(spec);
     let mut cur = match &cfg.initial {
-        Some(init) => {
-            anyhow::ensure!(init.len() == len, "bad initial length");
-            init.clone()
-        }
+        Some(init) => init.clone(),
         None => spec.zeros(),
     };
     let mut z = vec![0.0f32; d];
@@ -187,9 +212,18 @@ pub fn signature_stream_with(
     Ok(out)
 }
 
-/// Batched signature over a `(batch, stream, d)` buffer, parallel over the
-/// batch dimension (§5.1's first level of parallelism). Returns
+/// Batched signature over a `(batch, stream, d)` buffer. Returns
 /// `(batch, sig_len)`.
+///
+/// Runs the lane-fused engine: blocks of up to [`LANE_BLOCK`] paths
+/// advance together through one interleaved fused sweep per increment
+/// (vectorised across the batch), and blocks distribute over `threads`
+/// (§5.1's first level of parallelism). Shapes are validated up front —
+/// `stream < 2` or a wrong buffer length is an `Err`, never a worker
+/// panic. For `batch >= 2` results are bitwise identical to serial
+/// per-path [`signature`] calls; a batch of 1 instead delegates to
+/// [`signature_with`], whose chunked stream reduction engages for
+/// `threads > 1` on long streams (same values to rounding, not bitwise).
 pub fn signature_batch(
     paths: &[f32],
     batch: usize,
@@ -197,20 +231,85 @@ pub fn signature_batch(
     spec: &SigSpec,
     threads: usize,
 ) -> anyhow::Result<Vec<f32>> {
+    let cfg = SigConfig { threads, ..SigConfig::serial() };
+    signature_batch_with(paths, batch, stream, spec, &cfg)
+}
+
+/// Batched signature with full options. The basepoint / initial / inverse
+/// configuration applies to every path in the batch; `cfg.threads` workers
+/// share the lane blocks. Falls back to per-path dispatch when the batch
+/// is tiny (1 path — nothing to interleave).
+pub fn signature_batch_with(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    cfg: &SigConfig,
+) -> anyhow::Result<Vec<f32>> {
+    let d = spec.d();
+    anyhow::ensure!(batch >= 1, "need at least one path in the batch");
     anyhow::ensure!(
-        paths.len() == batch * stream * spec.d(),
-        "batch buffer has {} values, expected {}",
+        paths.len() == batch * stream * d,
+        "batch buffer has {} values, expected batch({batch}) * stream({stream}) * channels({d}) = {}",
         paths.len(),
-        batch * stream * spec.d()
+        batch * stream * d
     );
+    // Lanes share one shape, so validating the first path (plus the shared
+    // basepoint/initial) validates the whole batch.
+    let eff_len = check_path_with(&paths[..stream * d], stream, spec, cfg)?;
+    if batch == 1 {
+        return signature_with(paths, stream, spec, cfg);
+    }
     let len = spec.sig_len();
-    let path_len = stream * spec.d();
-    let results = crate::substrate::pool::parallel_map_indexed(batch, threads, |b| {
-        signature(&paths[b * path_len..(b + 1) * path_len], stream, spec)
-    });
+    let path_len = stream * d;
+    let point = |lane: usize, i: usize| -> &[f32] {
+        let i = if cfg.inverse { eff_len - 1 - i } else { i };
+        let base = lane * path_len;
+        match &cfg.basepoint {
+            Some(bp) => {
+                if i == 0 {
+                    bp.as_slice()
+                } else {
+                    &paths[base + (i - 1) * d..base + i * d]
+                }
+            }
+            None => &paths[base + i * d..base + (i + 1) * d],
+        }
+    };
+    let threads = cfg.threads.max(1);
+    let (block, n_blocks) = lane_block_partition(batch, threads);
+    let blocks =
+        crate::substrate::pool::parallel_map_indexed(n_blocks, threads, |bi| {
+            let l0 = bi * block;
+            let lanes = block.min(batch - l0);
+            let mut ws = BatchWorkspace::new(spec, lanes);
+            let mut state = vec![0.0f32; len * lanes];
+            if let Some(init) = &cfg.initial {
+                for (i, &v) in init.iter().enumerate() {
+                    state[i * lanes..(i + 1) * lanes].fill(v);
+                }
+            }
+            let mut z = vec![0.0f32; d * lanes];
+            for i in 1..eff_len {
+                for l in 0..lanes {
+                    let prev = point(l0 + l, i - 1);
+                    let cur = point(l0 + l, i);
+                    for c in 0..d {
+                        z[c * lanes + l] = cur[c] - prev[c];
+                    }
+                }
+                fused_mexp_batch(spec, &mut state, &z, &mut ws);
+            }
+            let mut rows = vec![0.0f32; lanes * len];
+            for l in 0..lanes {
+                unpack_lane(len, lanes, &state, l, &mut rows[l * len..(l + 1) * len]);
+            }
+            rows
+        });
     let mut out = vec![0.0f32; batch * len];
-    for (b, sig) in results.into_iter().enumerate() {
-        out[b * len..(b + 1) * len].copy_from_slice(&sig);
+    for (bi, rows) in blocks.into_iter().enumerate() {
+        let o = bi * block * len;
+        out[o..o + rows.len()].copy_from_slice(&rows);
     }
     Ok(out)
 }
@@ -231,12 +330,42 @@ pub fn inverted_signature_via_inverse(path: &[f32], stream: usize, spec: &SigSpe
 }
 
 /// Signature of a two-point path = exp of the increment (§2.2); exposed
-/// for tests and the Path class.
+/// for tests and the Path class. Panics on mismatched channel counts; use
+/// [`two_point_signature_into`] for the fallible, allocation-free variant.
 pub fn two_point_signature(a: &[f32], b: &[f32], spec: &SigSpec) -> Vec<f32> {
-    let z: Vec<f32> = b.iter().zip(a).map(|(&x, &y)| x - y).collect();
     let mut out = spec.zeros();
-    exp_into(spec, &z, &mut out);
+    two_point_signature_into(a, b, spec, &mut out).expect("points match the spec");
     out
+}
+
+/// Allocation-free `Sig((a, b)) = exp(b - a)` into a caller buffer: the
+/// increment is staged directly in `out`'s level 1 and exponentiated in
+/// place, so the O(1) hot paths (`Path` adjacent-interval queries, the
+/// streaming serving feed) allocate nothing per call.
+pub fn two_point_signature_into(
+    a: &[f32],
+    b: &[f32],
+    spec: &SigSpec,
+    out: &mut [f32],
+) -> anyhow::Result<()> {
+    let d = spec.d();
+    anyhow::ensure!(
+        a.len() == d && b.len() == d,
+        "points have {} / {} channels, expected {d}",
+        a.len(),
+        b.len()
+    );
+    anyhow::ensure!(
+        out.len() == spec.sig_len(),
+        "output buffer has {} values, expected sig_len {}",
+        out.len(),
+        spec.sig_len()
+    );
+    for ((o, &x), &y) in out[..d].iter_mut().zip(b).zip(a) {
+        *o = x - y;
+    }
+    exp_in_place(spec, out);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -433,5 +562,111 @@ mod tests {
         // A single point plus basepoint is fine.
         let cfg = SigConfig { basepoint: Some(vec![0.0; 2]), ..SigConfig::serial() };
         assert!(signature_with(&[1.0, 2.0], 1, &spec, &cfg).is_ok());
+    }
+
+    #[test]
+    fn stream_mode_errors_on_bad_shapes() {
+        // Regression: a basepoint with too few channels used to panic with
+        // an index-out-of-bounds inside the increment loop instead of
+        // returning Err; stream mode now validates through check_path_with
+        // exactly like signature_with.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let path = vec![0.0f32; 4 * 2];
+        let short_bp = SigConfig { basepoint: Some(vec![0.0; 1]), ..SigConfig::serial() };
+        assert!(signature_stream_with(&path, 4, &spec, &short_bp).is_err());
+        let long_bp = SigConfig { basepoint: Some(vec![0.0; 3]), ..SigConfig::serial() };
+        assert!(signature_stream_with(&path, 4, &spec, &long_bp).is_err());
+        let bad_init = SigConfig { initial: Some(vec![0.0; 3]), ..SigConfig::serial() };
+        assert!(signature_stream_with(&path, 4, &spec, &bad_init).is_err());
+        assert!(signature_stream_with(&path, 5, &spec, &SigConfig::serial()).is_err()); // wrong len
+        assert!(signature_stream_with(&path[..2], 1, &spec, &SigConfig::serial()).is_err()); // 1 point
+        // A valid basepoint still works and matches explicit prepending.
+        let bp = vec![0.25f32, -0.5];
+        let cfg = SigConfig { basepoint: Some(bp.clone()), ..SigConfig::serial() };
+        let with_bp = signature_stream_with(&path, 4, &spec, &cfg).unwrap();
+        let mut prepended = bp;
+        prepended.extend_from_slice(&path);
+        let direct = signature_stream(&prepended, 5, &spec);
+        assert_close(&with_bp, &direct, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn batch_lane_engine_is_bitwise_per_path() {
+        // The lane-fused sweep performs each lane's ops in the scalar
+        // order, so batched == per-path bit-for-bit — including a ragged
+        // tail block (37 = 2 * LANE_BLOCK + 5 lanes).
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(41);
+        let (b, stream) = (2 * super::LANE_BLOCK + 5, 9);
+        let plen = stream * 3;
+        let mut paths = vec![0.0f32; b * plen];
+        for i in 0..b {
+            let p = random_path(&mut rng, stream, 3);
+            paths[i * plen..(i + 1) * plen].copy_from_slice(&p);
+        }
+        let out = signature_batch(&paths, b, stream, &spec, 3).unwrap();
+        let len = spec.sig_len();
+        for i in 0..b {
+            let single = signature(&paths[i * plen..(i + 1) * plen], stream, &spec);
+            assert_eq!(&out[i * len..(i + 1) * len], single.as_slice(), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn batch_with_options_is_bitwise_per_path() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(43);
+        let (b, stream) = (6, 7);
+        let plen = stream * 2;
+        let mut paths = vec![0.0f32; b * plen];
+        for i in 0..b {
+            let p = random_path(&mut rng, stream, 2);
+            paths[i * plen..(i + 1) * plen].copy_from_slice(&p);
+        }
+        let init = signature(&random_path(&mut rng, 4, 2), 4, &spec);
+        for inverse in [false, true] {
+            let cfg = SigConfig {
+                basepoint: Some(vec![0.3, -0.1]),
+                initial: Some(init.clone()),
+                inverse,
+                ..SigConfig::serial()
+            };
+            let out = signature_batch_with(&paths, b, stream, &spec, &cfg).unwrap();
+            let len = spec.sig_len();
+            for i in 0..b {
+                let single =
+                    signature_with(&paths[i * plen..(i + 1) * plen], stream, &spec, &cfg).unwrap();
+                assert_eq!(&out[i * len..(i + 1) * len], single.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_errors_instead_of_panicking() {
+        // Regression: signature_batch used to call the panicking
+        // `signature` inside worker threads, so stream < 2 crossed a
+        // thread boundary as a panic. All malformed shapes are now Err.
+        let spec = SigSpec::new(2, 3).unwrap();
+        assert!(signature_batch(&[0.0; 4], 2, 1, &spec, 2).is_err()); // stream < 2
+        assert!(signature_batch(&[0.0; 4], 0, 2, &spec, 2).is_err()); // empty batch
+        assert!(signature_batch(&[0.0; 5], 1, 2, &spec, 2).is_err()); // wrong buffer
+        let bad_bp = SigConfig { basepoint: Some(vec![0.0; 1]), ..SigConfig::serial() };
+        assert!(signature_batch_with(&[0.0; 8], 2, 2, &spec, &bad_bp).is_err());
+    }
+
+    #[test]
+    fn two_point_into_matches_and_validates() {
+        let spec = SigSpec::new(3, 4).unwrap();
+        let a = [0.1f32, 0.2, 0.3];
+        let b = [1.1f32, 0.0, -0.3];
+        let direct = two_point_signature(&a, &b, &spec);
+        let mut out = vec![1.0f32; spec.sig_len()]; // dirty buffer: every entry must be overwritten
+        two_point_signature_into(&a, &b, &spec, &mut out).unwrap();
+        assert_eq!(out, direct);
+        assert_close(&out, &exp(&spec, &[1.0, -0.2, -0.6]), 1e-5, 1e-7);
+        // Shape mismatches are errors, not slice panics.
+        assert!(two_point_signature_into(&a[..2], &b, &spec, &mut out).is_err());
+        assert!(two_point_signature_into(&a, &b[..1], &spec, &mut out).is_err());
+        assert!(two_point_signature_into(&a, &b, &spec, &mut out[..2]).is_err());
     }
 }

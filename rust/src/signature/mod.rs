@@ -18,7 +18,8 @@ pub use backward::{
 };
 pub use combine::{multi_signature_combine, signature_combine, signature_combine_vjp};
 pub use forward::{
-    signature, signature_batch, signature_stream, signature_stream_with, signature_with,
+    signature, signature_batch, signature_batch_with, signature_stream, signature_stream_with,
+    signature_with, two_point_signature, two_point_signature_into, LANE_BLOCK,
 };
 
 /// Options mirroring Signatory's `signature(...)` keyword arguments.

@@ -1,0 +1,558 @@
+//! **Batch-lane execution engine**: the fused multiply-exponentiate of
+//! [`super::fused`] vectorised *across the batch* instead of within a path.
+//!
+//! The paper's two-level CPU parallelism (§5.1) assigns one thread per
+//! path, so in the serving-realistic regime — many short streams at small
+//! `d` — each core runs a scalar Horner loop over `d ∈ {2, 3, 4}` channels
+//! and the SIMD lanes sit idle. Following the pySigLib observation that
+//! this regime is won by batch-axis vectorisation, this module processes
+//! `L` same-spec signatures together in a **lane-interleaved layout**:
+//! element `i` of lane `l` lives at `buf[i * L + l]`, so every scalar of
+//! the scalar kernels becomes an `L`-vector and the innermost loops run
+//! contiguously over the lanes — auto-vectorising regardless of `d`.
+//!
+//! Each lane performs *exactly* the same floating-point operations in the
+//! same order as the scalar kernels ([`super::fused::fused_mexp`] /
+//! [`fused_mexp_left`] / the `d ≤ 8` monomorphised `fused_mexp_vjp`), so
+//! lane-fused results are **bitwise identical** to per-path dispatch —
+//! pinned by the tests below. The VJP mirrors the monomorphised scalar
+//! backward; callers fall back to per-path dispatch for `d > 8`, where the
+//! scalar side switches to the exp/⊠ reference composition.
+//!
+//! [`fused_mexp_left`]: super::fused::fused_mexp_left
+
+use super::SigSpec;
+
+/// Reusable scratch for the lane kernels, sized for one `(SigSpec, lanes)`
+/// pair — the batched analogue of [`super::Workspace`], holding `lanes`
+/// interleaved signatures' worth of Horner and staging buffers.
+pub struct BatchWorkspace {
+    lanes: usize,
+    /// Ping/pong Horner buffers, each `d^(depth-1) * lanes` long.
+    h0: Vec<f32>,
+    h1: Vec<f32>,
+    /// `z/m` staging, `(d * depth) * lanes` long.
+    zdiv: Vec<f32>,
+    /// Forward-chain storage for the VJP, `sig_len * lanes` long.
+    t2: Vec<f32>,
+    /// Per-level `∂L/∂z` accumulator for the VJP, `d * lanes` long.
+    gza: Vec<f32>,
+}
+
+impl BatchWorkspace {
+    pub fn new(spec: &SigSpec, lanes: usize) -> BatchWorkspace {
+        assert!(lanes >= 1, "need at least one lane");
+        let horner = if spec.depth() >= 2 {
+            spec.level_len(spec.depth()) / spec.d()
+        } else {
+            spec.d()
+        };
+        BatchWorkspace {
+            lanes,
+            h0: vec![0.0; horner * lanes],
+            h1: vec![0.0; horner * lanes],
+            zdiv: vec![0.0; spec.d() * spec.depth() * lanes],
+            t2: vec![0.0; spec.sig_len() * lanes],
+            gza: vec![0.0; spec.d() * lanes],
+        }
+    }
+
+    /// Number of interleaved lanes this workspace serves.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+}
+
+/// Scatter `lanes` row-major items (each `item_len` long, `row(l)` yields
+/// lane `l`'s item) into the lane-interleaved layout:
+/// `out[i * lanes + l] = row(l)[i]`.
+pub fn pack_lanes<'a>(
+    item_len: usize,
+    lanes: usize,
+    row: impl Fn(usize) -> &'a [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), item_len * lanes);
+    for l in 0..lanes {
+        let r = row(l);
+        debug_assert_eq!(r.len(), item_len);
+        for (i, &v) in r.iter().enumerate() {
+            out[i * lanes + l] = v;
+        }
+    }
+}
+
+/// Gather lane `l` out of a lane-interleaved buffer back into a row-major
+/// item: `out[i] = interleaved[i * lanes + l]`.
+pub fn unpack_lane(item_len: usize, lanes: usize, interleaved: &[f32], l: usize, out: &mut [f32]) {
+    debug_assert_eq!(interleaved.len(), item_len * lanes);
+    debug_assert_eq!(out.len(), item_len);
+    debug_assert!(l < lanes);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = interleaved[i * lanes + l];
+    }
+}
+
+/// Stage `z/m` for `m = 1..=depth` into `ws.zdiv` (lane-interleaved; block
+/// `m-1` holds `z/m`, laid out like `z` itself).
+#[inline]
+fn stage_zdiv_batch(spec: &SigSpec, z: &[f32], ws: &mut BatchWorkspace) {
+    let dl = spec.d() * ws.lanes;
+    debug_assert_eq!(z.len(), dl);
+    for m in 1..=spec.depth() {
+        let inv = 1.0 / m as f32;
+        let row = &mut ws.zdiv[(m - 1) * dl..m * dl];
+        for (r, &zq) in row.iter_mut().zip(z) {
+            *r = zq * inv;
+        }
+    }
+}
+
+/// Lane-wise `dst[l] = src[l] * z[l] + add[l]` over `lanes` contiguous
+/// values — the vectorised body of every middle Horner step.
+#[inline(always)]
+fn lane_fma(dst: &mut [f32], src: &[f32], z: &[f32], add: &[f32]) {
+    for ((dv, (&sv, &zv)), &av) in dst.iter_mut().zip(src.iter().zip(z)).zip(add) {
+        *dv = sv * zv + av;
+    }
+}
+
+/// Lane-wise `dst[l] += src[l] * z[l]` — the vectorised final Horner step.
+#[inline(always)]
+fn lane_fma_acc(dst: &mut [f32], src: &[f32], z: &[f32]) {
+    for (dv, (&sv, &zv)) in dst.iter_mut().zip(src.iter().zip(z)) {
+        *dv += sv * zv;
+    }
+}
+
+/// In-place batched fused multiply-exponentiate: `a_l ← a_l ⊠ exp(z_l)`
+/// for every lane `l`, on lane-interleaved `a` (`sig_len * lanes`) and `z`
+/// (`d * lanes`). Bitwise identical per lane to [`super::fused::fused_mexp`].
+pub fn fused_mexp_batch(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut BatchWorkspace) {
+    let d = spec.d();
+    let n = spec.depth();
+    let lanes = ws.lanes;
+    debug_assert_eq!(a.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(z.len(), d * lanes);
+    stage_zdiv_batch(spec, z, ws);
+    for k in (2..=n).rev() {
+        // B_1 = z/k + A_1 (lane-wise).
+        {
+            let b = &mut ws.h0[..d * lanes];
+            let zk = &ws.zdiv[(k - 1) * d * lanes..k * d * lanes];
+            for ((bv, &zv), &av) in b.iter_mut().zip(zk).zip(&a[..d * lanes]) {
+                *bv = zv + av;
+            }
+        }
+        let mut cur_in_h0 = true;
+        let mut cur_len = d;
+        for i in 2..k {
+            // B_i = B_{i-1} ⊗ (z / (k-i+1)) + A_i.
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (src, dst) = if cur_in_h0 {
+                (&ws.h0[..cur_len * lanes], &mut ws.h1[..cur_len * d * lanes])
+            } else {
+                (&ws.h1[..cur_len * lanes], &mut ws.h0[..cur_len * d * lanes])
+            };
+            let zm = &ws.zdiv[(m - 1) * d * lanes..m * d * lanes];
+            let ai = &a[oi * lanes..(oi + li) * lanes];
+            for p in 0..cur_len {
+                let sp = &src[p * lanes..(p + 1) * lanes];
+                for q in 0..d {
+                    let e = p * d + q;
+                    lane_fma(
+                        &mut dst[e * lanes..(e + 1) * lanes],
+                        sp,
+                        &zm[q * lanes..(q + 1) * lanes],
+                        &ai[e * lanes..(e + 1) * lanes],
+                    );
+                }
+            }
+            cur_in_h0 = !cur_in_h0;
+            cur_len *= d;
+        }
+        // Final step writes into A_k in place: A_k += B_{k-1} ⊗ z.
+        let ok = spec.off(k);
+        let dst = &mut a[ok * lanes..(ok + cur_len * d) * lanes];
+        let src = if cur_in_h0 { &ws.h0[..cur_len * lanes] } else { &ws.h1[..cur_len * lanes] };
+        for p in 0..cur_len {
+            let sp = &src[p * lanes..(p + 1) * lanes];
+            for q in 0..d {
+                let e = p * d + q;
+                lane_fma_acc(
+                    &mut dst[e * lanes..(e + 1) * lanes],
+                    sp,
+                    &z[q * lanes..(q + 1) * lanes],
+                );
+            }
+        }
+    }
+    // Level 1: A_1 += z.
+    for (av, &zv) in a[..d * lanes].iter_mut().zip(z) {
+        *av += zv;
+    }
+}
+
+/// Batched mirrored fused operation: `a_l ← exp(z_l) ⊠ a_l` per lane —
+/// the incremental inverted-signature step (§4.2), lane-interleaved.
+/// Bitwise identical per lane to [`super::fused::fused_mexp_left`].
+pub fn fused_mexp_left_batch(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut BatchWorkspace) {
+    let d = spec.d();
+    let n = spec.depth();
+    let lanes = ws.lanes;
+    debug_assert_eq!(a.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(z.len(), d * lanes);
+    stage_zdiv_batch(spec, z, ws);
+    for k in (2..=n).rev() {
+        // B_1 = A_1 + z/k.
+        {
+            let b = &mut ws.h0[..d * lanes];
+            let zk = &ws.zdiv[(k - 1) * d * lanes..k * d * lanes];
+            for ((bv, &zv), &av) in b.iter_mut().zip(zk).zip(&a[..d * lanes]) {
+                *bv = zv + av;
+            }
+        }
+        let mut cur_in_h0 = true;
+        let mut cur_len = d;
+        for i in 2..k {
+            // B_i = A_i + (z/(k-i+1)) ⊗ B_{i-1}  (z factor on the left).
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (src, dst) = if cur_in_h0 {
+                (&ws.h0[..cur_len * lanes], &mut ws.h1[..cur_len * d * lanes])
+            } else {
+                (&ws.h1[..cur_len * lanes], &mut ws.h0[..cur_len * d * lanes])
+            };
+            let zm = &ws.zdiv[(m - 1) * d * lanes..m * d * lanes];
+            let ai = &a[oi * lanes..(oi + li) * lanes];
+            for q in 0..d {
+                let zq = &zm[q * lanes..(q + 1) * lanes];
+                for p in 0..cur_len {
+                    let e = q * cur_len + p;
+                    lane_fma(
+                        &mut dst[e * lanes..(e + 1) * lanes],
+                        &src[p * lanes..(p + 1) * lanes],
+                        zq,
+                        &ai[e * lanes..(e + 1) * lanes],
+                    );
+                }
+            }
+            cur_in_h0 = !cur_in_h0;
+            cur_len *= d;
+        }
+        // Final: A_k += z ⊗ B_{k-1}.
+        let ok = spec.off(k);
+        let dst = &mut a[ok * lanes..(ok + cur_len * d) * lanes];
+        let src = if cur_in_h0 { &ws.h0[..cur_len * lanes] } else { &ws.h1[..cur_len * lanes] };
+        for q in 0..d {
+            let zq = &z[q * lanes..(q + 1) * lanes];
+            for p in 0..cur_len {
+                let e = q * cur_len + p;
+                lane_fma_acc(
+                    &mut dst[e * lanes..(e + 1) * lanes],
+                    &src[p * lanes..(p + 1) * lanes],
+                    zq,
+                );
+            }
+        }
+    }
+    for (av, &zv) in a[..d * lanes].iter_mut().zip(z) {
+        *av += zv;
+    }
+}
+
+/// Batched VJP of `C_l = A_l ⊠ exp(z_l)`: given lane-interleaved
+/// `g = ∂L/∂C`, accumulates `∂L/∂A` into `ga` and `∂L/∂z` into `gz`
+/// (both lane-interleaved).
+///
+/// Mirrors the monomorphised scalar backward
+/// ([`super::fused::fused_mexp_vjp`] for `d ≤ 8`) operation-for-operation,
+/// so per-lane results are bitwise identical to per-path dispatch in that
+/// range; for `d > 8` the scalar side uses the exp/⊠ reference composition
+/// instead and callers should dispatch per path.
+pub fn fused_mexp_vjp_batch(
+    spec: &SigSpec,
+    a: &[f32],
+    z: &[f32],
+    g: &[f32],
+    ga: &mut [f32],
+    gz: &mut [f32],
+    ws: &mut BatchWorkspace,
+) {
+    let d = spec.d();
+    let n = spec.depth();
+    let lanes = ws.lanes;
+    debug_assert_eq!(a.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(g.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(ga.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(z.len(), d * lanes);
+    debug_assert_eq!(gz.len(), d * lanes);
+    stage_zdiv_batch(spec, z, ws);
+    // Level 1: C_1 = A_1 + z.
+    for i in 0..d * lanes {
+        ga[i] += g[i];
+        gz[i] += g[i];
+    }
+    for k in (2..=n).rev() {
+        // Recompute the forward Horner chain for level k, storing B_i at
+        // t2[off(i) * lanes..] (B_i has exactly level-i length per lane).
+        {
+            let b1 = &mut ws.t2[..d * lanes];
+            let zk = &ws.zdiv[(k - 1) * d * lanes..k * d * lanes];
+            for ((bv, &zv), &av) in b1.iter_mut().zip(zk).zip(&a[..d * lanes]) {
+                *bv = zv + av;
+            }
+        }
+        let mut cur_len = d;
+        for i in 2..k {
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (lo, hi) = ws.t2.split_at_mut(oi * lanes);
+            let src = &lo[spec.off(i - 1) * lanes..(spec.off(i - 1) + cur_len) * lanes];
+            let dst = &mut hi[..li * lanes];
+            let zm = &ws.zdiv[(m - 1) * d * lanes..m * d * lanes];
+            let ai = &a[oi * lanes..(oi + li) * lanes];
+            for p in 0..cur_len {
+                let sp = &src[p * lanes..(p + 1) * lanes];
+                for q in 0..d {
+                    let e = p * d + q;
+                    lane_fma(
+                        &mut dst[e * lanes..(e + 1) * lanes],
+                        sp,
+                        &zm[q * lanes..(q + 1) * lanes],
+                        &ai[e * lanes..(e + 1) * lanes],
+                    );
+                }
+            }
+            cur_len *= d;
+        }
+        // Unwind. Final step: C_k = B_{k-1} ⊗ z + A_k.
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let gk = &g[ok * lanes..(ok + lk) * lanes];
+        for (x, &gv) in ga[ok * lanes..(ok + lk) * lanes].iter_mut().zip(gk) {
+            *x += gv;
+        }
+        // gB_{k-1}[p] = Σ_q gk[p,q] z[q];  gz[q] += Σ_p B_{k-1}[p] gk[p,q].
+        let bk1 = &ws.t2[spec.off(k - 1) * lanes..(spec.off(k - 1) + cur_len) * lanes];
+        let gb = &mut ws.h0[..cur_len * lanes];
+        for p in 0..cur_len {
+            let gbp = &mut gb[p * lanes..(p + 1) * lanes];
+            gbp.fill(0.0);
+            let bp = &bk1[p * lanes..(p + 1) * lanes];
+            for q in 0..d {
+                let row = &gk[(p * d + q) * lanes..(p * d + q + 1) * lanes];
+                let zq = &z[q * lanes..(q + 1) * lanes];
+                let gzq = &mut gz[q * lanes..(q + 1) * lanes];
+                for l in 0..lanes {
+                    gbp[l] += row[l] * zq[l];
+                    gzq[l] += bp[l] * row[l];
+                }
+            }
+        }
+        // Middle steps: B_i = B_{i-1} ⊗ z/m + A_i, i = k-1 .. 2.
+        let mut cur_in_h0 = true;
+        let mut len_i = cur_len; // length of B_i for current i (= d^i)
+        for i in (2..k).rev() {
+            let m = k - i + 1;
+            let inv_m = 1.0 / m as f32;
+            let zm = &ws.zdiv[(m - 1) * d * lanes..m * d * lanes];
+            let oi = spec.off(i);
+            let prev_len = len_i / d;
+            let b_prev = &ws.t2[spec.off(i - 1) * lanes..(spec.off(i - 1) + prev_len) * lanes];
+            let (gb_i, gb_prev) = if cur_in_h0 {
+                (&ws.h0[..len_i * lanes], &mut ws.h1[..prev_len * lanes])
+            } else {
+                (&ws.h1[..len_i * lanes], &mut ws.h0[..prev_len * lanes])
+            };
+            // gA_i += gB_i.
+            for (x, &gv) in ga[oi * lanes..(oi + len_i) * lanes].iter_mut().zip(gb_i) {
+                *x += gv;
+            }
+            // gB_{i-1}[p] = Σ_q gB_i[p,q] zm[q];
+            // gz[q] += inv_m * Σ_p B_{i-1}[p] gB_i[p,q].
+            ws.gza.fill(0.0);
+            for p in 0..prev_len {
+                let gbp = &mut gb_prev[p * lanes..(p + 1) * lanes];
+                gbp.fill(0.0);
+                let bp = &b_prev[p * lanes..(p + 1) * lanes];
+                for q in 0..d {
+                    let row = &gb_i[(p * d + q) * lanes..(p * d + q + 1) * lanes];
+                    let zq = &zm[q * lanes..(q + 1) * lanes];
+                    let gzq = &mut ws.gza[q * lanes..(q + 1) * lanes];
+                    for l in 0..lanes {
+                        gbp[l] += row[l] * zq[l];
+                        gzq[l] += bp[l] * row[l];
+                    }
+                }
+            }
+            for (o, &v) in gz.iter_mut().zip(&ws.gza) {
+                *o += inv_m * v;
+            }
+            cur_in_h0 = !cur_in_h0;
+            len_i = prev_len;
+        }
+        // Innermost: B_1 = z/k + A_1.
+        let gb1 = if cur_in_h0 { &ws.h0[..d * lanes] } else { &ws.h1[..d * lanes] };
+        let inv_k = 1.0 / k as f32;
+        for (i, &gv) in gb1.iter().enumerate() {
+            ga[i] += gv;
+            gz[i] += inv_k * gv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::property;
+    use crate::ta::fused::{fused_mexp, fused_mexp_left, fused_mexp_vjp};
+    use crate::ta::Workspace;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let rows = [vec![1.0f32, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let mut inter = vec![0.0f32; 6];
+        pack_lanes(3, 2, |l| rows[l].as_slice(), &mut inter);
+        assert_eq!(inter, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        let mut out = vec![0.0f32; 3];
+        unpack_lane(3, 2, &inter, 1, &mut out);
+        assert_eq!(out, rows[1]);
+    }
+
+    #[test]
+    fn batch_forward_is_bitwise_per_lane() {
+        // Each lane of fused_mexp_batch must reproduce the scalar
+        // fused_mexp bit-for-bit: the lane kernel performs the same ops in
+        // the same order, just interleaved.
+        property("fused_mexp_batch == fused_mexp bitwise", 30, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 6 });
+            let lanes = g.usize_in(1, 7);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            let a_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.8)).collect();
+            let z_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(d, 0.8)).collect();
+            let mut a = vec![0.0f32; len * lanes];
+            let mut z = vec![0.0f32; d * lanes];
+            pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+            pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut z);
+            let mut bws = BatchWorkspace::new(&s, lanes);
+            fused_mexp_batch(&s, &mut a, &z, &mut bws);
+            let mut ws = Workspace::new(&s);
+            let mut row = vec![0.0f32; len];
+            for l in 0..lanes {
+                let mut expect = a_rows[l].clone();
+                fused_mexp(&s, &mut expect, &z_rows[l], &mut ws);
+                unpack_lane(len, lanes, &a, l, &mut row);
+                assert_eq!(row, expect, "lane {l} diverged from scalar fused_mexp");
+            }
+        });
+    }
+
+    #[test]
+    fn batch_left_is_bitwise_per_lane() {
+        property("fused_mexp_left_batch == fused_mexp_left bitwise", 30, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 6 });
+            let lanes = g.usize_in(1, 7);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            let a_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.8)).collect();
+            let z_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(d, 0.8)).collect();
+            let mut a = vec![0.0f32; len * lanes];
+            let mut z = vec![0.0f32; d * lanes];
+            pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+            pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut z);
+            let mut bws = BatchWorkspace::new(&s, lanes);
+            fused_mexp_left_batch(&s, &mut a, &z, &mut bws);
+            let mut ws = Workspace::new(&s);
+            let mut row = vec![0.0f32; len];
+            for l in 0..lanes {
+                let mut expect = a_rows[l].clone();
+                fused_mexp_left(&s, &mut expect, &z_rows[l], &mut ws);
+                unpack_lane(len, lanes, &a, l, &mut row);
+                assert_eq!(row, expect, "lane {l} diverged from scalar fused_mexp_left");
+            }
+        });
+    }
+
+    #[test]
+    fn batch_vjp_is_bitwise_per_lane_in_mono_range() {
+        // The batched backward mirrors the d <= 8 monomorphised scalar
+        // backward op-for-op, so it must match it bit-for-bit per lane.
+        property("fused_mexp_vjp_batch == fused_mexp_vjp bitwise", 20, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 5 });
+            let lanes = g.usize_in(1, 6);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            let a_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.6)).collect();
+            let z_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(d, 0.6)).collect();
+            let g_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 1.0)).collect();
+            let mut a = vec![0.0f32; len * lanes];
+            let mut z = vec![0.0f32; d * lanes];
+            let mut cot = vec![0.0f32; len * lanes];
+            pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+            pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut z);
+            pack_lanes(len, lanes, |l| g_rows[l].as_slice(), &mut cot);
+            let mut ga = vec![0.0f32; len * lanes];
+            let mut gz = vec![0.0f32; d * lanes];
+            let mut bws = BatchWorkspace::new(&s, lanes);
+            fused_mexp_vjp_batch(&s, &a, &z, &cot, &mut ga, &mut gz, &mut bws);
+            let mut ws = Workspace::new(&s);
+            let mut ga_row = vec![0.0f32; len];
+            let mut gz_row = vec![0.0f32; d];
+            for l in 0..lanes {
+                let mut ga_ref = s.zeros();
+                let mut gz_ref = vec![0.0f32; d];
+                fused_mexp_vjp(
+                    &s,
+                    &a_rows[l],
+                    &z_rows[l],
+                    &g_rows[l],
+                    &mut ga_ref,
+                    &mut gz_ref,
+                    &mut ws,
+                );
+                unpack_lane(len, lanes, &ga, l, &mut ga_row);
+                unpack_lane(d, lanes, &gz, l, &mut gz_row);
+                assert_eq!(ga_row, ga_ref, "lane {l} ga diverged");
+                assert_eq!(gz_row, gz_ref, "lane {l} gz diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn single_lane_is_the_scalar_kernel() {
+        // lanes = 1 interleaving is the identity layout: the batch kernel
+        // degenerates to the scalar one on the same buffers.
+        let s = SigSpec::new(3, 4).unwrap();
+        let mut rng = crate::substrate::rng::Rng::new(7);
+        let a0 = rng.normal_vec(s.sig_len(), 0.5);
+        let z = rng.normal_vec(3, 0.5);
+        let mut batch = a0.clone();
+        let mut scalar = a0;
+        let mut bws = BatchWorkspace::new(&s, 1);
+        let mut ws = Workspace::new(&s);
+        fused_mexp_batch(&s, &mut batch, &z, &mut bws);
+        fused_mexp(&s, &mut scalar, &z, &mut ws);
+        assert_eq!(batch, scalar);
+    }
+
+    #[test]
+    fn workspace_sizes_scale_with_lanes() {
+        let s = SigSpec::new(3, 4).unwrap();
+        let w = BatchWorkspace::new(&s, 5);
+        assert_eq!(w.lanes(), 5);
+        assert_eq!(w.h0.len(), 27 * 5); // d^(N-1) per lane
+        assert_eq!(w.zdiv.len(), 12 * 5);
+        assert_eq!(w.t2.len(), s.sig_len() * 5);
+        assert_eq!(w.gza.len(), 3 * 5);
+    }
+}

@@ -13,11 +13,22 @@ use super::SigSpec;
 pub fn exp_into(spec: &SigSpec, z: &[f32], out: &mut [f32]) {
     debug_assert_eq!(z.len(), spec.d());
     debug_assert_eq!(out.len(), spec.sig_len());
+    out[..spec.d()].copy_from_slice(z);
+    exp_in_place(spec, out);
+}
+
+/// Build `exp` in place from an increment already staged in level 1:
+/// on entry `out[..d]` holds `z`, on exit `out = exp(z)`. Lets allocation-
+/// free callers (e.g.
+/// [`crate::signature::forward::two_point_signature_into`]) skip the
+/// separate `z` buffer.
+pub fn exp_in_place(spec: &SigSpec, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), spec.sig_len());
     let d = spec.d();
-    out[..d].copy_from_slice(z);
     for k in 2..=spec.depth() {
         let inv_k = 1.0 / k as f32;
         let (lo, hi) = out.split_at_mut(spec.off(k));
+        let z = &lo[..d];
         let prev = &lo[spec.off(k - 1)..];
         let dst = &mut hi[..spec.level_len(k)];
         // E_k = E_{k-1} ⊗ (z / k)

@@ -454,9 +454,12 @@ mod tests {
 
     #[test]
     fn fused_equals_mul_exp() {
+        // d ranges over the full monomorphisation window (dispatch
+        // monomorphises through d = 8): the d ∈ {6, 7, 8} forward kernels
+        // were previously never exercised.
         property("fused == A ⊠ exp(z)", 40, |g| {
-            let d = g.usize_in(1, 5);
-            let n = g.usize_in(1, 6);
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 5 } else { 6 });
             g.label(format!("d={d} n={n}"));
             let s = SigSpec::new(d, n).unwrap();
             let mut ws = Workspace::new(&s);
@@ -472,8 +475,8 @@ mod tests {
     #[test]
     fn fused_left_equals_exp_mul() {
         property("fused_left == exp(z) ⊠ A", 40, |g| {
-            let d = g.usize_in(1, 5);
-            let n = g.usize_in(1, 6);
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 5 } else { 6 });
             g.label(format!("d={d} n={n}"));
             let s = SigSpec::new(d, n).unwrap();
             let mut ws = Workspace::new(&s);
