@@ -1,0 +1,241 @@
+//! Adaptive-dispatch benchmark: the same mixed-shape serving workload run
+//! under **static** dispatch (every native shape lingers up to the full
+//! microbatch capacity — the pre-planner behaviour) and **adaptive**
+//! dispatch (the `exec::ExecPlanner` quotes per-shape capacity from the
+//! observed shape mix: hot shapes lane-fuse, rare shapes skip the linger;
+//! cross-session feeds coalesce through the feed lane). Writes the
+//! machine-readable record the perf trajectory tracks:
+//!
+//!     cargo bench --bench adaptive_dispatch             # -> BENCH_dispatch.json
+//!     cargo bench --bench adaptive_dispatch -- --check  # CI smoke: reduced
+//!         workload plus hard structural gates (rare shapes must bypass
+//!         the batcher under adaptive dispatch; cross-session feeds must
+//!         coalesce into fused sweeps), so planner regressions fail CI
+//!         instead of only skewing uploaded artifacts
+//!
+//! The workload: one dominant shape (most of the traffic, issued
+//! concurrently so it coalesces) plus a long tail of rare unique shapes
+//! (issued alone — under static dispatch each idles out the linger in its
+//! own one-row batch; under adaptive dispatch each serves directly), then
+//! a cross-session streaming phase feeding one spec from several sessions.
+
+use std::time::{Duration, Instant};
+
+use signax::bench::dispatch_json;
+use signax::coordinator::{
+    Coordinator, CoordinatorConfig, DispatchConfig, MetricsSnapshot, Request,
+};
+use signax::substrate::benchlib::fmt_secs;
+use signax::substrate::pool::default_threads;
+use signax::substrate::rng::Rng;
+
+const HOT: (usize, usize, usize) = (32, 3, 4); // (stream, d, depth)
+const DEPTH_TAIL: usize = 3;
+const LINGER: Duration = Duration::from_millis(2);
+
+fn coordinator(adaptive: bool) -> anyhow::Result<Coordinator> {
+    // "static" reproduces the pre-planner behaviour faithfully: every
+    // native shape always lingers up to the full capacity and feeds are
+    // never lane-fused (the feed lane did not exist).
+    Coordinator::new(CoordinatorConfig {
+        linger: LINGER,
+        dispatch: DispatchConfig { adaptive, feed_lanes: adaptive, ..DispatchConfig::default() },
+        ..CoordinatorConfig::native_only()
+    })
+}
+
+fn hot_request(rng: &mut Rng) -> Request {
+    let (stream, d, depth) = HOT;
+    Request::Signature {
+        path: signax::data::random_path(rng, stream, d, 0.2),
+        stream,
+        d,
+        depth,
+    }
+}
+
+/// A rare shape unique to `k`: stream lengths nothing else in the
+/// workload uses, so no two rare requests can share a microbatch.
+fn rare_request(rng: &mut Rng, k: usize) -> Request {
+    let stream = 40 + 2 * k;
+    Request::Signature {
+        path: signax::data::random_path(rng, stream, 2, 0.2),
+        stream,
+        d: 2,
+        depth: DEPTH_TAIL,
+    }
+}
+
+struct PhaseResult {
+    requests: usize,
+    wall: f64,
+    snap: MetricsSnapshot,
+}
+
+/// Mixed stateless phase: waves of concurrent hot requests, each wave
+/// followed by one lone rare-shape request (the latency-tail victim of
+/// static dispatch).
+fn run_mixed(coord: &Coordinator, waves: usize, hot_per_wave: usize) -> anyhow::Result<PhaseResult> {
+    let mut rng = Rng::new(0xD15A);
+    let mut requests = 0usize;
+    let t0 = Instant::now();
+    for wave in 0..waves {
+        let batch: Vec<Request> = (0..hot_per_wave).map(|_| hot_request(&mut rng)).collect();
+        requests += batch.len();
+        for r in coord.call_many(batch) {
+            r?;
+        }
+        coord.call(rare_request(&mut rng, wave))?;
+        requests += 1;
+    }
+    Ok(PhaseResult { requests, wall: t0.elapsed().as_secs_f64(), snap: coord.metrics().snapshot() })
+}
+
+/// Streaming phase: `sessions` sessions on one spec, fed concurrently in
+/// rounds — adaptive dispatch coalesces the rounds into fused feed-lane
+/// sweeps once the planner has seen the distinct feeders.
+fn run_feeds(coord: &Coordinator, sessions: usize, rounds: usize) -> anyhow::Result<PhaseResult> {
+    let mut rng = Rng::new(0xFEED);
+    let mut ids = vec![];
+    for _ in 0..sessions {
+        let resp = coord.call(Request::OpenStream {
+            points: signax::data::random_path(&mut rng, 4, 3, 0.2),
+            stream: 4,
+            d: 3,
+            depth: 4,
+        })?;
+        ids.push(resp.session.ok_or_else(|| anyhow::anyhow!("open returned no session"))?);
+    }
+    let mut requests = sessions;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let batch: Vec<Request> = ids
+            .iter()
+            .map(|&sid| Request::Feed {
+                session: sid,
+                points: rng.normal_vec(8 * 3, 0.2),
+                count: 8,
+            })
+            .collect();
+        requests += batch.len();
+        for r in coord.call_many(batch) {
+            r?;
+        }
+    }
+    Ok(PhaseResult { requests, wall: t0.elapsed().as_secs_f64(), snap: coord.metrics().snapshot() })
+}
+
+fn main() -> anyhow::Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    let (waves, hot_per_wave, sessions, rounds) =
+        if check { (12, 6, 4, 8) } else { (32, 8, 6, 24) };
+
+    println!(
+        "{:<9} {:<7} {:>5} {:>10} {:>12} {:>8} {:>8} {:>8} {:>6}",
+        "mode", "phase", "reqs", "wall", "mean_lat", "batches", "scalar", "lane", "feed"
+    );
+    let mut records: Vec<(&str, &str, usize, f64, f64, u64, u64, u64, u64)> = vec![];
+    let mut report = |mode: &'static str,
+                      phase: &'static str,
+                      res: &PhaseResult,
+                      prev: Option<&MetricsSnapshot>| {
+        // Per-phase deltas against the previous snapshot of the same
+        // coordinator (phases share one metrics struct) — including the
+        // latency, which the snapshot only exposes as a running mean:
+        // reconstruct each phase's own mean from the totals so the feeds
+        // row is not skewed by the mixed phase's deliberate lingers.
+        let d = |f: fn(&MetricsSnapshot) -> u64| {
+            f(&res.snap) - prev.map_or(0, f)
+        };
+        let total_s =
+            |s: &MetricsSnapshot| s.mean_latency.as_secs_f64() * s.requests as f64;
+        let phase_reqs = d(|s| s.requests).max(1);
+        let lat_us =
+            (total_s(&res.snap) - prev.map_or(0.0, total_s)) / phase_reqs as f64 * 1e6;
+        println!(
+            "{:<9} {:<7} {:>5} {:>10} {:>10}us {:>8} {:>8} {:>8} {:>6}",
+            mode,
+            phase,
+            res.requests,
+            fmt_secs(res.wall),
+            format!("{lat_us:.0}"),
+            d(|s| s.batches),
+            d(|s| s.dispatch_scalar),
+            d(|s| s.dispatch_lane_fused),
+            d(|s| s.feed_lane_batches),
+        );
+        records.push((
+            mode,
+            phase,
+            res.requests,
+            res.wall,
+            lat_us,
+            d(|s| s.batches),
+            d(|s| s.dispatch_scalar),
+            d(|s| s.dispatch_lane_fused),
+            d(|s| s.feed_lane_batches),
+        ));
+    };
+
+    let mut gate: Vec<(String, bool)> = vec![];
+    for (mode, adaptive) in [("static", false), ("adaptive", true)] {
+        let coord = coordinator(adaptive)?;
+        let mixed = run_mixed(&coord, waves, hot_per_wave)?;
+        report(mode, "mixed", &mixed, None);
+        let feeds = run_feeds(&coord, sessions, rounds)?;
+        report(mode, "feeds", &feeds, Some(&mixed.snap));
+        if adaptive {
+            // Structural gates (timing-free, so CI noise cannot flake
+            // them). A request served through the batcher contributes
+            // exactly one `real_rows`; a direct (planner-bypassed) serve
+            // contributes none — so `requests - real_rows` counts the
+            // bypasses exactly, and a planner regression that routes
+            // everything through the batcher (real_rows == requests,
+            // like the static run) fails this gate.
+            let bypassed = mixed.requests as u64 - mixed.snap.real_rows;
+            gate.push((
+                format!(
+                    "adaptive run must serve rare shapes directly \
+                     ({bypassed} of {waves} rare requests bypassed the batcher)"
+                ),
+                bypassed >= waves as u64 - 4, // first few land pre-warm-up
+            ));
+            gate.push((
+                format!(
+                    "cross-session feeds must coalesce into fused sweeps \
+                     (feed_lane_batches = {})",
+                    feeds.snap.feed_lane_batches
+                ),
+                feeds.snap.feed_lane_batches > 0,
+            ));
+        } else {
+            gate.push((
+                format!(
+                    "static run must keep every stateless request on the batcher \
+                     (real_rows {} == {} requests)",
+                    mixed.snap.real_rows, mixed.requests
+                ),
+                mixed.snap.real_rows == mixed.requests as u64,
+            ));
+            gate.push((
+                format!(
+                    "static run must never lane-fuse feeds \
+                     (feed_lane_batches = {})",
+                    feeds.snap.feed_lane_batches
+                ),
+                feeds.snap.feed_lane_batches == 0,
+            ));
+        }
+    }
+
+    std::fs::write("BENCH_dispatch.json", dispatch_json(default_threads(), &records))?;
+    println!("\nwrote BENCH_dispatch.json");
+
+    if check {
+        for (what, ok) in &gate {
+            anyhow::ensure!(*ok, "adaptive-dispatch smoke FAILED: {what}");
+            println!("smoke ok: {what}");
+        }
+    }
+    Ok(())
+}

@@ -30,12 +30,11 @@ fn main() -> anyhow::Result<()> {
     .best_secs();
 
     // Through the coordinator, native routing. Microbatching is disabled
-    // for this serial measurement: a lone caller would otherwise just be
-    // timing the batcher linger, not the routing overhead.
-    let coord = Coordinator::new(CoordinatorConfig {
-        native_batch: 0,
-        ..CoordinatorConfig::native_only()
-    })?;
+    // for this serial measurement (the documented native_batch = 0 escape
+    // hatch, preserved through the planner): a lone caller would
+    // otherwise just be timing the batcher linger, not the routing
+    // overhead.
+    let coord = Coordinator::new(CoordinatorConfig::native_only().with_native_batch(0))?;
     let routed = bench(&cfg, || {
         let r = coord
             .call(Request::Signature { path: path.clone(), stream, d, depth })

@@ -16,11 +16,16 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = Rng::new(3);
     // A mixed workload: artifact-shaped requests (route to XLA) and odd
-    // shapes (served natively). Native same-spec requests landing within
-    // one linger window are microbatched: a flushed batch runs as ONE
-    // lane-fused sweep (ta::batch, vectorised across the batch) instead
-    // of N independent signatures — the CPU serving hot path for many
-    // short streams at small d (`CoordinatorConfig::native_batch`).
+    // shapes (served natively). Native dispatch is **adaptive**
+    // (`DispatchConfig`, backed by exec::ExecPlanner): every shape is
+    // recorded into an observed shape-mix histogram, and shapes with
+    // batch peers in recent traffic are microbatched — a flushed batch
+    // runs as ONE lane-fused sweep (ta::batch, vectorised across the
+    // batch) instead of N independent signatures, the CPU serving hot
+    // path for many short streams at small d. Shapes too rare to find
+    // peers skip the linger and serve directly, so a long tail of odd
+    // shapes costs no latency. `.with_native_batch(0)` is the documented
+    // escape hatch disabling all native batching.
     let mut reqs = vec![];
     for i in 0..96 {
         let (stream, d, depth) = if i % 3 == 0 { (100, 3, 4) } else { (128, 4, 4) };
@@ -52,6 +57,7 @@ fn main() -> anyhow::Result<()> {
     );
     let snap = coord.metrics().snapshot();
     println!("metrics: {}", snap.render());
+    println!("dispatch: {}", snap.render_dispatch());
     println!(
         "dynamic batching: {} batches for {} rows ({:.1}% padding) — native \
          microbatches execute lane-fused",
@@ -77,7 +83,12 @@ fn main() -> anyhow::Result<()> {
     // feed it incrementally ("keeping the signature up-to-date", §5.5),
     // query arbitrary intervals in O(1), and close it. The session table
     // is memory-bounded in production via `CoordinatorConfig::session`
-    // (budget_bytes / ttl) — unbounded here for the demo.
+    // (budget_bytes / ttl) — unbounded here for the demo. Feeds are
+    // adaptive too: once two or more distinct sessions stream the same
+    // spec, the planner opens a *feed lane* and concurrent feeds coalesce
+    // into one lane-fused Path::update_batch sweep, bitwise identical per
+    // session to scalar feeding; a lone feeder (like this demo) always
+    // stays on the direct scalar path with no added latency.
     let open = coord.call(Request::OpenStream {
         points: signax::data::random_path(&mut rng, 8, 2, 0.2),
         stream: 8,

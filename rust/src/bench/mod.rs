@@ -22,4 +22,6 @@
 
 pub mod tables;
 
-pub use tables::{backward_json, batch_json, run_table, sessions_json, table_ids, BenchCtx, Scale};
+pub use tables::{
+    backward_json, batch_json, dispatch_json, run_table, sessions_json, table_ids, BenchCtx, Scale,
+};

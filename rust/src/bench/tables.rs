@@ -853,6 +853,36 @@ pub fn sessions_json(hw_threads: usize, records: &[(usize, f64, f64)]) -> String
     s
 }
 
+/// Render adaptive-dispatch bench records as `BENCH_dispatch.json`:
+/// `points[]` of `(mode, phase, requests, wall_s, mean_latency_us,
+/// batches, dispatch_scalar, dispatch_lane_fused, feed_lane_batches)`
+/// under top-level `hw_threads`. Written by
+/// `benches/adaptive_dispatch.rs`, which runs the same mixed-shape
+/// workload under static and adaptive dispatch.
+#[allow(clippy::type_complexity)]
+pub fn dispatch_json(
+    hw_threads: usize,
+    records: &[(&str, &str, usize, f64, f64, u64, u64, u64, u64)],
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"adaptive_dispatch\",\n");
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(mode, phase, requests, wall, lat_us, batches, scalar, lane, feed)) in
+        records.iter().enumerate()
+    {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"mode\": \"{mode}\", \"phase\": \"{phase}\", \"requests\": {requests}, \
+             \"wall_s\": {wall:.9}, \"mean_latency_us\": {lat_us:.3}, \"batches\": {batches}, \
+             \"dispatch_scalar\": {scalar}, \"dispatch_lane_fused\": {lane}, \
+             \"feed_lane_batches\": {feed}}}{comma}\n"
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -951,6 +981,24 @@ mod tests {
         assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.5));
         assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn dispatch_json_well_formed() {
+        let json = dispatch_json(
+            8,
+            &[
+                ("static", "mixed", 96, 1.5, 2000.0, 40, 0, 8, 0),
+                ("adaptive", "mixed", 96, 0.9, 700.0, 12, 28, 8, 3),
+            ],
+        );
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("hw_threads").and_then(|v| v.as_f64()), Some(8.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].get("batches").and_then(|v| v.as_f64()), Some(12.0));
+        assert_eq!(pts[1].get("dispatch_scalar").and_then(|v| v.as_f64()), Some(28.0));
+        assert_eq!(pts[1].get("feed_lane_batches").and_then(|v| v.as_f64()), Some(3.0));
     }
 
     #[test]

@@ -51,9 +51,21 @@ pub trait BatchBackend: Send + Sync + 'static {
 type RowSender = mpsc::Sender<anyhow::Result<Vec<f32>>>;
 
 struct Pending {
+    /// The shape this batch executes as — including its capacity, fixed
+    /// by the first submitter. The queue key deliberately excludes the
+    /// capacity (see [`queue_key`]): the adaptive planner may hand later
+    /// submitters of the same logical shape a different capacity, and
+    /// they must still coalesce into this pending batch rather than fork
+    /// a parallel queue.
+    shape: BatchShape,
     rows: Vec<f32>,
     senders: Vec<RowSender>,
     deadline: Instant,
+}
+
+/// Queue identity of a shape: everything except the batch capacity.
+fn queue_key(shape: &BatchShape) -> BatchShape {
+    BatchShape { batch: 0, ..*shape }
 }
 
 struct Shared {
@@ -101,37 +113,40 @@ impl Batcher {
         row: &[f32],
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
         anyhow::ensure!(row.len() == shape.in_row(), "row has wrong width");
+        anyhow::ensure!(shape.batch >= 1, "batch capacity must be at least 1");
         let (tx, rx) = mpsc::channel();
+        let key = queue_key(&shape);
         let full_batch = {
             let mut queues = self.shared.queues.lock().unwrap();
-            let pending = queues.entry(shape).or_insert_with(|| Pending {
+            let pending = queues.entry(key).or_insert_with(|| Pending {
+                shape,
                 rows: Vec::with_capacity(shape.batch * shape.in_row()),
                 senders: Vec::with_capacity(shape.batch),
                 deadline: Instant::now() + self.linger,
             });
             pending.rows.extend_from_slice(row);
             pending.senders.push(tx);
-            if pending.senders.len() >= shape.batch {
-                queues.remove(&shape)
+            if pending.senders.len() >= pending.shape.batch {
+                queues.remove(&key)
             } else {
                 self.shared.wake.notify_one();
                 None
             }
         };
         if let Some(pending) = full_batch {
-            execute_batch(&*self.backend, &self.metrics, shape, pending);
+            execute_batch(&*self.backend, &self.metrics, pending);
         }
         Ok(rx)
     }
 
     /// Force-flush everything (used on shutdown and by tests).
     pub fn flush(&self) {
-        let drained: Vec<(BatchShape, Pending)> = {
+        let drained: Vec<Pending> = {
             let mut queues = self.shared.queues.lock().unwrap();
-            queues.drain().collect()
+            queues.drain().map(|(_, p)| p).collect()
         };
-        for (shape, pending) in drained {
-            execute_batch(&*self.backend, &self.metrics, shape, pending);
+        for pending in drained {
+            execute_batch(&*self.backend, &self.metrics, pending);
         }
     }
 }
@@ -157,7 +172,7 @@ fn flusher_loop(
         if *shared.shutdown.lock().unwrap() {
             return;
         }
-        let mut due: Vec<(BatchShape, Pending)> = vec![];
+        let mut due: Vec<Pending> = vec![];
         {
             let mut queues = shared.queues.lock().unwrap();
             let now = Instant::now();
@@ -168,12 +183,12 @@ fn flusher_loop(
                 .collect();
             for k in due_keys {
                 if let Some(p) = queues.remove(&k) {
-                    due.push((k, p));
+                    due.push(p);
                 }
             }
         }
-        for (shape, pending) in due {
-            execute_batch(&*backend, &metrics, shape, pending);
+        for pending in due {
+            execute_batch(&*backend, &metrics, pending);
         }
         // Re-acquire the lock and recompute the earliest deadline *after*
         // executing: a submit that landed mid-execution had its notify
@@ -197,13 +212,9 @@ fn flusher_loop(
     }
 }
 
-fn execute_batch(
-    backend: &dyn BatchBackend,
-    metrics: &Metrics,
-    shape: BatchShape,
-    pending: Pending,
-) {
+fn execute_batch(backend: &dyn BatchBackend, metrics: &Metrics, pending: Pending) {
     use std::sync::atomic::Ordering;
+    let shape = pending.shape;
     let n_real = pending.senders.len();
     let mut padded = pending.rows;
     padded.resize(shape.batch * shape.in_row(), 0.0);
@@ -422,6 +433,33 @@ mod tests {
             waited < Duration::from_millis(550),
             "batch flushed only after {waited:?} (stale linger deadline)"
         );
+    }
+
+    #[test]
+    fn capacity_changes_still_coalesce_into_one_batch() {
+        // The adaptive planner may hand two submitters of the same logical
+        // shape different capacities; the queue keys on the shape minus
+        // capacity, so they must land in one pending batch whose capacity
+        // is the first submitter's.
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::new(
+            Arc::new(MockBackend { fail: false }),
+            Arc::clone(&metrics),
+            Duration::from_secs(60), // only fullness flushes
+        );
+        let first = shape(2);
+        let mut second = shape(2);
+        second.batch = 8; // planner "widened" the capacity mid-window
+        let mut rng = crate::substrate::rng::Rng::new(21);
+        let rx1 = batcher.submit(first, &rng.normal_vec(first.in_row(), 0.5)).unwrap();
+        // Fills the capacity-2 pending batch despite asking for 8.
+        let rx2 = batcher.submit(second, &rng.normal_vec(second.in_row(), 0.5)).unwrap();
+        assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.batches, 1, "same logical shape must share one queue");
+        assert_eq!(snap.real_rows, 2);
+        assert_eq!(snap.padded_rows, 2, "executed at the first submitter's capacity");
     }
 
     #[test]

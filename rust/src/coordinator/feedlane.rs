@@ -1,0 +1,276 @@
+//! The **feed lane**: a dynamic batcher for stateful session feeds.
+//!
+//! `Request::Feed` traffic is the stateful mirror of the native signature
+//! microbatch: many sessions streaming the same spec can share one
+//! lane-fused `Path::update_batch` sweep ([`crate::path::Path`]) instead
+//! of N scalar updates. This batcher gathers same-spec feeds inside one
+//! linger window (keyed by `(d, depth)` — feeds are ragged in point count
+//! by design, which the lane sweep handles natively) and flushes them
+//! into [`SessionManager::feed_batch`], whose lanes are **bitwise
+//! identical** to scalar `Path::update`.
+//!
+//! Whether a feed enters the lane at all is the planner's call
+//! ([`crate::exec::ExecPlanner::feed_lane_capacity`]): lane-fusing only
+//! pays when at least two distinct sessions feed a spec concurrently, so
+//! a lone streaming client keeps the direct scalar path and never pays
+//! the linger — the same latency contract the `native_batch = 0` escape
+//! hatch documents for stateless traffic.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::session::{SessionId, SessionManager};
+
+/// Spec key feeds are grouped under: `(d, depth)`.
+pub type FeedKey = (usize, usize);
+
+struct FeedItem {
+    session: SessionId,
+    points: Vec<f32>,
+    count: usize,
+    tx: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+}
+
+struct PendingFeeds {
+    /// Capacity fixed by the first submitter of this pending group (the
+    /// planner may quote later submitters differently; see the batcher's
+    /// identical rule).
+    capacity: usize,
+    items: Vec<FeedItem>,
+    deadline: Instant,
+}
+
+struct Shared {
+    queues: Mutex<HashMap<FeedKey, PendingFeeds>>,
+    wake: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// The feed-lane batcher. Submit feeds; each receives its whole-stream
+/// signature on its own channel once its group executes (full, or linger
+/// elapsed).
+pub struct FeedLane {
+    shared: Arc<Shared>,
+    sessions: Arc<SessionManager>,
+    linger: Duration,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FeedLane {
+    /// Dispatch metrics are not taken here: [`SessionManager::feed_batch`]
+    /// owns the `feed_lane_batches` / dispatch counters, so every flush
+    /// path counts identically.
+    pub fn new(sessions: Arc<SessionManager>, linger: Duration) -> FeedLane {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            wake: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let flusher = {
+            let shared = Arc::clone(&shared);
+            let sessions = Arc::clone(&sessions);
+            std::thread::Builder::new()
+                .name("signax-feedlane".into())
+                .spawn(move || flusher_loop(shared, sessions, linger))
+                .expect("spawn feed lane")
+        };
+        FeedLane { shared, sessions, linger, flusher: Some(flusher) }
+    }
+
+    /// Submit one feed with the capacity the planner quoted for its spec.
+    /// A full group executes on the calling thread (tail latency stays
+    /// off the flusher); otherwise the flusher fires it at the deadline.
+    pub fn submit(
+        &self,
+        key: FeedKey,
+        capacity: usize,
+        session: SessionId,
+        points: Vec<f32>,
+        count: usize,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
+        anyhow::ensure!(capacity >= 1, "feed-lane capacity must be at least 1");
+        let (tx, rx) = mpsc::channel();
+        let full = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            let pending = queues.entry(key).or_insert_with(|| PendingFeeds {
+                capacity,
+                items: Vec::with_capacity(capacity),
+                deadline: Instant::now() + self.linger,
+            });
+            pending.items.push(FeedItem { session, points, count, tx });
+            if pending.items.len() >= pending.capacity {
+                queues.remove(&key)
+            } else {
+                self.shared.wake.notify_one();
+                None
+            }
+        };
+        if let Some(pending) = full {
+            execute_feeds(&self.sessions, pending.items);
+        }
+        Ok(rx)
+    }
+
+    /// Force-flush everything (shutdown and tests).
+    pub fn flush(&self) {
+        let drained: Vec<PendingFeeds> = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            queues.drain().map(|(_, p)| p).collect()
+        };
+        for pending in drained {
+            execute_feeds(&self.sessions, pending.items);
+        }
+    }
+}
+
+impl Drop for FeedLane {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.wake.notify_all();
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+        self.flush();
+    }
+}
+
+fn flusher_loop(shared: Arc<Shared>, sessions: Arc<SessionManager>, linger: Duration) {
+    loop {
+        if *shared.shutdown.lock().unwrap() {
+            return;
+        }
+        let mut due: Vec<PendingFeeds> = vec![];
+        {
+            let mut queues = shared.queues.lock().unwrap();
+            let now = Instant::now();
+            let due_keys: Vec<FeedKey> =
+                queues.iter().filter(|(_, p)| p.deadline <= now).map(|(k, _)| *k).collect();
+            for k in due_keys {
+                if let Some(p) = queues.remove(&k) {
+                    due.push(p);
+                }
+            }
+        }
+        for pending in due {
+            execute_feeds(&sessions, pending.items);
+        }
+        // Recompute the earliest deadline *after* executing — a submit
+        // landing mid-execution dropped its notify on the floor (nobody
+        // was waiting), so sleeping on a pre-execution deadline would let
+        // it idle a stale full linger (same fix as the row batcher).
+        let guard = shared.queues.lock().unwrap();
+        let now = Instant::now();
+        if guard.values().any(|p| p.deadline <= now) {
+            continue;
+        }
+        let wait = guard
+            .values()
+            .map(|p| p.deadline)
+            .min()
+            .map(|dl| dl.saturating_duration_since(now))
+            .unwrap_or(linger)
+            .max(Duration::from_micros(100));
+        let _unused = shared.wake.wait_timeout(guard, wait).unwrap();
+    }
+}
+
+fn execute_feeds(sessions: &SessionManager, items: Vec<FeedItem>) {
+    let mut txs = Vec::with_capacity(items.len());
+    let feeds: Vec<(SessionId, Vec<f32>, usize)> = items
+        .into_iter()
+        .map(|it| {
+            let FeedItem { session, points, count, tx } = it;
+            txs.push(tx);
+            (session, points, count)
+        })
+        .collect();
+    let results = sessions.feed_batch(feeds);
+    for (tx, result) in txs.into_iter().zip(results) {
+        let _ = tx.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+    use crate::ta::SigSpec;
+
+    fn setup() -> (Arc<SessionManager>, Arc<super::super::metrics::Metrics>) {
+        let metrics = Arc::new(super::super::metrics::Metrics::default());
+        (Arc::new(SessionManager::new(Arc::clone(&metrics))), metrics)
+    }
+
+    #[test]
+    fn full_group_executes_inline_and_coalesces() {
+        let (sessions, metrics) = setup();
+        let lane = FeedLane::new(
+            Arc::clone(&sessions),
+            Duration::from_secs(60), // only fullness triggers
+        );
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(1);
+        let ids: Vec<SessionId> = (0..3)
+            .map(|_| sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap())
+            .collect();
+        let mut rxs = vec![];
+        for &id in &ids {
+            let pts = rng.normal_vec(2 * 2, 0.3);
+            rxs.push(lane.submit((2, 3), 3, id, pts, 2).unwrap());
+        }
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        }
+        assert_eq!(metrics.snapshot().feed_lane_batches, 1);
+        for &id in &ids {
+            assert_eq!(sessions.session_len(id).unwrap(), 6);
+        }
+    }
+
+    #[test]
+    fn linger_flushes_partial_group() {
+        let (sessions, _metrics) = setup();
+        let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_millis(10));
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(2);
+        let id = sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap();
+        let rx = lane.submit((2, 3), 8, id, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
+        let sig = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(sig.len(), spec.sig_len());
+        assert_eq!(sessions.session_len(id).unwrap(), 6);
+    }
+
+    #[test]
+    fn distinct_specs_flush_separately() {
+        let (sessions, metrics) = setup();
+        let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_millis(10));
+        let s2 = SigSpec::new(2, 3).unwrap();
+        let s3 = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(3);
+        let a = sessions.open(&s2, &rng.normal_vec(4 * 2, 0.3), 4).unwrap();
+        let b = sessions.open(&s3, &rng.normal_vec(4 * 3, 0.3), 4).unwrap();
+        let rx_a = lane.submit((2, 3), 8, a, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
+        let rx_b = lane.submit((3, 3), 8, b, rng.normal_vec(2 * 3, 0.3), 2).unwrap();
+        assert!(rx_a.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        // Two singleton flushes: scalar dispatch, no fused feed sweep.
+        assert_eq!(metrics.snapshot().feed_lane_batches, 0);
+    }
+
+    #[test]
+    fn errors_reach_their_caller_only() {
+        let (sessions, _metrics) = setup();
+        let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_secs(60));
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(4);
+        let good = sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap();
+        let rx_bad = lane
+            .submit((2, 3), 2, SessionId(777), rng.normal_vec(2 * 2, 0.3), 2)
+            .unwrap();
+        let rx_good = lane.submit((2, 3), 2, good, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
+        assert!(rx_bad.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
+        assert!(rx_good.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    }
+}

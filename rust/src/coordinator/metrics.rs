@@ -34,6 +34,20 @@ pub struct Metrics {
     pub sessions_evicted: AtomicU64,
     /// Sessions expired by the idle-TTL sweeper.
     pub sessions_expired: AtomicU64,
+    /// Units of native work executed with the scalar strategy (one serial
+    /// sweep per path / per feed) — see [`crate::exec::ExecPlan`].
+    pub dispatch_scalar: AtomicU64,
+    /// Units executed with chunked Chen-identity stream parallelism.
+    pub dispatch_stream_parallel: AtomicU64,
+    /// Units executed lane-fused across a batch (microbatch flushes and
+    /// feed-lane sweeps).
+    pub dispatch_lane_fused: AtomicU64,
+    /// Lane-fused *session feed* sweeps: flushed feed groups (>= 2
+    /// sessions) advanced through one `Path::update_batch` call.
+    pub feed_lane_batches: AtomicU64,
+    /// Gauge: distinct request shapes currently in the planner's observed
+    /// shape-mix window.
+    pub shape_mix_shapes: AtomicU64,
 }
 
 /// A point-in-time copy of the metrics.
@@ -55,6 +69,11 @@ pub struct MetricsSnapshot {
     pub session_bytes: u64,
     pub sessions_evicted: u64,
     pub sessions_expired: u64,
+    pub dispatch_scalar: u64,
+    pub dispatch_stream_parallel: u64,
+    pub dispatch_lane_fused: u64,
+    pub feed_lane_batches: u64,
+    pub shape_mix_shapes: u64,
 }
 
 impl Metrics {
@@ -86,6 +105,11 @@ impl Metrics {
             session_bytes: self.session_bytes.load(Ordering::Relaxed),
             sessions_evicted: self.sessions_evicted.load(Ordering::Relaxed),
             sessions_expired: self.sessions_expired.load(Ordering::Relaxed),
+            dispatch_scalar: self.dispatch_scalar.load(Ordering::Relaxed),
+            dispatch_stream_parallel: self.dispatch_stream_parallel.load(Ordering::Relaxed),
+            dispatch_lane_fused: self.dispatch_lane_fused.load(Ordering::Relaxed),
+            feed_lane_batches: self.feed_lane_batches.load(Ordering::Relaxed),
+            shape_mix_shapes: self.shape_mix_shapes.load(Ordering::Relaxed),
         }
     }
 
@@ -126,6 +150,21 @@ impl MetricsSnapshot {
             self.session_bytes,
             self.sessions_evicted,
             self.sessions_expired,
+        )
+    }
+
+    /// The per-strategy dispatch summary — a separate line so callers
+    /// compose it with [`MetricsSnapshot::render`] without duplication
+    /// (the `serve` / `serve-stream` CLI subcommands print both).
+    pub fn render_dispatch(&self) -> String {
+        format!(
+            "dispatch[scalar={} stream_parallel={} lane_fused={} feed_lane_batches={} \
+             shape_mix={}]",
+            self.dispatch_scalar,
+            self.dispatch_stream_parallel,
+            self.dispatch_lane_fused,
+            self.feed_lane_batches,
+            self.shape_mix_shapes,
         )
     }
 }
@@ -170,5 +209,28 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.snapshot().mean_latency, Duration::ZERO);
         assert_eq!(m.padding_ratio(), 0.0);
+    }
+
+    #[test]
+    fn dispatch_counters_roundtrip_and_render() {
+        let m = Metrics::default();
+        m.dispatch_scalar.store(3, Ordering::Relaxed);
+        m.dispatch_stream_parallel.store(2, Ordering::Relaxed);
+        m.dispatch_lane_fused.store(5, Ordering::Relaxed);
+        m.feed_lane_batches.store(4, Ordering::Relaxed);
+        m.shape_mix_shapes.store(7, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.dispatch_scalar, 3);
+        assert_eq!(s.dispatch_stream_parallel, 2);
+        assert_eq!(s.dispatch_lane_fused, 5);
+        assert_eq!(s.feed_lane_batches, 4);
+        assert_eq!(s.shape_mix_shapes, 7);
+        let line = s.render_dispatch();
+        assert!(line.contains("lane_fused=5"));
+        assert!(line.contains("feed_lane_batches=4"));
+        assert!(line.contains("shape_mix=7"));
+        // render() deliberately does NOT embed the dispatch line — the
+        // CLI prints both, and embedding would duplicate it.
+        assert!(!s.render().contains("dispatch["));
     }
 }

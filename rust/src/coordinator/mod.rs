@@ -7,12 +7,25 @@
 //!
 //! ```text
 //!  client ──submit──▶ Router ──(streaming request?)──▶ Session table ──▶ Path (native)
-//!                       │        (sharded, memory-bounded, LRU+TTL eviction)
+//!                       │         │  (sharded, memory-bounded, LRU+TTL eviction)
+//!                       │         └─(Feed, ≥2 sessions on one spec)──▶ Feed lane
+//!                       │              (ExecPlanner-gated)     (Path::update_batch sweep)
 //!                       ├──(shape matches an artifact?)──▶ Batcher ──▶ XLA Engine
 //!                       │                                    (pad to artifact batch)
-//!                       └──(no artifact)──▶ native microbatcher ──▶ lane-fused sweep
-//!                                            (same-spec signatures, ta::batch)
+//!                       └──(no artifact)──▶ ExecPlanner ──▶ native microbatcher
+//!                             (adaptive per-shape capacity)   (lane-fused sweep, ta::batch)
+//!                                          └──(rare shape / capacity 1)──▶ direct scalar
 //! ```
+//!
+//! **Adaptive dispatch**: every native request's shape is recorded into
+//! the [`crate::exec::ExecPlanner`]'s observed shape-mix histogram, and
+//! the planner — not the call sites — decides the execution strategy and
+//! the microbatch capacity per shape ([`DispatchConfig`]). Shapes with
+//! batch peers in recent traffic linger and lane-fuse; rare shapes (and
+//! lone streaming feeders) serve directly with zero added latency. The
+//! old `native_batch` knob survives as a compatibility alias
+//! ([`CoordinatorConfig::with_native_batch`]), including its documented
+//! `0` escape hatch: microbatching and the feed lane fully off.
 //!
 //! Batching exists because XLA executables are compiled for fixed shapes:
 //! requests with the same `(kind, L, d, N)` are gathered until the artifact
@@ -29,11 +42,13 @@
 //! [`SessionConfig::ttl`] (idle expiry).
 
 pub mod batcher;
+pub mod feedlane;
 pub mod metrics;
 pub mod router;
 pub mod session;
 
 pub use batcher::{BatchBackend, BatchShape, Batcher};
+pub use feedlane::FeedLane;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{Backend, Coordinator, CoordinatorConfig, Request, Response};
+pub use router::{Backend, Coordinator, CoordinatorConfig, DispatchConfig, Request, Response};
 pub use session::{SessionConfig, SessionId, SessionManager};

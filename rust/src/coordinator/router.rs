@@ -6,11 +6,19 @@
 //! no artifact directory is present, so the coordinator is fully usable
 //! without running `make artifacts`.
 //!
-//! Native `Signature` requests are themselves microbatched
-//! ([`CoordinatorConfig::native_batch`]): same-spec requests gathered
-//! within one linger window execute as a single **lane-fused** sweep
-//! through [`crate::ta::batch`] — vectorised across the batch — instead of
-//! N independent per-path signatures.
+//! Native execution strategy is owned by the **execution planner**
+//! ([`crate::exec::ExecPlanner`], configured through [`DispatchConfig`]):
+//! the coordinator records every request's shape into the planner's
+//! observed shape-mix histogram, and the planner decides per shape whether
+//! to microbatch (same-spec `Signature` requests gathered within one
+//! linger window execute as a single **lane-fused** sweep through
+//! [`crate::ta::batch`]) or to serve directly (shapes too rare in recent
+//! traffic to find batch peers skip the linger entirely). Stateful `Feed`
+//! requests get the same treatment through the **feed lane**
+//! ([`super::feedlane::FeedLane`]): once two or more distinct sessions
+//! stream the same spec, their feeds coalesce into one
+//! `Path::update_batch` sweep — bitwise identical per session to scalar
+//! feeding.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -18,11 +26,13 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchBackend, BatchShape, Batcher};
+use super::feedlane::FeedLane;
 use super::metrics::Metrics;
 use super::session::{SessionConfig, SessionId, SessionManager};
+use crate::exec::{ExecPlan, ExecPlanner, ShapeKey, WorkShape};
 use crate::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
-use crate::signature::{signature_batch, signature_vjp_with, signature_with, SigConfig};
+use crate::signature::{signature_batch_planned, signature_vjp_with, signature_with, SigConfig};
 #[cfg(test)]
 use crate::signature::signature;
 use crate::ta::SigSpec;
@@ -83,6 +93,58 @@ pub struct Response {
     pub session: Option<SessionId>,
 }
 
+/// Adaptive-dispatch knobs: how the coordinator's [`ExecPlanner`] turns
+/// the observed shape mix into microbatch formation. Replaces the old
+/// static `native_batch` knob (see
+/// [`CoordinatorConfig::with_native_batch`] for the compatibility alias).
+#[derive(Clone, Debug)]
+pub struct DispatchConfig {
+    /// Microbatch capacity ceiling for native `Signature` requests: when
+    /// `>= 2`, same-spec requests gathered within one linger window run
+    /// as **one lane-fused sweep** ([`crate::ta::batch`]) instead of N
+    /// independent signatures — the CPU serving hot path for many short
+    /// streams at small `d`. Requests whose shapes differ batch
+    /// separately (the batcher keys on shape), so a ragged mix degrades
+    /// gracefully to per-shape microbatches. `0` **disables** native
+    /// microbatching entirely — the documented escape hatch for
+    /// latency-sensitive single-stream callers: every request computes
+    /// directly, no linger, guaranteed (pinned by a regression test and
+    /// preserved verbatim through the planner).
+    pub microbatch: usize,
+    /// Adapt per-shape capacity to the observed shape mix
+    /// ([`ExecPlanner::microbatch_capacity`]): shapes too rare in recent
+    /// traffic to expect a batch peer execute directly instead of idling
+    /// out the linger. `false` restores the static pre-planner behaviour
+    /// (every shape always lingers up to `microbatch` rows).
+    pub adaptive: bool,
+    /// Lane-fuse same-spec session feeds through the feed lane
+    /// ([`super::feedlane::FeedLane`]). Engages per spec only once two or
+    /// more distinct sessions feed it concurrently
+    /// ([`ExecPlanner::feed_lane_capacity`]); a lone streaming client
+    /// always keeps the direct scalar path. `microbatch = 0` disables
+    /// the feed lane too.
+    pub feed_lanes: bool,
+    /// Cap on per-request stream parallelism for native `SignatureGrad`:
+    /// the coordinator already serves requests concurrently (one caller
+    /// thread each), so uncapped `native_threads` here would multiply
+    /// into requests x cores scoped workers under load.
+    pub grad_stream_threads: usize,
+    /// Window of the planner's decayed shape-mix histogram.
+    pub mix_window: usize,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig {
+            microbatch: crate::exec::LANE_BLOCK,
+            adaptive: true,
+            feed_lanes: true,
+            grad_stream_threads: 4,
+            mix_window: 64,
+        }
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -95,21 +157,9 @@ pub struct CoordinatorConfig {
     pub linger: Duration,
     /// Threads for native batch work.
     pub native_threads: usize,
-    /// Native microbatch capacity: when `>= 2`, stateless `Signature`
-    /// requests that miss the XLA path are gathered by a dynamic batcher
-    /// (same `linger`), and a flushed microbatch of same-spec requests
-    /// runs as **one lane-fused sweep** ([`crate::ta::batch`]) instead of
-    /// N independent signatures — the CPU serving hot path for many short
-    /// streams at small `d`. Requests whose shapes differ batch
-    /// separately (the batcher keys on shape), so a ragged mix degrades
-    /// gracefully to per-shape microbatches. The standard dynamic-
-    /// batching trade applies (identical to the XLA path): an uncontended
-    /// request waits out the `linger` before its lone-row batch flushes,
-    /// buying throughput under concurrent load at the cost of idle-path
-    /// latency — latency-sensitive single-stream callers should set `0`
-    /// (disables microbatching: each request computes directly, no
-    /// linger) or shrink `linger`.
-    pub native_batch: usize,
+    /// Adaptive execution dispatch (strategy selection + microbatch
+    /// formation); see [`DispatchConfig`].
+    pub dispatch: DispatchConfig,
     /// Streaming-session knobs: table sharding, the resident-memory budget
     /// (`session.budget_bytes`, enforced by LRU eviction of idle
     /// sessions), and the idle TTL (`session.ttl`, enforced by a
@@ -124,7 +174,7 @@ impl Default for CoordinatorConfig {
             prefer_xla: true,
             linger: Duration::from_millis(2),
             native_threads: crate::substrate::pool::default_threads(),
-            native_batch: crate::signature::LANE_BLOCK,
+            dispatch: DispatchConfig::default(),
             session: SessionConfig::default(),
         }
     }
@@ -134,6 +184,20 @@ impl CoordinatorConfig {
     /// A native-only configuration (no artifacts, no PJRT).
     pub fn native_only() -> Self {
         CoordinatorConfig { artifact_dir: None, prefer_xla: false, ..Default::default() }
+    }
+
+    /// Compatibility alias for the pre-planner `native_batch` knob: sets
+    /// the microbatch capacity ceiling ([`DispatchConfig::microbatch`]).
+    /// `0` keeps its documented meaning — native microbatching (and the
+    /// feed lane) fully disabled, no linger on any native request.
+    pub fn with_native_batch(mut self, native_batch: usize) -> Self {
+        self.dispatch.microbatch = native_batch;
+        self
+    }
+
+    /// The effective `native_batch` value (compatibility accessor).
+    pub fn native_batch(&self) -> usize {
+        self.dispatch.microbatch
     }
 }
 
@@ -187,34 +251,61 @@ impl BatchBackend for XlaBackend {
 /// [`crate::signature::signature`] call.
 struct NativeLaneBackend {
     threads: usize,
+    planner: Arc<ExecPlanner>,
+    metrics: Arc<Metrics>,
 }
 
 impl BatchBackend for NativeLaneBackend {
     fn run(&self, shape: &BatchShape, padded: &[f32], n_real: usize) -> anyhow::Result<Vec<f32>> {
+        use std::sync::atomic::Ordering;
         anyhow::ensure!(shape.kind == KIND_SIG_NATIVE, "unexpected native batch kind");
         let spec = SigSpec::new(shape.d, shape.depth)?;
-        // No static-shape constraint here: compute only the real rows
-        // (a sparse flush must not pay for the padding slots). A lone-row
-        // flush runs serially — signature_batch's batch-1 fallback would
-        // otherwise engage the chunked stream reduction on long streams,
-        // and a request's bits must not depend on whether traffic
-        // happened to coalesce with it.
+        // No static-shape constraint here: compute only the real rows (a
+        // sparse flush must not pay for the padding slots). The plan comes
+        // from the execution planner; a lone-row flush is guaranteed the
+        // scalar reference sweep — a request's bits must not depend on
+        // whether traffic happened to coalesce with it.
         let rows = n_real.clamp(1, shape.batch);
-        let threads = if rows == 1 { 1 } else { self.threads };
-        signature_batch(&padded[..rows * shape.in_row()], rows, shape.length, &spec, threads)
+        let work =
+            WorkShape { batch: rows, points: shape.length, d: shape.d, depth: shape.depth };
+        let plan = self.planner.plan_native_flush(rows, &work);
+        match plan {
+            ExecPlan::Scalar => self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed),
+            ExecPlan::StreamParallel { .. } => {
+                self.metrics.dispatch_stream_parallel.fetch_add(1, Ordering::Relaxed)
+            }
+            ExecPlan::LaneFused { .. } => {
+                self.metrics.dispatch_lane_fused.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        let cfg = SigConfig { threads: self.threads, ..SigConfig::serial() };
+        signature_batch_planned(
+            &padded[..rows * shape.in_row()],
+            rows,
+            shape.length,
+            &spec,
+            &cfg,
+            plan,
+        )
     }
 }
 
-/// The coordinator: router + batchers + sessions + metrics.
+/// The coordinator: router + batchers + sessions + planner + metrics.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     registry: Option<Arc<Registry>>,
     engine: Option<EngineHandle>,
     batcher: Option<Batcher>,
     /// Lane-fused microbatcher for native signature requests
-    /// ([`CoordinatorConfig::native_batch`]).
+    /// ([`DispatchConfig::microbatch`]).
     native_batcher: Option<Batcher>,
-    sessions: SessionManager,
+    /// Lane-fused batcher for stateful session feeds
+    /// ([`DispatchConfig::feed_lanes`]).
+    feed_lane: Option<FeedLane>,
+    sessions: Arc<SessionManager>,
+    /// The execution planner: strategy selection plus the observed
+    /// shape-mix histogram all native dispatch flows through.
+    planner: Arc<ExecPlanner>,
     metrics: Arc<Metrics>,
     plans: Mutex<HashMap<(usize, usize), Arc<LogSigPlan>>>,
 }
@@ -222,6 +313,10 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
         let metrics = Arc::new(Metrics::default());
+        let planner = Arc::new(ExecPlanner::with_mix_window(
+            cfg.native_threads,
+            cfg.dispatch.mix_window,
+        ));
         let (registry, engine, batcher) = match &cfg.artifact_dir {
             Some(dir) if dir.join("MANIFEST.json").exists() => {
                 let (engine, registry) = EngineHandle::spawn(dir.clone())?;
@@ -235,21 +330,37 @@ impl Coordinator {
             }
             _ => (None, None, None),
         };
-        let native_batcher = if cfg.native_batch >= 2 {
+        let native_batcher = if cfg.dispatch.microbatch >= 2 {
             Some(Batcher::new(
-                Arc::new(NativeLaneBackend { threads: cfg.native_threads }),
+                Arc::new(NativeLaneBackend {
+                    threads: cfg.native_threads,
+                    planner: Arc::clone(&planner),
+                    metrics: Arc::clone(&metrics),
+                }),
                 Arc::clone(&metrics),
                 cfg.linger,
             ))
         } else {
             None
         };
+        let sessions =
+            Arc::new(SessionManager::with_config(Arc::clone(&metrics), cfg.session.clone()));
+        // The feed lane rides the same escape hatch as the microbatcher:
+        // `microbatch = 0` (the old `native_batch = 0`) means no native
+        // request of any kind ever waits out a linger.
+        let feed_lane = if cfg.dispatch.feed_lanes && cfg.dispatch.microbatch >= 2 {
+            Some(FeedLane::new(Arc::clone(&sessions), cfg.linger))
+        } else {
+            None
+        };
         Ok(Coordinator {
-            sessions: SessionManager::with_config(Arc::clone(&metrics), cfg.session.clone()),
+            sessions,
             registry,
             engine,
             batcher,
             native_batcher,
+            feed_lane,
+            planner,
             metrics,
             cfg,
             plans: Mutex::new(HashMap::new()),
@@ -262,6 +373,19 @@ impl Coordinator {
 
     pub fn sessions(&self) -> &SessionManager {
         &self.sessions
+    }
+
+    /// The coordinator's execution planner (strategy decisions + the
+    /// observed shape mix).
+    pub fn planner(&self) -> &ExecPlanner {
+        &self.planner
+    }
+
+    /// Refresh the shape-mix gauge from the planner's histogram.
+    fn publish_shape_mix(&self) {
+        self.metrics
+            .shape_mix_shapes
+            .store(self.planner.mix().distinct() as u64, std::sync::atomic::Ordering::Relaxed);
     }
 
     pub fn has_xla(&self) -> bool {
@@ -310,11 +434,13 @@ impl Coordinator {
         result
     }
 
-    fn route(&self, req: Request) -> anyhow::Result<Response> {
+    fn route(&self, mut req: Request) -> anyhow::Result<Response> {
         use std::sync::atomic::Ordering;
         // Streaming (stateful) requests: served by the session table on
-        // the native engine, never batched.
-        if let Some(resp) = self.route_stream(&req)? {
+        // the native engine, never batched. (`&mut` so the feed lane can
+        // move the point buffer out instead of cloning it; stateless
+        // requests pass through untouched.)
+        if let Some(resp) = self.route_stream(&mut req)? {
             return Ok(resp);
         }
         // Try the XLA path when configured and an artifact matches.
@@ -385,14 +511,28 @@ impl Coordinator {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
-                if let Some(nb) = &self.native_batcher {
+                // Every native signature shape is recorded into the
+                // planner's mix; the planner then quotes this shape's
+                // microbatch capacity (its base ceiling when adaptation
+                // is off). Capacity 1 = serve directly, no linger.
+                let key = ShapeKey::signature(d, depth, stream);
+                self.planner.record_shape(key);
+                self.publish_shape_mix();
+                let capacity = match &self.native_batcher {
+                    Some(_) if self.cfg.dispatch.adaptive => {
+                        self.planner.microbatch_capacity(self.cfg.dispatch.microbatch, key)
+                    }
+                    Some(_) => self.cfg.dispatch.microbatch,
+                    None => 0,
+                };
+                if let (Some(nb), true) = (&self.native_batcher, capacity >= 2) {
                     // Lane-fused microbatching: same-spec requests gathered
                     // within the linger window execute as one interleaved
                     // sweep; the result per row is bitwise identical to a
                     // stand-alone signature call.
                     let shape = BatchShape {
                         kind: KIND_SIG_NATIVE,
-                        batch: self.cfg.native_batch,
+                        batch: capacity,
                         length: stream,
                         d,
                         depth,
@@ -406,6 +546,10 @@ impl Coordinator {
                     self.metrics.native_requests.fetch_add(1, Ordering::Relaxed);
                     return Ok(Response { values, backend: Backend::Native, session: None });
                 }
+                // Direct dispatch (microbatching disabled, or the shape is
+                // too rare to find batch peers): the scalar reference
+                // sweep, bitwise identical to a microbatched lone row.
+                self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
                 signature_with(&path, stream, &spec, &SigConfig::serial())?
             }
             Request::LogSignature { path, stream, d, depth } => {
@@ -416,13 +560,32 @@ impl Coordinator {
             }
             Request::SignatureGrad { path, stream, d, depth, cotangent } => {
                 let spec = SigSpec::new(d, depth)?;
-                // Shape validation happens inside the VJP; long streams run
-                // the chunked Chen-identity backward. Per-request stream
-                // parallelism is capped: the coordinator already serves
-                // requests concurrently (one caller thread each), so
-                // uncapped native_threads here would multiply into
-                // requests × cores scoped workers under load.
-                let threads = self.cfg.native_threads.min(4);
+                // Shape validation happens inside the VJP. Per-request
+                // stream parallelism is capped by the dispatch config: the
+                // coordinator already serves requests concurrently (one
+                // caller thread each), so uncapped native_threads here
+                // would multiply into requests x cores scoped workers
+                // under load. Within that budget the planner decides
+                // whether the chunked Chen-identity backward engages.
+                let threads =
+                    self.cfg.native_threads.min(self.cfg.dispatch.grad_stream_threads.max(1));
+                // This plan is derived for the dispatch counter only; the
+                // VJP re-derives the identical plan internally. The two
+                // agree because this request carries no basepoint/initial
+                // (effective points == stream) and both use `threads`.
+                let plan = ExecPlanner::new(threads).plan_backward(&WorkShape {
+                    batch: 1,
+                    points: stream,
+                    d,
+                    depth,
+                });
+                match plan {
+                    ExecPlan::StreamParallel { .. } => self
+                        .metrics
+                        .dispatch_stream_parallel
+                        .fetch_add(1, Ordering::Relaxed),
+                    _ => self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed),
+                };
                 let cfg = SigConfig { threads, ..SigConfig::serial() };
                 signature_vjp_with(&path, stream, &spec, &cfg, &cotangent)?.grad_path
             }
@@ -437,8 +600,8 @@ impl Coordinator {
     }
 
     /// Serve a streaming request against the session table; `Ok(None)` for
-    /// stateless requests (which fall through to the backends).
-    fn route_stream(&self, req: &Request) -> anyhow::Result<Option<Response>> {
+    /// stateless requests (which fall through to the backends, untouched).
+    fn route_stream(&self, req: &mut Request) -> anyhow::Result<Option<Response>> {
         // Classify exhaustively (no catch-all): a new Request variant must
         // be consciously filed as stateless here or handled below.
         match req {
@@ -459,7 +622,7 @@ impl Coordinator {
         let (values, session) = match req {
             Request::OpenStream { points, stream, d, depth } => {
                 let spec = SigSpec::new(*d, *depth)?;
-                anyhow::ensure!(points.len() == stream * d, "bad point buffer");
+                anyhow::ensure!(points.len() == *stream * *d, "bad point buffer");
                 // One call returning both id and seed signature: a racing
                 // eviction after the insert must not turn a successful
                 // open into an "unknown session" error.
@@ -467,7 +630,36 @@ impl Coordinator {
                 (sig, Some(id))
             }
             Request::Feed { session, points, count } => {
-                (self.sessions.feed(*session, points, *count)?, Some(*session))
+                let sig = if let Some(lane) = &self.feed_lane {
+                    // Resolve the session's spec first: an unknown session
+                    // errors here instead of after a linger, and the spec
+                    // keys the lane group. The planner only opens a lane
+                    // once >= 2 distinct sessions feed this spec; a lone
+                    // feeder gets capacity 1 and stays on the direct
+                    // scalar path (no linger — feeds are latency-direct
+                    // by default).
+                    let spec = self.sessions.session_spec(*session)?;
+                    let key = (spec.d(), spec.depth());
+                    let capacity = self.planner.feed_lane_capacity(
+                        self.cfg.dispatch.microbatch,
+                        ShapeKey::feed(spec.d(), spec.depth()),
+                        session.0,
+                    );
+                    self.publish_shape_mix();
+                    if capacity >= 2 {
+                        // Move the payload into the lane (no copy; this
+                        // request is consumed by the streaming path).
+                        let points = std::mem::take(points);
+                        let rx = lane.submit(key, capacity, *session, points, *count)?;
+                        rx.recv()
+                            .map_err(|_| anyhow::anyhow!("feed lane dropped request"))??
+                    } else {
+                        self.sessions.feed(*session, points, *count)?
+                    }
+                } else {
+                    self.sessions.feed(*session, points, *count)?
+                };
+                (sig, Some(*session))
             }
             Request::QueryInterval { session, i, j } => {
                 (self.sessions.query(*session, *i, *j)?, Some(*session))
@@ -481,7 +673,17 @@ impl Coordinator {
                 (out, Some(*session))
             }
             Request::CloseStream { session } => {
+                // Resolve the spec before the close so the planner can
+                // drop this session from the spec's feeder ring: a
+                // surviving lone feeder must fall back to the direct path
+                // on its next feed, not after the closed peer ages out of
+                // the recency window.
+                let spec = self.sessions.session_spec(*session).ok();
                 self.sessions.close(*session)?;
+                if let Some(spec) = spec {
+                    self.planner
+                        .forget_feeder(ShapeKey::feed(spec.d(), spec.depth()), session.0);
+                }
                 (Vec::new(), Some(*session))
             }
             Request::Signature { .. }
@@ -759,7 +961,9 @@ mod tests {
             engine: None,
             batcher: Some(batcher),
             native_batcher: None,
-            sessions: SessionManager::new(Arc::clone(&metrics)),
+            feed_lane: None,
+            sessions: Arc::new(SessionManager::new(Arc::clone(&metrics))),
+            planner: Arc::new(ExecPlanner::new(2)),
             metrics,
             plans: Mutex::new(HashMap::new()),
         };
@@ -785,14 +989,17 @@ mod tests {
         // Six concurrent same-spec requests inside one linger window must
         // execute as ONE lane-fused microbatch (metrics: 1 batch, 6 real
         // rows), each caller receiving the bitwise per-path signature.
-        let c = Coordinator::new(CoordinatorConfig {
-            native_batch: 8,
-            // Generous linger: all six caller threads must land in one
-            // pending batch even if thread spawn stalls; the batch never
-            // fills (6 < 8), so the flusher fires it at the deadline.
-            linger: Duration::from_millis(250),
-            ..CoordinatorConfig::native_only()
-        })
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                // Generous linger: all six caller threads must land in one
+                // pending batch even if thread spawn stalls; the batch
+                // never fills (6 < 8), so the flusher fires it at the
+                // deadline.
+                linger: Duration::from_millis(250),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
         .unwrap();
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(12);
@@ -819,11 +1026,13 @@ mod tests {
         // A ragged mix (different stream lengths) cannot share a lane
         // sweep: the batcher keys on shape, so each shape flushes as its
         // own microbatch and every caller still gets its exact result.
-        let c = Coordinator::new(CoordinatorConfig {
-            native_batch: 8,
-            linger: Duration::from_millis(10),
-            ..CoordinatorConfig::native_only()
-        })
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(10),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
         .unwrap();
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(13);
@@ -841,20 +1050,154 @@ mod tests {
     }
 
     #[test]
-    fn native_batching_disabled_serves_directly() {
-        let c = Coordinator::new(CoordinatorConfig {
-            native_batch: 0,
-            ..CoordinatorConfig::native_only()
-        })
+    fn native_batch_zero_escape_hatch_survives_the_planner() {
+        // Regression: the documented `native_batch = 0` escape hatch must
+        // keep its meaning through the adaptive planner — every native
+        // request (stateless *and* streaming feed) computes directly,
+        // never waiting out a linger. The linger is set absurdly high so
+        // any accidental batcher involvement trips the wall-clock bound.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_secs(30),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(0),
+        )
         .unwrap();
+        assert_eq!(c.cfg.native_batch(), 0, "compatibility accessor");
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(14);
         let path = rng.normal_vec(6 * 2, 0.4);
+        let t0 = Instant::now();
         let resp = c
             .call(Request::Signature { path: path.clone(), stream: 6, d: 2, depth: 3 })
             .unwrap();
         assert_eq!(resp.values, signature(&path, 6, &spec));
-        assert_eq!(c.metrics().snapshot().batches, 0, "no microbatching when disabled");
+        // Streaming feeds bypass the feed lane too.
+        let open = c
+            .call(Request::OpenStream {
+                points: rng.normal_vec(4 * 2, 0.3),
+                stream: 4,
+                d: 2,
+                depth: 3,
+            })
+            .unwrap();
+        let sid = open.session.unwrap();
+        c.call(Request::Feed { session: sid, points: rng.normal_vec(2 * 2, 0.3), count: 2 })
+            .unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "direct dispatch must never wait out the linger"
+        );
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.batches, 0, "no microbatching when disabled");
+        assert_eq!(snap.feed_lane_batches, 0, "no feed lane when disabled");
+        assert!(snap.dispatch_scalar >= 2, "direct requests count as scalar dispatch");
+    }
+
+    #[test]
+    fn adaptive_dispatch_rare_shapes_skip_the_linger() {
+        // After warm-up, a shape that is a sliver of recent traffic gets
+        // capacity 1 from the planner: it executes directly (no batcher,
+        // no linger) while the dominant shape keeps microbatching.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(1),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(16),
+        )
+        .unwrap();
+        let mut rng = Rng::new(15);
+        // Warm the mix with a dominant shape (sequential lone requests:
+        // each lingers ~1ms and flushes as its own one-row batch).
+        for _ in 0..24 {
+            c.call(Request::Signature {
+                path: rng.normal_vec(8 * 2, 0.4),
+                stream: 8,
+                d: 2,
+                depth: 3,
+            })
+            .unwrap();
+        }
+        let batches_before = c.metrics().snapshot().batches;
+        assert!(batches_before > 0, "dominant shape goes through the microbatcher");
+        // A rare shape (1 of ~25 recent, share < 1/16) now serves direct.
+        let scalar_before = c.metrics().snapshot().dispatch_scalar;
+        let rare = rng.normal_vec(9 * 3, 0.4);
+        let spec = SigSpec::new(3, 4).unwrap();
+        let resp = c
+            .call(Request::Signature { path: rare.clone(), stream: 9, d: 3, depth: 4 })
+            .unwrap();
+        assert_eq!(resp.values, signature(&rare, 9, &spec), "direct path is still exact");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.batches, batches_before, "rare shape must not enter the batcher");
+        assert!(snap.dispatch_scalar > scalar_before);
+        assert!(snap.shape_mix_shapes >= 2, "the mix gauge sees both shapes");
+    }
+
+    #[test]
+    fn feed_lane_coalesces_cross_session_feeds_bitwise() {
+        // Two sessions streaming the same spec: once the planner has seen
+        // both, their concurrent feeds coalesce into one lane-fused
+        // Path::update_batch sweep — and every returned signature is
+        // bitwise identical to scalar feeding the same points.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(250),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(16),
+        )
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(16);
+        let seed_a = rng.normal_vec(4 * 2, 0.3);
+        let seed_b = rng.normal_vec(4 * 2, 0.3);
+        let sid_a = c
+            .call(Request::OpenStream { points: seed_a.clone(), stream: 4, d: 2, depth: 3 })
+            .unwrap()
+            .session
+            .unwrap();
+        let sid_b = c
+            .call(Request::OpenStream { points: seed_b.clone(), stream: 4, d: 2, depth: 3 })
+            .unwrap()
+            .session
+            .unwrap();
+        // Scalar twins for the bitwise oracle.
+        let twin = SessionManager::new(Arc::new(Metrics::default()));
+        let tid_a = twin.open(&spec, &seed_a, 4).unwrap();
+        let tid_b = twin.open(&spec, &seed_b, 4).unwrap();
+        // Round 1 (sequential): teaches the planner this spec has two
+        // distinct feeders; lone feeds stay scalar and direct.
+        let warm_a = rng.normal_vec(2 * 2, 0.3);
+        let warm_b = rng.normal_vec(3 * 2, 0.3);
+        let r_a = c
+            .call(Request::Feed { session: sid_a, points: warm_a.clone(), count: 2 })
+            .unwrap();
+        let r_b = c
+            .call(Request::Feed { session: sid_b, points: warm_b.clone(), count: 3 })
+            .unwrap();
+        assert_eq!(r_a.values, twin.feed(tid_a, &warm_a, 2).unwrap());
+        assert_eq!(r_b.values, twin.feed(tid_b, &warm_b, 3).unwrap());
+        // Round 2 (concurrent, ragged counts): both feeds enter the lane
+        // and flush as ONE fused sweep.
+        let chunk_a = rng.normal_vec(3 * 2, 0.3);
+        let chunk_b = rng.normal_vec(2, 0.3);
+        let resps = c.call_many(vec![
+            Request::Feed { session: sid_a, points: chunk_a.clone(), count: 3 },
+            Request::Feed { session: sid_b, points: chunk_b.clone(), count: 1 },
+        ]);
+        let want_a = twin.feed(tid_a, &chunk_a, 3).unwrap();
+        let want_b = twin.feed(tid_b, &chunk_b, 1).unwrap();
+        assert_eq!(resps[0].as_ref().unwrap().values, want_a, "lane feed != scalar feed");
+        assert_eq!(resps[1].as_ref().unwrap().values, want_b, "lane feed != scalar feed");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.feed_lane_batches, 1, "concurrent same-spec feeds share one sweep");
+        // Later interval queries agree bitwise too: the fused sweep left
+        // identical precomputed state behind.
+        let q = c.call(Request::QueryInterval { session: sid_a, i: 1, j: 8 }).unwrap();
+        assert_eq!(q.values, twin.query(tid_a, 1, 8).unwrap());
     }
 
     #[test]
@@ -862,11 +1205,9 @@ mod tests {
         // stream < 2 and short buffers must reach the caller as Err on
         // every native forward surface — batched and direct alike.
         for native_batch in [0usize, 8] {
-            let c = Coordinator::new(CoordinatorConfig {
-                native_batch,
-                ..CoordinatorConfig::native_only()
-            })
-            .unwrap();
+            let c =
+                Coordinator::new(CoordinatorConfig::native_only().with_native_batch(native_batch))
+                    .unwrap();
             assert!(c
                 .call(Request::Signature { path: vec![0.0; 2], stream: 1, d: 2, depth: 3 })
                 .is_err());

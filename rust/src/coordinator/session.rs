@@ -143,8 +143,11 @@ impl Inner {
             .store(self.resident.load(Ordering::Relaxed) as u64, Ordering::Relaxed);
     }
 
-    /// Enforce the byte budget after `exclude` was touched, evicting idle
-    /// sessions in LRU order until the resident total fits.
+    /// Enforce the byte budget after the `exclude` sessions were touched,
+    /// evicting idle sessions in LRU order until the resident total fits
+    /// (`exclude` is one id for a scalar open/feed, the whole group for a
+    /// lane-fused feed batch — none of the sessions just served may be
+    /// evicted by their own enforcement).
     ///
     /// One scan per pass: candidates are snapshotted and sorted by touch
     /// once, then evicted down the list — O(N log N) per enforcement, not
@@ -154,14 +157,14 @@ impl Inner {
     /// outer loop re-scans only when this pass evicted something yet the
     /// table is still over budget (so it terminates: each pass shrinks
     /// the table or ends the loop).
-    fn enforce_budget(&self, exclude: u64) {
+    fn enforce_budget(&self, exclude: &[u64]) {
         if let Some(budget) = self.cfg.budget_bytes {
             while self.resident.load(Ordering::Relaxed) > budget {
                 let mut cands: Vec<(u64, u64)> = vec![];
                 for shard in &self.shards {
                     let guard = shard.lock().unwrap();
                     for (&id, sess) in guard.iter() {
-                        if id != exclude {
+                        if !exclude.contains(&id) {
                             cands.push((sess.touch.load(Ordering::Relaxed), id));
                         }
                     }
@@ -318,7 +321,7 @@ impl SessionManager {
         self.inner.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
         self.inner.metrics.open_sessions.fetch_add(1, Ordering::Relaxed);
         self.inner.shard(id.0).lock().unwrap().insert(id.0, sess);
-        self.inner.enforce_budget(id.0);
+        self.inner.enforce_budget(&[id.0]);
         Ok((id, sig))
     }
 
@@ -340,8 +343,160 @@ impl SessionManager {
         };
         self.inner.touch(&sess);
         self.inner.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
-        self.inner.enforce_budget(id.0);
+        self.inner.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
+        self.inner.enforce_budget(&[id.0]);
         Ok(sig)
+    }
+
+    /// Feed several sessions in one call, lane-fusing same-spec groups —
+    /// the stateful analogue of the router's signature microbatch, backed
+    /// by [`Path::update_batch`]. Returns one result per feed, in order;
+    /// each is the whole-stream signature so far, **bitwise identical**
+    /// to what a scalar [`SessionManager::feed`] of the same points would
+    /// have returned (lanes replay the scalar op order). Failures are
+    /// per-feed: an unknown/evicted session or malformed buffer errors
+    /// its own entry while the rest of the group proceeds.
+    ///
+    /// A session appearing more than once is served its feeds in order
+    /// (occurrence k runs in wave k), so coalescing cannot reorder one
+    /// stream's points. Path locks are taken in ascending session-id
+    /// order, so two overlapping batch feeds cannot deadlock.
+    pub fn feed_batch(
+        &self,
+        feeds: Vec<(SessionId, Vec<f32>, usize)>,
+    ) -> Vec<anyhow::Result<Vec<f32>>> {
+        let n = feeds.len();
+        let mut results: Vec<Option<anyhow::Result<Vec<f32>>>> = (0..n).map(|_| None).collect();
+        // Wave-partition duplicates: occurrence k of a session id lands in
+        // wave k, and waves run sequentially.
+        let mut waves: Vec<Vec<usize>> = vec![];
+        for idx in 0..n {
+            let sid = feeds[idx].0;
+            match waves.iter_mut().find(|w| w.iter().all(|&j| feeds[j].0 != sid)) {
+                Some(w) => w.push(idx),
+                None => waves.push(vec![idx]),
+            }
+        }
+        for wave in &waves {
+            self.feed_wave(&feeds, wave, &mut results);
+        }
+        let touched: Vec<u64> = feeds.iter().map(|f| f.0 .0).collect();
+        self.inner.enforce_budget(&touched);
+        results.into_iter().map(|r| r.expect("every feed resolved")).collect()
+    }
+
+    /// One wave of [`SessionManager::feed_batch`]: at most one feed per
+    /// session.
+    fn feed_wave(
+        &self,
+        feeds: &[(SessionId, Vec<f32>, usize)],
+        wave: &[usize],
+        results: &mut [Option<anyhow::Result<Vec<f32>>>],
+    ) {
+        // Resolve sessions; unknown ids error individually.
+        let mut resolved: Vec<(usize, Arc<Session>)> = vec![];
+        for &idx in wave {
+            match self.inner.get(feeds[idx].0) {
+                Ok(sess) => {
+                    // Touch at start as well as completion, like a scalar
+                    // feed: in-flight work must not look idle to LRU/TTL.
+                    self.inner.touch(&sess);
+                    resolved.push((idx, sess));
+                }
+                Err(e) => results[idx] = Some(Err(e)),
+            }
+        }
+        // Lock paths in ascending session-id order: concurrent batch
+        // feeds over overlapping session sets then acquire in the same
+        // global order and cannot deadlock.
+        resolved.sort_by_key(|(idx, _)| feeds[*idx].0 .0);
+        let mut locked: Vec<(usize, std::sync::MutexGuard<'_, Path>)> = vec![];
+        for (idx, sess) in &resolved {
+            let guard = sess.path.lock().unwrap();
+            if sess.evicted.load(Ordering::Relaxed) {
+                results[*idx] =
+                    Some(Err(anyhow::anyhow!("session {:?} was evicted", feeds[*idx].0)));
+                continue;
+            }
+            // Per-lane validation up front, so one malformed feed errors
+            // alone instead of failing its whole lane group.
+            let (_, points, count) = &feeds[*idx];
+            let d = guard.spec().d();
+            if *count < 1 {
+                results[*idx] = Some(Err(anyhow::anyhow!("no points to add")));
+                continue;
+            }
+            if points.len() != count * d {
+                results[*idx] = Some(Err(anyhow::anyhow!(
+                    "feed buffer has {} values, expected count({count}) * channels({d})",
+                    points.len()
+                )));
+                continue;
+            }
+            locked.push((*idx, guard));
+        }
+        // Group same-spec lanes into contiguous runs (the feed lane keys
+        // submissions by spec, so this is normally one run; a mixed batch
+        // still lane-fuses per spec).
+        locked.sort_by_key(|(_, g)| (g.spec().d(), g.spec().depth()));
+        let mut start = 0usize;
+        while start < locked.len() {
+            let key = {
+                let s = locked[start].1.spec();
+                (s.d(), s.depth())
+            };
+            let mut end = start + 1;
+            while end < locked.len() {
+                let s = locked[end].1.spec();
+                if (s.d(), s.depth()) != key {
+                    break;
+                }
+                end += 1;
+            }
+            let run = &mut locked[start..end];
+            let idxs: Vec<usize> = run.iter().map(|(idx, _)| *idx).collect();
+            let outcome = {
+                let mut paths: Vec<&mut Path> = run.iter_mut().map(|(_, g)| &mut **g).collect();
+                let slices: Vec<&[f32]> = idxs.iter().map(|&i| feeds[i].1.as_slice()).collect();
+                let counts: Vec<usize> = idxs.iter().map(|&i| feeds[i].2).collect();
+                Path::update_batch(&mut paths, &slices, &counts)
+            };
+            match outcome {
+                Ok(()) => {
+                    if idxs.len() >= 2 {
+                        self.inner.metrics.feed_lane_batches.fetch_add(1, Ordering::Relaxed);
+                        self.inner.metrics.dispatch_lane_fused.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.inner.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
+                    }
+                    for (idx, guard) in run.iter() {
+                        // Accounting under this path's lock, exactly like
+                        // a scalar feed: `update` only appends, so storage
+                        // can only have grown.
+                        let (_, sess) = resolved
+                            .iter()
+                            .find(|(ri, _)| ri == idx)
+                            .expect("locked lane was resolved");
+                        let new_bytes = guard.storage_bytes();
+                        let old_bytes = sess.bytes.swap(new_bytes, Ordering::Relaxed);
+                        self.inner.resident.fetch_add(new_bytes - old_bytes, Ordering::Relaxed);
+                        self.inner.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
+                        results[*idx] = Some(Ok(guard.signature()));
+                    }
+                }
+                Err(e) => {
+                    for &idx in &idxs {
+                        results[idx] = Some(Err(anyhow::anyhow!("lane-fused feed failed: {e}")));
+                    }
+                }
+            }
+            start = end;
+        }
+        drop(locked);
+        // Completion touches (LRU order reflects the work just done).
+        for (_, sess) in &resolved {
+            self.inner.touch(sess);
+        }
     }
 
     /// O(1) interval query against a session's stream.
@@ -509,6 +664,148 @@ mod tests {
             })
             .unwrap();
         assert_eq!(lq, lq2);
+    }
+
+    #[test]
+    fn feed_batch_matches_scalar_feeds_bitwise() {
+        use crate::substrate::propcheck::property;
+        // Serving contract: coalescing same-spec feeds into one lane-fused
+        // sweep must not change any session's bits — returned signatures,
+        // later queries, and the resident-byte accounting all match a
+        // manager fed scalar, feed for feed (ragged counts included).
+        property("feed_batch == scalar feeds bitwise", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let lanes = g.usize_in(2, 5);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let fused = mgr();
+            let scalar = mgr();
+            let mut ids = vec![];
+            for _ in 0..lanes {
+                let seed_len = g.usize_in(2, 6);
+                let pts = g.normal_vec(seed_len * d, 0.3);
+                let fid = fused.open(&spec, &pts, seed_len).unwrap();
+                let sid = scalar.open(&spec, &pts, seed_len).unwrap();
+                ids.push((fid, sid));
+            }
+            for _ in 0..3 {
+                let feeds: Vec<(SessionId, Vec<f32>, usize)> = ids
+                    .iter()
+                    .map(|&(fid, _)| {
+                        let count = g.usize_in(1, 6);
+                        (fid, g.normal_vec(count * d, 0.3), count)
+                    })
+                    .collect();
+                let got = fused.feed_batch(feeds.clone());
+                for (k, ((_, sid), (_, pts, count))) in ids.iter().zip(&feeds).enumerate() {
+                    let want = scalar.feed(*sid, pts, *count).unwrap();
+                    assert_eq!(
+                        got[k].as_ref().unwrap(),
+                        &want,
+                        "lane {k} signature diverged from scalar feed"
+                    );
+                }
+            }
+            for &(fid, sid) in &ids {
+                let len = fused.session_len(fid).unwrap();
+                assert_eq!(len, scalar.session_len(sid).unwrap());
+                assert_eq!(
+                    fused.query(fid, 1, len - 1).unwrap(),
+                    scalar.query(sid, 1, len - 1).unwrap(),
+                    "post-feed interval query diverged"
+                );
+            }
+            assert_eq!(fused.resident_bytes(), scalar.resident_bytes());
+        });
+    }
+
+    #[test]
+    fn feed_batch_isolates_errors_and_orders_duplicates() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let metrics = Arc::new(Metrics::default());
+        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default());
+        let twin = mgr();
+        let mut rng = Rng::new(31);
+        let seed = rng.normal_vec(4 * 2, 0.3);
+        let a = m.open(&spec, &seed, 4).unwrap();
+        let b = m.open(&spec, &seed, 4).unwrap();
+        let ta = twin.open(&spec, &seed, 4).unwrap();
+        let chunk1 = rng.normal_vec(3 * 2, 0.3);
+        let chunk2 = rng.normal_vec(2 * 2, 0.3);
+        let good_b = rng.normal_vec(2 * 2, 0.3);
+        // One batch: a fed twice (must apply in order), b with a malformed
+        // buffer, plus an unknown session — failures stay individual.
+        let results = m.feed_batch(vec![
+            (a, chunk1.clone(), 3),
+            (b, vec![0.0; 3], 2), // wrong buffer length
+            (a, chunk2.clone(), 2),
+            (SessionId(9999), good_b.clone(), 2), // unknown
+        ]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+        assert!(results[3].is_err());
+        // a saw chunk1 then chunk2, exactly like two scalar feeds.
+        twin.feed(ta, &chunk1, 3).unwrap();
+        let want = twin.feed(ta, &chunk2, 2).unwrap();
+        assert_eq!(results[2].as_ref().unwrap(), &want);
+        assert_eq!(m.session_len(a).unwrap(), 9);
+        // b is untouched by its failed feed.
+        assert_eq!(m.session_len(b).unwrap(), 4);
+        // The failed lanes never corrupt accounting: b can still be fed.
+        assert!(m.feed(b, &good_b, 2).is_ok());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.session_updates, 3, "two batched feeds on a + one scalar on b");
+    }
+
+    #[test]
+    fn feed_batch_closed_lane_errors_while_group_proceeds() {
+        // The mid-feed eviction story: a session leaving the table between
+        // submission and flush errors its own lane; the survivors' sweep
+        // still runs and stays bitwise-scalar.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let m = mgr();
+        let twin = mgr();
+        let mut rng = Rng::new(32);
+        let seed = rng.normal_vec(4 * 2, 0.3);
+        let alive = m.open(&spec, &seed, 4).unwrap();
+        let dead = m.open(&spec, &seed, 4).unwrap();
+        let talive = twin.open(&spec, &seed, 4).unwrap();
+        m.close(dead).unwrap();
+        let chunk = rng.normal_vec(3 * 2, 0.3);
+        let results =
+            m.feed_batch(vec![(alive, chunk.clone(), 3), (dead, chunk.clone(), 3)]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        let want = twin.feed(talive, &chunk, 3).unwrap();
+        assert_eq!(results[0].as_ref().unwrap(), &want);
+    }
+
+    #[test]
+    fn feed_batch_counts_feed_lane_metrics() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let metrics = Arc::new(Metrics::default());
+        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default());
+        let mut rng = Rng::new(33);
+        let ids: Vec<SessionId> = (0..3)
+            .map(|_| m.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap())
+            .collect();
+        let feeds: Vec<(SessionId, Vec<f32>, usize)> =
+            ids.iter().map(|&id| (id, rng.normal_vec(2 * 2, 0.3), 2)).collect();
+        for r in m.feed_batch(feeds) {
+            r.unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.feed_lane_batches, 1, "three same-spec lanes = one fused sweep");
+        assert_eq!(snap.dispatch_lane_fused, 1);
+        assert_eq!(snap.session_updates, 3);
+        // A single-lane batch is a scalar dispatch, not a lane sweep.
+        let solo = m.feed_batch(vec![(ids[0], rng.normal_vec(2 * 2, 0.3), 2)]);
+        assert!(solo[0].is_ok());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.feed_lane_batches, 1);
+        assert_eq!(snap.dispatch_scalar, 1);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! two training paths to each other.
 
 use crate::baselines::iisignature_like;
+use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
 use crate::signature::{
     signature, signature_batch, signature_batch_vjp, signature_vjp_with, signature_with, SigConfig,
 };
@@ -297,12 +298,17 @@ fn train_grads_lane_fused(
 
 /// One SGD step over a batch. Returns the mean loss.
 ///
-/// Fused backend at `threads <= batch`: the signature forward and VJP run
-/// **lane-fused** across the batch (one interleaved sweep per increment;
-/// see [`crate::ta::batch`]), with the MLP stages parallel over samples.
-/// With surplus threads (`threads > batch`) each sample instead runs the
-/// chunked Chen-identity stream-parallel forward/backward (App. C.3 plus
-/// the stream dimension). Both strategies produce the same update.
+/// The execution strategy for the signature forward/VJP — the dominant
+/// cost — comes from [`crate::exec::ExecPlanner`]: a lane-fused plan runs
+/// both **lane-fused** across the batch (one interleaved sweep per
+/// increment; see [`crate::ta::batch`]) with the MLP stages parallel over
+/// samples; a stream-parallel plan (surplus threads, `threads > batch`)
+/// runs each sample's chunked Chen-identity forward/backward (App. C.3
+/// plus the stream dimension); a scalar plan runs serial per-sample
+/// sweeps, parallel over the batch. Every strategy produces the same
+/// update (lane-fused is bitwise identical to per-sample dispatch). The
+/// Conventional backend ignores lane plans — the tape baseline has no
+/// lane kernels — and dispatches per sample.
 pub fn train_step(
     cfg: &ModelConfig,
     p: &mut Params,
@@ -315,26 +321,37 @@ pub fn train_step(
     let batch = y.len();
     let sample_len = x.len() / batch;
     let spec = SigSpec::new(cfg.d_out, cfg.depth).expect("valid spec");
-    // Surplus threads go to the stream dimension within each sample.
-    let sig_threads = (threads.max(1) / batch.max(1)).max(1);
-    let lane_fused = backend == SigBackend::Fused
-        && batch >= 2
-        && sig_threads == 1
-        && cfg.d_out <= 8;
-    let grads = if lane_fused {
-        train_grads_lane_fused(cfg, &spec, p, x, y, threads.max(1))
-    } else {
-        parallel_map_indexed(batch, threads, |b| {
-            sample_grad(
-                cfg,
-                &spec,
-                p,
-                &x[b * sample_len..(b + 1) * sample_len],
-                y[b],
-                backend,
-                sig_threads,
-            )
-        })
+    let planner = ExecPlanner::new(threads);
+    let plan = planner.plan_backward(&WorkShape {
+        batch,
+        points: sample_len / cfg.d_in,
+        d: cfg.d_out,
+        depth: cfg.depth,
+    });
+    let grads = match plan {
+        ExecPlan::LaneFused { .. } if backend == SigBackend::Fused => {
+            train_grads_lane_fused(cfg, &spec, p, x, y, planner.threads())
+        }
+        plan => {
+            // Stream parallelism inside each sample when the plan grants
+            // it (Fused backend only; the conventional tape baseline is
+            // inherently serial over the stream).
+            let sig_threads = match plan {
+                ExecPlan::StreamParallel { threads } => threads,
+                _ => 1,
+            };
+            parallel_map_indexed(batch, planner.threads(), |b| {
+                sample_grad(
+                    cfg,
+                    &spec,
+                    p,
+                    &x[b * sample_len..(b + 1) * sample_len],
+                    y[b],
+                    backend,
+                    sig_threads,
+                )
+            })
+        }
     };
     let scale = lr / batch as f32;
     let mut mean_loss = 0.0f32;

@@ -1,0 +1,319 @@
+//! Observed shape-mix histogram: the planner's memory of recent traffic.
+//!
+//! The serving layer records one [`ShapeKey`] per request; the histogram
+//! keeps exponentially decayed per-shape counts (halved whenever the total
+//! reaches twice the window, so old traffic fades instead of pinning the
+//! mix forever) plus, for the feed lane, a tiny ring of recently seen
+//! feeder sessions per spec. Both signals are deliberately coarse — they
+//! steer *batch formation* (how long to linger, how wide to open a lane),
+//! never numerical results.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Records before the adaptive capacity rules engage; below this the
+/// configured base capacity applies unchanged (no signal yet).
+pub const MIX_WARMUP: usize = 8;
+
+/// How many of a key's *own* feed records a feeder-ring entry stays
+/// "recent" for. Deliberately key-local: measured against global traffic,
+/// heavy stateless load would age out feed peers between rounds and turn
+/// the lane into a pure linger penalty for slow streams.
+const FEEDER_WINDOW: u64 = 64;
+
+/// Distinct feeder sessions remembered per spec key.
+const FEEDER_SLOTS: usize = 4;
+
+/// Identity of a request shape in the mix histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// 0 = stateless signature, 1 = session feed.
+    pub kind: u8,
+    pub d: usize,
+    pub depth: usize,
+    /// Points per request for stateless shapes (ragged lengths batch
+    /// separately, so capacity adapts per length too); 0 for feeds, whose
+    /// lane handles ragged point counts natively.
+    pub points: usize,
+}
+
+impl ShapeKey {
+    /// Key for a stateless signature request.
+    pub fn signature(d: usize, depth: usize, points: usize) -> ShapeKey {
+        ShapeKey { kind: 0, d, depth, points }
+    }
+
+    /// Key for a session feed (spec only; feeds are ragged by design).
+    pub fn feed(d: usize, depth: usize) -> ShapeKey {
+        ShapeKey { kind: 1, d, depth, points: 0 }
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct FeederSlot {
+    session: u64,
+    /// This key's feed tick at last sighting; 0 = empty (ticks start
+    /// at 1).
+    tick: u64,
+}
+
+#[derive(Default)]
+struct KeyStats {
+    /// Decayed request count.
+    count: u64,
+    /// Monotone count of this key's feed records (not decayed; drives
+    /// feeder recency, immune to unrelated traffic).
+    feed_tick: u64,
+    /// Recently seen feeder sessions (feed keys only).
+    feeders: [FeederSlot; FEEDER_SLOTS],
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Decayed total across keys (= Σ count).
+    total: u64,
+    stats: HashMap<ShapeKey, KeyStats>,
+}
+
+/// Concurrent decayed histogram of recent request shapes. All methods are
+/// O(1)-ish under one short mutex; recording is trivially cheap next to a
+/// signature computation.
+pub struct ShapeMix {
+    window: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Default for ShapeMix {
+    fn default() -> Self {
+        ShapeMix::new(64)
+    }
+}
+
+impl ShapeMix {
+    /// A histogram whose decayed total hovers around `window` (halved on
+    /// reaching `2 * window`).
+    pub fn new(window: usize) -> ShapeMix {
+        ShapeMix { window: window.max(MIX_WARMUP), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Record one request of `key`.
+    pub fn record(&self, key: ShapeKey) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.entry(key).or_default().count += 1;
+        inner.total += 1;
+        self.decay(&mut inner);
+    }
+
+    /// Record a feed of `key` by `session`; returns the number of distinct
+    /// sessions seen feeding this spec within the recency window
+    /// (including this one). Recency is measured in *this key's* feed
+    /// records, so unrelated traffic never ages out a slow stream's peer.
+    pub fn record_feeder(&self, key: ShapeKey, session: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let stats = inner.stats.entry(key).or_default();
+        stats.count += 1;
+        stats.feed_tick += 1;
+        let now = stats.feed_tick;
+        // Refresh this session's slot, or claim the stalest one.
+        let mut hit = None;
+        let mut stalest = 0usize;
+        for (i, slot) in stats.feeders.iter().enumerate() {
+            if slot.tick > 0 && slot.session == session {
+                hit = Some(i);
+                break;
+            }
+            if slot.tick < stats.feeders[stalest].tick {
+                stalest = i;
+            }
+        }
+        let idx = hit.unwrap_or(stalest);
+        stats.feeders[idx] = FeederSlot { session, tick: now };
+        let distinct = stats
+            .feeders
+            .iter()
+            .filter(|s| s.tick > 0 && now - s.tick <= FEEDER_WINDOW)
+            .count();
+        inner.total += 1;
+        self.decay(&mut inner);
+        distinct
+    }
+
+    /// Remove `session` from `key`'s feeder ring (the session closed; its
+    /// slot must not keep quoting lane capacity to survivors).
+    pub fn forget_feeder(&self, key: ShapeKey, session: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(stats) = inner.stats.get_mut(&key) {
+            for slot in stats.feeders.iter_mut() {
+                if slot.tick > 0 && slot.session == session {
+                    *slot = FeederSlot::default();
+                }
+            }
+        }
+    }
+
+    /// `(count(key), total)` over the decayed window.
+    pub fn count_and_total(&self, key: ShapeKey) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.stats.get(&key).map_or(0, |s| s.count), inner.total)
+    }
+
+    /// Number of distinct shapes currently in the window (the shape-mix
+    /// gauge the coordinator publishes).
+    pub fn distinct(&self) -> usize {
+        self.inner.lock().unwrap().stats.len()
+    }
+
+    /// Total decayed records (warm-up checks).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    fn decay(&self, inner: &mut Inner) {
+        if inner.total >= 2 * self.window as u64 {
+            // Halve with a floor of 1: a live shape never decays to a
+            // zero count, so an all-unique long tail cannot collapse the
+            // total and bounce the planner back into warm-up (which would
+            // make rare shapes linger again — the exact latency adaptive
+            // dispatch exists to remove).
+            for s in inner.stats.values_mut() {
+                s.count = (s.count / 2).max(1);
+            }
+            inner.total = inner.stats.values().map(|s| s.count).sum();
+            // The floor means dead shapes never self-evict; bound the
+            // table instead, evicting the lowest-count shapes first and
+            // preferring to keep keys with live feeder rings (evicting
+            // one only costs its next feed a direct serve while the ring
+            // rebuilds).
+            let cap = self.window;
+            if inner.stats.len() > cap {
+                let mut order: Vec<(bool, u64, ShapeKey)> = inner
+                    .stats
+                    .iter()
+                    .map(|(k, s)| {
+                        (s.feeders.iter().any(|f| f.tick > 0), s.count, *k)
+                    })
+                    .collect();
+                // Victims first: feeder-less, then lowest count.
+                order.sort_by_key(|&(has_feeders, count, _)| (has_feeders, count));
+                for &(_, _, key) in order.iter().take(inner.stats.len() - cap) {
+                    if let Some(s) = inner.stats.remove(&key) {
+                        inner.total -= s.count;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_decay() {
+        let mix = ShapeMix::new(16);
+        let a = ShapeKey::signature(2, 3, 8);
+        let b = ShapeKey::signature(4, 4, 128);
+        for _ in 0..24 {
+            mix.record(a);
+        }
+        for _ in 0..8 {
+            mix.record(b);
+        }
+        // Total hit 2*16 = 32 at the last record and halved once.
+        let (ca, total) = mix.count_and_total(a);
+        let (cb, _) = mix.count_and_total(b);
+        assert_eq!(total, ca + cb);
+        assert!(total <= 32, "decay keeps the window bounded, total={total}");
+        assert!(ca > cb, "hot shape outweighs the rare one after decay");
+        assert_eq!(mix.distinct(), 2);
+    }
+
+    #[test]
+    fn decay_floors_live_counts_and_never_reenters_warmup() {
+        // Regression: decay used to halve count-1 shapes to zero, so an
+        // all-unique long tail collapsed the total below MIX_WARMUP and
+        // the planner handed rare shapes full capacity again (a periodic
+        // linger relapse). Live counts now floor at 1, so the decayed
+        // total can never fall below the window (>= MIX_WARMUP).
+        let mix = ShapeMix::new(16);
+        let once = ShapeKey::signature(9, 2, 4);
+        mix.record(once);
+        let hot = ShapeKey::signature(2, 3, 8);
+        for _ in 0..200 {
+            mix.record(hot);
+        }
+        // The rare shape survives decay with a floor count of 1 and the
+        // total stays comfortably past warm-up.
+        assert_eq!(mix.count_and_total(once).0, 1);
+        assert!(mix.total() >= MIX_WARMUP as u64);
+        assert_eq!(mix.distinct(), 2);
+    }
+
+    #[test]
+    fn table_is_capped_under_all_unique_traffic() {
+        // A long tail of unique shapes must bound the table (gauge and
+        // memory) at the window while keeping the total meaningful — a
+        // fresh rare shape still reads as rare, never as "warm-up over,
+        // everyone gets full capacity".
+        let mix = ShapeMix::new(16);
+        for k in 0..200 {
+            mix.record(ShapeKey::signature(2, 3, 100 + k));
+            // The cap applies at decay time; between decays the table can
+            // grow back toward the decay trigger, so 2x window is the
+            // standing bound.
+            assert!(mix.distinct() < 32, "table must stay bounded");
+        }
+        assert!(mix.total() >= MIX_WARMUP as u64, "total never re-enters warm-up");
+        // Feed keys with live rings are preferentially retained.
+        let feed = ShapeKey::feed(3, 4);
+        mix.record_feeder(feed, 1);
+        for k in 0..200 {
+            mix.record(ShapeKey::signature(2, 3, 500 + k));
+        }
+        let (count, _) = mix.count_and_total(feed);
+        assert!(count >= 1, "feeder-bearing key evicted before feeder-less ones");
+    }
+
+    #[test]
+    fn feeder_ring_tracks_distinct_sessions() {
+        let mix = ShapeMix::new(64);
+        let key = ShapeKey::feed(3, 4);
+        assert_eq!(mix.record_feeder(key, 1), 1);
+        assert_eq!(mix.record_feeder(key, 1), 1, "same session stays 1");
+        assert_eq!(mix.record_feeder(key, 2), 2);
+        assert_eq!(mix.record_feeder(key, 3), 3);
+        // A long-idle feeder ages out of the recency window.
+        for _ in 0..(FEEDER_WINDOW as usize + 1) {
+            mix.record_feeder(key, 2);
+        }
+        assert_eq!(mix.record_feeder(key, 2), 1, "stale feeders aged out");
+    }
+
+    #[test]
+    fn unrelated_traffic_does_not_age_feed_peers() {
+        // Regression: recency used to be measured in global records, so
+        // heavy stateless traffic between feed rounds aged out a slow
+        // stream's peer and the lane degenerated into a per-round linger
+        // penalty. Feeder recency is per-key now.
+        let mix = ShapeMix::new(64);
+        let key = ShapeKey::feed(3, 4);
+        mix.record_feeder(key, 1);
+        mix.record_feeder(key, 2);
+        for _ in 0..(10 * FEEDER_WINDOW as usize) {
+            mix.record(ShapeKey::signature(2, 3, 8)); // unrelated flood
+        }
+        assert_eq!(mix.record_feeder(key, 1), 2, "peer must still count as recent");
+    }
+
+    #[test]
+    fn feeder_ring_evicts_stalest_slot() {
+        let mix = ShapeMix::new(64);
+        let key = ShapeKey::feed(2, 2);
+        for s in 0..(FEEDER_SLOTS as u64 + 2) {
+            mix.record_feeder(key, s);
+        }
+        // Ring is full of the newest FEEDER_SLOTS sessions, all recent.
+        assert_eq!(mix.record_feeder(key, 99), FEEDER_SLOTS);
+    }
+}

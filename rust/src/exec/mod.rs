@@ -1,0 +1,411 @@
+//! **Unified execution planner**: one adaptive dispatch layer for every
+//! execution strategy the CPU engine has grown.
+//!
+//! The paper's speed claims come from picking the right batching strategy
+//! per workload. The crate now has three:
+//!
+//! - **Scalar**: one serial fused sweep per path (the paper's "CPU no
+//!   parallel" column; batched work distributes paths over threads).
+//! - **Stream-parallel**: the chunked Chen-identity factorisation inside a
+//!   single path — the ⊠-reduction forward (§5.1) and the chunked
+//!   backward of [`crate::signature::backward`].
+//! - **Lane-fused**: blocks of same-spec signatures advancing together
+//!   through the lane-interleaved kernels of [`crate::ta::batch`],
+//!   vectorised *across* the batch — the serving regime winner (many
+//!   short streams, small `d`), bitwise identical per lane to scalar.
+//!
+//! Before this module, the choice between them was re-derived inline at
+//! every call site (`signature_batch`, `signature_batch_vjp`,
+//! `deepsig::train_step`, the coordinator's router). [`ExecPlanner`] owns
+//! that choice: callers describe the work as a [`WorkShape`] and execute
+//! whatever [`ExecPlan`] comes back. The serving layer additionally feeds
+//! the planner an observed **shape-mix histogram** ([`ShapeMix`]) so
+//! microbatch formation adapts to recent traffic instead of obeying one
+//! static knob — see [`ExecPlanner::microbatch_capacity`] and
+//! [`ExecPlanner::feed_lane_capacity`].
+//!
+//! Keeping selection in one layer is also what makes the next backend a
+//! one-layer change: lowering `ExecPlan::LaneFused` onto the XLA/GPU path
+//! (the lane-interleaved layout *is* the batched-kernel layout) swaps the
+//! executor for a plan, not N call sites.
+
+mod mix;
+
+pub use mix::{ShapeKey, ShapeMix, MIX_WARMUP};
+
+/// Lanes advanced together by one lane-interleaved sweep: bounds the
+/// batched workspace (a few signatures' worth per block) while filling
+/// the widest SIMD registers; blocks beyond this run in parallel on
+/// threads.
+pub const LANE_BLOCK: usize = 16;
+
+/// Minimum effective points before stream parallelism engages on the
+/// *forward* pass; below this the chunk bookkeeping costs more than the
+/// serial sweep.
+pub const PARALLEL_FORWARD_MIN_POINTS: usize = 16;
+
+/// Minimum effective points before the chunked Chen *backward* engages;
+/// the backward pays two extra ⊠-VJPs per chunk, so its floor is higher
+/// than the forward's.
+pub const PARALLEL_BACKWARD_MIN_POINTS: usize = 32;
+
+/// Largest `d` with a monomorphised scalar VJP kernel: the lane-fused
+/// backward mirrors that kernel op-for-op, so beyond this the scalar side
+/// switches to the exp/⊠ reference composition and per-path dispatch is
+/// required to keep exact parity.
+pub const LANE_VJP_MAX_D: usize = 8;
+
+/// The shape of one unit of signature work, as the planner sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkShape {
+    /// Paths in the batch (1 = a single path).
+    pub batch: usize,
+    /// Effective points per path, including any basepoint.
+    pub points: usize,
+    /// Path channels.
+    pub d: usize,
+    /// Truncation depth.
+    pub depth: usize,
+}
+
+/// An execution strategy chosen by the planner.
+///
+/// Plans describe *scheduling only*: for a given input, every plan of the
+/// same pass computes the same values (Scalar and LaneFused are bitwise
+/// identical to each other; StreamParallel re-associates ⊠ and agrees to
+/// f32 rounding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPlan {
+    /// One serial fused sweep per path; a batch distributes paths over the
+    /// thread budget. The bitwise-reference strategy.
+    Scalar,
+    /// Chunked Chen-identity parallelism over the stream *inside* each
+    /// path, with `threads` chunks per path (batched callers additionally
+    /// distribute paths over the budget).
+    StreamParallel {
+        /// Chunk-level parallelism within one path.
+        threads: usize,
+    },
+    /// Lane-fused across the batch: blocks of `block` lanes advance
+    /// through one interleaved sweep each, blocks distributed over the
+    /// thread budget. Bitwise identical per lane to `Scalar`.
+    LaneFused {
+        /// Lanes per block (≤ [`LANE_BLOCK`]).
+        block: usize,
+    },
+}
+
+/// Owns strategy selection for every execution site, plus the observed
+/// shape mix that drives the serving layer's adaptive microbatching.
+///
+/// Construction is cheap; library entry points build a transient planner
+/// from their thread budget, while the coordinator keeps one long-lived
+/// instance so the shape mix accumulates across requests.
+pub struct ExecPlanner {
+    threads: usize,
+    mix: ShapeMix,
+}
+
+impl ExecPlanner {
+    /// A planner with the given thread budget and the default shape-mix
+    /// window.
+    pub fn new(threads: usize) -> ExecPlanner {
+        ExecPlanner { threads: threads.max(1), mix: ShapeMix::default() }
+    }
+
+    /// A planner with an explicit shape-mix window (serving: see
+    /// [`crate::coordinator::DispatchConfig::mix_window`]).
+    pub fn with_mix_window(threads: usize, window: usize) -> ExecPlanner {
+        ExecPlanner { threads: threads.max(1), mix: ShapeMix::new(window) }
+    }
+
+    /// The thread budget this planner plans for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The observed shape mix (serving gauges read `distinct()`).
+    pub fn mix(&self) -> &ShapeMix {
+        &self.mix
+    }
+
+    /// Strategy for a *forward* signature pass.
+    ///
+    /// - `batch == 1`: stream-parallel when there are threads to use and
+    ///   at least [`PARALLEL_FORWARD_MIN_POINTS`] effective points,
+    ///   otherwise scalar.
+    /// - `batch >= 2`: lane-fused. The block adapts to the thread budget:
+    ///   every thread gets a block before blocks grow toward the
+    ///   SIMD-friendly [`LANE_BLOCK`] (a single 16-lane block would
+    ///   serialise any batch ≤ 16 no matter how many threads were
+    ///   requested). Per-lane results are independent of the partition.
+    pub fn plan_forward(&self, s: &WorkShape) -> ExecPlan {
+        if s.batch <= 1 {
+            if self.threads > 1 && s.points >= PARALLEL_FORWARD_MIN_POINTS {
+                ExecPlan::StreamParallel { threads: self.threads }
+            } else {
+                ExecPlan::Scalar
+            }
+        } else {
+            ExecPlan::LaneFused { block: lane_block(s.batch, self.threads) }
+        }
+    }
+
+    /// Strategy for a *backward* (VJP) pass.
+    ///
+    /// - `batch == 1`: chunked Chen stream parallelism when there are
+    ///   threads and ≥ [`PARALLEL_BACKWARD_MIN_POINTS`] effective points.
+    /// - `batch >= 2` with surplus threads (`threads > batch`): per-path
+    ///   dispatch with the spare threads spread over each path's stream.
+    /// - `batch >= 2` at `d ≤` [`LANE_VJP_MAX_D`]: the lane-fused batched
+    ///   reverse sweep (bitwise identical to per-path serial).
+    /// - otherwise: scalar per-path sweeps, parallel over the batch (the
+    ///   `d >` [`LANE_VJP_MAX_D`] scalar backward uses the exp/⊠
+    ///   reference composition, which the lane kernels do not mirror).
+    pub fn plan_backward(&self, s: &WorkShape) -> ExecPlan {
+        if s.batch <= 1 {
+            if self.threads > 1 && s.points >= PARALLEL_BACKWARD_MIN_POINTS {
+                ExecPlan::StreamParallel { threads: self.threads }
+            } else {
+                ExecPlan::Scalar
+            }
+        } else {
+            let stream_threads = (self.threads / s.batch).max(1);
+            if stream_threads > 1 {
+                ExecPlan::StreamParallel { threads: stream_threads }
+            } else if s.d <= LANE_VJP_MAX_D {
+                ExecPlan::LaneFused { block: lane_block(s.batch, self.threads) }
+            } else {
+                ExecPlan::Scalar
+            }
+        }
+    }
+
+    /// Strategy for one flushed native serving microbatch of `rows`
+    /// same-spec signatures.
+    ///
+    /// A lone row always runs the serial scalar sweep — a request's bits
+    /// must not depend on whether traffic happened to coalesce with it
+    /// (the stream-parallel forward re-associates ⊠). Multi-row flushes
+    /// lane-fuse like any batch.
+    pub fn plan_native_flush(&self, rows: usize, s: &WorkShape) -> ExecPlan {
+        if rows <= 1 {
+            ExecPlan::Scalar
+        } else {
+            self.plan_forward(&WorkShape { batch: rows, ..*s })
+        }
+    }
+
+    /// Record one observed request shape into the mix histogram.
+    pub fn record_shape(&self, key: ShapeKey) {
+        self.mix.record(key);
+    }
+
+    /// Adaptive microbatch capacity for a stateless signature shape.
+    ///
+    /// `base` is the configured capacity ceiling (the old `native_batch`
+    /// knob); `0` is the documented escape hatch and passes through
+    /// unchanged (microbatching disabled — no linger, ever). During
+    /// warm-up (fewer than [`MIX_WARMUP`] recorded shapes) the base
+    /// applies as-is. After warm-up, a shape whose share of recent
+    /// traffic promises at least one same-shape peer within a base-sized
+    /// window keeps the full capacity; rarer shapes get capacity 1 — they
+    /// execute directly instead of idling out the linger waiting for
+    /// peers that recent traffic says will not come.
+    pub fn microbatch_capacity(&self, base: usize, key: ShapeKey) -> usize {
+        if base < 2 {
+            return base;
+        }
+        let (count, total) = self.mix.count_and_total(key);
+        if total < MIX_WARMUP as u64 {
+            return base;
+        }
+        if count.saturating_mul(base as u64) >= total {
+            base
+        } else {
+            1
+        }
+    }
+
+    /// Adaptive capacity for the *feed lane* (stateful session feeds).
+    ///
+    /// Lane-fusing feeds only pays when at least two **distinct sessions**
+    /// feed the same spec concurrently; a single session's feed stream
+    /// must never idle out the linger (feeds were latency-direct before
+    /// the lane existed). Records the feeder and returns the lane
+    /// capacity: the observed number of distinct recent feeders (clamped
+    /// to `base`) when there are at least two — so a complete group of
+    /// concurrent feeders *fills* its pending batch and executes inline
+    /// instead of waiting out the linger — and 1 (direct scalar feed)
+    /// for a lone feeder. `base < 2` passes through (0 = disabled).
+    pub fn feed_lane_capacity(&self, base: usize, key: ShapeKey, session: u64) -> usize {
+        if base < 2 {
+            return base;
+        }
+        let distinct = self.mix.record_feeder(key, session);
+        if distinct >= 2 {
+            distinct.min(base)
+        } else {
+            1
+        }
+    }
+
+    /// Drop `session` from `key`'s recent-feeder ring — called when a
+    /// session closes, so a surviving lone feeder drops back to the
+    /// direct path immediately instead of paying the linger until the
+    /// closed peer ages out of the recency window. (Evicted/expired
+    /// sessions are not forgotten eagerly; they age out after
+    /// [`ShapeMix`]'s feeder window.)
+    pub fn forget_feeder(&self, key: ShapeKey, session: u64) {
+        self.mix.forget_feeder(key, session);
+    }
+}
+
+/// Shared lane-block rule: `ceil(batch / threads)` capped at
+/// [`LANE_BLOCK`]. Forward and backward use the same rule so both passes
+/// always pick the same schedule for a given shape.
+fn lane_block(batch: usize, threads: usize) -> usize {
+    batch.div_ceil(threads.max(1)).min(LANE_BLOCK).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(batch: usize, points: usize, d: usize) -> WorkShape {
+        WorkShape { batch, points, d, depth: 4 }
+    }
+
+    #[test]
+    fn forward_single_path_decisions() {
+        // Serial when single-threaded or the stream is short.
+        let p1 = ExecPlanner::new(1);
+        assert_eq!(p1.plan_forward(&shape(1, 1000, 3)), ExecPlan::Scalar);
+        let p8 = ExecPlanner::new(8);
+        assert_eq!(
+            p8.plan_forward(&shape(1, PARALLEL_FORWARD_MIN_POINTS - 1, 3)),
+            ExecPlan::Scalar
+        );
+        assert_eq!(
+            p8.plan_forward(&shape(1, PARALLEL_FORWARD_MIN_POINTS, 3)),
+            ExecPlan::StreamParallel { threads: 8 }
+        );
+    }
+
+    #[test]
+    fn forward_batches_lane_fuse_with_thread_adaptive_blocks() {
+        // Every thread gets a block before blocks widen toward LANE_BLOCK.
+        let p4 = ExecPlanner::new(4);
+        assert_eq!(p4.plan_forward(&shape(8, 32, 2)), ExecPlan::LaneFused { block: 2 });
+        assert_eq!(p4.plan_forward(&shape(64, 32, 2)), ExecPlan::LaneFused { block: 16 });
+        // threads > batch: one lane per block, blocks spread over threads.
+        let p8 = ExecPlanner::new(8);
+        assert_eq!(p8.plan_forward(&shape(3, 32, 2)), ExecPlan::LaneFused { block: 1 });
+        // Single thread: full-width blocks.
+        let p1 = ExecPlanner::new(1);
+        assert_eq!(p1.plan_forward(&shape(40, 32, 2)), ExecPlan::LaneFused { block: LANE_BLOCK });
+    }
+
+    #[test]
+    fn backward_decisions_across_corners() {
+        // batch = 1: stream-parallel only past the backward floor.
+        let p8 = ExecPlanner::new(8);
+        assert_eq!(
+            p8.plan_backward(&shape(1, PARALLEL_BACKWARD_MIN_POINTS - 1, 2)),
+            ExecPlan::Scalar
+        );
+        assert_eq!(
+            p8.plan_backward(&shape(1, PARALLEL_BACKWARD_MIN_POINTS, 2)),
+            ExecPlan::StreamParallel { threads: 8 }
+        );
+        // Surplus threads (threads > batch): spread over each stream.
+        assert_eq!(
+            p8.plan_backward(&shape(2, 80, 2)),
+            ExecPlan::StreamParallel { threads: 4 }
+        );
+        // threads <= batch at small d: lane-fused.
+        let p3 = ExecPlanner::new(3);
+        assert_eq!(p3.plan_backward(&shape(6, 32, 8)), ExecPlan::LaneFused { block: 2 });
+        // d > LANE_VJP_MAX_D falls off the lane VJP to per-path scalar.
+        assert_eq!(p3.plan_backward(&shape(6, 32, 9)), ExecPlan::Scalar);
+        // batch = 1 single thread.
+        let p1 = ExecPlanner::new(1);
+        assert_eq!(p1.plan_backward(&shape(1, 4096, 2)), ExecPlan::Scalar);
+    }
+
+    #[test]
+    fn native_flush_lone_row_is_always_scalar() {
+        // A request's bits must not depend on traffic coalescing: one real
+        // row never takes the stream-parallel (re-associating) forward,
+        // however long the stream and large the thread budget.
+        let p = ExecPlanner::new(16);
+        assert_eq!(p.plan_native_flush(1, &shape(1, 4096, 2)), ExecPlan::Scalar);
+        assert_eq!(
+            p.plan_native_flush(6, &shape(1, 64, 2)),
+            ExecPlan::LaneFused { block: 1 }
+        );
+    }
+
+    #[test]
+    fn microbatch_capacity_adapts_to_shape_mix() {
+        let p = ExecPlanner::with_mix_window(4, 64);
+        let hot = ShapeKey::signature(2, 3, 8);
+        let rare = ShapeKey::signature(5, 3, 9);
+        // Escape hatch and direct mode pass through untouched.
+        assert_eq!(p.microbatch_capacity(0, hot), 0);
+        assert_eq!(p.microbatch_capacity(1, hot), 1);
+        // Warm-up: base applies while the histogram is empty.
+        assert_eq!(p.microbatch_capacity(8, hot), 8);
+        // Overwhelmingly hot shape keeps full capacity; the rare shape
+        // (1 of 65 recent requests, share < 1/8) drops to direct.
+        for _ in 0..64 {
+            p.record_shape(hot);
+        }
+        p.record_shape(rare);
+        assert_eq!(p.microbatch_capacity(8, hot), 8);
+        assert_eq!(p.microbatch_capacity(8, rare), 1);
+        // If the "rare" shape becomes a real share of traffic, capacity
+        // returns — records keep flowing regardless of dispatch path.
+        for _ in 0..32 {
+            p.record_shape(rare);
+        }
+        assert_eq!(p.microbatch_capacity(8, rare), 8);
+    }
+
+    #[test]
+    fn feed_lane_capacity_tracks_distinct_sessions() {
+        let p = ExecPlanner::with_mix_window(4, 64);
+        let key = ShapeKey::feed(3, 4);
+        // A single session feeding never lingers.
+        for _ in 0..10 {
+            assert_eq!(p.feed_lane_capacity(8, key, 101), 1);
+        }
+        // A second session on the same spec opens a lane sized to the
+        // observed concurrency, so a full group flushes inline instead of
+        // idling out the linger.
+        assert_eq!(p.feed_lane_capacity(8, key, 202), 2);
+        assert_eq!(p.feed_lane_capacity(8, key, 101), 2);
+        assert_eq!(p.feed_lane_capacity(8, key, 303), 3);
+        // The quote is clamped to the configured base.
+        assert_eq!(p.feed_lane_capacity(2, key, 202), 2);
+        // Different spec keys are independent.
+        assert_eq!(p.feed_lane_capacity(8, ShapeKey::feed(2, 2), 101), 1);
+        // Disabled passes through.
+        assert_eq!(p.feed_lane_capacity(0, key, 101), 0);
+    }
+
+    #[test]
+    fn closed_sessions_are_forgotten_immediately() {
+        // The surviving feeder must drop back to the direct path on the
+        // very next feed after its peer closes — not `FEEDER_WINDOW`
+        // records later.
+        let p = ExecPlanner::with_mix_window(4, 64);
+        let key = ShapeKey::feed(3, 4);
+        p.feed_lane_capacity(8, key, 1);
+        assert_eq!(p.feed_lane_capacity(8, key, 2), 2);
+        p.forget_feeder(key, 2);
+        assert_eq!(p.feed_lane_capacity(8, key, 1), 1, "lone survivor serves direct");
+        // Forgetting an unknown session/key is a no-op.
+        p.forget_feeder(ShapeKey::feed(9, 9), 7);
+    }
+}

@@ -4,7 +4,8 @@
 //! computations of the signature and logsignature transforms, on both CPU
 //! and GPU"* (Kidger & Lyons, ICLR 2021).
 //!
-//! The crate is organised in three layers:
+//! The crate is organised in three layers, with one cross-cutting
+//! planning layer:
 //!
 //! - **Native engine** ([`ta`], [`signature`], [`logsignature`], [`words`],
 //!   [`path`], [`parallel`]): the full algorithmic content of the paper —
@@ -22,7 +23,23 @@
 //!   the batch — the winning strategy for the serving regime of many short
 //!   streams at small `d`, and bitwise identical per lane to per-path
 //!   dispatch ([`signature::signature_batch`],
-//!   [`signature::signature_batch_vjp`], `deepsig::train_step`).
+//!   [`signature::signature_batch_vjp`], `deepsig::train_step`,
+//!   [`path::Path::update_batch`]).
+//! - **Execution planning** ([`exec`]): one adaptive dispatch layer owning
+//!   the choice between those strategies. Every execution site — the
+//!   batched forward/backward entry points, `deepsig::train_step`, and
+//!   the coordinator's router — describes its work as an
+//!   [`exec::WorkShape`] and executes whatever [`exec::ExecPlan`] the
+//!   [`exec::ExecPlanner`] returns (`Scalar`, `StreamParallel`, or
+//!   `LaneFused`); no call site re-derives lane/thread heuristics. The
+//!   serving layer additionally feeds the planner an observed shape-mix
+//!   histogram, so microbatch formation adapts to recent traffic: hot
+//!   shapes linger and lane-fuse, rare shapes serve directly. Plans are
+//!   scheduling only — `Scalar` and `LaneFused` are bitwise identical,
+//!   `StreamParallel` agrees to f32 rounding — which is also what makes
+//!   the planned XLA/GPU lowering a one-layer change: the lane layout is
+//!   already the batched-kernel layout, so a future backend executes the
+//!   same plans.
 //! - **Accelerator runtime** ([`runtime`]): loads AOT-compiled HLO-text
 //!   artifacts (produced by `python/compile/aot.py` from JAX + Pallas) and
 //!   executes them on a PJRT client. This is the reproduction's analogue of
@@ -35,10 +52,12 @@
 //!   `Coordinator::call` front door (so metrics cover them) into a
 //!   sharded, memory-bounded session table — per-session `Path` state
 //!   with O(1) interval queries, an LRU-evicted byte budget, and an
-//!   idle-TTL sweeper. Native signature traffic is microbatched too:
-//!   same-spec requests gathered within one linger window execute as a
-//!   single lane-fused sweep instead of N independent signatures
-//!   (`CoordinatorConfig::native_batch`).
+//!   idle-TTL sweeper. Native signature traffic is microbatched under the
+//!   planner's adaptive per-shape capacity
+//!   (`coordinator::DispatchConfig`), and same-spec session feeds from
+//!   distinct sessions coalesce through the **feed lane** into single
+//!   `Path::update_batch` sweeps — bitwise identical per session to
+//!   scalar feeding.
 //!
 //! Baselines reproducing the systems the paper benchmarks against live in
 //! [`baselines`]; the benchmark harness regenerating every table and figure
@@ -61,6 +80,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod deepsig;
+pub mod exec;
 pub mod logsignature;
 pub mod parallel;
 pub mod path;

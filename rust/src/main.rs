@@ -330,6 +330,10 @@ fn cmd_serve(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     );
     println!("metrics: {}", snap.render());
     println!("padding ratio: {:.1}%", coord.metrics().padding_ratio() * 100.0);
+    println!(
+        "adaptive dispatch: {} (shapes with batch peers lane-fuse; rare shapes skip the linger)",
+        snap.render_dispatch()
+    );
     Ok(())
 }
 
@@ -432,6 +436,10 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
         snap.session_bytes as f64 / (1 << 20) as f64,
         snap.sessions_evicted,
         snap.sessions_expired
+    );
+    println!(
+        "adaptive dispatch: {} (feed_lane_batches = cross-session fused Path::update sweeps)",
+        snap.render_dispatch()
     );
     Ok(())
 }

@@ -19,6 +19,7 @@
 
 use crate::logsignature::{logsignature_from_sig, LogSigPlan};
 use crate::signature::forward::{signature, two_point_signature_into};
+use crate::ta::batch::{fused_mexp_batch, fused_mexp_left_batch, unpack_lane, BatchWorkspace};
 use crate::ta::fused::{fused_mexp, fused_mexp_left};
 use crate::ta::mul::mul_into;
 use crate::ta::{SigSpec, Workspace};
@@ -195,6 +196,131 @@ impl Path {
     /// O(1) queries); used by the memory benchmark.
     pub fn storage_bytes(&self) -> usize {
         (self.sigs.len() + self.inv_sigs.len() + self.points.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Advance several **same-spec** paths together through one
+    /// lane-fused sweep — [`Path::update`] batched across paths, the
+    /// stateful analogue of [`crate::signature::signature_batch`].
+    ///
+    /// Lane `k` appends `counts[k]` points from `new_points[k]`; counts
+    /// may be ragged (each step repacks the still-active lanes, which
+    /// changes only which lanes share a sweep, never any lane's op
+    /// sequence). Both per-step fused ops — `S_j = S_{j-1} ⊠ exp(z_j)`
+    /// and `I_j = exp(-z_j) ⊠ I_{j-1}` — run through the lane-interleaved
+    /// kernels of [`crate::ta::batch`], which perform each lane's
+    /// operations in the scalar order, so every path ends up **bitwise
+    /// identical** to a scalar [`Path::update`] with the same points
+    /// (pinned by property tests, and relied on by the serving feed lane:
+    /// coalescing feeds must not change any session's bits).
+    ///
+    /// Validation is all-or-nothing: on `Err`, no path has been modified.
+    pub fn update_batch(
+        paths: &mut [&mut Path],
+        new_points: &[&[f32]],
+        counts: &[usize],
+    ) -> anyhow::Result<()> {
+        let lanes = paths.len();
+        anyhow::ensure!(
+            new_points.len() == lanes && counts.len() == lanes,
+            "update_batch arity mismatch: {} paths, {} buffers, {} counts",
+            lanes,
+            new_points.len(),
+            counts.len()
+        );
+        if lanes == 0 {
+            return Ok(());
+        }
+        let spec = paths[0].spec.clone();
+        let d = spec.d();
+        for (k, p) in paths.iter().enumerate() {
+            anyhow::ensure!(
+                p.spec == spec,
+                "update_batch lane {k} has spec (d={}, depth={}), expected (d={}, depth={})",
+                p.spec.d(),
+                p.spec.depth(),
+                d,
+                spec.depth()
+            );
+            anyhow::ensure!(counts[k] >= 1, "no points to add for lane {k}");
+            anyhow::ensure!(
+                new_points[k].len() == counts[k] * d,
+                "lane {k} buffer has {} values, expected count({}) * channels({d})",
+                new_points[k].len(),
+                counts[k]
+            );
+        }
+        if lanes == 1 {
+            return paths[0].update(new_points[0], counts[0]);
+        }
+        let len = spec.sig_len();
+        // Lane-interleaved running states, seeded from each path's stored
+        // tail — exactly what a scalar update resumes from.
+        let mut active: Vec<usize> = (0..lanes).collect();
+        let mut sig_state = vec![0.0f32; len * lanes];
+        let mut inv_state = vec![0.0f32; len * lanes];
+        for (a, &l) in active.iter().enumerate() {
+            let p = &paths[l];
+            for i in 0..len {
+                sig_state[i * lanes + a] = p.sigs[p.sigs.len() - len + i];
+                inv_state[i * lanes + a] = p.inv_sigs[p.inv_sigs.len() - len + i];
+            }
+        }
+        let mut ws = BatchWorkspace::new(&spec, lanes);
+        let mut z = vec![0.0f32; d * lanes];
+        let mut neg_z = vec![0.0f32; d * lanes];
+        let mut row = vec![0.0f32; len];
+        let mut step = 0usize;
+        while !active.is_empty() {
+            // Retire lanes whose feed is exhausted, compacting the
+            // interleaved states to the survivors.
+            let still: Vec<usize> = active.iter().copied().filter(|&l| counts[l] > step).collect();
+            if still.len() != active.len() {
+                if still.is_empty() {
+                    break;
+                }
+                let old_n = active.len();
+                let new_n = still.len();
+                let mut packed_sig = vec![0.0f32; len * new_n];
+                let mut packed_inv = vec![0.0f32; len * new_n];
+                for (na, &l) in still.iter().enumerate() {
+                    let oa = active.iter().position(|&x| x == l).expect("survivor");
+                    for i in 0..len {
+                        packed_sig[i * new_n + na] = sig_state[i * old_n + oa];
+                        packed_inv[i * new_n + na] = inv_state[i * old_n + oa];
+                    }
+                }
+                sig_state = packed_sig;
+                inv_state = packed_inv;
+                active = still;
+                ws = BatchWorkspace::new(&spec, new_n);
+            }
+            let a_n = active.len();
+            for (a, &l) in active.iter().enumerate() {
+                let p = &paths[l];
+                // The previous point is always the last one stored: the
+                // old tail for the first step, last appended after that.
+                let prev = &p.points[p.points.len() - d..];
+                let cur = &new_points[l][step * d..(step + 1) * d];
+                for c in 0..d {
+                    let zc = cur[c] - prev[c];
+                    z[c * a_n + a] = zc;
+                    neg_z[c * a_n + a] = -zc;
+                }
+            }
+            // S_j = S_{j-1} ⊠ exp(z_j); I_j = exp(-z_j) ⊠ I_{j-1} — the
+            // scalar update's two fused ops, lane-interleaved.
+            fused_mexp_batch(&spec, &mut sig_state[..len * a_n], &z[..d * a_n], &mut ws);
+            fused_mexp_left_batch(&spec, &mut inv_state[..len * a_n], &neg_z[..d * a_n], &mut ws);
+            for (a, &l) in active.iter().enumerate() {
+                unpack_lane(len, a_n, &sig_state[..len * a_n], a, &mut row);
+                paths[l].sigs.extend_from_slice(&row);
+                unpack_lane(len, a_n, &inv_state[..len * a_n], a, &mut row);
+                paths[l].inv_sigs.extend_from_slice(&row);
+                paths[l].points.extend_from_slice(&new_points[l][step * d..(step + 1) * d]);
+            }
+            step += 1;
+        }
+        Ok(())
     }
 }
 
@@ -413,6 +539,113 @@ mod tests {
         assert!(path.query(2, 1).is_err());
         assert!(path.query(0, 3).is_err());
         assert!(Path::new(&spec, &pts[..2], 1).is_err());
+    }
+
+    #[test]
+    fn update_batch_matches_scalar_update_bitwise() {
+        // The feed-lane contract: advancing several same-spec paths
+        // through one lane-fused sweep must reproduce scalar per-path
+        // `update` bit-for-bit on every stored buffer — including ragged
+        // feed counts, which force mid-sweep lane repacking.
+        property("update_batch == update bitwise", 12, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let lanes = g.usize_in(2, 6);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let mut fused: Vec<Path> = vec![];
+            let mut scalar: Vec<Path> = vec![];
+            let mut feeds: Vec<Vec<f32>> = vec![];
+            let mut counts: Vec<usize> = vec![];
+            for _ in 0..lanes {
+                let seed_len = g.usize_in(2, 8);
+                let pts = random_path(g.rng(), seed_len, d);
+                fused.push(Path::new(&spec, &pts, seed_len).unwrap());
+                scalar.push(Path::new(&spec, &pts, seed_len).unwrap());
+                let count = g.usize_in(1, 7); // ragged on purpose
+                feeds.push(g.normal_vec(count * d, 0.3));
+                counts.push(count);
+            }
+            {
+                let mut refs: Vec<&mut Path> = fused.iter_mut().collect();
+                let slices: Vec<&[f32]> = feeds.iter().map(|f| f.as_slice()).collect();
+                Path::update_batch(&mut refs, &slices, &counts).unwrap();
+            }
+            for k in 0..lanes {
+                scalar[k].update(&feeds[k], counts[k]).unwrap();
+                assert_eq!(fused[k].sigs, scalar[k].sigs, "lane {k} sigs");
+                assert_eq!(fused[k].inv_sigs, scalar[k].inv_sigs, "lane {k} inv_sigs");
+                assert_eq!(fused[k].points, scalar[k].points, "lane {k} points");
+            }
+        });
+    }
+
+    #[test]
+    fn update_batch_repeated_feeds_stay_bitwise() {
+        // Several successive batched feeds (the serving steady state) must
+        // keep every lane bit-identical to its scalar twin.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(71);
+        let lanes = 3;
+        let mut fused: Vec<Path> = vec![];
+        let mut scalar: Vec<Path> = vec![];
+        for _ in 0..lanes {
+            let pts = random_path(&mut rng, 4, 2);
+            fused.push(Path::new(&spec, &pts, 4).unwrap());
+            scalar.push(Path::new(&spec, &pts, 4).unwrap());
+        }
+        for round in 0..4 {
+            let counts: Vec<usize> = (0..lanes).map(|k| 1 + (round + k) % 4).collect();
+            let feeds: Vec<Vec<f32>> =
+                counts.iter().map(|&c| rng.normal_vec(c * 2, 0.3)).collect();
+            {
+                let mut refs: Vec<&mut Path> = fused.iter_mut().collect();
+                let slices: Vec<&[f32]> = feeds.iter().map(|f| f.as_slice()).collect();
+                Path::update_batch(&mut refs, &slices, &counts).unwrap();
+            }
+            for k in 0..lanes {
+                scalar[k].update(&feeds[k], counts[k]).unwrap();
+            }
+        }
+        for k in 0..lanes {
+            assert_eq!(fused[k].sigs, scalar[k].sigs);
+            assert_eq!(fused[k].inv_sigs, scalar[k].inv_sigs);
+            assert_eq!(fused[k].points, scalar[k].points);
+        }
+    }
+
+    #[test]
+    fn update_batch_validates_before_touching_anything() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let other = SigSpec::new(3, 2).unwrap();
+        let mut rng = Rng::new(72);
+        let mut a = Path::new(&spec, &random_path(&mut rng, 3, 2), 3).unwrap();
+        let mut b = Path::new(&spec, &random_path(&mut rng, 3, 2), 3).unwrap();
+        let mut c = Path::new(&other, &random_path(&mut rng, 3, 3), 3).unwrap();
+        let before_a = a.sigs.clone();
+        let feed = vec![0.1f32, 0.2, 0.3, 0.4];
+        // Mismatched spec in the group.
+        {
+            let mut refs: Vec<&mut Path> = vec![&mut a, &mut c];
+            assert!(Path::update_batch(&mut refs, &[&feed, &feed], &[2, 2]).is_err());
+        }
+        // Zero count / wrong buffer length.
+        {
+            let mut refs: Vec<&mut Path> = vec![&mut a, &mut b];
+            assert!(Path::update_batch(&mut refs, &[&feed, &feed], &[2, 0]).is_err());
+            assert!(Path::update_batch(&mut refs, &[&feed, &feed[..3]], &[2, 2]).is_err());
+            assert!(Path::update_batch(&mut refs, &[&feed], &[2, 2]).is_err());
+        }
+        assert_eq!(a.sigs, before_a, "failed validation must not modify any path");
+        assert_eq!(a.len(), 3);
+        // A single lane delegates to the scalar update.
+        {
+            let mut refs: Vec<&mut Path> = vec![&mut a];
+            Path::update_batch(&mut refs, &[&feed], &[2]).unwrap();
+        }
+        let mut twin = Path::new(&spec, &a.points[..3 * 2].to_vec(), 3).unwrap();
+        twin.update(&feed, 2).unwrap();
+        assert_eq!(a.sigs, twin.sigs);
     }
 
     #[test]

@@ -32,8 +32,8 @@
 //! chunk bookkeeping costs more than it saves on tiny inputs, and the
 //! serial sweep is the bitwise-reference behaviour).
 
-use super::forward::lane_block_partition;
 use super::SigConfig;
+use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
 use crate::parallel::chunk_signatures;
 use crate::substrate::pool::parallel_map_indexed;
 use crate::ta::batch::{fused_mexp_batch, fused_mexp_vjp_batch, pack_lanes, BatchWorkspace};
@@ -41,9 +41,9 @@ use crate::ta::fused::{fused_mexp, fused_mexp_vjp};
 use crate::ta::mul::{mul_assign, mul_into, mul_vjp};
 use crate::ta::{SigSpec, Workspace};
 
-/// Minimum effective points before the chunked Chen backward engages;
-/// below this the serial reverse sweep wins on constant factors.
-pub const PARALLEL_BACKWARD_MIN_POINTS: usize = 32;
+/// Re-exported from the execution planner, which owns all strategy
+/// constants (see [`crate::exec`]).
+pub use crate::exec::PARALLEL_BACKWARD_MIN_POINTS;
 
 /// Result of a signature VJP.
 #[derive(Clone, Debug)]
@@ -257,16 +257,23 @@ pub fn signature_vjp_with(
         }
     };
 
-    let threads = cfg.threads.max(1);
-    let (grad_eff, g_initial) = if threads > 1 && eff_len >= PARALLEL_BACKWARD_MIN_POINTS {
-        parallel_reverse_sweep(spec, eff_len, point, cfg.initial.as_deref(), g, threads)
-    } else {
-        // Serial: recompute the forward (one O(L) fused sweep) to obtain
-        // the final signature, then unwind it via reversibility.
-        let forward_cfg = SigConfig { threads: 1, ..cfg.clone() };
-        let final_sig = super::forward::signature_with(path, stream, spec, &forward_cfg)?;
-        let mut ws = Workspace::new(spec);
-        reverse_sweep(spec, eff_len, point, &final_sig, g, &mut ws)
+    // Strategy selection lives in the execution planner (crate::exec).
+    let plan = ExecPlanner::new(cfg.threads)
+        .plan_backward(&WorkShape { batch: 1, points: eff_len, d, depth: spec.depth() });
+    let (grad_eff, g_initial) = match plan {
+        ExecPlan::StreamParallel { threads } => {
+            parallel_reverse_sweep(spec, eff_len, point, cfg.initial.as_deref(), g, threads)
+        }
+        // LaneFused never arises for batch = 1; run the reference sweep.
+        ExecPlan::Scalar | ExecPlan::LaneFused { .. } => {
+            // Serial: recompute the forward (one O(L) fused sweep) to
+            // obtain the final signature, then unwind it via
+            // reversibility.
+            let forward_cfg = SigConfig { threads: 1, ..cfg.clone() };
+            let final_sig = super::forward::signature_with(path, stream, spec, &forward_cfg)?;
+            let mut ws = Workspace::new(spec);
+            reverse_sweep(spec, eff_len, point, &final_sig, g, &mut ws)
+        }
     };
 
     // Undo the effective-point mapping: reversal then basepoint.
@@ -345,16 +352,18 @@ pub fn signature_stream_vjp(
 
 /// Batched VJP over a `(batch, stream, d)` buffer (App. C.3).
 ///
-/// Dispatch, in order of preference:
-/// - surplus threads (`threads > batch`): per-path dispatch with the
-///   chunked Chen-identity stream-parallel backward inside each sample;
-/// - `batch >= 2` at `d <= 8`: the **lane-fused** batched reverse sweep —
-///   blocks of up to [`super::forward::LANE_BLOCK`] samples recompute
-///   prefixes and unwind together through the interleaved batch kernels,
-///   bitwise identical to the serial per-path VJP (beyond `d = 8` the
-///   scalar backward switches to the exp/⊠ reference composition, so
-///   per-path dispatch keeps exact parity there);
-/// - otherwise: per-path dispatch, parallel over the batch.
+/// Strategy selection goes through [`crate::exec::ExecPlanner`]
+/// ([`crate::exec::ExecPlanner::plan_backward`]); in order of preference:
+/// surplus threads (`threads > batch`) run per-path dispatch with the
+/// chunked Chen-identity stream-parallel backward inside each sample;
+/// `batch >= 2` at `d <=` [`crate::exec::LANE_VJP_MAX_D`] runs the
+/// **lane-fused** batched reverse sweep — blocks of up to
+/// [`super::forward::LANE_BLOCK`] samples recompute prefixes and unwind
+/// together through the interleaved batch kernels, bitwise identical to
+/// the serial per-path VJP (beyond that `d` the scalar backward switches
+/// to the exp/⊠ reference composition, so per-path dispatch keeps exact
+/// parity there); otherwise per-path serial sweeps, parallel over the
+/// batch.
 pub fn signature_batch_vjp(
     paths: &[f32],
     batch: usize,
@@ -362,6 +371,26 @@ pub fn signature_batch_vjp(
     spec: &SigSpec,
     g: &[f32],
     threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let plan = ExecPlanner::new(threads).plan_backward(&WorkShape {
+        batch,
+        points: stream,
+        d: spec.d(),
+        depth: spec.depth(),
+    });
+    signature_batch_vjp_planned(paths, batch, stream, spec, g, threads, plan)
+}
+
+/// Execute a batched VJP under an explicit [`ExecPlan`] (see
+/// [`signature_batch_vjp`] for the planner-selected entry point).
+pub fn signature_batch_vjp_planned(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    g: &[f32],
+    threads: usize,
+    plan: ExecPlan,
 ) -> anyhow::Result<Vec<f32>> {
     let len = spec.sig_len();
     let plen = stream * spec.d();
@@ -374,23 +403,30 @@ pub fn signature_batch_vjp(
         g.len(),
         batch * len
     );
-    // Spread surplus threads across the stream dimension of each sample.
-    let stream_threads = (threads.max(1) / batch).max(1);
-    if stream_threads == 1 && batch >= 2 && spec.d() <= 8 {
-        let threads = threads.max(1);
-        let (block, n_blocks) = lane_block_partition(batch, threads);
-        let blocks = parallel_map_indexed(n_blocks, threads, |bi| {
-            let l0 = bi * block;
-            let lanes = block.min(batch - l0);
-            lane_reverse_sweep(spec, paths, stream, l0, lanes, g)
-        });
-        let mut out = vec![0.0f32; batch * plen];
-        for (bi, rows) in blocks.into_iter().enumerate() {
-            let o = bi * block * plen;
-            out[o..o + rows.len()].copy_from_slice(&rows);
+    let threads = threads.max(1);
+    if let ExecPlan::LaneFused { block } = plan {
+        if batch >= 2 {
+            let block = block.clamp(1, super::forward::LANE_BLOCK);
+            let n_blocks = batch.div_ceil(block);
+            let blocks = parallel_map_indexed(n_blocks, threads, |bi| {
+                let l0 = bi * block;
+                let lanes = block.min(batch - l0);
+                lane_reverse_sweep(spec, paths, stream, l0, lanes, g)
+            });
+            let mut out = vec![0.0f32; batch * plen];
+            for (bi, rows) in blocks.into_iter().enumerate() {
+                let o = bi * block * plen;
+                out[o..o + rows.len()].copy_from_slice(&rows);
+            }
+            return Ok(out);
         }
-        return Ok(out);
     }
+    // Per-path dispatch: stream parallelism inside each sample when the
+    // plan grants it, the serial reference sweep otherwise.
+    let stream_threads = match plan {
+        ExecPlan::StreamParallel { threads } => threads,
+        _ => 1,
+    };
     let cfg = SigConfig { threads: stream_threads, ..SigConfig::serial() };
     let grads = parallel_map_indexed(batch, threads, |b| {
         signature_vjp_with(

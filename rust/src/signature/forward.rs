@@ -16,6 +16,7 @@
 //! over threads; each lane reproduces per-path dispatch bit-for-bit.
 
 use super::SigConfig;
+use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
 use crate::parallel;
 use crate::ta::batch::{fused_mexp_batch, unpack_lane, BatchWorkspace};
 use crate::ta::exp::exp_in_place;
@@ -24,23 +25,9 @@ use crate::ta::inverse::inverse_into;
 use crate::ta::mul::mul_assign;
 use crate::ta::{SigSpec, Workspace};
 
-/// Lanes advanced together by one lane-interleaved sweep: bounds the
-/// batched workspace (a few signatures' worth per block) while filling the
-/// widest SIMD registers; blocks beyond this run in parallel on threads.
-pub const LANE_BLOCK: usize = 16;
-
-/// Partition a batch into lane blocks: `(block_size, n_blocks)`. The
-/// block size adapts to the thread budget — every thread gets a block
-/// before blocks grow toward the SIMD-friendly [`LANE_BLOCK`]; a single
-/// 16-lane block would otherwise serialise any batch <= 16 no matter how
-/// many threads were requested. Per-lane results are independent of the
-/// partition (each lane replays the scalar op sequence), so this only
-/// changes scheduling, never bits. Shared by the forward and backward
-/// lane dispatch so both always pick the same schedule.
-pub(crate) fn lane_block_partition(batch: usize, threads: usize) -> (usize, usize) {
-    let block = batch.div_ceil(threads.max(1)).min(LANE_BLOCK);
-    (block, batch.div_ceil(block))
-}
+/// Re-exported from the execution planner, which owns all strategy
+/// constants (see [`crate::exec`]).
+pub use crate::exec::LANE_BLOCK;
 
 /// Validate a `(stream, d)` path buffer against the spec.
 fn check_path(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<()> {
@@ -145,13 +132,20 @@ pub fn signature_with(
         Some(init) => init.clone(),
         None => spec.zeros(),
     };
-    let threads = cfg.threads.max(1);
-    if threads == 1 || eff_len < 16 {
-        let mut ws = Workspace::new(spec);
-        sig_of_points(spec, eff_len, point, &mut out, &mut ws);
-    } else {
-        let chunk_sig = parallel::reduce_signature(spec, eff_len, &point, threads);
-        mul_assign(spec, &mut out, &chunk_sig);
+    // Strategy selection lives in the execution planner (crate::exec);
+    // this function only executes whichever plan comes back.
+    let plan = ExecPlanner::new(cfg.threads)
+        .plan_forward(&WorkShape { batch: 1, points: eff_len, d, depth: spec.depth() });
+    match plan {
+        ExecPlan::StreamParallel { threads } => {
+            let chunk_sig = parallel::reduce_signature(spec, eff_len, &point, threads);
+            mul_assign(spec, &mut out, &chunk_sig);
+        }
+        // LaneFused never arises for batch = 1; run the reference sweep.
+        ExecPlan::Scalar | ExecPlan::LaneFused { .. } => {
+            let mut ws = Workspace::new(spec);
+            sig_of_points(spec, eff_len, point, &mut out, &mut ws);
+        }
     }
     Ok(out)
 }
@@ -237,14 +231,43 @@ pub fn signature_batch(
 
 /// Batched signature with full options. The basepoint / initial / inverse
 /// configuration applies to every path in the batch; `cfg.threads` workers
-/// share the lane blocks. Falls back to per-path dispatch when the batch
-/// is tiny (1 path — nothing to interleave).
+/// share the lane blocks. Strategy selection goes through
+/// [`crate::exec::ExecPlanner`]; use [`signature_batch_planned`] to
+/// execute a plan chosen elsewhere (the serving layer does, so a lone
+/// flushed row always runs the scalar reference sweep).
 pub fn signature_batch_with(
     paths: &[f32],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     cfg: &SigConfig,
+) -> anyhow::Result<Vec<f32>> {
+    // Planning needs only the shape (pure arithmetic); all validation
+    // lives in `signature_batch_planned`, which errors before executing
+    // a plan derived from malformed inputs.
+    let plan = ExecPlanner::new(cfg.threads).plan_forward(&WorkShape {
+        batch,
+        points: cfg.effective_len(stream),
+        d: spec.d(),
+        depth: spec.depth(),
+    });
+    signature_batch_planned(paths, batch, stream, spec, cfg, plan)
+}
+
+/// Execute a batched signature under an explicit [`ExecPlan`].
+///
+/// Every plan computes the same per-path values for the same inputs
+/// (`Scalar` and `LaneFused` are bitwise identical; `StreamParallel`
+/// re-associates ⊠ inside each path and agrees to rounding). Callers
+/// normally go through [`signature_batch_with`], which asks the planner;
+/// the coordinator's microbatch backend passes its serving plan here.
+pub fn signature_batch_planned(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    cfg: &SigConfig,
+    plan: ExecPlan,
 ) -> anyhow::Result<Vec<f32>> {
     let d = spec.d();
     anyhow::ensure!(batch >= 1, "need at least one path in the batch");
@@ -257,11 +280,22 @@ pub fn signature_batch_with(
     // Lanes share one shape, so validating the first path (plus the shared
     // basepoint/initial) validates the whole batch.
     let eff_len = check_path_with(&paths[..stream * d], stream, spec, cfg)?;
-    if batch == 1 {
-        return signature_with(paths, stream, spec, cfg);
-    }
     let len = spec.sig_len();
     let path_len = stream * d;
+    let threads = cfg.threads.max(1);
+    let block = match plan {
+        ExecPlan::LaneFused { block } if batch >= 2 => block.clamp(1, LANE_BLOCK),
+        ExecPlan::StreamParallel { threads: t } => {
+            // Per-path dispatch with stream parallelism inside each path.
+            let inner = SigConfig { threads: t, ..cfg.clone() };
+            return batch_per_path(paths, batch, stream, spec, &inner, threads);
+        }
+        _ => {
+            // Scalar: serial reference sweep per path, paths over threads.
+            let inner = SigConfig { threads: 1, ..cfg.clone() };
+            return batch_per_path(paths, batch, stream, spec, &inner, threads);
+        }
+    };
     let point = |lane: usize, i: usize| -> &[f32] {
         let i = if cfg.inverse { eff_len - 1 - i } else { i };
         let base = lane * path_len;
@@ -276,8 +310,7 @@ pub fn signature_batch_with(
             None => &paths[base + i * d..base + (i + 1) * d],
         }
     };
-    let threads = cfg.threads.max(1);
-    let (block, n_blocks) = lane_block_partition(batch, threads);
+    let n_blocks = batch.div_ceil(block);
     let blocks =
         crate::substrate::pool::parallel_map_indexed(n_blocks, threads, |bi| {
             let l0 = bi * block;
@@ -310,6 +343,29 @@ pub fn signature_batch_with(
     for (bi, rows) in blocks.into_iter().enumerate() {
         let o = bi * block * len;
         out[o..o + rows.len()].copy_from_slice(&rows);
+    }
+    Ok(out)
+}
+
+/// Per-path execution of a batch: each path runs [`signature_with`] under
+/// `inner` (whose `threads` is the *within-path* budget), with paths
+/// distributed over `outer_threads`.
+fn batch_per_path(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    inner: &SigConfig,
+    outer_threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let plen = stream * spec.d();
+    let len = spec.sig_len();
+    let rows = crate::substrate::pool::parallel_map_indexed(batch, outer_threads, |b| {
+        signature_with(&paths[b * plen..(b + 1) * plen], stream, spec, inner)
+    });
+    let mut out = vec![0.0f32; batch * len];
+    for (b, row) in rows.into_iter().enumerate() {
+        out[b * len..(b + 1) * len].copy_from_slice(&row?);
     }
     Ok(out)
 }

@@ -13,13 +13,14 @@ pub mod combine;
 pub mod forward;
 
 pub use backward::{
-    signature_batch_vjp, signature_stream_vjp, signature_vjp, signature_vjp_with, SigVjpResult,
-    PARALLEL_BACKWARD_MIN_POINTS,
+    signature_batch_vjp, signature_batch_vjp_planned, signature_stream_vjp, signature_vjp,
+    signature_vjp_with, SigVjpResult, PARALLEL_BACKWARD_MIN_POINTS,
 };
 pub use combine::{multi_signature_combine, signature_combine, signature_combine_vjp};
 pub use forward::{
-    signature, signature_batch, signature_batch_with, signature_stream, signature_stream_with,
-    signature_with, two_point_signature, two_point_signature_into, LANE_BLOCK,
+    signature, signature_batch, signature_batch_planned, signature_batch_with, signature_stream,
+    signature_stream_with, signature_with, two_point_signature, two_point_signature_into,
+    LANE_BLOCK,
 };
 
 /// Options mirroring Signatory's `signature(...)` keyword arguments.
