@@ -1,0 +1,191 @@
+//! Batched-logsignature benchmark: lane-fused throughput vs per-path
+//! scalar dispatch, swept over lane counts L ∈ {1, 4, 8, 16} and all
+//! three bases (Expanded / Lyndon / Words) at d ∈ {2, 3}, depth 4, short
+//! streams — logsignature parity for the serving regime `batch_lanes.rs`
+//! measures on the signature side. Both sides run single-threaded so the
+//! speedup isolates lane utilisation (the log + projection epilogue is
+//! identical per-lane work on both sides, so it dilutes — never inflates —
+//! the reported speedup). Writes the machine-readable record the perf
+//! trajectory tracks:
+//!
+//!     cargo bench --bench logsig_batch             # -> BENCH_logsig.json
+//!     cargo bench --bench logsig_batch -- --check  # CI structural smoke:
+//!         reduced iterations; the bitwise gates (forward AND backward,
+//!         every basis x lane point) plus JSON well-formedness are the
+//!         assertions — timing-free, so CI noise cannot flake the job.
+//!
+//! Every timed point is first gated on bitwise equality between the
+//! lane-fused rows and per-path scalar dispatch, so a lane-kernel or
+//! epilogue regression fails the bench before any number is recorded.
+
+use signax::bench::logsig_json;
+use signax::logsignature::{
+    logsignature_batch, logsignature_batch_vjp, logsignature_vjp_with, logsignature_with,
+    LogSigBasis, LogSigPlan,
+};
+use signax::signature::SigConfig;
+use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
+use signax::substrate::pool::default_threads;
+use signax::substrate::rng::Rng;
+use signax::ta::SigSpec;
+
+const DEPTH: usize = 4;
+const STREAM: usize = 32;
+
+fn basis_name(b: LogSigBasis) -> &'static str {
+    match b {
+        LogSigBasis::Expanded => "expanded",
+        LogSigBasis::Lyndon => "lyndon",
+        LogSigBasis::Words => "words",
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    let cfg = if check {
+        BenchConfig {
+            warmup: 1,
+            repeats: 5,
+            budget: std::time::Duration::from_secs(2),
+            min_repeats: 2,
+        }
+    } else {
+        BenchConfig {
+            warmup: 1,
+            repeats: 30,
+            budget: std::time::Duration::from_secs(6),
+            min_repeats: 3,
+        }
+    };
+    println!(
+        "{:<9} {:<9} {:>3} {:>4} {:>12} {:>12} {:>8}",
+        "op", "basis", "d", "L", "per-path", "lane-fused", "speedup"
+    );
+    let serial = SigConfig::serial();
+    let mut records: Vec<(&str, &str, usize, usize, usize, f64, f64)> = vec![];
+    for &d in &[2usize, 3] {
+        let spec = SigSpec::new(d, DEPTH)?;
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis)?;
+            let dim = plan.dim();
+            let name = basis_name(basis);
+            for &lanes in &[1usize, 4, 8, 16] {
+                let mut rng = Rng::new(0x106 ^ ((d as u64) << 8) ^ lanes as u64);
+                let paths = signax::data::random_batch(&mut rng, lanes, STREAM, d, 0.2);
+                let plen = STREAM * d;
+                // Correctness gate before timing: lane-fused == per-path
+                // scalar, bitwise, forward and backward.
+                let batched = logsignature_batch(&paths, lanes, STREAM, &spec, &plan, 1)?;
+                let cots = rng.normal_vec(lanes * dim, 1.0);
+                let batched_grad =
+                    logsignature_batch_vjp(&paths, lanes, STREAM, &spec, &plan, &cots, 1)?;
+                for l in 0..lanes {
+                    let single = logsignature_with(
+                        &paths[l * plen..(l + 1) * plen],
+                        STREAM,
+                        &spec,
+                        &plan,
+                        &serial,
+                    )?;
+                    anyhow::ensure!(
+                        batched[l * dim..(l + 1) * dim] == single[..],
+                        "forward lane {l} of {name} d={d} L={lanes} diverged from scalar"
+                    );
+                    let single_grad = logsignature_vjp_with(
+                        &paths[l * plen..(l + 1) * plen],
+                        STREAM,
+                        &spec,
+                        &plan,
+                        &serial,
+                        &cots[l * dim..(l + 1) * dim],
+                    )?;
+                    anyhow::ensure!(
+                        batched_grad[l * plen..(l + 1) * plen] == single_grad[..],
+                        "backward lane {l} of {name} d={d} L={lanes} diverged from scalar"
+                    );
+                }
+                let fwd_per_path = bench(&cfg, || {
+                    for b in 0..lanes {
+                        black_box(
+                            logsignature_with(
+                                &paths[b * plen..(b + 1) * plen],
+                                STREAM,
+                                &spec,
+                                &plan,
+                                &serial,
+                            )
+                            .unwrap(),
+                        );
+                    }
+                })
+                .best_secs();
+                let fwd_lane = bench(&cfg, || {
+                    black_box(logsignature_batch(&paths, lanes, STREAM, &spec, &plan, 1).unwrap());
+                })
+                .best_secs();
+                println!(
+                    "{:<9} {:<9} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+                    "forward",
+                    name,
+                    d,
+                    lanes,
+                    fmt_secs(fwd_per_path),
+                    fmt_secs(fwd_lane),
+                    fwd_per_path / fwd_lane
+                );
+                records.push(("forward", name, d, lanes, STREAM, fwd_per_path, fwd_lane));
+                let bwd_per_path = bench(&cfg, || {
+                    for b in 0..lanes {
+                        black_box(
+                            logsignature_vjp_with(
+                                &paths[b * plen..(b + 1) * plen],
+                                STREAM,
+                                &spec,
+                                &plan,
+                                &serial,
+                                &cots[b * dim..(b + 1) * dim],
+                            )
+                            .unwrap(),
+                        );
+                    }
+                })
+                .best_secs();
+                let bwd_lane = bench(&cfg, || {
+                    black_box(
+                        logsignature_batch_vjp(&paths, lanes, STREAM, &spec, &plan, &cots, 1)
+                            .unwrap(),
+                    );
+                })
+                .best_secs();
+                println!(
+                    "{:<9} {:<9} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+                    "backward",
+                    name,
+                    d,
+                    lanes,
+                    fmt_secs(bwd_per_path),
+                    fmt_secs(bwd_lane),
+                    bwd_per_path / bwd_lane
+                );
+                records.push(("backward", name, d, lanes, STREAM, bwd_per_path, bwd_lane));
+            }
+        }
+    }
+    let json = logsig_json(default_threads(), DEPTH, &records);
+    std::fs::write("BENCH_logsig.json", &json)?;
+    println!("\nwrote BENCH_logsig.json");
+    if check {
+        // Structural smoke (timing-free, like adaptive_dispatch --check):
+        // every basis x lane point passed its bitwise gate above; assert
+        // the artifact parses and covers the full sweep.
+        let parsed = signax::substrate::json::Json::parse(&json)?;
+        let pts = parsed
+            .get("points")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("points missing"))?;
+        // 2 ops x 3 bases x 4 lane counts x 2 channel counts.
+        anyhow::ensure!(pts.len() == 48, "expected 48 points, got {}", pts.len());
+        println!("smoke ok: 48 points bitwise-gated and recorded");
+    }
+    Ok(())
+}

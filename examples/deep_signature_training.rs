@@ -108,7 +108,7 @@ fn main() -> anyhow::Result<()> {
     // motivating setting, §1). Same pipeline, wider/deeper signature,
     // single-threaded (like-for-like resources, as in §6.1).
     println!("\n--- signature-dominated regime (d_out=6, depth=5, 1 thread) ---");
-    let big = ModelConfig { d_in: 2, hidden: 16, d_out: 6, depth: 5 };
+    let big = ModelConfig { d_in: 2, hidden: 16, d_out: 6, depth: 5, logsig: false };
     let mut rng2 = Rng::new(77);
     let pb0 = Params::init(&big, &mut rng2);
     let big_batches: Vec<(Vec<f32>, Vec<f32>)> =

@@ -10,7 +10,7 @@
 //!
 //!     cargo run --release --example handwriting_features
 
-use signax::logsignature::{LogSigBasis, LogSigPlan};
+use signax::logsignature::{LogSigBasis, LogSigPlan, LogSigWorkspace};
 use signax::path::Path;
 use signax::substrate::rng::Rng;
 use signax::ta::SigSpec;
@@ -33,16 +33,33 @@ fn stroke(rng: &mut Rng, writer: usize, len: usize) -> Vec<f32> {
 }
 
 /// Windowed logsignature features over `windows` dyadic sub-intervals.
-fn features(path: &Path, plan: &LogSigPlan, windows: usize) -> anyhow::Result<Vec<f32>> {
+/// One `LogSigWorkspace` is threaded through every query (and reused
+/// across all 400 strokes by the caller), so the feature extraction loop
+/// — the hot path of this example — allocates nothing per window beyond
+/// the output buffer itself.
+fn features(
+    path: &Path,
+    plan: &LogSigPlan,
+    windows: usize,
+    ws: &mut LogSigWorkspace,
+) -> anyhow::Result<Vec<f32>> {
     let n = path.len();
-    let mut out = Vec::with_capacity((windows + 1) * plan.dim());
+    let dim = plan.dim();
+    let mut out = vec![0.0f32; (windows + 1) * dim];
     // Whole-stroke logsignature plus per-window logsignatures, all O(1)
-    // queries against the precomputation (§4.2).
-    out.extend(path.logsig_query(0, n - 1, plan)?);
+    // queries against the precomputation (§4.2), allocation-free via
+    // `Path::logsig_query_into`.
+    path.logsig_query_into(0, n - 1, plan, ws, &mut out[..dim])?;
     for w in 0..windows {
         let i = w * (n - 1) / windows;
         let j = (w + 1) * (n - 1) / windows;
-        out.extend(path.logsig_query(i, j.max(i + 1), plan)?);
+        path.logsig_query_into(
+            i,
+            j.max(i + 1),
+            plan,
+            ws,
+            &mut out[(w + 1) * dim..(w + 2) * dim],
+        )?;
     }
     Ok(out)
 }
@@ -54,14 +71,16 @@ fn main() -> anyhow::Result<()> {
     let feat_dim = (windows + 1) * plan.dim();
     let mut rng = Rng::new(99);
 
-    // Dataset: 200 strokes per writer.
+    // Dataset: 200 strokes per writer. One logsig workspace serves every
+    // query of every stroke.
+    let mut ws = LogSigWorkspace::new(&spec);
     let mut xs: Vec<Vec<f32>> = vec![];
     let mut ys: Vec<f32> = vec![];
     for _ in 0..400 {
         let writer = (rng.next_u64() & 1) as usize;
         let s = stroke(&mut rng, writer, len);
         let p = Path::new(&spec, &s, len)?;
-        xs.push(features(&p, &plan, windows)?);
+        xs.push(features(&p, &plan, windows, &mut ws)?);
         ys.push(writer as f32);
     }
     println!(

@@ -3,8 +3,8 @@
 //!
 //!     cargo run --release --example quickstart
 
-use signax::logsignature::{logsignature, LogSigBasis, LogSigPlan};
-use signax::signature::{signature, signature_stream, signature_vjp};
+use signax::logsignature::{logsignature_with, LogSigBasis, LogSigPlan};
+use signax::signature::{signature, signature_stream, signature_vjp, SigConfig};
 use signax::substrate::rng::Rng;
 use signax::ta::SigSpec;
 use signax::words::witt_dimension;
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     // Logsignature in the paper's efficient Words basis (§4.3).
     let plan = LogSigPlan::new(&spec, LogSigBasis::Words)?;
-    let logsig = logsignature(&path, stream, &spec, &plan);
+    let logsig = logsignature_with(&path, stream, &spec, &plan, &SigConfig::serial())?;
     println!(
         "logsignature: {} values (Witt dimension w({channels},{depth}) = {})",
         logsig.len(),

@@ -12,7 +12,9 @@
 //!   long single streams; also writes `BENCH_backward.json`.
 //! - `batch`: the batch-lane engine vs per-path dispatch in the serving
 //!   regime (many short streams, small d); the standalone
-//!   `benches/batch_lanes.rs` sweep writes `BENCH_batch.json`.
+//!   `benches/batch_lanes.rs` sweep writes `BENCH_batch.json`, and the
+//!   logsig mirror `benches/logsig_batch.rs` (lane count x basis) writes
+//!   `BENCH_logsig.json`.
 //!
 //! Rows mirror the paper's: `esig_like`, `iisignature_like` (baselines),
 //! `signax CPU (no parallel)`, `signax CPU (parallel)` and `signax XLA`
@@ -23,5 +25,6 @@
 pub mod tables;
 
 pub use tables::{
-    backward_json, batch_json, dispatch_json, run_table, sessions_json, table_ids, BenchCtx, Scale,
+    backward_json, batch_json, dispatch_json, logsig_json, run_table, sessions_json, table_ids,
+    BenchCtx, Scale,
 };

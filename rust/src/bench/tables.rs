@@ -2,7 +2,7 @@
 
 use crate::baselines::{esig_like, iisignature_like};
 use crate::logsignature::{
-    logsignature_from_sig, logsignature_vjp, logsignature_vjp_with, LogSigBasis, LogSigPlan,
+    logsignature_from_sig, logsignature_vjp_with, LogSigBasis, LogSigPlan,
 };
 use crate::path::Path;
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
@@ -388,13 +388,17 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                 Some(
                     bench(&cfg, || {
                         for b in 0..batch {
-                            black_box(logsignature_vjp(
-                                &paths[b * per_path..(b + 1) * per_path],
-                                stream,
-                                &sspec,
-                                wp,
-                                &gcot,
-                            ));
+                            black_box(
+                                logsignature_vjp_with(
+                                    &paths[b * per_path..(b + 1) * per_path],
+                                    stream,
+                                    &sspec,
+                                    wp,
+                                    &SigConfig::serial(),
+                                    &gcot,
+                                )
+                                .unwrap(),
+                            );
                         }
                     })
                     .best_secs(),
@@ -489,13 +493,15 @@ fn benchmark_table(ctx: &BenchCtx, id: &str, tspec: &TableSpec) -> Table {
                 Some(
                     bench(&cfg, || {
                         let out = crate::substrate::pool::parallel_map_indexed(batch, ctx.threads, |b| {
-                            logsignature_vjp(
+                            logsignature_vjp_with(
                                 &paths[b * per_path..(b + 1) * per_path],
                                 stream,
                                 &sspec,
                                 wp,
+                                &SigConfig::serial(),
                                 &gcot,
                             )
+                            .unwrap()
                         });
                         black_box(out);
                     })
@@ -833,6 +839,36 @@ pub fn backward_json(hw_threads: usize, records: &[(usize, usize, f64, f64)]) ->
     s
 }
 
+/// Render batched-logsignature bench records as `BENCH_logsig.json`:
+/// `points[]` of `(op, basis, d, lanes, stream, per_path_s, lane_s,
+/// speedup)` under top-level `hw_threads` / `depth`. Written by
+/// `benches/logsig_batch.rs` — the logsig mirror of [`batch_json`], swept
+/// over lane count x basis; every timed point is first gated on bitwise
+/// equality between the lane-fused rows and per-path scalar dispatch.
+#[allow(clippy::type_complexity)]
+pub fn logsig_json(
+    hw_threads: usize,
+    depth: usize,
+    records: &[(&str, &str, usize, usize, usize, f64, f64)],
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"logsig_batch\",\n");
+    s.push_str(&format!("  \"depth\": {depth},\n"));
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(op, basis, d, lanes, stream, per_path, lane)) in records.iter().enumerate() {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"op\": \"{op}\", \"basis\": \"{basis}\", \"d\": {d}, \"lanes\": {lanes}, \
+             \"stream\": {stream}, \"per_path_s\": {per_path:.9}, \"lane_s\": {lane:.9}, \
+             \"speedup\": {:.3}}}{comma}\n",
+            per_path / lane
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Render session-streaming bench records as `BENCH_sessions.json`:
 /// `points[]` of `(threads, wall_s, feeds_per_s)` under top-level
 /// `hw_threads`. Written by `benches/session_streaming.rs`; the feed
@@ -981,6 +1017,25 @@ mod tests {
         assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.5));
         assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn logsig_json_well_formed() {
+        let json = logsig_json(
+            8,
+            4,
+            &[
+                ("forward", "words", 2, 16, 32, 1.0, 0.5),
+                ("backward", "lyndon", 2, 16, 32, 3.0, 2.0),
+            ],
+        );
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("depth").and_then(|v| v.as_f64()), Some(4.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
+        assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(1.5));
     }
 
     #[test]

@@ -1,15 +1,23 @@
-//! Dynamic batcher: gathers same-shaped requests, pads to the artifact's
-//! fixed batch size, executes once, scatters the rows back.
+//! Dynamic row batcher: gathers same-shaped requests, pads to the
+//! executable's fixed batch size, executes once, scatters the rows back.
 //!
 //! XLA executables are compiled for static shapes, so serving variable
 //! traffic requires exactly this component — it is the signature-serving
-//! analogue of the continuous batcher in LLM serving systems.
+//! analogue of the continuous batcher in LLM serving systems. The native
+//! lane-fused microbatcher (`Signature` *and* `LogSignature` requests)
+//! rides the same type with a different backend.
+//!
+//! The pending-queue / condvar / deadline machinery lives in the unified
+//! [`super::flusher::GroupBatcher`]; this module is the row-shaped
+//! instantiation — its executor assembles the padded row matrix, runs the
+//! [`BatchBackend`], and scatters per-row results (or the batch error) to
+//! every caller's channel.
 
-use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
+use super::flusher::{GroupBatcher, GroupExecutor};
 use super::metrics::Metrics;
 
 /// Shape key of a batchable computation.
@@ -50,194 +58,99 @@ pub trait BatchBackend: Send + Sync + 'static {
 
 type RowSender = mpsc::Sender<anyhow::Result<Vec<f32>>>;
 
-struct Pending {
-    /// The shape this batch executes as — including its capacity, fixed
-    /// by the first submitter. The queue key deliberately excludes the
-    /// capacity (see [`queue_key`]): the adaptive planner may hand later
-    /// submitters of the same logical shape a different capacity, and
-    /// they must still coalesce into this pending batch rather than fork
-    /// a parallel queue.
-    shape: BatchShape,
-    rows: Vec<f32>,
-    senders: Vec<RowSender>,
-    deadline: Instant,
-}
-
-/// Queue identity of a shape: everything except the batch capacity.
+/// Queue identity of a shape: everything except the batch capacity. The
+/// adaptive planner may hand later submitters of the same logical shape a
+/// different capacity, and they must still coalesce into the pending batch
+/// (whose capacity the first submitter fixed) rather than fork a parallel
+/// queue.
 fn queue_key(shape: &BatchShape) -> BatchShape {
     BatchShape { batch: 0, ..*shape }
 }
 
-struct Shared {
-    queues: Mutex<HashMap<BatchShape, Pending>>,
-    wake: Condvar,
-    shutdown: Mutex<bool>,
-}
-
-/// The dynamic batcher. Submit rows; receive each row's result on its own
-/// channel once the batch executes (full, or linger elapsed).
-pub struct Batcher {
-    shared: Arc<Shared>,
+/// The row-shaped [`GroupExecutor`]: pads the gathered rows to the group
+/// capacity, runs the backend once, and scatters per-row results.
+struct RowExecutor {
     backend: Arc<dyn BatchBackend>,
     metrics: Arc<Metrics>,
-    linger: Duration,
-    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GroupExecutor for RowExecutor {
+    /// The capacity-stripped shape ([`queue_key`]).
+    type Key = BatchShape;
+    type Item = (Vec<f32>, RowSender);
+
+    fn execute(&self, key: BatchShape, capacity: usize, items: Vec<Self::Item>) {
+        use std::sync::atomic::Ordering;
+        let shape = BatchShape { batch: capacity, ..key };
+        let n_real = items.len();
+        let mut padded = Vec::with_capacity(shape.batch * shape.in_row());
+        let mut senders = Vec::with_capacity(n_real);
+        for (row, tx) in items {
+            padded.extend_from_slice(&row);
+            senders.push(tx);
+        }
+        padded.resize(shape.batch * shape.in_row(), 0.0);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.real_rows.fetch_add(n_real as u64, Ordering::Relaxed);
+        self.metrics.padded_rows.fetch_add(shape.batch as u64, Ordering::Relaxed);
+        match self.backend.run(&shape, &padded, n_real) {
+            Ok(out) => {
+                debug_assert!(out.len() >= n_real * shape.out_dim);
+                for (i, tx) in senders.into_iter().enumerate() {
+                    let row = out[i * shape.out_dim..(i + 1) * shape.out_dim].to_vec();
+                    let _ = tx.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                // One *batch* failure; the per-request `errors` counter is
+                // bumped by `Coordinator::call` when the error reaches each
+                // caller, so counting it here too would double-count.
+                self.metrics.batch_failures.fetch_add(1, Ordering::Relaxed);
+                for tx in senders {
+                    let _ = tx.send(Err(anyhow::anyhow!("batch execution failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+/// The dynamic row batcher: a [`GroupBatcher`] instantiation keyed on the
+/// capacity-stripped [`BatchShape`]. Submit rows; receive each row's
+/// result on its own channel once the batch executes (full, or linger
+/// elapsed).
+pub struct Batcher {
+    inner: GroupBatcher<RowExecutor>,
 }
 
 impl Batcher {
     pub fn new(backend: Arc<dyn BatchBackend>, metrics: Arc<Metrics>, linger: Duration) -> Batcher {
-        let shared = Arc::new(Shared {
-            queues: Mutex::new(HashMap::new()),
-            wake: Condvar::new(),
-            shutdown: Mutex::new(false),
-        });
-        let flusher = {
-            let shared = Arc::clone(&shared);
-            let backend = Arc::clone(&backend);
-            let metrics = Arc::clone(&metrics);
-            std::thread::Builder::new()
-                .name("signax-batcher".into())
-                .spawn(move || flusher_loop(shared, backend, metrics, linger))
-                .expect("spawn batcher")
-        };
-        Batcher { shared, backend, metrics, linger, flusher: Some(flusher) }
+        let executor = Arc::new(RowExecutor { backend, metrics });
+        Batcher { inner: GroupBatcher::new("signax-batcher", executor, linger) }
     }
 
     /// Submit one request row. Returns a receiver for this row's output.
     /// If the batch fills, it is executed on the calling thread (keeping
     /// tail latency off the flusher); otherwise the flusher handles it at
     /// the linger deadline.
+    ///
+    /// Takes the row by value: it moves into the pending group untouched,
+    /// so the only copy on the hot path is the executor's gather into the
+    /// padded batch matrix — the same single copy the pre-unification
+    /// batcher paid.
     pub fn submit(
         &self,
         shape: BatchShape,
-        row: &[f32],
+        row: Vec<f32>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
         anyhow::ensure!(row.len() == shape.in_row(), "row has wrong width");
-        anyhow::ensure!(shape.batch >= 1, "batch capacity must be at least 1");
         let (tx, rx) = mpsc::channel();
-        let key = queue_key(&shape);
-        let full_batch = {
-            let mut queues = self.shared.queues.lock().unwrap();
-            let pending = queues.entry(key).or_insert_with(|| Pending {
-                shape,
-                rows: Vec::with_capacity(shape.batch * shape.in_row()),
-                senders: Vec::with_capacity(shape.batch),
-                deadline: Instant::now() + self.linger,
-            });
-            pending.rows.extend_from_slice(row);
-            pending.senders.push(tx);
-            if pending.senders.len() >= pending.shape.batch {
-                queues.remove(&key)
-            } else {
-                self.shared.wake.notify_one();
-                None
-            }
-        };
-        if let Some(pending) = full_batch {
-            execute_batch(&*self.backend, &self.metrics, pending);
-        }
+        self.inner.submit(queue_key(&shape), shape.batch, (row, tx))?;
         Ok(rx)
     }
 
     /// Force-flush everything (used on shutdown and by tests).
     pub fn flush(&self) {
-        let drained: Vec<Pending> = {
-            let mut queues = self.shared.queues.lock().unwrap();
-            queues.drain().map(|(_, p)| p).collect()
-        };
-        for pending in drained {
-            execute_batch(&*self.backend, &self.metrics, pending);
-        }
-    }
-}
-
-impl Drop for Batcher {
-    fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
-        self.shared.wake.notify_all();
-        if let Some(h) = self.flusher.take() {
-            let _ = h.join();
-        }
-        self.flush();
-    }
-}
-
-fn flusher_loop(
-    shared: Arc<Shared>,
-    backend: Arc<dyn BatchBackend>,
-    metrics: Arc<Metrics>,
-    linger: Duration,
-) {
-    loop {
-        if *shared.shutdown.lock().unwrap() {
-            return;
-        }
-        let mut due: Vec<Pending> = vec![];
-        {
-            let mut queues = shared.queues.lock().unwrap();
-            let now = Instant::now();
-            let due_keys: Vec<BatchShape> = queues
-                .iter()
-                .filter(|(_, p)| p.deadline <= now)
-                .map(|(k, _)| *k)
-                .collect();
-            for k in due_keys {
-                if let Some(p) = queues.remove(&k) {
-                    due.push(p);
-                }
-            }
-        }
-        for pending in due {
-            execute_batch(&*backend, &metrics, pending);
-        }
-        // Re-acquire the lock and recompute the earliest deadline *after*
-        // executing: a submit that landed mid-execution had its notify
-        // dropped on the floor (nobody was waiting), so sleeping on a
-        // deadline captured before execution would let that batch idle a
-        // stale full linger — flushing at up to 2x linger.
-        let guard = shared.queues.lock().unwrap();
-        let now = Instant::now();
-        if guard.values().any(|p| p.deadline <= now) {
-            continue; // something became due while executing: drain first
-        }
-        // Sleep until the earliest deadline (or linger, when idle).
-        let wait = guard
-            .values()
-            .map(|p| p.deadline)
-            .min()
-            .map(|dl| dl.saturating_duration_since(now))
-            .unwrap_or(linger)
-            .max(Duration::from_micros(100));
-        let _unused = shared.wake.wait_timeout(guard, wait).unwrap();
-    }
-}
-
-fn execute_batch(backend: &dyn BatchBackend, metrics: &Metrics, pending: Pending) {
-    use std::sync::atomic::Ordering;
-    let shape = pending.shape;
-    let n_real = pending.senders.len();
-    let mut padded = pending.rows;
-    padded.resize(shape.batch * shape.in_row(), 0.0);
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics.real_rows.fetch_add(n_real as u64, Ordering::Relaxed);
-    metrics.padded_rows.fetch_add(shape.batch as u64, Ordering::Relaxed);
-    match backend.run(&shape, &padded, n_real) {
-        Ok(out) => {
-            debug_assert!(out.len() >= n_real * shape.out_dim);
-            for (i, tx) in pending.senders.into_iter().enumerate() {
-                let row = out[i * shape.out_dim..(i + 1) * shape.out_dim].to_vec();
-                let _ = tx.send(Ok(row));
-            }
-        }
-        Err(e) => {
-            // One *batch* failure; the per-request `errors` counter is
-            // bumped by `Coordinator::call` when the error reaches each
-            // caller, so counting it here too would double-count.
-            metrics.batch_failures.fetch_add(1, Ordering::Relaxed);
-            for tx in pending.senders {
-                let _ = tx.send(Err(anyhow::anyhow!("batch execution failed: {e}")));
-            }
-        }
+        self.inner.flush();
     }
 }
 
@@ -300,7 +213,7 @@ mod tests {
         for _ in 0..3 {
             let row = rng.normal_vec(sh.in_row(), 0.5);
             expected.push(crate::signature::signature(&row, 4, &spec));
-            rxs.push(batcher.submit(sh, &row).unwrap());
+            rxs.push(batcher.submit(sh, row).unwrap());
         }
         for (rx, exp) in rxs.into_iter().zip(expected) {
             let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
@@ -323,8 +236,8 @@ mod tests {
         let sh = shape(8); // capacity 8, we submit 2
         let mut rng = crate::substrate::rng::Rng::new(2);
         let row = rng.normal_vec(sh.in_row(), 0.5);
-        let rx = batcher.submit(sh, &row).unwrap();
-        let rx2 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let rx = batcher.submit(sh, row).unwrap();
+        let rx2 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5)).unwrap();
         let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         assert_eq!(got.len(), sh.out_dim);
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
@@ -352,7 +265,7 @@ mod tests {
             for _ in 0..n_req {
                 let row = g.normal_vec(sh.in_row(), 0.5);
                 expected.push(crate::signature::signature(&row, 4, &spec));
-                rxs.push(batcher.submit(sh, &row).unwrap());
+                rxs.push(batcher.submit(sh, row).unwrap());
             }
             for (rx, exp) in rxs.into_iter().zip(expected) {
                 let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
@@ -371,8 +284,8 @@ mod tests {
         );
         let sh = shape(2);
         let mut rng = crate::substrate::rng::Rng::new(3);
-        let rx1 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
-        let rx2 = batcher.submit(sh, &rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let rx1 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let rx2 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5)).unwrap();
         assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         // One failed batch execution; request-level errors are counted by
@@ -423,10 +336,10 @@ mod tests {
         let sh = shape(8); // never fills: only the linger flushes it
         let mut rng = crate::substrate::rng::Rng::new(9);
         let row = rng.normal_vec(sh.in_row(), 0.5);
-        let _rx_a = batcher.submit(sh, &row).unwrap();
+        let _rx_a = batcher.submit(sh, row.clone()).unwrap();
         std::thread::sleep(Duration::from_millis(375));
         let t0 = std::time::Instant::now();
-        let rx_b = batcher.submit(sh, &row).unwrap();
+        let rx_b = batcher.submit(sh, row).unwrap();
         assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         let waited = t0.elapsed();
         assert!(
@@ -451,9 +364,9 @@ mod tests {
         let mut second = shape(2);
         second.batch = 8; // planner "widened" the capacity mid-window
         let mut rng = crate::substrate::rng::Rng::new(21);
-        let rx1 = batcher.submit(first, &rng.normal_vec(first.in_row(), 0.5)).unwrap();
+        let rx1 = batcher.submit(first, rng.normal_vec(first.in_row(), 0.5)).unwrap();
         // Fills the capacity-2 pending batch despite asking for 8.
-        let rx2 = batcher.submit(second, &rng.normal_vec(second.in_row(), 0.5)).unwrap();
+        let rx2 = batcher.submit(second, rng.normal_vec(second.in_row(), 0.5)).unwrap();
         assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         let snap = metrics.snapshot();
@@ -469,7 +382,7 @@ mod tests {
             Arc::new(Metrics::default()),
             Duration::from_millis(5),
         );
-        assert!(batcher.submit(shape(2), &[0.0; 3]).is_err());
+        assert!(batcher.submit(shape(2), vec![0.0; 3]).is_err());
     }
 
     #[test]
@@ -486,8 +399,8 @@ mod tests {
         sh_b.in_dim = 6 * 2;
         sh_b.kind = 0;
         let mut rng = crate::substrate::rng::Rng::new(4);
-        let rx_a = batcher.submit(sh_a, &rng.normal_vec(sh_a.in_row(), 0.5)).unwrap();
-        let rx_b = batcher.submit(sh_b, &rng.normal_vec(sh_b.in_row(), 0.5)).unwrap();
+        let rx_a = batcher.submit(sh_a, rng.normal_vec(sh_a.in_row(), 0.5)).unwrap();
+        let rx_b = batcher.submit(sh_b, rng.normal_vec(sh_b.in_row(), 0.5)).unwrap();
         assert!(rx_a.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert_eq!(metrics.snapshot().batches, 2);

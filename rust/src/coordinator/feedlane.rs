@@ -15,12 +15,18 @@
 //! a lone streaming client keeps the direct scalar path and never pays
 //! the linger — the same latency contract the `native_batch = 0` escape
 //! hatch documents for stateless traffic.
+//!
+//! The pending-queue / condvar / deadline machinery (including the
+//! stale-linger and missed-wakeup fixes) lives in the unified
+//! [`super::flusher::GroupBatcher`]; this module is only the feed-shaped
+//! instantiation — net deletion relative to the pre-unification copy that
+//! mirrored `batcher.rs` line for line.
 
-use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
+use super::flusher::{GroupBatcher, GroupExecutor};
 use super::session::{SessionId, SessionManager};
 
 /// Spec key feeds are grouped under: `(d, depth)`.
@@ -33,50 +39,47 @@ struct FeedItem {
     tx: mpsc::Sender<anyhow::Result<Vec<f32>>>,
 }
 
-struct PendingFeeds {
-    /// Capacity fixed by the first submitter of this pending group (the
-    /// planner may quote later submitters differently; see the batcher's
-    /// identical rule).
-    capacity: usize,
-    items: Vec<FeedItem>,
-    deadline: Instant,
-}
-
-struct Shared {
-    queues: Mutex<HashMap<FeedKey, PendingFeeds>>,
-    wake: Condvar,
-    shutdown: Mutex<bool>,
-}
-
-/// The feed-lane batcher. Submit feeds; each receives its whole-stream
-/// signature on its own channel once its group executes (full, or linger
-/// elapsed).
-pub struct FeedLane {
-    shared: Arc<Shared>,
+/// The feed-shaped [`GroupExecutor`]: flushes a gathered group into one
+/// [`SessionManager::feed_batch`] call and delivers each feed's result.
+/// Dispatch metrics are not taken here: `feed_batch` owns the
+/// `feed_lane_batches` / dispatch counters, so every flush path counts
+/// identically.
+struct FeedExecutor {
     sessions: Arc<SessionManager>,
-    linger: Duration,
-    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GroupExecutor for FeedExecutor {
+    type Key = FeedKey;
+    type Item = FeedItem;
+
+    fn execute(&self, _key: FeedKey, _capacity: usize, items: Vec<FeedItem>) {
+        let mut txs = Vec::with_capacity(items.len());
+        let feeds: Vec<(SessionId, Vec<f32>, usize)> = items
+            .into_iter()
+            .map(|it| {
+                let FeedItem { session, points, count, tx } = it;
+                txs.push(tx);
+                (session, points, count)
+            })
+            .collect();
+        let results = self.sessions.feed_batch(feeds);
+        for (tx, result) in txs.into_iter().zip(results) {
+            let _ = tx.send(result);
+        }
+    }
+}
+
+/// The feed-lane batcher: a [`GroupBatcher`] instantiation keyed on the
+/// spec. Submit feeds; each receives its whole-stream signature on its own
+/// channel once its group executes (full, or linger elapsed).
+pub struct FeedLane {
+    inner: GroupBatcher<FeedExecutor>,
 }
 
 impl FeedLane {
-    /// Dispatch metrics are not taken here: [`SessionManager::feed_batch`]
-    /// owns the `feed_lane_batches` / dispatch counters, so every flush
-    /// path counts identically.
     pub fn new(sessions: Arc<SessionManager>, linger: Duration) -> FeedLane {
-        let shared = Arc::new(Shared {
-            queues: Mutex::new(HashMap::new()),
-            wake: Condvar::new(),
-            shutdown: Mutex::new(false),
-        });
-        let flusher = {
-            let shared = Arc::clone(&shared);
-            let sessions = Arc::clone(&sessions);
-            std::thread::Builder::new()
-                .name("signax-feedlane".into())
-                .spawn(move || flusher_loop(shared, sessions, linger))
-                .expect("spawn feed lane")
-        };
-        FeedLane { shared, sessions, linger, flusher: Some(flusher) }
+        let executor = Arc::new(FeedExecutor { sessions });
+        FeedLane { inner: GroupBatcher::new("signax-feedlane", executor, linger) }
     }
 
     /// Submit one feed with the capacity the planner quoted for its spec.
@@ -90,105 +93,14 @@ impl FeedLane {
         points: Vec<f32>,
         count: usize,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
-        anyhow::ensure!(capacity >= 1, "feed-lane capacity must be at least 1");
         let (tx, rx) = mpsc::channel();
-        let full = {
-            let mut queues = self.shared.queues.lock().unwrap();
-            let pending = queues.entry(key).or_insert_with(|| PendingFeeds {
-                capacity,
-                items: Vec::with_capacity(capacity),
-                deadline: Instant::now() + self.linger,
-            });
-            pending.items.push(FeedItem { session, points, count, tx });
-            if pending.items.len() >= pending.capacity {
-                queues.remove(&key)
-            } else {
-                self.shared.wake.notify_one();
-                None
-            }
-        };
-        if let Some(pending) = full {
-            execute_feeds(&self.sessions, pending.items);
-        }
+        self.inner.submit(key, capacity, FeedItem { session, points, count, tx })?;
         Ok(rx)
     }
 
     /// Force-flush everything (shutdown and tests).
     pub fn flush(&self) {
-        let drained: Vec<PendingFeeds> = {
-            let mut queues = self.shared.queues.lock().unwrap();
-            queues.drain().map(|(_, p)| p).collect()
-        };
-        for pending in drained {
-            execute_feeds(&self.sessions, pending.items);
-        }
-    }
-}
-
-impl Drop for FeedLane {
-    fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
-        self.shared.wake.notify_all();
-        if let Some(h) = self.flusher.take() {
-            let _ = h.join();
-        }
-        self.flush();
-    }
-}
-
-fn flusher_loop(shared: Arc<Shared>, sessions: Arc<SessionManager>, linger: Duration) {
-    loop {
-        if *shared.shutdown.lock().unwrap() {
-            return;
-        }
-        let mut due: Vec<PendingFeeds> = vec![];
-        {
-            let mut queues = shared.queues.lock().unwrap();
-            let now = Instant::now();
-            let due_keys: Vec<FeedKey> =
-                queues.iter().filter(|(_, p)| p.deadline <= now).map(|(k, _)| *k).collect();
-            for k in due_keys {
-                if let Some(p) = queues.remove(&k) {
-                    due.push(p);
-                }
-            }
-        }
-        for pending in due {
-            execute_feeds(&sessions, pending.items);
-        }
-        // Recompute the earliest deadline *after* executing — a submit
-        // landing mid-execution dropped its notify on the floor (nobody
-        // was waiting), so sleeping on a pre-execution deadline would let
-        // it idle a stale full linger (same fix as the row batcher).
-        let guard = shared.queues.lock().unwrap();
-        let now = Instant::now();
-        if guard.values().any(|p| p.deadline <= now) {
-            continue;
-        }
-        let wait = guard
-            .values()
-            .map(|p| p.deadline)
-            .min()
-            .map(|dl| dl.saturating_duration_since(now))
-            .unwrap_or(linger)
-            .max(Duration::from_micros(100));
-        let _unused = shared.wake.wait_timeout(guard, wait).unwrap();
-    }
-}
-
-fn execute_feeds(sessions: &SessionManager, items: Vec<FeedItem>) {
-    let mut txs = Vec::with_capacity(items.len());
-    let feeds: Vec<(SessionId, Vec<f32>, usize)> = items
-        .into_iter()
-        .map(|it| {
-            let FeedItem { session, points, count, tx } = it;
-            txs.push(tx);
-            (session, points, count)
-        })
-        .collect();
-    let results = sessions.feed_batch(feeds);
-    for (tx, result) in txs.into_iter().zip(results) {
-        let _ = tx.send(result);
+        self.inner.flush();
     }
 }
 
@@ -272,5 +184,13 @@ mod tests {
         let rx_good = lane.submit((2, 3), 2, good, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
         assert!(rx_bad.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         assert!(rx_good.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    }
+
+    #[test]
+    fn zero_capacity_rejected_through_the_generic() {
+        // The unified generic owns the capacity >= 1 contract.
+        let (sessions, _metrics) = setup();
+        let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_millis(10));
+        assert!(lane.submit((2, 3), 0, SessionId(1), vec![0.0; 4], 2).is_err());
     }
 }

@@ -1,0 +1,314 @@
+//! The **unified dynamic-batcher core**: one pending-queue / condvar /
+//! deadline-recompute flusher implementation, generic over (key, item,
+//! execute).
+//!
+//! Three gathering surfaces share this exact machinery — the XLA/native
+//! row batcher ([`super::batcher::Batcher`], stateless `Signature` and
+//! `LogSignature` microbatches) and the stateful feed lane
+//! ([`super::feedlane::FeedLane`]) are thin instantiations. Before this
+//! module, `feedlane.rs` deliberately mirrored `batcher.rs` line for line,
+//! which meant every concurrency fix (the stale-linger deadline recompute,
+//! the missed-wakeup handling) had to land twice; now they live in exactly
+//! one place and are pinned by regression tests at this level.
+//!
+//! Semantics, shared by every instantiation:
+//!
+//! - Items submitted under one key coalesce into a pending group whose
+//!   **capacity is fixed by the first submitter** (the adaptive planner
+//!   may quote later submitters a different capacity; they must still
+//!   join this group rather than fork a parallel queue).
+//! - A group that reaches its capacity executes **inline on the
+//!   submitting thread** (tail latency stays off the flusher).
+//! - Otherwise the flusher thread fires the group once its linger
+//!   deadline passes. After executing due groups the flusher re-acquires
+//!   the lock and **recomputes the earliest deadline**: a submit that
+//!   landed mid-execution dropped its condvar notify on the floor (nobody
+//!   was waiting), so sleeping on a deadline captured before execution
+//!   would let that group idle a stale full linger — flushing at up to 2x
+//!   linger.
+//! - Dropping the batcher shuts the flusher down and force-flushes every
+//!   pending group, so no submitter is left waiting on a dead queue.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Executes one flushed group of pending items. The executor owns result
+/// delivery (items typically carry their response channel), so the
+/// generic core never needs to know what an item produces.
+pub trait GroupExecutor: Send + Sync + 'static {
+    /// Queue identity. Submissions with equal keys coalesce.
+    type Key: Copy + Eq + Hash + Send + Sync + 'static;
+    /// One pending unit of work.
+    type Item: Send + 'static;
+
+    /// Run one group. `capacity` is the first submitter's quoted capacity
+    /// (the group's execution width); `items` holds between 1 and
+    /// `capacity` entries in submission order.
+    fn execute(&self, key: Self::Key, capacity: usize, items: Vec<Self::Item>);
+}
+
+struct Pending<I> {
+    /// Fixed by the first submitter of this group (see module docs).
+    capacity: usize,
+    items: Vec<I>,
+    deadline: Instant,
+}
+
+struct Shared<K, I> {
+    queues: Mutex<HashMap<K, Pending<I>>>,
+    wake: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// The generic dynamic batcher (see the module docs for semantics).
+pub struct GroupBatcher<E: GroupExecutor> {
+    shared: Arc<Shared<E::Key, E::Item>>,
+    executor: Arc<E>,
+    linger: Duration,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<E: GroupExecutor> GroupBatcher<E> {
+    /// `thread_name` labels the flusher thread (one per instantiation, so
+    /// stack traces attribute lingering batches to the right surface).
+    pub fn new(thread_name: &str, executor: Arc<E>, linger: Duration) -> GroupBatcher<E> {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            wake: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let flusher = {
+            let shared = Arc::clone(&shared);
+            let executor = Arc::clone(&executor);
+            std::thread::Builder::new()
+                .name(thread_name.into())
+                .spawn(move || flusher_loop(shared, executor, linger))
+                .expect("spawn batcher flusher")
+        };
+        GroupBatcher { shared, executor, linger, flusher: Some(flusher) }
+    }
+
+    /// Submit one item under `key` with the capacity quoted for it. If the
+    /// group fills, it executes on the calling thread before returning;
+    /// otherwise the flusher fires it at the linger deadline.
+    pub fn submit(&self, key: E::Key, capacity: usize, item: E::Item) -> anyhow::Result<()> {
+        anyhow::ensure!(capacity >= 1, "batch capacity must be at least 1");
+        let full = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            let pending = queues.entry(key).or_insert_with(|| Pending {
+                capacity,
+                items: Vec::with_capacity(capacity),
+                deadline: Instant::now() + self.linger,
+            });
+            pending.items.push(item);
+            if pending.items.len() >= pending.capacity {
+                queues.remove(&key)
+            } else {
+                self.shared.wake.notify_one();
+                None
+            }
+        };
+        if let Some(pending) = full {
+            self.executor.execute(key, pending.capacity, pending.items);
+        }
+        Ok(())
+    }
+
+    /// Force-flush everything (used on shutdown and by tests).
+    pub fn flush(&self) {
+        let drained: Vec<(E::Key, Pending<E::Item>)> = {
+            let mut queues = self.shared.queues.lock().unwrap();
+            queues.drain().collect()
+        };
+        for (key, pending) in drained {
+            self.executor.execute(key, pending.capacity, pending.items);
+        }
+    }
+}
+
+impl<E: GroupExecutor> Drop for GroupBatcher<E> {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.wake.notify_all();
+        if let Some(h) = self.flusher.take() {
+            let _ = h.join();
+        }
+        self.flush();
+    }
+}
+
+fn flusher_loop<E: GroupExecutor>(
+    shared: Arc<Shared<E::Key, E::Item>>,
+    executor: Arc<E>,
+    linger: Duration,
+) {
+    loop {
+        if *shared.shutdown.lock().unwrap() {
+            return;
+        }
+        let mut due: Vec<(E::Key, Pending<E::Item>)> = vec![];
+        {
+            let mut queues = shared.queues.lock().unwrap();
+            let now = Instant::now();
+            let due_keys: Vec<E::Key> = queues
+                .iter()
+                .filter(|(_, p)| p.deadline <= now)
+                .map(|(k, _)| *k)
+                .collect();
+            for k in due_keys {
+                if let Some(p) = queues.remove(&k) {
+                    due.push((k, p));
+                }
+            }
+        }
+        for (key, pending) in due {
+            executor.execute(key, pending.capacity, pending.items);
+        }
+        // Re-acquire the lock and recompute the earliest deadline *after*
+        // executing: a submit that landed mid-execution had its notify
+        // dropped on the floor (nobody was waiting), so sleeping on a
+        // deadline captured before execution would let that batch idle a
+        // stale full linger — flushing at up to 2x linger.
+        let guard = shared.queues.lock().unwrap();
+        let now = Instant::now();
+        if guard.values().any(|p| p.deadline <= now) {
+            continue; // something became due while executing: drain first
+        }
+        // Sleep until the earliest deadline (or linger, when idle).
+        let wait = guard
+            .values()
+            .map(|p| p.deadline)
+            .min()
+            .map(|dl| dl.saturating_duration_since(now))
+            .unwrap_or(linger)
+            .max(Duration::from_micros(100));
+        let _unused = shared.wake.wait_timeout(guard, wait).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    /// Test executor: records (key, capacity, group size) per execution
+    /// and acks every item's channel; optionally sleeps once to catch the
+    /// flusher mid-execution.
+    struct Recorder {
+        executions: Mutex<Vec<(u32, usize, usize)>>,
+        slow_once: AtomicBool,
+        total_items: AtomicUsize,
+    }
+
+    impl Recorder {
+        fn new() -> Arc<Recorder> {
+            Arc::new(Recorder {
+                executions: Mutex::new(vec![]),
+                slow_once: AtomicBool::new(false),
+                total_items: AtomicUsize::new(0),
+            })
+        }
+    }
+
+    impl GroupExecutor for Recorder {
+        type Key = u32;
+        type Item = (usize, mpsc::Sender<usize>);
+
+        fn execute(&self, key: u32, capacity: usize, items: Vec<Self::Item>) {
+            if self.slow_once.swap(false, Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(450));
+            }
+            self.executions.lock().unwrap().push((key, capacity, items.len()));
+            self.total_items.fetch_add(items.len(), Ordering::SeqCst);
+            for (v, tx) in items {
+                let _ = tx.send(v);
+            }
+        }
+    }
+
+    #[test]
+    fn full_group_executes_inline_and_keys_isolate() {
+        let rec = Recorder::new();
+        // Linger long enough that only fullness can flush.
+        let b = GroupBatcher::new("test-flusher", Arc::clone(&rec), Duration::from_secs(60));
+        let (tx, rx) = mpsc::channel();
+        b.submit(7, 2, (1, tx.clone())).unwrap();
+        // A different key must not fill key 7's group.
+        b.submit(8, 2, (9, tx.clone())).unwrap();
+        assert!(rec.executions.lock().unwrap().is_empty());
+        b.submit(7, 2, (2, tx)).unwrap();
+        // Key 7 filled: executed inline, capacity 2, both items, in order.
+        assert_eq!(*rec.executions.lock().unwrap(), vec![(7, 2, 2)]);
+        let got: Vec<usize> = (0..2).map(|_| rx.try_recv().unwrap()).collect();
+        assert_eq!(got, vec![1, 2]);
+        // Drop force-flushes the lone key-8 item.
+        drop(b);
+        assert_eq!(rec.total_items.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn capacity_is_fixed_by_the_first_submitter() {
+        let rec = Recorder::new();
+        let b = GroupBatcher::new("test-flusher", Arc::clone(&rec), Duration::from_secs(60));
+        let (tx, _rx) = mpsc::channel();
+        b.submit(1, 2, (0, tx.clone())).unwrap();
+        // The second submitter quotes a wider capacity; the group still
+        // executes at the first quote once two items are pending.
+        b.submit(1, 8, (1, tx)).unwrap();
+        assert_eq!(*rec.executions.lock().unwrap(), vec![(1, 2, 2)]);
+    }
+
+    #[test]
+    fn linger_flushes_partial_groups() {
+        let rec = Recorder::new();
+        let b = GroupBatcher::new("test-flusher", Arc::clone(&rec), Duration::from_millis(10));
+        let (tx, rx) = mpsc::channel();
+        b.submit(3, 8, (5, tx)).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 5);
+        assert_eq!(*rec.executions.lock().unwrap(), vec![(3, 8, 1)]);
+        drop(b);
+        assert_eq!(rec.total_items.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        let rec = Recorder::new();
+        let b = GroupBatcher::new("test-flusher", rec, Duration::from_millis(10));
+        let (tx, _rx) = mpsc::channel();
+        assert!(b.submit(0, 0, (0, tx)).is_err());
+    }
+
+    #[test]
+    fn submit_during_execution_is_not_delayed_by_a_stale_deadline() {
+        // The unified regression for the missed-wakeup bug, pinned at the
+        // generic level so every instantiation inherits the fix: a submit
+        // landing while the flusher is mid-`execute` loses its notify, and
+        // a flusher that slept on a deadline computed *before* execution
+        // would flush the new group at up to 2x linger late. Timeline with
+        // linger = 300ms and a 450ms first execution: A's group flushes at
+        // ~300ms and executes until ~750ms; B lands at ~375ms (deadline
+        // ~675ms). Fixed flusher: B flushes when the execution ends
+        // (waited ~375ms). Stale-deadline flusher: B waits a further full
+        // linger (waited ~675ms). The 550ms bound sits between the two.
+        let rec = Recorder::new();
+        let linger = Duration::from_millis(300);
+        let b = GroupBatcher::new("test-flusher", Arc::clone(&rec), linger);
+        let (tx, rx_a) = mpsc::channel();
+        rec.slow_once.store(true, Ordering::SeqCst);
+        b.submit(1, 8, (0, tx)).unwrap(); // never fills: only the linger flushes
+        std::thread::sleep(Duration::from_millis(375));
+        let (tx_b, rx_b) = mpsc::channel();
+        let t0 = Instant::now();
+        b.submit(1, 8, (1, tx_b)).unwrap();
+        assert_eq!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap(), 1);
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(550),
+            "group flushed only after {waited:?} (stale linger deadline)"
+        );
+        let _ = rx_a.recv_timeout(Duration::from_secs(5));
+    }
+}

@@ -11,6 +11,11 @@ pub struct Metrics {
     pub xla_requests: AtomicU64,
     /// Streaming (session) requests served through `Coordinator::call`.
     pub stream_requests: AtomicU64,
+    /// Logsignature requests served (stateless `LogSignature` on either
+    /// backend plus streaming `LogSigQueryInterval`) — the logsig surface
+    /// now rides the same adaptive microbatcher as signatures, so its
+    /// share of traffic is worth watching on its own.
+    pub logsig_requests: AtomicU64,
     pub batches: AtomicU64,
     /// Total rows submitted to XLA including padding.
     pub padded_rows: AtomicU64,
@@ -57,6 +62,7 @@ pub struct MetricsSnapshot {
     pub native_requests: u64,
     pub xla_requests: u64,
     pub stream_requests: u64,
+    pub logsig_requests: u64,
     pub batches: u64,
     pub padded_rows: u64,
     pub real_rows: u64,
@@ -89,6 +95,7 @@ impl Metrics {
             native_requests: self.native_requests.load(Ordering::Relaxed),
             xla_requests: self.xla_requests.load(Ordering::Relaxed),
             stream_requests: self.stream_requests.load(Ordering::Relaxed),
+            logsig_requests: self.logsig_requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
             real_rows: self.real_rows.load(Ordering::Relaxed),
@@ -131,13 +138,14 @@ impl Metrics {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests={} (native={} xla={} stream={}) batches={} rows={}/{} errors={} \
+            "requests={} (native={} xla={} stream={} logsig={}) batches={} rows={}/{} errors={} \
              batch_failures={} mean_latency={:?} sessions={} updates={} open={} \
              resident_bytes={} evicted={} expired={}",
             self.requests,
             self.native_requests,
             self.xla_requests,
             self.stream_requests,
+            self.logsig_requests,
             self.batches,
             self.real_rows,
             self.padded_rows,
@@ -186,6 +194,15 @@ mod tests {
         assert_eq!(s.mean_latency, Duration::from_millis(2));
         assert!((m.padding_ratio() - 0.25).abs() < 1e-12);
         assert!(s.render().contains("requests=4"));
+    }
+
+    #[test]
+    fn logsig_counter_roundtrips_and_renders() {
+        let m = Metrics::default();
+        m.logsig_requests.store(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.logsig_requests, 5);
+        assert!(s.render().contains("logsig=5"));
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //!                       ├──(shape matches an artifact?)──▶ Batcher ──▶ XLA Engine
 //!                       │                                    (pad to artifact batch)
 //!                       └──(no artifact)──▶ ExecPlanner ──▶ native microbatcher
-//!                             (adaptive per-shape capacity)   (lane-fused sweep, ta::batch)
+//!                             (adaptive per-shape capacity)   (lane-fused sweep, ta::batch;
+//!                                          │                   Sig AND LogSig kinds — logsig
+//!                                          │                   rows add a log + Words-basis
+//!                                          │                   projection epilogue)
 //!                                          └──(rare shape / capacity 1)──▶ direct scalar
 //! ```
 //!
@@ -22,10 +25,19 @@
 //! the planner — not the call sites — decides the execution strategy and
 //! the microbatch capacity per shape ([`DispatchConfig`]). Shapes with
 //! batch peers in recent traffic linger and lane-fuse; rare shapes (and
-//! lone streaming feeders) serve directly with zero added latency. The
-//! old `native_batch` knob survives as a compatibility alias
-//! ([`CoordinatorConfig::with_native_batch`]), including its documented
-//! `0` escape hatch: microbatching and the feed lane fully off.
+//! lone streaming feeders) serve directly with zero added latency.
+//! `Signature` and `LogSignature` requests both ride this path (logsig
+//! shapes key the mix under their own kind, so the two surfaces adapt on
+//! their own traffic). The old `native_batch` knob survives as a
+//! compatibility alias ([`CoordinatorConfig::with_native_batch`]),
+//! including its documented `0` escape hatch: microbatching and the feed
+//! lane fully off for every native request kind.
+//!
+//! **One batcher implementation**: the pending-queue / condvar /
+//! deadline-recompute flusher machinery lives once, in
+//! [`flusher::GroupBatcher`] — the XLA/native row [`Batcher`] and the
+//! stateful [`FeedLane`] are thin instantiations, so concurrency fixes
+//! (stale-linger recompute, missed wakeups) land exactly once.
 //!
 //! Batching exists because XLA executables are compiled for fixed shapes:
 //! requests with the same `(kind, L, d, N)` are gathered until the artifact
@@ -43,12 +55,14 @@
 
 pub mod batcher;
 pub mod feedlane;
+pub mod flusher;
 pub mod metrics;
 pub mod router;
 pub mod session;
 
 pub use batcher::{BatchBackend, BatchShape, Batcher};
 pub use feedlane::FeedLane;
+pub use flusher::{GroupBatcher, GroupExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Backend, Coordinator, CoordinatorConfig, DispatchConfig, Request, Response};
 pub use session::{SessionConfig, SessionId, SessionManager};

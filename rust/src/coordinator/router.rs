@@ -10,19 +10,21 @@
 //! ([`crate::exec::ExecPlanner`], configured through [`DispatchConfig`]):
 //! the coordinator records every request's shape into the planner's
 //! observed shape-mix histogram, and the planner decides per shape whether
-//! to microbatch (same-spec `Signature` requests gathered within one
-//! linger window execute as a single **lane-fused** sweep through
-//! [`crate::ta::batch`]) or to serve directly (shapes too rare in recent
-//! traffic to find batch peers skip the linger entirely). Stateful `Feed`
-//! requests get the same treatment through the **feed lane**
+//! to microbatch (same-spec `Signature` **and `LogSignature`** requests
+//! gathered within one linger window execute as a single **lane-fused**
+//! sweep through [`crate::ta::batch`] — logsig rows add a per-row log +
+//! Words-basis projection epilogue from the shared plan cache) or to
+//! serve directly (shapes too rare in recent traffic to find batch peers
+//! skip the linger entirely). Stateful `Feed` requests get the same
+//! treatment through the **feed lane**
 //! ([`super::feedlane::FeedLane`]): once two or more distinct sessions
 //! stream the same spec, their feeds coalesce into one
 //! `Path::update_batch` sweep — bitwise identical per session to scalar
-//! feeding.
+//! feeding. All three gathering surfaces are instantiations of one
+//! unified batcher generic ([`super::flusher::GroupBatcher`]).
 
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchBackend, BatchShape, Batcher};
@@ -30,7 +32,11 @@ use super::feedlane::FeedLane;
 use super::metrics::Metrics;
 use super::session::{SessionConfig, SessionId, SessionManager};
 use crate::exec::{ExecPlan, ExecPlanner, ShapeKey, WorkShape};
-use crate::logsignature::{logsignature_from_sig, LogSigBasis, LogSigPlan};
+use crate::logsignature::{
+    logsignature_batch_planned, logsignature_with, LogSigPlan, WordsPlanCache,
+};
+#[cfg(test)]
+use crate::logsignature::LogSigBasis;
 use crate::runtime::{ArtifactKind, EngineHandle, Registry};
 use crate::signature::{signature_batch_planned, signature_vjp_with, signature_with, SigConfig};
 #[cfg(test)]
@@ -43,6 +49,9 @@ const KIND_LOGSIG: u8 = 1;
 const KIND_SIGGRAD: u8 = 2;
 /// Native lane-fused signature microbatch (no artifact involved).
 const KIND_SIG_NATIVE: u8 = 3;
+/// Native lane-fused *logsignature* microbatch: the same lane-interleaved
+/// signature sweep plus the per-row log + Words-basis projection epilogue.
+const KIND_LOGSIG_NATIVE: u8 = 4;
 
 /// A request against the coordinator.
 #[derive(Clone, Debug)]
@@ -245,20 +254,28 @@ impl BatchBackend for XlaBackend {
 }
 
 /// Native batch backend: executes a flushed microbatch of same-spec
-/// signature requests as one lane-fused sweep over the *real* rows only
-/// (no static-shape constraint, so the padding slots are never computed).
-/// Each row's result is bitwise identical to a stand-alone
-/// [`crate::signature::signature`] call.
+/// signature *or logsignature* requests as one lane-fused sweep over the
+/// *real* rows only (no static-shape constraint, so the padding slots are
+/// never computed). Each signature row is bitwise identical to a
+/// stand-alone [`crate::signature::signature`] call; each logsignature row
+/// is bitwise identical to the direct scalar serve (the same signature
+/// sweep plus the same per-row log + projection epilogue, through the
+/// shared Words-basis plan cache).
 struct NativeLaneBackend {
     threads: usize,
     planner: Arc<ExecPlanner>,
     metrics: Arc<Metrics>,
+    /// Shared Words-basis plan cache (see [`WordsPlanCache`]).
+    plans: Arc<WordsPlanCache>,
 }
 
 impl BatchBackend for NativeLaneBackend {
     fn run(&self, shape: &BatchShape, padded: &[f32], n_real: usize) -> anyhow::Result<Vec<f32>> {
         use std::sync::atomic::Ordering;
-        anyhow::ensure!(shape.kind == KIND_SIG_NATIVE, "unexpected native batch kind");
+        anyhow::ensure!(
+            shape.kind == KIND_SIG_NATIVE || shape.kind == KIND_LOGSIG_NATIVE,
+            "unexpected native batch kind"
+        );
         let spec = SigSpec::new(shape.d, shape.depth)?;
         // No static-shape constraint here: compute only the real rows (a
         // sparse flush must not pay for the padding slots). The plan comes
@@ -279,6 +296,24 @@ impl BatchBackend for NativeLaneBackend {
             }
         };
         let cfg = SigConfig { threads: self.threads, ..SigConfig::serial() };
+        if shape.kind == KIND_LOGSIG_NATIVE {
+            let lplan = self.plans.get(shape.d, shape.depth)?;
+            anyhow::ensure!(
+                shape.out_dim == lplan.dim(),
+                "logsig microbatch out_dim {} does not match the plan dimension {}",
+                shape.out_dim,
+                lplan.dim()
+            );
+            return logsignature_batch_planned(
+                &padded[..rows * shape.in_row()],
+                rows,
+                shape.length,
+                &spec,
+                &lplan,
+                &cfg,
+                plan,
+            );
+        }
         signature_batch_planned(
             &padded[..rows * shape.in_row()],
             rows,
@@ -307,7 +342,10 @@ pub struct Coordinator {
     /// shape-mix histogram all native dispatch flows through.
     planner: Arc<ExecPlanner>,
     metrics: Arc<Metrics>,
-    plans: Mutex<HashMap<(usize, usize), Arc<LogSigPlan>>>,
+    /// Words-basis logsignature plans ([`WordsPlanCache`]), shared with
+    /// the native microbatch backend so one build serves direct and
+    /// batched rows alike.
+    plans: Arc<WordsPlanCache>,
 }
 
 impl Coordinator {
@@ -330,12 +368,14 @@ impl Coordinator {
             }
             _ => (None, None, None),
         };
+        let plans = Arc::new(WordsPlanCache::new());
         let native_batcher = if cfg.dispatch.microbatch >= 2 {
             Some(Batcher::new(
                 Arc::new(NativeLaneBackend {
                     threads: cfg.native_threads,
                     planner: Arc::clone(&planner),
                     metrics: Arc::clone(&metrics),
+                    plans: Arc::clone(&plans),
                 }),
                 Arc::clone(&metrics),
                 cfg.linger,
@@ -363,7 +403,7 @@ impl Coordinator {
             planner,
             metrics,
             cfg,
-            plans: Mutex::new(HashMap::new()),
+            plans,
         })
     }
 
@@ -401,24 +441,57 @@ impl Coordinator {
     }
 
     fn plan(&self, d: usize, depth: usize) -> anyhow::Result<Arc<LogSigPlan>> {
-        let mut plans = self.plans.lock().unwrap();
-        if let Some(p) = plans.get(&(d, depth)) {
-            // Cache integrity: an entry filed under the wrong key must
-            // error, never silently gather wrong indices. Field checks
-            // only — no SigSpec construction on the hot hit path.
-            anyhow::ensure!(
-                p.spec().d() == d && p.spec().depth() == depth,
-                "plan cache corrupted: entry for (d={d}, depth={depth}) was built for \
-                 (d={}, depth={})",
-                p.spec().d(),
-                p.spec().depth()
-            );
-            return Ok(Arc::clone(p));
+        self.plans.get(d, depth)
+    }
+
+    /// Shared serving path for stateless native `Signature` /
+    /// `LogSignature` requests: record the shape into the planner's mix,
+    /// quote the adaptive per-shape capacity, and either coalesce into the
+    /// lane-fused microbatcher (capacity >= 2) or run `direct` — the
+    /// scalar reference computation, bitwise identical to a microbatched
+    /// lone row. One implementation so a fix to the capacity quote or the
+    /// batcher plumbing can never make the two request kinds diverge.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_native_stateless(
+        &self,
+        key: ShapeKey,
+        kind: u8,
+        stream: usize,
+        d: usize,
+        depth: usize,
+        out_dim: usize,
+        path: Vec<f32>,
+        direct: impl FnOnce(Vec<f32>) -> anyhow::Result<Vec<f32>>,
+    ) -> anyhow::Result<Vec<f32>> {
+        use std::sync::atomic::Ordering;
+        self.planner.record_shape(key);
+        self.publish_shape_mix();
+        // Capacity 1 = serve directly, no linger; the planner adapts it
+        // per shape after warm-up when adaptive dispatch is on.
+        let capacity = match &self.native_batcher {
+            Some(_) if self.cfg.dispatch.adaptive => {
+                self.planner.microbatch_capacity(self.cfg.dispatch.microbatch, key)
+            }
+            Some(_) => self.cfg.dispatch.microbatch,
+            None => 0,
+        };
+        if let (Some(nb), true) = (&self.native_batcher, capacity >= 2) {
+            let shape = BatchShape {
+                kind,
+                batch: capacity,
+                length: stream,
+                d,
+                depth,
+                in_dim: stream * d,
+                out_dim,
+            };
+            let rx = nb.submit(shape, path)?;
+            return rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("native batcher dropped request"))?;
         }
-        let spec = SigSpec::new(d, depth)?;
-        let plan = Arc::new(LogSigPlan::new(&spec, LogSigBasis::Words)?);
-        plans.insert((d, depth), Arc::clone(&plan));
-        Ok(plan)
+        self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
+        direct(path)
     }
 
     /// Serve one request synchronously, routing per configuration.
@@ -444,9 +517,12 @@ impl Coordinator {
             return Ok(resp);
         }
         // Try the XLA path when configured and an artifact matches.
+        // (`&mut` so a routed request can move its buffers into the
+        // batcher instead of cloning; once an artifact matched, the
+        // native fallback below never sees the request again.)
         if self.cfg.prefer_xla {
             if let (Some(reg), Some(batcher)) = (&self.registry, &self.batcher) {
-                let routed = match &req {
+                let routed = match &mut req {
                     Request::Signature { path, stream, d, depth } => reg
                         .find_batchable(ArtifactKind::Sig, 1, *stream, *d, *depth)
                         .map(|e| {
@@ -456,29 +532,30 @@ impl Coordinator {
                                 length: *stream,
                                 d: *d,
                                 depth: *depth,
-                                in_dim: stream * d,
+                                in_dim: *stream * *d,
                                 out_dim: e.out_dim,
                             };
-                            batcher.submit(shape, path)
+                            batcher.submit(shape, std::mem::take(path))
                         }),
                     Request::LogSignature { path, stream, d, depth } => reg
                         .find_batchable(ArtifactKind::LogSig, 1, *stream, *d, *depth)
                         .map(|e| {
+                            self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
                             let shape = BatchShape {
                                 kind: KIND_LOGSIG,
                                 batch: e.batch,
                                 length: *stream,
                                 d: *d,
                                 depth: *depth,
-                                in_dim: stream * d,
+                                in_dim: *stream * *d,
                                 out_dim: e.out_dim,
                             };
-                            batcher.submit(shape, path)
+                            batcher.submit(shape, std::mem::take(path))
                         }),
                     Request::SignatureGrad { path, stream, d, depth, cotangent } => reg
                         .find_batchable(ArtifactKind::SigGrad, 1, *stream, *d, *depth)
                         .map(|e| {
-                            let mut row = path.clone();
+                            let mut row = std::mem::take(path);
                             row.extend_from_slice(cotangent);
                             let shape = BatchShape {
                                 kind: KIND_SIGGRAD,
@@ -489,7 +566,7 @@ impl Coordinator {
                                 in_dim: row.len(),
                                 out_dim: e.out_dim,
                             };
-                            batcher.submit(shape, &row)
+                            batcher.submit(shape, row)
                         }),
                     // Streaming requests were already dispatched above.
                     _ => None,
@@ -511,52 +588,42 @@ impl Coordinator {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
-                // Every native signature shape is recorded into the
-                // planner's mix; the planner then quotes this shape's
-                // microbatch capacity (its base ceiling when adaptation
-                // is off). Capacity 1 = serve directly, no linger.
-                let key = ShapeKey::signature(d, depth, stream);
-                self.planner.record_shape(key);
-                self.publish_shape_mix();
-                let capacity = match &self.native_batcher {
-                    Some(_) if self.cfg.dispatch.adaptive => {
-                        self.planner.microbatch_capacity(self.cfg.dispatch.microbatch, key)
-                    }
-                    Some(_) => self.cfg.dispatch.microbatch,
-                    None => 0,
-                };
-                if let (Some(nb), true) = (&self.native_batcher, capacity >= 2) {
-                    // Lane-fused microbatching: same-spec requests gathered
-                    // within the linger window execute as one interleaved
-                    // sweep; the result per row is bitwise identical to a
-                    // stand-alone signature call.
-                    let shape = BatchShape {
-                        kind: KIND_SIG_NATIVE,
-                        batch: capacity,
-                        length: stream,
-                        d,
-                        depth,
-                        in_dim: stream * d,
-                        out_dim: spec.sig_len(),
-                    };
-                    let rx = nb.submit(shape, &path)?;
-                    let values = rx
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("native batcher dropped request"))??;
-                    self.metrics.native_requests.fetch_add(1, Ordering::Relaxed);
-                    return Ok(Response { values, backend: Backend::Native, session: None });
-                }
-                // Direct dispatch (microbatching disabled, or the shape is
-                // too rare to find batch peers): the scalar reference
-                // sweep, bitwise identical to a microbatched lone row.
-                self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
-                signature_with(&path, stream, &spec, &SigConfig::serial())?
+                // Lane-fused microbatching via the shared stateless path:
+                // same-spec requests gathered within the linger window
+                // execute as one interleaved sweep, each row bitwise
+                // identical to a stand-alone signature call.
+                self.serve_native_stateless(
+                    ShapeKey::signature(d, depth, stream),
+                    KIND_SIG_NATIVE,
+                    stream,
+                    d,
+                    depth,
+                    spec.sig_len(),
+                    path,
+                    |p| signature_with(&p, stream, &spec, &SigConfig::serial()),
+                )?
             }
             Request::LogSignature { path, stream, d, depth } => {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
-                let sig = signature_with(&path, stream, &spec, &SigConfig::serial())?;
-                logsignature_from_sig(&sig, &spec, self.plan(d, depth)?.as_ref())?
+                anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
+                self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
+                // Logsignature parity: same shared path, keyed under its
+                // own logsig kind (sig and logsig adapt — and batch —
+                // independently), with a per-row log + Words-projection
+                // epilogue on the flushed sweep. `native_batch = 0`
+                // disables batching here too.
+                let lplan = self.plan(d, depth)?;
+                self.serve_native_stateless(
+                    ShapeKey::logsignature(d, depth, stream),
+                    KIND_LOGSIG_NATIVE,
+                    stream,
+                    d,
+                    depth,
+                    lplan.dim(),
+                    path,
+                    |p| logsignature_with(&p, stream, &spec, &lplan, &SigConfig::serial()),
+                )?
             }
             Request::SignatureGrad { path, stream, d, depth, cotangent } => {
                 let spec = SigSpec::new(d, depth)?;
@@ -665,6 +732,9 @@ impl Coordinator {
                 (self.sessions.query(*session, *i, *j)?, Some(*session))
             }
             Request::LogSigQueryInterval { session, i, j } => {
+                self.metrics
+                    .logsig_requests
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 // Resolve the session once; the plan comes from the
                 // coordinator's cache keyed by the session's (d, depth).
                 let out = self
@@ -965,7 +1035,7 @@ mod tests {
             sessions: Arc::new(SessionManager::new(Arc::clone(&metrics))),
             planner: Arc::new(ExecPlanner::new(2)),
             metrics,
-            plans: Mutex::new(HashMap::new()),
+            plans: Arc::new(WordsPlanCache::new()),
         };
         let mut rng = Rng::new(10);
         let reqs: Vec<Request> = (0..2)
@@ -1022,6 +1092,75 @@ mod tests {
     }
 
     #[test]
+    fn native_logsig_microbatch_coalesces_same_spec_requests_bitwise() {
+        // The PR 5 acceptance test: six concurrent same-spec LogSignature
+        // requests inside one linger window must execute as ONE lane-fused
+        // microbatch (1 batch, 6 real rows), each caller receiving the
+        // Words-basis logsignature bitwise identical to a scalar serve.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                // Generous linger: all six caller threads must land in one
+                // pending batch even if thread spawn stalls; the batch
+                // never fills (6 < 8), so the flusher fires it.
+                linger: Duration::from_millis(250),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(22);
+        let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
+        let reqs: Vec<Request> = paths
+            .iter()
+            .map(|p| Request::LogSignature { path: p.clone(), stream: 8, d: 2, depth: 3 })
+            .collect();
+        let resps = c.call_many(reqs);
+        for (p, r) in paths.iter().zip(&resps) {
+            let r = r.as_ref().expect("response");
+            assert_eq!(r.backend, Backend::Native);
+            let scalar =
+                logsignature_with(p, 8, &spec, &plan, &SigConfig::serial()).unwrap();
+            assert_eq!(r.values, scalar, "microbatched logsig row != scalar serve");
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.logsig_requests, 6);
+        assert_eq!(snap.batches, 1, "same-spec logsig requests share one microbatch");
+        assert_eq!(snap.real_rows, 6);
+        assert_eq!(snap.padded_rows, 8);
+    }
+
+    #[test]
+    fn sig_and_logsig_of_one_shape_batch_separately() {
+        // Same (d, depth, stream) but different kinds: a Signature and a
+        // LogSignature request must never share a microbatch (different
+        // output widths and epilogues), yet both still serve exactly.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(10),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(23);
+        let p = rng.normal_vec(6 * 2, 0.4);
+        let resps = c.call_many(vec![
+            Request::Signature { path: p.clone(), stream: 6, d: 2, depth: 3 },
+            Request::LogSignature { path: p.clone(), stream: 6, d: 2, depth: 3 },
+        ]);
+        assert_eq!(resps[0].as_ref().unwrap().values, signature(&p, 6, &spec));
+        assert_eq!(
+            resps[1].as_ref().unwrap().values,
+            logsignature_with(&p, 6, &spec, &plan, &SigConfig::serial()).unwrap()
+        );
+        assert_eq!(c.metrics().snapshot().batches, 2, "kinds must not share a queue");
+    }
+
+    #[test]
     fn native_microbatch_separates_ragged_shapes() {
         // A ragged mix (different stream lengths) cannot share a lane
         // sweep: the batcher keys on shape, so each shape flushes as its
@@ -1073,6 +1212,16 @@ mod tests {
             .call(Request::Signature { path: path.clone(), stream: 6, d: 2, depth: 3 })
             .unwrap();
         assert_eq!(resp.values, signature(&path, 6, &spec));
+        // LogSignature rides the same escape hatch: direct scalar serve,
+        // never the batcher.
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let lresp = c
+            .call(Request::LogSignature { path: path.clone(), stream: 6, d: 2, depth: 3 })
+            .unwrap();
+        assert_eq!(
+            lresp.values,
+            logsignature_with(&path, 6, &spec, &plan, &SigConfig::serial()).unwrap()
+        );
         // Streaming feeds bypass the feed lane too.
         let open = c
             .call(Request::OpenStream {

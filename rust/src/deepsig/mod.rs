@@ -3,15 +3,21 @@
 //! comparison can be reproduced on like-for-like resources:
 //!
 //! - model: pointwise feedforward (tanh) swept over the sequence → hidden
-//!   path → `Sig^N` → learnt linear map → binary logit; BCE loss; SGD.
+//!   path → `Sig^N` (or, with [`ModelConfig::logsig`], the Words-basis
+//!   `LogSig^N` — §4.3's compressed readout) → learnt linear map → binary
+//!   logit; BCE loss; SGD.
 //! - backward: fully handwritten — BCE/linear/tanh VJPs here, the
 //!   signature VJP from [`crate::signature::backward`] (reversibility) or
 //!   from [`crate::baselines::iisignature_like`] (tape) depending on the
-//!   selected backend.
+//!   selected backend; the logsig readout adds the projection-transpose +
+//!   tensor-log VJP epilogue from [`crate::logsignature`].
 //! - execution: with the Fused backend at `threads <= batch`, the
 //!   signature forward and VJP run **lane-fused across the batch**
 //!   ([`crate::ta::batch`]) — one interleaved sweep instead of per-sample
-//!   scalar loops — bitwise identical to per-sample dispatch.
+//!   scalar loops — bitwise identical to per-sample dispatch. The logsig
+//!   readout batches through the same sweep (PR 5): its per-sample
+//!   epilogue runs on the lane-fused signatures, so the logsig-readout
+//!   train path is batched too, and stays bitwise per-sample-identical.
 //!
 //! The same model can instead be trained through the AOT XLA artifact via
 //! [`crate::runtime::Engine::run_train_step`]; an integration test pins the
@@ -19,12 +25,31 @@
 
 use crate::baselines::iisignature_like;
 use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
+use crate::logsignature::batch::project_sigs_into;
+use crate::logsignature::{
+    logsignature_from_sig, logsignature_from_sig_vjp, LogSigPlan, WordsPlanCache,
+};
 use crate::signature::{
     signature, signature_batch, signature_batch_vjp, signature_vjp_with, signature_with, SigConfig,
 };
 use crate::substrate::pool::parallel_map_indexed;
 use crate::substrate::rng::Rng;
 use crate::ta::SigSpec;
+use crate::words::witt_dimension;
+use std::sync::{Arc, OnceLock};
+
+/// Process-wide Words-basis plan cache for the logsig readout: the plan
+/// depends only on `(d_out, depth)`, but `train_step` and `accuracy` run
+/// once per step/evaluation — build each plan once and reuse it forever.
+/// Same [`WordsPlanCache`] type the coordinator's serving layer uses, so
+/// the caching logic exists exactly once.
+fn words_plan(d: usize, depth: usize) -> Arc<LogSigPlan> {
+    static CACHE: OnceLock<WordsPlanCache> = OnceLock::new();
+    CACHE
+        .get_or_init(WordsPlanCache::new)
+        .get(d, depth)
+        .expect("valid spec")
+}
 
 /// Which signature implementation the training loop uses (Fig. 3's two curves).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,11 +67,29 @@ pub struct ModelConfig {
     pub hidden: usize,
     pub d_out: usize,
     pub depth: usize,
+    /// Read the model out of the **Words-basis logsignature** of the
+    /// hidden path instead of the raw signature (§4.3: same information,
+    /// `witt_dimension` coefficients instead of `sig_len` — a much smaller
+    /// linear head at depth > 2). Native backends only; the XLA train
+    /// artifact keeps the signature readout.
+    pub logsig: bool,
 }
 
 impl Default for ModelConfig {
     fn default() -> Self {
-        ModelConfig { d_in: 2, hidden: 16, d_out: 4, depth: 3 }
+        ModelConfig { d_in: 2, hidden: 16, d_out: 4, depth: 3, logsig: false }
+    }
+}
+
+impl ModelConfig {
+    /// Width of the readout feature vector (`sig_len`, or the Lyndon-word
+    /// count under the logsig readout).
+    pub fn feature_dim(&self) -> usize {
+        if self.logsig {
+            witt_dimension(self.d_out, self.depth)
+        } else {
+            SigSpec::new(self.d_out, self.depth).expect("valid spec").sig_len()
+        }
     }
 }
 
@@ -58,20 +101,19 @@ pub struct Params {
     pub b1: Vec<f32>,    // (hidden,)
     pub w2: Vec<f32>,    // (hidden, d_out)
     pub b2: Vec<f32>,    // (d_out,)
-    pub w_out: Vec<f32>, // (sig_len,)
+    pub w_out: Vec<f32>, // (feature_dim,) = sig_len, or witt dim with the logsig readout
     pub b_out: f32,
 }
 
 impl Params {
     pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Params {
-        let spec = SigSpec::new(cfg.d_out, cfg.depth).expect("valid spec");
-        let sl = spec.sig_len();
+        let fd = cfg.feature_dim();
         Params {
             w1: rng.normal_vec(cfg.d_in * cfg.hidden, (2.0 / cfg.d_in as f32).sqrt()),
             b1: vec![0.0; cfg.hidden],
             w2: rng.normal_vec(cfg.hidden * cfg.d_out, (2.0 / cfg.hidden as f32).sqrt()),
             b2: vec![0.0; cfg.d_out],
-            w_out: rng.normal_vec(sl, (1.0 / sl as f32).sqrt()),
+            w_out: rng.normal_vec(fd, (1.0 / fd as f32).sqrt()),
             b_out: 0.0,
         }
     }
@@ -189,7 +231,12 @@ fn bce_head(logit: f32, y: f32) -> (f32, f32) {
 /// One forward/backward for one sample, returning per-parameter gradients.
 /// `sig_threads > 1` runs the signature forward and VJP stream-parallel
 /// (Fused backend only; the conventional tape baseline is inherently
-/// serial over the stream).
+/// serial over the stream). With a logsig readout (`lplan`), the features
+/// are the Words-basis logsignature of the hidden path and the basis
+/// cotangent flows back through the projection + tensor-log VJP epilogue
+/// before the signature VJP — on either backend, since the epilogue only
+/// needs the forward signature.
+#[allow(clippy::too_many_arguments)]
 fn sample_grad(
     cfg: &ModelConfig,
     spec: &SigSpec,
@@ -198,6 +245,7 @@ fn sample_grad(
     y: f32,
     backend: SigBackend,
     sig_threads: usize,
+    lplan: Option<&LogSigPlan>,
 ) -> SampleGrad {
     let d_out = cfg.d_out;
     let (a, hid) = mlp_forward(cfg, p, x);
@@ -210,12 +258,27 @@ fn sample_grad(
         SigBackend::Fused => signature(&hid, l, spec),
         SigBackend::Conventional => iisignature_like::signature(&hid, l, spec),
     };
-    let logit: f32 = sig.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
+    let feat_owned;
+    let feat: &[f32] = match lplan {
+        Some(lp) => {
+            feat_owned =
+                logsignature_from_sig(&sig, spec, lp).expect("plan built for the model spec");
+            &feat_owned
+        }
+        None => &sig,
+    };
+    let logit: f32 = feat.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
     let (loss, dlogit) = bce_head(logit, y);
 
-    // Backward: linear head.
-    let g_w_out: Vec<f32> = sig.iter().map(|&s| s * dlogit).collect();
-    let g_sig: Vec<f32> = p.w_out.iter().map(|&w| w * dlogit).collect();
+    // Backward: linear head on the readout features.
+    let g_w_out: Vec<f32> = feat.iter().map(|&s| s * dlogit).collect();
+    let g_feat: Vec<f32> = p.w_out.iter().map(|&w| w * dlogit).collect();
+    // Basis cotangent -> signature cotangent (identity without logsig).
+    let g_sig = match lplan {
+        Some(lp) => logsignature_from_sig_vjp(&sig, spec, lp, &g_feat)
+            .expect("plan built for the model spec"),
+        None => g_feat,
+    };
     // Signature VJP (stream-parallel via the chunked Chen identity when
     // sig_threads > 1; see crate::signature::backward).
     let g_hid = match backend {
@@ -244,6 +307,7 @@ fn train_grads_lane_fused(
     x: &[f32],
     y: &[f32],
     threads: usize,
+    lplan: Option<&LogSigPlan>,
 ) -> Vec<SampleGrad> {
     let (d_in, d_out) = (cfg.d_in, cfg.d_out);
     let batch = y.len();
@@ -259,17 +323,49 @@ fn train_grads_lane_fused(
     let sigs =
         signature_batch(&hid_all, batch, l, spec, threads).expect("valid hidden paths");
     let len = spec.sig_len();
+    // Logsig readout: one lane-fused sweep computed the signatures above;
+    // the per-sample log + projection epilogue (and its transpose below)
+    // is shared with the scalar path, so features — and therefore the
+    // whole update — stay bitwise identical to per-sample dispatch.
+    let feat_dim = lplan.map_or(len, |lp| lp.dim());
+    let feats: Option<Vec<f32>> = lplan.map(|lp| {
+        // The shared per-lane log + projection epilogue (the same code
+        // logsignature_batch_planned runs), so features stay bitwise
+        // identical to the scalar per-sample path.
+        let mut f = vec![0.0f32; batch * feat_dim];
+        project_sigs_into(spec, lp, &sigs, batch, &mut f);
+        f
+    });
+    let feat_of = |b: usize| -> &[f32] {
+        match &feats {
+            Some(f) => &f[b * feat_dim..(b + 1) * feat_dim],
+            None => &sigs[b * len..(b + 1) * len],
+        }
+    };
     let mut losses = vec![0.0f32; batch];
     let mut dlogits = vec![0.0f32; batch];
     let mut g_sig_all = vec![0.0f32; batch * len];
+    let mut g_feat = vec![0.0f32; feat_dim]; // reused basis-cotangent buffer
     for b in 0..batch {
-        let sig = &sigs[b * len..(b + 1) * len];
-        let logit: f32 = sig.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
+        let feat = feat_of(b);
+        let logit: f32 = feat.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out;
         let (loss, dlogit) = bce_head(logit, y[b]);
         losses[b] = loss;
         dlogits[b] = dlogit;
-        for (gs, &w) in g_sig_all[b * len..(b + 1) * len].iter_mut().zip(&p.w_out) {
-            *gs = w * dlogit;
+        match lplan {
+            Some(lp) => {
+                for (gf, &w) in g_feat.iter_mut().zip(&p.w_out) {
+                    *gf = w * dlogit;
+                }
+                let g = logsignature_from_sig_vjp(&sigs[b * len..(b + 1) * len], spec, lp, &g_feat)
+                    .expect("plan built for the model spec");
+                g_sig_all[b * len..(b + 1) * len].copy_from_slice(&g);
+            }
+            None => {
+                for (gs, &w) in g_sig_all[b * len..(b + 1) * len].iter_mut().zip(&p.w_out) {
+                    *gs = w * dlogit;
+                }
+            }
         }
     }
     let g_hid_all = signature_batch_vjp(&hid_all, batch, l, spec, &g_sig_all, threads)
@@ -283,13 +379,12 @@ fn train_grads_lane_fused(
             a,
             &g_hid_all[b * l * d_out..(b + 1) * l * d_out],
         );
-        let sig = &sigs[b * len..(b + 1) * len];
         SampleGrad {
             w1,
             b1,
             w2,
             b2,
-            w_out: sig.iter().map(|&s| s * dlogits[b]).collect(),
+            w_out: feat_of(b).iter().map(|&s| s * dlogits[b]).collect(),
             b_out: dlogits[b],
             loss: losses[b],
         }
@@ -306,7 +401,9 @@ fn train_grads_lane_fused(
 /// runs each sample's chunked Chen-identity forward/backward (App. C.3
 /// plus the stream dimension); a scalar plan runs serial per-sample
 /// sweeps, parallel over the batch. Every strategy produces the same
-/// update (lane-fused is bitwise identical to per-sample dispatch). The
+/// update (lane-fused is bitwise identical to per-sample dispatch) — the
+/// logsig readout included, since its log/projection epilogue and its
+/// transpose run per sample on the batched sweep's signatures. The
 /// Conventional backend ignores lane plans — the tape baseline has no
 /// lane kernels — and dispatches per sample.
 pub fn train_step(
@@ -321,6 +418,9 @@ pub fn train_step(
     let batch = y.len();
     let sample_len = x.len() / batch;
     let spec = SigSpec::new(cfg.d_out, cfg.depth).expect("valid spec");
+    // One cached Words-basis plan, shared across every sample, step, and
+    // both execution paths (see [`words_plan`]).
+    let lplan = cfg.logsig.then(|| words_plan(cfg.d_out, cfg.depth));
     let planner = ExecPlanner::new(threads);
     let plan = planner.plan_backward(&WorkShape {
         batch,
@@ -330,7 +430,7 @@ pub fn train_step(
     });
     let grads = match plan {
         ExecPlan::LaneFused { .. } if backend == SigBackend::Fused => {
-            train_grads_lane_fused(cfg, &spec, p, x, y, planner.threads())
+            train_grads_lane_fused(cfg, &spec, p, x, y, planner.threads(), lplan.as_deref())
         }
         plan => {
             // Stream parallelism inside each sample when the plan grants
@@ -349,6 +449,7 @@ pub fn train_step(
                     y[b],
                     backend,
                     sig_threads,
+                    lplan.as_deref(),
                 )
             })
         }
@@ -382,9 +483,16 @@ pub fn accuracy(cfg: &ModelConfig, p: &Params, x: &[f32], y: &[f32]) -> f32 {
     let batch = y.len();
     let sample_len = x.len() / batch;
     let spec = SigSpec::new(cfg.d_out, cfg.depth).expect("valid spec");
+    let lplan = cfg.logsig.then(|| words_plan(cfg.d_out, cfg.depth));
     let mut correct = 0usize;
     for b in 0..batch {
-        let logit = forward_logit(cfg, &spec, p, &x[b * sample_len..(b + 1) * sample_len]);
+        let logit = forward_logit(
+            cfg,
+            &spec,
+            p,
+            &x[b * sample_len..(b + 1) * sample_len],
+            lplan.as_deref(),
+        );
         if (logit > 0.0) == (y[b] > 0.5) {
             correct += 1;
         }
@@ -392,8 +500,24 @@ pub fn accuracy(cfg: &ModelConfig, p: &Params, x: &[f32], y: &[f32]) -> f32 {
     correct as f32 / batch as f32
 }
 
-/// Forward pass to the logit for one sample.
-pub fn forward_logit(cfg: &ModelConfig, spec: &SigSpec, p: &Params, x: &[f32]) -> f32 {
+/// Forward pass to the logit for one sample. `lplan` must be `Some` with
+/// a Words-basis plan exactly when `cfg.logsig` is set — enforced by an
+/// assert, because a mismatch would otherwise silently `zip` a readout of
+/// one width against weights of another and return a confident nonsense
+/// logit (go through [`accuracy`] / [`train_step`], which resolve the
+/// cached plan themselves, when in doubt).
+pub fn forward_logit(
+    cfg: &ModelConfig,
+    spec: &SigSpec,
+    p: &Params,
+    x: &[f32],
+    lplan: Option<&LogSigPlan>,
+) -> f32 {
+    assert_eq!(
+        lplan.is_some(),
+        cfg.logsig,
+        "forward_logit: pass a Words-basis plan exactly when cfg.logsig is set"
+    );
     let (d_in, h, d_out) = (cfg.d_in, cfg.hidden, cfg.d_out);
     let l = x.len() / d_in;
     let mut hid = vec![0.0f32; l * d_out];
@@ -415,7 +539,11 @@ pub fn forward_logit(cfg: &ModelConfig, spec: &SigSpec, p: &Params, x: &[f32]) -
         }
     }
     let sig = signature(&hid, l, spec);
-    sig.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out
+    let feat = match lplan {
+        Some(lp) => logsignature_from_sig(&sig, spec, lp).expect("plan built for the model spec"),
+        None => sig,
+    };
+    feat.iter().zip(&p.w_out).map(|(&s, &w)| s * w).sum::<f32>() + p.b_out
 }
 
 #[cfg(test)]
@@ -425,7 +553,7 @@ mod tests {
 
     #[test]
     fn training_decreases_loss_and_learns() {
-        let cfg = ModelConfig { d_in: 2, hidden: 8, d_out: 3, depth: 2 };
+        let cfg = ModelConfig { d_in: 2, hidden: 8, d_out: 3, depth: 2, logsig: false };
         let mut rng = Rng::new(42);
         let mut p = Params::init(&cfg, &mut rng);
         let gcfg = GbmConfig { stream: 32, ..Default::default() };
@@ -444,7 +572,7 @@ mod tests {
     fn backends_produce_identical_updates() {
         // Fused and conventional backends compute the same math — one step
         // from identical params must produce (nearly) identical params.
-        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3 };
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3, logsig: false };
         let mut rng = Rng::new(3);
         let p0 = Params::init(&cfg, &mut rng);
         let (x, y) = gbm_batch(&mut rng, 8, &GbmConfig { stream: 16, ..Default::default() });
@@ -465,7 +593,7 @@ mod tests {
     fn undersubscribed_batch_trains_with_stream_parallel_backward() {
         // batch 2 with 8 threads routes 4 threads into each sample's
         // stream; one step must match the serial-per-sample step closely.
-        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3 };
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3, logsig: false };
         let mut rng = Rng::new(17);
         let p0 = Params::init(&cfg, &mut rng);
         let (x, y) = gbm_batch(&mut rng, 2, &GbmConfig { stream: 64, ..Default::default() });
@@ -489,12 +617,12 @@ mod tests {
         // The lane-fused batched gradients must equal the per-sample path
         // bit-for-bit: the batched signature kernels perform each lane's
         // ops in the scalar order, and the MLP/head math is shared code.
-        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3 };
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3, logsig: false };
         let mut rng = Rng::new(29);
         let p = Params::init(&cfg, &mut rng);
         let (x, y) = gbm_batch(&mut rng, 6, &GbmConfig { stream: 12, ..Default::default() });
         let spec = SigSpec::new(2, 3).unwrap();
-        let lane = train_grads_lane_fused(&cfg, &spec, &p, &x, &y, 3);
+        let lane = train_grads_lane_fused(&cfg, &spec, &p, &x, &y, 3, None);
         let sample_len = x.len() / y.len();
         for (b, g) in lane.iter().enumerate() {
             let single = sample_grad(
@@ -505,6 +633,7 @@ mod tests {
                 y[b],
                 SigBackend::Fused,
                 1,
+                None,
             );
             assert_eq!(g.w1, single.w1, "sample {b} w1");
             assert_eq!(g.b1, single.b1);
@@ -513,6 +642,78 @@ mod tests {
             assert_eq!(g.w_out, single.w_out);
             assert_eq!(g.b_out, single.b_out);
             assert_eq!(g.loss, single.loss);
+        }
+    }
+
+    #[test]
+    fn logsig_readout_lane_fused_matches_per_sample_bitwise() {
+        // The logsig-readout train path now batches (PR 5): its lane-fused
+        // gradients must equal the per-sample path bit-for-bit, exactly
+        // like the signature readout — the epilogue is shared code run on
+        // bitwise-identical signatures.
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3, logsig: true };
+        let spec = SigSpec::new(2, 3).unwrap();
+        let lplan = LogSigPlan::new(&spec, crate::logsignature::LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(37);
+        let p = Params::init(&cfg, &mut rng);
+        assert_eq!(p.w_out.len(), witt_dimension(2, 3));
+        let (x, y) = gbm_batch(&mut rng, 6, &GbmConfig { stream: 12, ..Default::default() });
+        let lane = train_grads_lane_fused(&cfg, &spec, &p, &x, &y, 3, Some(&lplan));
+        let sample_len = x.len() / y.len();
+        for (b, g) in lane.iter().enumerate() {
+            let single = sample_grad(
+                &cfg,
+                &spec,
+                &p,
+                &x[b * sample_len..(b + 1) * sample_len],
+                y[b],
+                SigBackend::Fused,
+                1,
+                Some(&lplan),
+            );
+            assert_eq!(g.w1, single.w1, "sample {b} w1");
+            assert_eq!(g.w_out, single.w_out, "sample {b} w_out");
+            assert_eq!(g.b_out, single.b_out);
+            assert_eq!(g.loss, single.loss);
+        }
+    }
+
+    #[test]
+    fn logsig_readout_trains() {
+        // The compressed head still learns: loss decreases and accuracy
+        // beats chance on the GBM task.
+        let cfg = ModelConfig { d_in: 2, hidden: 8, d_out: 3, depth: 3, logsig: true };
+        let mut rng = Rng::new(43);
+        let mut p = Params::init(&cfg, &mut rng);
+        assert_eq!(p.w_out.len(), witt_dimension(3, 3));
+        let gcfg = GbmConfig { stream: 32, ..Default::default() };
+        let (x, y) = gbm_batch(&mut rng, 64, &gcfg);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..120 {
+            last = train_step(&cfg, &mut p, &x, &y, 1.0, SigBackend::Fused, 4);
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap(), "loss {first:?} -> {last}");
+        assert!(accuracy(&cfg, &p, &x, &y) > 0.6);
+    }
+
+    #[test]
+    fn logsig_readout_backends_agree() {
+        // The epilogue only needs the forward signature, so the logsig
+        // readout works on the Conventional tape backend too, and one step
+        // from identical params lands on (nearly) identical params.
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 3, logsig: true };
+        let mut rng = Rng::new(47);
+        let p0 = Params::init(&cfg, &mut rng);
+        let (x, y) = gbm_batch(&mut rng, 8, &GbmConfig { stream: 16, ..Default::default() });
+        let mut pa = p0.clone();
+        let mut pb = p0.clone();
+        let la = train_step(&cfg, &mut pa, &x, &y, 0.1, SigBackend::Fused, 2);
+        let lb = train_step(&cfg, &mut pb, &x, &y, 0.1, SigBackend::Conventional, 2);
+        assert!((la - lb).abs() < 1e-4, "loss {la} vs {lb}");
+        for (a, b) in pa.w_out.iter().zip(&pb.w_out) {
+            assert!((a - b).abs() < 1e-4);
         }
     }
 
@@ -531,12 +732,12 @@ mod tests {
     #[test]
     fn gradient_check_head_params() {
         // FD check on w_out (cheap: linear head).
-        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 2 };
+        let cfg = ModelConfig { d_in: 2, hidden: 4, d_out: 2, depth: 2, logsig: false };
         let spec = SigSpec::new(2, 2).unwrap();
         let mut rng = Rng::new(9);
         let p = Params::init(&cfg, &mut rng);
         let (x, y) = gbm_batch(&mut rng, 1, &GbmConfig { stream: 8, ..Default::default() });
-        let g = sample_grad(&cfg, &spec, &p, &x, y[0], SigBackend::Fused, 1);
+        let g = sample_grad(&cfg, &spec, &p, &x, y[0], SigBackend::Fused, 1, None);
         let h = 1e-3f32;
         for i in 0..p.w_out.len() {
             let mut pp = p.clone();
@@ -544,7 +745,7 @@ mod tests {
             let mut pm = p.clone();
             pm.w_out[i] -= h;
             let loss = |pr: &Params| {
-                let logit = forward_logit(&cfg, &spec, pr, &x);
+                let logit = forward_logit(&cfg, &spec, pr, &x, None);
                 logit.max(0.0) - logit * y[0] + (-logit.abs()).exp().ln_1p()
             };
             let fd = (loss(&pp) - loss(&pm)) / (2.0 * h);

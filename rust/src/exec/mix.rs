@@ -27,7 +27,10 @@ const FEEDER_SLOTS: usize = 4;
 /// Identity of a request shape in the mix histogram.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ShapeKey {
-    /// 0 = stateless signature, 1 = session feed.
+    /// 0 = stateless signature, 1 = session feed, 2 = stateless
+    /// logsignature. Sig and logsig requests of one shape microbatch in
+    /// *separate* queues (different output widths and epilogues), so they
+    /// adapt independently too.
     pub kind: u8,
     pub d: usize,
     pub depth: usize,
@@ -46,6 +49,13 @@ impl ShapeKey {
     /// Key for a session feed (spec only; feeds are ragged by design).
     pub fn feed(d: usize, depth: usize) -> ShapeKey {
         ShapeKey { kind: 1, d, depth, points: 0 }
+    }
+
+    /// Key for a stateless logsignature request (the logsig work shape the
+    /// planner learned in PR 5; distinct from the same-(d, depth, points)
+    /// signature key so the two surfaces adapt on their own traffic).
+    pub fn logsignature(d: usize, depth: usize, points: usize) -> ShapeKey {
+        ShapeKey { kind: 2, d, depth, points }
     }
 }
 
@@ -273,6 +283,23 @@ mod tests {
         }
         let (count, _) = mix.count_and_total(feed);
         assert!(count >= 1, "feeder-bearing key evicted before feeder-less ones");
+    }
+
+    #[test]
+    fn logsig_keys_are_independent_of_signature_keys() {
+        // Same (d, depth, points), different kind: logsig traffic must
+        // never inherit (or poison) the signature shape's capacity signal.
+        let mix = ShapeMix::new(16);
+        let sig = ShapeKey::signature(2, 3, 8);
+        let logsig = ShapeKey::logsignature(2, 3, 8);
+        assert_ne!(sig, logsig);
+        for _ in 0..10 {
+            mix.record(sig);
+        }
+        assert_eq!(mix.count_and_total(logsig).0, 0);
+        mix.record(logsig);
+        assert_eq!(mix.count_and_total(logsig).0, 1);
+        assert_eq!(mix.distinct(), 2);
     }
 
     #[test]

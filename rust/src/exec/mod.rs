@@ -18,16 +18,25 @@
 //! every call site (`signature_batch`, `signature_batch_vjp`,
 //! `deepsig::train_step`, the coordinator's router). [`ExecPlanner`] owns
 //! that choice: callers describe the work as a [`WorkShape`] and execute
-//! whatever [`ExecPlan`] comes back. The serving layer additionally feeds
-//! the planner an observed **shape-mix histogram** ([`ShapeMix`]) so
-//! microbatch formation adapts to recent traffic instead of obeying one
-//! static knob — see [`ExecPlanner::microbatch_capacity`] and
+//! whatever [`ExecPlan`] comes back. The **logsignature** pipeline
+//! executes the same plans ([`crate::logsignature::batch`]): its work
+//! shape is the underlying signature sweep's shape, the log + basis
+//! projection is a per-lane epilogue that never changes the schedule, and
+//! the d ≤ [`LANE_VJP_MAX_D`] lane-VJP constraint applies identically —
+//! so logsig traffic keys the shape mix under its own [`ShapeKey`] kind
+//! and otherwise needs nothing planner-specific. The serving layer
+//! additionally feeds the planner an observed **shape-mix histogram**
+//! ([`ShapeMix`]) so microbatch formation adapts to recent traffic
+//! instead of obeying one static knob — see
+//! [`ExecPlanner::microbatch_capacity`] and
 //! [`ExecPlanner::feed_lane_capacity`].
 //!
 //! Keeping selection in one layer is also what makes the next backend a
 //! one-layer change: lowering `ExecPlan::LaneFused` onto the XLA/GPU path
 //! (the lane-interleaved layout *is* the batched-kernel layout) swaps the
-//! executor for a plan, not N call sites.
+//! executor for a plan, not N call sites — and logsignature plans lower
+//! through the same path, their epilogue staying host-side (or fusing as
+//! a gather, for the Words basis).
 
 mod mix;
 

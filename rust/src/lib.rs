@@ -27,19 +27,24 @@
 //!   [`path::Path::update_batch`]).
 //! - **Execution planning** ([`exec`]): one adaptive dispatch layer owning
 //!   the choice between those strategies. Every execution site — the
-//!   batched forward/backward entry points, `deepsig::train_step`, and
-//!   the coordinator's router — describes its work as an
-//!   [`exec::WorkShape`] and executes whatever [`exec::ExecPlan`] the
-//!   [`exec::ExecPlanner`] returns (`Scalar`, `StreamParallel`, or
-//!   `LaneFused`); no call site re-derives lane/thread heuristics. The
-//!   serving layer additionally feeds the planner an observed shape-mix
-//!   histogram, so microbatch formation adapts to recent traffic: hot
-//!   shapes linger and lane-fuse, rare shapes serve directly. Plans are
-//!   scheduling only — `Scalar` and `LaneFused` are bitwise identical,
-//!   `StreamParallel` agrees to f32 rounding — which is also what makes
-//!   the planned XLA/GPU lowering a one-layer change: the lane layout is
-//!   already the batched-kernel layout, so a future backend executes the
-//!   same plans.
+//!   batched signature *and logsignature* forward/backward entry points
+//!   ([`signature::signature_batch_with`],
+//!   [`logsignature::logsignature_batch_with`] and their VJPs, which
+//!   execute the same plans through shared planned executors plus a
+//!   per-lane log/projection epilogue), `deepsig::train_step`, and the
+//!   coordinator's router — describes its work as an [`exec::WorkShape`]
+//!   and executes whatever [`exec::ExecPlan`] the [`exec::ExecPlanner`]
+//!   returns (`Scalar`, `StreamParallel`, or `LaneFused`); no call site
+//!   re-derives lane/thread heuristics. The serving layer additionally
+//!   feeds the planner an observed shape-mix histogram, so microbatch
+//!   formation adapts to recent traffic: hot shapes linger and lane-fuse,
+//!   rare shapes serve directly. Plans are scheduling only — `Scalar` and
+//!   `LaneFused` are bitwise identical, `StreamParallel` agrees to f32
+//!   rounding — which is also what makes the planned XLA/GPU lowering a
+//!   one-layer change: the lane layout is already the batched-kernel
+//!   layout, so a future backend executes the same plans (logsignature
+//!   plans included — they lower through the same path, the epilogue
+//!   staying a per-lane postscript).
 //! - **Accelerator runtime** ([`runtime`]): loads AOT-compiled HLO-text
 //!   artifacts (produced by `python/compile/aot.py` from JAX + Pallas) and
 //!   executes them on a PJRT client. This is the reproduction's analogue of
@@ -52,12 +57,14 @@
 //!   `Coordinator::call` front door (so metrics cover them) into a
 //!   sharded, memory-bounded session table — per-session `Path` state
 //!   with O(1) interval queries, an LRU-evicted byte budget, and an
-//!   idle-TTL sweeper. Native signature traffic is microbatched under the
-//!   planner's adaptive per-shape capacity
+//!   idle-TTL sweeper. Native signature *and logsignature* traffic is
+//!   microbatched under the planner's adaptive per-shape capacity
 //!   (`coordinator::DispatchConfig`), and same-spec session feeds from
 //!   distinct sessions coalesce through the **feed lane** into single
 //!   `Path::update_batch` sweeps — bitwise identical per session to
-//!   scalar feeding.
+//!   scalar feeding. All three gathering surfaces instantiate one
+//!   unified batcher generic (`coordinator::flusher::GroupBatcher`), so
+//!   the pending-queue/condvar concurrency machinery exists exactly once.
 //!
 //! Baselines reproducing the systems the paper benchmarks against live in
 //! [`baselines`]; the benchmark harness regenerating every table and figure

@@ -1,0 +1,372 @@
+//! Batched logsignatures through the execution planner.
+//!
+//! Logsignature parity with the signature side: these entry points execute
+//! the *same* [`ExecPlan`]s via the shared planned signature executors
+//! ([`crate::signature::signature_batch_planned`] /
+//! [`crate::signature::signature_batch_vjp_planned`]), then apply a
+//! per-lane log + basis-projection epilogue:
+//!
+//! - `LaneFused` runs the lane-interleaved signature sweep — bitwise
+//!   identical per lane to scalar dispatch — and the epilogue replays the
+//!   scalar `log_into` + projection per lane, so a batched logsignature is
+//!   **bitwise identical** per lane to [`super::logsignature_with`] in
+//!   every basis (pinned by property tests).
+//! - `StreamParallel` reuses the chunked Chen-identity forward/backward
+//!   inside each path; the log/projection epilogue is an O(sig_len)
+//!   per-lane postscript either way.
+//! - The d ≤ [`crate::exec::LANE_VJP_MAX_D`] lane-VJP constraint applies
+//!   identically: the planner already folds it into `plan_backward`, and
+//!   the cotangent this module hands the signature VJP is just a
+//!   transformed tensor (`project_vjp` then `log_vjp`).
+//!
+//! The coordinator's native microbatcher executes flushed `LogSignature`
+//! microbatches through [`logsignature_batch_planned`], so serving rows
+//! are bitwise identical to direct scalar serves.
+
+use super::plan::LogSigPlan;
+use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
+use crate::signature::{signature_batch_planned, signature_batch_vjp_planned, SigConfig};
+use crate::ta::log::{log_into_ws, log_vjp, LogWorkspace};
+use crate::ta::SigSpec;
+
+/// Batched logsignature over a `(batch, stream, d)` buffer. Returns
+/// `(batch, plan.dim())`. Strategy selection goes through
+/// [`crate::exec::ExecPlanner`]; `threads` workers share the lane blocks.
+pub fn logsignature_batch(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let cfg = SigConfig { threads, ..SigConfig::serial() };
+    logsignature_batch_with(paths, batch, stream, spec, plan, &cfg)
+}
+
+/// Batched logsignature with full options (basepoint / initial / inverse
+/// apply to every lane, exactly as in
+/// [`crate::signature::signature_batch_with`]).
+pub fn logsignature_batch_with(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    cfg: &SigConfig,
+) -> anyhow::Result<Vec<f32>> {
+    let exec = ExecPlanner::new(cfg.threads).plan_forward(&WorkShape {
+        batch,
+        points: cfg.effective_len(stream),
+        d: spec.d(),
+        depth: spec.depth(),
+    });
+    logsignature_batch_planned(paths, batch, stream, spec, plan, cfg, exec)
+}
+
+/// Execute a batched logsignature under an explicit [`ExecPlan`] (the
+/// coordinator's microbatch backend passes its serving plan here, so a
+/// lone flushed row runs the scalar reference sweep). The signature sweep
+/// executes the plan; the log + projection epilogue runs per lane with one
+/// reused workspace — the same op sequence as the scalar path, so lanes
+/// are bitwise identical to scalar logsignatures under `Scalar` and
+/// `LaneFused` plans.
+pub fn logsignature_batch_planned(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    cfg: &SigConfig,
+    exec: ExecPlan,
+) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
+    let sigs = signature_batch_planned(paths, batch, stream, spec, cfg, exec)?;
+    let mut out = vec![0.0f32; batch * plan.dim()];
+    project_sigs_into(spec, plan, &sigs, batch, &mut out);
+    Ok(out)
+}
+
+/// The per-lane log + basis-projection epilogue over `batch` packed
+/// signatures, into `(batch, plan.dim())`: ONE definition of the
+/// bitwise-parity-critical op sequence, shared by
+/// [`logsignature_batch_planned`] and deepsig's lane-fused logsig-readout
+/// train path. One reused [`LogWorkspace`] serves every lane; each lane
+/// replays exactly the scalar `log_into` + `project` arithmetic. The
+/// caller has validated plan/spec compatibility and buffer sizes.
+pub(crate) fn project_sigs_into(
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    sigs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    let len = spec.sig_len();
+    let dim = plan.dim();
+    debug_assert_eq!(sigs.len(), batch * len);
+    debug_assert_eq!(out.len(), batch * dim);
+    let mut lw = LogWorkspace::new(spec);
+    let mut logtensor = spec.zeros();
+    for b in 0..batch {
+        log_into_ws(spec, &sigs[b * len..(b + 1) * len], &mut logtensor, &mut lw);
+        plan.project_into(&mut logtensor, &mut out[b * dim..(b + 1) * dim]);
+    }
+}
+
+/// Batched VJP of the logsignature: cotangents `g` of shape
+/// `(batch, plan.dim())` in the plan's basis → `∂L/∂paths` of the input
+/// shape. The forward signatures are recomputed (they feed the log VJP),
+/// the O(sig_len) per-lane epilogue converts each basis cotangent into a
+/// signature cotangent, and the batched signature VJP executes whatever
+/// backward plan the planner picks — lane-fused at
+/// d ≤ [`crate::exec::LANE_VJP_MAX_D`] (bitwise identical per lane to the
+/// serial [`super::logsignature_vjp_with`]), chunked-Chen stream-parallel
+/// with surplus threads, per-path scalar otherwise.
+pub fn logsignature_batch_vjp(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    g: &[f32],
+    threads: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let planner = ExecPlanner::new(threads);
+    let shape = WorkShape { batch, points: stream, d: spec.d(), depth: spec.depth() };
+    logsignature_batch_vjp_planned(
+        paths,
+        batch,
+        stream,
+        spec,
+        plan,
+        g,
+        threads,
+        planner.plan_forward(&shape),
+        planner.plan_backward(&shape),
+    )
+}
+
+/// Execute a batched logsignature VJP under explicit forward/backward
+/// [`ExecPlan`]s (see [`logsignature_batch_vjp`]).
+#[allow(clippy::too_many_arguments)]
+pub fn logsignature_batch_vjp_planned(
+    paths: &[f32],
+    batch: usize,
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    g: &[f32],
+    threads: usize,
+    fwd: ExecPlan,
+    bwd: ExecPlan,
+) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
+    let dim = plan.dim();
+    anyhow::ensure!(
+        g.len() == batch * dim,
+        "cotangent has {} values, expected batch({batch}) * basis dimension({dim}) = {}",
+        g.len(),
+        batch * dim
+    );
+    let cfg = SigConfig { threads, ..SigConfig::serial() };
+    // Forward signatures feed the log VJP; under Scalar/LaneFused plans
+    // they are bitwise the scalar forward per lane.
+    let sigs = signature_batch_planned(paths, batch, stream, spec, &cfg, fwd)?;
+    let len = spec.sig_len();
+    let mut g_sigs = vec![0.0f32; batch * len];
+    for b in 0..batch {
+        // Transpose of the projection, then the tensor-log VJP — the same
+        // epilogue the scalar logsignature_vjp_with runs.
+        let g_log = plan.project_vjp(&g[b * dim..(b + 1) * dim]);
+        log_vjp(spec, &sigs[b * len..(b + 1) * len], &g_log, &mut g_sigs[b * len..(b + 1) * len]);
+    }
+    signature_batch_vjp_planned(paths, batch, stream, spec, &g_sigs, threads, bwd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::LANE_BLOCK;
+    use crate::logsignature::{logsignature_vjp_with, logsignature_with, LogSigBasis};
+    use crate::substrate::propcheck::{assert_close, property};
+    use crate::substrate::rng::Rng;
+
+    fn random_batch(rng: &mut Rng, batch: usize, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; batch * stream * d];
+        for b in 0..batch {
+            for i in 1..stream {
+                for c in 0..d {
+                    p[b * stream * d + i * d + c] =
+                        p[b * stream * d + (i - 1) * d + c] + rng.normal_f32() * 0.3;
+                }
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn lane_fused_logsignature_is_bitwise_per_path_all_bases() {
+        // The tentpole contract: a lane-fused batched logsignature must
+        // reproduce the scalar path bit-for-bit in every basis, including
+        // a ragged tail block past LANE_BLOCK.
+        property("logsig batch == scalar bitwise", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let batch = g.usize_in(2, 9);
+            let stream = g.usize_in(2, 10);
+            g.label(format!("d={d} n={n} batch={batch} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let paths = random_batch(g.rng(), batch, stream, d);
+            let plen = stream * d;
+            for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+                let plan = LogSigPlan::new(&spec, basis).unwrap();
+                let dim = plan.dim();
+                let out = logsignature_batch(&paths, batch, stream, &spec, &plan, 3).unwrap();
+                for b in 0..batch {
+                    let single = logsignature_with(
+                        &paths[b * plen..(b + 1) * plen],
+                        stream,
+                        &spec,
+                        &plan,
+                        &SigConfig::serial(),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        &out[b * dim..(b + 1) * dim],
+                        single.as_slice(),
+                        "{basis:?} lane {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ragged_tail_block_stays_bitwise() {
+        // LANE_BLOCK + 3 lanes on one thread force one full block and one
+        // ragged tail block through the interleaved sweep.
+        let spec = SigSpec::new(3, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(61);
+        let (batch, stream) = (LANE_BLOCK + 3, 9);
+        let paths = random_batch(&mut rng, batch, stream, 3);
+        let plen = stream * 3;
+        let dim = plan.dim();
+        let out = logsignature_batch(&paths, batch, stream, &spec, &plan, 1).unwrap();
+        for b in 0..batch {
+            let single = logsignature_with(
+                &paths[b * plen..(b + 1) * plen],
+                stream,
+                &spec,
+                &plan,
+                &SigConfig::serial(),
+            )
+            .unwrap();
+            assert_eq!(&out[b * dim..(b + 1) * dim], single.as_slice(), "lane {b}");
+        }
+    }
+
+    #[test]
+    fn batch_with_options_is_bitwise_per_path() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Lyndon).unwrap();
+        let mut rng = Rng::new(62);
+        let (batch, stream) = (5, 7);
+        let paths = random_batch(&mut rng, batch, stream, 2);
+        let plen = stream * 2;
+        let init = crate::signature::signature(&random_batch(&mut rng, 1, 4, 2), 4, &spec);
+        for inverse in [false, true] {
+            let cfg = SigConfig {
+                basepoint: Some(vec![0.2, -0.3]),
+                initial: Some(init.clone()),
+                inverse,
+                ..SigConfig::serial()
+            };
+            let out = logsignature_batch_with(&paths, batch, stream, &spec, &plan, &cfg).unwrap();
+            let dim = plan.dim();
+            for b in 0..batch {
+                let single =
+                    logsignature_with(&paths[b * plen..(b + 1) * plen], stream, &spec, &plan, &cfg)
+                        .unwrap();
+                assert_eq!(&out[b * dim..(b + 1) * dim], single.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_vjp_is_bitwise_per_sample_on_the_lane_plan() {
+        // threads <= batch at d <= LANE_VJP_MAX_D takes the lane-fused
+        // backward; every sample's gradient must equal the serial scalar
+        // logsignature VJP bit-for-bit, in every basis.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(63);
+        let (batch, stream) = (6, 8);
+        let paths = random_batch(&mut rng, batch, stream, 2);
+        let plen = stream * 2;
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let dim = plan.dim();
+            let g = rng.normal_vec(batch * dim, 1.0);
+            let out =
+                logsignature_batch_vjp(&paths, batch, stream, &spec, &plan, &g, 3).unwrap();
+            for b in 0..batch {
+                let single = logsignature_vjp_with(
+                    &paths[b * plen..(b + 1) * plen],
+                    stream,
+                    &spec,
+                    &plan,
+                    &SigConfig::serial(),
+                    &g[b * dim..(b + 1) * dim],
+                )
+                .unwrap();
+                assert_eq!(&out[b * plen..(b + 1) * plen], single.as_slice(), "{basis:?} sample {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_vjp_surplus_threads_match_serial_to_rounding() {
+        // threads > batch routes surplus threads into each sample's stream
+        // (chunked Chen identity): same values to f32 rounding.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(64);
+        let (batch, stream) = (2, 80);
+        let paths = random_batch(&mut rng, batch, stream, 2);
+        let plen = stream * 2;
+        let dim = plan.dim();
+        let g = rng.normal_vec(batch * dim, 1.0);
+        let out = logsignature_batch_vjp(&paths, batch, stream, &spec, &plan, &g, 8).unwrap();
+        for b in 0..batch {
+            let single = logsignature_vjp_with(
+                &paths[b * plen..(b + 1) * plen],
+                stream,
+                &spec,
+                &plan,
+                &SigConfig::serial(),
+                &g[b * dim..(b + 1) * dim],
+            )
+            .unwrap();
+            assert_close(&out[b * plen..(b + 1) * plen], &single, 2e-3, 1e-4);
+        }
+    }
+
+    #[test]
+    fn batch_entry_points_error_on_bad_shapes() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let wrong = LogSigPlan::new(&SigSpec::new(3, 3).unwrap(), LogSigBasis::Words).unwrap();
+        let paths = vec![0.0f32; 2 * 4 * 2];
+        // Mismatched plan, malformed buffers, empty batch, short streams,
+        // and wrong cotangent widths are all Err, never panics.
+        assert!(logsignature_batch(&paths, 2, 4, &spec, &wrong, 1).is_err());
+        assert!(logsignature_batch(&paths[..3], 2, 4, &spec, &plan, 1).is_err());
+        assert!(logsignature_batch(&paths, 0, 4, &spec, &plan, 1).is_err());
+        assert!(logsignature_batch(&paths[..4], 2, 1, &spec, &plan, 1).is_err());
+        let g_ok = vec![0.0f32; 2 * plan.dim()];
+        let g_bad = vec![0.0f32; 2 * plan.dim() - 1];
+        assert!(logsignature_batch_vjp(&paths, 2, 4, &spec, &plan, &g_bad, 1).is_err());
+        assert!(logsignature_batch_vjp(&paths, 2, 4, &spec, &wrong, &g_ok, 1).is_err());
+        assert!(logsignature_batch_vjp(&paths[..3], 2, 4, &spec, &plan, &g_ok, 1).is_err());
+    }
+}

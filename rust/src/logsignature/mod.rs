@@ -14,24 +14,96 @@
 //! words, flat indices, and — for the Lyndon basis only — the bracket
 //! expansions), mirroring Signatory's `LogSignature` class which amortises
 //! the same preparation across calls.
+//!
+//! Batched logsignatures execute through the **execution planner**
+//! ([`crate::exec`]) exactly like the signature side: [`batch`] runs the
+//! same [`crate::exec::ExecPlan`]s via the shared planned signature
+//! executors, followed by a per-lane log + basis-projection epilogue that
+//! is bitwise identical to the scalar path. The coordinator serves
+//! `LogSignature` requests through the same adaptive microbatcher as
+//! `Signature` requests on top of these entry points.
 
+pub mod batch;
 pub mod plan;
 
-pub use plan::{LogSigBasis, LogSigPlan};
+pub use batch::{
+    logsignature_batch, logsignature_batch_planned, logsignature_batch_vjp,
+    logsignature_batch_vjp_planned, logsignature_batch_with,
+};
+pub use plan::{LogSigBasis, LogSigPlan, WordsPlanCache};
 
 use crate::signature::backward::signature_vjp_with;
-use crate::signature::forward::{signature, signature_with};
+use crate::signature::forward::signature_with;
 use crate::signature::SigConfig;
-use crate::ta::log::{log_into, log_vjp};
+use crate::ta::log::{log_into, log_into_ws, log_vjp, LogWorkspace};
 use crate::ta::SigSpec;
 
 /// `LogSig^N(path)` in the plan's basis.
 ///
-/// Panics if `plan` was built for a different `SigSpec`; use
-/// [`logsignature_from_sig`] for the fallible entry point.
+/// Panics on a mismatched plan or malformed path.
+#[deprecated(note = "panics on malformed input; use `logsignature_with` (PR 3 panic-safety \
+                     contract: every serving-reachable entry point is fallible)")]
 pub fn logsignature(path: &[f32], stream: usize, spec: &SigSpec, plan: &LogSigPlan) -> Vec<f32> {
-    let sig = signature(path, stream, spec);
-    logsignature_from_sig(&sig, spec, plan).expect("LogSigPlan incompatible with SigSpec")
+    logsignature_with(path, stream, spec, plan, &SigConfig::serial())
+        .expect("valid path and a LogSigPlan built for this SigSpec")
+}
+
+/// `LogSig^N(path)` honouring a [`SigConfig`] (threads / basepoint /
+/// initial / inverse), fallible: a mismatched plan, malformed path buffer,
+/// or bad basepoint/initial shape is an `Err`, never a panic. The fallible
+/// mirror of the deprecated [`logsignature`], completing the panic-safety
+/// contract across every logsignature entry point.
+pub fn logsignature_with(
+    path: &[f32],
+    stream: usize,
+    spec: &SigSpec,
+    plan: &LogSigPlan,
+    cfg: &SigConfig,
+) -> anyhow::Result<Vec<f32>> {
+    plan.check_compatible(spec)?;
+    let sig = signature_with(path, stream, spec, cfg)?;
+    logsignature_from_sig(&sig, spec, plan)
+}
+
+/// Reusable scratch for allocation-free logsignature work: one signature
+/// buffer, one log-tensor buffer, and the tensor-log Horner workspace.
+/// `Path::logsig_query_into` and the batched epilogue thread one of these
+/// through repeated queries/lanes so the hot path allocates nothing.
+pub struct LogSigWorkspace {
+    pub(crate) sig: Vec<f32>,
+    pub(crate) logtensor: Vec<f32>,
+    pub(crate) lw: LogWorkspace,
+}
+
+impl LogSigWorkspace {
+    pub fn new(spec: &SigSpec) -> LogSigWorkspace {
+        LogSigWorkspace { sig: spec.zeros(), logtensor: spec.zeros(), lw: LogWorkspace::new(spec) }
+    }
+
+    /// Errors unless this workspace was sized for `spec` (reusing one
+    /// across specs would slice-panic deep inside the log kernels).
+    pub fn check_spec(&self, spec: &SigSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.sig.len() == spec.sig_len() && self.lw.fits(spec),
+            "LogSigWorkspace sized for sig_len {}, used with sig_len {}",
+            self.sig.len(),
+            spec.sig_len()
+        );
+        Ok(())
+    }
+
+    /// The internal signature buffer (callers stage the queried signature
+    /// here before [`LogSigWorkspace::project_sig_into`]).
+    pub(crate) fn sig_mut(&mut self) -> &mut [f32] {
+        &mut self.sig
+    }
+
+    /// `out = plan.project(log(self.sig))`, zero allocations. The caller
+    /// has already validated plan/spec compatibility and buffer sizes.
+    pub(crate) fn project_sig_into(&mut self, spec: &SigSpec, plan: &LogSigPlan, out: &mut [f32]) {
+        log_into_ws(spec, &self.sig, &mut self.logtensor, &mut self.lw);
+        plan.project_into(&mut self.logtensor, out);
+    }
 }
 
 /// Logsignature of an already-computed signature (used by the Path class
@@ -81,10 +153,10 @@ pub fn logsignature_stream(
     Ok(out)
 }
 
-/// VJP of [`logsignature`]: given the cotangent `g` in the plan's basis,
-/// returns `∂L/∂path`. Serial; panics on mismatched buffers — use
-/// [`logsignature_vjp_with`] for the fallible, thread-configurable entry
-/// point.
+/// VJP of the logsignature: given the cotangent `g` in the plan's basis,
+/// returns `∂L/∂path`. Serial; panics on mismatched buffers.
+#[deprecated(note = "panics on malformed input; use `logsignature_vjp_with` (fallible and \
+                     thread-configurable)")]
 pub fn logsignature_vjp(
     path: &[f32],
     stream: usize,
@@ -146,6 +218,7 @@ pub fn logsignature_from_sig_vjp(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the panicking wrappers stay covered until removed
 mod tests {
     use super::*;
     use crate::substrate::propcheck::{assert_close, property};
@@ -329,6 +402,44 @@ mod tests {
             logsignature_vjp_with(&path, 4, &spec, &wrong_d, &SigConfig::serial(), &g).is_err()
         );
         assert!(logsignature_from_sig_vjp(&sig, &spec, &wrong_d, &g).is_err());
+    }
+
+    #[test]
+    fn logsignature_with_matches_wrapper_and_validates() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(51);
+        let path = random_path(&mut rng, 7, 2);
+        let fallible =
+            logsignature_with(&path, 7, &spec, &plan, &SigConfig::serial()).unwrap();
+        assert_eq!(fallible, logsignature(&path, 7, &spec, &plan));
+        // Basepoint config threads through to the signature layer.
+        let cfg = SigConfig { basepoint: Some(vec![0.1, -0.2]), ..SigConfig::serial() };
+        let with_bp = logsignature_with(&path, 7, &spec, &plan, &cfg).unwrap();
+        let mut prepended = vec![0.1, -0.2];
+        prepended.extend_from_slice(&path);
+        assert_close(
+            &with_bp,
+            &logsignature(&prepended, 8, &spec, &plan),
+            1e-4,
+            1e-5,
+        );
+        // Every malformed input is an Err, not a panic.
+        assert!(logsignature_with(&path[..3], 7, &spec, &plan, &SigConfig::serial()).is_err());
+        assert!(logsignature_with(&path[..2], 1, &spec, &plan, &SigConfig::serial()).is_err());
+        let wrong = LogSigPlan::new(&SigSpec::new(3, 3).unwrap(), LogSigBasis::Words).unwrap();
+        assert!(logsignature_with(&path, 7, &spec, &wrong, &SigConfig::serial()).is_err());
+        let bad_bp = SigConfig { basepoint: Some(vec![0.0; 3]), ..SigConfig::serial() };
+        assert!(logsignature_with(&path, 7, &spec, &plan, &bad_bp).is_err());
+    }
+
+    #[test]
+    fn workspace_spec_check() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let other = SigSpec::new(3, 4).unwrap();
+        let ws = LogSigWorkspace::new(&spec);
+        assert!(ws.check_spec(&spec).is_ok());
+        assert!(ws.check_spec(&other).is_err());
     }
 
     #[test]

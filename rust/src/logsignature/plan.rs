@@ -1,5 +1,8 @@
 //! Precomputed per-(d, N, basis) data for logsignature projections.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use crate::ta::SigSpec;
 use crate::words::{bracket_expansion, lyndon_words, witt_dimension, word_index};
 
@@ -118,22 +121,44 @@ impl LogSigPlan {
                 .map(|e| self.spec.level(logtensor, e.level)[e.index])
                 .collect(),
             LogSigBasis::Lyndon => {
+                let mut residual = logtensor.to_vec();
+                let mut out = vec![0.0f32; self.dim];
+                self.project_into(&mut residual, &mut out);
+                out
+            }
+        }
+    }
+
+    /// [`Self::project`] into a caller buffer, allocation-free: the
+    /// batched logsignature epilogue and `Path::logsig_query_into` call
+    /// this once per lane/query with reused buffers. The Lyndon basis
+    /// runs its forward substitution in place, so `logtensor` is consumed
+    /// as scratch (its contents are unspecified afterwards); Expanded and
+    /// Words leave it untouched. Bitwise identical to [`Self::project`].
+    pub fn project_into(&self, logtensor: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(logtensor.len(), self.spec.sig_len());
+        debug_assert_eq!(out.len(), self.dim);
+        match self.basis {
+            LogSigBasis::Expanded => out.copy_from_slice(logtensor),
+            LogSigBasis::Words => {
+                for (o, e) in out.iter_mut().zip(&self.entries) {
+                    *o = self.spec.level(logtensor, e.level)[e.index];
+                }
+            }
+            LogSigBasis::Lyndon => {
                 // Forward substitution: φ(ℓ) = ℓ + (lex-later words), so
                 // processing Lyndon words of each level in increasing index
                 // order peels coefficients one at a time.
-                let mut residual = logtensor.to_vec();
-                let mut out = Vec::with_capacity(self.dim);
-                for e in &self.entries {
-                    let lvl = self.spec.level_mut(&mut residual, e.level);
+                for (o, e) in out.iter_mut().zip(&self.entries) {
+                    let lvl = self.spec.level_mut(logtensor, e.level);
                     let alpha = lvl[e.index];
-                    out.push(alpha);
+                    *o = alpha;
                     if alpha != 0.0 {
                         for &(idx, coeff) in &e.expansion {
                             lvl[idx] -= alpha * coeff;
                         }
                     }
                 }
-                out
             }
         }
     }
@@ -188,6 +213,45 @@ impl LogSigPlan {
     }
 }
 
+/// Concurrent per-`(d, depth)` cache of **Words-basis** plans: one build
+/// amortises across every subsequent call — Signatory/iisignature's
+/// precompute-then-reuse strategy, packaged once so its users (the
+/// coordinator's router + native microbatch backend, deepsig's logsig
+/// readout) cannot drift apart.
+#[derive(Default)]
+pub struct WordsPlanCache {
+    plans: Mutex<HashMap<(usize, usize), Arc<LogSigPlan>>>,
+}
+
+impl WordsPlanCache {
+    pub fn new() -> WordsPlanCache {
+        WordsPlanCache::default()
+    }
+
+    /// The cached Words-basis plan for `(d, depth)`, building it on first
+    /// use. Errors on an invalid spec.
+    pub fn get(&self, d: usize, depth: usize) -> anyhow::Result<Arc<LogSigPlan>> {
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(p) = plans.get(&(d, depth)) {
+            // Cache integrity: an entry filed under the wrong key must
+            // error, never silently gather wrong indices. Field checks
+            // only — no SigSpec construction on the hot hit path.
+            anyhow::ensure!(
+                p.spec().d() == d && p.spec().depth() == depth,
+                "plan cache corrupted: entry for (d={d}, depth={depth}) was built for \
+                 (d={}, depth={})",
+                p.spec().d(),
+                p.spec().depth()
+            );
+            return Ok(Arc::clone(p));
+        }
+        let spec = SigSpec::new(d, depth)?;
+        let plan = Arc::new(LogSigPlan::new(&spec, LogSigBasis::Words)?);
+        plans.insert((d, depth), Arc::clone(&plan));
+        Ok(plan)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +273,25 @@ mod tests {
         let pos = plan.lyndon_positions();
         for w in pos.windows(2) {
             assert!(w[0] < w[1], "entries out of order: {:?} {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn project_into_matches_project_bitwise() {
+        // A dirty out buffer and a reused scratch must never change a bit
+        // relative to the allocating projection, in any basis.
+        let spec = SigSpec::new(3, 4).unwrap();
+        let mut rng = Rng::new(17);
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let mut out = vec![f32::NAN; plan.dim()]; // dirty on purpose
+            for _ in 0..4 {
+                let x = rng.normal_vec(spec.sig_len(), 1.0);
+                let want = plan.project(&x);
+                let mut scratch = x.clone();
+                plan.project_into(&mut scratch, &mut out);
+                assert_eq!(out, want, "{basis:?}");
+            }
         }
     }
 
@@ -266,6 +349,18 @@ mod tests {
         // level2 word 01 → index 1 → x[2 + 1] = 3;
         // level3 words 001 (idx 1), 011 (idx 3) → x[6+1], x[6+3].
         assert_eq!(z, vec![0.0, 1.0, 3.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn words_plan_cache_builds_once_and_validates() {
+        let cache = WordsPlanCache::new();
+        let a = cache.get(2, 3).unwrap();
+        let b = cache.get(2, 3).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must reuse the cached plan");
+        assert_eq!(a.dim(), crate::words::witt_dimension(2, 3));
+        let c = cache.get(3, 4).unwrap();
+        assert_eq!(c.dim(), crate::words::witt_dimension(3, 4));
+        assert!(cache.get(0, 3).is_err(), "invalid spec is a clean error");
     }
 
     #[test]

@@ -21,9 +21,9 @@ use signax::bench::{run_table, table_ids, BenchCtx, Scale};
 use signax::coordinator::{Coordinator, CoordinatorConfig, Request, SessionConfig};
 use signax::data::gbm::{gbm_batch, GbmConfig};
 use signax::deepsig::{accuracy, train_step, ModelConfig, Params, SigBackend};
-use signax::logsignature::{logsignature, LogSigBasis, LogSigPlan};
+use signax::logsignature::{logsignature_with, LogSigBasis, LogSigPlan};
 use signax::runtime::EngineHandle;
-use signax::signature::signature;
+use signax::signature::{signature, SigConfig};
 use signax::substrate::cli::{Cli, Command};
 use signax::substrate::rng::Rng;
 use signax::ta::SigSpec;
@@ -178,7 +178,7 @@ fn cmd_logsig(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     let mut rng = Rng::new(seed);
     let path = signax::data::random_path(&mut rng, stream, d, 0.2);
     let t0 = Instant::now();
-    let z = logsignature(&path, stream, &spec, &plan);
+    let z = logsignature_with(&path, stream, &spec, &plan, &SigConfig::serial())?;
     println!(
         "LogSig^{depth} ({basis:?}) of a {stream}x{d} path: {} values in {:.3}ms (witt={})",
         z.len(),

@@ -17,7 +17,7 @@
 //! relative precision for extreme inputs. [`Path::query_recompute`] is the
 //! slow exact fallback used by tests and benchmarks.
 
-use crate::logsignature::{logsignature_from_sig, LogSigPlan};
+use crate::logsignature::{logsignature_from_sig, LogSigPlan, LogSigWorkspace};
 use crate::signature::forward::{signature, two_point_signature_into};
 use crate::ta::batch::{fused_mexp_batch, fused_mexp_left_batch, unpack_lane, BatchWorkspace};
 use crate::ta::fused::{fused_mexp, fused_mexp_left};
@@ -157,6 +157,36 @@ impl Path {
     pub fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Vec<f32>> {
         let sig = self.query(i, j)?;
         logsignature_from_sig(&sig, &self.spec, plan)
+    }
+
+    /// [`Path::logsig_query`] into a caller buffer of `plan.dim()` values,
+    /// threading a reusable [`LogSigWorkspace`] — **allocation-free** (the
+    /// mirror of [`Path::query_into`] for the logsignature surface). The
+    /// interval signature is staged in the workspace via
+    /// [`Path::query_into`], so adjacent intervals (`j == i + 1`) ride the
+    /// exp-of-increment fast path — cheaper than the `I_i ⊠ S_j` product
+    /// and immune to distant-interval cancellation — before the log +
+    /// projection epilogue runs in place. Bitwise identical to
+    /// [`Path::logsig_query`].
+    pub fn logsig_query_into(
+        &self,
+        i: usize,
+        j: usize,
+        plan: &LogSigPlan,
+        ws: &mut LogSigWorkspace,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        plan.check_compatible(&self.spec)?;
+        ws.check_spec(&self.spec)?;
+        anyhow::ensure!(
+            out.len() == plan.dim(),
+            "output buffer has {} values, expected basis dimension {}",
+            out.len(),
+            plan.dim()
+        );
+        self.query_into(i, j, ws.sig_mut())?;
+        ws.project_sig_into(&self.spec, plan, out);
+        Ok(())
     }
 
     /// The signature of the whole path so far.
@@ -325,6 +355,7 @@ impl Path {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // scalar logsignature() stays the oracle until removed
 mod tests {
     use super::*;
     use crate::logsignature::{logsignature, LogSigBasis};
@@ -489,6 +520,43 @@ mod tests {
             let direct = logsignature(&pts[2 * 2..8 * 2], 6, &spec, &plan);
             assert_close(&q, &direct, 5e-3, 5e-4);
         }
+    }
+
+    #[test]
+    fn logsig_query_into_matches_allocating_query_bitwise() {
+        // The allocation-free variant must agree bit-for-bit with
+        // logsig_query across bases and intervals — including adjacent
+        // intervals, which take the exp-of-increment fast path, and a
+        // dirty, reused workspace/out buffer.
+        let spec = SigSpec::new(2, 4).unwrap();
+        let mut rng = Rng::new(24);
+        let pts = random_path(&mut rng, 10, 2);
+        let path = Path::new(&spec, &pts, 10).unwrap();
+        let mut ws = LogSigWorkspace::new(&spec);
+        for basis in [LogSigBasis::Expanded, LogSigBasis::Lyndon, LogSigBasis::Words] {
+            let plan = LogSigPlan::new(&spec, basis).unwrap();
+            let mut out = vec![f32::NAN; plan.dim()]; // dirty on purpose
+            for (i, j) in [(0, 9), (2, 7), (3, 4), (0, 1), (8, 9)] {
+                path.logsig_query_into(i, j, &plan, &mut ws, &mut out).unwrap();
+                assert_eq!(
+                    out,
+                    path.logsig_query(i, j, &plan).unwrap(),
+                    "{basis:?} interval [{i}, {j}]"
+                );
+            }
+        }
+        // Validation is an error, never a panic: bad interval, wrong out
+        // width, mismatched plan, and a workspace sized for another spec.
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut out = vec![0.0f32; plan.dim()];
+        assert!(path.logsig_query_into(3, 3, &plan, &mut ws, &mut out).is_err());
+        assert!(path
+            .logsig_query_into(0, 3, &plan, &mut ws, &mut out[..1])
+            .is_err());
+        let wrong = LogSigPlan::new(&SigSpec::new(3, 4).unwrap(), LogSigBasis::Words).unwrap();
+        assert!(path.logsig_query_into(0, 3, &wrong, &mut ws, &mut out).is_err());
+        let mut wrong_ws = LogSigWorkspace::new(&SigSpec::new(3, 4).unwrap());
+        assert!(path.logsig_query_into(0, 3, &plan, &mut wrong_ws, &mut out).is_err());
     }
 
     #[test]

@@ -382,7 +382,10 @@ pub fn signature_batch_vjp(
 }
 
 /// Execute a batched VJP under an explicit [`ExecPlan`] (see
-/// [`signature_batch_vjp`] for the planner-selected entry point).
+/// [`signature_batch_vjp`] for the planner-selected entry point). The
+/// batched logsignature VJP ([`crate::logsignature::batch`]) executes the
+/// same plans through this shared executor, handing it the signature
+/// cotangents its O(sig_len) per-lane epilogue produced.
 pub fn signature_batch_vjp_planned(
     paths: &[f32],
     batch: usize,

@@ -260,7 +260,9 @@ pub fn signature_batch_with(
 /// (`Scalar` and `LaneFused` are bitwise identical; `StreamParallel`
 /// re-associates ⊠ inside each path and agrees to rounding). Callers
 /// normally go through [`signature_batch_with`], which asks the planner;
-/// the coordinator's microbatch backend passes its serving plan here.
+/// the coordinator's microbatch backend passes its serving plan here, and
+/// the batched logsignature ([`crate::logsignature::batch`]) executes the
+/// same plans through this shared executor before its per-lane epilogue.
 pub fn signature_batch_planned(
     paths: &[f32],
     batch: usize,

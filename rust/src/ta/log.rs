@@ -14,22 +14,53 @@
 use super::mul::{mul_nounit_into, mul_nounit_vjp};
 use super::SigSpec;
 
+/// Reusable scratch for [`log_into_ws`]: the Horner recursion's running
+/// tensor `t` and the product buffer `x ⊠_nounit t`. One workspace serves
+/// any number of calls against the same spec — the batched logsignature
+/// epilogue and `Path::logsig_query_into` reuse one across lanes/queries
+/// instead of allocating two `sig_len` buffers per log.
+pub struct LogWorkspace {
+    t: Vec<f32>,
+    xt: Vec<f32>,
+}
+
+impl LogWorkspace {
+    pub fn new(spec: &SigSpec) -> LogWorkspace {
+        LogWorkspace { t: spec.zeros(), xt: spec.zeros() }
+    }
+
+    /// Whether this workspace was sized for `spec`.
+    pub fn fits(&self, spec: &SigSpec) -> bool {
+        self.t.len() == spec.sig_len()
+    }
+}
+
 /// `out = log(x)` where `x` is the non-unit part of a group-like element.
 pub fn log_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
+    let mut ws = LogWorkspace::new(spec);
+    log_into_ws(spec, x, out, &mut ws);
+}
+
+/// [`log_into`] reusing caller-owned scratch: identical op sequence (the
+/// workspace buffers are fully (re)initialised before use), so results
+/// are bitwise identical however the workspace was previously used.
+pub fn log_into_ws(spec: &SigSpec, x: &[f32], out: &mut [f32], ws: &mut LogWorkspace) {
     let n = spec.depth();
     debug_assert_eq!(x.len(), spec.sig_len());
     debug_assert_eq!(out.len(), spec.sig_len());
+    debug_assert!(ws.fits(spec));
     if n == 1 {
         out.copy_from_slice(x);
         return;
     }
     // r = (s, t); start at r_N = (1/N, 0).
     let mut s = 1.0 / n as f32;
-    let mut t = spec.zeros();
-    let mut xt = spec.zeros();
+    let t = &mut ws.t;
+    let xt = &mut ws.xt;
+    t.fill(0.0);
     for m in (1..n).rev() {
         // r_m = 1/m - x ⊠ r_{m+1} = (1/m, -(s·x + x ⊠_nounit t)).
-        mul_nounit_into(spec, x, &t, &mut xt);
+        mul_nounit_into(spec, x, t, xt);
         for ((tv, &xv), &pv) in t.iter_mut().zip(x).zip(xt.iter()) {
             *tv = -(s * xv + pv);
         }
@@ -37,7 +68,7 @@ pub fn log_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
     }
     // log = x ⊠ r_1 = s·x + x ⊠_nounit t   (s = 1 here).
     debug_assert_eq!(s, 1.0);
-    mul_nounit_into(spec, x, &t, out);
+    mul_nounit_into(spec, x, t, out);
     for (ov, &xv) in out.iter_mut().zip(x) {
         *ov += s * xv;
     }
@@ -155,6 +186,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn log_into_ws_reuse_is_bitwise_identical() {
+        // A dirty, repeatedly reused workspace must never change a single
+        // bit of the result — the batched logsignature epilogue relies on
+        // this for its per-lane parity with the scalar path.
+        property("log ws reuse bitwise", 20, |g| {
+            let d = g.usize_in(1, 4);
+            let n = g.usize_in(1, 6);
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = LogWorkspace::new(&s);
+            for _ in 0..3 {
+                let x = g.normal_vec(s.sig_len(), 0.5);
+                let fresh = log(&s, &x);
+                let mut reused = s.zeros();
+                log_into_ws(&s, &x, &mut reused, &mut ws);
+                assert_eq!(reused, fresh);
+            }
+        });
+    }
+
+    #[test]
+    fn log_workspace_fits_checks_spec() {
+        let a = SigSpec::new(2, 3).unwrap();
+        let b = SigSpec::new(3, 3).unwrap();
+        let ws = LogWorkspace::new(&a);
+        assert!(ws.fits(&a));
+        assert!(!ws.fits(&b));
     }
 
     #[test]

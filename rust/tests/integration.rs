@@ -252,6 +252,7 @@ fn xla_train_step_learns_and_matches_native_training() {
         hidden: entry.hidden,
         d_out: entry.d_out,
         depth: entry.depth,
+        logsig: false,
     };
     let mut rng = Rng::new(1234);
     let p0 = Params::init(&cfg, &mut rng);
