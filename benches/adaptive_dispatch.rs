@@ -28,6 +28,7 @@ use signax::coordinator::{
 use signax::substrate::benchlib::fmt_secs;
 use signax::substrate::pool::default_threads;
 use signax::substrate::rng::Rng;
+use signax::ta::Precision;
 
 const HOT: (usize, usize, usize) = (32, 3, 4); // (stream, d, depth)
 const DEPTH_TAIL: usize = 3;
@@ -51,6 +52,7 @@ fn hot_request(rng: &mut Rng) -> Request {
         stream,
         d,
         depth,
+        precision: Precision::F32,
     }
 }
 
@@ -63,6 +65,7 @@ fn rare_request(rng: &mut Rng, k: usize) -> Request {
         stream,
         d: 2,
         depth: DEPTH_TAIL,
+        precision: Precision::F32,
     }
 }
 

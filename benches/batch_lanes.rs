@@ -1,10 +1,16 @@
 //! Batch-lane engine benchmark: lane-fused forward/backward throughput vs
 //! per-path dispatch, swept over lane counts L ∈ {1, 4, 8, 16} and
 //! channels d ∈ {2, 4, 8} at depth 4 over short streams — the serving
-//! regime where one-thread-per-path leaves the SIMD lanes idle. Both
-//! sides run single-threaded so the speedup isolates lane utilisation,
-//! not thread scaling. Writes the machine-readable record the perf
-//! trajectory tracks:
+//! regime where one-thread-per-path leaves the SIMD lanes idle — plus a
+//! beyond-the-mono-window sweep at d ∈ {12, 20} in **both precisions**
+//! (f32 and f64), which exercises the runtime-`d` kernels the dispatch
+//! falls to past `LANE_VJP_MAX_D`. Both sides run single-threaded so the
+//! speedup isolates lane utilisation, not thread scaling. A final
+//! mono-vs-dyn section times one fused multiply-exponentiate VJP step
+//! per `d` with the const-`D` dispatch against the runtime-`d` body, so
+//! the `d <= 8` crossover stays benchmark-arbitrated rather than
+//! asserted. Writes the machine-readable record the perf trajectory
+//! tracks:
 //!
 //!     cargo bench --bench batch_lanes             # -> BENCH_batch.json
 //!     cargo bench --bench batch_lanes -- --check  # CI smoke: reduced
@@ -12,19 +18,121 @@
 //!         regressions fail CI instead of only skewing uploaded artifacts
 //!
 //! Acceptance target: >= 2x forward throughput over per-path dispatch at
-//! L = 16, d = 2 (recorded in BENCH_batch.json). Every timed point is
-//! first gated on bitwise equality between the lane-fused rows and
-//! per-path dispatch.
+//! L = 16, d = 2 in f32 (recorded in BENCH_batch.json). Every timed point
+//! is first gated on bitwise equality between the lane-fused rows and
+//! per-path dispatch — in the point's own precision.
 
 use signax::bench::batch_json;
 use signax::signature::{signature, signature_batch, signature_batch_vjp, signature_vjp};
 use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
 use signax::substrate::pool::default_threads;
 use signax::substrate::rng::Rng;
-use signax::ta::SigSpec;
+use signax::ta::fused::{fused_mexp_vjp, fused_mexp_vjp_dyn};
+use signax::ta::{Elem, SigSpec, Workspace};
 
 const DEPTH: usize = 4;
+/// Depth of the beyond-the-mono-window sweep (d = 12, 20): one level
+/// shallower so the d = 20 tensor algebra stays inside the bench budget.
+const WIDE_DEPTH: usize = 3;
+/// Lane count of the wide sweep — the serving block size.
+const WIDE_LANES: usize = 16;
 const STREAM: usize = 32;
+
+/// `(op, prec, d, depth, lanes, stream, per_path_s, lane_s)` — the
+/// [`batch_json`] point format.
+type Record = (&'static str, &'static str, usize, usize, usize, usize, f64, f64);
+
+/// One (prec, d, lanes) cell: bitwise-gate the lane engine against
+/// per-path dispatch in `E`, then time both sides, forward and backward.
+fn sweep_lanes<E: Elem>(
+    cfg: &BenchConfig,
+    prec: &'static str,
+    d: usize,
+    depth: usize,
+    lanes: usize,
+    records: &mut Vec<Record>,
+) -> anyhow::Result<()> {
+    let spec = SigSpec::new(d, depth)?;
+    let len = spec.sig_len();
+    let plen = STREAM * d;
+    let mut rng = Rng::new(0xBA7C ^ ((d as u64) << 8) ^ lanes as u64);
+    let paths: Vec<E> = signax::data::random_batch(&mut rng, lanes, STREAM, d, 0.2)
+        .into_iter()
+        .map(E::from_f32)
+        .collect();
+    let cots: Vec<E> =
+        rng.normal_vec(lanes * len, 1.0).into_iter().map(E::from_f32).collect();
+    // Correctness gate before timing: lane-fused == per-path, bitwise,
+    // forward and backward. Past d = 8 the backward side runs the
+    // runtime-`d` VJP body, so this is also the dyn-kernel parity gate.
+    let batched = signature_batch(&paths, lanes, STREAM, &spec, 1)?;
+    let batched_grad = signature_batch_vjp(&paths, lanes, STREAM, &spec, &cots, 1)?;
+    for l in 0..lanes {
+        let single = signature(&paths[l * plen..(l + 1) * plen], STREAM, &spec);
+        anyhow::ensure!(
+            batched[l * len..(l + 1) * len] == single[..],
+            "forward lane {l} of {prec} d={d} L={lanes} diverged from per-path dispatch"
+        );
+        let single_grad = signature_vjp(
+            &paths[l * plen..(l + 1) * plen],
+            STREAM,
+            &spec,
+            &cots[l * len..(l + 1) * len],
+        );
+        anyhow::ensure!(
+            batched_grad[l * plen..(l + 1) * plen] == single_grad[..],
+            "backward lane {l} of {prec} d={d} L={lanes} diverged from per-path dispatch"
+        );
+    }
+    let fwd_per_path = bench(cfg, || {
+        for b in 0..lanes {
+            black_box(signature(&paths[b * plen..(b + 1) * plen], STREAM, &spec));
+        }
+    })
+    .best_secs();
+    let fwd_lane = bench(cfg, || {
+        black_box(signature_batch(&paths, lanes, STREAM, &spec, 1).unwrap());
+    })
+    .best_secs();
+    println!(
+        "{:<9} {:>4} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+        "forward",
+        prec,
+        d,
+        lanes,
+        fmt_secs(fwd_per_path),
+        fmt_secs(fwd_lane),
+        fwd_per_path / fwd_lane
+    );
+    records.push(("forward", prec, d, depth, lanes, STREAM, fwd_per_path, fwd_lane));
+    let bwd_per_path = bench(cfg, || {
+        for b in 0..lanes {
+            black_box(signature_vjp(
+                &paths[b * plen..(b + 1) * plen],
+                STREAM,
+                &spec,
+                &cots[b * len..(b + 1) * len],
+            ));
+        }
+    })
+    .best_secs();
+    let bwd_lane = bench(cfg, || {
+        black_box(signature_batch_vjp(&paths, lanes, STREAM, &spec, &cots, 1).unwrap());
+    })
+    .best_secs();
+    println!(
+        "{:<9} {:>4} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+        "backward",
+        prec,
+        d,
+        lanes,
+        fmt_secs(bwd_per_path),
+        fmt_secs(bwd_lane),
+        bwd_per_path / bwd_lane
+    );
+    records.push(("backward", prec, d, depth, lanes, STREAM, bwd_per_path, bwd_lane));
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let check = std::env::args().any(|a| a == "--check");
@@ -48,94 +156,77 @@ fn main() -> anyhow::Result<()> {
         }
     };
     println!(
-        "{:<9} {:>3} {:>4} {:>12} {:>12} {:>8}",
-        "op", "d", "L", "per-path", "lane-fused", "speedup"
+        "{:<9} {:>4} {:>3} {:>4} {:>12} {:>12} {:>8}",
+        "op", "prec", "d", "L", "per-path", "lane-fused", "speedup"
     );
-    let mut records: Vec<(&str, usize, usize, usize, f64, f64)> = vec![];
+    let mut records: Vec<Record> = vec![];
+    // The mono window: the const-D dispatch, f32, full lane sweep.
     for &d in &[2usize, 4, 8] {
-        let spec = SigSpec::new(d, DEPTH)?;
-        let len = spec.sig_len();
         for &lanes in &[1usize, 4, 8, 16] {
-            let mut rng = Rng::new(0xBA7C ^ ((d as u64) << 8) ^ lanes as u64);
-            let paths = signax::data::random_batch(&mut rng, lanes, STREAM, d, 0.2);
-            let plen = STREAM * d;
-            // Correctness gate before timing: lane-fused == per-path,
-            // bitwise, forward and backward.
-            let batched = signature_batch(&paths, lanes, STREAM, &spec, 1)?;
-            let cots = rng.normal_vec(lanes * len, 1.0);
-            let batched_grad = signature_batch_vjp(&paths, lanes, STREAM, &spec, &cots, 1)?;
-            for l in 0..lanes {
-                let single = signature(&paths[l * plen..(l + 1) * plen], STREAM, &spec);
-                anyhow::ensure!(
-                    batched[l * len..(l + 1) * len] == single[..],
-                    "forward lane {l} of d={d} L={lanes} diverged from per-path dispatch"
-                );
-                let single_grad = signature_vjp(
-                    &paths[l * plen..(l + 1) * plen],
-                    STREAM,
-                    &spec,
-                    &cots[l * len..(l + 1) * len],
-                );
-                anyhow::ensure!(
-                    batched_grad[l * plen..(l + 1) * plen] == single_grad[..],
-                    "backward lane {l} of d={d} L={lanes} diverged from per-path dispatch"
-                );
-            }
-            let fwd_per_path = bench(&cfg, || {
-                for b in 0..lanes {
-                    black_box(signature(&paths[b * plen..(b + 1) * plen], STREAM, &spec));
-                }
-            })
-            .best_secs();
-            let fwd_lane = bench(&cfg, || {
-                black_box(signature_batch(&paths, lanes, STREAM, &spec, 1).unwrap());
-            })
-            .best_secs();
-            println!(
-                "{:<9} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
-                "forward",
-                d,
-                lanes,
-                fmt_secs(fwd_per_path),
-                fmt_secs(fwd_lane),
-                fwd_per_path / fwd_lane
-            );
-            records.push(("forward", d, lanes, STREAM, fwd_per_path, fwd_lane));
-            let bwd_per_path = bench(&cfg, || {
-                for b in 0..lanes {
-                    black_box(signature_vjp(
-                        &paths[b * plen..(b + 1) * plen],
-                        STREAM,
-                        &spec,
-                        &cots[b * len..(b + 1) * len],
-                    ));
-                }
-            })
-            .best_secs();
-            let bwd_lane = bench(&cfg, || {
-                black_box(signature_batch_vjp(&paths, lanes, STREAM, &spec, &cots, 1).unwrap());
-            })
-            .best_secs();
-            println!(
-                "{:<9} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
-                "backward",
-                d,
-                lanes,
-                fmt_secs(bwd_per_path),
-                fmt_secs(bwd_lane),
-                bwd_per_path / bwd_lane
-            );
-            records.push(("backward", d, lanes, STREAM, bwd_per_path, bwd_lane));
+            sweep_lanes::<f32>(&cfg, "f32", d, DEPTH, lanes, &mut records)?;
         }
     }
-    std::fs::write("BENCH_batch.json", batch_json(default_threads(), DEPTH, &records))?;
+    // Beyond the mono window: runtime-`d` kernels, both precisions, at
+    // the serving lane count.
+    for &d in &[12usize, 20] {
+        sweep_lanes::<f32>(&cfg, "f32", d, WIDE_DEPTH, WIDE_LANES, &mut records)?;
+        sweep_lanes::<f64>(&cfg, "f64", d, WIDE_DEPTH, WIDE_LANES, &mut records)?;
+    }
+    // Mono-vs-dyn crossover: one fused multiply-exponentiate VJP step per
+    // d — the const-D dispatch against the runtime-`d` body (identical op
+    // order, so any gap is pure codegen). Past d = 8 both columns run the
+    // dyn body and the ratio pins to ~1. Recorded so the d <= 8 crossover
+    // stays benchmark-arbitrated: if dyn ever catches mono inside the
+    // window, the mono bodies can be retired.
+    println!(
+        "\n{:<9} {:>4} {:>3} {:>12} {:>12} {:>8}",
+        "op", "prec", "d", "mono", "dyn", "mono/dyn"
+    );
+    for &(d, depth) in
+        &[(2usize, DEPTH), (4, DEPTH), (8, DEPTH), (12, WIDE_DEPTH), (20, WIDE_DEPTH)]
+    {
+        let spec = SigSpec::new(d, depth)?;
+        let len = spec.sig_len();
+        let mut rng = Rng::new(0xD1A6 ^ d as u64);
+        let a = rng.normal_vec(len, 0.3);
+        let z = rng.normal_vec(d, 0.3);
+        let g = rng.normal_vec(len, 1.0);
+        let mut ws = Workspace::new(&spec);
+        let mut ga = vec![0.0f32; len];
+        let mut gz = vec![0.0f32; d];
+        let t_mono = bench(&cfg, || {
+            ga.iter_mut().for_each(|v| *v = 0.0);
+            gz.iter_mut().for_each(|v| *v = 0.0);
+            fused_mexp_vjp(&spec, &a, &z, &g, &mut ga, &mut gz, &mut ws);
+            black_box(ga[0]);
+        })
+        .best_secs();
+        let t_dyn = bench(&cfg, || {
+            ga.iter_mut().for_each(|v| *v = 0.0);
+            gz.iter_mut().for_each(|v| *v = 0.0);
+            fused_mexp_vjp_dyn(&spec, &a, &z, &g, &mut ga, &mut gz, &mut ws);
+            black_box(ga[0]);
+        })
+        .best_secs();
+        println!(
+            "{:<9} {:>4} {:>3} {:>12} {:>12} {:>7.2}x",
+            "vjp_step",
+            "f32",
+            d,
+            fmt_secs(t_mono),
+            fmt_secs(t_dyn),
+            t_mono / t_dyn
+        );
+        records.push(("vjp_step", "f32", d, depth, 0, 0, t_mono, t_dyn));
+    }
+    std::fs::write("BENCH_batch.json", batch_json(default_threads(), &records))?;
     println!("\nwrote BENCH_batch.json");
     if check {
         // Hard gate at the acceptance point (with headroom for CI-runner
         // noise: the recorded full-run target is >= 2x).
-        let &(_, _, _, _, per_path, lane) = records
+        let &(.., per_path, lane) = records
             .iter()
-            .find(|r| r.0 == "forward" && r.1 == 2 && r.2 == 16)
+            .find(|r| r.0 == "forward" && r.1 == "f32" && r.2 == 2 && r.4 == 16)
             .expect("acceptance point measured");
         let speedup = per_path / lane;
         anyhow::ensure!(

@@ -9,7 +9,7 @@ use signax::coordinator::{Coordinator, CoordinatorConfig, Request};
 use signax::signature::signature;
 use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
 use signax::substrate::rng::Rng;
-use signax::ta::SigSpec;
+use signax::ta::{Precision, SigSpec};
 
 fn main() -> anyhow::Result<()> {
     let cfg = BenchConfig {
@@ -37,7 +37,13 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(CoordinatorConfig::native_only().with_native_batch(0))?;
     let routed = bench(&cfg, || {
         let r = coord
-            .call(Request::Signature { path: path.clone(), stream, d, depth })
+            .call(Request::Signature {
+                path: path.clone(),
+                stream,
+                d,
+                depth,
+                precision: Precision::F32,
+            })
             .unwrap();
         black_box(r.values[0]);
     })
@@ -57,7 +63,13 @@ fn main() -> anyhow::Result<()> {
     let reps = 5;
     for _ in 0..reps {
         let reqs: Vec<Request> = (0..32)
-            .map(|_| Request::Signature { path: path.clone(), stream, d, depth })
+            .map(|_| Request::Signature {
+                path: path.clone(),
+                stream,
+                d,
+                depth,
+                precision: Precision::F32,
+            })
             .collect();
         for r in coord.call_many(reqs) {
             r?;
@@ -74,12 +86,24 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(CoordinatorConfig::default())?;
     if coord.has_xla() {
         // warm
-        let _ = coord.call(Request::Signature { path: path.clone(), stream, d, depth });
+        let _ = coord.call(Request::Signature {
+            path: path.clone(),
+            stream,
+            d,
+            depth,
+            precision: Precision::F32,
+        });
         let t0 = Instant::now();
         let reps = 5;
         for _ in 0..reps {
             let reqs: Vec<Request> = (0..32)
-                .map(|_| Request::Signature { path: path.clone(), stream, d, depth })
+                .map(|_| Request::Signature {
+                    path: path.clone(),
+                    stream,
+                    d,
+                    depth,
+                    precision: Precision::F32,
+                })
                 .collect();
             for r in coord.call_many(reqs) {
                 r.unwrap();

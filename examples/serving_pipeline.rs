@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use signax::coordinator::{Backend, Coordinator, CoordinatorConfig, Request};
 use signax::substrate::rng::Rng;
+use signax::ta::Precision;
 
 fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(CoordinatorConfig::default())?;
@@ -34,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             stream,
             d,
             depth,
+            precision: Precision::F32,
         });
     }
     let t0 = Instant::now();
@@ -76,6 +78,7 @@ fn main() -> anyhow::Result<()> {
         d: 4,
         depth: 4,
         cotangent: cot,
+        precision: Precision::F32,
     })?;
     println!("gradient request served by {:?}: {} values", resp.backend, resp.values.len());
 

@@ -1,0 +1,423 @@
+#!/usr/bin/env python3
+"""Pure-NumPy mirror of the runtime-`d` fused Horner kernels — the pre-CI gate.
+
+Transliterates, operation for operation, the Rust kernels in
+`rust/src/ta/fused.rs` and `rust/src/ta/batch.rs`:
+
+  * ``fused_mexp_generic``   — runtime-`d` forward Horner (``A <- A (x) exp(z)``)
+  * ``fused_mexp_vjp_dyn``   — runtime-`d` reverse through the Horner scheme
+  * ``fused_mexp_batch``     — lane-interleaved forward twin
+  * ``fused_mexp_vjp_batch`` — lane-interleaved backward twin
+
+and validates, with no Rust toolchain required:
+
+  1. the runtime-`d` forward against the unfused exp + tensor-product
+     composition (f64, rel err ~1e-13);
+  2. the runtime-`d` VJP against full central-difference Jacobians in f64 at
+     the issue's dimension sweep d in {3, 8, 9, 12, 20} — both inside and
+     beyond the Rust mono window (d <= 8), where the dyn body is the only
+     dispatch target;
+  3. f32 kernel consistency against the f64 kernel on identical inputs;
+  4. per-lane **bitwise** parity of the lane-interleaved kernels against the
+     scalar runtime-`d` kernels, in BOTH precisions, at lane counts
+     {1, 3, 5} that leave ragged tails against the planner's 16-lane block.
+
+Reductions are accumulated in exactly the Rust op order (sequential, never
+``np.sum``'s pairwise tree), so bitwise comparisons are meaningful: a
+transcription drift between the scalar and batched Rust loops would show up
+here as a bit mismatch in f32.
+
+Run:  python3 python/tests/mirror_fused_dyn.py
+Exits nonzero on any failure. Uses only numpy — deliberately importable with
+neither jax nor a Rust toolchain on the machine.
+"""
+
+import math
+import sys
+
+import numpy as np
+
+
+class Spec:
+    """Mirror of ta::SigSpec — flat layout, level k at off(k), d^k entries."""
+
+    def __init__(self, d, depth):
+        self.d = d
+        self.depth = depth
+        offs = [0]
+        for k in range(1, depth + 1):
+            offs.append(offs[-1] + d**k)
+        self._off = offs
+        self.sig_len = offs[-1]
+
+    def off(self, k):
+        return self._off[k - 1]
+
+    def level_len(self, k):
+        return self._off[k] - self._off[k - 1]
+
+
+def recip(k, dt):
+    # Elem::recip_usize: ONE / from_usize(k), rounded once in E.
+    return dt(1.0) / dt(k)
+
+
+def stage_zdiv(spec, z, dt):
+    """zdiv row m-1 holds z * (1/m) — one rounded multiply per entry."""
+    out = np.empty((spec.depth,) + z.shape, dtype=dt)
+    for m in range(1, spec.depth + 1):
+        out[m - 1] = z * recip(m, dt)
+    return out
+
+
+# ---------------------------------------------------------------- scalar ---
+
+
+def fused_mexp_dyn(spec, a, z):
+    """In-place A <- A (x) exp(z): mirror of fused_mexp_generic."""
+    d, n, dt = spec.d, spec.depth, a.dtype.type
+    zdiv = stage_zdiv(spec, z, dt)
+    for k in range(n, 1, -1):
+        # B_1 = z/k + A_1.
+        cur = zdiv[k - 1] + a[:d]
+        cur_len = d
+        for i in range(2, k):
+            # B_i = B_{i-1} (o) z/(k-i+1) + A_i: mul then add, elementwise.
+            m = k - i + 1
+            oi, li = spec.off(i), spec.level_len(i)
+            ai = a[oi : oi + li].reshape(cur_len, d)
+            cur = (cur[:, None] * zdiv[m - 1][None, :] + ai).ravel()
+            cur_len *= d
+        # Final step in place: A_k += B_{k-1} (o) z.
+        ok = spec.off(k)
+        a[ok : ok + cur_len * d] += (cur[:, None] * z[None, :]).ravel()
+    a[:d] += z
+
+
+def fused_mexp_vjp_dyn(spec, a, z, g):
+    """Mirror of fused_mexp_vjp_dyn; returns (ga, gz) accumulated from zero.
+
+    Every reduction runs in the Rust loop order: per-row accumulators add
+    q-major (vectorised over rows), the gz accumulators add p-major
+    (vectorised over q) — sequential adds, never pairwise trees.
+    """
+    d, n, dt = spec.d, spec.depth, a.dtype.type
+    ga = np.zeros(spec.sig_len, dtype=dt)
+    gz = np.zeros(d, dtype=dt)
+    zdiv = stage_zdiv(spec, z, dt)
+    # Level 1: C_1 = A_1 + z.
+    ga[:d] += g[:d]
+    gz += g[:d]
+    for k in range(n, 1, -1):
+        # Recompute the forward chain for level k, keeping every B_i.
+        B = {1: zdiv[k - 1] + a[:d]}
+        cur = B[1]
+        cur_len = d
+        for i in range(2, k):
+            m = k - i + 1
+            oi, li = spec.off(i), spec.level_len(i)
+            ai = a[oi : oi + li].reshape(cur_len, d)
+            cur = (cur[:, None] * zdiv[m - 1][None, :] + ai).ravel()
+            cur_len *= d
+            B[i] = cur
+        # Unwind. Final step: C_k = B_{k-1} (o) z + A_k.
+        ok, lk = spec.off(k), spec.level_len(k)
+        ga[ok : ok + lk] += g[ok : ok + lk]
+        gk = g[ok : ok + lk].reshape(cur_len, d)
+        bk1 = B[k - 1]
+        gb = np.zeros(cur_len, dtype=dt)
+        for q in range(d):  # acc += row[q] * z[q], q-major per row
+            gb += gk[:, q] * z[q]
+        for p in range(cur_len):  # gz[q] += B_{k-1}[p] * gk[p, q], p-major
+            gz += bk1[p] * gk[p]
+        # Middle steps: B_i = B_{i-1} (o) z/m + A_i, i = k-1 .. 2.
+        len_i = cur_len
+        for i in range(k - 1, 1, -1):
+            m = k - i + 1
+            inv_m = recip(m, dt)
+            zm = zdiv[m - 1]
+            oi = spec.off(i)
+            prev_len = len_i // d
+            b_prev = B[i - 1]
+            ga[oi : oi + len_i] += gb
+            rows = gb.reshape(prev_len, d)
+            gb_prev = np.zeros(prev_len, dtype=dt)
+            for q in range(d):
+                gb_prev += rows[:, q] * zm[q]
+            gz_acc = np.zeros(d, dtype=dt)
+            for p in range(prev_len):
+                gz_acc += b_prev[p] * rows[p]
+            gz += inv_m * gz_acc
+            gb = gb_prev
+            len_i = prev_len
+        # Innermost: B_1 = z/k + A_1.
+        inv_k = recip(k, dt)
+        ga[:d] += gb
+        gz += inv_k * gb
+    return ga, gz
+
+
+# ----------------------------------------------------------------- batch ---
+# Lane-interleaved layout buf[i*L + l] is modelled as arrays of shape
+# (item_len, L): the lane axis is last/contiguous, exactly as in Rust.
+
+
+def fused_mexp_batch(spec, a, z):
+    """In-place lane-fused forward: mirror of ta::batch::fused_mexp_batch."""
+    d, n, dt = spec.d, spec.depth, a.dtype.type
+    L = a.shape[1]
+    zdiv = stage_zdiv(spec, z, dt)  # (depth, d, L)
+    for k in range(n, 1, -1):
+        cur = zdiv[k - 1] + a[:d]  # (d, L)
+        cur_len = d
+        for i in range(2, k):
+            m = k - i + 1
+            oi, li = spec.off(i), spec.level_len(i)
+            ai = a[oi : oi + li].reshape(cur_len, d, L)
+            cur = (cur[:, None, :] * zdiv[m - 1][None, :, :] + ai).reshape(-1, L)
+            cur_len *= d
+        ok = spec.off(k)
+        a[ok : ok + cur_len * d] += (
+            cur.reshape(cur_len, 1, L) * z[None, :, :]
+        ).reshape(-1, L)
+    a[:d] += z
+
+
+def fused_mexp_vjp_batch(spec, a, z, g):
+    """Mirror of ta::batch::fused_mexp_vjp_batch; returns (ga, gz).
+
+    Same accumulation orders as the Rust batch kernel: per-row accumulators
+    start from fill(ZERO) and add q-major; gz adds p-major; the per-step
+    gz accumulator (ws.gza) is zeroed and drained per middle step.
+    """
+    d, n, dt = spec.d, spec.depth, a.dtype.type
+    L = a.shape[1]
+    ga = np.zeros((spec.sig_len, L), dtype=dt)
+    gz = np.zeros((d, L), dtype=dt)
+    zdiv = stage_zdiv(spec, z, dt)
+    ga[:d] += g[:d]
+    gz += g[:d]
+    for k in range(n, 1, -1):
+        B = {1: zdiv[k - 1] + a[:d]}
+        cur = B[1]
+        cur_len = d
+        for i in range(2, k):
+            m = k - i + 1
+            oi, li = spec.off(i), spec.level_len(i)
+            ai = a[oi : oi + li].reshape(cur_len, d, L)
+            cur = (cur.reshape(cur_len, 1, L) * zdiv[m - 1][None, :, :] + ai).reshape(
+                -1, L
+            )
+            cur_len *= d
+            B[i] = cur
+        ok, lk = spec.off(k), spec.level_len(k)
+        ga[ok : ok + lk] += g[ok : ok + lk]
+        gk = g[ok : ok + lk].reshape(cur_len, d, L)
+        bk1 = B[k - 1].reshape(cur_len, L)
+        gb = np.zeros((cur_len, L), dtype=dt)
+        for q in range(d):
+            gb += gk[:, q, :] * z[q]
+        for p in range(cur_len):
+            gz += bk1[p][None, :] * gk[p]
+        len_i = cur_len
+        for i in range(k - 1, 1, -1):
+            m = k - i + 1
+            inv_m = recip(m, dt)
+            zm = zdiv[m - 1]
+            oi = spec.off(i)
+            prev_len = len_i // d
+            b_prev = B[i - 1].reshape(prev_len, L)
+            ga[oi : oi + len_i] += gb
+            rows = gb.reshape(prev_len, d, L)
+            gb_prev = np.zeros((prev_len, L), dtype=dt)
+            for q in range(d):
+                gb_prev += rows[:, q, :] * zm[q]
+            gz_acc = np.zeros((d, L), dtype=dt)
+            for p in range(prev_len):
+                gz_acc += b_prev[p][None, :] * rows[p]
+            gz += inv_m * gz_acc
+            gb = gb_prev.reshape(-1, L)
+            len_i = prev_len
+        inv_k = recip(k, dt)
+        ga[:d] += gb.reshape(d, L)
+        gz += inv_k * gb.reshape(d, L)
+    return ga, gz
+
+
+# ------------------------------------------------------------- reference ---
+
+
+def exp_ref(spec, z):
+    """exp(z) in the truncated algebra: level k = z^(o k) / k! (f64)."""
+    e = np.zeros(spec.sig_len, dtype=np.float64)
+    cur = z.astype(np.float64).copy()
+    e[: spec.d] = cur
+    for k in range(2, spec.depth + 1):
+        cur = (cur[:, None] * z[None, :]).ravel()
+        e[spec.off(k) : spec.off(k) + spec.level_len(k)] = cur / math.factorial(k)
+    return e
+
+
+def mul_ref(spec, a, b):
+    """(a (x) b) with the implicit unit scalar: out_k = a_k + b_k + sum a_i (o) b_{k-i}."""
+    out = np.zeros(spec.sig_len, dtype=np.float64)
+    for k in range(1, spec.depth + 1):
+        ok, lk = spec.off(k), spec.level_len(k)
+        out[ok : ok + lk] = a[ok : ok + lk] + b[ok : ok + lk]
+        for i in range(1, k):
+            ai = a[spec.off(i) : spec.off(i) + spec.level_len(i)]
+            bj = b[spec.off(k - i) : spec.off(k - i) + spec.level_len(k - i)]
+            out[ok : ok + lk] += (ai[:, None] * bj[None, :]).ravel()
+    return out
+
+
+# ---------------------------------------------------------------- checks ---
+
+FAILURES = []
+
+
+def check(name, ok, detail=""):
+    status = "ok  " if ok else "FAIL"
+    print(f"  [{status}] {name}" + (f"  ({detail})" if detail else ""))
+    if not ok:
+        FAILURES.append(name)
+
+
+def rel_err(x, y):
+    scale = max(np.abs(y).max(), 1e-30)
+    return np.abs(x - y).max() / scale
+
+
+def check_forward_vs_reference(d, depth, seed):
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    a0 = rng.standard_normal(spec.sig_len) * 0.4
+    z = rng.standard_normal(d) * 0.4
+    out = a0.copy()
+    fused_mexp_dyn(spec, out, z)
+    ref = mul_ref(spec, a0, exp_ref(spec, z))
+    err = rel_err(out, ref)
+    check(f"forward dyn == unfused reference  d={d} depth={depth}", err < 1e-12, f"rel {err:.2e}")
+
+
+def check_vjp_vs_fd(d, depth, seed, h=1e-6):
+    """Full central-difference Jacobian check of the dyn VJP, f64."""
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(spec.sig_len) * 0.4
+    z = rng.standard_normal(d) * 0.4
+    g = rng.standard_normal(spec.sig_len)
+
+    def loss(av, zv):
+        out = av.copy()
+        fused_mexp_dyn(spec, out, zv)
+        return float(g @ out)
+
+    ga, gz = fused_mexp_vjp_dyn(spec, a, z, g)
+    fd_ga = np.empty_like(a)
+    for j in range(spec.sig_len):
+        ap, am = a.copy(), a.copy()
+        ap[j] += h
+        am[j] -= h
+        fd_ga[j] = (loss(ap, z) - loss(am, z)) / (2 * h)
+    fd_gz = np.empty_like(z)
+    for j in range(d):
+        zp, zm = z.copy(), z.copy()
+        zp[j] += h
+        zm[j] -= h
+        fd_gz[j] = (loss(a, zp) - loss(a, zm)) / (2 * h)
+    ea, ez = rel_err(ga, fd_ga), rel_err(gz, fd_gz)
+    check(
+        f"vjp dyn == FD Jacobian (f64)      d={d} depth={depth}",
+        ea < 1e-6 and ez < 1e-6,
+        f"rel ga {ea:.2e} gz {ez:.2e}",
+    )
+
+
+def check_f32_tracks_f64(d, depth, seed):
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    a32 = (rng.standard_normal(spec.sig_len) * 0.3).astype(np.float32)
+    z32 = (rng.standard_normal(d) * 0.3).astype(np.float32)
+    g32 = rng.standard_normal(spec.sig_len).astype(np.float32)
+    out32 = a32.copy()
+    fused_mexp_dyn(spec, out32, z32)
+    out64 = a32.astype(np.float64)
+    fused_mexp_dyn(spec, out64, z32.astype(np.float64))
+    ef = rel_err(out32.astype(np.float64), out64)
+    ga32, gz32 = fused_mexp_vjp_dyn(spec, a32, z32, g32)
+    ga64, gz64 = fused_mexp_vjp_dyn(
+        spec, a32.astype(np.float64), z32.astype(np.float64), g32.astype(np.float64)
+    )
+    eg = max(rel_err(ga32.astype(np.float64), ga64), rel_err(gz32.astype(np.float64), gz64))
+    check(
+        f"f32 kernels track f64             d={d} depth={depth}",
+        ef < 1e-4 and eg < 1e-4,
+        f"rel fwd {ef:.2e} vjp {eg:.2e}",
+    )
+
+
+def check_lane_parity(d, depth, lanes, dt, seed):
+    """Bitwise: lane-interleaved kernels == scalar dyn kernels per lane."""
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    a_rows = (rng.standard_normal((lanes, spec.sig_len)) * 0.4).astype(dt)
+    z_rows = (rng.standard_normal((lanes, d)) * 0.4).astype(dt)
+    g_rows = rng.standard_normal((lanes, spec.sig_len)).astype(dt)
+    # pack: buf[i*L + l] = row_l[i]  ->  shape (item_len, L)
+    a_il = np.ascontiguousarray(a_rows.T)
+    z_il = np.ascontiguousarray(z_rows.T)
+    g_il = np.ascontiguousarray(g_rows.T)
+    fwd = a_il.copy()
+    fused_mexp_batch(spec, fwd, z_il)
+    ga_b, gz_b = fused_mexp_vjp_batch(spec, a_il, z_il, g_il)
+    ok_f = ok_b = True
+    for l in range(lanes):
+        ref = a_rows[l].copy()
+        fused_mexp_dyn(spec, ref, z_rows[l])
+        ok_f &= np.array_equal(fwd[:, l], ref)
+        ga_s, gz_s = fused_mexp_vjp_dyn(spec, a_rows[l], z_rows[l], g_rows[l])
+        ok_b &= np.array_equal(ga_b[:, l], ga_s) and np.array_equal(gz_b[:, l], gz_s)
+    prec = "f32" if dt == np.float32 else "f64"
+    check(
+        f"lane kernels bitwise == scalar    d={d} depth={depth} L={lanes} {prec}",
+        ok_f and ok_b,
+        "fwd+vjp, per-lane exact bits",
+    )
+
+
+def main():
+    # The issue's dimension sweep: inside the mono window (3, 8), just past
+    # it (9), and the wide serving shapes (12, 20). Depths chosen as in the
+    # Rust sweep tests, keeping d=20 inside the script's budget.
+    sweep = [(3, 4), (8, 3), (9, 3), (12, 3), (20, 2)]
+
+    print("forward: runtime-d Horner vs unfused exp + (x) composition (f64)")
+    for i, (d, depth) in enumerate(sweep):
+        check_forward_vs_reference(d, depth, 1000 + i)
+
+    print("backward: runtime-d VJP vs full central-difference Jacobians (f64)")
+    for i, (d, depth) in enumerate(sweep):
+        check_vjp_vs_fd(d, depth, 2000 + i)
+
+    print("precision axis: f32 kernels vs f64 kernels on identical inputs")
+    for i, (d, depth) in enumerate(sweep):
+        check_f32_tracks_f64(d, depth, 3000 + i)
+
+    print("lane engine: bitwise per-lane parity incl. ragged tails (L in {1,3,5})")
+    for dt in (np.float32, np.float64):
+        for i, (d, depth) in enumerate(sweep):
+            for lanes in (1, 3, 5):
+                check_lane_parity(d, depth, lanes, dt, 4000 + 31 * i + lanes)
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} mirror check(s) FAILED:")
+        for f in FAILURES:
+            print(f"  - {f}")
+        return 1
+    print("\nall mirror checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

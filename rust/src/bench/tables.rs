@@ -793,23 +793,26 @@ fn batch_table(ctx: &BenchCtx) -> Table {
 }
 
 /// Render batch-lane bench records as `BENCH_batch.json`: `points[]` of
-/// `(op, d, lanes, stream, per_path_s, lane_s, speedup)` under top-level
-/// `hw_threads` / `depth`. Written by `benches/batch_lanes.rs`; the
-/// acceptance point is >= 2x forward speedup at `lanes = 16, d = 2`.
+/// `(op, prec, d, depth, lanes, stream, per_path_s, lane_s, speedup)`
+/// under top-level `hw_threads`. Written by `benches/batch_lanes.rs`;
+/// the acceptance point is >= 2x forward speedup at `lanes = 16, d = 2`
+/// in f32. Depth moved per-point (the beyond-the-mono-window sweep runs
+/// one level shallower) and each point carries its precision label;
+/// `op = "vjp_step"` points record the mono-vs-dyn kernel crossover
+/// (`per_path_s` = const-`D` dispatch, `lane_s` = runtime-`d` body).
+#[allow(clippy::type_complexity)]
 pub fn batch_json(
     hw_threads: usize,
-    depth: usize,
-    records: &[(&str, usize, usize, usize, f64, f64)],
+    records: &[(&str, &str, usize, usize, usize, usize, f64, f64)],
 ) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"bench\": \"batch_lanes\",\n");
-    s.push_str(&format!("  \"depth\": {depth},\n"));
     s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
     s.push_str("  \"points\": [\n");
-    for (i, &(op, d, lanes, stream, per_path, lane)) in records.iter().enumerate() {
+    for (i, &(op, prec, d, depth, lanes, stream, per_path, lane)) in records.iter().enumerate() {
         let comma = if i + 1 == records.len() { "" } else { "," };
         s.push_str(&format!(
-            "    {{\"op\": \"{op}\", \"d\": {d}, \"lanes\": {lanes}, \"stream\": {stream}, \"per_path_s\": {per_path:.9}, \"lane_s\": {lane:.9}, \"speedup\": {:.3}}}{comma}\n",
+            "    {{\"op\": \"{op}\", \"prec\": \"{prec}\", \"d\": {d}, \"depth\": {depth}, \"lanes\": {lanes}, \"stream\": {stream}, \"per_path_s\": {per_path:.9}, \"lane_s\": {lane:.9}, \"speedup\": {:.3}}}{comma}\n",
             per_path / lane
         ));
     }
@@ -1007,15 +1010,18 @@ mod tests {
         // JSON rendering is well-formed enough for the in-tree parser.
         let json = batch_json(
             8,
-            4,
-            &[("forward", 2, 16, 32, 1.0, 0.4), ("backward", 2, 16, 32, 3.0, 1.5)],
+            &[
+                ("forward", "f32", 2, 4, 16, 32, 1.0, 0.4),
+                ("backward", "f64", 12, 3, 16, 32, 3.0, 1.5),
+            ],
         );
         let parsed = crate::substrate::json::Json::parse(&json).unwrap();
-        assert_eq!(parsed.get("depth").and_then(|v| v.as_f64()), Some(4.0));
         let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
+        assert_eq!(pts[0].get("depth").and_then(|v| v.as_f64()), Some(4.0));
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(pts[1].get("d").and_then(|v| v.as_f64()), Some(12.0));
         assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
     }
 

@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use super::flusher::{GroupBatcher, GroupExecutor};
 use super::metrics::Metrics;
+use crate::ta::Precision;
 
 /// Shape key of a batchable computation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -31,6 +32,11 @@ pub struct BatchShape {
     pub length: usize,
     pub d: usize,
     pub depth: usize,
+    /// Compute precision of the batch. Rows are always `f32` on the wire;
+    /// `Precision::F64` backends upcast on execution. Part of the queue
+    /// identity, so f32 and f64 requests of one logical shape never share
+    /// a microbatch (their results differ bitwise).
+    pub prec: Precision,
     /// Input row width (e.g. `length * d` for sig, `length * d + sig_len`
     /// for grad rows that carry a cotangent).
     pub in_dim: usize,
@@ -192,6 +198,7 @@ mod tests {
             length: 4,
             d: 2,
             depth: 3,
+            prec: Precision::F32,
             in_dim: 4 * 2,
             out_dim: spec.sig_len(),
         }
@@ -398,11 +405,17 @@ mod tests {
         sh_b.length = 6;
         sh_b.in_dim = 6 * 2;
         sh_b.kind = 0;
+        // Same logical shape as `sh_a`, different compute precision: the
+        // precision is part of the queue identity.
+        let mut sh_c = shape(1);
+        sh_c.prec = Precision::F64;
         let mut rng = crate::substrate::rng::Rng::new(4);
         let rx_a = batcher.submit(sh_a, rng.normal_vec(sh_a.in_row(), 0.5)).unwrap();
         let rx_b = batcher.submit(sh_b, rng.normal_vec(sh_b.in_row(), 0.5)).unwrap();
+        let rx_c = batcher.submit(sh_c, rng.normal_vec(sh_c.in_row(), 0.5)).unwrap();
         assert!(rx_a.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
-        assert_eq!(metrics.snapshot().batches, 2);
+        assert!(rx_c.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        assert_eq!(metrics.snapshot().batches, 3);
     }
 }

@@ -22,6 +22,16 @@
 //! `Path::update_batch` sweep — bitwise identical per session to scalar
 //! feeding. All three gathering surfaces are instantiations of one
 //! unified batcher generic ([`super::flusher::GroupBatcher`]).
+//!
+//! **Precision axis**: stateless requests carry a
+//! [`crate::ta::Precision`]. Rows stay `f32` on the wire; an f64 request
+//! upcasts once at the native boundary, runs the same (now
+//! scalar-generic) kernels in `f64`, and downcasts the result. The
+//! precision is part of both the planner's [`ShapeKey`] and the batcher's
+//! queue identity ([`BatchShape::prec`]), so f32 and f64 requests of one
+//! logical shape never share a microbatch — their bits differ. The XLA
+//! artifacts are compiled for f32 only, so f64 requests always route
+//! native.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -41,7 +51,7 @@ use crate::runtime::{ArtifactKind, EngineHandle, Registry};
 use crate::signature::{signature_batch_planned, signature_vjp_with, signature_with, SigConfig};
 #[cfg(test)]
 use crate::signature::signature;
-use crate::ta::SigSpec;
+use crate::ta::{Precision, SigSpec};
 
 /// Kinds encoded into [`BatchShape::kind`].
 const KIND_SIG: u8 = 0;
@@ -54,12 +64,20 @@ const KIND_SIG_NATIVE: u8 = 3;
 const KIND_LOGSIG_NATIVE: u8 = 4;
 
 /// A request against the coordinator.
+///
+/// Stateless requests carry a compute [`Precision`] (`Precision::F32` is
+/// the default and preserves pre-precision-axis behaviour bitwise). The
+/// wire format stays `f32` either way: an f64 request upcasts its rows at
+/// the native engine boundary, computes in `f64`, and downcasts the
+/// result — trading wire width for internal accumulation accuracy.
 #[derive(Clone, Debug)]
 pub enum Request {
     /// `Sig^depth(path)` for one `(stream, d)` path.
-    Signature { path: Vec<f32>, stream: usize, d: usize, depth: usize },
-    /// Words-basis `LogSig^depth(path)`.
-    LogSignature { path: Vec<f32>, stream: usize, d: usize, depth: usize },
+    Signature { path: Vec<f32>, stream: usize, d: usize, depth: usize, precision: Precision },
+    /// Words-basis `LogSig^depth(path)`. Served in f32 only (the log +
+    /// Words-projection epilogue is f32); `Precision::F64` is a clean
+    /// error, not a silent downgrade.
+    LogSignature { path: Vec<f32>, stream: usize, d: usize, depth: usize, precision: Precision },
     /// VJP: cotangent on the signature -> gradient on the path.
     SignatureGrad {
         path: Vec<f32>,
@@ -67,6 +85,7 @@ pub enum Request {
         d: usize,
         depth: usize,
         cotangent: Vec<f32>,
+        precision: Precision,
     },
     /// Open a streaming session seeded with an initial path (>= 2 points).
     /// The response carries the new id in [`Response::session`] and the
@@ -97,6 +116,9 @@ pub enum Backend {
 pub struct Response {
     pub values: Vec<f32>,
     pub backend: Backend,
+    /// The compute precision that produced `values` (streaming and XLA
+    /// responses are always [`Precision::F32`]).
+    pub precision: Precision,
     /// Set on streaming responses: the session the request addressed
     /// (`OpenStream` returns the freshly allocated id here).
     pub session: Option<SessionId>,
@@ -283,8 +305,13 @@ impl BatchBackend for NativeLaneBackend {
         // scalar reference sweep — a request's bits must not depend on
         // whether traffic happened to coalesce with it.
         let rows = n_real.clamp(1, shape.batch);
-        let work =
-            WorkShape { batch: rows, points: shape.length, d: shape.d, depth: shape.depth };
+        let work = WorkShape {
+            batch: rows,
+            points: shape.length,
+            d: shape.d,
+            depth: shape.depth,
+            dtype: shape.prec,
+        };
         let plan = self.planner.plan_native_flush(rows, &work);
         match plan {
             ExecPlan::Scalar => self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed),
@@ -297,6 +324,12 @@ impl BatchBackend for NativeLaneBackend {
         };
         let cfg = SigConfig { threads: self.threads, ..SigConfig::serial() };
         if shape.kind == KIND_LOGSIG_NATIVE {
+            // The logsig epilogue (log + Words projection) is f32; the
+            // router rejects f64 logsig requests before they reach a queue.
+            anyhow::ensure!(
+                shape.prec == Precision::F32,
+                "logsig microbatches are f32-only"
+            );
             let lplan = self.plans.get(shape.d, shape.depth)?;
             anyhow::ensure!(
                 shape.out_dim == lplan.dim(),
@@ -314,14 +347,20 @@ impl BatchBackend for NativeLaneBackend {
                 plan,
             );
         }
-        signature_batch_planned(
-            &padded[..rows * shape.in_row()],
-            rows,
-            shape.length,
-            &spec,
-            &cfg,
-            plan,
-        )
+        let real = &padded[..rows * shape.in_row()];
+        match shape.prec {
+            Precision::F32 => {
+                signature_batch_planned(real, rows, shape.length, &spec, &cfg, plan)
+            }
+            Precision::F64 => {
+                // Upcast once at the boundary; the widened plan executes
+                // the same lane-fused sweep in f64 — bitwise identical per
+                // row to a stand-alone f64 serve of the same lone row.
+                let wide: Vec<f64> = real.iter().map(|&v| v as f64).collect();
+                let out = signature_batch_planned(&wide, rows, shape.length, &spec, &cfg, plan)?;
+                Ok(out.into_iter().map(|v| v as f32).collect())
+            }
+        }
     }
 }
 
@@ -459,6 +498,7 @@ impl Coordinator {
         stream: usize,
         d: usize,
         depth: usize,
+        precision: Precision,
         out_dim: usize,
         path: Vec<f32>,
         direct: impl FnOnce(Vec<f32>) -> anyhow::Result<Vec<f32>>,
@@ -482,6 +522,7 @@ impl Coordinator {
                 length: stream,
                 d,
                 depth,
+                prec: precision,
                 in_dim: stream * d,
                 out_dim,
             };
@@ -522,24 +563,31 @@ impl Coordinator {
         // native fallback below never sees the request again.)
         if self.cfg.prefer_xla {
             if let (Some(reg), Some(batcher)) = (&self.registry, &self.batcher) {
+                // XLA artifacts are compiled for f32 — f64 requests fall
+                // through to the native engine (the only backend with a
+                // precision axis).
                 let routed = match &mut req {
-                    Request::Signature { path, stream, d, depth } => reg
-                        .find_batchable(ArtifactKind::Sig, 1, *stream, *d, *depth)
-                        .map(|e| {
+                    Request::Signature { path, stream, d, depth, precision }
+                        if *precision == Precision::F32 =>
+                    {
+                        reg.find_batchable(ArtifactKind::Sig, 1, *stream, *d, *depth).map(|e| {
                             let shape = BatchShape {
                                 kind: KIND_SIG,
                                 batch: e.batch,
                                 length: *stream,
                                 d: *d,
                                 depth: *depth,
+                                prec: Precision::F32,
                                 in_dim: *stream * *d,
                                 out_dim: e.out_dim,
                             };
                             batcher.submit(shape, std::mem::take(path))
-                        }),
-                    Request::LogSignature { path, stream, d, depth } => reg
-                        .find_batchable(ArtifactKind::LogSig, 1, *stream, *d, *depth)
-                        .map(|e| {
+                        })
+                    }
+                    Request::LogSignature { path, stream, d, depth, precision }
+                        if *precision == Precision::F32 =>
+                    {
+                        reg.find_batchable(ArtifactKind::LogSig, 1, *stream, *d, *depth).map(|e| {
                             self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
                             let shape = BatchShape {
                                 kind: KIND_LOGSIG,
@@ -547,28 +595,36 @@ impl Coordinator {
                                 length: *stream,
                                 d: *d,
                                 depth: *depth,
+                                prec: Precision::F32,
                                 in_dim: *stream * *d,
                                 out_dim: e.out_dim,
                             };
                             batcher.submit(shape, std::mem::take(path))
-                        }),
-                    Request::SignatureGrad { path, stream, d, depth, cotangent } => reg
-                        .find_batchable(ArtifactKind::SigGrad, 1, *stream, *d, *depth)
-                        .map(|e| {
-                            let mut row = std::mem::take(path);
-                            row.extend_from_slice(cotangent);
-                            let shape = BatchShape {
-                                kind: KIND_SIGGRAD,
-                                batch: e.batch,
-                                length: *stream,
-                                d: *d,
-                                depth: *depth,
-                                in_dim: row.len(),
-                                out_dim: e.out_dim,
-                            };
-                            batcher.submit(shape, row)
-                        }),
-                    // Streaming requests were already dispatched above.
+                        })
+                    }
+                    Request::SignatureGrad { path, stream, d, depth, cotangent, precision }
+                        if *precision == Precision::F32 =>
+                    {
+                        reg.find_batchable(ArtifactKind::SigGrad, 1, *stream, *d, *depth).map(
+                            |e| {
+                                let mut row = std::mem::take(path);
+                                row.extend_from_slice(cotangent);
+                                let shape = BatchShape {
+                                    kind: KIND_SIGGRAD,
+                                    batch: e.batch,
+                                    length: *stream,
+                                    d: *d,
+                                    depth: *depth,
+                                    prec: Precision::F32,
+                                    in_dim: row.len(),
+                                    out_dim: e.out_dim,
+                                };
+                                batcher.submit(shape, row)
+                            },
+                        )
+                    }
+                    // Streaming requests were already dispatched above;
+                    // f64 requests route native.
                     _ => None,
                 };
                 if let Some(rx) = routed {
@@ -577,36 +633,58 @@ impl Coordinator {
                         .recv()
                         .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
                     self.metrics.xla_requests.fetch_add(1, Ordering::Relaxed);
-                    return Ok(Response { values, backend: Backend::Xla, session: None });
+                    return Ok(Response {
+                        values,
+                        backend: Backend::Xla,
+                        precision: Precision::F32,
+                        session: None,
+                    });
                 }
             }
         }
         // Native path. All shapes are validated up front so malformed
         // requests are an `Err` here, never a panic on a serving thread.
-        let values = match req {
-            Request::Signature { path, stream, d, depth } => {
+        let (values, precision) = match req {
+            Request::Signature { path, stream, d, depth, precision } => {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
                 // Lane-fused microbatching via the shared stateless path:
                 // same-spec requests gathered within the linger window
                 // execute as one interleaved sweep, each row bitwise
-                // identical to a stand-alone signature call.
-                self.serve_native_stateless(
-                    ShapeKey::signature(d, depth, stream),
+                // identical to a stand-alone signature call. The shape key
+                // carries the dtype, so f32 and f64 traffic of one shape
+                // adapts — and batches — independently.
+                let values = self.serve_native_stateless(
+                    ShapeKey::signature(d, depth, stream).with_dtype(precision),
                     KIND_SIG_NATIVE,
                     stream,
                     d,
                     depth,
+                    precision,
                     spec.sig_len(),
                     path,
-                    |p| signature_with(&p, stream, &spec, &SigConfig::serial()),
-                )?
+                    |p| match precision {
+                        Precision::F32 => signature_with(&p, stream, &spec, &SigConfig::serial()),
+                        Precision::F64 => {
+                            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
+                            let out =
+                                signature_with(&wide, stream, &spec, &SigConfig::serial())?;
+                            Ok(out.into_iter().map(|v| v as f32).collect())
+                        }
+                    },
+                )?;
+                (values, precision)
             }
-            Request::LogSignature { path, stream, d, depth } => {
+            Request::LogSignature { path, stream, d, depth, precision } => {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
+                anyhow::ensure!(
+                    precision == Precision::F32,
+                    "logsignature serving is f32-only (the log + Words-projection epilogue \
+                     has no f64 path)"
+                );
                 self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
                 // Logsignature parity: same shared path, keyed under its
                 // own logsig kind (sig and logsig adapt — and batch —
@@ -614,18 +692,20 @@ impl Coordinator {
                 // epilogue on the flushed sweep. `native_batch = 0`
                 // disables batching here too.
                 let lplan = self.plan(d, depth)?;
-                self.serve_native_stateless(
+                let values = self.serve_native_stateless(
                     ShapeKey::logsignature(d, depth, stream),
                     KIND_LOGSIG_NATIVE,
                     stream,
                     d,
                     depth,
+                    Precision::F32,
                     lplan.dim(),
                     path,
                     |p| logsignature_with(&p, stream, &spec, &lplan, &SigConfig::serial()),
-                )?
+                )?;
+                (values, Precision::F32)
             }
-            Request::SignatureGrad { path, stream, d, depth, cotangent } => {
+            Request::SignatureGrad { path, stream, d, depth, cotangent, precision } => {
                 let spec = SigSpec::new(d, depth)?;
                 // Shape validation happens inside the VJP. Per-request
                 // stream parallelism is capped by the dispatch config: the
@@ -645,6 +725,7 @@ impl Coordinator {
                     points: stream,
                     d,
                     depth,
+                    dtype: precision,
                 });
                 match plan {
                     ExecPlan::StreamParallel { .. } => self
@@ -654,7 +735,24 @@ impl Coordinator {
                     _ => self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed),
                 };
                 let cfg = SigConfig { threads, ..SigConfig::serial() };
-                signature_vjp_with(&path, stream, &spec, &cfg, &cotangent)?.grad_path
+                let grad = match precision {
+                    Precision::F32 => {
+                        signature_vjp_with(&path, stream, &spec, &cfg, &cotangent)?.grad_path
+                    }
+                    Precision::F64 => {
+                        // Upcast both inputs once; the reversibility-based
+                        // backward runs entirely in f64 and the path
+                        // gradient downcasts at the boundary.
+                        let wide_path: Vec<f64> = path.iter().map(|&v| v as f64).collect();
+                        let wide_cot: Vec<f64> = cotangent.iter().map(|&v| v as f64).collect();
+                        signature_vjp_with(&wide_path, stream, &spec, &cfg, &wide_cot)?
+                            .grad_path
+                            .into_iter()
+                            .map(|v| v as f32)
+                            .collect()
+                    }
+                };
+                (grad, precision)
             }
             Request::OpenStream { .. }
             | Request::Feed { .. }
@@ -663,7 +761,7 @@ impl Coordinator {
             | Request::CloseStream { .. } => unreachable!("handled by route_stream"),
         };
         self.metrics.native_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(Response { values, backend: Backend::Native, session: None })
+        Ok(Response { values, backend: Backend::Native, precision, session: None })
     }
 
     /// Serve a streaming request against the session table; `Ok(None)` for
@@ -760,7 +858,7 @@ impl Coordinator {
             | Request::LogSignature { .. }
             | Request::SignatureGrad { .. } => unreachable!("stateless; returned above"),
         };
-        Ok(Some(Response { values, backend: Backend::Native, session }))
+        Ok(Some(Response { values, backend: Backend::Native, precision: Precision::F32, session }))
     }
 
     /// Serve a whole batch concurrently (used by examples and benches):
@@ -791,7 +889,13 @@ mod tests {
         let mut rng = Rng::new(1);
         let path = rng.normal_vec(8 * 2, 0.4);
         let resp = c
-            .call(Request::Signature { path: path.clone(), stream: 8, d: 2, depth: 3 })
+            .call(Request::Signature {
+                path: path.clone(),
+                stream: 8,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            })
             .unwrap();
         assert_eq!(resp.backend, Backend::Native);
         let spec = SigSpec::new(2, 3).unwrap();
@@ -805,7 +909,13 @@ mod tests {
         let mut rng = Rng::new(2);
         let path = rng.normal_vec(6 * 3, 0.4);
         let resp = c
-            .call(Request::LogSignature { path, stream: 6, d: 3, depth: 3 })
+            .call(Request::LogSignature {
+                path,
+                stream: 6,
+                d: 3,
+                depth: 3,
+                precision: Precision::F32,
+            })
             .unwrap();
         assert_eq!(resp.values.len(), crate::words::witt_dimension(3, 3));
     }
@@ -824,6 +934,7 @@ mod tests {
                 d: 2,
                 depth: 3,
                 cotangent: cot.clone(),
+                precision: Precision::F32,
             })
             .unwrap();
         // Short stream: the router's parallel config falls back to the
@@ -851,6 +962,7 @@ mod tests {
                 d: 2,
                 depth: 3,
                 cotangent: cot.clone(),
+                precision: Precision::F32,
             })
             .unwrap();
         let serial = crate::signature::signature_vjp(&path, stream, &spec, &cot);
@@ -863,6 +975,7 @@ mod tests {
                 d: 2,
                 depth: 3,
                 cotangent: vec![0.0; spec.sig_len() - 1],
+                precision: Precision::F32,
             })
             .is_err());
     }
@@ -870,7 +983,14 @@ mod tests {
     #[test]
     fn bad_shapes_error_and_count() {
         let c = native();
-        assert!(c.call(Request::Signature { path: vec![0.0; 3], stream: 8, d: 2, depth: 3 }).is_err());
+        let bad = c.call(Request::Signature {
+            path: vec![0.0; 3],
+            stream: 8,
+            d: 2,
+            depth: 3,
+            precision: Precision::F32,
+        });
+        assert!(bad.is_err());
         assert_eq!(c.metrics().snapshot().errors, 1);
     }
 
@@ -884,6 +1004,7 @@ mod tests {
                 stream: 8,
                 d: 2,
                 depth: 3,
+                precision: Precision::F32,
             })
             .collect();
         let resps = c.call_many(reqs);
@@ -1044,6 +1165,7 @@ mod tests {
                 stream: 4,
                 d: 2,
                 depth: 3,
+                precision: Precision::F32,
             })
             .collect();
         for r in c.call_many(reqs) {
@@ -1076,7 +1198,13 @@ mod tests {
         let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
         let reqs: Vec<Request> = paths
             .iter()
-            .map(|p| Request::Signature { path: p.clone(), stream: 8, d: 2, depth: 3 })
+            .map(|p| Request::Signature {
+                path: p.clone(),
+                stream: 8,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            })
             .collect();
         let resps = c.call_many(reqs);
         for (p, r) in paths.iter().zip(&resps) {
@@ -1114,7 +1242,13 @@ mod tests {
         let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
         let reqs: Vec<Request> = paths
             .iter()
-            .map(|p| Request::LogSignature { path: p.clone(), stream: 8, d: 2, depth: 3 })
+            .map(|p| Request::LogSignature {
+                path: p.clone(),
+                stream: 8,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            })
             .collect();
         let resps = c.call_many(reqs);
         for (p, r) in paths.iter().zip(&resps) {
@@ -1149,8 +1283,20 @@ mod tests {
         let mut rng = Rng::new(23);
         let p = rng.normal_vec(6 * 2, 0.4);
         let resps = c.call_many(vec![
-            Request::Signature { path: p.clone(), stream: 6, d: 2, depth: 3 },
-            Request::LogSignature { path: p.clone(), stream: 6, d: 2, depth: 3 },
+            Request::Signature {
+                path: p.clone(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            },
+            Request::LogSignature {
+                path: p.clone(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            },
         ]);
         assert_eq!(resps[0].as_ref().unwrap().values, signature(&p, 6, &spec));
         assert_eq!(
@@ -1158,6 +1304,166 @@ mod tests {
             logsignature_with(&p, 6, &spec, &plan, &SigConfig::serial()).unwrap()
         );
         assert_eq!(c.metrics().snapshot().batches, 2, "kinds must not share a queue");
+    }
+
+    #[test]
+    fn f32_and_f64_of_one_shape_never_share_a_microbatch() {
+        // The PR 6 acceptance test: one logical shape, two compute
+        // precisions. The dtype keys both the planner's shape mix and the
+        // batcher queue, so the two requests flush as TWO microbatches —
+        // an f32 request round-trips without ever sharing a queue with
+        // f64 — and the f64 row is the upcast -> f64 sweep -> downcast
+        // oracle, not the f32 sweep.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(10),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(24);
+        let p = rng.normal_vec(6 * 2, 0.4);
+        let resps = c.call_many(vec![
+            Request::Signature {
+                path: p.clone(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            },
+            Request::Signature {
+                path: p.clone(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+                precision: Precision::F64,
+            },
+        ]);
+        let r32 = resps[0].as_ref().unwrap();
+        let r64 = resps[1].as_ref().unwrap();
+        assert_eq!(r32.precision, Precision::F32);
+        assert_eq!(r64.precision, Precision::F64);
+        assert_eq!(r32.values, signature(&p, 6, &spec));
+        let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
+        let want64: Vec<f32> = signature_with(&wide, 6, &spec, &SigConfig::serial())
+            .unwrap()
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        assert_eq!(r64.values, want64, "f64 row != the f64 oracle");
+        assert_eq!(c.metrics().snapshot().batches, 2, "precisions must not share a queue");
+    }
+
+    #[test]
+    fn native_microbatch_coalesces_f64_rows_bitwise() {
+        // The widened plans execute at f64 too: six concurrent f64
+        // requests of one spec coalesce into ONE lane-fused microbatch,
+        // and every row is bitwise the stand-alone f64 serve (upcast ->
+        // f64 sweep -> downcast) — coalescing must never change a
+        // caller's bits, in either precision.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(250),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
+        .unwrap();
+        let spec = SigSpec::new(3, 3).unwrap();
+        let mut rng = Rng::new(25);
+        let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 3, 0.4)).collect();
+        let reqs: Vec<Request> = paths
+            .iter()
+            .map(|p| Request::Signature {
+                path: p.clone(),
+                stream: 8,
+                d: 3,
+                depth: 3,
+                precision: Precision::F64,
+            })
+            .collect();
+        let resps = c.call_many(reqs);
+        for (p, r) in paths.iter().zip(&resps) {
+            let r = r.as_ref().expect("response");
+            assert_eq!(r.backend, Backend::Native);
+            assert_eq!(r.precision, Precision::F64);
+            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
+            let want: Vec<f32> = signature_with(&wide, 8, &spec, &SigConfig::serial())
+                .unwrap()
+                .into_iter()
+                .map(|v| v as f32)
+                .collect();
+            assert_eq!(r.values, want, "f64 lane row != stand-alone f64 serve");
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.batches, 1, "same-spec f64 requests share one microbatch");
+        assert_eq!(snap.real_rows, 6);
+    }
+
+    #[test]
+    fn f64_serves_direct_and_grad_surfaces_logsig_errors() {
+        // `native_batch = 0`: the escape hatch applies to f64 requests
+        // too — direct serve, no linger. Gradient requests run the f64
+        // backward; logsignature has no f64 epilogue and must be a clean
+        // error, not a silent f32 downgrade.
+        let c = Coordinator::new(CoordinatorConfig::native_only().with_native_batch(0)).unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(26);
+        let path = rng.normal_vec(5 * 2, 0.4);
+        let wide: Vec<f64> = path.iter().map(|&v| v as f64).collect();
+
+        let resp = c
+            .call(Request::Signature {
+                path: path.clone(),
+                stream: 5,
+                d: 2,
+                depth: 3,
+                precision: Precision::F64,
+            })
+            .unwrap();
+        let want: Vec<f32> = signature_with(&wide, 5, &spec, &SigConfig::serial())
+            .unwrap()
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        assert_eq!(resp.values, want);
+        assert_eq!(resp.precision, Precision::F64);
+
+        let cot = rng.normal_vec(spec.sig_len(), 1.0);
+        let wide_cot: Vec<f64> = cot.iter().map(|&v| v as f64).collect();
+        let g = c
+            .call(Request::SignatureGrad {
+                path: path.clone(),
+                stream: 5,
+                d: 2,
+                depth: 3,
+                cotangent: cot,
+                precision: Precision::F64,
+            })
+            .unwrap();
+        // Short stream: the plan falls back to the serial sweep, so this
+        // is bitwise the f64 VJP downcast at the boundary.
+        let want_g: Vec<f32> = signature_vjp_with(&wide, 5, &spec, &SigConfig::serial(), &wide_cot)
+            .unwrap()
+            .grad_path
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        assert_eq!(g.values, want_g);
+        assert_eq!(g.precision, Precision::F64);
+
+        let err = c
+            .call(Request::LogSignature {
+                path,
+                stream: 5,
+                d: 2,
+                depth: 3,
+                precision: Precision::F64,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("f32-only"), "unexpected error: {err}");
     }
 
     #[test]
@@ -1178,8 +1484,20 @@ mod tests {
         let short = rng.normal_vec(5 * 2, 0.4);
         let long = rng.normal_vec(9 * 2, 0.4);
         let resps = c.call_many(vec![
-            Request::Signature { path: short.clone(), stream: 5, d: 2, depth: 3 },
-            Request::Signature { path: long.clone(), stream: 9, d: 2, depth: 3 },
+            Request::Signature {
+                path: short.clone(),
+                stream: 5,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            },
+            Request::Signature {
+                path: long.clone(),
+                stream: 9,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            },
         ]);
         let r0 = resps[0].as_ref().unwrap();
         let r1 = resps[1].as_ref().unwrap();
@@ -1209,14 +1527,26 @@ mod tests {
         let path = rng.normal_vec(6 * 2, 0.4);
         let t0 = Instant::now();
         let resp = c
-            .call(Request::Signature { path: path.clone(), stream: 6, d: 2, depth: 3 })
+            .call(Request::Signature {
+                path: path.clone(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            })
             .unwrap();
         assert_eq!(resp.values, signature(&path, 6, &spec));
         // LogSignature rides the same escape hatch: direct scalar serve,
         // never the batcher.
         let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
         let lresp = c
-            .call(Request::LogSignature { path: path.clone(), stream: 6, d: 2, depth: 3 })
+            .call(Request::LogSignature {
+                path: path.clone(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+                precision: Precision::F32,
+            })
             .unwrap();
         assert_eq!(
             lresp.values,
@@ -1266,6 +1596,7 @@ mod tests {
                 stream: 8,
                 d: 2,
                 depth: 3,
+                precision: Precision::F32,
             })
             .unwrap();
         }
@@ -1276,7 +1607,13 @@ mod tests {
         let rare = rng.normal_vec(9 * 3, 0.4);
         let spec = SigSpec::new(3, 4).unwrap();
         let resp = c
-            .call(Request::Signature { path: rare.clone(), stream: 9, d: 3, depth: 4 })
+            .call(Request::Signature {
+                path: rare.clone(),
+                stream: 9,
+                d: 3,
+                depth: 4,
+                precision: Precision::F32,
+            })
             .unwrap();
         assert_eq!(resp.values, signature(&rare, 9, &spec), "direct path is still exact");
         let snap = c.metrics().snapshot();
@@ -1358,13 +1695,31 @@ mod tests {
                 Coordinator::new(CoordinatorConfig::native_only().with_native_batch(native_batch))
                     .unwrap();
             assert!(c
-                .call(Request::Signature { path: vec![0.0; 2], stream: 1, d: 2, depth: 3 })
+                .call(Request::Signature {
+                    path: vec![0.0; 2],
+                    stream: 1,
+                    d: 2,
+                    depth: 3,
+                    precision: Precision::F32,
+                })
                 .is_err());
             assert!(c
-                .call(Request::LogSignature { path: vec![0.0; 2], stream: 1, d: 2, depth: 3 })
+                .call(Request::LogSignature {
+                    path: vec![0.0; 2],
+                    stream: 1,
+                    d: 2,
+                    depth: 3,
+                    precision: Precision::F32,
+                })
                 .is_err());
             assert!(c
-                .call(Request::Signature { path: vec![0.0; 3], stream: 2, d: 2, depth: 3 })
+                .call(Request::Signature {
+                    path: vec![0.0; 3],
+                    stream: 2,
+                    d: 2,
+                    depth: 3,
+                    precision: Precision::F32,
+                })
                 .is_err());
         }
     }
@@ -1379,7 +1734,13 @@ mod tests {
         assert!(!c.has_xla());
         let mut rng = Rng::new(5);
         let resp = c
-            .call(Request::Signature { path: rng.normal_vec(4 * 2, 0.3), stream: 4, d: 2, depth: 2 })
+            .call(Request::Signature {
+                path: rng.normal_vec(4 * 2, 0.3),
+                stream: 4,
+                d: 2,
+                depth: 2,
+                precision: Precision::F32,
+            })
             .unwrap();
         assert_eq!(resp.backend, Backend::Native);
     }

@@ -427,6 +427,7 @@ pub fn train_step(
         points: sample_len / cfg.d_in,
         d: cfg.d_out,
         depth: cfg.depth,
+        dtype: crate::ta::Precision::F32,
     });
     let grads = match plan {
         ExecPlan::LaneFused { .. } if backend == SigBackend::Fused => {

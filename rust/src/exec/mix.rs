@@ -8,6 +8,7 @@
 //! steer *batch formation* (how long to linger, how wide to open a lane),
 //! never numerical results.
 
+use crate::ta::Precision;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -38,24 +39,34 @@ pub struct ShapeKey {
     /// separately, so capacity adapts per length too); 0 for feeds, whose
     /// lane handles ragged point counts natively.
     pub points: usize,
+    /// Element precision of the request. Part of the key's identity: f32
+    /// and f64 requests of one shape never coalesce into one microbatch,
+    /// so each precision adapts on its own traffic.
+    pub dtype: Precision,
 }
 
 impl ShapeKey {
-    /// Key for a stateless signature request.
+    /// Key for a stateless signature request (default f32 precision).
     pub fn signature(d: usize, depth: usize, points: usize) -> ShapeKey {
-        ShapeKey { kind: 0, d, depth, points }
+        ShapeKey { kind: 0, d, depth, points, dtype: Precision::F32 }
     }
 
     /// Key for a session feed (spec only; feeds are ragged by design).
     pub fn feed(d: usize, depth: usize) -> ShapeKey {
-        ShapeKey { kind: 1, d, depth, points: 0 }
+        ShapeKey { kind: 1, d, depth, points: 0, dtype: Precision::F32 }
     }
 
     /// Key for a stateless logsignature request (the logsig work shape the
     /// planner learned in PR 5; distinct from the same-(d, depth, points)
     /// signature key so the two surfaces adapt on their own traffic).
     pub fn logsignature(d: usize, depth: usize, points: usize) -> ShapeKey {
-        ShapeKey { kind: 2, d, depth, points }
+        ShapeKey { kind: 2, d, depth, points, dtype: Precision::F32 }
+    }
+
+    /// The same key at a different precision — the serving layer derives
+    /// f64 keys this way so the two precisions never share a queue.
+    pub fn with_dtype(self, dtype: Precision) -> ShapeKey {
+        ShapeKey { dtype, ..self }
     }
 }
 
@@ -300,6 +311,31 @@ mod tests {
         mix.record(logsig);
         assert_eq!(mix.count_and_total(logsig).0, 1);
         assert_eq!(mix.distinct(), 2);
+    }
+
+    #[test]
+    fn f32_and_f64_keys_of_one_shape_never_coalesce() {
+        // Same (kind, d, depth, points), different precision: the two keys
+        // are distinct identities, so f32 and f64 requests of one shape
+        // never share a microbatch queue and adapt on separate counts.
+        let mix = ShapeMix::new(16);
+        let f32_key = ShapeKey::signature(3, 4, 8);
+        let f64_key = f32_key.with_dtype(Precision::F64);
+        assert_ne!(f32_key, f64_key);
+        assert_eq!(f64_key.with_dtype(Precision::F32), f32_key);
+        for _ in 0..12 {
+            mix.record(f32_key);
+        }
+        assert_eq!(mix.count_and_total(f64_key).0, 0, "f64 key must not inherit f32 counts");
+        mix.record(f64_key);
+        assert_eq!(mix.count_and_total(f64_key).0, 1);
+        assert_eq!(mix.distinct(), 2);
+        // The same holds for logsig and feed kinds.
+        assert_ne!(
+            ShapeKey::logsignature(3, 4, 8),
+            ShapeKey::logsignature(3, 4, 8).with_dtype(Precision::F64)
+        );
+        assert_ne!(ShapeKey::feed(3, 4), ShapeKey::feed(3, 4).with_dtype(Precision::F64));
     }
 
     #[test]

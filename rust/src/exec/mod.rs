@@ -17,14 +17,20 @@
 //! Before this module, the choice between them was re-derived inline at
 //! every call site (`signature_batch`, `signature_batch_vjp`,
 //! `deepsig::train_step`, the coordinator's router). [`ExecPlanner`] owns
-//! that choice: callers describe the work as a [`WorkShape`] and execute
-//! whatever [`ExecPlan`] comes back. The **logsignature** pipeline
-//! executes the same plans ([`crate::logsignature::batch`]): its work
-//! shape is the underlying signature sweep's shape, the log + basis
-//! projection is a per-lane epilogue that never changes the schedule, and
-//! the d ≤ [`LANE_VJP_MAX_D`] lane-VJP constraint applies identically —
-//! so logsig traffic keys the shape mix under its own [`ShapeKey`] kind
-//! and otherwise needs nothing planner-specific. The serving layer
+//! that choice: callers describe the work as a [`WorkShape`] — which since
+//! the precision axis landed includes the element dtype
+//! ([`Precision::F32`]/[`Precision::F64`]) — and execute whatever
+//! [`ExecPlan`] comes back. The **logsignature** pipeline executes the
+//! same plans ([`crate::logsignature::batch`]): its work shape is the
+//! underlying signature sweep's shape, the log + basis projection is a
+//! per-lane epilogue that never changes the schedule — so logsig traffic
+//! keys the shape mix under its own [`ShapeKey`] kind and otherwise needs
+//! nothing planner-specific. The lane-fused backward is available at
+//! **every** dimension: the scalar VJP dispatches to monomorphised bodies
+//! for `d ≤` [`LANE_VJP_MAX_D`] and to the runtime-`d`
+//! `fused_mexp_vjp_dyn` beyond, and the batched twin mirrors both
+//! op-for-op, so the planner no longer refuses `LaneFused` backward at
+//! `d >` [`LANE_VJP_MAX_D`]. The serving layer
 //! additionally feeds the planner an observed **shape-mix histogram**
 //! ([`ShapeMix`]) so microbatch formation adapts to recent traffic
 //! instead of obeying one static knob — see
@@ -42,6 +48,8 @@ mod mix;
 
 pub use mix::{ShapeKey, ShapeMix, MIX_WARMUP};
 
+use crate::ta::Precision;
+
 /// Lanes advanced together by one lane-interleaved sweep: bounds the
 /// batched workspace (a few signatures' worth per block) while filling
 /// the widest SIMD registers; blocks beyond this run in parallel on
@@ -58,10 +66,11 @@ pub const PARALLEL_FORWARD_MIN_POINTS: usize = 16;
 /// than the forward's.
 pub const PARALLEL_BACKWARD_MIN_POINTS: usize = 32;
 
-/// Largest `d` with a monomorphised scalar VJP kernel: the lane-fused
-/// backward mirrors that kernel op-for-op, so beyond this the scalar side
-/// switches to the exp/⊠ reference composition and per-path dispatch is
-/// required to keep exact parity.
+/// Largest `d` with a monomorphised scalar VJP kernel. This is a
+/// **dispatch crossover**, not a planner ceiling: beyond it the scalar
+/// side runs the runtime-`d` `fused_mexp_vjp_dyn`, which replays the same
+/// op order as the mono bodies and the lane-fused batched backward, so
+/// `LaneFused` plans stay bitwise-exact at every `d`.
 pub const LANE_VJP_MAX_D: usize = 8;
 
 /// The shape of one unit of signature work, as the planner sees it.
@@ -75,6 +84,10 @@ pub struct WorkShape {
     pub d: usize,
     /// Truncation depth.
     pub depth: usize,
+    /// Element precision the kernels will run in. Scheduling rules are
+    /// precision-independent, but the dtype is part of the shape's
+    /// identity: f32 and f64 work never share a lane block or microbatch.
+    pub dtype: Precision,
 }
 
 /// An execution strategy chosen by the planner.
@@ -166,11 +179,11 @@ impl ExecPlanner {
     ///   threads and ≥ [`PARALLEL_BACKWARD_MIN_POINTS`] effective points.
     /// - `batch >= 2` with surplus threads (`threads > batch`): per-path
     ///   dispatch with the spare threads spread over each path's stream.
-    /// - `batch >= 2` at `d ≤` [`LANE_VJP_MAX_D`]: the lane-fused batched
-    ///   reverse sweep (bitwise identical to per-path serial).
-    /// - otherwise: scalar per-path sweeps, parallel over the batch (the
-    ///   `d >` [`LANE_VJP_MAX_D`] scalar backward uses the exp/⊠
-    ///   reference composition, which the lane kernels do not mirror).
+    /// - `batch >= 2` otherwise: the lane-fused batched reverse sweep, at
+    ///   **any** `d` (bitwise identical to per-path serial — the scalar
+    ///   dispatcher's mono bodies for `d ≤` [`LANE_VJP_MAX_D`] and the
+    ///   runtime-`d` `fused_mexp_vjp_dyn` beyond both replay the lane
+    ///   kernel's op order, so the old `d > 8` scalar fallback is gone).
     pub fn plan_backward(&self, s: &WorkShape) -> ExecPlan {
         if s.batch <= 1 {
             if self.threads > 1 && s.points >= PARALLEL_BACKWARD_MIN_POINTS {
@@ -182,10 +195,8 @@ impl ExecPlanner {
             let stream_threads = (self.threads / s.batch).max(1);
             if stream_threads > 1 {
                 ExecPlan::StreamParallel { threads: stream_threads }
-            } else if s.d <= LANE_VJP_MAX_D {
-                ExecPlan::LaneFused { block: lane_block(s.batch, self.threads) }
             } else {
-                ExecPlan::Scalar
+                ExecPlan::LaneFused { block: lane_block(s.batch, self.threads) }
             }
         }
     }
@@ -282,7 +293,7 @@ mod tests {
     use super::*;
 
     fn shape(batch: usize, points: usize, d: usize) -> WorkShape {
-        WorkShape { batch, points, d, depth: 4 }
+        WorkShape { batch, points, d, depth: 4, dtype: Precision::F32 }
     }
 
     #[test]
@@ -335,11 +346,40 @@ mod tests {
         // threads <= batch at small d: lane-fused.
         let p3 = ExecPlanner::new(3);
         assert_eq!(p3.plan_backward(&shape(6, 32, 8)), ExecPlan::LaneFused { block: 2 });
-        // d > LANE_VJP_MAX_D falls off the lane VJP to per-path scalar.
-        assert_eq!(p3.plan_backward(&shape(6, 32, 9)), ExecPlan::Scalar);
+        // d > LANE_VJP_MAX_D no longer falls off the lane VJP: the
+        // runtime-d scalar body keeps bitwise parity past the mono window.
+        assert_eq!(p3.plan_backward(&shape(6, 32, 9)), ExecPlan::LaneFused { block: 2 });
         // batch = 1 single thread.
         let p1 = ExecPlanner::new(1);
         assert_eq!(p1.plan_backward(&shape(1, 4096, 2)), ExecPlan::Scalar);
+    }
+
+    #[test]
+    fn backward_plans_lane_fused_beyond_the_mono_window() {
+        // The dimensions the issue pins: d ∈ {9, 12, 20} all plan
+        // LaneFused backward once threads ≤ batch, in both precisions.
+        let p2 = ExecPlanner::new(2);
+        for d in [9usize, 12, 20] {
+            for dtype in [Precision::F32, Precision::F64] {
+                let s = WorkShape { batch: 8, points: 32, d, depth: 3, dtype };
+                assert_eq!(
+                    p2.plan_backward(&s),
+                    ExecPlan::LaneFused { block: 4 },
+                    "d={d} {dtype:?}"
+                );
+            }
+        }
+        // Surplus-thread and single-path rules are untouched at large d.
+        let p8 = ExecPlanner::new(8);
+        assert_eq!(
+            p8.plan_backward(&WorkShape { batch: 2, points: 80, d: 12, depth: 3, dtype: Precision::F64 }),
+            ExecPlan::StreamParallel { threads: 4 }
+        );
+        assert_eq!(
+            ExecPlanner::new(1)
+                .plan_backward(&WorkShape { batch: 1, points: 16, d: 20, depth: 3, dtype: Precision::F32 }),
+            ExecPlan::Scalar
+        );
     }
 
     #[test]

@@ -21,10 +21,19 @@
 //!   **batch-lane engine** ([`ta::batch`]): blocks of same-spec signatures
 //!   advance through lane-interleaved fused sweeps that vectorise *across*
 //!   the batch — the winning strategy for the serving regime of many short
-//!   streams at small `d`, and bitwise identical per lane to per-path
-//!   dispatch ([`signature::signature_batch`],
+//!   streams, and bitwise identical per lane to per-path dispatch
+//!   ([`signature::signature_batch`],
 //!   [`signature::signature_batch_vjp`], `deepsig::train_step`,
-//!   [`path::Path::update_batch`]).
+//!   [`path::Path::update_batch`]). The whole tensor-algebra core is
+//!   generic along two axes: a **precision axis** — every kernel is
+//!   parameterised over the sealed element trait [`ta::Elem`] (f32/f64;
+//!   bare `&[f32]` call sites infer `E = f32` unchanged) — and a
+//!   **dimension axis** — the fused forward and VJP each ship a
+//!   `const D`-monomorphised body for `d ≤ 8` (a benchmark-arbitrated
+//!   crossover, recorded by `benches/batch_lanes.rs`) and a runtime-`d`
+//!   twin ([`ta::fused::fused_mexp_vjp_dyn`]) replaying the same
+//!   floating-point op order beyond, so no entry point has a dimension
+//!   ceiling.
 //! - **Execution planning** ([`exec`]): one adaptive dispatch layer owning
 //!   the choice between those strategies. Every execution site — the
 //!   batched signature *and logsignature* forward/backward entry points
@@ -35,7 +44,11 @@
 //!   coordinator's router — describes its work as an [`exec::WorkShape`]
 //!   and executes whatever [`exec::ExecPlan`] the [`exec::ExecPlanner`]
 //!   returns (`Scalar`, `StreamParallel`, or `LaneFused`); no call site
-//!   re-derives lane/thread heuristics. The serving layer additionally
+//!   re-derives lane/thread heuristics. Shapes carry their element
+//!   precision (`WorkShape::dtype`), the adaptive shape-mix keys on it
+//!   ([`exec::ShapeKey`]), and the lane-fused backward is planned at
+//!   *every* `d` — the runtime-`d` VJP removed the old `d ≤ 8` planning
+//!   ceiling. The serving layer additionally
 //!   feeds the planner an observed shape-mix histogram, so microbatch
 //!   formation adapts to recent traffic: hot shapes linger and lane-fuse,
 //!   rare shapes serve directly. Plans are scheduling only — `Scalar` and
@@ -65,6 +78,11 @@
 //!   scalar feeding. All three gathering surfaces instantiate one
 //!   unified batcher generic (`coordinator::flusher::GroupBatcher`), so
 //!   the pending-queue/condvar concurrency machinery exists exactly once.
+//!   Stateless requests carry a [`ta::Precision`] (default `F32`, which
+//!   preserves prior behaviour bitwise): `F64` requests upcast at the
+//!   native boundary, run the f64 kernels, and downcast the result — and
+//!   precision is part of the microbatch queue identity, so f32 and f64
+//!   rows of one logical shape never share a flush.
 //!
 //! Baselines reproducing the systems the paper benchmarks against live in
 //! [`baselines`]; the benchmark harness regenerating every table and figure

@@ -14,10 +14,12 @@
 //! - `StreamParallel` reuses the chunked Chen-identity forward/backward
 //!   inside each path; the log/projection epilogue is an O(sig_len)
 //!   per-lane postscript either way.
-//! - The d ≤ [`crate::exec::LANE_VJP_MAX_D`] lane-VJP constraint applies
-//!   identically: the planner already folds it into `plan_backward`, and
-//!   the cotangent this module hands the signature VJP is just a
-//!   transformed tensor (`project_vjp` then `log_vjp`).
+//! - The lane-fused backward applies at **every** `d` — the scalar VJP's
+//!   monomorphised bodies (`d ≤` [`crate::exec::LANE_VJP_MAX_D`]) and the
+//!   runtime-`d` body beyond share one op order with the lane kernels —
+//!   and the cotangent this module hands the signature VJP is just a
+//!   transformed tensor (`project_vjp` then `log_vjp`), so logsig needs
+//!   nothing dimension-specific of its own.
 //!
 //! The coordinator's native microbatcher executes flushed `LogSignature`
 //! microbatches through [`logsignature_batch_planned`], so serving rows
@@ -60,6 +62,7 @@ pub fn logsignature_batch_with(
         points: cfg.effective_len(stream),
         d: spec.d(),
         depth: spec.depth(),
+        dtype: crate::ta::Precision::F32,
     });
     logsignature_batch_planned(paths, batch, stream, spec, plan, cfg, exec)
 }
@@ -118,10 +121,10 @@ pub(crate) fn project_sigs_into(
 /// shape. The forward signatures are recomputed (they feed the log VJP),
 /// the O(sig_len) per-lane epilogue converts each basis cotangent into a
 /// signature cotangent, and the batched signature VJP executes whatever
-/// backward plan the planner picks — lane-fused at
-/// d ≤ [`crate::exec::LANE_VJP_MAX_D`] (bitwise identical per lane to the
-/// serial [`super::logsignature_vjp_with`]), chunked-Chen stream-parallel
-/// with surplus threads, per-path scalar otherwise.
+/// backward plan the planner picks — lane-fused at any `d` (bitwise
+/// identical per lane to the serial [`super::logsignature_vjp_with`]),
+/// chunked-Chen stream-parallel with surplus threads, per-path scalar
+/// otherwise.
 pub fn logsignature_batch_vjp(
     paths: &[f32],
     batch: usize,
@@ -132,7 +135,13 @@ pub fn logsignature_batch_vjp(
     threads: usize,
 ) -> anyhow::Result<Vec<f32>> {
     let planner = ExecPlanner::new(threads);
-    let shape = WorkShape { batch, points: stream, d: spec.d(), depth: spec.depth() };
+    let shape = WorkShape {
+        batch,
+        points: stream,
+        d: spec.d(),
+        depth: spec.depth(),
+        dtype: crate::ta::Precision::F32,
+    };
     logsignature_batch_vjp_planned(
         paths,
         batch,
@@ -321,6 +330,34 @@ mod tests {
                 .unwrap();
                 assert_eq!(&out[b * plen..(b + 1) * plen], single.as_slice(), "{basis:?} sample {b}");
             }
+        }
+    }
+
+    #[test]
+    fn batch_vjp_is_bitwise_beyond_the_mono_window() {
+        // The widened planner hands logsig the d > 8 LaneFused backward
+        // too; the lane engine must stay bitwise against the serial
+        // scalar VJP (which dispatches the runtime-d body at d = 9).
+        let spec = SigSpec::new(9, 2).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(65);
+        let (batch, stream) = (5, 4);
+        let paths = random_batch(&mut rng, batch, stream, 9);
+        let plen = stream * 9;
+        let dim = plan.dim();
+        let g = rng.normal_vec(batch * dim, 1.0);
+        let out = logsignature_batch_vjp(&paths, batch, stream, &spec, &plan, &g, 2).unwrap();
+        for b in 0..batch {
+            let single = logsignature_vjp_with(
+                &paths[b * plen..(b + 1) * plen],
+                stream,
+                &spec,
+                &plan,
+                &SigConfig::serial(),
+                &g[b * dim..(b + 1) * dim],
+            )
+            .unwrap();
+            assert_eq!(&out[b * plen..(b + 1) * plen], single.as_slice(), "sample {b}");
         }
     }
 

@@ -26,7 +26,7 @@ use signax::runtime::EngineHandle;
 use signax::signature::{signature, SigConfig};
 use signax::substrate::cli::{Cli, Command};
 use signax::substrate::rng::Rng;
-use signax::ta::SigSpec;
+use signax::ta::{Precision, SigSpec};
 
 fn cli() -> Cli {
     Cli {
@@ -307,6 +307,7 @@ fn cmd_serve(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
             stream,
             d,
             depth,
+            precision: Precision::F32,
         })
         .collect();
     let t0 = Instant::now();

@@ -13,7 +13,7 @@
 use crate::substrate::pool::{chunk_ranges, parallel_map_indexed};
 use crate::ta::fused::fused_mexp;
 use crate::ta::mul::mul_assign;
-use crate::ta::{SigSpec, Workspace};
+use crate::ta::{Elem, SigSpec, Workspace};
 
 /// Compute the per-chunk signatures `M_c` of the path given by
 /// `point(0..n_points)`, one chunk per thread, in parallel.
@@ -23,23 +23,24 @@ use crate::ta::{SigSpec, Workspace};
 /// the increment ranges alongside the identity-initialised chunk
 /// signatures; both the forward reduction and the stream-parallel backward
 /// build on this.
-pub fn chunk_signatures<'a, F>(
+pub fn chunk_signatures<'a, E, F>(
     spec: &SigSpec,
     n_points: usize,
     point: &F,
     threads: usize,
-) -> (Vec<(usize, usize)>, Vec<Vec<f32>>)
+) -> (Vec<(usize, usize)>, Vec<Vec<E>>)
 where
-    F: Fn(usize) -> &'a [f32] + Sync,
+    E: Elem,
+    F: Fn(usize) -> &'a [E] + Sync,
 {
     let n_incr = n_points - 1;
     let ranges = chunk_ranges(n_incr, threads);
     let chunk_sigs = parallel_map_indexed(ranges.len(), ranges.len(), |ci| {
         let (s, e) = ranges[ci];
-        let mut ws = Workspace::new(spec);
-        let mut sig = spec.zeros();
+        let mut ws = Workspace::<E>::new(spec);
+        let mut sig = spec.zeros_elem::<E>();
         let d = spec.d();
-        let mut z = vec![0.0f32; d];
+        let mut z = vec![E::ZERO; d];
         for i in s..e {
             let prev = point(i);
             let cur = point(i + 1);
@@ -56,14 +57,15 @@ where
 /// Compute the signature of the path given by `point(0..n_points)` using a
 /// chunked parallel reduction over the stream dimension. Returns the
 /// signature (identity-initialised; callers fold in any `initial`).
-pub fn reduce_signature<'a, F>(
+pub fn reduce_signature<'a, E, F>(
     spec: &SigSpec,
     n_points: usize,
     point: &F,
     threads: usize,
-) -> Vec<f32>
+) -> Vec<E>
 where
-    F: Fn(usize) -> &'a [f32] + Sync,
+    E: Elem,
+    F: Fn(usize) -> &'a [E] + Sync,
 {
     let (_, chunk_sigs) = chunk_signatures(spec, n_points, point, threads);
     // Combine left-to-right (few chunks; a tree would not help here).
@@ -78,11 +80,11 @@ where
 /// Tree-combine a slice of signatures `(count, sig_len)` with ⊠ in
 /// parallel: used by `multi_signature_combine` and by benchmarks comparing
 /// reduction strategies. Returns the ⊠-product in order.
-pub fn tree_combine(spec: &SigSpec, sigs: &[f32], count: usize, threads: usize) -> Vec<f32> {
+pub fn tree_combine<E: Elem>(spec: &SigSpec, sigs: &[E], count: usize, threads: usize) -> Vec<E> {
     let len = spec.sig_len();
     assert_eq!(sigs.len(), count * len);
     assert!(count >= 1);
-    let mut layer: Vec<Vec<f32>> = (0..count).map(|i| sigs[i * len..(i + 1) * len].to_vec()).collect();
+    let mut layer: Vec<Vec<E>> = (0..count).map(|i| sigs[i * len..(i + 1) * len].to_vec()).collect();
     while layer.len() > 1 {
         let pairs = layer.len() / 2;
         let odd = layer.len() % 2 == 1;
@@ -123,7 +125,7 @@ mod tests {
     #[test]
     fn tree_combine_single() {
         let spec = SigSpec::new(2, 2).unwrap();
-        let sigs = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let sigs = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         assert_eq!(tree_combine(&spec, &sigs, 1, 4), sigs);
     }
 

@@ -39,21 +39,22 @@ use crate::substrate::pool::parallel_map_indexed;
 use crate::ta::batch::{fused_mexp_batch, fused_mexp_vjp_batch, pack_lanes, BatchWorkspace};
 use crate::ta::fused::{fused_mexp, fused_mexp_vjp};
 use crate::ta::mul::{mul_assign, mul_into, mul_vjp};
-use crate::ta::{SigSpec, Workspace};
+use crate::ta::{Elem, SigSpec, Workspace};
 
 /// Re-exported from the execution planner, which owns all strategy
 /// constants (see [`crate::exec`]).
 pub use crate::exec::PARALLEL_BACKWARD_MIN_POINTS;
 
-/// Result of a signature VJP.
+/// Result of a signature VJP. Generic over the element precision with an
+/// f32 default, matching the precision of the path / cotangent buffers.
 #[derive(Clone, Debug)]
-pub struct SigVjpResult {
+pub struct SigVjpResult<E: Elem = f32> {
     /// `∂L/∂path`, shape `(stream, d)` matching the input path buffer.
-    pub grad_path: Vec<f32>,
+    pub grad_path: Vec<E>,
     /// `∂L/∂basepoint` if a basepoint was configured.
-    pub grad_basepoint: Option<Vec<f32>>,
+    pub grad_basepoint: Option<Vec<E>>,
     /// `∂L/∂initial` if an initial signature was configured.
-    pub grad_initial: Option<Vec<f32>>,
+    pub grad_initial: Option<Vec<E>>,
 }
 
 /// Core serial reverse sweep over an *effective* point sequence.
@@ -61,22 +62,22 @@ pub struct SigVjpResult {
 /// `final_sig` must be the forward output `initial ⊠ Sig(points)`. Returns
 /// `(grad_points (E,d), grad_initial)`; `grad_initial` is the cotangent
 /// remaining on the state after unwinding every increment.
-fn reverse_sweep<'a>(
+fn reverse_sweep<'a, E: Elem>(
     spec: &SigSpec,
     n_points: usize,
-    point: impl Fn(usize) -> &'a [f32],
-    final_sig: &[f32],
-    g: &[f32],
-    ws: &mut Workspace,
-) -> (Vec<f32>, Vec<f32>) {
+    point: impl Fn(usize) -> &'a [E],
+    final_sig: &[E],
+    g: &[E],
+    ws: &mut Workspace<E>,
+) -> (Vec<E>, Vec<E>) {
     let d = spec.d();
-    let mut grad_points = vec![0.0f32; n_points * d];
+    let mut grad_points = vec![E::ZERO; n_points * d];
     let mut s_cur = final_sig.to_vec();
     let mut g_state = g.to_vec();
-    let mut z = vec![0.0f32; d];
-    let mut neg_z = vec![0.0f32; d];
-    let mut gz = vec![0.0f32; d];
-    let mut g_prev = spec.zeros();
+    let mut z = vec![E::ZERO; d];
+    let mut neg_z = vec![E::ZERO; d];
+    let mut gz = vec![E::ZERO; d];
+    let mut g_prev = spec.zeros_elem::<E>();
     for i in (1..n_points).rev() {
         let prev = point(i - 1);
         let cur = point(i);
@@ -87,8 +88,8 @@ fn reverse_sweep<'a>(
         // Reversibility: recover S_{i-1} = S_i ⊠ exp(-z_i)  (eq. 18).
         fused_mexp(spec, &mut s_cur, &neg_z, ws);
         // VJP through S_i = S_{i-1} ⊠ exp(z_i).
-        g_prev.fill(0.0);
-        gz.fill(0.0);
+        g_prev.fill(E::ZERO);
+        gz.fill(E::ZERO);
         fused_mexp_vjp(spec, &s_cur, &z, &g_state, &mut g_prev, &mut gz, ws);
         std::mem::swap(&mut g_state, &mut g_prev);
         for c in 0..d {
@@ -104,16 +105,17 @@ fn reverse_sweep<'a>(
 /// Returns `(grad_points (n_points, d), grad_initial)`; `grad_initial` is
 /// the cotangent on `initial`, and is left at zero when no initial
 /// signature is configured (the caller discards it in that case).
-fn parallel_reverse_sweep<'a, F>(
+fn parallel_reverse_sweep<'a, E, F>(
     spec: &SigSpec,
     n_points: usize,
     point: F,
-    initial: Option<&[f32]>,
-    g: &[f32],
+    initial: Option<&[E]>,
+    g: &[E],
     threads: usize,
-) -> (Vec<f32>, Vec<f32>)
+) -> (Vec<E>, Vec<E>)
 where
-    F: Fn(usize) -> &'a [f32] + Sync,
+    E: Elem,
+    F: Fn(usize) -> &'a [E] + Sync,
 {
     let d = spec.d();
     let len = spec.sig_len();
@@ -124,11 +126,11 @@ where
 
     // Stage 2 (serial, O(chunks)): prefix states L_c = initial ⊠ M_0 ⊠ …
     // ⊠ M_{c-1} entering each chunk…
-    let mut prefixes = vec![0.0f32; chunks * len];
+    let mut prefixes = vec![E::ZERO; chunks * len];
     {
         let mut acc = match initial {
             Some(init) => init.to_vec(),
-            None => spec.zeros(),
+            None => spec.zeros_elem::<E>(),
         };
         for c in 0..chunks {
             prefixes[c * len..(c + 1) * len].copy_from_slice(&acc);
@@ -139,7 +141,7 @@ where
     }
     // …and suffix products T_c = M_c ⊠ … ⊠ M_{chunks-1} (right to left),
     // so Sig-with-initial = L_c ⊠ T_c for every c.
-    let mut suffixes = vec![0.0f32; chunks * len];
+    let mut suffixes = vec![E::ZERO; chunks * len];
     suffixes[(chunks - 1) * len..].copy_from_slice(&chunk_sigs[chunks - 1]);
     for c in (0..chunks - 1).rev() {
         let (lo, hi) = suffixes.split_at_mut((c + 1) * len);
@@ -149,10 +151,10 @@ where
     // Cotangent left on the initial state: out = initial ⊠ T_0. Skipped
     // when no initial is configured — the caller discards it there, and
     // this is a full ⊠-VJP.
-    let mut grad_initial = spec.zeros();
+    let mut grad_initial = spec.zeros_elem::<E>();
     if initial.is_some() {
         let init = &prefixes[..len]; // == initial
-        let mut g_t0 = spec.zeros();
+        let mut g_t0 = spec.zeros_elem::<E>();
         mul_vjp(spec, init, &suffixes[..len], g, &mut grad_initial, &mut g_t0);
     }
 
@@ -161,8 +163,8 @@ where
     let per_chunk = parallel_map_indexed(chunks, threads, |c| {
         let (s, e) = ranges[c];
         // out = L_c ⊠ T_c  ⇒  cotangent on the suffix from chunk c.
-        let mut g_suffix = spec.zeros();
-        let mut discard = spec.zeros();
+        let mut g_suffix = spec.zeros_elem::<E>();
+        let mut discard = spec.zeros_elem::<E>();
         mul_vjp(
             spec,
             &prefixes[c * len..(c + 1) * len],
@@ -175,8 +177,8 @@ where
         let g_chunk = if c + 1 == chunks {
             g_suffix
         } else {
-            let mut g_chunk = spec.zeros();
-            discard.fill(0.0);
+            let mut g_chunk = spec.zeros_elem::<E>();
+            discard.fill(E::ZERO);
             mul_vjp(
                 spec,
                 &chunk_sigs[c],
@@ -190,7 +192,7 @@ where
         // M_c is an identity-initialised signature of points s..=e, so the
         // serial reverse sweep applies to the chunk unchanged; the residual
         // state cotangent is ∂/∂identity and is discarded.
-        let mut ws = Workspace::new(spec);
+        let mut ws = Workspace::<E>::new(spec);
         let (grads, _g_identity) =
             reverse_sweep(spec, e - s + 1, |i| point(s + i), &chunk_sigs[c], &g_chunk, &mut ws);
         grads
@@ -198,7 +200,7 @@ where
 
     // Scatter-accumulate: adjacent chunks share their boundary point, so
     // contributions add there.
-    let mut grad_points = vec![0.0f32; n_points * d];
+    let mut grad_points = vec![E::ZERO; n_points * d];
     for (c, grads) in per_chunk.into_iter().enumerate() {
         let (s, _) = ranges[c];
         for (k, &gv) in grads.iter().enumerate() {
@@ -211,7 +213,7 @@ where
 /// VJP of [`super::signature`]: given `g = ∂L/∂Sig(path)`, returns
 /// `∂L/∂path` (same shape as `path`). Serial; see [`signature_vjp_with`]
 /// for the stream-parallel and configurable version.
-pub fn signature_vjp(path: &[f32], stream: usize, spec: &SigSpec, g: &[f32]) -> Vec<f32> {
+pub fn signature_vjp<E: Elem>(path: &[E], stream: usize, spec: &SigSpec, g: &[E]) -> Vec<E> {
     signature_vjp_with(path, stream, spec, &SigConfig::serial(), g)
         .expect("valid path")
         .grad_path
@@ -225,13 +227,13 @@ pub fn signature_vjp(path: &[f32], stream: usize, spec: &SigSpec, g: &[f32]) -> 
 /// with `threads > 1` and at least [`PARALLEL_BACKWARD_MIN_POINTS`]
 /// effective points it runs the chunked Chen-identity backward described
 /// in the module docs, parallel over the stream.
-pub fn signature_vjp_with(
-    path: &[f32],
+pub fn signature_vjp_with<E: Elem>(
+    path: &[E],
     stream: usize,
     spec: &SigSpec,
     cfg: &SigConfig,
-    g: &[f32],
-) -> anyhow::Result<SigVjpResult> {
+    g: &[E],
+) -> anyhow::Result<SigVjpResult<E>> {
     let d = spec.d();
     anyhow::ensure!(
         g.len() == spec.sig_len(),
@@ -243,9 +245,15 @@ pub fn signature_vjp_with(
     // signature_with, so shapes must be validated here.
     let eff_len = super::forward::check_path_with(path, stream, spec, cfg)?;
 
-    let point = |i: usize| -> &[f32] {
+    // Config options are declared in f32 (the wire format); lift them into
+    // E once up front — the identity for E = f32.
+    let basepoint: Option<Vec<E>> =
+        cfg.basepoint.as_ref().map(|bp| bp.iter().map(|&v| E::from_f32(v)).collect());
+    let initial: Option<Vec<E>> =
+        cfg.initial.as_ref().map(|init| init.iter().map(|&v| E::from_f32(v)).collect());
+    let point = |i: usize| -> &[E] {
         let i = if cfg.inverse { eff_len - 1 - i } else { i };
-        match &cfg.basepoint {
+        match &basepoint {
             Some(bp) => {
                 if i == 0 {
                     bp.as_slice()
@@ -258,11 +266,16 @@ pub fn signature_vjp_with(
     };
 
     // Strategy selection lives in the execution planner (crate::exec).
-    let plan = ExecPlanner::new(cfg.threads)
-        .plan_backward(&WorkShape { batch: 1, points: eff_len, d, depth: spec.depth() });
+    let plan = ExecPlanner::new(cfg.threads).plan_backward(&WorkShape {
+        batch: 1,
+        points: eff_len,
+        d,
+        depth: spec.depth(),
+        dtype: E::PRECISION,
+    });
     let (grad_eff, g_initial) = match plan {
         ExecPlan::StreamParallel { threads } => {
-            parallel_reverse_sweep(spec, eff_len, point, cfg.initial.as_deref(), g, threads)
+            parallel_reverse_sweep(spec, eff_len, point, initial.as_deref(), g, threads)
         }
         // LaneFused never arises for batch = 1; run the reference sweep.
         ExecPlan::Scalar | ExecPlan::LaneFused { .. } => {
@@ -271,14 +284,14 @@ pub fn signature_vjp_with(
             // reversibility.
             let forward_cfg = SigConfig { threads: 1, ..cfg.clone() };
             let final_sig = super::forward::signature_with(path, stream, spec, &forward_cfg)?;
-            let mut ws = Workspace::new(spec);
+            let mut ws = Workspace::<E>::new(spec);
             reverse_sweep(spec, eff_len, point, &final_sig, g, &mut ws)
         }
     };
 
     // Undo the effective-point mapping: reversal then basepoint.
-    let unreversed: Vec<f32> = if cfg.inverse {
-        let mut v = vec![0.0f32; eff_len * d];
+    let unreversed: Vec<E> = if cfg.inverse {
+        let mut v = vec![E::ZERO; eff_len * d];
         for i in 0..eff_len {
             v[(eff_len - 1 - i) * d..(eff_len - i) * d]
                 .copy_from_slice(&grad_eff[i * d..(i + 1) * d]);
@@ -356,27 +369,27 @@ pub fn signature_stream_vjp(
 /// ([`crate::exec::ExecPlanner::plan_backward`]); in order of preference:
 /// surplus threads (`threads > batch`) run per-path dispatch with the
 /// chunked Chen-identity stream-parallel backward inside each sample;
-/// `batch >= 2` at `d <=` [`crate::exec::LANE_VJP_MAX_D`] runs the
-/// **lane-fused** batched reverse sweep — blocks of up to
-/// [`super::forward::LANE_BLOCK`] samples recompute prefixes and unwind
-/// together through the interleaved batch kernels, bitwise identical to
-/// the serial per-path VJP (beyond that `d` the scalar backward switches
-/// to the exp/⊠ reference composition, so per-path dispatch keeps exact
-/// parity there); otherwise per-path serial sweeps, parallel over the
-/// batch.
-pub fn signature_batch_vjp(
-    paths: &[f32],
+/// `batch >= 2` runs the **lane-fused** batched reverse sweep at **any**
+/// `d` — blocks of up to [`super::forward::LANE_BLOCK`] samples recompute
+/// prefixes and unwind together through the interleaved batch kernels,
+/// bitwise identical to the serial per-path VJP (the scalar dispatcher's
+/// monomorphised bodies cover `d ≤` [`crate::exec::LANE_VJP_MAX_D`] and
+/// the runtime-`d` `fused_mexp_vjp_dyn` covers the rest, all in the same
+/// op order); otherwise per-path serial sweeps, parallel over the batch.
+pub fn signature_batch_vjp<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
-    g: &[f32],
+    g: &[E],
     threads: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let plan = ExecPlanner::new(threads).plan_backward(&WorkShape {
         batch,
         points: stream,
         d: spec.d(),
         depth: spec.depth(),
+        dtype: E::PRECISION,
     });
     signature_batch_vjp_planned(paths, batch, stream, spec, g, threads, plan)
 }
@@ -386,15 +399,15 @@ pub fn signature_batch_vjp(
 /// batched logsignature VJP ([`crate::logsignature::batch`]) executes the
 /// same plans through this shared executor, handing it the signature
 /// cotangents its O(sig_len) per-lane epilogue produced.
-pub fn signature_batch_vjp_planned(
-    paths: &[f32],
+pub fn signature_batch_vjp_planned<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
-    g: &[f32],
+    g: &[E],
     threads: usize,
     plan: ExecPlan,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let len = spec.sig_len();
     let plen = stream * spec.d();
     anyhow::ensure!(batch >= 1, "need at least one sample");
@@ -416,7 +429,7 @@ pub fn signature_batch_vjp_planned(
                 let lanes = block.min(batch - l0);
                 lane_reverse_sweep(spec, paths, stream, l0, lanes, g)
             });
-            let mut out = vec![0.0f32; batch * plen];
+            let mut out = vec![E::ZERO; batch * plen];
             for (bi, rows) in blocks.into_iter().enumerate() {
                 let o = bi * block * plen;
                 out[o..o + rows.len()].copy_from_slice(&rows);
@@ -441,7 +454,7 @@ pub fn signature_batch_vjp_planned(
         )
         .map(|r| r.grad_path)
     });
-    let mut out = vec![0.0f32; batch * plen];
+    let mut out = vec![E::ZERO; batch * plen];
     for (b, gp) in grads.into_iter().enumerate() {
         out[b * plen..(b + 1) * plen].copy_from_slice(&gp?);
     }
@@ -453,23 +466,23 @@ pub fn signature_batch_vjp_planned(
 /// signatures, then the reversibility unwind with the batched fused VJP —
 /// each lane performs exactly the serial [`reverse_sweep`]'s operations,
 /// so the result is bitwise identical to [`signature_vjp`] per sample.
-fn lane_reverse_sweep(
+fn lane_reverse_sweep<E: Elem>(
     spec: &SigSpec,
-    paths: &[f32],
+    paths: &[E],
     stream: usize,
     l0: usize,
     lanes: usize,
-    g: &[f32],
-) -> Vec<f32> {
+    g: &[E],
+) -> Vec<E> {
     let d = spec.d();
     let len = spec.sig_len();
     let plen = stream * d;
     let path_at =
         |l: usize, i: usize| &paths[(l0 + l) * plen + i * d..(l0 + l) * plen + (i + 1) * d];
-    let mut ws = BatchWorkspace::new(spec, lanes);
-    let mut state = vec![0.0f32; len * lanes];
-    let mut z = vec![0.0f32; d * lanes];
-    let mut neg_z = vec![0.0f32; d * lanes];
+    let mut ws = BatchWorkspace::<E>::new(spec, lanes);
+    let mut state = vec![E::ZERO; len * lanes];
+    let mut z = vec![E::ZERO; d * lanes];
+    let mut neg_z = vec![E::ZERO; d * lanes];
     // Forward to the final signatures (lane-interleaved).
     for i in 1..stream {
         for l in 0..lanes {
@@ -482,11 +495,11 @@ fn lane_reverse_sweep(
         fused_mexp_batch(spec, &mut state, &z, &mut ws);
     }
     // Unwind via reversibility.
-    let mut g_state = vec![0.0f32; len * lanes];
+    let mut g_state = vec![E::ZERO; len * lanes];
     pack_lanes(len, lanes, |l| &g[(l0 + l) * len..(l0 + l + 1) * len], &mut g_state);
-    let mut g_prev = vec![0.0f32; len * lanes];
-    let mut gz = vec![0.0f32; d * lanes];
-    let mut grads = vec![0.0f32; lanes * plen];
+    let mut g_prev = vec![E::ZERO; len * lanes];
+    let mut gz = vec![E::ZERO; d * lanes];
+    let mut grads = vec![E::ZERO; lanes * plen];
     for i in (1..stream).rev() {
         for l in 0..lanes {
             let prev = path_at(l, i - 1);
@@ -499,8 +512,8 @@ fn lane_reverse_sweep(
         }
         // Reversibility: recover S_{i-1} = S_i ⊠ exp(-z_i)  (eq. 18).
         fused_mexp_batch(spec, &mut state, &neg_z, &mut ws);
-        g_prev.fill(0.0);
-        gz.fill(0.0);
+        g_prev.fill(E::ZERO);
+        gz.fill(E::ZERO);
         fused_mexp_vjp_batch(spec, &state, &z, &g_state, &mut g_prev, &mut gz, &mut ws);
         std::mem::swap(&mut g_state, &mut g_prev);
         for l in 0..lanes {
@@ -819,7 +832,7 @@ mod tests {
         let two_g = vec![0.0f32; 2 * len];
         assert!(signature_batch_vjp(&path, 1, 10, &spec, &short_g, 2).is_err());
         assert!(signature_batch_vjp(&path, 2, 10, &spec, &two_g, 2).is_err());
-        assert!(signature_batch_vjp(&[], 0, 10, &spec, &[], 2).is_err());
+        assert!(signature_batch_vjp::<f32>(&[], 0, 10, &spec, &[], 2).is_err());
     }
 
     #[test]
@@ -847,6 +860,62 @@ mod tests {
                 &g[i * spec.sig_len()..(i + 1) * spec.sig_len()],
             );
             assert_eq!(&out[i * plen..(i + 1) * plen], single.as_slice(), "sample {i}");
+        }
+    }
+
+    #[test]
+    fn batch_vjp_lane_engine_is_bitwise_beyond_the_mono_window() {
+        // The issue's acceptance criterion: at d ∈ {9, 12, 20} the planner
+        // now hands the batched backward a LaneFused plan, and the lane
+        // engine must stay bitwise identical to scalar dispatch (which
+        // runs fused_mexp_vjp_dyn at these dimensions) — in both
+        // precisions. LANE_BLOCK + 1 samples force a ragged tail block.
+        use crate::exec::ExecPlan;
+        for (d, depth, stream) in [(9usize, 3usize, 5usize), (12, 3, 4), (20, 2, 5)] {
+            let spec = SigSpec::new(d, depth).unwrap();
+            let b = LANE_BLOCK + 1;
+            let plen = stream * d;
+            let mut rng = Rng::new(300 + d as u64);
+            let mut paths = vec![0.0f32; b * plen];
+            for i in 0..b {
+                let p = random_path(&mut rng, stream, d);
+                paths[i * plen..(i + 1) * plen].copy_from_slice(&p);
+            }
+            let g = rng.normal_vec(b * spec.sig_len(), 1.0);
+            // The planner must actually choose LaneFused here (threads ≤
+            // batch, no surplus): this is the plan the batch entry executes.
+            let plan = ExecPlanner::new(4).plan_backward(&WorkShape {
+                batch: b,
+                points: stream,
+                d,
+                depth,
+                dtype: crate::ta::Precision::F32,
+            });
+            assert!(matches!(plan, ExecPlan::LaneFused { .. }), "d={d}: expected LaneFused, got {plan:?}");
+            // f32: lane engine vs per-sample scalar dispatch, bitwise.
+            let out = signature_batch_vjp(&paths, b, stream, &spec, &g, 4).unwrap();
+            for i in 0..b {
+                let single = signature_vjp(
+                    &paths[i * plen..(i + 1) * plen],
+                    stream,
+                    &spec,
+                    &g[i * spec.sig_len()..(i + 1) * spec.sig_len()],
+                );
+                assert_eq!(&out[i * plen..(i + 1) * plen], single.as_slice(), "f32 d={d} sample {i}");
+            }
+            // f64: same property through the widened precision axis.
+            let paths64: Vec<f64> = paths.iter().map(|&v| v as f64).collect();
+            let g64: Vec<f64> = g.iter().map(|&v| v as f64).collect();
+            let out64 = signature_batch_vjp(&paths64, b, stream, &spec, &g64, 4).unwrap();
+            for i in 0..b {
+                let single = signature_vjp(
+                    &paths64[i * plen..(i + 1) * plen],
+                    stream,
+                    &spec,
+                    &g64[i * spec.sig_len()..(i + 1) * spec.sig_len()],
+                );
+                assert_eq!(&out64[i * plen..(i + 1) * plen], single.as_slice(), "f64 d={d} sample {i}");
+            }
         }
     }
 

@@ -23,14 +23,14 @@ use crate::ta::exp::exp_in_place;
 use crate::ta::fused::fused_mexp;
 use crate::ta::inverse::inverse_into;
 use crate::ta::mul::mul_assign;
-use crate::ta::{SigSpec, Workspace};
+use crate::ta::{Elem, SigSpec, Workspace};
 
 /// Re-exported from the execution planner, which owns all strategy
 /// constants (see [`crate::exec`]).
 pub use crate::exec::LANE_BLOCK;
 
 /// Validate a `(stream, d)` path buffer against the spec.
-fn check_path(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<()> {
+fn check_path<E: Elem>(path: &[E], stream: usize, spec: &SigSpec) -> anyhow::Result<()> {
     anyhow::ensure!(
         path.len() == stream * spec.d(),
         "path buffer has {} values, expected stream({}) * channels({})",
@@ -45,8 +45,8 @@ fn check_path(path: &[f32], stream: usize, spec: &SigSpec) -> anyhow::Result<()>
 /// returns the effective point count (incl. basepoint). Shared by the
 /// forward pass and the backward pass (whose parallel branch never calls
 /// [`signature_with`], so it must not rely on the forward for checks).
-pub(crate) fn check_path_with(
-    path: &[f32],
+pub(crate) fn check_path_with<E: Elem>(
+    path: &[E],
     stream: usize,
     spec: &SigSpec,
     cfg: &SigConfig,
@@ -76,15 +76,15 @@ pub(crate) fn check_path_with(
 /// Serial signature of the increments `z_i = p_{i+1} - p_i` of a point
 /// view. `points(i)` must yield the i-th point as a slice of length d.
 /// Writes into `out` (which must be zeroed = identity, or hold `initial`).
-fn sig_of_points<'a>(
+fn sig_of_points<'a, E: Elem>(
     spec: &SigSpec,
     n_points: usize,
-    points: impl Fn(usize) -> &'a [f32],
-    out: &mut [f32],
-    ws: &mut Workspace,
+    points: impl Fn(usize) -> &'a [E],
+    out: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     let d = spec.d();
-    let mut z = vec![0.0f32; d];
+    let mut z = vec![E::ZERO; d];
     for i in 1..n_points {
         let prev = points(i - 1);
         let cur = points(i);
@@ -98,25 +98,31 @@ fn sig_of_points<'a>(
 /// `Sig^N(path)` — the plain signature transform of one path of
 /// `stream >= 2` points in `R^d`. Panics on shape mismatch (use
 /// [`signature_with`] for a fallible, configurable version).
-pub fn signature(path: &[f32], stream: usize, spec: &SigSpec) -> Vec<f32> {
+pub fn signature<E: Elem>(path: &[E], stream: usize, spec: &SigSpec) -> Vec<E> {
     signature_with(path, stream, spec, &SigConfig::serial()).expect("valid path")
 }
 
 /// Signature with full options (basepoint / initial / inverse / threads).
-pub fn signature_with(
-    path: &[f32],
+/// Generic over the element precision: `&[f32]` paths run the f32 kernels
+/// unchanged, `&[f64]` paths run the same sweep in double precision. The
+/// config's basepoint / initial stay declared in f32 (the wire format) and
+/// are lifted into `E` once up front — the identity for `E = f32`.
+pub fn signature_with<E: Elem>(
+    path: &[E],
     stream: usize,
     spec: &SigSpec,
     cfg: &SigConfig,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let d = spec.d();
     let eff_len = check_path_with(path, stream, spec, cfg)?;
 
+    let basepoint: Option<Vec<E>> =
+        cfg.basepoint.as_ref().map(|bp| bp.iter().map(|&v| E::from_f32(v)).collect());
     // Materialise the effective point sequence accessor (with basepoint and
     // possible reversal for the inverted signature, §5.4).
-    let point = |i: usize| -> &[f32] {
+    let point = |i: usize| -> &[E] {
         let i = if cfg.inverse { eff_len - 1 - i } else { i };
-        match &cfg.basepoint {
+        match &basepoint {
             Some(bp) => {
                 if i == 0 {
                     bp.as_slice()
@@ -129,13 +135,18 @@ pub fn signature_with(
     };
 
     let mut out = match &cfg.initial {
-        Some(init) => init.clone(),
-        None => spec.zeros(),
+        Some(init) => init.iter().map(|&v| E::from_f32(v)).collect(),
+        None => spec.zeros_elem::<E>(),
     };
     // Strategy selection lives in the execution planner (crate::exec);
     // this function only executes whichever plan comes back.
-    let plan = ExecPlanner::new(cfg.threads)
-        .plan_forward(&WorkShape { batch: 1, points: eff_len, d, depth: spec.depth() });
+    let plan = ExecPlanner::new(cfg.threads).plan_forward(&WorkShape {
+        batch: 1,
+        points: eff_len,
+        d,
+        depth: spec.depth(),
+        dtype: E::PRECISION,
+    });
     match plan {
         ExecPlan::StreamParallel { threads } => {
             let chunk_sig = parallel::reduce_signature(spec, eff_len, &point, threads);
@@ -143,7 +154,7 @@ pub fn signature_with(
         }
         // LaneFused never arises for batch = 1; run the reference sweep.
         ExecPlan::Scalar | ExecPlan::LaneFused { .. } => {
-            let mut ws = Workspace::new(spec);
+            let mut ws = Workspace::<E>::new(spec);
             sig_of_points(spec, eff_len, point, &mut out, &mut ws);
         }
     }
@@ -218,13 +229,13 @@ pub fn signature_stream_with(
 /// per-path [`signature`] calls; a batch of 1 instead delegates to
 /// [`signature_with`], whose chunked stream reduction engages for
 /// `threads > 1` on long streams (same values to rounding, not bitwise).
-pub fn signature_batch(
-    paths: &[f32],
+pub fn signature_batch<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     threads: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let cfg = SigConfig { threads, ..SigConfig::serial() };
     signature_batch_with(paths, batch, stream, spec, &cfg)
 }
@@ -235,13 +246,13 @@ pub fn signature_batch(
 /// [`crate::exec::ExecPlanner`]; use [`signature_batch_planned`] to
 /// execute a plan chosen elsewhere (the serving layer does, so a lone
 /// flushed row always runs the scalar reference sweep).
-pub fn signature_batch_with(
-    paths: &[f32],
+pub fn signature_batch_with<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     cfg: &SigConfig,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     // Planning needs only the shape (pure arithmetic); all validation
     // lives in `signature_batch_planned`, which errors before executing
     // a plan derived from malformed inputs.
@@ -250,6 +261,7 @@ pub fn signature_batch_with(
         points: cfg.effective_len(stream),
         d: spec.d(),
         depth: spec.depth(),
+        dtype: E::PRECISION,
     });
     signature_batch_planned(paths, batch, stream, spec, cfg, plan)
 }
@@ -263,14 +275,14 @@ pub fn signature_batch_with(
 /// the coordinator's microbatch backend passes its serving plan here, and
 /// the batched logsignature ([`crate::logsignature::batch`]) executes the
 /// same plans through this shared executor before its per-lane epilogue.
-pub fn signature_batch_planned(
-    paths: &[f32],
+pub fn signature_batch_planned<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     cfg: &SigConfig,
     plan: ExecPlan,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let d = spec.d();
     anyhow::ensure!(batch >= 1, "need at least one path in the batch");
     anyhow::ensure!(
@@ -298,10 +310,14 @@ pub fn signature_batch_planned(
             return batch_per_path(paths, batch, stream, spec, &inner, threads);
         }
     };
-    let point = |lane: usize, i: usize| -> &[f32] {
+    let basepoint: Option<Vec<E>> =
+        cfg.basepoint.as_ref().map(|bp| bp.iter().map(|&v| E::from_f32(v)).collect());
+    let initial: Option<Vec<E>> =
+        cfg.initial.as_ref().map(|init| init.iter().map(|&v| E::from_f32(v)).collect());
+    let point = |lane: usize, i: usize| -> &[E] {
         let i = if cfg.inverse { eff_len - 1 - i } else { i };
         let base = lane * path_len;
-        match &cfg.basepoint {
+        match &basepoint {
             Some(bp) => {
                 if i == 0 {
                     bp.as_slice()
@@ -317,14 +333,14 @@ pub fn signature_batch_planned(
         crate::substrate::pool::parallel_map_indexed(n_blocks, threads, |bi| {
             let l0 = bi * block;
             let lanes = block.min(batch - l0);
-            let mut ws = BatchWorkspace::new(spec, lanes);
-            let mut state = vec![0.0f32; len * lanes];
-            if let Some(init) = &cfg.initial {
+            let mut ws = BatchWorkspace::<E>::new(spec, lanes);
+            let mut state = vec![E::ZERO; len * lanes];
+            if let Some(init) = &initial {
                 for (i, &v) in init.iter().enumerate() {
                     state[i * lanes..(i + 1) * lanes].fill(v);
                 }
             }
-            let mut z = vec![0.0f32; d * lanes];
+            let mut z = vec![E::ZERO; d * lanes];
             for i in 1..eff_len {
                 for l in 0..lanes {
                     let prev = point(l0 + l, i - 1);
@@ -335,13 +351,13 @@ pub fn signature_batch_planned(
                 }
                 fused_mexp_batch(spec, &mut state, &z, &mut ws);
             }
-            let mut rows = vec![0.0f32; lanes * len];
+            let mut rows = vec![E::ZERO; lanes * len];
             for l in 0..lanes {
                 unpack_lane(len, lanes, &state, l, &mut rows[l * len..(l + 1) * len]);
             }
             rows
         });
-    let mut out = vec![0.0f32; batch * len];
+    let mut out = vec![E::ZERO; batch * len];
     for (bi, rows) in blocks.into_iter().enumerate() {
         let o = bi * block * len;
         out[o..o + rows.len()].copy_from_slice(&rows);
@@ -352,20 +368,20 @@ pub fn signature_batch_planned(
 /// Per-path execution of a batch: each path runs [`signature_with`] under
 /// `inner` (whose `threads` is the *within-path* budget), with paths
 /// distributed over `outer_threads`.
-fn batch_per_path(
-    paths: &[f32],
+fn batch_per_path<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     inner: &SigConfig,
     outer_threads: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let plen = stream * spec.d();
     let len = spec.sig_len();
     let rows = crate::substrate::pool::parallel_map_indexed(batch, outer_threads, |b| {
         signature_with(&paths[b * plen..(b + 1) * plen], stream, spec, inner)
     });
-    let mut out = vec![0.0f32; batch * len];
+    let mut out = vec![E::ZERO; batch * len];
     for (b, row) in rows.into_iter().enumerate() {
         out[b * len..(b + 1) * len].copy_from_slice(&row?);
     }
@@ -611,15 +627,15 @@ mod tests {
     #[test]
     fn errors_on_bad_shapes() {
         let spec = SigSpec::new(2, 3).unwrap();
-        assert!(signature_with(&[0.0; 5], 2, &spec, &SigConfig::serial()).is_err()); // wrong len
-        assert!(signature_with(&[0.0; 2], 1, &spec, &SigConfig::serial()).is_err()); // 1 point
+        assert!(signature_with(&[0.0f32; 5], 2, &spec, &SigConfig::serial()).is_err()); // wrong len
+        assert!(signature_with(&[0.0f32; 2], 1, &spec, &SigConfig::serial()).is_err()); // 1 point
         let cfg = SigConfig { basepoint: Some(vec![0.0; 3]), ..SigConfig::serial() };
-        assert!(signature_with(&[0.0; 4], 2, &spec, &cfg).is_err()); // bad basepoint
+        assert!(signature_with(&[0.0f32; 4], 2, &spec, &cfg).is_err()); // bad basepoint
         let cfg = SigConfig { initial: Some(vec![0.0; 3]), ..SigConfig::serial() };
-        assert!(signature_with(&[0.0; 4], 2, &spec, &cfg).is_err()); // bad initial
+        assert!(signature_with(&[0.0f32; 4], 2, &spec, &cfg).is_err()); // bad initial
         // A single point plus basepoint is fine.
         let cfg = SigConfig { basepoint: Some(vec![0.0; 2]), ..SigConfig::serial() };
-        assert!(signature_with(&[1.0, 2.0], 1, &spec, &cfg).is_ok());
+        assert!(signature_with(&[1.0f32, 2.0], 1, &spec, &cfg).is_ok());
     }
 
     #[test]
@@ -671,6 +687,27 @@ mod tests {
     }
 
     #[test]
+    fn batch_lane_engine_is_bitwise_per_path_in_f64() {
+        // The precision axis: the same lane/scalar parity holds when the
+        // whole pipeline runs in f64, including at d beyond the mono
+        // window (d = 9 > LANE_VJP_MAX_D exercises the runtime-d bodies).
+        for (d, depth) in [(3usize, 3usize), (9, 3)] {
+            let spec = SigSpec::new(d, depth).unwrap();
+            let mut rng = Rng::new(47 + d as u64);
+            let (b, stream) = (super::LANE_BLOCK + 3, 6);
+            let plen = stream * d;
+            let f32_paths = random_path(&mut rng, b * stream, d);
+            let paths: Vec<f64> = f32_paths.iter().map(|&v| v as f64).collect();
+            let out = signature_batch(&paths, b, stream, &spec, 2).unwrap();
+            let len = spec.sig_len();
+            for i in 0..b {
+                let single = signature(&paths[i * plen..(i + 1) * plen], stream, &spec);
+                assert_eq!(&out[i * len..(i + 1) * len], single.as_slice(), "d={d} lane {i}");
+            }
+        }
+    }
+
+    #[test]
     fn batch_with_options_is_bitwise_per_path() {
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(43);
@@ -705,11 +742,11 @@ mod tests {
         // `signature` inside worker threads, so stream < 2 crossed a
         // thread boundary as a panic. All malformed shapes are now Err.
         let spec = SigSpec::new(2, 3).unwrap();
-        assert!(signature_batch(&[0.0; 4], 2, 1, &spec, 2).is_err()); // stream < 2
-        assert!(signature_batch(&[0.0; 4], 0, 2, &spec, 2).is_err()); // empty batch
-        assert!(signature_batch(&[0.0; 5], 1, 2, &spec, 2).is_err()); // wrong buffer
+        assert!(signature_batch(&[0.0f32; 4], 2, 1, &spec, 2).is_err()); // stream < 2
+        assert!(signature_batch(&[0.0f32; 4], 0, 2, &spec, 2).is_err()); // empty batch
+        assert!(signature_batch(&[0.0f32; 5], 1, 2, &spec, 2).is_err()); // wrong buffer
         let bad_bp = SigConfig { basepoint: Some(vec![0.0; 1]), ..SigConfig::serial() };
-        assert!(signature_batch_with(&[0.0; 8], 2, 2, &spec, &bad_bp).is_err());
+        assert!(signature_batch_with(&[0.0f32; 8], 2, 2, &spec, &bad_bp).is_err());
     }
 
     #[test]

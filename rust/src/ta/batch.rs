@@ -13,34 +13,38 @@
 //!
 //! Each lane performs *exactly* the same floating-point operations in the
 //! same order as the scalar kernels ([`super::fused::fused_mexp`] /
-//! [`fused_mexp_left`] / the `d ≤ 8` monomorphised `fused_mexp_vjp`), so
-//! lane-fused results are **bitwise identical** to per-path dispatch —
-//! pinned by the tests below. The VJP mirrors the monomorphised scalar
-//! backward; callers fall back to per-path dispatch for `d > 8`, where the
-//! scalar side switches to the exp/⊠ reference composition.
+//! [`fused_mexp_left`] / `fused_mexp_vjp`), so lane-fused results are
+//! **bitwise identical** to per-path dispatch — pinned by the tests below.
+//! The VJP mirrors the scalar Horner backward at *every* dimension: the
+//! scalar side dispatches to monomorphised bodies for `d ≤ 8` and to the
+//! runtime-`d` [`fused_mexp_vjp_dyn`] beyond, and both replay the same op
+//! order as this batched twin, so there is no dimension ceiling on the
+//! lane path. All kernels are generic over the sealed element trait
+//! [`Elem`] (f32/f64); f32 call sites infer `E = f32` unchanged.
 //!
 //! [`fused_mexp_left`]: super::fused::fused_mexp_left
+//! [`fused_mexp_vjp_dyn`]: super::fused::fused_mexp_vjp_dyn
 
-use super::SigSpec;
+use super::{Elem, SigSpec};
 
 /// Reusable scratch for the lane kernels, sized for one `(SigSpec, lanes)`
 /// pair — the batched analogue of [`super::Workspace`], holding `lanes`
 /// interleaved signatures' worth of Horner and staging buffers.
-pub struct BatchWorkspace {
+pub struct BatchWorkspace<E: Elem = f32> {
     lanes: usize,
     /// Ping/pong Horner buffers, each `d^(depth-1) * lanes` long.
-    h0: Vec<f32>,
-    h1: Vec<f32>,
+    h0: Vec<E>,
+    h1: Vec<E>,
     /// `z/m` staging, `(d * depth) * lanes` long.
-    zdiv: Vec<f32>,
+    zdiv: Vec<E>,
     /// Forward-chain storage for the VJP, `sig_len * lanes` long.
-    t2: Vec<f32>,
+    t2: Vec<E>,
     /// Per-level `∂L/∂z` accumulator for the VJP, `d * lanes` long.
-    gza: Vec<f32>,
+    gza: Vec<E>,
 }
 
-impl BatchWorkspace {
-    pub fn new(spec: &SigSpec, lanes: usize) -> BatchWorkspace {
+impl<E: Elem> BatchWorkspace<E> {
+    pub fn new(spec: &SigSpec, lanes: usize) -> BatchWorkspace<E> {
         assert!(lanes >= 1, "need at least one lane");
         let horner = if spec.depth() >= 2 {
             spec.level_len(spec.depth()) / spec.d()
@@ -49,11 +53,11 @@ impl BatchWorkspace {
         };
         BatchWorkspace {
             lanes,
-            h0: vec![0.0; horner * lanes],
-            h1: vec![0.0; horner * lanes],
-            zdiv: vec![0.0; spec.d() * spec.depth() * lanes],
-            t2: vec![0.0; spec.sig_len() * lanes],
-            gza: vec![0.0; spec.d() * lanes],
+            h0: vec![E::ZERO; horner * lanes],
+            h1: vec![E::ZERO; horner * lanes],
+            zdiv: vec![E::ZERO; spec.d() * spec.depth() * lanes],
+            t2: vec![E::ZERO; spec.sig_len() * lanes],
+            gza: vec![E::ZERO; spec.d() * lanes],
         }
     }
 
@@ -67,11 +71,11 @@ impl BatchWorkspace {
 /// Scatter `lanes` row-major items (each `item_len` long, `row(l)` yields
 /// lane `l`'s item) into the lane-interleaved layout:
 /// `out[i * lanes + l] = row(l)[i]`.
-pub fn pack_lanes<'a>(
+pub fn pack_lanes<'a, E: Elem>(
     item_len: usize,
     lanes: usize,
-    row: impl Fn(usize) -> &'a [f32],
-    out: &mut [f32],
+    row: impl Fn(usize) -> &'a [E],
+    out: &mut [E],
 ) {
     debug_assert_eq!(out.len(), item_len * lanes);
     for l in 0..lanes {
@@ -85,7 +89,13 @@ pub fn pack_lanes<'a>(
 
 /// Gather lane `l` out of a lane-interleaved buffer back into a row-major
 /// item: `out[i] = interleaved[i * lanes + l]`.
-pub fn unpack_lane(item_len: usize, lanes: usize, interleaved: &[f32], l: usize, out: &mut [f32]) {
+pub fn unpack_lane<E: Elem>(
+    item_len: usize,
+    lanes: usize,
+    interleaved: &[E],
+    l: usize,
+    out: &mut [E],
+) {
     debug_assert_eq!(interleaved.len(), item_len * lanes);
     debug_assert_eq!(out.len(), item_len);
     debug_assert!(l < lanes);
@@ -97,11 +107,11 @@ pub fn unpack_lane(item_len: usize, lanes: usize, interleaved: &[f32], l: usize,
 /// Stage `z/m` for `m = 1..=depth` into `ws.zdiv` (lane-interleaved; block
 /// `m-1` holds `z/m`, laid out like `z` itself).
 #[inline]
-fn stage_zdiv_batch(spec: &SigSpec, z: &[f32], ws: &mut BatchWorkspace) {
+fn stage_zdiv_batch<E: Elem>(spec: &SigSpec, z: &[E], ws: &mut BatchWorkspace<E>) {
     let dl = spec.d() * ws.lanes;
     debug_assert_eq!(z.len(), dl);
     for m in 1..=spec.depth() {
-        let inv = 1.0 / m as f32;
+        let inv = E::recip_usize(m);
         let row = &mut ws.zdiv[(m - 1) * dl..m * dl];
         for (r, &zq) in row.iter_mut().zip(z) {
             *r = zq * inv;
@@ -112,7 +122,7 @@ fn stage_zdiv_batch(spec: &SigSpec, z: &[f32], ws: &mut BatchWorkspace) {
 /// Lane-wise `dst[l] = src[l] * z[l] + add[l]` over `lanes` contiguous
 /// values — the vectorised body of every middle Horner step.
 #[inline(always)]
-fn lane_fma(dst: &mut [f32], src: &[f32], z: &[f32], add: &[f32]) {
+fn lane_fma<E: Elem>(dst: &mut [E], src: &[E], z: &[E], add: &[E]) {
     for ((dv, (&sv, &zv)), &av) in dst.iter_mut().zip(src.iter().zip(z)).zip(add) {
         *dv = sv * zv + av;
     }
@@ -120,7 +130,7 @@ fn lane_fma(dst: &mut [f32], src: &[f32], z: &[f32], add: &[f32]) {
 
 /// Lane-wise `dst[l] += src[l] * z[l]` — the vectorised final Horner step.
 #[inline(always)]
-fn lane_fma_acc(dst: &mut [f32], src: &[f32], z: &[f32]) {
+fn lane_fma_acc<E: Elem>(dst: &mut [E], src: &[E], z: &[E]) {
     for (dv, (&sv, &zv)) in dst.iter_mut().zip(src.iter().zip(z)) {
         *dv += sv * zv;
     }
@@ -129,7 +139,7 @@ fn lane_fma_acc(dst: &mut [f32], src: &[f32], z: &[f32]) {
 /// In-place batched fused multiply-exponentiate: `a_l ← a_l ⊠ exp(z_l)`
 /// for every lane `l`, on lane-interleaved `a` (`sig_len * lanes`) and `z`
 /// (`d * lanes`). Bitwise identical per lane to [`super::fused::fused_mexp`].
-pub fn fused_mexp_batch(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut BatchWorkspace) {
+pub fn fused_mexp_batch<E: Elem>(spec: &SigSpec, a: &mut [E], z: &[E], ws: &mut BatchWorkspace<E>) {
     let d = spec.d();
     let n = spec.depth();
     let lanes = ws.lanes;
@@ -198,7 +208,12 @@ pub fn fused_mexp_batch(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Batch
 /// Batched mirrored fused operation: `a_l ← exp(z_l) ⊠ a_l` per lane —
 /// the incremental inverted-signature step (§4.2), lane-interleaved.
 /// Bitwise identical per lane to [`super::fused::fused_mexp_left`].
-pub fn fused_mexp_left_batch(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut BatchWorkspace) {
+pub fn fused_mexp_left_batch<E: Elem>(
+    spec: &SigSpec,
+    a: &mut [E],
+    z: &[E],
+    ws: &mut BatchWorkspace<E>,
+) {
     let d = spec.d();
     let n = spec.depth();
     let lanes = ws.lanes;
@@ -267,19 +282,20 @@ pub fn fused_mexp_left_batch(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut 
 /// `g = ∂L/∂C`, accumulates `∂L/∂A` into `ga` and `∂L/∂z` into `gz`
 /// (both lane-interleaved).
 ///
-/// Mirrors the monomorphised scalar backward
-/// ([`super::fused::fused_mexp_vjp`] for `d ≤ 8`) operation-for-operation,
-/// so per-lane results are bitwise identical to per-path dispatch in that
-/// range; for `d > 8` the scalar side uses the exp/⊠ reference composition
-/// instead and callers should dispatch per path.
-pub fn fused_mexp_vjp_batch(
+/// Mirrors the scalar Horner backward ([`super::fused::fused_mexp_vjp`])
+/// operation-for-operation at *every* `d` — the scalar dispatcher picks a
+/// monomorphised body for `d ≤ 8` and the runtime-`d`
+/// [`super::fused::fused_mexp_vjp_dyn`] beyond, and both replay the same
+/// op order as this kernel — so per-lane results are bitwise identical to
+/// per-path dispatch with no dimension ceiling.
+pub fn fused_mexp_vjp_batch<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    g: &[f32],
-    ga: &mut [f32],
-    gz: &mut [f32],
-    ws: &mut BatchWorkspace,
+    a: &[E],
+    z: &[E],
+    g: &[E],
+    ga: &mut [E],
+    gz: &mut [E],
+    ws: &mut BatchWorkspace<E>,
 ) {
     let d = spec.d();
     let n = spec.depth();
@@ -340,7 +356,7 @@ pub fn fused_mexp_vjp_batch(
         let gb = &mut ws.h0[..cur_len * lanes];
         for p in 0..cur_len {
             let gbp = &mut gb[p * lanes..(p + 1) * lanes];
-            gbp.fill(0.0);
+            gbp.fill(E::ZERO);
             let bp = &bk1[p * lanes..(p + 1) * lanes];
             for q in 0..d {
                 let row = &gk[(p * d + q) * lanes..(p * d + q + 1) * lanes];
@@ -357,7 +373,7 @@ pub fn fused_mexp_vjp_batch(
         let mut len_i = cur_len; // length of B_i for current i (= d^i)
         for i in (2..k).rev() {
             let m = k - i + 1;
-            let inv_m = 1.0 / m as f32;
+            let inv_m = E::recip_usize(m);
             let zm = &ws.zdiv[(m - 1) * d * lanes..m * d * lanes];
             let oi = spec.off(i);
             let prev_len = len_i / d;
@@ -373,10 +389,10 @@ pub fn fused_mexp_vjp_batch(
             }
             // gB_{i-1}[p] = Σ_q gB_i[p,q] zm[q];
             // gz[q] += inv_m * Σ_p B_{i-1}[p] gB_i[p,q].
-            ws.gza.fill(0.0);
+            ws.gza.fill(E::ZERO);
             for p in 0..prev_len {
                 let gbp = &mut gb_prev[p * lanes..(p + 1) * lanes];
-                gbp.fill(0.0);
+                gbp.fill(E::ZERO);
                 let bp = &b_prev[p * lanes..(p + 1) * lanes];
                 for q in 0..d {
                     let row = &gb_i[(p * d + q) * lanes..(p * d + q + 1) * lanes];
@@ -396,7 +412,7 @@ pub fn fused_mexp_vjp_batch(
         }
         // Innermost: B_1 = z/k + A_1.
         let gb1 = if cur_in_h0 { &ws.h0[..d * lanes] } else { &ws.h1[..d * lanes] };
-        let inv_k = 1.0 / k as f32;
+        let inv_k = E::recip_usize(k);
         for (i, &gv) in gb1.iter().enumerate() {
             ga[i] += gv;
             gz[i] += inv_k * gv;
@@ -481,51 +497,109 @@ mod tests {
         });
     }
 
+    /// Shared body for the per-lane bitwise VJP checks: packs `lanes`
+    /// random problems, runs the batched VJP, and compares every lane
+    /// against scalar dispatch (`fused_mexp_vjp`) with `assert_eq`.
+    fn check_vjp_bitwise_f32(s: &SigSpec, lanes: usize, seed: u64) {
+        let d = s.d();
+        let len = s.sig_len();
+        let mut rng = crate::substrate::rng::Rng::new(seed);
+        let a_rows: Vec<Vec<f32>> = (0..lanes).map(|_| rng.normal_vec(len, 0.6)).collect();
+        let z_rows: Vec<Vec<f32>> = (0..lanes).map(|_| rng.normal_vec(d, 0.6)).collect();
+        let g_rows: Vec<Vec<f32>> = (0..lanes).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let mut a = vec![0.0f32; len * lanes];
+        let mut z = vec![0.0f32; d * lanes];
+        let mut cot = vec![0.0f32; len * lanes];
+        pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+        pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut z);
+        pack_lanes(len, lanes, |l| g_rows[l].as_slice(), &mut cot);
+        let mut ga = vec![0.0f32; len * lanes];
+        let mut gz = vec![0.0f32; d * lanes];
+        let mut bws = BatchWorkspace::new(s, lanes);
+        fused_mexp_vjp_batch(s, &a, &z, &cot, &mut ga, &mut gz, &mut bws);
+        let mut ws = Workspace::new(s);
+        let mut ga_row = vec![0.0f32; len];
+        let mut gz_row = vec![0.0f32; d];
+        for l in 0..lanes {
+            let mut ga_ref = s.zeros();
+            let mut gz_ref = vec![0.0f32; d];
+            fused_mexp_vjp(s, &a_rows[l], &z_rows[l], &g_rows[l], &mut ga_ref, &mut gz_ref, &mut ws);
+            unpack_lane(len, lanes, &ga, l, &mut ga_row);
+            unpack_lane(d, lanes, &gz, l, &mut gz_row);
+            assert_eq!(ga_row, ga_ref, "lane {l} ga diverged (d={d} lanes={lanes})");
+            assert_eq!(gz_row, gz_ref, "lane {l} gz diverged (d={d} lanes={lanes})");
+        }
+    }
+
+    /// The f64 twin of [`check_vjp_bitwise_f32`].
+    fn check_vjp_bitwise_f64(s: &SigSpec, lanes: usize, seed: u64) {
+        let d = s.d();
+        let len = s.sig_len();
+        let mut rng = crate::substrate::rng::Rng::new(seed);
+        let up = |v: Vec<f32>| -> Vec<f64> { v.into_iter().map(|x| x as f64).collect() };
+        let a_rows: Vec<Vec<f64>> = (0..lanes).map(|_| up(rng.normal_vec(len, 0.6))).collect();
+        let z_rows: Vec<Vec<f64>> = (0..lanes).map(|_| up(rng.normal_vec(d, 0.6))).collect();
+        let g_rows: Vec<Vec<f64>> = (0..lanes).map(|_| up(rng.normal_vec(len, 1.0))).collect();
+        let mut a = vec![0.0f64; len * lanes];
+        let mut z = vec![0.0f64; d * lanes];
+        let mut cot = vec![0.0f64; len * lanes];
+        pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+        pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut z);
+        pack_lanes(len, lanes, |l| g_rows[l].as_slice(), &mut cot);
+        let mut ga = vec![0.0f64; len * lanes];
+        let mut gz = vec![0.0f64; d * lanes];
+        let mut bws = BatchWorkspace::<f64>::new(s, lanes);
+        fused_mexp_vjp_batch(s, &a, &z, &cot, &mut ga, &mut gz, &mut bws);
+        let mut ws = Workspace::<f64>::new(s);
+        let mut ga_row = vec![0.0f64; len];
+        let mut gz_row = vec![0.0f64; d];
+        for l in 0..lanes {
+            let mut ga_ref = s.zeros_elem::<f64>();
+            let mut gz_ref = vec![0.0f64; d];
+            fused_mexp_vjp(s, &a_rows[l], &z_rows[l], &g_rows[l], &mut ga_ref, &mut gz_ref, &mut ws);
+            unpack_lane(len, lanes, &ga, l, &mut ga_row);
+            unpack_lane(d, lanes, &gz, l, &mut gz_row);
+            assert_eq!(ga_row, ga_ref, "lane {l} ga diverged (f64 d={d} lanes={lanes})");
+            assert_eq!(gz_row, gz_ref, "lane {l} gz diverged (f64 d={d} lanes={lanes})");
+        }
+    }
+
     #[test]
-    fn batch_vjp_is_bitwise_per_lane_in_mono_range() {
-        // The batched backward mirrors the d <= 8 monomorphised scalar
-        // backward op-for-op, so it must match it bit-for-bit per lane.
+    fn batch_vjp_is_bitwise_per_lane_at_any_d() {
+        // The batched backward mirrors the scalar Horner backward
+        // op-for-op at every d (mono bodies for d <= 8, fused_mexp_vjp_dyn
+        // beyond), so it must match scalar dispatch bit-for-bit per lane.
         property("fused_mexp_vjp_batch == fused_mexp_vjp bitwise", 20, |g| {
             let d = g.usize_in(1, 8);
             let n = g.usize_in(1, if d > 4 { 4 } else { 5 });
             let lanes = g.usize_in(1, 6);
             g.label(format!("d={d} n={n} lanes={lanes}"));
             let s = SigSpec::new(d, n).unwrap();
-            let len = s.sig_len();
-            let a_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.6)).collect();
-            let z_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(d, 0.6)).collect();
-            let g_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 1.0)).collect();
-            let mut a = vec![0.0f32; len * lanes];
-            let mut z = vec![0.0f32; d * lanes];
-            let mut cot = vec![0.0f32; len * lanes];
-            pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
-            pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut z);
-            pack_lanes(len, lanes, |l| g_rows[l].as_slice(), &mut cot);
-            let mut ga = vec![0.0f32; len * lanes];
-            let mut gz = vec![0.0f32; d * lanes];
-            let mut bws = BatchWorkspace::new(&s, lanes);
-            fused_mexp_vjp_batch(&s, &a, &z, &cot, &mut ga, &mut gz, &mut bws);
-            let mut ws = Workspace::new(&s);
-            let mut ga_row = vec![0.0f32; len];
-            let mut gz_row = vec![0.0f32; d];
-            for l in 0..lanes {
-                let mut ga_ref = s.zeros();
-                let mut gz_ref = vec![0.0f32; d];
-                fused_mexp_vjp(
-                    &s,
-                    &a_rows[l],
-                    &z_rows[l],
-                    &g_rows[l],
-                    &mut ga_ref,
-                    &mut gz_ref,
-                    &mut ws,
-                );
-                unpack_lane(len, lanes, &ga, l, &mut ga_row);
-                unpack_lane(d, lanes, &gz, l, &mut gz_row);
-                assert_eq!(ga_row, ga_ref, "lane {l} ga diverged");
-                assert_eq!(gz_row, gz_ref, "lane {l} gz diverged");
-            }
+            check_vjp_bitwise_f32(&s, lanes, g.usize_in(1, 100_000) as u64);
         });
+    }
+
+    #[test]
+    fn batch_vjp_bitwise_across_the_dimension_sweep_f32() {
+        // The issue's pinned sweep: d ∈ {3, 8, 9, 12, 20}, including lane
+        // counts that leave ragged tails against the planner's block size
+        // (LANE_BLOCK = 16 → lanes ∈ {3, 5} exercise partial blocks).
+        for &(d, n) in &[(3usize, 4usize), (8, 3), (9, 3), (12, 3), (20, 2)] {
+            let s = SigSpec::new(d, n).unwrap();
+            for &lanes in &[1usize, 3, 5] {
+                check_vjp_bitwise_f32(&s, lanes, 100 + (d * 10 + lanes) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_vjp_bitwise_across_the_dimension_sweep_f64() {
+        for &(d, n) in &[(3usize, 4usize), (8, 3), (9, 3), (12, 3), (20, 2)] {
+            let s = SigSpec::new(d, n).unwrap();
+            for &lanes in &[1usize, 3, 5] {
+                check_vjp_bitwise_f64(&s, lanes, 200 + (d * 10 + lanes) as u64);
+            }
+        }
     }
 
     #[test]
@@ -548,7 +622,7 @@ mod tests {
     #[test]
     fn workspace_sizes_scale_with_lanes() {
         let s = SigSpec::new(3, 4).unwrap();
-        let w = BatchWorkspace::new(&s, 5);
+        let w: BatchWorkspace = BatchWorkspace::new(&s, 5);
         assert_eq!(w.lanes(), 5);
         assert_eq!(w.h0.len(), 27 * 5); // d^(N-1) per lane
         assert_eq!(w.zdiv.len(), 12 * 5);

@@ -4,13 +4,13 @@
 //! `exp` is the signature of a single linear segment with increment `z`
 //! (`Sig((x1, x2)) = exp(x2 - x1)`), so it is both the base case of every
 //! signature computation and the reference the fused operation is checked
-//! against.
+//! against. Generic over the sealed element trait [`Elem`] (f32/f64).
 
 use super::mul::{contract_left_add, contract_right_add};
-use super::SigSpec;
+use super::{Elem, SigSpec};
 
 /// `out = exp(z)` where `z` has `spec.d()` entries.
-pub fn exp_into(spec: &SigSpec, z: &[f32], out: &mut [f32]) {
+pub fn exp_into<E: Elem>(spec: &SigSpec, z: &[E], out: &mut [E]) {
     debug_assert_eq!(z.len(), spec.d());
     debug_assert_eq!(out.len(), spec.sig_len());
     out[..spec.d()].copy_from_slice(z);
@@ -22,11 +22,11 @@ pub fn exp_into(spec: &SigSpec, z: &[f32], out: &mut [f32]) {
 /// free callers (e.g.
 /// [`crate::signature::forward::two_point_signature_into`]) skip the
 /// separate `z` buffer.
-pub fn exp_in_place(spec: &SigSpec, out: &mut [f32]) {
+pub fn exp_in_place<E: Elem>(spec: &SigSpec, out: &mut [E]) {
     debug_assert_eq!(out.len(), spec.sig_len());
     let d = spec.d();
     for k in 2..=spec.depth() {
-        let inv_k = 1.0 / k as f32;
+        let inv_k = E::recip_usize(k);
         let (lo, hi) = out.split_at_mut(spec.off(k));
         let z = &lo[..d];
         let prev = &lo[spec.off(k - 1)..];
@@ -42,8 +42,8 @@ pub fn exp_in_place(spec: &SigSpec, out: &mut [f32]) {
 }
 
 /// Allocating wrapper around [`exp_into`].
-pub fn exp(spec: &SigSpec, z: &[f32]) -> Vec<f32> {
-    let mut out = spec.zeros();
+pub fn exp<E: Elem>(spec: &SigSpec, z: &[E]) -> Vec<E> {
+    let mut out = spec.zeros_elem::<E>();
     exp_into(spec, z, &mut out);
     out
 }
@@ -53,7 +53,7 @@ pub fn exp(spec: &SigSpec, z: &[f32]) -> Vec<f32> {
 /// Recomputes the forward levels internally (they are cheap relative to the
 /// contractions) so no forward state needs to be retained — consistent with
 /// the library-wide reversibility strategy (App. C).
-pub fn exp_vjp(spec: &SigSpec, z: &[f32], g: &[f32], gz: &mut [f32]) {
+pub fn exp_vjp<E: Elem>(spec: &SigSpec, z: &[E], g: &[E], gz: &mut [E]) {
     let d = spec.d();
     let n = spec.depth();
     debug_assert_eq!(gz.len(), d);
@@ -61,22 +61,22 @@ pub fn exp_vjp(spec: &SigSpec, z: &[f32], g: &[f32], gz: &mut [f32]) {
     let e = exp(spec, z);
     // gE is built top-down: gE_N = g_N; gE_{k-1} = g_{k-1} + contraction of
     // gE_k with z/k (since E_k = E_{k-1} ⊗ z/k).
-    let mut ge_k: Vec<f32> = spec.level(g, n).to_vec();
+    let mut ge_k: Vec<E> = spec.level(g, n).to_vec();
     for k in (2..=n).rev() {
-        let inv_k = 1.0 / k as f32;
+        let inv_k = E::recip_usize(k);
         let e_prev = spec.level(&e, k - 1);
         // gz[q] += Σ_p gE_k[p,q] * E_{k-1}[p] / k
-        let mut gz_part = vec![0.0f32; d];
+        let mut gz_part = vec![E::ZERO; d];
         contract_left_add(&ge_k, e_prev, &mut gz_part);
         for (o, v) in gz.iter_mut().zip(&gz_part) {
-            *o += v * inv_k;
+            *o += *v * inv_k;
         }
         // gE_{k-1}[p] = g_{k-1}[p] + Σ_q gE_k[p,q] * z[q] / k
         let mut ge_prev = spec.level(g, k - 1).to_vec();
-        let mut scratch = vec![0.0f32; ge_prev.len()];
+        let mut scratch = vec![E::ZERO; ge_prev.len()];
         contract_right_add(&ge_k, z, &mut scratch);
         for (o, s) in ge_prev.iter_mut().zip(&scratch) {
-            *o += s * inv_k;
+            *o += *s * inv_k;
         }
         ge_k = ge_prev;
     }
@@ -128,8 +128,23 @@ mod tests {
     #[test]
     fn exp_of_zero_is_identity() {
         let s = SigSpec::new(4, 3).unwrap();
-        let e = exp(&s, &[0.0; 4]);
+        let e = exp(&s, &[0.0f32; 4]);
         assert!(e.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exp_f64_levels_match_f32_upcast_closely() {
+        // The f64 instantiation runs the same recurrence at higher
+        // precision: on f32-representable inputs the downcast agrees to
+        // f32 roundoff.
+        let s = SigSpec::new(3, 4).unwrap();
+        let z32 = [0.25f32, -0.5, 0.125];
+        let z64: Vec<f64> = z32.iter().map(|&v| v as f64).collect();
+        let e32 = exp(&s, &z32);
+        let e64 = exp(&s, &z64);
+        for (a, b) in e32.iter().zip(&e64) {
+            assert!((*a as f64 - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -18,17 +18,30 @@
 //! `fused_mexp_left` is the mirrored `A ← exp(z) ⊠ A`, used to maintain
 //! *inverted* signatures incrementally (`InvertSig_{j} = exp(-z_j) ⊠
 //! InvertSig_{j-1}`) for the Path class (§4.2).
+//!
+//! Everything here is generic over the sealed element trait
+//! [`Elem`] (f32/f64); existing `&[f32]` call sites infer `E = f32`
+//! unchanged. The forward and the VJP each have **two** interchangeable
+//! bodies: a `const D`-monomorphised one whose innermost channel loops have
+//! a compile-time trip count, and a runtime-`d` one
+//! ([`fused_mexp_generic`], [`fused_mexp_vjp_dyn`]) that replays the *same*
+//! floating-point op order with a runtime trip count. The dispatchers pick
+//! the mono body for `d ≤ 8` — the crossover is benchmark-arbitrated
+//! (`benches/batch_lanes.rs` records mono-vs-dyn timings in
+//! `BENCH_batch.json`) — and the dyn body everywhere else, so every `d`
+//! rides the fast Horner VJP and the two bodies are bitwise-identical
+//! wherever they overlap.
 
 use super::exp::{exp_into, exp_vjp};
 use super::mul::{mul_vjp, outer_add};
-use super::{SigSpec, Workspace};
+use super::{Elem, SigSpec, Workspace};
 
 /// Stage `z/m` for `m = 1..=depth` into `ws.zdiv` (row `m-1` holds `z/m`).
 #[inline]
-fn stage_zdiv(spec: &SigSpec, z: &[f32], ws: &mut Workspace) {
+fn stage_zdiv<E: Elem>(spec: &SigSpec, z: &[E], ws: &mut Workspace<E>) {
     let d = spec.d();
     for m in 1..=spec.depth() {
-        let inv = 1.0 / m as f32;
+        let inv = E::recip_usize(m);
         let row = &mut ws.zdiv[(m - 1) * d..m * d];
         for (r, &zq) in row.iter_mut().zip(z) {
             *r = zq * inv;
@@ -41,27 +54,33 @@ fn stage_zdiv(spec: &SigSpec, z: &[f32], ws: &mut Workspace) {
 /// Dispatches to a `d`-monomorphised body for the paper's benchmark range
 /// (`d ≤ 8`): the innermost Horner loops run over the `d` channels, and a
 /// compile-time trip count lets them unroll/vectorise (§Perf: ~2–3×
-/// wall-clock on the generic loop at small `d`).
-pub fn fused_mexp(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+/// wall-clock on the generic loop at small `d`). Beyond that the
+/// runtime-`d` body takes over — same op order, so results are identical.
+pub fn fused_mexp<E: Elem>(spec: &SigSpec, a: &mut [E], z: &[E], ws: &mut Workspace<E>) {
     match spec.d() {
-        1 => fused_mexp_mono::<1>(spec, a, z, ws),
-        2 => fused_mexp_mono::<2>(spec, a, z, ws),
-        3 => fused_mexp_mono::<3>(spec, a, z, ws),
-        4 => fused_mexp_mono::<4>(spec, a, z, ws),
-        5 => fused_mexp_mono::<5>(spec, a, z, ws),
-        6 => fused_mexp_mono::<6>(spec, a, z, ws),
-        7 => fused_mexp_mono::<7>(spec, a, z, ws),
-        8 => fused_mexp_mono::<8>(spec, a, z, ws),
+        1 => fused_mexp_mono::<E, 1>(spec, a, z, ws),
+        2 => fused_mexp_mono::<E, 2>(spec, a, z, ws),
+        3 => fused_mexp_mono::<E, 3>(spec, a, z, ws),
+        4 => fused_mexp_mono::<E, 4>(spec, a, z, ws),
+        5 => fused_mexp_mono::<E, 5>(spec, a, z, ws),
+        6 => fused_mexp_mono::<E, 6>(spec, a, z, ws),
+        7 => fused_mexp_mono::<E, 7>(spec, a, z, ws),
+        8 => fused_mexp_mono::<E, 8>(spec, a, z, ws),
         _ => fused_mexp_generic(spec, a, z, ws),
     }
 }
 
 #[inline(always)]
-fn fused_mexp_mono<const D: usize>(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+fn fused_mexp_mono<E: Elem, const D: usize>(
+    spec: &SigSpec,
+    a: &mut [E],
+    z: &[E],
+    ws: &mut Workspace<E>,
+) {
     let n = spec.depth();
     debug_assert_eq!(spec.d(), D);
     debug_assert_eq!(a.len(), spec.sig_len());
-    let z: &[f32; D] = z.try_into().expect("z has d entries");
+    let z: &[E; D] = z.try_into().expect("z has d entries");
     stage_zdiv(spec, z, ws);
     for k in (2..=n).rev() {
         // B_1 = z/k + A_1.
@@ -81,11 +100,11 @@ fn fused_mexp_mono<const D: usize>(spec: &SigSpec, a: &mut [f32], z: &[f32], ws:
             } else {
                 (&ws.h1[..cur_len], &mut ws.h0[..cur_len * D])
             };
-            let zm: &[f32; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
+            let zm: &[E; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
             let ai = &a[oi..oi + li];
             for (p, &sp) in src.iter().enumerate() {
-                let row: &mut [f32; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
-                let arow: &[f32; D] = (&ai[p * D..(p + 1) * D]).try_into().unwrap();
+                let row: &mut [E; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
+                let arow: &[E; D] = (&ai[p * D..(p + 1) * D]).try_into().unwrap();
                 for q in 0..D {
                     row[q] = sp * zm[q] + arow[q];
                 }
@@ -98,7 +117,7 @@ fn fused_mexp_mono<const D: usize>(spec: &SigSpec, a: &mut [f32], z: &[f32], ws:
         let dst = &mut a[ok..ok + cur_len * D];
         let src = if cur_in_h0 { &ws.h0[..cur_len] } else { &ws.h1[..cur_len] };
         for (p, &sp) in src.iter().enumerate() {
-            let row: &mut [f32; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
+            let row: &mut [E; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
             for q in 0..D {
                 row[q] += sp * z[q];
             }
@@ -110,7 +129,10 @@ fn fused_mexp_mono<const D: usize>(spec: &SigSpec, a: &mut [f32], z: &[f32], ws:
     }
 }
 
-fn fused_mexp_generic(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+/// Runtime-`d` forward body: the same Horner scheme with a runtime channel
+/// trip count. The innermost loops stay contiguous over the fastest axis,
+/// so they vectorise for any `d`.
+pub fn fused_mexp_generic<E: Elem>(spec: &SigSpec, a: &mut [E], z: &[E], ws: &mut Workspace<E>) {
     let d = spec.d();
     let n = spec.depth();
     debug_assert_eq!(a.len(), spec.sig_len());
@@ -172,7 +194,7 @@ fn fused_mexp_generic(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspa
 /// Here the ⊗ factor is on the *left*, so the inner loops already run over
 /// the long (`cur_len`) axis contiguously and the generic version
 /// vectorises as-is; no per-`d` monomorphisation needed (§Perf).
-pub fn fused_mexp_left(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Workspace) {
+pub fn fused_mexp_left<E: Elem>(spec: &SigSpec, a: &mut [E], z: &[E], ws: &mut Workspace<E>) {
     let d = spec.d();
     let n = spec.depth();
     debug_assert_eq!(a.len(), spec.sig_len());
@@ -225,12 +247,12 @@ pub fn fused_mexp_left(spec: &SigSpec, a: &mut [f32], z: &[f32], ws: &mut Worksp
 }
 
 /// Out-of-place fused multiply-exponentiate: `out = a ⊠ exp(z)`.
-pub fn fused_mexp_into(
+pub fn fused_mexp_into<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    out: &mut [f32],
-    ws: &mut Workspace,
+    a: &[E],
+    z: &[E],
+    out: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     out.copy_from_slice(a);
     fused_mexp(spec, out, z, ws);
@@ -246,39 +268,44 @@ pub fn fused_mexp_into(
 /// composition of ⊠-VJP and exp-VJP pays (App. C: the backward "can be
 /// computed using the same subroutines, including the fused
 /// multiply-exponentiate"). §Perf logs ~10× on the (7,7) backward.
-pub fn fused_mexp_vjp(
+///
+/// Dispatch mirrors the forward: `const D` bodies for `d ≤ 8`
+/// (benchmark-arbitrated crossover), [`fused_mexp_vjp_dyn`] — the same op
+/// order with a runtime trip count — for every larger `d`. There is no
+/// dimension at which the backward falls off the fast Horner path.
+pub fn fused_mexp_vjp<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    g: &[f32],
-    ga: &mut [f32],
-    gz: &mut [f32],
-    ws: &mut Workspace,
+    a: &[E],
+    z: &[E],
+    g: &[E],
+    ga: &mut [E],
+    gz: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     match spec.d() {
-        1 => fused_mexp_vjp_mono::<1>(spec, a, z, g, ga, gz, ws),
-        2 => fused_mexp_vjp_mono::<2>(spec, a, z, g, ga, gz, ws),
-        3 => fused_mexp_vjp_mono::<3>(spec, a, z, g, ga, gz, ws),
-        4 => fused_mexp_vjp_mono::<4>(spec, a, z, g, ga, gz, ws),
-        5 => fused_mexp_vjp_mono::<5>(spec, a, z, g, ga, gz, ws),
-        6 => fused_mexp_vjp_mono::<6>(spec, a, z, g, ga, gz, ws),
-        7 => fused_mexp_vjp_mono::<7>(spec, a, z, g, ga, gz, ws),
-        8 => fused_mexp_vjp_mono::<8>(spec, a, z, g, ga, gz, ws),
-        _ => fused_mexp_vjp_reference(spec, a, z, g, ga, gz, ws),
+        1 => fused_mexp_vjp_mono::<E, 1>(spec, a, z, g, ga, gz, ws),
+        2 => fused_mexp_vjp_mono::<E, 2>(spec, a, z, g, ga, gz, ws),
+        3 => fused_mexp_vjp_mono::<E, 3>(spec, a, z, g, ga, gz, ws),
+        4 => fused_mexp_vjp_mono::<E, 4>(spec, a, z, g, ga, gz, ws),
+        5 => fused_mexp_vjp_mono::<E, 5>(spec, a, z, g, ga, gz, ws),
+        6 => fused_mexp_vjp_mono::<E, 6>(spec, a, z, g, ga, gz, ws),
+        7 => fused_mexp_vjp_mono::<E, 7>(spec, a, z, g, ga, gz, ws),
+        8 => fused_mexp_vjp_mono::<E, 8>(spec, a, z, g, ga, gz, ws),
+        _ => fused_mexp_vjp_dyn(spec, a, z, g, ga, gz, ws),
     }
 }
 
-fn fused_mexp_vjp_mono<const D: usize>(
+fn fused_mexp_vjp_mono<E: Elem, const D: usize>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    g: &[f32],
-    ga: &mut [f32],
-    gz: &mut [f32],
-    ws: &mut Workspace,
+    a: &[E],
+    z: &[E],
+    g: &[E],
+    ga: &mut [E],
+    gz: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     let n = spec.depth();
-    let z: &[f32; D] = z.try_into().expect("z has D entries");
+    let z: &[E; D] = z.try_into().expect("z has D entries");
     stage_zdiv(spec, z, ws);
     // Level 1: C_1 = A_1 + z.
     for q in 0..D {
@@ -302,11 +329,11 @@ fn fused_mexp_vjp_mono<const D: usize>(
             let (lo, hi) = ws.t2.split_at_mut(oi);
             let src = &lo[spec.off(i - 1)..spec.off(i - 1) + cur_len];
             let dst = &mut hi[..li];
-            let zm: &[f32; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
+            let zm: &[E; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
             let ai = &a[oi..oi + li];
             for (p, &sp) in src.iter().enumerate() {
-                let row: &mut [f32; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
-                let arow: &[f32; D] = (&ai[p * D..(p + 1) * D]).try_into().unwrap();
+                let row: &mut [E; D] = (&mut dst[p * D..(p + 1) * D]).try_into().unwrap();
+                let arow: &[E; D] = (&ai[p * D..(p + 1) * D]).try_into().unwrap();
                 for q in 0..D {
                     row[q] = sp * zm[q] + arow[q];
                 }
@@ -324,8 +351,8 @@ fn fused_mexp_vjp_mono<const D: usize>(
         let bk1 = &ws.t2[spec.off(k - 1)..spec.off(k - 1) + cur_len];
         let gb = &mut ws.h0[..cur_len];
         for (p, gbp) in gb.iter_mut().enumerate() {
-            let row: &[f32; D] = (&gk[p * D..(p + 1) * D]).try_into().unwrap();
-            let mut acc = 0.0f32;
+            let row: &[E; D] = (&gk[p * D..(p + 1) * D]).try_into().unwrap();
+            let mut acc = E::ZERO;
             let bp = bk1[p];
             for q in 0..D {
                 acc += row[q] * z[q];
@@ -338,8 +365,8 @@ fn fused_mexp_vjp_mono<const D: usize>(
         let mut len_i = cur_len; // length of B_i for current i (= d^i)
         for i in (2..k).rev() {
             let m = k - i + 1;
-            let inv_m = 1.0 / m as f32;
-            let zm: &[f32; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
+            let inv_m = E::recip_usize(m);
+            let zm: &[E; D] = (&ws.zdiv[(m - 1) * D..m * D]).try_into().unwrap();
             let oi = spec.off(i);
             let prev_len = len_i / D;
             let b_prev = &ws.t2[spec.off(i - 1)..spec.off(i - 1) + prev_len];
@@ -356,11 +383,11 @@ fn fused_mexp_vjp_mono<const D: usize>(
             }
             // gB_{i-1}[p] = Σ_q gB_i[p,q] zm[q];
             // gz[q] += inv_m * Σ_p B_{i-1}[p] gB_i[p,q].
-            let mut gz_acc = [0.0f32; D];
+            let mut gz_acc = [E::ZERO; D];
             for (p, gbp) in gb_prev.iter_mut().enumerate() {
-                let row: &[f32; D] = (&gb_i[p * D..(p + 1) * D]).try_into().unwrap();
+                let row: &[E; D] = (&gb_i[p * D..(p + 1) * D]).try_into().unwrap();
                 let bp = b_prev[p];
-                let mut acc = 0.0f32;
+                let mut acc = E::ZERO;
                 for q in 0..D {
                     acc += row[q] * zm[q];
                     gz_acc[q] += bp * row[q];
@@ -375,7 +402,7 @@ fn fused_mexp_vjp_mono<const D: usize>(
         }
         // Innermost: B_1 = z/k + A_1.
         let gb1 = if cur_in_h0 { &ws.h0[..D] } else { &ws.h1[..D] };
-        let inv_k = 1.0 / k as f32;
+        let inv_k = E::recip_usize(k);
         for q in 0..D {
             ga[q] += gb1[q];
             gz[q] += inv_k * gb1[q];
@@ -383,20 +410,145 @@ fn fused_mexp_vjp_mono<const D: usize>(
     }
 }
 
-/// Reference VJP via explicit `exp` + ⊠-VJP composition (used by tests to
-/// pin the fast path, and as the fallback for `d > 8`).
-pub fn fused_mexp_vjp_reference(
+/// Runtime-`d` fast VJP: a line-for-line transcription of the mono body
+/// with a runtime channel trip count. The only structural difference is
+/// the per-step `gz` accumulator, which lives in `ws.t1[..d]` instead of a
+/// `[E; D]` stack array — it is zeroed and drained at exactly the same
+/// points, so the floating-point op order (and hence every rounding) is
+/// identical to the mono body's. The innermost loops run contiguously over
+/// the fastest (`q`) axis and vectorise for any `d`. This is what lets
+/// `ExecPlanner` plan `LaneFused` backward at `d > 8`.
+pub fn fused_mexp_vjp_dyn<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    g: &[f32],
-    ga: &mut [f32],
-    gz: &mut [f32],
-    ws: &mut Workspace,
+    a: &[E],
+    z: &[E],
+    g: &[E],
+    ga: &mut [E],
+    gz: &mut [E],
+    ws: &mut Workspace<E>,
+) {
+    let d = spec.d();
+    let n = spec.depth();
+    debug_assert_eq!(z.len(), d);
+    stage_zdiv(spec, z, ws);
+    // Level 1: C_1 = A_1 + z.
+    for q in 0..d {
+        ga[q] += g[q];
+        gz[q] += g[q];
+    }
+    for k in (2..=n).rev() {
+        // Recompute the forward Horner chain for level k, storing B_i at
+        // t2[off(i)..] (B_i has exactly level-i length).
+        {
+            let b1 = &mut ws.t2[..d];
+            let zk = &ws.zdiv[(k - 1) * d..k * d];
+            for ((bv, &zv), &av) in b1.iter_mut().zip(zk).zip(&a[..d]) {
+                *bv = zv + av;
+            }
+        }
+        let mut cur_len = d;
+        for i in 2..k {
+            let m = k - i + 1;
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (lo, hi) = ws.t2.split_at_mut(oi);
+            let src = &lo[spec.off(i - 1)..spec.off(i - 1) + cur_len];
+            let dst = &mut hi[..li];
+            let zm = &ws.zdiv[(m - 1) * d..m * d];
+            let ai = &a[oi..oi + li];
+            for (p, &sp) in src.iter().enumerate() {
+                let row = &mut dst[p * d..(p + 1) * d];
+                let arow = &ai[p * d..(p + 1) * d];
+                for q in 0..d {
+                    row[q] = sp * zm[q] + arow[q];
+                }
+            }
+            cur_len *= d;
+        }
+        // Unwind. Final step: C_k = B_{k-1} ⊗ z + A_k.
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let gk = &g[ok..ok + lk];
+        for (x, &gv) in ga[ok..ok + lk].iter_mut().zip(gk) {
+            *x += gv;
+        }
+        // gB_{k-1}[p] = Σ_q gk[p,q] z[q];  gz[q] += Σ_p B_{k-1}[p] gk[p,q].
+        let bk1 = &ws.t2[spec.off(k - 1)..spec.off(k - 1) + cur_len];
+        let gb = &mut ws.h0[..cur_len];
+        for (p, gbp) in gb.iter_mut().enumerate() {
+            let row = &gk[p * d..(p + 1) * d];
+            let mut acc = E::ZERO;
+            let bp = bk1[p];
+            for q in 0..d {
+                acc += row[q] * z[q];
+                gz[q] += bp * row[q];
+            }
+            *gbp = acc;
+        }
+        // Middle steps: B_i = B_{i-1} ⊗ z/m + A_i, i = k-1 .. 2.
+        let mut cur_in_h0 = true;
+        let mut len_i = cur_len; // length of B_i for current i (= d^i)
+        for i in (2..k).rev() {
+            let m = k - i + 1;
+            let inv_m = E::recip_usize(m);
+            let oi = spec.off(i);
+            let prev_len = len_i / d;
+            let (gb_i, gb_prev) = if cur_in_h0 {
+                let (h0, h1) = (&mut ws.h0, &mut ws.h1);
+                (&h0[..len_i], &mut h1[..prev_len])
+            } else {
+                let (h0, h1) = (&mut ws.h0, &mut ws.h1);
+                (&h1[..len_i], &mut h0[..prev_len])
+            };
+            let zm = &ws.zdiv[(m - 1) * d..m * d];
+            let b_prev = &ws.t2[spec.off(i - 1)..spec.off(i - 1) + prev_len];
+            // gA_i += gB_i.
+            for (x, &gv) in ga[oi..oi + len_i].iter_mut().zip(gb_i) {
+                *x += gv;
+            }
+            // gB_{i-1}[p] = Σ_q gB_i[p,q] zm[q];
+            // gz[q] += inv_m * Σ_p B_{i-1}[p] gB_i[p,q].
+            let gz_acc = &mut ws.t1[..d];
+            gz_acc.fill(E::ZERO);
+            for (p, gbp) in gb_prev.iter_mut().enumerate() {
+                let row = &gb_i[p * d..(p + 1) * d];
+                let bp = b_prev[p];
+                let mut acc = E::ZERO;
+                for q in 0..d {
+                    acc += row[q] * zm[q];
+                    gz_acc[q] += bp * row[q];
+                }
+                *gbp = acc;
+            }
+            for q in 0..d {
+                gz[q] += inv_m * gz_acc[q];
+            }
+            cur_in_h0 = !cur_in_h0;
+            len_i = prev_len;
+        }
+        // Innermost: B_1 = z/k + A_1.
+        let gb1 = if cur_in_h0 { &ws.h0[..d] } else { &ws.h1[..d] };
+        let inv_k = E::recip_usize(k);
+        for q in 0..d {
+            ga[q] += gb1[q];
+            gz[q] += inv_k * gb1[q];
+        }
+    }
+}
+
+/// Reference VJP via explicit `exp` + ⊠-VJP composition (used by tests to
+/// pin the fast paths; no longer on any dispatch route).
+pub fn fused_mexp_vjp_reference<E: Elem>(
+    spec: &SigSpec,
+    a: &[E],
+    z: &[E],
+    g: &[E],
+    ga: &mut [E],
+    gz: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     // E = exp(z).
     exp_into(spec, z, &mut ws.t0);
-    ws.t1.fill(0.0);
+    ws.t1.fill(E::ZERO);
     // Split borrows: mul_vjp(a, E, g) -> ga, gE(ws.t1).
     {
         let (e, ge) = (&ws.t0, &mut ws.t1);
@@ -406,12 +558,12 @@ pub fn fused_mexp_vjp_reference(
 }
 
 /// Convenience: `exp(z) ⊠ a` out of place via [`fused_mexp_left`].
-pub fn fused_mexp_left_into(
+pub fn fused_mexp_left_into<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    out: &mut [f32],
-    ws: &mut Workspace,
+    a: &[E],
+    z: &[E],
+    out: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     out.copy_from_slice(a);
     fused_mexp_left(spec, out, z, ws);
@@ -420,12 +572,12 @@ pub fn fused_mexp_left_into(
 /// Reference (non-fused) composition used by the baselines and the tests:
 /// `out = a ⊠ exp(z)` via an explicit exponential then a full ⊠.
 /// This is the "conventional way" of App. A.1.1, costing `C(d, N)`.
-pub fn unfused_mexp_into(
+pub fn unfused_mexp_into<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    z: &[f32],
-    out: &mut [f32],
-    ws: &mut Workspace,
+    a: &[E],
+    z: &[E],
+    out: &mut [E],
+    ws: &mut Workspace<E>,
 ) {
     exp_into(spec, z, &mut ws.t0);
     // out = a ⊠ E, written level-by-level (no fusion).
@@ -520,7 +672,7 @@ mod tests {
     fn depth1_fused_is_vector_add() {
         let s = SigSpec::new(4, 1).unwrap();
         let mut ws = Workspace::new(&s);
-        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0];
         fused_mexp(&s, &mut a, &[10.0, 20.0, 30.0, 40.0], &mut ws);
         assert_eq!(a, vec![11.0, 22.0, 33.0, 44.0]);
     }
@@ -595,6 +747,104 @@ mod tests {
             fused_mexp_vjp_reference(&s, &a, &z, &gv, &mut ga_ref, &mut gz_ref, &mut ws);
             assert_close(&ga_fast, &ga_ref, 1e-4, 1e-5);
             assert_close(&gz_fast, &gz_ref, 1e-3, 1e-4);
+        });
+    }
+
+    #[test]
+    fn dyn_vjp_is_bitwise_identical_to_mono_in_both_precisions() {
+        // The dyn body is a transcription of the mono body: same op order,
+        // same roundings, so inside the mono window (d ≤ 8) the two must
+        // agree to the last bit — in f32 and in f64.
+        property("dyn vjp ≡ mono vjp (bitwise)", 24, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 5 });
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let a = g.normal_vec(s.sig_len(), 0.6);
+            let z = g.normal_vec(d, 0.6);
+            let gv = g.normal_vec(s.sig_len(), 1.0);
+
+            let mut ws = Workspace::new(&s);
+            let mut ga_mono = s.zeros();
+            let mut gz_mono = vec![0.0f32; d];
+            fused_mexp_vjp(&s, &a, &z, &gv, &mut ga_mono, &mut gz_mono, &mut ws);
+            let mut ga_dyn = s.zeros();
+            let mut gz_dyn = vec![0.0f32; d];
+            fused_mexp_vjp_dyn(&s, &a, &z, &gv, &mut ga_dyn, &mut gz_dyn, &mut ws);
+            assert_eq!(ga_dyn, ga_mono, "f32 ga diverges at d={d} n={n}");
+            assert_eq!(gz_dyn, gz_mono, "f32 gz diverges at d={d} n={n}");
+
+            let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+            let z64: Vec<f64> = z.iter().map(|&v| v as f64).collect();
+            let g64: Vec<f64> = gv.iter().map(|&v| v as f64).collect();
+            let mut ws64 = Workspace::<f64>::new(&s);
+            let mut ga_mono64 = s.zeros_elem::<f64>();
+            let mut gz_mono64 = vec![0.0f64; d];
+            fused_mexp_vjp(&s, &a64, &z64, &g64, &mut ga_mono64, &mut gz_mono64, &mut ws64);
+            let mut ga_dyn64 = s.zeros_elem::<f64>();
+            let mut gz_dyn64 = vec![0.0f64; d];
+            fused_mexp_vjp_dyn(&s, &a64, &z64, &g64, &mut ga_dyn64, &mut gz_dyn64, &mut ws64);
+            assert_eq!(ga_dyn64, ga_mono64, "f64 ga diverges at d={d} n={n}");
+            assert_eq!(gz_dyn64, gz_mono64, "f64 gz diverges at d={d} n={n}");
+        });
+    }
+
+    #[test]
+    fn dyn_vjp_matches_reference_beyond_the_mono_window() {
+        // d > 8 is dyn's home turf: check against the exp + ⊠ composition,
+        // which takes a completely different computational route.
+        for &(d, n) in &[(9usize, 3usize), (12, 3), (20, 2)] {
+            let s = SigSpec::new(d, n).unwrap();
+            let mut rng = crate::substrate::rng::Rng::new(17 + d as u64);
+            let a = rng.normal_vec(s.sig_len(), 0.5);
+            let z = rng.normal_vec(d, 0.5);
+            let gv = rng.normal_vec(s.sig_len(), 1.0);
+            let mut ws = Workspace::new(&s);
+            let mut ga_dyn = s.zeros();
+            let mut gz_dyn = vec![0.0f32; d];
+            fused_mexp_vjp(&s, &a, &z, &gv, &mut ga_dyn, &mut gz_dyn, &mut ws);
+            let mut ga_ref = s.zeros();
+            let mut gz_ref = vec![0.0f32; d];
+            fused_mexp_vjp_reference(&s, &a, &z, &gv, &mut ga_ref, &mut gz_ref, &mut ws);
+            assert_close(&ga_dyn, &ga_ref, 1e-4, 1e-5);
+            assert_close(&gz_dyn, &gz_ref, 1e-3, 1e-4);
+
+            // And the f64 instantiation agrees with its own reference far
+            // more tightly (double-precision accumulation).
+            let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+            let z64: Vec<f64> = z.iter().map(|&v| v as f64).collect();
+            let g64: Vec<f64> = gv.iter().map(|&v| v as f64).collect();
+            let mut ws64 = Workspace::<f64>::new(&s);
+            let mut ga_dyn64 = s.zeros_elem::<f64>();
+            let mut gz_dyn64 = vec![0.0f64; d];
+            fused_mexp_vjp(&s, &a64, &z64, &g64, &mut ga_dyn64, &mut gz_dyn64, &mut ws64);
+            let mut ga_ref64 = s.zeros_elem::<f64>();
+            let mut gz_ref64 = vec![0.0f64; d];
+            fused_mexp_vjp_reference(&s, &a64, &z64, &g64, &mut ga_ref64, &mut gz_ref64, &mut ws64);
+            for (x, y) in ga_dyn64.iter().zip(&ga_ref64) {
+                assert!((x - y).abs() < 1e-10 * (1.0 + y.abs()), "d={d}: {x} vs {y}");
+            }
+            for (x, y) in gz_dyn64.iter().zip(&gz_ref64) {
+                assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "d={d}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_forward_is_bitwise_identical_to_mono() {
+        property("generic fwd ≡ mono fwd (bitwise)", 20, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 5 });
+            g.label(format!("d={d} n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let mut ws = Workspace::new(&s);
+            let a = g.normal_vec(s.sig_len(), 0.8);
+            let z = g.normal_vec(d, 0.8);
+            let mut mono = a.clone();
+            fused_mexp(&s, &mut mono, &z, &mut ws);
+            let mut gen_out = a.clone();
+            fused_mexp_generic(&s, &mut gen_out, &z, &mut ws);
+            assert_eq!(gen_out, mono);
         });
     }
 

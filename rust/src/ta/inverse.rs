@@ -12,13 +12,14 @@
 //! scalar term). For *signatures* specifically, the paper's identity
 //! `Sig(x_1..x_L)^{-1} = Sig(x_L..x_1)` (§5.4) and the incremental
 //! `exp(-z) ⊠ ·` update are cheaper; this general routine is used for
-//! arbitrary group elements and as a test oracle.
+//! arbitrary group elements and as a test oracle. Generic over the sealed
+//! element trait [`Elem`] (f32/f64).
 
 use super::mul::{mul_nounit_into, mul_nounit_vjp};
-use super::SigSpec;
+use super::{Elem, SigSpec};
 
 /// `out = x^{-1}` (non-unit parts; the implicit units multiply to 1).
-pub fn inverse_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
+pub fn inverse_into<E: Elem>(spec: &SigSpec, x: &[E], out: &mut [E]) {
     let n = spec.depth();
     debug_assert_eq!(x.len(), spec.sig_len());
     debug_assert_eq!(out.len(), spec.sig_len());
@@ -29,7 +30,7 @@ pub fn inverse_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
     if n == 1 {
         return;
     }
-    let mut xt = spec.zeros();
+    let mut xt = spec.zeros_elem::<E>();
     for _ in 2..=n {
         mul_nounit_into(spec, x, out, &mut xt);
         for ((o, &xv), &pv) in out.iter_mut().zip(x).zip(xt.iter()) {
@@ -39,8 +40,8 @@ pub fn inverse_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
 }
 
 /// Allocating wrapper around [`inverse_into`].
-pub fn inverse(spec: &SigSpec, x: &[f32]) -> Vec<f32> {
-    let mut out = spec.zeros();
+pub fn inverse<E: Elem>(spec: &SigSpec, x: &[E]) -> Vec<E> {
+    let mut out = spec.zeros_elem::<E>();
     inverse_into(spec, x, &mut out);
     out
 }
@@ -48,16 +49,16 @@ pub fn inverse(spec: &SigSpec, x: &[f32]) -> Vec<f32> {
 /// VJP of `y = x^{-1}`: accumulates `∂L/∂x` into `gx` given `g = ∂L/∂y`.
 ///
 /// Replays the fixpoint storing each `t_i`, then reverses.
-pub fn inverse_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
+pub fn inverse_vjp<E: Elem>(spec: &SigSpec, x: &[E], g: &[E], gx: &mut [E]) {
     let n = spec.depth();
     // Forward replay.
-    let mut t_hist: Vec<Vec<f32>> = Vec::with_capacity(n);
-    let mut t: Vec<f32> = x.iter().map(|&v| -v).collect();
+    let mut t_hist: Vec<Vec<E>> = Vec::with_capacity(n);
+    let mut t: Vec<E> = x.iter().map(|&v| -v).collect();
     t_hist.push(t.clone());
-    let mut xt = spec.zeros();
+    let mut xt = spec.zeros_elem::<E>();
     for _ in 2..=n {
         mul_nounit_into(spec, x, &t, &mut xt);
-        let mut t_new = spec.zeros();
+        let mut t_new = spec.zeros_elem::<E>();
         for ((o, &xv), &pv) in t_new.iter_mut().zip(x).zip(xt.iter()) {
             *o = -(xv + pv);
         }
@@ -68,11 +69,11 @@ pub fn inverse_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
     let mut gt = g.to_vec();
     for i in (2..=n).rev() {
         let t_prev = &t_hist[i - 2];
-        let neg_gt: Vec<f32> = gt.iter().map(|&v| -v).collect();
+        let neg_gt: Vec<E> = gt.iter().map(|&v| -v).collect();
         for (o, &gv) in gx.iter_mut().zip(&neg_gt) {
             *o += gv;
         }
-        let mut gt_prev = spec.zeros();
+        let mut gt_prev = spec.zeros_elem::<E>();
         mul_nounit_vjp(spec, x, t_prev, &neg_gt, gx, &mut gt_prev);
         gt = gt_prev;
     }
@@ -120,7 +121,20 @@ mod tests {
     #[test]
     fn inverse_depth1_is_negation() {
         let s = SigSpec::new(3, 1).unwrap();
-        assert_eq!(inverse(&s, &[1.0, -2.0, 3.0]), vec![-1.0, 2.0, -3.0]);
+        assert_eq!(inverse(&s, &[1.0f32, -2.0, 3.0]), vec![-1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn inverse_f64_times_self_is_identity() {
+        let s = SigSpec::new(3, 4).unwrap();
+        let mut rng = crate::substrate::rng::Rng::new(9);
+        let x32 = rng.normal_vec(s.sig_len(), 0.5);
+        let x: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+        let inv = inverse(&s, &x);
+        let prod = mul(&s, &x, &inv);
+        for (i, v) in prod.iter().enumerate() {
+            assert!(v.abs() < 1e-10, "prod[{i}] = {v}");
+        }
     }
 
     #[test]

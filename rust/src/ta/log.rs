@@ -10,23 +10,26 @@
 //!
 //! where each `r_m = (s_m, t_m)` is a scalar plus a non-unit tensor and
 //! `x ⊠ (s + t) = s·x + x ⊠_nounit t`. This costs `N-1` non-unit products.
+//! All routines are generic over the sealed element trait [`Elem`]
+//! (f32/f64); the default type parameter keeps existing f32 call sites
+//! compiling unchanged.
 
 use super::mul::{mul_nounit_into, mul_nounit_vjp};
-use super::SigSpec;
+use super::{Elem, SigSpec};
 
 /// Reusable scratch for [`log_into_ws`]: the Horner recursion's running
 /// tensor `t` and the product buffer `x ⊠_nounit t`. One workspace serves
 /// any number of calls against the same spec — the batched logsignature
 /// epilogue and `Path::logsig_query_into` reuse one across lanes/queries
 /// instead of allocating two `sig_len` buffers per log.
-pub struct LogWorkspace {
-    t: Vec<f32>,
-    xt: Vec<f32>,
+pub struct LogWorkspace<E: Elem = f32> {
+    t: Vec<E>,
+    xt: Vec<E>,
 }
 
-impl LogWorkspace {
-    pub fn new(spec: &SigSpec) -> LogWorkspace {
-        LogWorkspace { t: spec.zeros(), xt: spec.zeros() }
+impl<E: Elem> LogWorkspace<E> {
+    pub fn new(spec: &SigSpec) -> LogWorkspace<E> {
+        LogWorkspace { t: spec.zeros_elem::<E>(), xt: spec.zeros_elem::<E>() }
     }
 
     /// Whether this workspace was sized for `spec`.
@@ -36,15 +39,15 @@ impl LogWorkspace {
 }
 
 /// `out = log(x)` where `x` is the non-unit part of a group-like element.
-pub fn log_into(spec: &SigSpec, x: &[f32], out: &mut [f32]) {
-    let mut ws = LogWorkspace::new(spec);
+pub fn log_into<E: Elem>(spec: &SigSpec, x: &[E], out: &mut [E]) {
+    let mut ws = LogWorkspace::<E>::new(spec);
     log_into_ws(spec, x, out, &mut ws);
 }
 
 /// [`log_into`] reusing caller-owned scratch: identical op sequence (the
 /// workspace buffers are fully (re)initialised before use), so results
 /// are bitwise identical however the workspace was previously used.
-pub fn log_into_ws(spec: &SigSpec, x: &[f32], out: &mut [f32], ws: &mut LogWorkspace) {
+pub fn log_into_ws<E: Elem>(spec: &SigSpec, x: &[E], out: &mut [E], ws: &mut LogWorkspace<E>) {
     let n = spec.depth();
     debug_assert_eq!(x.len(), spec.sig_len());
     debug_assert_eq!(out.len(), spec.sig_len());
@@ -54,20 +57,20 @@ pub fn log_into_ws(spec: &SigSpec, x: &[f32], out: &mut [f32], ws: &mut LogWorks
         return;
     }
     // r = (s, t); start at r_N = (1/N, 0).
-    let mut s = 1.0 / n as f32;
+    let mut s = E::recip_usize(n);
     let t = &mut ws.t;
     let xt = &mut ws.xt;
-    t.fill(0.0);
+    t.fill(E::ZERO);
     for m in (1..n).rev() {
         // r_m = 1/m - x ⊠ r_{m+1} = (1/m, -(s·x + x ⊠_nounit t)).
         mul_nounit_into(spec, x, t, xt);
         for ((tv, &xv), &pv) in t.iter_mut().zip(x).zip(xt.iter()) {
             *tv = -(s * xv + pv);
         }
-        s = 1.0 / m as f32;
+        s = E::recip_usize(m);
     }
     // log = x ⊠ r_1 = s·x + x ⊠_nounit t   (s = 1 here).
-    debug_assert_eq!(s, 1.0);
+    debug_assert_eq!(s, E::ONE);
     mul_nounit_into(spec, x, t, out);
     for (ov, &xv) in out.iter_mut().zip(x) {
         *ov += s * xv;
@@ -75,8 +78,8 @@ pub fn log_into_ws(spec: &SigSpec, x: &[f32], out: &mut [f32], ws: &mut LogWorks
 }
 
 /// Allocating wrapper around [`log_into`].
-pub fn log(spec: &SigSpec, x: &[f32]) -> Vec<f32> {
-    let mut out = spec.zeros();
+pub fn log<E: Elem>(spec: &SigSpec, x: &[E]) -> Vec<E> {
+    let mut out = spec.zeros_elem::<E>();
     log_into(spec, x, &mut out);
     out
 }
@@ -84,7 +87,7 @@ pub fn log(spec: &SigSpec, x: &[f32]) -> Vec<f32> {
 /// VJP of `y = log(x)`: accumulates `∂L/∂x` into `gx` given `g = ∂L/∂y`.
 ///
 /// Re-runs the Horner recursion storing each `t_m`, then reverses it.
-pub fn log_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
+pub fn log_vjp<E: Elem>(spec: &SigSpec, x: &[E], g: &[E], gx: &mut [E]) {
     let n = spec.depth();
     if n == 1 {
         for (o, &gv) in gx.iter_mut().zip(g) {
@@ -94,14 +97,14 @@ pub fn log_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
     }
     // Forward replay, storing t_{m} for m = N..1 (t_hist[0] = t_N = 0, ...,
     // t_hist[N-1] = t_1) and the scalars s_m = 1/m.
-    let mut t_hist: Vec<Vec<f32>> = Vec::with_capacity(n);
-    let mut t = spec.zeros();
+    let mut t_hist: Vec<Vec<E>> = Vec::with_capacity(n);
+    let mut t = spec.zeros_elem::<E>();
     t_hist.push(t.clone()); // t_N
-    let mut xt = spec.zeros();
+    let mut xt = spec.zeros_elem::<E>();
     for m in (1..n).rev() {
-        let s = 1.0 / (m + 1) as f32; // scalar of r_{m+1}
+        let s = E::recip_usize(m + 1); // scalar of r_{m+1}
         mul_nounit_into(spec, x, &t, &mut xt);
-        let mut t_new = spec.zeros();
+        let mut t_new = spec.zeros_elem::<E>();
         for (((tv, &xv), &pv), _) in t_new.iter_mut().zip(x).zip(xt.iter()).zip(0..) {
             *tv = -(s * xv + pv);
         }
@@ -112,20 +115,20 @@ pub fn log_vjp(spec: &SigSpec, x: &[f32], g: &[f32], gx: &mut [f32]) {
     let t_m = |m: usize| &t_hist[n - m];
 
     // Reverse: log = 1·x + x ⊠_nounit t_1.
-    let mut gt = spec.zeros(); // gradient wrt t_1
+    let mut gt = spec.zeros_elem::<E>(); // gradient wrt t_1
     for (o, &gv) in gx.iter_mut().zip(g) {
         *o += gv;
     }
     mul_nounit_vjp(spec, x, t_m(1), g, gx, &mut gt);
     // For m = 1..N-1: t_m = -(s_{m+1}·x + x ⊠_nounit t_{m+1}).
     for m in 1..n {
-        let s_next = 1.0 / (m + 1) as f32;
+        let s_next = E::recip_usize(m + 1);
         // gx += -s_next * gt ; (gx, gt_next) += vjp of x ⊠_nounit t_{m+1} with cotangent -gt.
-        let neg_gt: Vec<f32> = gt.iter().map(|&v| -v).collect();
+        let neg_gt: Vec<E> = gt.iter().map(|&v| -v).collect();
         for (o, &gv) in gx.iter_mut().zip(&neg_gt) {
             *o += s_next * gv;
         }
-        let mut gt_next = spec.zeros();
+        let mut gt_next = spec.zeros_elem::<E>();
         mul_nounit_vjp(spec, x, t_m(m + 1), &neg_gt, gx, &mut gt_next);
         gt = gt_next;
     }
@@ -159,8 +162,21 @@ mod tests {
         // d=1 group-likes are exp(z); log of arbitrary (x1, x2) at N=2 is
         // (x1, x2 - x1^2/2).
         let s = SigSpec::new(1, 2).unwrap();
-        let l = log(&s, &[3.0, 7.0]);
+        let l = log(&s, &[3.0f32, 7.0]);
         assert_close(&l, &[3.0, 7.0 - 4.5], 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn log_f64_agrees_with_f32_on_representable_inputs() {
+        let s = SigSpec::new(2, 4).unwrap();
+        let mut rng = crate::substrate::rng::Rng::new(11);
+        let x32 = rng.normal_vec(s.sig_len(), 0.5);
+        let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+        let l32 = log(&s, &x32);
+        let l64 = log(&s, &x64);
+        for (a, b) in l32.iter().zip(&l64) {
+            assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
+        }
     }
 
     #[test]
@@ -213,7 +229,7 @@ mod tests {
     fn log_workspace_fits_checks_spec() {
         let a = SigSpec::new(2, 3).unwrap();
         let b = SigSpec::new(3, 3).unwrap();
-        let ws = LogWorkspace::new(&a);
+        let ws: LogWorkspace = LogWorkspace::new(&a);
         assert!(ws.fits(&a));
         assert!(!ws.fits(&b));
     }

@@ -1,10 +1,18 @@
 //! The truncated tensor algebra `T^N(R^d) = prod_{k=1..N} (R^d)^{⊗k}`.
 //!
-//! Elements are stored as flat `[f32]` vectors: the depth-k level occupies
+//! Elements are stored as flat scalar vectors: the depth-k level occupies
 //! `d^k` contiguous entries, levels concatenated in increasing k. The
 //! scalar (k = 0) term is *implicit* and equals 1 for group-like elements
 //! (matching the paper's convention of omitting it, §2.1 fn. 2); operations
 //! that need it handle it explicitly.
+//!
+//! The element type is a first-class axis: every kernel is generic over the
+//! sealed [`Elem`] trait (`f32` or `f64`), with `f32` remaining the default
+//! (all pre-existing `&[f32]` call sites infer it unchanged). The kernels
+//! are also dimension-generic — the fused VJP has both `const D`
+//! monomorphised bodies (`d ≤ 8`) and a runtime-`d` body
+//! ([`fused::fused_mexp_vjp_dyn`]) replaying the identical op order, so the
+//! lane-fused backward engages at any `d`.
 //!
 //! Submodules implement the paper's operations:
 //! - [`mul`] — the truncated tensor product ⊠ (Chen product, §2.2) and its
@@ -23,7 +31,8 @@
 //! - [`log`] — the tensor logarithm (Horner series) and its VJP.
 //! - [`inverse`] — the group inverse (truncated Neumann series) and VJP.
 //! - [`opcount`] — the closed-form multiplication counts `F(d,N)`, `C(d,N)`
-//!   of App. A.1 plus instrumented counters validating them.
+//!   of App. A.1 plus instrumented counters validating them (forward *and*
+//!   fused-VJP, mono and runtime-`d` iteration spaces).
 
 pub mod batch;
 pub mod exp;
@@ -40,9 +49,169 @@ pub use inverse::{inverse, inverse_vjp};
 pub use log::{log, log_vjp};
 pub use mul::{mul, mul_into, mul_vjp};
 
+/// Element precision of a signature computation — the dtype axis threaded
+/// from the serving surface ([`crate::coordinator::Request`]) through the
+/// planner ([`crate::exec::WorkShape`]) down to the kernels. `F32` is the
+/// default everywhere and preserves the pre-dtype behavior bit-for-bit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    #[default]
+    F32,
+    F64,
+}
+
+impl Precision {
+    /// Stable small integer tag (used in shape keys / batch-queue keys so
+    /// f32 and f64 work never coalesces).
+    #[inline]
+    pub fn tag(self) -> u8 {
+        match self {
+            Precision::F32 => 0,
+            Precision::F64 => 1,
+        }
+    }
+
+    /// Bytes per element.
+    #[inline]
+    pub fn size_of(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// The scalar element type of the tensor algebra: `f32` or `f64`, sealed.
+///
+/// Generic kernel code uses only these operations (plus the arithmetic-op
+/// bounds), never `as` casts, so an `f32` instantiation performs exactly
+/// the operations the pre-generic `f32`-only code performed — the bitwise
+/// per-lane identity between scalar and batched kernels survives the
+/// genericisation, in both precisions.
+pub trait Elem:
+    sealed::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::iter::Sum<Self>
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// The dtype tag of this element type.
+    const PRECISION: Precision;
+
+    fn from_usize(v: usize) -> Self;
+    fn from_f32(v: f32) -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f32(self) -> f32;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+
+    /// `1/k` computed *in this precision* (so the f32 instantiation keeps
+    /// the exact `1.0f32 / k as f32` rounding the scalar kernels always
+    /// used — load-bearing for the bitwise-parity invariant).
+    #[inline]
+    fn recip_usize(k: usize) -> Self {
+        Self::ONE / Self::from_usize(k)
+    }
+}
+
+impl Elem for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const PRECISION: Precision = Precision::F32;
+
+    #[inline]
+    fn from_usize(v: usize) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+}
+
+impl Elem for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const PRECISION: Precision = Precision::F64;
+
+    #[inline]
+    fn from_usize(v: usize) -> f64 {
+        v as f64
+    }
+    #[inline]
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+}
+
 /// Shape metadata for signatures over `d` channels truncated at `depth`.
 ///
 /// Precomputes level offsets/lengths so hot loops never recompute powers.
+/// Carries the element [`Precision`] as metadata (defaulting to `F32`):
+/// the kernels take whatever slice type they are instantiated at, but the
+/// planning and serving layers key on `spec.dtype()` so mixed-precision
+/// work never shares a plan or a microbatch.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SigSpec {
     d: usize,
@@ -51,12 +220,19 @@ pub struct SigSpec {
     /// trailing sentinel equal to `len`.
     level_off: Vec<usize>,
     len: usize,
+    dtype: Precision,
 }
 
 impl SigSpec {
-    /// `d >= 1` channels, `depth >= 1`. Errors if the flattened signature
-    /// would overflow a reasonable memory bound (guards `d^depth`).
+    /// `d >= 1` channels, `depth >= 1`, `f32` elements. Errors if the
+    /// flattened signature would overflow a reasonable memory bound
+    /// (guards `d^depth`).
     pub fn new(d: usize, depth: usize) -> anyhow::Result<SigSpec> {
+        Self::with_dtype(d, depth, Precision::F32)
+    }
+
+    /// [`SigSpec::new`] with an explicit element precision.
+    pub fn with_dtype(d: usize, depth: usize, dtype: Precision) -> anyhow::Result<SigSpec> {
         anyhow::ensure!(d >= 1, "channels must be >= 1");
         anyhow::ensure!(depth >= 1, "depth must be >= 1");
         let mut level_off = Vec::with_capacity(depth + 1);
@@ -73,7 +249,7 @@ impl SigSpec {
             anyhow::ensure!(off <= 1 << 31, "signature of {} elements is too large", off);
         }
         level_off.push(off);
-        Ok(SigSpec { d, depth, level_off, len: off })
+        Ok(SigSpec { d, depth, level_off, len: off, dtype })
     }
 
     /// Number of channels d.
@@ -86,6 +262,12 @@ impl SigSpec {
     #[inline]
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// Element precision (metadata; defaults to `F32`).
+    #[inline]
+    pub fn dtype(&self) -> Precision {
+        self.dtype
     }
 
     /// Total flattened length `d + d^2 + ... + d^depth`
@@ -111,23 +293,29 @@ impl SigSpec {
 
     /// Borrow level `k` of a signature slice.
     #[inline]
-    pub fn level<'a>(&self, sig: &'a [f32], k: usize) -> &'a [f32] {
+    pub fn level<'a, E: Elem>(&self, sig: &'a [E], k: usize) -> &'a [E] {
         &sig[self.level_off[k - 1]..self.level_off[k]]
     }
 
     /// Mutably borrow level `k` of a signature slice.
     #[inline]
-    pub fn level_mut<'a>(&self, sig: &'a mut [f32], k: usize) -> &'a mut [f32] {
+    pub fn level_mut<'a, E: Elem>(&self, sig: &'a mut [E], k: usize) -> &'a mut [E] {
         &mut sig[self.level_off[k - 1]..self.level_off[k]]
     }
 
-    /// A zeroed signature buffer.
+    /// A zeroed `f32` signature buffer (the historical default; generic
+    /// code uses [`SigSpec::zeros_elem`]).
     pub fn zeros(&self) -> Vec<f32> {
         vec![0.0; self.len]
     }
 
+    /// A zeroed signature buffer of any element type.
+    pub fn zeros_elem<E: Elem>(&self) -> Vec<E> {
+        vec![E::ZERO; self.len]
+    }
+
     /// A spec for the same `d` at a shallower depth (used by log/inverse
-    /// internals and tests).
+    /// internals and tests). Preserves the dtype.
     pub fn truncate(&self, depth: usize) -> SigSpec {
         assert!(depth >= 1 && depth <= self.depth);
         SigSpec {
@@ -135,38 +323,40 @@ impl SigSpec {
             depth,
             level_off: self.level_off[..=depth].to_vec(),
             len: self.level_off[depth],
+            dtype: self.dtype,
         }
     }
 }
 
 /// Reusable scratch space for the algebra kernels, sized for one `SigSpec`.
 /// Hot loops (signature over a long stream) allocate one of these once.
-pub struct Workspace {
+/// Generic over the element type, defaulting to `f32`.
+pub struct Workspace<E: Elem = f32> {
     /// Ping/pong Horner buffers, each `d^(depth-1)` long.
-    pub h0: Vec<f32>,
-    pub h1: Vec<f32>,
+    pub h0: Vec<E>,
+    pub h1: Vec<E>,
     /// `z/m` staging, `d * depth` long (divided increments).
-    pub zdiv: Vec<f32>,
+    pub zdiv: Vec<E>,
     /// Signature-sized scratch buffers.
-    pub t0: Vec<f32>,
-    pub t1: Vec<f32>,
-    pub t2: Vec<f32>,
+    pub t0: Vec<E>,
+    pub t1: Vec<E>,
+    pub t2: Vec<E>,
 }
 
-impl Workspace {
-    pub fn new(spec: &SigSpec) -> Workspace {
+impl<E: Elem> Workspace<E> {
+    pub fn new(spec: &SigSpec) -> Workspace<E> {
         let horner = if spec.depth >= 2 {
             spec.level_len(spec.depth) / spec.d
         } else {
             spec.d
         };
         Workspace {
-            h0: vec![0.0; horner],
-            h1: vec![0.0; horner],
-            zdiv: vec![0.0; spec.d * spec.depth],
-            t0: vec![0.0; spec.len],
-            t1: vec![0.0; spec.len],
-            t2: vec![0.0; spec.len],
+            h0: vec![E::ZERO; horner],
+            h1: vec![E::ZERO; horner],
+            zdiv: vec![E::ZERO; spec.d * spec.depth],
+            t0: vec![E::ZERO; spec.len],
+            t1: vec![E::ZERO; spec.len],
+            t2: vec![E::ZERO; spec.len],
         }
     }
 }
@@ -211,6 +401,39 @@ mod tests {
     }
 
     #[test]
+    fn spec_dtype_metadata() {
+        let a = SigSpec::new(3, 4).unwrap();
+        assert_eq!(a.dtype(), Precision::F32);
+        let b = SigSpec::with_dtype(3, 4, Precision::F64).unwrap();
+        assert_eq!(b.dtype(), Precision::F64);
+        // Same shape, different dtype: distinct specs (never share a plan).
+        assert_ne!(a, b);
+        // Geometry is dtype-independent.
+        assert_eq!(a.sig_len(), b.sig_len());
+        assert_eq!(b.truncate(2).dtype(), Precision::F64);
+    }
+
+    #[test]
+    fn precision_tags_and_sizes() {
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_ne!(Precision::F32.tag(), Precision::F64.tag());
+        assert_eq!(Precision::F32.size_of(), 4);
+        assert_eq!(Precision::F64.size_of(), 8);
+        assert_eq!(<f32 as Elem>::PRECISION, Precision::F32);
+        assert_eq!(<f64 as Elem>::PRECISION, Precision::F64);
+    }
+
+    #[test]
+    fn elem_recip_matches_native_rounding() {
+        // The generic reciprocal must reproduce the historical per-dtype
+        // rounding exactly: 1.0f32 / k as f32 for f32.
+        for k in 1..=64usize {
+            assert_eq!(<f32 as Elem>::recip_usize(k), 1.0f32 / k as f32);
+            assert_eq!(<f64 as Elem>::recip_usize(k), 1.0f64 / k as f64);
+        }
+    }
+
+    #[test]
     fn level_views() {
         let s = SigSpec::new(2, 3).unwrap();
         let mut sig: Vec<f32> = (0..s.sig_len()).map(|i| i as f32).collect();
@@ -238,12 +461,12 @@ mod tests {
     #[test]
     fn workspace_sizes() {
         let s = SigSpec::new(3, 4).unwrap();
-        let w = Workspace::new(&s);
+        let w: Workspace = Workspace::new(&s);
         assert_eq!(w.h0.len(), 27); // d^(N-1)
         assert_eq!(w.zdiv.len(), 12);
         assert_eq!(w.t0.len(), s.sig_len());
         let s1 = SigSpec::new(3, 1).unwrap();
-        let w1 = Workspace::new(&s1);
+        let w1: Workspace<f64> = Workspace::new(&s1);
         assert_eq!(w1.h0.len(), 3);
     }
 }

@@ -5,14 +5,16 @@
 //!
 //! The inner `A_i ⊗ B_{k-i}` loops are plain outer products over flat
 //! slices; written so the innermost loop is a contiguous FMA over `B`'s
-//! trailing index (auto-vectorises well).
+//! trailing index (auto-vectorises well). All routines are generic over the
+//! sealed element trait [`Elem`] (f32/f64); `f32` call sites infer as
+//! before.
 
-use super::SigSpec;
+use super::{Elem, SigSpec};
 
 /// `out += a_i ⊗ b_j` where `a_i` has `la` entries and `b_j` has `lb`
 /// entries; `out` has `la * lb` entries.
 #[inline]
-pub(crate) fn outer_add(a: &[f32], b: &[f32], out: &mut [f32]) {
+pub(crate) fn outer_add<E: Elem>(a: &[E], b: &[E], out: &mut [E]) {
     debug_assert_eq!(out.len(), a.len() * b.len());
     let lb = b.len();
     for (p, &ap) in a.iter().enumerate() {
@@ -24,7 +26,7 @@ pub(crate) fn outer_add(a: &[f32], b: &[f32], out: &mut [f32]) {
 }
 
 /// Full ⊠ with implicit units: `out = a ⊠ b`. `out` may not alias inputs.
-pub fn mul_into(spec: &SigSpec, a: &[f32], b: &[f32], out: &mut [f32]) {
+pub fn mul_into<E: Elem>(spec: &SigSpec, a: &[E], b: &[E], out: &mut [E]) {
     let n = spec.depth();
     debug_assert_eq!(a.len(), spec.sig_len());
     debug_assert_eq!(b.len(), spec.sig_len());
@@ -46,8 +48,8 @@ pub fn mul_into(spec: &SigSpec, a: &[f32], b: &[f32], out: &mut [f32]) {
 }
 
 /// Allocating convenience wrapper around [`mul_into`].
-pub fn mul(spec: &SigSpec, a: &[f32], b: &[f32]) -> Vec<f32> {
-    let mut out = spec.zeros();
+pub fn mul<E: Elem>(spec: &SigSpec, a: &[E], b: &[E]) -> Vec<E> {
+    let mut out = spec.zeros_elem::<E>();
     mul_into(spec, a, b, &mut out);
     out
 }
@@ -56,7 +58,7 @@ pub fn mul(spec: &SigSpec, a: &[f32], b: &[f32]) -> Vec<f32> {
 ///
 /// Valid because `(a ⊠ b)_k` reads only `a_i` for `i <= k`: computing levels
 /// from `k = depth` downward never reads an already-overwritten level.
-pub fn mul_assign(spec: &SigSpec, a: &mut [f32], b: &[f32]) {
+pub fn mul_assign<E: Elem>(spec: &SigSpec, a: &mut [E], b: &[E]) {
     let n = spec.depth();
     for k in (1..=n).rev() {
         let ok = spec.off(k);
@@ -79,13 +81,13 @@ pub fn mul_assign(spec: &SigSpec, a: &mut [f32], b: &[f32]) {
 /// Like [`mul_into`] but treating both inputs as having *zero* scalar term
 /// (used by the log/inverse series): `out_k = Σ_{i=1}^{k-1} a_i ⊗ b_{k-i}`.
 /// Note `out_1 = 0`.
-pub fn mul_nounit_into(spec: &SigSpec, a: &[f32], b: &[f32], out: &mut [f32]) {
+pub fn mul_nounit_into<E: Elem>(spec: &SigSpec, a: &[E], b: &[E], out: &mut [E]) {
     let n = spec.depth();
     for k in 1..=n {
         let ok = spec.off(k);
         let lk = spec.level_len(k);
         let dst = &mut out[ok..ok + lk];
-        dst.fill(0.0);
+        dst.fill(E::ZERO);
         for i in 1..k {
             let (oi, li) = (spec.off(i), spec.level_len(i));
             let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
@@ -97,12 +99,12 @@ pub fn mul_nounit_into(spec: &SigSpec, a: &[f32], b: &[f32], out: &mut [f32]) {
 /// `ga_i[α] += Σ_β g[α,β] * b[β]` — contraction of the gradient of an outer
 /// product against the right factor. `g` is `(la, lb)` row-major.
 #[inline]
-pub(crate) fn contract_right_add(g: &[f32], b: &[f32], ga: &mut [f32]) {
+pub(crate) fn contract_right_add<E: Elem>(g: &[E], b: &[E], ga: &mut [E]) {
     let lb = b.len();
     debug_assert_eq!(g.len(), ga.len() * lb);
     for (p, gap) in ga.iter_mut().enumerate() {
         let row = &g[p * lb..(p + 1) * lb];
-        let mut acc = 0.0f32;
+        let mut acc = E::ZERO;
         for (q, &bq) in b.iter().enumerate() {
             acc += row[q] * bq;
         }
@@ -112,7 +114,7 @@ pub(crate) fn contract_right_add(g: &[f32], b: &[f32], ga: &mut [f32]) {
 
 /// `gb[β] += Σ_α g[α,β] * a[α]` — contraction against the left factor.
 #[inline]
-pub(crate) fn contract_left_add(g: &[f32], a: &[f32], gb: &mut [f32]) {
+pub(crate) fn contract_left_add<E: Elem>(g: &[E], a: &[E], gb: &mut [E]) {
     let lb = gb.len();
     debug_assert_eq!(g.len(), a.len() * lb);
     for (p, &ap) in a.iter().enumerate() {
@@ -125,7 +127,7 @@ pub(crate) fn contract_left_add(g: &[f32], a: &[f32], gb: &mut [f32]) {
 
 /// VJP of `out = a ⊠ b`: accumulates `∂L/∂a` into `ga` and `∂L/∂b` into
 /// `gb`, given `g = ∂L/∂out`.
-pub fn mul_vjp(spec: &SigSpec, a: &[f32], b: &[f32], g: &[f32], ga: &mut [f32], gb: &mut [f32]) {
+pub fn mul_vjp<E: Elem>(spec: &SigSpec, a: &[E], b: &[E], g: &[E], ga: &mut [E], gb: &mut [E]) {
     let n = spec.depth();
     for k in 1..=n {
         let ok = spec.off(k);
@@ -148,13 +150,13 @@ pub fn mul_vjp(spec: &SigSpec, a: &[f32], b: &[f32], g: &[f32], ga: &mut [f32], 
 }
 
 /// VJP of [`mul_nounit_into`] (no unit terms).
-pub fn mul_nounit_vjp(
+pub fn mul_nounit_vjp<E: Elem>(
     spec: &SigSpec,
-    a: &[f32],
-    b: &[f32],
-    g: &[f32],
-    ga: &mut [f32],
-    gb: &mut [f32],
+    a: &[E],
+    b: &[E],
+    g: &[E],
+    ga: &mut [E],
+    gb: &mut [E],
 ) {
     let n = spec.depth();
     for k in 2..=n {
@@ -182,7 +184,7 @@ mod tests {
     #[test]
     fn mul_depth1_is_addition() {
         let s = spec(3, 1);
-        let out = mul(&s, &[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]);
+        let out = mul(&s, &[1.0f32, 2.0, 3.0], &[10.0, 20.0, 30.0]);
         assert_eq!(out, vec![11.0, 22.0, 33.0]);
     }
 
@@ -190,7 +192,7 @@ mod tests {
     fn mul_d1_n2_by_hand() {
         // a = (a1, a2), b = (b1, b2): (a ⊠ b) = (a1+b1, a2+b2+a1*b1).
         let s = spec(1, 2);
-        let out = mul(&s, &[2.0, 3.0], &[5.0, 7.0]);
+        let out = mul(&s, &[2.0f32, 3.0], &[5.0, 7.0]);
         assert_eq!(out, vec![7.0, 3.0 + 7.0 + 10.0]);
     }
 
@@ -198,11 +200,22 @@ mod tests {
     fn mul_d2_n2_by_hand() {
         let s = spec(2, 2);
         // a1 = [1,2], a2 = zeros; b1 = [3,4], b2 = zeros.
-        let a = [1.0, 2.0, 0.0, 0.0, 0.0, 0.0];
-        let b = [3.0, 4.0, 0.0, 0.0, 0.0, 0.0];
+        let a = [1.0f32, 2.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [3.0f32, 4.0, 0.0, 0.0, 0.0, 0.0];
         let out = mul(&s, &a, &b);
         // Level 2 = a1 ⊗ b1 = [[3,4],[6,8]].
         assert_eq!(out, vec![4.0, 6.0, 3.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn mul_f64_matches_by_hand() {
+        // The f64 instantiation performs the same algebra (exactly, on
+        // integer-valued inputs).
+        let s = spec(2, 2);
+        let a = [1.0f64, 2.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [3.0f64, 4.0, 0.0, 0.0, 0.0, 0.0];
+        let out = mul(&s, &a, &b);
+        assert_eq!(out, vec![4.0f64, 6.0, 3.0, 4.0, 6.0, 8.0]);
     }
 
     #[test]
@@ -337,11 +350,11 @@ mod tests {
     #[test]
     fn vjp_accumulates_rather_than_overwrites() {
         let s = spec(2, 2);
-        let a = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
-        let b = [0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
-        let g = [0.0; 6];
-        let mut ga = vec![7.0; 6];
-        let mut gb = vec![9.0; 6];
+        let a = [1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [0.0f32, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let g = [0.0f32; 6];
+        let mut ga = vec![7.0f32; 6];
+        let mut gb = vec![9.0f32; 6];
         mul_vjp(&s, &a, &b, &g, &mut ga, &mut gb);
         assert_eq!(ga, vec![7.0; 6]);
         assert_eq!(gb, vec![9.0; 6]);

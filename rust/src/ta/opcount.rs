@@ -75,6 +75,99 @@ pub fn fused_muls_closed(d: u64, n: u64) -> u128 {
     (num / ((d - 1) * (d - 1))) as u128
 }
 
+/// `Fv(d, N)` — scalar multiplications of the fused Horner **VJP**
+/// (App. C), in the dimension-uniform accounting of iisignature's cost
+/// model: the backward replays each level-`k` forward chain and unwinds it
+/// with two multiplications per chain entry, so
+///
+/// ```text
+/// Fv(d,N) = d(N-1) + Σ_{k=2..N} [ Σ_{i=2..k-1} (3 d^i + d) + 2 d^k + d ]
+/// ```
+///
+/// (recompute `Σ d^i`, unwind `2 d^i + d` per middle step, `2 d^k` for the
+/// final step, `d` for the innermost `gz` drain). Like the forward count
+/// this is uniform in `d` — there is no term that depends on whether the
+/// kernel is monomorphised — which is what justifies dispatching the
+/// runtime-`d` body beyond the mono window.
+pub fn fused_vjp_muls(d: u64, n: u64) -> u128 {
+    let d128 = d as u128;
+    let mut total: u128 = d128 * (n - 1) as u128;
+    for k in 2..=n {
+        for i in 2..k {
+            // Recompute (1 mul per entry) + unwind middle step (2 muls per
+            // entry + d for the inv_m drain).
+            total += 3 * d128.pow(i as u32) + d128;
+        }
+        // Final unwind step: 2 muls per level-k entry.
+        total += 2 * d128.pow(k as u32);
+        // Innermost gz drain: d muls.
+        total += d128;
+    }
+    total
+}
+
+/// Count the multiplications the **monomorphised** VJP body
+/// (`fused::fused_mexp_vjp_mono::<D>`) performs, by walking its iteration
+/// space symbolically (stack `[E; D]` accumulator variant).
+pub fn fused_vjp_muls_mono_instrumented(d: u64, n: u64) -> u128 {
+    let d128 = d as u128;
+    let mut muls: u128 = d128 * (n - 1) as u128; // stage_zdiv
+    for k in (2..=n).rev() {
+        // Recompute chain: B_i = B_{i-1} ⊗ zm + A_i for i = 2..k-1.
+        let mut cur_len = d128;
+        for _i in 2..k {
+            muls += cur_len * d128;
+            cur_len *= d128;
+        }
+        // Final step: per p in d^{k-1}, per q in D: acc += row*z (1),
+        // gz += bp*row (1).
+        muls += 2 * cur_len * d128;
+        // Middle steps i = k-1..2: gb/gz_acc accumulate (2 muls per entry
+        // of gB_i), then gz += inv_m * gz_acc (d muls; the stack [E; D]
+        // accumulator drains with one multiply per channel).
+        let mut len_i = cur_len;
+        for _i in (2..k).rev() {
+            let prev_len = len_i / d128;
+            muls += 2 * prev_len * d128;
+            muls += d128;
+            len_i = prev_len;
+        }
+        // Innermost: gz += inv_k * gb1 (d muls).
+        muls += d128;
+    }
+    muls
+}
+
+/// Count the multiplications the **runtime-`d`** VJP body
+/// (`fused::fused_mexp_vjp_dyn`) performs, walking its iteration space
+/// (heap `ws.t1[..d]` accumulator variant — zero-fills are not counted,
+/// matching the mono walker's treatment of its stack zero-init).
+pub fn fused_vjp_muls_dyn_instrumented(d: u64, n: u64) -> u128 {
+    let d128 = d as u128;
+    let mut muls: u128 = d128 * (n - 1) as u128; // stage_zdiv
+    for k in (2..=n).rev() {
+        let mut cur_len = d128;
+        for _i in 2..k {
+            // lane-contiguous recompute: cur_len rows × d channels.
+            muls += cur_len * d128;
+            cur_len *= d128;
+        }
+        // Final unwind: 2 muls per (p, q) pair.
+        muls += 2 * cur_len * d128;
+        let mut len_i = cur_len;
+        for _i in (2..k).rev() {
+            let prev_len = len_i / d128;
+            // gb_prev/gz_acc accumulation: 2 muls per entry of gB_i.
+            muls += 2 * prev_len * d128;
+            // inv_m drain of the heap accumulator: d muls.
+            muls += d128;
+            len_i = prev_len;
+        }
+        muls += d128; // inv_k drain
+    }
+    muls
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +246,47 @@ mod tests {
             assert!(ratio > prev_ratio, "ratio not increasing at n={n}");
             assert!(ratio > n as f64 / 2.0 - 1.0, "ratio too small at n={n}: {ratio}");
             prev_ratio = ratio;
+        }
+    }
+
+    #[test]
+    fn dyn_vjp_opcount_matches_mono_in_the_mono_window() {
+        // The runtime-d backward performs exactly as many multiplications
+        // as the monomorphised one wherever both exist (d ≤ 8): switching
+        // bodies at the crossover trades instruction selection, never work.
+        for d in 1..=8u64 {
+            for n in 1..=7u64 {
+                assert_eq!(
+                    fused_vjp_muls_dyn_instrumented(d, n),
+                    fused_vjp_muls_mono_instrumented(d, n),
+                    "d={d} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_walkers_match_the_closed_accounting() {
+        // Both walkers agree with Fv(d, N) — including beyond the mono
+        // window, where only the dyn body exists.
+        for &d in &[1u64, 2, 3, 4, 5, 6, 7, 8, 9, 12, 20] {
+            for n in 1..=6u64 {
+                assert_eq!(fused_vjp_muls_mono_instrumented(d, n), fused_vjp_muls(d, n), "mono d={d} n={n}");
+                assert_eq!(fused_vjp_muls_dyn_instrumented(d, n), fused_vjp_muls(d, n), "dyn d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_cost_is_same_order_as_forward() {
+        // App. C: the Horner backward is O(d^N), the same order as the
+        // fused forward — the ratio stays bounded (< 4) instead of growing
+        // with N like the exp/⊠ composition's Θ(N d^N).
+        for &d in &[2u64, 4, 9, 12, 20] {
+            for n in 2..=6u64 {
+                let ratio = fused_vjp_muls(d, n) as f64 / fused_muls(d, n) as f64;
+                assert!(ratio < 4.0, "VJP/forward ratio {ratio} too large at d={d} n={n}");
+            }
         }
     }
 

@@ -15,7 +15,7 @@ use signax::signature::{signature, signature_batch, signature_stream, signature_
 use signax::substrate::json::Json;
 use signax::substrate::propcheck::assert_close;
 use signax::substrate::rng::Rng;
-use signax::ta::SigSpec;
+use signax::ta::{Precision, SigSpec};
 
 fn artifact_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -197,7 +197,13 @@ fn coordinator_routes_matching_requests_to_xla() {
     // Matching shape -> XLA (through the batcher).
     let path = signax::data::random_path(&mut rng, 128, 4, 0.1);
     let resp = coord
-        .call(Request::Signature { path: path.clone(), stream: 128, d: 4, depth: 4 })
+        .call(Request::Signature {
+            path: path.clone(),
+            stream: 128,
+            d: 4,
+            depth: 4,
+            precision: Precision::F32,
+        })
         .unwrap();
     assert_eq!(resp.backend, Backend::Xla);
     assert_close(&resp.values, &signature(&path, 128, &spec), 5e-3, 5e-4);
@@ -205,7 +211,13 @@ fn coordinator_routes_matching_requests_to_xla() {
     // Non-matching shape -> native fallback.
     let short = signax::data::random_path(&mut rng, 16, 4, 0.1);
     let resp = coord
-        .call(Request::Signature { path: short.clone(), stream: 16, d: 4, depth: 4 })
+        .call(Request::Signature {
+            path: short.clone(),
+            stream: 16,
+            d: 4,
+            depth: 4,
+            precision: Precision::F32,
+        })
         .unwrap();
     assert_eq!(resp.backend, Backend::Native);
 
@@ -228,7 +240,13 @@ fn coordinator_batches_concurrent_requests() {
         (0..8).map(|_| signax::data::random_path(&mut rng, 128, 4, 0.1)).collect();
     let reqs: Vec<Request> = paths
         .iter()
-        .map(|p| Request::Signature { path: p.clone(), stream: 128, d: 4, depth: 4 })
+        .map(|p| Request::Signature {
+            path: p.clone(),
+            stream: 128,
+            d: 4,
+            depth: 4,
+            precision: Precision::F32,
+        })
         .collect();
     let resps = coord.call_many(reqs);
     for (p, r) in paths.iter().zip(resps) {
