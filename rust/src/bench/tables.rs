@@ -892,6 +892,28 @@ pub fn sessions_json(hw_threads: usize, records: &[(usize, f64, f64)]) -> String
     s
 }
 
+/// Render session-persistence bench records as `BENCH_persist.json`:
+/// `points[]` of `(phase, sessions, wall_s, ops_per_s)` under top-level
+/// `hw_threads`. Written by `benches/session_persistence.rs`, which
+/// times spill/reload churn under budget pressure, reload-on-touch
+/// latency, and warm-restart recovery vs session count — every phase
+/// behind a bitwise spill -> touch -> reload gate.
+pub fn persist_json(hw_threads: usize, records: &[(&str, usize, f64, f64)]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"session_persistence\",\n");
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(phase, sessions, wall, rate)) in records.iter().enumerate() {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"phase\": \"{phase}\", \"sessions\": {sessions}, \"wall_s\": {wall:.9}, \
+             \"ops_per_s\": {rate:.3}}}{comma}\n"
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Render adaptive-dispatch bench records as `BENCH_dispatch.json`:
 /// `points[]` of `(mode, phase, requests, wall_s, mean_latency_us,
 /// batches, dispatch_scalar, dispatch_lane_fused, feed_lane_batches)`
@@ -1071,6 +1093,17 @@ mod tests {
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[1].get("threads").and_then(|v| v.as_f64()), Some(4.0));
         assert!(pts[1].get("feeds_per_s").and_then(|v| v.as_f64()).unwrap() > 333.0);
+    }
+
+    #[test]
+    fn persist_json_well_formed() {
+        let json = persist_json(8, &[("churn", 16, 2.0, 100.0), ("recovery", 64, 0.5, 128.0)]);
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("hw_threads").and_then(|v| v.as_f64()), Some(8.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].get("sessions").and_then(|v| v.as_f64()), Some(64.0));
+        assert_eq!(pts[1].get("ops_per_s").and_then(|v| v.as_f64()), Some(128.0));
     }
 
     #[test]

@@ -39,6 +39,16 @@ pub struct Metrics {
     pub sessions_evicted: AtomicU64,
     /// Sessions expired by the idle-TTL sweeper.
     pub sessions_expired: AtomicU64,
+    /// Sessions spilled to the session store (budget/TTL pressure with a
+    /// spill store configured — the state survives, cold).
+    pub sessions_spilled: AtomicU64,
+    /// Spilled sessions transparently reloaded on their next touch.
+    pub sessions_reloaded: AtomicU64,
+    /// Gauge: bytes of session state currently spilled to the store.
+    pub spilled_bytes: AtomicU64,
+    /// Records appended to the feed-delta log (write-behind; durable at
+    /// the sweeper's next fsync-batched flush).
+    pub wal_appends: AtomicU64,
     /// Units of native work executed with the scalar strategy (one serial
     /// sweep per path / per feed) — see [`crate::exec::ExecPlan`].
     pub dispatch_scalar: AtomicU64,
@@ -75,6 +85,10 @@ pub struct MetricsSnapshot {
     pub session_bytes: u64,
     pub sessions_evicted: u64,
     pub sessions_expired: u64,
+    pub sessions_spilled: u64,
+    pub sessions_reloaded: u64,
+    pub spilled_bytes: u64,
+    pub wal_appends: u64,
     pub dispatch_scalar: u64,
     pub dispatch_stream_parallel: u64,
     pub dispatch_lane_fused: u64,
@@ -112,6 +126,10 @@ impl Metrics {
             session_bytes: self.session_bytes.load(Ordering::Relaxed),
             sessions_evicted: self.sessions_evicted.load(Ordering::Relaxed),
             sessions_expired: self.sessions_expired.load(Ordering::Relaxed),
+            sessions_spilled: self.sessions_spilled.load(Ordering::Relaxed),
+            sessions_reloaded: self.sessions_reloaded.load(Ordering::Relaxed),
+            spilled_bytes: self.spilled_bytes.load(Ordering::Relaxed),
+            wal_appends: self.wal_appends.load(Ordering::Relaxed),
             dispatch_scalar: self.dispatch_scalar.load(Ordering::Relaxed),
             dispatch_stream_parallel: self.dispatch_stream_parallel.load(Ordering::Relaxed),
             dispatch_lane_fused: self.dispatch_lane_fused.load(Ordering::Relaxed),
@@ -140,7 +158,8 @@ impl MetricsSnapshot {
         format!(
             "requests={} (native={} xla={} stream={} logsig={}) batches={} rows={}/{} errors={} \
              batch_failures={} mean_latency={:?} sessions={} updates={} open={} \
-             resident_bytes={} evicted={} expired={}",
+             resident_bytes={} evicted={} expired={} spilled={} reloaded={} spilled_bytes={} \
+             wal_appends={}",
             self.requests,
             self.native_requests,
             self.xla_requests,
@@ -158,6 +177,10 @@ impl MetricsSnapshot {
             self.session_bytes,
             self.sessions_evicted,
             self.sessions_expired,
+            self.sessions_spilled,
+            self.sessions_reloaded,
+            self.spilled_bytes,
+            self.wal_appends,
         )
     }
 
@@ -219,6 +242,25 @@ mod tests {
         assert_eq!(s.sessions_expired, 0);
         assert_eq!(s.batch_failures, 1);
         assert!(s.render().contains("resident_bytes=4096"));
+    }
+
+    #[test]
+    fn persistence_counters_roundtrip_and_render() {
+        let m = Metrics::default();
+        m.sessions_spilled.store(4, Ordering::Relaxed);
+        m.sessions_reloaded.store(3, Ordering::Relaxed);
+        m.spilled_bytes.store(2048, Ordering::Relaxed);
+        m.wal_appends.store(17, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.sessions_spilled, 4);
+        assert_eq!(s.sessions_reloaded, 3);
+        assert_eq!(s.spilled_bytes, 2048);
+        assert_eq!(s.wal_appends, 17);
+        let line = s.render();
+        assert!(line.contains("spilled=4"));
+        assert!(line.contains("reloaded=3"));
+        assert!(line.contains("spilled_bytes=2048"));
+        assert!(line.contains("wal_appends=17"));
     }
 
     #[test]

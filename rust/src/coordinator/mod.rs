@@ -51,7 +51,19 @@
 //! them — and are served by the [`SessionManager`], a sharded table of
 //! `Arc<Mutex<Path>>` sessions whose resident precomputed storage is
 //! bounded by [`SessionConfig::budget_bytes`] (LRU eviction) and
-//! [`SessionConfig::ttl`] (idle expiry).
+//! [`SessionConfig::ttl`] (idle expiry). With a spill store configured
+//! ([`SessionConfig::spill`], [`crate::state`]), eviction and expiry
+//! *spill* sessions instead of destroying them — the next touch reloads
+//! the path bitwise — and `SpillConfig::Disk` adds a write-behind feed
+//! log so a restarted `serve-stream --state-dir` recovers every live
+//! session.
+//!
+//! [`ShardedCoordinator`] stacks N logical coordinators behind one front
+//! door: session ids stripe across shards ([`SessionConfig::first_id`] /
+//! [`SessionConfig::id_stride`]) so [`crate::state::Placement`] locates a
+//! session's shard by pure arithmetic on the id, and same-spec opens
+//! co-locate in feed-lane-width groups so feed batching still engages
+//! per shard.
 
 pub mod batcher;
 pub mod feedlane;
@@ -59,6 +71,7 @@ pub mod flusher;
 pub mod metrics;
 pub mod router;
 pub mod session;
+pub mod sharded;
 
 pub use batcher::{BatchBackend, BatchShape, Batcher};
 pub use feedlane::FeedLane;
@@ -66,3 +79,4 @@ pub use flusher::{GroupBatcher, GroupExecutor};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Backend, Coordinator, CoordinatorConfig, DispatchConfig, Request, Response};
 pub use session::{SessionConfig, SessionId, SessionManager};
+pub use sharded::ShardedCoordinator;

@@ -74,9 +74,10 @@ const KIND_LOGSIG_NATIVE: u8 = 4;
 pub enum Request {
     /// `Sig^depth(path)` for one `(stream, d)` path.
     Signature { path: Vec<f32>, stream: usize, d: usize, depth: usize, precision: Precision },
-    /// Words-basis `LogSig^depth(path)`. Served in f32 only (the log +
-    /// Words-projection epilogue is f32); `Precision::F64` is a clean
-    /// error, not a silent downgrade.
+    /// Words-basis `LogSig^depth(path)`. Both precisions serve: the log +
+    /// Words-projection epilogue is generic over the element type, so an
+    /// `F64` request runs the whole pipeline at f64 and downcasts at the
+    /// boundary, in its own microbatch queue.
     LogSignature { path: Vec<f32>, stream: usize, d: usize, depth: usize, precision: Precision },
     /// VJP: cotangent on the signature -> gradient on the path.
     SignatureGrad {
@@ -324,12 +325,6 @@ impl BatchBackend for NativeLaneBackend {
         };
         let cfg = SigConfig { threads: self.threads, ..SigConfig::serial() };
         if shape.kind == KIND_LOGSIG_NATIVE {
-            // The logsig epilogue (log + Words projection) is f32; the
-            // router rejects f64 logsig requests before they reach a queue.
-            anyhow::ensure!(
-                shape.prec == Precision::F32,
-                "logsig microbatches are f32-only"
-            );
             let lplan = self.plans.get(shape.d, shape.depth)?;
             anyhow::ensure!(
                 shape.out_dim == lplan.dim(),
@@ -337,15 +332,31 @@ impl BatchBackend for NativeLaneBackend {
                 shape.out_dim,
                 lplan.dim()
             );
-            return logsignature_batch_planned(
-                &padded[..rows * shape.in_row()],
-                rows,
-                shape.length,
-                &spec,
-                &lplan,
-                &cfg,
-                plan,
-            );
+            let real = &padded[..rows * shape.in_row()];
+            return match shape.prec {
+                Precision::F32 => {
+                    logsignature_batch_planned(real, rows, shape.length, &spec, &lplan, &cfg, plan)
+                }
+                Precision::F64 => {
+                    // Same boundary convention as the f64 signature arm
+                    // below: upcast once, run the whole generic pipeline —
+                    // lane sweeps, log, Words projection — at f64, downcast
+                    // the result. Precision is part of the queue identity
+                    // ([`BatchShape::prec`]), so f64 logsig rows coalesce
+                    // only with each other.
+                    let wide: Vec<f64> = real.iter().map(|&v| v as f64).collect();
+                    let out = logsignature_batch_planned(
+                        &wide,
+                        rows,
+                        shape.length,
+                        &spec,
+                        &lplan,
+                        &cfg,
+                        plan,
+                    )?;
+                    Ok(out.into_iter().map(|v| v as f32).collect())
+                }
+            };
         }
         let real = &padded[..rows * shape.in_row()];
         match shape.prec {
@@ -423,7 +434,7 @@ impl Coordinator {
             None
         };
         let sessions =
-            Arc::new(SessionManager::with_config(Arc::clone(&metrics), cfg.session.clone()));
+            Arc::new(SessionManager::with_config(Arc::clone(&metrics), cfg.session.clone())?);
         // The feed lane rides the same escape hatch as the microbatcher:
         // `microbatch = 0` (the old `native_batch = 0`) means no native
         // request of any kind ever waits out a linger.
@@ -680,30 +691,44 @@ impl Coordinator {
                 let spec = SigSpec::new(d, depth)?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
-                anyhow::ensure!(
-                    precision == Precision::F32,
-                    "logsignature serving is f32-only (the log + Words-projection epilogue \
-                     has no f64 path)"
-                );
                 self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
                 // Logsignature parity: same shared path, keyed under its
                 // own logsig kind (sig and logsig adapt — and batch —
                 // independently), with a per-row log + Words-projection
                 // epilogue on the flushed sweep. `native_batch = 0`
-                // disables batching here too.
+                // disables batching here too. The epilogue is generic over
+                // the element precision, so `F64` requests upcast at this
+                // boundary, run log + projection at f64, and downcast —
+                // exactly the signature convention, with its own
+                // microbatch queue (`with_dtype`).
                 let lplan = self.plan(d, depth)?;
                 let values = self.serve_native_stateless(
-                    ShapeKey::logsignature(d, depth, stream),
+                    ShapeKey::logsignature(d, depth, stream).with_dtype(precision),
                     KIND_LOGSIG_NATIVE,
                     stream,
                     d,
                     depth,
-                    Precision::F32,
+                    precision,
                     lplan.dim(),
                     path,
-                    |p| logsignature_with(&p, stream, &spec, &lplan, &SigConfig::serial()),
+                    |p| match precision {
+                        Precision::F32 => {
+                            logsignature_with(&p, stream, &spec, &lplan, &SigConfig::serial())
+                        }
+                        Precision::F64 => {
+                            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
+                            let out = logsignature_with(
+                                &wide,
+                                stream,
+                                &spec,
+                                &lplan,
+                                &SigConfig::serial(),
+                            )?;
+                            Ok(out.into_iter().map(|v| v as f32).collect())
+                        }
+                    },
                 )?;
-                (values, Precision::F32)
+                (values, precision)
             }
             Request::SignatureGrad { path, stream, d, depth, cotangent, precision } => {
                 let spec = SigSpec::new(d, depth)?;
@@ -1403,11 +1428,12 @@ mod tests {
     }
 
     #[test]
-    fn f64_serves_direct_and_grad_surfaces_logsig_errors() {
+    fn f64_serves_direct_grad_and_logsig() {
         // `native_batch = 0`: the escape hatch applies to f64 requests
         // too — direct serve, no linger. Gradient requests run the f64
-        // backward; logsignature has no f64 epilogue and must be a clean
-        // error, not a silent f32 downgrade.
+        // backward; logsignature runs the generic log + Words-projection
+        // epilogue at f64 (upcast -> f64 pipeline -> downcast), same
+        // boundary convention as the signature surface.
         let c = Coordinator::new(CoordinatorConfig::native_only().with_native_batch(0)).unwrap();
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(26);
@@ -1454,7 +1480,7 @@ mod tests {
         assert_eq!(g.values, want_g);
         assert_eq!(g.precision, Precision::F64);
 
-        let err = c
+        let lresp = c
             .call(Request::LogSignature {
                 path,
                 stream: 5,
@@ -1462,8 +1488,63 @@ mod tests {
                 depth: 3,
                 precision: Precision::F64,
             })
-            .unwrap_err();
-        assert!(err.to_string().contains("f32-only"), "unexpected error: {err}");
+            .unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let want_l: Vec<f32> = logsignature_with(&wide, 5, &spec, &plan, &SigConfig::serial())
+            .unwrap()
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        assert_eq!(lresp.values, want_l, "direct f64 logsig != f64 epilogue oracle");
+        assert_eq!(lresp.precision, Precision::F64);
+    }
+
+    #[test]
+    fn f64_logsig_microbatch_coalesces_and_matches_f64_oracle() {
+        // Satellite of PR 7: the f64 logsignature arm owns its own
+        // microbatch queue (`with_dtype(F64)` on the logsig shape key).
+        // Six concurrent same-spec f64 LogSignature requests must execute
+        // as ONE lane-fused f64 microbatch, each row bitwise equal to the
+        // stand-alone upcast -> f64 logsig -> downcast serve.
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                linger: Duration::from_millis(250),
+                ..CoordinatorConfig::native_only()
+            }
+            .with_native_batch(8),
+        )
+        .unwrap();
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        let mut rng = Rng::new(27);
+        let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
+        let reqs: Vec<Request> = paths
+            .iter()
+            .map(|p| Request::LogSignature {
+                path: p.clone(),
+                stream: 8,
+                d: 2,
+                depth: 3,
+                precision: Precision::F64,
+            })
+            .collect();
+        let resps = c.call_many(reqs);
+        for (p, r) in paths.iter().zip(&resps) {
+            let r = r.as_ref().expect("response");
+            assert_eq!(r.backend, Backend::Native);
+            assert_eq!(r.precision, Precision::F64);
+            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
+            let want: Vec<f32> = logsignature_with(&wide, 8, &spec, &plan, &SigConfig::serial())
+                .unwrap()
+                .into_iter()
+                .map(|v| v as f32)
+                .collect();
+            assert_eq!(r.values, want, "f64 logsig lane row != stand-alone f64 serve");
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.logsig_requests, 6);
+        assert_eq!(snap.batches, 1, "same-spec f64 logsig requests share one microbatch");
+        assert_eq!(snap.real_rows, 6);
     }
 
     #[test]

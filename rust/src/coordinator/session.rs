@@ -19,16 +19,40 @@
 //!   [`Path::storage_bytes`]) is enforced by evicting the least recently
 //!   used idle sessions, and an optional **idle TTL**
 //!   ([`SessionConfig::ttl`]) is enforced by a background sweeper thread.
-//!   Evicted sessions simply error on later use, like closed ones.
+//!
+//! Session lifecycle and durability (the [`crate::state`] layer):
+//!
+//! - Each session's slot is **Resident** (hot `Path`), **Spilled** (state
+//!   serialized into a [`crate::state::SessionStore`] blob; only spec,
+//!   length, and byte size stay in memory), or **Defunct** (closed or
+//!   destroyed). With a spill store configured
+//!   ([`SessionConfig::spill`]), LRU eviction and TTL expiry *spill*
+//!   instead of destroying: the session stays in the table and the next
+//!   touch transparently reloads it — **bitwise**, via the `Path` codec.
+//!   Without a store, eviction destroys state exactly as before.
+//! - An operation racing an eviction is safe by construction: spilling
+//!   `try_lock`s the slot and skips busy sessions, and an operation that
+//!   finds its slot spilled reloads before proceeding.
+//! - Errors are precise about why a session is gone: never-opened ids,
+//!   closed ids, and destroyed-by-eviction ids produce distinct messages
+//!   (closed/evicted ids leave tombstones; these are a few bytes each
+//!   and bounded by the number of sessions ever retired).
+//! - With [`crate::state::SpillConfig::Disk`] (the CLI's `--state-dir`),
+//!   every open/feed/close also appends to a write-behind feed-delta log
+//!   ([`crate::state::FeedLog`]), fsync-batched by the sweeper thread.
+//!   On construction the manager replays that log and recovers every
+//!   session bitwise (`Path` extension is exactly resumable), so a
+//!   restarted server answers interval queries identically.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::logsignature::LogSigPlan;
 use crate::path::Path;
+use crate::state::{FeedLog, SessionStore, SpillConfig, WalRecord};
 use crate::ta::SigSpec;
 
 /// Opaque session handle.
@@ -52,8 +76,21 @@ pub struct SessionConfig {
     /// Evict sessions idle for longer than this; `None` = no TTL. Enforced
     /// by a background sweeper thread owned by the manager.
     pub ttl: Option<Duration>,
-    /// How often the sweeper checks for expired sessions.
+    /// How often the sweeper checks for expired sessions (and flushes the
+    /// feed-delta log when one is configured).
     pub sweep_interval: Duration,
+    /// Where eviction sends session state. [`SpillConfig::None`] destroys
+    /// it (the original behaviour); `Memory`/`Disk` spill it for
+    /// transparent reload, and `Disk` additionally logs feeds for warm
+    /// restart.
+    pub spill: SpillConfig,
+    /// First session id this manager issues. Ids start at 1.
+    pub first_id: u64,
+    /// Stride between issued ids. A sharded deployment gives shard `k`
+    /// (0-based) `first_id = k + 1, id_stride = n`, so ids stay unique
+    /// across shards and [`crate::state::Placement::locate`] finds the
+    /// owner arithmetically.
+    pub id_stride: u64,
 }
 
 impl Default for SessionConfig {
@@ -63,36 +100,91 @@ impl Default for SessionConfig {
             budget_bytes: None,
             ttl: None,
             sweep_interval: Duration::from_millis(250),
+            spill: SpillConfig::None,
+            first_id: 1,
+            id_stride: 1,
         }
     }
 }
 
-/// One live session. The `Path` mutex is the only lock held during actual
+/// Why a session is no longer serviceable (tombstone for error taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Gone {
+    /// Explicitly closed by the client.
+    Closed,
+    /// Destroyed by budget/TTL eviction with no spill store configured.
+    Evicted,
+}
+
+/// Where a session's state currently lives. Transitions happen only under
+/// the slot mutex: Resident ⇄ Spilled (spill / transparent reload), and
+/// either → Defunct (close, or destroy-on-evict without a store).
+enum Slot {
+    /// Hot: the precomputed `Path` is in memory.
+    Resident(Path),
+    /// Cold: state lives in the spill store; enough metadata stays here
+    /// to answer spec/length lookups without a reload.
+    Spilled { spec: SigSpec, stream: usize, bytes: usize },
+    /// Gone for good; in-flight operations holding the `Arc` see why.
+    Defunct(Gone),
+}
+
+/// Lock-free mirror of the `Slot` variant (maintained under the slot
+/// lock) so eviction/TTL scans can filter candidates without locking.
+const STATE_RESIDENT: u8 = 0;
+const STATE_SPILLED: u8 = 1;
+const STATE_DEFUNCT: u8 = 2;
+
+/// One live session. The slot mutex is the only lock held during actual
 /// signature work; the bookkeeping fields are atomics so eviction scans
 /// never block serving threads.
 struct Session {
-    path: Mutex<Path>,
-    /// Last accounted [`Path::storage_bytes`] (updated under the path
+    slot: Mutex<Slot>,
+    /// Mirror of the slot variant ([`STATE_RESIDENT`] &c).
+    state: AtomicU8,
+    /// Last accounted [`Path::storage_bytes`] (updated under the slot
     /// lock, so the resident total stays consistent with eviction).
     bytes: AtomicUsize,
     /// Manager-wide monotonic clock value at last touch (LRU order).
     touch: AtomicU64,
     /// Milliseconds since manager start at last touch (TTL clock).
     last_used_ms: AtomicU64,
-    /// Set (under the path lock) when the session is evicted or closed;
-    /// an in-flight feed that raced the eviction sees it and bails
-    /// instead of corrupting the resident-bytes accounting.
-    evicted: AtomicBool,
+}
+
+/// The `Path` of a slot known to be resident (`ensure_resident` ran).
+fn resident_path(slot: &mut Slot) -> &mut Path {
+    match slot {
+        Slot::Resident(p) => p,
+        _ => unreachable!("slot made resident before use"),
+    }
+}
+
+/// A live slot's spec, hot or cold (spilled slots keep it in memory).
+fn slot_spec(slot: &Slot) -> &SigSpec {
+    match slot {
+        Slot::Resident(p) => p.spec(),
+        Slot::Spilled { spec, .. } => spec,
+        Slot::Defunct(_) => unreachable!("defunct slots error before spec lookup"),
+    }
 }
 
 struct Inner {
     cfg: SessionConfig,
     shards: Vec<Mutex<HashMap<u64, Arc<Session>>>>,
+    /// Tombstones for retired ids (why each is gone), sharded like the
+    /// live table.
+    tombstones: Vec<Mutex<HashMap<u64, Gone>>>,
     metrics: Arc<Metrics>,
+    /// Spill destination for evicted sessions, when configured.
+    store: Option<Arc<dyn SessionStore>>,
+    /// Feed-delta log for warm restarts, when configured.
+    wal: Option<FeedLog>,
     epoch: Instant,
     clock: AtomicU64,
     /// Total resident `Path::storage_bytes` across live sessions.
     resident: AtomicUsize,
+    /// Total bytes currently spilled to the store.
+    spilled: AtomicUsize,
     shutdown: Mutex<bool>,
     wake: Condvar,
 }
@@ -111,36 +203,175 @@ impl Inner {
         sess.last_used_ms.store(self.now_ms(), Ordering::Relaxed);
     }
 
+    fn tombstone_shard(&self, id: u64) -> &Mutex<HashMap<u64, Gone>> {
+        &self.tombstones[(id as usize) % self.tombstones.len()]
+    }
+
+    /// The precise reason an id is not in the live table.
+    fn gone_error(&self, id: SessionId) -> anyhow::Error {
+        match self.tombstone_shard(id.0).lock().unwrap().get(&id.0) {
+            Some(g) => self.defunct_error(id, *g),
+            None => anyhow::anyhow!("unknown session {id:?} (never opened)"),
+        }
+    }
+
+    fn defunct_error(&self, id: SessionId, gone: Gone) -> anyhow::Error {
+        match gone {
+            Gone::Closed => anyhow::anyhow!("session {id:?} is closed"),
+            Gone::Evicted => anyhow::anyhow!(
+                "session {id:?} was evicted (idle under memory pressure; \
+                 a spill store, e.g. serve-stream --state-dir, keeps evicted \
+                 sessions reloadable)"
+            ),
+        }
+    }
+
     fn get(&self, id: SessionId) -> anyhow::Result<Arc<Session>> {
-        self.shard(id.0)
-            .lock()
-            .unwrap()
-            .get(&id.0)
-            .cloned()
-            .ok_or_else(|| anyhow::anyhow!("unknown session {id:?} (never opened, closed, or evicted)"))
+        if let Some(sess) = self.shard(id.0).lock().unwrap().get(&id.0) {
+            return Ok(Arc::clone(sess));
+        }
+        Err(self.gone_error(id))
     }
 
     fn remove(&self, id: u64) -> Option<Arc<Session>> {
         self.shard(id).lock().unwrap().remove(&id)
     }
 
-    /// Finish removing a session that is already out of the map: mark it
-    /// evicted and release its bytes from the resident total. Taking the
-    /// path lock serialises against any in-flight feed, whose accounting
-    /// also runs under that lock — so a session's bytes are counted in
-    /// `resident` exactly while it is live.
-    fn retire(&self, sess: &Session) {
-        let _path = sess.path.lock().unwrap();
-        if !sess.evicted.swap(true, Ordering::Relaxed) {
-            self.resident.fetch_sub(sess.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+    /// Append to the feed-delta log, when one is configured. Buffered
+    /// write-behind: durable after the sweeper's next flush. Called with
+    /// the relevant slot lock held, so log order matches apply order.
+    fn log_wal(&self, rec: &WalRecord) {
+        if let Some(wal) = &self.wal {
+            match wal.append(rec) {
+                Ok(()) => {
+                    self.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => eprintln!("signax: WAL append failed (durability degraded): {e}"),
+            }
+        }
+    }
+
+    fn flush_wal(&self) {
+        if let Some(wal) = &self.wal {
+            if let Err(e) = wal.flush() {
+                eprintln!("signax: WAL flush failed (durability degraded): {e}");
+            }
+        }
+    }
+
+    /// Make a slot resident, transparently reloading it from the spill
+    /// store if it was evicted cold. Returns whether a reload happened
+    /// (the caller re-enforces the budget after releasing the lock, since
+    /// the reload just grew the resident total). Errors carry the precise
+    /// lifecycle reason for defunct slots.
+    fn ensure_resident(
+        &self,
+        id: SessionId,
+        sess: &Session,
+        slot: &mut Slot,
+    ) -> anyhow::Result<bool> {
+        match slot {
+            Slot::Resident(_) => Ok(false),
+            Slot::Defunct(g) => Err(self.defunct_error(id, *g)),
+            Slot::Spilled { bytes, .. } => {
+                let bytes = *bytes;
+                let store = self.store.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("session {id:?} is spilled but no spill store is configured")
+                })?;
+                let blob = store.get(id.0)?.ok_or_else(|| {
+                    anyhow::anyhow!("spilled session {id:?} is missing from the spill store")
+                })?;
+                let path: Path = Path::deserialize(&blob)?;
+                // The blob is now redundant (state is hot again); dropping
+                // it keeps the spilled-bytes gauge honest.
+                let _ = store.remove(id.0);
+                *slot = Slot::Resident(path);
+                sess.state.store(STATE_RESIDENT, Ordering::Relaxed);
+                sess.bytes.store(bytes, Ordering::Relaxed);
+                self.resident.fetch_add(bytes, Ordering::Relaxed);
+                self.spilled.fetch_sub(bytes, Ordering::Relaxed);
+                self.metrics.sessions_reloaded.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Lock a session's slot, make it resident (reloading if spilled),
+    /// and run `f` on its `Path`. Returns `f`'s result plus whether a
+    /// reload happened.
+    fn with_resident<R>(
+        &self,
+        id: SessionId,
+        sess: &Session,
+        f: impl FnOnce(&mut Path) -> anyhow::Result<R>,
+    ) -> anyhow::Result<(R, bool)> {
+        let mut slot = sess.slot.lock().unwrap();
+        let reloaded = self.ensure_resident(id, sess, &mut slot)?;
+        Ok((f(resident_path(&mut slot))?, reloaded))
+    }
+
+    /// Try to spill a resident session to the store (it stays in the
+    /// table, cold). Returns the bytes moved off the resident total, 0 if
+    /// the session was busy, already cold, or the store write failed (in
+    /// which case it simply stays resident — never lose state to make
+    /// room). `try_lock` is what resolves the eviction-vs-in-flight-op
+    /// race: a session mid-operation is skipped, not destroyed.
+    fn spill(&self, id: u64, sess: &Session) -> usize {
+        let store = self.store.as_ref().expect("spill requires a store");
+        let Ok(mut slot) = sess.slot.try_lock() else { return 0 };
+        let Slot::Resident(path) = &*slot else { return 0 };
+        let mut blob = Vec::with_capacity(path.serialized_len());
+        path.serialize_into(&mut blob);
+        let (spec, stream) = (path.spec().clone(), path.len());
+        if let Err(e) = store.put(id, &blob) {
+            eprintln!("signax: spill of session {id} failed (kept resident): {e}");
+            return 0;
+        }
+        let bytes = sess.bytes.load(Ordering::Relaxed);
+        *slot = Slot::Spilled { spec, stream, bytes };
+        sess.state.store(STATE_SPILLED, Ordering::Relaxed);
+        self.resident.fetch_sub(bytes, Ordering::Relaxed);
+        self.spilled.fetch_add(bytes, Ordering::Relaxed);
+        self.metrics.sessions_spilled.fetch_add(1, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Finish removing a session that is already out of the map: mark its
+    /// slot defunct, release its bytes, and leave a tombstone saying why.
+    /// Taking the slot lock serialises against any in-flight operation,
+    /// whose accounting also runs under that lock — so a session's bytes
+    /// are counted in `resident`/`spilled` exactly while it is live.
+    fn retire(&self, id: u64, sess: &Session, gone: Gone) {
+        {
+            let mut slot = sess.slot.lock().unwrap();
+            match std::mem::replace(&mut *slot, Slot::Defunct(gone)) {
+                Slot::Resident(_) => {
+                    self.resident.fetch_sub(sess.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+                }
+                Slot::Spilled { bytes, .. } => {
+                    self.spilled.fetch_sub(bytes, Ordering::Relaxed);
+                    if let Some(store) = &self.store {
+                        let _ = store.remove(id);
+                    }
+                }
+                Slot::Defunct(prev) => {
+                    *slot = Slot::Defunct(prev); // already retired; keep the first cause
+                    return;
+                }
+            }
+            sess.state.store(STATE_DEFUNCT, Ordering::Relaxed);
             self.metrics.open_sessions.fetch_sub(1, Ordering::Relaxed);
         }
+        self.tombstone_shard(id).lock().unwrap().insert(id, gone);
     }
 
     fn publish_gauges(&self) {
         self.metrics
             .session_bytes
             .store(self.resident.load(Ordering::Relaxed) as u64, Ordering::Relaxed);
+        self.metrics
+            .spilled_bytes
+            .store(self.spilled.load(Ordering::Relaxed) as u64, Ordering::Relaxed);
     }
 
     /// Enforce the byte budget after the `exclude` sessions were touched,
@@ -160,11 +391,15 @@ impl Inner {
     fn enforce_budget(&self, exclude: &[u64]) {
         if let Some(budget) = self.cfg.budget_bytes {
             while self.resident.load(Ordering::Relaxed) > budget {
+                // Only resident sessions hold resident bytes; spilled and
+                // defunct slots are filtered by the lock-free state mirror.
                 let mut cands: Vec<(u64, u64)> = vec![];
                 for shard in &self.shards {
                     let guard = shard.lock().unwrap();
                     for (&id, sess) in guard.iter() {
-                        if !exclude.contains(&id) {
+                        if !exclude.contains(&id)
+                            && sess.state.load(Ordering::Relaxed) == STATE_RESIDENT
+                        {
                             cands.push((sess.touch.load(Ordering::Relaxed), id));
                         }
                     }
@@ -175,24 +410,31 @@ impl Inner {
                     if self.resident.load(Ordering::Relaxed) <= budget {
                         break;
                     }
-                    // Eviction targets *idle* sessions: skip any whose path
-                    // mutex is held right now (a concurrent client is
-                    // mid-operation on it — it is not LRU, its touch just
-                    // hasn't landed yet from this thread's perspective).
-                    let busy = {
-                        let guard = self.shard(id).lock().unwrap();
-                        match guard.get(&id) {
-                            Some(sess) => sess.path.try_lock().is_err(),
-                            None => continue, // raced away: not a candidate
-                        }
+                    let Some(sess) = self.shard(id).lock().unwrap().get(&id).cloned() else {
+                        continue; // raced away: not a candidate
                     };
-                    if busy {
-                        continue;
-                    }
-                    if let Some(sess) = self.remove(id) {
-                        self.retire(&sess);
-                        self.metrics.sessions_evicted.fetch_add(1, Ordering::Relaxed);
-                        evicted_any = true;
+                    if self.store.is_some() {
+                        // Spill, don't destroy: the session stays in the
+                        // table, cold, reloadable on the next touch.
+                        // `spill` skips busy sessions via try_lock.
+                        if self.spill(id, &sess) > 0 {
+                            evicted_any = true;
+                        }
+                    } else {
+                        // No store: destroy, exactly the old behaviour.
+                        // Eviction targets *idle* sessions — skip any whose
+                        // slot mutex is held right now (a concurrent client
+                        // is mid-operation on it; it is not LRU, its touch
+                        // just hasn't landed yet from this thread's
+                        // perspective).
+                        if sess.slot.try_lock().is_err() {
+                            continue;
+                        }
+                        if let Some(sess) = self.remove(id) {
+                            self.retire(id, &sess, Gone::Evicted);
+                            self.metrics.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+                            evicted_any = true;
+                        }
                     }
                 }
                 if !evicted_any {
@@ -203,33 +445,40 @@ impl Inner {
         self.publish_gauges();
     }
 
-    /// One TTL pass: expire sessions idle for longer than `cfg.ttl`.
+    /// One sweeper pass: flush the feed-delta log (fsync batching — this
+    /// is what makes WAL appends write-behind), then expire sessions idle
+    /// for longer than `cfg.ttl`. With a spill store, "expire" means
+    /// spill: the state survives, cold.
     fn sweep(&self) {
+        self.flush_wal();
         let Some(ttl) = self.cfg.ttl else { return };
         // Clamp: a sub-millisecond TTL must not truncate to 0, which would
         // make every session (idle time >= 0) expire on each pass.
         let ttl_ms = (ttl.as_millis() as u64).max(1);
         let now = self.now_ms();
-        let mut expired: Vec<Arc<Session>> = vec![];
+        let mut expired: Vec<(u64, Arc<Session>)> = vec![];
         for shard in &self.shards {
-            let mut guard = shard.lock().unwrap();
-            let ids: Vec<u64> = guard
-                .iter()
-                .filter(|(_, s)| now.saturating_sub(s.last_used_ms.load(Ordering::Relaxed)) >= ttl_ms)
-                .map(|(&id, _)| id)
-                .collect();
-            for id in ids {
-                if let Some(s) = guard.remove(&id) {
-                    expired.push(s);
+            let guard = shard.lock().unwrap();
+            for (&id, s) in guard.iter() {
+                if s.state.load(Ordering::Relaxed) == STATE_RESIDENT
+                    && now.saturating_sub(s.last_used_ms.load(Ordering::Relaxed)) >= ttl_ms
+                {
+                    expired.push((id, Arc::clone(s)));
                 }
             }
         }
         if expired.is_empty() {
             return;
         }
-        for sess in &expired {
-            self.retire(sess);
-            self.metrics.sessions_expired.fetch_add(1, Ordering::Relaxed);
+        for (id, sess) in &expired {
+            if self.store.is_some() {
+                self.spill(*id, sess);
+            } else if sess.slot.try_lock().is_ok() {
+                if let Some(sess) = self.remove(*id) {
+                    self.retire(*id, &sess, Gone::Evicted);
+                    self.metrics.sessions_expired.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
         self.publish_gauges();
     }
@@ -243,24 +492,101 @@ pub struct SessionManager {
 }
 
 impl SessionManager {
-    /// Unbounded manager with default sharding (no budget, no TTL).
+    /// Unbounded manager with default sharding (no budget, no TTL, no
+    /// persistence — nothing that can fail to construct).
     pub fn new(metrics: Arc<Metrics>) -> SessionManager {
         SessionManager::with_config(metrics, SessionConfig::default())
+            .expect("default session config has no persistence to fail")
     }
 
-    pub fn with_config(metrics: Arc<Metrics>, cfg: SessionConfig) -> SessionManager {
+    /// Build a manager; with [`SpillConfig::Disk`] this replays the
+    /// feed-delta log first, recovering every session that was open when
+    /// the previous process exited — bitwise, since `Path` extension is
+    /// exactly resumable. Construction fails only on persistence errors
+    /// (unreadable state dir, malformed log record).
+    pub fn with_config(metrics: Arc<Metrics>, cfg: SessionConfig) -> anyhow::Result<SessionManager> {
+        let store = cfg.spill.build_store()?;
+        let wal_path = cfg.spill.wal_path();
+        // Warm-restart recovery: replay the log into fresh Paths. Feeds
+        // for closed/unknown ids are skipped; closes leave tombstones so
+        // the error taxonomy survives restarts too.
+        let mut recovered: HashMap<u64, Path> = HashMap::new();
+        let mut closed_ids: Vec<u64> = vec![];
+        let mut max_seen: u64 = 0;
+        if let Some(wp) = &wal_path {
+            for rec in FeedLog::replay(wp)? {
+                match rec {
+                    WalRecord::Open { id, d, depth, count, points } => {
+                        max_seen = max_seen.max(id);
+                        let spec = SigSpec::new(d as usize, depth as usize)?;
+                        recovered.insert(id, Path::new(&spec, &points, count as usize)?);
+                    }
+                    WalRecord::Feed { id, count, points } => {
+                        if let Some(p) = recovered.get_mut(&id) {
+                            p.update(&points, count as usize)?;
+                        }
+                    }
+                    WalRecord::Close { id } => {
+                        max_seen = max_seen.max(id);
+                        recovered.remove(&id);
+                        closed_ids.push(id);
+                    }
+                }
+            }
+            // Spill blobs are snapshots the log fully supersedes (every
+            // feed is logged); clear stale ones from the previous run.
+            if let Some(store) = &store {
+                store.clear()?;
+            }
+        }
+        let wal = match &wal_path {
+            Some(wp) => Some(FeedLog::open(wp)?),
+            None => None,
+        };
+        let first = cfg.first_id.max(1);
+        let stride = cfg.id_stride.max(1);
+        // Next id: past everything the log ever issued, on this shard's
+        // stride lattice.
+        let next_id = if max_seen < first {
+            first
+        } else {
+            first + ((max_seen - first) / stride + 1) * stride
+        };
         let shards = cfg.shards.max(1);
-        let spawn_sweeper = cfg.ttl.is_some();
+        let spawn_sweeper = cfg.ttl.is_some() || wal.is_some();
         let inner = Arc::new(Inner {
             cfg,
             shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            tombstones: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
             metrics,
+            store,
+            wal,
             epoch: Instant::now(),
             clock: AtomicU64::new(0),
             resident: AtomicUsize::new(0),
+            spilled: AtomicUsize::new(0),
             shutdown: Mutex::new(false),
             wake: Condvar::new(),
         });
+        for (id, path) in recovered {
+            let bytes = path.storage_bytes();
+            let sess = Arc::new(Session {
+                slot: Mutex::new(Slot::Resident(path)),
+                state: AtomicU8::new(STATE_RESIDENT),
+                bytes: AtomicUsize::new(bytes),
+                touch: AtomicU64::new(0),
+                last_used_ms: AtomicU64::new(0),
+            });
+            inner.touch(&sess);
+            inner.resident.fetch_add(bytes, Ordering::Relaxed);
+            inner.metrics.open_sessions.fetch_add(1, Ordering::Relaxed);
+            inner.shard(id).lock().unwrap().insert(id, sess);
+        }
+        for id in closed_ids {
+            inner.tombstone_shard(id).lock().unwrap().insert(id, Gone::Closed);
+        }
+        // The recovered set may already exceed the budget: spill back down.
+        inner.enforce_budget(&[]);
         let sweeper = if spawn_sweeper {
             let inner = Arc::clone(&inner);
             Some(
@@ -284,7 +610,7 @@ impl SessionManager {
         } else {
             None
         };
-        SessionManager { next_id: AtomicU64::new(1), inner, sweeper }
+        Ok(SessionManager { next_id: AtomicU64::new(next_id), inner, sweeper })
     }
 
     /// Open a session seeded with an initial path (>= 2 points).
@@ -305,13 +631,23 @@ impl SessionManager {
         let path = Path::new(spec, points, stream)?;
         let bytes = path.storage_bytes();
         let sig = path.signature();
-        let id = SessionId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let stride = self.inner.cfg.id_stride.max(1);
+        let id = SessionId(self.next_id.fetch_add(stride, Ordering::Relaxed));
+        // Log before the session becomes visible: no feed for this id can
+        // be accepted (let alone logged) until open returns it.
+        self.inner.log_wal(&WalRecord::Open {
+            id: id.0,
+            d: spec.d() as u32,
+            depth: spec.depth() as u32,
+            count: stream as u32,
+            points: points.to_vec(),
+        });
         let sess = Arc::new(Session {
-            path: Mutex::new(path),
+            slot: Mutex::new(Slot::Resident(path)),
+            state: AtomicU8::new(STATE_RESIDENT),
             bytes: AtomicUsize::new(bytes),
             touch: AtomicU64::new(0),
             last_used_ms: AtomicU64::new(0),
-            evicted: AtomicBool::new(false),
         });
         self.inner.touch(&sess);
         self.inner.resident.fetch_add(bytes, Ordering::Relaxed);
@@ -331,16 +667,21 @@ impl SessionManager {
         // Touch at start as well as completion: a long-running update must
         // not look idle to LRU/TTL eviction while it is in flight.
         self.inner.touch(&sess);
-        let sig = {
-            let mut path = sess.path.lock().unwrap();
-            anyhow::ensure!(!sess.evicted.load(Ordering::Relaxed), "session {id:?} was evicted");
+        // `with_resident` transparently reloads a spilled session — a feed
+        // that raced an eviction proceeds instead of erroring.
+        let (sig, _) = self.inner.with_resident(id, &sess, |path| {
             path.update(points, count)?;
             // `update` only appends, so storage can only have grown.
             let new_bytes = path.storage_bytes();
             let old_bytes = sess.bytes.swap(new_bytes, Ordering::Relaxed);
             self.inner.resident.fetch_add(new_bytes - old_bytes, Ordering::Relaxed);
-            path.signature()
-        };
+            self.inner.log_wal(&WalRecord::Feed {
+                id: id.0,
+                count: count as u32,
+                points: points.to_vec(),
+            });
+            Ok(path.signature())
+        })?;
         self.inner.touch(&sess);
         self.inner.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
         self.inner.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
@@ -406,22 +747,22 @@ impl SessionManager {
                 Err(e) => results[idx] = Some(Err(e)),
             }
         }
-        // Lock paths in ascending session-id order: concurrent batch
+        // Lock slots in ascending session-id order: concurrent batch
         // feeds over overlapping session sets then acquire in the same
-        // global order and cannot deadlock.
+        // global order and cannot deadlock. Spilled lanes reload here,
+        // under their own slot lock, exactly like a scalar feed.
         resolved.sort_by_key(|(idx, _)| feeds[*idx].0 .0);
-        let mut locked: Vec<(usize, std::sync::MutexGuard<'_, Path>)> = vec![];
+        let mut locked: Vec<(usize, MutexGuard<'_, Slot>)> = vec![];
         for (idx, sess) in &resolved {
-            let guard = sess.path.lock().unwrap();
-            if sess.evicted.load(Ordering::Relaxed) {
-                results[*idx] =
-                    Some(Err(anyhow::anyhow!("session {:?} was evicted", feeds[*idx].0)));
+            let mut guard = sess.slot.lock().unwrap();
+            if let Err(e) = self.inner.ensure_resident(feeds[*idx].0, sess, &mut guard) {
+                results[*idx] = Some(Err(e));
                 continue;
             }
             // Per-lane validation up front, so one malformed feed errors
             // alone instead of failing its whole lane group.
             let (_, points, count) = &feeds[*idx];
-            let d = guard.spec().d();
+            let d = slot_spec(&guard).d();
             if *count < 1 {
                 results[*idx] = Some(Err(anyhow::anyhow!("no points to add")));
                 continue;
@@ -438,16 +779,19 @@ impl SessionManager {
         // Group same-spec lanes into contiguous runs (the feed lane keys
         // submissions by spec, so this is normally one run; a mixed batch
         // still lane-fuses per spec).
-        locked.sort_by_key(|(_, g)| (g.spec().d(), g.spec().depth()));
+        locked.sort_by_key(|(_, g)| {
+            let s = slot_spec(g);
+            (s.d(), s.depth())
+        });
         let mut start = 0usize;
         while start < locked.len() {
             let key = {
-                let s = locked[start].1.spec();
+                let s = slot_spec(&locked[start].1);
                 (s.d(), s.depth())
             };
             let mut end = start + 1;
             while end < locked.len() {
-                let s = locked[end].1.spec();
+                let s = slot_spec(&locked[end].1);
                 if (s.d(), s.depth()) != key {
                     break;
                 }
@@ -456,7 +800,8 @@ impl SessionManager {
             let run = &mut locked[start..end];
             let idxs: Vec<usize> = run.iter().map(|(idx, _)| *idx).collect();
             let outcome = {
-                let mut paths: Vec<&mut Path> = run.iter_mut().map(|(_, g)| &mut **g).collect();
+                let mut paths: Vec<&mut Path> =
+                    run.iter_mut().map(|(_, g)| resident_path(&mut **g)).collect();
                 let slices: Vec<&[f32]> = idxs.iter().map(|&i| feeds[i].1.as_slice()).collect();
                 let counts: Vec<usize> = idxs.iter().map(|&i| feeds[i].2).collect();
                 Path::update_batch(&mut paths, &slices, &counts)
@@ -469,19 +814,28 @@ impl SessionManager {
                     } else {
                         self.inner.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
                     }
-                    for (idx, guard) in run.iter() {
-                        // Accounting under this path's lock, exactly like
+                    for (idx, guard) in run.iter_mut() {
+                        // Accounting under this slot's lock, exactly like
                         // a scalar feed: `update` only appends, so storage
                         // can only have grown.
                         let (_, sess) = resolved
                             .iter()
-                            .find(|(ri, _)| ri == idx)
+                            .find(|(ri, _)| *ri == *idx)
                             .expect("locked lane was resolved");
-                        let new_bytes = guard.storage_bytes();
+                        let path = resident_path(&mut **guard);
+                        let new_bytes = path.storage_bytes();
                         let old_bytes = sess.bytes.swap(new_bytes, Ordering::Relaxed);
                         self.inner.resident.fetch_add(new_bytes - old_bytes, Ordering::Relaxed);
                         self.inner.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
-                        results[*idx] = Some(Ok(guard.signature()));
+                        // Log while the slot lock is held, like a scalar
+                        // feed, so WAL order matches apply order per id.
+                        let (sid, points, count) = &feeds[*idx];
+                        self.inner.log_wal(&WalRecord::Feed {
+                            id: sid.0,
+                            count: *count as u32,
+                            points: points.clone(),
+                        });
+                        results[*idx] = Some(Ok(path.signature()));
                     }
                 }
                 Err(e) => {
@@ -499,11 +853,15 @@ impl SessionManager {
         }
     }
 
-    /// O(1) interval query against a session's stream.
+    /// O(1) interval query against a session's stream (reloading the
+    /// session transparently if it was spilled).
     pub fn query(&self, id: SessionId, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
         let sess = self.inner.get(id)?;
-        let out = sess.path.lock().unwrap().query(i, j)?;
+        let (out, reloaded) = self.inner.with_resident(id, &sess, |path| path.query(i, j))?;
         self.inner.touch(&sess);
+        if reloaded {
+            self.inner.enforce_budget(&[id.0]);
+        }
         Ok(out)
     }
 
@@ -516,8 +874,12 @@ impl SessionManager {
         plan: &LogSigPlan,
     ) -> anyhow::Result<Vec<f32>> {
         let sess = self.inner.get(id)?;
-        let out = sess.path.lock().unwrap().logsig_query(i, j, plan)?;
+        let (out, reloaded) =
+            self.inner.with_resident(id, &sess, |path| path.logsig_query(i, j, plan))?;
         self.inner.touch(&sess);
+        if reloaded {
+            self.inner.enforce_budget(&[id.0]);
+        }
         Ok(out)
     }
 
@@ -536,15 +898,17 @@ impl SessionManager {
         F: FnOnce(&SigSpec) -> anyhow::Result<Arc<LogSigPlan>>,
     {
         let sess = self.inner.get(id)?;
-        // Only the O(1) interval query runs under the path lock; plan
+        // Only the O(1) interval query runs under the slot lock; plan
         // resolution (which may take the coordinator's global plan-cache
         // mutex, or build a plan) and the log projection run outside it,
         // so concurrent queries/feeds never serialize on either lock.
-        let (sig, spec) = {
-            let path = sess.path.lock().unwrap();
-            (path.query(i, j)?, path.spec().clone())
-        };
+        let ((sig, spec), reloaded) = self
+            .inner
+            .with_resident(id, &sess, |path| Ok((path.query(i, j)?, path.spec().clone())))?;
         self.inner.touch(&sess);
+        if reloaded {
+            self.inner.enforce_budget(&[id.0]);
+        }
         let plan = plan_for(&spec)?;
         crate::logsignature::logsignature_from_sig(&sig, &spec, plan.as_ref())
     }
@@ -552,36 +916,52 @@ impl SessionManager {
     /// The signature of a session's whole stream so far.
     pub fn signature(&self, id: SessionId) -> anyhow::Result<Vec<f32>> {
         let sess = self.inner.get(id)?;
-        let out = sess.path.lock().unwrap().signature();
+        let (out, reloaded) =
+            self.inner.with_resident(id, &sess, |path| Ok(path.signature()))?;
         self.inner.touch(&sess);
+        if reloaded {
+            self.inner.enforce_budget(&[id.0]);
+        }
         Ok(out)
     }
 
-    /// Number of points a session currently holds.
+    /// Number of points a session currently holds. Served from cold
+    /// metadata for spilled sessions — no reload.
     pub fn session_len(&self, id: SessionId) -> anyhow::Result<usize> {
         let sess = self.inner.get(id)?;
-        let len = sess.path.lock().unwrap().len();
-        Ok(len)
+        let slot = sess.slot.lock().unwrap();
+        match &*slot {
+            Slot::Resident(p) => Ok(p.len()),
+            Slot::Spilled { stream, .. } => Ok(*stream),
+            Slot::Defunct(g) => Err(self.inner.defunct_error(id, *g)),
+        }
     }
 
-    /// The `SigSpec` a session was opened with.
+    /// The `SigSpec` a session was opened with. Served from cold metadata
+    /// for spilled sessions — no reload.
     pub fn session_spec(&self, id: SessionId) -> anyhow::Result<SigSpec> {
         let sess = self.inner.get(id)?;
-        let spec = sess.path.lock().unwrap().spec().clone();
-        Ok(spec)
+        let slot = sess.slot.lock().unwrap();
+        match &*slot {
+            Slot::Resident(p) => Ok(p.spec().clone()),
+            Slot::Spilled { spec, .. } => Ok(spec.clone()),
+            Slot::Defunct(g) => Err(self.inner.defunct_error(id, *g)),
+        }
     }
 
-    /// Close and drop a session.
+    /// Close and drop a session (hot or spilled); its spill blob is
+    /// removed and a `Close` record logged, so neither reload nor warm
+    /// restart can resurrect it.
     pub fn close(&self, id: SessionId) -> anyhow::Result<()> {
-        let sess = self
-            .inner
-            .remove(id.0)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {id:?}"))?;
-        self.inner.retire(&sess);
+        let sess = self.inner.remove(id.0).ok_or_else(|| self.inner.gone_error(id))?;
+        self.inner.retire(id.0, &sess, Gone::Closed);
+        self.inner.log_wal(&WalRecord::Close { id: id.0 });
         self.inner.publish_gauges();
         Ok(())
     }
 
+    /// Sessions currently in the table — resident *or* spilled (a spilled
+    /// session is still open; it just lives cold).
     pub fn open_count(&self) -> usize {
         self.inner.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
@@ -589,6 +969,17 @@ impl SessionManager {
     /// Bytes of precomputed storage currently resident across sessions.
     pub fn resident_bytes(&self) -> usize {
         self.inner.resident.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently spilled to the session store.
+    pub fn spilled_bytes(&self) -> usize {
+        self.inner.spilled.load(Ordering::Relaxed)
+    }
+
+    /// Flush the feed-delta log now (tests and orderly shutdown; the
+    /// sweeper does this on its own cadence).
+    pub fn flush_wal(&self) {
+        self.inner.flush_wal();
     }
 }
 
@@ -599,6 +990,9 @@ impl Drop for SessionManager {
         if let Some(h) = self.sweeper.take() {
             let _ = h.join();
         }
+        // Orderly shutdown drains the write-behind buffer (the FeedLog's
+        // own Drop also flushes, as a backstop once the Arc unwinds).
+        self.inner.flush_wal();
     }
 }
 
@@ -724,7 +1118,7 @@ mod tests {
     fn feed_batch_isolates_errors_and_orders_duplicates() {
         let spec = SigSpec::new(2, 3).unwrap();
         let metrics = Arc::new(Metrics::default());
-        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default());
+        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default()).unwrap();
         let twin = mgr();
         let mut rng = Rng::new(31);
         let seed = rng.normal_vec(4 * 2, 0.3);
@@ -786,7 +1180,7 @@ mod tests {
     fn feed_batch_counts_feed_lane_metrics() {
         let spec = SigSpec::new(2, 3).unwrap();
         let metrics = Arc::new(Metrics::default());
-        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default());
+        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default()).unwrap();
         let mut rng = Rng::new(33);
         let ids: Vec<SessionId> = (0..3)
             .map(|_| m.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap())
@@ -872,7 +1266,8 @@ mod tests {
         let m = SessionManager::with_config(
             Arc::clone(&metrics),
             SessionConfig { budget_bytes: Some(3 * per + per / 2), ..Default::default() },
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(4);
         let mut ids = vec![];
         for _ in 0..3 {
@@ -910,7 +1305,8 @@ mod tests {
             let m = SessionManager::with_config(
                 Arc::new(Metrics::default()),
                 SessionConfig { budget_bytes: Some(budget), ..Default::default() },
-            );
+            )
+            .unwrap();
             let mut open: Vec<SessionId> = vec![];
             let mut fed: Vec<bool> = vec![];
             for _ in 0..10 {
@@ -953,7 +1349,8 @@ mod tests {
                 sweep_interval: Duration::from_millis(50),
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(5);
         let idle = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
         let live = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
@@ -1079,5 +1476,287 @@ mod tests {
             "distinct-session feeds did not scale on {threads} threads: \
              best parallel/serial ratio {best_ratio:.2} (need < 0.9)"
         );
+    }
+
+    fn mgr_with(cfg: SessionConfig) -> SessionManager {
+        SessionManager::with_config(Arc::new(Metrics::default()), cfg).unwrap()
+    }
+
+    fn tmp_state_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("signax-session-{}-{}", name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn error_taxonomy_distinguishes_gone_reasons() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        // Never opened.
+        let m = mgr();
+        let e = m.query(SessionId(777), 0, 1).unwrap_err().to_string();
+        assert!(e.contains("never opened"), "got: {e}");
+        // Closed (both a later query and a double close say so).
+        let id = m.open(&spec, &[0.0, 0.0, 1.0, 1.0], 2).unwrap();
+        m.close(id).unwrap();
+        let e = m.query(id, 0, 1).unwrap_err().to_string();
+        assert!(e.contains("closed"), "got: {e}");
+        let e = m.close(id).unwrap_err().to_string();
+        assert!(e.contains("closed"), "got: {e}");
+        // Evicted with no spill store: destroyed, and the error says so.
+        let per = session_bytes(&spec, 4);
+        let m = mgr_with(SessionConfig {
+            budget_bytes: Some(per + per / 2),
+            ..Default::default()
+        });
+        let mut rng = Rng::new(41);
+        let victim = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
+        let _keeper = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
+        let e = m.query(victim, 0, 3).unwrap_err().to_string();
+        assert!(e.contains("evicted"), "got: {e}");
+        assert!(!e.contains("never opened") && !e.contains("is closed"), "got: {e}");
+    }
+
+    #[test]
+    fn spill_and_reload_is_bitwise() {
+        // The heart of the tentpole: with a spill store, eviction moves a
+        // session cold and the next touch reloads it bit-for-bit — every
+        // signature, query, and the byte accounting match an unbounded
+        // control manager.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let per = session_bytes(&spec, 4);
+        let metrics = Arc::new(Metrics::default());
+        let m = SessionManager::with_config(
+            Arc::clone(&metrics),
+            SessionConfig {
+                budget_bytes: Some(per + per / 2),
+                spill: SpillConfig::Memory,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let control = mgr();
+        let mut rng = Rng::new(42);
+        let pts_a = rng.normal_vec(4 * 2, 0.2);
+        let pts_b = rng.normal_vec(4 * 2, 0.2);
+        let a = m.open(&spec, &pts_a, 4).unwrap();
+        let ca = control.open(&spec, &pts_a, 4).unwrap();
+        // Opening b pushes over budget: a (the only candidate) spills.
+        let b = m.open(&spec, &pts_b, 4).unwrap();
+        assert_eq!(metrics.snapshot().sessions_spilled, 1);
+        assert_eq!(m.open_count(), 2, "spilled sessions stay open");
+        assert!(m.spilled_bytes() > 0);
+        assert!(m.resident_bytes() <= per + per / 2);
+        // Cold metadata answers without a reload.
+        assert_eq!(m.session_len(a).unwrap(), 4);
+        assert_eq!(m.session_spec(a).unwrap(), spec);
+        assert_eq!(metrics.snapshot().sessions_reloaded, 0);
+        // Touching a reloads it transparently, bitwise.
+        assert_eq!(m.query(a, 1, 3).unwrap(), control.query(ca, 1, 3).unwrap());
+        assert_eq!(metrics.snapshot().sessions_reloaded, 1);
+        assert_eq!(m.signature(a).unwrap(), control.signature(ca).unwrap());
+        // Reload re-enforced the budget, so b went cold in a's place;
+        // feeding b reloads *and extends* bitwise (feed-vs-eviction race
+        // resolves by reload, not by an error).
+        let chunk = rng.normal_vec(3 * 2, 0.2);
+        let cb = control.open(&spec, &pts_b, 4).unwrap();
+        let got = m.feed(b, &chunk, 3).unwrap();
+        let want = control.feed(cb, &chunk, 3).unwrap();
+        assert_eq!(got, want, "feed after spill diverged from never-spilled control");
+        assert_eq!(m.query(b, 2, 6).unwrap(), control.query(cb, 2, 6).unwrap());
+    }
+
+    #[test]
+    fn feed_batch_reloads_spilled_lanes_bitwise() {
+        // Lane-fused feeds hit the same reload path: a group where some
+        // sessions are cold still matches scalar feeds bit-for-bit.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let per = session_bytes(&spec, 4);
+        let m = mgr_with(SessionConfig {
+            budget_bytes: Some(2 * per + per / 2),
+            spill: SpillConfig::Memory,
+            ..Default::default()
+        });
+        let control = mgr();
+        let mut rng = Rng::new(43);
+        let mut ids = vec![];
+        for _ in 0..3 {
+            let pts = rng.normal_vec(4 * 2, 0.2);
+            let id = m.open(&spec, &pts, 4).unwrap();
+            let cid = control.open(&spec, &pts, 4).unwrap();
+            ids.push((id, cid));
+        }
+        // Budget fits two: the LRU session (the first) is now cold.
+        assert!(m.spilled_bytes() > 0, "expected at least one spill");
+        let feeds: Vec<(SessionId, Vec<f32>, usize)> = ids
+            .iter()
+            .map(|&(id, _)| (id, rng.normal_vec(2 * 2, 0.2), 2))
+            .collect();
+        let got = m.feed_batch(feeds.clone());
+        for (k, ((_, cid), (_, pts, count))) in ids.iter().zip(&feeds).enumerate() {
+            let want = control.feed(*cid, pts, *count).unwrap();
+            assert_eq!(
+                got[k].as_ref().unwrap(),
+                &want,
+                "lane {k} diverged after spill/reload"
+            );
+        }
+    }
+
+    #[test]
+    fn ttl_spills_instead_of_destroying_with_a_store() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let metrics = Arc::new(Metrics::default());
+        let m = SessionManager::with_config(
+            Arc::clone(&metrics),
+            SessionConfig {
+                ttl: Some(Duration::from_millis(150)),
+                sweep_interval: Duration::from_millis(40),
+                spill: SpillConfig::Memory,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(44);
+        let pts = rng.normal_vec(4 * 2, 0.2);
+        let control = mgr();
+        let id = m.open(&spec, &pts, 4).unwrap();
+        let cid = control.open(&spec, &pts, 4).unwrap();
+        // Wait out the TTL plus a couple of sweeps.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while metrics.snapshot().sessions_spilled == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        assert!(metrics.snapshot().sessions_spilled >= 1, "idle session never spilled");
+        assert_eq!(m.open_count(), 1, "TTL with a store must not destroy the session");
+        assert_eq!(metrics.snapshot().sessions_expired, 0);
+        // And it comes back bitwise.
+        assert_eq!(m.query(id, 0, 3).unwrap(), control.query(cid, 0, 3).unwrap());
+    }
+
+    #[test]
+    fn warm_restart_recovers_sessions_bitwise() {
+        // Kill-and-restart: everything a client could observe — interval
+        // queries, whole-stream signatures, lengths, further feeds, and
+        // the closed-session taxonomy — survives a process boundary via
+        // the feed-delta log, bitwise vs an unrestarted control.
+        let dir = tmp_state_dir("warmrestart");
+        let cfg = SessionConfig { spill: SpillConfig::Disk(dir.clone()), ..Default::default() };
+        let control = mgr();
+        let mut rng = Rng::new(45);
+        let specs =
+            [SigSpec::new(2, 3).unwrap(), SigSpec::new(3, 2).unwrap(), SigSpec::new(1, 4).unwrap()];
+        let mut ids = vec![];
+        let closed_id;
+        {
+            let m = mgr_with(cfg.clone());
+            for spec in &specs {
+                let d = spec.d();
+                let seed = rng.normal_vec(3 * d, 0.3);
+                let id = m.open(spec, &seed, 3).unwrap();
+                let cid = control.open(spec, &seed, 3).unwrap();
+                for _ in 0..2 {
+                    let chunk = rng.normal_vec(2 * d, 0.3);
+                    let got = m.feed(id, &chunk, 2).unwrap();
+                    let want = control.feed(cid, &chunk, 2).unwrap();
+                    assert_eq!(got, want);
+                }
+                ids.push((id, cid, spec.clone()));
+            }
+            // One session closed before the "crash" must stay closed.
+            let spec = &specs[0];
+            closed_id = m.open(spec, &rng.normal_vec(2 * spec.d(), 0.3), 2).unwrap();
+            m.close(closed_id).unwrap();
+            // Drop = orderly shutdown; the WAL flushes.
+        }
+        let m2 = mgr_with(cfg);
+        assert_eq!(m2.open_count(), ids.len(), "every open session recovered");
+        for (id, cid, _) in &ids {
+            assert_eq!(m2.session_len(*id).unwrap(), control.session_len(*cid).unwrap());
+            let len = control.session_len(*cid).unwrap();
+            assert_eq!(
+                m2.query(*id, 1, len - 1).unwrap(),
+                control.query(*cid, 1, len - 1).unwrap(),
+                "recovered interval query diverged"
+            );
+            assert_eq!(m2.signature(*id).unwrap(), control.signature(*cid).unwrap());
+        }
+        // Feeds continue bitwise after the restart.
+        let (id, cid, spec) = &ids[0];
+        let chunk = rng.normal_vec(2 * spec.d(), 0.3);
+        assert_eq!(
+            m2.feed(*id, &chunk, 2).unwrap(),
+            control.feed(*cid, &chunk, 2).unwrap(),
+            "post-restart feed diverged"
+        );
+        // The closed session stays closed, with the right reason.
+        let e = m2.query(closed_id, 0, 1).unwrap_err().to_string();
+        assert!(e.contains("closed"), "got: {e}");
+        // New ids never collide with recovered ones.
+        let fresh = m2.open(spec, &rng.normal_vec(2 * spec.d(), 0.3), 2).unwrap();
+        assert!(ids.iter().all(|(id, _, _)| *id != fresh) && fresh != closed_id);
+        drop(m2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn restart_twice_survives_spills_and_wal_replay() {
+        // Spilled-at-shutdown sessions recover too (the log supersedes
+        // stale blobs), and a second restart replays the extended log.
+        let dir = tmp_state_dir("restart2");
+        let spec = SigSpec::new(2, 3).unwrap();
+        let per = session_bytes(&spec, 4);
+        let cfg = SessionConfig {
+            budget_bytes: Some(per + per / 2),
+            spill: SpillConfig::Disk(dir.clone()),
+            ..Default::default()
+        };
+        let control = mgr();
+        let mut rng = Rng::new(46);
+        let pts_a = rng.normal_vec(4 * 2, 0.2);
+        let pts_b = rng.normal_vec(4 * 2, 0.2);
+        let (a, b, ca, cb);
+        {
+            let m = mgr_with(cfg.clone());
+            a = m.open(&spec, &pts_a, 4).unwrap();
+            b = m.open(&spec, &pts_b, 4).unwrap(); // spills a
+            ca = control.open(&spec, &pts_a, 4).unwrap();
+            cb = control.open(&spec, &pts_b, 4).unwrap();
+            assert!(m.spilled_bytes() > 0);
+        }
+        {
+            let m = mgr_with(cfg.clone());
+            assert_eq!(m.open_count(), 2);
+            assert_eq!(m.query(a, 1, 3).unwrap(), control.query(ca, 1, 3).unwrap());
+            let chunk = rng.normal_vec(2 * 2, 0.2);
+            assert_eq!(
+                m.feed(b, &chunk, 2).unwrap(),
+                control.feed(cb, &chunk, 2).unwrap()
+            );
+            m.flush_wal();
+        }
+        {
+            let m = mgr_with(cfg);
+            assert_eq!(
+                m.signature(b).unwrap(),
+                control.signature(cb).unwrap(),
+                "second restart lost the interleaved feed"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn id_striping_matches_placement() {
+        let spec = SigSpec::new(2, 2).unwrap();
+        let n = 3u64;
+        // Shard 1 of 3 (0-based): first_id = 2, stride = 3.
+        let m = mgr_with(SessionConfig { first_id: 2, id_stride: n, ..Default::default() });
+        let placement = crate::state::Placement::new(n as usize);
+        for _ in 0..4 {
+            let id = m.open(&spec, &[0.0, 0.0, 1.0, 1.0], 2).unwrap();
+            assert_eq!((id.0 - 2) % n, 0, "id {} off the shard's stride lattice", id.0);
+            assert_eq!(placement.locate(id.0), 1, "locate must find the issuing shard");
+        }
     }
 }

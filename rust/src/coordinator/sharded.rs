@@ -1,0 +1,251 @@
+//! N logical coordinators behind one front door, with spec-aware
+//! session placement.
+//!
+//! [`ShardedCoordinator`] owns `n` independent [`Coordinator`] instances
+//! and routes every request through the [`Placement`] policy
+//! ([`crate::state::placement`]):
+//!
+//! - **`OpenStream`** goes to [`Placement::place_open`]: same-spec
+//!   sessions co-locate on one shard in feed-lane-width groups
+//!   ([`crate::exec::LANE_BLOCK`]) before overflowing to the next, so
+//!   `Feed` traffic from a same-spec fleet still coalesces into
+//!   `Path::update_batch` lane sweeps instead of scattering one session
+//!   per shard and feeding scalar everywhere.
+//! - **Session ops** (`Feed` / `QueryInterval` / `LogSigQueryInterval` /
+//!   `CloseStream`) go to [`Placement::locate`]: shard `k` allocates ids
+//!   from the strided lattice `k + 1, k + 1 + n, …`
+//!   ([`SessionConfig::first_id`] / [`SessionConfig::id_stride`]), so the
+//!   owning shard is pure arithmetic on the id — no shared table, no
+//!   broadcast.
+//! - **Stateless requests** round-robin across shards.
+//!
+//! With a [`SpillConfig::Disk`] state dir, each shard persists under its
+//! own `shard-k/` subdirectory; because id striping is deterministic from
+//! `(k, n)`, a restarted fleet of the same width recovers every shard's
+//! sessions under the same ids and [`Placement::locate`] still finds
+//! them. `n = 1` degenerates to a plain [`Coordinator`] (every id maps to
+//! shard 0).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::state::{Placement, SpillConfig};
+
+use super::router::{Coordinator, CoordinatorConfig, Request, Response};
+use super::session::SessionConfig;
+
+/// `n` logical coordinator shards behind one `call` front door.
+pub struct ShardedCoordinator {
+    shards: Vec<Coordinator>,
+    placement: Placement,
+    /// Round-robin cursor for stateless traffic.
+    rr: AtomicUsize,
+}
+
+impl ShardedCoordinator {
+    /// Build `n` shards from one base configuration. Shard `k` gets
+    /// `first_id = k + 1, id_stride = n` (the lattice [`Placement::locate`]
+    /// inverts) and, when the base session config spills to disk, its own
+    /// `shard-k/` subdirectory of the state dir.
+    pub fn new(base: CoordinatorConfig, n: usize) -> anyhow::Result<ShardedCoordinator> {
+        let n = n.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut cfg = base.clone();
+            cfg.session = SessionConfig {
+                first_id: k as u64 + 1,
+                id_stride: n as u64,
+                spill: match &base.session.spill {
+                    SpillConfig::Disk(dir) => SpillConfig::Disk(dir.join(format!("shard-{k}"))),
+                    other => other.clone(),
+                },
+                ..base.session.clone()
+            };
+            shards.push(Coordinator::new(cfg)?);
+        }
+        Ok(ShardedCoordinator {
+            shards,
+            placement: Placement::new(n),
+            rr: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard that owns logical instance `k` (metrics, tests).
+    pub fn shard(&self, k: usize) -> &Coordinator {
+        &self.shards[k]
+    }
+
+    /// The placement policy (exposed so callers can predict routing).
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Which shard this request routes to.
+    fn route_of(&self, req: &Request) -> usize {
+        match req {
+            Request::OpenStream { d, depth, .. } => self.placement.place_open(*d, *depth),
+            Request::Feed { session, .. }
+            | Request::QueryInterval { session, .. }
+            | Request::LogSigQueryInterval { session, .. }
+            | Request::CloseStream { session } => self.placement.locate(session.0),
+            _ => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len(),
+        }
+    }
+
+    /// Serve one request on its owning shard.
+    pub fn call(&self, req: Request) -> anyhow::Result<Response> {
+        let shard = self.route_of(&req);
+        self.shards[shard].call(req)
+    }
+
+    /// Serve many requests, each on its owning shard (sequentially; the
+    /// per-shard coordinators do their own internal batching, and callers
+    /// wanting concurrency thread `call` themselves as with
+    /// [`Coordinator::call`]).
+    pub fn call_many(&self, reqs: Vec<Request>) -> Vec<anyhow::Result<Response>> {
+        reqs.into_iter().map(|r| self.call(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::SessionId;
+    use crate::data::synth::Rng;
+    use crate::signature::signature;
+    use crate::ta::SigSpec;
+
+    fn native_sharded(n: usize) -> ShardedCoordinator {
+        ShardedCoordinator::new(CoordinatorConfig::native_only().with_native_batch(0), n).unwrap()
+    }
+
+    #[test]
+    fn open_feed_query_close_roundtrip_across_shards() {
+        let sc = native_sharded(3);
+        let mut rng = Rng::new(31);
+        // Distinct specs so opens spread; every op must find its session
+        // again purely from the id. A twin `Path` per session is the
+        // bitwise oracle (the session table runs the identical code).
+        let mut sessions = Vec::new();
+        for (d, depth) in [(2usize, 3usize), (3, 2), (2, 3), (4, 2)] {
+            let pts = rng.normal_vec(4 * d, 0.5);
+            let resp = sc
+                .call(Request::OpenStream { points: pts.clone(), stream: 4, d, depth })
+                .unwrap();
+            let id = resp.session.unwrap();
+            // The issuing shard is recoverable from the id alone.
+            assert_eq!(sc.placement().locate(id.0), ((id.0 - 1) % 3) as usize);
+            let spec = SigSpec::new(d, depth).unwrap();
+            let twin = crate::path::Path::new(&spec, &pts, 4).unwrap();
+            sessions.push((id, d, twin));
+        }
+        // Ids are unique across shards (strided lattices are disjoint).
+        let mut ids: Vec<u64> = sessions.iter().map(|(id, ..)| id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), sessions.len(), "id collision across shards");
+
+        for (id, d, twin) in &mut sessions {
+            let extra = rng.normal_vec(2 * *d, 0.5);
+            twin.update(&extra, 2).unwrap();
+            let fed = sc
+                .call(Request::Feed { session: *id, points: extra, count: 2 })
+                .unwrap();
+            assert_eq!(fed.session, Some(*id));
+            assert_eq!(fed.values, twin.signature(), "feed through the sharded front door");
+        }
+        for (id, _d, twin) in &sessions {
+            let q = sc.call(Request::QueryInterval { session: *id, i: 1, j: 5 }).unwrap();
+            assert_eq!(q.values, twin.query(1, 5).unwrap(), "interval query != twin path");
+        }
+        let (id0, ..) = sessions[0];
+        sc.call(Request::CloseStream { session: id0 }).unwrap();
+        let err = sc.call(Request::QueryInterval { session: id0, i: 0, j: 1 }).unwrap_err();
+        assert!(err.to_string().contains("closed"), "taxonomy survives sharding: {err}");
+        // An unknown id still routes deterministically and errors cleanly.
+        let err = sc
+            .call(Request::QueryInterval { session: SessionId(998), i: 0, j: 1 })
+            .unwrap_err();
+        assert!(err.to_string().contains("never opened"), "{err}");
+    }
+
+    #[test]
+    fn same_spec_opens_co_locate_in_lane_blocks() {
+        let sc = native_sharded(4);
+        let mut rng = Rng::new(32);
+        let group = crate::exec::LANE_BLOCK;
+        // One lane block of same-spec opens must land on ONE shard.
+        let mut homes = std::collections::HashSet::new();
+        for _ in 0..group {
+            let pts = rng.normal_vec(3 * 2, 0.5);
+            let resp = sc
+                .call(Request::OpenStream { points: pts, stream: 3, d: 2, depth: 3 })
+                .unwrap();
+            homes.insert(sc.placement().locate(resp.session.unwrap().0));
+        }
+        assert_eq!(homes.len(), 1, "a lane block scattered across shards: {homes:?}");
+        // The next block steps to the following shard.
+        let pts = rng.normal_vec(3 * 2, 0.5);
+        let resp =
+            sc.call(Request::OpenStream { points: pts, stream: 3, d: 2, depth: 3 }).unwrap();
+        let next = sc.placement().locate(resp.session.unwrap().0);
+        let first = *homes.iter().next().unwrap();
+        assert_eq!(next, (first + 1) % 4, "overflow block should step one shard over");
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_plain_coordinator() {
+        let sc = native_sharded(1);
+        let mut rng = Rng::new(33);
+        let spec = SigSpec::new(2, 2).unwrap();
+        let p = rng.normal_vec(5 * 2, 0.4);
+        let resp = sc
+            .call(Request::Signature {
+                path: p.clone(),
+                stream: 5,
+                d: 2,
+                depth: 2,
+                precision: crate::ta::Precision::F32,
+            })
+            .unwrap();
+        assert_eq!(resp.values, signature(&p, 5, &spec));
+        let open = sc
+            .call(Request::OpenStream { points: p, stream: 5, d: 2, depth: 2 })
+            .unwrap();
+        assert_eq!(sc.placement().locate(open.session.unwrap().0), 0);
+    }
+
+    #[test]
+    fn stateless_round_robin_spreads_shards() {
+        let sc = native_sharded(2);
+        let mut rng = Rng::new(34);
+        let spec = SigSpec::new(2, 2).unwrap();
+        for _ in 0..4 {
+            let p = rng.normal_vec(4 * 2, 0.4);
+            let resp = sc
+                .call(Request::Signature {
+                    path: p.clone(),
+                    stream: 4,
+                    d: 2,
+                    depth: 2,
+                    precision: crate::ta::Precision::F32,
+                })
+                .unwrap();
+            assert_eq!(resp.values, signature(&p, 4, &spec));
+        }
+        let served: u64 = (0..2)
+            .map(|k| sc.shard(k).metrics().snapshot().native_requests)
+            .sum();
+        assert_eq!(served, 4);
+        for k in 0..2 {
+            assert_eq!(
+                sc.shard(k).metrics().snapshot().native_requests,
+                2,
+                "round-robin should split stateless traffic evenly"
+            );
+        }
+    }
+}

@@ -7,6 +7,14 @@
 //! feeder sessions per spec. Both signals are deliberately coarse — they
 //! steer *batch formation* (how long to linger, how wide to open a lane),
 //! never numerical results.
+//!
+//! Feeder-ring lifecycle vs. session durability: a slot is removed only
+//! by [`ShapeMix::forget_feeder`], which the coordinator calls on
+//! `CloseStream` alone. Spill-to-disk eviction and the transparent
+//! reload on the next touch ([`crate::state`]) deliberately do **not**
+//! forget feeders — a spilled session is still the same logical stream
+//! under the same id, and its next feed after reload should rejoin its
+//! lane peers immediately instead of paying the ring-rebuild round.
 
 use crate::ta::Precision;
 use std::collections::HashMap;
@@ -367,6 +375,25 @@ mod tests {
             mix.record(ShapeKey::signature(2, 3, 8)); // unrelated flood
         }
         assert_eq!(mix.record_feeder(key, 1), 2, "peer must still count as recent");
+    }
+
+    #[test]
+    fn feeder_ring_survives_spill_and_reload_but_not_close() {
+        // Durability contract: spill-to-disk eviction + reload keeps the
+        // session id, and nothing in that lifecycle calls
+        // `forget_feeder` — so a reloaded session's next feed still
+        // counts it among the lane peers (no ring-rebuild round). Only
+        // CloseStream forgets a feeder.
+        let mix = ShapeMix::new(64);
+        let key = ShapeKey::feed(3, 4);
+        assert_eq!(mix.record_feeder(key, 1), 1);
+        assert_eq!(mix.record_feeder(key, 2), 2);
+        // Session 1 spills and reloads: no mix call happens in between,
+        // so its very next feed after reload is still peer #2.
+        assert_eq!(mix.record_feeder(key, 1), 2, "reloaded session lost its slot");
+        // Closing really does forget: the survivor no longer sees a peer.
+        mix.forget_feeder(key, 1);
+        assert_eq!(mix.record_feeder(key, 2), 1, "closed session still quoted as a peer");
     }
 
     #[test]

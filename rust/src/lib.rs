@@ -4,8 +4,8 @@
 //! computations of the signature and logsignature transforms, on both CPU
 //! and GPU"* (Kidger & Lyons, ICLR 2021).
 //!
-//! The crate is organised in three layers, with one cross-cutting
-//! planning layer:
+//! The crate is organised in three layers, with two cross-cutting
+//! layers (execution planning, durable state):
 //!
 //! - **Native engine** ([`ta`], [`signature`], [`logsignature`], [`words`],
 //!   [`path`], [`parallel`]): the full algorithmic content of the paper —
@@ -82,7 +82,21 @@
 //!   preserves prior behaviour bitwise): `F64` requests upcast at the
 //!   native boundary, run the f64 kernels, and downcast the result — and
 //!   precision is part of the microbatch queue identity, so f32 and f64
-//!   rows of one logical shape never share a flush.
+//!   rows of one logical shape never share a flush — the logsignature
+//!   surface included, whose f64 arm runs the generic epilogue at
+//!   `E = f64`.
+//! - **Durable state** ([`state`]): the persistence layer under the
+//!   session table. A versioned binary codec serializes `Path` state
+//!   bitwise in both precisions ([`path::Path::serialize_into`] /
+//!   [`path::Path::deserialize`]); a [`state::SessionStore`] lets LRU
+//!   eviction and TTL expiry *spill* sessions (memory or disk) instead of
+//!   destroying them, with transparent bitwise reload on the next touch;
+//!   an append-only feed-delta log ([`state::FeedLog`], fsync-batched by
+//!   the session sweeper) gives `signax serve-stream --state-dir`
+//!   warm-restart recovery; and [`state::Placement`] hash-shards session
+//!   ids across N logical coordinators
+//!   ([`coordinator::ShardedCoordinator`]) while keeping same-spec
+//!   sessions co-located in feed-lane-width groups.
 //!
 //! Baselines reproducing the systems the paper benchmarks against live in
 //! [`baselines`]; the benchmark harness regenerating every table and figure
@@ -111,6 +125,7 @@ pub mod parallel;
 pub mod path;
 pub mod runtime;
 pub mod signature;
+pub mod state;
 pub mod substrate;
 pub mod ta;
 pub mod words;

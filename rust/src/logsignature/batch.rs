@@ -29,19 +29,21 @@ use super::plan::LogSigPlan;
 use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
 use crate::signature::{signature_batch_planned, signature_batch_vjp_planned, SigConfig};
 use crate::ta::log::{log_into_ws, log_vjp, LogWorkspace};
-use crate::ta::SigSpec;
+use crate::ta::{Elem, SigSpec};
 
 /// Batched logsignature over a `(batch, stream, d)` buffer. Returns
 /// `(batch, plan.dim())`. Strategy selection goes through
 /// [`crate::exec::ExecPlanner`]; `threads` workers share the lane blocks.
-pub fn logsignature_batch(
-    paths: &[f32],
+/// Generic over the element precision (`&[f32]` call sites infer
+/// `E = f32` unchanged); the planner's shape carries `E::PRECISION`.
+pub fn logsignature_batch<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     plan: &LogSigPlan,
     threads: usize,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let cfg = SigConfig { threads, ..SigConfig::serial() };
     logsignature_batch_with(paths, batch, stream, spec, plan, &cfg)
 }
@@ -49,20 +51,20 @@ pub fn logsignature_batch(
 /// Batched logsignature with full options (basepoint / initial / inverse
 /// apply to every lane, exactly as in
 /// [`crate::signature::signature_batch_with`]).
-pub fn logsignature_batch_with(
-    paths: &[f32],
+pub fn logsignature_batch_with<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     plan: &LogSigPlan,
     cfg: &SigConfig,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     let exec = ExecPlanner::new(cfg.threads).plan_forward(&WorkShape {
         batch,
         points: cfg.effective_len(stream),
         d: spec.d(),
         depth: spec.depth(),
-        dtype: crate::ta::Precision::F32,
+        dtype: E::PRECISION,
     });
     logsignature_batch_planned(paths, batch, stream, spec, plan, cfg, exec)
 }
@@ -74,18 +76,18 @@ pub fn logsignature_batch_with(
 /// reused workspace — the same op sequence as the scalar path, so lanes
 /// are bitwise identical to scalar logsignatures under `Scalar` and
 /// `LaneFused` plans.
-pub fn logsignature_batch_planned(
-    paths: &[f32],
+pub fn logsignature_batch_planned<E: Elem>(
+    paths: &[E],
     batch: usize,
     stream: usize,
     spec: &SigSpec,
     plan: &LogSigPlan,
     cfg: &SigConfig,
     exec: ExecPlan,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     plan.check_compatible(spec)?;
     let sigs = signature_batch_planned(paths, batch, stream, spec, cfg, exec)?;
-    let mut out = vec![0.0f32; batch * plan.dim()];
+    let mut out = vec![E::ZERO; batch * plan.dim()];
     project_sigs_into(spec, plan, &sigs, batch, &mut out);
     Ok(out)
 }
@@ -97,19 +99,19 @@ pub fn logsignature_batch_planned(
 /// train path. One reused [`LogWorkspace`] serves every lane; each lane
 /// replays exactly the scalar `log_into` + `project` arithmetic. The
 /// caller has validated plan/spec compatibility and buffer sizes.
-pub(crate) fn project_sigs_into(
+pub(crate) fn project_sigs_into<E: Elem>(
     spec: &SigSpec,
     plan: &LogSigPlan,
-    sigs: &[f32],
+    sigs: &[E],
     batch: usize,
-    out: &mut [f32],
+    out: &mut [E],
 ) {
     let len = spec.sig_len();
     let dim = plan.dim();
     debug_assert_eq!(sigs.len(), batch * len);
     debug_assert_eq!(out.len(), batch * dim);
     let mut lw = LogWorkspace::new(spec);
-    let mut logtensor = spec.zeros();
+    let mut logtensor = spec.zeros_elem::<E>();
     for b in 0..batch {
         log_into_ws(spec, &sigs[b * len..(b + 1) * len], &mut logtensor, &mut lw);
         plan.project_into(&mut logtensor, &mut out[b * dim..(b + 1) * dim]);

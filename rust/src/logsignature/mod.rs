@@ -36,7 +36,7 @@ use crate::signature::backward::signature_vjp_with;
 use crate::signature::forward::signature_with;
 use crate::signature::SigConfig;
 use crate::ta::log::{log_into, log_into_ws, log_vjp, LogWorkspace};
-use crate::ta::SigSpec;
+use crate::ta::{Elem, SigSpec};
 
 /// `LogSig^N(path)` in the plan's basis.
 ///
@@ -52,14 +52,18 @@ pub fn logsignature(path: &[f32], stream: usize, spec: &SigSpec, plan: &LogSigPl
 /// initial / inverse), fallible: a mismatched plan, malformed path buffer,
 /// or bad basepoint/initial shape is an `Err`, never a panic. The fallible
 /// mirror of the deprecated [`logsignature`], completing the panic-safety
-/// contract across every logsignature entry point.
-pub fn logsignature_with(
-    path: &[f32],
+/// contract across every logsignature entry point. Generic over the
+/// element precision (bare `&[f32]` call sites infer `E = f32`): the f64
+/// instantiation runs the same signature sweep, tensor log, and basis
+/// projection in double precision — the serving layer's f64 logsignature
+/// arm is exactly this function at `E = f64`.
+pub fn logsignature_with<E: Elem>(
+    path: &[E],
     stream: usize,
     spec: &SigSpec,
     plan: &LogSigPlan,
     cfg: &SigConfig,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     plan.check_compatible(spec)?;
     let sig = signature_with(path, stream, spec, cfg)?;
     logsignature_from_sig(&sig, spec, plan)
@@ -69,15 +73,21 @@ pub fn logsignature_with(
 /// buffer, one log-tensor buffer, and the tensor-log Horner workspace.
 /// `Path::logsig_query_into` and the batched epilogue thread one of these
 /// through repeated queries/lanes so the hot path allocates nothing.
-pub struct LogSigWorkspace {
-    pub(crate) sig: Vec<f32>,
-    pub(crate) logtensor: Vec<f32>,
-    pub(crate) lw: LogWorkspace,
+/// Generic over the element precision (`f32` default keeps existing call
+/// sites unchanged).
+pub struct LogSigWorkspace<E: Elem = f32> {
+    pub(crate) sig: Vec<E>,
+    pub(crate) logtensor: Vec<E>,
+    pub(crate) lw: LogWorkspace<E>,
 }
 
-impl LogSigWorkspace {
-    pub fn new(spec: &SigSpec) -> LogSigWorkspace {
-        LogSigWorkspace { sig: spec.zeros(), logtensor: spec.zeros(), lw: LogWorkspace::new(spec) }
+impl<E: Elem> LogSigWorkspace<E> {
+    pub fn new(spec: &SigSpec) -> LogSigWorkspace<E> {
+        LogSigWorkspace {
+            sig: spec.zeros_elem::<E>(),
+            logtensor: spec.zeros_elem::<E>(),
+            lw: LogWorkspace::new(spec),
+        }
     }
 
     /// Errors unless this workspace was sized for `spec` (reusing one
@@ -94,13 +104,13 @@ impl LogSigWorkspace {
 
     /// The internal signature buffer (callers stage the queried signature
     /// here before [`LogSigWorkspace::project_sig_into`]).
-    pub(crate) fn sig_mut(&mut self) -> &mut [f32] {
+    pub(crate) fn sig_mut(&mut self) -> &mut [E] {
         &mut self.sig
     }
 
     /// `out = plan.project(log(self.sig))`, zero allocations. The caller
     /// has already validated plan/spec compatibility and buffer sizes.
-    pub(crate) fn project_sig_into(&mut self, spec: &SigSpec, plan: &LogSigPlan, out: &mut [f32]) {
+    pub(crate) fn project_sig_into(&mut self, spec: &SigSpec, plan: &LogSigPlan, out: &mut [E]) {
         log_into_ws(spec, &self.sig, &mut self.logtensor, &mut self.lw);
         plan.project_into(&mut self.logtensor, out);
     }
@@ -111,11 +121,11 @@ impl LogSigWorkspace {
 /// if `plan` was built for a different `SigSpec` (a mismatched plan would
 /// otherwise silently gather wrong indices) or the signature buffer has
 /// the wrong length.
-pub fn logsignature_from_sig(
-    sig: &[f32],
+pub fn logsignature_from_sig<E: Elem>(
+    sig: &[E],
     spec: &SigSpec,
     plan: &LogSigPlan,
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<Vec<E>> {
     plan.check_compatible(spec)?;
     anyhow::ensure!(
         sig.len() == spec.sig_len(),
@@ -123,7 +133,7 @@ pub fn logsignature_from_sig(
         sig.len(),
         spec.sig_len()
     );
-    let mut logtensor = spec.zeros();
+    let mut logtensor = spec.zeros_elem::<E>();
     log_into(spec, sig, &mut logtensor);
     Ok(plan.project(&logtensor))
 }
@@ -437,7 +447,7 @@ mod tests {
     fn workspace_spec_check() {
         let spec = SigSpec::new(2, 3).unwrap();
         let other = SigSpec::new(3, 4).unwrap();
-        let ws = LogSigWorkspace::new(&spec);
+        let ws: LogSigWorkspace = LogSigWorkspace::new(&spec);
         assert!(ws.check_spec(&spec).is_ok());
         assert!(ws.check_spec(&other).is_err());
     }

@@ -3,7 +3,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::ta::SigSpec;
+use crate::ta::{Elem, SigSpec};
 use crate::words::{bracket_expansion, lyndon_words, witt_dimension, word_index};
 
 /// Which representation of the logsignature to produce (§4.3).
@@ -110,8 +110,11 @@ impl LogSigPlan {
         self.entries.iter().map(|e| (e.level, e.index)).collect()
     }
 
-    /// Project a log tensor onto the plan's basis coefficients.
-    pub fn project(&self, logtensor: &[f32]) -> Vec<f32> {
+    /// Project a log tensor onto the plan's basis coefficients. Generic
+    /// over the element precision: the plan itself is static index data
+    /// (the `f32` bracket coefficients widen losslessly to `f64` through
+    /// `E::from_f32`, the identity at `f32`).
+    pub fn project<E: Elem>(&self, logtensor: &[E]) -> Vec<E> {
         debug_assert_eq!(logtensor.len(), self.spec.sig_len());
         match self.basis {
             LogSigBasis::Expanded => logtensor.to_vec(),
@@ -122,7 +125,7 @@ impl LogSigPlan {
                 .collect(),
             LogSigBasis::Lyndon => {
                 let mut residual = logtensor.to_vec();
-                let mut out = vec![0.0f32; self.dim];
+                let mut out = vec![E::ZERO; self.dim];
                 self.project_into(&mut residual, &mut out);
                 out
             }
@@ -135,7 +138,7 @@ impl LogSigPlan {
     /// runs its forward substitution in place, so `logtensor` is consumed
     /// as scratch (its contents are unspecified afterwards); Expanded and
     /// Words leave it untouched. Bitwise identical to [`Self::project`].
-    pub fn project_into(&self, logtensor: &mut [f32], out: &mut [f32]) {
+    pub fn project_into<E: Elem>(&self, logtensor: &mut [E], out: &mut [E]) {
         debug_assert_eq!(logtensor.len(), self.spec.sig_len());
         debug_assert_eq!(out.len(), self.dim);
         match self.basis {
@@ -153,9 +156,9 @@ impl LogSigPlan {
                     let lvl = self.spec.level_mut(logtensor, e.level);
                     let alpha = lvl[e.index];
                     *o = alpha;
-                    if alpha != 0.0 {
+                    if alpha != E::ZERO {
                         for &(idx, coeff) in &e.expansion {
-                            lvl[idx] -= alpha * coeff;
+                            lvl[idx] -= alpha * E::from_f32(coeff);
                         }
                     }
                 }
@@ -166,12 +169,12 @@ impl LogSigPlan {
     /// VJP of [`Self::project`]: cotangent on coefficients → cotangent on
     /// the log tensor. (The projection is linear, so this is its
     /// transpose.)
-    pub fn project_vjp(&self, g: &[f32]) -> Vec<f32> {
+    pub fn project_vjp<E: Elem>(&self, g: &[E]) -> Vec<E> {
         debug_assert_eq!(g.len(), self.dim);
         match self.basis {
             LogSigBasis::Expanded => g.to_vec(),
             LogSigBasis::Words => {
-                let mut out = self.spec.zeros();
+                let mut out = self.spec.zeros_elem::<E>();
                 for (e, &gv) in self.entries.iter().zip(g) {
                     self.spec.level_mut(&mut out, e.level)[e.index] += gv;
                 }
@@ -183,12 +186,12 @@ impl LogSigPlan {
                 //   α_j = r[pos_j];  r -= α_j · φ_j.
                 // Reverse: g_r starts at 0; for j = last..first:
                 //   gα_total = g[j] - <φ_j, g_r>;  g_r[pos_j] += gα_total.
-                let mut gr = self.spec.zeros();
+                let mut gr = self.spec.zeros_elem::<E>();
                 for (e, &gv) in self.entries.iter().zip(g).rev() {
                     let lvl = self.spec.level_mut(&mut gr, e.level);
                     let mut g_alpha = gv;
                     for &(idx, coeff) in &e.expansion {
-                        g_alpha -= coeff * lvl[idx];
+                        g_alpha -= E::from_f32(coeff) * lvl[idx];
                     }
                     lvl[e.index] += g_alpha;
                 }

@@ -11,14 +11,18 @@
 //!                 throughput/latency + metrics.
 //! - `serve-stream` — run a stateful streaming workload (open / feed /
 //!                 interval-query / close sessions) through the
-//!                 coordinator, with optional memory budget and idle TTL.
+//!                 coordinator, with optional memory budget and idle TTL;
+//!                 `--state-dir` makes sessions durable (spill-to-disk
+//!                 eviction + warm-restart recovery) and `--shards` runs
+//!                 N id-striped logical coordinators.
 //! - `info`      — artifact registry / platform diagnostics.
 
 use std::io::Write as _;
 use std::time::{Duration, Instant};
 
 use signax::bench::{run_table, table_ids, BenchCtx, Scale};
-use signax::coordinator::{Coordinator, CoordinatorConfig, Request, SessionConfig};
+use signax::coordinator::{Coordinator, CoordinatorConfig, Request, SessionConfig, ShardedCoordinator};
+use signax::state::SpillConfig;
 use signax::data::gbm::{gbm_batch, GbmConfig};
 use signax::deepsig::{accuracy, train_step, ModelConfig, Params, SigBackend};
 use signax::logsignature::{logsignature_with, LogSigBasis, LogSigPlan};
@@ -74,7 +78,14 @@ fn cli() -> Cli {
                 .opt("depth", "depth", "4")
                 .opt("query-every", "interval query after every K feeds (0 = never)", "8")
                 .opt("budget-mb", "session memory budget, MiB (0 = unbounded)", "0")
-                .opt("ttl-ms", "evict sessions idle for this long, ms (0 = off)", "0"),
+                .opt("ttl-ms", "evict sessions idle for this long, ms (0 = off)", "0")
+                .opt(
+                    "state-dir",
+                    "durable session state dir: eviction spills here instead of destroying, \
+                     and a restart with the same dir recovers every live session (empty = off)",
+                    "",
+                )
+                .opt("shards", "logical coordinator shards (session ids stripe across them)", "1"),
             Command::new("info", "artifact registry / platform diagnostics")
                 .opt("artifacts", "artifact directory", "artifacts"),
         ],
@@ -348,6 +359,8 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     let query_every = args.get_usize("query-every", 8)?;
     let budget_mb = args.get_usize("budget-mb", 0)?;
     let ttl_ms = args.get_usize("ttl-ms", 0)?;
+    let state_dir = args.get_or("state-dir", "");
+    let shards = args.get_usize("shards", 1)?.max(1);
 
     let mut session = SessionConfig::default();
     if budget_mb > 0 {
@@ -356,11 +369,21 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     if ttl_ms > 0 {
         session.ttl = Some(Duration::from_millis(ttl_ms as u64));
     }
-    let coord = Coordinator::new(CoordinatorConfig { session, ..CoordinatorConfig::native_only() })?;
+    if !state_dir.is_empty() {
+        // Durable sessions: eviction/expiry spill to disk and reload on
+        // the next touch; the feed log makes a restart with the same dir
+        // recover every live session (each shard under its own subdir).
+        session.spill = SpillConfig::Disk(std::path::PathBuf::from(state_dir));
+    }
+    let coord = ShardedCoordinator::new(
+        CoordinatorConfig { session, ..CoordinatorConfig::native_only() },
+        shards,
+    )?;
     println!(
-        "coordinator up (streaming, budget: {}, ttl: {})",
+        "coordinator up (streaming, budget: {}, ttl: {}, state: {}, shards: {shards})",
         if budget_mb > 0 { format!("{budget_mb} MiB") } else { "unbounded".into() },
         if ttl_ms > 0 { format!("{ttl_ms} ms") } else { "off".into() },
+        if state_dir.is_empty() { "in-memory".into() } else { format!("durable at {state_dir}") },
     );
 
     let ok = AtomicU64::new(0);
@@ -423,25 +446,33 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     let dt = t0.elapsed();
     let ok = ok.load(Ordering::Relaxed);
     let errs = errs.load(Ordering::Relaxed);
-    let snap = coord.metrics().snapshot();
     println!(
-        "{ok} ok / {errs} errors in {:.2}s  ({:.0} req/s, mean latency {:?})",
+        "{ok} ok / {errs} errors in {:.2}s  ({:.0} req/s)",
         dt.as_secs_f64(),
         (ok + errs) as f64 / dt.as_secs_f64(),
-        snap.mean_latency
     );
-    println!("metrics: {}", snap.render());
-    println!(
-        "sessions: open={} resident={:.2} MiB evicted={} expired={}",
-        snap.open_sessions,
-        snap.session_bytes as f64 / (1 << 20) as f64,
-        snap.sessions_evicted,
-        snap.sessions_expired
-    );
-    println!(
-        "adaptive dispatch: {} (feed_lane_batches = cross-session fused Path::update sweeps)",
-        snap.render_dispatch()
-    );
+    for k in 0..coord.num_shards() {
+        let snap = coord.shard(k).metrics().snapshot();
+        let label = if coord.num_shards() > 1 { format!("[shard {k}] ") } else { String::new() };
+        println!("{label}metrics: {} (mean latency {:?})", snap.render(), snap.mean_latency);
+        println!(
+            "{label}sessions: open={} resident={:.2} MiB evicted={} expired={} spilled={} \
+             reloaded={} spilled_bytes={} wal_appends={}",
+            snap.open_sessions,
+            snap.session_bytes as f64 / (1 << 20) as f64,
+            snap.sessions_evicted,
+            snap.sessions_expired,
+            snap.sessions_spilled,
+            snap.sessions_reloaded,
+            snap.spilled_bytes,
+            snap.wal_appends
+        );
+        println!(
+            "{label}adaptive dispatch: {} (feed_lane_batches = cross-session fused \
+             Path::update sweeps)",
+            snap.render_dispatch()
+        );
+    }
     Ok(())
 }
 

@@ -18,28 +18,37 @@
 //! slow exact fallback used by tests and benchmarks.
 
 use crate::logsignature::{logsignature_from_sig, LogSigPlan, LogSigWorkspace};
-use crate::signature::forward::{signature, two_point_signature_into};
+use crate::signature::forward::{signature_with, two_point_signature_into};
+use crate::signature::SigConfig;
 use crate::ta::batch::{fused_mexp_batch, fused_mexp_left_batch, unpack_lane, BatchWorkspace};
 use crate::ta::fused::{fused_mexp, fused_mexp_left};
 use crate::ta::mul::mul_into;
-use crate::ta::{SigSpec, Workspace};
+use crate::ta::{Elem, SigSpec, Workspace};
 
 /// Precomputed path with O(1) interval signature queries and streaming
 /// updates (Signatory's `Path` class).
-pub struct Path {
+///
+/// Generic over the sealed element precision [`Elem`] (`f32` default, so
+/// bare `Path` call sites are unchanged); the f64 instantiation runs the
+/// same fused sweeps in double precision. The precomputed buffers —
+/// `points`, expanding signatures, inverted signatures — *are* the state:
+/// [`Path::serialize_into`] / [`Path::deserialize`] (in [`crate::state`])
+/// round-trip them bitwise, and the transient [`Workspace`] is rebuilt on
+/// load.
+pub struct Path<E: Elem = f32> {
     spec: SigSpec,
     /// Points, `(len, d)` row-major.
-    points: Vec<f32>,
+    points: Vec<E>,
     /// `sigs[j-1]` = Sig(x_0..x_j) for j = 1..len-1, each `sig_len` long.
-    sigs: Vec<f32>,
+    sigs: Vec<E>,
     /// `inv_sigs[j-1]` = Sig(x_0..x_j)^{-1}.
-    inv_sigs: Vec<f32>,
-    ws: Workspace,
+    inv_sigs: Vec<E>,
+    ws: Workspace<E>,
 }
 
-impl Path {
+impl<E: Elem> Path<E> {
     /// Build from a `(stream, d)` buffer with `stream >= 2`. O(L) work.
-    pub fn new(spec: &SigSpec, points: &[f32], stream: usize) -> anyhow::Result<Path> {
+    pub fn new(spec: &SigSpec, points: &[E], stream: usize) -> anyhow::Result<Path<E>> {
         anyhow::ensure!(stream >= 2, "need at least two points");
         anyhow::ensure!(points.len() == stream * spec.d(), "bad point buffer length");
         let mut path = Path {
@@ -53,7 +62,39 @@ impl Path {
         Ok(path)
     }
 
-    fn extend_points(&mut self, new_points: &[f32], count: usize) {
+    /// Reassemble a `Path` from its serialized buffers (the codec's
+    /// constructor): validates the mutual shape invariants, then rebuilds
+    /// the transient workspace. The buffers are adopted verbatim, which is
+    /// what makes a reload bitwise — no recomputation happens here.
+    pub(crate) fn from_raw_parts(
+        spec: SigSpec,
+        points: Vec<E>,
+        sigs: Vec<E>,
+        inv_sigs: Vec<E>,
+    ) -> anyhow::Result<Path<E>> {
+        let d = spec.d();
+        let len = spec.sig_len();
+        anyhow::ensure!(d > 0 && points.len() % d == 0, "bad point buffer length");
+        let stream = points.len() / d;
+        anyhow::ensure!(stream >= 2, "need at least two points");
+        anyhow::ensure!(
+            sigs.len() == (stream - 1) * len && inv_sigs.len() == sigs.len(),
+            "signature buffers ({} / {}) do not match {} points of sig_len {len}",
+            sigs.len(),
+            inv_sigs.len(),
+            stream
+        );
+        let ws = Workspace::new(&spec);
+        Ok(Path { spec, points, sigs, inv_sigs, ws })
+    }
+
+    /// The persistent state, by reference: `(spec, points, sigs,
+    /// inv_sigs)` — everything [`Path::from_raw_parts`] needs back.
+    pub(crate) fn raw_parts(&self) -> (&SigSpec, &[E], &[E], &[E]) {
+        (&self.spec, &self.points, &self.sigs, &self.inv_sigs)
+    }
+
+    fn extend_points(&mut self, new_points: &[E], count: usize) {
         let d = self.spec.d();
         let len = self.spec.sig_len();
         let had = self.len();
@@ -63,15 +104,15 @@ impl Path {
         let mut cur = if had >= 2 {
             self.sigs[self.sigs.len() - len..].to_vec()
         } else {
-            self.spec.zeros()
+            self.spec.zeros_elem::<E>()
         };
         let mut cur_inv = if had >= 2 {
             self.inv_sigs[self.inv_sigs.len() - len..].to_vec()
         } else {
-            self.spec.zeros()
+            self.spec.zeros_elem::<E>()
         };
-        let mut z = vec![0.0f32; d];
-        let mut neg_z = vec![0.0f32; d];
+        let mut z = vec![E::ZERO; d];
+        let mut neg_z = vec![E::ZERO; d];
         let start = had.max(1);
         for j in start..total {
             for c in 0..d {
@@ -89,7 +130,7 @@ impl Path {
 
     /// Append new points ("keeping the signature up-to-date", §5.5;
     /// Signatory's `Path.update`). O(new points) work.
-    pub fn update(&mut self, new_points: &[f32], count: usize) -> anyhow::Result<()> {
+    pub fn update(&mut self, new_points: &[E], count: usize) -> anyhow::Result<()> {
         anyhow::ensure!(count >= 1, "no points to add");
         anyhow::ensure!(new_points.len() == count * self.spec.d(), "bad buffer length");
         self.extend_points(new_points, count);
@@ -111,8 +152,8 @@ impl Path {
 
     /// `Sig(x_i .. x_j)` (0-based, inclusive endpoints, `i < j`).
     /// **O(1) in the path length**: one ⊠ (or a copy when `i == 0`).
-    pub fn query(&self, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
-        let mut out = vec![0.0f32; self.spec.sig_len()];
+    pub fn query(&self, i: usize, j: usize) -> anyhow::Result<Vec<E>> {
+        let mut out = vec![E::ZERO; self.spec.sig_len()];
         self.query_into(i, j, &mut out)?;
         Ok(out)
     }
@@ -125,7 +166,7 @@ impl Path {
     /// entirely: the signature of a two-point path is `exp` of the
     /// increment (§2.2), which is both cheaper than a full ⊠ and immune to
     /// the distant-interval cancellation the paper cautions about.
-    pub fn query_into(&self, i: usize, j: usize, out: &mut [f32]) -> anyhow::Result<()> {
+    pub fn query_into(&self, i: usize, j: usize, out: &mut [E]) -> anyhow::Result<()> {
         anyhow::ensure!(i < j && j < self.len(), "invalid interval [{i}, {j}] of {}", self.len());
         let len = self.spec.sig_len();
         anyhow::ensure!(
@@ -154,7 +195,7 @@ impl Path {
 
     /// `LogSig(x_i .. x_j)` in the plan's basis: the O(1) query followed by
     /// a log (§4.2). Errors if `plan` was built for a different `SigSpec`.
-    pub fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Vec<f32>> {
+    pub fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Vec<E>> {
         let sig = self.query(i, j)?;
         logsignature_from_sig(&sig, &self.spec, plan)
     }
@@ -173,8 +214,8 @@ impl Path {
         i: usize,
         j: usize,
         plan: &LogSigPlan,
-        ws: &mut LogSigWorkspace,
-        out: &mut [f32],
+        ws: &mut LogSigWorkspace<E>,
+        out: &mut [E],
     ) -> anyhow::Result<()> {
         plan.check_compatible(&self.spec)?;
         ws.check_spec(&self.spec)?;
@@ -190,14 +231,14 @@ impl Path {
     }
 
     /// The signature of the whole path so far.
-    pub fn signature(&self) -> Vec<f32> {
+    pub fn signature(&self) -> Vec<E> {
         let len = self.spec.sig_len();
         self.sigs[self.sigs.len() - len..].to_vec()
     }
 
     /// [`Path::signature`] into a caller-owned buffer of `sig_len` values,
     /// for callers that poll the running signature into a reused buffer.
-    pub fn signature_into(&self, out: &mut [f32]) -> anyhow::Result<()> {
+    pub fn signature_into(&self, out: &mut [E]) -> anyhow::Result<()> {
         let len = self.spec.sig_len();
         anyhow::ensure!(
             out.len() == len,
@@ -210,22 +251,29 @@ impl Path {
 
     /// The full expanding-signature stream `(len-1, sig_len)` — Signatory's
     /// `signature(..., stream=True)` view of the Path.
-    pub fn stream(&self) -> &[f32] {
+    pub fn stream(&self) -> &[E] {
         &self.sigs
     }
 
     /// Slow-path oracle: recompute `Sig(x_i..x_j)` directly from the points
     /// (O(j - i) work). Used by tests and the §4.2 benchmark baseline.
-    pub fn query_recompute(&self, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
+    pub fn query_recompute(&self, i: usize, j: usize) -> anyhow::Result<Vec<E>> {
         anyhow::ensure!(i < j && j < self.len(), "invalid interval");
         let d = self.spec.d();
-        Ok(signature(&self.points[i * d..(j + 1) * d], j - i + 1, &self.spec))
+        signature_with(
+            &self.points[i * d..(j + 1) * d],
+            j - i + 1,
+            &self.spec,
+            &SigConfig::serial(),
+        )
     }
 
     /// Bytes of precomputed storage (the O(L) cost the paper trades for
-    /// O(1) queries); used by the memory benchmark.
+    /// O(1) queries); used by the memory benchmark and the session-table
+    /// byte budget. This is exactly what the state codec persists, so it
+    /// also sizes spill files.
     pub fn storage_bytes(&self) -> usize {
-        (self.sigs.len() + self.inv_sigs.len() + self.points.len()) * std::mem::size_of::<f32>()
+        (self.sigs.len() + self.inv_sigs.len() + self.points.len()) * std::mem::size_of::<E>()
     }
 
     /// Advance several **same-spec** paths together through one
@@ -245,8 +293,8 @@ impl Path {
     ///
     /// Validation is all-or-nothing: on `Err`, no path has been modified.
     pub fn update_batch(
-        paths: &mut [&mut Path],
-        new_points: &[&[f32]],
+        paths: &mut [&mut Path<E>],
+        new_points: &[&[E]],
         counts: &[usize],
     ) -> anyhow::Result<()> {
         let lanes = paths.len();
@@ -286,8 +334,8 @@ impl Path {
         // Lane-interleaved running states, seeded from each path's stored
         // tail — exactly what a scalar update resumes from.
         let mut active: Vec<usize> = (0..lanes).collect();
-        let mut sig_state = vec![0.0f32; len * lanes];
-        let mut inv_state = vec![0.0f32; len * lanes];
+        let mut sig_state = vec![E::ZERO; len * lanes];
+        let mut inv_state = vec![E::ZERO; len * lanes];
         for (a, &l) in active.iter().enumerate() {
             let p = &paths[l];
             for i in 0..len {
@@ -296,9 +344,9 @@ impl Path {
             }
         }
         let mut ws = BatchWorkspace::new(&spec, lanes);
-        let mut z = vec![0.0f32; d * lanes];
-        let mut neg_z = vec![0.0f32; d * lanes];
-        let mut row = vec![0.0f32; len];
+        let mut z = vec![E::ZERO; d * lanes];
+        let mut neg_z = vec![E::ZERO; d * lanes];
+        let mut row = vec![E::ZERO; len];
         let mut step = 0usize;
         while !active.is_empty() {
             // Retire lanes whose feed is exhausted, compacting the
@@ -310,8 +358,8 @@ impl Path {
                 }
                 let old_n = active.len();
                 let new_n = still.len();
-                let mut packed_sig = vec![0.0f32; len * new_n];
-                let mut packed_inv = vec![0.0f32; len * new_n];
+                let mut packed_sig = vec![E::ZERO; len * new_n];
+                let mut packed_inv = vec![E::ZERO; len * new_n];
                 for (na, &l) in still.iter().enumerate() {
                     let oa = active.iter().position(|&x| x == l).expect("survivor");
                     for i in 0..len {

@@ -406,8 +406,8 @@ pub fn inverted_signature_via_inverse(path: &[f32], stream: usize, spec: &SigSpe
 /// Signature of a two-point path = exp of the increment (§2.2); exposed
 /// for tests and the Path class. Panics on mismatched channel counts; use
 /// [`two_point_signature_into`] for the fallible, allocation-free variant.
-pub fn two_point_signature(a: &[f32], b: &[f32], spec: &SigSpec) -> Vec<f32> {
-    let mut out = spec.zeros();
+pub fn two_point_signature<E: Elem>(a: &[E], b: &[E], spec: &SigSpec) -> Vec<E> {
+    let mut out = spec.zeros_elem::<E>();
     two_point_signature_into(a, b, spec, &mut out).expect("points match the spec");
     out
 }
@@ -416,11 +416,11 @@ pub fn two_point_signature(a: &[f32], b: &[f32], spec: &SigSpec) -> Vec<f32> {
 /// increment is staged directly in `out`'s level 1 and exponentiated in
 /// place, so the O(1) hot paths (`Path` adjacent-interval queries, the
 /// streaming serving feed) allocate nothing per call.
-pub fn two_point_signature_into(
-    a: &[f32],
-    b: &[f32],
+pub fn two_point_signature_into<E: Elem>(
+    a: &[E],
+    b: &[E],
     spec: &SigSpec,
-    out: &mut [f32],
+    out: &mut [E],
 ) -> anyhow::Result<()> {
     let d = spec.d();
     anyhow::ensure!(

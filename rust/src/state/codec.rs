@@ -1,0 +1,291 @@
+//! A compact versioned binary codec for [`Path`].
+//!
+//! The persistent state of a `Path` is its spec plus the three precomputed
+//! buffers — points, expanding signatures, inverse signatures
+//! ([`Path::storage_bytes`] measures exactly these); the fused-op
+//! workspace is transient and rebuilt on load. Layout (little-endian):
+//!
+//! ```text
+//! magic    b"SGXP"           4 bytes
+//! version  u16               currently 1
+//! prec     u8                Precision::tag() of the element type
+//! flags    u8                reserved (0): basepoint/initial/inverse are
+//!                            normalised into the stored buffers at
+//!                            construction, so no variant flags exist yet
+//! d        u32
+//! depth    u32
+//! stream   u32               number of stored points
+//! points   stream * d        raw element bits
+//! sigs     (stream-1) * sig_len
+//! inv_sigs (stream-1) * sig_len
+//! checksum u64               FNV-1a over every preceding byte
+//! ```
+//!
+//! Elements are written as their raw IEEE bits (via the identity
+//! `to_f32`/`to_f64` conversions at the matching width), so a
+//! serialize → deserialize round trip is **bitwise** — the property the
+//! spill/reload path and warm restart rely on, pinned by property tests
+//! in both precisions. The checksum turns torn or corrupted spill files
+//! into clean errors instead of silently wrong signatures.
+
+use crate::path::Path;
+use crate::ta::{Elem, Precision, SigSpec};
+
+const MAGIC: &[u8; 4] = b"SGXP";
+const VERSION: u16 = 1;
+
+/// FNV-1a, 64-bit: cheap, dependency-free torn-write detection (this is
+/// an integrity check against partial writes, not an adversarial MAC).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn write_elems<E: Elem>(out: &mut Vec<u8>, xs: &[E]) {
+    match E::PRECISION {
+        // `to_f32` / `to_f64` are the identity at the matching width, so
+        // these are the raw stored bits.
+        Precision::F32 => {
+            for &x in xs {
+                out.extend_from_slice(&x.to_f32().to_le_bytes());
+            }
+        }
+        Precision::F64 => {
+            for &x in xs {
+                out.extend_from_slice(&x.to_f64().to_le_bytes());
+            }
+        }
+    }
+}
+
+fn read_elems<E: Elem>(buf: &[u8], n: usize) -> anyhow::Result<(Vec<E>, &[u8])> {
+    let width = E::PRECISION.size_of();
+    anyhow::ensure!(
+        buf.len() >= n * width,
+        "truncated Path record: needed {} element bytes, found {}",
+        n * width,
+        buf.len()
+    );
+    let (raw, rest) = buf.split_at(n * width);
+    let mut xs = Vec::with_capacity(n);
+    match E::PRECISION {
+        Precision::F32 => {
+            for c in raw.chunks_exact(4) {
+                xs.push(E::from_f32(f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+            }
+        }
+        Precision::F64 => {
+            for c in raw.chunks_exact(8) {
+                xs.push(E::from_f64(f64::from_le_bytes([
+                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                ])));
+            }
+        }
+    }
+    Ok((xs, rest))
+}
+
+fn read_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]])
+}
+
+/// Fixed part of the record before the element buffers.
+const HEADER_LEN: usize = 4 + 2 + 1 + 1 + 4 + 4 + 4;
+
+impl<E: Elem> Path<E> {
+    /// Exact size in bytes of the serialized form (header + elements +
+    /// checksum), for preallocating spill buffers.
+    pub fn serialized_len(&self) -> usize {
+        HEADER_LEN + self.storage_bytes() + 8
+    }
+
+    /// Append the versioned binary form of this `Path` to `out` (see the
+    /// module docs for the layout). Bitwise round-trip with
+    /// [`Path::deserialize`].
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        let (spec, points, sigs, inv_sigs) = self.raw_parts();
+        out.reserve(self.serialized_len());
+        let base = out.len();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(E::PRECISION.tag());
+        out.push(0u8); // flags: reserved
+        out.extend_from_slice(&(spec.d() as u32).to_le_bytes());
+        out.extend_from_slice(&(spec.depth() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        write_elems(out, points);
+        write_elems(out, sigs);
+        write_elems(out, inv_sigs);
+        let sum = fnv1a(&out[base..]);
+        out.extend_from_slice(&sum.to_le_bytes());
+    }
+
+    /// The serialized form as a fresh buffer (convenience over
+    /// [`Path::serialize_into`]).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_len());
+        self.serialize_into(&mut out);
+        out
+    }
+
+    /// Decode a `Path` previously written by [`Path::serialize_into`].
+    /// Validates magic, version, checksum, the element precision against
+    /// `E`, and every buffer-length invariant; the workspace is rebuilt.
+    /// The decoded buffers are adopted verbatim — reload is bitwise.
+    pub fn deserialize(bytes: &[u8]) -> anyhow::Result<Path<E>> {
+        anyhow::ensure!(
+            bytes.len() >= HEADER_LEN + 8,
+            "Path record too short ({} bytes)",
+            bytes.len()
+        );
+        anyhow::ensure!(&bytes[..4] == MAGIC, "bad Path record magic");
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        anyhow::ensure!(version == VERSION, "unsupported Path codec version {version}");
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(sum_bytes.try_into().expect("8 checksum bytes"));
+        anyhow::ensure!(fnv1a(body) == want, "Path record checksum mismatch (torn write?)");
+        let prec = bytes[6];
+        anyhow::ensure!(
+            prec == E::PRECISION.tag(),
+            "Path record is precision tag {prec}, requested {}",
+            E::PRECISION.label()
+        );
+        anyhow::ensure!(bytes[7] == 0, "unknown Path record flags {:#x}", bytes[7]);
+        let d = read_u32(bytes, 8) as usize;
+        let depth = read_u32(bytes, 12) as usize;
+        let stream = read_u32(bytes, 16) as usize;
+        let spec = SigSpec::new(d, depth)?;
+        anyhow::ensure!(stream >= 2, "Path record has {stream} points, need at least 2");
+        let rest = &body[HEADER_LEN..];
+        let (points, rest) = read_elems::<E>(rest, stream * d)?;
+        let (sigs, rest) = read_elems::<E>(rest, (stream - 1) * spec.sig_len())?;
+        let (inv_sigs, rest) = read_elems::<E>(rest, (stream - 1) * spec.sig_len())?;
+        anyhow::ensure!(rest.is_empty(), "{} trailing bytes in Path record", rest.len());
+        Path::from_raw_parts(spec, points, sigs, inv_sigs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::property;
+    use crate::substrate::rng::Rng;
+    use crate::ta::SigSpec;
+
+    fn random_path_pts(rng: &mut Rng, stream: usize, d: usize) -> Vec<f32> {
+        let mut p = vec![0.0f32; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] = p[(i - 1) * d + c] + rng.normal_f32() * 0.3;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_f32() {
+        // The spill/reload contract: every stored buffer — sigs, inv_sigs,
+        // points — survives serialize → deserialize bit-for-bit, across
+        // specs and stream lengths, and the reloaded Path keeps answering
+        // queries identically.
+        property("codec roundtrip bitwise f32", 12, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 20);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts = random_path_pts(g.rng(), stream, d);
+            let path = Path::new(&spec, &pts, stream).unwrap();
+            let bytes = path.serialize();
+            assert_eq!(bytes.len(), path.serialized_len());
+            let back: Path = Path::deserialize(&bytes).unwrap();
+            let (s0, p0, sig0, inv0) = path.raw_parts();
+            let (s1, p1, sig1, inv1) = back.raw_parts();
+            assert_eq!((s0.d(), s0.depth()), (s1.d(), s1.depth()));
+            assert_eq!(p0, p1, "points");
+            assert_eq!(sig0, sig1, "expanding signatures");
+            assert_eq!(inv0, inv1, "inverse signatures");
+            if stream > 2 {
+                let i = g.usize_in(0, stream - 2);
+                let j = g.usize_in(i + 1, stream - 1);
+                assert_eq!(path.query(i, j).unwrap(), back.query(i, j).unwrap());
+            }
+        });
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_f64() {
+        // Same contract at the other end of the precision axis — the f64
+        // half of the acceptance criterion.
+        property("codec roundtrip bitwise f64", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(2, 16);
+            g.label(format!("d={d} n={n} stream={stream}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts: Vec<f64> =
+                random_path_pts(g.rng(), stream, d).iter().map(|&v| v as f64).collect();
+            let path: Path<f64> = Path::new(&spec, &pts, stream).unwrap();
+            let bytes = path.serialize();
+            let back: Path<f64> = Path::deserialize(&bytes).unwrap();
+            let (_, p0, sig0, inv0) = path.raw_parts();
+            let (_, p1, sig1, inv1) = back.raw_parts();
+            assert_eq!(p0, p1, "points");
+            assert_eq!(sig0, sig1, "expanding signatures");
+            assert_eq!(inv0, inv1, "inverse signatures");
+        });
+    }
+
+    #[test]
+    fn feed_after_reload_is_bitwise() {
+        // Resuming a reloaded Path must continue the exact op sequence: a
+        // spilled-and-reloaded session fed more points ends bitwise
+        // identical to its never-spilled twin (the codec half of the
+        // session-layer reload test).
+        property("feed after reload bitwise", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let first = g.usize_in(2, 10);
+            let extra = g.usize_in(1, 8);
+            g.label(format!("d={d} n={n} first={first} extra={extra}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts = random_path_pts(g.rng(), first + extra, d);
+            let mut control = Path::new(&spec, &pts[..first * d], first).unwrap();
+            let bytes = control.serialize();
+            let mut reloaded: Path = Path::deserialize(&bytes).unwrap();
+            control.update(&pts[first * d..], extra).unwrap();
+            reloaded.update(&pts[first * d..], extra).unwrap();
+            let (_, p0, sig0, inv0) = control.raw_parts();
+            let (_, p1, sig1, inv1) = reloaded.raw_parts();
+            assert_eq!(sig0, sig1, "sigs diverged after reload");
+            assert_eq!(inv0, inv1, "inv_sigs diverged after reload");
+            assert_eq!(p0, p1);
+        });
+    }
+
+    #[test]
+    fn corruption_and_mismatch_are_clean_errors() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(5);
+        let pts = random_path_pts(&mut rng, 6, 2);
+        let path = Path::new(&spec, &pts, 6).unwrap();
+        let bytes = path.serialize();
+        // Truncation (torn write).
+        assert!(Path::<f32>::deserialize(&bytes[..bytes.len() - 3]).is_err());
+        assert!(Path::<f32>::deserialize(&bytes[..10]).is_err());
+        // Bit flip in the body trips the checksum.
+        let mut flipped = bytes.clone();
+        flipped[HEADER_LEN + 5] ^= 0x40;
+        assert!(Path::<f32>::deserialize(&flipped).is_err());
+        // Wrong magic / version / flags.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Path::<f32>::deserialize(&bad).is_err());
+        // Precision mismatch: an f32 record must not decode as f64.
+        assert!(Path::<f64>::deserialize(&bytes).is_err());
+    }
+}

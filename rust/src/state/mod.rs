@@ -1,0 +1,37 @@
+//! Durable session state: the persistence layer under the coordinator.
+//!
+//! Signatory's serving trick is precomputation — a [`crate::path::Path`]
+//! carries expanding and inverse signatures so interval queries are O(1)
+//! Chen combinations — which makes session state the most valuable thing
+//! the server holds. This layer makes that state durable and movable:
+//!
+//! - [`codec`]: a compact versioned binary codec for `Path`
+//!   ([`crate::path::Path::serialize_into`] /
+//!   [`crate::path::Path::deserialize`]) — spec, element precision, and
+//!   the three precomputed buffers (`storage_bytes` measures exactly what
+//!   it writes), round-tripping **bitwise** in both precisions.
+//! - [`store`]: the [`store::SessionStore`] abstraction (in-memory and
+//!   on-disk backends) that LRU eviction *spills* into instead of
+//!   destroying state, so the next touch transparently reloads.
+//! - [`wal`]: an append-only feed-delta log, write-behind and
+//!   fsync-batched by the session sweeper, replayed on startup so
+//!   `signax serve-stream --state-dir` warm-restarts with every session
+//!   recovered — replay is bitwise because `Path` extension is exactly
+//!   resumable (pinned by `update_matches_fresh_bit_for_bit`).
+//! - [`placement`]: hash-sharding of session ids across N logical
+//!   coordinator instances with spec-aware assignment, so feed lanes
+//!   still find same-spec peers after sharding
+//!   ([`crate::coordinator::ShardedCoordinator`]).
+//!
+//! The session table itself stays in [`crate::coordinator::session`];
+//! this layer owns only representation and durability, so a replication
+//! target (warm standby) is one more consumer of the same codec + log.
+
+pub mod codec;
+pub mod placement;
+pub mod store;
+pub mod wal;
+
+pub use placement::Placement;
+pub use store::{DiskStore, MemStore, SessionStore, SpillConfig};
+pub use wal::{FeedLog, WalRecord};

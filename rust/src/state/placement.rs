@@ -1,0 +1,130 @@
+//! Shard-aware session placement across logical coordinator instances.
+//!
+//! [`Placement`] answers two questions for a
+//! [`crate::coordinator::ShardedCoordinator`] running `n` logical shards:
+//!
+//! - **Where does a new session go?** [`Placement::place_open`] hashes
+//!   the session's `(d, depth)` spec and assigns sessions of the same
+//!   spec to the same shard in groups of [`crate::exec::LANE_BLOCK`]
+//!   before overflowing to the next shard. Feed batching gains all its
+//!   throughput from packing same-spec sessions into SIMD lane blocks
+//!   (`SessionManager::feed_batch`); naive round-robin would scatter a
+//!   same-spec fleet one-per-shard and every shard would feed scalar.
+//!   Grouped assignment keeps lane peers co-located while still
+//!   spreading an oversized fleet across shards.
+//! - **Where does an existing session live?** [`Placement::locate`] is
+//!   pure arithmetic, no table: each shard `k` allocates ids from the
+//!   strided sequence `k + 1, k + 1 + n, k + 1 + 2n, …`
+//!   (`SessionConfig::{first_id, id_stride}`), so the owner of id `s` is
+//!   `(s - 1) % n`. Ids stay unique across shards with zero coordination
+//!   and a session op needs no broadcast to find its home.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::exec::LANE_BLOCK;
+
+/// Hash-sharding policy for session ids across `n` logical coordinators.
+pub struct Placement {
+    shards: usize,
+    group: usize,
+    /// Open counts per spec, for grouped same-spec assignment.
+    counts: Mutex<HashMap<(usize, usize), u64>>,
+}
+
+impl Placement {
+    /// Policy over `shards` logical instances, grouping same-spec opens
+    /// in lane-width blocks ([`LANE_BLOCK`]).
+    pub fn new(shards: usize) -> Placement {
+        Placement::with_group(shards, LANE_BLOCK)
+    }
+
+    /// As [`Placement::new`] with an explicit group width (tests).
+    pub fn with_group(shards: usize, group: usize) -> Placement {
+        Placement {
+            shards: shards.max(1),
+            group: group.max(1),
+            counts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard for the `k`-th open of spec `(d, depth)`: the spec hash
+    /// anchors the spec's home shard; every `group` opens of that spec
+    /// step to the next shard, so lane peers co-locate before spreading.
+    pub fn place_open(&self, d: usize, depth: usize) -> usize {
+        let mut counts = self.counts.lock().unwrap();
+        let seq = counts.entry((d, depth)).or_insert(0);
+        let k = *seq;
+        *seq += 1;
+        let anchor = spec_hash(d, depth);
+        ((anchor + k / self.group as u64) % self.shards as u64) as usize
+    }
+
+    /// Shard owning session id `id`, given id-striped allocation
+    /// (shard `k` issues ids ≡ `k + 1` mod `shards`, ids start at 1).
+    pub fn locate(&self, id: u64) -> usize {
+        debug_assert!(id >= 1, "session ids start at 1");
+        ((id - 1) % self.shards as u64) as usize
+    }
+}
+
+/// FNV-1a over the spec fields — stable across runs (placement of a
+/// recovering fleet must match the run that wrote the state dir).
+fn spec_hash(d: usize, depth: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in (d as u64).to_le_bytes().iter().chain((depth as u64).to_le_bytes().iter()) {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_spec_opens_group_into_lane_blocks() {
+        let p = Placement::with_group(4, 4);
+        let shards: Vec<usize> = (0..12).map(|_| p.place_open(3, 2)).collect();
+        // First 4 opens co-locate, next 4 on the following shard, etc.
+        assert_eq!(&shards[0..4], &[shards[0]; 4]);
+        assert_eq!(&shards[4..8], &[(shards[0] + 1) % 4; 4]);
+        assert_eq!(&shards[8..12], &[(shards[0] + 2) % 4; 4]);
+    }
+
+    #[test]
+    fn distinct_specs_spread_over_shards() {
+        let p = Placement::with_group(4, 16);
+        let hit: std::collections::HashSet<usize> =
+            (1..=8).map(|d| p.place_open(d, 3)).collect();
+        // The spec hash should not collapse every spec onto one shard.
+        assert!(hit.len() > 1, "all specs landed on one shard: {hit:?}");
+    }
+
+    #[test]
+    fn locate_inverts_strided_allocation() {
+        let n = 3;
+        let p = Placement::new(n);
+        // Shard k issues first_id = k + 1, stride n.
+        for k in 0..n {
+            for step in 0..5u64 {
+                let id = (k as u64 + 1) + step * n as u64;
+                assert_eq!(p.locate(id), k, "id {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_degenerates() {
+        let p = Placement::new(1);
+        assert_eq!(p.place_open(2, 3), 0);
+        assert_eq!(p.place_open(5, 1), 0);
+        assert_eq!(p.locate(1), 0);
+        assert_eq!(p.locate(999), 0);
+    }
+}

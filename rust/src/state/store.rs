@@ -1,0 +1,241 @@
+//! Spill backends: where evicted session state goes instead of dying.
+//!
+//! [`SessionStore`] is a tiny blob store keyed by session id. The session
+//! table serializes a victim's `Path` through the [`crate::state::codec`]
+//! and `put`s it here; the next touch `get`s it back and deserializes —
+//! eviction becomes a *spill* with transparent reload rather than data
+//! loss. Two backends:
+//!
+//! - [`MemStore`]: a mutexed map. Frees no real memory overall (the bytes
+//!   move from hot `Path` buffers to a cold compact blob) but exercises
+//!   the full spill/reload lifecycle without touching disk — used by
+//!   tests and useful when the budget pressure is on *workspace-carrying*
+//!   resident paths rather than total footprint.
+//! - [`DiskStore`]: one `{id}.sgxp` file per spilled session under a
+//!   directory, written via a tmp-file rename so a crash mid-spill leaves
+//!   either the old blob or none (the codec checksum catches torn tails).
+//!
+//! [`SpillConfig`] is the user-facing knob threaded through
+//! `SessionConfig`: `None` preserves the original destroy-on-evict
+//! behaviour; `Disk` additionally implies the feed-delta WAL and
+//! warm-restart recovery (see [`crate::state::wal`]).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// A blob store for spilled session state, keyed by session id.
+///
+/// Implementations must be safe to call from the sweeper thread and
+/// request threads concurrently; atomicity is per-call (the session layer
+/// serializes per-session transitions under the session's slot lock).
+pub trait SessionStore: Send + Sync {
+    /// Store (or replace) the blob for `id`.
+    fn put(&self, id: u64, bytes: &[u8]) -> anyhow::Result<()>;
+    /// Fetch the blob for `id`; `Ok(None)` if nothing is spilled there.
+    fn get(&self, id: u64) -> anyhow::Result<Option<Vec<u8>>>;
+    /// Drop the blob for `id` (no-op if absent).
+    fn remove(&self, id: u64) -> anyhow::Result<()>;
+    /// All ids currently spilled, in no particular order.
+    fn list(&self) -> anyhow::Result<Vec<u64>>;
+    /// Drop every blob (used when WAL replay supersedes stale spills).
+    fn clear(&self) -> anyhow::Result<()>;
+}
+
+/// In-memory spill backend: a mutexed `HashMap<u64, Vec<u8>>`.
+#[derive(Default)]
+pub struct MemStore {
+    blobs: Mutex<HashMap<u64, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl SessionStore for MemStore {
+    fn put(&self, id: u64, bytes: &[u8]) -> anyhow::Result<()> {
+        self.blobs.lock().unwrap().insert(id, bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, id: u64) -> anyhow::Result<Option<Vec<u8>>> {
+        Ok(self.blobs.lock().unwrap().get(&id).cloned())
+    }
+
+    fn remove(&self, id: u64) -> anyhow::Result<()> {
+        self.blobs.lock().unwrap().remove(&id);
+        Ok(())
+    }
+
+    fn list(&self) -> anyhow::Result<Vec<u64>> {
+        Ok(self.blobs.lock().unwrap().keys().copied().collect())
+    }
+
+    fn clear(&self) -> anyhow::Result<()> {
+        self.blobs.lock().unwrap().clear();
+        Ok(())
+    }
+}
+
+/// On-disk spill backend: `dir/{id}.sgxp`, one file per spilled session.
+pub struct DiskStore {
+    dir: PathBuf,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a spill directory.
+    pub fn new(dir: impl Into<PathBuf>) -> anyhow::Result<DiskStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(DiskStore { dir })
+    }
+
+    fn blob_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("{id}.sgxp"))
+    }
+}
+
+impl SessionStore for DiskStore {
+    fn put(&self, id: u64, bytes: &[u8]) -> anyhow::Result<()> {
+        // Write-then-rename so a crash mid-spill never leaves a half
+        // blob under the final name.
+        let tmp = self.dir.join(format!("{id}.sgxp.tmp"));
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, self.blob_path(id))?;
+        Ok(())
+    }
+
+    fn get(&self, id: u64) -> anyhow::Result<Option<Vec<u8>>> {
+        match std::fs::read(self.blob_path(id)) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn remove(&self, id: u64) -> anyhow::Result<()> {
+        match std::fs::remove_file(self.blob_path(id)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn list(&self) -> anyhow::Result<Vec<u64>> {
+        let mut ids = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(stem) = name.strip_suffix(".sgxp") {
+                if let Ok(id) = stem.parse::<u64>() {
+                    ids.push(id);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    fn clear(&self) -> anyhow::Result<()> {
+        for id in self.list()? {
+            self.remove(id)?;
+        }
+        Ok(())
+    }
+}
+
+/// Where eviction sends session state. `None` is the original behaviour:
+/// eviction destroys the path and later touches error.
+#[derive(Clone, Debug, Default)]
+pub enum SpillConfig {
+    /// Destroy on evict (seed behaviour).
+    #[default]
+    None,
+    /// Spill to an in-memory blob map (lifecycle without durability).
+    Memory,
+    /// Spill to `{dir}/sessions/` and log feeds to `{dir}/wal.log` for
+    /// warm restart — the `--state-dir` of `signax serve-stream`.
+    Disk(PathBuf),
+}
+
+impl SpillConfig {
+    /// Instantiate the spill backend, if any.
+    pub fn build_store(&self) -> anyhow::Result<Option<Arc<dyn SessionStore>>> {
+        match self {
+            SpillConfig::None => Ok(None),
+            SpillConfig::Memory => Ok(Some(Arc::new(MemStore::new()))),
+            SpillConfig::Disk(dir) => {
+                Ok(Some(Arc::new(DiskStore::new(dir.join("sessions"))?)))
+            }
+        }
+    }
+
+    /// The WAL path, when this configuration is durable.
+    pub fn wal_path(&self) -> Option<PathBuf> {
+        match self {
+            SpillConfig::Disk(dir) => Some(dir.join("wal.log")),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(store: &dyn SessionStore) {
+        assert!(store.get(7).unwrap().is_none());
+        store.put(7, b"hello").unwrap();
+        store.put(9, b"world").unwrap();
+        assert_eq!(store.get(7).unwrap().as_deref(), Some(&b"hello"[..]));
+        store.put(7, b"replaced").unwrap();
+        assert_eq!(store.get(7).unwrap().as_deref(), Some(&b"replaced"[..]));
+        let mut ids = store.list().unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![7, 9]);
+        store.remove(7).unwrap();
+        store.remove(7).unwrap(); // idempotent
+        assert!(store.get(7).unwrap().is_none());
+        store.clear().unwrap();
+        assert!(store.list().unwrap().is_empty());
+    }
+
+    #[test]
+    fn mem_store_contract() {
+        exercise(&MemStore::new());
+    }
+
+    #[test]
+    fn disk_store_contract() {
+        let dir = std::env::temp_dir().join(format!("signax-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DiskStore::new(&dir).unwrap();
+        exercise(&store);
+        // Blobs survive reopening the directory.
+        store.put(3, b"persist").unwrap();
+        drop(store);
+        let reopened = DiskStore::new(&dir).unwrap();
+        assert_eq!(reopened.get(3).unwrap().as_deref(), Some(&b"persist"[..]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spill_config_wiring() {
+        assert!(SpillConfig::None.build_store().unwrap().is_none());
+        assert!(SpillConfig::None.wal_path().is_none());
+        assert!(SpillConfig::Memory.build_store().unwrap().is_some());
+        assert!(SpillConfig::Memory.wal_path().is_none());
+        let dir = std::env::temp_dir().join(format!("signax-spillcfg-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SpillConfig::Disk(dir.clone());
+        assert!(cfg.build_store().unwrap().is_some());
+        assert_eq!(cfg.wal_path().unwrap(), dir.join("wal.log"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

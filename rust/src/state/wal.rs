@@ -1,0 +1,326 @@
+//! Append-only feed-delta log for warm restarts.
+//!
+//! Every session mutation — open (with its initial points), feed, close —
+//! appends a [`WalRecord`] to the [`FeedLog`]. Appends go to an in-process
+//! buffer under the log's mutex (so record order matches the order the
+//! session layer applied the mutations); the session sweeper thread calls
+//! [`FeedLog::flush`] on its cadence, batching many appends into one
+//! write + fsync. A feed is therefore durable within one sweep interval
+//! of being acknowledged — the same write-behind trade the LRU sweeper
+//! already makes for eviction.
+//!
+//! On startup with the same `--state-dir`, [`FeedLog::replay`] returns
+//! the records in order and the session layer rebuilds every open session
+//! by replaying its feeds through the ordinary `Path` extension. That
+//! recovery is **bitwise** — not approximately right — because `Path`
+//! extension is exactly resumable (`update_matches_fresh_bit_for_bit`):
+//! replaying the same points through the same ops yields the same bits.
+//!
+//! Framing per record: `len: u32 LE` of the payload, `fnv1a: u64 LE` of
+//! the payload, then the payload. Replay stops cleanly at the first
+//! short or checksum-failing record, so a crash mid-write costs at most
+//! the unflushed tail, never the log.
+//!
+//! The WAL stores f32 points only: sessions are opened over the wire
+//! (f32 rows), and the native feed path is f32 — the f64 `Path` codec
+//! exists for spill blobs, which carry their own precision tag.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path as FsPath, PathBuf};
+use std::sync::Mutex;
+
+use super::codec::fnv1a;
+
+/// Flush inline (not waiting for the sweeper) once this much is buffered.
+const BUF_CAP: usize = 1 << 20;
+
+const TAG_OPEN: u8 = 1;
+const TAG_FEED: u8 = 2;
+const TAG_CLOSE: u8 = 3;
+
+/// One logged session mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Session opened with `count` initial points of dimension `d`.
+    Open { id: u64, d: u32, depth: u32, count: u32, points: Vec<f32> },
+    /// `count` more points fed to an open session.
+    Feed { id: u64, count: u32, points: Vec<f32> },
+    /// Session closed; its state is gone on purpose.
+    Close { id: u64 },
+}
+
+impl WalRecord {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::Open { id, d, depth, count, points } => {
+                out.push(TAG_OPEN);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&d.to_le_bytes());
+                out.extend_from_slice(&depth.to_le_bytes());
+                out.extend_from_slice(&count.to_le_bytes());
+                for &p in points {
+                    out.extend_from_slice(&p.to_le_bytes());
+                }
+            }
+            WalRecord::Feed { id, count, points } => {
+                out.push(TAG_FEED);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&count.to_le_bytes());
+                for &p in points {
+                    out.extend_from_slice(&p.to_le_bytes());
+                }
+            }
+            WalRecord::Close { id } => {
+                out.push(TAG_CLOSE);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+    }
+
+    fn decode(payload: &[u8]) -> anyhow::Result<WalRecord> {
+        anyhow::ensure!(!payload.is_empty(), "empty WAL payload");
+        let tag = payload[0];
+        let rest = &payload[1..];
+        let u64_at = |at: usize| -> anyhow::Result<u64> {
+            Ok(u64::from_le_bytes(
+                rest.get(at..at + 8)
+                    .ok_or_else(|| anyhow::anyhow!("short WAL payload"))?
+                    .try_into()?,
+            ))
+        };
+        let u32_at = |at: usize| -> anyhow::Result<u32> {
+            Ok(u32::from_le_bytes(
+                rest.get(at..at + 4)
+                    .ok_or_else(|| anyhow::anyhow!("short WAL payload"))?
+                    .try_into()?,
+            ))
+        };
+        let floats = |at: usize, n: usize| -> anyhow::Result<Vec<f32>> {
+            let raw = rest
+                .get(at..at + n * 4)
+                .ok_or_else(|| anyhow::anyhow!("short WAL point buffer"))?;
+            anyhow::ensure!(rest.len() == at + n * 4, "trailing bytes in WAL record");
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        match tag {
+            TAG_OPEN => {
+                let id = u64_at(0)?;
+                let d = u32_at(8)?;
+                let depth = u32_at(12)?;
+                let count = u32_at(16)?;
+                let points = floats(20, count as usize * d as usize)?;
+                Ok(WalRecord::Open { id, d, depth, count, points })
+            }
+            TAG_FEED => {
+                let id = u64_at(0)?;
+                let count = u32_at(8)?;
+                anyhow::ensure!(
+                    (rest.len() - 12) % 4 == 0 && count as usize > 0,
+                    "malformed WAL feed record"
+                );
+                let d = (rest.len() - 12) / 4 / count as usize;
+                let points = floats(12, count as usize * d)?;
+                Ok(WalRecord::Feed { id, count, points })
+            }
+            TAG_CLOSE => Ok(WalRecord::Close { id: u64_at(0)? }),
+            other => anyhow::bail!("unknown WAL record tag {other}"),
+        }
+    }
+}
+
+struct Inner {
+    file: File,
+    buf: Vec<u8>,
+}
+
+impl Inner {
+    fn flush(&mut self) -> anyhow::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        self.file.write_all(&self.buf)?;
+        self.file.sync_data()?;
+        self.buf.clear();
+        Ok(())
+    }
+}
+
+/// The append-only feed-delta log (see the module docs).
+pub struct FeedLog {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl FeedLog {
+    /// Open (appending) or create the log at `path`.
+    pub fn open(path: impl Into<PathBuf>) -> anyhow::Result<FeedLog> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(FeedLog { path, inner: Mutex::new(Inner { file, buf: Vec::new() }) })
+    }
+
+    /// Where this log lives.
+    pub fn path(&self) -> &FsPath {
+        &self.path
+    }
+
+    /// Append a record (buffered; durable after the next [`flush`]).
+    ///
+    /// [`flush`]: FeedLog::flush
+    pub fn append(&self, rec: &WalRecord) -> anyhow::Result<()> {
+        let mut payload = Vec::new();
+        rec.encode(&mut payload);
+        let mut inner = self.inner.lock().unwrap();
+        inner.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        inner.buf.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        inner.buf.extend_from_slice(&payload);
+        if inner.buf.len() >= BUF_CAP {
+            inner.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Write out and fsync everything buffered. Called by the session
+    /// sweeper each interval (fsync batching) and on drop.
+    pub fn flush(&self) -> anyhow::Result<()> {
+        self.inner.lock().unwrap().flush()
+    }
+
+    /// Read every intact record from a log file, in append order.
+    /// Stops cleanly at the first torn or corrupt record (crash tail).
+    pub fn replay(path: impl AsRef<FsPath>) -> anyhow::Result<Vec<WalRecord>> {
+        let mut bytes = Vec::new();
+        match File::open(path.as_ref()) {
+            Ok(mut f) => {
+                f.read_to_end(&mut bytes)?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        }
+        let mut records = Vec::new();
+        let mut at = 0usize;
+        while at + 12 <= bytes.len() {
+            let len = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+            let want = u64::from_le_bytes(bytes[at + 4..at + 12].try_into().unwrap());
+            let Some(payload) = bytes.get(at + 12..at + 12 + len) else {
+                break; // torn tail
+            };
+            if fnv1a(payload) != want {
+                break; // corrupt tail
+            }
+            match WalRecord::decode(payload) {
+                Ok(rec) => records.push(rec),
+                Err(_) => break,
+            }
+            at += 12 + len;
+        }
+        Ok(records)
+    }
+}
+
+impl Drop for FeedLog {
+    fn drop(&mut self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = inner.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("signax-wal-{}-{}", name, std::process::id()))
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Open { id: 1, d: 2, depth: 3, count: 2, points: vec![0.0, 0.5, 1.0, -1.5] },
+            WalRecord::Feed { id: 1, count: 1, points: vec![2.0, 0.25] },
+            WalRecord::Open { id: 2, d: 1, depth: 4, count: 3, points: vec![0.1, 0.2, 0.3] },
+            WalRecord::Feed { id: 2, count: 2, points: vec![0.4, 0.5] },
+            WalRecord::Close { id: 1 },
+        ]
+    }
+
+    #[test]
+    fn append_flush_replay_roundtrip() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let log = FeedLog::open(&path).unwrap();
+        let recs = sample_records();
+        for r in &recs {
+            log.append(r).unwrap();
+        }
+        // Unflushed appends are buffered, not yet on disk.
+        assert!(FeedLog::replay(&path).unwrap().is_empty());
+        log.flush().unwrap();
+        assert_eq!(FeedLog::replay(&path).unwrap(), recs);
+        // Appends after reopening extend the same log.
+        drop(log);
+        let log = FeedLog::open(&path).unwrap();
+        log.append(&WalRecord::Close { id: 2 }).unwrap();
+        drop(log); // drop flushes
+        let all = FeedLog::replay(&path).unwrap();
+        assert_eq!(all.len(), recs.len() + 1);
+        assert_eq!(all.last(), Some(&WalRecord::Close { id: 2 }));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn replay_tolerates_torn_and_corrupt_tails() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        let log = FeedLog::open(&path).unwrap();
+        for r in &sample_records() {
+            log.append(r).unwrap();
+        }
+        log.flush().unwrap();
+        drop(log);
+        let full = std::fs::read(&path).unwrap();
+        let n = sample_records().len();
+        // Torn tail: chop bytes off the end — intact prefix still replays.
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert_eq!(FeedLog::replay(&path).unwrap().len(), n - 1);
+        // Corrupt tail: flip a bit in the last record's payload.
+        let mut corrupt = full.clone();
+        let end = corrupt.len() - 1;
+        corrupt[end] ^= 0x01;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert_eq!(FeedLog::replay(&path).unwrap().len(), n - 1);
+        // Missing file is an empty log, not an error.
+        std::fs::remove_file(&path).unwrap();
+        assert!(FeedLog::replay(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn points_survive_bitwise() {
+        // WAL replay feeds the recovered points back through Path::update;
+        // the floats must come back with identical bits.
+        let path = tmp("bits");
+        let _ = std::fs::remove_file(&path);
+        let exact: Vec<f32> = vec![0.1, -0.2, 1e-30, 3.4e38, f32::MIN_POSITIVE];
+        let log = FeedLog::open(&path).unwrap();
+        log.append(&WalRecord::Open { id: 9, d: 5, depth: 2, count: 1, points: exact.clone() })
+            .unwrap();
+        log.flush().unwrap();
+        drop(log);
+        match &FeedLog::replay(&path).unwrap()[0] {
+            WalRecord::Open { points, .. } => {
+                for (a, b) in exact.iter().zip(points) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected record {other:?}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
