@@ -28,7 +28,6 @@ use signax::coordinator::{
 use signax::substrate::benchlib::fmt_secs;
 use signax::substrate::pool::default_threads;
 use signax::substrate::rng::Rng;
-use signax::ta::Precision;
 
 const HOT: (usize, usize, usize) = (32, 3, 4); // (stream, d, depth)
 const DEPTH_TAIL: usize = 3;
@@ -48,11 +47,10 @@ fn coordinator(adaptive: bool) -> anyhow::Result<Coordinator> {
 fn hot_request(rng: &mut Rng) -> Request {
     let (stream, d, depth) = HOT;
     Request::Signature {
-        path: signax::data::random_path(rng, stream, d, 0.2),
+        path: signax::data::random_path(rng, stream, d, 0.2).into(),
         stream,
         d,
         depth,
-        precision: Precision::F32,
     }
 }
 
@@ -61,11 +59,10 @@ fn hot_request(rng: &mut Rng) -> Request {
 fn rare_request(rng: &mut Rng, k: usize) -> Request {
     let stream = 40 + 2 * k;
     Request::Signature {
-        path: signax::data::random_path(rng, stream, 2, 0.2),
+        path: signax::data::random_path(rng, stream, 2, 0.2).into(),
         stream,
         d: 2,
         depth: DEPTH_TAIL,
-        precision: Precision::F32,
     }
 }
 
@@ -102,7 +99,7 @@ fn run_feeds(coord: &Coordinator, sessions: usize, rounds: usize) -> anyhow::Res
     let mut ids = vec![];
     for _ in 0..sessions {
         let resp = coord.call(Request::OpenStream {
-            points: signax::data::random_path(&mut rng, 4, 3, 0.2),
+            points: signax::data::random_path(&mut rng, 4, 3, 0.2).into(),
             stream: 4,
             d: 3,
             depth: 4,
@@ -116,7 +113,7 @@ fn run_feeds(coord: &Coordinator, sessions: usize, rounds: usize) -> anyhow::Res
             .iter()
             .map(|&sid| Request::Feed {
                 session: sid,
-                points: rng.normal_vec(8 * 3, 0.2),
+                points: rng.normal_vec(8 * 3, 0.2).into(),
                 count: 8,
             })
             .collect();

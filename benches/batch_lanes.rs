@@ -4,13 +4,18 @@
 //! regime where one-thread-per-path leaves the SIMD lanes idle — plus a
 //! beyond-the-mono-window sweep at d ∈ {12, 20} in **both precisions**
 //! (f32 and f64), which exercises the runtime-`d` kernels the dispatch
-//! falls to past `LANE_VJP_MAX_D`. Both sides run single-threaded so the
+//! falls to past `LANE_VJP_MAX_D`, and a **per-width sweep** over the
+//! planner's runtime lane tiers W ∈ `exec::LANE_WIDTHS` (one full block
+//! per width, executed under an explicit `LaneFused` plan, bitwise-gated
+//! against per-path dispatch) — the evidence behind the planner's
+//! `lane_width` choice. Both sides run single-threaded so the
 //! speedup isolates lane utilisation, not thread scaling. A final
 //! mono-vs-dyn section times one fused multiply-exponentiate VJP step
 //! per `d` with the const-`D` dispatch against the runtime-`d` body, so
 //! the `d <= 8` crossover stays benchmark-arbitrated rather than
-//! asserted. Writes the machine-readable record the perf trajectory
-//! tracks:
+//! asserted (`bench::mono_dyn_crossover` reads those records back as
+//! the retirement evidence). Writes the machine-readable record the
+//! perf trajectory tracks:
 //!
 //!     cargo bench --bench batch_lanes             # -> BENCH_batch.json
 //!     cargo bench --bench batch_lanes -- --check  # CI smoke: reduced
@@ -22,8 +27,12 @@
 //! is first gated on bitwise equality between the lane-fused rows and
 //! per-path dispatch — in the point's own precision.
 
-use signax::bench::batch_json;
-use signax::signature::{signature, signature_batch, signature_batch_vjp, signature_vjp};
+use signax::bench::{batch_json, mono_dyn_crossover};
+use signax::exec::{ExecPlan, LANE_WIDTHS};
+use signax::signature::{
+    signature, signature_batch, signature_batch_planned, signature_batch_vjp, signature_vjp,
+    SigConfig,
+};
 use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
 use signax::substrate::pool::default_threads;
 use signax::substrate::rng::Rng;
@@ -134,6 +143,56 @@ fn sweep_lanes<E: Elem>(
     Ok(())
 }
 
+/// Per-width sweep over the planner's runtime lane tiers: one full block
+/// of `W` lanes per width, executed under an explicit
+/// `LaneFused { block: W }` plan so the recorded point isolates the
+/// width itself (the planner would otherwise re-choose it). Each point
+/// is bitwise-gated against per-path dispatch first — wide blocks are a
+/// schedule, never a value change.
+fn sweep_widths(cfg: &BenchConfig, d: usize, records: &mut Vec<Record>) -> anyhow::Result<()> {
+    let spec = SigSpec::new(d, DEPTH)?;
+    let len = spec.sig_len();
+    let plen = STREAM * d;
+    let sig_cfg = SigConfig::serial();
+    for &w in &LANE_WIDTHS {
+        let mut rng = Rng::new(0x71DE ^ ((d as u64) << 8) ^ w as u64);
+        let paths = signax::data::random_batch(&mut rng, w, STREAM, d, 0.2);
+        let plan = ExecPlan::LaneFused { block: w };
+        let batched = signature_batch_planned(&paths, w, STREAM, &spec, &sig_cfg, plan)?;
+        for l in 0..w {
+            let single = signature(&paths[l * plen..(l + 1) * plen], STREAM, &spec);
+            anyhow::ensure!(
+                batched[l * len..(l + 1) * len] == single[..],
+                "width {w} lane {l} (d={d}) diverged from per-path dispatch"
+            );
+        }
+        let per_path = bench(cfg, || {
+            for b in 0..w {
+                black_box(signature(&paths[b * plen..(b + 1) * plen], STREAM, &spec));
+            }
+        })
+        .best_secs();
+        let lane = bench(cfg, || {
+            black_box(
+                signature_batch_planned(&paths, w, STREAM, &spec, &sig_cfg, plan).unwrap(),
+            );
+        })
+        .best_secs();
+        println!(
+            "{:<9} {:>4} {:>3} {:>4} {:>12} {:>12} {:>7.2}x",
+            "width",
+            "f32",
+            d,
+            w,
+            fmt_secs(per_path),
+            fmt_secs(lane),
+            per_path / lane
+        );
+        records.push(("width", "f32", d, DEPTH, w, STREAM, per_path, lane));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let check = std::env::args().any(|a| a == "--check");
     let cfg = if check {
@@ -171,6 +230,10 @@ fn main() -> anyhow::Result<()> {
     for &d in &[12usize, 20] {
         sweep_lanes::<f32>(&cfg, "f32", d, WIDE_DEPTH, WIDE_LANES, &mut records)?;
         sweep_lanes::<f64>(&cfg, "f64", d, WIDE_DEPTH, WIDE_LANES, &mut records)?;
+    }
+    // The planner's runtime lane tiers, one full block per width.
+    for &d in &[2usize, 4] {
+        sweep_widths(&cfg, d, &mut records)?;
     }
     // Mono-vs-dyn crossover: one fused multiply-exponentiate VJP step per
     // d — the const-D dispatch against the runtime-`d` body (identical op
@@ -219,7 +282,8 @@ fn main() -> anyhow::Result<()> {
         );
         records.push(("vjp_step", "f32", d, depth, 0, 0, t_mono, t_dyn));
     }
-    std::fs::write("BENCH_batch.json", batch_json(default_threads(), &records))?;
+    let json = batch_json(default_threads(), &records);
+    std::fs::write("BENCH_batch.json", &json)?;
     println!("\nwrote BENCH_batch.json");
     if check {
         // Hard gate at the acceptance point (with headroom for CI-runner
@@ -235,6 +299,19 @@ fn main() -> anyhow::Result<()> {
              (smoke floor 1.2x; full-run acceptance >= 2x)"
         );
         println!("smoke ok: forward speedup at d=2, L=16 = {speedup:.2}x");
+        // The mono-vs-dyn retirement evidence must read back through the
+        // sanctioned helper: both sides of the window present, timings
+        // positive — a schema drift fails here, not in offline tooling.
+        let crossover = mono_dyn_crossover(&json)?;
+        println!("smoke ok: {} mono-vs-dyn crossover records readable", crossover.len());
+        // Every planner width tier was measured and bitwise-gated.
+        for &w in &LANE_WIDTHS {
+            anyhow::ensure!(
+                records.iter().any(|r| r.0 == "width" && r.4 == w),
+                "width sweep missing tier W={w}"
+            );
+        }
+        println!("smoke ok: width sweep covers {LANE_WIDTHS:?}");
     }
     Ok(())
 }

@@ -9,7 +9,7 @@ use signax::coordinator::{Coordinator, CoordinatorConfig, Request};
 use signax::signature::signature;
 use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
 use signax::substrate::rng::Rng;
-use signax::ta::{Precision, SigSpec};
+use signax::ta::SigSpec;
 
 fn main() -> anyhow::Result<()> {
     let cfg = BenchConfig {
@@ -37,15 +37,9 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(CoordinatorConfig::native_only().with_native_batch(0))?;
     let routed = bench(&cfg, || {
         let r = coord
-            .call(Request::Signature {
-                path: path.clone(),
-                stream,
-                d,
-                depth,
-                precision: Precision::F32,
-            })
+            .call(Request::Signature { path: path.clone().into(), stream, d, depth })
             .unwrap();
-        black_box(r.values[0]);
+        black_box(r.values.as_f32().unwrap()[0]);
     })
     .best_secs();
 
@@ -63,13 +57,7 @@ fn main() -> anyhow::Result<()> {
     let reps = 5;
     for _ in 0..reps {
         let reqs: Vec<Request> = (0..32)
-            .map(|_| Request::Signature {
-                path: path.clone(),
-                stream,
-                d,
-                depth,
-                precision: Precision::F32,
-            })
+            .map(|_| Request::Signature { path: path.clone().into(), stream, d, depth })
             .collect();
         for r in coord.call_many(reqs) {
             r?;
@@ -86,24 +74,12 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(CoordinatorConfig::default())?;
     if coord.has_xla() {
         // warm
-        let _ = coord.call(Request::Signature {
-            path: path.clone(),
-            stream,
-            d,
-            depth,
-            precision: Precision::F32,
-        });
+        let _ = coord.call(Request::Signature { path: path.clone().into(), stream, d, depth });
         let t0 = Instant::now();
         let reps = 5;
         for _ in 0..reps {
             let reqs: Vec<Request> = (0..32)
-                .map(|_| Request::Signature {
-                    path: path.clone(),
-                    stream,
-                    d,
-                    depth,
-                    precision: Precision::F32,
-                })
+                .map(|_| Request::Signature { path: path.clone().into(), stream, d, depth })
                 .collect();
             for r in coord.call_many(reqs) {
                 r.unwrap();

@@ -32,7 +32,7 @@ use signax::state::SpillConfig;
 use signax::substrate::benchlib::fmt_secs;
 use signax::substrate::pool::default_threads;
 use signax::substrate::rng::Rng;
-use signax::ta::SigSpec;
+use signax::ta::{Precision, Rows, SigSpec};
 
 const D: usize = 3;
 const DEPTH: usize = 4;
@@ -69,11 +69,12 @@ fn bitwise_gate() -> anyhow::Result<()> {
     let mut rng = Rng::new(0x9E57);
     let seed_a = rng.normal_vec(SEED_POINTS * D, 0.3);
     let seed_b = rng.normal_vec(SEED_POINTS * D, 0.3);
-    let a = mgr.open(&s, &seed_a, SEED_POINTS)?;
-    let ca = control.open(&s, &seed_a, SEED_POINTS)?;
-    let b = mgr.open(&s, &seed_b, SEED_POINTS)?;
-    let cb = control.open(&s, &seed_b, SEED_POINTS)?;
+    let a = mgr.open(&s, &seed_a.clone().into(), SEED_POINTS)?;
+    let ca = control.open(&s, &seed_a.clone().into(), SEED_POINTS)?;
+    let b = mgr.open(&s, &seed_b.clone().into(), SEED_POINTS)?;
+    let cb = control.open(&s, &seed_b.clone().into(), SEED_POINTS)?;
     let extra = rng.normal_vec(FEED_POINTS * D, 0.3);
+    let ex: Rows = extra.clone().into();
     // Touch a (reload), then b (reload, spills a), then feed a after its
     // second reload; all three must match the never-spilled control.
     anyhow::ensure!(
@@ -85,21 +86,36 @@ fn bitwise_gate() -> anyhow::Result<()> {
         "reloaded signature diverged from control"
     );
     anyhow::ensure!(
-        mgr.feed(a, &extra, FEED_POINTS)? == control.feed(ca, &extra, FEED_POINTS)?,
+        mgr.feed(a, &ex, FEED_POINTS)? == control.feed(ca, &ex, FEED_POINTS)?,
         "feed after reload diverged from control"
     );
-    // f64, through the codec directly (the session table serves f32; the
-    // precision axis of the codec is pinned here and in its unit tests).
-    let wide: Vec<f64> = seed_a.iter().map(|&v| v as f64).collect();
-    let mut p64 = Path::<f64>::new(&s, &wide, SEED_POINTS)?;
-    let mut reloaded = Path::<f64>::deserialize(&p64.serialize())?;
-    let wide_extra: Vec<f64> = extra.iter().map(|&v| v as f64).collect();
-    p64.update(&wide_extra, FEED_POINTS)?;
-    reloaded.update(&wide_extra, FEED_POINTS)?;
+    // f64, through the same session table (rows stay natively typed end
+    // to end, so f64 sessions spill, reload, and feed through f64
+    // kernels): budget admits ~1.5 f64 sessions, every touch below is a
+    // reload, and each must match a never-spilled f64 control bitwise.
+    let s64 = SigSpec::with_dtype(D, DEPTH, Precision::F64)?;
+    let per64 =
+        Path::<f64>::new(&s64, &vec![0.0f64; SEED_POINTS * D], SEED_POINTS)?.storage_bytes();
+    let mgr64 = manager(Some(per64 + per64 / 2), SpillConfig::Memory);
+    let control64 = manager(None, SpillConfig::None);
+    let widen =
+        |v: &[f32]| -> Rows { v.iter().copied().map(f64::from).collect::<Vec<f64>>().into() };
+    let (wa, wb, wx) = (widen(&seed_a), widen(&seed_b), widen(&extra));
+    let a64 = mgr64.open(&s64, &wa, SEED_POINTS)?;
+    let ca64 = control64.open(&s64, &wa, SEED_POINTS)?;
+    let b64 = mgr64.open(&s64, &wb, SEED_POINTS)?;
+    let cb64 = control64.open(&s64, &wb, SEED_POINTS)?;
     anyhow::ensure!(
-        p64.query(1, SEED_POINTS + FEED_POINTS - 1)?
-            == reloaded.query(1, SEED_POINTS + FEED_POINTS - 1)?,
-        "f64 feed-after-reload diverged"
+        mgr64.query(a64, 1, SEED_POINTS - 1)? == control64.query(ca64, 1, SEED_POINTS - 1)?,
+        "f64 reloaded query diverged from control"
+    );
+    anyhow::ensure!(
+        mgr64.signature(b64)? == control64.signature(cb64)?,
+        "f64 reloaded signature diverged from control"
+    );
+    anyhow::ensure!(
+        mgr64.feed(a64, &wx, FEED_POINTS)? == control64.feed(ca64, &wx, FEED_POINTS)?,
+        "f64 feed after reload diverged from control"
     );
     Ok(())
 }
@@ -123,13 +139,13 @@ fn main() -> anyhow::Result<()> {
         let mgr = manager(Some(per * fleet / 2), SpillConfig::Memory);
         let mut rng = Rng::new(0xC4);
         let ids: Vec<_> = (0..fleet)
-            .map(|_| mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3), SEED_POINTS))
+            .map(|_| mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3).into(), SEED_POINTS))
             .collect::<anyhow::Result<Vec<_>>>()?;
         let t0 = Instant::now();
         let mut feeds = 0usize;
         for _ in 0..rounds {
             for &id in &ids {
-                mgr.feed(id, &rng.normal_vec(FEED_POINTS * D, 0.3), FEED_POINTS)?;
+                mgr.feed(id, &rng.normal_vec(FEED_POINTS * D, 0.3).into(), FEED_POINTS)?;
                 feeds += 1;
             }
         }
@@ -147,7 +163,7 @@ fn main() -> anyhow::Result<()> {
     {
         let mgr = manager(None, SpillConfig::None);
         let mut rng = Rng::new(0x70);
-        let id = mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3), SEED_POINTS)?;
+        let id = mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3).into(), SEED_POINTS)?;
         let t0 = Instant::now();
         for _ in 0..touches {
             mgr.query(id, 1, SEED_POINTS - 1)?;
@@ -160,8 +176,8 @@ fn main() -> anyhow::Result<()> {
     {
         let mgr = manager(Some(per + per / 2), SpillConfig::Memory);
         let mut rng = Rng::new(0x71);
-        let a = mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3), SEED_POINTS)?;
-        let b = mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3), SEED_POINTS)?;
+        let a = mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3).into(), SEED_POINTS)?;
+        let b = mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3).into(), SEED_POINTS)?;
         let t0 = Instant::now();
         for k in 0..touches {
             mgr.query(if k % 2 == 0 { a } else { b }, 1, SEED_POINTS - 1)?;
@@ -187,10 +203,10 @@ fn main() -> anyhow::Result<()> {
             let mgr = manager(None, SpillConfig::Disk(dir.clone()));
             let mut rng = Rng::new(0xD15C);
             let ids: Vec<_> = (0..n)
-                .map(|_| mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3), SEED_POINTS))
+                .map(|_| mgr.open(&s, &rng.normal_vec(SEED_POINTS * D, 0.3).into(), SEED_POINTS))
                 .collect::<anyhow::Result<Vec<_>>>()?;
             for &id in &ids {
-                mgr.feed(id, &rng.normal_vec(FEED_POINTS * D, 0.3), FEED_POINTS)?;
+                mgr.feed(id, &rng.normal_vec(FEED_POINTS * D, 0.3).into(), FEED_POINTS)?;
             }
             for &id in &ids {
                 want.push((id, mgr.signature(id)?));

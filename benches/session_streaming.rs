@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             .map(|k| {
                 let mut rng = Rng::new(0x5E55 ^ k as u64);
                 let resp = coord.call(Request::OpenStream {
-                    points: signax::data::random_path(&mut rng, 4, D, 0.1),
+                    points: signax::data::random_path(&mut rng, 4, D, 0.1).into(),
                     stream: 4,
                     d: D,
                     depth: DEPTH,
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
                 scope.spawn(move || {
                     let mut rng = Rng::new(0xFEED ^ k as u64);
                     for _ in 0..FEEDS_PER_THREAD {
-                        let points = rng.normal_vec(FEED_POINTS * D, 0.1);
+                        let points = rng.normal_vec(FEED_POINTS * D, 0.1).into();
                         let req =
                             Request::Feed { session: id, points, count: FEED_POINTS };
                         if coord.call(req).is_err() {

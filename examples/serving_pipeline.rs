@@ -9,7 +9,6 @@ use std::time::Instant;
 
 use signax::coordinator::{Backend, Coordinator, CoordinatorConfig, Request};
 use signax::substrate::rng::Rng;
-use signax::ta::Precision;
 
 fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(CoordinatorConfig::default())?;
@@ -31,11 +30,10 @@ fn main() -> anyhow::Result<()> {
     for i in 0..96 {
         let (stream, d, depth) = if i % 3 == 0 { (100, 3, 4) } else { (128, 4, 4) };
         reqs.push(Request::Signature {
-            path: signax::data::random_path(&mut rng, stream, d, 0.2),
+            path: signax::data::random_path(&mut rng, stream, d, 0.2).into(),
             stream,
             d,
             depth,
-            precision: Precision::F32,
         });
     }
     let t0 = Instant::now();
@@ -73,12 +71,11 @@ fn main() -> anyhow::Result<()> {
     let path = signax::data::random_path(&mut rng, 128, 4, 0.2);
     let cot = rng.normal_vec(spec.sig_len(), 1.0);
     let resp = coord.call(Request::SignatureGrad {
-        path,
+        path: path.into(),
         stream: 128,
         d: 4,
         depth: 4,
-        cotangent: cot,
-        precision: Precision::F32,
+        cotangent: cot.into(),
     })?;
     println!("gradient request served by {:?}: {} values", resp.backend, resp.values.len());
 
@@ -93,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     // session to scalar feeding; a lone feeder (like this demo) always
     // stays on the direct scalar path with no added latency.
     let open = coord.call(Request::OpenStream {
-        points: signax::data::random_path(&mut rng, 8, 2, 0.2),
+        points: signax::data::random_path(&mut rng, 8, 2, 0.2).into(),
         stream: 8,
         d: 2,
         depth: 3,
@@ -102,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..4 {
         coord.call(Request::Feed {
             session: sid,
-            points: rng.normal_vec(16 * 2, 0.2),
+            points: rng.normal_vec(16 * 2, 0.2).into(),
             count: 16,
         })?;
     }

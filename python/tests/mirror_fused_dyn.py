@@ -20,7 +20,15 @@ and validates, with no Rust toolchain required:
   3. f32 kernel consistency against the f64 kernel on identical inputs;
   4. per-lane **bitwise** parity of the lane-interleaved kernels against the
      scalar runtime-`d` kernels, in BOTH precisions, at lane counts
-     {1, 3, 5} that leave ragged tails against the planner's 16-lane block.
+     {1, 3, 5} that leave ragged tails against the planner's narrowest
+     16-lane tier;
+  5. the typed data plane end to end: a full path -> signature serve in
+     native f64 (increments through the fused kernel, exactly the serving
+     pipeline's op sequence) against the unfused float64 oracle at
+     rel ~1e-12 — a bar a serve that silently round-trips through f32
+     cannot clear (demonstrated: the widened-f32 serve is rejected) —
+     plus bitwise session-feed == stateless and per-lane bitwise batch
+     serving, all at f64.
 
 Reductions are accumulated in exactly the Rust op order (sequential, never
 ``np.sum``'s pairwise tree), so bitwise comparisons are meaningful: a
@@ -244,6 +252,58 @@ def fused_mexp_vjp_batch(spec, a, z, g):
     return ga, gz
 
 
+# --------------------------------------------------------------- serving ---
+
+
+def serve_signature_dyn(spec, pts):
+    """Mirror of the stateless serving pipeline at the rows' native width.
+
+    The coordinator turns a path into increments and drives the fused
+    Horner kernel once per increment, starting from the zero tensor (the
+    first step then lands exactly on exp(z_1)). The element type of ``pts``
+    is the element type of every intermediate — nothing widens or narrows.
+    """
+    dt = pts.dtype.type
+    sig = np.zeros(spec.sig_len, dtype=dt)
+    for t in range(1, pts.shape[0]):
+        fused_mexp_dyn(spec, sig, (pts[t] - pts[t - 1]).astype(dt))
+    return sig
+
+
+def serve_signature_chunked(spec, pts, chunks):
+    """Session mirror: OpenStream on the first chunk, Feed for the rest.
+
+    Each feed resumes from the stored running signature; the op sequence
+    must be identical to the stateless serve, so the result is bitwise
+    equal — the invariant the Rust session arm pins.
+    """
+    dt = pts.dtype.type
+    sig = np.zeros(spec.sig_len, dtype=dt)
+    prev = pts[0]
+    start = 1
+    for n in chunks:
+        for t in range(start, start + n):
+            fused_mexp_dyn(spec, sig, (pts[t] - prev).astype(dt))
+            prev = pts[t]
+        start += n
+    return sig
+
+
+def serve_signature_batch(spec, paths):
+    """Lane-interleaved batch serve: mirror of the planner's lane driver.
+
+    ``paths`` has shape (L, points, d); lanes advance in lockstep through
+    the shared increment loop, exactly as the Rust lane kernel packs them.
+    """
+    L, points, d = paths.shape
+    dt = paths.dtype.type
+    sig = np.zeros((spec.sig_len, L), dtype=dt)
+    for t in range(1, points):
+        z_il = np.ascontiguousarray((paths[:, t] - paths[:, t - 1]).T.astype(dt))
+        fused_mexp_batch(spec, sig, z_il)
+    return sig
+
+
 # ------------------------------------------------------------- reference ---
 
 
@@ -269,6 +329,15 @@ def mul_ref(spec, a, b):
             bj = b[spec.off(k - i) : spec.off(k - i) + spec.level_len(k - i)]
             out[ok : ok + lk] += (ai[:, None] * bj[None, :]).ravel()
     return out
+
+
+def signature_oracle(spec, pts):
+    """Unfused float64 oracle for a whole path: Chen-compose exp(z_t)."""
+    pts64 = pts.astype(np.float64)
+    sig = exp_ref(spec, pts64[1] - pts64[0])
+    for t in range(2, pts64.shape[0]):
+        sig = mul_ref(spec, sig, exp_ref(spec, pts64[t] - pts64[t - 1]))
+    return sig
 
 
 # ---------------------------------------------------------------- checks ---
@@ -386,6 +455,58 @@ def check_lane_parity(d, depth, lanes, dt, seed):
     )
 
 
+def check_f64_serving(d, depth, seed, points=7, lanes=3):
+    """End-to-end typed serve at f64: oracle gate + session + lane parity.
+
+    The oracle bar (rel < 1e-12) is the native-width gate: it also asserts
+    the f32-then-widen serve FAILS it, so the threshold genuinely
+    discriminates a pipeline that kept rows at f64 from one that silently
+    bounced through f32.
+    """
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    paths64 = rng.standard_normal((lanes, points, d)) * 0.3
+
+    # Stateless f64 serve vs the unfused float64 oracle.
+    pts = paths64[0]
+    served = serve_signature_dyn(spec, pts)
+    oracle = signature_oracle(spec, pts)
+    e64 = rel_err(served, oracle)
+    # The impostor: same rows narrowed to f32 for the serve, answer widened
+    # back — what a Vec<f32> wire format would have produced.
+    e32 = rel_err(serve_signature_dyn(spec, pts.astype(np.float32)).astype(np.float64), oracle)
+    check(
+        f"f64 serve == float64 oracle       d={d} depth={depth}",
+        e64 < 1e-12,
+        f"rel {e64:.2e}",
+    )
+    check(
+        f"oracle bar rejects f32 round-trip d={d} depth={depth}",
+        e32 > 1e-8 > e64,
+        f"widened-f32 rel {e32:.2e}",
+    )
+
+    # Session arm: OpenStream(2 points) + two Feeds == stateless, bitwise.
+    chunked = serve_signature_chunked(spec, pts, [1, 2, points - 5, 1])
+    check(
+        f"f64 session feeds bitwise == stateless  d={d} depth={depth}",
+        np.array_equal(chunked, served),
+        "exact bits",
+    )
+
+    # Batch arm: lane-interleaved f64 serve, per-lane bitwise vs scalar.
+    lane_sigs = serve_signature_batch(spec, paths64)
+    ok = all(
+        np.array_equal(lane_sigs[:, l], serve_signature_dyn(spec, paths64[l]))
+        for l in range(lanes)
+    )
+    check(
+        f"f64 lane serve bitwise == scalar  d={d} depth={depth} L={lanes}",
+        ok,
+        "per-lane exact bits",
+    )
+
+
 def main():
     # The issue's dimension sweep: inside the mono window (3, 8), just past
     # it (9), and the wide serving shapes (12, 20). Depths chosen as in the
@@ -409,6 +530,10 @@ def main():
         for i, (d, depth) in enumerate(sweep):
             for lanes in (1, 3, 5):
                 check_lane_parity(d, depth, lanes, dt, 4000 + 31 * i + lanes)
+
+    print("typed serving: end-to-end f64 path -> signature vs float64 oracle")
+    for i, (d, depth) in enumerate(sweep):
+        check_f64_serving(d, depth, 5000 + i)
 
     if FAILURES:
         print(f"\n{len(FAILURES)} mirror check(s) FAILED:")

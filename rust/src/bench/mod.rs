@@ -25,6 +25,6 @@
 pub mod tables;
 
 pub use tables::{
-    backward_json, batch_json, dispatch_json, logsig_json, persist_json, run_table, sessions_json,
-    table_ids, BenchCtx, Scale,
+    backward_json, batch_json, dispatch_json, logsig_json, mono_dyn_crossover, persist_json,
+    run_table, sessions_json, table_ids, BenchCtx, Scale,
 };

@@ -820,6 +820,59 @@ pub fn batch_json(
     s
 }
 
+/// Mono-vs-dyn retirement evidence: parse a `BENCH_batch.json` document
+/// and return its `op = "vjp_step"` crossover records as
+/// `(d, mono_s, dyn_s)`, sorted by `d`, with the structure the
+/// retirement decision rests on asserted — at least one record inside
+/// the mono window (`d <=` [`crate::exec::LANE_VJP_MAX_D`]) and one
+/// beyond it, every timing positive. The mono bodies can be retired the
+/// day the in-window records show `mono_s / dyn_s >= 1` across the
+/// board; tooling (and the `benches/batch_lanes.rs --check` smoke)
+/// reads the evidence through this helper instead of re-parsing the
+/// JSON ad hoc, so a schema drift fails loudly at the source.
+pub fn mono_dyn_crossover(json: &str) -> anyhow::Result<Vec<(usize, f64, f64)>> {
+    let doc = crate::substrate::json::Json::parse(json)?;
+    let pts = doc
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("BENCH_batch.json has no points[]"))?;
+    let mut out: Vec<(usize, f64, f64)> = vec![];
+    for p in pts {
+        if p.get("op").and_then(|v| v.as_str()) != Some("vjp_step") {
+            continue;
+        }
+        let d = p
+            .get("d")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("vjp_step point without a d"))?;
+        let mono = p
+            .get("per_path_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("vjp_step d={d} has no per_path_s (mono)"))?;
+        let dynt = p
+            .get("lane_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("vjp_step d={d} has no lane_s (dyn)"))?;
+        anyhow::ensure!(
+            mono > 0.0 && dynt > 0.0,
+            "vjp_step d={d} has a non-positive timing (mono {mono}, dyn {dynt})"
+        );
+        out.push((d, mono, dynt));
+    }
+    out.sort_unstable_by_key(|&(d, ..)| d);
+    anyhow::ensure!(
+        out.iter().any(|&(d, ..)| d <= crate::exec::LANE_VJP_MAX_D),
+        "no crossover record inside the mono window (d <= {})",
+        crate::exec::LANE_VJP_MAX_D
+    );
+    anyhow::ensure!(
+        out.iter().any(|&(d, ..)| d > crate::exec::LANE_VJP_MAX_D),
+        "no crossover record beyond the mono window (d > {})",
+        crate::exec::LANE_VJP_MAX_D
+    );
+    Ok(out)
+}
+
 /// Render backward bench records as `BENCH_backward.json` (no serde
 /// offline; the format is flat enough to emit by hand). Shared by the
 /// `backward` table and `benches/backward_scaling.rs` so both producers
@@ -1045,6 +1098,39 @@ mod tests {
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.5));
         assert_eq!(pts[1].get("d").and_then(|v| v.as_f64()), Some(12.0));
         assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn mono_dyn_crossover_reads_vjp_step_records() {
+        // Round-trip through the writer: vjp_step points come back sorted
+        // as (d, mono, dyn); non-crossover points are ignored.
+        let json = batch_json(
+            8,
+            &[
+                ("forward", "f32", 2, 4, 16, 32, 1.0, 0.4),
+                ("vjp_step", "f32", 12, 3, 0, 0, 2.0e-6, 2.1e-6),
+                ("vjp_step", "f32", 2, 4, 0, 0, 1.0e-6, 1.5e-6),
+            ],
+        );
+        let xs = mono_dyn_crossover(&json).unwrap();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[0].0, 2);
+        assert_eq!(xs[1].0, 12);
+        assert!((xs[0].1 - 1.0e-6).abs() < 1e-12 && (xs[0].2 - 1.5e-6).abs() < 1e-12);
+        // The evidence must cover both sides of the mono window.
+        let only_in_window = batch_json(8, &[("vjp_step", "f32", 2, 4, 0, 0, 1.0, 1.0)]);
+        assert!(mono_dyn_crossover(&only_in_window).is_err());
+        let only_beyond = batch_json(8, &[("vjp_step", "f32", 20, 3, 0, 0, 1.0, 1.0)]);
+        assert!(mono_dyn_crossover(&only_beyond).is_err());
+        // A zeroed timing is a broken record, not evidence.
+        let zeroed = batch_json(
+            8,
+            &[
+                ("vjp_step", "f32", 2, 4, 0, 0, 0.0, 1.0),
+                ("vjp_step", "f32", 12, 3, 0, 0, 1.0, 1.0),
+            ],
+        );
+        assert!(mono_dyn_crossover(&zeroed).is_err());
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::time::Duration;
 
 use super::flusher::{GroupBatcher, GroupExecutor};
 use super::metrics::Metrics;
-use crate::ta::Precision;
+use crate::ta::{Precision, Rows};
 
 /// Shape key of a batchable computation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -32,10 +32,11 @@ pub struct BatchShape {
     pub length: usize,
     pub d: usize,
     pub depth: usize,
-    /// Compute precision of the batch. Rows are always `f32` on the wire;
-    /// `Precision::F64` backends upcast on execution. Part of the queue
-    /// identity, so f32 and f64 requests of one logical shape never share
-    /// a microbatch (their results differ bitwise).
+    /// Element precision of the batch: every row submitted under this
+    /// shape is a [`Rows`] buffer of this precision, end to end (no wire
+    /// upcast/downcast). Part of the queue identity, so f32 and f64
+    /// requests of one logical shape never share a microbatch (their
+    /// results differ bitwise).
     pub prec: Precision,
     /// Input row width (e.g. `length * d` for sig, `length * d + sig_len`
     /// for grad rows that carry a cotangent).
@@ -53,16 +54,17 @@ impl BatchShape {
 /// Executes one padded batch. Implemented by the XLA engine (production),
 /// the native lane-fused backend, and mock backends (tests).
 pub trait BatchBackend: Send + Sync + 'static {
-    /// Run one batch. Only the first `n_real` rows of `padded` carry real
-    /// requests; the rest are zero padding for fixed-shape backends.
-    /// Backends free of the static-shape constraint (the native lane
-    /// engine) may compute just the real rows — the result must hold at
-    /// least `n_real * shape.out_dim` values, and rows beyond `n_real`
-    /// are never read.
-    fn run(&self, shape: &BatchShape, padded: &[f32], n_real: usize) -> anyhow::Result<Vec<f32>>;
+    /// Run one batch. `padded` is typed at `shape.prec` and only its first
+    /// `n_real` rows carry real requests; the rest are zero padding for
+    /// fixed-shape backends. Backends free of the static-shape constraint
+    /// (the native lane engine) may compute just the real rows — the
+    /// result must be typed at `shape.prec`, hold at least
+    /// `n_real * shape.out_dim` values, and rows beyond `n_real` are
+    /// never read.
+    fn run(&self, shape: &BatchShape, padded: &Rows, n_real: usize) -> anyhow::Result<Rows>;
 }
 
-type RowSender = mpsc::Sender<anyhow::Result<Vec<f32>>>;
+type RowSender = mpsc::Sender<anyhow::Result<Rows>>;
 
 /// Queue identity of a shape: everything except the batch capacity. The
 /// adaptive planner may hand later submitters of the same logical shape a
@@ -83,27 +85,30 @@ struct RowExecutor {
 impl GroupExecutor for RowExecutor {
     /// The capacity-stripped shape ([`queue_key`]).
     type Key = BatchShape;
-    type Item = (Vec<f32>, RowSender);
+    type Item = (Rows, RowSender);
 
     fn execute(&self, key: BatchShape, capacity: usize, items: Vec<Self::Item>) {
         use std::sync::atomic::Ordering;
         let shape = BatchShape { batch: capacity, ..key };
         let n_real = items.len();
-        let mut padded = Vec::with_capacity(shape.batch * shape.in_row());
+        // Every row was precision-checked at submit, so the gather is
+        // homogeneous by construction at the queue's dtype.
+        let mut padded = Rows::zeros(shape.prec, 0);
         let mut senders = Vec::with_capacity(n_real);
         for (row, tx) in items {
-            padded.extend_from_slice(&row);
+            padded.extend_from(&row).expect("queue rows share the shape's precision");
             senders.push(tx);
         }
-        padded.resize(shape.batch * shape.in_row(), 0.0);
+        padded.resize(shape.batch * shape.in_row());
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.real_rows.fetch_add(n_real as u64, Ordering::Relaxed);
         self.metrics.padded_rows.fetch_add(shape.batch as u64, Ordering::Relaxed);
         match self.backend.run(&shape, &padded, n_real) {
             Ok(out) => {
                 debug_assert!(out.len() >= n_real * shape.out_dim);
+                debug_assert_eq!(out.precision(), shape.prec);
                 for (i, tx) in senders.into_iter().enumerate() {
-                    let row = out[i * shape.out_dim..(i + 1) * shape.out_dim].to_vec();
+                    let row = out.slice(i * shape.out_dim..(i + 1) * shape.out_dim);
                     let _ = tx.send(Ok(row));
                 }
             }
@@ -146,9 +151,15 @@ impl Batcher {
     pub fn submit(
         &self,
         shape: BatchShape,
-        row: Vec<f32>,
-    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
+        row: Rows,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Rows>>> {
         anyhow::ensure!(row.len() == shape.in_row(), "row has wrong width");
+        anyhow::ensure!(
+            row.precision() == shape.prec,
+            "row precision {} does not match the shape's {}",
+            row.precision().label(),
+            shape.prec.label()
+        );
         let (tx, rx) = mpsc::channel();
         self.inner.submit(queue_key(&shape), shape.batch, (row, tx))?;
         Ok(rx)
@@ -162,31 +173,31 @@ impl Batcher {
 
 #[cfg(test)]
 mod tests {
+    use super::super::rows::with_elem;
     use super::*;
     use crate::substrate::propcheck::property;
+    use crate::ta::Elem;
 
-    /// A mock backend computing signatures natively row by row; errors when
-    /// `fail` is set.
+    /// A mock backend computing signatures natively row by row (at the
+    /// queue's precision); errors when `fail` is set.
     struct MockBackend {
         fail: bool,
     }
 
     impl BatchBackend for MockBackend {
-        fn run(
-            &self,
-            shape: &BatchShape,
-            padded: &[f32],
-            _n_real: usize,
-        ) -> anyhow::Result<Vec<f32>> {
+        fn run(&self, shape: &BatchShape, padded: &Rows, _n_real: usize) -> anyhow::Result<Rows> {
             anyhow::ensure!(!self.fail, "mock failure");
             let spec = crate::ta::SigSpec::new(shape.d, shape.depth).unwrap();
-            let mut out = vec![0.0f32; shape.batch * shape.out_dim];
-            for b in 0..shape.batch {
-                let row = &padded[b * shape.in_row()..(b + 1) * shape.in_row()];
-                let sig = crate::signature::signature(row, shape.length, &spec);
-                out[b * shape.out_dim..(b + 1) * shape.out_dim].copy_from_slice(&sig);
-            }
-            Ok(out)
+            with_elem!(shape.prec, E, {
+                let p = E::rows_as_slice(padded)?;
+                let mut out = vec![E::ZERO; shape.batch * shape.out_dim];
+                for b in 0..shape.batch {
+                    let row = &p[b * shape.in_row()..(b + 1) * shape.in_row()];
+                    let sig = crate::signature::signature(row, shape.length, &spec);
+                    out[b * shape.out_dim..(b + 1) * shape.out_dim].copy_from_slice(&sig);
+                }
+                Ok(E::rows_from(out))
+            })
         }
     }
 
@@ -220,11 +231,11 @@ mod tests {
         for _ in 0..3 {
             let row = rng.normal_vec(sh.in_row(), 0.5);
             expected.push(crate::signature::signature(&row, 4, &spec));
-            rxs.push(batcher.submit(sh, row).unwrap());
+            rxs.push(batcher.submit(sh, row.into()).unwrap());
         }
         for (rx, exp) in rxs.into_iter().zip(expected) {
             let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
-            crate::substrate::propcheck::assert_close(&got, &exp, 1e-6, 1e-7);
+            crate::substrate::propcheck::assert_close(got.as_f32().unwrap(), &exp, 1e-6, 1e-7);
         }
         let s = metrics.snapshot();
         assert_eq!(s.batches, 1);
@@ -243,8 +254,8 @@ mod tests {
         let sh = shape(8); // capacity 8, we submit 2
         let mut rng = crate::substrate::rng::Rng::new(2);
         let row = rng.normal_vec(sh.in_row(), 0.5);
-        let rx = batcher.submit(sh, row).unwrap();
-        let rx2 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let rx = batcher.submit(sh, row.into()).unwrap();
+        let rx2 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5).into()).unwrap();
         let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         assert_eq!(got.len(), sh.out_dim);
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
@@ -272,11 +283,11 @@ mod tests {
             for _ in 0..n_req {
                 let row = g.normal_vec(sh.in_row(), 0.5);
                 expected.push(crate::signature::signature(&row, 4, &spec));
-                rxs.push(batcher.submit(sh, row).unwrap());
+                rxs.push(batcher.submit(sh, row.into()).unwrap());
             }
             for (rx, exp) in rxs.into_iter().zip(expected) {
                 let got = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
-                crate::substrate::propcheck::assert_close(&got, &exp, 1e-6, 1e-7);
+                crate::substrate::propcheck::assert_close(got.as_f32().unwrap(), &exp, 1e-6, 1e-7);
             }
         });
     }
@@ -291,8 +302,8 @@ mod tests {
         );
         let sh = shape(2);
         let mut rng = crate::substrate::rng::Rng::new(3);
-        let rx1 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5)).unwrap();
-        let rx2 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5)).unwrap();
+        let rx1 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5).into()).unwrap();
+        let rx2 = batcher.submit(sh, rng.normal_vec(sh.in_row(), 0.5).into()).unwrap();
         assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         // One failed batch execution; request-level errors are counted by
@@ -309,16 +320,11 @@ mod tests {
     }
 
     impl BatchBackend for SlowOnceBackend {
-        fn run(
-            &self,
-            shape: &BatchShape,
-            _padded: &[f32],
-            _n_real: usize,
-        ) -> anyhow::Result<Vec<f32>> {
+        fn run(&self, shape: &BatchShape, _padded: &Rows, _n_real: usize) -> anyhow::Result<Rows> {
             if !self.slept.swap(true, std::sync::atomic::Ordering::SeqCst) {
                 std::thread::sleep(Duration::from_millis(450));
             }
-            Ok(vec![0.0; shape.batch * shape.out_dim])
+            Ok(Rows::zeros(shape.prec, shape.batch * shape.out_dim))
         }
     }
 
@@ -343,10 +349,10 @@ mod tests {
         let sh = shape(8); // never fills: only the linger flushes it
         let mut rng = crate::substrate::rng::Rng::new(9);
         let row = rng.normal_vec(sh.in_row(), 0.5);
-        let _rx_a = batcher.submit(sh, row.clone()).unwrap();
+        let _rx_a = batcher.submit(sh, row.clone().into()).unwrap();
         std::thread::sleep(Duration::from_millis(375));
         let t0 = std::time::Instant::now();
-        let rx_b = batcher.submit(sh, row).unwrap();
+        let rx_b = batcher.submit(sh, row.into()).unwrap();
         assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         let waited = t0.elapsed();
         assert!(
@@ -371,9 +377,9 @@ mod tests {
         let mut second = shape(2);
         second.batch = 8; // planner "widened" the capacity mid-window
         let mut rng = crate::substrate::rng::Rng::new(21);
-        let rx1 = batcher.submit(first, rng.normal_vec(first.in_row(), 0.5)).unwrap();
+        let rx1 = batcher.submit(first, rng.normal_vec(first.in_row(), 0.5).into()).unwrap();
         // Fills the capacity-2 pending batch despite asking for 8.
-        let rx2 = batcher.submit(second, rng.normal_vec(second.in_row(), 0.5)).unwrap();
+        let rx2 = batcher.submit(second, rng.normal_vec(second.in_row(), 0.5).into()).unwrap();
         assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         let snap = metrics.snapshot();
@@ -383,13 +389,16 @@ mod tests {
     }
 
     #[test]
-    fn wrong_row_width_rejected() {
+    fn wrong_row_width_or_precision_rejected() {
         let batcher = Batcher::new(
             Arc::new(MockBackend { fail: false }),
             Arc::new(Metrics::default()),
             Duration::from_millis(5),
         );
-        assert!(batcher.submit(shape(2), vec![0.0; 3]).is_err());
+        assert!(batcher.submit(shape(2), vec![0.0f32; 3].into()).is_err());
+        // An f64 row under an f32-keyed shape is a hard error, not a cast.
+        let sh = shape(2);
+        assert!(batcher.submit(sh, vec![0.0f64; sh.in_row()].into()).is_err());
     }
 
     #[test]
@@ -410,12 +419,15 @@ mod tests {
         let mut sh_c = shape(1);
         sh_c.prec = Precision::F64;
         let mut rng = crate::substrate::rng::Rng::new(4);
-        let rx_a = batcher.submit(sh_a, rng.normal_vec(sh_a.in_row(), 0.5)).unwrap();
-        let rx_b = batcher.submit(sh_b, rng.normal_vec(sh_b.in_row(), 0.5)).unwrap();
-        let rx_c = batcher.submit(sh_c, rng.normal_vec(sh_c.in_row(), 0.5)).unwrap();
+        let wide: Vec<f64> =
+            rng.normal_vec(sh_c.in_row(), 0.5).into_iter().map(f64::from).collect();
+        let rx_a = batcher.submit(sh_a, rng.normal_vec(sh_a.in_row(), 0.5).into()).unwrap();
+        let rx_b = batcher.submit(sh_b, rng.normal_vec(sh_b.in_row(), 0.5).into()).unwrap();
+        let rx_c = batcher.submit(sh_c, wide.into()).unwrap();
         assert!(rx_a.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
-        assert!(rx_c.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let got_c = rx_c.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(got_c.precision(), Precision::F64, "f64 queue answers in f64");
         assert_eq!(metrics.snapshot().batches, 3);
     }
 }

@@ -4,10 +4,11 @@
 //! microbatch: many sessions streaming the same spec can share one
 //! lane-fused `Path::update_batch` sweep ([`crate::path::Path`]) instead
 //! of N scalar updates. This batcher gathers same-spec feeds inside one
-//! linger window (keyed by `(d, depth)` — feeds are ragged in point count
-//! by design, which the lane sweep handles natively) and flushes them
-//! into [`SessionManager::feed_batch`], whose lanes are **bitwise
-//! identical** to scalar `Path::update`.
+//! linger window (keyed by `(d, depth, dtype)` — feeds are ragged in
+//! point count by design, which the lane sweep handles natively, but
+//! never mix element precisions: f32 and f64 sessions keep separate
+//! groups) and flushes them into [`SessionManager::feed_batch`], whose
+//! lanes are **bitwise identical** to scalar `Path::update`.
 //!
 //! Whether a feed enters the lane at all is the planner's call
 //! ([`crate::exec::ExecPlanner::feed_lane_capacity`]): lane-fusing only
@@ -28,15 +29,18 @@ use std::time::Duration;
 
 use super::flusher::{GroupBatcher, GroupExecutor};
 use super::session::{SessionId, SessionManager};
+use crate::ta::{Precision, Rows};
 
-/// Spec key feeds are grouped under: `(d, depth)`.
-pub type FeedKey = (usize, usize);
+/// Spec key feeds are grouped under: `(d, depth, dtype)` — the dtype
+/// component keeps the never-coalesce-across-precision invariant at the
+/// queue level.
+pub type FeedKey = (usize, usize, Precision);
 
 struct FeedItem {
     session: SessionId,
-    points: Vec<f32>,
+    points: Rows,
     count: usize,
-    tx: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    tx: mpsc::Sender<anyhow::Result<Rows>>,
 }
 
 /// The feed-shaped [`GroupExecutor`]: flushes a gathered group into one
@@ -54,7 +58,7 @@ impl GroupExecutor for FeedExecutor {
 
     fn execute(&self, _key: FeedKey, _capacity: usize, items: Vec<FeedItem>) {
         let mut txs = Vec::with_capacity(items.len());
-        let feeds: Vec<(SessionId, Vec<f32>, usize)> = items
+        let feeds: Vec<(SessionId, Rows, usize)> = items
             .into_iter()
             .map(|it| {
                 let FeedItem { session, points, count, tx } = it;
@@ -90,9 +94,15 @@ impl FeedLane {
         key: FeedKey,
         capacity: usize,
         session: SessionId,
-        points: Vec<f32>,
+        points: Rows,
         count: usize,
-    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<f32>>>> {
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Rows>>> {
+        anyhow::ensure!(
+            points.precision() == key.2,
+            "feed precision {} does not match the lane key's {}",
+            points.precision().label(),
+            key.2.label()
+        );
         let (tx, rx) = mpsc::channel();
         self.inner.submit(key, capacity, FeedItem { session, points, count, tx })?;
         Ok(rx)
@@ -125,12 +135,12 @@ mod tests {
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(1);
         let ids: Vec<SessionId> = (0..3)
-            .map(|_| sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap())
+            .map(|_| sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3).into(), 4).unwrap())
             .collect();
         let mut rxs = vec![];
         for &id in &ids {
             let pts = rng.normal_vec(2 * 2, 0.3);
-            rxs.push(lane.submit((2, 3), 3, id, pts, 2).unwrap());
+            rxs.push(lane.submit((2, 3, Precision::F32), 3, id, pts.into(), 2).unwrap());
         }
         for rx in rxs {
             assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
@@ -147,8 +157,10 @@ mod tests {
         let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_millis(10));
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(2);
-        let id = sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap();
-        let rx = lane.submit((2, 3), 8, id, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
+        let id = sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3).into(), 4).unwrap();
+        let rx = lane
+            .submit((2, 3, Precision::F32), 8, id, rng.normal_vec(2 * 2, 0.3).into(), 2)
+            .unwrap();
         let sig = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         assert_eq!(sig.len(), spec.sig_len());
         assert_eq!(sessions.session_len(id).unwrap(), 6);
@@ -161,10 +173,14 @@ mod tests {
         let s2 = SigSpec::new(2, 3).unwrap();
         let s3 = SigSpec::new(3, 3).unwrap();
         let mut rng = Rng::new(3);
-        let a = sessions.open(&s2, &rng.normal_vec(4 * 2, 0.3), 4).unwrap();
-        let b = sessions.open(&s3, &rng.normal_vec(4 * 3, 0.3), 4).unwrap();
-        let rx_a = lane.submit((2, 3), 8, a, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
-        let rx_b = lane.submit((3, 3), 8, b, rng.normal_vec(2 * 3, 0.3), 2).unwrap();
+        let a = sessions.open(&s2, &rng.normal_vec(4 * 2, 0.3).into(), 4).unwrap();
+        let b = sessions.open(&s3, &rng.normal_vec(4 * 3, 0.3).into(), 4).unwrap();
+        let rx_a = lane
+            .submit((2, 3, Precision::F32), 8, a, rng.normal_vec(2 * 2, 0.3).into(), 2)
+            .unwrap();
+        let rx_b = lane
+            .submit((3, 3, Precision::F32), 8, b, rng.normal_vec(2 * 3, 0.3).into(), 2)
+            .unwrap();
         assert!(rx_a.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         assert!(rx_b.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
         // Two singleton flushes: scalar dispatch, no fused feed sweep.
@@ -177,11 +193,13 @@ mod tests {
         let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_secs(60));
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(4);
-        let good = sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap();
+        let good = sessions.open(&spec, &rng.normal_vec(4 * 2, 0.3).into(), 4).unwrap();
         let rx_bad = lane
-            .submit((2, 3), 2, SessionId(777), rng.normal_vec(2 * 2, 0.3), 2)
+            .submit((2, 3, Precision::F32), 2, SessionId(777), rng.normal_vec(2 * 2, 0.3).into(), 2)
             .unwrap();
-        let rx_good = lane.submit((2, 3), 2, good, rng.normal_vec(2 * 2, 0.3), 2).unwrap();
+        let rx_good = lane
+            .submit((2, 3, Precision::F32), 2, good, rng.normal_vec(2 * 2, 0.3).into(), 2)
+            .unwrap();
         assert!(rx_bad.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
         assert!(rx_good.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
     }
@@ -191,6 +209,16 @@ mod tests {
         // The unified generic owns the capacity >= 1 contract.
         let (sessions, _metrics) = setup();
         let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_millis(10));
-        assert!(lane.submit((2, 3), 0, SessionId(1), vec![0.0; 4], 2).is_err());
+        let pts: Rows = vec![0.0f32; 4].into();
+        assert!(lane.submit((2, 3, Precision::F32), 0, SessionId(1), pts, 2).is_err());
+    }
+
+    #[test]
+    fn cross_precision_submit_rejected() {
+        // An f64 feed under an f32 lane key is a hard error, not a cast.
+        let (sessions, _metrics) = setup();
+        let lane = FeedLane::new(Arc::clone(&sessions), Duration::from_millis(10));
+        let pts: Rows = vec![0.0f64; 4].into();
+        assert!(lane.submit((2, 3, Precision::F32), 2, SessionId(1), pts, 2).is_err());
     }
 }

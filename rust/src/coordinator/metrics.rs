@@ -148,7 +148,7 @@ impl Metrics {
         if padded == 0 {
             0.0
         } else {
-            1.0 - real as f64 / padded as f64
+            1.0 - real as f64 / padded as f64 // lint: non-row cast
         }
     }
 }

@@ -70,6 +70,7 @@ pub mod feedlane;
 pub mod flusher;
 pub mod metrics;
 pub mod router;
+pub(crate) mod rows;
 pub mod session;
 pub mod sharded;
 

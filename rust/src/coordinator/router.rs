@@ -23,15 +23,18 @@
 //! feeding. All three gathering surfaces are instantiations of one
 //! unified batcher generic ([`super::flusher::GroupBatcher`]).
 //!
-//! **Precision axis**: stateless requests carry a
-//! [`crate::ta::Precision`]. Rows stay `f32` on the wire; an f64 request
-//! upcasts once at the native boundary, runs the same (now
-//! scalar-generic) kernels in `f64`, and downcasts the result. The
-//! precision is part of both the planner's [`ShapeKey`] and the batcher's
-//! queue identity ([`BatchShape::prec`]), so f32 and f64 requests of one
-//! logical shape never share a microbatch — their bits differ. The XLA
-//! artifacts are compiled for f32 only, so f64 requests always route
-//! native.
+//! **Precision axis**: rows are **natively typed** end to end
+//! ([`crate::ta::Rows`]). The element width of a request's buffers IS its
+//! compute precision — f32 rows run the f32 kernels bitwise as before,
+//! and f64 rows run the same scalar-generic kernels at f64, with no
+//! upcast or downcast anywhere between the wire and the kernel. The one
+//! place serving code inspects the precision tag and picks an element
+//! type is [`super::rows::with_elem!`]; everything past that dispatch is
+//! generic over [`crate::ta::Elem`]. The precision is part of both the
+//! planner's [`ShapeKey`] and the batcher's queue identity
+//! ([`BatchShape::prec`]), so f32 and f64 requests of one logical shape
+//! never share a microbatch — their bits differ. The XLA artifacts are
+//! compiled for f32 only, so f64 requests always route native.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -40,6 +43,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchBackend, BatchShape, Batcher};
 use super::feedlane::FeedLane;
 use super::metrics::Metrics;
+use super::rows::with_elem;
 use super::session::{SessionConfig, SessionId, SessionManager};
 use crate::exec::{ExecPlan, ExecPlanner, ShapeKey, WorkShape};
 use crate::logsignature::{
@@ -51,7 +55,7 @@ use crate::runtime::{ArtifactKind, EngineHandle, Registry};
 use crate::signature::{signature_batch_planned, signature_vjp_with, signature_with, SigConfig};
 #[cfg(test)]
 use crate::signature::signature;
-use crate::ta::{Precision, SigSpec};
+use crate::ta::{Elem, Precision, Rows, SigSpec};
 
 /// Kinds encoded into [`BatchShape::kind`].
 const KIND_SIG: u8 = 0;
@@ -65,36 +69,33 @@ const KIND_LOGSIG_NATIVE: u8 = 4;
 
 /// A request against the coordinator.
 ///
-/// Stateless requests carry a compute [`Precision`] (`Precision::F32` is
-/// the default and preserves pre-precision-axis behaviour bitwise). The
-/// wire format stays `f32` either way: an f64 request upcasts its rows at
-/// the native engine boundary, computes in `f64`, and downcasts the
-/// result — trading wire width for internal accumulation accuracy.
+/// Requests carry **typed rows** ([`Rows`]): the element width of the
+/// payload IS the compute precision, end to end. There is no separate
+/// precision tag to keep in sync with the buffer — f32 rows preserve the
+/// pre-precision-axis behaviour bitwise, and f64 rows run the f64 kernels
+/// natively and answer in f64 (no serving layer upcasts or downcasts a
+/// row; see [`super::rows`]).
 #[derive(Clone, Debug)]
 pub enum Request {
     /// `Sig^depth(path)` for one `(stream, d)` path.
-    Signature { path: Vec<f32>, stream: usize, d: usize, depth: usize, precision: Precision },
-    /// Words-basis `LogSig^depth(path)`. Both precisions serve: the log +
-    /// Words-projection epilogue is generic over the element type, so an
-    /// `F64` request runs the whole pipeline at f64 and downcasts at the
-    /// boundary, in its own microbatch queue.
-    LogSignature { path: Vec<f32>, stream: usize, d: usize, depth: usize, precision: Precision },
-    /// VJP: cotangent on the signature -> gradient on the path.
-    SignatureGrad {
-        path: Vec<f32>,
-        stream: usize,
-        d: usize,
-        depth: usize,
-        cotangent: Vec<f32>,
-        precision: Precision,
-    },
+    Signature { path: Rows, stream: usize, d: usize, depth: usize },
+    /// Words-basis `LogSig^depth(path)`. Both element widths serve: the
+    /// log + Words-projection epilogue is generic over the element type,
+    /// so f64 rows run the whole pipeline at f64, in their own microbatch
+    /// queue.
+    LogSignature { path: Rows, stream: usize, d: usize, depth: usize },
+    /// VJP: cotangent on the signature -> gradient on the path. The
+    /// cotangent must match the path's element precision; the gradient
+    /// comes back at the same width.
+    SignatureGrad { path: Rows, stream: usize, d: usize, depth: usize, cotangent: Rows },
     /// Open a streaming session seeded with an initial path (>= 2 points).
     /// The response carries the new id in [`Response::session`] and the
-    /// signature of the seed path in `values`.
-    OpenStream { points: Vec<f32>, stream: usize, d: usize, depth: usize },
+    /// signature of the seed path in `values`. The session records the
+    /// element type of its seed rows; every later feed must match it.
+    OpenStream { points: Rows, stream: usize, d: usize, depth: usize },
     /// Append points to a session ("keeping the signature up-to-date",
     /// §5.5, eq. 7); returns the whole-stream signature so far.
-    Feed { session: SessionId, points: Vec<f32>, count: usize },
+    Feed { session: SessionId, points: Rows, count: usize },
     /// O(1)-in-L interval signature query against a session's stream
     /// (0-based inclusive endpoints, `i < j < len`).
     QueryInterval { session: SessionId, i: usize, j: usize },
@@ -115,10 +116,13 @@ pub enum Backend {
 /// A served response.
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub values: Vec<f32>,
+    /// Typed result rows, at the same element width the request carried
+    /// (streaming responses: the session's recorded dtype).
+    pub values: Rows,
     pub backend: Backend,
-    /// The compute precision that produced `values` (streaming and XLA
-    /// responses are always [`Precision::F32`]).
+    /// The element precision of `values` — always derived from the buffer
+    /// itself, never assumed (XLA responses are [`Precision::F32`], the
+    /// only width artifacts are compiled for).
     pub precision: Precision,
     /// Set on streaming responses: the session the request addressed
     /// (`OpenStream` returns the freshly allocated id here).
@@ -241,7 +245,13 @@ struct XlaBackend {
 impl BatchBackend for XlaBackend {
     // XLA executables are compiled for the fixed `shape.batch`, so the
     // padding rows must run regardless of `n_real`.
-    fn run(&self, shape: &BatchShape, padded: &[f32], _n_real: usize) -> anyhow::Result<Vec<f32>> {
+    fn run(&self, shape: &BatchShape, padded: &Rows, _n_real: usize) -> anyhow::Result<Rows> {
+        // Artifacts are compiled for f32 only; the router never routes an
+        // f64 request here and the batcher's queue identity carries the
+        // dtype, so anything else reaching this backend is a plumbing bug.
+        let padded = padded
+            .as_f32()
+            .map_err(|_| anyhow::anyhow!("the XLA backend serves f32 batches only"))?;
         let kind = match shape.kind {
             KIND_SIG => ArtifactKind::Sig,
             KIND_LOGSIG => ArtifactKind::LogSig,
@@ -252,9 +262,9 @@ impl BatchBackend for XlaBackend {
             .registry
             .find(kind, shape.batch, shape.length, shape.d, shape.depth)
             .ok_or_else(|| anyhow::anyhow!("artifact disappeared for {shape:?}"))?;
-        match kind {
+        let values = match kind {
             ArtifactKind::Sig | ArtifactKind::LogSig => {
-                self.engine.forward(entry, padded.to_vec())
+                self.engine.forward(entry, padded.to_vec())?
             }
             ArtifactKind::SigGrad => {
                 // Rows are path || cotangent; de-interleave into the two
@@ -269,10 +279,11 @@ impl BatchBackend for XlaBackend {
                     paths[b * in_path..(b + 1) * in_path].copy_from_slice(&r[..in_path]);
                     cots[b * sig_len..(b + 1) * sig_len].copy_from_slice(&r[in_path..]);
                 }
-                self.engine.grad(entry, paths, cots)
+                self.engine.grad(entry, paths, cots)?
             }
             ArtifactKind::Train => anyhow::bail!("train artifacts are not batched"),
-        }
+        };
+        Ok(values.into())
     }
 }
 
@@ -293,7 +304,7 @@ struct NativeLaneBackend {
 }
 
 impl BatchBackend for NativeLaneBackend {
-    fn run(&self, shape: &BatchShape, padded: &[f32], n_real: usize) -> anyhow::Result<Vec<f32>> {
+    fn run(&self, shape: &BatchShape, padded: &Rows, n_real: usize) -> anyhow::Result<Rows> {
         use std::sync::atomic::Ordering;
         anyhow::ensure!(
             shape.kind == KIND_SIG_NATIVE || shape.kind == KIND_LOGSIG_NATIVE,
@@ -332,46 +343,24 @@ impl BatchBackend for NativeLaneBackend {
                 shape.out_dim,
                 lplan.dim()
             );
-            let real = &padded[..rows * shape.in_row()];
-            return match shape.prec {
-                Precision::F32 => {
-                    logsignature_batch_planned(real, rows, shape.length, &spec, &lplan, &cfg, plan)
-                }
-                Precision::F64 => {
-                    // Same boundary convention as the f64 signature arm
-                    // below: upcast once, run the whole generic pipeline —
-                    // lane sweeps, log, Words projection — at f64, downcast
-                    // the result. Precision is part of the queue identity
-                    // ([`BatchShape::prec`]), so f64 logsig rows coalesce
-                    // only with each other.
-                    let wide: Vec<f64> = real.iter().map(|&v| v as f64).collect();
-                    let out = logsignature_batch_planned(
-                        &wide,
-                        rows,
-                        shape.length,
-                        &spec,
-                        &lplan,
-                        &cfg,
-                        plan,
-                    )?;
-                    Ok(out.into_iter().map(|v| v as f32).collect())
-                }
-            };
+            // One generic body: the queue's dtype picks the element type
+            // here — and the whole pipeline (lane sweeps, log, Words
+            // projection) runs at that width on the rows as submitted.
+            // Precision is part of the queue identity
+            // ([`BatchShape::prec`]), so a flush is homogeneous by
+            // construction.
+            return with_elem!(shape.prec, E, {
+                let real = &E::rows_as_slice(padded)?[..rows * shape.in_row()];
+                let out =
+                    logsignature_batch_planned(real, rows, shape.length, &spec, &lplan, &cfg, plan)?;
+                Ok(E::rows_from(out))
+            });
         }
-        let real = &padded[..rows * shape.in_row()];
-        match shape.prec {
-            Precision::F32 => {
-                signature_batch_planned(real, rows, shape.length, &spec, &cfg, plan)
-            }
-            Precision::F64 => {
-                // Upcast once at the boundary; the widened plan executes
-                // the same lane-fused sweep in f64 — bitwise identical per
-                // row to a stand-alone f64 serve of the same lone row.
-                let wide: Vec<f64> = real.iter().map(|&v| v as f64).collect();
-                let out = signature_batch_planned(&wide, rows, shape.length, &spec, &cfg, plan)?;
-                Ok(out.into_iter().map(|v| v as f32).collect())
-            }
-        }
+        with_elem!(shape.prec, E, {
+            let real = &E::rows_as_slice(padded)?[..rows * shape.in_row()];
+            let out = signature_batch_planned(real, rows, shape.length, &spec, &cfg, plan)?;
+            Ok(E::rows_from(out))
+        })
     }
 }
 
@@ -499,21 +488,23 @@ impl Coordinator {
     /// quote the adaptive per-shape capacity, and either coalesce into the
     /// lane-fused microbatcher (capacity >= 2) or run `direct` — the
     /// scalar reference computation, bitwise identical to a microbatched
-    /// lone row. One implementation so a fix to the capacity quote or the
-    /// batcher plumbing can never make the two request kinds diverge.
+    /// lone row. One implementation, **generic over the element type**, so
+    /// a fix to the capacity quote or the batcher plumbing can never make
+    /// the two request kinds — or the two precisions — diverge: the
+    /// precision was dispatched exactly once, before this call, and
+    /// everything here runs at `E`'s native width.
     #[allow(clippy::too_many_arguments)]
-    fn serve_native_stateless(
+    fn serve_native_stateless<E: Elem>(
         &self,
         key: ShapeKey,
         kind: u8,
         stream: usize,
         d: usize,
         depth: usize,
-        precision: Precision,
         out_dim: usize,
-        path: Vec<f32>,
-        direct: impl FnOnce(Vec<f32>) -> anyhow::Result<Vec<f32>>,
-    ) -> anyhow::Result<Vec<f32>> {
+        path: Vec<E>,
+        direct: impl FnOnce(Vec<E>) -> anyhow::Result<Vec<E>>,
+    ) -> anyhow::Result<Rows> {
         use std::sync::atomic::Ordering;
         self.planner.record_shape(key);
         self.publish_shape_mix();
@@ -533,17 +524,17 @@ impl Coordinator {
                 length: stream,
                 d,
                 depth,
-                prec: precision,
+                prec: E::PRECISION,
                 in_dim: stream * d,
                 out_dim,
             };
-            let rx = nb.submit(shape, path)?;
+            let rx = nb.submit(shape, E::rows_from(path))?;
             return rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("native batcher dropped request"))?;
         }
         self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
-        direct(path)
+        direct(path).map(E::rows_from)
     }
 
     /// Serve one request synchronously, routing per configuration.
@@ -578,8 +569,8 @@ impl Coordinator {
                 // through to the native engine (the only backend with a
                 // precision axis).
                 let routed = match &mut req {
-                    Request::Signature { path, stream, d, depth, precision }
-                        if *precision == Precision::F32 =>
+                    Request::Signature { path, stream, d, depth }
+                        if path.precision() == Precision::F32 =>
                     {
                         reg.find_batchable(ArtifactKind::Sig, 1, *stream, *d, *depth).map(|e| {
                             let shape = BatchShape {
@@ -595,8 +586,8 @@ impl Coordinator {
                             batcher.submit(shape, std::mem::take(path))
                         })
                     }
-                    Request::LogSignature { path, stream, d, depth, precision }
-                        if *precision == Precision::F32 =>
+                    Request::LogSignature { path, stream, d, depth }
+                        if path.precision() == Precision::F32 =>
                     {
                         reg.find_batchable(ArtifactKind::LogSig, 1, *stream, *d, *depth).map(|e| {
                             self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
@@ -613,13 +604,15 @@ impl Coordinator {
                             batcher.submit(shape, std::mem::take(path))
                         })
                     }
-                    Request::SignatureGrad { path, stream, d, depth, cotangent, precision }
-                        if *precision == Precision::F32 =>
+                    Request::SignatureGrad { path, stream, d, depth, cotangent }
+                        if path.precision() == Precision::F32
+                            && cotangent.precision() == Precision::F32 =>
                     {
                         reg.find_batchable(ArtifactKind::SigGrad, 1, *stream, *d, *depth).map(
                             |e| {
                                 let mut row = std::mem::take(path);
-                                row.extend_from_slice(cotangent);
+                                row.extend_from(cotangent)
+                                    .expect("both grad buffers are f32 (guard above)");
                                 let shape = BatchShape {
                                     kind: KIND_SIGGRAD,
                                     batch: e.batch,
@@ -635,7 +628,7 @@ impl Coordinator {
                         )
                     }
                     // Streaming requests were already dispatched above;
-                    // f64 requests route native.
+                    // f64 rows route native (the only typed backend).
                     _ => None,
                 };
                 if let Some(rx) = routed {
@@ -645,9 +638,9 @@ impl Coordinator {
                         .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
                     self.metrics.xla_requests.fetch_add(1, Ordering::Relaxed);
                     return Ok(Response {
+                        precision: values.precision(),
                         values,
                         backend: Backend::Xla,
-                        precision: Precision::F32,
                         session: None,
                     });
                 }
@@ -655,9 +648,12 @@ impl Coordinator {
         }
         // Native path. All shapes are validated up front so malformed
         // requests are an `Err` here, never a panic on a serving thread.
-        let (values, precision) = match req {
-            Request::Signature { path, stream, d, depth, precision } => {
-                let spec = SigSpec::new(d, depth)?;
+        // The element type is dispatched from the row buffer **exactly
+        // once** per arm (`with_elem!`); past that point everything is
+        // `Elem`-generic and the two precisions cannot diverge.
+        let values = match req {
+            Request::Signature { path, stream, d, depth } => {
+                let spec = SigSpec::with_dtype(d, depth, path.precision())?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
                 // Lane-fused microbatching via the shared stateless path:
@@ -666,29 +662,21 @@ impl Coordinator {
                 // identical to a stand-alone signature call. The shape key
                 // carries the dtype, so f32 and f64 traffic of one shape
                 // adapts — and batches — independently.
-                let values = self.serve_native_stateless(
-                    ShapeKey::signature(d, depth, stream).with_dtype(precision),
-                    KIND_SIG_NATIVE,
-                    stream,
-                    d,
-                    depth,
-                    precision,
-                    spec.sig_len(),
-                    path,
-                    |p| match precision {
-                        Precision::F32 => signature_with(&p, stream, &spec, &SigConfig::serial()),
-                        Precision::F64 => {
-                            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
-                            let out =
-                                signature_with(&wide, stream, &spec, &SigConfig::serial())?;
-                            Ok(out.into_iter().map(|v| v as f32).collect())
-                        }
-                    },
-                )?;
-                (values, precision)
+                with_elem!(spec.dtype(), E, {
+                    self.serve_native_stateless::<E>(
+                        ShapeKey::signature(d, depth, stream).with_dtype(spec.dtype()),
+                        KIND_SIG_NATIVE,
+                        stream,
+                        d,
+                        depth,
+                        spec.sig_len(),
+                        E::rows_into(path)?,
+                        |p| signature_with(&p, stream, &spec, &SigConfig::serial()),
+                    )?
+                })
             }
-            Request::LogSignature { path, stream, d, depth, precision } => {
-                let spec = SigSpec::new(d, depth)?;
+            Request::LogSignature { path, stream, d, depth } => {
+                let spec = SigSpec::with_dtype(d, depth, path.precision())?;
                 anyhow::ensure!(path.len() == stream * d, "bad path buffer");
                 anyhow::ensure!(stream >= 2, "a path needs at least two points, got {stream}");
                 self.metrics.logsig_requests.fetch_add(1, Ordering::Relaxed);
@@ -697,41 +685,31 @@ impl Coordinator {
                 // independently), with a per-row log + Words-projection
                 // epilogue on the flushed sweep. `native_batch = 0`
                 // disables batching here too. The epilogue is generic over
-                // the element precision, so `F64` requests upcast at this
-                // boundary, run log + projection at f64, and downcast —
-                // exactly the signature convention, with its own
-                // microbatch queue (`with_dtype`).
+                // the element precision, so f64 rows run log + projection
+                // at f64 natively, in their own microbatch queue
+                // (`with_dtype`).
                 let lplan = self.plan(d, depth)?;
-                let values = self.serve_native_stateless(
-                    ShapeKey::logsignature(d, depth, stream).with_dtype(precision),
-                    KIND_LOGSIG_NATIVE,
-                    stream,
-                    d,
-                    depth,
-                    precision,
-                    lplan.dim(),
-                    path,
-                    |p| match precision {
-                        Precision::F32 => {
-                            logsignature_with(&p, stream, &spec, &lplan, &SigConfig::serial())
-                        }
-                        Precision::F64 => {
-                            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
-                            let out = logsignature_with(
-                                &wide,
-                                stream,
-                                &spec,
-                                &lplan,
-                                &SigConfig::serial(),
-                            )?;
-                            Ok(out.into_iter().map(|v| v as f32).collect())
-                        }
-                    },
-                )?;
-                (values, precision)
+                with_elem!(spec.dtype(), E, {
+                    self.serve_native_stateless::<E>(
+                        ShapeKey::logsignature(d, depth, stream).with_dtype(spec.dtype()),
+                        KIND_LOGSIG_NATIVE,
+                        stream,
+                        d,
+                        depth,
+                        lplan.dim(),
+                        E::rows_into(path)?,
+                        |p| logsignature_with(&p, stream, &spec, &lplan, &SigConfig::serial()),
+                    )?
+                })
             }
-            Request::SignatureGrad { path, stream, d, depth, cotangent, precision } => {
-                let spec = SigSpec::new(d, depth)?;
+            Request::SignatureGrad { path, stream, d, depth, cotangent } => {
+                let spec = SigSpec::with_dtype(d, depth, path.precision())?;
+                anyhow::ensure!(
+                    cotangent.precision() == path.precision(),
+                    "cotangent rows are {} but the path is {}",
+                    cotangent.precision().label(),
+                    path.precision().label()
+                );
                 // Shape validation happens inside the VJP. Per-request
                 // stream parallelism is capped by the dispatch config: the
                 // coordinator already serves requests concurrently (one
@@ -750,7 +728,7 @@ impl Coordinator {
                     points: stream,
                     d,
                     depth,
-                    dtype: precision,
+                    dtype: spec.dtype(),
                 });
                 match plan {
                     ExecPlan::StreamParallel { .. } => self
@@ -760,24 +738,14 @@ impl Coordinator {
                     _ => self.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed),
                 };
                 let cfg = SigConfig { threads, ..SigConfig::serial() };
-                let grad = match precision {
-                    Precision::F32 => {
-                        signature_vjp_with(&path, stream, &spec, &cfg, &cotangent)?.grad_path
-                    }
-                    Precision::F64 => {
-                        // Upcast both inputs once; the reversibility-based
-                        // backward runs entirely in f64 and the path
-                        // gradient downcasts at the boundary.
-                        let wide_path: Vec<f64> = path.iter().map(|&v| v as f64).collect();
-                        let wide_cot: Vec<f64> = cotangent.iter().map(|&v| v as f64).collect();
-                        signature_vjp_with(&wide_path, stream, &spec, &cfg, &wide_cot)?
-                            .grad_path
-                            .into_iter()
-                            .map(|v| v as f32)
-                            .collect()
-                    }
-                };
-                (grad, precision)
+                // The reversibility-based backward runs entirely at the
+                // rows' native width; the gradient comes back at the same
+                // width.
+                with_elem!(spec.dtype(), E, {
+                    let path = E::rows_into(path)?;
+                    let cot = E::rows_into(cotangent)?;
+                    E::rows_from(signature_vjp_with(&path, stream, &spec, &cfg, &cot)?.grad_path)
+                })
             }
             Request::OpenStream { .. }
             | Request::Feed { .. }
@@ -786,7 +754,12 @@ impl Coordinator {
             | Request::CloseStream { .. } => unreachable!("handled by route_stream"),
         };
         self.metrics.native_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Ok(Response { values, backend: Backend::Native, precision, session: None })
+        Ok(Response {
+            precision: values.precision(),
+            values,
+            backend: Backend::Native,
+            session: None,
+        })
     }
 
     /// Serve a streaming request against the session table; `Ok(None)` for
@@ -811,7 +784,10 @@ impl Coordinator {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (values, session) = match req {
             Request::OpenStream { points, stream, d, depth } => {
-                let spec = SigSpec::new(*d, *depth)?;
+                // The seed rows' element width becomes the session's
+                // recorded dtype: every later feed must match it, and
+                // every response comes back at it.
+                let spec = SigSpec::with_dtype(*d, *depth, points.precision())?;
                 anyhow::ensure!(points.len() == *stream * *d, "bad point buffer");
                 // One call returning both id and seed signature: a racing
                 // eviction after the insert must not turn a successful
@@ -823,16 +799,17 @@ impl Coordinator {
                 let sig = if let Some(lane) = &self.feed_lane {
                     // Resolve the session's spec first: an unknown session
                     // errors here instead of after a linger, and the spec
-                    // keys the lane group. The planner only opens a lane
-                    // once >= 2 distinct sessions feed this spec; a lone
-                    // feeder gets capacity 1 and stays on the direct
-                    // scalar path (no linger — feeds are latency-direct
-                    // by default).
+                    // — `(d, depth, dtype)`, so f32 and f64 sessions never
+                    // share a sweep — keys the lane group. The planner
+                    // only opens a lane once >= 2 distinct sessions feed
+                    // this spec; a lone feeder gets capacity 1 and stays
+                    // on the direct scalar path (no linger — feeds are
+                    // latency-direct by default).
                     let spec = self.sessions.session_spec(*session)?;
-                    let key = (spec.d(), spec.depth());
+                    let key = (spec.d(), spec.depth(), spec.dtype());
                     let capacity = self.planner.feed_lane_capacity(
                         self.cfg.dispatch.microbatch,
-                        ShapeKey::feed(spec.d(), spec.depth()),
+                        ShapeKey::feed(spec.d(), spec.depth()).with_dtype(spec.dtype()),
                         session.0,
                     );
                     self.publish_shape_mix();
@@ -873,17 +850,30 @@ impl Coordinator {
                 // the recency window.
                 let spec = self.sessions.session_spec(*session).ok();
                 self.sessions.close(*session)?;
+                // An empty buffer, still typed at the session's dtype so
+                // the response's precision stays truthful.
+                let empty =
+                    Rows::zeros(spec.as_ref().map_or(Precision::F32, |s| s.dtype()), 0);
                 if let Some(spec) = spec {
-                    self.planner
-                        .forget_feeder(ShapeKey::feed(spec.d(), spec.depth()), session.0);
+                    self.planner.forget_feeder(
+                        ShapeKey::feed(spec.d(), spec.depth()).with_dtype(spec.dtype()),
+                        session.0,
+                    );
                 }
-                (Vec::new(), Some(*session))
+                (empty, Some(*session))
             }
             Request::Signature { .. }
             | Request::LogSignature { .. }
             | Request::SignatureGrad { .. } => unreachable!("stateless; returned above"),
         };
-        Ok(Some(Response { values, backend: Backend::Native, precision: Precision::F32, session }))
+        // The precision is read off the result rows — a session's recorded
+        // dtype, not an assumption (f64 sessions answer `F64` here).
+        Ok(Some(Response {
+            precision: values.precision(),
+            values,
+            backend: Backend::Native,
+            session,
+        }))
     }
 
     /// Serve a whole batch concurrently (used by examples and benches):
@@ -908,23 +898,24 @@ mod tests {
         Coordinator::new(CoordinatorConfig::native_only()).unwrap()
     }
 
+    /// Widen f32 test fixtures to exact f64 values (value-preserving, so
+    /// the f64 oracles are well-defined without generating f64 fixtures).
+    fn widen(v: &[f32]) -> Vec<f64> {
+        v.iter().copied().map(f64::from).collect()
+    }
+
     #[test]
     fn native_signature_roundtrip() {
         let c = native();
         let mut rng = Rng::new(1);
         let path = rng.normal_vec(8 * 2, 0.4);
         let resp = c
-            .call(Request::Signature {
-                path: path.clone(),
-                stream: 8,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            })
+            .call(Request::Signature { path: path.clone().into(), stream: 8, d: 2, depth: 3 })
             .unwrap();
         assert_eq!(resp.backend, Backend::Native);
+        assert_eq!(resp.precision, Precision::F32);
         let spec = SigSpec::new(2, 3).unwrap();
-        assert_close(&resp.values, &signature(&path, 8, &spec), 1e-6, 1e-7);
+        assert_close(resp.values.as_f32().unwrap(), &signature(&path, 8, &spec), 1e-6, 1e-7);
         assert_eq!(c.metrics().snapshot().native_requests, 1);
     }
 
@@ -934,13 +925,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let path = rng.normal_vec(6 * 3, 0.4);
         let resp = c
-            .call(Request::LogSignature {
-                path,
-                stream: 6,
-                d: 3,
-                depth: 3,
-                precision: Precision::F32,
-            })
+            .call(Request::LogSignature { path: path.into(), stream: 6, d: 3, depth: 3 })
             .unwrap();
         assert_eq!(resp.values.len(), crate::words::witt_dimension(3, 3));
     }
@@ -954,18 +939,17 @@ mod tests {
         let cot = rng.normal_vec(spec.sig_len(), 1.0);
         let resp = c
             .call(Request::SignatureGrad {
-                path: path.clone(),
+                path: path.clone().into(),
                 stream: 5,
                 d: 2,
                 depth: 3,
-                cotangent: cot.clone(),
-                precision: Precision::F32,
+                cotangent: cot.clone().into(),
             })
             .unwrap();
         // Short stream: the router's parallel config falls back to the
         // serial sweep, so this is bitwise the serial VJP.
         assert_close(
-            &resp.values,
+            resp.values.as_f32().unwrap(),
             &crate::signature::signature_vjp(&path, 5, &spec, &cot),
             1e-6,
             1e-7,
@@ -982,25 +966,23 @@ mod tests {
         let cot = rng.normal_vec(spec.sig_len(), 1.0);
         let resp = c
             .call(Request::SignatureGrad {
-                path: path.clone(),
+                path: path.clone().into(),
                 stream,
                 d: 2,
                 depth: 3,
-                cotangent: cot.clone(),
-                precision: Precision::F32,
+                cotangent: cot.clone().into(),
             })
             .unwrap();
         let serial = crate::signature::signature_vjp(&path, stream, &spec, &cot);
-        assert_close(&resp.values, &serial, 2e-3, 1e-4);
+        assert_close(resp.values.as_f32().unwrap(), &serial, 2e-3, 1e-4);
         // Mismatched cotangent shape is a clean error, not a panic.
         assert!(c
             .call(Request::SignatureGrad {
-                path,
+                path: path.into(),
                 stream,
                 d: 2,
                 depth: 3,
-                cotangent: vec![0.0; spec.sig_len() - 1],
-                precision: Precision::F32,
+                cotangent: vec![0.0f32; spec.sig_len() - 1].into(),
             })
             .is_err());
     }
@@ -1008,13 +990,8 @@ mod tests {
     #[test]
     fn bad_shapes_error_and_count() {
         let c = native();
-        let bad = c.call(Request::Signature {
-            path: vec![0.0; 3],
-            stream: 8,
-            d: 2,
-            depth: 3,
-            precision: Precision::F32,
-        });
+        let bad =
+            c.call(Request::Signature { path: vec![0.0f32; 3].into(), stream: 8, d: 2, depth: 3 });
         assert!(bad.is_err());
         assert_eq!(c.metrics().snapshot().errors, 1);
     }
@@ -1025,11 +1002,10 @@ mod tests {
         let mut rng = Rng::new(4);
         let reqs: Vec<Request> = (0..6)
             .map(|_| Request::Signature {
-                path: rng.normal_vec(8 * 2, 0.4),
+                path: rng.normal_vec(8 * 2, 0.4).into(),
                 stream: 8,
                 d: 2,
                 depth: 3,
-                precision: Precision::F32,
             })
             .collect();
         let resps = c.call_many(reqs);
@@ -1048,20 +1024,31 @@ mod tests {
         let all = rng.normal_vec(16 * 2, 0.3);
 
         let open = c
-            .call(Request::OpenStream { points: all[..6 * 2].to_vec(), stream: 6, d: 2, depth: 3 })
+            .call(Request::OpenStream {
+                points: all[..6 * 2].to_vec().into(),
+                stream: 6,
+                d: 2,
+                depth: 3,
+            })
             .unwrap();
         assert_eq!(open.backend, Backend::Native);
+        assert_eq!(open.precision, Precision::F32);
         let sid = open.session.expect("open returns a session id");
-        assert_close(&open.values, &signature(&all[..6 * 2], 6, &spec), 1e-6, 1e-7);
+        assert_close(open.values.as_f32().unwrap(), &signature(&all[..6 * 2], 6, &spec), 1e-6, 1e-7);
 
         let fed = c
-            .call(Request::Feed { session: sid, points: all[6 * 2..].to_vec(), count: 10 })
+            .call(Request::Feed { session: sid, points: all[6 * 2..].to_vec().into(), count: 10 })
             .unwrap();
-        assert_close(&fed.values, &signature(&all, 16, &spec), 2e-3, 1e-4);
+        assert_close(fed.values.as_f32().unwrap(), &signature(&all, 16, &spec), 2e-3, 1e-4);
 
         // Interval query crossing the feed boundary.
         let q = c.call(Request::QueryInterval { session: sid, i: 3, j: 12 }).unwrap();
-        assert_close(&q.values, &signature(&all[3 * 2..13 * 2], 10, &spec), 5e-3, 5e-4);
+        assert_close(
+            q.values.as_f32().unwrap(),
+            &signature(&all[3 * 2..13 * 2], 10, &spec),
+            5e-3,
+            5e-4,
+        );
 
         // Logsig query uses the coordinator's cached words-basis plan.
         let lq = c.call(Request::LogSigQueryInterval { session: sid, i: 3, j: 12 }).unwrap();
@@ -1103,7 +1090,7 @@ mod tests {
         for _ in 0..5 {
             let resp = c
                 .call(Request::OpenStream {
-                    points: rng.normal_vec(8 * 2, 0.3),
+                    points: rng.normal_vec(8 * 2, 0.3).into(),
                     stream: 8,
                     d: 2,
                     depth: 3,
@@ -1128,12 +1115,7 @@ mod tests {
     struct FailBackend;
 
     impl BatchBackend for FailBackend {
-        fn run(
-            &self,
-            _shape: &BatchShape,
-            _padded: &[f32],
-            _n_real: usize,
-        ) -> anyhow::Result<Vec<f32>> {
+        fn run(&self, _shape: &BatchShape, _padded: &Rows, _n_real: usize) -> anyhow::Result<Rows> {
             anyhow::bail!("backend down")
         }
     }
@@ -1186,11 +1168,10 @@ mod tests {
         let mut rng = Rng::new(10);
         let reqs: Vec<Request> = (0..2)
             .map(|_| Request::Signature {
-                path: rng.normal_vec(4 * 2, 0.3),
+                path: rng.normal_vec(4 * 2, 0.3).into(),
                 stream: 4,
                 d: 2,
                 depth: 3,
-                precision: Precision::F32,
             })
             .collect();
         for r in c.call_many(reqs) {
@@ -1223,13 +1204,7 @@ mod tests {
         let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
         let reqs: Vec<Request> = paths
             .iter()
-            .map(|p| Request::Signature {
-                path: p.clone(),
-                stream: 8,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            })
+            .map(|p| Request::Signature { path: p.clone().into(), stream: 8, d: 2, depth: 3 })
             .collect();
         let resps = c.call_many(reqs);
         for (p, r) in paths.iter().zip(&resps) {
@@ -1267,13 +1242,7 @@ mod tests {
         let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
         let reqs: Vec<Request> = paths
             .iter()
-            .map(|p| Request::LogSignature {
-                path: p.clone(),
-                stream: 8,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            })
+            .map(|p| Request::LogSignature { path: p.clone().into(), stream: 8, d: 2, depth: 3 })
             .collect();
         let resps = c.call_many(reqs);
         for (p, r) in paths.iter().zip(&resps) {
@@ -1308,20 +1277,8 @@ mod tests {
         let mut rng = Rng::new(23);
         let p = rng.normal_vec(6 * 2, 0.4);
         let resps = c.call_many(vec![
-            Request::Signature {
-                path: p.clone(),
-                stream: 6,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            },
-            Request::LogSignature {
-                path: p.clone(),
-                stream: 6,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            },
+            Request::Signature { path: p.clone().into(), stream: 6, d: 2, depth: 3 },
+            Request::LogSignature { path: p.clone().into(), stream: 6, d: 2, depth: 3 },
         ]);
         assert_eq!(resps[0].as_ref().unwrap().values, signature(&p, 6, &spec));
         assert_eq!(
@@ -1333,12 +1290,11 @@ mod tests {
 
     #[test]
     fn f32_and_f64_of_one_shape_never_share_a_microbatch() {
-        // The PR 6 acceptance test: one logical shape, two compute
-        // precisions. The dtype keys both the planner's shape mix and the
-        // batcher queue, so the two requests flush as TWO microbatches —
-        // an f32 request round-trips without ever sharing a queue with
-        // f64 — and the f64 row is the upcast -> f64 sweep -> downcast
-        // oracle, not the f32 sweep.
+        // One logical shape, two element widths. The dtype keys both the
+        // planner's shape mix and the batcher queue, so the two requests
+        // flush as TWO microbatches — an f32 request round-trips without
+        // ever sharing a queue with f64 — and the f64 row is the *native*
+        // f64 sweep, answered in f64 (no downcast anywhere).
         let c = Coordinator::new(
             CoordinatorConfig {
                 linger: Duration::from_millis(10),
@@ -1350,44 +1306,28 @@ mod tests {
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(24);
         let p = rng.normal_vec(6 * 2, 0.4);
+        let wide = widen(&p);
         let resps = c.call_many(vec![
-            Request::Signature {
-                path: p.clone(),
-                stream: 6,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            },
-            Request::Signature {
-                path: p.clone(),
-                stream: 6,
-                d: 2,
-                depth: 3,
-                precision: Precision::F64,
-            },
+            Request::Signature { path: p.clone().into(), stream: 6, d: 2, depth: 3 },
+            Request::Signature { path: wide.clone().into(), stream: 6, d: 2, depth: 3 },
         ]);
         let r32 = resps[0].as_ref().unwrap();
         let r64 = resps[1].as_ref().unwrap();
         assert_eq!(r32.precision, Precision::F32);
         assert_eq!(r64.precision, Precision::F64);
         assert_eq!(r32.values, signature(&p, 6, &spec));
-        let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
-        let want64: Vec<f32> = signature_with(&wide, 6, &spec, &SigConfig::serial())
-            .unwrap()
-            .into_iter()
-            .map(|v| v as f32)
-            .collect();
-        assert_eq!(r64.values, want64, "f64 row != the f64 oracle");
+        let want64 = signature_with(&wide, 6, &spec, &SigConfig::serial()).unwrap();
+        assert_eq!(r64.values, want64, "f64 row != the native f64 oracle");
         assert_eq!(c.metrics().snapshot().batches, 2, "precisions must not share a queue");
     }
 
     #[test]
     fn native_microbatch_coalesces_f64_rows_bitwise() {
-        // The widened plans execute at f64 too: six concurrent f64
+        // The lane plans execute natively at f64 too: six concurrent f64
         // requests of one spec coalesce into ONE lane-fused microbatch,
-        // and every row is bitwise the stand-alone f64 serve (upcast ->
-        // f64 sweep -> downcast) — coalescing must never change a
-        // caller's bits, in either precision.
+        // and every row is bitwise the stand-alone native f64 serve —
+        // coalescing must never change a caller's bits, in either
+        // precision.
         let c = Coordinator::new(
             CoordinatorConfig {
                 linger: Duration::from_millis(250),
@@ -1398,29 +1338,18 @@ mod tests {
         .unwrap();
         let spec = SigSpec::new(3, 3).unwrap();
         let mut rng = Rng::new(25);
-        let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 3, 0.4)).collect();
+        let paths: Vec<Vec<f64>> = (0..6).map(|_| widen(&rng.normal_vec(8 * 3, 0.4))).collect();
         let reqs: Vec<Request> = paths
             .iter()
-            .map(|p| Request::Signature {
-                path: p.clone(),
-                stream: 8,
-                d: 3,
-                depth: 3,
-                precision: Precision::F64,
-            })
+            .map(|p| Request::Signature { path: p.clone().into(), stream: 8, d: 3, depth: 3 })
             .collect();
         let resps = c.call_many(reqs);
         for (p, r) in paths.iter().zip(&resps) {
             let r = r.as_ref().expect("response");
             assert_eq!(r.backend, Backend::Native);
             assert_eq!(r.precision, Precision::F64);
-            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
-            let want: Vec<f32> = signature_with(&wide, 8, &spec, &SigConfig::serial())
-                .unwrap()
-                .into_iter()
-                .map(|v| v as f32)
-                .collect();
-            assert_eq!(r.values, want, "f64 lane row != stand-alone f64 serve");
+            let want = signature_with(p, 8, &spec, &SigConfig::serial()).unwrap();
+            assert_eq!(r.values, want, "f64 lane row != stand-alone native f64 serve");
         }
         let snap = c.metrics().snapshot();
         assert_eq!(snap.batches, 1, "same-spec f64 requests share one microbatch");
@@ -1429,83 +1358,68 @@ mod tests {
 
     #[test]
     fn f64_serves_direct_grad_and_logsig() {
-        // `native_batch = 0`: the escape hatch applies to f64 requests
-        // too — direct serve, no linger. Gradient requests run the f64
-        // backward; logsignature runs the generic log + Words-projection
-        // epilogue at f64 (upcast -> f64 pipeline -> downcast), same
-        // boundary convention as the signature surface.
+        // `native_batch = 0`: the escape hatch applies to f64 rows too —
+        // direct serve, no linger. Gradient requests run the f64 backward
+        // and answer the gradient in f64; logsignature runs the generic
+        // log + Words-projection epilogue natively at f64. No surface
+        // upcasts or downcasts.
         let c = Coordinator::new(CoordinatorConfig::native_only().with_native_batch(0)).unwrap();
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(26);
-        let path = rng.normal_vec(5 * 2, 0.4);
-        let wide: Vec<f64> = path.iter().map(|&v| v as f64).collect();
+        let wide = widen(&rng.normal_vec(5 * 2, 0.4));
 
         let resp = c
-            .call(Request::Signature {
-                path: path.clone(),
-                stream: 5,
-                d: 2,
-                depth: 3,
-                precision: Precision::F64,
-            })
+            .call(Request::Signature { path: wide.clone().into(), stream: 5, d: 2, depth: 3 })
             .unwrap();
-        let want: Vec<f32> = signature_with(&wide, 5, &spec, &SigConfig::serial())
-            .unwrap()
-            .into_iter()
-            .map(|v| v as f32)
-            .collect();
+        let want = signature_with(&wide, 5, &spec, &SigConfig::serial()).unwrap();
         assert_eq!(resp.values, want);
         assert_eq!(resp.precision, Precision::F64);
 
-        let cot = rng.normal_vec(spec.sig_len(), 1.0);
-        let wide_cot: Vec<f64> = cot.iter().map(|&v| v as f64).collect();
+        let wide_cot = widen(&rng.normal_vec(spec.sig_len(), 1.0));
         let g = c
             .call(Request::SignatureGrad {
-                path: path.clone(),
+                path: wide.clone().into(),
                 stream: 5,
                 d: 2,
                 depth: 3,
-                cotangent: cot,
-                precision: Precision::F64,
+                cotangent: wide_cot.clone().into(),
             })
             .unwrap();
         // Short stream: the plan falls back to the serial sweep, so this
-        // is bitwise the f64 VJP downcast at the boundary.
-        let want_g: Vec<f32> = signature_vjp_with(&wide, 5, &spec, &SigConfig::serial(), &wide_cot)
+        // is bitwise the native f64 VJP.
+        let want_g = signature_vjp_with(&wide, 5, &spec, &SigConfig::serial(), &wide_cot)
             .unwrap()
-            .grad_path
-            .into_iter()
-            .map(|v| v as f32)
-            .collect();
+            .grad_path;
         assert_eq!(g.values, want_g);
         assert_eq!(g.precision, Precision::F64);
 
-        let lresp = c
-            .call(Request::LogSignature {
-                path,
+        // A cotangent at the wrong width is a hard error, not a cast.
+        assert!(c
+            .call(Request::SignatureGrad {
+                path: wide.clone().into(),
                 stream: 5,
                 d: 2,
                 depth: 3,
-                precision: Precision::F64,
+                cotangent: vec![0.0f32; spec.sig_len()].into(),
             })
+            .is_err());
+
+        let lresp = c
+            .call(Request::LogSignature { path: wide.clone().into(), stream: 5, d: 2, depth: 3 })
             .unwrap();
         let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
-        let want_l: Vec<f32> = logsignature_with(&wide, 5, &spec, &plan, &SigConfig::serial())
-            .unwrap()
-            .into_iter()
-            .map(|v| v as f32)
-            .collect();
-        assert_eq!(lresp.values, want_l, "direct f64 logsig != f64 epilogue oracle");
+        let want_l = logsignature_with(&wide, 5, &spec, &plan, &SigConfig::serial()).unwrap();
+        assert_eq!(lresp.values, want_l, "direct f64 logsig != native f64 oracle");
         assert_eq!(lresp.precision, Precision::F64);
     }
 
     #[test]
     fn f64_logsig_microbatch_coalesces_and_matches_f64_oracle() {
-        // Satellite of PR 7: the f64 logsignature arm owns its own
-        // microbatch queue (`with_dtype(F64)` on the logsig shape key).
-        // Six concurrent same-spec f64 LogSignature requests must execute
-        // as ONE lane-fused f64 microbatch, each row bitwise equal to the
-        // stand-alone upcast -> f64 logsig -> downcast serve.
+        // The f64 logsignature traffic owns its own microbatch queue
+        // (`with_dtype(F64)` on the logsig shape key). Six concurrent
+        // same-spec f64 LogSignature requests must execute as ONE
+        // lane-fused f64 microbatch, each row bitwise equal to the
+        // stand-alone native f64 serve, answered in f64.
         let c = Coordinator::new(
             CoordinatorConfig {
                 linger: Duration::from_millis(250),
@@ -1517,29 +1431,18 @@ mod tests {
         let spec = SigSpec::new(2, 3).unwrap();
         let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
         let mut rng = Rng::new(27);
-        let paths: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(8 * 2, 0.4)).collect();
+        let paths: Vec<Vec<f64>> = (0..6).map(|_| widen(&rng.normal_vec(8 * 2, 0.4))).collect();
         let reqs: Vec<Request> = paths
             .iter()
-            .map(|p| Request::LogSignature {
-                path: p.clone(),
-                stream: 8,
-                d: 2,
-                depth: 3,
-                precision: Precision::F64,
-            })
+            .map(|p| Request::LogSignature { path: p.clone().into(), stream: 8, d: 2, depth: 3 })
             .collect();
         let resps = c.call_many(reqs);
         for (p, r) in paths.iter().zip(&resps) {
             let r = r.as_ref().expect("response");
             assert_eq!(r.backend, Backend::Native);
             assert_eq!(r.precision, Precision::F64);
-            let wide: Vec<f64> = p.iter().map(|&v| v as f64).collect();
-            let want: Vec<f32> = logsignature_with(&wide, 8, &spec, &plan, &SigConfig::serial())
-                .unwrap()
-                .into_iter()
-                .map(|v| v as f32)
-                .collect();
-            assert_eq!(r.values, want, "f64 logsig lane row != stand-alone f64 serve");
+            let want = logsignature_with(p, 8, &spec, &plan, &SigConfig::serial()).unwrap();
+            assert_eq!(r.values, want, "f64 logsig lane row != stand-alone native f64 serve");
         }
         let snap = c.metrics().snapshot();
         assert_eq!(snap.logsig_requests, 6);
@@ -1565,20 +1468,8 @@ mod tests {
         let short = rng.normal_vec(5 * 2, 0.4);
         let long = rng.normal_vec(9 * 2, 0.4);
         let resps = c.call_many(vec![
-            Request::Signature {
-                path: short.clone(),
-                stream: 5,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            },
-            Request::Signature {
-                path: long.clone(),
-                stream: 9,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            },
+            Request::Signature { path: short.clone().into(), stream: 5, d: 2, depth: 3 },
+            Request::Signature { path: long.clone().into(), stream: 9, d: 2, depth: 3 },
         ]);
         let r0 = resps[0].as_ref().unwrap();
         let r1 = resps[1].as_ref().unwrap();
@@ -1608,26 +1499,14 @@ mod tests {
         let path = rng.normal_vec(6 * 2, 0.4);
         let t0 = Instant::now();
         let resp = c
-            .call(Request::Signature {
-                path: path.clone(),
-                stream: 6,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            })
+            .call(Request::Signature { path: path.clone().into(), stream: 6, d: 2, depth: 3 })
             .unwrap();
         assert_eq!(resp.values, signature(&path, 6, &spec));
         // LogSignature rides the same escape hatch: direct scalar serve,
         // never the batcher.
         let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
         let lresp = c
-            .call(Request::LogSignature {
-                path: path.clone(),
-                stream: 6,
-                d: 2,
-                depth: 3,
-                precision: Precision::F32,
-            })
+            .call(Request::LogSignature { path: path.clone().into(), stream: 6, d: 2, depth: 3 })
             .unwrap();
         assert_eq!(
             lresp.values,
@@ -1636,14 +1515,14 @@ mod tests {
         // Streaming feeds bypass the feed lane too.
         let open = c
             .call(Request::OpenStream {
-                points: rng.normal_vec(4 * 2, 0.3),
+                points: rng.normal_vec(4 * 2, 0.3).into(),
                 stream: 4,
                 d: 2,
                 depth: 3,
             })
             .unwrap();
         let sid = open.session.unwrap();
-        c.call(Request::Feed { session: sid, points: rng.normal_vec(2 * 2, 0.3), count: 2 })
+        c.call(Request::Feed { session: sid, points: rng.normal_vec(2 * 2, 0.3).into(), count: 2 })
             .unwrap();
         assert!(
             t0.elapsed() < Duration::from_secs(10),
@@ -1673,11 +1552,10 @@ mod tests {
         // each lingers ~1ms and flushes as its own one-row batch).
         for _ in 0..24 {
             c.call(Request::Signature {
-                path: rng.normal_vec(8 * 2, 0.4),
+                path: rng.normal_vec(8 * 2, 0.4).into(),
                 stream: 8,
                 d: 2,
                 depth: 3,
-                precision: Precision::F32,
             })
             .unwrap();
         }
@@ -1688,13 +1566,7 @@ mod tests {
         let rare = rng.normal_vec(9 * 3, 0.4);
         let spec = SigSpec::new(3, 4).unwrap();
         let resp = c
-            .call(Request::Signature {
-                path: rare.clone(),
-                stream: 9,
-                d: 3,
-                depth: 4,
-                precision: Precision::F32,
-            })
+            .call(Request::Signature { path: rare.clone().into(), stream: 9, d: 3, depth: 4 })
             .unwrap();
         assert_eq!(resp.values, signature(&rare, 9, &spec), "direct path is still exact");
         let snap = c.metrics().snapshot();
@@ -1719,8 +1591,8 @@ mod tests {
         .unwrap();
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(16);
-        let seed_a = rng.normal_vec(4 * 2, 0.3);
-        let seed_b = rng.normal_vec(4 * 2, 0.3);
+        let seed_a: Rows = rng.normal_vec(4 * 2, 0.3).into();
+        let seed_b: Rows = rng.normal_vec(4 * 2, 0.3).into();
         let sid_a = c
             .call(Request::OpenStream { points: seed_a.clone(), stream: 4, d: 2, depth: 3 })
             .unwrap()
@@ -1737,8 +1609,8 @@ mod tests {
         let tid_b = twin.open(&spec, &seed_b, 4).unwrap();
         // Round 1 (sequential): teaches the planner this spec has two
         // distinct feeders; lone feeds stay scalar and direct.
-        let warm_a = rng.normal_vec(2 * 2, 0.3);
-        let warm_b = rng.normal_vec(3 * 2, 0.3);
+        let warm_a: Rows = rng.normal_vec(2 * 2, 0.3).into();
+        let warm_b: Rows = rng.normal_vec(3 * 2, 0.3).into();
         let r_a = c
             .call(Request::Feed { session: sid_a, points: warm_a.clone(), count: 2 })
             .unwrap();
@@ -1749,8 +1621,8 @@ mod tests {
         assert_eq!(r_b.values, twin.feed(tid_b, &warm_b, 3).unwrap());
         // Round 2 (concurrent, ragged counts): both feeds enter the lane
         // and flush as ONE fused sweep.
-        let chunk_a = rng.normal_vec(3 * 2, 0.3);
-        let chunk_b = rng.normal_vec(2, 0.3);
+        let chunk_a: Rows = rng.normal_vec(3 * 2, 0.3).into();
+        let chunk_b: Rows = rng.normal_vec(2, 0.3).into();
         let resps = c.call_many(vec![
             Request::Feed { session: sid_a, points: chunk_a.clone(), count: 3 },
             Request::Feed { session: sid_b, points: chunk_b.clone(), count: 1 },
@@ -1777,29 +1649,26 @@ mod tests {
                     .unwrap();
             assert!(c
                 .call(Request::Signature {
-                    path: vec![0.0; 2],
+                    path: vec![0.0f32; 2].into(),
                     stream: 1,
                     d: 2,
                     depth: 3,
-                    precision: Precision::F32,
                 })
                 .is_err());
             assert!(c
                 .call(Request::LogSignature {
-                    path: vec![0.0; 2],
+                    path: vec![0.0f32; 2].into(),
                     stream: 1,
                     d: 2,
                     depth: 3,
-                    precision: Precision::F32,
                 })
                 .is_err());
             assert!(c
                 .call(Request::Signature {
-                    path: vec![0.0; 3],
+                    path: vec![0.0f32; 3].into(),
                     stream: 2,
                     d: 2,
                     depth: 3,
-                    precision: Precision::F32,
                 })
                 .is_err());
         }
@@ -1816,13 +1685,61 @@ mod tests {
         let mut rng = Rng::new(5);
         let resp = c
             .call(Request::Signature {
-                path: rng.normal_vec(4 * 2, 0.3),
+                path: rng.normal_vec(4 * 2, 0.3).into(),
                 stream: 4,
                 d: 2,
                 depth: 2,
-                precision: Precision::F32,
             })
             .unwrap();
         assert_eq!(resp.backend, Backend::Native);
+    }
+
+    #[test]
+    fn f64_sessions_serve_native_width_through_the_coordinator() {
+        // The stateful surface end to end at f64: a session opened with
+        // f64 rows records the dtype, every response comes back in f64
+        // rows, and each one is bitwise the direct f64 Path oracle. A
+        // feed at the wrong width is a hard error that leaves the session
+        // untouched.
+        let c = native();
+        let spec = SigSpec::with_dtype(2, 3, Precision::F64).unwrap();
+        let mut rng = Rng::new(31);
+        let seed = widen(&rng.normal_vec(5 * 2, 0.3));
+        let chunk = widen(&rng.normal_vec(3 * 2, 0.3));
+
+        let open = c
+            .call(Request::OpenStream { points: seed.clone().into(), stream: 5, d: 2, depth: 3 })
+            .unwrap();
+        assert_eq!(open.precision, Precision::F64);
+        let sid = open.session.unwrap();
+        let mut oracle = crate::path::Path::<f64>::new(&spec, &seed, 5).unwrap();
+        assert_eq!(open.values, oracle.signature());
+
+        let fed = c
+            .call(Request::Feed { session: sid, points: chunk.clone().into(), count: 3 })
+            .unwrap();
+        oracle.update(&chunk, 3).unwrap();
+        assert_eq!(fed.precision, Precision::F64);
+        assert_eq!(fed.values, oracle.signature(), "f64 feed != f64 Path oracle");
+
+        let q = c.call(Request::QueryInterval { session: sid, i: 1, j: 6 }).unwrap();
+        assert_eq!(q.precision, Precision::F64);
+        assert_eq!(q.values, oracle.query(1, 6).unwrap(), "f64 query != f64 Path oracle");
+
+        let lq = c.call(Request::LogSigQueryInterval { session: sid, i: 1, j: 6 }).unwrap();
+        assert_eq!(lq.precision, Precision::F64);
+        assert_eq!(lq.values.len(), crate::words::witt_dimension(2, 3));
+
+        // Cross-precision feed: rejected, session state unchanged.
+        assert!(c
+            .call(Request::Feed { session: sid, points: vec![0.0f32; 2 * 2].into(), count: 2 })
+            .is_err());
+        assert_eq!(c.sessions().session_len(sid).unwrap(), 8);
+
+        // Close answers an (empty) f64 buffer — the dtype stays truthful
+        // on every streaming response.
+        let closed = c.call(Request::CloseStream { session: sid }).unwrap();
+        assert_eq!(closed.precision, Precision::F64);
+        assert!(closed.values.is_empty());
     }
 }

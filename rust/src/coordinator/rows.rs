@@ -1,0 +1,35 @@
+//! The **single sanctioned precision boundary** of the serving stack.
+//!
+//! Typed rows ([`crate::ta::Rows`]) flow from the wire to the kernels at
+//! their native element width; the one place the serving code is allowed
+//! to look at a [`crate::ta::Precision`] tag and pick an element type is
+//! the [`with_elem!`] macro below. Everything downstream of that dispatch
+//! is generic over [`crate::ta::Elem`] and crosses between `Rows` and
+//! native buffers through the cast-free row hooks
+//! ([`crate::ta::Elem::rows_from`] / `rows_into` / `rows_as_slice`).
+//!
+//! A CI grep-lint (`tools/lint_row_casts.sh`) fails the build on any new
+//! `as f32` / `as f64` row cast inside `coordinator/` outside this
+//! module, so "no transport-induced rounding" is enforced structurally,
+//! not by review.
+
+/// Dispatch a generic body on a [`crate::ta::Precision`] exactly once:
+/// `with_elem!(prec, E, { ... })` runs the block with `E` aliased to
+/// `f32` or `f64`. The block's value is the macro's value; both arms must
+/// therefore agree on the (usually `Rows`-typed or fully generic) result.
+macro_rules! with_elem {
+    ($prec:expr, $E:ident, $body:block) => {
+        match $prec {
+            $crate::ta::Precision::F32 => {
+                type $E = f32;
+                $body
+            }
+            $crate::ta::Precision::F64 => {
+                type $E = f64;
+                $body
+            }
+        }
+    };
+}
+
+pub(crate) use with_elem;

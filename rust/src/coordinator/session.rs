@@ -7,6 +7,15 @@
 //! (`OpenStream` / `Feed` / `QueryInterval` / `LogSigQueryInterval` /
 //! `CloseStream`).
 //!
+//! Sessions are **natively typed**: each session records its element
+//! precision at open (the spec's [`SigSpec::dtype`]) and holds a
+//! `Path<f32>` or `Path<f64>` accordingly ([`ResidentPath`]'s variants).
+//! Points arrive and signatures leave as typed [`Rows`] — an f64 session
+//! never sees an f32 intermediate, and feeding rows of the wrong
+//! precision is a per-call error, not a cast. Lane-fused feed batches
+//! group by `(d, depth, dtype)`, so a sweep is always homogeneous in
+//! element type.
+//!
 //! Scalability and memory bounds:
 //!
 //! - The table is **sharded**: session ids map onto independent
@@ -53,7 +62,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::logsignature::LogSigPlan;
 use crate::path::Path;
 use crate::state::{FeedLog, SessionStore, SpillConfig, WalRecord};
-use crate::ta::SigSpec;
+use crate::ta::{Elem, Precision, Rows, SigSpec};
 
 /// Opaque session handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -116,14 +125,141 @@ enum Gone {
     Evicted,
 }
 
+/// A resident session's `Path` at its native element width. Serving-facing
+/// accessors speak typed [`Rows`]; the two variants are the only place the
+/// session layer distinguishes f32 from f64 state, and every arm is
+/// cast-free — each delegates to the `Elem`-generic `Path` methods at the
+/// session's own precision.
+enum ResidentPath {
+    F32(Path<f32>),
+    F64(Path<f64>),
+}
+
+impl ResidentPath {
+    /// Build a path from typed seed rows; the rows' precision must match
+    /// the spec's dtype (a mismatch is an error, never a cast).
+    fn new(spec: &SigSpec, points: &Rows, stream: usize) -> anyhow::Result<ResidentPath> {
+        anyhow::ensure!(
+            points.precision() == spec.dtype(),
+            "open rows are {} but the spec's dtype is {}",
+            points.precision().label(),
+            spec.dtype().label()
+        );
+        Ok(match points {
+            Rows::F32(p) => ResidentPath::F32(Path::new(spec, p, stream)?),
+            Rows::F64(p) => ResidentPath::F64(Path::new(spec, p, stream)?),
+        })
+    }
+
+    /// Reload from a spill blob. The dtype comes from the slot's cold
+    /// metadata (spilled slots keep their spec in memory), so the codec is
+    /// asked for exactly the width that was serialized.
+    fn deserialize(dtype: Precision, blob: &[u8]) -> anyhow::Result<ResidentPath> {
+        Ok(match dtype {
+            Precision::F32 => ResidentPath::F32(Path::deserialize(blob)?),
+            Precision::F64 => ResidentPath::F64(Path::deserialize(blob)?),
+        })
+    }
+
+    fn spec(&self) -> &SigSpec {
+        match self {
+            ResidentPath::F32(p) => p.spec(),
+            ResidentPath::F64(p) => p.spec(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            ResidentPath::F32(p) => p.len(),
+            ResidentPath::F64(p) => p.len(),
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        match self {
+            ResidentPath::F32(p) => p.storage_bytes(),
+            ResidentPath::F64(p) => p.storage_bytes(),
+        }
+    }
+
+    fn serialized_len(&self) -> usize {
+        match self {
+            ResidentPath::F32(p) => p.serialized_len(),
+            ResidentPath::F64(p) => p.serialized_len(),
+        }
+    }
+
+    fn serialize_into(&self, out: &mut Vec<u8>) {
+        match self {
+            ResidentPath::F32(p) => p.serialize_into(out),
+            ResidentPath::F64(p) => p.serialize_into(out),
+        }
+    }
+
+    /// Extend with typed rows; wrong-precision rows error via the
+    /// cast-free row hooks (`Elem::rows_as_slice`).
+    fn update(&mut self, points: &Rows, count: usize) -> anyhow::Result<()> {
+        match self {
+            ResidentPath::F32(p) => p.update(f32::rows_as_slice(points)?, count),
+            ResidentPath::F64(p) => p.update(f64::rows_as_slice(points)?, count),
+        }
+    }
+
+    fn signature(&self) -> Rows {
+        match self {
+            ResidentPath::F32(p) => p.signature().into(),
+            ResidentPath::F64(p) => p.signature().into(),
+        }
+    }
+
+    fn query(&self, i: usize, j: usize) -> anyhow::Result<Rows> {
+        match self {
+            ResidentPath::F32(p) => Ok(p.query(i, j)?.into()),
+            ResidentPath::F64(p) => Ok(p.query(i, j)?.into()),
+        }
+    }
+
+    fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Rows> {
+        match self {
+            ResidentPath::F32(p) => Ok(p.logsig_query(i, j, plan)?.into()),
+            ResidentPath::F64(p) => Ok(p.logsig_query(i, j, plan)?.into()),
+        }
+    }
+}
+
+/// Element-typed access into a [`ResidentPath`], for code that has already
+/// grouped sessions into dtype-homogeneous runs (the lane-fused feed
+/// sweep) and needs the monomorphic `Path<E>` lanes back out.
+trait TypedPath: Elem {
+    fn path_mut(rp: &mut ResidentPath) -> &mut Path<Self>;
+}
+
+impl TypedPath for f32 {
+    fn path_mut(rp: &mut ResidentPath) -> &mut Path<f32> {
+        match rp {
+            ResidentPath::F32(p) => p,
+            ResidentPath::F64(_) => unreachable!("run grouped by dtype"),
+        }
+    }
+}
+
+impl TypedPath for f64 {
+    fn path_mut(rp: &mut ResidentPath) -> &mut Path<f64> {
+        match rp {
+            ResidentPath::F64(p) => p,
+            ResidentPath::F32(_) => unreachable!("run grouped by dtype"),
+        }
+    }
+}
+
 /// Where a session's state currently lives. Transitions happen only under
 /// the slot mutex: Resident ⇄ Spilled (spill / transparent reload), and
 /// either → Defunct (close, or destroy-on-evict without a store).
 enum Slot {
-    /// Hot: the precomputed `Path` is in memory.
-    Resident(Path),
+    /// Hot: the precomputed `Path` is in memory, at its native width.
+    Resident(ResidentPath),
     /// Cold: state lives in the spill store; enough metadata stays here
-    /// to answer spec/length lookups without a reload.
+    /// to answer spec/length/dtype lookups without a reload.
     Spilled { spec: SigSpec, stream: usize, bytes: usize },
     /// Gone for good; in-flight operations holding the `Arc` see why.
     Defunct(Gone),
@@ -151,8 +287,8 @@ struct Session {
     last_used_ms: AtomicU64,
 }
 
-/// The `Path` of a slot known to be resident (`ensure_resident` ran).
-fn resident_path(slot: &mut Slot) -> &mut Path {
+/// The path of a slot known to be resident (`ensure_resident` ran).
+fn resident_path(slot: &mut Slot) -> &mut ResidentPath {
     match slot {
         Slot::Resident(p) => p,
         _ => unreachable!("slot made resident before use"),
@@ -273,15 +409,15 @@ impl Inner {
         match slot {
             Slot::Resident(_) => Ok(false),
             Slot::Defunct(g) => Err(self.defunct_error(id, *g)),
-            Slot::Spilled { bytes, .. } => {
-                let bytes = *bytes;
+            Slot::Spilled { spec, bytes, .. } => {
+                let (dtype, bytes) = (spec.dtype(), *bytes);
                 let store = self.store.as_ref().ok_or_else(|| {
                     anyhow::anyhow!("session {id:?} is spilled but no spill store is configured")
                 })?;
                 let blob = store.get(id.0)?.ok_or_else(|| {
                     anyhow::anyhow!("spilled session {id:?} is missing from the spill store")
                 })?;
-                let path: Path = Path::deserialize(&blob)?;
+                let path = ResidentPath::deserialize(dtype, &blob)?;
                 // The blob is now redundant (state is hot again); dropping
                 // it keeps the spilled-bytes gauge honest.
                 let _ = store.remove(id.0);
@@ -297,13 +433,13 @@ impl Inner {
     }
 
     /// Lock a session's slot, make it resident (reloading if spilled),
-    /// and run `f` on its `Path`. Returns `f`'s result plus whether a
+    /// and run `f` on its typed path. Returns `f`'s result plus whether a
     /// reload happened.
     fn with_resident<R>(
         &self,
         id: SessionId,
         sess: &Session,
-        f: impl FnOnce(&mut Path) -> anyhow::Result<R>,
+        f: impl FnOnce(&mut ResidentPath) -> anyhow::Result<R>,
     ) -> anyhow::Result<(R, bool)> {
         let mut slot = sess.slot.lock().unwrap();
         let reloaded = self.ensure_resident(id, sess, &mut slot)?;
@@ -510,7 +646,7 @@ impl SessionManager {
         // Warm-restart recovery: replay the log into fresh Paths. Feeds
         // for closed/unknown ids are skipped; closes leave tombstones so
         // the error taxonomy survives restarts too.
-        let mut recovered: HashMap<u64, Path> = HashMap::new();
+        let mut recovered: HashMap<u64, ResidentPath> = HashMap::new();
         let mut closed_ids: Vec<u64> = vec![];
         let mut max_seen: u64 = 0;
         if let Some(wp) = &wal_path {
@@ -518,8 +654,15 @@ impl SessionManager {
                 match rec {
                     WalRecord::Open { id, d, depth, count, points } => {
                         max_seen = max_seen.max(id);
-                        let spec = SigSpec::new(d as usize, depth as usize)?;
-                        recovered.insert(id, Path::new(&spec, &points, count as usize)?);
+                        // The log frames rows at their native width; the
+                        // recovered spec's dtype comes straight from the
+                        // record's row precision.
+                        let spec = SigSpec::with_dtype(
+                            d as usize,
+                            depth as usize,
+                            points.precision(),
+                        )?;
+                        recovered.insert(id, ResidentPath::new(&spec, &points, count as usize)?);
                     }
                     WalRecord::Feed { id, count, points } => {
                         if let Some(p) = recovered.get_mut(&id) {
@@ -613,8 +756,10 @@ impl SessionManager {
         Ok(SessionManager { next_id: AtomicU64::new(next_id), inner, sweeper })
     }
 
-    /// Open a session seeded with an initial path (>= 2 points).
-    pub fn open(&self, spec: &SigSpec, points: &[f32], stream: usize) -> anyhow::Result<SessionId> {
+    /// Open a session seeded with an initial path (>= 2 points). The rows'
+    /// precision must match the spec's dtype; the session serves at that
+    /// width for its whole life.
+    pub fn open(&self, spec: &SigSpec, points: &Rows, stream: usize) -> anyhow::Result<SessionId> {
         self.open_with_signature(spec, points, stream).map(|(id, _)| id)
     }
 
@@ -625,10 +770,10 @@ impl SessionManager {
     pub fn open_with_signature(
         &self,
         spec: &SigSpec,
-        points: &[f32],
+        points: &Rows,
         stream: usize,
-    ) -> anyhow::Result<(SessionId, Vec<f32>)> {
-        let path = Path::new(spec, points, stream)?;
+    ) -> anyhow::Result<(SessionId, Rows)> {
+        let path = ResidentPath::new(spec, points, stream)?;
         let bytes = path.storage_bytes();
         let sig = path.signature();
         let stride = self.inner.cfg.id_stride.max(1);
@@ -640,7 +785,7 @@ impl SessionManager {
             d: spec.d() as u32,
             depth: spec.depth() as u32,
             count: stream as u32,
-            points: points.to_vec(),
+            points: points.clone(),
         });
         let sess = Arc::new(Session {
             slot: Mutex::new(Slot::Resident(path)),
@@ -661,8 +806,9 @@ impl SessionManager {
         Ok((id, sig))
     }
 
-    /// Feed new points; returns the signature over the whole stream so far.
-    pub fn feed(&self, id: SessionId, points: &[f32], count: usize) -> anyhow::Result<Vec<f32>> {
+    /// Feed new points (rows at the session's native precision); returns
+    /// the signature over the whole stream so far, typed likewise.
+    pub fn feed(&self, id: SessionId, points: &Rows, count: usize) -> anyhow::Result<Rows> {
         let sess = self.inner.get(id)?;
         // Touch at start as well as completion: a long-running update must
         // not look idle to LRU/TTL eviction while it is in flight.
@@ -678,7 +824,7 @@ impl SessionManager {
             self.inner.log_wal(&WalRecord::Feed {
                 id: id.0,
                 count: count as u32,
-                points: points.to_vec(),
+                points: points.clone(),
             });
             Ok(path.signature())
         })?;
@@ -704,10 +850,10 @@ impl SessionManager {
     /// order, so two overlapping batch feeds cannot deadlock.
     pub fn feed_batch(
         &self,
-        feeds: Vec<(SessionId, Vec<f32>, usize)>,
-    ) -> Vec<anyhow::Result<Vec<f32>>> {
+        feeds: Vec<(SessionId, Rows, usize)>,
+    ) -> Vec<anyhow::Result<Rows>> {
         let n = feeds.len();
-        let mut results: Vec<Option<anyhow::Result<Vec<f32>>>> = (0..n).map(|_| None).collect();
+        let mut results: Vec<Option<anyhow::Result<Rows>>> = (0..n).map(|_| None).collect();
         // Wave-partition duplicates: occurrence k of a session id lands in
         // wave k, and waves run sequentially.
         let mut waves: Vec<Vec<usize>> = vec![];
@@ -730,9 +876,9 @@ impl SessionManager {
     /// session.
     fn feed_wave(
         &self,
-        feeds: &[(SessionId, Vec<f32>, usize)],
+        feeds: &[(SessionId, Rows, usize)],
         wave: &[usize],
-        results: &mut [Option<anyhow::Result<Vec<f32>>>],
+        results: &mut [Option<anyhow::Result<Rows>>],
     ) {
         // Resolve sessions; unknown ids error individually.
         let mut resolved: Vec<(usize, Arc<Session>)> = vec![];
@@ -762,7 +908,10 @@ impl SessionManager {
             // Per-lane validation up front, so one malformed feed errors
             // alone instead of failing its whole lane group.
             let (_, points, count) = &feeds[*idx];
-            let d = slot_spec(&guard).d();
+            let (d, dtype) = {
+                let s = slot_spec(&guard);
+                (s.d(), s.dtype())
+            };
             if *count < 1 {
                 results[*idx] = Some(Err(anyhow::anyhow!("no points to add")));
                 continue;
@@ -774,37 +923,65 @@ impl SessionManager {
                 )));
                 continue;
             }
+            if points.precision() != dtype {
+                results[*idx] = Some(Err(anyhow::anyhow!(
+                    "feed rows are {} but session {:?} serves {}",
+                    points.precision().label(),
+                    feeds[*idx].0,
+                    dtype.label()
+                )));
+                continue;
+            }
             locked.push((*idx, guard));
         }
         // Group same-spec lanes into contiguous runs (the feed lane keys
-        // submissions by spec, so this is normally one run; a mixed batch
-        // still lane-fuses per spec).
+        // submissions by `(d, depth, dtype)`, so this is normally one run;
+        // a mixed batch still lane-fuses per spec, and never across
+        // element precisions — every run is dtype-homogeneous).
         locked.sort_by_key(|(_, g)| {
             let s = slot_spec(g);
-            (s.d(), s.depth())
+            (s.d(), s.depth(), s.dtype() == Precision::F64)
         });
         let mut start = 0usize;
         while start < locked.len() {
             let key = {
                 let s = slot_spec(&locked[start].1);
-                (s.d(), s.depth())
+                (s.d(), s.depth(), s.dtype())
             };
             let mut end = start + 1;
             while end < locked.len() {
                 let s = slot_spec(&locked[end].1);
-                if (s.d(), s.depth()) != key {
+                if (s.d(), s.depth(), s.dtype()) != key {
                     break;
                 }
                 end += 1;
             }
             let run = &mut locked[start..end];
             let idxs: Vec<usize> = run.iter().map(|(idx, _)| *idx).collect();
-            let outcome = {
-                let mut paths: Vec<&mut Path> =
-                    run.iter_mut().map(|(_, g)| resident_path(&mut **g)).collect();
-                let slices: Vec<&[f32]> = idxs.iter().map(|&i| feeds[i].1.as_slice()).collect();
+            // One generic sweep, dispatched on the run's dtype exactly
+            // once: the run is homogeneous, so `TypedPath::path_mut`
+            // recovers the monomorphic lanes without a cast.
+            fn update_run<E: TypedPath>(
+                run: &mut [(usize, MutexGuard<'_, Slot>)],
+                feeds: &[(SessionId, Rows, usize)],
+                idxs: &[usize],
+            ) -> anyhow::Result<()> {
+                let mut paths: Vec<&mut Path<E>> = run
+                    .iter_mut()
+                    .map(|(_, g)| E::path_mut(resident_path(&mut **g)))
+                    .collect();
+                let slices: Vec<&[E]> = idxs
+                    .iter()
+                    .map(|&i| {
+                        E::rows_as_slice(&feeds[i].1).expect("lane precision validated per feed")
+                    })
+                    .collect();
                 let counts: Vec<usize> = idxs.iter().map(|&i| feeds[i].2).collect();
                 Path::update_batch(&mut paths, &slices, &counts)
+            }
+            let outcome = match key.2 {
+                Precision::F32 => update_run::<f32>(run, feeds, &idxs),
+                Precision::F64 => update_run::<f64>(run, feeds, &idxs),
             };
             match outcome {
                 Ok(()) => {
@@ -854,8 +1031,9 @@ impl SessionManager {
     }
 
     /// O(1) interval query against a session's stream (reloading the
-    /// session transparently if it was spilled).
-    pub fn query(&self, id: SessionId, i: usize, j: usize) -> anyhow::Result<Vec<f32>> {
+    /// session transparently if it was spilled). Typed at the session's
+    /// native precision.
+    pub fn query(&self, id: SessionId, i: usize, j: usize) -> anyhow::Result<Rows> {
         let sess = self.inner.get(id)?;
         let (out, reloaded) = self.inner.with_resident(id, &sess, |path| path.query(i, j))?;
         self.inner.touch(&sess);
@@ -872,7 +1050,7 @@ impl SessionManager {
         i: usize,
         j: usize,
         plan: &LogSigPlan,
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<Rows> {
         let sess = self.inner.get(id)?;
         let (out, reloaded) =
             self.inner.with_resident(id, &sess, |path| path.logsig_query(i, j, plan))?;
@@ -893,7 +1071,7 @@ impl SessionManager {
         i: usize,
         j: usize,
         plan_for: F,
-    ) -> anyhow::Result<Vec<f32>>
+    ) -> anyhow::Result<Rows>
     where
         F: FnOnce(&SigSpec) -> anyhow::Result<Arc<LogSigPlan>>,
     {
@@ -910,11 +1088,20 @@ impl SessionManager {
             self.inner.enforce_budget(&[id.0]);
         }
         let plan = plan_for(&spec)?;
-        crate::logsignature::logsignature_from_sig(&sig, &spec, plan.as_ref())
+        // The log + basis projection runs at the signature's own width.
+        match &sig {
+            Rows::F32(s) => {
+                Ok(crate::logsignature::logsignature_from_sig(s, &spec, plan.as_ref())?.into())
+            }
+            Rows::F64(s) => {
+                Ok(crate::logsignature::logsignature_from_sig(s, &spec, plan.as_ref())?.into())
+            }
+        }
     }
 
-    /// The signature of a session's whole stream so far.
-    pub fn signature(&self, id: SessionId) -> anyhow::Result<Vec<f32>> {
+    /// The signature of a session's whole stream so far, typed at the
+    /// session's native precision.
+    pub fn signature(&self, id: SessionId) -> anyhow::Result<Rows> {
         let sess = self.inner.get(id)?;
         let (out, reloaded) =
             self.inner.with_resident(id, &sess, |path| Ok(path.signature()))?;
@@ -1020,11 +1207,11 @@ mod tests {
         let m = mgr();
         let mut rng = Rng::new(1);
         let all = rng.normal_vec(12 * 2, 0.4);
-        let id = m.open(&spec, &all[..4 * 2], 4).unwrap();
-        let sig1 = m.feed(id, &all[4 * 2..8 * 2], 4).unwrap();
-        assert_close(&sig1, &signature(&all[..8 * 2], 8, &spec), 2e-3, 1e-4);
-        let sig2 = m.feed(id, &all[8 * 2..], 4).unwrap();
-        assert_close(&sig2, &signature(&all, 12, &spec), 2e-3, 1e-4);
+        let id = m.open(&spec, &all[..4 * 2].to_vec().into(), 4).unwrap();
+        let sig1 = m.feed(id, &all[4 * 2..8 * 2].to_vec().into(), 4).unwrap();
+        assert_close(sig1.as_f32().unwrap(), &signature(&all[..8 * 2], 8, &spec), 2e-3, 1e-4);
+        let sig2 = m.feed(id, &all[8 * 2..].to_vec().into(), 4).unwrap();
+        assert_close(sig2.as_f32().unwrap(), &signature(&all, 12, &spec), 2e-3, 1e-4);
         assert_eq!(m.session_len(id).unwrap(), 12);
         assert_eq!(m.session_spec(id).unwrap(), spec);
     }
@@ -1035,14 +1222,14 @@ mod tests {
         let m = mgr();
         let mut rng = Rng::new(2);
         let all = rng.normal_vec(10 * 2, 0.4);
-        let id = m.open(&spec, &all[..5 * 2], 5).unwrap();
-        m.feed(id, &all[5 * 2..], 5).unwrap();
+        let id = m.open(&spec, &all[..5 * 2].to_vec().into(), 5).unwrap();
+        m.feed(id, &all[5 * 2..].to_vec().into(), 5).unwrap();
         // Interval crossing the update boundary.
         let q = m.query(id, 3, 8).unwrap();
-        assert_close(&q, &signature(&all[3 * 2..9 * 2], 6, &spec), 5e-3, 5e-4);
+        assert_close(q.as_f32().unwrap(), &signature(&all[3 * 2..9 * 2], 6, &spec), 5e-3, 5e-4);
         // Whole-stream signature accessor agrees with recomputation.
         let whole = m.signature(id).unwrap();
-        assert_close(&whole, &signature(&all, 10, &spec), 2e-3, 1e-4);
+        assert_close(whole.as_f32().unwrap(), &signature(&all, 10, &spec), 2e-3, 1e-4);
         // Logsig interval query (direct-plan and resolve-once variants).
         let plan =
             crate::logsignature::LogSigPlan::new(&spec, crate::logsignature::LogSigBasis::Words)
@@ -1078,17 +1265,17 @@ mod tests {
             let mut ids = vec![];
             for _ in 0..lanes {
                 let seed_len = g.usize_in(2, 6);
-                let pts = g.normal_vec(seed_len * d, 0.3);
+                let pts: Rows = g.normal_vec(seed_len * d, 0.3).into();
                 let fid = fused.open(&spec, &pts, seed_len).unwrap();
                 let sid = scalar.open(&spec, &pts, seed_len).unwrap();
                 ids.push((fid, sid));
             }
             for _ in 0..3 {
-                let feeds: Vec<(SessionId, Vec<f32>, usize)> = ids
+                let feeds: Vec<(SessionId, Rows, usize)> = ids
                     .iter()
                     .map(|&(fid, _)| {
                         let count = g.usize_in(1, 6);
-                        (fid, g.normal_vec(count * d, 0.3), count)
+                        (fid, g.normal_vec(count * d, 0.3).into(), count)
                     })
                     .collect();
                 let got = fused.feed_batch(feeds.clone());
@@ -1121,18 +1308,18 @@ mod tests {
         let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default()).unwrap();
         let twin = mgr();
         let mut rng = Rng::new(31);
-        let seed = rng.normal_vec(4 * 2, 0.3);
+        let seed: Rows = rng.normal_vec(4 * 2, 0.3).into();
         let a = m.open(&spec, &seed, 4).unwrap();
         let b = m.open(&spec, &seed, 4).unwrap();
         let ta = twin.open(&spec, &seed, 4).unwrap();
-        let chunk1 = rng.normal_vec(3 * 2, 0.3);
-        let chunk2 = rng.normal_vec(2 * 2, 0.3);
-        let good_b = rng.normal_vec(2 * 2, 0.3);
+        let chunk1: Rows = rng.normal_vec(3 * 2, 0.3).into();
+        let chunk2: Rows = rng.normal_vec(2 * 2, 0.3).into();
+        let good_b: Rows = rng.normal_vec(2 * 2, 0.3).into();
         // One batch: a fed twice (must apply in order), b with a malformed
         // buffer, plus an unknown session — failures stay individual.
         let results = m.feed_batch(vec![
             (a, chunk1.clone(), 3),
-            (b, vec![0.0; 3], 2), // wrong buffer length
+            (b, vec![0.0f32; 3].into(), 2), // wrong buffer length
             (a, chunk2.clone(), 2),
             (SessionId(9999), good_b.clone(), 2), // unknown
         ]);
@@ -1162,12 +1349,12 @@ mod tests {
         let m = mgr();
         let twin = mgr();
         let mut rng = Rng::new(32);
-        let seed = rng.normal_vec(4 * 2, 0.3);
+        let seed: Rows = rng.normal_vec(4 * 2, 0.3).into();
         let alive = m.open(&spec, &seed, 4).unwrap();
         let dead = m.open(&spec, &seed, 4).unwrap();
         let talive = twin.open(&spec, &seed, 4).unwrap();
         m.close(dead).unwrap();
-        let chunk = rng.normal_vec(3 * 2, 0.3);
+        let chunk: Rows = rng.normal_vec(3 * 2, 0.3).into();
         let results =
             m.feed_batch(vec![(alive, chunk.clone(), 3), (dead, chunk.clone(), 3)]);
         assert!(results[0].is_ok());
@@ -1183,10 +1370,10 @@ mod tests {
         let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default()).unwrap();
         let mut rng = Rng::new(33);
         let ids: Vec<SessionId> = (0..3)
-            .map(|_| m.open(&spec, &rng.normal_vec(4 * 2, 0.3), 4).unwrap())
+            .map(|_| m.open(&spec, &rng.normal_vec(4 * 2, 0.3).into(), 4).unwrap())
             .collect();
-        let feeds: Vec<(SessionId, Vec<f32>, usize)> =
-            ids.iter().map(|&id| (id, rng.normal_vec(2 * 2, 0.3), 2)).collect();
+        let feeds: Vec<(SessionId, Rows, usize)> =
+            ids.iter().map(|&id| (id, rng.normal_vec(2 * 2, 0.3).into(), 2)).collect();
         for r in m.feed_batch(feeds) {
             r.unwrap();
         }
@@ -1195,7 +1382,7 @@ mod tests {
         assert_eq!(snap.dispatch_lane_fused, 1);
         assert_eq!(snap.session_updates, 3);
         // A single-lane batch is a scalar dispatch, not a lane sweep.
-        let solo = m.feed_batch(vec![(ids[0], rng.normal_vec(2 * 2, 0.3), 2)]);
+        let solo = m.feed_batch(vec![(ids[0], rng.normal_vec(2 * 2, 0.3).into(), 2)]);
         assert!(solo[0].is_ok());
         let snap = metrics.snapshot();
         assert_eq!(snap.feed_lane_batches, 1);
@@ -1206,8 +1393,8 @@ mod tests {
     fn unknown_and_closed_sessions_error() {
         let spec = SigSpec::new(2, 2).unwrap();
         let m = mgr();
-        assert!(m.feed(SessionId(99), &[0.0; 2], 1).is_err());
-        let id = m.open(&spec, &[0.0, 0.0, 1.0, 1.0], 2).unwrap();
+        assert!(m.feed(SessionId(99), &vec![0.0f32; 2].into(), 1).is_err());
+        let id = m.open(&spec, &vec![0.0f32, 0.0, 1.0, 1.0].into(), 2).unwrap();
         assert_eq!(m.open_count(), 1);
         m.close(id).unwrap();
         assert_eq!(m.open_count(), 0);
@@ -1227,10 +1414,10 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let mut rng = Rng::new(100 + t);
                 let pts = rng.normal_vec(6 * 2, 0.4);
-                let id = m.open(&spec, &pts[..2 * 2], 2).unwrap();
-                let sig = m.feed(id, &pts[2 * 2..], 4).unwrap();
+                let id = m.open(&spec, &pts[..2 * 2].to_vec().into(), 2).unwrap();
+                let sig = m.feed(id, &pts[2 * 2..].to_vec().into(), 4).unwrap();
                 let expect = signature(&pts, 6, &spec);
-                for (a, b) in sig.iter().zip(&expect) {
+                for (a, b) in sig.as_f32().unwrap().iter().zip(&expect) {
                     assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs());
                 }
             }));
@@ -1246,11 +1433,11 @@ mod tests {
         let spec = SigSpec::new(2, 3).unwrap();
         let m = mgr();
         let mut rng = Rng::new(3);
-        let id = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
+        let id = m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap();
         assert_eq!(m.resident_bytes(), session_bytes(&spec, 4));
-        m.feed(id, &rng.normal_vec(6 * 2, 0.2), 6).unwrap();
+        m.feed(id, &rng.normal_vec(6 * 2, 0.2).into(), 6).unwrap();
         assert_eq!(m.resident_bytes(), session_bytes(&spec, 10));
-        let id2 = m.open(&spec, &rng.normal_vec(3 * 2, 0.2), 3).unwrap();
+        let id2 = m.open(&spec, &rng.normal_vec(3 * 2, 0.2).into(), 3).unwrap();
         assert_eq!(m.resident_bytes(), session_bytes(&spec, 10) + session_bytes(&spec, 3));
         m.close(id).unwrap();
         assert_eq!(m.resident_bytes(), session_bytes(&spec, 3));
@@ -1271,7 +1458,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut ids = vec![];
         for _ in 0..3 {
-            ids.push(m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap());
+            ids.push(m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap());
             assert!(m.resident_bytes() <= 3 * per + per / 2);
         }
         assert_eq!(m.open_count(), 3);
@@ -1279,11 +1466,14 @@ mod tests {
         m.query(ids[0], 0, 3).unwrap();
         // A fourth session pushes the total over budget: exactly one
         // eviction, and it must be the least recently used (ids[1]).
-        let id3 = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
+        let id3 = m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap();
         assert!(m.resident_bytes() <= 3 * per + per / 2);
         assert_eq!(m.open_count(), 3);
         assert!(m.query(ids[1], 0, 3).is_err(), "LRU session should be evicted");
-        assert!(m.feed(ids[1], &[0.0; 2], 1).is_err(), "evicted sessions error cleanly");
+        assert!(
+            m.feed(ids[1], &vec![0.0f32; 2].into(), 1).is_err(),
+            "evicted sessions error cleanly"
+        );
         for &id in [ids[0], ids[2], id3].iter() {
             assert!(m.query(id, 0, 3).is_ok(), "recently used session evicted");
         }
@@ -1317,7 +1507,7 @@ mod tests {
                     (0..open.len()).filter(|&k| !fed[k]).collect();
                 if unfed.is_empty() || g.usize_in(0, 2) > 0 {
                     let pts = g.normal_vec(4 * 2, 0.2);
-                    open.push(m.open(&spec, &pts, 4).unwrap());
+                    open.push(m.open(&spec, &pts.into(), 4).unwrap());
                     fed.push(false);
                 } else {
                     // Feed a random still-known session (may have been
@@ -1325,7 +1515,7 @@ mod tests {
                     let k = unfed[g.usize_in(0, unfed.len() - 1)];
                     fed[k] = true;
                     let pts = g.normal_vec(2 * 2, 0.2);
-                    let _ = m.feed(open[k], &pts, 2);
+                    let _ = m.feed(open[k], &pts.into(), 2);
                 }
                 assert!(
                     m.resident_bytes() <= budget,
@@ -1352,8 +1542,8 @@ mod tests {
         )
         .unwrap();
         let mut rng = Rng::new(5);
-        let idle = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
-        let live = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
+        let idle = m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap();
+        let live = m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap();
         // Keep `live` warm well inside the TTL while `idle` goes stale
         // (loop spans ~1.4s, past the 1s TTL plus a sweep interval).
         for _ in 0..14 {
@@ -1378,16 +1568,16 @@ mod tests {
         }
         let spec = SigSpec::new(4, 4).unwrap();
         let mut rng = Rng::new(6);
-        let big = rng.normal_vec(8192 * 4, 0.1);
-        let small = rng.normal_vec(4 * 4, 0.1);
+        let big: Rows = rng.normal_vec(8192 * 4, 0.1).into();
+        let small: Rows = rng.normal_vec(4 * 4, 0.1).into();
         // Best of three attempts: scheduling noise from concurrently
         // running tests can delay the small feed; a table-wide lock fails
         // every attempt (B always waits out A's entire update).
         let mut last = (Duration::ZERO, Duration::ZERO);
         for _ in 0..3 {
             let m = Arc::new(mgr());
-            let a = m.open(&spec, &rng.normal_vec(2 * 4, 0.1), 2).unwrap();
-            let b = m.open(&spec, &rng.normal_vec(2 * 4, 0.1), 2).unwrap();
+            let a = m.open(&spec, &rng.normal_vec(2 * 4, 0.1).into(), 2).unwrap();
+            let b = m.open(&spec, &rng.normal_vec(2 * 4, 0.1).into(), 2).unwrap();
             let m2 = Arc::clone(&m);
             let big2 = big.clone();
             let t_a = std::thread::spawn(move || {
@@ -1433,10 +1623,10 @@ mod tests {
             let m = SessionManager::new(Arc::new(Metrics::default()));
             let mut rng = Rng::new(7);
             let ids: Vec<SessionId> = (0..threads)
-                .map(|_| m.open(&spec, &rng.normal_vec(2 * 4, 0.1), 2).unwrap())
+                .map(|_| m.open(&spec, &rng.normal_vec(2 * 4, 0.1).into(), 2).unwrap())
                 .collect();
-            let chunks: Vec<Vec<f32>> =
-                (0..threads).map(|_| rng.normal_vec(feed_points * 4, 0.1)).collect();
+            let chunks: Vec<Rows> =
+                (0..threads).map(|_| rng.normal_vec(feed_points * 4, 0.1).into()).collect();
             let t0 = Instant::now();
             if par {
                 std::thread::scope(|scope| {
@@ -1497,7 +1687,7 @@ mod tests {
         let e = m.query(SessionId(777), 0, 1).unwrap_err().to_string();
         assert!(e.contains("never opened"), "got: {e}");
         // Closed (both a later query and a double close say so).
-        let id = m.open(&spec, &[0.0, 0.0, 1.0, 1.0], 2).unwrap();
+        let id = m.open(&spec, &vec![0.0f32, 0.0, 1.0, 1.0].into(), 2).unwrap();
         m.close(id).unwrap();
         let e = m.query(id, 0, 1).unwrap_err().to_string();
         assert!(e.contains("closed"), "got: {e}");
@@ -1510,8 +1700,8 @@ mod tests {
             ..Default::default()
         });
         let mut rng = Rng::new(41);
-        let victim = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
-        let _keeper = m.open(&spec, &rng.normal_vec(4 * 2, 0.2), 4).unwrap();
+        let victim = m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap();
+        let _keeper = m.open(&spec, &rng.normal_vec(4 * 2, 0.2).into(), 4).unwrap();
         let e = m.query(victim, 0, 3).unwrap_err().to_string();
         assert!(e.contains("evicted"), "got: {e}");
         assert!(!e.contains("never opened") && !e.contains("is closed"), "got: {e}");
@@ -1537,8 +1727,8 @@ mod tests {
         .unwrap();
         let control = mgr();
         let mut rng = Rng::new(42);
-        let pts_a = rng.normal_vec(4 * 2, 0.2);
-        let pts_b = rng.normal_vec(4 * 2, 0.2);
+        let pts_a: Rows = rng.normal_vec(4 * 2, 0.2).into();
+        let pts_b: Rows = rng.normal_vec(4 * 2, 0.2).into();
         let a = m.open(&spec, &pts_a, 4).unwrap();
         let ca = control.open(&spec, &pts_a, 4).unwrap();
         // Opening b pushes over budget: a (the only candidate) spills.
@@ -1558,7 +1748,7 @@ mod tests {
         // Reload re-enforced the budget, so b went cold in a's place;
         // feeding b reloads *and extends* bitwise (feed-vs-eviction race
         // resolves by reload, not by an error).
-        let chunk = rng.normal_vec(3 * 2, 0.2);
+        let chunk: Rows = rng.normal_vec(3 * 2, 0.2).into();
         let cb = control.open(&spec, &pts_b, 4).unwrap();
         let got = m.feed(b, &chunk, 3).unwrap();
         let want = control.feed(cb, &chunk, 3).unwrap();
@@ -1581,16 +1771,16 @@ mod tests {
         let mut rng = Rng::new(43);
         let mut ids = vec![];
         for _ in 0..3 {
-            let pts = rng.normal_vec(4 * 2, 0.2);
+            let pts: Rows = rng.normal_vec(4 * 2, 0.2).into();
             let id = m.open(&spec, &pts, 4).unwrap();
             let cid = control.open(&spec, &pts, 4).unwrap();
             ids.push((id, cid));
         }
         // Budget fits two: the LRU session (the first) is now cold.
         assert!(m.spilled_bytes() > 0, "expected at least one spill");
-        let feeds: Vec<(SessionId, Vec<f32>, usize)> = ids
+        let feeds: Vec<(SessionId, Rows, usize)> = ids
             .iter()
-            .map(|&(id, _)| (id, rng.normal_vec(2 * 2, 0.2), 2))
+            .map(|&(id, _)| (id, rng.normal_vec(2 * 2, 0.2).into(), 2))
             .collect();
         let got = m.feed_batch(feeds.clone());
         for (k, ((_, cid), (_, pts, count))) in ids.iter().zip(&feeds).enumerate() {
@@ -1618,7 +1808,7 @@ mod tests {
         )
         .unwrap();
         let mut rng = Rng::new(44);
-        let pts = rng.normal_vec(4 * 2, 0.2);
+        let pts: Rows = rng.normal_vec(4 * 2, 0.2).into();
         let control = mgr();
         let id = m.open(&spec, &pts, 4).unwrap();
         let cid = control.open(&spec, &pts, 4).unwrap();
@@ -1652,11 +1842,11 @@ mod tests {
             let m = mgr_with(cfg.clone());
             for spec in &specs {
                 let d = spec.d();
-                let seed = rng.normal_vec(3 * d, 0.3);
+                let seed: Rows = rng.normal_vec(3 * d, 0.3).into();
                 let id = m.open(spec, &seed, 3).unwrap();
                 let cid = control.open(spec, &seed, 3).unwrap();
                 for _ in 0..2 {
-                    let chunk = rng.normal_vec(2 * d, 0.3);
+                    let chunk: Rows = rng.normal_vec(2 * d, 0.3).into();
                     let got = m.feed(id, &chunk, 2).unwrap();
                     let want = control.feed(cid, &chunk, 2).unwrap();
                     assert_eq!(got, want);
@@ -1665,7 +1855,7 @@ mod tests {
             }
             // One session closed before the "crash" must stay closed.
             let spec = &specs[0];
-            closed_id = m.open(spec, &rng.normal_vec(2 * spec.d(), 0.3), 2).unwrap();
+            closed_id = m.open(spec, &rng.normal_vec(2 * spec.d(), 0.3).into(), 2).unwrap();
             m.close(closed_id).unwrap();
             // Drop = orderly shutdown; the WAL flushes.
         }
@@ -1683,7 +1873,7 @@ mod tests {
         }
         // Feeds continue bitwise after the restart.
         let (id, cid, spec) = &ids[0];
-        let chunk = rng.normal_vec(2 * spec.d(), 0.3);
+        let chunk: Rows = rng.normal_vec(2 * spec.d(), 0.3).into();
         assert_eq!(
             m2.feed(*id, &chunk, 2).unwrap(),
             control.feed(*cid, &chunk, 2).unwrap(),
@@ -1693,7 +1883,7 @@ mod tests {
         let e = m2.query(closed_id, 0, 1).unwrap_err().to_string();
         assert!(e.contains("closed"), "got: {e}");
         // New ids never collide with recovered ones.
-        let fresh = m2.open(spec, &rng.normal_vec(2 * spec.d(), 0.3), 2).unwrap();
+        let fresh = m2.open(spec, &rng.normal_vec(2 * spec.d(), 0.3).into(), 2).unwrap();
         assert!(ids.iter().all(|(id, _, _)| *id != fresh) && fresh != closed_id);
         drop(m2);
         std::fs::remove_dir_all(&dir).unwrap();
@@ -1713,8 +1903,8 @@ mod tests {
         };
         let control = mgr();
         let mut rng = Rng::new(46);
-        let pts_a = rng.normal_vec(4 * 2, 0.2);
-        let pts_b = rng.normal_vec(4 * 2, 0.2);
+        let pts_a: Rows = rng.normal_vec(4 * 2, 0.2).into();
+        let pts_b: Rows = rng.normal_vec(4 * 2, 0.2).into();
         let (a, b, ca, cb);
         {
             let m = mgr_with(cfg.clone());
@@ -1728,7 +1918,7 @@ mod tests {
             let m = mgr_with(cfg.clone());
             assert_eq!(m.open_count(), 2);
             assert_eq!(m.query(a, 1, 3).unwrap(), control.query(ca, 1, 3).unwrap());
-            let chunk = rng.normal_vec(2 * 2, 0.2);
+            let chunk: Rows = rng.normal_vec(2 * 2, 0.2).into();
             assert_eq!(
                 m.feed(b, &chunk, 2).unwrap(),
                 control.feed(cb, &chunk, 2).unwrap()
@@ -1746,6 +1936,130 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
+    /// Lift an f32 test vector to f64 exactly (every f32 is representable,
+    /// so the widened stream is a faithful native-f64 oracle input).
+    fn widen(v: &[f32]) -> Vec<f64> {
+        v.iter().map(|&x| f64::from(x)).collect()
+    }
+
+    #[test]
+    fn f64_sessions_serve_native_width_bitwise() {
+        // The tentpole contract on the stateful surface: an f64 session's
+        // every answer is bitwise identical to driving the f64 kernels
+        // directly — no f32 hop anywhere between the wire and the path.
+        let spec = SigSpec::with_dtype(2, 3, Precision::F64).unwrap();
+        let m = mgr();
+        let mut rng = Rng::new(51);
+        let all = widen(&rng.normal_vec(10 * 2, 0.4));
+        let id = m.open(&spec, &all[..4 * 2].to_vec().into(), 4).unwrap();
+        let mut oracle = Path::<f64>::new(&spec, &all[..4 * 2], 4).unwrap();
+        let sig = m.feed(id, &all[4 * 2..].to_vec().into(), 6).unwrap();
+        oracle.update(&all[4 * 2..], 6).unwrap();
+        assert_eq!(sig.precision(), Precision::F64);
+        assert_eq!(sig, oracle.signature(), "f64 feed diverged from direct f64 kernels");
+        assert_eq!(m.query(id, 2, 7).unwrap(), oracle.query(2, 7).unwrap());
+        let plan =
+            crate::logsignature::LogSigPlan::new(&spec, crate::logsignature::LogSigBasis::Words)
+                .unwrap();
+        assert_eq!(
+            m.logsig_query(id, 2, 7, &plan).unwrap(),
+            oracle.logsig_query(2, 7, &plan).unwrap()
+        );
+    }
+
+    #[test]
+    fn mixed_precision_feed_batch_never_coalesces_across_dtype() {
+        let spec32 = SigSpec::new(2, 3).unwrap();
+        let spec64 = SigSpec::with_dtype(2, 3, Precision::F64).unwrap();
+        let metrics = Arc::new(Metrics::default());
+        let m = SessionManager::with_config(Arc::clone(&metrics), SessionConfig::default()).unwrap();
+        let control = mgr();
+        let mut rng = Rng::new(52);
+        let mut lanes = vec![];
+        for _ in 0..2 {
+            let pts = rng.normal_vec(4 * 2, 0.3);
+            let id = m.open(&spec32, &pts.clone().into(), 4).unwrap();
+            let cid = control.open(&spec32, &pts.into(), 4).unwrap();
+            lanes.push((id, cid, Precision::F32));
+        }
+        for _ in 0..2 {
+            let pts = widen(&rng.normal_vec(4 * 2, 0.3));
+            let id = m.open(&spec64, &pts.clone().into(), 4).unwrap();
+            let cid = control.open(&spec64, &pts.into(), 4).unwrap();
+            lanes.push((id, cid, Precision::F64));
+        }
+        let feeds: Vec<(SessionId, Rows, usize)> = lanes
+            .iter()
+            .map(|&(id, _, prec)| {
+                let pts = rng.normal_vec(2 * 2, 0.3);
+                let rows: Rows = match prec {
+                    Precision::F32 => pts.into(),
+                    Precision::F64 => widen(&pts).into(),
+                };
+                (id, rows, 2)
+            })
+            .collect();
+        let got = m.feed_batch(feeds.clone());
+        for (k, ((_, cid, _), (_, rows, count))) in lanes.iter().zip(&feeds).enumerate() {
+            let want = control.feed(*cid, rows, *count).unwrap();
+            assert_eq!(got[k].as_ref().unwrap(), &want, "lane {k} diverged from scalar feed");
+        }
+        // Two dtype-homogeneous sweeps — never one mixed sweep.
+        assert_eq!(metrics.snapshot().feed_lane_batches, 2);
+    }
+
+    #[test]
+    fn cross_precision_rows_rejected() {
+        let spec32 = SigSpec::new(2, 2).unwrap();
+        let spec64 = SigSpec::with_dtype(2, 2, Precision::F64).unwrap();
+        let m = mgr();
+        let f32_rows: Rows = vec![0.0f32, 0.0, 1.0, 1.0].into();
+        let f64_rows: Rows = vec![0.0f64, 0.0, 1.0, 1.0].into();
+        assert!(m.open(&spec32, &f64_rows, 2).is_err(), "f64 rows under an f32 spec");
+        assert!(m.open(&spec64, &f32_rows, 2).is_err(), "f32 rows under an f64 spec");
+        let id = m.open(&spec32, &f32_rows, 2).unwrap();
+        assert!(m.feed(id, &f64_rows, 2).is_err(), "scalar feed must not upcast");
+        let batch = m.feed_batch(vec![(id, f64_rows, 2)]);
+        assert!(batch[0].is_err(), "batched feed must not upcast");
+        assert_eq!(m.session_len(id).unwrap(), 2, "rejected feeds leave no trace");
+    }
+
+    #[test]
+    fn warm_restart_recovers_f64_sessions_bitwise() {
+        // The WAL frames f64 rows at native width, so a restarted manager
+        // rebuilds the session against the f64 kernels with the exact
+        // points — bitwise equal to a never-restarted direct f64 path.
+        let dir = tmp_state_dir("warmrestart64");
+        let cfg = SessionConfig { spill: SpillConfig::Disk(dir.clone()), ..Default::default() };
+        let spec = SigSpec::with_dtype(2, 3, Precision::F64).unwrap();
+        let mut rng = Rng::new(53);
+        let seed = widen(&rng.normal_vec(3 * 2, 0.3));
+        let chunk = widen(&rng.normal_vec(2 * 2, 0.3));
+        let mut oracle = Path::<f64>::new(&spec, &seed, 3).unwrap();
+        oracle.update(&chunk, 2).unwrap();
+        let id;
+        {
+            let m = mgr_with(cfg.clone());
+            id = m.open(&spec, &seed.into(), 3).unwrap();
+            m.feed(id, &chunk.clone().into(), 2).unwrap();
+            // Drop = orderly shutdown; the WAL flushes.
+        }
+        let m2 = mgr_with(cfg);
+        assert_eq!(m2.session_spec(id).unwrap().dtype(), Precision::F64);
+        assert_eq!(
+            m2.signature(id).unwrap(),
+            oracle.signature(),
+            "recovered f64 signature diverged from direct f64 kernels"
+        );
+        assert_eq!(m2.query(id, 1, 4).unwrap(), oracle.query(1, 4).unwrap());
+        // Feeds continue at native width after the restart.
+        let chunk2 = widen(&rng.normal_vec(2 * 2, 0.3));
+        oracle.update(&chunk2, 2).unwrap();
+        assert_eq!(m2.feed(id, &chunk2.into(), 2).unwrap(), oracle.signature());
+        drop(m2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
     #[test]
     fn id_striping_matches_placement() {
         let spec = SigSpec::new(2, 2).unwrap();
@@ -1754,7 +2068,7 @@ mod tests {
         let m = mgr_with(SessionConfig { first_id: 2, id_stride: n, ..Default::default() });
         let placement = crate::state::Placement::new(n as usize);
         for _ in 0..4 {
-            let id = m.open(&spec, &[0.0, 0.0, 1.0, 1.0], 2).unwrap();
+            let id = m.open(&spec, &vec![0.0f32, 0.0, 1.0, 1.0].into(), 2).unwrap();
             assert_eq!((id.0 - 2) % n, 0, "id {} off the shard's stride lattice", id.0);
             assert_eq!(placement.locate(id.0), 1, "locate must find the issuing shard");
         }

@@ -133,7 +133,7 @@ mod tests {
         for (d, depth) in [(2usize, 3usize), (3, 2), (2, 3), (4, 2)] {
             let pts = rng.normal_vec(4 * d, 0.5);
             let resp = sc
-                .call(Request::OpenStream { points: pts.clone(), stream: 4, d, depth })
+                .call(Request::OpenStream { points: pts.clone().into(), stream: 4, d, depth })
                 .unwrap();
             let id = resp.session.unwrap();
             // The issuing shard is recoverable from the id alone.
@@ -152,7 +152,7 @@ mod tests {
             let extra = rng.normal_vec(2 * *d, 0.5);
             twin.update(&extra, 2).unwrap();
             let fed = sc
-                .call(Request::Feed { session: *id, points: extra, count: 2 })
+                .call(Request::Feed { session: *id, points: extra.into(), count: 2 })
                 .unwrap();
             assert_eq!(fed.session, Some(*id));
             assert_eq!(fed.values, twin.signature(), "feed through the sharded front door");
@@ -182,7 +182,7 @@ mod tests {
         for _ in 0..group {
             let pts = rng.normal_vec(3 * 2, 0.5);
             let resp = sc
-                .call(Request::OpenStream { points: pts, stream: 3, d: 2, depth: 3 })
+                .call(Request::OpenStream { points: pts.into(), stream: 3, d: 2, depth: 3 })
                 .unwrap();
             homes.insert(sc.placement().locate(resp.session.unwrap().0));
         }
@@ -190,7 +190,7 @@ mod tests {
         // The next block steps to the following shard.
         let pts = rng.normal_vec(3 * 2, 0.5);
         let resp =
-            sc.call(Request::OpenStream { points: pts, stream: 3, d: 2, depth: 3 }).unwrap();
+            sc.call(Request::OpenStream { points: pts.into(), stream: 3, d: 2, depth: 3 }).unwrap();
         let next = sc.placement().locate(resp.session.unwrap().0);
         let first = *homes.iter().next().unwrap();
         assert_eq!(next, (first + 1) % 4, "overflow block should step one shard over");
@@ -203,17 +203,11 @@ mod tests {
         let spec = SigSpec::new(2, 2).unwrap();
         let p = rng.normal_vec(5 * 2, 0.4);
         let resp = sc
-            .call(Request::Signature {
-                path: p.clone(),
-                stream: 5,
-                d: 2,
-                depth: 2,
-                precision: crate::ta::Precision::F32,
-            })
+            .call(Request::Signature { path: p.clone().into(), stream: 5, d: 2, depth: 2 })
             .unwrap();
         assert_eq!(resp.values, signature(&p, 5, &spec));
         let open = sc
-            .call(Request::OpenStream { points: p, stream: 5, d: 2, depth: 2 })
+            .call(Request::OpenStream { points: p.into(), stream: 5, d: 2, depth: 2 })
             .unwrap();
         assert_eq!(sc.placement().locate(open.session.unwrap().0), 0);
     }
@@ -226,13 +220,7 @@ mod tests {
         for _ in 0..4 {
             let p = rng.normal_vec(4 * 2, 0.4);
             let resp = sc
-                .call(Request::Signature {
-                    path: p.clone(),
-                    stream: 4,
-                    d: 2,
-                    depth: 2,
-                    precision: crate::ta::Precision::F32,
-                })
+                .call(Request::Signature { path: p.clone().into(), stream: 4, d: 2, depth: 2 })
                 .unwrap();
             assert_eq!(resp.values, signature(&p, 4, &spec));
         }

@@ -13,6 +13,10 @@
 //!   through the lane-interleaved kernels of [`crate::ta::batch`],
 //!   vectorised *across* the batch — the serving regime winner (many
 //!   short streams, small `d`), bitwise identical per lane to scalar.
+//!   The block width is a *runtime* choice ([`lane_width`]) among
+//!   [`LANE_WIDTHS`], keyed on `(d, depth, dtype)`: small signatures run
+//!   64-wide, large ones fall back to the [`LANE_BLOCK`] floor so one
+//!   block's state stays cache-resident.
 //!
 //! Before this module, the choice between them was re-derived inline at
 //! every call site (`signature_batch`, `signature_batch_vjp`,
@@ -50,11 +54,33 @@ pub use mix::{ShapeKey, ShapeMix, MIX_WARMUP};
 
 use crate::ta::Precision;
 
-/// Lanes advanced together by one lane-interleaved sweep: bounds the
-/// batched workspace (a few signatures' worth per block) while filling
-/// the widest SIMD registers; blocks beyond this run in parallel on
-/// threads.
+/// The narrowest lane tier, and the width every shape is guaranteed:
+/// bounds the batched workspace (a few signatures' worth per block)
+/// while filling the widest SIMD registers even for large signatures.
+/// Group-granularity consumers (shard placement, the sharded fan-out,
+/// the default microbatch capacity) key on this floor; the *runtime*
+/// block for a lane-fused plan is chosen per shape by [`lane_width`]
+/// among [`LANE_WIDTHS`] and may be wider.
 pub const LANE_BLOCK: usize = 16;
+
+/// The lane-width tiers the planner chooses among at plan time, keyed
+/// on `(d, depth, dtype)`: small signatures run wider blocks (more
+/// lanes amortising each increment's sweep), large signatures fall back
+/// toward the [`LANE_BLOCK`] floor so one block's interleaved state
+/// stays cache-resident. Per-lane results are independent of the block
+/// partition, so the choice is pure scheduling — never values.
+pub const LANE_WIDTHS: [usize; 3] = [16, 32, 64];
+
+/// Widest tier in [`LANE_WIDTHS`]; executors clamp untrusted plan
+/// blocks to this rather than to [`LANE_BLOCK`].
+pub const MAX_LANE_WIDTH: usize = 64;
+
+/// Per-block workspace budget (bytes) that [`lane_width`] fits the
+/// interleaved lane state into: `width * sig_len * size_of(dtype)` must
+/// stay under this (≈ half a typical per-core L2) for a wider tier to
+/// be worth it — beyond that the sweep goes memory-bound and wider
+/// blocks only evict each other.
+const LANE_WORKSPACE_BUDGET: usize = 256 * 1024;
 
 /// Minimum effective points before stream parallelism engages on the
 /// *forward* pass; below this the chunk bookkeeping costs more than the
@@ -112,7 +138,8 @@ pub enum ExecPlan {
     /// through one interleaved sweep each, blocks distributed over the
     /// thread budget. Bitwise identical per lane to `Scalar`.
     LaneFused {
-        /// Lanes per block (≤ [`LANE_BLOCK`]).
+        /// Lanes per block (≤ [`MAX_LANE_WIDTH`]; the planner picks the
+        /// shape's tier via [`lane_width`]).
         block: usize,
     },
 }
@@ -156,11 +183,12 @@ impl ExecPlanner {
     /// - `batch == 1`: stream-parallel when there are threads to use and
     ///   at least [`PARALLEL_FORWARD_MIN_POINTS`] effective points,
     ///   otherwise scalar.
-    /// - `batch >= 2`: lane-fused. The block adapts to the thread budget:
-    ///   every thread gets a block before blocks grow toward the
-    ///   SIMD-friendly [`LANE_BLOCK`] (a single 16-lane block would
-    ///   serialise any batch ≤ 16 no matter how many threads were
-    ///   requested). Per-lane results are independent of the partition.
+    /// - `batch >= 2`: lane-fused. The block adapts to the thread budget
+    ///   and the shape's lane tier: every thread gets a block before
+    ///   blocks grow toward the width [`lane_width`] picks for
+    ///   `(d, depth, dtype)` (a single full-width block would serialise
+    ///   any batch ≤ width no matter how many threads were requested).
+    ///   Per-lane results are independent of the partition.
     pub fn plan_forward(&self, s: &WorkShape) -> ExecPlan {
         if s.batch <= 1 {
             if self.threads > 1 && s.points >= PARALLEL_FORWARD_MIN_POINTS {
@@ -169,7 +197,8 @@ impl ExecPlanner {
                 ExecPlan::Scalar
             }
         } else {
-            ExecPlan::LaneFused { block: lane_block(s.batch, self.threads) }
+            let width = lane_width(s.d, s.depth, s.dtype);
+            ExecPlan::LaneFused { block: lane_block(s.batch, self.threads, width) }
         }
     }
 
@@ -196,7 +225,8 @@ impl ExecPlanner {
             if stream_threads > 1 {
                 ExecPlan::StreamParallel { threads: stream_threads }
             } else {
-                ExecPlan::LaneFused { block: lane_block(s.batch, self.threads) }
+                let width = lane_width(s.d, s.depth, s.dtype);
+                ExecPlan::LaneFused { block: lane_block(s.batch, self.threads, width) }
             }
         }
     }
@@ -281,11 +311,34 @@ impl ExecPlanner {
     }
 }
 
-/// Shared lane-block rule: `ceil(batch / threads)` capped at
-/// [`LANE_BLOCK`]. Forward and backward use the same rule so both passes
+/// Runtime lane-width choice for a `(d, depth, dtype)` shape: the widest
+/// tier in [`LANE_WIDTHS`] whose interleaved block state
+/// (`width * sig_len * size_of(dtype)` bytes) fits the per-block
+/// workspace budget, floored at [`LANE_BLOCK`]. The signature length is
+/// computed with saturating arithmetic so absurd shapes degrade to the
+/// floor instead of overflowing. Benches sweep every tier per shape
+/// (`bench batch` records the sweep in `BENCH_batch.json`); serving and
+/// the library entry points take this one answer.
+pub fn lane_width(d: usize, depth: usize, dtype: Precision) -> usize {
+    let mut sig_len = 0usize;
+    let mut pow = 1usize;
+    for _ in 0..depth {
+        pow = pow.saturating_mul(d);
+        sig_len = sig_len.saturating_add(pow);
+    }
+    let row_bytes = sig_len.saturating_mul(dtype.size_of()).max(1);
+    LANE_WIDTHS
+        .into_iter()
+        .filter(|w| w.saturating_mul(row_bytes) <= LANE_WORKSPACE_BUDGET)
+        .max()
+        .unwrap_or(LANE_BLOCK)
+}
+
+/// Shared lane-block rule: `ceil(batch / threads)` capped at the shape's
+/// lane `width`. Forward and backward use the same rule so both passes
 /// always pick the same schedule for a given shape.
-fn lane_block(batch: usize, threads: usize) -> usize {
-    batch.div_ceil(threads.max(1)).min(LANE_BLOCK).max(1)
+fn lane_block(batch: usize, threads: usize, width: usize) -> usize {
+    batch.div_ceil(threads.max(1)).min(width).max(1)
 }
 
 #[cfg(test)]
@@ -314,16 +367,49 @@ mod tests {
 
     #[test]
     fn forward_batches_lane_fuse_with_thread_adaptive_blocks() {
-        // Every thread gets a block before blocks widen toward LANE_BLOCK.
+        // Every thread gets a block before blocks widen toward the
+        // shape's lane tier (64 for d=2/depth=4 — sig_len 30 is tiny).
         let p4 = ExecPlanner::new(4);
         assert_eq!(p4.plan_forward(&shape(8, 32, 2)), ExecPlan::LaneFused { block: 2 });
         assert_eq!(p4.plan_forward(&shape(64, 32, 2)), ExecPlan::LaneFused { block: 16 });
         // threads > batch: one lane per block, blocks spread over threads.
         let p8 = ExecPlanner::new(8);
         assert_eq!(p8.plan_forward(&shape(3, 32, 2)), ExecPlan::LaneFused { block: 1 });
-        // Single thread: full-width blocks.
+        // Single thread: blocks widen past the old 16-lane ceiling up to
+        // the shape's tier — 40 lanes in one block here, capped at 64.
         let p1 = ExecPlanner::new(1);
-        assert_eq!(p1.plan_forward(&shape(40, 32, 2)), ExecPlan::LaneFused { block: LANE_BLOCK });
+        assert_eq!(p1.plan_forward(&shape(40, 32, 2)), ExecPlan::LaneFused { block: 40 });
+        assert_eq!(
+            p1.plan_forward(&shape(100, 32, 2)),
+            ExecPlan::LaneFused { block: MAX_LANE_WIDTH }
+        );
+        // A big signature (d=8/depth=4, sig_len 4680) stays on the
+        // 16-lane floor: its interleaved state would blow the workspace
+        // budget at any wider tier.
+        assert_eq!(
+            p1.plan_forward(&shape(40, 32, 8)),
+            ExecPlan::LaneFused { block: LANE_BLOCK }
+        );
+    }
+
+    #[test]
+    fn lane_width_keys_on_signature_footprint_and_dtype() {
+        // Tiny rows fill the widest tier in either precision.
+        assert_eq!(lane_width(2, 4, Precision::F32), 64);
+        assert_eq!(lane_width(2, 4, Precision::F64), 64);
+        // d=5/depth=4 (sig_len 780): f64 rows are twice as wide, so the
+        // same shape sits one tier narrower than f32.
+        assert_eq!(lane_width(5, 4, Precision::F32), 64);
+        assert_eq!(lane_width(5, 4, Precision::F64), 32);
+        // d=6/depth=4 (sig_len 1554): mid tier for f32, floor for f64.
+        assert_eq!(lane_width(6, 4, Precision::F32), 32);
+        assert_eq!(lane_width(6, 4, Precision::F64), 16);
+        // Past the budget at every tier the floor still applies — wider
+        // would thrash, narrower would starve the SIMD lanes.
+        assert_eq!(lane_width(8, 4, Precision::F32), LANE_BLOCK);
+        assert_eq!(lane_width(9, 4, Precision::F64), LANE_BLOCK);
+        // Absurd shapes saturate instead of overflowing.
+        assert_eq!(lane_width(usize::MAX, 30, Precision::F64), LANE_BLOCK);
     }
 
     #[test]

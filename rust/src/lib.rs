@@ -48,7 +48,11 @@
 //!   precision (`WorkShape::dtype`), the adaptive shape-mix keys on it
 //!   ([`exec::ShapeKey`]), and the lane-fused backward is planned at
 //!   *every* `d` — the runtime-`d` VJP removed the old `d ≤ 8` planning
-//!   ceiling. The serving layer additionally
+//!   ceiling. Lane width is itself a runtime choice: [`exec::lane_width`]
+//!   picks the widest tier in [`exec::LANE_WIDTHS`] (`{16, 32, 64}`)
+//!   whose per-lane signature footprint `(d, depth, dtype)` fits the
+//!   workspace budget, so small shapes fuse wide while f64 steps down a
+//!   tier where f32 still fits. The serving layer additionally
 //!   feeds the planner an observed shape-mix histogram, so microbatch
 //!   formation adapts to recent traffic: hot shapes linger and lane-fuse,
 //!   rare shapes serve directly. Plans are scheduling only — `Scalar` and
@@ -78,17 +82,22 @@
 //!   scalar feeding. All three gathering surfaces instantiate one
 //!   unified batcher generic (`coordinator::flusher::GroupBatcher`), so
 //!   the pending-queue/condvar concurrency machinery exists exactly once.
-//!   Stateless requests carry a [`ta::Precision`] (default `F32`, which
-//!   preserves prior behaviour bitwise): `F64` requests upcast at the
-//!   native boundary, run the f64 kernels, and downcast the result — and
-//!   precision is part of the microbatch queue identity, so f32 and f64
+//!   Rows travel **natively typed** end to end: requests and responses
+//!   carry [`ta::Rows`] (`F32(Vec<f32>)` / `F64(Vec<f64>)`), the router
+//!   inspects the precision tag exactly once at the wire boundary
+//!   (`coordinator::rows::with_elem!`) and runs one [`ta::Elem`]-generic
+//!   serving pipeline below it — f64 rows reach the f64 kernels at full
+//!   width with no up/downcast anywhere in the plane, and f32 serving is
+//!   bitwise what it was when the wire was `Vec<f32>`. Precision is part
+//!   of the microbatch and feed-lane queue identities, so f32 and f64
 //!   rows of one logical shape never share a flush — the logsignature
 //!   surface included, whose f64 arm runs the generic epilogue at
 //!   `E = f64`.
 //! - **Durable state** ([`state`]): the persistence layer under the
-//!   session table. A versioned binary codec serializes `Path` state
-//!   bitwise in both precisions ([`path::Path::serialize_into`] /
-//!   [`path::Path::deserialize`]); a [`state::SessionStore`] lets LRU
+//!   session table. A versioned binary codec (v2: rows framed at native
+//!   width, f64 sessions persisted as 8-byte elements; v1 blobs and WALs
+//!   still replay) serializes `Path` state bitwise in both precisions
+//!   ([`path::Path::serialize_into`] / [`path::Path::deserialize`]); a [`state::SessionStore`] lets LRU
 //!   eviction and TTL expiry *spill* sessions (memory or disk) instead of
 //!   destroying them, with transparent bitwise reload on the next touch;
 //!   an append-only feed-delta log ([`state::FeedLog`], fsync-batched by

@@ -30,7 +30,7 @@ use signax::runtime::EngineHandle;
 use signax::signature::{signature, SigConfig};
 use signax::substrate::cli::{Cli, Command};
 use signax::substrate::rng::Rng;
-use signax::ta::{Precision, SigSpec};
+use signax::ta::SigSpec;
 
 fn cli() -> Cli {
     Cli {
@@ -314,11 +314,10 @@ fn cmd_serve(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
     let reqs: Vec<Request> = (0..n_requests)
         .map(|_| Request::Signature {
-            path: signax::data::random_path(&mut rng, stream, d, 0.2),
+            path: signax::data::random_path(&mut rng, stream, d, 0.2).into(),
             stream,
             d,
             depth,
-            precision: Precision::F32,
         })
         .collect();
     let t0 = Instant::now();
@@ -408,7 +407,7 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
                 let mut rng = Rng::new(0x57E4 + t as u64);
                 let seed_points = 4usize;
                 let Some(open) = call(Request::OpenStream {
-                    points: signax::data::random_path(&mut rng, seed_points, d, 0.2),
+                    points: signax::data::random_path(&mut rng, seed_points, d, 0.2).into(),
                     stream: seed_points,
                     d,
                     depth,
@@ -419,7 +418,7 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
                 let mut len = seed_points;
                 for k in 0..feeds {
                     let pts = rng.normal_vec(feed_points * d, 0.2);
-                    if call(Request::Feed { session: sid, points: pts, count: feed_points })
+                    if call(Request::Feed { session: sid, points: pts.into(), count: feed_points })
                         .is_some()
                     {
                         len += feed_points;

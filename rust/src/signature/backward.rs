@@ -370,7 +370,9 @@ pub fn signature_stream_vjp(
 /// surplus threads (`threads > batch`) run per-path dispatch with the
 /// chunked Chen-identity stream-parallel backward inside each sample;
 /// `batch >= 2` runs the **lane-fused** batched reverse sweep at **any**
-/// `d` — blocks of up to [`super::forward::LANE_BLOCK`] samples recompute
+/// `d` — blocks of up to the shape's lane width
+/// ([`crate::exec::lane_width`], at most
+/// [`super::forward::MAX_LANE_WIDTH`]) samples recompute
 /// prefixes and unwind together through the interleaved batch kernels,
 /// bitwise identical to the serial per-path VJP (the scalar dispatcher's
 /// monomorphised bodies cover `d ≤` [`crate::exec::LANE_VJP_MAX_D`] and
@@ -422,7 +424,7 @@ pub fn signature_batch_vjp_planned<E: Elem>(
     let threads = threads.max(1);
     if let ExecPlan::LaneFused { block } = plan {
         if batch >= 2 {
-            let block = block.clamp(1, super::forward::LANE_BLOCK);
+            let block = block.clamp(1, super::forward::MAX_LANE_WIDTH);
             let n_blocks = batch.div_ceil(block);
             let blocks = parallel_map_indexed(n_blocks, threads, |bi| {
                 let l0 = bi * block;

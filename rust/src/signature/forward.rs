@@ -8,7 +8,7 @@
 //! combines chunk signatures (§5.1).
 //!
 //! Batched paths take the **batch-lane engine** ([`crate::ta::batch`]):
-//! lanes of up to [`LANE_BLOCK`] same-spec signatures advance together
+//! lanes of up to [`MAX_LANE_WIDTH`] same-spec signatures advance together
 //! through one lane-interleaved fused sweep per increment, so the
 //! innermost loops vectorise across the batch regardless of `d` — the
 //! serving-realistic regime (many short streams, small `d`) where
@@ -27,7 +27,7 @@ use crate::ta::{Elem, SigSpec, Workspace};
 
 /// Re-exported from the execution planner, which owns all strategy
 /// constants (see [`crate::exec`]).
-pub use crate::exec::LANE_BLOCK;
+pub use crate::exec::{LANE_BLOCK, MAX_LANE_WIDTH};
 
 /// Validate a `(stream, d)` path buffer against the spec.
 fn check_path<E: Elem>(path: &[E], stream: usize, spec: &SigSpec) -> anyhow::Result<()> {
@@ -220,7 +220,8 @@ pub fn signature_stream_with(
 /// Batched signature over a `(batch, stream, d)` buffer. Returns
 /// `(batch, sig_len)`.
 ///
-/// Runs the lane-fused engine: blocks of up to [`LANE_BLOCK`] paths
+/// Runs the lane-fused engine: blocks of up to the shape's lane width
+/// ([`crate::exec::lane_width`], at most [`MAX_LANE_WIDTH`]) paths
 /// advance together through one interleaved fused sweep per increment
 /// (vectorised across the batch), and blocks distribute over `threads`
 /// (§5.1's first level of parallelism). Shapes are validated up front —
@@ -298,7 +299,7 @@ pub fn signature_batch_planned<E: Elem>(
     let path_len = stream * d;
     let threads = cfg.threads.max(1);
     let block = match plan {
-        ExecPlan::LaneFused { block } if batch >= 2 => block.clamp(1, LANE_BLOCK),
+        ExecPlan::LaneFused { block } if batch >= 2 => block.clamp(1, MAX_LANE_WIDTH),
         ExecPlan::StreamParallel { threads: t } => {
             // Per-path dispatch with stream parallelism inside each path.
             let inner = SigConfig { threads: t, ..cfg.clone() };

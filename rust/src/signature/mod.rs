@@ -20,7 +20,7 @@ pub use combine::{multi_signature_combine, signature_combine, signature_combine_
 pub use forward::{
     signature, signature_batch, signature_batch_planned, signature_batch_with, signature_stream,
     signature_stream_with, signature_with, two_point_signature, two_point_signature_into,
-    LANE_BLOCK,
+    LANE_BLOCK, MAX_LANE_WIDTH,
 };
 
 /// Options mirroring Signatory's `signature(...)` keyword arguments.

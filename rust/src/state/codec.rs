@@ -7,7 +7,10 @@
 //!
 //! ```text
 //! magic    b"SGXP"           4 bytes
-//! version  u16               currently 1
+//! version  u16               currently 2 (v1 blobs still decode; v2
+//!                            marks that the decoded spec carries the
+//!                            element dtype from the prec byte, so a
+//!                            reloaded session keeps its native width)
 //! prec     u8                Precision::tag() of the element type
 //! flags    u8                reserved (0): basepoint/initial/inverse are
 //!                            normalised into the stored buffers at
@@ -32,7 +35,11 @@ use crate::path::Path;
 use crate::ta::{Elem, Precision, SigSpec};
 
 const MAGIC: &[u8; 4] = b"SGXP";
-const VERSION: u16 = 1;
+/// Version written by [`Path::serialize_into`]. v1 and v2 share the same
+/// byte layout; the bump records the typed-row data plane (the decoded
+/// spec's dtype now comes from the prec byte). Both versions decode.
+const VERSION: u16 = 2;
+const MIN_VERSION: u16 = 1;
 
 /// FNV-1a, 64-bit: cheap, dependency-free torn-write detection (this is
 /// an integrity check against partial writes, not an adversarial MAC).
@@ -144,7 +151,10 @@ impl<E: Elem> Path<E> {
         );
         anyhow::ensure!(&bytes[..4] == MAGIC, "bad Path record magic");
         let version = u16::from_le_bytes([bytes[4], bytes[5]]);
-        anyhow::ensure!(version == VERSION, "unsupported Path codec version {version}");
+        anyhow::ensure!(
+            (MIN_VERSION..=VERSION).contains(&version),
+            "unsupported Path codec version {version}"
+        );
         let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
         let want = u64::from_le_bytes(sum_bytes.try_into().expect("8 checksum bytes"));
         anyhow::ensure!(fnv1a(body) == want, "Path record checksum mismatch (torn write?)");
@@ -158,7 +168,9 @@ impl<E: Elem> Path<E> {
         let d = read_u32(bytes, 8) as usize;
         let depth = read_u32(bytes, 12) as usize;
         let stream = read_u32(bytes, 16) as usize;
-        let spec = SigSpec::new(d, depth)?;
+        // The reloaded spec carries the element dtype (v2 semantics; v1
+        // blobs decode identically since the prec byte was always there).
+        let spec = SigSpec::with_dtype(d, depth, E::PRECISION)?;
         anyhow::ensure!(stream >= 2, "Path record has {stream} points, need at least 2");
         let rest = &body[HEADER_LEN..];
         let (points, rest) = read_elems::<E>(rest, stream * d)?;
@@ -287,5 +299,34 @@ mod tests {
         assert!(Path::<f32>::deserialize(&bad).is_err());
         // Precision mismatch: an f32 record must not decode as f64.
         assert!(Path::<f64>::deserialize(&bytes).is_err());
+        // A future version must not decode.
+        let mut vnext = bytes.clone();
+        vnext[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        let body_end = vnext.len() - 8;
+        let sum = fnv1a(&vnext[..body_end]).to_le_bytes();
+        vnext[body_end..].copy_from_slice(&sum);
+        assert!(Path::<f32>::deserialize(&vnext).is_err());
+    }
+
+    #[test]
+    fn v1_blobs_still_decode() {
+        // Spill blobs written before the version bump (same layout,
+        // version field 1) must keep reloading bitwise: patch the version
+        // back to 1 and re-seal the checksum.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(6);
+        let pts = random_path_pts(&mut rng, 5, 2);
+        let path = Path::new(&spec, &pts, 5).unwrap();
+        let mut bytes = path.serialize();
+        bytes[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let body_end = bytes.len() - 8;
+        let sum = fnv1a(&bytes[..body_end]).to_le_bytes();
+        bytes[body_end..].copy_from_slice(&sum);
+        let back: Path = Path::deserialize(&bytes).unwrap();
+        let (_, p0, sig0, inv0) = path.raw_parts();
+        let (_, p1, sig1, inv1) = back.raw_parts();
+        assert_eq!(p0, p1, "points");
+        assert_eq!(sig0, sig1, "expanding signatures");
+        assert_eq!(inv0, inv1, "inverse signatures");
     }
 }

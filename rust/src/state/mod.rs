@@ -17,7 +17,9 @@
 //!   fsync-batched by the session sweeper, replayed on startup so
 //!   `signax serve-stream --state-dir` warm-restarts with every session
 //!   recovered — replay is bitwise because `Path` extension is exactly
-//!   resumable (pinned by `update_matches_fresh_bit_for_bit`).
+//!   resumable (pinned by `update_matches_fresh_bit_for_bit`). Records
+//!   frame point rows at their native element width (typed
+//!   [`crate::ta::Rows`]), so f64 sessions recover through f64 kernels.
 //! - [`placement`]: hash-sharding of session ids across N logical
 //!   coordinator instances with spec-aware assignment, so feed lanes
 //!   still find same-spec peers after sharding

@@ -21,9 +21,11 @@
 //! short or checksum-failing record, so a crash mid-write costs at most
 //! the unflushed tail, never the log.
 //!
-//! The WAL stores f32 points only: sessions are opened over the wire
-//! (f32 rows), and the native feed path is f32 — the f64 `Path` codec
-//! exists for spill blobs, which carry their own precision tag.
+//! The WAL frames rows at their **native element width**: records carry
+//! typed [`Rows`], with separate tags for f32 (`1`/`2`) and f64 (`4`/`5`)
+//! opens and feeds, so an f64 session's recovery replays 8-byte points
+//! through the f64 kernels and never transits f32. Logs written before
+//! the typed-row change used tags `1`/`2` only and replay unchanged.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
@@ -31,6 +33,7 @@ use std::path::{Path as FsPath, PathBuf};
 use std::sync::Mutex;
 
 use super::codec::fnv1a;
+use crate::ta::{Precision, Rows};
 
 /// Flush inline (not waiting for the sweeper) once this much is buffered.
 const BUF_CAP: usize = 1 << 20;
@@ -38,38 +41,59 @@ const BUF_CAP: usize = 1 << 20;
 const TAG_OPEN: u8 = 1;
 const TAG_FEED: u8 = 2;
 const TAG_CLOSE: u8 = 3;
+const TAG_OPEN64: u8 = 4;
+const TAG_FEED64: u8 = 5;
 
-/// One logged session mutation.
+/// One logged session mutation. Point rows are typed; the encoder picks
+/// the f32 or f64 tag from the rows' own precision.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WalRecord {
     /// Session opened with `count` initial points of dimension `d`.
-    Open { id: u64, d: u32, depth: u32, count: u32, points: Vec<f32> },
+    Open { id: u64, d: u32, depth: u32, count: u32, points: Rows },
     /// `count` more points fed to an open session.
-    Feed { id: u64, count: u32, points: Vec<f32> },
+    Feed { id: u64, count: u32, points: Rows },
     /// Session closed; its state is gone on purpose.
     Close { id: u64 },
+}
+
+/// Raw IEEE bits, little-endian, at the rows' native width.
+fn write_rows(out: &mut Vec<u8>, rows: &Rows) {
+    match rows {
+        Rows::F32(ps) => {
+            for &p in ps {
+                out.extend_from_slice(&p.to_le_bytes());
+            }
+        }
+        Rows::F64(ps) => {
+            for &p in ps {
+                out.extend_from_slice(&p.to_le_bytes());
+            }
+        }
+    }
 }
 
 impl WalRecord {
     fn encode(&self, out: &mut Vec<u8>) {
         match self {
             WalRecord::Open { id, d, depth, count, points } => {
-                out.push(TAG_OPEN);
+                out.push(match points.precision() {
+                    Precision::F32 => TAG_OPEN,
+                    Precision::F64 => TAG_OPEN64,
+                });
                 out.extend_from_slice(&id.to_le_bytes());
                 out.extend_from_slice(&d.to_le_bytes());
                 out.extend_from_slice(&depth.to_le_bytes());
                 out.extend_from_slice(&count.to_le_bytes());
-                for &p in points {
-                    out.extend_from_slice(&p.to_le_bytes());
-                }
+                write_rows(out, points);
             }
             WalRecord::Feed { id, count, points } => {
-                out.push(TAG_FEED);
+                out.push(match points.precision() {
+                    Precision::F32 => TAG_FEED,
+                    Precision::F64 => TAG_FEED64,
+                });
                 out.extend_from_slice(&id.to_le_bytes());
                 out.extend_from_slice(&count.to_le_bytes());
-                for &p in points {
-                    out.extend_from_slice(&p.to_le_bytes());
-                }
+                write_rows(out, points);
             }
             WalRecord::Close { id } => {
                 out.push(TAG_CLOSE);
@@ -96,34 +120,55 @@ impl WalRecord {
                     .try_into()?,
             ))
         };
-        let floats = |at: usize, n: usize| -> anyhow::Result<Vec<f32>> {
+        let rows32 = |at: usize, n: usize| -> anyhow::Result<Rows> {
             let raw = rest
                 .get(at..at + n * 4)
                 .ok_or_else(|| anyhow::anyhow!("short WAL point buffer"))?;
             anyhow::ensure!(rest.len() == at + n * 4, "trailing bytes in WAL record");
-            Ok(raw
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect())
+            Ok(Rows::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ))
+        };
+        let rows64 = |at: usize, n: usize| -> anyhow::Result<Rows> {
+            let raw = rest
+                .get(at..at + n * 8)
+                .ok_or_else(|| anyhow::anyhow!("short WAL point buffer"))?;
+            anyhow::ensure!(rest.len() == at + n * 8, "trailing bytes in WAL record");
+            Ok(Rows::F64(
+                raw.chunks_exact(8)
+                    .map(|c| {
+                        f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                    })
+                    .collect(),
+            ))
         };
         match tag {
-            TAG_OPEN => {
+            TAG_OPEN | TAG_OPEN64 => {
                 let id = u64_at(0)?;
                 let d = u32_at(8)?;
                 let depth = u32_at(12)?;
                 let count = u32_at(16)?;
-                let points = floats(20, count as usize * d as usize)?;
+                let n = count as usize * d as usize;
+                let points =
+                    if tag == TAG_OPEN { rows32(20, n)? } else { rows64(20, n)? };
                 Ok(WalRecord::Open { id, d, depth, count, points })
             }
-            TAG_FEED => {
+            TAG_FEED | TAG_FEED64 => {
                 let id = u64_at(0)?;
                 let count = u32_at(8)?;
+                let width = if tag == TAG_FEED { 4 } else { 8 };
                 anyhow::ensure!(
-                    (rest.len() - 12) % 4 == 0 && count as usize > 0,
+                    rest.len() >= 12
+                        && (rest.len() - 12) % width == 0
+                        && count as usize > 0,
                     "malformed WAL feed record"
                 );
-                let d = (rest.len() - 12) / 4 / count as usize;
-                let points = floats(12, count as usize * d)?;
+                let d = (rest.len() - 12) / width / count as usize;
+                let n = count as usize * d;
+                let points =
+                    if tag == TAG_FEED { rows32(12, n)? } else { rows64(12, n)? };
                 Ok(WalRecord::Feed { id, count, points })
             }
             TAG_CLOSE => Ok(WalRecord::Close { id: u64_at(0)? }),
@@ -241,12 +286,26 @@ mod tests {
         std::env::temp_dir().join(format!("signax-wal-{}-{}", name, std::process::id()))
     }
 
+    /// Mixed-precision sample log: the roundtrip covers all four typed
+    /// tags (f32 and f64 opens and feeds) plus close.
     fn sample_records() -> Vec<WalRecord> {
         vec![
-            WalRecord::Open { id: 1, d: 2, depth: 3, count: 2, points: vec![0.0, 0.5, 1.0, -1.5] },
-            WalRecord::Feed { id: 1, count: 1, points: vec![2.0, 0.25] },
-            WalRecord::Open { id: 2, d: 1, depth: 4, count: 3, points: vec![0.1, 0.2, 0.3] },
-            WalRecord::Feed { id: 2, count: 2, points: vec![0.4, 0.5] },
+            WalRecord::Open {
+                id: 1,
+                d: 2,
+                depth: 3,
+                count: 2,
+                points: vec![0.0f32, 0.5, 1.0, -1.5].into(),
+            },
+            WalRecord::Feed { id: 1, count: 1, points: vec![2.0f32, 0.25].into() },
+            WalRecord::Open {
+                id: 2,
+                d: 1,
+                depth: 4,
+                count: 3,
+                points: vec![0.1f64, 0.2, 0.3].into(),
+            },
+            WalRecord::Feed { id: 2, count: 2, points: vec![0.4f64, 0.5].into() },
             WalRecord::Close { id: 1 },
         ]
     }
@@ -304,23 +363,77 @@ mod tests {
     #[test]
     fn points_survive_bitwise() {
         // WAL replay feeds the recovered points back through Path::update;
-        // the floats must come back with identical bits.
+        // the floats must come back with identical bits — at both widths,
+        // including f64 values with no f32 representation at all.
         let path = tmp("bits");
         let _ = std::fs::remove_file(&path);
         let exact: Vec<f32> = vec![0.1, -0.2, 1e-30, 3.4e38, f32::MIN_POSITIVE];
+        let wide: Vec<f64> = vec![0.1, -0.2, 1e-300, 1.7e308, f64::MIN_POSITIVE];
         let log = FeedLog::open(&path).unwrap();
-        log.append(&WalRecord::Open { id: 9, d: 5, depth: 2, count: 1, points: exact.clone() })
-            .unwrap();
+        log.append(&WalRecord::Open {
+            id: 9,
+            d: 5,
+            depth: 2,
+            count: 1,
+            points: exact.clone().into(),
+        })
+        .unwrap();
+        log.append(&WalRecord::Feed { id: 9, count: 1, points: wide.clone().into() }).unwrap();
         log.flush().unwrap();
         drop(log);
-        match &FeedLog::replay(&path).unwrap()[0] {
-            WalRecord::Open { points, .. } => {
+        let recs = FeedLog::replay(&path).unwrap();
+        match &recs[0] {
+            WalRecord::Open { points: Rows::F32(points), .. } => {
                 for (a, b) in exact.iter().zip(points) {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
             }
             other => panic!("unexpected record {other:?}"),
         }
+        match &recs[1] {
+            WalRecord::Feed { points: Rows::F64(points), .. } => {
+                for (a, b) in wide.iter().zip(points) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected record {other:?}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn legacy_f32_tags_still_replay() {
+        // A log written before the typed-row change (tags 1/2 only, 4-byte
+        // points) must replay as F32 rows byte-for-byte. Frame one by hand
+        // with the v0 layout to pin the compatibility, independent of the
+        // current encoder.
+        let path = tmp("legacy");
+        let _ = std::fs::remove_file(&path);
+        let pts = [0.25f32, -0.75];
+        let mut payload = vec![1u8]; // TAG_OPEN, the original f32 tag
+        payload.extend_from_slice(&7u64.to_le_bytes()); // id
+        payload.extend_from_slice(&2u32.to_le_bytes()); // d
+        payload.extend_from_slice(&3u32.to_le_bytes()); // depth
+        payload.extend_from_slice(&1u32.to_le_bytes()); // count
+        for p in pts {
+            payload.extend_from_slice(&p.to_le_bytes());
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        std::fs::write(&path, &bytes).unwrap();
+        let recs = FeedLog::replay(&path).unwrap();
+        assert_eq!(
+            recs,
+            vec![WalRecord::Open {
+                id: 7,
+                d: 2,
+                depth: 3,
+                count: 1,
+                points: pts.to_vec().into(),
+            }]
+        );
         std::fs::remove_file(&path).unwrap();
     }
 }

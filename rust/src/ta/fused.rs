@@ -790,6 +790,49 @@ mod tests {
     }
 
     #[test]
+    fn dyn_vjp_pins_the_mono_boundary_at_d8() {
+        // d = 8 is the last monomorphised dimension — the exact boundary
+        // the retirement decision (`bench::mono_dyn_crossover` over
+        // `BENCH_batch.json`'s vjp_step records) hinges on. The generic
+        // property above samples it; this pins it: at the boundary the
+        // two bodies agree to the last bit across depths and precisions,
+        // so retiring the mono bodies is purely a benchmark call, never
+        // a numerics question.
+        property("dyn vjp ≡ mono vjp at the d = 8 boundary", 16, |g| {
+            let d = 8usize;
+            let n = g.usize_in(1, 4);
+            g.label(format!("n={n}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let a = g.normal_vec(s.sig_len(), 0.6);
+            let z = g.normal_vec(d, 0.6);
+            let gv = g.normal_vec(s.sig_len(), 1.0);
+
+            let mut ws = Workspace::new(&s);
+            let mut ga_mono = s.zeros();
+            let mut gz_mono = vec![0.0f32; d];
+            fused_mexp_vjp(&s, &a, &z, &gv, &mut ga_mono, &mut gz_mono, &mut ws);
+            let mut ga_dyn = s.zeros();
+            let mut gz_dyn = vec![0.0f32; d];
+            fused_mexp_vjp_dyn(&s, &a, &z, &gv, &mut ga_dyn, &mut gz_dyn, &mut ws);
+            assert_eq!(ga_dyn, ga_mono, "f32 ga diverges at the boundary, n={n}");
+            assert_eq!(gz_dyn, gz_mono, "f32 gz diverges at the boundary, n={n}");
+
+            let a64: Vec<f64> = a.iter().map(|&v| f64::from(v)).collect();
+            let z64: Vec<f64> = z.iter().map(|&v| f64::from(v)).collect();
+            let g64: Vec<f64> = gv.iter().map(|&v| f64::from(v)).collect();
+            let mut ws64 = Workspace::<f64>::new(&s);
+            let mut ga_mono64 = s.zeros_elem::<f64>();
+            let mut gz_mono64 = vec![0.0f64; d];
+            fused_mexp_vjp(&s, &a64, &z64, &g64, &mut ga_mono64, &mut gz_mono64, &mut ws64);
+            let mut ga_dyn64 = s.zeros_elem::<f64>();
+            let mut gz_dyn64 = vec![0.0f64; d];
+            fused_mexp_vjp_dyn(&s, &a64, &z64, &g64, &mut ga_dyn64, &mut gz_dyn64, &mut ws64);
+            assert_eq!(ga_dyn64, ga_mono64, "f64 ga diverges at the boundary, n={n}");
+            assert_eq!(gz_dyn64, gz_mono64, "f64 gz diverges at the boundary, n={n}");
+        });
+    }
+
+    #[test]
     fn dyn_vjp_matches_reference_beyond_the_mono_window() {
         // d > 8 is dyn's home turf: check against the exp + ⊠ composition,
         // which takes a completely different computational route.

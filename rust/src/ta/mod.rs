@@ -88,6 +88,136 @@ impl Precision {
     }
 }
 
+/// A row buffer typed at its native element precision — the wire format of
+/// the serving data plane. Where the coordinator used to carry
+/// `Vec<f32>`-plus-a-`Precision`-tag (upcasting f64 work at the kernel
+/// boundary, which capped end-to-end precision at the transport), it now
+/// carries `Rows`: an f64 request's payload is `Vec<f64>` from request to
+/// response, and the precision tag *is* the variant.
+///
+/// `Rows` is deliberately minimal — a tagged buffer with shape/precision
+/// accessors and the padding/slicing operations the microbatcher needs.
+/// Generic code crosses between `Rows` and `Vec<E>`/`&[E]` through the
+/// [`Elem`] row hooks ([`Elem::rows_from`], [`Elem::rows_into`],
+/// [`Elem::rows_as_slice`]), so precision is matched exactly once at the
+/// dispatch boundary and never via element casts.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rows {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Rows {
+    /// The element precision of this buffer.
+    #[inline]
+    pub fn precision(&self) -> Precision {
+        match self {
+            Rows::F32(_) => Precision::F32,
+            Rows::F64(_) => Precision::F64,
+        }
+    }
+
+    /// Element count (not bytes).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Rows::F32(v) => v.len(),
+            Rows::F64(v) => v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A zeroed buffer of `n` elements at the given precision.
+    pub fn zeros(prec: Precision, n: usize) -> Rows {
+        match prec {
+            Precision::F32 => Rows::F32(vec![0.0; n]),
+            Precision::F64 => Rows::F64(vec![0.0; n]),
+        }
+    }
+
+    /// Borrow as `&[f32]`; errors on an f64 buffer (no silent downcast).
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Rows::F32(v) => Ok(v),
+            Rows::F64(_) => anyhow::bail!("expected f32 rows, got f64"),
+        }
+    }
+
+    /// Borrow as `&[f64]`; errors on an f32 buffer (no silent upcast).
+    pub fn as_f64(&self) -> anyhow::Result<&[f64]> {
+        match self {
+            Rows::F32(_) => anyhow::bail!("expected f64 rows, got f32"),
+            Rows::F64(v) => Ok(v),
+        }
+    }
+
+    /// Resize to `n` elements, zero-filling growth (microbatch padding).
+    pub fn resize(&mut self, n: usize) {
+        match self {
+            Rows::F32(v) => v.resize(n, 0.0),
+            Rows::F64(v) => v.resize(n, 0.0),
+        }
+    }
+
+    /// Append another buffer of the *same* precision; errors on a dtype
+    /// mismatch rather than converting (the never-coalesce-across-dtype
+    /// invariant, enforced at the buffer level).
+    pub fn extend_from(&mut self, other: &Rows) -> anyhow::Result<()> {
+        match (self, other) {
+            (Rows::F32(a), Rows::F32(b)) => a.extend_from_slice(b),
+            (Rows::F64(a), Rows::F64(b)) => a.extend_from_slice(b),
+            (a, b) => anyhow::bail!(
+                "precision mismatch: cannot extend {} rows with {} rows",
+                a.precision().label(),
+                b.precision().label()
+            ),
+        }
+        Ok(())
+    }
+
+    /// Copy out the element range `r` as a new buffer (microbatch scatter).
+    pub fn slice(&self, r: std::ops::Range<usize>) -> Rows {
+        match self {
+            Rows::F32(v) => Rows::F32(v[r].to_vec()),
+            Rows::F64(v) => Rows::F64(v[r].to_vec()),
+        }
+    }
+}
+
+impl Default for Rows {
+    fn default() -> Rows {
+        Rows::F32(Vec::new())
+    }
+}
+
+impl From<Vec<f32>> for Rows {
+    fn from(v: Vec<f32>) -> Rows {
+        Rows::F32(v)
+    }
+}
+
+impl From<Vec<f64>> for Rows {
+    fn from(v: Vec<f64>) -> Rows {
+        Rows::F64(v)
+    }
+}
+
+impl PartialEq<Vec<f32>> for Rows {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        matches!(self, Rows::F32(v) if v == other)
+    }
+}
+
+impl PartialEq<Vec<f64>> for Rows {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        matches!(self, Rows::F64(v) if v == other)
+    }
+}
+
 mod sealed {
     pub trait Sealed {}
     impl Sealed for f32 {}
@@ -134,6 +264,17 @@ pub trait Elem:
     fn to_f64(self) -> f64;
     fn abs(self) -> Self;
 
+    /// Wrap a native buffer as typed [`Rows`] (the variant is `Self`'s).
+    fn rows_from(v: Vec<Self>) -> Rows;
+
+    /// Unwrap typed [`Rows`] into a native buffer; errors on a precision
+    /// mismatch rather than converting.
+    fn rows_into(rows: Rows) -> anyhow::Result<Vec<Self>>;
+
+    /// Borrow typed [`Rows`] as a native slice; errors on a precision
+    /// mismatch rather than converting.
+    fn rows_as_slice(rows: &Rows) -> anyhow::Result<&[Self]>;
+
     /// `1/k` computed *in this precision* (so the f32 instantiation keeps
     /// the exact `1.0f32 / k as f32` rounding the scalar kernels always
     /// used — load-bearing for the bitwise-parity invariant).
@@ -172,6 +313,19 @@ impl Elem for f32 {
     fn abs(self) -> f32 {
         f32::abs(self)
     }
+    #[inline]
+    fn rows_from(v: Vec<f32>) -> Rows {
+        Rows::F32(v)
+    }
+    fn rows_into(rows: Rows) -> anyhow::Result<Vec<f32>> {
+        match rows {
+            Rows::F32(v) => Ok(v),
+            Rows::F64(_) => anyhow::bail!("expected f32 rows, got f64"),
+        }
+    }
+    fn rows_as_slice(rows: &Rows) -> anyhow::Result<&[f32]> {
+        rows.as_f32()
+    }
 }
 
 impl Elem for f64 {
@@ -202,6 +356,19 @@ impl Elem for f64 {
     #[inline]
     fn abs(self) -> f64 {
         f64::abs(self)
+    }
+    #[inline]
+    fn rows_from(v: Vec<f64>) -> Rows {
+        Rows::F64(v)
+    }
+    fn rows_into(rows: Rows) -> anyhow::Result<Vec<f64>> {
+        match rows {
+            Rows::F32(_) => anyhow::bail!("expected f64 rows, got f32"),
+            Rows::F64(v) => Ok(v),
+        }
+    }
+    fn rows_as_slice(rows: &Rows) -> anyhow::Result<&[f64]> {
+        rows.as_f64()
     }
 }
 
@@ -421,6 +588,55 @@ mod tests {
         assert_eq!(Precision::F64.size_of(), 8);
         assert_eq!(<f32 as Elem>::PRECISION, Precision::F32);
         assert_eq!(<f64 as Elem>::PRECISION, Precision::F64);
+    }
+
+    #[test]
+    fn rows_precision_and_shape() {
+        let a = Rows::from(vec![1.0f32, 2.0]);
+        let b = Rows::from(vec![1.0f64, 2.0, 3.0]);
+        assert_eq!(a.precision(), Precision::F32);
+        assert_eq!(b.precision(), Precision::F64);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 3);
+        assert!(!a.is_empty());
+        assert!(Rows::default().is_empty());
+        assert_eq!(Rows::default().precision(), Precision::F32);
+        assert_eq!(Rows::zeros(Precision::F64, 4), vec![0.0f64; 4]);
+    }
+
+    #[test]
+    fn rows_borrows_refuse_cross_precision() {
+        let a = Rows::from(vec![1.0f32]);
+        assert!(a.as_f32().is_ok());
+        assert!(a.as_f64().is_err());
+        let b = Rows::from(vec![1.0f64]);
+        assert!(b.as_f64().is_ok());
+        assert!(b.as_f32().is_err());
+        assert!(<f32 as Elem>::rows_into(b.clone()).is_err());
+        assert_eq!(<f64 as Elem>::rows_into(b).unwrap(), vec![1.0f64]);
+    }
+
+    #[test]
+    fn rows_pad_extend_and_slice() {
+        let mut pad = Rows::zeros(Precision::F64, 0);
+        pad.extend_from(&Rows::from(vec![1.0f64, 2.0])).unwrap();
+        pad.resize(4);
+        assert_eq!(pad, vec![1.0f64, 2.0, 0.0, 0.0]);
+        assert_eq!(pad.slice(1..3), vec![2.0f64, 0.0]);
+        // Cross-dtype extension is a hard error, not a conversion.
+        assert!(pad.extend_from(&Rows::from(vec![1.0f32])).is_err());
+    }
+
+    #[test]
+    fn elem_row_hooks_round_trip() {
+        let v = vec![1.0f32, -2.0];
+        let rows = <f32 as Elem>::rows_from(v.clone());
+        assert_eq!(<f32 as Elem>::rows_as_slice(&rows).unwrap(), &v[..]);
+        assert_eq!(<f32 as Elem>::rows_into(rows).unwrap(), v);
+        let w = vec![0.5f64];
+        let rows = <f64 as Elem>::rows_from(w.clone());
+        assert_eq!(<f64 as Elem>::rows_as_slice(&rows).unwrap(), &w[..]);
+        assert!(<f32 as Elem>::rows_as_slice(&rows).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use signax::signature::{signature, signature_batch, signature_stream, signature_
 use signax::substrate::json::Json;
 use signax::substrate::propcheck::assert_close;
 use signax::substrate::rng::Rng;
-use signax::ta::{Precision, SigSpec};
+use signax::ta::SigSpec;
 
 fn artifact_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -89,7 +89,12 @@ fn streaming_sessions_end_to_end_native() {
         p
     };
     let open = coord
-        .call(Request::OpenStream { points: all[..10 * 3].to_vec(), stream: 10, d: 3, depth: 3 })
+        .call(Request::OpenStream {
+            points: all[..10 * 3].to_vec().into(),
+            stream: 10,
+            d: 3,
+            depth: 3,
+        })
         .unwrap();
     let sid = open.session.expect("session id");
     assert_eq!(open.backend, Backend::Native);
@@ -98,14 +103,18 @@ fn streaming_sessions_end_to_end_native() {
     let mut last = open.values;
     for chunk in all[10 * 3..].chunks(10 * 3) {
         let resp = coord
-            .call(Request::Feed { session: sid, points: chunk.to_vec(), count: chunk.len() / 3 })
+            .call(Request::Feed {
+                session: sid,
+                points: chunk.to_vec().into(),
+                count: chunk.len() / 3,
+            })
             .unwrap();
         last = resp.values;
     }
-    assert_close(&last, &signature(&all, 40, &spec), 5e-3, 5e-4);
+    assert_close(last.as_f32().unwrap(), &signature(&all, 40, &spec), 5e-3, 5e-4);
     // Interval query spanning feed boundaries matches recomputation.
     let q = coord.call(Request::QueryInterval { session: sid, i: 7, j: 33 }).unwrap();
-    assert_close(&q.values, &signature(&all[7 * 3..34 * 3], 27, &spec), 1e-2, 1e-3);
+    assert_close(q.values.as_f32().unwrap(), &signature(&all[7 * 3..34 * 3], 27, &spec), 1e-2, 1e-3);
     // Logsig interval query has the words-basis dimension.
     let lq = coord.call(Request::LogSigQueryInterval { session: sid, i: 7, j: 33 }).unwrap();
     assert_eq!(lq.values.len(), signax::words::witt_dimension(3, 3));
@@ -115,7 +124,9 @@ fn streaming_sessions_end_to_end_native() {
     assert_eq!(snap.open_sessions, 1);
     assert!(snap.session_bytes > 0);
     coord.call(Request::CloseStream { session: sid }).unwrap();
-    assert!(coord.call(Request::Feed { session: sid, points: vec![0.0; 3], count: 1 }).is_err());
+    assert!(coord
+        .call(Request::Feed { session: sid, points: vec![0.0f32; 3].into(), count: 1 })
+        .is_err());
     let snap = coord.metrics().snapshot();
     assert_eq!(snap.open_sessions, 0);
     assert_eq!(snap.session_bytes, 0);
@@ -197,27 +208,15 @@ fn coordinator_routes_matching_requests_to_xla() {
     // Matching shape -> XLA (through the batcher).
     let path = signax::data::random_path(&mut rng, 128, 4, 0.1);
     let resp = coord
-        .call(Request::Signature {
-            path: path.clone(),
-            stream: 128,
-            d: 4,
-            depth: 4,
-            precision: Precision::F32,
-        })
+        .call(Request::Signature { path: path.clone().into(), stream: 128, d: 4, depth: 4 })
         .unwrap();
     assert_eq!(resp.backend, Backend::Xla);
-    assert_close(&resp.values, &signature(&path, 128, &spec), 5e-3, 5e-4);
+    assert_close(resp.values.as_f32().unwrap(), &signature(&path, 128, &spec), 5e-3, 5e-4);
 
     // Non-matching shape -> native fallback.
     let short = signax::data::random_path(&mut rng, 16, 4, 0.1);
     let resp = coord
-        .call(Request::Signature {
-            path: short.clone(),
-            stream: 16,
-            d: 4,
-            depth: 4,
-            precision: Precision::F32,
-        })
+        .call(Request::Signature { path: short.clone().into(), stream: 16, d: 4, depth: 4 })
         .unwrap();
     assert_eq!(resp.backend, Backend::Native);
 
@@ -240,19 +239,13 @@ fn coordinator_batches_concurrent_requests() {
         (0..8).map(|_| signax::data::random_path(&mut rng, 128, 4, 0.1)).collect();
     let reqs: Vec<Request> = paths
         .iter()
-        .map(|p| Request::Signature {
-            path: p.clone(),
-            stream: 128,
-            d: 4,
-            depth: 4,
-            precision: Precision::F32,
-        })
+        .map(|p| Request::Signature { path: p.clone().into(), stream: 128, d: 4, depth: 4 })
         .collect();
     let resps = coord.call_many(reqs);
     for (p, r) in paths.iter().zip(resps) {
         let r = r.expect("response");
         assert_eq!(r.backend, Backend::Xla);
-        assert_close(&r.values, &signature(p, 128, &spec), 5e-3, 5e-4);
+        assert_close(r.values.as_f32().unwrap(), &signature(p, 128, &spec), 5e-3, 5e-4);
     }
     let snap = coord.metrics().snapshot();
     // 8 requests coalesced into at most a few padded batches of 32.
@@ -360,15 +353,21 @@ fn coordinator_warm_restart_answers_queries_bitwise() {
             let d = 2 + k % 2;
             let seed = rng.normal_vec(6 * d, 0.4);
             let open = |c: &Coordinator| {
-                c.call(Request::OpenStream { points: seed.clone(), stream: 6, d, depth: 3 })
-                    .unwrap()
-                    .session
-                    .unwrap()
+                c.call(Request::OpenStream {
+                    points: seed.clone().into(),
+                    stream: 6,
+                    d,
+                    depth: 3,
+                })
+                .unwrap()
+                .session
+                .unwrap()
             };
             let (id, cid) = (open(&coord), open(&control));
             let extra = rng.normal_vec(4 * d, 0.4);
             for (c, s) in [(&coord, id), (&control, cid)] {
-                c.call(Request::Feed { session: s, points: extra.clone(), count: 4 }).unwrap();
+                c.call(Request::Feed { session: s, points: extra.clone().into(), count: 4 })
+                    .unwrap();
             }
             sessions.push((id, cid));
         }
@@ -390,9 +389,10 @@ fn coordinator_warm_restart_answers_queries_bitwise() {
     let (id0, cid0) = sessions[0];
     let more = rng.normal_vec(3 * 2, 0.4);
     let got = revived
-        .call(Request::Feed { session: id0, points: more.clone(), count: 3 })
+        .call(Request::Feed { session: id0, points: more.clone().into(), count: 3 })
         .unwrap();
-    let want = control.call(Request::Feed { session: cid0, points: more, count: 3 }).unwrap();
+    let want =
+        control.call(Request::Feed { session: cid0, points: more.into(), count: 3 }).unwrap();
     assert_eq!(got.values, want.values, "post-restart feed diverged");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,34 @@
+#!/usr/bin/env sh
+# Row-cast lint for the serving layer.
+#
+# The data plane carries rows as natively typed `ta::Rows` from the wire
+# to the kernels; the ONE place serving code may inspect the precision
+# tag and pick an element type is `coordinator/rows.rs` (the `with_elem!`
+# boundary). An `as f32` / `as f64` anywhere else in `coordinator/` is
+# how a silent upcast sneaks back onto the f64 path, so this script
+# fails CI on any new one.
+#
+# Escape hatch for genuinely non-row arithmetic (counters, ratios):
+# append `// lint: non-row cast` to the offending line.
+#
+# Usage: tools/lint_row_casts.sh   (run from the repo root; exits 1 on
+# violations, printing each offending line)
+
+set -eu
+
+cd "$(dirname "$0")/.."
+
+violations=$(grep -rnE 'as f(32|64)\b' rust/src/coordinator --include='*.rs' \
+    | grep -v '^rust/src/coordinator/rows\.rs:' \
+    | grep -v 'lint: non-row cast' \
+    || true)
+
+if [ -n "$violations" ]; then
+    echo "row-cast lint FAILED: 'as f32'/'as f64' outside the sanctioned" >&2
+    echo "precision boundary (coordinator/rows.rs). Rows must stay natively" >&2
+    echo "typed; convert via the Elem row hooks, or mark genuinely non-row" >&2
+    echo "arithmetic with '// lint: non-row cast'." >&2
+    echo "$violations" >&2
+    exit 1
+fi
+echo "row-cast lint ok: no unsanctioned f32/f64 casts in coordinator/"
