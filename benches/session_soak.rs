@@ -1,0 +1,449 @@
+//! Million-session rolling-window soak: the scale proof for the
+//! server-maintained sliding-signature feature. Four stages:
+//!
+//! - **bitwise gate** (always): every slide a windowed session emits —
+//!   across specs, strides, signature and logsignature outputs, both
+//!   precisions, ragged feed sizes — is bitwise the per-query answer of
+//!   an untruncated twin session over the same interval.
+//! - **memory ceiling** (always): a window session's resident bytes stay
+//!   O(window) while the points flowing through it grow O(history); an
+//!   unbounded plain session holding the same history is the yardstick.
+//! - **speedup**: server-maintained sliding windows (feed + poll, one
+//!   O(1) stored-inverse combination per slide) vs the client-side
+//!   recompute-per-slide loop they replace (a fresh `signature()` over
+//!   each window's points). Acceptance: >= 5x at window >= 64 in the
+//!   full run.
+//! - **soak**: open a ~1M-session fleet of mixed specs through
+//!   `Coordinator::call` under a resident-byte budget sized to a third
+//!   of the fleet, then drive seeded Zipf feed/poll traffic through the
+//!   eviction/reload churn that budget forces, then drain every window.
+//!   The p99 feed/poll latencies (log2-bucket histograms, upper-edge
+//!   quantiles) gate an SLO in the full run.
+//!
+//!     cargo bench --bench session_soak             # -> BENCH_soak.json
+//!     cargo bench --bench session_soak -- --check  # CI smoke: ~3k
+//!         sessions, timing-free (bitwise + memory + churn + structural
+//!         gates only, so CI noise cannot flake it)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use signax::bench::{soak_json, ChunkSizes, Workload};
+use signax::coordinator::{
+    Coordinator, CoordinatorConfig, Metrics, Request, RequestKind, SessionConfig, SessionId,
+    SessionManager,
+};
+use signax::logsignature::{LogSigBasis, LogSigPlan};
+use signax::path::{Path, WindowSpec};
+use signax::signature::signature;
+use signax::state::SpillConfig;
+use signax::substrate::benchlib::fmt_secs;
+use signax::substrate::pool::default_threads;
+use signax::substrate::rng::Rng;
+use signax::ta::{Precision, Rows, SigSpec};
+
+/// One session archetype in the mixed-spec fleet (rank r runs profile
+/// `r % PROFILES`). All are lightweight: 2-point seeds, shallow specs.
+struct Profile {
+    d: usize,
+    depth: usize,
+    prec: Precision,
+    window: Option<WindowSpec>,
+}
+
+fn profiles() -> Vec<Profile> {
+    vec![
+        Profile {
+            d: 2,
+            depth: 2,
+            prec: Precision::F32,
+            window: Some(WindowSpec { len: 8, stride: 4, logsig: None }),
+        },
+        Profile {
+            d: 3,
+            depth: 2,
+            prec: Precision::F32,
+            window: Some(WindowSpec { len: 6, stride: 3, logsig: Some(LogSigBasis::Words) }),
+        },
+        Profile {
+            d: 2,
+            depth: 3,
+            prec: Precision::F64,
+            window: Some(WindowSpec { len: 8, stride: 2, logsig: None }),
+        },
+        Profile { d: 2, depth: 2, prec: Precision::F32, window: None },
+    ]
+}
+
+fn widen(v: &[f32]) -> Vec<f64> {
+    v.iter().copied().map(f64::from).collect()
+}
+
+fn rows_for(prec: Precision, v: Vec<f32>) -> Rows {
+    match prec {
+        Precision::F32 => v.into(),
+        Precision::F64 => widen(&v).into(),
+    }
+}
+
+fn manager(budget: Option<usize>, spill: SpillConfig) -> SessionManager {
+    SessionManager::with_config(
+        Arc::new(Metrics::default()),
+        SessionConfig { budget_bytes: budget, spill, ..SessionConfig::default() },
+    )
+    .unwrap()
+}
+
+/// Slide row `k` of a packed poll result == the expected Rows? (Both
+/// sides are the session's native precision; a width mismatch is false.)
+fn row_eq(rows: &Rows, k: usize, dim: usize, want: &Rows) -> bool {
+    match (rows, want) {
+        (Rows::F32(v), Rows::F32(w)) => v[k * dim..(k + 1) * dim] == w[..],
+        (Rows::F64(v), Rows::F64(w)) => v[k * dim..(k + 1) * dim] == w[..],
+        _ => false,
+    }
+}
+
+/// The gate everything else rides on: windowed output == per-query
+/// output, bitwise, across specs x strides x bases x precisions x
+/// ragged feeds. The twin session never truncates (plain sessions keep
+/// full history), so this also pins the retention watermark: truncation
+/// must not change a single emitted bit.
+fn bitwise_gate() -> anyhow::Result<()> {
+    let m = manager(None, SpillConfig::None);
+    let chunk_sizes = ChunkSizes::new(1, 7, 1.2);
+    let mut rng = Rng::new(0x50AB17);
+    let mut combos = 0usize;
+    for (d, depth) in [(2usize, 3usize), (3, 2)] {
+        for prec in [Precision::F32, Precision::F64] {
+            let spec = SigSpec::with_dtype(d, depth, prec)?;
+            for (len, stride) in [(4usize, 2usize), (6, 3), (5, 1)] {
+                for basis in [None, Some(LogSigBasis::Words)] {
+                    let wspec = WindowSpec { len, stride, logsig: basis };
+                    let plan = match basis {
+                        Some(b) => Some(LogSigPlan::new(&spec, b)?),
+                        None => None,
+                    };
+                    let dim = match &plan {
+                        Some(p) => p.dim(),
+                        None => spec.sig_len(),
+                    };
+                    let seed = rng.normal_vec(3 * d, 0.3);
+                    let (wid, _) = m.open_window(&spec, &rows_for(prec, seed.clone()), 3, wspec)?;
+                    let twin = m.open(&spec, &rows_for(prec, seed), 3)?;
+                    let mut slides_seen = 0u64;
+                    for _ in 0..6 {
+                        let n = chunk_sizes.sample(&mut rng);
+                        let pts = rows_for(prec, rng.normal_vec(n * d, 0.3));
+                        m.feed(wid, &pts, n)?;
+                        m.feed(twin, &pts, n)?;
+                        let (first, rows) = m.poll_window(wid)?;
+                        anyhow::ensure!(first == slides_seen, "slide cursor skipped or replayed");
+                        for k in 0..rows.len() / dim {
+                            let i = (first as usize + k) * stride;
+                            let j = i + len - 1;
+                            let want = match &plan {
+                                Some(p) => m.logsig_query(twin, i, j, p)?,
+                                None => m.query(twin, i, j)?,
+                            };
+                            anyhow::ensure!(
+                                row_eq(&rows, k, dim, &want),
+                                "slide {} of d={d} depth={depth} {prec:?} len={len} \
+                                 stride={stride} basis={basis:?} diverged from per-query twin",
+                                first as usize + k
+                            );
+                            slides_seen += 1;
+                        }
+                    }
+                    anyhow::ensure!(
+                        slides_seen >= 2,
+                        "combo len={len} stride={stride} emitted too few slides to gate"
+                    );
+                    m.close(wid)?;
+                    m.close(twin)?;
+                    combos += 1;
+                }
+            }
+        }
+    }
+    println!("bitwise gate: {combos} spec/stride/basis/precision combos, all slides exact");
+    Ok(())
+}
+
+/// O(window) retention vs O(history) growth, measured in accounted
+/// resident bytes. Returns `(history_points, windowed_bytes,
+/// unbounded_bytes)` rows for the JSON record.
+fn memory_ceiling() -> anyhow::Result<Vec<(usize, usize, usize)>> {
+    let spec = SigSpec::new(2, 2)?;
+    let wspec = WindowSpec { len: 64, stride: 1, logsig: None };
+    let windowed = manager(None, SpillConfig::None);
+    let unbounded = manager(None, SpillConfig::None);
+    let mut rng = Rng::new(0xCE11);
+    let seed = rng.normal_vec(2 * 2, 0.3);
+    let (wid, _) = windowed.open_window(&spec, &seed.clone().into(), 2, wspec)?;
+    let pid = unbounded.open(&spec, &seed.into(), 2)?;
+    let mut rows = vec![];
+    let mut fed = 2usize;
+    for target in [2048usize, 4096] {
+        while fed < target {
+            let n = 64.min(target - fed);
+            let pts: Rows = rng.normal_vec(n * 2, 0.3).into();
+            windowed.feed(wid, &pts, n)?;
+            unbounded.feed(pid, &pts, n)?;
+            // Drain as a client would; undelivered rows are state, so an
+            // unpolled window would (correctly) grow without bound.
+            windowed.poll_window(wid)?;
+            fed += n;
+        }
+        rows.push((fed, windowed.resident_bytes(), unbounded.resident_bytes()));
+    }
+    let (h1, w1, u1) = rows[0];
+    let (h2, w2, u2) = rows[1];
+    anyhow::ensure!(
+        u2 >= 8 * w2,
+        "O(window)/O(history) separation missing at {h2} points: windowed {w2}B vs plain {u2}B"
+    );
+    anyhow::ensure!(
+        w2 <= w1 + w1 / 4,
+        "window session kept growing with history: {w1}B at {h1} -> {w2}B at {h2}"
+    );
+    anyhow::ensure!(u2 > u1, "plain control failed to grow (bad yardstick)");
+    println!(
+        "memory ceiling: windowed {w1}B @ {h1} pts -> {w2}B @ {h2} pts (plain: {u1}B -> {u2}B)"
+    );
+    Ok(rows)
+}
+
+/// Windowed serving vs the recompute-per-slide client loop it replaces.
+/// Returns `(window_len, recompute_s, windowed_s)`.
+fn speedup(window_lens: &[usize], slides: usize) -> anyhow::Result<Vec<(usize, f64, f64)>> {
+    let spec = SigSpec::new(2, 3)?;
+    let mut out = vec![];
+    for &len in window_lens {
+        let total = len + slides; // stride 1: one slide per extra point
+        let mut rng = Rng::new(0x5BEE ^ len as u64);
+        let all = rng.normal_vec(total * 2, 0.3);
+
+        // Client-side recompute: one fresh signature per slide over the
+        // window's raw points (what callers do without OpenWindow).
+        let t0 = Instant::now();
+        let mut sink = 0.0f32;
+        for k in 0..=slides {
+            let sig = signature(&all[k * 2..(k + len) * 2], len, &spec);
+            sink += sig[0];
+        }
+        let recompute_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(sink.is_finite(), "recompute produced non-finite output");
+
+        // Server-maintained: seed the window, then feed point-by-point
+        // batches and poll — the timed region covers extend + slide +
+        // drain, the whole serving cost.
+        let m = manager(None, SpillConfig::None);
+        let wspec = WindowSpec { len, stride: 1, logsig: None };
+        let t0 = Instant::now();
+        let (wid, _) = m.open_window(&spec, &all[..len * 2].to_vec().into(), len, wspec)?;
+        let mut delivered = 0usize;
+        for chunk in all[len * 2..].chunks(64 * 2) {
+            let n = chunk.len() / 2;
+            m.feed(wid, &chunk.to_vec().into(), n)?;
+            let (_, rows) = m.poll_window(wid)?;
+            delivered += rows.len() / spec.sig_len();
+        }
+        let windowed_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            delivered == slides + 1,
+            "windowed arm delivered {delivered} slides, expected {}",
+            slides + 1
+        );
+        println!(
+            "speedup: window {len}: recompute {} vs windowed {} ({:.1}x)",
+            fmt_secs(recompute_s),
+            fmt_secs(windowed_s),
+            recompute_s / windowed_s
+        );
+        out.push((len, recompute_s, windowed_s));
+    }
+    Ok(out)
+}
+
+fn p99_us(coord: &Coordinator, kind: RequestKind) -> f64 {
+    coord.metrics().latency_of(kind).quantile(0.99).as_secs_f64() * 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    let hw = default_threads();
+
+    bitwise_gate()?;
+    let memory = memory_ceiling()?;
+    let speedups = if check {
+        // Reduced, ungated: timing on a loaded CI box proves nothing.
+        speedup(&[16], 200)?
+    } else {
+        speedup(&[64, 256], 20_000)?
+    };
+    if !check {
+        for &(len, recompute, windowed) in &speedups {
+            if len >= 64 {
+                anyhow::ensure!(
+                    recompute / windowed >= 5.0,
+                    "windowed serving under 5x recompute at window {len}: {:.1}x",
+                    recompute / windowed
+                );
+            }
+        }
+    }
+
+    // ---- The soak: a mixed-spec fleet under Zipf traffic. ----
+    let sessions: usize = if check { 3_000 } else { 1_000_000 };
+    let events: usize = if check { 12_000 } else { 3_000_000 };
+    let profs = profiles();
+
+    // Budget a third of the fleet's measured resident footprint, so the
+    // open flood spills cold sessions and Zipf traffic reloads them.
+    let per_avg = {
+        let mut total = 0usize;
+        for p in &profs {
+            let spec = SigSpec::with_dtype(p.d, p.depth, p.prec)?;
+            total += match p.prec {
+                Precision::F32 => {
+                    Path::<f32>::new(&spec, &vec![0.0f32; 2 * p.d], 2)?.storage_bytes()
+                }
+                Precision::F64 => {
+                    Path::<f64>::new(&spec, &vec![0.0f64; 2 * p.d], 2)?.storage_bytes()
+                }
+            };
+        }
+        total / profs.len()
+    };
+    let mut cfg = CoordinatorConfig::native_only().with_native_batch(0);
+    cfg.session = SessionConfig {
+        budget_bytes: Some((per_avg * sessions / 3).max(per_avg * 4)),
+        spill: SpillConfig::Memory,
+        ..SessionConfig::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+
+    println!("\n{:<8} {:>10} {:>12} {:>12} {:>12}", "phase", "events", "wall", "ops/s", "p99");
+    let mut phases: Vec<(&str, usize, f64, f64, f64)> = vec![];
+
+    // Phase 1: open the fleet.
+    let mut ids: Vec<SessionId> = Vec::with_capacity(sessions);
+    let mut seed_rng = Rng::new(0x09E4);
+    let t0 = Instant::now();
+    for rank in 0..sessions {
+        let p = &profs[rank % profs.len()];
+        let points = rows_for(p.prec, seed_rng.normal_vec(2 * p.d, 0.3));
+        let req = match p.window {
+            Some(window) => {
+                Request::OpenWindow { points, stream: 2, d: p.d, depth: p.depth, window }
+            }
+            None => Request::OpenStream { points, stream: 2, d: p.d, depth: p.depth },
+        };
+        let resp = coord.call(req)?;
+        ids.push(resp.session.expect("open returned no session id"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let p99 = p99_us(&coord, RequestKind::OpenWindow);
+    println!(
+        "{:<8} {:>10} {:>12} {:>12.0} {:>9.0}us",
+        "open", sessions, fmt_secs(wall), sessions as f64 / wall, p99
+    );
+    phases.push(("open", sessions, wall, sessions as f64 / wall, p99));
+    anyhow::ensure!(
+        coord.metrics().snapshot().sessions_spilled > 0,
+        "the open flood never hit the budget: no eviction churn to soak"
+    );
+
+    // Phase 2: the Zipf storm — hot ranks hammered, cold ranks touched
+    // rarely (each such touch is a transparent reload), ragged chunks,
+    // windowed sessions polled every fourth touch.
+    let mut wl = Workload::new(sessions, 1.1, 6, 0x5708);
+    let t0 = Instant::now();
+    let mut polls = 0usize;
+    for e in 0..events {
+        let ev = wl.next_event();
+        let p = &profs[ev.session % profs.len()];
+        let points = rows_for(p.prec, wl.rng().normal_vec(ev.points * p.d, 0.3));
+        coord.call(Request::Feed { session: ids[ev.session], points, count: ev.points })?;
+        if p.window.is_some() && e % 4 == 0 {
+            coord.call(Request::PollWindow { session: ids[ev.session] })?;
+            polls += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let p99 = p99_us(&coord, RequestKind::Feed);
+    println!(
+        "{:<8} {:>10} {:>12} {:>12.0} {:>9.0}us",
+        "storm", events + polls, fmt_secs(wall), (events + polls) as f64 / wall, p99
+    );
+    phases.push(("storm", events + polls, wall, (events + polls) as f64 / wall, p99));
+    let snap = coord.metrics().snapshot();
+    anyhow::ensure!(snap.sessions_reloaded > 0, "Zipf storm never reloaded a cold session");
+    anyhow::ensure!(snap.errors == 0, "storm produced {} request errors", snap.errors);
+
+    // Phase 3: drain every windowed session once.
+    let t0 = Instant::now();
+    let mut drains = 0usize;
+    for (rank, &id) in ids.iter().enumerate() {
+        if profs[rank % profs.len()].window.is_some() {
+            coord.call(Request::PollWindow { session: id })?;
+            drains += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let p99 = p99_us(&coord, RequestKind::PollWindow);
+    println!(
+        "{:<8} {:>10} {:>12} {:>12.0} {:>9.0}us",
+        "drain", drains, fmt_secs(wall), drains as f64 / wall, p99
+    );
+    phases.push(("drain", drains, wall, drains as f64 / wall, p99));
+    let snap = coord.metrics().snapshot();
+    anyhow::ensure!(snap.window_slides > 0, "the soak emitted no window slides at all");
+    println!(
+        "soak: {} slides across {} polls, spilled={} reloaded={}",
+        snap.window_slides, snap.window_polls, snap.sessions_spilled, snap.sessions_reloaded
+    );
+
+    if !check {
+        // The SLO gate the latency histograms exist for: p99 of the two
+        // hot-path kinds stays under 20 ms even through reload churn
+        // (log2 upper edges overestimate, so this is conservative).
+        let slo = Duration::from_millis(20);
+        for kind in [RequestKind::Feed, RequestKind::PollWindow] {
+            let p99 = coord.metrics().latency_of(kind).quantile(0.99);
+            anyhow::ensure!(
+                p99 <= slo,
+                "p99 {} latency {p99:?} breaches the {slo:?} SLO",
+                kind.label()
+            );
+        }
+    }
+
+    let json = soak_json(hw, sessions, check, &phases, &speedups, &memory);
+    std::fs::write("BENCH_soak.json", &json)?;
+    println!("\nwrote BENCH_soak.json");
+    if check {
+        // Structural smoke: the artifact parses and carries every
+        // section; the bitwise/memory/churn gates above are the real
+        // assertions.
+        let parsed = signax::substrate::json::Json::parse(&json)?;
+        for section in ["phases", "speedup", "memory"] {
+            let arr = parsed
+                .get(section)
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("BENCH_soak.json has no {section}[]"))?;
+            anyhow::ensure!(!arr.is_empty(), "BENCH_soak.json {section}[] is empty");
+        }
+        for phase in ["open", "storm", "drain"] {
+            anyhow::ensure!(
+                parsed.get("phases").and_then(|p| p.as_arr()).unwrap().iter().any(|p| {
+                    p.get("phase").and_then(|v| v.as_str()).is_some_and(|s| s == phase)
+                }),
+                "phase {phase} missing from BENCH_soak.json"
+            );
+        }
+        println!("check: all sections present, gates passed");
+    }
+    Ok(())
+}

@@ -12,7 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use signax::bench::sessions_json;
+use signax::bench::{sessions_json, ChunkSizes};
 use signax::coordinator::{Coordinator, CoordinatorConfig, Request, SessionId};
 use signax::substrate::benchlib::fmt_secs;
 use signax::substrate::pool::default_threads;
@@ -20,6 +20,10 @@ use signax::substrate::rng::Rng;
 
 const D: usize = 3;
 const DEPTH: usize = 4;
+/// Mean-ish feed size; actual sizes are ragged (heavy-tailed in
+/// `[FEED_POINTS/2, 2*FEED_POINTS]` via the shared seeded workload
+/// generator), like real streaming traffic. Deterministic per thread,
+/// so BENCH trajectories stay comparable across runs.
 const FEED_POINTS: usize = 64;
 const FEEDS_PER_THREAD: usize = 200;
 
@@ -63,10 +67,11 @@ fn main() -> anyhow::Result<()> {
                 let errors = &errors;
                 scope.spawn(move || {
                     let mut rng = Rng::new(0xFEED ^ k as u64);
+                    let sizes = ChunkSizes::new(FEED_POINTS / 2, FEED_POINTS * 2, 1.2);
                     for _ in 0..FEEDS_PER_THREAD {
-                        let points = rng.normal_vec(FEED_POINTS * D, 0.1).into();
-                        let req =
-                            Request::Feed { session: id, points, count: FEED_POINTS };
+                        let count = sizes.sample(&mut rng);
+                        let points = rng.normal_vec(count * D, 0.1).into();
+                        let req = Request::Feed { session: id, points, count };
                         if coord.call(req).is_err() {
                             errors.fetch_add(1, Ordering::Relaxed);
                         }

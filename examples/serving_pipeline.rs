@@ -8,6 +8,7 @@
 use std::time::Instant;
 
 use signax::coordinator::{Backend, Coordinator, CoordinatorConfig, Request};
+use signax::path::WindowSpec;
 use signax::substrate::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -116,5 +117,56 @@ fn main() -> anyhow::Result<()> {
         snap.sessions_opened, snap.session_updates, snap.open_sessions, snap.session_bytes
     );
     coord.call(Request::CloseStream { session: sid })?;
+
+    // Windowed feature extraction, server-maintained. Without windows, a
+    // client wanting sliding-window signatures re-queries overlapping
+    // intervals after every feed:
+    //
+    //     for k in delivered.. {            // the loop OpenWindow replaces
+    //         let i = k * stride;
+    //         coord.call(Request::QueryInterval { session, i, j: i + len - 1 })?;
+    //     }
+    //
+    // — re-sending O(window) worth of interval bookkeeping per slide and
+    // forcing the session to keep its whole history resident. With
+    // `OpenWindow`, the server advances the window family inside each
+    // feed (one O(1) stored-inverse Chen combination per slide — §5.5's
+    // trick), buffers the emitted rows, and `PollWindow` drains them in
+    // order; the rows are bitwise identical to the per-query loop above.
+    // Retention is O(window): the session truncates dead history behind
+    // the oldest live window, so a stream can run forever on a fixed
+    // byte budget.
+    let wspec = WindowSpec { len: 16, stride: 4, logsig: None };
+    let open = coord.call(Request::OpenWindow {
+        points: signax::data::random_path(&mut rng, 8, 2, 0.2).into(),
+        stream: 8,
+        d: 2,
+        depth: 3,
+        window: wspec,
+    })?;
+    let wid = open.session.expect("open returns a session id");
+    let mut slides = 0usize;
+    for _ in 0..4 {
+        coord.call(Request::Feed {
+            session: wid,
+            points: rng.normal_vec(16 * 2, 0.2).into(),
+            count: 16,
+        })?;
+        // Poll at any cadence — undelivered slides buffer server-side
+        // (and survive spill/restart; they are session state).
+        let polled = coord.call(Request::PollWindow { session: wid })?;
+        let dim = signax::ta::SigSpec::new(2, 3)?.sig_len();
+        slides += polled.values.len() / dim;
+    }
+    let snap = coord.metrics().snapshot();
+    println!(
+        "windowed session {wid:?}: {slides} slides of len={} stride={} delivered \
+         (window_slides={} window_polls={})",
+        wspec.len, wspec.stride, snap.window_slides, snap.window_polls
+    );
+    if !snap.render_latency().is_empty() {
+        println!("{}", snap.render_latency());
+    }
+    coord.call(Request::CloseStream { session: wid })?;
     Ok(())
 }

@@ -23,8 +23,10 @@
 //! cannot run print as dashes, exactly like esig's dashes in the paper.
 
 pub mod tables;
+pub mod workload;
 
 pub use tables::{
     backward_json, batch_json, dispatch_json, logsig_json, mono_dyn_crossover, persist_json,
-    run_table, sessions_json, table_ids, BenchCtx, Scale,
+    run_table, sessions_json, soak_json, table_ids, BenchCtx, Scale,
 };
+pub use workload::{ChunkSizes, Workload, Zipf};

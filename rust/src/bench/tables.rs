@@ -967,6 +967,67 @@ pub fn persist_json(hw_threads: usize, records: &[(&str, usize, f64, f64)]) -> S
     s
 }
 
+/// Render rolling-window soak records as `BENCH_soak.json`. Written by
+/// `benches/session_soak.rs` behind bitwise gates:
+///
+/// - `phases[]` of `(phase, events, wall_s, ops_per_s, p99_us)` — the
+///   open flood, the Zipf feed/poll storm (eviction/reload churn), and
+///   the drain, with the p99 taken from the per-kind latency histogram
+///   ([`crate::coordinator::MetricsSnapshot::render_latency`]'s data).
+/// - `speedup[]` of `(window_len, recompute_s, windowed_s)` — server-
+///   maintained sliding windows vs recompute-per-slide over the same
+///   stream; the acceptance point is >= 5x at `window_len >= 64` in the
+///   full run.
+/// - `memory[]` of `(history_points, windowed_bytes, unbounded_bytes)` —
+///   a window session's storage after `history_points` have flowed
+///   through vs an unbounded session holding them all: the windowed
+///   column must stay flat (O(window)) while the unbounded one grows
+///   (O(history)).
+#[allow(clippy::type_complexity)]
+pub fn soak_json(
+    hw_threads: usize,
+    sessions: usize,
+    check: bool,
+    phases: &[(&str, usize, f64, f64, f64)],
+    speedup: &[(usize, f64, f64)],
+    memory: &[(usize, usize, usize)],
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"session_soak\",\n");
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str(&format!("  \"sessions\": {sessions},\n"));
+    s.push_str(&format!("  \"check\": {check},\n"));
+    s.push_str("  \"phases\": [\n");
+    for (i, &(phase, events, wall, rate, p99)) in phases.iter().enumerate() {
+        let comma = if i + 1 == phases.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"phase\": \"{phase}\", \"events\": {events}, \"wall_s\": {wall:.9}, \
+             \"ops_per_s\": {rate:.3}, \"p99_us\": {p99:.3}}}{comma}\n"
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"speedup\": [\n");
+    for (i, &(len, recompute, windowed)) in speedup.iter().enumerate() {
+        let comma = if i + 1 == speedup.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"window_len\": {len}, \"recompute_s\": {recompute:.9}, \
+             \"windowed_s\": {windowed:.9}, \"speedup\": {:.3}}}{comma}\n",
+            recompute / windowed
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"memory\": [\n");
+    for (i, &(history, windowed, unbounded)) in memory.iter().enumerate() {
+        let comma = if i + 1 == memory.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"history_points\": {history}, \"windowed_bytes\": {windowed}, \
+             \"unbounded_bytes\": {unbounded}}}{comma}\n"
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Render adaptive-dispatch bench records as `BENCH_dispatch.json`:
 /// `points[]` of `(mode, phase, requests, wall_s, mean_latency_us,
 /// batches, dispatch_scalar, dispatch_lane_fused, feed_lane_batches)`

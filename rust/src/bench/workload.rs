@@ -1,0 +1,162 @@
+//! Seeded heavy-tail workload generation shared by the serving
+//! benchmarks (`session_soak`, `session_streaming`).
+//!
+//! The perf trajectory compares `BENCH_*.json` records across commits,
+//! so benchmark traffic must be reproducible bit-for-bit: everything
+//! here is a pure function of `(parameters, seed)` through
+//! [`crate::substrate::rng::Rng`], and the unit tests pin determinism.
+//!
+//! Real serving traffic is heavy-tailed twice over — a few hot sessions
+//! take most of the feeds (Zipf over sessions), and most feeds carry a
+//! handful of points while a minority are bursts (Zipf over chunk
+//! sizes). [`Workload`] composes both into one event stream.
+
+use crate::substrate::rng::Rng;
+
+/// Zipf(s) sampler over ranks `0..n` (rank 0 hottest): `P(k) ∝ (k+1)^-s`.
+/// Sampling is inverse-CDF over a precomputed table — O(log n) per draw.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf over an empty universe");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        // Rounding guard: `uniform() < 1.0` must always find a rank.
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw a rank in `0..n` (0 = hottest).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cdf.partition_point(|&c| c <= u)
+    }
+}
+
+/// Heavy-tailed feed sizes in `[floor, cap]`: mass concentrates at the
+/// floor, with a Zipf-weighted tail of bursts up to `cap`.
+pub struct ChunkSizes {
+    floor: usize,
+    tail: Zipf,
+}
+
+impl ChunkSizes {
+    /// `skew` is the Zipf exponent over the `cap - floor + 1` sizes;
+    /// larger means burstier (more mass at `floor`).
+    pub fn new(floor: usize, cap: usize, skew: f64) -> ChunkSizes {
+        assert!(floor >= 1 && cap >= floor, "need 1 <= floor <= cap");
+        ChunkSizes { floor, tail: Zipf::new(cap - floor + 1, skew) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        self.floor + self.tail.sample(rng)
+    }
+}
+
+/// One traffic event: feed `points` rows into session `session`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Session rank in `0..n_sessions` (0 = hottest).
+    pub session: usize,
+    /// Rows in this feed (ragged, heavy-tailed).
+    pub points: usize,
+}
+
+/// A seeded stream of [`Event`]s: Zipf-hot sessions fed ragged chunks.
+pub struct Workload {
+    sessions: Zipf,
+    chunks: ChunkSizes,
+    rng: Rng,
+}
+
+impl Workload {
+    /// `skew` shapes session popularity (1.1 is a typical serving tail);
+    /// chunk sizes run `[1, chunk_cap]` with their own fixed skew.
+    pub fn new(n_sessions: usize, skew: f64, chunk_cap: usize, seed: u64) -> Workload {
+        Workload {
+            sessions: Zipf::new(n_sessions, skew),
+            chunks: ChunkSizes::new(1, chunk_cap, 1.2),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn next_event(&mut self) -> Event {
+        Event {
+            session: self.sessions.sample(&mut self.rng),
+            points: self.chunks.sample(&mut self.rng),
+        }
+    }
+
+    /// The workload's own generator, for deriving point data in lockstep
+    /// with the event stream (keeps the whole trace one seed).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_deterministic_and_skewed() {
+        let z = Zipf::new(1000, 1.1);
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let draws_a: Vec<usize> = (0..2000).map(|_| z.sample(&mut a)).collect();
+        let draws_b: Vec<usize> = (0..2000).map(|_| z.sample(&mut b)).collect();
+        assert_eq!(draws_a, draws_b, "same seed must replay the same ranks");
+        assert!(draws_a.iter().all(|&k| k < 1000));
+        // Skew sanity: the hottest rank beats a cold one by a wide margin.
+        let hot = draws_a.iter().filter(|&&k| k == 0).count();
+        let cold = draws_a.iter().filter(|&&k| k == 900).count();
+        assert!(hot >= 20 && hot > 4 * cold, "hot={hot} cold={cold}");
+    }
+
+    #[test]
+    fn chunk_sizes_stay_in_bounds() {
+        let c = ChunkSizes::new(4, 64, 1.2);
+        let mut rng = Rng::new(11);
+        let mut seen_floor = false;
+        for _ in 0..5000 {
+            let s = c.sample(&mut rng);
+            assert!((4..=64).contains(&s), "chunk {s} out of [4, 64]");
+            seen_floor |= s == 4;
+        }
+        assert!(seen_floor, "heavy tail should mass at the floor");
+    }
+
+    #[test]
+    fn workload_trace_is_reproducible() {
+        // The BENCH trajectory contract: one seed, one trace — events
+        // AND the point data drawn from the workload's rng.
+        let mut a = Workload::new(500, 1.1, 32, 0x50AC);
+        let mut b = Workload::new(500, 1.1, 32, 0x50AC);
+        for _ in 0..1000 {
+            let ea = a.next_event();
+            assert_eq!(ea, b.next_event());
+            assert_eq!(
+                a.rng().normal_vec(ea.points, 0.3),
+                b.rng().normal_vec(ea.points, 0.3)
+            );
+        }
+        let mut c = Workload::new(500, 1.1, 32, 0x50AD);
+        let diverged = (0..100).any(|_| a.next_event() != c.next_event());
+        assert!(diverged, "different seeds must give different traces");
+    }
+}

@@ -1,7 +1,129 @@
-//! Coordinator metrics: lock-free counters, snapshotted for reporting.
+//! Coordinator metrics: lock-free counters and per-request-kind latency
+//! histograms, snapshotted for reporting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// The request kinds latency is tracked for, one histogram each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    Signature,
+    LogSignature,
+    SignatureGrad,
+    OpenStream,
+    Feed,
+    QueryInterval,
+    LogSigQueryInterval,
+    CloseStream,
+    OpenWindow,
+    PollWindow,
+}
+
+/// Number of [`RequestKind`] variants (histogram array length).
+pub const REQUEST_KINDS: usize = 10;
+
+impl RequestKind {
+    /// Every kind, in display order.
+    pub const ALL: [RequestKind; REQUEST_KINDS] = [
+        RequestKind::Signature,
+        RequestKind::LogSignature,
+        RequestKind::SignatureGrad,
+        RequestKind::OpenStream,
+        RequestKind::Feed,
+        RequestKind::QueryInterval,
+        RequestKind::LogSigQueryInterval,
+        RequestKind::CloseStream,
+        RequestKind::OpenWindow,
+        RequestKind::PollWindow,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestKind::Signature => "sig",
+            RequestKind::LogSignature => "logsig",
+            RequestKind::SignatureGrad => "siggrad",
+            RequestKind::OpenStream => "open",
+            RequestKind::Feed => "feed",
+            RequestKind::QueryInterval => "query",
+            RequestKind::LogSigQueryInterval => "logsig_query",
+            RequestKind::CloseStream => "close",
+            RequestKind::OpenWindow => "open_window",
+            RequestKind::PollWindow => "poll_window",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Buckets per latency histogram; bucket `b` counts observations with
+/// `floor(log2(ns)) == b`, so the range spans 1 ns to ~2.1 s (the last
+/// bucket absorbs everything slower).
+pub const LATENCY_BUCKETS: usize = 32;
+
+/// Lock-free log2-bucket latency histogram. Recording is one relaxed
+/// `fetch_add`, so it sits on the serving hot path without contending;
+/// quantiles are read off a [`LatencyBuckets`] snapshot.
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl LatencyHistogram {
+    fn bucket(ns: u64) -> usize {
+        // floor(log2(ns)), with 0 ns in bucket 0 and the tail clamped.
+        (63 - ns.max(1).leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    pub fn record(&self, dt: Duration) {
+        let ns = dt.as_nanos().min(u128::from(u64::MAX)) as u64;
+        self.buckets[LatencyHistogram::bucket(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencyBuckets {
+        LatencyBuckets {
+            counts: std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A point-in-time copy of one histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencyBuckets {
+    pub counts: [u64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyBuckets {
+    fn default() -> Self {
+        LatencyBuckets { counts: [0; LATENCY_BUCKETS] }
+    }
+}
+
+impl LatencyBuckets {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The quantile `q` (in `[0, 1]`) as the **upper edge** of the bucket
+    /// where the cumulative count crosses the rank — an at-most-2x
+    /// overestimate, the right bias for an SLO gate. `ZERO` when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total); // lint: non-row cast
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_nanos(1u64 << (b + 1).min(63));
+            }
+        }
+        unreachable!("cumulative count reaches total")
+    }
+}
 
 /// Shared counters. All methods are cheap and thread-safe.
 #[derive(Default)]
@@ -63,6 +185,15 @@ pub struct Metrics {
     /// Gauge: distinct request shapes currently in the planner's observed
     /// shape-mix window.
     pub shape_mix_shapes: AtomicU64,
+    /// Rolling-window sessions: `PollWindow` requests served.
+    pub window_polls: AtomicU64,
+    /// Rolling-window sessions: slides delivered across all polls (each
+    /// is one signature/logsignature row the server emitted via the
+    /// O(1) sliding update instead of a client recompute).
+    pub window_slides: AtomicU64,
+    /// Per-request-kind latency histograms, indexed by
+    /// [`RequestKind::index`].
+    pub latency: [LatencyHistogram; REQUEST_KINDS],
 }
 
 /// A point-in-time copy of the metrics.
@@ -94,11 +225,23 @@ pub struct MetricsSnapshot {
     pub dispatch_lane_fused: u64,
     pub feed_lane_batches: u64,
     pub shape_mix_shapes: u64,
+    pub window_polls: u64,
+    pub window_slides: u64,
+    pub latency: [LatencyBuckets; REQUEST_KINDS],
 }
 
 impl Metrics {
-    pub fn record_latency(&self, dt: Duration) {
-        self.latency_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+    /// Record one request's latency: into the global mean and into the
+    /// kind's own histogram.
+    pub fn record_latency(&self, kind: RequestKind, dt: Duration) {
+        self.latency_ns
+            .fetch_add(dt.as_nanos().min(u128::from(u64::MAX)) as u64, Ordering::Relaxed);
+        self.latency[kind.index()].record(dt);
+    }
+
+    /// The histogram for one request kind (benches read p99 off this).
+    pub fn latency_of(&self, kind: RequestKind) -> LatencyBuckets {
+        self.latency[kind.index()].snapshot()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -135,6 +278,9 @@ impl Metrics {
             dispatch_lane_fused: self.dispatch_lane_fused.load(Ordering::Relaxed),
             feed_lane_batches: self.feed_lane_batches.load(Ordering::Relaxed),
             shape_mix_shapes: self.shape_mix_shapes.load(Ordering::Relaxed),
+            window_polls: self.window_polls.load(Ordering::Relaxed),
+            window_slides: self.window_slides.load(Ordering::Relaxed),
+            latency: std::array::from_fn(|k| self.latency[k].snapshot()),
         }
     }
 
@@ -159,7 +305,7 @@ impl MetricsSnapshot {
             "requests={} (native={} xla={} stream={} logsig={}) batches={} rows={}/{} errors={} \
              batch_failures={} mean_latency={:?} sessions={} updates={} open={} \
              resident_bytes={} evicted={} expired={} spilled={} reloaded={} spilled_bytes={} \
-             wal_appends={}",
+             wal_appends={} window_polls={} window_slides={}",
             self.requests,
             self.native_requests,
             self.xla_requests,
@@ -181,7 +327,34 @@ impl MetricsSnapshot {
             self.sessions_reloaded,
             self.spilled_bytes,
             self.wal_appends,
+            self.window_polls,
+            self.window_slides,
         )
+    }
+
+    /// Per-kind latency quantiles — one `kind=p50/p90/p99` clause per
+    /// kind that served traffic (quantiles are log2-bucket upper edges).
+    /// Empty when nothing was recorded, so callers can skip the line.
+    pub fn render_latency(&self) -> String {
+        let mut parts: Vec<String> = vec![];
+        for kind in RequestKind::ALL {
+            let h = &self.latency[kind.index()];
+            if h.count() == 0 {
+                continue;
+            }
+            parts.push(format!(
+                "{}={:?}/{:?}/{:?}",
+                kind.label(),
+                h.quantile(0.50),
+                h.quantile(0.90),
+                h.quantile(0.99),
+            ));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("latency[p50/p90/p99 {}]", parts.join(" "))
+        }
     }
 
     /// The per-strategy dispatch summary — a separate line so callers
@@ -211,7 +384,7 @@ mod tests {
         m.requests.store(4, Ordering::Relaxed);
         m.real_rows.store(6, Ordering::Relaxed);
         m.padded_rows.store(8, Ordering::Relaxed);
-        m.record_latency(Duration::from_millis(8));
+        m.record_latency(RequestKind::Signature, Duration::from_millis(8));
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.mean_latency, Duration::from_millis(2));
@@ -268,6 +441,68 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.snapshot().mean_latency, Duration::ZERO);
         assert_eq!(m.padding_ratio(), 0.0);
+        // No traffic -> no latency line at all (callers skip printing it).
+        assert_eq!(m.snapshot().render_latency(), "");
+    }
+
+    #[test]
+    fn latency_buckets_are_log2() {
+        assert_eq!(LatencyHistogram::bucket(0), 0);
+        assert_eq!(LatencyHistogram::bucket(1), 0);
+        assert_eq!(LatencyHistogram::bucket(2), 1);
+        assert_eq!(LatencyHistogram::bucket(3), 1);
+        assert_eq!(LatencyHistogram::bucket(1024), 10);
+        assert_eq!(LatencyHistogram::bucket(1025), 10);
+        // The tail clamps instead of indexing out of range.
+        assert_eq!(LatencyHistogram::bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn latency_quantiles_read_bucket_upper_edges() {
+        let h = LatencyHistogram::default();
+        // 90 fast observations (~1 us) and 10 slow ones (~1 ms).
+        for _ in 0..90 {
+            h.record(Duration::from_nanos(1000)); // bucket 9, edge 1024
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_nanos(1_000_000)); // bucket 19
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.quantile(0.50), Duration::from_nanos(1 << 10));
+        assert_eq!(s.quantile(0.90), Duration::from_nanos(1 << 10));
+        // p99 lands in the slow bucket: upper edge 2^20 ns.
+        assert_eq!(s.quantile(0.99), Duration::from_nanos(1 << 20));
+        assert_eq!(s.quantile(1.0), Duration::from_nanos(1 << 20));
+    }
+
+    #[test]
+    fn per_kind_latency_renders_only_active_kinds() {
+        let m = Metrics::default();
+        m.record_latency(RequestKind::Feed, Duration::from_micros(3));
+        m.record_latency(RequestKind::Feed, Duration::from_micros(5));
+        m.record_latency(RequestKind::PollWindow, Duration::from_micros(1));
+        let s = m.snapshot();
+        assert_eq!(s.latency[RequestKind::Feed.index()].count(), 2);
+        let line = s.render_latency();
+        assert!(line.starts_with("latency[p50/p90/p99 "), "line: {line}");
+        assert!(line.contains("feed="), "line: {line}");
+        assert!(line.contains("poll_window="), "line: {line}");
+        // Kinds that served nothing stay out of the line entirely.
+        assert!(!line.contains("siggrad="), "line: {line}");
+    }
+
+    #[test]
+    fn window_counters_roundtrip_and_render() {
+        let m = Metrics::default();
+        m.window_polls.store(6, Ordering::Relaxed);
+        m.window_slides.store(42, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.window_polls, 6);
+        assert_eq!(s.window_slides, 42);
+        let line = s.render();
+        assert!(line.contains("window_polls=6"));
+        assert!(line.contains("window_slides=42"));
     }
 
     #[test]

@@ -45,8 +45,9 @@
 //! once, and scattered back to callers. Property tests assert padding never
 //! leaks between requests.
 //!
-//! Streaming requests (`OpenStream` / `Feed` / `QueryInterval` /
-//! `LogSigQueryInterval` / `CloseStream`) flow through the same
+//! Streaming requests (`OpenStream` / `OpenWindow` / `Feed` /
+//! `PollWindow` / `QueryInterval` / `LogSigQueryInterval` /
+//! `CloseStream`) flow through the same
 //! [`Coordinator::call`] front door — so latency and error metrics cover
 //! them — and are served by the [`SessionManager`], a sharded table of
 //! `Arc<Mutex<Path>>` sessions whose resident precomputed storage is
@@ -77,7 +78,7 @@ pub mod sharded;
 pub use batcher::{BatchBackend, BatchShape, Batcher};
 pub use feedlane::FeedLane;
 pub use flusher::{GroupBatcher, GroupExecutor};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{LatencyBuckets, Metrics, MetricsSnapshot, RequestKind};
 pub use router::{Backend, Coordinator, CoordinatorConfig, DispatchConfig, Request, Response};
 pub use session::{SessionConfig, SessionId, SessionManager};
 pub use sharded::ShardedCoordinator;

@@ -42,10 +42,11 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchBackend, BatchShape, Batcher};
 use super::feedlane::FeedLane;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, RequestKind};
 use super::rows::with_elem;
 use super::session::{SessionConfig, SessionId, SessionManager};
 use crate::exec::{ExecPlan, ExecPlanner, ShapeKey, WorkShape};
+use crate::path::WindowSpec;
 use crate::logsignature::{
     logsignature_batch_planned, logsignature_with, LogSigPlan, WordsPlanCache,
 };
@@ -104,6 +105,37 @@ pub enum Request {
     LogSigQueryInterval { session: SessionId, i: usize, j: usize },
     /// Close a session, releasing its precomputed storage.
     CloseStream { session: SessionId },
+    /// Open a **rolling-window session**: like `OpenStream`, plus the
+    /// server keeps `window`'s sliding signatures (or logsignatures, per
+    /// [`WindowSpec::logsig`]) up to date as feeds arrive — one O(1)
+    /// stored-inverse combination per slide — retaining only O(window)
+    /// points per session. The response carries the seed signature and
+    /// the new id; emitted slides buffer server-side until a
+    /// `PollWindow` drains them.
+    OpenWindow { points: Rows, stream: usize, d: usize, depth: usize, window: WindowSpec },
+    /// Drain a rolling-window session's undelivered slides. The response
+    /// packs them row-major in `values` (one row per slide, width
+    /// `sig_len` or the basis dimension) and sets
+    /// [`Response::window_slide`] to the first row's slide index.
+    PollWindow { session: SessionId },
+}
+
+impl Request {
+    /// The metrics kind this request files latency under.
+    pub fn kind(&self) -> RequestKind {
+        match self {
+            Request::Signature { .. } => RequestKind::Signature,
+            Request::LogSignature { .. } => RequestKind::LogSignature,
+            Request::SignatureGrad { .. } => RequestKind::SignatureGrad,
+            Request::OpenStream { .. } => RequestKind::OpenStream,
+            Request::Feed { .. } => RequestKind::Feed,
+            Request::QueryInterval { .. } => RequestKind::QueryInterval,
+            Request::LogSigQueryInterval { .. } => RequestKind::LogSigQueryInterval,
+            Request::CloseStream { .. } => RequestKind::CloseStream,
+            Request::OpenWindow { .. } => RequestKind::OpenWindow,
+            Request::PollWindow { .. } => RequestKind::PollWindow,
+        }
+    }
 }
 
 /// Which backend served a request.
@@ -127,6 +159,10 @@ pub struct Response {
     /// Set on streaming responses: the session the request addressed
     /// (`OpenStream` returns the freshly allocated id here).
     pub session: Option<SessionId>,
+    /// Set on `PollWindow` responses: the slide index of the first row in
+    /// `values` (row `r` is slide `window_slide + r`). `None` everywhere
+    /// else.
+    pub window_slide: Option<u64>,
 }
 
 /// Adaptive-dispatch knobs: how the coordinator's [`ExecPlanner`] turns
@@ -541,9 +577,12 @@ impl Coordinator {
     pub fn call(&self, req: Request) -> anyhow::Result<Response> {
         use std::sync::atomic::Ordering;
         let t0 = Instant::now();
+        let kind = req.kind();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let result = self.route(req);
-        self.metrics.record_latency(t0.elapsed());
+        // Into the global mean and this kind's log2 histogram (the
+        // serve CLIs print p50/p90/p99 per kind off the latter).
+        self.metrics.record_latency(kind, t0.elapsed());
         if result.is_err() {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
         }
@@ -642,6 +681,7 @@ impl Coordinator {
                         values,
                         backend: Backend::Xla,
                         session: None,
+                        window_slide: None,
                     });
                 }
             }
@@ -751,7 +791,9 @@ impl Coordinator {
             | Request::Feed { .. }
             | Request::QueryInterval { .. }
             | Request::LogSigQueryInterval { .. }
-            | Request::CloseStream { .. } => unreachable!("handled by route_stream"),
+            | Request::CloseStream { .. }
+            | Request::OpenWindow { .. }
+            | Request::PollWindow { .. } => unreachable!("handled by route_stream"),
         };
         self.metrics.native_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(Response {
@@ -759,6 +801,7 @@ impl Coordinator {
             values,
             backend: Backend::Native,
             session: None,
+            window_slide: None,
         })
     }
 
@@ -775,14 +818,16 @@ impl Coordinator {
             | Request::Feed { .. }
             | Request::QueryInterval { .. }
             | Request::LogSigQueryInterval { .. }
-            | Request::CloseStream { .. } => {}
+            | Request::CloseStream { .. }
+            | Request::OpenWindow { .. }
+            | Request::PollWindow { .. } => {}
         }
         // Counted before serving, so failed streaming requests are still
         // attributed to the streaming surface.
         self.metrics
             .stream_requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let (values, session) = match req {
+        let (values, session, window_slide) = match req {
             Request::OpenStream { points, stream, d, depth } => {
                 // The seed rows' element width becomes the session's
                 // recorded dtype: every later feed must match it, and
@@ -793,7 +838,29 @@ impl Coordinator {
                 // eviction after the insert must not turn a successful
                 // open into an "unknown session" error.
                 let (id, sig) = self.sessions.open_with_signature(&spec, points, *stream)?;
-                (sig, Some(id))
+                (sig, Some(id), None)
+            }
+            Request::OpenWindow { points, stream, d, depth, window } => {
+                let spec = SigSpec::with_dtype(*d, *depth, points.precision())?;
+                anyhow::ensure!(points.len() == *stream * *d, "bad point buffer");
+                if window.logsig.is_some() {
+                    self.metrics
+                        .logsig_requests
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                // A windowed session is a future feeder: record its feed
+                // shape into the planner's observed mix now, so the feed
+                // lane's capacity decisions see windowed traffic coming
+                // (same key the later feeds will carry).
+                self.planner
+                    .record_shape(ShapeKey::feed(*d, *depth).with_dtype(spec.dtype()));
+                self.publish_shape_mix();
+                let (id, sig) = self.sessions.open_window(&spec, points, *stream, *window)?;
+                (sig, Some(id), None)
+            }
+            Request::PollWindow { session } => {
+                let (first, rows) = self.sessions.poll_window(*session)?;
+                (rows, Some(*session), Some(first))
             }
             Request::Feed { session, points, count } => {
                 let sig = if let Some(lane) = &self.feed_lane {
@@ -826,10 +893,10 @@ impl Coordinator {
                 } else {
                     self.sessions.feed(*session, points, *count)?
                 };
-                (sig, Some(*session))
+                (sig, Some(*session), None)
             }
             Request::QueryInterval { session, i, j } => {
-                (self.sessions.query(*session, *i, *j)?, Some(*session))
+                (self.sessions.query(*session, *i, *j)?, Some(*session), None)
             }
             Request::LogSigQueryInterval { session, i, j } => {
                 self.metrics
@@ -840,7 +907,7 @@ impl Coordinator {
                 let out = self
                     .sessions
                     .logsig_query_with(*session, *i, *j, |spec| self.plan(spec.d(), spec.depth()))?;
-                (out, Some(*session))
+                (out, Some(*session), None)
             }
             Request::CloseStream { session } => {
                 // Resolve the spec before the close so the planner can
@@ -860,7 +927,7 @@ impl Coordinator {
                         session.0,
                     );
                 }
-                (empty, Some(*session))
+                (empty, Some(*session), None)
             }
             Request::Signature { .. }
             | Request::LogSignature { .. }
@@ -873,6 +940,7 @@ impl Coordinator {
             values,
             backend: Backend::Native,
             session,
+            window_slide,
         }))
     }
 
@@ -1741,5 +1809,124 @@ mod tests {
         let closed = c.call(Request::CloseStream { session: sid }).unwrap();
         assert_eq!(closed.precision, Precision::F64);
         assert!(closed.values.is_empty());
+    }
+
+    #[test]
+    fn rolling_window_matches_per_query_through_the_coordinator() {
+        // The tentpole contract at the request surface: every slide a
+        // windowed session emits is bitwise the per-query answer a plain
+        // (untruncated) twin session gives over the same interval.
+        let c = native();
+        let mut rng = Rng::new(33);
+        let total = 23usize;
+        let all = rng.normal_vec(total * 2, 0.3);
+        let wspec = WindowSpec { len: 6, stride: 2, logsig: None };
+        let seed: Rows = all[..4 * 2].to_vec().into();
+        let open = c
+            .call(Request::OpenWindow {
+                points: seed.clone(),
+                stream: 4,
+                d: 2,
+                depth: 3,
+                window: wspec,
+            })
+            .unwrap();
+        let sid = open.session.unwrap();
+        // The open response is the seed signature, exactly like OpenStream.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let oracle = crate::path::Path::<f32>::new(&spec, &all[..4 * 2], 4).unwrap();
+        assert_eq!(open.values, oracle.signature());
+        let twin = c
+            .call(Request::OpenStream { points: seed, stream: 4, d: 2, depth: 3 })
+            .unwrap()
+            .session
+            .unwrap();
+        let dim = spec.sig_len();
+        let mut slides: Vec<(u64, Vec<f32>)> = vec![];
+        let mut fed = 4usize;
+        for &cnt in &[3usize, 1, 4, 2, 5, 4] {
+            let chunk: Rows = all[fed * 2..(fed + cnt) * 2].to_vec().into();
+            c.call(Request::Feed { session: sid, points: chunk.clone(), count: cnt }).unwrap();
+            c.call(Request::Feed { session: twin, points: chunk, count: cnt }).unwrap();
+            fed += cnt;
+            let r = c.call(Request::PollWindow { session: sid }).unwrap();
+            let mut k = r.window_slide.unwrap();
+            for row in r.values.as_f32().unwrap().chunks(dim) {
+                slides.push((k, row.to_vec()));
+                k += 1;
+            }
+        }
+        assert_eq!(fed, total);
+        // Every complete window emitted exactly once, in order, across
+        // the ragged polls.
+        assert_eq!(slides.len(), (total - wspec.len) / wspec.stride + 1);
+        for (idx, (k, _)) in slides.iter().enumerate() {
+            assert_eq!(*k, idx as u64, "slides arrive in order without gaps");
+        }
+        for (k, row) in &slides {
+            let i = *k as usize * wspec.stride;
+            let j = i + wspec.len - 1;
+            let want = c.call(Request::QueryInterval { session: twin, i, j }).unwrap();
+            assert_eq!(&row[..], want.values.as_f32().unwrap(), "slide {k} != [{i}, {j}]");
+        }
+        // The windowed session still reports its absolute stream length,
+        // and an empty poll names the next future slide.
+        assert_eq!(c.sessions().session_len(sid).unwrap(), total);
+        let empty = c.call(Request::PollWindow { session: sid }).unwrap();
+        assert!(empty.values.is_empty());
+        assert_eq!(empty.window_slide, Some(slides.len() as u64));
+    }
+
+    #[test]
+    fn logsig_windows_and_window_error_paths() {
+        let c = native();
+        let mut rng = Rng::new(34);
+        let all = rng.normal_vec(12 * 2, 0.3);
+        let wspec = WindowSpec { len: 5, stride: 3, logsig: Some(LogSigBasis::Words) };
+        // A seed of 12 points already completes slides 0..=2 (right ends
+        // 4, 7, 10): open-then-poll sees them without any feed.
+        let open = c
+            .call(Request::OpenWindow {
+                points: all.clone().into(),
+                stream: 12,
+                d: 2,
+                depth: 3,
+                window: wspec,
+            })
+            .unwrap();
+        let sid = open.session.unwrap();
+        let twin = c
+            .call(Request::OpenStream { points: all.into(), stream: 12, d: 2, depth: 3 })
+            .unwrap()
+            .session
+            .unwrap();
+        let r = c.call(Request::PollWindow { session: sid }).unwrap();
+        assert_eq!(r.window_slide, Some(0));
+        let dim = crate::words::witt_dimension(2, 3);
+        assert_eq!(r.values.len(), 3 * dim);
+        let spec = SigSpec::new(2, 3).unwrap();
+        let plan = LogSigPlan::new(&spec, LogSigBasis::Words).unwrap();
+        for (k, row) in r.values.as_f32().unwrap().chunks(dim).enumerate() {
+            let i = k * wspec.stride;
+            let want = c.sessions().logsig_query(twin, i, i + wspec.len - 1, &plan).unwrap();
+            assert_eq!(row, want.as_f32().unwrap(), "logsig slide {k}");
+        }
+        // Polling a plain stream is a clean error, as is a malformed spec.
+        assert!(c.call(Request::PollWindow { session: twin }).is_err());
+        assert!(c
+            .call(Request::OpenWindow {
+                points: vec![0.0f32; 2 * 2].into(),
+                stream: 2,
+                d: 2,
+                depth: 3,
+                window: WindowSpec { len: 1, stride: 1, logsig: None },
+            })
+            .is_err());
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.window_polls, 1);
+        assert_eq!(snap.window_slides, 3);
+        // The per-kind latency histograms saw the window traffic.
+        assert!(snap.render_latency().contains("poll_window="), "{}", snap.render_latency());
+        assert!(snap.render_latency().contains("open_window="), "{}", snap.render_latency());
     }
 }

@@ -52,6 +52,19 @@
 //!   On construction the manager replays that log and recovers every
 //!   session bitwise (`Path` extension is exactly resumable), so a
 //!   restarted server answers interval queries identically.
+//!
+//! Rolling-window sessions ([`SessionManager::open_window`] /
+//! [`SessionManager::poll_window`]): a session opened with a
+//! [`WindowSpec`] carries a [`RollingWindow`] alongside its `Path`. Every
+//! feed advances it — one O(1) `I_i ⊠ S_j` per newly-complete slide —
+//! and the window's retention policy truncates the dead prefix through
+//! [`Path::truncate_front`], so a windowed session holds O(window)
+//! bytes no matter how long its stream runs. Emitted slides buffer in
+//! the window's `pending` rows (counted against the byte budget,
+//! spilled and WAL-recovered with the rest of the state, since their
+//! source points may already be truncated) until a poll drains them;
+//! polls are themselves WAL-logged so a warm restart re-delivers
+//! exactly the undelivered suffix.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -60,8 +73,11 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::logsignature::LogSigPlan;
-use crate::path::Path;
-use crate::state::{FeedLog, SessionStore, SpillConfig, WalRecord};
+use crate::path::{Path, RollingWindow, WindowSpec};
+use crate::state::{
+    deserialize_session, serialize_session_into, session_serialized_len, FeedLog, SessionStore,
+    SpillConfig, WalRecord,
+};
 use crate::ta::{Elem, Precision, Rows, SigSpec};
 
 /// Opaque session handle.
@@ -125,20 +141,86 @@ enum Gone {
     Evicted,
 }
 
-/// A resident session's `Path` at its native element width. Serving-facing
+/// A session's monomorphic state: the `Path` plus, for sessions opened
+/// with [`SessionManager::open_window`], the rolling-window emission
+/// state riding on it.
+struct TypedSession<E: Elem> {
+    path: Path<E>,
+    window: Option<RollingWindow<E>>,
+}
+
+impl<E: Elem> TypedSession<E> {
+    fn build(
+        spec: &SigSpec,
+        points: &[E],
+        stream: usize,
+        window: Option<WindowSpec>,
+    ) -> anyhow::Result<TypedSession<E>> {
+        let mut s = TypedSession {
+            path: Path::new(spec, points, stream)?,
+            window: match window {
+                Some(w) => Some(RollingWindow::new(spec, w)?),
+                None => None,
+            },
+        };
+        // A seed path of >= len points already completes some windows;
+        // emit them now so open-then-poll sees them.
+        s.advance_window()?;
+        Ok(s)
+    }
+
+    /// Emit newly-complete slides and apply retention; no-op for plain
+    /// streaming sessions.
+    fn advance_window(&mut self) -> anyhow::Result<()> {
+        if let Some(w) = &mut self.window {
+            w.advance(&mut self.path)?;
+        }
+        Ok(())
+    }
+
+    /// Drain undelivered slides: `(first, delivered-up-to, rows)`.
+    fn poll(&mut self) -> anyhow::Result<(u64, u64, Vec<E>)> {
+        let w = self.window.as_mut().ok_or_else(|| {
+            anyhow::anyhow!("session has no rolling window (opened as a plain stream)")
+        })?;
+        let (first, rows) = w.poll();
+        let upto = first + (rows.len() / w.out_dim()) as u64;
+        Ok((first, upto, rows))
+    }
+
+    /// Path buffers plus buffered undelivered window rows — pending
+    /// output is state (its source points may be truncated), so it
+    /// counts against the byte budget like everything else resident.
+    fn storage_bytes(&self) -> usize {
+        self.path.storage_bytes() + self.window.as_ref().map_or(0, |w| w.pending_bytes())
+    }
+}
+
+/// A resident session's state at its native element width. Serving-facing
 /// accessors speak typed [`Rows`]; the two variants are the only place the
 /// session layer distinguishes f32 from f64 state, and every arm is
-/// cast-free — each delegates to the `Elem`-generic `Path` methods at the
-/// session's own precision.
+/// cast-free — each delegates to the `Elem`-generic `Path` /
+/// `RollingWindow` methods at the session's own precision.
 enum ResidentPath {
-    F32(Path<f32>),
-    F64(Path<f64>),
+    F32(TypedSession<f32>),
+    F64(TypedSession<f64>),
 }
 
 impl ResidentPath {
     /// Build a path from typed seed rows; the rows' precision must match
     /// the spec's dtype (a mismatch is an error, never a cast).
     fn new(spec: &SigSpec, points: &Rows, stream: usize) -> anyhow::Result<ResidentPath> {
+        ResidentPath::new_with_window(spec, points, stream, None)
+    }
+
+    /// Build a session, optionally with rolling-window state advanced
+    /// over the seed path.
+    fn new_with_window(
+        spec: &SigSpec,
+        points: &Rows,
+        stream: usize,
+        window: Option<WindowSpec>,
+    ) -> anyhow::Result<ResidentPath> {
         anyhow::ensure!(
             points.precision() == spec.dtype(),
             "open rows are {} but the spec's dtype is {}",
@@ -146,83 +228,139 @@ impl ResidentPath {
             spec.dtype().label()
         );
         Ok(match points {
-            Rows::F32(p) => ResidentPath::F32(Path::new(spec, p, stream)?),
-            Rows::F64(p) => ResidentPath::F64(Path::new(spec, p, stream)?),
+            Rows::F32(p) => ResidentPath::F32(TypedSession::build(spec, p, stream, window)?),
+            Rows::F64(p) => ResidentPath::F64(TypedSession::build(spec, p, stream, window)?),
         })
     }
 
-    /// Reload from a spill blob. The dtype comes from the slot's cold
-    /// metadata (spilled slots keep their spec in memory), so the codec is
-    /// asked for exactly the width that was serialized.
+    /// Reload from a spill blob (path plus any window section). The dtype
+    /// comes from the slot's cold metadata (spilled slots keep their spec
+    /// in memory), so the codec is asked for exactly the width that was
+    /// serialized.
     fn deserialize(dtype: Precision, blob: &[u8]) -> anyhow::Result<ResidentPath> {
         Ok(match dtype {
-            Precision::F32 => ResidentPath::F32(Path::deserialize(blob)?),
-            Precision::F64 => ResidentPath::F64(Path::deserialize(blob)?),
+            Precision::F32 => {
+                let (path, window) = deserialize_session(blob)?;
+                ResidentPath::F32(TypedSession { path, window })
+            }
+            Precision::F64 => {
+                let (path, window) = deserialize_session(blob)?;
+                ResidentPath::F64(TypedSession { path, window })
+            }
         })
     }
 
     fn spec(&self) -> &SigSpec {
         match self {
-            ResidentPath::F32(p) => p.spec(),
-            ResidentPath::F64(p) => p.spec(),
+            ResidentPath::F32(s) => s.path.spec(),
+            ResidentPath::F64(s) => s.path.spec(),
         }
     }
 
     fn len(&self) -> usize {
         match self {
-            ResidentPath::F32(p) => p.len(),
-            ResidentPath::F64(p) => p.len(),
+            ResidentPath::F32(s) => s.path.len(),
+            ResidentPath::F64(s) => s.path.len(),
         }
     }
 
     fn storage_bytes(&self) -> usize {
         match self {
-            ResidentPath::F32(p) => p.storage_bytes(),
-            ResidentPath::F64(p) => p.storage_bytes(),
+            ResidentPath::F32(s) => s.storage_bytes(),
+            ResidentPath::F64(s) => s.storage_bytes(),
         }
     }
 
     fn serialized_len(&self) -> usize {
         match self {
-            ResidentPath::F32(p) => p.serialized_len(),
-            ResidentPath::F64(p) => p.serialized_len(),
+            ResidentPath::F32(s) => session_serialized_len(&s.path, s.window.as_ref()),
+            ResidentPath::F64(s) => session_serialized_len(&s.path, s.window.as_ref()),
         }
     }
 
     fn serialize_into(&self, out: &mut Vec<u8>) {
         match self {
-            ResidentPath::F32(p) => p.serialize_into(out),
-            ResidentPath::F64(p) => p.serialize_into(out),
+            ResidentPath::F32(s) => serialize_session_into(&s.path, s.window.as_ref(), out),
+            ResidentPath::F64(s) => serialize_session_into(&s.path, s.window.as_ref(), out),
         }
     }
 
-    /// Extend with typed rows; wrong-precision rows error via the
-    /// cast-free row hooks (`Elem::rows_as_slice`).
+    /// Extend with typed rows, then advance any rolling window. Scalar
+    /// feeds and WAL replay both come through here, so a warm restart
+    /// emits (and truncates) exactly what the live process did.
     fn update(&mut self, points: &Rows, count: usize) -> anyhow::Result<()> {
         match self {
-            ResidentPath::F32(p) => p.update(f32::rows_as_slice(points)?, count),
-            ResidentPath::F64(p) => p.update(f64::rows_as_slice(points)?, count),
+            ResidentPath::F32(s) => {
+                s.path.update(f32::rows_as_slice(points)?, count)?;
+                s.advance_window()
+            }
+            ResidentPath::F64(s) => {
+                s.path.update(f64::rows_as_slice(points)?, count)?;
+                s.advance_window()
+            }
+        }
+    }
+
+    /// Advance any rolling window after an out-of-band path extension
+    /// (the lane-fused sweep extends via `Path::update_batch`, which
+    /// does not know about windows).
+    fn advance_window(&mut self) -> anyhow::Result<()> {
+        match self {
+            ResidentPath::F32(s) => s.advance_window(),
+            ResidentPath::F64(s) => s.advance_window(),
+        }
+    }
+
+    /// Drain undelivered window slides: `(first slide index,
+    /// delivered-up-to, rows)`. Errors for sessions opened without a
+    /// window.
+    fn poll(&mut self) -> anyhow::Result<(u64, u64, Rows)> {
+        Ok(match self {
+            ResidentPath::F32(s) => {
+                let (first, upto, rows) = s.poll()?;
+                (first, upto, rows.into())
+            }
+            ResidentPath::F64(s) => {
+                let (first, upto, rows) = s.poll()?;
+                (first, upto, rows.into())
+            }
+        })
+    }
+
+    /// Replay a logged poll (drop rows a pre-crash client already got).
+    fn mark_delivered(&mut self, upto: u64) {
+        match self {
+            ResidentPath::F32(s) => {
+                if let Some(w) = &mut s.window {
+                    w.mark_delivered(upto);
+                }
+            }
+            ResidentPath::F64(s) => {
+                if let Some(w) = &mut s.window {
+                    w.mark_delivered(upto);
+                }
+            }
         }
     }
 
     fn signature(&self) -> Rows {
         match self {
-            ResidentPath::F32(p) => p.signature().into(),
-            ResidentPath::F64(p) => p.signature().into(),
+            ResidentPath::F32(s) => s.path.signature().into(),
+            ResidentPath::F64(s) => s.path.signature().into(),
         }
     }
 
     fn query(&self, i: usize, j: usize) -> anyhow::Result<Rows> {
         match self {
-            ResidentPath::F32(p) => Ok(p.query(i, j)?.into()),
-            ResidentPath::F64(p) => Ok(p.query(i, j)?.into()),
+            ResidentPath::F32(s) => Ok(s.path.query(i, j)?.into()),
+            ResidentPath::F64(s) => Ok(s.path.query(i, j)?.into()),
         }
     }
 
     fn logsig_query(&self, i: usize, j: usize, plan: &LogSigPlan) -> anyhow::Result<Rows> {
         match self {
-            ResidentPath::F32(p) => Ok(p.logsig_query(i, j, plan)?.into()),
-            ResidentPath::F64(p) => Ok(p.logsig_query(i, j, plan)?.into()),
+            ResidentPath::F32(s) => Ok(s.path.logsig_query(i, j, plan)?.into()),
+            ResidentPath::F64(s) => Ok(s.path.logsig_query(i, j, plan)?.into()),
         }
     }
 }
@@ -237,7 +375,7 @@ trait TypedPath: Elem {
 impl TypedPath for f32 {
     fn path_mut(rp: &mut ResidentPath) -> &mut Path<f32> {
         match rp {
-            ResidentPath::F32(p) => p,
+            ResidentPath::F32(s) => &mut s.path,
             ResidentPath::F64(_) => unreachable!("run grouped by dtype"),
         }
     }
@@ -246,7 +384,7 @@ impl TypedPath for f32 {
 impl TypedPath for f64 {
     fn path_mut(rp: &mut ResidentPath) -> &mut Path<f64> {
         match rp {
-            ResidentPath::F64(p) => p,
+            ResidentPath::F64(s) => &mut s.path,
             ResidentPath::F32(_) => unreachable!("run grouped by dtype"),
         }
     }
@@ -501,6 +639,20 @@ impl Inner {
         self.tombstone_shard(id).lock().unwrap().insert(id, gone);
     }
 
+    /// Reconcile a session's accounted bytes with its current storage.
+    /// Feeds grow the path, but window retention truncates the dead
+    /// prefix and polls drain pending rows — the delta goes either way,
+    /// so this must never assume growth (an unsigned subtract would
+    /// wrap). Called under the slot lock, like all byte accounting.
+    fn account_bytes(&self, sess: &Session, new_bytes: usize) {
+        let old_bytes = sess.bytes.swap(new_bytes, Ordering::Relaxed);
+        if new_bytes >= old_bytes {
+            self.resident.fetch_add(new_bytes - old_bytes, Ordering::Relaxed);
+        } else {
+            self.resident.fetch_sub(old_bytes - new_bytes, Ordering::Relaxed);
+        }
+    }
+
     fn publish_gauges(&self) {
         self.metrics
             .session_bytes
@@ -524,8 +676,15 @@ impl Inner {
     /// outer loop re-scans only when this pass evicted something yet the
     /// table is still over budget (so it terminates: each pass shrinks
     /// the table or ends the loop).
+    ///
+    /// Hysteresis: once over budget, eviction continues down to
+    /// `budget - budget/8`, so the next budget/8 bytes of growth don't
+    /// trigger a scan at all. Without the slack, a table sitting exactly
+    /// at budget rescans all N sessions on every feed — O(N) per
+    /// operation, which the million-session soak turns into a stall.
     fn enforce_budget(&self, exclude: &[u64]) {
         if let Some(budget) = self.cfg.budget_bytes {
+            let floor = budget - budget / 8;
             while self.resident.load(Ordering::Relaxed) > budget {
                 // Only resident sessions hold resident bytes; spilled and
                 // defunct slots are filtered by the lock-free state mirror.
@@ -543,7 +702,7 @@ impl Inner {
                 cands.sort_unstable();
                 let mut evicted_any = false;
                 for &(_, id) in &cands {
-                    if self.resident.load(Ordering::Relaxed) <= budget {
+                    if self.resident.load(Ordering::Relaxed) <= floor {
                         break;
                     }
                     let Some(sess) = self.shard(id).lock().unwrap().get(&id).cloned() else {
@@ -664,9 +823,37 @@ impl SessionManager {
                         )?;
                         recovered.insert(id, ResidentPath::new(&spec, &points, count as usize)?);
                     }
+                    WalRecord::OpenWindow { id, d, depth, count, points, window } => {
+                        max_seen = max_seen.max(id);
+                        let spec = SigSpec::with_dtype(
+                            d as usize,
+                            depth as usize,
+                            points.precision(),
+                        )?;
+                        recovered.insert(
+                            id,
+                            ResidentPath::new_with_window(
+                                &spec,
+                                &points,
+                                count as usize,
+                                Some(window),
+                            )?,
+                        );
+                    }
                     WalRecord::Feed { id, count, points } => {
+                        // `update` re-advances any rolling window, so the
+                        // recovered pending buffer matches what the
+                        // pre-crash process had emitted.
                         if let Some(p) = recovered.get_mut(&id) {
                             p.update(&points, count as usize)?;
+                        }
+                    }
+                    WalRecord::Poll { id, upto } => {
+                        // Drop rows the pre-crash client already received;
+                        // what remains pending is exactly the undelivered
+                        // suffix.
+                        if let Some(p) = recovered.get_mut(&id) {
+                            p.mark_delivered(upto);
                         }
                     }
                     WalRecord::Close { id } => {
@@ -774,19 +961,56 @@ impl SessionManager {
         stream: usize,
     ) -> anyhow::Result<(SessionId, Rows)> {
         let path = ResidentPath::new(spec, points, stream)?;
+        self.install(path, |id| WalRecord::Open {
+            id,
+            d: spec.d() as u32,
+            depth: spec.depth() as u32,
+            count: stream as u32,
+            points: points.clone(),
+        })
+    }
+
+    /// Open a **rolling-window session**: the server keeps `window`'s
+    /// sliding signatures (or logsignatures, per
+    /// [`WindowSpec::logsig`]) up to date as points arrive — one O(1)
+    /// `I_i ⊠ S_j` per slide — and retains only O(window) points per
+    /// session, however long the stream runs. Windows already complete
+    /// in the seed path are emitted immediately. Emitted slides buffer
+    /// until [`SessionManager::poll_window`] drains them. Returns the
+    /// seed path's whole-stream signature, like
+    /// [`SessionManager::open_with_signature`].
+    pub fn open_window(
+        &self,
+        spec: &SigSpec,
+        points: &Rows,
+        stream: usize,
+        window: WindowSpec,
+    ) -> anyhow::Result<(SessionId, Rows)> {
+        let path = ResidentPath::new_with_window(spec, points, stream, Some(window))?;
+        self.install(path, |id| WalRecord::OpenWindow {
+            id,
+            d: spec.d() as u32,
+            depth: spec.depth() as u32,
+            count: stream as u32,
+            points: points.clone(),
+            window,
+        })
+    }
+
+    /// Shared tail of the open paths: issue an id, log the open record,
+    /// and publish the session.
+    fn install(
+        &self,
+        path: ResidentPath,
+        record: impl FnOnce(u64) -> WalRecord,
+    ) -> anyhow::Result<(SessionId, Rows)> {
         let bytes = path.storage_bytes();
         let sig = path.signature();
         let stride = self.inner.cfg.id_stride.max(1);
         let id = SessionId(self.next_id.fetch_add(stride, Ordering::Relaxed));
         // Log before the session becomes visible: no feed for this id can
         // be accepted (let alone logged) until open returns it.
-        self.inner.log_wal(&WalRecord::Open {
-            id: id.0,
-            d: spec.d() as u32,
-            depth: spec.depth() as u32,
-            count: stream as u32,
-            points: points.clone(),
-        });
+        self.inner.log_wal(&record(id.0));
         let sess = Arc::new(Session {
             slot: Mutex::new(Slot::Resident(path)),
             state: AtomicU8::new(STATE_RESIDENT),
@@ -817,10 +1041,10 @@ impl SessionManager {
         // that raced an eviction proceeds instead of erroring.
         let (sig, _) = self.inner.with_resident(id, &sess, |path| {
             path.update(points, count)?;
-            // `update` only appends, so storage can only have grown.
-            let new_bytes = path.storage_bytes();
-            let old_bytes = sess.bytes.swap(new_bytes, Ordering::Relaxed);
-            self.inner.resident.fetch_add(new_bytes - old_bytes, Ordering::Relaxed);
+            // `update` grew the path, but a rolling window may have both
+            // buffered new slides and truncated the dead prefix — so the
+            // net storage delta can have either sign.
+            self.inner.account_bytes(&sess, path.storage_bytes());
             self.inner.log_wal(&WalRecord::Feed {
                 id: id.0,
                 count: count as u32,
@@ -833,6 +1057,36 @@ impl SessionManager {
         self.inner.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
         self.inner.enforce_budget(&[id.0]);
         Ok(sig)
+    }
+
+    /// Drain a rolling-window session's undelivered slides: `(first,
+    /// rows)`, where row `r` is slide `first + r` (covering points
+    /// `[(first + r) * stride, (first + r) * stride + len - 1]`). Empty
+    /// rows, with `first` naming the next future slide, when nothing is
+    /// pending. The drain is WAL-logged, so a warm restart re-delivers
+    /// exactly the rows no poll returned. Errors for sessions opened
+    /// without a window.
+    pub fn poll_window(&self, id: SessionId) -> anyhow::Result<(u64, Rows)> {
+        let sess = self.inner.get(id)?;
+        self.inner.touch(&sess);
+        let ((first, upto, rows), reloaded) = self.inner.with_resident(id, &sess, |path| {
+            let (first, upto, rows) = path.poll()?;
+            // The drained rows leave the pending buffer: accounted
+            // storage shrinks. Log under the slot lock (apply order),
+            // and only when something was actually delivered.
+            self.inner.account_bytes(&sess, path.storage_bytes());
+            if upto > first {
+                self.inner.log_wal(&WalRecord::Poll { id: id.0, upto });
+            }
+            Ok((first, upto, rows))
+        })?;
+        self.inner.touch(&sess);
+        self.inner.metrics.window_polls.fetch_add(1, Ordering::Relaxed);
+        self.inner.metrics.window_slides.fetch_add(upto - first, Ordering::Relaxed);
+        if reloaded {
+            self.inner.enforce_budget(&[id.0]);
+        }
+        Ok((first, rows))
     }
 
     /// Feed several sessions in one call, lane-fusing same-spec groups —
@@ -993,16 +1247,19 @@ impl SessionManager {
                     }
                     for (idx, guard) in run.iter_mut() {
                         // Accounting under this slot's lock, exactly like
-                        // a scalar feed: `update` only appends, so storage
-                        // can only have grown.
+                        // a scalar feed.
                         let (_, sess) = resolved
                             .iter()
                             .find(|(ri, _)| *ri == *idx)
                             .expect("locked lane was resolved");
                         let path = resident_path(&mut **guard);
-                        let new_bytes = path.storage_bytes();
-                        let old_bytes = sess.bytes.swap(new_bytes, Ordering::Relaxed);
-                        self.inner.resident.fetch_add(new_bytes - old_bytes, Ordering::Relaxed);
+                        // `update_batch` extended the lanes but knows
+                        // nothing of windows; advance here so a batched
+                        // feed emits exactly what a scalar feed of the
+                        // same points would (bitwise — same `Path`
+                        // queries in the same order per session).
+                        let advanced = path.advance_window();
+                        self.inner.account_bytes(sess, path.storage_bytes());
                         self.inner.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
                         // Log while the slot lock is held, like a scalar
                         // feed, so WAL order matches apply order per id.
@@ -1012,7 +1269,10 @@ impl SessionManager {
                             count: *count as u32,
                             points: points.clone(),
                         });
-                        results[*idx] = Some(Ok(path.signature()));
+                        results[*idx] = Some(match advanced {
+                            Ok(()) => Ok(path.signature()),
+                            Err(e) => Err(anyhow::anyhow!("window advance failed: {e}")),
+                        });
                     }
                 }
                 Err(e) => {
@@ -2072,5 +2332,114 @@ mod tests {
             assert_eq!((id.0 - 2) % n, 0, "id {} off the shard's stride lattice", id.0);
             assert_eq!(placement.locate(id.0), 1, "locate must find the issuing shard");
         }
+    }
+
+    #[test]
+    fn window_sessions_survive_spill_and_reload_bitwise() {
+        // A rolling-window session's durable surface includes its pending
+        // slide rows — their source points may already be truncated away —
+        // so spill-and-reload must hand back exactly the rows an
+        // unbudgeted control would: same first slide index, same bits.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let window = WindowSpec { len: 4, stride: 2, logsig: None };
+        let per = session_bytes(&spec, 8);
+        let metrics = Arc::new(Metrics::default());
+        let m = SessionManager::with_config(
+            Arc::clone(&metrics),
+            SessionConfig {
+                budget_bytes: Some(per),
+                spill: SpillConfig::Memory,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let control = mgr();
+        let mut rng = Rng::new(61);
+        let seed: Rows = rng.normal_vec(8 * 2, 0.3).into();
+        let (a, sig) = m.open_window(&spec, &seed, 8, window).unwrap();
+        let (ca, csig) = control.open_window(&spec, &seed, 8, window).unwrap();
+        assert_eq!(sig, csig, "open_window seed signature diverged");
+        // A second (plain) session pushes over budget; the windowed
+        // session is the LRU candidate and spills, pending rows and all.
+        let _b = m.open(&spec, &rng.normal_vec(8 * 2, 0.3).into(), 8).unwrap();
+        assert!(metrics.snapshot().sessions_spilled >= 1, "windowed session never spilled");
+        // Feeding the cold session reloads it transparently; the window
+        // advances over the new points exactly as the control's does.
+        let chunk: Rows = rng.normal_vec(5 * 2, 0.3).into();
+        assert_eq!(
+            m.feed(a, &chunk, 5).unwrap(),
+            control.feed(ca, &chunk, 5).unwrap(),
+            "feed after spill diverged"
+        );
+        assert!(metrics.snapshot().sessions_reloaded >= 1);
+        let (first, rows) = m.poll_window(a).unwrap();
+        let (cfirst, crows) = control.poll_window(ca).unwrap();
+        assert!(!rows.is_empty(), "seed plus chunk must have emitted slides");
+        assert_eq!(first, cfirst, "reloaded window lost or replayed slides");
+        assert_eq!(rows, crows, "reloaded pending rows diverged from control");
+        // Both cursors agree that nothing further is pending.
+        assert_eq!(m.poll_window(a).unwrap(), control.poll_window(ca).unwrap());
+    }
+
+    #[test]
+    fn window_warm_restart_resumes_bitwise() {
+        // Kill-and-restart mid-window: the OpenWindow record seeds the
+        // replay, Feed records re-advance the window, and the Poll record
+        // re-drains what was already delivered — so the restarted manager
+        // hands back exactly the undelivered suffix, bitwise vs an
+        // uninterrupted control, in both precisions.
+        let dir = tmp_state_dir("windowrestart");
+        let cfg = SessionConfig { spill: SpillConfig::Disk(dir.clone()), ..Default::default() };
+        let control = mgr();
+        let window = WindowSpec {
+            len: 5,
+            stride: 3,
+            logsig: Some(crate::logsignature::LogSigBasis::Words),
+        };
+        let spec32 = SigSpec::new(2, 3).unwrap();
+        let spec64 = SigSpec::with_dtype(2, 3, Precision::F64).unwrap();
+        let mut rng = Rng::new(62);
+        let seed = rng.normal_vec(6 * 2, 0.3);
+        let chunk = rng.normal_vec(4 * 2, 0.3);
+        let (id32, id64, c32, c64);
+        {
+            let m = mgr_with(cfg.clone());
+            id32 = m.open_window(&spec32, &seed.clone().into(), 6, window).unwrap().0;
+            c32 = control.open_window(&spec32, &seed.clone().into(), 6, window).unwrap().0;
+            id64 = m.open_window(&spec64, &widen(&seed).into(), 6, window).unwrap().0;
+            c64 = control.open_window(&spec64, &widen(&seed).into(), 6, window).unwrap().0;
+            // Partially drain the f32 session before the "crash": the
+            // slide delivered here must stay delivered across the
+            // restart. The f64 session is never polled, covering the
+            // replay path with no Poll record.
+            assert_eq!(m.poll_window(id32).unwrap(), control.poll_window(c32).unwrap());
+            m.feed(id32, &chunk.clone().into(), 4).unwrap();
+            control.feed(c32, &chunk.clone().into(), 4).unwrap();
+            m.feed(id64, &widen(&chunk).into(), 4).unwrap();
+            control.feed(c64, &widen(&chunk).into(), 4).unwrap();
+            m.flush_wal();
+            // Process "dies" with undelivered slides buffered.
+        }
+        let m2 = mgr_with(cfg);
+        let (first, rows) = m2.poll_window(id32).unwrap();
+        let (cfirst, crows) = control.poll_window(c32).unwrap();
+        assert!(first >= 1, "pre-crash poll forgotten: slide 0 re-delivered");
+        assert_eq!(first, cfirst, "f32 window replay shifted the slide cursor");
+        assert_eq!(rows, crows, "f32 window replay diverged from control");
+        let (first64, rows64) = m2.poll_window(id64).unwrap();
+        let (cfirst64, crows64) = control.poll_window(c64).unwrap();
+        assert_eq!(first64, cfirst64);
+        assert_eq!(rows64, crows64, "f64 window replay diverged from control");
+        assert!(!rows64.is_empty(), "unpolled f64 session must re-deliver from slide 0");
+        // The stream keeps rolling after the restart.
+        let chunk2 = rng.normal_vec(3 * 2, 0.3);
+        assert_eq!(
+            m2.feed(id32, &chunk2.clone().into(), 3).unwrap(),
+            control.feed(c32, &chunk2.into(), 3).unwrap(),
+            "post-restart feed diverged"
+        );
+        assert_eq!(m2.poll_window(id32).unwrap(), control.poll_window(c32).unwrap());
+        drop(m2);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

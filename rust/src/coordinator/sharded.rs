@@ -86,10 +86,16 @@ impl ShardedCoordinator {
     /// Which shard this request routes to.
     fn route_of(&self, req: &Request) -> usize {
         match req {
-            Request::OpenStream { d, depth, .. } => self.placement.place_open(*d, *depth),
+            // Window opens place like stream opens — spec-aware, so
+            // windowed feeders of one spec land where their lane peers
+            // are.
+            Request::OpenStream { d, depth, .. } | Request::OpenWindow { d, depth, .. } => {
+                self.placement.place_open(*d, *depth)
+            }
             Request::Feed { session, .. }
             | Request::QueryInterval { session, .. }
             | Request::LogSigQueryInterval { session, .. }
+            | Request::PollWindow { session }
             | Request::CloseStream { session } => self.placement.locate(session.0),
             _ => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len(),
         }

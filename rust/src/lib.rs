@@ -92,11 +92,25 @@
 //!   of the microbatch and feed-lane queue identities, so f32 and f64
 //!   rows of one logical shape never share a flush — the logsignature
 //!   surface included, whose f64 arm runs the generic epilogue at
-//!   `E = f64`.
+//!   `E = f64`. **Rolling windows** make the paper's sliding-signature
+//!   trick (§5.5) a server-maintained workload: `OpenWindow` attaches a
+//!   [`path::WindowSpec`] (`len`/`stride`, signature or logsignature
+//!   output) and every feed advances the window family incrementally —
+//!   one O(1) stored-inverse Chen combination per emitted slide, bitwise
+//!   identical to per-query answers over the same intervals — while
+//!   `PollWindow` drains the buffered slides. Window sessions retain only
+//!   the live horizon: a retention watermark ([`path::Path::base`])
+//!   truncates dead `points`/`sigs`/`inv_sigs` prefixes geometrically, so
+//!   per-session memory is O(window), not O(history), however long the
+//!   stream runs. Per-request-kind log2-bucket latency histograms
+//!   ([`coordinator::Metrics`]) expose the p50/p90/p99 the soak bench
+//!   (`benches/session_soak.rs`) gates its SLO on.
 //! - **Durable state** ([`state`]): the persistence layer under the
-//!   session table. A versioned binary codec (v2: rows framed at native
-//!   width, f64 sessions persisted as 8-byte elements; v1 blobs and WALs
-//!   still replay) serializes `Path` state bitwise in both precisions
+//!   session table. A versioned binary codec (v3: the retention
+//!   watermark plus rolling-window state — emission cursor and
+//!   undelivered slide rows — ride in the session record; v2 framed rows
+//!   at native width; v1/v2 blobs and WALs still replay) serializes
+//!   `Path` state bitwise in both precisions
 //!   ([`path::Path::serialize_into`] / [`path::Path::deserialize`]); a [`state::SessionStore`] lets LRU
 //!   eviction and TTL expiry *spill* sessions (memory or disk) instead of
 //!   destroying them, with transparent bitwise reload on the next touch;

@@ -340,6 +340,10 @@ fn cmd_serve(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
         snap.mean_latency
     );
     println!("metrics: {}", snap.render());
+    let lat = snap.render_latency();
+    if !lat.is_empty() {
+        println!("{lat}");
+    }
     println!("padding ratio: {:.1}%", coord.metrics().padding_ratio() * 100.0);
     println!(
         "adaptive dispatch: {} (shapes with batch peers lane-fuse; rare shapes skip the linger)",
@@ -454,6 +458,10 @@ fn cmd_serve_stream(args: &signax::substrate::cli::Args) -> anyhow::Result<()> {
         let snap = coord.shard(k).metrics().snapshot();
         let label = if coord.num_shards() > 1 { format!("[shard {k}] ") } else { String::new() };
         println!("{label}metrics: {} (mean latency {:?})", snap.render(), snap.mean_latency);
+        let lat = snap.render_latency();
+        if !lat.is_empty() {
+            println!("{label}{lat}");
+        }
         println!(
             "{label}sessions: open={} resident={:.2} MiB evicted={} expired={} spilled={} \
              reloaded={} spilled_bytes={} wal_appends={}",

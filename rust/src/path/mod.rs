@@ -17,6 +17,10 @@
 //! relative precision for extreme inputs. [`Path::query_recompute`] is the
 //! slow exact fallback used by tests and benchmarks.
 
+pub mod window;
+
+pub use window::{RollingWindow, WindowSpec};
+
 use crate::logsignature::{logsignature_from_sig, LogSigPlan, LogSigWorkspace};
 use crate::signature::forward::{signature_with, two_point_signature_into};
 use crate::signature::SigConfig;
@@ -37,11 +41,22 @@ use crate::ta::{Elem, SigSpec, Workspace};
 /// load.
 pub struct Path<E: Elem = f32> {
     spec: SigSpec,
-    /// Points, `(len, d)` row-major.
+    /// Retention watermark: number of leading points dropped from the
+    /// front by [`Path::truncate_front`]. Indices handed to the query
+    /// surface stay **absolute** (counted from the original x_0) — the
+    /// stored buffers are merely a suffix view. 0 for an untruncated path,
+    /// which keeps every pre-watermark layout bit-identical.
+    base: usize,
+    /// Retained points, `(stored, d)` row-major; absolute point `p` lives
+    /// at row `p - base`.
     points: Vec<E>,
-    /// `sigs[j-1]` = Sig(x_0..x_j) for j = 1..len-1, each `sig_len` long.
+    /// Expanding signatures `Sig(x_0..x_j)` for prefix-ends
+    /// `j in [max(base, 1), len)`, each `sig_len` long; absolute `j` lives
+    /// at row `j - max(base, 1)` (which is the classic `j - 1` when
+    /// `base == 0`). Truncation only drops rows — the retained values are
+    /// still prefixes from x_0, so `I_i ⊠ S_j` stays bitwise what it was.
     sigs: Vec<E>,
-    /// `inv_sigs[j-1]` = Sig(x_0..x_j)^{-1}.
+    /// `Sig(x_0..x_j)^{-1}`, same layout as `sigs`.
     inv_sigs: Vec<E>,
     ws: Workspace<E>,
 }
@@ -53,6 +68,7 @@ impl<E: Elem> Path<E> {
         anyhow::ensure!(points.len() == stream * spec.d(), "bad point buffer length");
         let mut path = Path {
             spec: spec.clone(),
+            base: 0,
             points: Vec::with_capacity(points.len()),
             sigs: Vec::new(),
             inv_sigs: Vec::new(),
@@ -68,6 +84,7 @@ impl<E: Elem> Path<E> {
     /// what makes a reload bitwise — no recomputation happens here.
     pub(crate) fn from_raw_parts(
         spec: SigSpec,
+        base: usize,
         points: Vec<E>,
         sigs: Vec<E>,
         inv_sigs: Vec<E>,
@@ -75,48 +92,66 @@ impl<E: Elem> Path<E> {
         let d = spec.d();
         let len = spec.sig_len();
         anyhow::ensure!(d > 0 && points.len() % d == 0, "bad point buffer length");
-        let stream = points.len() / d;
-        anyhow::ensure!(stream >= 2, "need at least two points");
+        let stored = points.len() / d;
+        anyhow::ensure!(stored >= 2, "need at least two points");
+        // Prefix-ends j in [max(base, 1), base + stored): `stored` rows
+        // when truncated, the classic `stored - 1` when base == 0.
+        let sig_rows = stored - usize::from(base == 0);
         anyhow::ensure!(
-            sigs.len() == (stream - 1) * len && inv_sigs.len() == sigs.len(),
-            "signature buffers ({} / {}) do not match {} points of sig_len {len}",
+            sigs.len() == sig_rows * len && inv_sigs.len() == sigs.len(),
+            "signature buffers ({} / {}) do not match {} points (base {base}) of sig_len {len}",
             sigs.len(),
             inv_sigs.len(),
-            stream
+            stored
         );
         let ws = Workspace::new(&spec);
-        Ok(Path { spec, points, sigs, inv_sigs, ws })
+        Ok(Path { spec, base, points, sigs, inv_sigs, ws })
     }
 
-    /// The persistent state, by reference: `(spec, points, sigs,
+    /// The persistent state, by reference: `(spec, base, points, sigs,
     /// inv_sigs)` — everything [`Path::from_raw_parts`] needs back.
-    pub(crate) fn raw_parts(&self) -> (&SigSpec, &[E], &[E], &[E]) {
-        (&self.spec, &self.points, &self.sigs, &self.inv_sigs)
+    pub(crate) fn raw_parts(&self) -> (&SigSpec, usize, &[E], &[E], &[E]) {
+        (&self.spec, self.base, &self.points, &self.sigs, &self.inv_sigs)
+    }
+
+    /// Row offset of absolute prefix-end `j` in `sigs` / `inv_sigs`.
+    /// Callers guarantee `j >= max(base, 1)`.
+    fn sig_off(&self, j: usize) -> usize {
+        j - self.base.max(1)
     }
 
     fn extend_points(&mut self, new_points: &[E], count: usize) {
         let d = self.spec.d();
         let len = self.spec.sig_len();
         let had = self.len();
+        // Pre-reserve the whole extension: one `reserve` per buffer
+        // instead of per-step `extend_from_slice` growth churn.
+        let start = had.max(1);
+        let grown = had + count - start;
+        self.points.reserve(count * d);
+        self.sigs.reserve(grown * len);
+        self.inv_sigs.reserve(grown * len);
         self.points.extend_from_slice(&new_points[..count * d]);
         let total = self.len();
         // Running state: the last expanding signature / inverted signature.
-        let mut cur = if had >= 2 {
+        // A truncated path always retains >= 2 points, so `sigs` is
+        // non-empty exactly when a prior sweep already ran.
+        let mut cur = if !self.sigs.is_empty() {
             self.sigs[self.sigs.len() - len..].to_vec()
         } else {
             self.spec.zeros_elem::<E>()
         };
-        let mut cur_inv = if had >= 2 {
+        let mut cur_inv = if !self.inv_sigs.is_empty() {
             self.inv_sigs[self.inv_sigs.len() - len..].to_vec()
         } else {
             self.spec.zeros_elem::<E>()
         };
         let mut z = vec![E::ZERO; d];
         let mut neg_z = vec![E::ZERO; d];
-        let start = had.max(1);
+        let base = self.base;
         for j in start..total {
             for c in 0..d {
-                z[c] = self.points[j * d + c] - self.points[(j - 1) * d + c];
+                z[c] = self.points[(j - base) * d + c] - self.points[(j - 1 - base) * d + c];
                 neg_z[c] = -z[c];
             }
             // S_j = S_{j-1} ⊠ exp(z_j)   (eq. 6, fused).
@@ -128,6 +163,28 @@ impl<E: Elem> Path<E> {
         }
     }
 
+    /// Drop retained state strictly before absolute point `new_base` — the
+    /// bounded-memory half of rolling-window serving. Keeps at least two
+    /// stored points (the running-state seed and the `prev` row the next
+    /// update differences against), so `new_base` is clamped to
+    /// `len() - 2`. Queries with `i >= new_base` are untouched — the
+    /// retained `S_j` / `I_i` rows are still exact prefixes from x_0, so
+    /// post-truncation results are **bitwise** what they were; queries
+    /// reaching below the watermark become clean errors.
+    pub fn truncate_front(&mut self, new_base: usize) {
+        let new_base = new_base.min(self.len().saturating_sub(2));
+        if new_base <= self.base {
+            return;
+        }
+        let d = self.spec.d();
+        let len = self.spec.sig_len();
+        let drop_rows = new_base.max(1) - self.base.max(1);
+        self.points.drain(..(new_base - self.base) * d);
+        self.sigs.drain(..drop_rows * len);
+        self.inv_sigs.drain(..drop_rows * len);
+        self.base = new_base;
+    }
+
     /// Append new points ("keeping the signature up-to-date", §5.5;
     /// Signatory's `Path.update`). O(new points) work.
     pub fn update(&mut self, new_points: &[E], count: usize) -> anyhow::Result<()> {
@@ -137,8 +194,21 @@ impl<E: Elem> Path<E> {
         Ok(())
     }
 
-    /// Number of points currently stored.
+    /// Number of points fed so far, **including** any truncated away by
+    /// [`Path::truncate_front`] — indices stay absolute for the path's
+    /// whole lifetime, so clients never observe the retention policy.
     pub fn len(&self) -> usize {
+        self.base + self.points.len() / self.spec.d()
+    }
+
+    /// The retention watermark: queries require `i >= base()`
+    /// (`base() == 0` until [`Path::truncate_front`] is used).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Number of points physically retained (`len() - base()`).
+    pub fn stored_len(&self) -> usize {
         self.points.len() / self.spec.d()
     }
 
@@ -168,6 +238,11 @@ impl<E: Elem> Path<E> {
     /// the distant-interval cancellation the paper cautions about.
     pub fn query_into(&self, i: usize, j: usize, out: &mut [E]) -> anyhow::Result<()> {
         anyhow::ensure!(i < j && j < self.len(), "invalid interval [{i}, {j}] of {}", self.len());
+        anyhow::ensure!(
+            i >= self.base,
+            "interval start {i} is below the retention watermark {}",
+            self.base
+        );
         let len = self.spec.sig_len();
         anyhow::ensure!(
             out.len() == len,
@@ -175,20 +250,21 @@ impl<E: Elem> Path<E> {
             out.len()
         );
         let d = self.spec.d();
+        let b = self.base;
         if j == i + 1 {
             return two_point_signature_into(
-                &self.points[i * d..(i + 1) * d],
-                &self.points[j * d..(j + 1) * d],
+                &self.points[(i - b) * d..(i - b + 1) * d],
+                &self.points[(j - b) * d..(j - b + 1) * d],
                 &self.spec,
                 out,
             );
         }
-        let s_j = &self.sigs[(j - 1) * len..j * len];
+        let s_j = &self.sigs[self.sig_off(j) * len..(self.sig_off(j) + 1) * len];
         if i == 0 {
             out.copy_from_slice(s_j);
             return Ok(());
         }
-        let inv_i = &self.inv_sigs[(i - 1) * len..i * len];
+        let inv_i = &self.inv_sigs[self.sig_off(i) * len..(self.sig_off(i) + 1) * len];
         mul_into(&self.spec, inv_i, s_j, out);
         Ok(())
     }
@@ -249,8 +325,10 @@ impl<E: Elem> Path<E> {
         Ok(())
     }
 
-    /// The full expanding-signature stream `(len-1, sig_len)` — Signatory's
-    /// `signature(..., stream=True)` view of the Path.
+    /// The retained expanding-signature stream — Signatory's
+    /// `signature(..., stream=True)` view of the Path (`(len-1, sig_len)`
+    /// on an untruncated path; after [`Path::truncate_front`], the rows for
+    /// prefix-ends `j >= max(base, 1)`).
     pub fn stream(&self) -> &[E] {
         &self.sigs
     }
@@ -259,9 +337,15 @@ impl<E: Elem> Path<E> {
     /// (O(j - i) work). Used by tests and the §4.2 benchmark baseline.
     pub fn query_recompute(&self, i: usize, j: usize) -> anyhow::Result<Vec<E>> {
         anyhow::ensure!(i < j && j < self.len(), "invalid interval");
+        anyhow::ensure!(
+            i >= self.base,
+            "interval start {i} is below the retention watermark {}",
+            self.base
+        );
         let d = self.spec.d();
+        let b = self.base;
         signature_with(
-            &self.points[i * d..(j + 1) * d],
+            &self.points[(i - b) * d..(j + 1 - b) * d],
             j - i + 1,
             &self.spec,
             &SigConfig::serial(),
@@ -762,6 +846,126 @@ mod tests {
         let mut twin = Path::new(&spec, &a.points[..3 * 2].to_vec(), 3).unwrap();
         twin.update(&feed, 2).unwrap();
         assert_eq!(a.sigs, twin.sigs);
+    }
+
+    #[test]
+    fn truncate_front_keeps_queries_bitwise() {
+        // The rolling-window memory contract: dropping the dead prefix
+        // must not move a single bit of any still-answerable query, and
+        // indices stay absolute.
+        property("truncate keeps queries bitwise", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let stream = g.usize_in(8, 24);
+            let cut = g.usize_in(1, stream - 2);
+            g.label(format!("d={d} n={n} stream={stream} cut={cut}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts = random_path(g.rng(), stream, d);
+            let control = Path::new(&spec, &pts, stream).unwrap();
+            let mut path = Path::new(&spec, &pts, stream).unwrap();
+            path.truncate_front(cut);
+            assert_eq!(path.base(), cut);
+            assert_eq!(path.len(), stream, "len stays absolute");
+            assert_eq!(path.stored_len(), stream - cut);
+            assert_eq!(path.signature(), control.signature());
+            for _ in 0..6 {
+                let i = g.usize_in(cut, stream - 2);
+                let j = g.usize_in(i + 1, stream - 1);
+                assert_eq!(path.query(i, j).unwrap(), control.query(i, j).unwrap());
+                assert_eq!(
+                    path.query_recompute(i, j).unwrap(),
+                    control.query_recompute(i, j).unwrap()
+                );
+            }
+            // Below-watermark queries are clean errors, not wrong answers.
+            if cut >= 1 {
+                assert!(path.query(cut - 1, stream - 1).is_err());
+                assert!(path.query_recompute(cut - 1, stream - 1).is_err());
+            }
+        });
+    }
+
+    #[test]
+    fn extend_after_truncate_stays_bitwise() {
+        // Feeding a truncated path resumes from the stored running state,
+        // so growth after truncation must match an untruncated control
+        // bit-for-bit — this is what makes window retention invisible to
+        // rolling outputs.
+        let spec = SigSpec::new(2, 4).unwrap();
+        let mut rng = Rng::new(77);
+        let pts = random_path(&mut rng, 30, 2);
+        let control = Path::new(&spec, &pts, 30).unwrap();
+        let mut path = Path::new(&spec, &pts[..12 * 2], 12).unwrap();
+        path.truncate_front(7);
+        path.update(&pts[12 * 2..20 * 2], 8).unwrap();
+        path.truncate_front(15); // repeated truncation mid-stream
+        path.truncate_front(3); // regressions are no-ops
+        assert_eq!(path.base(), 15);
+        path.update(&pts[20 * 2..], 10).unwrap();
+        assert_eq!(path.len(), 30);
+        assert_eq!(path.signature(), control.signature());
+        for (i, j) in [(15, 29), (20, 21), (16, 25), (28, 29)] {
+            assert_eq!(path.query(i, j).unwrap(), control.query(i, j).unwrap(), "[{i}, {j}]");
+        }
+        // Storage reflects only the retained suffix.
+        assert!(path.storage_bytes() < control.storage_bytes() / 2 + 64);
+    }
+
+    #[test]
+    fn truncate_clamps_to_keep_two_points() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(78);
+        let pts = random_path(&mut rng, 6, 2);
+        let mut path = Path::new(&spec, &pts, 6).unwrap();
+        path.truncate_front(usize::MAX); // clamped to len - 2
+        assert_eq!(path.base(), 4);
+        assert_eq!(path.stored_len(), 2);
+        assert_eq!(path.query(4, 5).unwrap(), {
+            let control = Path::new(&spec, &pts, 6).unwrap();
+            control.query(4, 5).unwrap()
+        });
+        // Still feedable after maximal truncation.
+        path.update(&[1.0, -0.5], 1).unwrap();
+        let control = {
+            let mut c = Path::new(&spec, &pts, 6).unwrap();
+            c.update(&[1.0, -0.5], 1).unwrap();
+            c
+        };
+        assert_eq!(path.signature(), control.signature());
+    }
+
+    #[test]
+    fn truncated_update_batch_matches_scalar() {
+        // The feed lane advances truncated window sessions too: lanes with
+        // differing watermarks must still be bitwise equal to their scalar
+        // twins.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(79);
+        let mut fused: Vec<Path> = vec![];
+        let mut scalar: Vec<Path> = vec![];
+        for k in 0..3usize {
+            let pts = random_path(&mut rng, 8, 2);
+            let mut a = Path::new(&spec, &pts, 8).unwrap();
+            let mut b = Path::new(&spec, &pts, 8).unwrap();
+            a.truncate_front(2 * k); // watermarks 0, 2, 4
+            b.truncate_front(2 * k);
+            fused.push(a);
+            scalar.push(b);
+        }
+        let feeds: Vec<Vec<f32>> = (0..3).map(|k| rng.normal_vec((k + 1) * 2, 0.3)).collect();
+        let counts = vec![1usize, 2, 3];
+        {
+            let mut refs: Vec<&mut Path> = fused.iter_mut().collect();
+            let slices: Vec<&[f32]> = feeds.iter().map(|f| f.as_slice()).collect();
+            Path::update_batch(&mut refs, &slices, &counts).unwrap();
+        }
+        for k in 0..3 {
+            scalar[k].update(&feeds[k], counts[k]).unwrap();
+            assert_eq!(fused[k].sigs, scalar[k].sigs, "lane {k} sigs");
+            assert_eq!(fused[k].inv_sigs, scalar[k].inv_sigs, "lane {k} inv_sigs");
+            assert_eq!(fused[k].points, scalar[k].points, "lane {k} points");
+            assert_eq!(fused[k].base, scalar[k].base);
+        }
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Server-maintained rolling windows over a [`Path`] — the paper's
+//! headline inference optimisation (§5.5) turned into a serving feature.
+//!
+//! A [`WindowSpec`] names a sliding interval family: window `k` covers
+//! absolute points `[k * stride, k * stride + len - 1]`. As the path
+//! grows, [`RollingWindow::advance`] emits each newly-complete window's
+//! signature (or logsignature) via the stored-inverse trick — one
+//! `I_i ⊠ S_j` through the allocation-free [`Path::query_into`] /
+//! [`Path::logsig_query_into`] hot paths — so a slide costs **O(1)**
+//! amortised instead of the O(len) recompute a client-side re-query loop
+//! pays.
+//!
+//! `advance` also owns the bounded-memory half of the contract: once the
+//! dead prefix (points strictly before the next unemitted window) reaches
+//! half the retained storage it is dropped through
+//! [`Path::truncate_front`] — a geometric policy, so truncation cost is
+//! O(1) amortised per fed point and retained storage stays O(len + stride)
+//! per session instead of O(history). Because truncation never touches a
+//! retained `S_j` / `I_i` row, rolling outputs are **bitwise identical**
+//! to per-query [`Path::query`] / [`Path::logsig_query`] over the same
+//! intervals on an untruncated control (pinned by property tests below).
+//!
+//! Emitted-but-unpolled rows live in the `pending` buffer, which is part
+//! of the durable state (the points they were computed from may already
+//! be truncated, so they cannot be recomputed): the state codec persists
+//! it alongside the path buffers, and WAL replay re-delivers exactly the
+//! undelivered suffix.
+
+use crate::logsignature::{LogSigBasis, LogSigPlan, LogSigWorkspace};
+use crate::path::Path;
+use crate::ta::{Elem, SigSpec};
+
+/// A sliding-window family over a session's stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Points per window (`>= 2`: a window is an interval query).
+    pub len: usize,
+    /// Points between successive window starts (`>= 1`).
+    pub stride: usize,
+    /// `None` emits signatures (`sig_len` values per slide); `Some(basis)`
+    /// emits logsignatures in that basis (`plan.dim()` values per slide).
+    pub logsig: Option<LogSigBasis>,
+}
+
+impl WindowSpec {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.len >= 2, "window len must be >= 2, got {}", self.len);
+        anyhow::ensure!(self.stride >= 1, "window stride must be >= 1, got {}", self.stride);
+        Ok(())
+    }
+}
+
+/// Rolling-window state attached to a session's [`Path`]. The durable
+/// fields are the spec, the emission cursor (`next_end`), the
+/// emitted/delivered counters, and the undelivered `pending` rows; the
+/// logsignature plan and workspace are transient and rebuilt on reload,
+/// like the path's own [`crate::ta::Workspace`].
+pub struct RollingWindow<E: Elem> {
+    spec: WindowSpec,
+    /// Output width per slide: `sig_len` or the basis dimension.
+    out_dim: usize,
+    /// Absolute index of the right endpoint of the next window to emit
+    /// (`len - 1 + emitted * stride`).
+    next_end: usize,
+    /// Total windows emitted into `pending` over the session's lifetime.
+    emitted: u64,
+    /// Windows already handed back by [`RollingWindow::poll`].
+    delivered: u64,
+    /// Undelivered rows, `(emitted - delivered, out_dim)` row-major.
+    pending: Vec<E>,
+    plan: Option<LogSigPlan>,
+    ws: Option<LogSigWorkspace<E>>,
+}
+
+impl<E: Elem> RollingWindow<E> {
+    /// Fresh window state for a new session (nothing emitted yet).
+    pub fn new(path_spec: &SigSpec, spec: WindowSpec) -> anyhow::Result<RollingWindow<E>> {
+        RollingWindow::from_raw(path_spec, spec, (spec.len - 1) as u64, 0, 0, Vec::new())
+    }
+
+    /// Reassemble from persisted fields (the codec's constructor): checks
+    /// the counters' mutual invariants, then rebuilds the transient
+    /// plan/workspace. `pending` is adopted verbatim — reload is bitwise.
+    pub(crate) fn from_raw(
+        path_spec: &SigSpec,
+        spec: WindowSpec,
+        next_end: u64,
+        emitted: u64,
+        delivered: u64,
+        pending: Vec<E>,
+    ) -> anyhow::Result<RollingWindow<E>> {
+        spec.validate()?;
+        let (plan, ws) = match spec.logsig {
+            Some(basis) => (
+                Some(LogSigPlan::new(path_spec, basis)?),
+                Some(LogSigWorkspace::new(path_spec)),
+            ),
+            None => (None, None),
+        };
+        let out_dim = match &plan {
+            Some(p) => p.dim(),
+            None => path_spec.sig_len(),
+        };
+        anyhow::ensure!(
+            next_end == (spec.len - 1) as u64 + emitted * spec.stride as u64,
+            "window cursor {next_end} inconsistent with {emitted} emissions"
+        );
+        anyhow::ensure!(delivered <= emitted, "delivered {delivered} > emitted {emitted}");
+        anyhow::ensure!(
+            pending.len() as u64 == (emitted - delivered) * out_dim as u64,
+            "pending buffer has {} values, expected {} rows of {out_dim}",
+            pending.len(),
+            emitted - delivered
+        );
+        Ok(RollingWindow {
+            spec,
+            out_dim,
+            next_end: next_end as usize,
+            emitted,
+            delivered,
+            pending,
+            plan,
+            ws,
+        })
+    }
+
+    /// The persisted fields, by reference: `(spec, next_end, emitted,
+    /// delivered, pending)`.
+    pub(crate) fn raw_parts(&self) -> (WindowSpec, u64, u64, u64, &[E]) {
+        (self.spec, self.next_end as u64, self.emitted, self.delivered, &self.pending)
+    }
+
+    pub fn spec(&self) -> WindowSpec {
+        self.spec
+    }
+
+    /// Values per emitted slide.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Undelivered slides currently buffered.
+    pub fn pending_rows(&self) -> usize {
+        (self.emitted - self.delivered) as usize
+    }
+
+    /// Bytes of buffered undelivered output (counted into the session's
+    /// byte budget alongside the path's own storage).
+    pub fn pending_bytes(&self) -> usize {
+        self.pending.len() * std::mem::size_of::<E>()
+    }
+
+    /// Emit every newly-complete window, then apply the retention policy.
+    /// O(1) amortised per slide (one ⊠ each) and per fed point (geometric
+    /// truncation). Returns the number of slides emitted. Deterministic in
+    /// the fed points alone — feed chunking and truncation history never
+    /// change the emitted bits.
+    pub fn advance(&mut self, path: &mut Path<E>) -> anyhow::Result<usize> {
+        let WindowSpec { len, stride, .. } = self.spec;
+        let mut emitted_now = 0usize;
+        while self.next_end < path.len() {
+            let j = self.next_end;
+            let i = j + 1 - len;
+            let off = self.pending.len();
+            self.pending.resize(off + self.out_dim, E::ZERO);
+            match (&self.plan, &mut self.ws) {
+                (Some(plan), Some(ws)) => {
+                    path.logsig_query_into(i, j, plan, ws, &mut self.pending[off..])?
+                }
+                _ => path.query_into(i, j, &mut self.pending[off..])?,
+            }
+            self.emitted += 1;
+            emitted_now += 1;
+            self.next_end += stride;
+        }
+        // Retention: points strictly before the next window's start are
+        // dead. Truncate only once the dead prefix reaches half the
+        // retained storage, so each point is moved O(1) times overall and
+        // storage stays within 2x the live horizon.
+        let target = (self.next_end + 1).saturating_sub(len);
+        let dead = target.saturating_sub(path.base());
+        if dead > 0 && 2 * dead >= path.stored_len() {
+            path.truncate_front(target);
+        }
+        Ok(emitted_now)
+    }
+
+    /// Hand back every undelivered slide: `(index of the first returned
+    /// slide, rows)` — row `r` is slide `first + r`, covering points
+    /// `[(first + r) * stride, (first + r) * stride + len - 1]`. Empty rows
+    /// (with `first` = the next future slide) when nothing is pending.
+    pub fn poll(&mut self) -> (u64, Vec<E>) {
+        let first = self.delivered;
+        self.delivered = self.emitted;
+        (first, std::mem::take(&mut self.pending))
+    }
+
+    /// Replay a logged poll: drop the rows a pre-crash client already
+    /// received, so a warm restart re-delivers exactly the undelivered
+    /// suffix instead of double-delivering.
+    pub(crate) fn mark_delivered(&mut self, upto: u64) {
+        let upto = upto.min(self.emitted);
+        if upto <= self.delivered {
+            return;
+        }
+        let drop_rows = (upto - self.delivered) as usize;
+        self.pending.drain(..drop_rows * self.out_dim);
+        self.delivered = upto;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::propcheck::property;
+    use crate::substrate::rng::Rng;
+
+    fn random_walk<E: Elem>(rng: &mut Rng, stream: usize, d: usize) -> Vec<E> {
+        let mut p = vec![E::ZERO; stream * d];
+        for i in 1..stream {
+            for c in 0..d {
+                p[i * d + c] =
+                    p[(i - 1) * d + c] + E::from_f64(rng.normal_f32() as f64) * E::from_f64(0.3);
+            }
+        }
+        p
+    }
+
+    /// Feed `pts` into a windowed path in the given ragged chunks,
+    /// advancing + polling after each, and check every emitted slide
+    /// bitwise against per-query results on an untruncated control.
+    fn check_rolling<E: Elem>(spec: &SigSpec, wspec: WindowSpec, pts: &[E], chunks: &[usize]) {
+        let d = spec.d();
+        let total: usize = chunks.iter().sum();
+        assert_eq!(pts.len(), total * d);
+        let control = Path::<E>::new(spec, pts, total).unwrap();
+        let first = chunks[0];
+        let mut path = Path::<E>::new(spec, &pts[..first * d], first).unwrap();
+        let mut win = RollingWindow::<E>::new(spec, wspec).unwrap();
+        win.advance(&mut path).unwrap();
+        let mut slides: Vec<(u64, Vec<E>)> = Vec::new();
+        let drain = |w: &mut RollingWindow<E>, out: &mut Vec<(u64, Vec<E>)>| {
+            let (mut k, rows) = w.poll();
+            for row in rows.chunks(w.out_dim()) {
+                out.push((k, row.to_vec()));
+                k += 1;
+            }
+        };
+        drain(&mut win, &mut slides);
+        let mut fed = first;
+        for &c in &chunks[1..] {
+            path.update(&pts[fed * d..(fed + c) * d], c).unwrap();
+            fed += c;
+            win.advance(&mut path).unwrap();
+            drain(&mut win, &mut slides);
+        }
+        // Every complete window emitted exactly once, in order.
+        let expect = if total >= wspec.len { (total - wspec.len) / wspec.stride + 1 } else { 0 };
+        assert_eq!(slides.len(), expect, "slide count");
+        let lplan = wspec.logsig.map(|b| LogSigPlan::new(spec, b).unwrap());
+        for (k, row) in &slides {
+            let i = *k as usize * wspec.stride;
+            let j = i + wspec.len - 1;
+            let want = match &lplan {
+                Some(plan) => control.logsig_query(i, j, plan).unwrap(),
+                None => control.query(i, j).unwrap(),
+            };
+            assert_eq!(row, &want, "slide {k} [{i}, {j}]");
+        }
+        // Bounded memory: retained storage stays within 2x the live
+        // horizon (plus the last feed chunk, which lands before retention
+        // runs).
+        let live = wspec.len + wspec.stride + chunks.iter().copied().max().unwrap();
+        assert!(
+            path.stored_len() <= 2 * live,
+            "stored {} points for a live horizon of {live}",
+            path.stored_len()
+        );
+    }
+
+    #[test]
+    fn rolling_matches_per_query_bitwise() {
+        // The tentpole contract, both precisions: windowed emission over
+        // ragged feeds + truncation == per-query on the full history,
+        // bit for bit, across specs, strides, window lengths and bases.
+        property("rolling == per-query bitwise", 14, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let len = g.usize_in(2, 9);
+            let stride = g.usize_in(1, 4);
+            let n_chunks = g.usize_in(1, 10);
+            let logsig = match g.usize_in(0, 3) {
+                0 => None,
+                1 => Some(LogSigBasis::Expanded),
+                2 => Some(LogSigBasis::Lyndon),
+                _ => Some(LogSigBasis::Words),
+            };
+            let f64_lane = g.usize_in(0, 1) == 1;
+            g.label(format!(
+                "d={d} n={n} len={len} stride={stride} chunks={n_chunks} logsig={logsig:?} f64={f64_lane}"
+            ));
+            let spec = SigSpec::new(d, n).unwrap();
+            let mut chunks: Vec<usize> = vec![g.usize_in(2, 6)];
+            for _ in 1..n_chunks {
+                chunks.push(g.usize_in(1, 6)); // ragged on purpose
+            }
+            let total: usize = chunks.iter().sum();
+            let wspec = WindowSpec { len, stride, logsig };
+            if f64_lane {
+                let pts = random_walk::<f64>(g.rng(), total, d);
+                let spec64 = SigSpec::with_dtype(d, n, crate::ta::Precision::F64).unwrap();
+                check_rolling(&spec64, wspec, &pts, &chunks);
+            } else {
+                let pts = random_walk::<f32>(g.rng(), total, d);
+                check_rolling(&spec, wspec, &pts, &chunks);
+            }
+        });
+    }
+
+    #[test]
+    fn long_stream_memory_is_bounded() {
+        // O(window), not O(history): after a long stream in small chunks,
+        // retained storage is a small multiple of the window horizon.
+        let spec = SigSpec::new(2, 3).unwrap();
+        let wspec = WindowSpec { len: 16, stride: 4, logsig: None };
+        let mut rng = Rng::new(41);
+        let seed: Vec<f32> = random_walk(&mut rng, 2, 2);
+        let mut path = Path::<f32>::new(&spec, &seed, 2).unwrap();
+        let mut win = RollingWindow::<f32>::new(&spec, wspec).unwrap();
+        for _ in 0..500 {
+            let chunk: Vec<f32> = rng.normal_vec(3 * 2, 0.3);
+            path.update(&chunk, 3).unwrap();
+            win.advance(&mut path).unwrap();
+            win.poll();
+        }
+        assert_eq!(path.len(), 2 + 500 * 3);
+        let live = wspec.len + wspec.stride + 3;
+        assert!(
+            path.stored_len() <= 2 * live,
+            "stored {} points; live horizon {live}",
+            path.stored_len()
+        );
+    }
+
+    #[test]
+    fn poll_and_mark_delivered_agree() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let wspec = WindowSpec { len: 4, stride: 2, logsig: None };
+        let mut rng = Rng::new(42);
+        let pts: Vec<f32> = random_walk(&mut rng, 20, 2);
+        let mut path = Path::<f32>::new(&spec, &pts, 20).unwrap();
+        let mut win = RollingWindow::<f32>::new(&spec, wspec).unwrap();
+        win.advance(&mut path).unwrap();
+        assert_eq!(win.pending_rows(), 9); // ends 3,5,..,19
+        // Replaying a poll of the first 4 slides leaves slides 4.. pending.
+        win.mark_delivered(4);
+        assert_eq!(win.pending_rows(), 5);
+        let (first, rows) = win.poll();
+        assert_eq!(first, 4);
+        assert_eq!(rows.len(), 5 * win.out_dim());
+        // Idempotent / stale marks are no-ops; empty poll reports the next
+        // future slide.
+        win.mark_delivered(3);
+        assert_eq!(win.pending_rows(), 0);
+        let (first, rows) = win.poll();
+        assert_eq!((first, rows.len()), (9, 0));
+    }
+
+    #[test]
+    fn raw_roundtrip_resumes_bitwise() {
+        // from_raw(raw_parts()) mid-stream must continue exactly like the
+        // original — the codec-level durability contract in miniature.
+        let spec = SigSpec::new(2, 4).unwrap();
+        let wspec = WindowSpec { len: 6, stride: 3, logsig: Some(LogSigBasis::Words) };
+        let mut rng = Rng::new(43);
+        let pts: Vec<f32> = random_walk(&mut rng, 40, 2);
+        let mut path = Path::<f32>::new(&spec, &pts[..14 * 2], 14).unwrap();
+        let mut win = RollingWindow::<f32>::new(&spec, wspec).unwrap();
+        win.advance(&mut path).unwrap();
+        win.mark_delivered(1); // partially delivered on purpose
+        let (s, ne, em, de, pending) = win.raw_parts();
+        let mut revived =
+            RollingWindow::<f32>::from_raw(&spec, s, ne, em, de, pending.to_vec()).unwrap();
+        let mut control_path = Path::<f32>::new(&spec, &pts[..14 * 2], 14).unwrap();
+        control_path.truncate_front(path.base());
+        path.update(&pts[14 * 2..], 26).unwrap();
+        control_path.update(&pts[14 * 2..], 26).unwrap();
+        win.advance(&mut path).unwrap();
+        revived.advance(&mut control_path).unwrap();
+        assert_eq!(win.poll(), revived.poll());
+    }
+
+    #[test]
+    fn invalid_specs_are_errors() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        assert!(RollingWindow::<f32>::new(&spec, WindowSpec { len: 1, stride: 1, logsig: None })
+            .is_err());
+        assert!(RollingWindow::<f32>::new(&spec, WindowSpec { len: 4, stride: 0, logsig: None })
+            .is_err());
+        // Inconsistent persisted counters are clean decode errors.
+        assert!(RollingWindow::<f32>::from_raw(
+            &spec,
+            WindowSpec { len: 4, stride: 2, logsig: None },
+            3,
+            1, // says one emission, but cursor still at the first window
+            0,
+            vec![0.0; spec.sig_len()],
+        )
+        .is_err());
+        assert!(RollingWindow::<f32>::from_raw(
+            &spec,
+            WindowSpec { len: 4, stride: 2, logsig: None },
+            5,
+            1,
+            2, // delivered > emitted
+            Vec::new(),
+        )
+        .is_err());
+    }
+}

@@ -7,20 +7,27 @@
 //!
 //! ```text
 //! magic    b"SGXP"           4 bytes
-//! version  u16               currently 2 (v1 blobs still decode; v2
-//!                            marks that the decoded spec carries the
-//!                            element dtype from the prec byte, so a
-//!                            reloaded session keeps its native width)
+//! version  u16               currently 3 (v1/v2 blobs still decode; v3
+//!                            adds the retention watermark `base` to the
+//!                            header and a flag-gated rolling-window
+//!                            section)
 //! prec     u8                Precision::tag() of the element type
-//! flags    u8                reserved (0): basepoint/initial/inverse are
-//!                            normalised into the stored buffers at
-//!                            construction, so no variant flags exist yet
+//! flags    u8                bit 0x1: a rolling-window section follows
+//!                            the element buffers (window sessions only);
+//!                            all other bits reserved (0)
 //! d        u32
 //! depth    u32
-//! stream   u32               number of stored points
+//! stream   u32               number of *stored* points
+//! base     u32               v3 only: points truncated from the front
+//!                            ([`Path::base`]); v1/v2 headers stop at
+//!                            `stream` and decode with base = 0
 //! points   stream * d        raw element bits
-//! sigs     (stream-1) * sig_len
-//! inv_sigs (stream-1) * sig_len
+//! sigs     sig_rows * sig_len   (sig_rows = stream - 1 when base == 0,
+//! inv_sigs sig_rows * sig_len    stream otherwise)
+//! window   (flag 0x1 only)   len u32, stride u32, basis u8 (0 = sig,
+//!                            1/2/3 = Expanded/Lyndon/Words logsig),
+//!                            next_end u64, emitted u64, delivered u64,
+//!                            pending (emitted - delivered) * out_dim
 //! checksum u64               FNV-1a over every preceding byte
 //! ```
 //!
@@ -30,16 +37,26 @@
 //! spill/reload path and warm restart rely on, pinned by property tests
 //! in both precisions. The checksum turns torn or corrupted spill files
 //! into clean errors instead of silently wrong signatures.
+//!
+//! [`Path::serialize_into`] / [`Path::deserialize`] handle bare paths
+//! (flags 0); window sessions spill through
+//! [`serialize_session_into`] / [`deserialize_session`], which carry the
+//! undelivered pending rows too — those may cover already-truncated
+//! points, so they are state, not cache.
 
-use crate::path::Path;
+use crate::path::{Path, RollingWindow, WindowSpec};
+use crate::logsignature::LogSigBasis;
 use crate::ta::{Elem, Precision, SigSpec};
 
 const MAGIC: &[u8; 4] = b"SGXP";
-/// Version written by [`Path::serialize_into`]. v1 and v2 share the same
-/// byte layout; the bump records the typed-row data plane (the decoded
-/// spec's dtype now comes from the prec byte). Both versions decode.
-const VERSION: u16 = 2;
+/// Version written by [`Path::serialize_into`]. v1 and v2 share one
+/// layout (20-byte header, base = 0); v3 widens the header with the
+/// retention watermark and introduces the window flag. All three decode.
+const VERSION: u16 = 3;
 const MIN_VERSION: u16 = 1;
+
+/// Flag bit: a rolling-window section follows the element buffers.
+const FLAG_WINDOW: u8 = 0x1;
 
 /// FNV-1a, 64-bit: cheap, dependency-free torn-write detection (this is
 /// an integrity check against partial writes, not an adversarial MAC).
@@ -100,8 +117,169 @@ fn read_u32(buf: &[u8], at: usize) -> u32 {
     u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]])
 }
 
-/// Fixed part of the record before the element buffers.
-const HEADER_LEN: usize = 4 + 2 + 1 + 1 + 4 + 4 + 4;
+/// Fixed part of a v1/v2 record before the element buffers.
+const HEADER_LEN_V2: usize = 4 + 2 + 1 + 1 + 4 + 4 + 4;
+/// v3 adds the 4-byte retention watermark.
+const HEADER_LEN: usize = HEADER_LEN_V2 + 4;
+/// Fixed part of the window section before the pending elements.
+const WINDOW_FIXED_LEN: usize = 4 + 4 + 1 + 8 + 8 + 8;
+
+fn basis_tag(logsig: Option<LogSigBasis>) -> u8 {
+    match logsig {
+        None => 0,
+        Some(LogSigBasis::Expanded) => 1,
+        Some(LogSigBasis::Lyndon) => 2,
+        Some(LogSigBasis::Words) => 3,
+    }
+}
+
+fn basis_from_tag(tag: u8) -> anyhow::Result<Option<LogSigBasis>> {
+    Ok(match tag {
+        0 => None,
+        1 => Some(LogSigBasis::Expanded),
+        2 => Some(LogSigBasis::Lyndon),
+        3 => Some(LogSigBasis::Words),
+        t => anyhow::bail!("unknown window basis tag {t}"),
+    })
+}
+
+fn encode_record<E: Elem>(path: &Path<E>, window: Option<&RollingWindow<E>>, out: &mut Vec<u8>) {
+    let (spec, base, points, sigs, inv_sigs) = path.raw_parts();
+    let start = out.len();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(E::PRECISION.tag());
+    out.push(if window.is_some() { FLAG_WINDOW } else { 0 });
+    out.extend_from_slice(&(spec.d() as u32).to_le_bytes());
+    out.extend_from_slice(&(spec.depth() as u32).to_le_bytes());
+    out.extend_from_slice(&(path.stored_len() as u32).to_le_bytes());
+    out.extend_from_slice(&(base as u32).to_le_bytes());
+    write_elems(out, points);
+    write_elems(out, sigs);
+    write_elems(out, inv_sigs);
+    if let Some(win) = window {
+        let (wspec, next_end, emitted, delivered, pending) = win.raw_parts();
+        out.extend_from_slice(&(wspec.len as u32).to_le_bytes());
+        out.extend_from_slice(&(wspec.stride as u32).to_le_bytes());
+        out.push(basis_tag(wspec.logsig));
+        out.extend_from_slice(&next_end.to_le_bytes());
+        out.extend_from_slice(&emitted.to_le_bytes());
+        out.extend_from_slice(&delivered.to_le_bytes());
+        write_elems(out, pending);
+    }
+    let sum = fnv1a(&out[start..]);
+    out.extend_from_slice(&sum.to_le_bytes());
+}
+
+fn decode_record<E: Elem>(bytes: &[u8]) -> anyhow::Result<(Path<E>, Option<RollingWindow<E>>)> {
+    anyhow::ensure!(
+        bytes.len() >= HEADER_LEN_V2 + 8,
+        "Path record too short ({} bytes)",
+        bytes.len()
+    );
+    anyhow::ensure!(&bytes[..4] == MAGIC, "bad Path record magic");
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    anyhow::ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported Path codec version {version}"
+    );
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(sum_bytes.try_into().expect("8 checksum bytes"));
+    anyhow::ensure!(fnv1a(body) == want, "Path record checksum mismatch (torn write?)");
+    let prec = bytes[6];
+    anyhow::ensure!(
+        prec == E::PRECISION.tag(),
+        "Path record is precision tag {prec}, requested {}",
+        E::PRECISION.label()
+    );
+    let flags = bytes[7];
+    anyhow::ensure!(flags & !FLAG_WINDOW == 0, "unknown Path record flags {flags:#x}");
+    let has_window = flags & FLAG_WINDOW != 0;
+    anyhow::ensure!(
+        version >= 3 || !has_window,
+        "window flag on a v{version} Path record"
+    );
+    let d = read_u32(bytes, 8) as usize;
+    let depth = read_u32(bytes, 12) as usize;
+    let stream = read_u32(bytes, 16) as usize;
+    // v3 headers carry the retention watermark; v1/v2 stop at `stream`
+    // (and decode identically since base was always 0 then).
+    let (base, header_len) = if version >= 3 {
+        anyhow::ensure!(bytes.len() >= HEADER_LEN + 8, "truncated v3 Path record");
+        (read_u32(bytes, 20) as usize, HEADER_LEN)
+    } else {
+        (0, HEADER_LEN_V2)
+    };
+    // The reloaded spec carries the element dtype (v2 semantics; v1
+    // blobs decode identically since the prec byte was always there).
+    let spec = SigSpec::with_dtype(d, depth, E::PRECISION)?;
+    anyhow::ensure!(stream >= 2, "Path record has {stream} points, need at least 2");
+    let sig_rows = stream - usize::from(base == 0);
+    let rest = &body[header_len..];
+    let (points, rest) = read_elems::<E>(rest, stream * d)?;
+    let (sigs, rest) = read_elems::<E>(rest, sig_rows * spec.sig_len())?;
+    let (inv_sigs, rest) = read_elems::<E>(rest, sig_rows * spec.sig_len())?;
+    let path = Path::from_raw_parts(spec.clone(), base, points, sigs, inv_sigs)?;
+    let window = if has_window {
+        anyhow::ensure!(rest.len() >= WINDOW_FIXED_LEN, "truncated window section");
+        let wlen = read_u32(rest, 0) as usize;
+        let wstride = read_u32(rest, 4) as usize;
+        let logsig = basis_from_tag(rest[8])?;
+        let rd_u64 = |at: usize| {
+            u64::from_le_bytes(rest[at..at + 8].try_into().expect("8 bytes"))
+        };
+        let (next_end, emitted, delivered) = (rd_u64(9), rd_u64(17), rd_u64(25));
+        let wspec = WindowSpec { len: wlen, stride: wstride, logsig };
+        wspec.validate()?;
+        anyhow::ensure!(delivered <= emitted, "window counters corrupt");
+        let tail = &rest[WINDOW_FIXED_LEN..];
+        let out_dim = match logsig {
+            Some(basis) => crate::logsignature::LogSigPlan::new(&spec, basis)?.dim(),
+            None => spec.sig_len(),
+        };
+        let rows = usize::try_from(emitted - delivered)?;
+        let (pending, tail) = read_elems::<E>(tail, rows * out_dim)?;
+        anyhow::ensure!(tail.is_empty(), "{} trailing bytes in Path record", tail.len());
+        Some(RollingWindow::from_raw(&spec, wspec, next_end, emitted, delivered, pending)?)
+    } else {
+        anyhow::ensure!(rest.is_empty(), "{} trailing bytes in Path record", rest.len());
+        None
+    };
+    Ok((path, window))
+}
+
+/// Exact size in bytes of a session record: the path record plus the
+/// window section when present.
+pub(crate) fn session_serialized_len<E: Elem>(
+    path: &Path<E>,
+    window: Option<&RollingWindow<E>>,
+) -> usize {
+    path.serialized_len()
+        + window.map_or(0, |w| WINDOW_FIXED_LEN + w.pending_bytes())
+}
+
+/// Append the serialized form of a session — a `Path` plus optional
+/// rolling-window state — to `out`. Bare sessions write exactly the
+/// [`Path::serialize_into`] bytes; window sessions set the window flag and
+/// append the window section. Bitwise round-trip with
+/// [`deserialize_session`].
+pub(crate) fn serialize_session_into<E: Elem>(
+    path: &Path<E>,
+    window: Option<&RollingWindow<E>>,
+    out: &mut Vec<u8>,
+) {
+    out.reserve(session_serialized_len(path, window));
+    encode_record(path, window, out);
+}
+
+/// Decode a session record written by [`serialize_session_into`] —
+/// validates everything [`Path::deserialize`] does, plus the window
+/// section's counters when present.
+pub(crate) fn deserialize_session<E: Elem>(
+    bytes: &[u8],
+) -> anyhow::Result<(Path<E>, Option<RollingWindow<E>>)> {
+    decode_record(bytes)
+}
 
 impl<E: Elem> Path<E> {
     /// Exact size in bytes of the serialized form (header + elements +
@@ -114,21 +292,8 @@ impl<E: Elem> Path<E> {
     /// module docs for the layout). Bitwise round-trip with
     /// [`Path::deserialize`].
     pub fn serialize_into(&self, out: &mut Vec<u8>) {
-        let (spec, points, sigs, inv_sigs) = self.raw_parts();
         out.reserve(self.serialized_len());
-        let base = out.len();
-        out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
-        out.push(E::PRECISION.tag());
-        out.push(0u8); // flags: reserved
-        out.extend_from_slice(&(spec.d() as u32).to_le_bytes());
-        out.extend_from_slice(&(spec.depth() as u32).to_le_bytes());
-        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
-        write_elems(out, points);
-        write_elems(out, sigs);
-        write_elems(out, inv_sigs);
-        let sum = fnv1a(&out[base..]);
-        out.extend_from_slice(&sum.to_le_bytes());
+        encode_record(self, None, out);
     }
 
     /// The serialized form as a fresh buffer (convenience over
@@ -143,41 +308,15 @@ impl<E: Elem> Path<E> {
     /// Validates magic, version, checksum, the element precision against
     /// `E`, and every buffer-length invariant; the workspace is rebuilt.
     /// The decoded buffers are adopted verbatim — reload is bitwise.
+    /// Records carrying window state must decode through the session
+    /// codec instead.
     pub fn deserialize(bytes: &[u8]) -> anyhow::Result<Path<E>> {
+        let (path, window) = decode_record(bytes)?;
         anyhow::ensure!(
-            bytes.len() >= HEADER_LEN + 8,
-            "Path record too short ({} bytes)",
-            bytes.len()
+            window.is_none(),
+            "Path record carries rolling-window state; decode it as a session"
         );
-        anyhow::ensure!(&bytes[..4] == MAGIC, "bad Path record magic");
-        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
-        anyhow::ensure!(
-            (MIN_VERSION..=VERSION).contains(&version),
-            "unsupported Path codec version {version}"
-        );
-        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
-        let want = u64::from_le_bytes(sum_bytes.try_into().expect("8 checksum bytes"));
-        anyhow::ensure!(fnv1a(body) == want, "Path record checksum mismatch (torn write?)");
-        let prec = bytes[6];
-        anyhow::ensure!(
-            prec == E::PRECISION.tag(),
-            "Path record is precision tag {prec}, requested {}",
-            E::PRECISION.label()
-        );
-        anyhow::ensure!(bytes[7] == 0, "unknown Path record flags {:#x}", bytes[7]);
-        let d = read_u32(bytes, 8) as usize;
-        let depth = read_u32(bytes, 12) as usize;
-        let stream = read_u32(bytes, 16) as usize;
-        // The reloaded spec carries the element dtype (v2 semantics; v1
-        // blobs decode identically since the prec byte was always there).
-        let spec = SigSpec::with_dtype(d, depth, E::PRECISION)?;
-        anyhow::ensure!(stream >= 2, "Path record has {stream} points, need at least 2");
-        let rest = &body[HEADER_LEN..];
-        let (points, rest) = read_elems::<E>(rest, stream * d)?;
-        let (sigs, rest) = read_elems::<E>(rest, (stream - 1) * spec.sig_len())?;
-        let (inv_sigs, rest) = read_elems::<E>(rest, (stream - 1) * spec.sig_len())?;
-        anyhow::ensure!(rest.is_empty(), "{} trailing bytes in Path record", rest.len());
-        Path::from_raw_parts(spec, points, sigs, inv_sigs)
+        Ok(path)
     }
 }
 
@@ -215,8 +354,8 @@ mod tests {
             let bytes = path.serialize();
             assert_eq!(bytes.len(), path.serialized_len());
             let back: Path = Path::deserialize(&bytes).unwrap();
-            let (s0, p0, sig0, inv0) = path.raw_parts();
-            let (s1, p1, sig1, inv1) = back.raw_parts();
+            let (s0, _, p0, sig0, inv0) = path.raw_parts();
+            let (s1, _, p1, sig1, inv1) = back.raw_parts();
             assert_eq!((s0.d(), s0.depth()), (s1.d(), s1.depth()));
             assert_eq!(p0, p1, "points");
             assert_eq!(sig0, sig1, "expanding signatures");
@@ -244,8 +383,8 @@ mod tests {
             let path: Path<f64> = Path::new(&spec, &pts, stream).unwrap();
             let bytes = path.serialize();
             let back: Path<f64> = Path::deserialize(&bytes).unwrap();
-            let (_, p0, sig0, inv0) = path.raw_parts();
-            let (_, p1, sig1, inv1) = back.raw_parts();
+            let (_, _, p0, sig0, inv0) = path.raw_parts();
+            let (_, _, p1, sig1, inv1) = back.raw_parts();
             assert_eq!(p0, p1, "points");
             assert_eq!(sig0, sig1, "expanding signatures");
             assert_eq!(inv0, inv1, "inverse signatures");
@@ -271,8 +410,8 @@ mod tests {
             let mut reloaded: Path = Path::deserialize(&bytes).unwrap();
             control.update(&pts[first * d..], extra).unwrap();
             reloaded.update(&pts[first * d..], extra).unwrap();
-            let (_, p0, sig0, inv0) = control.raw_parts();
-            let (_, p1, sig1, inv1) = reloaded.raw_parts();
+            let (_, _, p0, sig0, inv0) = control.raw_parts();
+            let (_, _, p1, sig1, inv1) = reloaded.raw_parts();
             assert_eq!(sig0, sig1, "sigs diverged after reload");
             assert_eq!(inv0, inv1, "inv_sigs diverged after reload");
             assert_eq!(p0, p1);
@@ -308,25 +447,121 @@ mod tests {
         assert!(Path::<f32>::deserialize(&vnext).is_err());
     }
 
+    /// Hand-frame a pre-v3 record (20-byte header, no base field) from a
+    /// path's buffers — the layout every blob on disk had before this
+    /// version.
+    fn frame_legacy(version: u16, path: &Path<f32>) -> Vec<u8> {
+        let (spec, base, points, sigs, inv_sigs) = path.raw_parts();
+        assert_eq!(base, 0, "legacy records are untruncated by definition");
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"SGXP");
+        out.extend_from_slice(&version.to_le_bytes());
+        out.push(crate::ta::Precision::F32.tag());
+        out.push(0u8);
+        out.extend_from_slice(&(spec.d() as u32).to_le_bytes());
+        out.extend_from_slice(&(spec.depth() as u32).to_le_bytes());
+        out.extend_from_slice(&(path.stored_len() as u32).to_le_bytes());
+        for buf in [points, sigs, inv_sigs] {
+            for &x in buf {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let sum = fnv1a(&out).to_le_bytes();
+        out.extend_from_slice(&sum);
+        out
+    }
+
     #[test]
-    fn v1_blobs_still_decode() {
-        // Spill blobs written before the version bump (same layout,
-        // version field 1) must keep reloading bitwise: patch the version
-        // back to 1 and re-seal the checksum.
+    fn v1_and_v2_blobs_still_decode() {
+        // Spill blobs written before the v3 header widening (no base
+        // field) must keep reloading bitwise.
         let spec = SigSpec::new(2, 3).unwrap();
         let mut rng = Rng::new(6);
         let pts = random_path_pts(&mut rng, 5, 2);
         let path = Path::new(&spec, &pts, 5).unwrap();
-        let mut bytes = path.serialize();
-        bytes[4..6].copy_from_slice(&1u16.to_le_bytes());
-        let body_end = bytes.len() - 8;
-        let sum = fnv1a(&bytes[..body_end]).to_le_bytes();
-        bytes[body_end..].copy_from_slice(&sum);
-        let back: Path = Path::deserialize(&bytes).unwrap();
-        let (_, p0, sig0, inv0) = path.raw_parts();
-        let (_, p1, sig1, inv1) = back.raw_parts();
-        assert_eq!(p0, p1, "points");
-        assert_eq!(sig0, sig1, "expanding signatures");
-        assert_eq!(inv0, inv1, "inverse signatures");
+        for version in [1u16, 2] {
+            let bytes = frame_legacy(version, &path);
+            let back: Path = Path::deserialize(&bytes).unwrap();
+            let (_, b0, p0, sig0, inv0) = path.raw_parts();
+            let (_, b1, p1, sig1, inv1) = back.raw_parts();
+            assert_eq!((b0, b1), (0, 0));
+            assert_eq!(p0, p1, "v{version} points");
+            assert_eq!(sig0, sig1, "v{version} expanding signatures");
+            assert_eq!(inv0, inv1, "v{version} inverse signatures");
+        }
+    }
+
+    #[test]
+    fn truncated_path_roundtrips_with_watermark() {
+        // v3 carries the retention watermark: a truncated path reloads
+        // with the same base, the same absolute indices, and bitwise
+        // buffers — and keeps feeding identically afterwards.
+        property("v3 watermark roundtrip", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 3);
+            let stream = g.usize_in(6, 20);
+            let cut = g.usize_in(1, stream - 2);
+            g.label(format!("d={d} n={n} stream={stream} cut={cut}"));
+            let spec = SigSpec::new(d, n).unwrap();
+            let pts = random_path_pts(g.rng(), stream, d);
+            let mut path = Path::new(&spec, &pts, stream).unwrap();
+            path.truncate_front(cut);
+            let bytes = path.serialize();
+            assert_eq!(bytes.len(), path.serialized_len());
+            let mut back: Path = Path::deserialize(&bytes).unwrap();
+            assert_eq!(back.base(), cut);
+            assert_eq!(back.len(), stream);
+            let (_, _, p0, sig0, inv0) = path.raw_parts();
+            let (_, _, p1, sig1, inv1) = back.raw_parts();
+            assert_eq!(p0, p1, "points");
+            assert_eq!(sig0, sig1, "expanding signatures");
+            assert_eq!(inv0, inv1, "inverse signatures");
+            let extra = g.normal_vec(2 * d, 0.3);
+            path.update(&extra, 2).unwrap();
+            back.update(&extra, 2).unwrap();
+            assert_eq!(path.signature(), back.signature(), "feed after reload diverged");
+        });
+    }
+
+    #[test]
+    fn window_sessions_roundtrip_bitwise() {
+        use crate::logsignature::LogSigBasis;
+        use crate::path::{RollingWindow, WindowSpec};
+        // The session codec carries the rolling-window section: cursor,
+        // counters, and the undelivered pending rows (whose source points
+        // may already be truncated — they are state, not cache).
+        let spec = SigSpec::new(2, 3).unwrap();
+        let mut rng = Rng::new(7);
+        let pts = random_path_pts(&mut rng, 30, 2);
+        for logsig in [None, Some(LogSigBasis::Words)] {
+            let wspec = WindowSpec { len: 6, stride: 2, logsig };
+            let mut path = Path::<f32>::new(&spec, &pts, 30).unwrap();
+            let mut win = RollingWindow::<f32>::new(&spec, wspec).unwrap();
+            win.advance(&mut path).unwrap();
+            win.mark_delivered(3); // partially delivered on purpose
+            let mut bytes = Vec::new();
+            serialize_session_into(&path, Some(&win), &mut bytes);
+            assert_eq!(bytes.len(), session_serialized_len(&path, Some(&win)));
+            let (mut path2, win2) = deserialize_session::<f32>(&bytes).unwrap();
+            let mut win2 = win2.expect("window section decoded");
+            assert_eq!(win.raw_parts().1, win2.raw_parts().1, "cursor");
+            assert_eq!(win.raw_parts().4, win2.raw_parts().4, "pending rows");
+            // A bare-path decode must refuse the window record cleanly.
+            assert!(Path::<f32>::deserialize(&bytes).is_err());
+            // And both continue identically: feed, advance, poll.
+            let extra = rng.normal_vec(5 * 2, 0.3);
+            path.update(&extra, 5).unwrap();
+            path2.update(&extra, 5).unwrap();
+            win.advance(&mut path).unwrap();
+            win2.advance(&mut path2).unwrap();
+            assert_eq!(win.poll(), win2.poll(), "logsig={logsig:?}");
+        }
+        // A bare session serializes to exactly the Path record bytes.
+        let path = Path::<f32>::new(&spec, &pts, 30).unwrap();
+        let mut bytes = Vec::new();
+        serialize_session_into(&path, None, &mut bytes);
+        assert_eq!(bytes, path.serialize());
+        let (_, no_win) = deserialize_session::<f32>(&bytes).unwrap();
+        assert!(no_win.is_none());
     }
 }

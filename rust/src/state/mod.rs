@@ -34,6 +34,7 @@ pub mod placement;
 pub mod store;
 pub mod wal;
 
+pub(crate) use codec::{deserialize_session, serialize_session_into, session_serialized_len};
 pub use placement::Placement;
 pub use store::{DiskStore, MemStore, SessionStore, SpillConfig};
 pub use wal::{FeedLog, WalRecord};

@@ -33,6 +33,8 @@ use std::path::{Path as FsPath, PathBuf};
 use std::sync::Mutex;
 
 use super::codec::fnv1a;
+use crate::logsignature::LogSigBasis;
+use crate::path::WindowSpec;
 use crate::ta::{Precision, Rows};
 
 /// Flush inline (not waiting for the sweeper) once this much is buffered.
@@ -43,15 +45,47 @@ const TAG_FEED: u8 = 2;
 const TAG_CLOSE: u8 = 3;
 const TAG_OPEN64: u8 = 4;
 const TAG_FEED64: u8 = 5;
+const TAG_OPEN_WINDOW: u8 = 6;
+const TAG_OPEN_WINDOW64: u8 = 7;
+const TAG_POLL: u8 = 8;
+
+fn window_basis_tag(logsig: Option<LogSigBasis>) -> u8 {
+    match logsig {
+        None => 0,
+        Some(LogSigBasis::Expanded) => 1,
+        Some(LogSigBasis::Lyndon) => 2,
+        Some(LogSigBasis::Words) => 3,
+    }
+}
+
+fn window_basis_from_tag(tag: u8) -> anyhow::Result<Option<LogSigBasis>> {
+    Ok(match tag {
+        0 => None,
+        1 => Some(LogSigBasis::Expanded),
+        2 => Some(LogSigBasis::Lyndon),
+        3 => Some(LogSigBasis::Words),
+        t => anyhow::bail!("unknown WAL window basis tag {t}"),
+    })
+}
 
 /// One logged session mutation. Point rows are typed; the encoder picks
 /// the f32 or f64 tag from the rows' own precision.
+///
+/// Window sessions log two extra things: their `OpenWindow` (the window
+/// spec must survive a restart — feeds alone cannot reconstruct it) and
+/// every `Poll` (replayed feeds re-emit every window; the poll watermark
+/// is what keeps a warm restart from re-delivering rows a client already
+/// received).
 #[derive(Debug, Clone, PartialEq)]
 pub enum WalRecord {
     /// Session opened with `count` initial points of dimension `d`.
     Open { id: u64, d: u32, depth: u32, count: u32, points: Rows },
+    /// Window session opened: `Open` plus the rolling-window spec.
+    OpenWindow { id: u64, d: u32, depth: u32, count: u32, points: Rows, window: WindowSpec },
     /// `count` more points fed to an open session.
     Feed { id: u64, count: u32, points: Rows },
+    /// The first `upto` window slides were delivered to the client.
+    Poll { id: u64, upto: u64 },
     /// Session closed; its state is gone on purpose.
     Close { id: u64 },
 }
@@ -86,6 +120,20 @@ impl WalRecord {
                 out.extend_from_slice(&count.to_le_bytes());
                 write_rows(out, points);
             }
+            WalRecord::OpenWindow { id, d, depth, count, points, window } => {
+                out.push(match points.precision() {
+                    Precision::F32 => TAG_OPEN_WINDOW,
+                    Precision::F64 => TAG_OPEN_WINDOW64,
+                });
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&d.to_le_bytes());
+                out.extend_from_slice(&depth.to_le_bytes());
+                out.extend_from_slice(&count.to_le_bytes());
+                out.extend_from_slice(&(window.len as u32).to_le_bytes());
+                out.extend_from_slice(&(window.stride as u32).to_le_bytes());
+                out.push(window_basis_tag(window.logsig));
+                write_rows(out, points);
+            }
             WalRecord::Feed { id, count, points } => {
                 out.push(match points.precision() {
                     Precision::F32 => TAG_FEED,
@@ -94,6 +142,11 @@ impl WalRecord {
                 out.extend_from_slice(&id.to_le_bytes());
                 out.extend_from_slice(&count.to_le_bytes());
                 write_rows(out, points);
+            }
+            WalRecord::Poll { id, upto } => {
+                out.push(TAG_POLL);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&upto.to_le_bytes());
             }
             WalRecord::Close { id } => {
                 out.push(TAG_CLOSE);
@@ -154,6 +207,30 @@ impl WalRecord {
                 let points =
                     if tag == TAG_OPEN { rows32(20, n)? } else { rows64(20, n)? };
                 Ok(WalRecord::Open { id, d, depth, count, points })
+            }
+            TAG_OPEN_WINDOW | TAG_OPEN_WINDOW64 => {
+                let id = u64_at(0)?;
+                let d = u32_at(8)?;
+                let depth = u32_at(12)?;
+                let count = u32_at(16)?;
+                let wlen = u32_at(20)?;
+                let wstride = u32_at(24)?;
+                let basis = *rest
+                    .get(28)
+                    .ok_or_else(|| anyhow::anyhow!("short WAL payload"))?;
+                let window = WindowSpec {
+                    len: wlen as usize,
+                    stride: wstride as usize,
+                    logsig: window_basis_from_tag(basis)?,
+                };
+                let n = count as usize * d as usize;
+                let points =
+                    if tag == TAG_OPEN_WINDOW { rows32(29, n)? } else { rows64(29, n)? };
+                Ok(WalRecord::OpenWindow { id, d, depth, count, points, window })
+            }
+            TAG_POLL => {
+                anyhow::ensure!(rest.len() == 16, "malformed WAL poll record");
+                Ok(WalRecord::Poll { id: u64_at(0)?, upto: u64_at(8)? })
             }
             TAG_FEED | TAG_FEED64 => {
                 let id = u64_at(0)?;
@@ -306,6 +383,23 @@ mod tests {
                 points: vec![0.1f64, 0.2, 0.3].into(),
             },
             WalRecord::Feed { id: 2, count: 2, points: vec![0.4f64, 0.5].into() },
+            WalRecord::OpenWindow {
+                id: 3,
+                d: 2,
+                depth: 2,
+                count: 2,
+                points: vec![0.0f32, 1.0, 2.0, 3.0].into(),
+                window: WindowSpec { len: 4, stride: 2, logsig: Some(LogSigBasis::Lyndon) },
+            },
+            WalRecord::OpenWindow {
+                id: 4,
+                d: 1,
+                depth: 3,
+                count: 2,
+                points: vec![0.25f64, -0.5].into(),
+                window: WindowSpec { len: 8, stride: 1, logsig: None },
+            },
+            WalRecord::Poll { id: 3, upto: 5 },
             WalRecord::Close { id: 1 },
         ]
     }
