@@ -357,20 +357,42 @@ fn main() -> anyhow::Result<()> {
 
     // Phase 2: the Zipf storm — hot ranks hammered, cold ranks touched
     // rarely (each such touch is a transparent reload), ragged chunks,
-    // windowed sessions polled every fourth touch.
+    // windowed sessions polled every fourth touch. Windowed feeds
+    // coalesce into small `feed_batch` groups (the feed lane's flush
+    // path), so the storm also soaks the lane-fused window-slide sweep;
+    // plain feeds stay on the scalar `call` path and keep the Feed
+    // latency histogram fed.
+    fn flush_group(
+        coord: &Coordinator,
+        group: &mut Vec<(SessionId, Rows, usize)>,
+    ) -> anyhow::Result<()> {
+        for r in coord.sessions().feed_batch(std::mem::take(group)) {
+            r?;
+        }
+        Ok(())
+    }
     let mut wl = Workload::new(sessions, 1.1, 6, 0x5708);
     let t0 = Instant::now();
     let mut polls = 0usize;
+    let mut group: Vec<(SessionId, Rows, usize)> = Vec::new();
     for e in 0..events {
         let ev = wl.next_event();
         let p = &profs[ev.session % profs.len()];
         let points = rows_for(p.prec, wl.rng().normal_vec(ev.points * p.d, 0.3));
-        coord.call(Request::Feed { session: ids[ev.session], points, count: ev.points })?;
+        if p.window.is_some() {
+            group.push((ids[ev.session], points, ev.points));
+            if group.len() >= 8 {
+                flush_group(&coord, &mut group)?;
+            }
+        } else {
+            coord.call(Request::Feed { session: ids[ev.session], points, count: ev.points })?;
+        }
         if p.window.is_some() && e % 4 == 0 {
-            coord.call(Request::PollWindow { session: ids[ev.session] })?;
+            coord.call(Request::PollWindow { session: ids[ev.session], max_slides: None })?;
             polls += 1;
         }
     }
+    flush_group(&coord, &mut group)?;
     let wall = t0.elapsed().as_secs_f64();
     let p99 = p99_us(&coord, RequestKind::Feed);
     println!(
@@ -381,13 +403,17 @@ fn main() -> anyhow::Result<()> {
     let snap = coord.metrics().snapshot();
     anyhow::ensure!(snap.sessions_reloaded > 0, "Zipf storm never reloaded a cold session");
     anyhow::ensure!(snap.errors == 0, "storm produced {} request errors", snap.errors);
+    anyhow::ensure!(
+        snap.window_slide_batches > 0,
+        "the storm never engaged the lane-fused window sweep"
+    );
 
     // Phase 3: drain every windowed session once.
     let t0 = Instant::now();
     let mut drains = 0usize;
     for (rank, &id) in ids.iter().enumerate() {
         if profs[rank % profs.len()].window.is_some() {
-            coord.call(Request::PollWindow { session: id })?;
+            coord.call(Request::PollWindow { session: id, max_slides: None })?;
             drains += 1;
         }
     }
@@ -401,8 +427,14 @@ fn main() -> anyhow::Result<()> {
     let snap = coord.metrics().snapshot();
     anyhow::ensure!(snap.window_slides > 0, "the soak emitted no window slides at all");
     println!(
-        "soak: {} slides across {} polls, spilled={} reloaded={}",
-        snap.window_slides, snap.window_polls, snap.sessions_spilled, snap.sessions_reloaded
+        "soak: {} slides across {} polls ({} batched via {} lane-fused sweeps), \
+         spilled={} reloaded={}",
+        snap.window_slides,
+        snap.window_polls,
+        snap.window_slides_batched,
+        snap.window_slide_batches,
+        snap.sessions_spilled,
+        snap.sessions_reloaded
     );
 
     if !check {

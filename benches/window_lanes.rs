@@ -1,0 +1,246 @@
+//! Window-lane benchmark: lane-fused window-slide advancement
+//! (`RollingWindow::advance_batch`, the ta::batch Chen kernels) against
+//! the per-session scalar `advance` loop over the same feeds — the
+//! serving regime where a feed-lane flush leaves N same-spec windowed
+//! sessions each owing a run of slides, and advancing them one session
+//! at a time leaves the SIMD lanes idle. Swept over lane counts
+//! L ∈ {1, 4, 8, 16} x window length ∈ {16, 64} in **both precisions**
+//! (f32 and f64) at d = 2, depth 4, stride 1. Both sides run
+//! single-threaded so the speedup isolates lane utilisation.
+//!
+//! Each timed iteration rebuilds fresh window cursors over fixed,
+//! pre-grown paths and re-advances the same slide run, so the measured
+//! work is exactly the slide advancement (one stored-inverse ⊠ per
+//! slide) plus identical per-side bookkeeping. The slide count per
+//! window is chosen below the retention threshold, so the backing paths
+//! are never truncated and every iteration replays identical work.
+//! Every timed point is first gated on bitwise equality between the
+//! batched lanes' emitted rows and the scalar per-session loop — in the
+//! point's own precision — and a logsignature-window point is gated the
+//! same way (shared projection epilogue), untimed. Writes the
+//! machine-readable record the perf trajectory tracks:
+//!
+//!     cargo bench --bench window_lanes             # -> BENCH_window.json
+//!     cargo bench --bench window_lanes -- --check  # CI smoke: reduced
+//!         iteration count, structural + bitwise gates, relaxed floor
+//!
+//! Acceptance target: >= 1.5x batched-vs-scalar at L = 16, d = 2
+//! (window 64, f32) in the full run, recorded in BENCH_window.json.
+
+use signax::bench::window_json;
+use signax::logsignature::LogSigBasis;
+use signax::path::{Path, RollingWindow, WindowSpec};
+use signax::substrate::benchlib::{bench, black_box, fmt_secs, BenchConfig};
+use signax::substrate::pool::default_threads;
+use signax::substrate::rng::Rng;
+use signax::ta::{Elem, SigSpec};
+
+const D: usize = 2;
+const DEPTH: usize = 4;
+const STRIDE: usize = 1;
+
+/// `(prec, basis, d, depth, window_len, stride, lanes, scalar_s,
+/// batched_s)` — the [`window_json`] point format.
+type Record = (&'static str, &'static str, usize, usize, usize, usize, usize, f64, f64);
+
+/// Paths for one lane group: `lanes` independent streams of `points`
+/// steps each, fully grown up front (windows attach per iteration).
+fn grow_paths<E: Elem>(spec: &SigSpec, lanes: usize, points: usize, seed: u64) -> Vec<Path<E>> {
+    let mut rng = Rng::new(seed);
+    (0..lanes)
+        .map(|_| {
+            let pts: Vec<E> = signax::data::random_path(&mut rng, points, spec.d(), 0.2)
+                .into_iter()
+                .map(E::from_f32)
+                .collect();
+            Path::new(spec, &pts, points).expect("valid bench path")
+        })
+        .collect()
+}
+
+/// One (prec, window_len, lanes) cell: bitwise-gate `advance_batch`
+/// against the per-session scalar loop, then time both sides over fresh
+/// window cursors on the same paths.
+fn sweep_point<E: Elem>(
+    cfg: &BenchConfig,
+    prec: &'static str,
+    wlen: usize,
+    lanes: usize,
+    records: &mut Vec<Record>,
+) -> anyhow::Result<()> {
+    let spec = SigSpec::new(D, DEPTH)?;
+    let wspec = WindowSpec { len: wlen, stride: STRIDE, logsig: None };
+    // Slides per iteration, held under the retention threshold
+    // ((slides + 1) * stride < len) so `advance` never truncates the
+    // paths and every iteration replays the identical slide run.
+    let slides = wlen - 2;
+    let points = wlen + (slides - 1) * STRIDE;
+    let mut paths: Vec<Path<E>> =
+        grow_paths(&spec, lanes, points, 0x51DE ^ ((wlen as u64) << 8) ^ lanes as u64);
+
+    // Correctness gate before timing: batched == scalar, bitwise, lane
+    // by lane, over the exact slide run the timed loop replays.
+    let mut scalar_rows: Vec<Vec<E>> = Vec::with_capacity(lanes);
+    for p in paths.iter_mut() {
+        let mut w = RollingWindow::new(&spec, wspec)?;
+        anyhow::ensure!(w.advance(p)? == slides, "scalar slide count drifted");
+        scalar_rows.push(w.poll().1);
+    }
+    let mut wins: Vec<RollingWindow<E>> =
+        (0..lanes).map(|_| RollingWindow::new(&spec, wspec).unwrap()).collect();
+    {
+        let mut prefs: Vec<&mut Path<E>> = paths.iter_mut().collect();
+        let mut wrefs: Vec<&mut RollingWindow<E>> = wins.iter_mut().collect();
+        anyhow::ensure!(
+            RollingWindow::advance_batch(&mut prefs, &mut wrefs)? == slides * lanes,
+            "batched slide count drifted"
+        );
+    }
+    for (l, w) in wins.iter_mut().enumerate() {
+        anyhow::ensure!(
+            w.poll().1 == scalar_rows[l],
+            "lane {l} of {prec} len={wlen} L={lanes} diverged from scalar advance"
+        );
+    }
+    for (l, p) in paths.iter().enumerate() {
+        anyhow::ensure!(p.base() == 0, "lane {l} was truncated: iterations would not replay");
+    }
+
+    let scalar_s = bench(cfg, || {
+        for p in paths.iter_mut() {
+            let mut w = RollingWindow::new(&spec, wspec).unwrap();
+            black_box(w.advance(p).unwrap());
+        }
+    })
+    .best_secs();
+    let batched_s = bench(cfg, || {
+        let mut wins: Vec<RollingWindow<E>> =
+            (0..lanes).map(|_| RollingWindow::new(&spec, wspec).unwrap()).collect();
+        let mut prefs: Vec<&mut Path<E>> = paths.iter_mut().collect();
+        let mut wrefs: Vec<&mut RollingWindow<E>> = wins.iter_mut().collect();
+        black_box(RollingWindow::advance_batch(&mut prefs, &mut wrefs).unwrap());
+    })
+    .best_secs();
+    println!(
+        "{:>4} {:>4} {:>4} {:>7} {:>12} {:>12} {:>7.2}x",
+        prec,
+        wlen,
+        lanes,
+        slides * lanes,
+        fmt_secs(scalar_s),
+        fmt_secs(batched_s),
+        scalar_s / batched_s
+    );
+    records.push((prec, "sig", D, DEPTH, wlen, STRIDE, lanes, scalar_s, batched_s));
+    Ok(())
+}
+
+/// Logsignature windows share the batched sweep's projection epilogue
+/// (`project_sigs_into`): gate one mixed-geometry group bitwise against
+/// the scalar loop, untimed (plan construction would dominate a timing).
+fn logsig_gate() -> anyhow::Result<()> {
+    let spec = SigSpec::new(D, 3)?;
+    let wspec = WindowSpec { len: 16, stride: 2, logsig: Some(LogSigBasis::Words) };
+    let lanes = 8;
+    let mut paths: Vec<Path<f32>> = grow_paths(&spec, lanes, 40, 0x10651);
+    let mut twins: Vec<Path<f32>> = grow_paths(&spec, lanes, 40, 0x10651);
+    let mut scalar_rows: Vec<Vec<f32>> = Vec::with_capacity(lanes);
+    for p in twins.iter_mut() {
+        let mut w = RollingWindow::new(&spec, wspec)?;
+        w.advance(p)?;
+        scalar_rows.push(w.poll().1);
+    }
+    let mut wins: Vec<RollingWindow<f32>> =
+        (0..lanes).map(|_| RollingWindow::new(&spec, wspec).unwrap()).collect();
+    let mut prefs: Vec<&mut Path<f32>> = paths.iter_mut().collect();
+    let mut wrefs: Vec<&mut RollingWindow<f32>> = wins.iter_mut().collect();
+    RollingWindow::advance_batch(&mut prefs, &mut wrefs)?;
+    for (l, w) in wins.iter_mut().enumerate() {
+        anyhow::ensure!(
+            w.poll().1 == scalar_rows[l],
+            "logsig lane {l} diverged from scalar advance"
+        );
+    }
+    println!("logsig gate ok: {lanes} Words-basis lanes bitwise equal to scalar");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    let cfg = if check {
+        BenchConfig {
+            warmup: 2,
+            repeats: 20,
+            budget: std::time::Duration::from_secs(4),
+            min_repeats: 5,
+        }
+    } else {
+        BenchConfig {
+            warmup: 1,
+            repeats: 30,
+            budget: std::time::Duration::from_secs(6),
+            min_repeats: 3,
+        }
+    };
+    println!(
+        "{:>4} {:>4} {:>4} {:>7} {:>12} {:>12} {:>8}",
+        "prec", "len", "L", "slides", "scalar", "batched", "speedup"
+    );
+    let mut records: Vec<Record> = vec![];
+    for &wlen in &[16usize, 64] {
+        for &lanes in &[1usize, 4, 8, 16] {
+            sweep_point::<f32>(&cfg, "f32", wlen, lanes, &mut records)?;
+            sweep_point::<f64>(&cfg, "f64", wlen, lanes, &mut records)?;
+        }
+    }
+    logsig_gate()?;
+    let json = window_json(default_threads(), &records);
+    std::fs::write("BENCH_window.json", &json)?;
+    println!("\nwrote BENCH_window.json");
+
+    let speedup_at = |prec: &str, wlen: usize, lanes: usize| {
+        records
+            .iter()
+            .find(|r| r.0 == prec && r.4 == wlen && r.6 == lanes)
+            .map(|r| r.7 / r.8)
+            .expect("acceptance point measured")
+    };
+    if check {
+        // Structural smoke: the full sweep grid was measured and the
+        // written record reads back through the in-tree parser.
+        for &prec in &["f32", "f64"] {
+            for &wlen in &[16usize, 64] {
+                for &lanes in &[1usize, 4, 8, 16] {
+                    anyhow::ensure!(
+                        records.iter().any(|r| r.0 == prec && r.4 == wlen && r.6 == lanes),
+                        "sweep missing point {prec} len={wlen} L={lanes}"
+                    );
+                }
+            }
+        }
+        let doc = signax::substrate::json::Json::parse(&json)?;
+        let pts = doc
+            .get("points")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("BENCH_window.json has no points[]"))?;
+        anyhow::ensure!(pts.len() == records.len(), "BENCH_window.json dropped points");
+        // Relaxed floor (full-run acceptance is >= 1.5x): only a genuine
+        // kernel regression should trip this on a noisy CI runner.
+        let s = speedup_at("f32", 64, 16);
+        anyhow::ensure!(
+            s >= 1.1,
+            "window-lane smoke FAILED: speedup at d=2, len=64, L=16 is {s:.2}x \
+             (smoke floor 1.1x; full-run acceptance >= 1.5x)"
+        );
+        println!("smoke ok: {} points, speedup at len=64 L=16 = {s:.2}x", pts.len());
+    } else {
+        let s = speedup_at("f32", 64, 16);
+        anyhow::ensure!(
+            s >= 1.5,
+            "window-lane acceptance FAILED: batched-vs-scalar at d=2, len=64, L=16 \
+             is {s:.2}x (target >= 1.5x)"
+        );
+        println!("acceptance ok: batched-vs-scalar at d=2, len=64, L=16 = {s:.2}x");
+    }
+    Ok(())
+}

@@ -133,9 +133,13 @@ fn main() -> anyhow::Result<()> {
     // feed (one O(1) stored-inverse Chen combination per slide — §5.5's
     // trick), buffers the emitted rows, and `PollWindow` drains them in
     // order; the rows are bitwise identical to the per-query loop above.
-    // Retention is O(window): the session truncates dead history behind
-    // the oldest live window, so a stream can run forever on a fixed
-    // byte budget.
+    // When a feed-lane flush holds two or more windowed sessions of one
+    // spec, their slides advance in ONE lane-fused sweep (ta::batch
+    // kernels, `RollingWindow::advance_batch`) instead of N scalar
+    // loops — the `window_slide_batches` / `window_slides_batched`
+    // counters below count those sweeps. Retention is O(window): the
+    // session truncates dead history behind the oldest live window, so
+    // a stream can run forever on a fixed byte budget.
     let wspec = WindowSpec { len: 16, stride: 4, logsig: None };
     let open = coord.call(Request::OpenWindow {
         points: signax::data::random_path(&mut rng, 8, 2, 0.2).into(),
@@ -153,16 +157,30 @@ fn main() -> anyhow::Result<()> {
             count: 16,
         })?;
         // Poll at any cadence — undelivered slides buffer server-side
-        // (and survive spill/restart; they are session state).
-        let polled = coord.call(Request::PollWindow { session: wid })?;
+        // (and survive spill/restart; they are session state). Bounded
+        // responses: `max_slides` pages the drain, and the response's
+        // `window_remaining` says how many slides are still buffered —
+        // loop until it reads 0.
         let dim = signax::ta::SigSpec::new(2, 3)?.sig_len();
-        slides += polled.values.len() / dim;
+        loop {
+            let page =
+                coord.call(Request::PollWindow { session: wid, max_slides: Some(2) })?;
+            slides += page.values.len() / dim;
+            if page.window_remaining == Some(0) {
+                break;
+            }
+        }
     }
     let snap = coord.metrics().snapshot();
     println!(
         "windowed session {wid:?}: {slides} slides of len={} stride={} delivered \
-         (window_slides={} window_polls={})",
-        wspec.len, wspec.stride, snap.window_slides, snap.window_polls
+         (window_slides={} window_polls={} slide_batches={} slides_batched={})",
+        wspec.len,
+        wspec.stride,
+        snap.window_slides,
+        snap.window_polls,
+        snap.window_slide_batches,
+        snap.window_slides_batched
     );
     if !snap.render_latency().is_empty() {
         println!("{}", snap.render_latency());

@@ -8,6 +8,10 @@ Transliterates, operation for operation, the Rust kernels in
   * ``fused_mexp_vjp_dyn``   — runtime-`d` reverse through the Horner scheme
   * ``fused_mexp_batch``     — lane-interleaved forward twin
   * ``fused_mexp_vjp_batch`` — lane-interleaved backward twin
+  * ``mul_batch_into`` / ``inverse_batch_into`` / ``exp_batch_in_place`` —
+    the lane-interleaved Chen-combination kernels behind batched
+    window-slide advancement, against their scalar twins ``mul_into`` /
+    ``inverse_into`` / ``exp_in_place``
 
 and validates, with no Rust toolchain required:
 
@@ -252,6 +256,115 @@ def fused_mexp_vjp_batch(spec, a, z, g):
     return ga, gz
 
 
+# ----------------------------------------------------- Chen combination ---
+# Mirrors of the lane-interleaved window-slide kernels (`mul_batch_into`,
+# `inverse_batch_into`, `exp_batch_in_place` in rust/src/ta/batch.rs) and
+# their scalar twins (`mul_into`, `inverse_into`, `exp_in_place`). The
+# batched buffers buf[e*L + l] are modelled as arrays of shape
+# (item_len, L), lane axis last, exactly as above. Every accumulation runs
+# one elementwise add per `i` term, in `i` order, matching the Rust loops.
+
+
+def mul_into_dyn(spec, a, b):
+    """Scalar full (x) with implicit units: mirror of mul::mul_into."""
+    dt = a.dtype.type
+    out = np.empty(spec.sig_len, dtype=dt)
+    for k in range(1, spec.depth + 1):
+        ok, lk = spec.off(k), spec.level_len(k)
+        out[ok : ok + lk] = a[ok : ok + lk] + b[ok : ok + lk]
+        for i in range(1, k):
+            ai = a[spec.off(i) : spec.off(i) + spec.level_len(i)]
+            bj = b[spec.off(k - i) : spec.off(k - i) + spec.level_len(k - i)]
+            out[ok : ok + lk] += (ai[:, None] * bj[None, :]).ravel()
+    return out
+
+
+def mul_nounit_dyn(spec, a, b):
+    """Scalar no-unit (x): mirror of mul::mul_nounit_into (out_1 = 0)."""
+    dt = a.dtype.type
+    out = np.zeros(spec.sig_len, dtype=dt)
+    for k in range(1, spec.depth + 1):
+        ok, lk = spec.off(k), spec.level_len(k)
+        for i in range(1, k):
+            ai = a[spec.off(i) : spec.off(i) + spec.level_len(i)]
+            bj = b[spec.off(k - i) : spec.off(k - i) + spec.level_len(k - i)]
+            out[ok : ok + lk] += (ai[:, None] * bj[None, :]).ravel()
+    return out
+
+
+def inverse_dyn(spec, x):
+    """Scalar group inverse: mirror of inverse::inverse_into.
+
+    The Horner-style fixpoint t_1 = -x; t_i = -(x + x (x)' t_{i-1}).
+    """
+    out = -x
+    for _ in range(2, spec.depth + 1):
+        out = -(x + mul_nounit_dyn(spec, x, out))
+    return out
+
+
+def exp_in_place_dyn(spec, out):
+    """Scalar in-place exp from a staged level 1: mirror of exp_in_place."""
+    d, dt = spec.d, out.dtype.type
+    z = out[:d].copy()
+    for k in range(2, spec.depth + 1):
+        inv_k = recip(k, dt)
+        ok = spec.off(k)
+        prev = out[spec.off(k - 1) : ok]
+        out[ok : ok + spec.level_len(k)] = (prev[:, None] * z[None, :] * inv_k).ravel()
+
+
+def mul_batch(spec, a, b):
+    """Lane-fused full (x): mirror of ta::batch::mul_batch_into."""
+    dt = a.dtype.type
+    L = a.shape[1]
+    out = np.empty((spec.sig_len, L), dtype=dt)
+    for k in range(1, spec.depth + 1):
+        ok, lk = spec.off(k), spec.level_len(k)
+        out[ok : ok + lk] = a[ok : ok + lk] + b[ok : ok + lk]
+        for i in range(1, k):
+            ai = a[spec.off(i) : spec.off(i) + spec.level_len(i)]
+            bj = b[spec.off(k - i) : spec.off(k - i) + spec.level_len(k - i)]
+            out[ok : ok + lk] += (ai[:, None, :] * bj[None, :, :]).reshape(-1, L)
+    return out
+
+
+def mul_nounit_batch(spec, a, b):
+    """Lane-fused no-unit (x): mirror of mul_nounit_batch_into."""
+    dt = a.dtype.type
+    L = a.shape[1]
+    out = np.zeros((spec.sig_len, L), dtype=dt)
+    for k in range(1, spec.depth + 1):
+        ok, lk = spec.off(k), spec.level_len(k)
+        for i in range(1, k):
+            ai = a[spec.off(i) : spec.off(i) + spec.level_len(i)]
+            bj = b[spec.off(k - i) : spec.off(k - i) + spec.level_len(k - i)]
+            out[ok : ok + lk] += (ai[:, None, :] * bj[None, :, :]).reshape(-1, L)
+    return out
+
+
+def inverse_batch(spec, x):
+    """Lane-fused group inverse: mirror of inverse_batch_into."""
+    out = -x
+    for _ in range(2, spec.depth + 1):
+        out = -(x + mul_nounit_batch(spec, x, out))
+    return out
+
+
+def exp_batch_in_place(spec, out):
+    """Lane-fused in-place exp: mirror of exp_batch_in_place."""
+    d, dt = spec.d, out.dtype.type
+    L = out.shape[1]
+    z = out[:d].copy()
+    for k in range(2, spec.depth + 1):
+        inv_k = recip(k, dt)
+        ok = spec.off(k)
+        prev = out[spec.off(k - 1) : ok]
+        out[ok : ok + spec.level_len(k)] = (
+            prev[:, None, :] * z[None, :, :] * inv_k
+        ).reshape(-1, L)
+
+
 # --------------------------------------------------------------- serving ---
 
 
@@ -455,6 +568,68 @@ def check_lane_parity(d, depth, lanes, dt, seed):
     )
 
 
+def check_chen_semantics(d, depth, seed):
+    """f64 semantic gates for the Chen mirrors before the bitwise gates.
+
+    mul_into_dyn must agree with the independent mul_ref oracle; the
+    inverse must actually invert (x (x) x^{-1} has every non-unit level
+    ~0); the staged in-place exp must match the factorial reference.
+    """
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(spec.sig_len) * 0.4
+    b = rng.standard_normal(spec.sig_len) * 0.4
+    z = rng.standard_normal(d) * 0.4
+    em = rel_err(mul_into_dyn(spec, a, b), mul_ref(spec, a, b))
+    resid = mul_ref(spec, a, inverse_dyn(spec, a))
+    ei = np.abs(resid).max()
+    staged = np.zeros(spec.sig_len, dtype=np.float64)
+    staged[:d] = z
+    exp_in_place_dyn(spec, staged)
+    ee = rel_err(staged, exp_ref(spec, z))
+    check(
+        f"chen mirrors == oracles (f64)     d={d} depth={depth}",
+        em < 1e-13 and ei < 1e-12 and ee < 1e-12,
+        f"mul {em:.2e} inv-resid {ei:.2e} exp {ee:.2e}",
+    )
+
+
+def check_chen_lane_parity(d, depth, lanes, dt, seed):
+    """Bitwise: the window-slide Chen kernels == their scalar twins.
+
+    Packs random (A, B, z) rows lane-interleaved and asserts
+    mul_batch / inverse_batch / exp_batch_in_place reproduce
+    mul_into_dyn / inverse_dyn / exp_in_place_dyn per lane, exact bits —
+    the invariant `RollingWindow::advance_batch` rests on.
+    """
+    spec = Spec(d, depth)
+    rng = np.random.default_rng(seed)
+    a_rows = (rng.standard_normal((lanes, spec.sig_len)) * 0.4).astype(dt)
+    b_rows = (rng.standard_normal((lanes, spec.sig_len)) * 0.4).astype(dt)
+    z_rows = (rng.standard_normal((lanes, d)) * 0.4).astype(dt)
+    a_il = np.ascontiguousarray(a_rows.T)
+    b_il = np.ascontiguousarray(b_rows.T)
+    mul_b = mul_batch(spec, a_il, b_il)
+    inv_b = inverse_batch(spec, a_il)
+    exp_b = np.zeros((spec.sig_len, lanes), dtype=dt)
+    exp_b[:d] = np.ascontiguousarray(z_rows.T)
+    exp_batch_in_place(spec, exp_b)
+    ok_m = ok_i = ok_e = True
+    for l in range(lanes):
+        ok_m &= np.array_equal(mul_b[:, l], mul_into_dyn(spec, a_rows[l], b_rows[l]))
+        ok_i &= np.array_equal(inv_b[:, l], inverse_dyn(spec, a_rows[l]))
+        exp_s = np.zeros(spec.sig_len, dtype=dt)
+        exp_s[:d] = z_rows[l]
+        exp_in_place_dyn(spec, exp_s)
+        ok_e &= np.array_equal(exp_b[:, l], exp_s)
+    prec = "f32" if dt == np.float32 else "f64"
+    check(
+        f"chen kernels bitwise == scalar    d={d} depth={depth} L={lanes} {prec}",
+        ok_m and ok_i and ok_e,
+        "mul+inverse+exp, per-lane exact bits",
+    )
+
+
 def check_f64_serving(d, depth, seed, points=7, lanes=3):
     """End-to-end typed serve at f64: oracle gate + session + lane parity.
 
@@ -530,6 +705,14 @@ def main():
         for i, (d, depth) in enumerate(sweep):
             for lanes in (1, 3, 5):
                 check_lane_parity(d, depth, lanes, dt, 4000 + 31 * i + lanes)
+
+    print("chen combination: window-slide kernels, oracle + bitwise lane parity")
+    for i, (d, depth) in enumerate(sweep):
+        check_chen_semantics(d, depth, 6000 + i)
+    for dt in (np.float32, np.float64):
+        for i, (d, depth) in enumerate(sweep):
+            for lanes in (1, 3, 5):
+                check_chen_lane_parity(d, depth, lanes, dt, 7000 + 31 * i + lanes)
 
     print("typed serving: end-to-end f64 path -> signature vs float64 oracle")
     for i, (d, depth) in enumerate(sweep):

@@ -27,6 +27,6 @@ pub mod workload;
 
 pub use tables::{
     backward_json, batch_json, dispatch_json, logsig_json, mono_dyn_crossover, persist_json,
-    run_table, sessions_json, soak_json, table_ids, BenchCtx, Scale,
+    run_table, sessions_json, soak_json, table_ids, window_json, BenchCtx, Scale,
 };
 pub use workload::{ChunkSizes, Workload, Zipf};

@@ -1028,6 +1028,40 @@ pub fn soak_json(
     s
 }
 
+/// Render window-lane bench records as `BENCH_window.json`: `points[]`
+/// of `(prec, basis, d, depth, window_len, stride, lanes, scalar_s,
+/// batched_s, speedup)` under top-level `hw_threads`. Written by
+/// `benches/window_lanes.rs`, which times lane-fused window-slide
+/// advancement ([`crate::path::RollingWindow::advance_batch`]) against
+/// the per-session scalar loop over the same feeds; every timed point is
+/// first gated on bitwise equality of the emitted slide rows. The
+/// acceptance point is >= 1.5x at `lanes = 16, d = 2` in f32 in the full
+/// run.
+#[allow(clippy::type_complexity)]
+pub fn window_json(
+    hw_threads: usize,
+    records: &[(&str, &str, usize, usize, usize, usize, usize, f64, f64)],
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"window_lanes\",\n");
+    s.push_str(&format!("  \"hw_threads\": {hw_threads},\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, &(prec, basis, d, depth, len, stride, lanes, scalar, batched)) in
+        records.iter().enumerate()
+    {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"prec\": \"{prec}\", \"basis\": \"{basis}\", \"d\": {d}, \
+             \"depth\": {depth}, \"window_len\": {len}, \"stride\": {stride}, \
+             \"lanes\": {lanes}, \"scalar_s\": {scalar:.9}, \"batched_s\": {batched:.9}, \
+             \"speedup\": {:.3}}}{comma}\n",
+            scalar / batched
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Render adaptive-dispatch bench records as `BENCH_dispatch.json`:
 /// `points[]` of `(mode, phase, requests, wall_s, mean_latency_us,
 /// batches, dispatch_scalar, dispatch_lane_fused, feed_lane_batches)`
@@ -1210,6 +1244,26 @@ mod tests {
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
         assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(1.5));
+    }
+
+    #[test]
+    fn window_json_well_formed() {
+        let json = window_json(
+            8,
+            &[
+                ("f32", "sig", 2, 3, 16, 4, 16, 1.0, 0.5),
+                ("f64", "words", 3, 2, 64, 8, 4, 3.0, 2.0),
+            ],
+        );
+        let parsed = crate::substrate::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("hw_threads").and_then(|v| v.as_f64()), Some(8.0));
+        let pts = parsed.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].get("window_len").and_then(|v| v.as_f64()), Some(16.0));
+        assert_eq!(pts[0].get("lanes").and_then(|v| v.as_f64()), Some(16.0));
+        assert_eq!(pts[0].get("speedup").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(pts[1].get("basis").and_then(|v| v.as_str()), Some("words"));
         assert_eq!(pts[1].get("speedup").and_then(|v| v.as_f64()), Some(1.5));
     }
 

@@ -191,6 +191,13 @@ pub struct Metrics {
     /// is one signature/logsignature row the server emitted via the
     /// O(1) sliding update instead of a client recompute).
     pub window_slides: AtomicU64,
+    /// Lane-fused *window* sweeps: flushed feed groups whose windowed
+    /// sessions (>= 2) advanced their rolling windows through one
+    /// `RollingWindow::advance_batch` call instead of per-session loops.
+    pub window_slide_batches: AtomicU64,
+    /// Slides emitted by those batched sweeps (a subset of the slides
+    /// later counted into `window_slides` when a poll delivers them).
+    pub window_slides_batched: AtomicU64,
     /// Per-request-kind latency histograms, indexed by
     /// [`RequestKind::index`].
     pub latency: [LatencyHistogram; REQUEST_KINDS],
@@ -227,6 +234,8 @@ pub struct MetricsSnapshot {
     pub shape_mix_shapes: u64,
     pub window_polls: u64,
     pub window_slides: u64,
+    pub window_slide_batches: u64,
+    pub window_slides_batched: u64,
     pub latency: [LatencyBuckets; REQUEST_KINDS],
 }
 
@@ -280,6 +289,8 @@ impl Metrics {
             shape_mix_shapes: self.shape_mix_shapes.load(Ordering::Relaxed),
             window_polls: self.window_polls.load(Ordering::Relaxed),
             window_slides: self.window_slides.load(Ordering::Relaxed),
+            window_slide_batches: self.window_slide_batches.load(Ordering::Relaxed),
+            window_slides_batched: self.window_slides_batched.load(Ordering::Relaxed),
             latency: std::array::from_fn(|k| self.latency[k].snapshot()),
         }
     }
@@ -305,7 +316,8 @@ impl MetricsSnapshot {
             "requests={} (native={} xla={} stream={} logsig={}) batches={} rows={}/{} errors={} \
              batch_failures={} mean_latency={:?} sessions={} updates={} open={} \
              resident_bytes={} evicted={} expired={} spilled={} reloaded={} spilled_bytes={} \
-             wal_appends={} window_polls={} window_slides={}",
+             wal_appends={} window_polls={} window_slides={} window_slide_batches={} \
+             window_slides_batched={}",
             self.requests,
             self.native_requests,
             self.xla_requests,
@@ -329,6 +341,8 @@ impl MetricsSnapshot {
             self.wal_appends,
             self.window_polls,
             self.window_slides,
+            self.window_slide_batches,
+            self.window_slides_batched,
         )
     }
 
@@ -497,12 +511,18 @@ mod tests {
         let m = Metrics::default();
         m.window_polls.store(6, Ordering::Relaxed);
         m.window_slides.store(42, Ordering::Relaxed);
+        m.window_slide_batches.store(3, Ordering::Relaxed);
+        m.window_slides_batched.store(17, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.window_polls, 6);
         assert_eq!(s.window_slides, 42);
+        assert_eq!(s.window_slide_batches, 3);
+        assert_eq!(s.window_slides_batched, 17);
         let line = s.render();
         assert!(line.contains("window_polls=6"));
         assert!(line.contains("window_slides=42"));
+        assert!(line.contains("window_slide_batches=3"));
+        assert!(line.contains("window_slides_batched=17"));
     }
 
     #[test]

@@ -115,9 +115,15 @@ pub enum Request {
     OpenWindow { points: Rows, stream: usize, d: usize, depth: usize, window: WindowSpec },
     /// Drain a rolling-window session's undelivered slides. The response
     /// packs them row-major in `values` (one row per slide, width
-    /// `sig_len` or the basis dimension) and sets
-    /// [`Response::window_slide`] to the first row's slide index.
-    PollWindow { session: SessionId },
+    /// `sig_len` or the basis dimension), sets
+    /// [`Response::window_slide`] to the first row's slide index, and
+    /// [`Response::window_remaining`] to the slides still buffered
+    /// server-side. `max_slides` caps the page (`None` = drain
+    /// everything): a slow poller bounds each response's payload and
+    /// re-issues the request until `window_remaining` reads 0 — the
+    /// continuation cursor is implicit (slides always deliver in order,
+    /// so the next page starts where this one ended).
+    PollWindow { session: SessionId, max_slides: Option<u64> },
 }
 
 impl Request {
@@ -163,6 +169,10 @@ pub struct Response {
     /// `values` (row `r` is slide `window_slide + r`). `None` everywhere
     /// else.
     pub window_slide: Option<u64>,
+    /// Set on `PollWindow` responses: slides still buffered server-side
+    /// after this page (0 = drained; nonzero only when the request's
+    /// `max_slides` cap truncated the drain). `None` everywhere else.
+    pub window_remaining: Option<u64>,
 }
 
 /// Adaptive-dispatch knobs: how the coordinator's [`ExecPlanner`] turns
@@ -682,6 +692,7 @@ impl Coordinator {
                         backend: Backend::Xla,
                         session: None,
                         window_slide: None,
+                        window_remaining: None,
                     });
                 }
             }
@@ -802,6 +813,7 @@ impl Coordinator {
             backend: Backend::Native,
             session: None,
             window_slide: None,
+            window_remaining: None,
         })
     }
 
@@ -827,6 +839,7 @@ impl Coordinator {
         self.metrics
             .stream_requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut window_remaining = None;
         let (values, session, window_slide) = match req {
             Request::OpenStream { points, stream, d, depth } => {
                 // The seed rows' element width becomes the session's
@@ -858,8 +871,9 @@ impl Coordinator {
                 let (id, sig) = self.sessions.open_window(&spec, points, *stream, *window)?;
                 (sig, Some(id), None)
             }
-            Request::PollWindow { session } => {
-                let (first, rows) = self.sessions.poll_window(*session)?;
+            Request::PollWindow { session, max_slides } => {
+                let (first, rows, left) = self.sessions.poll_window_page(*session, *max_slides)?;
+                window_remaining = Some(left);
                 (rows, Some(*session), Some(first))
             }
             Request::Feed { session, points, count } => {
@@ -941,6 +955,7 @@ impl Coordinator {
             backend: Backend::Native,
             session,
             window_slide,
+            window_remaining,
         }))
     }
 
@@ -1849,11 +1864,22 @@ mod tests {
             c.call(Request::Feed { session: sid, points: chunk.clone(), count: cnt }).unwrap();
             c.call(Request::Feed { session: twin, points: chunk, count: cnt }).unwrap();
             fed += cnt;
-            let r = c.call(Request::PollWindow { session: sid }).unwrap();
-            let mut k = r.window_slide.unwrap();
-            for row in r.values.as_f32().unwrap().chunks(dim) {
-                slides.push((k, row.to_vec()));
-                k += 1;
+            // Drain in pages of at most 2 slides: the cap bounds every
+            // response's payload and `window_remaining` counts down to 0,
+            // with the pages reassembling the full drain exactly.
+            loop {
+                let r = c
+                    .call(Request::PollWindow { session: sid, max_slides: Some(2) })
+                    .unwrap();
+                assert!(r.values.len() <= 2 * dim, "page exceeded its cap");
+                let mut k = r.window_slide.unwrap();
+                for row in r.values.as_f32().unwrap().chunks(dim) {
+                    slides.push((k, row.to_vec()));
+                    k += 1;
+                }
+                if r.window_remaining.unwrap() == 0 {
+                    break;
+                }
             }
         }
         assert_eq!(fed, total);
@@ -1872,9 +1898,10 @@ mod tests {
         // The windowed session still reports its absolute stream length,
         // and an empty poll names the next future slide.
         assert_eq!(c.sessions().session_len(sid).unwrap(), total);
-        let empty = c.call(Request::PollWindow { session: sid }).unwrap();
+        let empty = c.call(Request::PollWindow { session: sid, max_slides: None }).unwrap();
         assert!(empty.values.is_empty());
         assert_eq!(empty.window_slide, Some(slides.len() as u64));
+        assert_eq!(empty.window_remaining, Some(0));
     }
 
     #[test]
@@ -1900,8 +1927,9 @@ mod tests {
             .unwrap()
             .session
             .unwrap();
-        let r = c.call(Request::PollWindow { session: sid }).unwrap();
+        let r = c.call(Request::PollWindow { session: sid, max_slides: None }).unwrap();
         assert_eq!(r.window_slide, Some(0));
+        assert_eq!(r.window_remaining, Some(0));
         let dim = crate::words::witt_dimension(2, 3);
         assert_eq!(r.values.len(), 3 * dim);
         let spec = SigSpec::new(2, 3).unwrap();
@@ -1912,7 +1940,7 @@ mod tests {
             assert_eq!(row, want.as_f32().unwrap(), "logsig slide {k}");
         }
         // Polling a plain stream is a clean error, as is a malformed spec.
-        assert!(c.call(Request::PollWindow { session: twin }).is_err());
+        assert!(c.call(Request::PollWindow { session: twin, max_slides: None }).is_err());
         assert!(c
             .call(Request::OpenWindow {
                 points: vec![0.0f32; 2 * 2].into(),

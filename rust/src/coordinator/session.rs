@@ -64,7 +64,22 @@
 //! spilled and WAL-recovered with the rest of the state, since their
 //! source points may already be truncated) until a poll drains them;
 //! polls are themselves WAL-logged so a warm restart re-delivers
-//! exactly the undelivered suffix.
+//! exactly the undelivered suffix. Polls are pageable: `PollWindow`
+//! takes an optional `max_slides` cap and the response carries a
+//! `window_remaining` continuation count, with the WAL `Poll` record
+//! logging the *delivered-up-to* cursor of the actual page so paged
+//! drains replay exactly like full ones.
+//!
+//! Slide advancement is lane-fused like feeding: after a feed-lane
+//! flush ([`SessionManager::feed_batch`] / `feed_wave`), windowed
+//! sessions in the flushed group whose windows share a
+//! `(d, depth, dtype, logsig)` key advance together through one
+//! [`RollingWindow::advance_batch`] sweep over the lane-interleaved
+//! Chen kernels ([`crate::ta::batch`]) — gated by
+//! [`ExecPlanner::plan_window_sweep`] (scalar below 2 lanes) and
+//! bitwise identical per session to the scalar `advance` loop.
+//! [`Metrics`] counts the sweeps (`window_slide_batches`) and the
+//! slides they carried (`window_slides_batched`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -72,6 +87,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
+use crate::exec::{ExecPlan, ExecPlanner, WorkShape};
 use crate::logsignature::LogSigPlan;
 use crate::path::{Path, RollingWindow, WindowSpec};
 use crate::state::{
@@ -178,14 +194,18 @@ impl<E: Elem> TypedSession<E> {
         Ok(())
     }
 
-    /// Drain undelivered slides: `(first, delivered-up-to, rows)`.
-    fn poll(&mut self) -> anyhow::Result<(u64, u64, Vec<E>)> {
+    /// Drain up to `max_slides` undelivered slides (`None` = the whole
+    /// backlog): `(first, delivered-up-to, rows, slides still pending)`.
+    fn poll(&mut self, max_slides: Option<u64>) -> anyhow::Result<(u64, u64, Vec<E>, u64)> {
         let w = self.window.as_mut().ok_or_else(|| {
             anyhow::anyhow!("session has no rolling window (opened as a plain stream)")
         })?;
-        let (first, rows) = w.poll();
+        let (first, rows) = match max_slides {
+            Some(cap) => w.poll_limited(usize::try_from(cap).unwrap_or(usize::MAX)),
+            None => w.poll(),
+        };
         let upto = first + (rows.len() / w.out_dim()) as u64;
-        Ok((first, upto, rows))
+        Ok((first, upto, rows, w.pending_rows() as u64))
     }
 
     /// Path buffers plus buffered undelivered window rows — pending
@@ -311,18 +331,18 @@ impl ResidentPath {
         }
     }
 
-    /// Drain undelivered window slides: `(first slide index,
-    /// delivered-up-to, rows)`. Errors for sessions opened without a
-    /// window.
-    fn poll(&mut self) -> anyhow::Result<(u64, u64, Rows)> {
+    /// Drain up to `max_slides` undelivered window slides (`None` = all):
+    /// `(first slide index, delivered-up-to, rows, slides still pending)`.
+    /// Errors for sessions opened without a window.
+    fn poll(&mut self, max_slides: Option<u64>) -> anyhow::Result<(u64, u64, Rows, u64)> {
         Ok(match self {
             ResidentPath::F32(s) => {
-                let (first, upto, rows) = s.poll()?;
-                (first, upto, rows.into())
+                let (first, upto, rows, left) = s.poll(max_slides)?;
+                (first, upto, rows.into(), left)
             }
             ResidentPath::F64(s) => {
-                let (first, upto, rows) = s.poll()?;
-                (first, upto, rows.into())
+                let (first, upto, rows, left) = s.poll(max_slides)?;
+                (first, upto, rows.into(), left)
             }
         })
     }
@@ -370,6 +390,9 @@ impl ResidentPath {
 /// sweep) and needs the monomorphic `Path<E>` lanes back out.
 trait TypedPath: Elem {
     fn path_mut(rp: &mut ResidentPath) -> &mut Path<Self>;
+    /// Split borrow for the batched slide sweep: the path together with
+    /// its rolling window (when the session is windowed), mutably at once.
+    fn lanes_mut(rp: &mut ResidentPath) -> (&mut Path<Self>, Option<&mut RollingWindow<Self>>);
 }
 
 impl TypedPath for f32 {
@@ -379,12 +402,26 @@ impl TypedPath for f32 {
             ResidentPath::F64(_) => unreachable!("run grouped by dtype"),
         }
     }
+
+    fn lanes_mut(rp: &mut ResidentPath) -> (&mut Path<f32>, Option<&mut RollingWindow<f32>>) {
+        match rp {
+            ResidentPath::F32(s) => (&mut s.path, s.window.as_mut()),
+            ResidentPath::F64(_) => unreachable!("run grouped by dtype"),
+        }
+    }
 }
 
 impl TypedPath for f64 {
     fn path_mut(rp: &mut ResidentPath) -> &mut Path<f64> {
         match rp {
             ResidentPath::F64(s) => &mut s.path,
+            ResidentPath::F32(_) => unreachable!("run grouped by dtype"),
+        }
+    }
+
+    fn lanes_mut(rp: &mut ResidentPath) -> (&mut Path<f64>, Option<&mut RollingWindow<f64>>) {
+        match rp {
+            ResidentPath::F64(s) => (&mut s.path, s.window.as_mut()),
             ResidentPath::F32(_) => unreachable!("run grouped by dtype"),
         }
     }
@@ -1067,26 +1104,44 @@ impl SessionManager {
     /// exactly the rows no poll returned. Errors for sessions opened
     /// without a window.
     pub fn poll_window(&self, id: SessionId) -> anyhow::Result<(u64, Rows)> {
+        let (first, rows, _) = self.poll_window_page(id, None)?;
+        Ok((first, rows))
+    }
+
+    /// [`SessionManager::poll_window`] with a page cap: at most
+    /// `max_slides` slides come back (`None` = the whole backlog), and the
+    /// third element counts the slides **still pending** after this page
+    /// (0 = drained) — a slow poller re-issues with the continuation
+    /// cursor `first + rows / out_dim` implied until it reads 0. The WAL
+    /// record logs exactly the delivered-up-to cursor, so paged drains
+    /// replay precisely like full ones: a warm restart re-delivers
+    /// exactly the suffix no page returned.
+    pub fn poll_window_page(
+        &self,
+        id: SessionId,
+        max_slides: Option<u64>,
+    ) -> anyhow::Result<(u64, Rows, u64)> {
         let sess = self.inner.get(id)?;
         self.inner.touch(&sess);
-        let ((first, upto, rows), reloaded) = self.inner.with_resident(id, &sess, |path| {
-            let (first, upto, rows) = path.poll()?;
-            // The drained rows leave the pending buffer: accounted
-            // storage shrinks. Log under the slot lock (apply order),
-            // and only when something was actually delivered.
-            self.inner.account_bytes(&sess, path.storage_bytes());
-            if upto > first {
-                self.inner.log_wal(&WalRecord::Poll { id: id.0, upto });
-            }
-            Ok((first, upto, rows))
-        })?;
+        let ((first, upto, rows, left), reloaded) =
+            self.inner.with_resident(id, &sess, |path| {
+                let (first, upto, rows, left) = path.poll(max_slides)?;
+                // The drained rows leave the pending buffer: accounted
+                // storage shrinks. Log under the slot lock (apply order),
+                // and only when something was actually delivered.
+                self.inner.account_bytes(&sess, path.storage_bytes());
+                if upto > first {
+                    self.inner.log_wal(&WalRecord::Poll { id: id.0, upto });
+                }
+                Ok((first, upto, rows, left))
+            })?;
         self.inner.touch(&sess);
         self.inner.metrics.window_polls.fetch_add(1, Ordering::Relaxed);
         self.inner.metrics.window_slides.fetch_add(upto - first, Ordering::Relaxed);
         if reloaded {
             self.inner.enforce_budget(&[id.0]);
         }
-        Ok((first, rows))
+        Ok((first, rows, left))
     }
 
     /// Feed several sessions in one call, lane-fusing same-spec groups —
@@ -1245,6 +1300,59 @@ impl SessionManager {
                     } else {
                         self.inner.metrics.dispatch_scalar.fetch_add(1, Ordering::Relaxed);
                     }
+                    // `update_batch` extended the lanes but knows nothing
+                    // of windows; advance the run's windowed sessions now,
+                    // in one planner-gated sweep. Two or more windowed
+                    // lanes (necessarily one `(d, depth, dtype)` — the run
+                    // is homogeneous, so f32/f64 never coalesce) advance
+                    // through `RollingWindow::advance_batch`'s lane-fused
+                    // Chen kernels; below that the scalar per-session
+                    // advance runs. Either way each session emits exactly
+                    // what a scalar feed of the same points would
+                    // (bitwise — the batched kernels replay the scalar op
+                    // order per lane).
+                    fn advance_run<E: TypedPath>(
+                        run: &mut [(usize, MutexGuard<'_, Slot>)],
+                        key: (usize, usize, Precision),
+                    ) -> anyhow::Result<(bool, usize)> {
+                        let mut wpaths: Vec<&mut Path<E>> = Vec::new();
+                        let mut wins: Vec<&mut RollingWindow<E>> = Vec::new();
+                        for (_, g) in run.iter_mut() {
+                            let (p, w) = E::lanes_mut(resident_path(&mut **g));
+                            if let Some(w) = w {
+                                wpaths.push(p);
+                                wins.push(w);
+                            }
+                        }
+                        let shape = WorkShape {
+                            batch: wpaths.len(),
+                            points: 0,
+                            d: key.0,
+                            depth: key.1,
+                            dtype: key.2,
+                        };
+                        match ExecPlanner::new(1).plan_window_sweep(wpaths.len(), &shape) {
+                            ExecPlan::Scalar => {
+                                let mut slides = 0usize;
+                                for (p, w) in wpaths.iter_mut().zip(wins.iter_mut()) {
+                                    slides += w.advance(&mut **p)?;
+                                }
+                                Ok((false, slides))
+                            }
+                            _ => Ok((true, RollingWindow::advance_batch(&mut wpaths, &mut wins)?)),
+                        }
+                    }
+                    let swept = match key.2 {
+                        Precision::F32 => advance_run::<f32>(run, key),
+                        Precision::F64 => advance_run::<f64>(run, key),
+                    };
+                    if let Ok((true, slides)) = &swept {
+                        self.inner.metrics.window_slide_batches.fetch_add(1, Ordering::Relaxed);
+                        self.inner
+                            .metrics
+                            .window_slides_batched
+                            .fetch_add(*slides as u64, Ordering::Relaxed);
+                    }
                     for (idx, guard) in run.iter_mut() {
                         // Accounting under this slot's lock, exactly like
                         // a scalar feed.
@@ -1253,12 +1361,6 @@ impl SessionManager {
                             .find(|(ri, _)| *ri == *idx)
                             .expect("locked lane was resolved");
                         let path = resident_path(&mut **guard);
-                        // `update_batch` extended the lanes but knows
-                        // nothing of windows; advance here so a batched
-                        // feed emits exactly what a scalar feed of the
-                        // same points would (bitwise — same `Path`
-                        // queries in the same order per session).
-                        let advanced = path.advance_window();
                         self.inner.account_bytes(sess, path.storage_bytes());
                         self.inner.metrics.session_updates.fetch_add(1, Ordering::Relaxed);
                         // Log while the slot lock is held, like a scalar
@@ -1269,8 +1371,13 @@ impl SessionManager {
                             count: *count as u32,
                             points: points.clone(),
                         });
-                        results[*idx] = Some(match advanced {
-                            Ok(()) => Ok(path.signature()),
+                        results[*idx] = Some(match &swept {
+                            Ok(_) => Ok(path.signature()),
+                            // A window invariant violation is collective
+                            // (the sweep is all-or-nothing), so it fails
+                            // the whole run — like an `update_batch`
+                            // failure, and just as unreachable in
+                            // practice.
                             Err(e) => Err(anyhow::anyhow!("window advance failed: {e}")),
                         });
                     }

@@ -95,7 +95,7 @@ impl ShardedCoordinator {
             Request::Feed { session, .. }
             | Request::QueryInterval { session, .. }
             | Request::LogSigQueryInterval { session, .. }
-            | Request::PollWindow { session }
+            | Request::PollWindow { session, .. }
             | Request::CloseStream { session } => self.placement.locate(session.0),
             _ => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len(),
         }

@@ -246,6 +246,24 @@ impl ExecPlanner {
         }
     }
 
+    /// Strategy for the batched window-slide sweep that follows a
+    /// feed-lane flush: `lanes` windowed sessions of one `(d, depth,
+    /// dtype)` group advancing their rolling windows together.
+    ///
+    /// Below two lanes the per-session scalar advance runs — a lone
+    /// windowed streamer never pays lane pack/repack overhead for a batch
+    /// of one. From two lanes up the sweep lane-fuses through the batched
+    /// Chen kernels (bitwise identical per lane either way, so this is a
+    /// scheduling decision only, like every other plan).
+    pub fn plan_window_sweep(&self, lanes: usize, s: &WorkShape) -> ExecPlan {
+        if lanes < 2 {
+            ExecPlan::Scalar
+        } else {
+            let width = lane_width(s.d, s.depth, s.dtype);
+            ExecPlan::LaneFused { block: lane_block(lanes, self.threads, width) }
+        }
+    }
+
     /// Record one observed request shape into the mix histogram.
     pub fn record_shape(&self, key: ShapeKey) {
         self.mix.record(key);
@@ -347,6 +365,23 @@ mod tests {
 
     fn shape(batch: usize, points: usize, d: usize) -> WorkShape {
         WorkShape { batch, points, d, depth: 4, dtype: Precision::F32 }
+    }
+
+    #[test]
+    fn window_sweep_gate_is_two_lanes() {
+        // A lone windowed streamer never pays repack overhead; from two
+        // lanes up the slide sweep lane-fuses.
+        let p = ExecPlanner::new(4);
+        assert_eq!(p.plan_window_sweep(0, &shape(1, 64, 2)), ExecPlan::Scalar);
+        assert_eq!(p.plan_window_sweep(1, &shape(1, 64, 2)), ExecPlan::Scalar);
+        assert!(matches!(
+            p.plan_window_sweep(2, &shape(2, 64, 2)),
+            ExecPlan::LaneFused { .. }
+        ));
+        assert!(matches!(
+            p.plan_window_sweep(16, &shape(16, 64, 2)),
+            ExecPlan::LaneFused { .. }
+        ));
     }
 
     #[test]

@@ -98,7 +98,14 @@
 //!   output) and every feed advances the window family incrementally —
 //!   one O(1) stored-inverse Chen combination per emitted slide, bitwise
 //!   identical to per-query answers over the same intervals — while
-//!   `PollWindow` drains the buffered slides. Window sessions retain only
+//!   `PollWindow` drains the buffered slides (pageable via `max_slides`
+//!   + the response's `window_remaining` continuation). Slide
+//!   advancement is lane-fused like feeding: when a feed-lane flush
+//!   holds two or more same-spec windowed sessions, their slides advance
+//!   through one [`path::RollingWindow::advance_batch`] sweep over the
+//!   lane-interleaved Chen kernels ([`ta::batch`]), planner-gated
+//!   ([`exec::ExecPlanner::plan_window_sweep`]) and bitwise identical
+//!   per session to the scalar loop. Window sessions retain only
 //!   the live horizon: a retention watermark ([`path::Path::base`])
 //!   truncates dead `points`/`sigs`/`inv_sigs` prefixes geometrically, so
 //!   per-session memory is O(window), not O(history), however long the

@@ -306,6 +306,34 @@ impl<E: Elem> Path<E> {
         Ok(())
     }
 
+    /// Operand rows for one stored-inverse Chen combination
+    /// `Sig(x_i..x_j) = I_i ⊠ S_j` (§5.5): `(I_i, S_j)` by reference — the
+    /// gather the batched window sweep packs into its lane-interleaved
+    /// buffers. Callers guarantee `base() <= i`, `0 < i`, `i + 1 < j` and
+    /// `j < len()` (the general [`Path::query_into`] case).
+    pub(crate) fn chen_operands(&self, i: usize, j: usize) -> (&[E], &[E]) {
+        let len = self.spec.sig_len();
+        let (oi, oj) = (self.sig_off(i), self.sig_off(j));
+        (&self.inv_sigs[oi * len..(oi + 1) * len], &self.sigs[oj * len..(oj + 1) * len])
+    }
+
+    /// The stored expanding-signature row `S_j = Sig(x_0..x_j)` — the
+    /// `i == 0` window-slide case, a plain copy with no floating-point ops.
+    /// Callers guarantee `max(base(), 1) <= j < len()`.
+    pub(crate) fn sig_row(&self, j: usize) -> &[E] {
+        let len = self.spec.sig_len();
+        let o = self.sig_off(j);
+        &self.sigs[o * len..(o + 1) * len]
+    }
+
+    /// The retained point row at absolute index `p` (`base() <= p < len()`)
+    /// — the adjacent-interval slide stages `x_{i+1} - x_i` from these.
+    pub(crate) fn point_row(&self, p: usize) -> &[E] {
+        let d = self.spec.d();
+        let r = p - self.base;
+        &self.points[r * d..(r + 1) * d]
+    }
+
     /// The signature of the whole path so far.
     pub fn signature(&self) -> Vec<E> {
         let len = self.spec.sig_len();

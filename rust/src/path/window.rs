@@ -26,8 +26,10 @@
 //! it alongside the path buffers, and WAL replay re-delivers exactly the
 //! undelivered suffix.
 
+use crate::logsignature::batch::project_sigs_into;
 use crate::logsignature::{LogSigBasis, LogSigPlan, LogSigWorkspace};
 use crate::path::Path;
+use crate::ta::batch::{exp_batch_in_place, mul_batch_into, unpack_lane, BatchWorkspace};
 use crate::ta::{Elem, SigSpec};
 
 /// A sliding-window family over a session's stream.
@@ -70,6 +72,12 @@ pub struct RollingWindow<E: Elem> {
     pending: Vec<E>,
     plan: Option<LogSigPlan>,
     ws: Option<LogSigWorkspace<E>>,
+    /// Reusable per-slide emission row (`out_dim` values). Transient like
+    /// `plan`/`ws`: excluded from `raw_parts` and from `pending_bytes`, and
+    /// fully overwritten before every use, so hoisting it out of the slide
+    /// loop changes no emitted bits — it only removes a per-slide
+    /// reallocation from the hot path.
+    scratch: Vec<E>,
 }
 
 impl<E: Elem> RollingWindow<E> {
@@ -121,6 +129,7 @@ impl<E: Elem> RollingWindow<E> {
             pending,
             plan,
             ws,
+            scratch: vec![E::ZERO; out_dim],
         })
     }
 
@@ -161,28 +170,214 @@ impl<E: Elem> RollingWindow<E> {
         while self.next_end < path.len() {
             let j = self.next_end;
             let i = j + 1 - len;
-            let off = self.pending.len();
-            self.pending.resize(off + self.out_dim, E::ZERO);
             match (&self.plan, &mut self.ws) {
                 (Some(plan), Some(ws)) => {
-                    path.logsig_query_into(i, j, plan, ws, &mut self.pending[off..])?
+                    path.logsig_query_into(i, j, plan, ws, &mut self.scratch)?
                 }
-                _ => path.query_into(i, j, &mut self.pending[off..])?,
+                _ => path.query_into(i, j, &mut self.scratch)?,
             }
+            self.pending.extend_from_slice(&self.scratch);
             self.emitted += 1;
             emitted_now += 1;
             self.next_end += stride;
         }
-        // Retention: points strictly before the next window's start are
-        // dead. Truncate only once the dead prefix reaches half the
-        // retained storage, so each point is moved O(1) times overall and
-        // storage stays within 2x the live horizon.
-        let target = (self.next_end + 1).saturating_sub(len);
+        self.retain(path);
+        Ok(emitted_now)
+    }
+
+    /// Retention: points strictly before the next window's start are dead.
+    /// Truncate only once the dead prefix reaches half the retained
+    /// storage, so each point is moved O(1) times overall and storage
+    /// stays within 2x the live horizon. Shared by the scalar and batched
+    /// sweeps — truncation never touches a retained `S_j` / `I_i` row, so
+    /// it cannot change emitted bits.
+    fn retain(&self, path: &mut Path<E>) {
+        let target = (self.next_end + 1).saturating_sub(self.spec.len);
         let dead = target.saturating_sub(path.base());
         if dead > 0 && 2 * dead >= path.stored_len() {
             path.truncate_front(target);
         }
-        Ok(emitted_now)
+    }
+
+    /// Advance N windowed sessions of the **same path spec** (same `(d,
+    /// depth, dtype)` — window geometries may differ per lane) through the
+    /// lane-interleaved Chen kernels in one sweep. Returns the total
+    /// slides emitted across all lanes.
+    ///
+    /// Per sweep step, each lane with a still-unemitted window contributes
+    /// one slide; lanes are partitioned by [`Path::query_into`]'s case
+    /// analysis — adjacent windows (`len == 2`) stage `x_j - x_i` and run
+    /// [`exp_batch_in_place`], prefix windows (`i == 0`) are a copy with
+    /// no floating-point work, and the general case gathers the stored
+    /// `(I_i, S_j)` rows via [`Path::chen_operands`] into
+    /// [`mul_batch_into`]. Because lanes emit different slide counts, the
+    /// active group shrinks mid-sweep and the packed buffers repack to the
+    /// surviving width (the `Path::update_batch` ragged pattern). Each
+    /// batched kernel replays the scalar op order per lane and the logsig
+    /// epilogue is the shared [`project_sigs_into`] sequence, so every
+    /// lane's emissions are **bitwise identical** to running
+    /// [`RollingWindow::advance`] per session — the lane-engine contract,
+    /// pinned by property tests below.
+    pub fn advance_batch(
+        paths: &mut [&mut Path<E>],
+        windows: &mut [&mut RollingWindow<E>],
+    ) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            paths.len() == windows.len(),
+            "advance_batch: {} paths vs {} windows",
+            paths.len(),
+            windows.len()
+        );
+        let lanes = paths.len();
+        if lanes == 0 {
+            return Ok(0);
+        }
+        if lanes == 1 {
+            return windows[0].advance(&mut *paths[0]);
+        }
+        let spec = paths[0].spec().clone();
+        let sig_len = spec.sig_len();
+        let d = spec.d();
+        // All-or-nothing validation before any lane mutates: spec
+        // uniformity (dtype included — f32/f64 never coalesce) and the
+        // slide count each lane will emit this sweep.
+        let mut slides = vec![0usize; lanes];
+        for l in 0..lanes {
+            anyhow::ensure!(
+                paths[l].spec() == &spec,
+                "advance_batch lane {l}: path spec mismatch (group lanes by (d, depth, dtype))"
+            );
+            let w = &windows[l];
+            if let Some(plan) = &w.plan {
+                plan.check_compatible(&spec)?;
+            }
+            let plen = paths[l].len();
+            if plen > w.next_end {
+                slides[l] = (plen - 1 - w.next_end) / w.spec.stride + 1;
+                let first_i = w.next_end + 1 - w.spec.len;
+                anyhow::ensure!(
+                    first_i >= paths[l].base(),
+                    "advance_batch lane {l}: window start {first_i} below retention watermark {}",
+                    paths[l].base()
+                );
+            }
+        }
+        let max_steps = slides.iter().copied().max().unwrap_or(0);
+        // Packed operand/output buffers plus one workspace per kernel
+        // shape, rebuilt only when the surviving group width changes.
+        let mut ws_mul: Option<BatchWorkspace<E>> = None;
+        let mut ws_exp: Option<BatchWorkspace<E>> = None;
+        let mut packed_a: Vec<E> = Vec::new();
+        let mut packed_b: Vec<E> = Vec::new();
+        let mut packed_out: Vec<E> = Vec::new();
+        let mut row = vec![E::ZERO; sig_len];
+        // Logsig lanes stage raw signature rows here and project in one
+        // per-lane epilogue; plain lanes append to `pending` directly.
+        let mut sig_rows: Vec<Vec<E>> = (0..lanes).map(|_| Vec::new()).collect();
+        let mut mul_group: Vec<(usize, usize, usize)> = Vec::new();
+        let mut exp_group: Vec<(usize, usize, usize)> = Vec::new();
+        for step in 0..max_steps {
+            mul_group.clear();
+            exp_group.clear();
+            for l in 0..lanes {
+                if slides[l] <= step {
+                    continue;
+                }
+                let w = &windows[l];
+                let j = w.next_end + step * w.spec.stride;
+                let i = j + 1 - w.spec.len;
+                if j == i + 1 {
+                    exp_group.push((l, i, j));
+                } else if i == 0 {
+                    // Prefix window: the stored row verbatim, no FP work.
+                    if windows[l].plan.is_some() {
+                        sig_rows[l].extend_from_slice(paths[l].sig_row(j));
+                    } else {
+                        let srow = paths[l].sig_row(j);
+                        windows[l].pending.extend_from_slice(srow);
+                    }
+                } else {
+                    mul_group.push((l, i, j));
+                }
+            }
+            let g = mul_group.len();
+            if g > 0 {
+                if ws_mul.as_ref().map(|w| w.lanes()) != Some(g) {
+                    ws_mul = Some(BatchWorkspace::new(&spec, g));
+                }
+                packed_a.resize(sig_len * g, E::ZERO);
+                packed_b.resize(sig_len * g, E::ZERO);
+                packed_out.resize(sig_len * g, E::ZERO);
+                for (s, &(l, i, j)) in mul_group.iter().enumerate() {
+                    let (inv_i, s_j) = paths[l].chen_operands(i, j);
+                    for e in 0..sig_len {
+                        packed_a[e * g + s] = inv_i[e];
+                        packed_b[e * g + s] = s_j[e];
+                    }
+                }
+                mul_batch_into(
+                    &spec,
+                    &packed_a[..sig_len * g],
+                    &packed_b[..sig_len * g],
+                    &mut packed_out[..sig_len * g],
+                    ws_mul.as_mut().expect("workspace just ensured"),
+                );
+                for (s, &(l, _, _)) in mul_group.iter().enumerate() {
+                    unpack_lane(sig_len, g, &packed_out[..sig_len * g], s, &mut row);
+                    if windows[l].plan.is_some() {
+                        sig_rows[l].extend_from_slice(&row);
+                    } else {
+                        windows[l].pending.extend_from_slice(&row);
+                    }
+                }
+            }
+            let g = exp_group.len();
+            if g > 0 {
+                if ws_exp.as_ref().map(|w| w.lanes()) != Some(g) {
+                    ws_exp = Some(BatchWorkspace::new(&spec, g));
+                }
+                packed_out.resize(sig_len * g, E::ZERO);
+                for (s, &(l, i, j)) in exp_group.iter().enumerate() {
+                    let pi = paths[l].point_row(i);
+                    let pj = paths[l].point_row(j);
+                    for c in 0..d {
+                        packed_out[c * g + s] = pj[c] - pi[c];
+                    }
+                }
+                exp_batch_in_place(
+                    &spec,
+                    &mut packed_out[..sig_len * g],
+                    ws_exp.as_mut().expect("workspace just ensured"),
+                );
+                for (s, &(l, _, _)) in exp_group.iter().enumerate() {
+                    unpack_lane(sig_len, g, &packed_out[..sig_len * g], s, &mut row);
+                    if windows[l].plan.is_some() {
+                        sig_rows[l].extend_from_slice(&row);
+                    } else {
+                        windows[l].pending.extend_from_slice(&row);
+                    }
+                }
+            }
+        }
+        // Per-lane epilogue: project staged logsig rows through the shared
+        // op sequence, bump cursors, then apply the scalar retention
+        // policy — identical to what `advance` would have done.
+        let mut total = 0usize;
+        for l in 0..lanes {
+            let w = &mut *windows[l];
+            if slides[l] > 0 {
+                if let Some(plan) = &w.plan {
+                    let off = w.pending.len();
+                    w.pending.resize(off + slides[l] * w.out_dim, E::ZERO);
+                    project_sigs_into(&spec, plan, &sig_rows[l], slides[l], &mut w.pending[off..]);
+                }
+                w.emitted += slides[l] as u64;
+                w.next_end += slides[l] * w.spec.stride;
+                total += slides[l];
+            }
+            w.retain(&mut *paths[l]);
+        }
+        Ok(total)
     }
 
     /// Hand back every undelivered slide: `(index of the first returned
@@ -193,6 +388,23 @@ impl<E: Elem> RollingWindow<E> {
         let first = self.delivered;
         self.delivered = self.emitted;
         (first, std::mem::take(&mut self.pending))
+    }
+
+    /// [`RollingWindow::poll`] with a page cap: hand back at most
+    /// `max_slides` undelivered slides (all of them when `max_slides`
+    /// covers the backlog — then this is exactly `poll`). Later slides
+    /// stay pending, so a slow poller drains a deep backlog in
+    /// bounded-size pages; the continuation cursor is simply
+    /// `first + rows.len() / out_dim`, and [`RollingWindow::pending_rows`]
+    /// afterwards tells whether another page is waiting.
+    pub fn poll_limited(&mut self, max_slides: usize) -> (u64, Vec<E>) {
+        if max_slides >= self.pending_rows() {
+            return self.poll();
+        }
+        let first = self.delivered;
+        let rows: Vec<E> = self.pending.drain(..max_slides * self.out_dim).collect();
+        self.delivered += max_slides as u64;
+        (first, rows)
     }
 
     /// Replay a logged poll: drop the rows a pre-crash client already
@@ -388,6 +600,187 @@ mod tests {
         win.advance(&mut path).unwrap();
         revived.advance(&mut control_path).unwrap();
         assert_eq!(win.poll(), revived.poll());
+    }
+
+    /// Drive `lanes` same-path-spec sessions (heterogeneous window
+    /// geometry) through ragged feed rounds: one group advances through
+    /// `advance_batch`, a per-lane scalar control through `advance`. After
+    /// every round the durable window state (cursor, counters, pending
+    /// bits) and the retention outcome (base, stored points) must match
+    /// exactly — the batched sweep is observationally the scalar loop.
+    fn check_advance_batch<E: Elem>(spec: &SigSpec, wspecs: &[WindowSpec], feeds: &[Vec<Vec<E>>]) {
+        let lanes = wspecs.len();
+        let d = spec.d();
+        let mut paths: Vec<Path<E>> = Vec::new();
+        let mut wins: Vec<RollingWindow<E>> = Vec::new();
+        let mut cpaths: Vec<Path<E>> = Vec::new();
+        let mut cwins: Vec<RollingWindow<E>> = Vec::new();
+        for l in 0..lanes {
+            let seed = &feeds[0][l];
+            let rows = seed.len() / d;
+            paths.push(Path::new(spec, seed, rows).unwrap());
+            cpaths.push(Path::new(spec, seed, rows).unwrap());
+            wins.push(RollingWindow::new(spec, wspecs[l]).unwrap());
+            cwins.push(RollingWindow::new(spec, wspecs[l]).unwrap());
+        }
+        for round in 0..feeds.len() {
+            if round > 0 {
+                for l in 0..lanes {
+                    let chunk = &feeds[round][l];
+                    if !chunk.is_empty() {
+                        paths[l].update(chunk, chunk.len() / d).unwrap();
+                        cpaths[l].update(chunk, chunk.len() / d).unwrap();
+                    }
+                }
+            }
+            let batched = {
+                let mut pr: Vec<&mut Path<E>> = paths.iter_mut().collect();
+                let mut wr: Vec<&mut RollingWindow<E>> = wins.iter_mut().collect();
+                RollingWindow::advance_batch(&mut pr, &mut wr).unwrap()
+            };
+            let mut scalar = 0usize;
+            for l in 0..lanes {
+                scalar += cwins[l].advance(&mut cpaths[l]).unwrap();
+            }
+            assert_eq!(batched, scalar, "round {round}: total slides");
+            for l in 0..lanes {
+                let (_, ne, em, de, pend) = wins[l].raw_parts();
+                let (_, cne, cem, cde, cpend) = cwins[l].raw_parts();
+                assert_eq!((ne, em, de), (cne, cem, cde), "round {round} lane {l}: counters");
+                assert_eq!(pend, cpend, "round {round} lane {l}: pending bits");
+                assert_eq!(
+                    (paths[l].base(), paths[l].stored_len()),
+                    (cpaths[l].base(), cpaths[l].stored_len()),
+                    "round {round} lane {l}: retention"
+                );
+            }
+            // Poll some rounds so delivered/pending offsets vary mid-run.
+            if round % 2 == 1 {
+                for l in 0..lanes {
+                    assert_eq!(wins[l].poll(), cwins[l].poll(), "round {round} lane {l}: poll");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_batch_matches_scalar_bitwise() {
+        // The tentpole contract: specs x strides x bases x {f32, f64} x
+        // ragged feed groups x mid-sweep repack boundaries (lanes emit
+        // different slide counts, so the active group shrinks mid-sweep).
+        property("advance_batch == per-lane advance bitwise", 12, |g| {
+            let d = g.usize_in(1, 3);
+            let n = g.usize_in(1, 4);
+            let lanes = g.usize_in(1, 6); // 1 covers the scalar delegation
+            let rounds = g.usize_in(2, 6);
+            let f64_lane = g.usize_in(0, 1) == 1;
+            g.label(format!("d={d} n={n} lanes={lanes} rounds={rounds} f64={f64_lane}"));
+            let wspecs: Vec<WindowSpec> = (0..lanes)
+                .map(|_| WindowSpec {
+                    len: g.usize_in(2, 7), // len == 2 exercises the exp case
+                    stride: g.usize_in(1, 3),
+                    logsig: match g.usize_in(0, 3) {
+                        0 => None,
+                        1 => Some(LogSigBasis::Expanded),
+                        2 => Some(LogSigBasis::Lyndon),
+                        _ => Some(LogSigBasis::Words),
+                    },
+                })
+                .collect();
+            // Ragged per-lane chunk plan: a seed then rounds of 0..=4
+            // points (0 = lane idles that round, so slide counts diverge).
+            let mut chunk_plan: Vec<Vec<usize>> = vec![Vec::new(); rounds];
+            let mut totals = vec![0usize; lanes];
+            for l in 0..lanes {
+                for r in 0..rounds {
+                    let c = if r == 0 { g.usize_in(2, 5) } else { g.usize_in(0, 4) };
+                    chunk_plan[r].push(c);
+                    totals[l] += c;
+                }
+            }
+            macro_rules! run {
+                ($e:ty, $spec:expr) => {{
+                    let streams: Vec<Vec<$e>> =
+                        (0..lanes).map(|l| random_walk::<$e>(g.rng(), totals[l], d)).collect();
+                    let mut fed = vec![0usize; lanes];
+                    let feeds: Vec<Vec<Vec<$e>>> = chunk_plan
+                        .iter()
+                        .map(|row| {
+                            (0..lanes)
+                                .map(|l| {
+                                    let c = row[l];
+                                    let s = streams[l][fed[l] * d..(fed[l] + c) * d].to_vec();
+                                    fed[l] += c;
+                                    s
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    check_advance_batch::<$e>(&$spec, &wspecs, &feeds);
+                }};
+            }
+            if f64_lane {
+                let spec = SigSpec::with_dtype(d, n, crate::ta::Precision::F64).unwrap();
+                run!(f64, spec);
+            } else {
+                let spec = SigSpec::new(d, n).unwrap();
+                run!(f32, spec);
+            }
+        });
+    }
+
+    #[test]
+    fn advance_batch_rejects_malformed_groups() {
+        let spec2 = SigSpec::new(2, 3).unwrap();
+        let spec3 = SigSpec::new(3, 3).unwrap();
+        let wspec = WindowSpec { len: 4, stride: 2, logsig: None };
+        let mut rng = Rng::new(44);
+        let p2: Vec<f32> = random_walk(&mut rng, 8, 2);
+        let p3: Vec<f32> = random_walk(&mut rng, 8, 3);
+        let mut a = Path::<f32>::new(&spec2, &p2, 8).unwrap();
+        let mut b = Path::<f32>::new(&spec3, &p3, 8).unwrap();
+        let mut wa = RollingWindow::<f32>::new(&spec2, wspec).unwrap();
+        let mut wb = RollingWindow::<f32>::new(&spec3, wspec).unwrap();
+        // Arity mismatch.
+        assert!(RollingWindow::advance_batch(&mut [&mut a], &mut []).is_err());
+        // Mixed path specs never coalesce.
+        assert!(
+            RollingWindow::advance_batch(&mut [&mut a, &mut b], &mut [&mut wa, &mut wb]).is_err()
+        );
+        // Empty group is a no-op.
+        assert_eq!(RollingWindow::<f32>::advance_batch(&mut [], &mut []).unwrap(), 0);
+    }
+
+    #[test]
+    fn poll_limited_pages_cover_poll() {
+        let spec = SigSpec::new(2, 3).unwrap();
+        let wspec = WindowSpec { len: 4, stride: 2, logsig: None };
+        let mut rng = Rng::new(45);
+        let pts: Vec<f32> = random_walk(&mut rng, 20, 2);
+        let mut path = Path::<f32>::new(&spec, &pts, 20).unwrap();
+        let mut win = RollingWindow::<f32>::new(&spec, wspec).unwrap();
+        let mut cpath = Path::<f32>::new(&spec, &pts, 20).unwrap();
+        let mut cwin = RollingWindow::<f32>::new(&spec, wspec).unwrap();
+        win.advance(&mut path).unwrap();
+        cwin.advance(&mut cpath).unwrap();
+        assert_eq!(win.pending_rows(), 9);
+        // Pages of 4 + 0 + 4 + 100 reassemble the one-shot poll exactly.
+        let (f0, r0) = win.poll_limited(4);
+        assert_eq!((f0, r0.len()), (0, 4 * win.out_dim()));
+        let (f1, r1) = win.poll_limited(0); // zero-size page is a no-op
+        assert_eq!((f1, r1.len()), (4, 0));
+        assert_eq!(win.pending_rows(), 5);
+        let (f2, r2) = win.poll_limited(4);
+        assert_eq!(f2, 4);
+        let (f3, r3) = win.poll_limited(100); // cap above backlog == poll
+        assert_eq!(f3, 8);
+        let (cf, crows) = cwin.poll();
+        assert_eq!(cf, 0);
+        let paged: Vec<f32> = [r0, r1, r2, r3].concat();
+        assert_eq!(paged, crows);
+        // Draining by pages is replay-compatible with mark_delivered.
+        assert_eq!(win.pending_rows(), 0);
+        assert_eq!(win.poll(), (9, Vec::new()));
     }
 
     #[test]

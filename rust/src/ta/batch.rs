@@ -420,11 +420,180 @@ pub fn fused_mexp_vjp_batch<E: Elem>(
     }
 }
 
+/// Lane-wise `out[(p, q)] += a[p] * b[q]` over interleaved level slices —
+/// the batched replay of [`super::mul::outer_add`]: `p` outer over `a`'s
+/// elements, `q` inner over `b`'s, lanes contiguous innermost.
+#[inline]
+fn outer_add_lanes<E: Elem>(lanes: usize, a: &[E], b: &[E], out: &mut [E]) {
+    let la = a.len() / lanes;
+    let lb = b.len() / lanes;
+    debug_assert_eq!(a.len(), la * lanes);
+    debug_assert_eq!(b.len(), lb * lanes);
+    debug_assert_eq!(out.len(), la * lb * lanes);
+    for p in 0..la {
+        let ap = &a[p * lanes..(p + 1) * lanes];
+        let rows = &mut out[p * lb * lanes..(p + 1) * lb * lanes];
+        for q in 0..lb {
+            let bq = &b[q * lanes..(q + 1) * lanes];
+            let row = &mut rows[q * lanes..(q + 1) * lanes];
+            for ((rv, &av), &bv) in row.iter_mut().zip(ap).zip(bq) {
+                *rv += av * bv;
+            }
+        }
+    }
+}
+
+/// The loop body shared by [`mul_nounit_batch_into`] and
+/// [`inverse_batch_into`] (which needs it while mutably borrowing the
+/// workspace scratch): the no-unit ⊠ replaying
+/// [`super::mul::mul_nounit_into`] per lane.
+fn mul_nounit_lanes<E: Elem>(spec: &SigSpec, lanes: usize, a: &[E], b: &[E], out: &mut [E]) {
+    let n = spec.depth();
+    debug_assert_eq!(a.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(b.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(out.len(), spec.sig_len() * lanes);
+    for k in 1..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let dst = &mut out[ok * lanes..(ok + lk) * lanes];
+        dst.fill(E::ZERO);
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            outer_add_lanes(
+                lanes,
+                &a[oi * lanes..(oi + li) * lanes],
+                &b[oj * lanes..(oj + lj) * lanes],
+                dst,
+            );
+        }
+    }
+}
+
+/// Batched full ⊠ with implicit units: `out_l = a_l ⊠ b_l` for every lane,
+/// on lane-interleaved buffers (`sig_len * lanes` each; `out` may not alias
+/// the inputs). Replays [`super::mul::mul_into`]'s op order per lane —
+/// levels ascending, unit terms first, then the `A_i ⊗ B_{k-i}` outer
+/// products in `i` order — so results are **bitwise identical** per lane.
+/// This is the kernel behind batched window-slide advancement: one call
+/// advances `lanes` stored-inverse Chen combinations `I_i ⊠ S_j` (§5.5).
+pub fn mul_batch_into<E: Elem>(
+    spec: &SigSpec,
+    a: &[E],
+    b: &[E],
+    out: &mut [E],
+    ws: &mut BatchWorkspace<E>,
+) {
+    let n = spec.depth();
+    let lanes = ws.lanes;
+    debug_assert_eq!(a.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(b.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(out.len(), spec.sig_len() * lanes);
+    for k in 1..=n {
+        let ok = spec.off(k);
+        let lk = spec.level_len(k);
+        let dst = &mut out[ok * lanes..(ok + lk) * lanes];
+        let ak = &a[ok * lanes..(ok + lk) * lanes];
+        let bk = &b[ok * lanes..(ok + lk) * lanes];
+        // A_0 ⊗ B_k + A_k ⊗ B_0 = A_k + B_k (lane-wise).
+        for ((dv, &x), &y) in dst.iter_mut().zip(ak).zip(bk) {
+            *dv = x + y;
+        }
+        for i in 1..k {
+            let (oi, li) = (spec.off(i), spec.level_len(i));
+            let (oj, lj) = (spec.off(k - i), spec.level_len(k - i));
+            outer_add_lanes(
+                lanes,
+                &a[oi * lanes..(oi + li) * lanes],
+                &b[oj * lanes..(oj + lj) * lanes],
+                dst,
+            );
+        }
+    }
+}
+
+/// Batched no-unit ⊠ (both inputs treated as having zero scalar term):
+/// `out_k = Σ_{i=1}^{k-1} a_i ⊗ b_{k-i}` per lane. Bitwise identical per
+/// lane to [`super::mul::mul_nounit_into`].
+pub fn mul_nounit_batch_into<E: Elem>(
+    spec: &SigSpec,
+    a: &[E],
+    b: &[E],
+    out: &mut [E],
+    ws: &mut BatchWorkspace<E>,
+) {
+    mul_nounit_lanes(spec, ws.lanes, a, b, out);
+}
+
+/// Batched group inverse: `out_l = x_l^{-1}` per lane, via the same
+/// Horner-style fixpoint as [`super::inverse::inverse_into`]
+/// (`t_1 = -x; t_i = -(x + x ⊠' t_{i-1})`), using `ws.t2` as the
+/// lane-interleaved `x ⊠' t` scratch. Bitwise identical per lane.
+pub fn inverse_batch_into<E: Elem>(
+    spec: &SigSpec,
+    x: &[E],
+    out: &mut [E],
+    ws: &mut BatchWorkspace<E>,
+) {
+    let n = spec.depth();
+    let lanes = ws.lanes;
+    debug_assert_eq!(x.len(), spec.sig_len() * lanes);
+    debug_assert_eq!(out.len(), spec.sig_len() * lanes);
+    // t_1 = -x.
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o = -xv;
+    }
+    if n == 1 {
+        return;
+    }
+    let len = spec.sig_len() * lanes;
+    for _ in 2..=n {
+        mul_nounit_lanes(spec, lanes, x, out, &mut ws.t2[..len]);
+        for ((o, &xv), &pv) in out.iter_mut().zip(x).zip(ws.t2[..len].iter()) {
+            *o = -(xv + pv);
+        }
+    }
+}
+
+/// Batched in-place tensor exponential: on entry `out[..d * lanes]` holds
+/// the increments `z_l` (lane-interleaved), on exit `out_l = exp(z_l)` for
+/// every lane — the batched twin of [`super::exp::exp_in_place`], replaying
+/// `E_k = E_{k-1} ⊗ (z/k)` in the same op order so each lane is bitwise
+/// identical to the scalar kernel. This is the adjacent-interval
+/// (`j == i + 1`) window-slide case: `Sig(x_i..x_{i+1}) = exp(x_{i+1} - x_i)`.
+pub fn exp_batch_in_place<E: Elem>(spec: &SigSpec, out: &mut [E], ws: &mut BatchWorkspace<E>) {
+    let d = spec.d();
+    let lanes = ws.lanes;
+    debug_assert_eq!(out.len(), spec.sig_len() * lanes);
+    for k in 2..=spec.depth() {
+        let inv_k = E::recip_usize(k);
+        let (lo, hi) = out.split_at_mut(spec.off(k) * lanes);
+        let z = &lo[..d * lanes];
+        let prev = &lo[spec.off(k - 1) * lanes..];
+        let dst = &mut hi[..spec.level_len(k) * lanes];
+        // E_k = E_{k-1} ⊗ (z / k), lanes innermost.
+        for p in 0..prev.len() / lanes {
+            let ep = &prev[p * lanes..(p + 1) * lanes];
+            let rows = &mut dst[p * d * lanes..(p + 1) * d * lanes];
+            for q in 0..d {
+                let zq = &z[q * lanes..(q + 1) * lanes];
+                let row = &mut rows[q * lanes..(q + 1) * lanes];
+                for ((rv, &ev), &zv) in row.iter_mut().zip(ep).zip(zq) {
+                    *rv = ev * zv * inv_k;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::substrate::propcheck::property;
+    use crate::ta::exp::exp_in_place;
     use crate::ta::fused::{fused_mexp, fused_mexp_left, fused_mexp_vjp};
+    use crate::ta::inverse::inverse_into;
+    use crate::ta::mul::{mul_into, mul_nounit_into};
     use crate::ta::Workspace;
 
     #[test]
@@ -598,6 +767,143 @@ mod tests {
             let s = SigSpec::new(d, n).unwrap();
             for &lanes in &[1usize, 3, 5] {
                 check_vjp_bitwise_f64(&s, lanes, 200 + (d * 10 + lanes) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_batch_is_bitwise_per_lane() {
+        // Each lane of mul_batch_into must reproduce scalar mul_into
+        // bit-for-bit — same op order (levels ascending, unit terms, then
+        // outer products in i order), just interleaved.
+        property("mul_batch_into == mul_into bitwise", 30, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 6 });
+            let lanes = g.usize_in(1, 7);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            let a_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.7)).collect();
+            let b_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.7)).collect();
+            let mut a = vec![0.0f32; len * lanes];
+            let mut b = vec![0.0f32; len * lanes];
+            pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+            pack_lanes(len, lanes, |l| b_rows[l].as_slice(), &mut b);
+            let mut out = vec![0.0f32; len * lanes];
+            let mut nou = vec![0.0f32; len * lanes];
+            let mut bws = BatchWorkspace::new(&s, lanes);
+            mul_batch_into(&s, &a, &b, &mut out, &mut bws);
+            mul_nounit_batch_into(&s, &a, &b, &mut nou, &mut bws);
+            let mut row = vec![0.0f32; len];
+            for l in 0..lanes {
+                let mut expect = s.zeros();
+                mul_into(&s, &a_rows[l], &b_rows[l], &mut expect);
+                unpack_lane(len, lanes, &out, l, &mut row);
+                assert_eq!(row, expect, "lane {l} diverged from scalar mul_into");
+                let mut expect_nou = s.zeros();
+                mul_nounit_into(&s, &a_rows[l], &b_rows[l], &mut expect_nou);
+                unpack_lane(len, lanes, &nou, l, &mut row);
+                assert_eq!(row, expect_nou, "lane {l} diverged from scalar mul_nounit_into");
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_batch_is_bitwise_per_lane() {
+        property("inverse_batch_into == inverse_into bitwise", 30, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 6 });
+            let lanes = g.usize_in(1, 7);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            let x_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(len, 0.6)).collect();
+            let mut x = vec![0.0f32; len * lanes];
+            pack_lanes(len, lanes, |l| x_rows[l].as_slice(), &mut x);
+            let mut out = vec![0.0f32; len * lanes];
+            let mut bws = BatchWorkspace::new(&s, lanes);
+            inverse_batch_into(&s, &x, &mut out, &mut bws);
+            let mut row = vec![0.0f32; len];
+            for l in 0..lanes {
+                let mut expect = s.zeros();
+                inverse_into(&s, &x_rows[l], &mut expect);
+                unpack_lane(len, lanes, &out, l, &mut row);
+                assert_eq!(row, expect, "lane {l} diverged from scalar inverse_into");
+            }
+        });
+    }
+
+    #[test]
+    fn exp_batch_is_bitwise_per_lane() {
+        // exp_batch_in_place consumes the staged level-1 increments and
+        // fully overwrites levels >= 2, exactly like the scalar twin.
+        property("exp_batch_in_place == exp_in_place bitwise", 30, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, if d > 4 { 4 } else { 6 });
+            let lanes = g.usize_in(1, 7);
+            g.label(format!("d={d} n={n} lanes={lanes}"));
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            let z_rows: Vec<Vec<f32>> = (0..lanes).map(|_| g.normal_vec(d, 0.8)).collect();
+            let mut out = vec![0.0f32; len * lanes];
+            pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut out[..d * lanes]);
+            let mut bws = BatchWorkspace::new(&s, lanes);
+            exp_batch_in_place(&s, &mut out, &mut bws);
+            let mut row = vec![0.0f32; len];
+            for l in 0..lanes {
+                let mut expect = s.zeros();
+                expect[..d].copy_from_slice(&z_rows[l]);
+                exp_in_place(&s, &mut expect);
+                unpack_lane(len, lanes, &out, l, &mut row);
+                assert_eq!(row, expect, "lane {l} diverged from scalar exp_in_place");
+            }
+        });
+    }
+
+    #[test]
+    fn chen_family_batch_bitwise_f64_sweep() {
+        // The f64 instantiations of the Chen-family lane kernels replay the
+        // same op order at their own precision — pinned on the dimension
+        // sweep with ragged lane counts.
+        let up = |v: Vec<f32>| -> Vec<f64> { v.into_iter().map(|x| x as f64).collect() };
+        for &(d, n) in &[(3usize, 4usize), (8, 3), (12, 3), (20, 2)] {
+            let s = SigSpec::new(d, n).unwrap();
+            let len = s.sig_len();
+            for &lanes in &[1usize, 3, 5] {
+                let mut rng = crate::substrate::rng::Rng::new(300 + (d * 10 + lanes) as u64);
+                let a_rows: Vec<Vec<f64>> =
+                    (0..lanes).map(|_| up(rng.normal_vec(len, 0.6))).collect();
+                let b_rows: Vec<Vec<f64>> =
+                    (0..lanes).map(|_| up(rng.normal_vec(len, 0.6))).collect();
+                let z_rows: Vec<Vec<f64>> = (0..lanes).map(|_| up(rng.normal_vec(d, 0.8))).collect();
+                let mut a = vec![0.0f64; len * lanes];
+                let mut b = vec![0.0f64; len * lanes];
+                pack_lanes(len, lanes, |l| a_rows[l].as_slice(), &mut a);
+                pack_lanes(len, lanes, |l| b_rows[l].as_slice(), &mut b);
+                let mut bws = BatchWorkspace::<f64>::new(&s, lanes);
+                let mut prod = vec![0.0f64; len * lanes];
+                let mut inv = vec![0.0f64; len * lanes];
+                let mut expv = vec![0.0f64; len * lanes];
+                mul_batch_into(&s, &a, &b, &mut prod, &mut bws);
+                inverse_batch_into(&s, &a, &mut inv, &mut bws);
+                pack_lanes(d, lanes, |l| z_rows[l].as_slice(), &mut expv[..d * lanes]);
+                exp_batch_in_place(&s, &mut expv, &mut bws);
+                let mut row = vec![0.0f64; len];
+                for l in 0..lanes {
+                    let mut want = s.zeros_elem::<f64>();
+                    mul_into(&s, &a_rows[l], &b_rows[l], &mut want);
+                    unpack_lane(len, lanes, &prod, l, &mut row);
+                    assert_eq!(row, want, "mul lane {l} (f64 d={d} lanes={lanes})");
+                    let mut want = s.zeros_elem::<f64>();
+                    inverse_into(&s, &a_rows[l], &mut want);
+                    unpack_lane(len, lanes, &inv, l, &mut row);
+                    assert_eq!(row, want, "inverse lane {l} (f64 d={d} lanes={lanes})");
+                    let mut want = s.zeros_elem::<f64>();
+                    want[..d].copy_from_slice(&z_rows[l]);
+                    exp_in_place(&s, &mut want);
+                    unpack_lane(len, lanes, &expv, l, &mut row);
+                    assert_eq!(row, want, "exp lane {l} (f64 d={d} lanes={lanes})");
+                }
             }
         }
     }

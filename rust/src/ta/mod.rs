@@ -23,11 +23,12 @@
 //!   improvement and this library's hot path — plus the mirrored
 //!   `exp(z) ⊠ A` used for incremental inverted signatures.
 //! - [`batch`] — the **batch-lane execution engine**: the fused kernels
-//!   vectorised *across* `L` same-spec signatures in a lane-interleaved
-//!   layout, so the innermost Horner loops run contiguously over the lanes
-//!   and auto-vectorise regardless of `d` — the serving hot path (many
-//!   short streams at small `d`), bitwise identical per lane to the scalar
-//!   kernels.
+//!   *and* the Chen-combination family (⊠, no-unit ⊠, group inverse,
+//!   tensor exp) vectorised *across* `L` same-spec signatures in a
+//!   lane-interleaved layout, so the innermost loops run contiguously over
+//!   the lanes and auto-vectorise regardless of `d` — the serving hot path
+//!   (many short streams at small `d`, and batched window-slide
+//!   advancement), bitwise identical per lane to the scalar kernels.
 //! - [`log`] — the tensor logarithm (Horner series) and its VJP.
 //! - [`inverse`] — the group inverse (truncated Neumann series) and VJP.
 //! - [`opcount`] — the closed-form multiplication counts `F(d,N)`, `C(d,N)`
@@ -42,7 +43,10 @@ pub mod log;
 pub mod mul;
 pub mod opcount;
 
-pub use batch::{fused_mexp_batch, fused_mexp_left_batch, fused_mexp_vjp_batch, BatchWorkspace};
+pub use batch::{
+    exp_batch_in_place, fused_mexp_batch, fused_mexp_left_batch, fused_mexp_vjp_batch,
+    inverse_batch_into, mul_batch_into, mul_nounit_batch_into, BatchWorkspace,
+};
 pub use exp::{exp, exp_vjp};
 pub use fused::{fused_mexp, fused_mexp_left, fused_mexp_vjp};
 pub use inverse::{inverse, inverse_vjp};
